@@ -1,0 +1,87 @@
+//! Deployment case study (paper §5 / Fig 6): train a NavLite navigation
+//! policy, quantize it to int8, and compare the native fp32 and int8
+//! inference engines on latency, memory, and task success — including
+//! the RasPi-3b-class swap model that produces the paper's 14-18x.
+//!
+//!     make artifacts && cargo run --release --example deploy_quantized
+
+use std::time::Instant;
+
+use quarl::algos::dqn::{self, DqnConfig};
+use quarl::envs::api::{Action, Env};
+use quarl::envs::nav_lite::NavLite;
+use quarl::inference::{EngineF32, EngineInt8, MemModel};
+use quarl::rng::Pcg32;
+use quarl::runtime::Runtime;
+
+fn success_rate(
+    forward: &mut dyn FnMut(&[f32], &mut [f32]),
+    episodes: usize,
+) -> (f32, f64) {
+    let mut env = NavLite::new(0.6);
+    let mut rng = Pcg32::new(11, 3);
+    let mut obs = vec![0.0f32; env.obs_dim()];
+    let mut logits = vec![0.0f32; 25];
+    let mut wins = 0;
+    let mut secs = 0.0;
+    let mut n = 0usize;
+    for _ in 0..episodes {
+        env.reset(&mut rng, &mut obs);
+        loop {
+            let t0 = Instant::now();
+            forward(&obs, &mut logits);
+            secs += t0.elapsed().as_secs_f64();
+            n += 1;
+            let a = logits
+                .iter()
+                .enumerate()
+                .fold((0, f32::NEG_INFINITY), |acc, (i, &q)| if q > acc.1 { (i, q) } else { acc })
+                .0;
+            let s = env.step(&Action::Discrete(a), &mut rng, &mut obs);
+            if s.done {
+                if s.reward > 500.0 {
+                    wins += 1;
+                }
+                break;
+            }
+        }
+    }
+    (wins as f32 / episodes as f32, secs / n as f64)
+}
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    let rt = Runtime::new("artifacts")?;
+    // Policy II of the paper: 3-layer 256-wide MLP.
+    let mut cfg = DqnConfig::new("nav_lite");
+    cfg.arch_key = Some("dqn/nav_lite/nav_p2".into());
+    cfg.total_steps = 20_000;
+    cfg.seed = 4;
+    println!("training NavLite policy II ({} steps) ...", cfg.total_steps);
+    let (policy, log) = dqn::train(&rt, &cfg)?;
+    println!("trained: final_return {:.0} ({} episodes)", log.final_return, log.episodes);
+
+    let mut f32e = EngineF32::from_params(&policy.params)?;
+    let mut i8e = EngineInt8::from_params(&policy.params)?;
+    let (sr_f, lat_f) = success_rate(&mut |x, o| f32e.forward(x, o), 40);
+    let (sr_q, lat_q) = success_rate(&mut |x, o| i8e.forward(x, o).unwrap(), 40);
+
+    let mem = MemModel::raspi3b();
+    let (mf, mq) = (f32e.memory_bytes(), i8e.memory_bytes());
+    println!("\nFig-6-style row (policy II):");
+    println!(
+        "fp32: {:.3} ms/infer, success {:.0}%, weights {:.2} MiB",
+        lat_f * 1e3, sr_f * 100.0, mf as f64 / (1 << 20) as f64
+    );
+    println!(
+        "int8: {:.3} ms/infer, success {:.0}%, weights {:.2} MiB",
+        lat_q * 1e3, sr_q * 100.0, mq as f64 / (1 << 20) as f64
+    );
+    println!(
+        "speedup {:.2}x, memory ratio {:.2}x, raspi swap penalty fp32 {:.1} ms -> int8 {:.1} ms",
+        lat_f / lat_q,
+        mf as f64 / mq as f64,
+        mem.swap_penalty_secs(mf) * 1e3,
+        mem.swap_penalty_secs(mq) * 1e3,
+    );
+    Ok(())
+}

@@ -1,0 +1,29 @@
+//! Mixed-precision training case study (paper §5, Table 4 / Fig 5):
+//! train the DQN-Pong policy-A network with fp32 and bf16 compute and
+//! compare train-step wallclock and convergence.
+//!
+//!     make artifacts && cargo run --release --example mixed_precision
+
+use quarl::algos::dqn::{self, DqnConfig};
+use quarl::runtime::Runtime;
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    let rt = Runtime::new("artifacts")?;
+    let steps = 10_000;
+    for (label, variant) in [("fp32", "mp_a"), ("bf16", "mp_a_bf16")] {
+        let mut cfg = DqnConfig::new("pong_lite");
+        cfg.arch_key = Some(format!("dqn/pong_lite/{variant}"));
+        cfg.total_steps = steps;
+        cfg.seed = 9;
+        let (_policy, log) = dqn::train(&rt, &cfg)?;
+        println!(
+            "{label:>5}: train-exec {:.2}s over {steps} steps, wall {:.1}s, final return {:.1}",
+            log.train_exec_secs, log.wall_secs, log.final_return
+        );
+    }
+    println!(
+        "\npaper shape: speedup grows with network size (policies B/C —\n\
+         run `quarl exp table4` for the full sweep)."
+    );
+    Ok(())
+}

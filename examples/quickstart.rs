@@ -1,0 +1,44 @@
+//! Quickstart: train DQN on CartPole through the full three-layer stack
+//! (Rust coordinator -> PJRT -> AOT XLA programs containing the Pallas
+//! fake-quant kernels), then apply post-training quantization and print
+//! a Table-2-style row.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+
+use quarl::algos::dqn::{self, DqnConfig};
+use quarl::coordinator::{evaluate, EvalMode};
+use quarl::quant::{relative_error_pct, PtqMethod};
+use quarl::runtime::Runtime;
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    let rt = Runtime::new("artifacts")?;
+    println!("platform: {}", rt.platform_name());
+
+    let mut cfg = DqnConfig::new("cartpole");
+    cfg.total_steps = 40_000;
+    cfg.log_every = 2_000;
+    cfg.seed = 3;
+    println!("training dqn/cartpole for {} steps ...", cfg.total_steps);
+    let (policy, log) = dqn::train(&rt, &cfg)?;
+    println!(
+        "trained: episodes={} final_return={:.1} wall={:.1}s (train-exec {:.1}s)",
+        log.episodes, log.final_return, log.wall_secs, log.train_exec_secs
+    );
+    for (s, r) in &log.returns {
+        println!("  step {s:>6}  return {r:.1}");
+    }
+
+    let fp32 = evaluate(&rt, &policy, 30, EvalMode::AsTrained, 1)?;
+    let fp16 = evaluate(&rt, &policy, 30, EvalMode::Ptq(PtqMethod::Fp16), 1)?;
+    let int8 = evaluate(&rt, &policy, 30, EvalMode::Ptq(PtqMethod::Int(8)), 1)?;
+    println!("\nPTQ (paper Table 2 row):");
+    println!(
+        "cartpole  fp32 {:.0}  fp16 {:.0} (E={:.2}%)  int8 {:.0} (E={:.2}%)",
+        fp32.mean_reward,
+        fp16.mean_reward,
+        relative_error_pct(fp32.mean_reward, fp16.mean_reward),
+        int8.mean_reward,
+        relative_error_pct(fp32.mean_reward, int8.mean_reward),
+    );
+    Ok(())
+}

@@ -1,0 +1,1 @@
+"""Pure-functional RL train/act steps, AOT-lowered per (algo, arch)."""

@@ -1,0 +1,121 @@
+"""A2C act/train programs (Mnih et al. 2016) with QAT hooks.
+
+Separate policy and value towers (stable-baselines' default MlpPolicy
+layout the paper trains with). QAT applies to the *policy* network — the
+deployed artifact — while the value tower stays fp32, mirroring the paper
+quantizing the policy used for decisions.
+
+hyper layout (rank-1 f32):
+    act:   [bits, step, delay]
+    train: [lr, bits, step, delay, t_adam, vf_coef, ent_coef]
+"""
+
+from typing import List
+
+import jax
+import jax.numpy as jnp
+
+from ..nets import mlp_apply
+from ..optimizers import adam_update
+from ..quantization import QuantCtl, assemble_qstate
+from .common import ArchSpec, ProgramDef, categorical_logp_entropy, named_params, qstate_rows
+
+
+def _split(arrs, counts):
+    out, i = [], 0
+    for c in counts:
+        out.append(list(arrs[i : i + c]))
+        i += c
+    assert i == len(arrs)
+    return out
+
+
+def make_act(arch: ArchSpec) -> ProgramDef:
+    pd, vd = arch.policy_dims(), arch.value_dims()
+    pn, vn = named_params("pi", pd), named_params("vf", vd)
+    n_q = qstate_rows(pd)
+    B = arch.act_batch
+
+    def fn(*arrs):
+        (pp, vp), rest = _split(arrs[: len(pn) + len(vn)], [len(pn), len(vn)]), arrs[len(pn) + len(vn) :]
+        qstate, obs, hyper = rest
+        ctl = QuantCtl(bits=hyper[0], step=hyper[1], delay=hyper[2])
+        off = QuantCtl(bits=jnp.float32(0.0), step=hyper[1], delay=hyper[2])
+        logits, _ = mlp_apply(pp, obs, qstate, 0, ctl,
+                              layer_norm=arch.layer_norm, compute_dtype=arch.compute_dtype)
+        value, _ = mlp_apply(vp, obs, qstate, 0, off,
+                             layer_norm=arch.layer_norm, compute_dtype=arch.compute_dtype)
+        return (logits, value[:, 0])
+
+    inputs = [*pn, *vn, ("qstate", (n_q, 2)), ("obs", (B, arch.obs_dim)), ("hyper", (3,))]
+    outputs = [("logits", (B, arch.act_dim)), ("value", (B,))]
+    return ProgramDef(
+        name=f"{arch.name}_act", fn=fn, inputs=inputs, outputs=outputs,
+        meta={"algo": "a2c", "kind": "act", "arch": arch._asdict(),
+              "n_policy_params": len(pn), "n_value_params": len(vn), "n_qstate": n_q,
+              "hyper": ["bits", "step", "delay"]},
+    )
+
+
+def make_train(arch: ArchSpec) -> ProgramDef:
+    pd, vd = arch.policy_dims(), arch.value_dims()
+    pn, vn = named_params("pi", pd), named_params("vf", vd)
+    n_all = len(pn) + len(vn)
+    n_q = qstate_rows(pd)
+    B = arch.train_batch
+
+    def fn(*arrs):
+        params, m, v = _split(arrs[: 3 * n_all], [n_all, n_all, n_all])
+        qstate, obs, actions, returns, adv, hyper = arrs[3 * n_all :]
+        lr, bits, step, delay, t_adam, vf_coef, ent_coef = (hyper[i] for i in range(7))
+        ctl = QuantCtl(bits=bits, step=step, delay=delay)
+        off = QuantCtl(bits=jnp.float32(0.0), step=step, delay=delay)
+
+        def loss_fn(ps):
+            pp, vp = ps[: len(pn)], ps[len(pn) :]
+            logits, rows = mlp_apply(pp, obs, qstate, 0, ctl,
+                                     layer_norm=arch.layer_norm,
+                                     compute_dtype=arch.compute_dtype)
+            value, _ = mlp_apply(vp, obs, qstate, 0, off,
+                                 layer_norm=arch.layer_norm,
+                                 compute_dtype=arch.compute_dtype)
+            logp, entropy = categorical_logp_entropy(logits, actions)
+            pg_loss = -jnp.mean(logp * adv)
+            v_loss = jnp.mean((returns - value[:, 0]) ** 2)
+            loss = pg_loss + vf_coef * v_loss - ent_coef * entropy
+            return loss, (pg_loss, v_loss, entropy, rows)
+
+        (_, (pg_loss, v_loss, entropy, rows)), grads = jax.value_and_grad(
+            loss_fn, has_aux=True
+        )(params)
+        new_p, new_m, new_v = adam_update(params, grads, m, v, t_adam, lr, max_grad_norm=0.5)
+        return (*new_p, *new_m, *new_v, assemble_qstate(rows),
+                pg_loss.reshape(1), v_loss.reshape(1), entropy.reshape(1))
+
+    all_names = [*pn, *vn]
+    inputs = [
+        *all_names,
+        *[(f"m.{n}", s) for n, s in all_names],
+        *[(f"v.{n}", s) for n, s in all_names],
+        ("qstate", (n_q, 2)),
+        ("obs", (B, arch.obs_dim)),
+        ("actions", (B,)),
+        ("returns", (B,)),
+        ("advantages", (B,)),
+        ("hyper", (7,)),
+    ]
+    outputs = [
+        *all_names,
+        *[(f"m.{n}", s) for n, s in all_names],
+        *[(f"v.{n}", s) for n, s in all_names],
+        ("qstate", (n_q, 2)),
+        ("pg_loss", (1,)),
+        ("v_loss", (1,)),
+        ("entropy", (1,)),
+    ]
+    return ProgramDef(
+        name=f"{arch.name}_train", fn=fn, inputs=inputs, outputs=outputs,
+        meta={"algo": "a2c", "kind": "train", "arch": arch._asdict(),
+              "n_policy_params": len(pn), "n_value_params": len(vn), "n_qstate": n_q,
+              "hyper": ["lr", "bits", "step", "delay", "t_adam", "vf_coef", "ent_coef"]},
+    )

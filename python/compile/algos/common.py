@@ -1,0 +1,96 @@
+"""Shared pieces for the algorithm train-step factories.
+
+Every factory returns `ProgramDef`s: a pure function over a *flat* list of
+f32 arrays plus the spec metadata the AOT exporter needs (input names /
+shapes and output names). Flat positional tensors keep the Rust side free
+of any pytree logic — the manifest is the single source of truth for
+what each position means.
+"""
+
+from typing import Callable, List, NamedTuple, Sequence, Tuple
+
+import jax.numpy as jnp
+
+from ..nets import mlp_param_shapes, n_quant_tensors
+
+
+class ArchSpec(NamedTuple):
+    """One exported network architecture.
+
+    name        - unique id, e.g. "dqn_pong_lite"
+    obs_dim     - observation feature count
+    act_dim     - discrete action count, or continuous action dims
+    hidden      - hidden layer widths
+    act_batch   - batch size of the act program (rollout width)
+    train_batch - batch size of the train program
+    layer_norm  - pre-activation layer norm (Fig-1 regularization baseline)
+    compute    - "f32" or "bf16" (mixed-precision case study)
+    """
+
+    name: str
+    obs_dim: int
+    act_dim: int
+    hidden: Tuple[int, ...]
+    act_batch: int = 16
+    train_batch: int = 64
+    layer_norm: bool = False
+    compute: str = "f32"
+
+    @property
+    def compute_dtype(self):
+        return jnp.bfloat16 if self.compute == "bf16" else jnp.float32
+
+    def policy_dims(self) -> List[int]:
+        return [self.obs_dim, *self.hidden, self.act_dim]
+
+    def value_dims(self) -> List[int]:
+        return [self.obs_dim, *self.hidden, 1]
+
+
+class ProgramDef(NamedTuple):
+    """A lowerable program: pure fn over flat f32 arrays.
+
+    fn       - callable(*arrays) -> tuple(arrays)
+    inputs   - [(name, shape)] in positional order
+    outputs  - [(name, shape)]
+    meta     - algorithm-specific metadata dict merged into the manifest
+    """
+
+    name: str
+    fn: Callable
+    inputs: List[Tuple[str, Tuple[int, ...]]]
+    outputs: List[Tuple[str, Tuple[int, ...]]]
+    meta: dict
+
+
+def named_params(prefix: str, dims: Sequence[int]) -> List[Tuple[str, Tuple[int, ...]]]:
+    """Manifest entries for one MLP's flat parameter list."""
+    out = []
+    for i, shape in enumerate(mlp_param_shapes(dims)):
+        kind = "w" if len(shape) == 2 else "b"
+        out.append((f"{prefix}.{kind}{i // 2}", shape))
+    return out
+
+
+def qstate_rows(dims: Sequence[int]) -> int:
+    return n_quant_tensors(dims)
+
+
+def categorical_logp_entropy(logits, actions):
+    """Log-prob of taken actions and mean entropy for a batch of logits.
+
+    ``actions`` arrives as f32 (the coordinator speaks a single dtype) and
+    is cast to int for the gather.
+    """
+    logp_all = logits - jnp.log(jnp.sum(jnp.exp(logits - jnp.max(logits, axis=1, keepdims=True)), axis=1, keepdims=True)) - jnp.max(logits, axis=1, keepdims=True)
+    a = actions.astype(jnp.int32)
+    logp = jnp.take_along_axis(logp_all, a[:, None], axis=1)[:, 0]
+    p = jnp.exp(logp_all)
+    entropy = -jnp.sum(p * logp_all, axis=1).mean()
+    return logp, entropy
+
+
+def huber(x, delta: float = 1.0):
+    absx = jnp.abs(x)
+    quad = jnp.minimum(absx, delta)
+    return 0.5 * quad * quad + delta * (absx - quad)

@@ -1,0 +1,135 @@
+"""DDPG act/train programs (Lillicrap et al. 2015) with QAT hooks.
+
+Actor tower (tanh-squashed, QAT-quantized — it is the deployed policy)
+plus critic tower on [obs ++ action] (fp32). Target networks are separate
+parameter inputs; the coordinator performs the polyak averaging host-side
+(a cheap elementwise lerp) on its master copies.
+
+hyper layout (rank-1 f32):
+    act:   [bits, step, delay]
+    train: [lr_actor, lr_critic, gamma, bits, step, delay, t_adam]
+"""
+
+import jax
+import jax.numpy as jnp
+
+from ..nets import mlp_apply
+from ..optimizers import adam_update
+from ..quantization import QuantCtl, assemble_qstate
+from .common import ArchSpec, ProgramDef, named_params, qstate_rows
+
+
+def _split(arrs, counts):
+    out, i = [], 0
+    for c in counts:
+        out.append(list(arrs[i : i + c]))
+        i += c
+    return out
+
+
+def _critic_dims(arch: ArchSpec):
+    return [arch.obs_dim + arch.act_dim, *arch.hidden, 1]
+
+
+def make_act(arch: ArchSpec) -> ProgramDef:
+    ad = arch.policy_dims()
+    an = named_params("actor", ad)
+    n_q = qstate_rows(ad)
+    B = arch.act_batch
+
+    def fn(*arrs):
+        actor = list(arrs[: len(an)])
+        qstate, obs, hyper = arrs[len(an) :]
+        ctl = QuantCtl(bits=hyper[0], step=hyper[1], delay=hyper[2])
+        action, _ = mlp_apply(actor, obs, qstate, 0, ctl, final_activation="tanh",
+                              layer_norm=arch.layer_norm, compute_dtype=arch.compute_dtype)
+        return (action,)
+
+    inputs = [*an, ("qstate", (n_q, 2)), ("obs", (B, arch.obs_dim)), ("hyper", (3,))]
+    outputs = [("action", (B, arch.act_dim))]
+    return ProgramDef(
+        name=f"{arch.name}_act", fn=fn, inputs=inputs, outputs=outputs,
+        meta={"algo": "ddpg", "kind": "act", "arch": arch._asdict(),
+              "n_actor_params": len(an), "n_qstate": n_q,
+              "hyper": ["bits", "step", "delay"]},
+    )
+
+
+def make_train(arch: ArchSpec) -> ProgramDef:
+    ad, cd = arch.policy_dims(), _critic_dims(arch)
+    an, cn = named_params("actor", ad), named_params("critic", cd)
+    na, nc = len(an), len(cn)
+    n_q = qstate_rows(ad)
+    B = arch.train_batch
+
+    def fn(*arrs):
+        actor, critic, t_actor, t_critic, ma, va, mc, vc = _split(
+            arrs[: 4 * na + 4 * nc], [na, nc, na, nc, na, na, nc, nc]
+        )
+        qstate, obs, act, rew, nobs, done, hyper = arrs[4 * na + 4 * nc :]
+        lr_a, lr_c, gamma, bits, step, delay, t_adam = (hyper[i] for i in range(7))
+        ctl = QuantCtl(bits=bits, step=step, delay=delay)
+        off = QuantCtl(bits=jnp.float32(0.0), step=step, delay=delay)
+
+        # --- critic update (targets from target nets, fp32 path) ---
+        a_next, _ = mlp_apply(t_actor, nobs, qstate, 0, off, final_activation="tanh",
+                              layer_norm=arch.layer_norm, compute_dtype=arch.compute_dtype)
+        q_next, _ = mlp_apply(t_critic, jnp.concatenate([nobs, a_next], axis=1),
+                              qstate, 0, off, layer_norm=arch.layer_norm,
+                              compute_dtype=arch.compute_dtype)
+        y = jax.lax.stop_gradient(rew + gamma * (1.0 - done) * q_next[:, 0])
+
+        def critic_loss(cp):
+            q, _ = mlp_apply(cp, jnp.concatenate([obs, act], axis=1), qstate, 0, off,
+                             layer_norm=arch.layer_norm, compute_dtype=arch.compute_dtype)
+            return jnp.mean((q[:, 0] - y) ** 2)
+
+        c_loss, c_grads = jax.value_and_grad(critic_loss)(critic)
+        new_c, new_mc, new_vc = adam_update(critic, c_grads, mc, vc, t_adam, lr_c)
+
+        # --- actor update (through the pre-update critic, QAT on actor) ---
+        def actor_loss(ap):
+            a, rows = mlp_apply(ap, obs, qstate, 0, ctl, final_activation="tanh",
+                                layer_norm=arch.layer_norm, compute_dtype=arch.compute_dtype)
+            q, _ = mlp_apply(critic, jnp.concatenate([obs, a], axis=1), qstate, 0, off,
+                             layer_norm=arch.layer_norm, compute_dtype=arch.compute_dtype)
+            return -jnp.mean(q[:, 0]), rows
+
+        (a_loss, rows), a_grads = jax.value_and_grad(actor_loss, has_aux=True)(actor)
+        new_a, new_ma, new_va = adam_update(actor, a_grads, ma, va, t_adam, lr_a)
+
+        return (*new_a, *new_c, *new_ma, *new_va, *new_mc, *new_vc,
+                assemble_qstate(rows), c_loss.reshape(1), a_loss.reshape(1))
+
+    inputs = [
+        *an, *cn,
+        *[(f"target.{n}", s) for n, s in an],
+        *[(f"target.{n}", s) for n, s in cn],
+        *[(f"m.{n}", s) for n, s in an],
+        *[(f"v.{n}", s) for n, s in an],
+        *[(f"m.{n}", s) for n, s in cn],
+        *[(f"v.{n}", s) for n, s in cn],
+        ("qstate", (n_q, 2)),
+        ("obs", (B, arch.obs_dim)),
+        ("act", (B, arch.act_dim)),
+        ("rew", (B,)),
+        ("nobs", (B, arch.obs_dim)),
+        ("done", (B,)),
+        ("hyper", (7,)),
+    ]
+    outputs = [
+        *an, *cn,
+        *[(f"m.{n}", s) for n, s in an],
+        *[(f"v.{n}", s) for n, s in an],
+        *[(f"m.{n}", s) for n, s in cn],
+        *[(f"v.{n}", s) for n, s in cn],
+        ("qstate", (n_q, 2)),
+        ("critic_loss", (1,)),
+        ("actor_loss", (1,)),
+    ]
+    return ProgramDef(
+        name=f"{arch.name}_train", fn=fn, inputs=inputs, outputs=outputs,
+        meta={"algo": "ddpg", "kind": "train", "arch": arch._asdict(),
+              "n_actor_params": na, "n_critic_params": nc, "n_qstate": n_q,
+              "hyper": ["lr_actor", "lr_critic", "gamma", "bits", "step", "delay", "t_adam"]},
+    )

@@ -1,0 +1,125 @@
+"""DQN act/train programs (Mnih et al. 2013) with QAT hooks.
+
+Matches the paper's setup: a Q-network tower, target network, prioritized
+replay importance weights, Huber TD loss, Adam. The target network is a
+*separate parameter input* — the Rust coordinator owns the copy schedule
+(`target_network_update_frequency` in the paper's Table 9) by duplicating
+literals host-side, so no extra program is needed.
+
+hyper layout (rank-1 f32):
+    act:   [bits, step, delay]
+    train: [lr, gamma, bits, step, delay, t_adam]
+"""
+
+from typing import List
+
+import jax
+import jax.numpy as jnp
+
+from ..nets import mlp_apply
+from ..optimizers import adam_update
+from ..quantization import QuantCtl, assemble_qstate
+from .common import ArchSpec, ProgramDef, huber, named_params, qstate_rows
+
+
+def _unpack(arrs: List, counts: List[int]):
+    """Split the flat positional arg list into algorithm groups."""
+    out, i = [], 0
+    for c in counts:
+        out.append(list(arrs[i : i + c]))
+        i += c
+    assert i == len(arrs)
+    return out
+
+
+def make_act(arch: ArchSpec) -> ProgramDef:
+    dims = arch.policy_dims()
+    p_names = named_params("q", dims)
+    n_p = len(p_names)
+    n_q = qstate_rows(dims)
+    B = arch.act_batch
+
+    def fn(*arrs):
+        (params,), rest = _unpack(arrs[:n_p], [n_p]), arrs[n_p:]
+        qstate, obs, hyper = rest
+        ctl = QuantCtl(bits=hyper[0], step=hyper[1], delay=hyper[2])
+        qvals, _rows = mlp_apply(
+            params, obs, qstate, 0, ctl,
+            layer_norm=arch.layer_norm, compute_dtype=arch.compute_dtype,
+        )
+        return (qvals,)
+
+    inputs = [*p_names, ("qstate", (n_q, 2)), ("obs", (B, arch.obs_dim)), ("hyper", (3,))]
+    outputs = [("qvalues", (B, arch.act_dim))]
+    return ProgramDef(
+        name=f"{arch.name}_act", fn=fn, inputs=inputs, outputs=outputs,
+        meta={"algo": "dqn", "kind": "act", "arch": arch._asdict(), "n_params": n_p,
+              "n_qstate": n_q, "hyper": ["bits", "step", "delay"]},
+    )
+
+
+def make_train(arch: ArchSpec) -> ProgramDef:
+    dims = arch.policy_dims()
+    p_names = named_params("q", dims)
+    n_p = len(p_names)
+    n_q = qstate_rows(dims)
+    B = arch.train_batch
+
+    def fn(*arrs):
+        params, target, m, v = _unpack(arrs[: 4 * n_p], [n_p, n_p, n_p, n_p])
+        qstate, obs, act, rew, nobs, done, isw, hyper = arrs[4 * n_p :]
+        lr, gamma, bits, step, delay, t_adam = (hyper[i] for i in range(6))
+        ctl = QuantCtl(bits=bits, step=step, delay=delay)
+
+        # Bellman target from the (frozen) target network — no QAT noise on
+        # the target path; the paper quantizes the online net only.
+        off = QuantCtl(bits=jnp.float32(0.0), step=step, delay=delay)
+        q_next, _ = mlp_apply(target, nobs, qstate, 0, off,
+                              layer_norm=arch.layer_norm, compute_dtype=arch.compute_dtype)
+        y = rew + gamma * (1.0 - done) * jnp.max(q_next, axis=1)
+        y = jax.lax.stop_gradient(y)
+
+        def loss_fn(ps):
+            q_all, rows = mlp_apply(ps, obs, qstate, 0, ctl,
+                                    layer_norm=arch.layer_norm,
+                                    compute_dtype=arch.compute_dtype)
+            a = act.astype(jnp.int32)
+            q_sa = jnp.take_along_axis(q_all, a[:, None], axis=1)[:, 0]
+            td = q_sa - y
+            loss = jnp.mean(isw * huber(td))
+            return loss, (td, rows)
+
+        (loss, (td, rows)), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        new_p, new_m, new_v = adam_update(params, grads, m, v, t_adam, lr)
+        new_qstate = assemble_qstate(rows)
+        return (*new_p, *new_m, *new_v, new_qstate,
+                loss.reshape(1), jnp.abs(td))
+
+    inputs = [
+        *p_names,
+        *[(f"target.{n}", s) for n, s in p_names],
+        *[(f"m.{n}", s) for n, s in p_names],
+        *[(f"v.{n}", s) for n, s in p_names],
+        ("qstate", (n_q, 2)),
+        ("obs", (B, arch.obs_dim)),
+        ("act", (B,)),
+        ("rew", (B,)),
+        ("nobs", (B, arch.obs_dim)),
+        ("done", (B,)),
+        ("isw", (B,)),
+        ("hyper", (6,)),
+    ]
+    outputs = [
+        *p_names,
+        *[(f"m.{n}", s) for n, s in p_names],
+        *[(f"v.{n}", s) for n, s in p_names],
+        ("qstate", (n_q, 2)),
+        ("loss", (1,)),
+        ("td_abs", (B,)),
+    ]
+    return ProgramDef(
+        name=f"{arch.name}_train", fn=fn, inputs=inputs, outputs=outputs,
+        meta={"algo": "dqn", "kind": "train", "arch": arch._asdict(), "n_params": n_p,
+              "n_qstate": n_q,
+              "hyper": ["lr", "gamma", "bits", "step", "delay", "t_adam"]},
+    )

@@ -1,0 +1,105 @@
+"""PPO act/train programs (Schulman et al. 2017) with QAT hooks.
+
+Clipped-surrogate objective over the same separate policy/value towers as
+A2C (see a2c.py); the act program is identical in shape, so it reuses the
+A2C factory with the algo tag swapped.
+
+hyper layout (rank-1 f32):
+    act:   [bits, step, delay]
+    train: [lr, bits, step, delay, t_adam, vf_coef, ent_coef, clip]
+"""
+
+import jax
+import jax.numpy as jnp
+
+from ..nets import mlp_apply
+from ..optimizers import adam_update
+from ..quantization import QuantCtl, assemble_qstate
+from . import a2c
+from .common import ArchSpec, ProgramDef, categorical_logp_entropy, named_params, qstate_rows
+
+
+def make_act(arch: ArchSpec) -> ProgramDef:
+    prog = a2c.make_act(arch)
+    prog.meta["algo"] = "ppo"
+    return prog
+
+
+def make_train(arch: ArchSpec) -> ProgramDef:
+    pd, vd = arch.policy_dims(), arch.value_dims()
+    pn, vn = named_params("pi", pd), named_params("vf", vd)
+    n_all = len(pn) + len(vn)
+    n_q = qstate_rows(pd)
+    B = arch.train_batch
+
+    def _split(arrs, counts):
+        out, i = [], 0
+        for c in counts:
+            out.append(list(arrs[i : i + c]))
+            i += c
+        return out
+
+    def fn(*arrs):
+        params, m, v = _split(arrs[: 3 * n_all], [n_all, n_all, n_all])
+        qstate, obs, actions, returns, adv, old_logp, hyper = arrs[3 * n_all :]
+        lr, bits, step, delay, t_adam, vf_coef, ent_coef, clip = (hyper[i] for i in range(8))
+        ctl = QuantCtl(bits=bits, step=step, delay=delay)
+        off = QuantCtl(bits=jnp.float32(0.0), step=step, delay=delay)
+
+        def loss_fn(ps):
+            pp, vp = ps[: len(pn)], ps[len(pn) :]
+            logits, rows = mlp_apply(pp, obs, qstate, 0, ctl,
+                                     layer_norm=arch.layer_norm,
+                                     compute_dtype=arch.compute_dtype)
+            value, _ = mlp_apply(vp, obs, qstate, 0, off,
+                                 layer_norm=arch.layer_norm,
+                                 compute_dtype=arch.compute_dtype)
+            logp, entropy = categorical_logp_entropy(logits, actions)
+            ratio = jnp.exp(logp - old_logp)
+            unclipped = ratio * adv
+            clipped = jnp.clip(ratio, 1.0 - clip, 1.0 + clip) * adv
+            pg_loss = -jnp.mean(jnp.minimum(unclipped, clipped))
+            v_loss = jnp.mean((returns - value[:, 0]) ** 2)
+            # Fraction of samples whose ratio was clipped — a standard PPO
+            # health metric the coordinator logs.
+            clip_frac = jnp.mean((jnp.abs(ratio - 1.0) > clip).astype(jnp.float32))
+            loss = pg_loss + vf_coef * v_loss - ent_coef * entropy
+            return loss, (pg_loss, v_loss, entropy, clip_frac, rows)
+
+        (_, (pg_loss, v_loss, entropy, clip_frac, rows)), grads = jax.value_and_grad(
+            loss_fn, has_aux=True
+        )(params)
+        new_p, new_m, new_v = adam_update(params, grads, m, v, t_adam, lr, max_grad_norm=0.5)
+        return (*new_p, *new_m, *new_v, assemble_qstate(rows),
+                pg_loss.reshape(1), v_loss.reshape(1), entropy.reshape(1),
+                clip_frac.reshape(1))
+
+    all_names = [*pn, *vn]
+    inputs = [
+        *all_names,
+        *[(f"m.{n}", s) for n, s in all_names],
+        *[(f"v.{n}", s) for n, s in all_names],
+        ("qstate", (n_q, 2)),
+        ("obs", (B, arch.obs_dim)),
+        ("actions", (B,)),
+        ("returns", (B,)),
+        ("advantages", (B,)),
+        ("old_logp", (B,)),
+        ("hyper", (8,)),
+    ]
+    outputs = [
+        *all_names,
+        *[(f"m.{n}", s) for n, s in all_names],
+        *[(f"v.{n}", s) for n, s in all_names],
+        ("qstate", (n_q, 2)),
+        ("pg_loss", (1,)),
+        ("v_loss", (1,)),
+        ("entropy", (1,)),
+        ("clip_frac", (1,)),
+    ]
+    return ProgramDef(
+        name=f"{arch.name}_train", fn=fn, inputs=inputs, outputs=outputs,
+        meta={"algo": "ppo", "kind": "train", "arch": arch._asdict(),
+              "n_policy_params": len(pn), "n_value_params": len(vn), "n_qstate": n_q,
+              "hyper": ["lr", "bits", "step", "delay", "t_adam", "vf_coef", "ent_coef", "clip"]},
+    )

@@ -1,0 +1,112 @@
+"""AOT exporter: lower every (algorithm x architecture) program to HLO text.
+
+This is the only place Python touches the pipeline; it runs once under
+``make artifacts`` and writes
+
+    artifacts/<program>.hlo.txt   one per act/train program
+    artifacts/manifest.json       input/output specs + the env->arch map
+
+HLO *text* (not serialized HloModuleProto) is the interchange format: jax
+>= 0.5 emits protos with 64-bit instruction ids which the image's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids, so text round-trips cleanly (see /opt/xla-example).
+
+Incremental: a program is re-lowered only when missing or when --force is
+given; the manifest is always rewritten (it is cheap and authoritative).
+"""
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .algos import a2c, ddpg, dqn, ppo
+from .registry import NAV_POLICIES, MP_POLICIES, build_matrix
+
+FACTORIES = {
+    "dqn": (dqn.make_act, dqn.make_train),
+    "a2c": (a2c.make_act, a2c.make_train),
+    "ppo": (ppo.make_act, ppo.make_train),
+    "ddpg": (ddpg.make_act, ddpg.make_train),
+}
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (ids reassigned by parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_program(prog) -> str:
+    specs = [jax.ShapeDtypeStruct(shape, jnp.float32) for _, shape in prog.inputs]
+    lowered = jax.jit(prog.fn).lower(*specs)
+    return to_hlo_text(lowered)
+
+
+def program_entry(prog, filename: str) -> dict:
+    return {
+        "name": prog.name,
+        "file": filename,
+        "inputs": [{"name": n, "shape": list(s)} for n, s in prog.inputs],
+        "outputs": [{"name": n, "shape": list(s)} for n, s in prog.outputs],
+        "meta": prog.meta,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifacts directory")
+    ap.add_argument("--force", action="store_true", help="re-lower everything")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated arch-name substrings to export (debug)")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    matrix, env_map = build_matrix()
+    if args.only:
+        keys = args.only.split(",")
+        matrix = [(a, s) for a, s in matrix if any(k in s.name for k in keys)]
+
+    entries = []
+    t_total = time.time()
+    for algo, spec in matrix:
+        make_act, make_train = FACTORIES[algo]
+        for prog in (make_act(spec), make_train(spec)):
+            fname = f"{prog.name}.hlo.txt"
+            path = os.path.join(args.out, fname)
+            entries.append(program_entry(prog, fname))
+            if os.path.exists(path) and not args.force:
+                continue
+            t0 = time.time()
+            text = lower_program(prog)
+            with open(path, "w") as f:
+                f.write(text)
+            print(f"  lowered {prog.name:48s} {len(text)//1024:6d} KiB "
+                  f"{time.time()-t0:5.1f}s", file=sys.stderr)
+
+    manifest = {
+        "version": 1,
+        "env_arch_map": env_map,
+        "mp_policies": {k: list(v) for k, v in MP_POLICIES.items()},
+        "nav_policies": {k: list(v) for k, v in NAV_POLICIES.items()},
+        "programs": entries,
+    }
+    man_path = os.path.join(args.out, "manifest.json")
+    with open(man_path, "w") as f:
+        json.dump(manifest, f, indent=1)
+    digest = hashlib.sha256(json.dumps(manifest, sort_keys=True).encode()).hexdigest()[:12]
+    print(f"wrote {len(entries)} programs + manifest ({digest}) "
+          f"in {time.time()-t_total:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

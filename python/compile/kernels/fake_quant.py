@@ -1,0 +1,163 @@
+"""Layer-1 Pallas kernels: uniform affine fake-quantization.
+
+The fake-quant op is QuaRL's compute hot-spot: during quantization-aware
+training it runs on every weight tensor and every activation tensor of
+every forward pass. The kernels here implement the quantize-dequantize
+(with the straight-through-estimator gradient of QuaRL §3.2) as Pallas
+kernels so the HBM<->VMEM schedule is explicit.
+
+TPU mapping (DESIGN.md §9): ``fake_quant`` is bandwidth-bound (2 HBM
+touches per element); blocks of (256, 256) f32 keep a 256 KiB working set
+in VMEM, leaving room for 4-deep double buffering. On this CPU image the
+kernels run with ``interpret=True`` (the image's PJRT CPU plugin cannot
+execute Mosaic custom-calls), so correctness — not wallclock — is what the
+pytest suite validates; see ref.py for the oracle.
+
+Straight-through estimator: the paper defines dQ/dW = I (full identity,
+not range-clipped), so the custom VJP passes incoming cotangents through
+unchanged for ``x`` and drops range/bit tangents.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Block shape for tiled dispatch. 256x256 f32 = 256 KiB, sized for VMEM
+# residency with double buffering on TPU; under interpret=True it only
+# affects trace structure.
+_BLOCK = 256
+
+
+def _fake_quant_kernel(x_ref, ctl_ref, o_ref):
+    """Elementwise quantize-dequantize of one block.
+
+    ctl_ref holds (delta, z, levels) precomputed from the (global) range —
+    the range reduction cannot live inside a blocked kernel without a
+    cross-block pass, so the caller computes it (one cheap jnp reduction)
+    and the kernel fuses the 5-op elementwise chain.
+    """
+    delta = ctl_ref[0]
+    z = ctl_ref[1]
+    levels = ctl_ref[2]
+    x = x_ref[...]
+    q = jnp.floor(x / delta) + z
+    q = jnp.clip(q, 0.0, levels - 1.0)
+    o_ref[...] = delta * (q - z)
+
+
+def _fake_quant_2d(x2d, delta, z, levels):
+    """Tiled pallas dispatch over a 2-D view of the tensor."""
+    m, n = x2d.shape
+    ctl = jnp.stack([delta, z, levels])
+    if m <= _BLOCK and n <= _BLOCK:
+        return pl.pallas_call(
+            _fake_quant_kernel,
+            out_shape=jax.ShapeDtypeStruct((m, n), x2d.dtype),
+            interpret=True,
+        )(x2d, ctl)
+    grid = (pl.cdiv(m, _BLOCK), pl.cdiv(n, _BLOCK))
+    return pl.pallas_call(
+        _fake_quant_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((_BLOCK, _BLOCK), lambda i, j: (i, j)),
+            pl.BlockSpec((3,), lambda i, j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((_BLOCK, _BLOCK), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x2d.dtype),
+        interpret=True,
+    )(x2d, ctl)
+
+
+def _as_2d(x):
+    """View any-rank tensor as 2-D for the tiled kernel."""
+    if x.ndim == 0:
+        return x.reshape(1, 1), x.shape
+    if x.ndim == 1:
+        return x.reshape(1, -1), x.shape
+    if x.ndim == 2:
+        return x, x.shape
+    return x.reshape(x.shape[0], -1), x.shape
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=())
+def fake_quant(x, vmin, vmax, n_bits):
+    """Quantize-dequantize ``x`` to ``n_bits`` with static range [vmin, vmax].
+
+    Matches ``ref.fake_quant_ref``. Gradient is the straight-through
+    estimator (identity on ``x``; zero on range and bit inputs).
+    """
+    return _fake_quant_fwd(x, vmin, vmax, n_bits)[0]
+
+
+def _fake_quant_fwd(x, vmin, vmax, n_bits):
+    vmin = jnp.minimum(vmin, 0.0)
+    vmax = jnp.maximum(vmax, 0.0)
+    levels = jnp.exp2(jnp.asarray(n_bits, dtype=jnp.float32))
+    delta = (jnp.abs(vmin) + jnp.abs(vmax)) / levels
+    delta = jnp.where(delta <= 0.0, 1.0, delta)
+    z = jnp.floor(-vmin / delta)
+    x2d, orig_shape = _as_2d(x)
+    out = _fake_quant_2d(x2d, delta, z, levels).reshape(orig_shape)
+    return out, None
+
+
+def _fake_quant_bwd(_res, g):
+    # Straight-through estimator (QuaRL §3.2): dQ/dx = I.
+    return g, jnp.zeros(()), jnp.zeros(()), jnp.zeros(())
+
+
+fake_quant.defvjp(_fake_quant_fwd, _fake_quant_bwd)
+
+
+def fake_quant_dynamic(x, n_bits):
+    """PTQ-style fake quant: range observed from ``x`` itself (still STE)."""
+    vmin = jax.lax.stop_gradient(jnp.min(x))
+    vmax = jax.lax.stop_gradient(jnp.max(x))
+    return fake_quant(x, vmin, vmax, n_bits)
+
+
+def _fake_quant_per_axis_kernel(w_ref, delta_ref, z_ref, lv_ref, o_ref):
+    """Per-row (axis-0) affine quantize-dequantize of a 2-D weight block."""
+    w = w_ref[...]
+    delta = delta_ref[...].reshape(-1, 1)
+    z = z_ref[...].reshape(-1, 1)
+    levels = lv_ref[0]
+    q = jnp.floor(w / delta) + z
+    q = jnp.clip(q, 0.0, levels - 1.0)
+    o_ref[...] = delta * (q - z)
+
+
+@jax.custom_vjp
+def fake_quant_per_axis(w, n_bits):
+    """Per-axis (axis 0) fake quant for weight matrices, STE gradient.
+
+    QuaRL applies per-axis quantization to conv channels; for our MLP
+    towers axis 0 is the output-features axis, the analogous channel dim.
+    """
+    return _fq_pa_fwd(w, n_bits)[0]
+
+
+def _fq_pa_fwd(w, n_bits):
+    assert w.ndim == 2, "per-axis kernel expects rank-2 weights"
+    vmin = jnp.minimum(jnp.min(w, axis=1), 0.0)
+    vmax = jnp.maximum(jnp.max(w, axis=1), 0.0)
+    levels = jnp.exp2(jnp.asarray(n_bits, dtype=jnp.float32))
+    delta = (jnp.abs(vmin) + jnp.abs(vmax)) / levels
+    delta = jnp.where(delta <= 0.0, 1.0, delta)
+    z = jnp.floor(-vmin / delta)
+    out = pl.pallas_call(
+        _fake_quant_per_axis_kernel,
+        out_shape=jax.ShapeDtypeStruct(w.shape, w.dtype),
+        interpret=True,
+    )(w, delta, z, jnp.stack([levels]))
+    return out, None
+
+
+def _fq_pa_bwd(_res, g):
+    return g, jnp.zeros(())
+
+
+fake_quant_per_axis.defvjp(_fq_pa_fwd, _fq_pa_bwd)

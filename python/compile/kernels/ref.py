@@ -1,0 +1,82 @@
+"""Pure-jnp oracles for the Layer-1 Pallas kernels.
+
+These are the *specification*: the Pallas kernels in ``fake_quant.py`` and
+``quant_matmul.py`` must match these bit-for-bit (they use the same float
+ops in the same order), and the Rust quantizer in ``rust/src/quant/`` is
+checked against golden vectors produced from these functions.
+
+The math follows QuaRL §3.1/§3.2 (uniform affine quantization with zero
+always representable, floor rounding, straight-through estimator):
+
+    delta = (|min(W,0)| + |max(W,0)|) / 2^n
+    z     = floor(-min(W,0) / delta)
+    Q(W)  = clip(floor(W / delta) + z, 0, 2^n - 1)
+    D(q)  = delta * (q - z)
+"""
+
+import jax.numpy as jnp
+
+
+def qparams_from_range(vmin, vmax, n_bits):
+    """delta (scale), z (zero point) and level count for the affine quantizer.
+
+    ``vmin``/``vmax`` are expanded to include 0 per the paper (min(W,0),
+    max(W,0)) so that 0 is always exactly representable. Degenerate
+    all-zero ranges get delta=1 to avoid division by zero (then every
+    value quantizes to z and dequantizes to exactly 0).
+    """
+    vmin = jnp.minimum(vmin, 0.0)
+    vmax = jnp.maximum(vmax, 0.0)
+    levels = jnp.exp2(jnp.asarray(n_bits, dtype=jnp.float32))
+    delta = (jnp.abs(vmin) + jnp.abs(vmax)) / levels
+    delta = jnp.where(delta <= 0.0, 1.0, delta)
+    z = jnp.floor(-vmin / delta)
+    return delta, z, levels
+
+
+def fake_quant_ref(x, vmin, vmax, n_bits):
+    """Quantize-dequantize ``x`` with static range [vmin, vmax].
+
+    Returns values on the affine grid; out-of-range inputs are clamped to
+    the representable span [D(0), D(2^n - 1)].
+    """
+    delta, z, levels = qparams_from_range(vmin, vmax, n_bits)
+    q = jnp.floor(x / delta) + z
+    q = jnp.clip(q, 0.0, levels - 1.0)
+    return delta * (q - z)
+
+
+def fake_quant_dynamic_ref(x, n_bits):
+    """Post-training-quantization style: ranges taken from ``x`` itself."""
+    return fake_quant_ref(x, jnp.min(x), jnp.max(x), n_bits)
+
+
+def fake_quant_per_axis_ref(w, n_bits, axis=0):
+    """Per-axis (channel) affine fake-quant, QuaRL's conv-weight scheme.
+
+    Ranges are computed independently along ``axis`` (one scale/zero-point
+    per slice), matching TFLite's per-channel quantization.
+    """
+    reduce_axes = tuple(i for i in range(w.ndim) if i != axis)
+    vmin = jnp.min(w, axis=reduce_axes, keepdims=True)
+    vmax = jnp.max(w, axis=reduce_axes, keepdims=True)
+    return fake_quant_ref(w, vmin, vmax, n_bits)
+
+
+def quant_matmul_ref(x, w, n_bits):
+    """Simulated integer GEMM: dequantize(quantize(x) @ quantize(w)).
+
+    Both operands are dynamically ranged (per-tensor). This is the oracle
+    for the fused Pallas ``quant_matmul`` kernel and mirrors what an int8
+    inference engine computes (up to f32 accumulation order).
+    """
+    dx, zx, lx = qparams_from_range(jnp.min(x), jnp.max(x), n_bits)
+    dw, zw, lw = qparams_from_range(jnp.min(w), jnp.max(w), n_bits)
+    qx = jnp.clip(jnp.floor(x / dx) + zx, 0.0, lx - 1.0) - zx
+    qw = jnp.clip(jnp.floor(w / dw) + zw, 0.0, lw - 1.0) - zw
+    return (dx * dw) * (qx @ qw)
+
+
+def fp16_quant_ref(x):
+    """fp16 post-training quantization: round-trip through IEEE half."""
+    return x.astype(jnp.float16).astype(jnp.float32)

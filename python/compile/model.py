@@ -1,0 +1,12 @@
+"""Layer-2 public surface (re-exports).
+
+``model.py`` is the conventional entry point named by the build layout;
+the real definitions live in nets.py / quantization.py / algos/*. Import
+from here in tests and notebooks.
+"""
+
+from .algos.common import ArchSpec, ProgramDef  # noqa: F401
+from .nets import mlp_apply, mlp_param_shapes, n_quant_tensors  # noqa: F401
+from .optimizers import adam_update, sgd_update  # noqa: F401
+from .quantization import QuantCtl, init_qstate, qat_tensor  # noqa: F401
+from .registry import build_matrix  # noqa: F401

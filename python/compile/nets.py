@@ -1,0 +1,99 @@
+"""Layer-2 policy/value networks.
+
+QuaRL's Atari models are 3-conv + FC towers over pixel stacks; our
+environment substrate (DESIGN.md §2) uses compact feature observations, so
+the networks are multi-layer MLP towers of equivalent depth — preserving
+the per-layer quantization-error composition the paper studies. All
+networks are pure functions over a flat parameter list (order fixed,
+recorded in the artifact manifest) so the Rust coordinator can thread
+parameters through PJRT executions without any pytree machinery.
+
+Parameter layout for an MLP with layer dims [d0, d1, ..., dL]:
+
+    params = [W1 (d0,d1), b1 (d1,), W2 (d1,d2), b2 (d2,), ...]
+
+QAT (see quantization.py) fake-quantizes every weight matrix and every
+hidden activation; with ``layer_norm=True`` a parameter-free layer norm is
+applied pre-activation (the Figure-1 regularization baseline).
+"""
+
+from typing import List, Sequence, Tuple
+
+import jax.numpy as jnp
+
+from .quantization import QuantCtl, qat_tensor
+
+
+def mlp_param_shapes(dims: Sequence[int]) -> List[Tuple[int, ...]]:
+    """Shapes of the flat parameter list for layer dims ``dims``."""
+    shapes: List[Tuple[int, ...]] = []
+    for i in range(len(dims) - 1):
+        shapes.append((dims[i], dims[i + 1]))
+        shapes.append((dims[i + 1],))
+    return shapes
+
+
+def n_quant_tensors(dims: Sequence[int]) -> int:
+    """Quantized tensors for QAT state: one weight + one activation per layer.
+
+    The final layer's output (logits / q-values / pre-tanh action) is also
+    range-tracked, matching the paper's quantization of every activation.
+    """
+    n_layers = len(dims) - 1
+    return 2 * n_layers
+
+
+def _layer_norm(x):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + 1e-5)
+
+
+def mlp_apply(
+    params: Sequence[jnp.ndarray],
+    x: jnp.ndarray,
+    qstate: jnp.ndarray,
+    q_base: int,
+    ctl: QuantCtl,
+    *,
+    activation: str = "relu",
+    final_activation: str = "none",
+    layer_norm: bool = False,
+    compute_dtype=jnp.float32,
+):
+    """Forward pass with QAT fake-quant on weights and activations.
+
+    Returns (output, new_qstate_rows). ``q_base`` indexes this tower's
+    first row in the shared qstate array (multi-network algorithms like
+    DDPG pack several towers into one state).
+
+    ``compute_dtype=bfloat16`` gives the mixed-precision variant: params
+    stay f32 (master copy), compute runs in bf16, output cast back — the
+    scheme of Micikevicius et al. the paper's case study uses.
+    """
+    n_layers = len(params) // 2
+    rows = []
+    h = x.astype(compute_dtype)
+    for i in range(n_layers):
+        w = params[2 * i]
+        b = params[2 * i + 1]
+        w_eff, w_row = qat_tensor(w, qstate, q_base + 2 * i, ctl)
+        rows.append(w_row)
+        h = h @ w_eff.astype(compute_dtype) + b.astype(compute_dtype)
+        last = i == n_layers - 1
+        if not last:
+            if layer_norm:
+                h = _layer_norm(h)
+            if activation == "relu":
+                h = jnp.maximum(h, 0.0)
+            elif activation == "tanh":
+                h = jnp.tanh(h)
+            else:
+                raise ValueError(f"unknown activation {activation}")
+        elif final_activation == "tanh":
+            h = jnp.tanh(h)
+        h32 = h.astype(jnp.float32)
+        h_eff, a_row = qat_tensor(h32, qstate, q_base + 2 * i + 1, ctl)
+        rows.append(a_row)
+        h = h_eff.astype(compute_dtype)
+    return h.astype(jnp.float32), rows

@@ -1,0 +1,59 @@
+"""Optimizers for the AOT train steps.
+
+Implemented over flat parameter lists (see nets.py) so the optimizer state
+maps 1:1 onto the parameter tensors and the Rust coordinator can persist /
+inspect it with the same machinery as the parameters themselves.
+"""
+
+from typing import List, Sequence, Tuple
+
+import jax.numpy as jnp
+
+
+def adam_update(
+    params: Sequence[jnp.ndarray],
+    grads: Sequence[jnp.ndarray],
+    m: Sequence[jnp.ndarray],
+    v: Sequence[jnp.ndarray],
+    t: jnp.ndarray,
+    lr: jnp.ndarray,
+    beta1: float = 0.9,
+    beta2: float = 0.999,
+    eps: float = 1e-8,
+    max_grad_norm: float = 10.0,
+) -> Tuple[List[jnp.ndarray], List[jnp.ndarray], List[jnp.ndarray]]:
+    """One Adam step with global-norm gradient clipping.
+
+    ``t`` is the 1-based step count (f32 scalar tensor, supplied by the
+    coordinator) used for bias correction. Returns (params', m', v').
+    """
+    gsq = sum(jnp.sum(g.astype(jnp.float32) ** 2) for g in grads)
+    gnorm = jnp.sqrt(gsq + 1e-12)
+    scale = jnp.minimum(1.0, max_grad_norm / gnorm)
+
+    b1t = jnp.power(beta1, t)
+    b2t = jnp.power(beta2, t)
+    new_p, new_m, new_v = [], [], []
+    for p, g, mi, vi in zip(params, grads, m, v):
+        g = g.astype(jnp.float32) * scale
+        mi2 = beta1 * mi + (1.0 - beta1) * g
+        vi2 = beta2 * vi + (1.0 - beta2) * g * g
+        m_hat = mi2 / (1.0 - b1t)
+        v_hat = vi2 / (1.0 - b2t)
+        new_p.append(p - lr * m_hat / (jnp.sqrt(v_hat) + eps))
+        new_m.append(mi2)
+        new_v.append(vi2)
+    return new_p, new_m, new_v
+
+
+def sgd_update(
+    params: Sequence[jnp.ndarray],
+    grads: Sequence[jnp.ndarray],
+    lr: jnp.ndarray,
+    max_grad_norm: float = 10.0,
+) -> List[jnp.ndarray]:
+    """Plain SGD with global-norm clipping (used by ablation benches)."""
+    gsq = sum(jnp.sum(g.astype(jnp.float32) ** 2) for g in grads)
+    gnorm = jnp.sqrt(gsq + 1e-12)
+    scale = jnp.minimum(1.0, max_grad_norm / gnorm)
+    return [p - lr * g.astype(jnp.float32) * scale for p, g in zip(params, grads)]

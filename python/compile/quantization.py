@@ -1,0 +1,64 @@
+"""QAT plumbing for Layer-2 networks (QuaRL §3.2).
+
+Quantization-aware training threads a *range state* through every train
+step: a ``(T, 2)`` f32 array holding the monitored (min, max) of each
+quantized tensor (T = weights + activations, in network order). Before the
+quantization-delay step the state keeps a running min/max and tensors pass
+through unquantized; afterwards the captured ranges freeze and every
+tensor is fake-quantized with them — exactly TensorFlow contrib.quantize's
+``quant_delay`` semantics the paper uses.
+
+All controls are *runtime tensor inputs* (bits, step, delay), so a single
+AOT-lowered program serves the whole bitwidth sweep: bits = 0 disables
+quantization entirely (the fp32 baseline uses the same artifact).
+"""
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+from .kernels.fake_quant import fake_quant
+
+
+class QuantCtl(NamedTuple):
+    """Scalar controls for QAT, unpacked from the ``hyper`` input vector.
+
+    bits  - target bitwidth; 0 disables quantization (fp32 path).
+    step  - current global training step.
+    delay - quantization delay: steps of pure range monitoring.
+    """
+
+    bits: jnp.ndarray
+    step: jnp.ndarray
+    delay: jnp.ndarray
+
+    @property
+    def on(self):
+        """Quantization active: bitwidth requested and past the delay."""
+        return jnp.logical_and(self.bits >= 1.0, self.step >= self.delay)
+
+
+def init_qstate(n_tensors: int) -> jnp.ndarray:
+    """Fresh range state: all ranges empty (0, 0)."""
+    return jnp.zeros((n_tensors, 2), dtype=jnp.float32)
+
+
+def qat_tensor(x, qstate, idx, ctl: QuantCtl):
+    """Apply QAT to one tensor; returns (maybe-quantized x, new (2,) range row).
+
+    Monitoring phase (step < delay): ranges absorb the observed min/max and
+    ``x`` passes through untouched. Quantized phase: ranges freeze, ``x``
+    is fake-quantized against them with the straight-through estimator.
+    """
+    row = qstate[idx]
+    obs_min = jnp.minimum(row[0], jnp.min(x))
+    obs_max = jnp.maximum(row[1], jnp.max(x))
+    new_row = jnp.where(ctl.on, row, jnp.stack([obs_min, obs_max]))
+    xq = fake_quant(x, new_row[0], new_row[1], jnp.maximum(ctl.bits, 1.0))
+    out = jnp.where(ctl.on, xq, x)
+    return out, new_row
+
+
+def assemble_qstate(rows):
+    """Stack per-tensor range rows back into the (T, 2) state array."""
+    return jnp.stack(rows, axis=0)

@@ -1,0 +1,144 @@
+"""The QuaRL experiment matrix: architectures and the (algo, env) -> arch map.
+
+This is the build-time mirror of paper Table 1. Architectures are deduped
+by shape signature — two environments with the same (obs_dim, act_dim,
+hidden) share one AOT program; the manifest's ``env_arch_map`` tells the
+Rust coordinator which artifact serves which (algo, env) cell.
+
+Environment shape signatures (must match rust/src/envs/):
+
+    cartpole        obs 4   act 2    breakout_lite  obs 8   act 3
+    pong_lite       obs 8   act 3    catcher        obs 6   act 3
+    invaders_lite   obs 10  act 4    grid_chase     obs 12  act 5
+    pyramid_hop     obs 9   act 4    diver_lite     obs 10  act 5
+    acrobot         obs 6   act 3    mountain_car   obs 2   act 3
+    mc_continuous   obs 2   act 1c   pendulum       obs 3   act 1c
+    cheetah_lite    obs 12  act 4c   walker_lite    obs 12  act 4c
+    biped_lite      obs 14  act 4c   nav_lite       obs 12  act 25
+"""
+
+from typing import Dict, List, Tuple
+
+from .algos.common import ArchSpec
+
+# (env id, obs_dim, act_dim) for each family.
+DISCRETE_ENVS = {
+    "cartpole": (4, 2),
+    "pong_lite": (8, 3),
+    "breakout_lite": (8, 3),
+    "catcher": (6, 3),
+    "invaders_lite": (10, 4),
+    "grid_chase": (12, 5),
+    "pyramid_hop": (9, 4),
+    "diver_lite": (10, 5),
+    "acrobot": (6, 3),
+    "mountain_car": (2, 3),
+}
+
+CONTINUOUS_ENVS = {
+    "mc_continuous": (2, 1),
+    "pendulum": (3, 1),
+    "cheetah_lite": (12, 4),
+    "walker_lite": (12, 4),
+    "biped_lite": (14, 4),
+}
+
+# Paper Table 1 evaluation cells (environment lists per algorithm).
+ATARI8 = ["breakout_lite", "invaders_lite", "catcher", "grid_chase",
+          "pyramid_hop", "diver_lite", "cartpole", "pong_lite"]
+A2C_ENVS = ATARI8
+PPO_ENVS = ATARI8
+DQN_ENVS = ATARI8
+DDPG_ENVS = ["walker_lite", "cheetah_lite", "biped_lite", "mc_continuous"]
+
+# Extra canary/ablation cells beyond the paper matrix.
+EXTRA = {
+    "dqn": ["acrobot", "mountain_car"],
+    "a2c": ["acrobot"],
+    "ppo": ["acrobot"],
+    "ddpg": ["pendulum"],
+}
+
+HIDDEN_SMALL = (64, 64)          # classic control
+HIDDEN_ARCADE = (128, 128, 128)  # paper: 3-layer conv + FC tower analogue
+HIDDEN_LOCO = (128, 128)         # continuous control
+
+# Mixed-precision case study (paper Table 10): three DQN-Pong net sizes.
+MP_POLICIES = {
+    "mp_a": (128, 128, 128),
+    "mp_b": (512, 512, 512),
+    "mp_c": (1024, 1024, 2048),
+}
+
+# Deployment case study (paper Fig. 6): three NavLite DQN policies.
+NAV_POLICIES = {
+    "nav_p1": (64, 64, 64),
+    "nav_p2": (256, 256, 256),
+    "nav_p3": (4096, 512, 1024),
+}
+NAV_OBS, NAV_ACT = 12, 25
+
+
+def _hidden_for(env: str) -> Tuple[int, ...]:
+    if env in ("cartpole", "mountain_car", "acrobot", "mc_continuous", "pendulum"):
+        return HIDDEN_SMALL
+    if env in CONTINUOUS_ENVS:
+        return HIDDEN_LOCO
+    return HIDDEN_ARCADE
+
+
+def _sig_name(algo: str, obs: int, act: int, hidden, ln: bool, compute: str) -> str:
+    h = "x".join(str(x) for x in hidden)
+    suffix = ("_ln" if ln else "") + ("_bf16" if compute == "bf16" else "")
+    return f"{algo}_o{obs}a{act}h{h}{suffix}"
+
+
+def build_matrix() -> Tuple[List[Tuple[str, ArchSpec]], Dict[str, str]]:
+    """Returns (programs-to-export, env_arch_map).
+
+    programs: [(algo, ArchSpec)] deduped by arch name.
+    env_arch_map: "algo/env[/variant]" -> arch name.
+    """
+    batches = {
+        "dqn": dict(act_batch=1, train_batch=64),
+        "a2c": dict(act_batch=8, train_batch=128),
+        "ppo": dict(act_batch=8, train_batch=128),
+        "ddpg": dict(act_batch=1, train_batch=64),
+    }
+    archs: Dict[str, Tuple[str, ArchSpec]] = {}
+    env_map: Dict[str, str] = {}
+
+    def add(algo: str, env: str, obs: int, act: int, hidden, *, ln=False,
+            compute="f32", key=None):
+        name = _sig_name(algo, obs, act, hidden, ln, compute)
+        if name not in archs:
+            archs[name] = (algo, ArchSpec(
+                name=name, obs_dim=obs, act_dim=act, hidden=tuple(hidden),
+                layer_norm=ln, compute=compute, **batches[algo]))
+        env_map[key or f"{algo}/{env}"] = name
+
+    for algo, envs in (("dqn", DQN_ENVS), ("a2c", A2C_ENVS), ("ppo", PPO_ENVS)):
+        for env in envs + EXTRA[algo]:
+            obs, act = DISCRETE_ENVS[env]
+            add(algo, env, obs, act, _hidden_for(env))
+    for env in DDPG_ENVS + EXTRA["ddpg"]:
+        obs, act = CONTINUOUS_ENVS[env]
+        add("ddpg", env, obs, act, _hidden_for(env))
+
+    # Figure 1: PPO with layer-norm regularization baseline (PongLite).
+    obs, act = DISCRETE_ENVS["pong_lite"]
+    add("ppo", "pong_lite", obs, act, HIDDEN_ARCADE, ln=True, key="ppo/pong_lite/ln")
+
+    # Mixed precision (Table 4/10): DQN-Pong in three sizes, fp32 and bf16.
+    obs, act = DISCRETE_ENVS["pong_lite"]
+    for pol, hidden in MP_POLICIES.items():
+        add("dqn", "pong_lite", obs, act, hidden, key=f"dqn/pong_lite/{pol}")
+        add("dqn", "pong_lite", obs, act, hidden, compute="bf16",
+            key=f"dqn/pong_lite/{pol}_bf16")
+
+    # Deployment (Fig. 6): NavLite DQN policies I/II/III.
+    for pol, hidden in NAV_POLICIES.items():
+        add("dqn", "nav_lite", NAV_OBS, NAV_ACT, hidden, key=f"dqn/nav_lite/{pol}")
+
+    programs = [(algo, spec) for (algo, spec) in archs.values()]
+    return programs, env_map

@@ -1,0 +1,26 @@
+"""Regenerate the golden vectors pinned in rust/tests/quant_golden.rs.
+
+Run `python -m tests.gen_golden` from python/ and paste the output into
+the Rust test if the quantizer specification ever changes (it shouldn't:
+the spec is paper §3.1).
+"""
+
+import numpy as np
+import jax.numpy as jnp
+
+from compile.kernels import ref
+
+
+def main() -> None:
+    rng = np.random.default_rng(42)
+    x = rng.normal(0.5, 1.7, 16).astype(np.float32)
+    print("pub const GOLDEN_X: [f32; 16] =", [float(v) for v in x], ";")
+    for bits in [2, 4, 8]:
+        y = np.asarray(ref.fake_quant_dynamic_ref(jnp.asarray(x), float(bits)))
+        print(f"pub const GOLDEN_INT{bits}: [f32; 16] =", [float(v) for v in y], ";")
+    y16 = np.asarray(ref.fp16_quant_ref(jnp.asarray(x)))
+    print("pub const GOLDEN_FP16: [f32; 16] =", [float(v) for v in y16], ";")
+
+
+if __name__ == "__main__":
+    main()

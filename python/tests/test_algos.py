@@ -1,0 +1,148 @@
+"""Algorithm train-step sanity: every exported program must (a) match its
+declared signature and (b) make optimization progress on a fixed batch."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.algos import a2c, ddpg, dqn, ppo
+from compile.algos.common import ArchSpec
+
+
+def arch(algo, obs=4, act=2, hidden=(16, 16), act_b=2, train_b=8):
+    return ArchSpec(name=f"{algo}_t", obs_dim=obs, act_dim=act, hidden=hidden,
+                    act_batch=act_b, train_batch=train_b)
+
+
+def make_inputs(prog, seed=0):
+    rng = np.random.default_rng(seed)
+    arrs = []
+    for name, shape in prog.inputs:
+        if name == "hyper":
+            arrs.append(None)  # filled by caller
+        elif name in ("act", "actions"):
+            arrs.append(jnp.zeros(shape, dtype=jnp.float32))
+        elif name in ("done",):
+            arrs.append(jnp.zeros(shape, dtype=jnp.float32))
+        elif name == "isw":
+            arrs.append(jnp.ones(shape, dtype=jnp.float32))
+        elif name.startswith(("m.", "v.")) or name == "qstate":
+            # optimizer state starts at zero (Adam's v must be >= 0);
+            # range state starts empty
+            arrs.append(jnp.zeros(shape, dtype=jnp.float32))
+        else:
+            arrs.append(jnp.asarray(rng.normal(0, 0.2, shape).astype(np.float32)))
+    return arrs
+
+
+def run_n(prog, arrs, hyper_fn, n_p_out, steps):
+    """Iterate a train program feeding params back; return loss series."""
+    losses = []
+    names_in = [n for n, _ in prog.inputs]
+    names_out = [n for n, _ in prog.outputs]
+    for t in range(1, steps + 1):
+        arrs[-1] = jnp.asarray(hyper_fn(t), dtype=jnp.float32)
+        out = list(prog.fn(*arrs))
+        assert len(out) == len(prog.outputs)
+        # write back same-named outputs into same-named inputs
+        for i_out, n_out in enumerate(names_out):
+            if n_out in names_in and n_out not in ("loss",):
+                arrs[names_in.index(n_out)] = out[i_out]
+        li = names_out.index("loss") if "loss" in names_out else names_out.index("pg_loss")
+        losses.append(float(out[li][0]))
+    return losses
+
+
+def test_dqn_reduces_loss_on_fixed_batch():
+    prog = dqn.make_train(arch("dqn"))
+    arrs = make_inputs(prog, 1)
+    losses = run_n(prog, arrs, lambda t: [1e-3, 0.99, 0.0, t, 1e9, t], None, 40)
+    assert losses[-1] < losses[0] * 0.5, losses[::10]
+
+
+def test_dqn_qat_still_learns():
+    # Realistic QAT schedule: monitor ranges for 15 steps (quant delay),
+    # then train with 8-bit fake quantization on the captured ranges.
+    prog = dqn.make_train(arch("dqn"))
+    arrs = make_inputs(prog, 2)
+    losses = run_n(prog, arrs, lambda t: [1e-3, 0.99, 8.0, t, 15, t], None, 60)
+    assert losses[-1] < losses[0] * 0.9, (losses[0], losses[-1])
+    # loss keeps moving after quantization turns on (STE gradients flow)
+    assert losses[-1] != losses[20]
+
+
+def test_a2c_value_loss_decreases():
+    prog = a2c.make_train(arch("a2c"))
+    arrs = make_inputs(prog, 3)
+    names_out = [n for n, _ in prog.outputs]
+    vi = names_out.index("v_loss")
+    names_in = [n for n, _ in prog.inputs]
+    v_losses = []
+    for t in range(1, 40):
+        arrs[-1] = jnp.asarray([7e-3, 0.0, t, 1e9, t, 0.5, 0.0], dtype=jnp.float32)
+        out = list(prog.fn(*arrs))
+        for i_out, n_out in enumerate(names_out):
+            if n_out in names_in:
+                arrs[names_in.index(n_out)] = out[i_out]
+        v_losses.append(float(out[vi][0]))
+    assert v_losses[-1] < v_losses[0] * 0.5, (v_losses[0], v_losses[-1])
+
+
+def test_ppo_clip_frac_sane_and_entropy_positive():
+    prog = ppo.make_train(arch("ppo"))
+    arrs = make_inputs(prog, 4)
+    arrs[-1] = jnp.asarray([3e-4, 0.0, 1.0, 1e9, 1.0, 0.5, 0.01, 0.2], dtype=jnp.float32)
+    out = list(prog.fn(*arrs))
+    names_out = [n for n, _ in prog.outputs]
+    clip_frac = float(out[names_out.index("clip_frac")][0])
+    entropy = float(out[names_out.index("entropy")][0])
+    assert 0.0 <= clip_frac <= 1.0
+    assert entropy > 0.0
+
+
+def test_ddpg_critic_loss_decreases():
+    prog = ddpg.make_train(arch("ddpg", obs=3, act=1))
+    arrs = make_inputs(prog, 5)
+    names_out = [n for n, _ in prog.outputs]
+    names_in = [n for n, _ in prog.inputs]
+    ci = names_out.index("critic_loss")
+    c_losses = []
+    for t in range(1, 40):
+        arrs[-1] = jnp.asarray([1e-4, 1e-3, 0.99, 0.0, t, 1e9, t], dtype=jnp.float32)
+        out = list(prog.fn(*arrs))
+        for i_out, n_out in enumerate(names_out):
+            if n_out in names_in:
+                arrs[names_in.index(n_out)] = out[i_out]
+        c_losses.append(float(out[ci][0]))
+    assert c_losses[-1] < c_losses[0] * 0.7, (c_losses[0], c_losses[-1])
+
+
+def test_act_programs_shapes():
+    for algo, mk, extra in [
+        ("dqn", dqn.make_act, ("qvalues",)),
+        ("a2c", a2c.make_act, ("logits", "value")),
+        ("ppo", ppo.make_act, ("logits", "value")),
+    ]:
+        prog = mk(arch(algo))
+        arrs = make_inputs(prog, 6)
+        arrs[-1] = jnp.asarray([0.0, 0.0, 1.0], dtype=jnp.float32)
+        out = prog.fn(*arrs)
+        assert len(out) == len(prog.outputs)
+        for o, (name, shape) in zip(out, prog.outputs):
+            assert tuple(o.shape) == tuple(shape), (algo, name)
+
+
+def test_ddpg_act_bounded():
+    prog = ddpg.make_act(arch("ddpg", obs=3, act=2))
+    arrs = make_inputs(prog, 7)
+    arrs[-1] = jnp.asarray([0.0, 0.0, 1.0], dtype=jnp.float32)
+    (action,) = prog.fn(*arrs)
+    assert float(jnp.max(jnp.abs(action))) <= 1.0
+
+
+def test_target_network_input_not_updated_by_train():
+    # the DQN train program must not return new target params (the
+    # coordinator owns the copy schedule)
+    prog = dqn.make_train(arch("dqn"))
+    out_names = [n for n, _ in prog.outputs]
+    assert not any(n.startswith("target.") for n in out_names)

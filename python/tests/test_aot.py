@@ -1,0 +1,75 @@
+"""AOT export path: registry consistency and HLO-text lowering."""
+
+import jax.numpy as jnp
+import numpy as np
+
+from compile import aot
+from compile.algos import dqn
+from compile.algos.common import ArchSpec
+from compile.registry import build_matrix, CONTINUOUS_ENVS, DISCRETE_ENVS
+
+
+def test_matrix_dedups_shared_signatures():
+    programs, env_map = build_matrix()
+    names = [spec.name for _, spec in programs]
+    assert len(names) == len(set(names)), "arch names must be unique"
+    # pong and breakout share (8, 3): one arch serves both
+    assert env_map["a2c/pong_lite"] == env_map["a2c/breakout_lite"]
+    # every mapped arch exists
+    for arch in env_map.values():
+        assert arch in names
+
+
+def test_env_map_covers_paper_matrix():
+    _, env_map = build_matrix()
+    for env in ["breakout_lite", "pong_lite", "cartpole", "catcher",
+                "invaders_lite", "grid_chase", "pyramid_hop", "diver_lite"]:
+        for algo in ["dqn", "a2c", "ppo"]:
+            assert f"{algo}/{env}" in env_map
+    for env in ["walker_lite", "cheetah_lite", "biped_lite", "mc_continuous"]:
+        assert f"ddpg/{env}" in env_map
+    # case studies
+    for p in ["mp_a", "mp_b", "mp_c"]:
+        assert f"dqn/pong_lite/{p}" in env_map
+        assert f"dqn/pong_lite/{p}_bf16" in env_map
+    for p in ["nav_p1", "nav_p2", "nav_p3"]:
+        assert f"dqn/nav_lite/{p}" in env_map
+    assert "ppo/pong_lite/ln" in env_map
+
+
+def test_registry_dims_positive():
+    for env, (obs, act) in {**DISCRETE_ENVS, **CONTINUOUS_ENVS}.items():
+        assert obs > 0 and act > 0, env
+
+
+def test_lowering_produces_parseable_hlo_text():
+    arch = ArchSpec(name="dqn_lower_t", obs_dim=3, act_dim=2, hidden=(8,),
+                    act_batch=1, train_batch=4)
+    prog = dqn.make_act(arch)
+    text = aot.lower_program(prog)
+    assert "ENTRY" in text and "f32" in text
+    # return_tuple: root instruction is a tuple
+    assert "tuple(" in text or "(f32[" in text
+
+
+def test_lowered_fn_matches_eager():
+    import jax
+    arch = ArchSpec(name="dqn_lower_t2", obs_dim=3, act_dim=2, hidden=(8,),
+                    act_batch=1, train_batch=4)
+    prog = dqn.make_act(arch)
+    rng = np.random.default_rng(0)
+    arrs = [jnp.asarray(rng.normal(0, 0.2, s).astype(np.float32)) for _, s in prog.inputs]
+    arrs[-1] = jnp.asarray([0.0, 0.0, 1.0], dtype=jnp.float32)
+    eager = prog.fn(*arrs)
+    jitted = jax.jit(prog.fn)(*arrs)
+    np.testing.assert_allclose(np.asarray(eager[0]), np.asarray(jitted[0]), rtol=1e-6)
+
+
+def test_program_entry_schema():
+    arch = ArchSpec(name="dqn_lower_t3", obs_dim=3, act_dim=2, hidden=(8,),
+                    act_batch=1, train_batch=4)
+    prog = dqn.make_act(arch)
+    entry = aot.program_entry(prog, "x.hlo.txt")
+    assert entry["name"] == "dqn_lower_t3_act"
+    assert entry["meta"]["algo"] == "dqn"
+    assert all(set(t) == {"name", "shape"} for t in entry["inputs"])

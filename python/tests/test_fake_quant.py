@@ -1,0 +1,113 @@
+"""L1 kernel correctness: Pallas fake_quant vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes, value ranges, and bitwidths — the kernel must
+match ref.py bit-for-bit (same float ops in the same order), and the
+straight-through-estimator gradient must be exactly identity.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.fake_quant import fake_quant, fake_quant_dynamic, fake_quant_per_axis
+
+SHAPES = st.tuples(st.integers(1, 40), st.integers(1, 70))
+BITS = st.sampled_from([1.0, 2.0, 3.0, 4.0, 6.0, 8.0, 12.0, 16.0])
+
+
+def arr(shape, seed, scale):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(0.0, scale, shape).astype(np.float32))
+
+
+@settings(max_examples=40, deadline=None)
+@given(shape=SHAPES, seed=st.integers(0, 2**16), bits=BITS,
+       scale=st.floats(1e-3, 1e3))
+def test_dynamic_matches_ref(shape, seed, bits, scale):
+    x = arr(shape, seed, scale)
+    got = fake_quant_dynamic(x, bits)
+    want = ref.fake_quant_dynamic_ref(x, bits)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2**16), bits=BITS,
+       vmin=st.floats(-100.0, 0.0), vspan=st.floats(1e-3, 200.0))
+def test_static_range_matches_ref(seed, bits, vmin, vspan):
+    x = arr((17, 23), seed, max(abs(vmin), vspan))
+    vmax = vmin + vspan
+    got = fake_quant(x, jnp.float32(vmin), jnp.float32(vmax), bits)
+    want = ref.fake_quant_ref(x, jnp.float32(vmin), jnp.float32(vmax), bits)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@settings(max_examples=20, deadline=None)
+@given(rows=st.integers(1, 24), cols=st.integers(1, 48),
+       seed=st.integers(0, 2**16), bits=BITS)
+def test_per_axis_matches_ref(rows, cols, seed, bits):
+    w = arr((rows, cols), seed, 2.0)
+    got = fake_quant_per_axis(w, bits)
+    want = ref.fake_quant_per_axis_ref(w, bits, axis=0)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-6)
+
+
+def test_grid_path_large_tensor():
+    # > _BLOCK in both dims exercises the tiled pallas dispatch.
+    x = arr((300, 520), 7, 1.0)
+    got = fake_quant_dynamic(x, 8.0)
+    want = ref.fake_quant_dynamic_ref(x, 8.0)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_rank1_and_rank3_inputs():
+    for shape in [(37,), (3, 5, 7)]:
+        x = arr(shape, 3, 1.0)
+        got = fake_quant_dynamic(x, 4.0)
+        want = ref.fake_quant_dynamic_ref(x, 4.0)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_zero_always_representable():
+    x = arr((8, 8), 1, 1.0)
+    for bits in [2.0, 4.0, 8.0]:
+        q = fake_quant(x.at[0, 0].set(0.0), jnp.min(x), jnp.max(x), bits)
+        assert float(q[0, 0]) == 0.0
+
+
+def test_ste_gradient_is_identity():
+    x = arr((9, 11), 5, 1.0)
+    g = jax.grad(lambda v: jnp.sum(fake_quant(v, jnp.min(x), jnp.max(x), 4.0) * 3.0))(x)
+    np.testing.assert_array_equal(np.asarray(g), np.full_like(x, 3.0))
+
+
+def test_ste_gradient_per_axis():
+    w = arr((6, 10), 8, 1.0)
+    g = jax.grad(lambda v: jnp.sum(fake_quant_per_axis(v, 4.0)))(w)
+    np.testing.assert_array_equal(np.asarray(g), np.ones_like(w))
+
+
+def test_quant_error_shrinks_with_bits():
+    x = arr((64, 64), 11, 1.0)
+    errs = []
+    for bits in [2.0, 4.0, 8.0, 12.0]:
+        q = fake_quant_dynamic(x, bits)
+        errs.append(float(jnp.mean((q - x) ** 2)))
+    assert errs == sorted(errs, reverse=True)
+    assert errs[-1] < 1e-5
+
+
+def test_all_zero_tensor_is_fixed_point():
+    z = jnp.zeros((5, 5))
+    q = fake_quant_dynamic(z, 8.0)
+    np.testing.assert_array_equal(np.asarray(q), np.zeros((5, 5)))
+
+
+def test_lowers_inside_jit():
+    x = arr((16, 16), 2, 1.0)
+    f = jax.jit(lambda v: fake_quant_dynamic(v, 8.0))
+    np.testing.assert_array_equal(
+        np.asarray(f(x)), np.asarray(ref.fake_quant_dynamic_ref(x, 8.0))
+    )

@@ -1,0 +1,58 @@
+"""L2 QAT plumbing: quant-delay semantics and range threading."""
+
+import jax.numpy as jnp
+import numpy as np
+
+from compile.quantization import QuantCtl, init_qstate, qat_tensor
+
+
+def ctl(bits, step, delay):
+    return QuantCtl(
+        bits=jnp.float32(bits), step=jnp.float32(step), delay=jnp.float32(delay)
+    )
+
+
+def test_monitoring_phase_passthrough_and_range_update():
+    x = jnp.asarray(np.linspace(-2.0, 3.0, 12, dtype=np.float32))
+    qs = init_qstate(1)
+    out, row = qat_tensor(x, qs, 0, ctl(8, step=10, delay=100))
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(x))  # untouched
+    assert float(row[0]) == -2.0 and float(row[1]) == 3.0  # ranges absorbed
+
+
+def test_ranges_accumulate_monotonically():
+    qs = init_qstate(1).at[0].set(jnp.asarray([-1.0, 1.0]))
+    x = jnp.asarray([0.5, -0.25], dtype=np.float32)
+    _, row = qat_tensor(x, qs, 0, ctl(8, 0, 100))
+    # narrower observation must not shrink the monitored range
+    assert float(row[0]) == -1.0 and float(row[1]) == 1.0
+    x2 = jnp.asarray([5.0, -3.0], dtype=np.float32)
+    _, row2 = qat_tensor(x2, qs, 0, ctl(8, 0, 100))
+    assert float(row2[0]) == -3.0 and float(row2[1]) == 5.0
+
+
+def test_quantized_phase_freezes_ranges_and_quantizes():
+    qs = init_qstate(1).at[0].set(jnp.asarray([-1.0, 1.0]))
+    x = jnp.asarray(np.linspace(-1.0, 1.0, 9, dtype=np.float32))
+    out, row = qat_tensor(x, qs, 0, ctl(2, step=200, delay=100))
+    # ranges frozen
+    np.testing.assert_array_equal(np.asarray(row), [-1.0, 1.0])
+    # 2 bits over [-1, 1]: at most 4 distinct output values
+    assert len(np.unique(np.asarray(out))) <= 4
+    assert not np.allclose(np.asarray(out), np.asarray(x))
+
+
+def test_bits_zero_disables_quantization_forever():
+    qs = init_qstate(1).at[0].set(jnp.asarray([-1.0, 1.0]))
+    x = jnp.asarray([0.123456, -0.654321], dtype=np.float32)
+    out, _ = qat_tensor(x, qs, 0, ctl(0, step=10**9, delay=0))
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(x))
+
+
+def test_exact_delay_boundary():
+    qs = init_qstate(1).at[0].set(jnp.asarray([-1.0, 1.0]))
+    x = jnp.asarray([0.37], dtype=np.float32)
+    before, _ = qat_tensor(x, qs, 0, ctl(4, step=99, delay=100))
+    at, _ = qat_tensor(x, qs, 0, ctl(4, step=100, delay=100))
+    np.testing.assert_array_equal(np.asarray(before), np.asarray(x))
+    assert float(at[0]) != float(x[0])  # quantized from the delay step on

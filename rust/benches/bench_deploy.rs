@@ -1,0 +1,55 @@
+//! Bench: Fig-6 deployment latency — fp32 vs int8 native inference for
+//! the three NavLite policy sizes (plus the RasPi-class swap model).
+//!
+//!     cargo bench --bench bench_deploy
+
+use quarl::bench_util::{bench, black_box};
+use quarl::inference::{EngineF32, EngineInt8, MemModel};
+use quarl::rng::Pcg32;
+use quarl::runtime::manifest::TensorSpec;
+use quarl::runtime::ParamSet;
+
+fn mlp_params(dims: &[usize], seed: u64) -> ParamSet {
+    let mut specs = Vec::new();
+    for i in 0..dims.len() - 1 {
+        specs.push(TensorSpec { name: format!("q.w{i}"), shape: vec![dims[i], dims[i + 1]] });
+        specs.push(TensorSpec { name: format!("q.b{i}"), shape: vec![dims[i + 1]] });
+    }
+    let mut rng = Pcg32::new(seed, 1);
+    ParamSet::init(&specs, &mut rng)
+}
+
+fn main() {
+    println!("== Fig 6: deployment inference latency (native engines) ==");
+    let policies: [(&str, Vec<usize>); 3] = [
+        ("policy_I  (3L MLP 64)", vec![12, 64, 64, 64, 25]),
+        ("policy_II (3L MLP 256)", vec![12, 256, 256, 256, 25]),
+        ("policy_III (4096,512,1024)", vec![12, 4096, 512, 1024, 25]),
+    ];
+    let mem = MemModel::raspi3b();
+    for (name, dims) in policies {
+        let params = mlp_params(&dims, 7);
+        let mut f32e = EngineF32::from_params(&params).unwrap();
+        let mut i8e = EngineInt8::from_params(&params).unwrap();
+        let x: Vec<f32> = (0..dims[0]).map(|i| (i as f32 * 0.37).sin()).collect();
+        let mut out = vec![0.0f32; *dims.last().unwrap()];
+        let (iters, batches) = if dims[1] >= 4096 { (20, 10) } else { (200, 10) };
+        let f = bench(&format!("{name} fp32"), iters, batches, || {
+            f32e.forward(black_box(&x), &mut out);
+        });
+        let q = bench(&format!("{name} int8"), iters, batches, || {
+            i8e.forward(black_box(&x), &mut out).unwrap();
+        });
+        let f32_mem = f32e.memory_bytes();
+        let i8_mem = i8e.memory_bytes();
+        println!(
+            "  speedup {:.2}x | mem {:.2} MiB -> {:.2} MiB ({:.2}x) | raspi swap penalty fp32 {:.1} ms, int8 {:.1} ms",
+            f.median_ns / q.median_ns,
+            f32_mem as f64 / (1 << 20) as f64,
+            i8_mem as f64 / (1 << 20) as f64,
+            f32_mem as f64 / i8_mem as f64,
+            mem.swap_penalty_secs(f32_mem) * 1e3,
+            mem.swap_penalty_secs(i8_mem) * 1e3,
+        );
+    }
+}

@@ -1,0 +1,32 @@
+//! Bench: environment step throughput — the simulators must never be the
+//! training bottleneck (L3 §Perf item).
+//!
+//!     cargo bench --bench bench_envs
+
+use quarl::bench_util::bench;
+use quarl::envs::api::{Action, ActionSpace};
+use quarl::envs::registry::{make_env, ENV_IDS};
+use quarl::rng::Pcg32;
+
+fn main() {
+    println!("== environment step throughput ==");
+    for id in ENV_IDS {
+        let mut env = make_env(id).unwrap();
+        let mut rng = Pcg32::new(1, 1);
+        let mut obs = vec![0.0f32; env.obs_dim()];
+        env.reset(&mut rng, &mut obs);
+        let space = env.action_space();
+        bench(&format!("{id} step"), 2_000, 8, || {
+            let a = match &space {
+                ActionSpace::Discrete(n) => Action::Discrete(rng.below_usize(*n)),
+                ActionSpace::Continuous(d) => {
+                    Action::Continuous((0..*d).map(|_| rng.uniform_range(-1.0, 1.0)).collect())
+                }
+            };
+            let s = env.step(&a, &mut rng, &mut obs);
+            if s.done {
+                env.reset(&mut rng, &mut obs);
+            }
+        });
+    }
+}

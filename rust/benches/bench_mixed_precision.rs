@@ -1,0 +1,49 @@
+//! Bench: Table-4 mixed-precision train-step latency — fp32 vs bf16
+//! AOT programs for DQN-Pong policies A/B/C through PJRT.
+//!
+//!     cargo bench --bench bench_mixed_precision
+//!
+//! Requires `make artifacts`. This is the microbenchmark companion to
+//! `quarl exp table4` (which times full training runs).
+
+use quarl::bench_util::bench;
+use quarl::rng::Pcg32;
+use quarl::runtime::{ParamSet, Runtime};
+use quarl::tensor::Tensor;
+
+fn main() {
+    let Ok(rt) = Runtime::new("artifacts") else {
+        eprintln!("skipping: no artifacts (run `make artifacts`)");
+        return;
+    };
+    println!("== Table 4: DQN train-step latency, fp32 vs bf16 compute ==");
+    for pol in ["mp_a", "mp_b", "mp_c"] {
+        let mut medians = Vec::new();
+        for prec in ["", "_bf16"] {
+            let key = format!("dqn/pong_lite/{pol}{prec}");
+            let arch = rt.manifest.arch_for(&key).expect("arch").to_string();
+            let prog = rt.load(&format!("{arch}_train")).expect("program");
+            let spec = &prog.spec;
+            let n_p = spec.count("n_params").unwrap();
+            let mut rng = Pcg32::new(5, 5);
+            let params = ParamSet::init(&spec.inputs[..n_p], &mut rng);
+            let zeros = params.zeros_like();
+            let mut inputs: Vec<Tensor> = Vec::new();
+            inputs.extend(params.tensors.iter().cloned());
+            inputs.extend(params.tensors.iter().cloned());
+            inputs.extend(zeros.tensors.iter().cloned());
+            inputs.extend(zeros.tensors.iter().cloned());
+            for spec_t in &spec.inputs[4 * n_p..spec.inputs.len() - 1] {
+                inputs.push(Tensor::zeros(spec_t.shape.clone()));
+            }
+            inputs.push(Tensor::vec1(&[2.5e-4, 0.99, 0.0, 0.0, 1e9, 1.0]));
+            let label = format!("{pol}{} train-step", if prec.is_empty() { " fp32" } else { " bf16" });
+            let iters = if pol == "mp_c" { 3 } else { 10 };
+            let st = bench(&label, iters, 8, || {
+                let _ = prog.run(&inputs).expect("run");
+            });
+            medians.push(st.median_ns);
+        }
+        println!("  {pol}: bf16 speedup {:.2}x", medians[0] / medians[1]);
+    }
+}

@@ -1,0 +1,34 @@
+//! Bench: quantizer throughput — per-tensor/per-axis affine and fp16
+//! rounding (the PTQ cost model behind Table 2 / Fig 7 sweeps).
+//!
+//!     cargo bench --bench bench_quant
+
+use quarl::bench_util::{bench, black_box};
+use quarl::quant::{fake_quant_per_axis, fake_quant_slice, fp16_quant_slice};
+use quarl::rng::Pcg32;
+use quarl::tensor::Tensor;
+
+fn main() {
+    println!("== quantizer throughput ==");
+    let mut rng = Pcg32::new(3, 3);
+    for n in [1_024usize, 65_536, 1_048_576] {
+        let base: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+        let mut buf = base.clone();
+        bench(&format!("affine int8 per-tensor n={n}"), 20, 10, || {
+            buf.copy_from_slice(&base);
+            fake_quant_slice(black_box(&mut buf), 8).unwrap();
+        });
+        bench(&format!("fp16 round-trip n={n}"), 20, 10, || {
+            buf.copy_from_slice(&base);
+            fp16_quant_slice(black_box(&mut buf));
+        });
+    }
+    let rows = 512;
+    let cols = 512;
+    let base: Vec<f32> = (0..rows * cols).map(|_| rng.normal()).collect();
+    let mut t = Tensor::new(vec![rows, cols], base.clone()).unwrap();
+    bench(&format!("affine int8 per-axis {rows}x{cols}"), 20, 10, || {
+        t.data_mut().copy_from_slice(&base);
+        fake_quant_per_axis(black_box(&mut t), 8).unwrap();
+    });
+}

@@ -1,0 +1,46 @@
+//! Bench: replay-buffer hot paths — PER push / stratified sample /
+//! priority update at DQN batch sizes (L3 §Perf item).
+//!
+//!     cargo bench --bench bench_replay
+
+use quarl::bench_util::bench;
+use quarl::replay::{PrioritizedReplay, ReplayBuffer, Transition};
+use quarl::rng::Pcg32;
+
+fn main() {
+    println!("== replay throughput ==");
+    let obs_dim = 8;
+    let mut rng = Pcg32::new(1, 1);
+    let obs = vec![0.3f32; obs_dim];
+
+    let mut uni = ReplayBuffer::new(100_000, obs_dim, 1);
+    for _ in 0..100_000 {
+        uni.push(Transition { obs: &obs, action: &[1.0], reward: 0.5, next_obs: &obs, done: false });
+    }
+    bench("uniform push", 10_000, 8, || {
+        uni.push(Transition { obs: &obs, action: &[1.0], reward: 0.5, next_obs: &obs, done: false });
+    });
+    bench("uniform sample B=64", 500, 8, || {
+        let _ = uni.sample(64, &mut rng);
+    });
+
+    let mut per = PrioritizedReplay::new(100_000, obs_dim, 1, 0.6);
+    for _ in 0..100_000 {
+        per.push(Transition { obs: &obs, action: &[1.0], reward: 0.5, next_obs: &obs, done: false });
+    }
+    bench("PER push", 10_000, 8, || {
+        per.push(Transition { obs: &obs, action: &[1.0], reward: 0.5, next_obs: &obs, done: false });
+    });
+    let mut indices = vec![0usize; 64];
+    let mut tds = vec![0.1f32; 64];
+    bench("PER sample B=64 (stratified)", 500, 8, || {
+        let b = per.sample(64, 0.5, &mut rng);
+        indices.copy_from_slice(&b.indices);
+    });
+    bench("PER priority update B=64", 2_000, 8, || {
+        for (i, t) in tds.iter_mut().enumerate() {
+            *t = (i as f32 * 0.37).sin().abs();
+        }
+        per.update_priorities(&indices, &tds);
+    });
+}

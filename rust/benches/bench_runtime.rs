@@ -1,0 +1,58 @@
+//! Bench: PJRT hot-path costs — act-program latency, train-program
+//! latency, and the host-side literal conversion overhead (the L3 items
+//! of EXPERIMENTS.md §Perf).
+//!
+//!     cargo bench --bench bench_runtime
+
+use quarl::bench_util::{bench, black_box};
+use quarl::rng::Pcg32;
+use quarl::runtime::client::tensor_to_literal;
+use quarl::runtime::{ParamSet, Runtime};
+use quarl::tensor::Tensor;
+
+fn main() {
+    let Ok(rt) = Runtime::new("artifacts") else {
+        eprintln!("skipping: no artifacts (run `make artifacts`)");
+        return;
+    };
+    println!("== runtime hot paths ==");
+
+    // literal conversion overhead
+    for n in [64usize, 4_096, 262_144] {
+        let t = Tensor::full(vec![n], 1.5);
+        bench(&format!("tensor->literal n={n}"), 200, 10, || {
+            let _ = black_box(tensor_to_literal(&t).unwrap());
+        });
+    }
+
+    // act program end-to-end (the per-env-step cost in DQN)
+    let arch = rt.manifest.arch_for("dqn/cartpole").unwrap().to_string();
+    let act = rt.load(&format!("{arch}_act")).unwrap();
+    let n_p = act.spec.count("n_params").unwrap();
+    let mut rng = Pcg32::new(1, 1);
+    let params = ParamSet::init(&act.spec.inputs[..n_p], &mut rng);
+    let mut inputs: Vec<Tensor> = params.tensors.clone();
+    inputs.push(Tensor::zeros(vec![act.spec.n_qstate, 2]));
+    inputs.push(Tensor::full(vec![1, 4], 0.05));
+    inputs.push(Tensor::vec1(&[0.0, 0.0, 1e9]));
+    bench("dqn/cartpole act program", 100, 10, || {
+        let _ = black_box(act.run(&inputs).unwrap());
+    });
+
+    // train program end-to-end (the per-update cost)
+    let train = rt.load(&format!("{arch}_train")).unwrap();
+    let spec = &train.spec;
+    let zeros = params.zeros_like();
+    let mut tin: Vec<Tensor> = Vec::new();
+    tin.extend(params.tensors.iter().cloned());
+    tin.extend(params.tensors.iter().cloned());
+    tin.extend(zeros.tensors.iter().cloned());
+    tin.extend(zeros.tensors.iter().cloned());
+    for spec_t in &spec.inputs[4 * n_p..spec.inputs.len() - 1] {
+        tin.push(Tensor::zeros(spec_t.shape.clone()));
+    }
+    tin.push(Tensor::vec1(&[2.5e-4, 0.99, 0.0, 0.0, 1e9, 1.0]));
+    bench("dqn/cartpole train program", 50, 10, || {
+        let _ = black_box(train.run(&tin).unwrap());
+    });
+}

@@ -1,0 +1,288 @@
+//! A2C trainer (Mnih et al. 2016): synchronous n-step advantage
+//! actor-critic over a vectorized environment, driving the AOT programs.
+//!
+//! Rust owns rollout collection, categorical sampling, GAE, and QAT
+//! bookkeeping; the XLA side owns forward/backward/Adam/fake-quant.
+
+use crate::algos::common::{load_programs, QuantSchedule, TrainedPolicy};
+use crate::envs::api::Action;
+use crate::envs::registry::make_env;
+use crate::envs::vec_env::VecEnv;
+use crate::error::Result;
+use crate::replay::RolloutBuffer;
+use crate::rng::Pcg32;
+use crate::runtime::{ParamSet, Runtime};
+use crate::tensor::Tensor;
+
+#[derive(Debug, Clone)]
+pub struct A2cConfig {
+    pub env_id: String,
+    pub arch_key: Option<String>,
+    /// Total environment steps (across all envs).
+    pub total_steps: usize,
+    pub n_envs: usize,
+    pub n_steps: usize,
+    pub lr: f32,
+    pub gamma: f32,
+    pub gae_lambda: f32,
+    pub vf_coef: f32,
+    pub ent_coef: f32,
+    pub quant: QuantSchedule,
+    pub seed: u64,
+    pub log_every: usize,
+    /// Optional layer-norm variant key suffix (Fig 1 baseline): uses
+    /// "<algo>/<env>/ln" in the arch map.
+    pub layer_norm: bool,
+}
+
+impl A2cConfig {
+    pub fn new(env_id: &str) -> Self {
+        A2cConfig {
+            env_id: env_id.into(),
+            arch_key: None,
+            total_steps: 150_000,
+            n_envs: 8,
+            n_steps: 16,
+            lr: 7e-4,
+            gamma: 0.99,
+            gae_lambda: 0.95,
+            vf_coef: 0.5,
+            ent_coef: 0.01,
+            quant: QuantSchedule::off(),
+            seed: 0,
+            log_every: 0,
+            layer_norm: false,
+        }
+    }
+}
+
+pub use crate::algos::dqn::TrainLog;
+
+/// Shared rollout machinery for A2C and PPO (they differ only in the
+/// train-program call). Returns the trained policy + log.
+pub(crate) fn train_onpolicy(
+    rt: &Runtime,
+    algo: &str,
+    env_id: &str,
+    arch_key: Option<String>,
+    layer_norm: bool,
+    total_steps: usize,
+    n_envs: usize,
+    n_steps: usize,
+    gamma: f32,
+    lam: f32,
+    quant: QuantSchedule,
+    seed: u64,
+    log_every: usize,
+    mut make_hyper: impl FnMut(usize, f32) -> Vec<f32>,
+    ppo_epochs: usize,
+    probe_every: usize,
+    probe: &mut dyn FnMut(usize, &[Tensor], &Tensor),
+) -> Result<(TrainedPolicy, TrainLog)> {
+    let key = arch_key.unwrap_or_else(|| {
+        if layer_norm {
+            format!("{algo}/{env_id}/ln")
+        } else {
+            format!("{algo}/{env_id}")
+        }
+    });
+    let (arch, act_prog, train_prog) = load_programs(rt, &key)?;
+    let spec = &train_prog.spec;
+    let n_pi = spec.count("n_policy_params")?;
+    let n_vf = spec.count("n_value_params")?;
+    let n_all = n_pi + n_vf;
+    let n_q = spec.n_qstate;
+    let batch = spec.arch.train_batch;
+    assert_eq!(batch, n_envs * n_steps, "manifest batch must equal rollout size");
+    let n_actions = spec.arch.act_dim;
+
+    let mut root = Pcg32::new(seed, 23);
+    let mut sample_rng = root.split(1);
+    let mut init_rng = root.split(2);
+
+    let mut venv = VecEnv::new(n_envs, seed ^ 0x5eed, || make_env(env_id).expect("env"));
+    let obs_dim = venv.obs_dim();
+
+    let mut params = ParamSet::init(&spec.inputs[..n_all], &mut init_rng);
+    let zeros = params.zeros_like();
+
+    // Train inputs: params, m, v, qstate, obs, actions, returns, adv,
+    // [old_logp], hyper
+    let mut train_in: Vec<Tensor> = Vec::new();
+    train_in.extend(params.tensors.iter().cloned());
+    train_in.extend(zeros.tensors.iter().cloned());
+    train_in.extend(zeros.tensors.iter().cloned());
+    train_in.push(Tensor::zeros(vec![n_q, 2]));
+    let i_qstate = 3 * n_all;
+    let i_batch0 = i_qstate + 1;
+    let extra = spec.inputs.len() - i_batch0; // obs..hyper count
+    for k in 0..extra {
+        train_in.push(Tensor::zeros(spec.inputs[i_batch0 + k].shape.clone()));
+    }
+    let i_hyper = spec.inputs.len() - 1;
+    let has_old_logp = spec.input_index("old_logp").is_ok();
+
+    let mut rollout = RolloutBuffer::new(n_steps, n_envs, obs_dim);
+    let mut log = TrainLog::default();
+    let t_start = std::time::Instant::now();
+    let mut adam_t = 0.0f32;
+    let mut step = 0usize;
+
+    let quant_bits = quant.bits as f32;
+    let quant_delay = quant.delay as f32;
+
+    let mut actions = vec![0usize; n_envs];
+    let mut logps = vec![0.0f32; n_envs];
+
+    while step < total_steps {
+        rollout.clear();
+        let mut act_in: Vec<Tensor> = train_in[..n_all].to_vec();
+        act_in.push(train_in[i_qstate].clone());
+        act_in.push(Tensor::zeros(vec![n_envs, obs_dim]));
+        act_in.push(Tensor::vec1(&[quant_bits, step as f32, quant_delay]));
+        let i_act_obs = act_in.len() - 2;
+
+        for _ in 0..n_steps {
+            let obs_snapshot = venv.obs().to_vec();
+            act_in[i_act_obs] = Tensor::new(vec![n_envs, obs_dim], obs_snapshot.clone())?;
+            let out = act_prog.run(&act_in)?;
+            let logits = &out[0];
+            let values = &out[1];
+            for e in 0..n_envs {
+                let row = logits.row(e);
+                let p = crate::tensor::softmax(row);
+                let a = sample_rng.categorical(&p);
+                actions[e] = a;
+                logps[e] = p[a].max(1e-12).ln();
+            }
+            let acts: Vec<Action> = actions.iter().map(|&a| Action::Discrete(a)).collect();
+            let results = venv.step(&acts);
+            let rewards: Vec<f32> = results.iter().map(|r| r.0).collect();
+            let dones: Vec<bool> = results.iter().map(|r| r.1).collect();
+            rollout.push(&obs_snapshot, &actions, &rewards, &dones, values.data(), &logps);
+            step += n_envs;
+        }
+
+        // Bootstrap values for the final observation.
+        act_in[i_act_obs] = Tensor::new(vec![n_envs, obs_dim], venv.obs().to_vec())?;
+        let out = act_prog.run(&act_in)?;
+        let batch_data = rollout.finish(out[1].data(), gamma, lam);
+
+        let epochs = ppo_epochs.max(1);
+        for _ in 0..epochs {
+            adam_t += 1.0;
+            train_in[i_batch0] = batch_data.obs.clone();
+            train_in[i_batch0 + 1] = batch_data.actions.clone();
+            train_in[i_batch0 + 2] = batch_data.returns.clone();
+            train_in[i_batch0 + 3] = batch_data.advantages.clone();
+            if has_old_logp {
+                train_in[i_batch0 + 4] = batch_data.old_logp.clone();
+            }
+            train_in[i_hyper] = Tensor::vec1(&make_hyper(step, adam_t));
+            let t0 = std::time::Instant::now();
+            let out = train_prog.run(&train_in)?;
+            log.train_exec_secs += t0.elapsed().as_secs_f64();
+            for i in 0..n_all {
+                train_in[i] = out[i].clone();
+                train_in[n_all + i] = out[n_all + i].clone();
+                train_in[2 * n_all + i] = out[2 * n_all + i].clone();
+            }
+            train_in[i_qstate] = out[3 * n_all].clone();
+            if log_every > 0 && step % log_every < n_envs * n_steps {
+                let pg = out[3 * n_all + 1].data()[0];
+                log.losses.push((step, pg));
+            }
+        }
+
+        for stat in venv.take_finished() {
+            log.episodes += 1;
+            log.returns.push((step, stat.ret));
+        }
+
+        // Fig-1 style probe: hand current params + qstate to the caller
+        // on a step cadence (e.g. action-distribution variance eval).
+        if probe_every > 0 && step % probe_every < n_envs * n_steps {
+            probe(step, &train_in[..n_all], &train_in[i_qstate]);
+        }
+    }
+
+    // Final return: mean of the last 20 episodes.
+    let tail: Vec<f32> = log
+        .returns
+        .iter()
+        .rev()
+        .take(20)
+        .map(|&(_, r)| r)
+        .collect();
+    log.final_return = if tail.is_empty() {
+        0.0
+    } else {
+        tail.iter().sum::<f32>() / tail.len() as f32
+    };
+    log.wall_secs = t_start.elapsed().as_secs_f64();
+    // Down-sample the per-episode log to (step, smoothed) pairs.
+    if log_every > 0 {
+        let mut sm = Vec::new();
+        let mut avg = None::<f32>;
+        for &(s, r) in &log.returns {
+            avg = Some(match avg {
+                None => r,
+                Some(a) => 0.95 * a + 0.05 * r,
+            });
+            sm.push((s, avg.unwrap()));
+        }
+        log.returns = sm;
+    }
+
+    for i in 0..n_all {
+        params.tensors[i] = train_in[i].clone();
+    }
+    let _ = n_actions;
+    Ok((
+        TrainedPolicy {
+            algo: algo.into(),
+            env_id: env_id.into(),
+            arch,
+            params,
+            qstate: train_in[i_qstate].clone(),
+            quant,
+            steps: total_steps,
+        },
+        log,
+    ))
+}
+
+/// Train an A2C policy.
+pub fn train(rt: &Runtime, cfg: &A2cConfig) -> Result<(TrainedPolicy, TrainLog)> {
+    train_probed(rt, cfg, 0, &mut |_, _, _| {})
+}
+
+/// Train with a periodic parameter probe (Fig-1 variance tracking).
+pub fn train_probed(
+    rt: &Runtime,
+    cfg: &A2cConfig,
+    probe_every: usize,
+    probe: &mut dyn FnMut(usize, &[Tensor], &Tensor),
+) -> Result<(TrainedPolicy, TrainLog)> {
+    let (lr, bits, delay) = (cfg.lr, cfg.quant.bits as f32, cfg.quant.delay as f32);
+    let (vf, ent) = (cfg.vf_coef, cfg.ent_coef);
+    train_onpolicy(
+        rt,
+        "a2c",
+        &cfg.env_id,
+        cfg.arch_key.clone(),
+        cfg.layer_norm,
+        cfg.total_steps,
+        cfg.n_envs,
+        cfg.n_steps,
+        cfg.gamma,
+        cfg.gae_lambda,
+        cfg.quant,
+        cfg.seed,
+        cfg.log_every,
+        move |step, t| vec![lr, bits, step as f32, delay, t, vf, ent],
+        1,
+        probe_every,
+        probe,
+    )
+}

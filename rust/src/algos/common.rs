@@ -1,0 +1,187 @@
+//! Shared trainer plumbing: quantization schedules, trained-policy
+//! artifacts, and helpers for assembling program inputs.
+
+use std::path::Path;
+
+use crate::error::{Error, Result};
+use crate::runtime::{ParamSet, Program, Runtime};
+use crate::tensor::Tensor;
+
+/// QAT schedule — mirrors the paper's (bits, quant_delay) controls.
+/// `bits = 0` disables quantization entirely (fp32 training); the same
+/// AOT program serves every setting because bits/step/delay are runtime
+/// tensor inputs.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct QuantSchedule {
+    pub bits: u32,
+    pub delay: usize,
+}
+
+impl QuantSchedule {
+    pub fn off() -> Self {
+        QuantSchedule { bits: 0, delay: 0 }
+    }
+
+    pub fn qat(bits: u32, delay: usize) -> Self {
+        QuantSchedule { bits, delay }
+    }
+
+    pub fn is_on(&self) -> bool {
+        self.bits > 0
+    }
+}
+
+/// A trained policy: everything evaluation and PTQ need.
+#[derive(Debug, Clone)]
+pub struct TrainedPolicy {
+    pub algo: String,
+    pub env_id: String,
+    /// Architecture name (prefix of the act/train program names).
+    pub arch: String,
+    /// Full parameter set in act-program input order (policy+value for
+    /// a2c/ppo, q-net for dqn, actor for ddpg).
+    pub params: ParamSet,
+    /// QAT range state captured during training ((T, 2) min/max rows).
+    pub qstate: Tensor,
+    /// Training-time quantization schedule (for QAT-mode evaluation).
+    pub quant: QuantSchedule,
+    /// Steps actually trained.
+    pub steps: usize,
+}
+
+impl TrainedPolicy {
+    /// Persist to `<dir>/<algo>_<env>[_qN].qprm` (+ qstate rows appended).
+    pub fn save(&self, dir: impl AsRef<Path>) -> Result<std::path::PathBuf> {
+        let name = self.file_name();
+        let path = dir.as_ref().join(name);
+        let mut with_state = self.params.clone();
+        with_state.names.push("__qstate".into());
+        with_state.tensors.push(self.qstate.clone());
+        with_state.names.push("__meta".into());
+        with_state.tensors.push(Tensor::vec1(&[
+            self.quant.bits as f32,
+            self.quant.delay as f32,
+            self.steps as f32,
+        ]));
+        with_state.save(&path)?;
+        Ok(path)
+    }
+
+    pub fn file_name(&self) -> String {
+        if self.quant.is_on() {
+            format!("{}_{}_q{}.qprm", self.algo, self.env_id, self.quant.bits)
+        } else {
+            format!("{}_{}.qprm", self.algo, self.env_id)
+        }
+    }
+
+    /// Load a policy saved by [`TrainedPolicy::save`].
+    pub fn load(path: impl AsRef<Path>, algo: &str, env_id: &str, arch: &str) -> Result<TrainedPolicy> {
+        let mut set = ParamSet::load(&path)?;
+        let meta = set
+            .tensors
+            .pop()
+            .ok_or_else(|| Error::Manifest("policy file missing meta".into()))?;
+        set.names.pop();
+        let qstate = set
+            .tensors
+            .pop()
+            .ok_or_else(|| Error::Manifest("policy file missing qstate".into()))?;
+        set.names.pop();
+        let m = meta.data();
+        Ok(TrainedPolicy {
+            algo: algo.into(),
+            env_id: env_id.into(),
+            arch: arch.into(),
+            params: set,
+            qstate,
+            quant: QuantSchedule { bits: m[0] as u32, delay: m[1] as usize },
+            steps: m[2] as usize,
+        })
+    }
+}
+
+/// Resolve the arch name for an (algo, env[, variant]) key and load its
+/// act+train programs.
+pub fn load_programs(
+    rt: &Runtime,
+    key: &str,
+) -> Result<(String, std::rc::Rc<Program>, std::rc::Rc<Program>)> {
+    let arch = rt.manifest.arch_for(key)?.to_string();
+    let act = rt.load(&format!("{arch}_act"))?;
+    let train = rt.load(&format!("{arch}_train"))?;
+    Ok((arch, act, train))
+}
+
+/// Pad a single observation into an (act_batch, obs_dim) tensor.
+pub fn pad_obs(obs: &[f32], batch: usize) -> Tensor {
+    let mut data = Vec::with_capacity(batch * obs.len());
+    for _ in 0..batch {
+        data.extend_from_slice(obs);
+    }
+    Tensor::new(vec![batch, obs.len()], data).unwrap()
+}
+
+/// Exploration epsilon schedule (paper Table 9: final eps with a linear
+/// fraction of training).
+#[derive(Debug, Clone, Copy)]
+pub struct EpsSchedule {
+    pub start: f32,
+    pub end: f32,
+    /// Fraction of total steps over which epsilon anneals.
+    pub fraction: f32,
+}
+
+impl EpsSchedule {
+    pub fn value(&self, step: usize, total: usize) -> f32 {
+        let horizon = (total as f32 * self.fraction).max(1.0);
+        let t = (step as f32 / horizon).min(1.0);
+        self.start + t * (self.end - self.start)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eps_schedule_anneals_linearly() {
+        let e = EpsSchedule { start: 1.0, end: 0.01, fraction: 0.1 };
+        assert_eq!(e.value(0, 1000), 1.0);
+        let mid = e.value(50, 1000);
+        assert!((mid - 0.505).abs() < 1e-3, "{mid}");
+        assert!((e.value(100, 1000) - 0.01).abs() < 1e-6);
+        assert!((e.value(900, 1000) - 0.01).abs() < 1e-6, "clamped after the fraction");
+    }
+
+    #[test]
+    fn pad_obs_repeats_rows() {
+        let t = pad_obs(&[1.0, 2.0], 3);
+        assert_eq!(t.shape(), &[3, 2]);
+        assert_eq!(t.row(2), &[1.0, 2.0]);
+    }
+
+    #[test]
+    fn policy_round_trip() {
+        let p = TrainedPolicy {
+            algo: "dqn".into(),
+            env_id: "cartpole".into(),
+            arch: "dqn_o4a2h64x64".into(),
+            params: ParamSet {
+                names: vec!["q.w0".into()],
+                tensors: vec![Tensor::vec1(&[1.0, 2.0])],
+            },
+            qstate: Tensor::new(vec![2, 2], vec![0.0, 1.0, -1.0, 2.0]).unwrap(),
+            quant: QuantSchedule::qat(8, 500),
+            steps: 1234,
+        };
+        let dir = std::env::temp_dir().join("quarl_policy_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = p.save(&dir).unwrap();
+        let q = TrainedPolicy::load(&path, "dqn", "cartpole", "dqn_o4a2h64x64").unwrap();
+        assert_eq!(q.params.tensors[0].data(), &[1.0, 2.0]);
+        assert_eq!(q.qstate, p.qstate);
+        assert_eq!(q.quant, p.quant);
+        assert_eq!(q.steps, 1234);
+    }
+}

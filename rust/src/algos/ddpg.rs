@@ -1,0 +1,240 @@
+//! DDPG trainer (Lillicrap et al. 2015) for the continuous-control cells
+//! of paper Table 2 (Walker2D/HalfCheetah/BipedalWalker/MountainCar-C).
+//!
+//! Rust owns exploration noise, uniform replay, and the polyak target
+//! updates (a host-side lerp on the master copies); the XLA side owns
+//! both actor and critic updates in one program call.
+
+use crate::algos::common::{load_programs, pad_obs, QuantSchedule, TrainedPolicy};
+use crate::envs::api::Action;
+use crate::envs::registry::make_env;
+use crate::error::Result;
+use crate::replay::{ReplayBuffer, Transition};
+use crate::rng::Pcg32;
+use crate::runtime::{ParamSet, Runtime};
+use crate::tensor::Tensor;
+
+pub use crate::algos::dqn::TrainLog;
+
+#[derive(Debug, Clone)]
+pub struct DdpgConfig {
+    pub env_id: String,
+    pub arch_key: Option<String>,
+    pub total_steps: usize,
+    pub buffer_size: usize,
+    pub warmup: usize,
+    pub train_freq: usize,
+    pub lr_actor: f32,
+    pub lr_critic: f32,
+    pub gamma: f32,
+    pub tau: f32,
+    /// Gaussian exploration noise std (annealed linearly to 30%).
+    pub noise_std: f32,
+    pub quant: QuantSchedule,
+    pub seed: u64,
+    pub log_every: usize,
+}
+
+impl DdpgConfig {
+    pub fn new(env_id: &str) -> Self {
+        DdpgConfig {
+            env_id: env_id.into(),
+            arch_key: None,
+            total_steps: 30_000,
+            buffer_size: 50_000,
+            warmup: 1_000,
+            train_freq: 1,
+            lr_actor: 1e-4,
+            lr_critic: 1e-3,
+            gamma: 0.99,
+            tau: 0.005,
+            noise_std: 0.2,
+            quant: QuantSchedule::off(),
+            seed: 0,
+            log_every: 0,
+        }
+    }
+}
+
+/// Train a DDPG policy.
+pub fn train(rt: &Runtime, cfg: &DdpgConfig) -> Result<(TrainedPolicy, TrainLog)> {
+    let key = cfg.arch_key.clone().unwrap_or_else(|| format!("ddpg/{}", cfg.env_id));
+    let (arch, act_prog, train_prog) = load_programs(rt, &key)?;
+    let spec = &train_prog.spec;
+    let na = spec.count("n_actor_params")?;
+    let nc = spec.count("n_critic_params")?;
+    let n_q = spec.n_qstate;
+    let batch = spec.arch.train_batch;
+    let act_batch = act_prog.spec.arch.act_batch;
+    let act_dim = spec.arch.act_dim;
+
+    let mut root = Pcg32::new(cfg.seed, 29);
+    let mut env_rng = root.split(1);
+    let mut noise_rng = root.split(2);
+    let mut replay_rng = root.split(3);
+    let mut init_rng = root.split(4);
+
+    let mut env = make_env(&cfg.env_id)?;
+    let obs_dim = env.obs_dim();
+
+    let actor = ParamSet::init(&spec.inputs[..na], &mut init_rng);
+    let critic = ParamSet::init(&spec.inputs[na..na + nc], &mut init_rng);
+
+    // Train inputs: actor, critic, t_actor, t_critic, m_a, v_a, m_c, v_c,
+    // qstate, obs, act, rew, nobs, done, hyper
+    let mut train_in: Vec<Tensor> = Vec::new();
+    train_in.extend(actor.tensors.iter().cloned());
+    train_in.extend(critic.tensors.iter().cloned());
+    train_in.extend(actor.tensors.iter().cloned()); // target actor
+    train_in.extend(critic.tensors.iter().cloned()); // target critic
+    for t in actor.tensors.iter() {
+        train_in.push(Tensor::zeros(t.shape().to_vec()));
+    }
+    for t in actor.tensors.iter() {
+        train_in.push(Tensor::zeros(t.shape().to_vec()));
+    }
+    for t in critic.tensors.iter() {
+        train_in.push(Tensor::zeros(t.shape().to_vec()));
+    }
+    for t in critic.tensors.iter() {
+        train_in.push(Tensor::zeros(t.shape().to_vec()));
+    }
+    let i_qstate = 4 * na + 4 * nc;
+    debug_assert_eq!(train_in.len(), i_qstate);
+    train_in.push(Tensor::zeros(vec![n_q, 2]));
+    train_in.push(Tensor::zeros(vec![batch, obs_dim]));
+    train_in.push(Tensor::zeros(vec![batch, act_dim]));
+    train_in.push(Tensor::zeros(vec![batch]));
+    train_in.push(Tensor::zeros(vec![batch, obs_dim]));
+    train_in.push(Tensor::zeros(vec![batch]));
+    train_in.push(Tensor::vec1(&[cfg.lr_actor, cfg.lr_critic, cfg.gamma, 0.0, 0.0, 0.0, 1.0]));
+    let i_obs = i_qstate + 1;
+    let i_hyper = i_obs + 5;
+
+    let mut buf = ReplayBuffer::new(cfg.buffer_size, obs_dim, act_dim);
+    let mut obs = vec![0.0f32; obs_dim];
+    let mut next_obs = vec![0.0f32; obs_dim];
+    env.reset(&mut env_rng, &mut obs);
+
+    let mut log = TrainLog::default();
+    let t_start = std::time::Instant::now();
+    let mut ep_return = 0.0f32;
+    let mut recent: Vec<f32> = Vec::new();
+    let mut adam_t = 0.0f32;
+    let mut action = vec![0.0f32; act_dim];
+
+    let quant_bits = cfg.quant.bits as f32;
+    let quant_delay = cfg.quant.delay as f32;
+
+    for step in 0..cfg.total_steps {
+        // --- act + exploration noise ---
+        if step < cfg.warmup {
+            for a in action.iter_mut() {
+                *a = noise_rng.uniform_range(-1.0, 1.0);
+            }
+        } else {
+            let mut act_in: Vec<Tensor> = train_in[..na].to_vec();
+            act_in.push(train_in[i_qstate].clone());
+            act_in.push(pad_obs(&obs, act_batch));
+            act_in.push(Tensor::vec1(&[quant_bits, step as f32, quant_delay]));
+            let out = act_prog.run(&act_in)?;
+            let frac = 1.0 - 0.7 * (step as f32 / cfg.total_steps as f32);
+            let std = cfg.noise_std * frac;
+            for (a, &mu) in action.iter_mut().zip(out[0].row(0)) {
+                *a = (mu + noise_rng.normal_ms(0.0, std)).clamp(-1.0, 1.0);
+            }
+        }
+
+        // --- env step ---
+        let s = env.step(&Action::Continuous(action.clone()), &mut env_rng, &mut next_obs);
+        ep_return += s.reward;
+        buf.push(Transition {
+            obs: &obs,
+            action: &action,
+            reward: s.reward,
+            next_obs: &next_obs,
+            done: s.done,
+        });
+        if s.done {
+            log.episodes += 1;
+            recent.push(ep_return);
+            if cfg.log_every > 0 {
+                log.returns.push((step, ep_return));
+            }
+            ep_return = 0.0;
+            env.reset(&mut env_rng, &mut obs);
+        } else {
+            obs.copy_from_slice(&next_obs);
+        }
+
+        // --- learn ---
+        if step >= cfg.warmup && step % cfg.train_freq == 0 && buf.len() >= batch {
+            let b = buf.sample(batch, &mut replay_rng);
+            adam_t += 1.0;
+            train_in[i_obs] = b.obs;
+            // replay flattens act_dim==1 to (B,); the program wants (B, A)
+            train_in[i_obs + 1] = b.actions.reshape(vec![batch, act_dim])?;
+            train_in[i_obs + 2] = b.rewards;
+            train_in[i_obs + 3] = b.next_obs;
+            train_in[i_obs + 4] = b.dones;
+            train_in[i_hyper] = Tensor::vec1(&[
+                cfg.lr_actor, cfg.lr_critic, cfg.gamma, quant_bits, step as f32, quant_delay,
+                adam_t,
+            ]);
+            let t0 = std::time::Instant::now();
+            let out = train_prog.run(&train_in)?;
+            log.train_exec_secs += t0.elapsed().as_secs_f64();
+            // outputs: actor, critic, m_a, v_a, m_c, v_c, qstate, closs, aloss
+            let n_all = na + nc;
+            for i in 0..n_all {
+                train_in[i] = out[i].clone(); // actor+critic
+            }
+            for i in 0..(2 * na + 2 * nc) {
+                train_in[2 * n_all + i] = out[n_all + i].clone(); // opt state
+            }
+            train_in[i_qstate] = out[3 * na + 3 * nc].clone();
+
+            // Polyak target update host-side.
+            let tau = cfg.tau;
+            for i in 0..n_all {
+                let (online, target) = {
+                    let (a, b) = train_in.split_at_mut(n_all + i);
+                    (&a[i], &mut b[0])
+                };
+                for (t, o) in target.data_mut().iter_mut().zip(online.data()) {
+                    *t = tau * o + (1.0 - tau) * *t;
+                }
+            }
+
+            if cfg.log_every > 0 && step % cfg.log_every == 0 {
+                let closs = out[3 * na + 3 * nc + 1].data()[0];
+                log.losses.push((step, closs));
+            }
+        }
+    }
+
+    let tail = &recent[recent.len().saturating_sub(20)..];
+    log.final_return = if tail.is_empty() {
+        ep_return
+    } else {
+        tail.iter().sum::<f32>() / tail.len() as f32
+    };
+    log.wall_secs = t_start.elapsed().as_secs_f64();
+
+    let mut actor_out = actor;
+    for i in 0..na {
+        actor_out.tensors[i] = train_in[i].clone();
+    }
+    Ok((
+        TrainedPolicy {
+            algo: "ddpg".into(),
+            env_id: cfg.env_id.clone(),
+            arch,
+            params: actor_out,
+            qstate: train_in[i_qstate].clone(),
+            quant: cfg.quant,
+            steps: cfg.total_steps,
+        },
+        log,
+    ))
+}

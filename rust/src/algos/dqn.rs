@@ -1,0 +1,238 @@
+//! DQN trainer (Mnih et al. 2013) driving the AOT train/act programs.
+//!
+//! The Rust side owns: environment stepping, epsilon-greedy exploration,
+//! prioritized replay, the target-network copy schedule, and the QAT
+//! step/delay bookkeeping. The XLA side owns the entire numeric train
+//! step (forward, TD loss, Adam, fake-quant range tracking).
+//!
+//! Hyperparameter defaults follow paper Table 9, with step budgets
+//! scaled to the proxy environments (DESIGN.md §2).
+
+use crate::algos::common::{load_programs, pad_obs, EpsSchedule, QuantSchedule, TrainedPolicy};
+use crate::envs::api::Action;
+use crate::envs::registry::make_env;
+use crate::error::Result;
+use crate::replay::{PrioritizedReplay, Transition};
+use crate::rng::Pcg32;
+use crate::runtime::{ParamSet, Runtime};
+use crate::tensor::Tensor;
+
+/// DQN configuration (paper Table 9 shape, scaled budgets).
+#[derive(Debug, Clone)]
+pub struct DqnConfig {
+    pub env_id: String,
+    /// env_arch_map key override (e.g. "dqn/pong_lite/mp_a"); default
+    /// is "dqn/<env_id>".
+    pub arch_key: Option<String>,
+    pub total_steps: usize,
+    pub buffer_size: usize,
+    pub warmup: usize,
+    pub train_freq: usize,
+    pub target_update: usize,
+    pub lr: f32,
+    pub gamma: f32,
+    pub eps: EpsSchedule,
+    pub per_alpha: f32,
+    pub per_beta: f32,
+    pub quant: QuantSchedule,
+    pub seed: u64,
+    /// Progress callback cadence (steps); 0 = silent.
+    pub log_every: usize,
+}
+
+impl DqnConfig {
+    pub fn new(env_id: &str) -> Self {
+        DqnConfig {
+            env_id: env_id.into(),
+            arch_key: None,
+            total_steps: 40_000,
+            buffer_size: 10_000,
+            warmup: 1_000,
+            train_freq: 1,
+            target_update: 250,
+            lr: 2.5e-4,
+            gamma: 0.99,
+            eps: EpsSchedule { start: 1.0, end: 0.01, fraction: 0.1 },
+            per_alpha: 0.6,
+            per_beta: 0.4,
+            quant: QuantSchedule::off(),
+            seed: 0,
+            log_every: 0,
+        }
+    }
+}
+
+/// Per-run training telemetry.
+#[derive(Debug, Default, Clone)]
+pub struct TrainLog {
+    /// (step, mean recent return) samples.
+    pub returns: Vec<(usize, f32)>,
+    /// (step, loss) samples.
+    pub losses: Vec<(usize, f32)>,
+    pub episodes: usize,
+    pub final_return: f32,
+    /// Wall-clock seconds inside the train-program calls only.
+    pub train_exec_secs: f64,
+    /// Total wall-clock seconds.
+    pub wall_secs: f64,
+}
+
+/// Train a DQN policy through the full Rust -> PJRT stack.
+pub fn train(rt: &Runtime, cfg: &DqnConfig) -> Result<(TrainedPolicy, TrainLog)> {
+    let key = cfg.arch_key.clone().unwrap_or_else(|| format!("dqn/{}", cfg.env_id));
+    let (arch, act_prog, train_prog) = load_programs(rt, &key)?;
+    let spec = &train_prog.spec;
+    let n_p = spec.count("n_params")?;
+    let n_q = spec.n_qstate;
+    let batch = spec.arch.train_batch;
+    let act_batch = act_prog.spec.arch.act_batch;
+    let n_actions = spec.arch.act_dim;
+
+    let mut root = Pcg32::new(cfg.seed, 17);
+    let mut env_rng = root.split(1);
+    let mut explore_rng = root.split(2);
+    let mut replay_rng = root.split(3);
+    let mut init_rng = root.split(4);
+
+    let mut env = make_env(&cfg.env_id)?;
+    let obs_dim = env.obs_dim();
+    let mut params = ParamSet::init(&spec.inputs[..n_p], &mut init_rng);
+    let zeros = params.zeros_like();
+
+    // Persistent train-program input slots (avoid rebuilding per call).
+    // Layout: params, target, m, v, qstate, obs, act, rew, nobs, done, isw, hyper
+    let mut train_in: Vec<Tensor> = Vec::new();
+    train_in.extend(params.tensors.iter().cloned());
+    train_in.extend(params.tensors.iter().cloned()); // target
+    train_in.extend(zeros.tensors.iter().cloned()); // m
+    train_in.extend(zeros.tensors.iter().cloned()); // v
+    train_in.push(Tensor::zeros(vec![n_q, 2]));
+    train_in.push(Tensor::zeros(vec![batch, obs_dim]));
+    train_in.push(Tensor::zeros(vec![batch]));
+    train_in.push(Tensor::zeros(vec![batch]));
+    train_in.push(Tensor::zeros(vec![batch, obs_dim]));
+    train_in.push(Tensor::zeros(vec![batch]));
+    train_in.push(Tensor::zeros(vec![batch]));
+    train_in.push(Tensor::vec1(&[cfg.lr, cfg.gamma, 0.0, 0.0, 0.0, 1.0]));
+    let i_qstate = 4 * n_p;
+    let i_obs = i_qstate + 1;
+    let i_hyper = i_obs + 6;
+
+    let mut per = PrioritizedReplay::new(cfg.buffer_size, obs_dim, 1, cfg.per_alpha);
+    let mut obs = vec![0.0f32; obs_dim];
+    let mut next_obs = vec![0.0f32; obs_dim];
+    env.reset(&mut env_rng, &mut obs);
+
+    let mut log = TrainLog::default();
+    let t_start = std::time::Instant::now();
+    let mut ep_return = 0.0f32;
+    let mut recent: Vec<f32> = Vec::new();
+    let mut adam_t = 0.0f32;
+
+    let quant_bits = cfg.quant.bits as f32;
+    let quant_delay = cfg.quant.delay as f32;
+
+    for step in 0..cfg.total_steps {
+        // --- act ---
+        let eps = cfg.eps.value(step, cfg.total_steps);
+        let a = if explore_rng.uniform() < eps {
+            explore_rng.below_usize(n_actions)
+        } else {
+            let mut act_in: Vec<Tensor> = train_in[..n_p].to_vec();
+            act_in.push(train_in[i_qstate].clone());
+            act_in.push(pad_obs(&obs, act_batch));
+            act_in.push(Tensor::vec1(&[quant_bits, step as f32, quant_delay]));
+            let out = act_prog.run(&act_in)?;
+            out[0].row(0).iter().enumerate().fold((0usize, f32::NEG_INFINITY), |acc, (i, &q)| {
+                if q > acc.1 { (i, q) } else { acc }
+            }).0
+        };
+
+        // --- env step ---
+        let s = env.step(&Action::Discrete(a), &mut env_rng, &mut next_obs);
+        ep_return += s.reward;
+        per.push(Transition {
+            obs: &obs,
+            action: &[a as f32],
+            reward: s.reward,
+            next_obs: &next_obs,
+            done: s.done,
+        });
+        if s.done {
+            log.episodes += 1;
+            recent.push(ep_return);
+            ep_return = 0.0;
+            env.reset(&mut env_rng, &mut obs);
+        } else {
+            obs.copy_from_slice(&next_obs);
+        }
+
+        // --- learn ---
+        if step >= cfg.warmup && step % cfg.train_freq == 0 && per.len() >= batch {
+            let beta = cfg.per_beta + (1.0 - cfg.per_beta) * (step as f32 / cfg.total_steps as f32);
+            let b = per.sample(batch, beta, &mut replay_rng);
+            adam_t += 1.0;
+            train_in[i_obs] = b.obs;
+            train_in[i_obs + 1] = b.actions;
+            train_in[i_obs + 2] = b.rewards;
+            train_in[i_obs + 3] = b.next_obs;
+            train_in[i_obs + 4] = b.dones;
+            train_in[i_obs + 5] = b.weights;
+            train_in[i_hyper] = Tensor::vec1(&[
+                cfg.lr, cfg.gamma, quant_bits, step as f32, quant_delay, adam_t,
+            ]);
+            let t0 = std::time::Instant::now();
+            let out = train_prog.run(&train_in)?;
+            log.train_exec_secs += t0.elapsed().as_secs_f64();
+            // write back: params, m, v, qstate
+            for i in 0..n_p {
+                train_in[i] = out[i].clone();
+                train_in[2 * n_p + i] = out[n_p + i].clone();
+                train_in[3 * n_p + i] = out[2 * n_p + i].clone();
+            }
+            train_in[i_qstate] = out[3 * n_p].clone();
+            let loss = out[3 * n_p + 1].data()[0];
+            let td = &out[3 * n_p + 2];
+            per.update_priorities(&b.indices, td.data());
+            if cfg.log_every > 0 && step % cfg.log_every == 0 {
+                log.losses.push((step, loss));
+            }
+        }
+
+        if step >= cfg.warmup && step % cfg.target_update == 0 {
+            for i in 0..n_p {
+                train_in[n_p + i] = train_in[i].clone();
+            }
+        }
+
+        if cfg.log_every > 0 && step % cfg.log_every == 0 && !recent.is_empty() {
+            let tail = &recent[recent.len().saturating_sub(20)..];
+            let mean = tail.iter().sum::<f32>() / tail.len() as f32;
+            log.returns.push((step, mean));
+        }
+    }
+
+    let tail = &recent[recent.len().saturating_sub(20)..];
+    log.final_return = if tail.is_empty() {
+        ep_return
+    } else {
+        tail.iter().sum::<f32>() / tail.len() as f32
+    };
+    log.wall_secs = t_start.elapsed().as_secs_f64();
+
+    for i in 0..n_p {
+        params.tensors[i] = train_in[i].clone();
+    }
+    Ok((
+        TrainedPolicy {
+            algo: "dqn".into(),
+            env_id: cfg.env_id.clone(),
+            arch,
+            params,
+            qstate: train_in[i_qstate].clone(),
+            quant: cfg.quant,
+            steps: cfg.total_steps,
+        },
+        log,
+    ))
+}

@@ -1,0 +1,15 @@
+//! RL trainers driving the AOT-compiled XLA programs.
+//!
+//! Each trainer owns the non-differentiable side of its algorithm
+//! (environments, exploration, replay, schedules); the numeric train
+//! step lives in the AOT programs (python/compile/algos/*), one compiled
+//! executable per architecture.
+
+pub mod a2c;
+pub mod common;
+pub mod ddpg;
+pub mod dqn;
+pub mod ppo;
+
+pub use common::{EpsSchedule, QuantSchedule, TrainedPolicy};
+pub use dqn::TrainLog;

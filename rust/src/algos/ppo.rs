@@ -1,0 +1,86 @@
+//! PPO trainer (Schulman et al. 2017): clipped-surrogate on-policy
+//! optimization sharing the A2C rollout machinery.
+
+use crate::algos::a2c::{train_onpolicy, TrainLog};
+use crate::algos::common::{QuantSchedule, TrainedPolicy};
+use crate::error::Result;
+use crate::runtime::Runtime;
+
+#[derive(Debug, Clone)]
+pub struct PpoConfig {
+    pub env_id: String,
+    pub arch_key: Option<String>,
+    pub total_steps: usize,
+    pub n_envs: usize,
+    pub n_steps: usize,
+    pub lr: f32,
+    pub gamma: f32,
+    pub gae_lambda: f32,
+    pub vf_coef: f32,
+    pub ent_coef: f32,
+    pub clip: f32,
+    /// Gradient epochs per rollout (PPO2's n_epochs).
+    pub epochs: usize,
+    pub quant: QuantSchedule,
+    pub seed: u64,
+    pub log_every: usize,
+    pub layer_norm: bool,
+}
+
+impl PpoConfig {
+    pub fn new(env_id: &str) -> Self {
+        PpoConfig {
+            env_id: env_id.into(),
+            arch_key: None,
+            total_steps: 150_000,
+            n_envs: 8,
+            n_steps: 16,
+            lr: 3e-4,
+            gamma: 0.99,
+            gae_lambda: 0.95,
+            vf_coef: 0.5,
+            ent_coef: 0.01,
+            clip: 0.2,
+            epochs: 4,
+            quant: QuantSchedule::off(),
+            seed: 0,
+            log_every: 0,
+            layer_norm: false,
+        }
+    }
+}
+
+/// Train a PPO policy.
+pub fn train(rt: &Runtime, cfg: &PpoConfig) -> Result<(TrainedPolicy, TrainLog)> {
+    train_probed(rt, cfg, 0, &mut |_, _, _| {})
+}
+
+/// Train with a periodic parameter probe (Fig-1 variance tracking).
+pub fn train_probed(
+    rt: &Runtime,
+    cfg: &PpoConfig,
+    probe_every: usize,
+    probe: &mut dyn FnMut(usize, &[crate::tensor::Tensor], &crate::tensor::Tensor),
+) -> Result<(TrainedPolicy, TrainLog)> {
+    let (lr, bits, delay) = (cfg.lr, cfg.quant.bits as f32, cfg.quant.delay as f32);
+    let (vf, ent, clip) = (cfg.vf_coef, cfg.ent_coef, cfg.clip);
+    train_onpolicy(
+        rt,
+        "ppo",
+        &cfg.env_id,
+        cfg.arch_key.clone(),
+        cfg.layer_norm,
+        cfg.total_steps,
+        cfg.n_envs,
+        cfg.n_steps,
+        cfg.gamma,
+        cfg.gae_lambda,
+        cfg.quant,
+        cfg.seed,
+        cfg.log_every,
+        move |step, t| vec![lr, bits, step as f32, delay, t, vf, ent, clip],
+        cfg.epochs,
+        probe_every,
+        probe,
+    )
+}

@@ -1,0 +1,61 @@
+//! Tiny benchmark runner for the `harness = false` benches (no criterion
+//! offline). Reports min/median/mean over timed batches after a warmup,
+//! which is what the EXPERIMENTS.md §Perf tables quote.
+
+use std::time::Instant;
+
+/// Result of one benchmark case.
+#[derive(Debug, Clone)]
+pub struct BenchStats {
+    pub name: String,
+    pub iters_per_batch: usize,
+    pub batches: usize,
+    pub min_ns: f64,
+    pub median_ns: f64,
+    pub mean_ns: f64,
+}
+
+impl BenchStats {
+    pub fn per_iter_ms(&self) -> f64 {
+        self.median_ns / 1e6
+    }
+}
+
+/// Time `f` (called `iters` times per batch, `batches` batches after one
+/// warmup batch) and print a row.
+pub fn bench(name: &str, iters: usize, batches: usize, mut f: impl FnMut()) -> BenchStats {
+    for _ in 0..iters {
+        f(); // warmup
+    }
+    let mut per_iter: Vec<f64> = Vec::with_capacity(batches);
+    for _ in 0..batches {
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            f();
+        }
+        per_iter.push(t0.elapsed().as_nanos() as f64 / iters as f64);
+    }
+    per_iter.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let stats = BenchStats {
+        name: name.to_string(),
+        iters_per_batch: iters,
+        batches,
+        min_ns: per_iter[0],
+        median_ns: per_iter[batches / 2],
+        mean_ns: per_iter.iter().sum::<f64>() / batches as f64,
+    };
+    println!(
+        "{:<44} {:>12.3} us/iter (min {:.3}, mean {:.3})",
+        stats.name,
+        stats.median_ns / 1e3,
+        stats.min_ns / 1e3,
+        stats.mean_ns / 1e3
+    );
+    stats
+}
+
+/// Black-box: defeat dead-code elimination on a value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}

@@ -1,0 +1,47 @@
+// scratch probe for failing env heuristics
+use quarl::envs::api::{Action, Env};
+use quarl::envs::acrobot::Acrobot;
+use quarl::envs::grid_chase::GridChase;
+use quarl::rng::Pcg32;
+
+fn main() {
+    // acrobot policies
+    for (name, f) in [("dtheta1", 0usize), ("dtheta2", 1), ("antiphase", 2)] {
+        let mut solved = 0;
+        for seed in 0..5u64 {
+            let mut env = Acrobot::new();
+            let mut rng = Pcg32::new(seed, 3);
+            let mut obs = [0.0f32; 6];
+            env.reset(&mut rng, &mut obs);
+            loop {
+                let a = match f {
+                    0 => if obs[4] > 0.0 { 2 } else { 0 },
+                    1 => if obs[5] > 0.0 { 2 } else { 0 },
+                    _ => if obs[4].abs() > 0.3 { if obs[4] > 0.0 {2} else {0} } else { if obs[5] > 0.0 {0} else {2} },
+                };
+                let s = env.step(&Action::Discrete(a), &mut rng, &mut obs);
+                if s.done { if s.reward == 0.0 { solved += 1; } break; }
+            }
+        }
+        println!("acrobot {name}: solved {solved}/5");
+    }
+    // grid chase seeker return distribution
+    let mut env = GridChase::new();
+    let mut rng = Pcg32::new(8, 2);
+    let mut obs = [0.0f32; 12];
+    for ep in 0..6 {
+        env.reset(&mut rng, &mut obs);
+        let mut total = 0.0;
+        loop {
+            let a = if obs[10] > 0.5 && obs[2].abs() + obs[3].abs() < 0.2 {
+                if obs[2] > 0.0 { 2 } else { 3 }
+            } else if obs[7].abs() > obs[8].abs() {
+                if obs[7] > 0.0 { 3 } else { 2 }
+            } else if obs[8] > 0.0 { 1 } else { 0 };
+            let s = env.step(&Action::Discrete(a), &mut rng, &mut obs);
+            total += s.reward;
+            if s.done { break; }
+        }
+        println!("gridchase ep{ep}: {total}");
+    }
+}

@@ -1,0 +1,160 @@
+//! Hand-rolled CLI argument parser (no clap offline).
+//!
+//! Supports subcommands, `--flag value`, `--flag=value`, and boolean
+//! switches; collects free (positional) arguments.
+
+use std::collections::BTreeMap;
+
+use crate::error::{Error, Result};
+
+/// Parsed command line.
+#[derive(Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub flags: BTreeMap<String, String>,
+    pub switches: Vec<String>,
+}
+
+/// Flags that take a value (everything else after `--` is a switch).
+const VALUE_FLAGS: &[&str] = &[
+    "artifacts", "runs-dir", "scale", "episodes", "seed", "steps", "bits",
+    "only", "shard", "jobs", "env", "algo", "quant", "delay", "out", "lr",
+];
+
+impl Args {
+    pub fn parse(argv: &[String]) -> Result<Args> {
+        let mut args = Args::default();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(flag) = a.strip_prefix("--") {
+                if let Some((k, v)) = flag.split_once('=') {
+                    args.flags.insert(k.to_string(), v.to_string());
+                } else if VALUE_FLAGS.contains(&flag) {
+                    i += 1;
+                    let v = argv.get(i).ok_or_else(|| {
+                        Error::Config(format!("--{flag} expects a value"))
+                    })?;
+                    args.flags.insert(flag.to_string(), v.clone());
+                } else {
+                    args.switches.push(flag.to_string());
+                }
+            } else {
+                args.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(args)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn get_f32(&self, key: &str, default: f32) -> Result<f32> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::Config(format!("--{key} expects a number, got '{v}'"))),
+        }
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::Config(format!("--{key} expects an integer, got '{v}'"))),
+        }
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> Result<u64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::Config(format!("--{key} expects an integer, got '{v}'"))),
+        }
+    }
+
+    pub fn has(&self, switch: &str) -> bool {
+        self.switches.iter().any(|s| s == switch)
+    }
+
+    /// Parse "k/n" shard notation.
+    pub fn shard(&self) -> Result<Option<(usize, usize)>> {
+        match self.get("shard") {
+            None => Ok(None),
+            Some(v) => {
+                let (k, n) = v
+                    .split_once('/')
+                    .ok_or_else(|| Error::Config(format!("--shard expects k/n, got '{v}'")))?;
+                let k: usize = k.parse().map_err(|_| Error::Config("bad shard".into()))?;
+                let n: usize = n.parse().map_err(|_| Error::Config("bad shard".into()))?;
+                if n == 0 || k >= n {
+                    return Err(Error::Config(format!("shard {k}/{n} out of range")));
+                }
+                Ok(Some((k, n)))
+            }
+        }
+    }
+
+    /// Parse comma-separated bit list.
+    pub fn bits(&self, default: &[u32]) -> Result<Vec<u32>> {
+        match self.get("bits") {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|x| {
+                    x.trim()
+                        .parse()
+                        .map_err(|_| Error::Config(format!("bad bits list '{v}'")))
+                })
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(String::from).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_and_flags() {
+        let a = Args::parse(&argv("exp table2 --episodes 50 --scale=0.5 --fresh")).unwrap();
+        assert_eq!(a.positional, vec!["exp", "table2"]);
+        assert_eq!(a.get_usize("episodes", 0).unwrap(), 50);
+        assert_eq!(a.get_f32("scale", 1.0).unwrap(), 0.5);
+        assert!(a.has("fresh"));
+    }
+
+    #[test]
+    fn shard_parsing() {
+        let a = Args::parse(&argv("exp x --shard 2/8")).unwrap();
+        assert_eq!(a.shard().unwrap(), Some((2, 8)));
+        let bad = Args::parse(&argv("exp x --shard 9/8")).unwrap();
+        assert!(bad.shard().is_err());
+    }
+
+    #[test]
+    fn bits_list() {
+        let a = Args::parse(&argv("exp x --bits 2,4,8")).unwrap();
+        assert_eq!(a.bits(&[6]).unwrap(), vec![2, 4, 8]);
+        let d = Args::parse(&argv("exp x")).unwrap();
+        assert_eq!(d.bits(&[6]).unwrap(), vec![6]);
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        assert!(Args::parse(&argv("exp --episodes")).is_err());
+    }
+}

@@ -1,0 +1,5 @@
+//! Configuration: CLI parsing (and experiment profiles).
+
+pub mod cli;
+
+pub use cli::Args;

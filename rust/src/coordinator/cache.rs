@@ -1,0 +1,142 @@
+//! Trained-policy cache: experiments share policies instead of
+//! retraining (Table 2, Table 3, Fig 3 and Fig 7 all reuse the same DQN
+//! checkpoints, exactly as the paper evaluates one trained model many
+//! ways).
+
+use std::path::{Path, PathBuf};
+
+use crate::algos::{a2c, ddpg, dqn, ppo, QuantSchedule, TrainedPolicy};
+use crate::error::Result;
+use crate::runtime::Runtime;
+
+/// Default step budgets per (algo, env family), scaled by the profile.
+pub fn default_steps(algo: &str, env_id: &str) -> usize {
+    let classic = matches!(
+        env_id,
+        "cartpole" | "mountain_car" | "acrobot" | "pendulum" | "mc_continuous"
+    );
+    match algo {
+        "dqn" => {
+            if env_id == "nav_lite" {
+                20_000
+            } else if classic {
+                40_000
+            } else {
+                80_000
+            }
+        }
+        "a2c" | "ppo" => {
+            if classic {
+                60_000
+            } else {
+                120_000
+            }
+        }
+        "ddpg" => {
+            if classic {
+                20_000
+            } else {
+                30_000
+            }
+        }
+        _ => 50_000,
+    }
+}
+
+/// Cache key -> file path.
+fn policy_path(
+    dir: &Path,
+    algo: &str,
+    env_id: &str,
+    quant: QuantSchedule,
+    steps: usize,
+    seed: u64,
+    variant: Option<&str>,
+) -> PathBuf {
+    let v = variant.map(|v| format!("_{}", v.replace('/', "-"))).unwrap_or_default();
+    let q = if quant.is_on() { format!("_qat{}d{}", quant.bits, quant.delay) } else { String::new() };
+    dir.join(format!("{algo}_{env_id}{v}{q}_{steps}_s{seed}.qprm"))
+}
+
+/// Train-or-load a policy.
+///
+/// `variant` is an env_arch_map suffix key ("mp_a", "nav_p3", "ln", ...).
+#[allow(clippy::too_many_arguments)]
+pub fn get_or_train(
+    rt: &Runtime,
+    policies_dir: &Path,
+    algo: &str,
+    env_id: &str,
+    quant: QuantSchedule,
+    steps: usize,
+    seed: u64,
+    variant: Option<&str>,
+) -> Result<TrainedPolicy> {
+    std::fs::create_dir_all(policies_dir)
+        .map_err(|e| crate::error::Error::io(policies_dir.display().to_string(), e))?;
+    let path = policy_path(policies_dir, algo, env_id, quant, steps, seed, variant);
+    let arch_key = variant.map(|v| format!("{algo}/{env_id}/{v}"));
+    if path.exists() {
+        let arch = rt
+            .manifest
+            .arch_for(arch_key.as_deref().unwrap_or(&format!("{algo}/{env_id}")))?
+            .to_string();
+        if let Ok(p) = TrainedPolicy::load(&path, algo, env_id, &arch) {
+            return Ok(p);
+        }
+        eprintln!("warn: corrupt policy cache {}, retraining", path.display());
+    }
+    let policy = match algo {
+        "dqn" => {
+            let mut cfg = dqn::DqnConfig::new(env_id);
+            cfg.total_steps = steps;
+            cfg.quant = quant;
+            cfg.seed = seed;
+            cfg.arch_key = arch_key;
+            dqn::train(rt, &cfg)?.0
+        }
+        "a2c" => {
+            let mut cfg = a2c::A2cConfig::new(env_id);
+            cfg.total_steps = steps;
+            cfg.quant = quant;
+            cfg.seed = seed;
+            cfg.arch_key = arch_key.clone();
+            cfg.layer_norm = variant == Some("ln");
+            if cfg.layer_norm {
+                cfg.arch_key = None;
+            }
+            a2c::train(rt, &cfg)?.0
+        }
+        "ppo" => {
+            let mut cfg = ppo::PpoConfig::new(env_id);
+            cfg.total_steps = steps;
+            cfg.quant = quant;
+            cfg.seed = seed;
+            cfg.arch_key = arch_key.clone();
+            cfg.layer_norm = variant == Some("ln");
+            if cfg.layer_norm {
+                cfg.arch_key = None;
+            }
+            ppo::train(rt, &cfg)?.0
+        }
+        "ddpg" => {
+            let mut cfg = ddpg::DdpgConfig::new(env_id);
+            cfg.total_steps = steps;
+            cfg.quant = quant;
+            cfg.seed = seed;
+            cfg.arch_key = arch_key;
+            ddpg::train(rt, &cfg)?.0
+        }
+        other => return Err(crate::error::Error::Experiment(format!("unknown algo {other}"))),
+    };
+    // Best-effort cache write; the policy file name encodes the key, but
+    // the saved file name comes from the policy itself, so write directly.
+    let tmp = policy.clone();
+    tmp.save(policies_dir)?;
+    let default_name = policies_dir.join(tmp.file_name());
+    if default_name != path {
+        std::fs::rename(&default_name, &path)
+            .map_err(|e| crate::error::Error::io(path.display().to_string(), e))?;
+    }
+    Ok(policy)
+}

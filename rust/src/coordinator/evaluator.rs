@@ -1,0 +1,131 @@
+//! Policy evaluation: run a trained (optionally quantized) policy for N
+//! episodes through the act program and report mean reward — the
+//! measurement underlying every reward table in the paper.
+
+use crate::algos::common::{pad_obs, TrainedPolicy};
+use crate::envs::api::{Action, ActionSpace};
+use crate::envs::registry::make_env;
+use crate::error::Result;
+use crate::quant::{quantize_params, PtqMethod};
+use crate::rng::Pcg32;
+use crate::runtime::{ParamSet, Runtime};
+use crate::tensor::{softmax, Tensor};
+
+/// Evaluation summary.
+#[derive(Debug, Clone)]
+pub struct EvalResult {
+    pub mean_reward: f32,
+    pub std_reward: f32,
+    pub episodes: usize,
+    pub mean_len: f32,
+    /// Mean variance of the action probability distribution (Fig 1's
+    /// exploration proxy; 0 for ddpg/dqn deterministic heads).
+    pub action_dist_variance: f32,
+    /// NavLite-style success rate (fraction of episodes ending in the
+    /// goal bonus); meaningful for nav_lite only.
+    pub success_rate: f32,
+}
+
+/// How to treat the policy's weights at evaluation time.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum EvalMode {
+    /// Use weights as trained (fp32; for QAT policies the act program
+    /// still applies fake-quant with the trained ranges + bits).
+    AsTrained,
+    /// Apply PTQ to the weights first (paper Algorithm 1).
+    Ptq(PtqMethod),
+}
+
+/// Evaluate a trained policy.
+pub fn evaluate(
+    rt: &Runtime,
+    policy: &TrainedPolicy,
+    episodes: usize,
+    mode: EvalMode,
+    seed: u64,
+) -> Result<EvalResult> {
+    let act_prog = rt.load(&format!("{}_act", policy.arch))?;
+    let act_batch = act_prog.spec.arch.act_batch;
+    let n_actions = act_prog.spec.arch.act_dim;
+
+    let params: ParamSet = match mode {
+        EvalMode::AsTrained => policy.params.clone(),
+        EvalMode::Ptq(m) => quantize_params(&policy.params, m)?,
+    };
+    // QAT policies evaluate with quantization on (step > delay); fp32
+    // policies keep it off (bits = 0).
+    let hyper = Tensor::vec1(&[
+        policy.quant.bits as f32,
+        (policy.quant.delay + 1) as f32,
+        policy.quant.delay as f32,
+    ]);
+
+    let mut env = make_env(&policy.env_id)?;
+    let space = env.action_space();
+    let mut rng = Pcg32::new(seed, 31);
+    let mut obs = vec![0.0f32; env.obs_dim()];
+
+    let mut rets = Vec::with_capacity(episodes);
+    let mut lens = Vec::with_capacity(episodes);
+    let mut successes = 0usize;
+    let mut var_sum = 0.0f64;
+    let mut var_n = 0usize;
+
+    let mut act_in: Vec<Tensor> = params.tensors.clone();
+    act_in.push(policy.qstate.clone());
+    act_in.push(Tensor::zeros(vec![act_batch, env.obs_dim()]));
+    act_in.push(hyper);
+    let i_obs = act_in.len() - 2;
+
+    for _ in 0..episodes {
+        env.reset(&mut rng, &mut obs);
+        let mut ret = 0.0f32;
+        let mut len = 0usize;
+        loop {
+            act_in[i_obs] = pad_obs(&obs, act_batch);
+            let out = act_prog.run(&act_in)?;
+            let action = match &space {
+                ActionSpace::Discrete(_) => {
+                    let row = out[0].row(0);
+                    // Deterministic action selection (paper Fig-1 protocol).
+                    let a = row.iter().enumerate().fold((0usize, f32::NEG_INFINITY), |acc, (i, &q)| {
+                        if q > acc.1 { (i, q) } else { acc }
+                    }).0;
+                    if policy.algo != "dqn" {
+                        // Variance of the softmax action distribution.
+                        let p = softmax(row);
+                        let mean = 1.0 / n_actions as f32;
+                        let v = p.iter().map(|x| (x - mean) * (x - mean)).sum::<f32>()
+                            / n_actions as f32;
+                        var_sum += v as f64;
+                        var_n += 1;
+                    }
+                    Action::Discrete(a)
+                }
+                ActionSpace::Continuous(_) => Action::Continuous(out[0].row(0).to_vec()),
+            };
+            let s = env.step(&action, &mut rng, &mut obs);
+            ret += s.reward;
+            len += 1;
+            if s.done {
+                if policy.env_id == "nav_lite" && s.reward > 500.0 {
+                    successes += 1;
+                }
+                break;
+            }
+        }
+        rets.push(ret);
+        lens.push(len as f32);
+    }
+
+    let mean = rets.iter().sum::<f32>() / episodes as f32;
+    let var = rets.iter().map(|r| (r - mean) * (r - mean)).sum::<f32>() / episodes as f32;
+    Ok(EvalResult {
+        mean_reward: mean,
+        std_reward: var.sqrt(),
+        episodes,
+        mean_len: lens.iter().sum::<f32>() / episodes as f32,
+        action_dist_variance: if var_n > 0 { (var_sum / var_n as f64) as f32 } else { 0.0 },
+        success_rate: successes as f32 / episodes as f32,
+    })
+}

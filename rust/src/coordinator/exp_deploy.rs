@@ -1,0 +1,155 @@
+//! `exp fig6` — the embedded-deployment case study (paper §5, Fig 6):
+//! NavLite policies I/II/III evaluated fp32 vs int8 on the native
+//! inference engines, reporting latency, success rate, memory, and the
+//! RasPi-class swap-cliff model.
+
+use std::time::Instant;
+
+use crate::algos::QuantSchedule;
+use crate::coordinator::cache::get_or_train;
+use crate::coordinator::experiment::{ExpCtx, Experiment};
+use crate::coordinator::metrics::{n, render_table, row, s, Row};
+use crate::envs::api::{Action, Env};
+use crate::envs::nav_lite::NavLite;
+use crate::error::Result;
+use crate::inference::{EngineF32, EngineInt8, MemModel};
+use crate::rng::Pcg32;
+
+pub struct Fig6;
+
+const POLICIES: [&str; 3] = ["nav_p1", "nav_p2", "nav_p3"];
+
+/// Success-rate evaluation on the native engines (no XLA on this path —
+/// this is the "deployed on the robot" configuration).
+fn success_rate(
+    forward: &mut dyn FnMut(&[f32], &mut [f32]),
+    episodes: usize,
+    seed: u64,
+) -> (f32, f64) {
+    let mut env = NavLite::new(0.6);
+    let mut rng = Pcg32::new(seed, 3);
+    let mut obs = vec![0.0f32; env.obs_dim()];
+    let mut logits = vec![0.0f32; 25];
+    let mut successes = 0usize;
+    let mut infer_secs = 0.0f64;
+    let mut infers = 0usize;
+    for _ in 0..episodes {
+        env.reset(&mut rng, &mut obs);
+        loop {
+            let t0 = Instant::now();
+            forward(&obs, &mut logits);
+            infer_secs += t0.elapsed().as_secs_f64();
+            infers += 1;
+            let a = logits
+                .iter()
+                .enumerate()
+                .fold((0, f32::NEG_INFINITY), |acc, (i, &q)| if q > acc.1 { (i, q) } else { acc })
+                .0;
+            let st = env.step(&Action::Discrete(a), &mut rng, &mut obs);
+            if st.done {
+                if st.reward > 500.0 {
+                    successes += 1;
+                }
+                break;
+            }
+        }
+    }
+    (successes as f32 / episodes as f32, infer_secs / infers.max(1) as f64)
+}
+
+impl Experiment for Fig6 {
+    fn name(&self) -> &'static str {
+        "fig6"
+    }
+
+    fn description(&self) -> &'static str {
+        "Fig 6: deployment — fp32 vs int8 latency, success rate, memory (NavLite policies I/II/III)"
+    }
+
+    fn items(&self, _ctx: &ExpCtx) -> Vec<String> {
+        POLICIES.iter().map(|p| p.to_string()).collect()
+    }
+
+    fn run_item(&self, ctx: &ExpCtx, item: &str) -> Result<Vec<Row>> {
+        // Policy III (4096-wide) trains at a third of the budget: the
+        // deployment study's headline metrics are latency/memory; its
+        // success column is reported at whatever competence the budget
+        // buys (the paper's III also trades accuracy for size).
+        let steps = if item == "nav_p3" {
+            ctx.steps("dqn", "nav_lite") / 3
+        } else {
+            ctx.steps("dqn", "nav_lite")
+        };
+        let policy = get_or_train(
+            ctx.rt,
+            &ctx.policies_dir(),
+            "dqn",
+            "nav_lite",
+            QuantSchedule::off(),
+            steps,
+            ctx.seed,
+            Some(item),
+        )?;
+        let mut f32_engine = EngineF32::from_params(&policy.params)?;
+        let mut int8_engine = EngineInt8::from_params(&policy.params)?;
+
+        let (sr_f32, lat_f32) =
+            success_rate(&mut |x, o| f32_engine.forward(x, o), ctx.episodes, ctx.seed + 5);
+        let (sr_i8, lat_i8) = success_rate(
+            &mut |x, o| int8_engine.forward(x, o).expect("int8 forward"),
+            ctx.episodes,
+            ctx.seed + 5,
+        );
+
+        // Memory-pressure models (DESIGN.md §2 substitution): charge the
+        // flash-page cost for the resident-set overflow. `constrained()`
+        // reproduces the paper's fits-vs-spills crossover at our model
+        // sizes (the paper's Policy III had a vision-scale input layer).
+        let mem = MemModel::constrained();
+        let f32_bytes = f32_engine.memory_bytes();
+        let i8_bytes = int8_engine.memory_bytes();
+        let lat_f32_dev = lat_f32 + mem.swap_penalty_secs(f32_bytes);
+        let lat_i8_dev = lat_i8 + mem.swap_penalty_secs(i8_bytes);
+
+        Ok(vec![row(&[
+            ("policy", s(item)),
+            ("params", s(format!("{:?}", ctx.rt.manifest.nav_policies.get(item).cloned().unwrap_or_default()))),
+            ("fp32_ms", n(lat_f32 * 1e3)),
+            ("int8_ms", n(lat_i8 * 1e3)),
+            ("speedup", n(lat_f32 / lat_i8.max(1e-12))),
+            ("fp32_dev_ms", n(lat_f32_dev * 1e3)),
+            ("int8_dev_ms", n(lat_i8_dev * 1e3)),
+            ("dev_speedup", n(lat_f32_dev / lat_i8_dev.max(1e-12))),
+            ("fp32_success", n(sr_f32 as f64 * 100.0)),
+            ("int8_success", n(sr_i8 as f64 * 100.0)),
+            ("fp32_mem_mb", n(f32_bytes as f64 / (1 << 20) as f64)),
+            ("int8_mem_mb", n(i8_bytes as f64 / (1 << 20) as f64)),
+        ])])
+    }
+
+    fn render(&self, _ctx: &ExpCtx, rows: &[Row]) -> String {
+        let mut out = String::from(
+            "Figure 6 — deployment case study (NavLite DQN policies on the native engines)\n\n",
+        );
+        out.push_str(&render_table(
+            &["policy", "params", "fp32_ms", "int8_ms", "speedup",
+              "fp32_success", "int8_success", "fp32_mem_mb", "int8_mem_mb"],
+            rows,
+        ));
+        out.push_str(
+            "\nWith the constrained-device memory model (8 MiB free for weights —\n\
+             the swap cliff, DESIGN.md §2):\n",
+        );
+        out.push_str(&render_table(
+            &["policy", "fp32_dev_ms", "int8_dev_ms", "dev_speedup"],
+            rows,
+        ));
+        out.push_str(
+            "\nPaper shape checks: int8 memory ~ 1/4 of fp32; small policy gets a\n\
+             modest speedup (paper 1.18x), large policies cross the RAM budget at\n\
+             fp32 and see order-of-magnitude device speedups (paper 14x / 18.85x);\n\
+             int8 success rate drops somewhat (weights+activations quantized).\n",
+        );
+        out
+    }
+}

@@ -1,0 +1,154 @@
+//! `exp table3` and `exp fig3` — the weight-distribution analyses:
+//!
+//! * Table 3 + Figure 4: algorithm effect (DQN vs PPO vs A2C on the
+//!   Breakout proxy) — weight spread vs int8 error.
+//! * Figure 3: environment effect (DQN on Breakout/BeamRider/Pong
+//!   proxies) — same mechanism across tasks.
+
+use crate::coordinator::cache::get_or_train;
+use crate::coordinator::evaluator::{evaluate, EvalMode};
+use crate::coordinator::experiment::{ExpCtx, Experiment};
+use crate::coordinator::metrics::{n, render_table, row, s, Row};
+use crate::error::Result;
+use crate::quant::{relative_error_pct, weight_stats, PtqMethod};
+
+fn analyze(ctx: &ExpCtx, algo: &str, env: &str) -> Result<Vec<Row>> {
+    let steps = ctx.steps(algo, env);
+    let policy = get_or_train(
+        ctx.rt,
+        &ctx.policies_dir(),
+        algo,
+        env,
+        crate::algos::QuantSchedule::off(),
+        steps,
+        ctx.seed,
+        None,
+    )?;
+    let stats = weight_stats(&policy.params, 48);
+    let fp32 = evaluate(ctx.rt, &policy, ctx.episodes, EvalMode::AsTrained, ctx.seed + 1)?;
+    let int8 = evaluate(
+        ctx.rt,
+        &policy,
+        ctx.episodes,
+        EvalMode::Ptq(PtqMethod::Int(8)),
+        ctx.seed + 1,
+    )?;
+    let hist: Vec<String> = stats.histogram.iter().map(|c| c.to_string()).collect();
+    Ok(vec![row(&[
+        ("algo", s(algo)),
+        ("env", s(env)),
+        ("fp32", n(fp32.mean_reward as f64)),
+        ("int8", n(int8.mean_reward as f64)),
+        ("e_int8", n(relative_error_pct(fp32.mean_reward, int8.mean_reward) as f64)),
+        ("w_min", n(stats.min as f64)),
+        ("w_max", n(stats.max as f64)),
+        ("spread", n(stats.spread as f64)),
+        ("w_std", n(stats.std as f64)),
+        ("int8_mse", n(stats.int8_mse as f64)),
+        ("hist", s(hist.join(","))),
+        ("h_lo", n(stats.bin_edges.0 as f64)),
+        ("h_hi", n(stats.bin_edges.1 as f64)),
+    ])])
+}
+
+fn render_hist_from_row(r: &Row) -> String {
+    let hist: Vec<usize> = r
+        .get("hist")
+        .and_then(|v| v.as_str().ok())
+        .map(|h| h.split(',').filter_map(|x| x.parse().ok()).collect())
+        .unwrap_or_default();
+    let peak = hist.iter().copied().max().unwrap_or(1).max(1);
+    let lo = r.get("h_lo").and_then(|v| v.as_f64().ok()).unwrap_or(0.0);
+    let hi = r.get("h_hi").and_then(|v| v.as_f64().ok()).unwrap_or(1.0);
+    let mut out = String::new();
+    for (i, &c) in hist.iter().enumerate() {
+        let x = lo + (hi - lo) * i as f64 / hist.len() as f64;
+        out.push_str(&format!(
+            "{x:>8.3} | {}\n",
+            "#".repeat((c * 50 + peak - 1) / peak)
+        ));
+    }
+    out
+}
+
+pub struct Table3;
+
+impl Experiment for Table3 {
+    fn name(&self) -> &'static str {
+        "table3"
+    }
+
+    fn description(&self) -> &'static str {
+        "Table 3 + Fig 4: training-algorithm effect on weight spread and int8 error (Breakout proxy)"
+    }
+
+    fn items(&self, _ctx: &ExpCtx) -> Vec<String> {
+        vec!["dqn/breakout_lite".into(), "ppo/breakout_lite".into(), "a2c/breakout_lite".into()]
+    }
+
+    fn run_item(&self, ctx: &ExpCtx, item: &str) -> Result<Vec<Row>> {
+        let (algo, env) = item.split_once('/').unwrap();
+        analyze(ctx, algo, env)
+    }
+
+    fn render(&self, _ctx: &ExpCtx, rows: &[Row]) -> String {
+        let mut out = String::from("Table 3 — algorithm effect on int8 PTQ (BreakoutLite)\n\n");
+        out.push_str(&render_table(
+            &["algo", "fp32", "int8", "e_int8", "w_min", "w_max", "spread", "int8_mse"],
+            rows,
+        ));
+        out.push_str("\nFigure 4 — weight distributions:\n");
+        for r in rows {
+            if let Some(a) = r.get("algo").and_then(|v| v.as_str().ok()) {
+                out.push_str(&format!("\n[{a}]\n{}", render_hist_from_row(r)));
+            }
+        }
+        out.push_str(
+            "\nPaper shape check: the algorithm with the widest weight spread has\n\
+             the largest int8 error (paper: DQN >> PPO ~ A2C on Breakout).\n",
+        );
+        out
+    }
+}
+
+pub struct Fig3;
+
+impl Experiment for Fig3 {
+    fn name(&self) -> &'static str {
+        "fig3"
+    }
+
+    fn description(&self) -> &'static str {
+        "Fig 3: environment effect on weight spread and int8 error (DQN)"
+    }
+
+    fn items(&self, _ctx: &ExpCtx) -> Vec<String> {
+        vec!["dqn/breakout_lite".into(), "dqn/catcher".into(), "dqn/pong_lite".into()]
+    }
+
+    fn run_item(&self, ctx: &ExpCtx, item: &str) -> Result<Vec<Row>> {
+        let (algo, env) = item.split_once('/').unwrap();
+        analyze(ctx, algo, env)
+    }
+
+    fn render(&self, _ctx: &ExpCtx, rows: &[Row]) -> String {
+        let mut out = String::from(
+            "Figure 3 — environment effect on int8 PTQ (DQN; proxies for Breakout/BeamRider/Pong)\n\n",
+        );
+        out.push_str(&render_table(
+            &["env", "fp32", "int8", "e_int8", "w_min", "w_max", "spread", "int8_mse"],
+            rows,
+        ));
+        out.push_str("\nWeight distributions:\n");
+        for r in rows {
+            if let Some(e) = r.get("env").and_then(|v| v.as_str().ok()) {
+                out.push_str(&format!("\n[{e}]\n{}", render_hist_from_row(r)));
+            }
+        }
+        out.push_str(
+            "\nPaper shape check: wider weight distribution => higher int8 error\n\
+             (paper: Breakout 63.6% > BeamRider 22.1% > Pong 0%).\n",
+        );
+        out
+    }
+}

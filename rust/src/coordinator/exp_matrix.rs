@@ -1,0 +1,54 @@
+//! `exp matrix` — paper Table 1: the (algorithm x environment x
+//! quantization scheme) evaluation matrix, straight from the manifest.
+
+use crate::coordinator::experiment::{ExpCtx, Experiment};
+use crate::coordinator::metrics::{render_table, row, s, Row};
+use crate::envs::registry::paper_name;
+use crate::error::Result;
+
+pub struct Matrix;
+
+impl Experiment for Matrix {
+    fn name(&self) -> &'static str {
+        "matrix"
+    }
+
+    fn description(&self) -> &'static str {
+        "Table 1: algorithms, environments and quantization schemes"
+    }
+
+    fn items(&self, _ctx: &ExpCtx) -> Vec<String> {
+        vec![]
+    }
+
+    fn run_item(&self, _ctx: &ExpCtx, _item: &str) -> Result<Vec<Row>> {
+        Ok(vec![])
+    }
+
+    fn render(&self, ctx: &ExpCtx, _rows: &[Row]) -> String {
+        let mut out = Vec::new();
+        for (key, arch) in &ctx.rt.manifest.env_arch_map {
+            let mut parts = key.splitn(3, '/');
+            let algo = parts.next().unwrap_or("?");
+            let env = parts.next().unwrap_or("?");
+            let variant = parts.next().unwrap_or("");
+            let schemes = match algo {
+                "dqn" => "PTQ",
+                _ => "PTQ QAT BW",
+            };
+            out.push(row(&[
+                ("algo", s(algo.to_uppercase())),
+                ("env", s(env)),
+                ("paper env", s(paper_name(env))),
+                ("variant", s(variant)),
+                ("schemes", s(schemes)),
+                ("arch", s(arch.clone())),
+            ]));
+        }
+        format!(
+            "Table 1 — QuaRL evaluation matrix ({} cells)\n{}",
+            out.len(),
+            render_table(&["algo", "env", "paper env", "variant", "schemes", "arch"], &out)
+        )
+    }
+}

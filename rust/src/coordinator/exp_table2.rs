@@ -1,0 +1,127 @@
+//! `exp table2` — paper Table 2 (+ appendix Tables 5-8): post-training
+//! quantization rewards for fp32/fp16/int8 across the full
+//! (algorithm x environment) matrix, with relative errors and per-
+//! algorithm means.
+
+use crate::coordinator::cache::get_or_train;
+use crate::coordinator::evaluator::{evaluate, EvalMode};
+use crate::coordinator::experiment::{mean, ExpCtx, Experiment};
+use crate::coordinator::metrics::{n, render_table, row, s, Row};
+use crate::error::Result;
+use crate::quant::{relative_error_pct, PtqMethod};
+
+/// Paper Table-2 cells: (algo, envs).
+pub fn matrix() -> Vec<(&'static str, Vec<&'static str>)> {
+    let atari8 = vec![
+        "breakout_lite",
+        "invaders_lite",
+        "catcher",
+        "grid_chase",
+        "pyramid_hop",
+        "diver_lite",
+        "cartpole",
+        "pong_lite",
+    ];
+    vec![
+        ("a2c", atari8.clone()),
+        ("ppo", atari8.clone()),
+        ("dqn", atari8),
+        ("ddpg", vec!["walker_lite", "cheetah_lite", "biped_lite", "mc_continuous"]),
+    ]
+}
+
+pub struct Table2;
+
+impl Experiment for Table2 {
+    fn name(&self) -> &'static str {
+        "table2"
+    }
+
+    fn description(&self) -> &'static str {
+        "Table 2 / Tables 5-8: PTQ rewards fp32/fp16/int8 per algo x env"
+    }
+
+    fn items(&self, _ctx: &ExpCtx) -> Vec<String> {
+        matrix()
+            .iter()
+            .flat_map(|(algo, envs)| envs.iter().map(move |e| format!("{algo}/{e}")))
+            .collect()
+    }
+
+    fn run_item(&self, ctx: &ExpCtx, item: &str) -> Result<Vec<Row>> {
+        let (algo, env) = item.split_once('/').unwrap();
+        let steps = ctx.steps(algo, env);
+        let policy = get_or_train(
+            ctx.rt,
+            &ctx.policies_dir(),
+            algo,
+            env,
+            crate::algos::QuantSchedule::off(),
+            steps,
+            ctx.seed,
+            None,
+        )?;
+        let fp32 = evaluate(ctx.rt, &policy, ctx.episodes, EvalMode::AsTrained, ctx.seed + 1)?;
+        let fp16 = evaluate(
+            ctx.rt,
+            &policy,
+            ctx.episodes,
+            EvalMode::Ptq(PtqMethod::Fp16),
+            ctx.seed + 1,
+        )?;
+        let int8 = evaluate(
+            ctx.rt,
+            &policy,
+            ctx.episodes,
+            EvalMode::Ptq(PtqMethod::Int(8)),
+            ctx.seed + 1,
+        )?;
+        Ok(vec![row(&[
+            ("algo", s(algo)),
+            ("env", s(env)),
+            ("fp32", n(fp32.mean_reward as f64)),
+            ("fp16", n(fp16.mean_reward as f64)),
+            ("e_fp16", n(relative_error_pct(fp32.mean_reward, fp16.mean_reward) as f64)),
+            ("int8", n(int8.mean_reward as f64)),
+            ("e_int8", n(relative_error_pct(fp32.mean_reward, int8.mean_reward) as f64)),
+            ("steps", n(steps as f64)),
+        ])])
+    }
+
+    fn render(&self, ctx: &ExpCtx, rows: &[Row]) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "Table 2 — post-training quantization rewards ({} eval episodes/cell)\n\n",
+            ctx.episodes
+        ));
+        for (algo, _) in matrix() {
+            let sub: Vec<Row> = rows
+                .iter()
+                .filter(|r| r.get("algo").and_then(|v| v.as_str().ok()) == Some(algo))
+                .cloned()
+                .collect();
+            if sub.is_empty() {
+                continue;
+            }
+            out.push_str(&format!("== {} (appendix Table) ==\n", algo.to_uppercase()));
+            out.push_str(&render_table(
+                &["env", "fp32", "fp16", "e_fp16", "int8", "e_int8"],
+                &sub,
+            ));
+            let mean_f16 = mean(
+                &sub.iter().filter_map(|r| r.get("e_fp16").and_then(|v| v.as_f64().ok())).collect::<Vec<_>>(),
+            );
+            let mean_i8 = mean(
+                &sub.iter().filter_map(|r| r.get("e_int8").and_then(|v| v.as_f64().ok())).collect::<Vec<_>>(),
+            );
+            out.push_str(&format!(
+                "Mean E_fp16 = {mean_f16:.2}%   Mean E_int8 = {mean_i8:.2}%\n\n"
+            ));
+        }
+        out.push_str(
+            "Paper shape checks: |mean errors| small (2-5% band), fp16 ~ lossless,\n\
+             int8 errors larger than fp16, negative errors (quantized > fp32) appear.\n",
+        );
+        out
+    }
+}

@@ -1,0 +1,196 @@
+//! Experiment harness: regenerates every table and figure of the paper
+//! (DESIGN.md §6 maps experiment ids to modules).
+//!
+//! Execution model: each experiment is a list of *work items* (one
+//! trained+evaluated cell). Items append JSONL rows to
+//! `runs/results/<exp>.jsonl`; items already present are skipped, so
+//! runs resume after interruption and `--jobs N` can shard items across
+//! child processes before the parent renders the final table.
+
+use std::path::PathBuf;
+use std::process::Command;
+
+use crate::coordinator::metrics::{JsonlSink, Row};
+use crate::error::{Error, Result};
+use crate::runtime::Runtime;
+
+/// Shared context for a harness invocation.
+pub struct ExpCtx<'a> {
+    pub rt: &'a Runtime,
+    pub runs_dir: PathBuf,
+    /// Step-budget multiplier (1.0 = quick profile; 4.0 ~ paper-scale on
+    /// the proxy envs).
+    pub scale: f32,
+    /// Evaluation episodes per cell (paper: 100).
+    pub episodes: usize,
+    /// Base seed.
+    pub seed: u64,
+    /// QAT sweep bitwidths (fig2).
+    pub bits: Vec<u32>,
+    /// Run only items whose id contains this substring.
+    pub filter: Option<String>,
+    /// Shard (k, n): run items where index % n == k, skip rendering.
+    pub shard: Option<(usize, usize)>,
+    /// Parallel child processes (0/1 = in-process).
+    pub jobs: usize,
+}
+
+impl<'a> ExpCtx<'a> {
+    pub fn policies_dir(&self) -> PathBuf {
+        self.runs_dir.join("policies")
+    }
+
+    pub fn sink(&self, exp: &str) -> Result<JsonlSink> {
+        JsonlSink::new(self.runs_dir.join("results").join(format!("{exp}.jsonl")))
+    }
+
+    pub fn steps(&self, algo: &str, env_id: &str) -> usize {
+        (crate::coordinator::cache::default_steps(algo, env_id) as f32 * self.scale) as usize
+    }
+}
+
+/// One experiment definition.
+pub trait Experiment {
+    /// Harness id ("table2", "fig1", ...).
+    fn name(&self) -> &'static str;
+    /// Paper artifact this regenerates.
+    fn description(&self) -> &'static str;
+    /// Work item ids, stable across runs.
+    fn items(&self, ctx: &ExpCtx) -> Vec<String>;
+    /// Run one item, returning rows to append.
+    fn run_item(&self, ctx: &ExpCtx, item: &str) -> Result<Vec<Row>>;
+    /// Render the aggregate (paper-style table/series text).
+    fn render(&self, ctx: &ExpCtx, rows: &[Row]) -> String;
+}
+
+pub fn all_experiments() -> Vec<Box<dyn Experiment>> {
+    vec![
+        Box::new(crate::coordinator::exp_matrix::Matrix),
+        Box::new(crate::coordinator::exp_table2::Table2),
+        Box::new(crate::coordinator::exp_dists::Table3),
+        Box::new(crate::coordinator::exp_dists::Fig3),
+        Box::new(crate::coordinator::exp_qat::Fig1),
+        Box::new(crate::coordinator::exp_qat::Fig2),
+        Box::new(crate::coordinator::exp_mixed::Table4),
+        Box::new(crate::coordinator::exp_deploy::Fig6),
+        Box::new(crate::coordinator::exp_sweetspot::Fig7),
+    ]
+}
+
+/// Run an experiment end-to-end (items + render).
+pub fn run_experiment(ctx: &ExpCtx, name: &str) -> Result<()> {
+    if name == "all" {
+        for exp in all_experiments() {
+            if exp.name() == "matrix" {
+                continue;
+            }
+            run_experiment(ctx, exp.name())?;
+        }
+        return Ok(());
+    }
+    let exp = all_experiments()
+        .into_iter()
+        .find(|e| e.name() == name)
+        .ok_or_else(|| Error::Experiment(format!("unknown experiment '{name}'")))?;
+
+    let sink = ctx.sink(exp.name())?;
+    let done: std::collections::BTreeSet<String> = sink
+        .read_all()?
+        .iter()
+        .filter_map(|r| r.get("item").and_then(|v| v.as_str().ok().map(String::from)))
+        .collect();
+
+    let mut items = exp.items(ctx);
+    if let Some(f) = &ctx.filter {
+        items.retain(|i| i.contains(f.as_str()));
+    }
+    if let Some((k, n)) = ctx.shard {
+        items = items
+            .into_iter()
+            .enumerate()
+            .filter(|(i, _)| i % n == k)
+            .map(|(_, it)| it)
+            .collect();
+    }
+
+    let pending: Vec<String> = items.iter().filter(|i| !done.contains(*i)).cloned().collect();
+    eprintln!(
+        "[{}] {} items ({} cached)",
+        exp.name(),
+        pending.len(),
+        items.len() - pending.len()
+    );
+
+    if ctx.jobs > 1 && ctx.shard.is_none() && pending.len() > 1 {
+        spawn_shards(ctx, exp.name())?;
+    } else {
+        for item in &pending {
+            eprintln!("[{}] running {}", exp.name(), item);
+            let t0 = std::time::Instant::now();
+            let rows = exp.run_item(ctx, item)?;
+            for mut r in rows {
+                r.insert("item".into(), crate::runtime::json::Json::Str(item.clone()));
+                sink.append(&r)?;
+            }
+            eprintln!("[{}] {} done in {:.0}s", exp.name(), item, t0.elapsed().as_secs_f64());
+        }
+    }
+
+    if ctx.shard.is_none() {
+        let rows = sink.read_all()?;
+        let text = exp.render(ctx, &rows);
+        println!("{text}");
+        let out = ctx.runs_dir.join("results").join(format!("{}.txt", exp.name()));
+        std::fs::write(&out, &text).map_err(|e| Error::io(out.display().to_string(), e))?;
+    }
+    Ok(())
+}
+
+/// Spawn `jobs` child processes, each running one shard of the items.
+fn spawn_shards(ctx: &ExpCtx, exp_name: &str) -> Result<()> {
+    let exe = std::env::current_exe()
+        .map_err(|e| Error::io("current_exe", e))?;
+    let mut children = Vec::new();
+    for k in 0..ctx.jobs {
+        let mut cmd = Command::new(&exe);
+        cmd.arg("exp")
+            .arg(exp_name)
+            .arg("--shard")
+            .arg(format!("{k}/{}", ctx.jobs))
+            .arg("--scale")
+            .arg(format!("{}", ctx.scale))
+            .arg("--episodes")
+            .arg(format!("{}", ctx.episodes))
+            .arg("--seed")
+            .arg(format!("{}", ctx.seed))
+            .arg("--runs-dir")
+            .arg(&ctx.runs_dir);
+        if let Some(f) = &ctx.filter {
+            cmd.arg("--only").arg(f);
+        }
+        if !ctx.bits.is_empty() {
+            let b: Vec<String> = ctx.bits.iter().map(|x| x.to_string()).collect();
+            cmd.arg("--bits").arg(b.join(","));
+        }
+        children.push(
+            cmd.spawn()
+                .map_err(|e| Error::io(format!("spawn shard {k}"), e))?,
+        );
+    }
+    for mut c in children {
+        let status = c.wait().map_err(|e| Error::io("wait", e))?;
+        if !status.success() {
+            return Err(Error::Experiment(format!("shard failed: {status}")));
+        }
+    }
+    Ok(())
+}
+
+/// Helper: mean of f64 values.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}

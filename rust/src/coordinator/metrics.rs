@@ -1,0 +1,184 @@
+//! Experiment result logging: JSONL rows + aligned-text tables.
+//!
+//! Every harness experiment appends structured rows to
+//! `runs/results/<exp>.jsonl` (so shard processes can be aggregated) and
+//! renders the paper-style table to stdout and EXPERIMENTS.md blocks.
+
+use std::collections::BTreeMap;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+use crate::error::{Error, Result};
+use crate::runtime::json::{to_string, Json};
+
+/// One result row: string/number fields keyed by column name.
+pub type Row = BTreeMap<String, Json>;
+
+/// Build a row from (key, value) pairs.
+pub fn row(fields: &[(&str, Json)]) -> Row {
+    fields.iter().map(|(k, v)| (k.to_string(), v.clone())).collect()
+}
+
+pub fn s(v: impl Into<String>) -> Json {
+    Json::Str(v.into())
+}
+
+pub fn n(v: f64) -> Json {
+    Json::Num(v)
+}
+
+/// Append-only JSONL sink.
+pub struct JsonlSink {
+    path: PathBuf,
+}
+
+impl JsonlSink {
+    pub fn new(path: impl AsRef<Path>) -> Result<JsonlSink> {
+        let path = path.as_ref().to_path_buf();
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)
+                .map_err(|e| Error::io(parent.display().to_string(), e))?;
+        }
+        Ok(JsonlSink { path })
+    }
+
+    pub fn append(&self, r: &Row) -> Result<()> {
+        let mut f = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(&self.path)
+            .map_err(|e| Error::io(self.path.display().to_string(), e))?;
+        let obj = Json::Obj(r.clone());
+        writeln!(f, "{}", to_string(&obj))
+            .map_err(|e| Error::io(self.path.display().to_string(), e))?;
+        Ok(())
+    }
+
+    /// Read back all rows (aggregation across shard processes).
+    pub fn read_all(&self) -> Result<Vec<Row>> {
+        if !self.path.exists() {
+            return Ok(Vec::new());
+        }
+        let src = std::fs::read_to_string(&self.path)
+            .map_err(|e| Error::io(self.path.display().to_string(), e))?;
+        let mut out = Vec::new();
+        for line in src.lines() {
+            if line.trim().is_empty() {
+                continue;
+            }
+            if let Json::Obj(m) = Json::parse(line)? {
+                out.push(m);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+}
+
+/// Render rows as an aligned text table with the given column order.
+pub fn render_table(columns: &[&str], rows: &[Row]) -> String {
+    let fmt_cell = |r: &Row, c: &str| -> String {
+        match r.get(c) {
+            Some(Json::Str(v)) => v.clone(),
+            Some(Json::Num(v)) => {
+                if v.fract() == 0.0 && v.abs() < 1e9 {
+                    format!("{}", *v as i64)
+                } else if v.abs() < 0.01 {
+                    format!("{v:.2e}")
+                } else {
+                    format!("{v:.2}")
+                }
+            }
+            Some(other) => to_string(other),
+            None => String::new(),
+        }
+    };
+    let mut widths: Vec<usize> = columns.iter().map(|c| c.len()).collect();
+    let cells: Vec<Vec<String>> = rows
+        .iter()
+        .map(|r| columns.iter().map(|c| fmt_cell(r, c)).collect())
+        .collect();
+    for row in &cells {
+        for (i, cell) in row.iter().enumerate() {
+            widths[i] = widths[i].max(cell.len());
+        }
+    }
+    let mut out = String::new();
+    for (i, c) in columns.iter().enumerate() {
+        out.push_str(&format!("{:<w$}  ", c, w = widths[i]));
+    }
+    out.push('\n');
+    for (i, _) in columns.iter().enumerate() {
+        out.push_str(&"-".repeat(widths[i]));
+        out.push_str("  ");
+    }
+    out.push('\n');
+    for row in &cells {
+        for (i, cell) in row.iter().enumerate() {
+            out.push_str(&format!("{:<w$}  ", cell, w = widths[i]));
+        }
+        out.push('\n');
+    }
+    out
+}
+
+/// A simple series renderer for "figure" experiments: one line per x.
+pub fn render_series(title: &str, xs: &[f32], series: &[(&str, Vec<f32>)]) -> String {
+    let mut out = format!("# {title}\n");
+    out.push_str("x");
+    for (name, _) in series {
+        out.push_str(&format!("\t{name}"));
+    }
+    out.push('\n');
+    for (i, x) in xs.iter().enumerate() {
+        out.push_str(&format!("{x}"));
+        for (_, ys) in series {
+            if i < ys.len() {
+                out.push_str(&format!("\t{:.3}", ys[i]));
+            } else {
+                out.push_str("\t-");
+            }
+        }
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn jsonl_round_trip() {
+        let dir = std::env::temp_dir().join("quarl_metrics_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let sink = JsonlSink::new(dir.join("t.jsonl")).unwrap();
+        sink.append(&row(&[("env", s("pong")), ("rwd", n(19.5))])).unwrap();
+        sink.append(&row(&[("env", s("breakout")), ("rwd", n(54.0))])).unwrap();
+        let rows = sink.read_all().unwrap();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[1]["env"], Json::Str("breakout".into()));
+    }
+
+    #[test]
+    fn table_is_aligned() {
+        let rows = vec![
+            row(&[("env", s("pong_lite")), ("fp32", n(20.0)), ("int8", n(19.0))]),
+            row(&[("env", s("x")), ("fp32", n(1.5)), ("int8", n(-2.25))]),
+        ];
+        let t = render_table(&["env", "fp32", "int8"], &rows);
+        let lines: Vec<&str> = t.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert!(lines[0].contains("env"));
+        assert!(lines[2].starts_with("pong_lite"));
+    }
+
+    #[test]
+    fn series_renders_all_points() {
+        let out = render_series("fig", &[2.0, 4.0, 8.0], &[("qat", vec![1.0, 2.0, 3.0])]);
+        assert_eq!(out.lines().count(), 5);
+    }
+}

@@ -1,0 +1,17 @@
+//! Training/evaluation orchestration and the experiment harness that
+//! regenerates every table and figure of the paper (DESIGN.md §6).
+
+pub mod cache;
+pub mod evaluator;
+pub mod experiment;
+pub mod exp_deploy;
+pub mod exp_dists;
+pub mod exp_matrix;
+pub mod exp_mixed;
+pub mod exp_qat;
+pub mod exp_sweetspot;
+pub mod exp_table2;
+pub mod metrics;
+
+pub use evaluator::{evaluate, EvalMode, EvalResult};
+pub use experiment::{all_experiments, run_experiment, ExpCtx, Experiment};

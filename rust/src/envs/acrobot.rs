@@ -1,0 +1,181 @@
+//! Acrobot-v1: equation-level port of the Gym dynamics (Sutton 1996,
+//! the "book or nips" variant gym defaults to), RK4-integrated.
+//!
+//! obs = [cos t1, sin t1, cos t2, sin t2, t1_dot, t2_dot]; 3 actions
+//! (torque -1/0/+1 on the second joint); reward -1 per step until the
+//! tip passes the height -cos(t1) - cos(t1 + t2) > 1; 500-step limit.
+
+use crate::envs::api::{clamp, Action, ActionSpace, Env, Step};
+use crate::rng::Pcg32;
+
+const DT: f32 = 0.2;
+const LINK_LENGTH_1: f32 = 1.0;
+const LINK_MASS_1: f32 = 1.0;
+const LINK_MASS_2: f32 = 1.0;
+const LINK_COM_POS_1: f32 = 0.5;
+const LINK_COM_POS_2: f32 = 0.5;
+const LINK_MOI: f32 = 1.0;
+const MAX_VEL_1: f32 = 4.0 * std::f32::consts::PI;
+const MAX_VEL_2: f32 = 9.0 * std::f32::consts::PI;
+const G: f32 = 9.8;
+
+#[derive(Debug, Default)]
+pub struct Acrobot {
+    s: [f32; 4], // theta1, theta2, dtheta1, dtheta2
+    steps: usize,
+}
+
+impl Acrobot {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn write_obs(&self, obs: &mut [f32]) {
+        obs[0] = self.s[0].cos();
+        obs[1] = self.s[0].sin();
+        obs[2] = self.s[1].cos();
+        obs[3] = self.s[1].sin();
+        obs[4] = self.s[2];
+        obs[5] = self.s[3];
+    }
+}
+
+fn dsdt(s: &[f32; 4], torque: f32) -> [f32; 4] {
+    let (m1, m2) = (LINK_MASS_1, LINK_MASS_2);
+    let (l1, lc1, lc2) = (LINK_LENGTH_1, LINK_COM_POS_1, LINK_COM_POS_2);
+    let i1 = LINK_MOI;
+    let i2 = LINK_MOI;
+    let (theta1, theta2, dtheta1, dtheta2) = (s[0], s[1], s[2], s[3]);
+
+    let d1 = m1 * lc1 * lc1
+        + m2 * (l1 * l1 + lc2 * lc2 + 2.0 * l1 * lc2 * theta2.cos())
+        + i1
+        + i2;
+    let d2 = m2 * (lc2 * lc2 + l1 * lc2 * theta2.cos()) + i2;
+    let phi2 = m2 * lc2 * G * (theta1 + theta2 - std::f32::consts::FRAC_PI_2).cos();
+    let phi1 = -m2 * l1 * lc2 * dtheta2 * dtheta2 * theta2.sin()
+        - 2.0 * m2 * l1 * lc2 * dtheta2 * dtheta1 * theta2.sin()
+        + (m1 * lc1 + m2 * l1) * G * (theta1 - std::f32::consts::FRAC_PI_2).cos()
+        + phi2;
+    // "book" variant
+    let ddtheta2 = (torque + d2 / d1 * phi1
+        - m2 * l1 * lc2 * dtheta1 * dtheta1 * theta2.sin()
+        - phi2)
+        / (m2 * lc2 * lc2 + i2 - d2 * d2 / d1);
+    let ddtheta1 = -(d2 * ddtheta2 + phi1) / d1;
+    [dtheta1, dtheta2, ddtheta1, ddtheta2]
+}
+
+fn rk4(s: &[f32; 4], torque: f32, dt: f32) -> [f32; 4] {
+    let add = |a: &[f32; 4], b: &[f32; 4], h: f32| {
+        [a[0] + h * b[0], a[1] + h * b[1], a[2] + h * b[2], a[3] + h * b[3]]
+    };
+    let k1 = dsdt(s, torque);
+    let k2 = dsdt(&add(s, &k1, dt / 2.0), torque);
+    let k3 = dsdt(&add(s, &k2, dt / 2.0), torque);
+    let k4 = dsdt(&add(s, &k3, dt), torque);
+    [
+        s[0] + dt / 6.0 * (k1[0] + 2.0 * k2[0] + 2.0 * k3[0] + k4[0]),
+        s[1] + dt / 6.0 * (k1[1] + 2.0 * k2[1] + 2.0 * k3[1] + k4[1]),
+        s[2] + dt / 6.0 * (k1[2] + 2.0 * k2[2] + 2.0 * k3[2] + k4[2]),
+        s[3] + dt / 6.0 * (k1[3] + 2.0 * k2[3] + 2.0 * k3[3] + k4[3]),
+    ]
+}
+
+fn wrap(x: f32) -> f32 {
+    let two_pi = std::f32::consts::TAU;
+    let mut y = (x + std::f32::consts::PI) % two_pi;
+    if y < 0.0 {
+        y += two_pi;
+    }
+    y - std::f32::consts::PI
+}
+
+impl Env for Acrobot {
+    fn id(&self) -> &'static str {
+        "acrobot"
+    }
+
+    fn obs_dim(&self) -> usize {
+        6
+    }
+
+    fn action_space(&self) -> ActionSpace {
+        ActionSpace::Discrete(3)
+    }
+
+    fn max_steps(&self) -> usize {
+        500
+    }
+
+    fn reset(&mut self, rng: &mut Pcg32, obs: &mut [f32]) {
+        for v in self.s.iter_mut() {
+            *v = rng.uniform_range(-0.1, 0.1);
+        }
+        self.steps = 0;
+        self.write_obs(obs);
+    }
+
+    fn step(&mut self, action: &Action, _rng: &mut Pcg32, obs: &mut [f32]) -> Step {
+        let torque = action.discrete() as f32 - 1.0;
+        let ns = rk4(&self.s, torque, DT);
+        self.s[0] = wrap(ns[0]);
+        self.s[1] = wrap(ns[1]);
+        self.s[2] = clamp(ns[2], -MAX_VEL_1, MAX_VEL_1);
+        self.s[3] = clamp(ns[3], -MAX_VEL_2, MAX_VEL_2);
+        self.steps += 1;
+        let height = -self.s[0].cos() - (self.s[0] + self.s[1]).cos();
+        let terminal = height > 1.0;
+        self.write_obs(obs);
+        Step {
+            reward: if terminal { 0.0 } else { -1.0 },
+            done: terminal || self.steps >= self.max_steps(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::envs::api::testing::{check_determinism, check_env_contract};
+
+    #[test]
+    fn contract() {
+        check_env_contract(Box::new(Acrobot::new()), 10, 2);
+        check_determinism(|| Box::new(Acrobot::new()), 11);
+    }
+
+    #[test]
+    fn energy_pumping_beats_idle() {
+        // Torque with the direction of the first joint's swing pumps
+        // energy; it should reach the goal height where idling never does.
+        let run = |policy: fn(&[f32; 4]) -> usize| {
+            let mut env = Acrobot::new();
+            let mut rng = Pcg32::new(3, 3);
+            let mut obs = [0.0f32; 6];
+            env.reset(&mut rng, &mut obs);
+            loop {
+                let a = policy(&env.s);
+                let s = env.step(&Action::Discrete(a), &mut rng, &mut obs);
+                if s.done {
+                    return -env.s[0].cos() - (env.s[0] + env.s[1]).cos() > 1.0;
+                }
+            }
+        };
+        assert!(run(|s| if s[3] > 0.0 { 2 } else { 0 }), "pumping should solve acrobot");
+        assert!(!run(|_| 1), "idle must not solve acrobot");
+    }
+
+    #[test]
+    fn angles_stay_wrapped() {
+        let mut env = Acrobot::new();
+        let mut rng = Pcg32::new(4, 4);
+        let mut obs = [0.0f32; 6];
+        env.reset(&mut rng, &mut obs);
+        for _ in 0..200 {
+            env.step(&Action::Discrete(2), &mut rng, &mut obs);
+            assert!(env.s[0].abs() <= std::f32::consts::PI + 1e-4);
+            assert!(env.s[1].abs() <= std::f32::consts::PI + 1e-4);
+        }
+    }
+}

@@ -1,0 +1,157 @@
+//! Environment trait and action/observation plumbing.
+//!
+//! All environments are pure-Rust simulators (DESIGN.md §2 lists which
+//! paper environment each one substitutes for). The trait is allocation-
+//! free on the hot path: observations are written into caller buffers and
+//! actions are passed by reference.
+
+use crate::rng::Pcg32;
+
+/// Action space of an environment.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ActionSpace {
+    /// `n` discrete actions, encoded 0..n.
+    Discrete(usize),
+    /// Box action in [-1, 1]^dim (envs scale internally).
+    Continuous(usize),
+}
+
+impl ActionSpace {
+    pub fn dim(&self) -> usize {
+        match self {
+            ActionSpace::Discrete(n) => *n,
+            ActionSpace::Continuous(d) => *d,
+        }
+    }
+
+    pub fn is_discrete(&self) -> bool {
+        matches!(self, ActionSpace::Discrete(_))
+    }
+}
+
+/// An agent action.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Action {
+    Discrete(usize),
+    Continuous(Vec<f32>),
+}
+
+impl Action {
+    pub fn discrete(&self) -> usize {
+        match self {
+            Action::Discrete(a) => *a,
+            Action::Continuous(_) => panic!("discrete() on continuous action"),
+        }
+    }
+
+    pub fn continuous(&self) -> &[f32] {
+        match self {
+            Action::Continuous(v) => v,
+            Action::Discrete(_) => panic!("continuous() on discrete action"),
+        }
+    }
+}
+
+/// Result of one environment step.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Step {
+    pub reward: f32,
+    /// Episode over (environment terminal OR time-limit truncation; the
+    /// stable-baselines-era training loops the paper used treat both as
+    /// `done`, and so do we).
+    pub done: bool,
+}
+
+/// A single environment instance.
+///
+/// Contract:
+/// * `reset` must be called before the first `step` and after any step
+///   that returned `done`.
+/// * `obs` buffers must have length `obs_dim()`.
+/// * Given the same seed stream, trajectories are bit-reproducible.
+pub trait Env: Send {
+    /// Stable identifier, matching the python registry keys.
+    fn id(&self) -> &'static str;
+    fn obs_dim(&self) -> usize;
+    fn action_space(&self) -> ActionSpace;
+    /// Hard step cap per episode (time-limit truncation).
+    fn max_steps(&self) -> usize;
+    fn reset(&mut self, rng: &mut Pcg32, obs: &mut [f32]);
+    fn step(&mut self, action: &Action, rng: &mut Pcg32, obs: &mut [f32]) -> Step;
+}
+
+/// Clamp helper shared by the simulators.
+#[inline]
+pub fn clamp(x: f32, lo: f32, hi: f32) -> f32 {
+    x.max(lo).min(hi)
+}
+
+#[cfg(test)]
+pub mod testing {
+    //! Shared invariant checks every environment's unit tests run.
+    use super::*;
+
+    /// Roll random episodes and check the core Env contract.
+    pub fn check_env_contract(mut env: Box<dyn Env>, seed: u64, episodes: usize) {
+        let mut rng = Pcg32::new(seed, 99);
+        let dim = env.obs_dim();
+        let space = env.action_space();
+        let mut obs = vec![0.0f32; dim];
+        for _ in 0..episodes {
+            env.reset(&mut rng, &mut obs);
+            assert!(obs.iter().all(|x| x.is_finite()), "{}: non-finite reset obs", env.id());
+            let mut steps = 0usize;
+            loop {
+                let action = match &space {
+                    ActionSpace::Discrete(n) => Action::Discrete(rng.below_usize(*n)),
+                    ActionSpace::Continuous(d) => Action::Continuous(
+                        (0..*d).map(|_| rng.uniform_range(-1.0, 1.0)).collect(),
+                    ),
+                };
+                let step = env.step(&action, &mut rng, &mut obs);
+                steps += 1;
+                assert!(
+                    obs.iter().all(|x| x.is_finite()),
+                    "{}: non-finite obs at step {steps}",
+                    env.id()
+                );
+                assert!(step.reward.is_finite(), "{}: non-finite reward", env.id());
+                if step.done {
+                    break;
+                }
+                assert!(
+                    steps <= env.max_steps() + 1,
+                    "{}: episode exceeded max_steps without done",
+                    env.id()
+                );
+            }
+        }
+    }
+
+    /// Same seed => identical first trajectory.
+    pub fn check_determinism(mut mk: impl FnMut() -> Box<dyn Env>, seed: u64) {
+        let mut run = |mut env: Box<dyn Env>| {
+            let mut rng = Pcg32::new(seed, 7);
+            let mut obs = vec![0.0f32; env.obs_dim()];
+            env.reset(&mut rng, &mut obs);
+            let mut trace = obs.clone();
+            let space = env.action_space();
+            for _ in 0..50 {
+                let action = match &space {
+                    ActionSpace::Discrete(n) => Action::Discrete(rng.below_usize(*n)),
+                    ActionSpace::Continuous(d) => Action::Continuous(
+                        (0..*d).map(|_| rng.uniform_range(-1.0, 1.0)).collect(),
+                    ),
+                };
+                let s = env.step(&action, &mut rng, &mut obs);
+                trace.extend_from_slice(&obs);
+                trace.push(s.reward);
+                if s.done {
+                    break;
+                }
+            }
+            trace
+        };
+        assert_eq!(run(mk()), run(mk()));
+    }
+}

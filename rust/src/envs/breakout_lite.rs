@@ -1,0 +1,224 @@
+//! BreakoutLite — Atari Breakout proxy (DESIGN.md §2).
+//!
+//! Paddle at the bottom of a unit court, 6x10 brick wall at the top,
+//! 3 lives. Reward +1 per brick (returns up to 60, the shape of Atari
+//! Breakout's dense score). The ball accelerates slightly every paddle
+//! hit — the same "game speeds up as you survive" pressure that widens
+//! state coverage (and, per QuaRL §4, the trained weight distribution).
+//!
+//! obs = [ball_x, ball_y, ball_vx, ball_vy, paddle_x, paddle_vx,
+//!        bricks_left_frac, lives_frac]
+//! actions: 0 = stay, 1 = left, 2 = right.
+
+use crate::envs::api::{clamp, Action, ActionSpace, Env, Step};
+use crate::rng::Pcg32;
+
+const ROWS: usize = 6;
+const COLS: usize = 10;
+const PADDLE_W: f32 = 0.16;
+const PADDLE_SPEED: f32 = 0.05;
+const BALL_SPEED0: f32 = 0.025;
+const SPEEDUP: f32 = 1.015;
+const BRICK_TOP: f32 = 0.95;
+const BRICK_BOT: f32 = 0.65;
+
+#[derive(Debug, Default)]
+pub struct BreakoutLite {
+    ball: [f32; 2],
+    vel: [f32; 2],
+    paddle_x: f32,
+    paddle_vx: f32,
+    bricks: Vec<bool>,
+    bricks_left: usize,
+    lives: i32,
+    speed: f32,
+    steps: usize,
+}
+
+impl BreakoutLite {
+    pub fn new() -> Self {
+        Self { bricks: vec![true; ROWS * COLS], ..Self::default() }
+    }
+
+    fn serve(&mut self, rng: &mut Pcg32) {
+        self.ball = [self.paddle_x, 0.2];
+        let angle = rng.uniform_range(-0.9, 0.9);
+        self.vel = [self.speed * angle.sin(), self.speed * angle.cos()];
+        if self.vel[1] < 0.01 {
+            self.vel[1] = 0.01;
+        }
+    }
+
+    fn brick_at(&self, x: f32, y: f32) -> Option<usize> {
+        if !(BRICK_BOT..BRICK_TOP).contains(&y) || !(0.0..1.0).contains(&x) {
+            return None;
+        }
+        let row = ((y - BRICK_BOT) / (BRICK_TOP - BRICK_BOT) * ROWS as f32) as usize;
+        let col = (x * COLS as f32) as usize;
+        let idx = row.min(ROWS - 1) * COLS + col.min(COLS - 1);
+        self.bricks[idx].then_some(idx)
+    }
+
+    fn write_obs(&self, obs: &mut [f32]) {
+        obs[0] = self.ball[0];
+        obs[1] = self.ball[1];
+        obs[2] = self.vel[0] / self.speed.max(1e-6);
+        obs[3] = self.vel[1] / self.speed.max(1e-6);
+        obs[4] = self.paddle_x;
+        obs[5] = self.paddle_vx / PADDLE_SPEED;
+        obs[6] = self.bricks_left as f32 / (ROWS * COLS) as f32;
+        obs[7] = self.lives as f32 / 3.0;
+    }
+}
+
+impl Env for BreakoutLite {
+    fn id(&self) -> &'static str {
+        "breakout_lite"
+    }
+
+    fn obs_dim(&self) -> usize {
+        8
+    }
+
+    fn action_space(&self) -> ActionSpace {
+        ActionSpace::Discrete(3)
+    }
+
+    fn max_steps(&self) -> usize {
+        4000
+    }
+
+    fn reset(&mut self, rng: &mut Pcg32, obs: &mut [f32]) {
+        self.bricks.iter_mut().for_each(|b| *b = true);
+        self.bricks_left = ROWS * COLS;
+        self.lives = 3;
+        self.paddle_x = 0.5;
+        self.paddle_vx = 0.0;
+        self.speed = BALL_SPEED0;
+        self.steps = 0;
+        self.serve(rng);
+        self.write_obs(obs);
+    }
+
+    fn step(&mut self, action: &Action, rng: &mut Pcg32, obs: &mut [f32]) -> Step {
+        self.paddle_vx = match action.discrete() {
+            1 => -PADDLE_SPEED,
+            2 => PADDLE_SPEED,
+            _ => 0.0,
+        };
+        self.paddle_x = clamp(self.paddle_x + self.paddle_vx, PADDLE_W / 2.0, 1.0 - PADDLE_W / 2.0);
+
+        self.ball[0] += self.vel[0];
+        self.ball[1] += self.vel[1];
+
+        // Side and top walls.
+        if self.ball[0] <= 0.0 || self.ball[0] >= 1.0 {
+            self.vel[0] = -self.vel[0];
+            self.ball[0] = clamp(self.ball[0], 0.0, 1.0);
+        }
+        if self.ball[1] >= 1.0 {
+            self.vel[1] = -self.vel[1].abs();
+            self.ball[1] = 1.0;
+        }
+
+        let mut reward = 0.0;
+        // Brick collision (one per step is plenty at these speeds).
+        if let Some(idx) = self.brick_at(self.ball[0], self.ball[1]) {
+            self.bricks[idx] = false;
+            self.bricks_left -= 1;
+            self.vel[1] = -self.vel[1];
+            reward = 1.0;
+        }
+
+        // Paddle plane at y = 0.05.
+        if self.ball[1] <= 0.05 && self.vel[1] < 0.0 {
+            if (self.ball[0] - self.paddle_x).abs() <= PADDLE_W / 2.0 {
+                self.speed *= SPEEDUP;
+                let off = (self.ball[0] - self.paddle_x) / (PADDLE_W / 2.0);
+                let angle = off * 1.1; // radians off vertical
+                self.vel = [self.speed * angle.sin(), self.speed * angle.cos().abs()];
+                self.ball[1] = 0.05;
+            } else if self.ball[1] <= 0.0 {
+                self.lives -= 1;
+                if self.lives > 0 {
+                    self.speed = BALL_SPEED0;
+                    self.serve(rng);
+                }
+            }
+        }
+
+        self.steps += 1;
+        let done =
+            self.lives <= 0 || self.bricks_left == 0 || self.steps >= self.max_steps();
+        self.write_obs(obs);
+        Step { reward, done }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::envs::api::testing::{check_determinism, check_env_contract};
+
+    #[test]
+    fn contract() {
+        check_env_contract(Box::new(BreakoutLite::new()), 30, 2);
+        check_determinism(|| Box::new(BreakoutLite::new()), 31);
+    }
+
+    fn run_policy(policy: fn(&[f32]) -> usize, seed: u64, episodes: usize) -> f32 {
+        let mut env = BreakoutLite::new();
+        let mut rng = Pcg32::new(seed, 1);
+        let mut obs = [0.0f32; 8];
+        let mut total = 0.0;
+        for _ in 0..episodes {
+            env.reset(&mut rng, &mut obs);
+            loop {
+                let s = env.step(&Action::Discrete(policy(&obs)), &mut rng, &mut obs);
+                total += s.reward;
+                if s.done {
+                    break;
+                }
+            }
+        }
+        total / episodes as f32
+    }
+
+    #[test]
+    fn tracking_policy_scores_bricks() {
+        let track = run_policy(
+            |o| {
+                if o[0] < o[4] - 0.02 {
+                    1
+                } else if o[0] > o[4] + 0.02 {
+                    2
+                } else {
+                    0
+                }
+            },
+            5,
+            3,
+        );
+        let idle = run_policy(|_| 0, 5, 3);
+        assert!(track >= 10.0, "tracker should clear bricks, got {track}");
+        assert!(track > idle, "tracking {track} <= idle {idle}");
+    }
+
+    #[test]
+    fn episode_ends_after_three_misses() {
+        let mut env = BreakoutLite::new();
+        let mut rng = Pcg32::new(7, 1);
+        let mut obs = [0.0f32; 8];
+        env.reset(&mut rng, &mut obs);
+        // park the paddle in a corner; ball will be lost 3 times
+        let mut steps = 0;
+        loop {
+            let s = env.step(&Action::Discrete(1), &mut rng, &mut obs);
+            steps += 1;
+            if s.done {
+                break;
+            }
+        }
+        assert!(env.lives <= 0 || steps >= env.max_steps());
+    }
+}

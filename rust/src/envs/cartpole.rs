@@ -1,0 +1,157 @@
+//! CartPole-v1: equation-level port of the OpenAI Gym dynamics
+//! (Barto, Sutton & Anderson 1983 as implemented in gym/envs/classic_control).
+//!
+//! obs = [x, x_dot, theta, theta_dot]; 2 actions (push left / right);
+//! reward 1.0 per step; terminal when |x| > 2.4 or |theta| > 12 deg;
+//! 500-step time limit (the v1 variant QuaRL evaluates, max return 500).
+
+use crate::envs::api::{Action, ActionSpace, Env, Step};
+use crate::rng::Pcg32;
+
+const GRAVITY: f32 = 9.8;
+const MASS_CART: f32 = 1.0;
+const MASS_POLE: f32 = 0.1;
+const TOTAL_MASS: f32 = MASS_CART + MASS_POLE;
+const LENGTH: f32 = 0.5; // half pole length
+const POLEMASS_LENGTH: f32 = MASS_POLE * LENGTH;
+const FORCE_MAG: f32 = 10.0;
+const TAU: f32 = 0.02;
+const THETA_LIMIT: f32 = 12.0 * std::f32::consts::PI / 180.0;
+const X_LIMIT: f32 = 2.4;
+
+#[derive(Debug, Default)]
+pub struct CartPole {
+    x: f32,
+    x_dot: f32,
+    theta: f32,
+    theta_dot: f32,
+    steps: usize,
+}
+
+impl CartPole {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn write_obs(&self, obs: &mut [f32]) {
+        obs[0] = self.x;
+        obs[1] = self.x_dot;
+        obs[2] = self.theta;
+        obs[3] = self.theta_dot;
+    }
+}
+
+impl Env for CartPole {
+    fn id(&self) -> &'static str {
+        "cartpole"
+    }
+
+    fn obs_dim(&self) -> usize {
+        4
+    }
+
+    fn action_space(&self) -> ActionSpace {
+        ActionSpace::Discrete(2)
+    }
+
+    fn max_steps(&self) -> usize {
+        500
+    }
+
+    fn reset(&mut self, rng: &mut Pcg32, obs: &mut [f32]) {
+        self.x = rng.uniform_range(-0.05, 0.05);
+        self.x_dot = rng.uniform_range(-0.05, 0.05);
+        self.theta = rng.uniform_range(-0.05, 0.05);
+        self.theta_dot = rng.uniform_range(-0.05, 0.05);
+        self.steps = 0;
+        self.write_obs(obs);
+    }
+
+    fn step(&mut self, action: &Action, _rng: &mut Pcg32, obs: &mut [f32]) -> Step {
+        let force = if action.discrete() == 1 { FORCE_MAG } else { -FORCE_MAG };
+        let cos_t = self.theta.cos();
+        let sin_t = self.theta.sin();
+        let temp = (force + POLEMASS_LENGTH * self.theta_dot * self.theta_dot * sin_t) / TOTAL_MASS;
+        let theta_acc = (GRAVITY * sin_t - cos_t * temp)
+            / (LENGTH * (4.0 / 3.0 - MASS_POLE * cos_t * cos_t / TOTAL_MASS));
+        let x_acc = temp - POLEMASS_LENGTH * theta_acc * cos_t / TOTAL_MASS;
+
+        // Gym's semi-implicit euler ("euler" kinematics integrator).
+        self.x += TAU * self.x_dot;
+        self.x_dot += TAU * x_acc;
+        self.theta += TAU * self.theta_dot;
+        self.theta_dot += TAU * theta_acc;
+        self.steps += 1;
+
+        let terminal = self.x.abs() > X_LIMIT || self.theta.abs() > THETA_LIMIT;
+        let done = terminal || self.steps >= self.max_steps();
+        self.write_obs(obs);
+        Step { reward: 1.0, done }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::envs::api::testing::{check_determinism, check_env_contract};
+
+    #[test]
+    fn contract() {
+        check_env_contract(Box::new(CartPole::new()), 3, 5);
+        check_determinism(|| Box::new(CartPole::new()), 4);
+    }
+
+    #[test]
+    fn constant_action_falls_quickly() {
+        let mut env = CartPole::new();
+        let mut rng = Pcg32::new(1, 1);
+        let mut obs = [0.0f32; 4];
+        env.reset(&mut rng, &mut obs);
+        let mut steps = 0;
+        loop {
+            let s = env.step(&Action::Discrete(1), &mut rng, &mut obs);
+            steps += 1;
+            if s.done {
+                break;
+            }
+        }
+        assert!(steps < 120, "pushing one way should fail fast, lasted {steps}");
+    }
+
+    #[test]
+    fn balanced_policy_survives_longer_than_constant() {
+        // A simple hand policy (push toward the pole lean) must beat the
+        // constant policy — sanity that the dynamics reward balancing.
+        let run = |policy: fn(&[f32]) -> usize| {
+            let mut env = CartPole::new();
+            let mut rng = Pcg32::new(9, 2);
+            let mut obs = [0.0f32; 4];
+            let mut total = 0usize;
+            for _ in 0..5 {
+                env.reset(&mut rng, &mut obs);
+                loop {
+                    let a = policy(&obs);
+                    let s = env.step(&Action::Discrete(a), &mut rng, &mut obs);
+                    total += 1;
+                    if s.done {
+                        break;
+                    }
+                }
+            }
+            total
+        };
+        let smart = run(|o| if o[2] + o[3] > 0.0 { 1 } else { 0 });
+        let dumb = run(|_| 0);
+        assert!(smart > dumb * 2, "smart {smart} dumb {dumb}");
+    }
+
+    #[test]
+    fn reward_is_one_per_step() {
+        let mut env = CartPole::new();
+        let mut rng = Pcg32::new(2, 2);
+        let mut obs = [0.0f32; 4];
+        env.reset(&mut rng, &mut obs);
+        let s = env.step(&Action::Discrete(0), &mut rng, &mut obs);
+        assert_eq!(s.reward, 1.0);
+    }
+}

@@ -1,0 +1,185 @@
+//! Catcher — BeamRider proxy (DESIGN.md §2).
+//!
+//! Five lanes; the agent slides along the bottom while objects fall:
+//! "good" objects (the sector targets BeamRider rewards shooting) must be
+//! caught, "bad" objects (enemy fire) must be dodged. Two objects are in
+//! flight at once with differing speeds — the same track-two-threats
+//! structure that makes BeamRider mid-complexity for QuaRL.
+//!
+//! obs = [player_lane, o1_lane, o1_y, o1_good, o2_lane, o2_y]
+//!       (lanes normalized to [0,1], y top->bottom in [0,1], good in {0,1};
+//!        o2 is always a hazard so its type flag is omitted)
+//! actions: 0 = left, 1 = stay, 2 = right.
+
+use crate::envs::api::{Action, ActionSpace, Env, Step};
+use crate::rng::Pcg32;
+
+const LANES: usize = 5;
+const MAX_STEPS: usize = 2000;
+const TARGET_CATCHES: i32 = 30;
+
+#[derive(Debug, Default)]
+pub struct Catcher {
+    player: usize,
+    o1_lane: usize,
+    o1_y: f32,
+    o1_good: bool,
+    o1_speed: f32,
+    o2_lane: usize,
+    o2_y: f32,
+    o2_speed: f32,
+    caught: i32,
+    lives: i32,
+    steps: usize,
+}
+
+impl Catcher {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn spawn1(&mut self, rng: &mut Pcg32) {
+        self.o1_lane = rng.below_usize(LANES);
+        self.o1_y = 0.0;
+        self.o1_good = rng.chance(0.7);
+        self.o1_speed = rng.uniform_range(0.02, 0.04);
+    }
+
+    fn spawn2(&mut self, rng: &mut Pcg32) {
+        self.o2_lane = rng.below_usize(LANES);
+        self.o2_y = rng.uniform_range(-0.5, 0.0);
+        self.o2_speed = rng.uniform_range(0.03, 0.05);
+    }
+
+    fn write_obs(&self, obs: &mut [f32]) {
+        let l = (LANES - 1) as f32;
+        obs[0] = self.player as f32 / l;
+        obs[1] = self.o1_lane as f32 / l;
+        obs[2] = self.o1_y;
+        obs[3] = self.o1_good as u8 as f32;
+        obs[4] = self.o2_lane as f32 / l;
+        obs[5] = self.o2_y.max(0.0);
+    }
+}
+
+impl Env for Catcher {
+    fn id(&self) -> &'static str {
+        "catcher"
+    }
+
+    fn obs_dim(&self) -> usize {
+        6
+    }
+
+    fn action_space(&self) -> ActionSpace {
+        ActionSpace::Discrete(3)
+    }
+
+    fn max_steps(&self) -> usize {
+        MAX_STEPS
+    }
+
+    fn reset(&mut self, rng: &mut Pcg32, obs: &mut [f32]) {
+        self.player = LANES / 2;
+        self.caught = 0;
+        self.lives = 3;
+        self.steps = 0;
+        self.spawn1(rng);
+        self.spawn2(rng);
+        self.write_obs(obs);
+    }
+
+    fn step(&mut self, action: &Action, rng: &mut Pcg32, obs: &mut [f32]) -> Step {
+        match action.discrete() {
+            0 if self.player > 0 => self.player -= 1,
+            2 if self.player < LANES - 1 => self.player += 1,
+            _ => {}
+        }
+
+        let mut reward = 0.0;
+        self.o1_y += self.o1_speed;
+        self.o2_y += self.o2_speed;
+
+        if self.o1_y >= 1.0 {
+            let at_player = self.o1_lane == self.player;
+            if self.o1_good {
+                // catching the target pays; missing it merely wastes it
+                if at_player {
+                    reward += 1.0;
+                    self.caught += 1;
+                }
+            } else if at_player {
+                reward -= 1.0;
+                self.lives -= 1;
+            }
+            self.spawn1(rng);
+        }
+        if self.o2_y >= 1.0 {
+            if self.o2_lane == self.player {
+                reward -= 1.0;
+                self.lives -= 1;
+            }
+            self.spawn2(rng);
+        }
+
+        self.steps += 1;
+        let done = self.lives <= 0
+            || self.caught >= TARGET_CATCHES
+            || self.steps >= self.max_steps();
+        self.write_obs(obs);
+        Step { reward, done }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::envs::api::testing::{check_determinism, check_env_contract};
+
+    #[test]
+    fn contract() {
+        check_env_contract(Box::new(Catcher::new()), 40, 3);
+        check_determinism(|| Box::new(Catcher::new()), 41);
+    }
+
+    #[test]
+    fn greedy_catcher_beats_random() {
+        let run = |smart: bool, seed: u64| {
+            let mut env = Catcher::new();
+            let mut rng = Pcg32::new(seed, 2);
+            let mut obs = [0.0f32; 6];
+            let mut total = 0.0;
+            for _ in 0..5 {
+                env.reset(&mut rng, &mut obs);
+                loop {
+                    let a = if smart {
+                        // chase good o1, dodge hazards when they are close
+                        let me = obs[0];
+                        let danger2 = obs[5] > 0.7 && (obs[4] - me).abs() < 0.05;
+                        let danger1 = !(obs[3] > 0.5) && obs[2] > 0.7 && (obs[1] - me).abs() < 0.05;
+                        if danger2 || danger1 {
+                            if me < 0.5 { 2 } else { 0 }
+                        } else if obs[3] > 0.5 && obs[1] < me - 0.05 {
+                            0
+                        } else if obs[3] > 0.5 && obs[1] > me + 0.05 {
+                            2
+                        } else {
+                            1
+                        }
+                    } else {
+                        rng.below_usize(3)
+                    };
+                    let s = env.step(&Action::Discrete(a), &mut rng, &mut obs);
+                    total += s.reward;
+                    if s.done {
+                        break;
+                    }
+                }
+            }
+            total / 5.0
+        };
+        let smart = run(true, 6);
+        let random = run(false, 6);
+        assert!(smart > random + 2.0, "smart {smart} vs random {random}");
+    }
+}

@@ -1,0 +1,217 @@
+//! DiverLite — Seaquest proxy (DESIGN.md §2).
+//!
+//! A submarine rescues divers while managing oxygen: dive to pick up
+//! divers, surface to breathe (and deliver divers for points), dodge a
+//! patrolling enemy. The oxygen clock forces the long-horizon resource
+//! tradeoff that characterizes Seaquest.
+//!
+//! obs = [my_x, my_y, oxygen, divers_held_frac, diver_dx, diver_dy,
+//!        enemy_dx, enemy_dy, at_surface, rescued_frac]
+//! actions: 0 = up, 1 = down, 2 = left, 3 = right, 4 = stay.
+
+use crate::envs::api::{clamp, Action, ActionSpace, Env, Step};
+use crate::rng::Pcg32;
+
+const SPEED: f32 = 0.05;
+const O2_DRAIN: f32 = 0.004;
+const MAX_HELD: usize = 3;
+const TARGET_RESCUED: usize = 12;
+
+#[derive(Debug, Default)]
+pub struct DiverLite {
+    me: [f32; 2], // y = 1 is the surface
+    oxygen: f32,
+    held: usize,
+    rescued: usize,
+    diver: [f32; 2],
+    enemy: [f32; 2],
+    enemy_dir: f32,
+    steps: usize,
+}
+
+impl DiverLite {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn spawn_diver(&mut self, rng: &mut Pcg32) {
+        self.diver = [rng.uniform(), rng.uniform_range(0.05, 0.5)];
+    }
+
+    fn write_obs(&self, obs: &mut [f32]) {
+        obs[0] = self.me[0];
+        obs[1] = self.me[1];
+        obs[2] = self.oxygen;
+        obs[3] = self.held as f32 / MAX_HELD as f32;
+        obs[4] = self.diver[0] - self.me[0];
+        obs[5] = self.diver[1] - self.me[1];
+        obs[6] = self.enemy[0] - self.me[0];
+        obs[7] = self.enemy[1] - self.me[1];
+        obs[8] = (self.me[1] >= 0.95) as u8 as f32;
+        obs[9] = self.rescued as f32 / TARGET_RESCUED as f32;
+    }
+}
+
+impl Env for DiverLite {
+    fn id(&self) -> &'static str {
+        "diver_lite"
+    }
+
+    fn obs_dim(&self) -> usize {
+        10
+    }
+
+    fn action_space(&self) -> ActionSpace {
+        ActionSpace::Discrete(5)
+    }
+
+    fn max_steps(&self) -> usize {
+        2000
+    }
+
+    fn reset(&mut self, rng: &mut Pcg32, obs: &mut [f32]) {
+        self.me = [0.5, 1.0];
+        self.oxygen = 1.0;
+        self.held = 0;
+        self.rescued = 0;
+        self.spawn_diver(rng);
+        self.enemy = [rng.uniform(), rng.uniform_range(0.2, 0.7)];
+        self.enemy_dir = if rng.chance(0.5) { 1.0 } else { -1.0 };
+        self.steps = 0;
+        self.write_obs(obs);
+    }
+
+    fn step(&mut self, action: &Action, rng: &mut Pcg32, obs: &mut [f32]) -> Step {
+        match action.discrete() {
+            0 => self.me[1] = clamp(self.me[1] + SPEED, 0.0, 1.0),
+            1 => self.me[1] = clamp(self.me[1] - SPEED, 0.0, 1.0),
+            2 => self.me[0] = clamp(self.me[0] - SPEED, 0.0, 1.0),
+            3 => self.me[0] = clamp(self.me[0] + SPEED, 0.0, 1.0),
+            _ => {}
+        }
+
+        let mut reward = 0.0;
+        let at_surface = self.me[1] >= 0.95;
+
+        // Oxygen: drains underwater, refills at the surface.
+        if at_surface {
+            self.oxygen = 1.0;
+            if self.held > 0 {
+                reward += 2.0 * self.held as f32;
+                self.rescued += self.held;
+                self.held = 0;
+            }
+        } else {
+            self.oxygen -= O2_DRAIN;
+        }
+
+        // Diver pickup.
+        if self.held < MAX_HELD
+            && (self.me[0] - self.diver[0]).abs() < 0.06
+            && (self.me[1] - self.diver[1]).abs() < 0.06
+        {
+            self.held += 1;
+            reward += 1.0;
+            self.spawn_diver(rng);
+        }
+
+        // Enemy patrol: horizontal sweep with slow vertical drift toward us.
+        self.enemy[0] += self.enemy_dir * 0.03;
+        if self.enemy[0] <= 0.0 || self.enemy[0] >= 1.0 {
+            self.enemy_dir = -self.enemy_dir;
+            self.enemy[0] = clamp(self.enemy[0], 0.0, 1.0);
+        }
+        self.enemy[1] += (self.me[1] - self.enemy[1]).signum() * 0.005;
+
+        let mut dead = false;
+        if !at_surface
+            && (self.me[0] - self.enemy[0]).abs() < 0.05
+            && (self.me[1] - self.enemy[1]).abs() < 0.05
+        {
+            reward -= 5.0;
+            dead = true;
+        }
+        if self.oxygen <= 0.0 {
+            reward -= 5.0;
+            dead = true;
+        }
+
+        self.steps += 1;
+        let done = dead
+            || self.rescued >= TARGET_RESCUED
+            || self.steps >= self.max_steps();
+        self.write_obs(obs);
+        Step { reward, done }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::envs::api::testing::{check_determinism, check_env_contract};
+
+    #[test]
+    fn contract() {
+        check_env_contract(Box::new(DiverLite::new()), 80, 3);
+        check_determinism(|| Box::new(DiverLite::new()), 81);
+    }
+
+    #[test]
+    fn rescue_loop_beats_random() {
+        let run = |smart: bool, seed: u64| {
+            let mut env = DiverLite::new();
+            let mut rng = Pcg32::new(seed, 2);
+            let mut obs = [0.0f32; 10];
+            let mut total = 0.0;
+            for _ in 0..3 {
+                env.reset(&mut rng, &mut obs);
+                loop {
+                    let a = if smart {
+                        if obs[2] < 0.3 || obs[3] >= 0.99 {
+                            0 // surface for air / delivery
+                        } else if obs[6].abs() < 0.12 && obs[7].abs() < 0.12 {
+                            if obs[6] > 0.0 { 2 } else { 3 } // dodge enemy
+                        } else if obs[4].abs() > 0.05 {
+                            if obs[4] > 0.0 { 3 } else { 2 }
+                        } else if obs[5] > 0.02 {
+                            0
+                        } else if obs[5] < -0.02 {
+                            1
+                        } else {
+                            4
+                        }
+                    } else {
+                        rng.below_usize(5)
+                    };
+                    let s = env.step(&Action::Discrete(a), &mut rng, &mut obs);
+                    total += s.reward;
+                    if s.done {
+                        break;
+                    }
+                }
+            }
+            total / 3.0
+        };
+        let smart = run(true, 5);
+        let random = run(false, 5);
+        assert!(smart > random + 2.0, "rescuer {smart} vs random {random}");
+    }
+
+    #[test]
+    fn oxygen_runs_out_underwater() {
+        let mut env = DiverLite::new();
+        let mut rng = Pcg32::new(6, 2);
+        let mut obs = [0.0f32; 10];
+        env.reset(&mut rng, &mut obs);
+        // dive to the bottom and stay
+        let mut last_done = false;
+        for _ in 0..500 {
+            let s = env.step(&Action::Discrete(1), &mut rng, &mut obs);
+            if s.done {
+                last_done = true;
+                break;
+            }
+        }
+        assert!(last_done, "staying under must end the episode");
+    }
+}

@@ -1,0 +1,248 @@
+//! GridChase — MsPacman proxy (DESIGN.md §2).
+//!
+//! An 8x8 grid of pellets, two chasers with imperfect pursuit, and a
+//! power timer: eat a power pellet (the four corners) and chasers flee
+//! for a while. Reward +1 per pellet, +5 per scared chaser tagged,
+//! -10 (and done) when caught. The long-horizon pellet sweep plus
+//! pursuit pressure mirrors MsPacman's decision structure.
+//!
+//! obs = [my_x, my_y, c1_dx, c1_dy, c2_dx, c2_dy, pellets_frac,
+//!        nearest_dx, nearest_dy, power_timer, c1_close, c2_close]
+//! actions: 0 = up, 1 = down, 2 = left, 3 = right, 4 = stay.
+
+use crate::envs::api::{Action, ActionSpace, Env, Step};
+use crate::rng::Pcg32;
+
+const N: i32 = 8;
+const POWER_STEPS: i32 = 25;
+
+#[derive(Debug, Default)]
+pub struct GridChase {
+    me: [i32; 2],
+    chasers: [[i32; 2]; 2],
+    pellets: Vec<bool>,
+    pellets_left: usize,
+    power: i32,
+    steps: usize,
+}
+
+fn idx(x: i32, y: i32) -> usize {
+    (y * N + x) as usize
+}
+
+impl GridChase {
+    pub fn new() -> Self {
+        Self { pellets: vec![true; (N * N) as usize], ..Self::default() }
+    }
+
+    fn nearest_pellet(&self) -> (f32, f32) {
+        let mut best = (0.0, 0.0);
+        let mut best_d = i32::MAX;
+        for y in 0..N {
+            for x in 0..N {
+                if self.pellets[idx(x, y)] {
+                    let d = (x - self.me[0]).abs() + (y - self.me[1]).abs();
+                    if d < best_d {
+                        best_d = d;
+                        best = ((x - self.me[0]) as f32 / N as f32, (y - self.me[1]) as f32 / N as f32);
+                    }
+                }
+            }
+        }
+        best
+    }
+
+    fn write_obs(&self, obs: &mut [f32]) {
+        let n = N as f32;
+        obs[0] = self.me[0] as f32 / n;
+        obs[1] = self.me[1] as f32 / n;
+        obs[2] = (self.chasers[0][0] - self.me[0]) as f32 / n;
+        obs[3] = (self.chasers[0][1] - self.me[1]) as f32 / n;
+        obs[4] = (self.chasers[1][0] - self.me[0]) as f32 / n;
+        obs[5] = (self.chasers[1][1] - self.me[1]) as f32 / n;
+        obs[6] = self.pellets_left as f32 / (N * N) as f32;
+        let (dx, dy) = self.nearest_pellet();
+        obs[7] = dx;
+        obs[8] = dy;
+        obs[9] = self.power as f32 / POWER_STEPS as f32;
+        let d1 = (self.chasers[0][0] - self.me[0]).abs() + (self.chasers[0][1] - self.me[1]).abs();
+        let d2 = (self.chasers[1][0] - self.me[0]).abs() + (self.chasers[1][1] - self.me[1]).abs();
+        obs[10] = (d1 <= 2) as u8 as f32;
+        obs[11] = (d2 <= 2) as u8 as f32;
+    }
+
+    fn move_chaser(&mut self, i: usize, rng: &mut Pcg32) {
+        let c = self.chasers[i];
+        // 70% pursue (flee when scared), 30% random — imperfect like the
+        // arcade ghosts.
+        let toward = !rng.chance(0.3);
+        let sign = if self.power > 0 { -1 } else { 1 };
+        let (dx, dy) = (self.me[0] - c[0], self.me[1] - c[1]);
+        let step = if toward {
+            if dx.abs() >= dy.abs() {
+                [sign * dx.signum(), 0]
+            } else {
+                [0, sign * dy.signum()]
+            }
+        } else {
+            match rng.below(4) {
+                0 => [1, 0],
+                1 => [-1, 0],
+                2 => [0, 1],
+                _ => [0, -1],
+            }
+        };
+        self.chasers[i][0] = (c[0] + step[0]).clamp(0, N - 1);
+        self.chasers[i][1] = (c[1] + step[1]).clamp(0, N - 1);
+    }
+}
+
+impl Env for GridChase {
+    fn id(&self) -> &'static str {
+        "grid_chase"
+    }
+
+    fn obs_dim(&self) -> usize {
+        12
+    }
+
+    fn action_space(&self) -> ActionSpace {
+        ActionSpace::Discrete(5)
+    }
+
+    fn max_steps(&self) -> usize {
+        600
+    }
+
+    fn reset(&mut self, rng: &mut Pcg32, obs: &mut [f32]) {
+        self.me = [N / 2, N / 2];
+        self.chasers = [[0, 0], [N - 1, N - 1]];
+        self.pellets.iter_mut().for_each(|p| *p = true);
+        self.pellets[idx(self.me[0], self.me[1])] = false;
+        self.pellets_left = (N * N) as usize - 1;
+        self.power = 0;
+        self.steps = 0;
+        let _ = rng;
+        self.write_obs(obs);
+    }
+
+    fn step(&mut self, action: &Action, rng: &mut Pcg32, obs: &mut [f32]) -> Step {
+        let d: [i32; 2] = match action.discrete() {
+            0 => [0, -1],
+            1 => [0, 1],
+            2 => [-1, 0],
+            3 => [1, 0],
+            _ => [0, 0],
+        };
+        self.me[0] = (self.me[0] + d[0]).clamp(0, N - 1);
+        self.me[1] = (self.me[1] + d[1]).clamp(0, N - 1);
+
+        let mut reward = 0.0;
+        let at = idx(self.me[0], self.me[1]);
+        if self.pellets[at] {
+            self.pellets[at] = false;
+            self.pellets_left -= 1;
+            reward += 1.0;
+            let corner = (self.me[0] == 0 || self.me[0] == N - 1)
+                && (self.me[1] == 0 || self.me[1] == N - 1);
+            if corner {
+                self.power = POWER_STEPS;
+            }
+        }
+
+        // Chasers move at half the player's speed (every other step) —
+        // escapable pursuit, like the arcade's corridor advantages.
+        if self.steps % 2 == 1 {
+            for i in 0..2 {
+                self.move_chaser(i, rng);
+            }
+        }
+        if self.power > 0 {
+            self.power -= 1;
+        }
+
+        let mut caught = false;
+        for i in 0..2 {
+            if self.chasers[i] == self.me {
+                if self.power > 0 {
+                    reward += 5.0;
+                    // tagged chaser respawns in its corner
+                    self.chasers[i] = if i == 0 { [0, 0] } else { [N - 1, N - 1] };
+                } else {
+                    caught = true;
+                }
+            }
+        }
+        if caught {
+            reward -= 10.0;
+        }
+
+        self.steps += 1;
+        let cleared = self.pellets_left == 0;
+        if cleared {
+            reward += 10.0;
+        }
+        let done = caught || cleared || self.steps >= self.max_steps();
+        self.write_obs(obs);
+        Step { reward, done }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::envs::api::testing::{check_determinism, check_env_contract};
+
+    #[test]
+    fn contract() {
+        check_env_contract(Box::new(GridChase::new()), 60, 3);
+        check_determinism(|| Box::new(GridChase::new()), 61);
+    }
+
+    #[test]
+    fn pellet_seeker_scores() {
+        let mut env = GridChase::new();
+        let mut rng = Pcg32::new(8, 2);
+        let mut obs = [0.0f32; 12];
+        let mut total = 0.0;
+        for _ in 0..3 {
+            env.reset(&mut rng, &mut obs);
+            loop {
+                // walk toward the nearest pellet, dodge adjacent chasers
+                let a = if obs[10] > 0.5 && obs[2].abs() + obs[3].abs() < 0.2 {
+                    if obs[2] > 0.0 { 2 } else { 3 }
+                } else if obs[7].abs() > obs[8].abs() {
+                    if obs[7] > 0.0 { 3 } else { 2 }
+                } else if obs[8] > 0.0 {
+                    1
+                } else {
+                    0
+                };
+                let s = env.step(&Action::Discrete(a), &mut rng, &mut obs);
+                total += s.reward;
+                if s.done {
+                    break;
+                }
+            }
+        }
+        assert!(total / 3.0 > 5.0, "seeker should collect pellets: {}", total / 3.0);
+    }
+
+    #[test]
+    fn getting_caught_costs_ten() {
+        let mut env = GridChase::new();
+        let mut rng = Pcg32::new(9, 2);
+        let mut obs = [0.0f32; 12];
+        env.reset(&mut rng, &mut obs);
+        // stand still until a chaser arrives
+        let mut last = 0.0;
+        for _ in 0..600 {
+            let s = env.step(&Action::Discrete(4), &mut rng, &mut obs);
+            last = s.reward;
+            if s.done {
+                break;
+            }
+        }
+        assert!(last <= -10.0, "expected catch penalty, got {last}");
+    }
+}

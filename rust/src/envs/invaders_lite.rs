@@ -1,0 +1,219 @@
+//! InvadersLite — Space Invaders proxy (DESIGN.md §2).
+//!
+//! A 4x6 alien block marches left-right and descends; the agent slides
+//! along the bottom, firing one shot at a time while dodging bombs.
+//! Reward +1 per alien; episode ends when the player is hit, the block
+//! reaches the floor, the wave is cleared, or time runs out.
+//!
+//! obs = [player_x, block_x, block_y, block_dir, aliens_frac,
+//!        bomb_x, bomb_y, shot_live, shot_x, shot_y]
+//! actions: 0 = stay, 1 = left, 2 = right, 3 = fire.
+
+use crate::envs::api::{clamp, Action, ActionSpace, Env, Step};
+use crate::rng::Pcg32;
+
+const A_ROWS: usize = 4;
+const A_COLS: usize = 6;
+const PLAYER_SPEED: f32 = 0.04;
+const SHOT_SPEED: f32 = 0.06;
+const BOMB_SPEED: f32 = 0.025;
+const BLOCK_SPEED: f32 = 0.008;
+const BLOCK_DROP: f32 = 0.06;
+const CELL_W: f32 = 0.08;
+const CELL_H: f32 = 0.07;
+
+#[derive(Debug, Default)]
+pub struct InvadersLite {
+    player_x: f32,
+    block_x: f32, // left edge of the block
+    block_y: f32, // bottom edge of the block (1 = top of screen)
+    dir: f32,
+    aliens: Vec<bool>,
+    aliens_left: usize,
+    bomb: Option<[f32; 2]>,
+    shot: Option<[f32; 2]>,
+    steps: usize,
+}
+
+impl InvadersLite {
+    pub fn new() -> Self {
+        Self { aliens: vec![true; A_ROWS * A_COLS], ..Self::default() }
+    }
+
+    fn block_width(&self) -> f32 {
+        A_COLS as f32 * CELL_W
+    }
+
+    /// Lowest live alien in the column hit by x, if any.
+    fn alien_at(&self, x: f32, y: f32) -> Option<usize> {
+        let col = ((x - self.block_x) / CELL_W).floor();
+        if col < 0.0 || col >= A_COLS as f32 {
+            return None;
+        }
+        let row = ((y - self.block_y) / CELL_H).floor();
+        if row < 0.0 || row >= A_ROWS as f32 {
+            return None;
+        }
+        let idx = row as usize * A_COLS + col as usize;
+        self.aliens[idx].then_some(idx)
+    }
+
+    fn write_obs(&self, obs: &mut [f32]) {
+        obs[0] = self.player_x;
+        obs[1] = self.block_x;
+        obs[2] = self.block_y;
+        obs[3] = self.dir;
+        obs[4] = self.aliens_left as f32 / (A_ROWS * A_COLS) as f32;
+        let b = self.bomb.unwrap_or([0.5, 1.0]);
+        obs[5] = b[0];
+        obs[6] = b[1];
+        obs[7] = self.shot.is_some() as u8 as f32;
+        let s = self.shot.unwrap_or([0.5, 0.0]);
+        obs[8] = s[0];
+        obs[9] = s[1];
+    }
+}
+
+impl Env for InvadersLite {
+    fn id(&self) -> &'static str {
+        "invaders_lite"
+    }
+
+    fn obs_dim(&self) -> usize {
+        10
+    }
+
+    fn action_space(&self) -> ActionSpace {
+        ActionSpace::Discrete(4)
+    }
+
+    fn max_steps(&self) -> usize {
+        3000
+    }
+
+    fn reset(&mut self, rng: &mut Pcg32, obs: &mut [f32]) {
+        self.player_x = 0.5;
+        self.block_x = rng.uniform_range(0.1, 0.4);
+        self.block_y = 0.6;
+        self.dir = 1.0;
+        self.aliens.iter_mut().for_each(|a| *a = true);
+        self.aliens_left = A_ROWS * A_COLS;
+        self.bomb = None;
+        self.shot = None;
+        self.steps = 0;
+        self.write_obs(obs);
+    }
+
+    fn step(&mut self, action: &Action, rng: &mut Pcg32, obs: &mut [f32]) -> Step {
+        match action.discrete() {
+            1 => self.player_x = clamp(self.player_x - PLAYER_SPEED, 0.02, 0.98),
+            2 => self.player_x = clamp(self.player_x + PLAYER_SPEED, 0.02, 0.98),
+            3 if self.shot.is_none() => self.shot = Some([self.player_x, 0.05]),
+            _ => {}
+        }
+
+        // Alien block march: speeds up as aliens die (classic pressure).
+        let speed = BLOCK_SPEED * (1.0 + 1.5 * (1.0 - self.aliens_left as f32 / 24.0));
+        self.block_x += self.dir * speed;
+        if self.block_x <= 0.0 || self.block_x + self.block_width() >= 1.0 {
+            self.dir = -self.dir;
+            self.block_x = clamp(self.block_x, 0.0, 1.0 - self.block_width());
+            self.block_y -= BLOCK_DROP;
+        }
+
+        // Bombs: lowest aliens drop occasionally, aimed-ish at the player.
+        if self.bomb.is_none() && rng.chance(0.04) {
+            let col = rng.below_usize(A_COLS);
+            let x = self.block_x + (col as f32 + 0.5) * CELL_W;
+            self.bomb = Some([x, self.block_y]);
+        }
+
+        let mut reward = 0.0;
+        let mut player_hit = false;
+
+        if let Some(mut b) = self.bomb.take() {
+            b[1] -= BOMB_SPEED;
+            if b[1] <= 0.05 {
+                if (b[0] - self.player_x).abs() < 0.04 {
+                    player_hit = true;
+                }
+            } else {
+                self.bomb = Some(b);
+            }
+        }
+
+        if let Some(mut s) = self.shot.take() {
+            s[1] += SHOT_SPEED;
+            if let Some(idx) = self.alien_at(s[0], s[1]) {
+                self.aliens[idx] = false;
+                self.aliens_left -= 1;
+                reward += 1.0;
+            } else if s[1] < 1.0 {
+                self.shot = Some(s);
+            }
+        }
+
+        self.steps += 1;
+        if player_hit {
+            reward -= 1.0;
+        }
+        let done = player_hit
+            || self.block_y <= 0.1
+            || self.aliens_left == 0
+            || self.steps >= self.max_steps();
+        self.write_obs(obs);
+        Step { reward, done }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::envs::api::testing::{check_determinism, check_env_contract};
+
+    #[test]
+    fn contract() {
+        check_env_contract(Box::new(InvadersLite::new()), 50, 3);
+        check_determinism(|| Box::new(InvadersLite::new()), 51);
+    }
+
+    #[test]
+    fn shooting_under_block_scores() {
+        let run = |smart: bool, seed: u64| {
+            let mut env = InvadersLite::new();
+            let mut rng = Pcg32::new(seed, 2);
+            let mut obs = [0.0f32; 10];
+            let mut total = 0.0;
+            for _ in 0..3 {
+                env.reset(&mut rng, &mut obs);
+                loop {
+                    let a = if smart {
+                        let center = obs[1] + 0.24; // block center-ish
+                        let bomb_near = obs[6] < 0.4 && (obs[5] - obs[0]).abs() < 0.06;
+                        if bomb_near {
+                            if obs[5] > obs[0] { 1 } else { 2 }
+                        } else if (obs[0] - center).abs() < 0.1 && obs[7] < 0.5 {
+                            3
+                        } else if obs[0] < center {
+                            2
+                        } else {
+                            1
+                        }
+                    } else {
+                        rng.below_usize(4)
+                    };
+                    let s = env.step(&Action::Discrete(a), &mut rng, &mut obs);
+                    total += s.reward;
+                    if s.done {
+                        break;
+                    }
+                }
+            }
+            total / 3.0
+        };
+        let smart = run(true, 4);
+        let random = run(false, 4);
+        assert!(smart > random, "aimed {smart} vs random {random}");
+        assert!(smart > 3.0, "aimed policy should kill aliens: {smart}");
+    }
+}

@@ -1,0 +1,23 @@
+//! Environment substrate: pure-Rust simulators for every task QuaRL
+//! evaluates (paper environments or documented proxies — DESIGN.md §2).
+
+pub mod acrobot;
+pub mod api;
+pub mod breakout_lite;
+pub mod cartpole;
+pub mod catcher;
+pub mod diver_lite;
+pub mod grid_chase;
+pub mod invaders_lite;
+pub mod locomotion;
+pub mod mountain_car;
+pub mod nav_lite;
+pub mod pendulum;
+pub mod pong_lite;
+pub mod pyramid_hop;
+pub mod registry;
+pub mod vec_env;
+
+pub use api::{Action, ActionSpace, Env, Step};
+pub use registry::{make_env, paper_name, ENV_IDS};
+pub use vec_env::{EpisodeStat, VecEnv};

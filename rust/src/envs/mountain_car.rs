@@ -1,0 +1,197 @@
+//! MountainCar (discrete) and MountainCarContinuous: equation-level ports
+//! of the Gym classic-control dynamics (Moore 1990).
+//!
+//! Discrete: obs [position, velocity], 3 actions (left/idle/right),
+//! reward -1 per step until the flag (position >= 0.5), 200-step limit.
+//!
+//! Continuous: 1-d force in [-1, 1]; reward 100 on goal minus action
+//! energy 0.1*a^2 per step; 999-step limit. This is the DDPG cell of
+//! paper Table 2 (fp32 reward ~92).
+
+use crate::envs::api::{clamp, Action, ActionSpace, Env, Step};
+use crate::rng::Pcg32;
+
+#[derive(Debug, Default)]
+pub struct MountainCar {
+    pos: f32,
+    vel: f32,
+    steps: usize,
+}
+
+impl MountainCar {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+impl Env for MountainCar {
+    fn id(&self) -> &'static str {
+        "mountain_car"
+    }
+
+    fn obs_dim(&self) -> usize {
+        2
+    }
+
+    fn action_space(&self) -> ActionSpace {
+        ActionSpace::Discrete(3)
+    }
+
+    fn max_steps(&self) -> usize {
+        200
+    }
+
+    fn reset(&mut self, rng: &mut Pcg32, obs: &mut [f32]) {
+        self.pos = rng.uniform_range(-0.6, -0.4);
+        self.vel = 0.0;
+        self.steps = 0;
+        obs[0] = self.pos;
+        obs[1] = self.vel;
+    }
+
+    fn step(&mut self, action: &Action, _rng: &mut Pcg32, obs: &mut [f32]) -> Step {
+        let a = action.discrete() as f32 - 1.0; // -1, 0, +1
+        self.vel += a * 0.001 + (3.0 * self.pos).cos() * -0.0025;
+        self.vel = clamp(self.vel, -0.07, 0.07);
+        self.pos += self.vel;
+        self.pos = clamp(self.pos, -1.2, 0.6);
+        if self.pos <= -1.2 {
+            self.vel = 0.0;
+        }
+        self.steps += 1;
+        let goal = self.pos >= 0.5;
+        obs[0] = self.pos;
+        obs[1] = self.vel;
+        Step { reward: -1.0, done: goal || self.steps >= self.max_steps() }
+    }
+}
+
+#[derive(Debug, Default)]
+pub struct MountainCarContinuous {
+    pos: f32,
+    vel: f32,
+    steps: usize,
+}
+
+impl MountainCarContinuous {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+impl Env for MountainCarContinuous {
+    fn id(&self) -> &'static str {
+        "mc_continuous"
+    }
+
+    fn obs_dim(&self) -> usize {
+        2
+    }
+
+    fn action_space(&self) -> ActionSpace {
+        ActionSpace::Continuous(1)
+    }
+
+    fn max_steps(&self) -> usize {
+        999
+    }
+
+    fn reset(&mut self, rng: &mut Pcg32, obs: &mut [f32]) {
+        self.pos = rng.uniform_range(-0.6, -0.4);
+        self.vel = 0.0;
+        self.steps = 0;
+        obs[0] = self.pos;
+        obs[1] = self.vel;
+    }
+
+    fn step(&mut self, action: &Action, _rng: &mut Pcg32, obs: &mut [f32]) -> Step {
+        let force = clamp(action.continuous()[0], -1.0, 1.0);
+        self.vel += force * 0.0015 + (3.0 * self.pos).cos() * -0.0025;
+        self.vel = clamp(self.vel, -0.07, 0.07);
+        self.pos += self.vel;
+        self.pos = clamp(self.pos, -1.2, 0.6);
+        if self.pos <= -1.2 {
+            self.vel = 0.0;
+        }
+        self.steps += 1;
+        let goal = self.pos >= 0.45;
+        let mut reward = -0.1 * force * force;
+        if goal {
+            reward += 100.0;
+        }
+        obs[0] = self.pos;
+        obs[1] = self.vel;
+        Step { reward, done: goal || self.steps >= self.max_steps() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::envs::api::testing::{check_determinism, check_env_contract};
+
+    #[test]
+    fn contracts() {
+        check_env_contract(Box::new(MountainCar::new()), 5, 3);
+        check_env_contract(Box::new(MountainCarContinuous::new()), 6, 2);
+        check_determinism(|| Box::new(MountainCar::new()), 8);
+        check_determinism(|| Box::new(MountainCarContinuous::new()), 9);
+    }
+
+    #[test]
+    fn bang_bang_solves_discrete() {
+        // Push in the direction of motion — the classical energy-pumping
+        // solution must reach the flag before the time limit.
+        let mut env = MountainCar::new();
+        let mut rng = Pcg32::new(1, 1);
+        let mut obs = [0.0f32; 2];
+        env.reset(&mut rng, &mut obs);
+        let mut steps = 0;
+        let solved = loop {
+            let a = if obs[1] >= 0.0 { 2 } else { 0 };
+            let s = env.step(&Action::Discrete(a), &mut rng, &mut obs);
+            steps += 1;
+            if s.done {
+                break obs[0] >= 0.5;
+            }
+        };
+        assert!(solved, "energy pumping should solve MountainCar, stopped at {}", obs[0]);
+        assert!(steps < 200);
+    }
+
+    #[test]
+    fn continuous_goal_pays_100() {
+        let mut env = MountainCarContinuous::new();
+        let mut rng = Pcg32::new(2, 1);
+        let mut obs = [0.0f32; 2];
+        env.reset(&mut rng, &mut obs);
+        let mut total = 0.0;
+        loop {
+            let a = if obs[1] >= 0.0 { 1.0 } else { -1.0 };
+            let s = env.step(&Action::Continuous(vec![a]), &mut rng, &mut obs);
+            total += s.reward;
+            if s.done {
+                break;
+            }
+        }
+        assert!(total > 80.0, "bang-bang return {total}");
+    }
+
+    #[test]
+    fn idle_never_reaches_goal() {
+        let mut env = MountainCar::new();
+        let mut rng = Pcg32::new(3, 1);
+        let mut obs = [0.0f32; 2];
+        env.reset(&mut rng, &mut obs);
+        let mut steps = 0;
+        loop {
+            let s = env.step(&Action::Discrete(1), &mut rng, &mut obs);
+            steps += 1;
+            if s.done {
+                break;
+            }
+        }
+        assert_eq!(steps, 200, "idling must time out");
+        assert!(obs[0] < 0.5);
+    }
+}

@@ -1,0 +1,290 @@
+//! NavLite — Air Learning point-to-point aerial navigation proxy
+//! (paper §5 / Appendix D; DESIGN.md §2).
+//!
+//! A 25m x 25m arena with 1-5 random circular obstacles. The agent flies
+//! from a random start to a random goal with the paper's exact reward:
+//!
+//! ```text
+//! r = 1000*alpha - 100*beta - D_g - D_c*delta - 1
+//! D_c = (V_max - V_now) * t_max
+//! ```
+//!
+//! alpha = reached goal, beta = collision or step-budget exhaustion,
+//! D_g = distance to goal, and the D_c term penalizes flying slower than
+//! V_max (2.5 m/s) scaled by delta. 25 discrete actions = 5 speeds x 5
+//! yaw rates, the paper's discretized velocity/yaw action space.
+//! Curriculum: `difficulty` scales the start->goal distance.
+//!
+//! obs = [dx, dy, dist, vx, vy, cos h, sin h, ray0..ray4] (5 obstacle rays)
+
+use crate::envs::api::{clamp, Action, ActionSpace, Env, Step};
+use crate::rng::Pcg32;
+
+const ARENA: f32 = 25.0;
+const V_MAX: f32 = 2.5;
+const T_MAX: f32 = 0.4; // actuation duration per decision (s)
+const DELTA: f32 = 0.1; // D_c weight
+const GOAL_RADIUS: f32 = 1.0;
+const AGENT_RADIUS: f32 = 0.4;
+const MAX_STEPS: usize = 750; // paper appendix: 750-step cap
+const N_RAYS: usize = 5;
+const RAY_FOV: f32 = 1.2; // radians either side of heading
+const RAY_RANGE: f32 = 8.0;
+
+#[derive(Debug, Clone, Copy)]
+struct Obstacle {
+    x: f32,
+    y: f32,
+    r: f32,
+}
+
+#[derive(Debug)]
+pub struct NavLite {
+    pos: [f32; 2],
+    heading: f32,
+    speed: f32,
+    goal: [f32; 2],
+    obstacles: Vec<Obstacle>,
+    difficulty: f32,
+    steps: usize,
+}
+
+impl Default for NavLite {
+    fn default() -> Self {
+        Self::new(1.0)
+    }
+}
+
+impl NavLite {
+    /// `difficulty` in (0, 1]: scales the sampled start->goal distance
+    /// (the curriculum knob of Appendix D).
+    pub fn new(difficulty: f32) -> Self {
+        NavLite {
+            pos: [0.0; 2],
+            heading: 0.0,
+            speed: 0.0,
+            goal: [0.0; 2],
+            obstacles: Vec::new(),
+            difficulty: clamp(difficulty, 0.05, 1.0),
+            steps: 0,
+        }
+    }
+
+    pub fn set_difficulty(&mut self, d: f32) {
+        self.difficulty = clamp(d, 0.05, 1.0);
+    }
+
+    fn dist_to_goal(&self) -> f32 {
+        ((self.goal[0] - self.pos[0]).powi(2) + (self.goal[1] - self.pos[1]).powi(2)).sqrt()
+    }
+
+    fn collides(&self, p: [f32; 2]) -> bool {
+        if p[0] < 0.0 || p[0] > ARENA || p[1] < 0.0 || p[1] > ARENA {
+            return true;
+        }
+        self.obstacles.iter().any(|o| {
+            let d2 = (p[0] - o.x).powi(2) + (p[1] - o.y).powi(2);
+            d2 < (o.r + AGENT_RADIUS).powi(2)
+        })
+    }
+
+    /// Normalized ray distance to the nearest obstacle/wall along angle.
+    fn ray(&self, angle: f32) -> f32 {
+        let (dx, dy) = (angle.cos(), angle.sin());
+        let mut t = 0.0;
+        while t < RAY_RANGE {
+            t += 0.25;
+            let p = [self.pos[0] + t * dx, self.pos[1] + t * dy];
+            if self.collides(p) {
+                break;
+            }
+        }
+        t.min(RAY_RANGE) / RAY_RANGE
+    }
+
+    fn write_obs(&self, obs: &mut [f32]) {
+        obs[0] = (self.goal[0] - self.pos[0]) / ARENA;
+        obs[1] = (self.goal[1] - self.pos[1]) / ARENA;
+        obs[2] = self.dist_to_goal() / ARENA;
+        obs[3] = self.speed * self.heading.cos() / V_MAX;
+        obs[4] = self.speed * self.heading.sin() / V_MAX;
+        obs[5] = self.heading.cos();
+        obs[6] = self.heading.sin();
+        for i in 0..N_RAYS {
+            let frac = i as f32 / (N_RAYS - 1) as f32;
+            let angle = self.heading - RAY_FOV + 2.0 * RAY_FOV * frac;
+            obs[7 + i] = self.ray(angle);
+        }
+    }
+}
+
+impl Env for NavLite {
+    fn id(&self) -> &'static str {
+        "nav_lite"
+    }
+
+    fn obs_dim(&self) -> usize {
+        7 + N_RAYS
+    }
+
+    fn action_space(&self) -> ActionSpace {
+        ActionSpace::Discrete(25)
+    }
+
+    fn max_steps(&self) -> usize {
+        MAX_STEPS
+    }
+
+    fn reset(&mut self, rng: &mut Pcg32, obs: &mut [f32]) {
+        self.pos = [
+            rng.uniform_range(2.0, ARENA - 2.0),
+            rng.uniform_range(2.0, ARENA - 2.0),
+        ];
+        self.heading = rng.uniform_range(-std::f32::consts::PI, std::f32::consts::PI);
+        self.speed = 0.0;
+        // Goal at a curriculum-scaled distance.
+        let d = self.difficulty * rng.uniform_range(6.0, 18.0);
+        loop {
+            let a = rng.uniform_range(-std::f32::consts::PI, std::f32::consts::PI);
+            let g = [self.pos[0] + d * a.cos(), self.pos[1] + d * a.sin()];
+            if g[0] > 1.0 && g[0] < ARENA - 1.0 && g[1] > 1.0 && g[1] < ARENA - 1.0 {
+                self.goal = g;
+                break;
+            }
+        }
+        // 1-5 obstacles, not on the start or goal (Appendix D).
+        let n = 1 + rng.below_usize(5);
+        self.obstacles.clear();
+        while self.obstacles.len() < n {
+            let o = Obstacle {
+                x: rng.uniform_range(1.0, ARENA - 1.0),
+                y: rng.uniform_range(1.0, ARENA - 1.0),
+                r: rng.uniform_range(0.6, 1.6),
+            };
+            let clear = |p: [f32; 2]| (p[0] - o.x).powi(2) + (p[1] - o.y).powi(2) > (o.r + 2.0).powi(2);
+            if clear(self.pos) && clear(self.goal) {
+                self.obstacles.push(o);
+            }
+        }
+        self.steps = 0;
+        self.write_obs(obs);
+    }
+
+    fn step(&mut self, action: &Action, _rng: &mut Pcg32, obs: &mut [f32]) -> Step {
+        // 25 actions = speed level (0..5) x yaw rate (0..5).
+        let a = action.discrete();
+        let speed_lvl = (a / 5) as f32 / 4.0; // 0, .25, .5, .75, 1
+        let yaw_lvl = (a % 5) as f32 - 2.0; // -2..2
+        self.speed = speed_lvl * V_MAX;
+        self.heading += yaw_lvl * 0.35;
+
+        let new_pos = [
+            self.pos[0] + self.speed * self.heading.cos() * T_MAX,
+            self.pos[1] + self.speed * self.heading.sin() * T_MAX,
+        ];
+
+        self.steps += 1;
+        let collided = self.collides(new_pos);
+        if !collided {
+            self.pos = new_pos;
+        }
+        let reached = self.dist_to_goal() < GOAL_RADIUS;
+        let out_of_time = self.steps >= MAX_STEPS;
+        let alpha = reached as u8 as f32;
+        let beta = (collided || out_of_time) as u8 as f32;
+        let d_g = self.dist_to_goal();
+        let d_c = (V_MAX - self.speed) * T_MAX;
+        // Paper Appendix D, eq. (1).
+        let reward = 1000.0 * alpha - 100.0 * beta - d_g - d_c * DELTA - 1.0;
+        let done = reached || collided || out_of_time;
+        self.write_obs(obs);
+        Step { reward, done }
+    }
+}
+
+/// Success-rate evaluation helper used by the deployment case study
+/// (Fig. 6 reports success %, not raw reward).
+pub fn is_success(step: &Step) -> bool {
+    step.reward > 500.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::envs::api::testing::{check_determinism, check_env_contract};
+
+    #[test]
+    fn contract() {
+        check_env_contract(Box::new(NavLite::new(0.5)), 100, 3);
+        check_determinism(|| Box::new(NavLite::new(0.5)), 101);
+    }
+
+    #[test]
+    fn goal_seeker_succeeds_often() {
+        // Turn toward the goal, full speed, brake turn rate near rays.
+        let mut env = NavLite::new(0.4);
+        let mut rng = Pcg32::new(3, 2);
+        let mut obs = vec![0.0f32; env.obs_dim()];
+        let mut successes = 0;
+        let trials = 20;
+        for _ in 0..trials {
+            env.reset(&mut rng, &mut obs);
+            loop {
+                let goal_angle = obs[1].atan2(obs[0]);
+                let heading = obs[6].atan2(obs[5]);
+                let mut err = goal_angle - heading;
+                while err > std::f32::consts::PI {
+                    err -= std::f32::consts::TAU;
+                }
+                while err < -std::f32::consts::PI {
+                    err += std::f32::consts::TAU;
+                }
+                let yaw = clamp((err / 0.35).round(), -2.0, 2.0) as i32 + 2;
+                let blocked = obs[9] < 0.25; // center ray short => slow down
+                let speed = if blocked { 1 } else { 4 };
+                let a = (speed * 5 + yaw as usize).min(24);
+                let s = env.step(&Action::Discrete(a), &mut rng, &mut obs);
+                if s.done {
+                    if is_success(&s) {
+                        successes += 1;
+                    }
+                    break;
+                }
+            }
+        }
+        assert!(
+            successes >= trials / 2,
+            "goal-seeking policy should mostly succeed: {successes}/{trials}"
+        );
+    }
+
+    #[test]
+    fn reward_structure_matches_paper() {
+        let mut env = NavLite::new(0.3);
+        let mut rng = Pcg32::new(4, 2);
+        let mut obs = vec![0.0f32; env.obs_dim()];
+        env.reset(&mut rng, &mut obs);
+        // stationary action (speed 0, yaw 0 => action index 2)
+        let s = env.step(&Action::Discrete(2), &mut rng, &mut obs);
+        // r = -D_g - D_c*delta - 1, with D_c = V_max * t_max
+        let d_g = env.dist_to_goal();
+        let expected = -d_g - (V_MAX * T_MAX) * DELTA - 1.0;
+        assert!((s.reward - expected).abs() < 1e-4, "{} vs {expected}", s.reward);
+    }
+
+    #[test]
+    fn difficulty_scales_goal_distance() {
+        let mean_d = |diff: f32| {
+            let mut env = NavLite::new(diff);
+            let mut rng = Pcg32::new(5, 2);
+            let mut obs = vec![0.0f32; env.obs_dim()];
+            let mut total = 0.0;
+            for _ in 0..50 {
+                env.reset(&mut rng, &mut obs);
+                total += env.dist_to_goal();
+            }
+            total / 50.0
+        };
+        assert!(mean_d(1.0) > mean_d(0.2) * 2.0);
+    }
+}

@@ -1,0 +1,128 @@
+//! Pendulum-v1: equation-level port of the Gym swing-up dynamics.
+//!
+//! obs = [cos theta, sin theta, theta_dot]; continuous torque in [-2, 2]
+//! (agent emits [-1, 1], scaled here); reward -(theta^2 + 0.1 theta_dot^2
+//! + 0.001 u^2); 200-step episodes (never terminal early).
+
+use crate::envs::api::{clamp, Action, ActionSpace, Env, Step};
+use crate::rng::Pcg32;
+
+const MAX_SPEED: f32 = 8.0;
+const MAX_TORQUE: f32 = 2.0;
+const DT: f32 = 0.05;
+const G: f32 = 10.0;
+const M: f32 = 1.0;
+const L: f32 = 1.0;
+
+#[derive(Debug, Default)]
+pub struct Pendulum {
+    theta: f32,
+    theta_dot: f32,
+    steps: usize,
+}
+
+impl Pendulum {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn write_obs(&self, obs: &mut [f32]) {
+        obs[0] = self.theta.cos();
+        obs[1] = self.theta.sin();
+        obs[2] = self.theta_dot;
+    }
+}
+
+fn angle_normalize(x: f32) -> f32 {
+    let two_pi = std::f32::consts::TAU;
+    let mut y = (x + std::f32::consts::PI) % two_pi;
+    if y < 0.0 {
+        y += two_pi;
+    }
+    y - std::f32::consts::PI
+}
+
+impl Env for Pendulum {
+    fn id(&self) -> &'static str {
+        "pendulum"
+    }
+
+    fn obs_dim(&self) -> usize {
+        3
+    }
+
+    fn action_space(&self) -> ActionSpace {
+        ActionSpace::Continuous(1)
+    }
+
+    fn max_steps(&self) -> usize {
+        200
+    }
+
+    fn reset(&mut self, rng: &mut Pcg32, obs: &mut [f32]) {
+        self.theta = rng.uniform_range(-std::f32::consts::PI, std::f32::consts::PI);
+        self.theta_dot = rng.uniform_range(-1.0, 1.0);
+        self.steps = 0;
+        self.write_obs(obs);
+    }
+
+    fn step(&mut self, action: &Action, _rng: &mut Pcg32, obs: &mut [f32]) -> Step {
+        let u = clamp(action.continuous()[0], -1.0, 1.0) * MAX_TORQUE;
+        let th = angle_normalize(self.theta);
+        let cost = th * th + 0.1 * self.theta_dot * self.theta_dot + 0.001 * u * u;
+
+        let new_dot = self.theta_dot
+            + (3.0 * G / (2.0 * L) * self.theta.sin() + 3.0 / (M * L * L) * u) * DT;
+        self.theta_dot = clamp(new_dot, -MAX_SPEED, MAX_SPEED);
+        self.theta += self.theta_dot * DT;
+        self.steps += 1;
+        self.write_obs(obs);
+        Step { reward: -cost, done: self.steps >= self.max_steps() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::envs::api::testing::{check_determinism, check_env_contract};
+
+    #[test]
+    fn contract() {
+        check_env_contract(Box::new(Pendulum::new()), 12, 3);
+        check_determinism(|| Box::new(Pendulum::new()), 13);
+    }
+
+    #[test]
+    fn reward_is_nonpositive_and_bounded() {
+        let mut env = Pendulum::new();
+        let mut rng = Pcg32::new(1, 1);
+        let mut obs = [0.0f32; 3];
+        env.reset(&mut rng, &mut obs);
+        for _ in 0..200 {
+            let s = env.step(&Action::Continuous(vec![1.0]), &mut rng, &mut obs);
+            assert!(s.reward <= 0.0);
+            // max cost: pi^2 + 0.1*64 + 0.001*4 ~= 16.28
+            assert!(s.reward >= -17.0);
+            if s.done {
+                break;
+            }
+        }
+    }
+
+    #[test]
+    fn episodes_are_exactly_200_steps() {
+        let mut env = Pendulum::new();
+        let mut rng = Pcg32::new(2, 1);
+        let mut obs = [0.0f32; 3];
+        env.reset(&mut rng, &mut obs);
+        let mut n = 0;
+        loop {
+            let s = env.step(&Action::Continuous(vec![0.0]), &mut rng, &mut obs);
+            n += 1;
+            if s.done {
+                break;
+            }
+        }
+        assert_eq!(n, 200);
+    }
+}

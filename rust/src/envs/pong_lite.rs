@@ -1,0 +1,204 @@
+//! PongLite — Atari Pong proxy (DESIGN.md §2).
+//!
+//! Two paddles on a unit court. The agent controls the right paddle
+//! against a built-in tracking opponent with limited paddle speed and a
+//! reaction dead-zone. First to 5 points; reward +1 / -1 per point like
+//! ALE Pong (so returns live in [-5, 5], the shape of Atari Pong's
+//! [-21, 21]).
+//!
+//! obs = [ball_x, ball_y, ball_vx, ball_vy, my_y, opp_y, my_vy, opp_vy]
+//! actions: 0 = stay, 1 = up, 2 = down.
+
+use crate::envs::api::{clamp, Action, ActionSpace, Env, Step};
+use crate::rng::Pcg32;
+
+const PADDLE_H: f32 = 0.2;
+const PADDLE_SPEED: f32 = 0.04;
+const OPP_SPEED: f32 = 0.024; // slower than the agent: beatable but not free
+const BALL_SPEED: f32 = 0.03;
+const WIN_SCORE: i32 = 5;
+
+#[derive(Debug, Default)]
+pub struct PongLite {
+    ball: [f32; 2],
+    vel: [f32; 2],
+    my_y: f32,
+    opp_y: f32,
+    my_vy: f32,
+    opp_vy: f32,
+    my_score: i32,
+    opp_score: i32,
+    steps: usize,
+}
+
+impl PongLite {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn serve(&mut self, rng: &mut Pcg32, toward_me: bool) {
+        self.ball = [0.5, 0.5];
+        let angle = rng.uniform_range(-0.6, 0.6);
+        let dir = if toward_me { 1.0 } else { -1.0 };
+        self.vel = [dir * BALL_SPEED * angle.cos(), BALL_SPEED * angle.sin()];
+    }
+
+    fn write_obs(&self, obs: &mut [f32]) {
+        obs[0] = self.ball[0];
+        obs[1] = self.ball[1];
+        obs[2] = self.vel[0] / BALL_SPEED;
+        obs[3] = self.vel[1] / BALL_SPEED;
+        obs[4] = self.my_y;
+        obs[5] = self.opp_y;
+        obs[6] = self.my_vy / PADDLE_SPEED;
+        obs[7] = self.opp_vy / PADDLE_SPEED;
+    }
+}
+
+impl Env for PongLite {
+    fn id(&self) -> &'static str {
+        "pong_lite"
+    }
+
+    fn obs_dim(&self) -> usize {
+        8
+    }
+
+    fn action_space(&self) -> ActionSpace {
+        ActionSpace::Discrete(3)
+    }
+
+    fn max_steps(&self) -> usize {
+        3000
+    }
+
+    fn reset(&mut self, rng: &mut Pcg32, obs: &mut [f32]) {
+        self.my_y = 0.5;
+        self.opp_y = 0.5;
+        self.my_vy = 0.0;
+        self.opp_vy = 0.0;
+        self.my_score = 0;
+        self.opp_score = 0;
+        self.steps = 0;
+        let toward_me = rng.chance(0.5);
+        self.serve(rng, toward_me);
+        self.write_obs(obs);
+    }
+
+    fn step(&mut self, action: &Action, rng: &mut Pcg32, obs: &mut [f32]) -> Step {
+        // Agent paddle (x = 1 side).
+        self.my_vy = match action.discrete() {
+            1 => -PADDLE_SPEED,
+            2 => PADDLE_SPEED,
+            _ => 0.0,
+        };
+        self.my_y = clamp(self.my_y + self.my_vy, PADDLE_H / 2.0, 1.0 - PADDLE_H / 2.0);
+
+        // Opponent paddle (x = 0 side): tracks the ball with a dead-zone.
+        let target = self.ball[1];
+        let diff = target - self.opp_y;
+        self.opp_vy = if diff.abs() < 0.02 { 0.0 } else { diff.signum() * OPP_SPEED };
+        self.opp_y = clamp(self.opp_y + self.opp_vy, PADDLE_H / 2.0, 1.0 - PADDLE_H / 2.0);
+
+        // Ball.
+        self.ball[0] += self.vel[0];
+        self.ball[1] += self.vel[1];
+        if self.ball[1] <= 0.0 || self.ball[1] >= 1.0 {
+            self.vel[1] = -self.vel[1];
+            self.ball[1] = clamp(self.ball[1], 0.0, 1.0);
+        }
+
+        let mut reward = 0.0;
+        // Right wall: my side.
+        if self.ball[0] >= 1.0 {
+            if (self.ball[1] - self.my_y).abs() <= PADDLE_H / 2.0 {
+                self.vel[0] = -self.vel[0].abs();
+                // English: hitting off-center changes the return angle.
+                self.vel[1] += (self.ball[1] - self.my_y) * 0.08;
+                self.vel[1] = clamp(self.vel[1], -BALL_SPEED, BALL_SPEED);
+                self.ball[0] = 1.0;
+            } else {
+                self.opp_score += 1;
+                reward = -1.0;
+                let toward_me = rng.chance(0.5);
+        self.serve(rng, toward_me);
+            }
+        } else if self.ball[0] <= 0.0 {
+            if (self.ball[1] - self.opp_y).abs() <= PADDLE_H / 2.0 {
+                self.vel[0] = self.vel[0].abs();
+                self.vel[1] += (self.ball[1] - self.opp_y) * 0.08;
+                self.vel[1] = clamp(self.vel[1], -BALL_SPEED, BALL_SPEED);
+                self.ball[0] = 0.0;
+            } else {
+                self.my_score += 1;
+                reward = 1.0;
+                let toward_me = rng.chance(0.5);
+        self.serve(rng, toward_me);
+            }
+        }
+
+        self.steps += 1;
+        let done = self.my_score >= WIN_SCORE
+            || self.opp_score >= WIN_SCORE
+            || self.steps >= self.max_steps();
+        self.write_obs(obs);
+        Step { reward, done }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::envs::api::testing::{check_determinism, check_env_contract};
+
+    #[test]
+    fn contract() {
+        check_env_contract(Box::new(PongLite::new()), 20, 2);
+        check_determinism(|| Box::new(PongLite::new()), 21);
+    }
+
+    fn run_policy(policy: fn(&[f32]) -> usize, seed: u64, episodes: usize) -> f32 {
+        let mut env = PongLite::new();
+        let mut rng = Pcg32::new(seed, 1);
+        let mut obs = [0.0f32; 8];
+        let mut total = 0.0;
+        for _ in 0..episodes {
+            env.reset(&mut rng, &mut obs);
+            loop {
+                let s = env.step(&Action::Discrete(policy(&obs)), &mut rng, &mut obs);
+                total += s.reward;
+                if s.done {
+                    break;
+                }
+            }
+        }
+        total / episodes as f32
+    }
+
+    #[test]
+    fn tracking_policy_beats_idle() {
+        // Track the ball: should win nearly every point (avg near +5).
+        let track = run_policy(
+            |o| {
+                if o[1] < o[4] - 0.02 {
+                    1
+                } else if o[1] > o[4] + 0.02 {
+                    2
+                } else {
+                    0
+                }
+            },
+            3,
+            5,
+        );
+        let idle = run_policy(|_| 0, 3, 5);
+        assert!(track > 3.0, "tracking should dominate, got {track}");
+        assert!(idle < -3.0, "idling should lose, got {idle}");
+    }
+
+    #[test]
+    fn returns_bounded_by_win_score() {
+        let r = run_policy(|_| 0, 9, 3);
+        assert!((-5.0..=5.0).contains(&r));
+    }
+}

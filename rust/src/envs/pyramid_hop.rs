@@ -1,0 +1,215 @@
+//! PyramidHop — Q*bert proxy (DESIGN.md §2).
+//!
+//! A 7-row triangular pyramid of cubes. Hopping onto a cube colors it;
+//! color every cube to clear the board (+10 and a fresh board). A
+//! pursuer descends from the top; touching it (uncolored-power) costs a
+//! life. Hopping off the pyramid edge costs a life. Mirrors Q*bert's
+//! cover-the-graph-while-dodging structure.
+//!
+//! obs = [row, col, pursuer_row, pursuer_col, colored_frac,
+//!        lives_frac, edge_dl, edge_dr, pursuer_dist]
+//! actions: 0 = hop down-left, 1 = hop down-right, 2 = hop up-left,
+//!          3 = hop up-right.
+
+use crate::envs::api::{Action, ActionSpace, Env, Step};
+use crate::rng::Pcg32;
+
+const ROWS: i32 = 7;
+
+#[derive(Debug, Default)]
+pub struct PyramidHop {
+    me: [i32; 2],      // row (0 = top), col in 0..=row
+    pursuer: [i32; 2],
+    colored: Vec<bool>,
+    colored_n: usize,
+    lives: i32,
+    boards: i32,
+    steps: usize,
+}
+
+fn cube_index(row: i32, col: i32) -> usize {
+    ((row * (row + 1)) / 2 + col) as usize
+}
+
+fn n_cubes() -> usize {
+    ((ROWS * (ROWS + 1)) / 2) as usize
+}
+
+impl PyramidHop {
+    pub fn new() -> Self {
+        Self { colored: vec![false; n_cubes()], ..Self::default() }
+    }
+
+    fn write_obs(&self, obs: &mut [f32]) {
+        let r = (ROWS - 1) as f32;
+        obs[0] = self.me[0] as f32 / r;
+        obs[1] = self.me[1] as f32 / r;
+        obs[2] = self.pursuer[0] as f32 / r;
+        obs[3] = self.pursuer[1] as f32 / r;
+        obs[4] = self.colored_n as f32 / n_cubes() as f32;
+        obs[5] = self.lives as f32 / 3.0;
+        // distance to the edges if hopping down-left / down-right kept in-board
+        obs[6] = (self.me[1]) as f32 / r; // room to the left
+        obs[7] = (self.me[0] - self.me[1]) as f32 / r; // room to the right
+        let d = (self.me[0] - self.pursuer[0]).abs() + (self.me[1] - self.pursuer[1]).abs();
+        obs[8] = d as f32 / (2.0 * r);
+    }
+
+    fn land(&mut self, reward: &mut f32) {
+        let i = cube_index(self.me[0], self.me[1]);
+        if !self.colored[i] {
+            self.colored[i] = true;
+            self.colored_n += 1;
+            *reward += 1.0;
+        }
+    }
+}
+
+impl Env for PyramidHop {
+    fn id(&self) -> &'static str {
+        "pyramid_hop"
+    }
+
+    fn obs_dim(&self) -> usize {
+        9
+    }
+
+    fn action_space(&self) -> ActionSpace {
+        ActionSpace::Discrete(4)
+    }
+
+    fn max_steps(&self) -> usize {
+        800
+    }
+
+    fn reset(&mut self, rng: &mut Pcg32, obs: &mut [f32]) {
+        self.me = [0, 0];
+        self.pursuer = [ROWS - 1, rng.below(ROWS as u32) as i32 % ROWS];
+        self.pursuer[1] = self.pursuer[1].clamp(0, self.pursuer[0]);
+        self.colored.iter_mut().for_each(|c| *c = false);
+        self.colored_n = 0;
+        self.lives = 3;
+        self.boards = 0;
+        self.steps = 0;
+        let mut r = 0.0;
+        self.land(&mut r);
+        self.write_obs(obs);
+    }
+
+    fn step(&mut self, action: &Action, rng: &mut Pcg32, obs: &mut [f32]) -> Step {
+        let mut reward = 0.0;
+        let (nr, nc) = match action.discrete() {
+            0 => (self.me[0] + 1, self.me[1]),     // down-left
+            1 => (self.me[0] + 1, self.me[1] + 1), // down-right
+            2 => (self.me[0] - 1, self.me[1] - 1), // up-left
+            _ => (self.me[0] - 1, self.me[1]),     // up-right
+        };
+
+        if nr < 0 || nr >= ROWS || nc < 0 || nc > nr {
+            // Hopped off the pyramid.
+            reward -= 5.0;
+            self.lives -= 1;
+            self.me = [0, 0];
+        } else {
+            self.me = [nr, nc];
+            self.land(&mut reward);
+        }
+
+        // Pursuer: biased random walk toward the player at half speed
+        // (escapable, like Coily's hop cadence).
+        if self.steps % 2 == 0 {
+            // skip this tick
+        } else if rng.chance(0.6) {
+            let dr = (self.me[0] - self.pursuer[0]).signum();
+            let target_c = if dr >= 0 { self.me[1] } else { self.pursuer[1] };
+            let dc = (target_c - self.pursuer[1]).signum();
+            self.pursuer[0] = (self.pursuer[0] + if dr != 0 { dr } else { 0 }).clamp(0, ROWS - 1);
+            self.pursuer[1] = (self.pursuer[1] + dc).clamp(0, self.pursuer[0]);
+        } else {
+            let d = if rng.chance(0.5) { 1 } else { -1 };
+            self.pursuer[1] = (self.pursuer[1] + d).clamp(0, self.pursuer[0]);
+        }
+
+        if self.pursuer == self.me {
+            reward -= 5.0;
+            self.lives -= 1;
+            self.me = [0, 0];
+            self.pursuer = [ROWS - 1, 0];
+        }
+
+        if self.colored_n == n_cubes() {
+            reward += 10.0;
+            self.boards += 1;
+            self.colored.iter_mut().for_each(|c| *c = false);
+            self.colored_n = 0;
+            self.me = [0, 0];
+            let mut r = 0.0;
+            self.land(&mut r);
+        }
+
+        self.steps += 1;
+        let done = self.lives <= 0 || self.steps >= self.max_steps() || self.boards >= 2;
+        self.write_obs(obs);
+        Step { reward, done }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::envs::api::testing::{check_determinism, check_env_contract};
+
+    #[test]
+    fn contract() {
+        check_env_contract(Box::new(PyramidHop::new()), 70, 3);
+        check_determinism(|| Box::new(PyramidHop::new()), 71);
+    }
+
+    #[test]
+    fn greedy_uncolored_policy_colors_cubes() {
+        // Prefer in-board hops that land on uncolored cubes; never hop
+        // off the edge. Should color a good fraction of the pyramid.
+        let mut env = PyramidHop::new();
+        let mut rng = Pcg32::new(3, 2);
+        let mut obs = [0.0f32; 9];
+        let mut total = 0.0;
+        for _ in 0..3 {
+            env.reset(&mut rng, &mut obs);
+            loop {
+                let (r, c) = (env.me[0], env.me[1]);
+                let dests = [(r + 1, c), (r + 1, c + 1), (r - 1, c - 1), (r - 1, c)];
+                let in_board = |(nr, nc): (i32, i32)| nr >= 0 && nr < ROWS && nc >= 0 && nc <= nr;
+                let mut a = 0;
+                let mut best = -1;
+                for (i, &d) in dests.iter().enumerate() {
+                    if !in_board(d) {
+                        continue;
+                    }
+                    let score = if !env.colored[cube_index(d.0, d.1)] { 2 } else { 1 };
+                    if score > best {
+                        best = score;
+                        a = i;
+                    }
+                }
+                let s = env.step(&Action::Discrete(a), &mut rng, &mut obs);
+                total += s.reward;
+                if s.done {
+                    break;
+                }
+            }
+        }
+        assert!(total / 3.0 > 5.0, "greedy sweeper should color cubes: {}", total / 3.0);
+    }
+
+    #[test]
+    fn hopping_off_edge_costs_life() {
+        let mut env = PyramidHop::new();
+        let mut rng = Pcg32::new(4, 2);
+        let mut obs = [0.0f32; 9];
+        env.reset(&mut rng, &mut obs);
+        // from the apex, hopping up-left leaves the board
+        let s = env.step(&Action::Discrete(2), &mut rng, &mut obs);
+        assert!(s.reward <= -5.0);
+        assert_eq!(env.lives, 2);
+    }
+}

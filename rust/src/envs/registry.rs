@@ -1,0 +1,134 @@
+//! Environment registry: id -> simulator, mirroring the python-side
+//! `compile/registry.py` shape table (the pytest suite cross-checks the
+//! two via the manifest's obs/act dims).
+
+use crate::envs::acrobot::Acrobot;
+use crate::envs::api::Env;
+use crate::envs::breakout_lite::BreakoutLite;
+use crate::envs::cartpole::CartPole;
+use crate::envs::catcher::Catcher;
+use crate::envs::diver_lite::DiverLite;
+use crate::envs::grid_chase::GridChase;
+use crate::envs::invaders_lite::InvadersLite;
+use crate::envs::locomotion::{LocoConfig, Locomotion};
+use crate::envs::mountain_car::{MountainCar, MountainCarContinuous};
+use crate::envs::nav_lite::NavLite;
+use crate::envs::pendulum::Pendulum;
+use crate::envs::pong_lite::PongLite;
+use crate::envs::pyramid_hop::PyramidHop;
+use crate::error::{Error, Result};
+
+/// All registered environment ids (stable order for harness sweeps).
+pub const ENV_IDS: &[&str] = &[
+    "cartpole",
+    "mountain_car",
+    "acrobot",
+    "pendulum",
+    "mc_continuous",
+    "pong_lite",
+    "breakout_lite",
+    "catcher",
+    "invaders_lite",
+    "grid_chase",
+    "pyramid_hop",
+    "diver_lite",
+    "cheetah_lite",
+    "walker_lite",
+    "biped_lite",
+    "nav_lite",
+];
+
+/// Instantiate an environment by id.
+pub fn make_env(id: &str) -> Result<Box<dyn Env>> {
+    let env: Box<dyn Env> = match id {
+        "cartpole" => Box::new(CartPole::new()),
+        "mountain_car" => Box::new(MountainCar::new()),
+        "mc_continuous" => Box::new(MountainCarContinuous::new()),
+        "acrobot" => Box::new(Acrobot::new()),
+        "pendulum" => Box::new(Pendulum::new()),
+        "pong_lite" => Box::new(PongLite::new()),
+        "breakout_lite" => Box::new(BreakoutLite::new()),
+        "catcher" => Box::new(Catcher::new()),
+        "invaders_lite" => Box::new(InvadersLite::new()),
+        "grid_chase" => Box::new(GridChase::new()),
+        "pyramid_hop" => Box::new(PyramidHop::new()),
+        "diver_lite" => Box::new(DiverLite::new()),
+        "cheetah_lite" => Box::new(Locomotion::new(LocoConfig::cheetah())),
+        "walker_lite" => Box::new(Locomotion::new(LocoConfig::walker())),
+        "biped_lite" => Box::new(Locomotion::new(LocoConfig::biped())),
+        "nav_lite" => Box::new(NavLite::new(1.0)),
+        _ => return Err(Error::Env(format!("unknown env id '{id}'"))),
+    };
+    Ok(env)
+}
+
+/// The paper environment each proxy substitutes for (Table 1 labels).
+pub fn paper_name(id: &str) -> &'static str {
+    match id {
+        "cartpole" => "CartPole",
+        "mountain_car" => "MountainCar",
+        "mc_continuous" => "MountainCarContinuous",
+        "acrobot" => "Acrobot (extra)",
+        "pendulum" => "Pendulum (extra)",
+        "pong_lite" => "Pong",
+        "breakout_lite" => "Breakout",
+        "catcher" => "BeamRider",
+        "invaders_lite" => "SpaceInvaders",
+        "grid_chase" => "MsPacman",
+        "pyramid_hop" => "Qbert",
+        "diver_lite" => "Seaquest",
+        "cheetah_lite" => "HalfCheetah",
+        "walker_lite" => "Walker2D",
+        "biped_lite" => "BipedalWalker",
+        "nav_lite" => "AirLearning-Nav",
+        _ => "?",
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_ids_construct() {
+        for id in ENV_IDS {
+            let env = make_env(id).unwrap();
+            assert_eq!(&env.id(), id);
+            assert!(env.obs_dim() > 0);
+            assert!(env.max_steps() > 0);
+        }
+    }
+
+    #[test]
+    fn unknown_id_errors() {
+        assert!(make_env("atari_5000").is_err());
+    }
+
+    #[test]
+    fn shapes_match_python_registry() {
+        // Mirror of compile/registry.py DISCRETE_ENVS / CONTINUOUS_ENVS.
+        let expect: &[(&str, usize, usize)] = &[
+            ("cartpole", 4, 2),
+            ("pong_lite", 8, 3),
+            ("breakout_lite", 8, 3),
+            ("catcher", 6, 3),
+            ("invaders_lite", 10, 4),
+            ("grid_chase", 12, 5),
+            ("pyramid_hop", 9, 4),
+            ("diver_lite", 10, 5),
+            ("acrobot", 6, 3),
+            ("mountain_car", 2, 3),
+            ("mc_continuous", 2, 1),
+            ("pendulum", 3, 1),
+            ("cheetah_lite", 12, 4),
+            ("walker_lite", 12, 4),
+            ("biped_lite", 14, 4),
+            ("nav_lite", 12, 25),
+        ];
+        for (id, obs, act) in expect {
+            let env = make_env(id).unwrap();
+            assert_eq!(env.obs_dim(), *obs, "{id} obs");
+            assert_eq!(env.action_space().dim(), *act, "{id} act");
+        }
+    }
+}

@@ -1,0 +1,93 @@
+//! Crate-wide error type.
+//!
+//! A single enum keeps error plumbing cheap in the hot loops (no trait
+//! objects on the happy path) while still capturing enough context to
+//! debug a failed experiment run.
+
+use std::fmt;
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// All error conditions surfaced by the QuaRL coordinator.
+#[derive(Debug)]
+pub enum Error {
+    /// I/O error with the path that produced it.
+    Io { path: String, source: std::io::Error },
+    /// The XLA/PJRT runtime rejected an operation.
+    Xla(String),
+    /// The artifact manifest was missing, malformed, or inconsistent
+    /// with the loaded HLO programs.
+    Manifest(String),
+    /// A config file failed to parse or failed validation.
+    Config(String),
+    /// Shape/dtype mismatch between what Rust fed a program and what the
+    /// manifest declares.
+    Shape(String),
+    /// An environment was asked to do something invalid (bad action
+    /// dimension, step after terminal without reset, unknown env id).
+    Env(String),
+    /// A quantization request was invalid (bitwidth out of range,
+    /// empty tensor, axis out of bounds).
+    Quant(String),
+    /// Experiment-harness level failure (unknown experiment id, missing
+    /// trained policy checkpoint, ...).
+    Experiment(String),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Io { path, source } => write!(f, "io error on {path}: {source}"),
+            Error::Xla(m) => write!(f, "xla runtime: {m}"),
+            Error::Manifest(m) => write!(f, "artifact manifest: {m}"),
+            Error::Config(m) => write!(f, "config: {m}"),
+            Error::Shape(m) => write!(f, "shape mismatch: {m}"),
+            Error::Env(m) => write!(f, "environment: {m}"),
+            Error::Quant(m) => write!(f, "quantization: {m}"),
+            Error::Experiment(m) => write!(f, "experiment: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io { source, .. } => Some(source),
+            _ => None,
+        }
+    }
+}
+
+impl Error {
+    /// Attach a path to an `std::io::Error`.
+    pub fn io(path: impl Into<String>, source: std::io::Error) -> Self {
+        Error::Io { path: path.into(), source }
+    }
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_includes_context() {
+        let e = Error::io("/tmp/x", std::io::Error::new(std::io::ErrorKind::NotFound, "gone"));
+        let s = e.to_string();
+        assert!(s.contains("/tmp/x"), "{s}");
+        assert!(s.contains("gone"), "{s}");
+    }
+
+    #[test]
+    fn variants_display_prefixes() {
+        assert!(Error::Quant("bad".into()).to_string().starts_with("quantization"));
+        assert!(Error::Env("bad".into()).to_string().starts_with("environment"));
+        assert!(Error::Shape("bad".into()).to_string().starts_with("shape"));
+    }
+}

@@ -1,0 +1,184 @@
+//! fp32 MLP inference engine — the deployment baseline of the paper's
+//! Fig-6 case study (TFLite fp32 on the RasPi-3b, here a cache-blocked
+//! native implementation so the int8 comparison is against a fair,
+//! optimized baseline rather than a strawman).
+
+use crate::error::{Error, Result};
+use crate::runtime::ParamSet;
+
+/// A dense layer: y = relu?(W^T x + b) with W stored (in_dim, out_dim)
+/// row-major exactly as the training stack lays it out.
+#[derive(Debug, Clone)]
+pub struct LayerF32 {
+    pub w: Vec<f32>,
+    pub b: Vec<f32>,
+    pub in_dim: usize,
+    pub out_dim: usize,
+    pub relu: bool,
+}
+
+/// fp32 inference engine over a stack of dense layers.
+#[derive(Debug, Clone)]
+pub struct EngineF32 {
+    pub layers: Vec<LayerF32>,
+    scratch: Vec<f32>,
+    scratch2: Vec<f32>,
+}
+
+impl EngineF32 {
+    /// Build from a trained parameter set (alternating W/b tensors).
+    pub fn from_params(params: &ParamSet) -> Result<EngineF32> {
+        if params.tensors.len() % 2 != 0 {
+            return Err(Error::Quant("param set must alternate W/b".into()));
+        }
+        let n_layers = params.tensors.len() / 2;
+        let mut layers = Vec::with_capacity(n_layers);
+        let mut max_dim = 0;
+        for i in 0..n_layers {
+            let w = &params.tensors[2 * i];
+            let b = &params.tensors[2 * i + 1];
+            if w.rank() != 2 || b.rank() != 1 || w.shape()[1] != b.shape()[0] {
+                return Err(Error::Quant(format!(
+                    "layer {i}: bad shapes {:?} {:?}",
+                    w.shape(),
+                    b.shape()
+                )));
+            }
+            max_dim = max_dim.max(w.shape()[0]).max(w.shape()[1]);
+            layers.push(LayerF32 {
+                w: w.data().to_vec(),
+                b: b.data().to_vec(),
+                in_dim: w.shape()[0],
+                out_dim: w.shape()[1],
+                relu: i + 1 < n_layers,
+            });
+        }
+        Ok(EngineF32 {
+            layers,
+            scratch: vec![0.0; max_dim],
+            scratch2: vec![0.0; max_dim],
+        })
+    }
+
+    /// Total weight bytes (the Fig-6 memory column).
+    pub fn memory_bytes(&self) -> usize {
+        self.layers
+            .iter()
+            .map(|l| (l.w.len() + l.b.len()) * std::mem::size_of::<f32>())
+            .sum()
+    }
+
+    /// Single-observation forward pass into `out`.
+    pub fn forward(&mut self, x: &[f32], out: &mut [f32]) {
+        debug_assert_eq!(x.len(), self.layers[0].in_dim);
+        self.scratch[..x.len()].copy_from_slice(x);
+        let mut cur_len = x.len();
+        for (li, layer) in self.layers.iter().enumerate() {
+            debug_assert_eq!(cur_len, layer.in_dim);
+            let dst: &mut [f32] = if li + 1 == self.layers.len() {
+                out
+            } else {
+                &mut self.scratch2[..layer.out_dim]
+            };
+            // y = b; y += x_i * W[i, :]  (row-major W: unit-stride inner loop)
+            dst[..layer.out_dim].copy_from_slice(&layer.b);
+            for i in 0..layer.in_dim {
+                let xi = self.scratch[i];
+                if xi == 0.0 {
+                    continue; // post-relu sparsity is substantial
+                }
+                let row = &layer.w[i * layer.out_dim..(i + 1) * layer.out_dim];
+                for (d, &wv) in dst[..layer.out_dim].iter_mut().zip(row) {
+                    *d += xi * wv;
+                }
+            }
+            if layer.relu {
+                for d in dst[..layer.out_dim].iter_mut() {
+                    if *d < 0.0 {
+                        *d = 0.0;
+                    }
+                }
+            }
+            if li + 1 != self.layers.len() {
+                self.scratch[..layer.out_dim].copy_from_slice(&dst[..layer.out_dim]);
+                cur_len = layer.out_dim;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod test_fixtures {
+    //! Shared fixtures for the inference-engine tests.
+    use crate::rng::Pcg32;
+    use crate::runtime::manifest::TensorSpec;
+    use crate::runtime::ParamSet;
+
+    pub(crate) fn mlp_params(dims: &[usize], seed: u64) -> ParamSet {
+        let mut specs = Vec::new();
+        for i in 0..dims.len() - 1 {
+            specs.push(TensorSpec { name: format!("q.w{i}"), shape: vec![dims[i], dims[i + 1]] });
+            specs.push(TensorSpec { name: format!("q.b{i}"), shape: vec![dims[i + 1]] });
+        }
+        let mut rng = Pcg32::new(seed, 1);
+        ParamSet::init(&specs, &mut rng)
+    }
+
+    /// Naive reference forward for correctness checks.
+    pub(crate) fn reference_forward(params: &ParamSet, x: &[f32]) -> Vec<f32> {
+        let n_layers = params.tensors.len() / 2;
+        let mut h = x.to_vec();
+        for i in 0..n_layers {
+            let w = &params.tensors[2 * i];
+            let b = &params.tensors[2 * i + 1];
+            let (din, dout) = (w.shape()[0], w.shape()[1]);
+            let mut y = b.data().to_vec();
+            for r in 0..din {
+                for c in 0..dout {
+                    y[c] += h[r] * w.data()[r * dout + c];
+                }
+            }
+            if i + 1 < n_layers {
+                for v in y.iter_mut() {
+                    *v = v.max(0.0);
+                }
+            }
+            h = y;
+        }
+        h
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::test_fixtures::{mlp_params, reference_forward};
+    use super::*;
+
+    #[test]
+    fn matches_reference() {
+        let p = mlp_params(&[12, 64, 32, 25], 3);
+        let mut eng = EngineF32::from_params(&p).unwrap();
+        let x: Vec<f32> = (0..12).map(|i| (i as f32 * 0.3).sin()).collect();
+        let mut out = vec![0.0; 25];
+        eng.forward(&x, &mut out);
+        let r = reference_forward(&p, &x);
+        for (a, b) in out.iter().zip(&r) {
+            assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn memory_accounting() {
+        let p = mlp_params(&[4, 8, 2], 1);
+        let eng = EngineF32::from_params(&p).unwrap();
+        assert_eq!(eng.memory_bytes(), (4 * 8 + 8 + 8 * 2 + 2) * 4);
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        let mut p = mlp_params(&[4, 8, 2], 1);
+        p.tensors.pop();
+        p.names.pop();
+        assert!(EngineF32::from_params(&p).is_err());
+    }
+}

@@ -1,0 +1,97 @@
+//! Memory-pressure simulator for the Fig-6 deployment study.
+//!
+//! The paper's 14-18x speedups come from *swap elimination*: Policies
+//! II/III don't fit the RasPi-3b's free RAM at fp32, so inference pages
+//! against flash swap; at int8 they fit and run from RAM. Our build
+//! machine has plenty of RAM, so we model the mechanism explicitly: a
+//! budgeted "device RAM" where every byte of weights touched beyond the
+//! budget pays a per-page swap latency (flash-read cost), calibrated to
+//! RasPi-3b class hardware.
+
+/// RasPi-3b-like memory model.
+#[derive(Debug, Clone, Copy)]
+pub struct MemModel {
+    /// Free RAM available to the process (bytes). The 3b has 1 GiB total;
+    /// the paper's fig. 6 shows ~0.85 GiB used by Policy III fp32 while
+    /// the OS + runtime leave roughly 0.4 GiB free for weights.
+    pub ram_budget: usize,
+    /// Page size (bytes).
+    pub page: usize,
+    /// Cost of one page fault serviced from flash swap (seconds). Class-10
+    /// SD sequential read ~20 MB/s => 4 KiB page ~ 200 microseconds.
+    pub swap_page_secs: f64,
+}
+
+impl MemModel {
+    pub fn raspi3b() -> MemModel {
+        MemModel { ram_budget: 400 << 20, page: 4096, swap_page_secs: 200e-6 }
+    }
+
+    /// Heavily-loaded / MCU-class budget: 8 MiB free for weights. The
+    /// paper's Policy III (vision-scale input layer) exceeded the
+    /// RasPi's free RAM at fp32; our feature-observation Policy III is
+    /// ~10 MiB, so this budget reproduces the same fits-vs-spills
+    /// crossover at our model sizes.
+    pub fn constrained() -> MemModel {
+        MemModel { ram_budget: 8 << 20, page: 4096, swap_page_secs: 200e-6 }
+    }
+
+    /// Simulated extra latency per inference for a model of `weight_bytes`
+    /// streamed once per forward pass (dense GEMV touches every weight).
+    ///
+    /// If the model fits, no penalty. If it spills, an LRU over a
+    /// sequential full-sweep access pattern evicts every page before it
+    /// is reused, so *every* resident-excess page faults each pass.
+    pub fn swap_penalty_secs(&self, weight_bytes: usize) -> f64 {
+        if weight_bytes <= self.ram_budget {
+            return 0.0;
+        }
+        let spill = weight_bytes - self.ram_budget;
+        let pages = spill.div_ceil(self.page);
+        pages as f64 * self.swap_page_secs
+    }
+
+    /// Peak memory report (the Fig-6 right-hand plot): weights + a fixed
+    /// runtime overhead.
+    pub fn peak_memory_bytes(&self, weight_bytes: usize) -> usize {
+        const RUNTIME_OVERHEAD: usize = 60 << 20; // interpreter + buffers
+        weight_bytes + RUNTIME_OVERHEAD
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fits_in_ram_no_penalty() {
+        let m = MemModel::raspi3b();
+        assert_eq!(m.swap_penalty_secs(10 << 20), 0.0);
+    }
+
+    #[test]
+    fn spill_pays_per_page() {
+        let m = MemModel::raspi3b();
+        let spill_bytes = 100 << 20; // 100 MiB over budget
+        let penalty = m.swap_penalty_secs(m.ram_budget + spill_bytes);
+        let pages = spill_bytes / 4096;
+        assert!((penalty - pages as f64 * 200e-6).abs() < 1e-9);
+        // 100 MiB spill ~ 5.1 seconds of flash reads: the cliff the paper
+        // measured (Policy III fp32 at 208 ms was partially cached; our
+        // model is the worst-case bound).
+        assert!(penalty > 1.0);
+    }
+
+    #[test]
+    fn int8_shrinks_below_budget_where_f32_spills() {
+        // Policy III: (4096x512 + 512x1024) weights. At f32 ~ 10.5 MB —
+        // both fit; the paper's policy III includes the 4096-wide input
+        // layer over a large image-like obs. Model a 30k-dim input.
+        let weights = 30_000usize * 4096 + 4096 * 512 + 512 * 1024;
+        let m = MemModel { ram_budget: 256 << 20, page: 4096, swap_page_secs: 200e-6 };
+        let f32_bytes = weights * 4;
+        let i8_bytes = weights;
+        assert!(m.swap_penalty_secs(f32_bytes) > 0.0);
+        assert_eq!(m.swap_penalty_secs(i8_bytes), 0.0);
+    }
+}

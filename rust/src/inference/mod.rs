@@ -1,0 +1,13 @@
+//! Deployment inference engines (paper §5 / Fig-6 case study).
+//!
+//! * [`engine_f32`] — optimized native fp32 MLP baseline.
+//! * [`engine_int8`] — int8 weights+activations with i32 accumulation.
+//! * [`memsim`] — RasPi-class memory-pressure model (swap cliff).
+
+pub mod engine_f32;
+pub mod engine_int8;
+pub mod memsim;
+
+pub use engine_f32::EngineF32;
+pub use engine_int8::EngineInt8;
+pub use memsim::MemModel;

@@ -1,0 +1,32 @@
+//! # QuaRL-RS
+//!
+//! A reproduction of *QuaRL: Quantization for Fast and Environmentally
+//! Sustainable Reinforcement Learning* (Krishnan et al., 2019) as a
+//! three-layer Rust + JAX + Pallas system:
+//!
+//! * Layer 1 — Pallas fake-quantization / quantized-matmul kernels
+//!   (`python/compile/kernels/`), lowered at build time.
+//! * Layer 2 — JAX policy networks and pure-functional RL train steps
+//!   (`python/compile/`), AOT-lowered to HLO text in `artifacts/`.
+//! * Layer 3 — this crate: environments, replay buffers, trainer loops,
+//!   the PTQ/QAT quantization engine, the experiment harness that
+//!   regenerates every table and figure of the paper, and a pure-Rust
+//!   int8 deployment inference engine.
+//!
+//! Python never runs at training/serving time: `make artifacts` lowers the
+//! compute graphs once, and the `quarl` binary drives them through PJRT.
+
+pub mod algos;
+pub mod bench_util;
+pub mod config;
+pub mod coordinator;
+pub mod envs;
+pub mod error;
+pub mod inference;
+pub mod quant;
+pub mod replay;
+pub mod rng;
+pub mod runtime;
+pub mod tensor;
+
+pub use error::{Error, Result};

@@ -1,0 +1,193 @@
+//! `quarl` — the QuaRL coordinator CLI.
+//!
+//! Subcommands:
+//!   train --algo dqn --env cartpole [--steps N] [--quant B --delay D]
+//!   eval  --algo dqn --env cartpole [--quant int8|fp16|intN]
+//!   exp <matrix|table2|table3|fig1|fig2|fig3|table4|fig6|fig7|all>
+//!       [--scale S] [--episodes N] [--seed S] [--jobs J] [--only SUB]
+//!   list  — show available experiments and environments
+
+use quarl::algos::{a2c, ddpg, dqn, ppo, QuantSchedule};
+use quarl::config::cli::Args;
+use quarl::coordinator::experiment::{all_experiments, run_experiment, ExpCtx};
+use quarl::coordinator::{evaluate, EvalMode};
+use quarl::envs::registry::ENV_IDS;
+use quarl::error::{Error, Result};
+use quarl::quant::PtqMethod;
+use quarl::runtime::Runtime;
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = run(&argv) {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn run(argv: &[String]) -> Result<()> {
+    let args = Args::parse(argv)?;
+    match args.positional.first().map(|s| s.as_str()) {
+        Some("train") => cmd_train(&args),
+        Some("eval") => cmd_eval(&args),
+        Some("exp") => cmd_exp(&args),
+        Some("list") => cmd_list(),
+        _ => {
+            print_usage();
+            Ok(())
+        }
+    }
+}
+
+fn print_usage() {
+    println!(
+        "quarl — QuaRL (Quantized Reinforcement Learning) reproduction\n\n\
+         usage:\n  quarl train --algo <dqn|a2c|ppo|ddpg> --env <id> [--steps N] [--quant B --delay D] [--seed S]\n  \
+         quarl eval  --algo <a> --env <id> [--quant fp16|int8|intN] [--episodes N]\n  \
+         quarl exp   <id|all> [--scale S] [--episodes N] [--jobs J] [--only SUB] [--bits 2,4,6,8]\n  \
+         quarl list\n"
+    );
+}
+
+fn runtime(args: &Args) -> Result<Runtime> {
+    Runtime::new(args.get_or("artifacts", "artifacts"))
+}
+
+fn quant_from(args: &Args) -> Result<QuantSchedule> {
+    match args.get("quant") {
+        None => Ok(QuantSchedule::off()),
+        Some(b) => {
+            let bits: u32 = b
+                .parse()
+                .map_err(|_| Error::Config(format!("--quant expects a bitwidth, got '{b}'")))?;
+            Ok(QuantSchedule::qat(bits, args.get_usize("delay", 0)?))
+        }
+    }
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let rt = runtime(args)?;
+    let algo = args
+        .get("algo")
+        .ok_or_else(|| Error::Config("train needs --algo".into()))?;
+    let env = args
+        .get("env")
+        .ok_or_else(|| Error::Config("train needs --env".into()))?;
+    let steps = args.get_usize("steps", quarl::coordinator::cache::default_steps(algo, env))?;
+    let seed = args.get_u64("seed", 0)?;
+    let quant = quant_from(args)?;
+    let out_dir = std::path::PathBuf::from(args.get_or("out", "runs/policies"));
+
+    eprintln!("training {algo}/{env} for {steps} steps (quant: {quant:?}) ...");
+    let (policy, log) = match algo {
+        "dqn" => {
+            let mut cfg = dqn::DqnConfig::new(env);
+            cfg.total_steps = steps;
+            cfg.quant = quant;
+            cfg.seed = seed;
+            cfg.log_every = (steps / 20).max(1);
+            dqn::train(&rt, &cfg)?
+        }
+        "a2c" => {
+            let mut cfg = a2c::A2cConfig::new(env);
+            cfg.total_steps = steps;
+            cfg.quant = quant;
+            cfg.seed = seed;
+            cfg.log_every = 1;
+            a2c::train(&rt, &cfg)?
+        }
+        "ppo" => {
+            let mut cfg = ppo::PpoConfig::new(env);
+            cfg.total_steps = steps;
+            cfg.quant = quant;
+            cfg.seed = seed;
+            cfg.log_every = 1;
+            ppo::train(&rt, &cfg)?
+        }
+        "ddpg" => {
+            let mut cfg = ddpg::DdpgConfig::new(env);
+            cfg.total_steps = steps;
+            cfg.quant = quant;
+            cfg.seed = seed;
+            cfg.log_every = 1;
+            ddpg::train(&rt, &cfg)?
+        }
+        other => return Err(Error::Config(format!("unknown algo '{other}'"))),
+    };
+    for (s, r) in log.returns.iter().rev().take(10).rev() {
+        println!("  step {s:>8}  return {r:.1}");
+    }
+    println!(
+        "trained {algo}/{env}: episodes={} final_return={:.1} wall={:.1}s (train-exec {:.1}s)",
+        log.episodes, log.final_return, log.wall_secs, log.train_exec_secs
+    );
+    let path = policy.save(&out_dir)?;
+    println!("saved {}", path.display());
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let rt = runtime(args)?;
+    let algo = args
+        .get("algo")
+        .ok_or_else(|| Error::Config("eval needs --algo".into()))?;
+    let env = args
+        .get("env")
+        .ok_or_else(|| Error::Config("eval needs --env".into()))?;
+    let episodes = args.get_usize("episodes", 30)?;
+    let dir = std::path::PathBuf::from(args.get_or("out", "runs/policies"));
+    let arch = rt.manifest.arch_for(&format!("{algo}/{env}"))?.to_string();
+    let path = dir.join(format!("{algo}_{env}.qprm"));
+    let policy = quarl::algos::TrainedPolicy::load(&path, algo, env, &arch)?;
+
+    let mode = match args.get("quant") {
+        None => EvalMode::AsTrained,
+        Some("fp16") => EvalMode::Ptq(PtqMethod::Fp16),
+        Some(q) if q.starts_with("int") => {
+            EvalMode::Ptq(PtqMethod::Int(q[3..].parse().map_err(|_| {
+                Error::Config(format!("bad --quant '{q}'"))
+            })?))
+        }
+        Some(other) => return Err(Error::Config(format!("bad --quant '{other}'"))),
+    };
+    let e = evaluate(&rt, &policy, episodes, mode, args.get_u64("seed", 1)?)?;
+    println!(
+        "{algo}/{env} ({episodes} episodes): reward {:.1} +- {:.1}  len {:.0}  success {:.0}%",
+        e.mean_reward,
+        e.std_reward,
+        e.mean_len,
+        e.success_rate * 100.0
+    );
+    Ok(())
+}
+
+fn cmd_exp(args: &Args) -> Result<()> {
+    let rt = runtime(args)?;
+    let name = args
+        .positional
+        .get(1)
+        .ok_or_else(|| Error::Config("exp needs an experiment id (try 'quarl list')".into()))?;
+    let ctx = ExpCtx {
+        rt: &rt,
+        runs_dir: std::path::PathBuf::from(args.get_or("runs-dir", "runs")),
+        scale: args.get_f32("scale", 1.0)?,
+        episodes: args.get_usize("episodes", 30)?,
+        seed: args.get_u64("seed", 0)?,
+        bits: args.bits(&[2, 4, 6, 8])?,
+        filter: args.get("only").map(String::from),
+        shard: args.shard()?,
+        jobs: args.get_usize("jobs", 1)?,
+    };
+    run_experiment(&ctx, name)
+}
+
+fn cmd_list() -> Result<()> {
+    println!("experiments:");
+    for e in all_experiments() {
+        println!("  {:<8} {}", e.name(), e.description());
+    }
+    println!("\nenvironments:");
+    for id in ENV_IDS {
+        println!("  {:<16} ({})", id, quarl::envs::registry::paper_name(id));
+    }
+    Ok(())
+}

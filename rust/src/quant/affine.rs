@@ -1,0 +1,200 @@
+//! Uniform affine quantization — the paper's §3.1 scheme, bit-exact with
+//! the Python oracle (`python/compile/kernels/ref.py`):
+//!
+//! ```text
+//! delta = (|min(W,0)| + |max(W,0)|) / 2^n
+//! z     = floor(-min(W,0) / delta)
+//! Q(W)  = clip(floor(W/delta) + z, 0, 2^n - 1)
+//! D(q)  = delta * (q - z)
+//! ```
+//!
+//! Zero is always exactly representable (ranges are expanded to include
+//! 0), matching TFLite's asymmetric quantizer the paper uses. The golden
+//! tests in `rust/tests/quant_golden.rs` pin this against vectors
+//! generated from the jnp reference.
+
+use crate::error::{Error, Result};
+use crate::tensor::Tensor;
+
+/// Quantization parameters for one tensor (or one axis slice).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct QParams {
+    pub delta: f32,
+    pub zero_point: f32,
+    pub levels: f32,
+}
+
+impl QParams {
+    /// Derive parameters from an observed range for `bits`-bit quantization.
+    pub fn from_range(vmin: f32, vmax: f32, bits: u32) -> Result<QParams> {
+        if bits == 0 || bits > 31 {
+            return Err(Error::Quant(format!("bitwidth {bits} out of range [1, 31]")));
+        }
+        let vmin = vmin.min(0.0);
+        let vmax = vmax.max(0.0);
+        let levels = (1u64 << bits) as f32;
+        let mut delta = (vmin.abs() + vmax.abs()) / levels;
+        if delta <= 0.0 {
+            delta = 1.0; // degenerate all-zero range; everything maps to z
+        }
+        let zero_point = (-vmin / delta).floor();
+        Ok(QParams { delta, zero_point, levels })
+    }
+
+    /// Quantize one value to the integer grid (pre-clip integer code).
+    #[inline]
+    pub fn quantize(&self, x: f32) -> f32 {
+        let q = (x / self.delta).floor() + self.zero_point;
+        q.max(0.0).min(self.levels - 1.0)
+    }
+
+    /// Dequantize an integer code.
+    #[inline]
+    pub fn dequantize(&self, q: f32) -> f32 {
+        self.delta * (q - self.zero_point)
+    }
+
+    /// Quantize-dequantize (the "fake quant" used for reward evaluation).
+    #[inline]
+    pub fn roundtrip(&self, x: f32) -> f32 {
+        self.dequantize(self.quantize(x))
+    }
+}
+
+/// Per-tensor fake quantization in place.
+pub fn fake_quant_slice(xs: &mut [f32], bits: u32) -> Result<QParams> {
+    if xs.is_empty() {
+        return Err(Error::Quant("fake_quant of empty slice".into()));
+    }
+    let vmin = xs.iter().copied().fold(f32::INFINITY, f32::min);
+    let vmax = xs.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+    let qp = QParams::from_range(vmin, vmax, bits)?;
+    for x in xs.iter_mut() {
+        *x = qp.roundtrip(*x);
+    }
+    Ok(qp)
+}
+
+/// Per-tensor fake quantization with a fixed (externally monitored) range
+/// — the QAT-eval path (paper Algorithm 2 line 4).
+pub fn fake_quant_slice_with_range(xs: &mut [f32], vmin: f32, vmax: f32, bits: u32) -> Result<QParams> {
+    let qp = QParams::from_range(vmin, vmax, bits)?;
+    for x in xs.iter_mut() {
+        *x = qp.roundtrip(*x);
+    }
+    Ok(qp)
+}
+
+/// Per-axis (axis 0 = output features) fake quantization of a rank-2
+/// weight tensor — the paper's conv-channel scheme mapped to MLP rows.
+pub fn fake_quant_per_axis(w: &mut Tensor, bits: u32) -> Result<Vec<QParams>> {
+    if w.rank() != 2 {
+        return Err(Error::Quant(format!("per-axis quant expects rank 2, got {}", w.rank())));
+    }
+    let rows = w.shape()[0];
+    let cols = w.shape()[1];
+    let data = w.data_mut();
+    let mut out = Vec::with_capacity(rows);
+    for r in 0..rows {
+        let row = &mut data[r * cols..(r + 1) * cols];
+        out.push(fake_quant_slice(row, bits)?);
+    }
+    Ok(out)
+}
+
+/// Quantize a slice to integer codes (for the int8 deployment engine).
+pub fn quantize_codes(xs: &[f32], qp: QParams) -> Vec<i32> {
+    xs.iter().map(|&x| qp.quantize(x) as i32).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_always_representable() {
+        for bits in [2, 4, 8] {
+            let qp = QParams::from_range(-3.7, 11.2, bits).unwrap();
+            let z = qp.roundtrip(0.0);
+            assert_eq!(z, 0.0, "bits={bits}: 0 -> {z}");
+        }
+    }
+
+    #[test]
+    fn codes_in_range() {
+        let qp = QParams::from_range(-1.0, 1.0, 4).unwrap();
+        for x in [-5.0f32, -1.0, -0.3, 0.0, 0.2, 1.0, 9.0] {
+            let q = qp.quantize(x);
+            assert!((0.0..=15.0).contains(&q), "{x} -> {q}");
+        }
+    }
+
+    #[test]
+    fn roundtrip_error_bounded_by_delta() {
+        let qp = QParams::from_range(-2.0, 2.0, 8).unwrap();
+        for i in 0..1000 {
+            let x = -2.0 + 4.0 * (i as f32 / 999.0);
+            let err = (qp.roundtrip(x) - x).abs();
+            assert!(err <= qp.delta + 1e-6, "x={x} err={err} delta={}", qp.delta);
+        }
+    }
+
+    #[test]
+    fn more_bits_less_error() {
+        let xs: Vec<f32> = (0..256).map(|i| ((i as f32) * 0.37).sin() * 2.0).collect();
+        let mut prev = f32::INFINITY;
+        for bits in [2u32, 4, 6, 8, 12] {
+            let mut ys = xs.clone();
+            fake_quant_slice(&mut ys, bits).unwrap();
+            let mse: f32 =
+                xs.iter().zip(&ys).map(|(a, b)| (a - b) * (a - b)).sum::<f32>() / xs.len() as f32;
+            assert!(mse <= prev + 1e-9, "bits={bits} mse={mse} prev={prev}");
+            prev = mse;
+        }
+        assert!(prev < 1e-4, "12-bit mse should be tiny: {prev}");
+    }
+
+    #[test]
+    fn wider_range_more_error() {
+        // The paper's §4 mechanism: same values, wider monitored range =>
+        // coarser grid => larger error.
+        let xs: Vec<f32> = (0..64).map(|i| (i as f32 / 63.0) - 0.5).collect();
+        let mse = |vmin: f32, vmax: f32| {
+            let qp = QParams::from_range(vmin, vmax, 8).unwrap();
+            xs.iter().map(|&x| (qp.roundtrip(x) - x).powi(2)).sum::<f32>() / xs.len() as f32
+        };
+        assert!(mse(-0.5, 0.5) < mse(-8.0, 8.0));
+    }
+
+    #[test]
+    fn degenerate_all_zero() {
+        let mut xs = vec![0.0f32; 16];
+        let qp = fake_quant_slice(&mut xs, 8).unwrap();
+        assert!(xs.iter().all(|&x| x == 0.0));
+        assert_eq!(qp.delta, 1.0);
+    }
+
+    #[test]
+    fn per_axis_beats_per_tensor_on_mixed_scales() {
+        // Row 0 tiny values, row 1 huge: per-axis keeps row 0 precise.
+        let mut w1 = Tensor::new(vec![2, 4], vec![0.01, -0.02, 0.015, -0.005, 10.0, -9.0, 8.0, -7.0]).unwrap();
+        let mut w2 = w1.clone();
+        let orig = w1.clone();
+        fake_quant_per_axis(&mut w1, 8).unwrap();
+        fake_quant_slice(w2.data_mut(), 8).unwrap();
+        let row_mse = |t: &Tensor| {
+            t.data()[..4]
+                .iter()
+                .zip(&orig.data()[..4])
+                .map(|(a, b)| (a - b) * (a - b))
+                .sum::<f32>()
+        };
+        assert!(row_mse(&w1) < row_mse(&w2) / 10.0, "{} vs {}", row_mse(&w1), row_mse(&w2));
+    }
+
+    #[test]
+    fn invalid_bits_rejected() {
+        assert!(QParams::from_range(-1.0, 1.0, 0).is_err());
+        assert!(QParams::from_range(-1.0, 1.0, 32).is_err());
+    }
+}

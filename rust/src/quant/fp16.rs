@@ -1,0 +1,154 @@
+//! Software IEEE-754 half-precision rounding — the paper's fp16
+//! post-training quantization (§3.1): map each f32 to the nearest
+//! representable f16 (round-to-nearest-even) and back.
+//!
+//! No `half` crate offline, so the conversion is implemented directly;
+//! tests pin it against known bit patterns and the paper's format
+//! (1 sign, 5 exponent, 10 fraction bits).
+
+/// f32 -> f16 bit pattern with round-to-nearest-even (IEEE default).
+pub fn f32_to_f16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xff) as i32;
+    let frac = bits & 0x007f_ffff;
+
+    if exp == 0xff {
+        // Inf / NaN
+        return sign | 0x7c00 | if frac != 0 { 0x0200 } else { 0 };
+    }
+
+    // Unbiased exponent, rebased for f16 (bias 15).
+    let e = exp - 127 + 15;
+    if e >= 0x1f {
+        return sign | 0x7c00; // overflow -> inf
+    }
+    if e <= 0 {
+        // Subnormal or zero.
+        if e < -10 {
+            return sign; // rounds to zero
+        }
+        // Add the implicit leading 1, shift into subnormal position.
+        let mant = frac | 0x0080_0000;
+        let shift = (14 - e) as u32;
+        let half_ulp = 1u32 << (shift - 1);
+        let rounded = mant + half_ulp - 1 + ((mant >> shift) & 1);
+        return sign | (rounded >> shift) as u16;
+    }
+
+    // Normal: keep 10 fraction bits, round-to-nearest-even on bit 13.
+    let mant = frac >> 13;
+    let rest = frac & 0x1fff;
+    let mut h = sign | ((e as u16) << 10) | mant as u16;
+    if rest > 0x1000 || (rest == 0x1000 && (mant & 1) == 1) {
+        h = h.wrapping_add(1); // may carry into exponent; that is correct
+    }
+    h
+}
+
+/// f16 bit pattern -> f32.
+pub fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1f) as u32;
+    let frac = (h & 0x03ff) as u32;
+    let bits = if exp == 0x1f {
+        sign | 0x7f80_0000 | (frac << 13) // inf/nan
+    } else if exp == 0 {
+        if frac == 0 {
+            sign // zero
+        } else {
+            // subnormal: normalize. frac * 2^-24 with leading bit at
+            // position (10 - k) => biased exponent 113 - k.
+            let mut e: i32 = 113;
+            let mut f = frac;
+            while f & 0x0400 == 0 {
+                f <<= 1;
+                e -= 1;
+            }
+            f &= 0x03ff;
+            sign | ((e as u32) << 23) | (f << 13)
+        }
+    } else {
+        sign | ((exp + 127 - 15) << 23) | (frac << 13)
+    };
+    f32::from_bits(bits)
+}
+
+/// Round-trip a value through f16 (the PTQ-fp16 operation).
+#[inline]
+pub fn fp16_roundtrip(x: f32) -> f32 {
+    f16_bits_to_f32(f32_to_f16_bits(x))
+}
+
+/// fp16 PTQ over a slice in place.
+pub fn fp16_quant_slice(xs: &mut [f32]) {
+    for x in xs.iter_mut() {
+        *x = fp16_roundtrip(*x);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_bit_patterns() {
+        assert_eq!(f32_to_f16_bits(0.0), 0x0000);
+        assert_eq!(f32_to_f16_bits(-0.0), 0x8000);
+        assert_eq!(f32_to_f16_bits(1.0), 0x3c00);
+        assert_eq!(f32_to_f16_bits(-2.0), 0xc000);
+        assert_eq!(f32_to_f16_bits(65504.0), 0x7bff); // max finite half
+        assert_eq!(f32_to_f16_bits(65536.0), 0x7c00); // overflow -> inf
+        assert_eq!(f32_to_f16_bits(5.9604645e-8), 0x0001); // smallest subnormal
+    }
+
+    #[test]
+    fn round_trip_exact_for_representable() {
+        for x in [0.0f32, 1.0, -1.5, 0.25, 2048.0, -0.0009765625] {
+            assert_eq!(fp16_roundtrip(x), x, "{x} should be exactly representable");
+        }
+    }
+
+    #[test]
+    fn relative_error_within_half_ulp() {
+        // 10 fraction bits => relative error <= 2^-11 for normals.
+        let mut x = 1e-3f32;
+        while x < 1e4 {
+            let r = fp16_roundtrip(x);
+            let rel = ((r - x) / x).abs();
+            assert!(rel <= 1.0 / 2048.0 + 1e-7, "x={x} r={r} rel={rel}");
+            x *= 1.37;
+        }
+    }
+
+    #[test]
+    fn round_to_nearest_even() {
+        // 1 + 2^-11 is exactly between 1.0 and 1+2^-10: ties to even (1.0).
+        let tie = 1.0 + 1.0 / 2048.0;
+        assert_eq!(fp16_roundtrip(tie), 1.0);
+        // slightly above the tie rounds up
+        let above = 1.0 + 1.3 / 2048.0;
+        assert_eq!(fp16_roundtrip(above), 1.0 + 1.0 / 1024.0);
+    }
+
+    #[test]
+    fn inf_nan_preserved() {
+        assert_eq!(fp16_roundtrip(f32::INFINITY), f32::INFINITY);
+        assert_eq!(fp16_roundtrip(f32::NEG_INFINITY), f32::NEG_INFINITY);
+        assert!(fp16_roundtrip(f32::NAN).is_nan());
+    }
+
+    #[test]
+    fn all_f16_values_round_trip_bits() {
+        // Every finite half value must survive f16 -> f32 -> f16 exactly.
+        for h in 0u16..=0xffff {
+            let exp = (h >> 10) & 0x1f;
+            if exp == 0x1f {
+                continue; // inf/nan patterns: payload not preserved bit-exactly
+            }
+            let x = f16_bits_to_f32(h);
+            let h2 = f32_to_f16_bits(x);
+            assert_eq!(h, h2, "bits 0x{h:04x} -> {x} -> 0x{h2:04x}");
+        }
+    }
+}

@@ -1,0 +1,18 @@
+//! Quantization engine (Layer-3 side).
+//!
+//! * [`affine`] — uniform affine quantizer, bit-exact with the Python
+//!   oracle (paper §3.1).
+//! * [`fp16`] — software IEEE-754 half rounding (PTQ-fp16).
+//! * [`ptq`] — post-training quantization over parameter sets
+//!   (paper Algorithm 1).
+//! * [`stats`] — weight-distribution analysis (Figures 3/4, Table 3).
+
+pub mod affine;
+pub mod fp16;
+pub mod ptq;
+pub mod stats;
+
+pub use affine::{fake_quant_per_axis, fake_quant_slice, fake_quant_slice_with_range, QParams};
+pub use fp16::{fp16_quant_slice, fp16_roundtrip};
+pub use ptq::{quantize_params, relative_error_pct, PtqMethod};
+pub use stats::{render_histogram, weight_stats, WeightStats};

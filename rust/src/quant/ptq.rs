@@ -1,0 +1,166 @@
+//! Post-training quantization over parameter sets (paper Algorithm 1).
+//!
+//! Takes a trained fp32 `ParamSet` and returns a quantized copy:
+//! * `Fp16` — IEEE half rounding of every parameter.
+//! * `Int(n)` — n-bit uniform affine, per-tensor on weight matrices and
+//!   biases (the paper's FC scheme; per-axis is exposed separately and
+//!   benchmarked as an ablation).
+//!
+//! Evaluation then runs the same `act` program with quantized weights —
+//! quantization error enters exactly as in the paper (weights only;
+//! activations stay fp32 in PTQ).
+
+use crate::error::Result;
+use crate::quant::affine::{fake_quant_per_axis, fake_quant_slice};
+use crate::quant::fp16::fp16_quant_slice;
+use crate::runtime::ParamSet;
+
+/// A PTQ method selection.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum PtqMethod {
+    /// No-op (fp32 baseline) — lets sweeps treat fp32 uniformly.
+    Fp32,
+    /// IEEE-754 half rounding.
+    Fp16,
+    /// n-bit uniform affine, per-tensor.
+    Int(u32),
+    /// n-bit uniform affine, per-axis on rank-2 tensors (ablation).
+    IntPerAxis(u32),
+}
+
+impl PtqMethod {
+    pub fn label(&self) -> String {
+        match self {
+            PtqMethod::Fp32 => "fp32".into(),
+            PtqMethod::Fp16 => "fp16".into(),
+            PtqMethod::Int(n) => format!("int{n}"),
+            PtqMethod::IntPerAxis(n) => format!("int{n}pa"),
+        }
+    }
+}
+
+/// Quantize a copy of `params` with `method`.
+pub fn quantize_params(params: &ParamSet, method: PtqMethod) -> Result<ParamSet> {
+    let mut out = params.clone();
+    match method {
+        PtqMethod::Fp32 => {}
+        PtqMethod::Fp16 => {
+            for t in out.tensors.iter_mut() {
+                fp16_quant_slice(t.data_mut());
+            }
+        }
+        PtqMethod::Int(bits) => {
+            for t in out.tensors.iter_mut() {
+                if t.is_empty() {
+                    continue;
+                }
+                fake_quant_slice(t.data_mut(), bits)?;
+            }
+        }
+        PtqMethod::IntPerAxis(bits) => {
+            for t in out.tensors.iter_mut() {
+                if t.is_empty() {
+                    continue;
+                }
+                if t.rank() == 2 {
+                    fake_quant_per_axis(t, bits)?;
+                } else {
+                    fake_quant_slice(t.data_mut(), bits)?;
+                }
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// Paper Table-2 relative error: E = (fp32 - quant) / fp32 * 100.
+/// (Negative error = quantized model outperformed the baseline.)
+pub fn relative_error_pct(fp32_reward: f32, quant_reward: f32) -> f32 {
+    if fp32_reward.abs() < 1e-9 {
+        return 0.0;
+    }
+    (fp32_reward - quant_reward) / fp32_reward.abs() * 100.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg32;
+    use crate::runtime::manifest::TensorSpec;
+
+    fn params() -> ParamSet {
+        let specs = vec![
+            TensorSpec { name: "q.w0".into(), shape: vec![8, 16] },
+            TensorSpec { name: "q.b0".into(), shape: vec![16] },
+            TensorSpec { name: "q.w1".into(), shape: vec![16, 4] },
+            TensorSpec { name: "q.b1".into(), shape: vec![4] },
+        ];
+        let mut rng = Pcg32::new(5, 5);
+        ParamSet::init(&specs, &mut rng)
+    }
+
+    fn mse(a: &ParamSet, b: &ParamSet) -> f32 {
+        let mut s = 0.0;
+        let mut n = 0;
+        for (x, y) in a.tensors.iter().zip(&b.tensors) {
+            for (u, v) in x.data().iter().zip(y.data()) {
+                s += (u - v) * (u - v);
+                n += 1;
+            }
+        }
+        s / n as f32
+    }
+
+    #[test]
+    fn fp32_is_identity() {
+        let p = params();
+        let q = quantize_params(&p, PtqMethod::Fp32).unwrap();
+        assert_eq!(p, q);
+    }
+
+    #[test]
+    fn error_ordering_matches_paper() {
+        // fp16 << int8 << int4 << int2 error, all nonzero but bounded.
+        let p = params();
+        let e16 = mse(&p, &quantize_params(&p, PtqMethod::Fp16).unwrap());
+        let e8 = mse(&p, &quantize_params(&p, PtqMethod::Int(8)).unwrap());
+        let e4 = mse(&p, &quantize_params(&p, PtqMethod::Int(4)).unwrap());
+        let e2 = mse(&p, &quantize_params(&p, PtqMethod::Int(2)).unwrap());
+        assert!(e16 < e8 && e8 < e4 && e4 < e2, "{e16} {e8} {e4} {e2}");
+    }
+
+    #[test]
+    fn per_axis_no_worse_than_per_tensor() {
+        let p = params();
+        let pt = mse(&p, &quantize_params(&p, PtqMethod::Int(4)).unwrap());
+        let pa = mse(&p, &quantize_params(&p, PtqMethod::IntPerAxis(4)).unwrap());
+        assert!(pa <= pt * 1.05, "per-axis {pa} vs per-tensor {pt}");
+    }
+
+    #[test]
+    fn shapes_preserved() {
+        let p = params();
+        let q = quantize_params(&p, PtqMethod::Int(8)).unwrap();
+        for (a, b) in p.tensors.iter().zip(&q.tensors) {
+            assert_eq!(a.shape(), b.shape());
+        }
+        assert_eq!(p.names, q.names);
+    }
+
+    #[test]
+    fn relative_error_signs() {
+        assert!(relative_error_pct(100.0, 90.0) > 0.0);
+        assert!(relative_error_pct(100.0, 110.0) < 0.0);
+        // negative baselines (Pong-style scores) keep the sign convention:
+        // doing worse than baseline is positive error
+        assert!(relative_error_pct(-100.0, -150.0) > 0.0);
+        assert_eq!(relative_error_pct(0.0, 5.0), 0.0);
+    }
+
+    #[test]
+    fn labels() {
+        assert_eq!(PtqMethod::Int(8).label(), "int8");
+        assert_eq!(PtqMethod::Fp16.label(), "fp16");
+        assert_eq!(PtqMethod::IntPerAxis(4).label(), "int4pa");
+    }
+}

@@ -1,0 +1,147 @@
+//! Weight-distribution statistics — the analysis machinery behind the
+//! paper's Figures 3 and 4 (weight spread vs quantization error) and
+//! Table 3 (algorithm effect on quantization quality).
+
+use crate::quant::affine::QParams;
+use crate::runtime::ParamSet;
+
+/// Summary of one parameter set's weight distribution.
+#[derive(Debug, Clone)]
+pub struct WeightStats {
+    pub n: usize,
+    pub min: f32,
+    pub max: f32,
+    pub mean: f32,
+    pub std: f32,
+    /// max - min: the "spread" the paper links to int8 error.
+    pub spread: f32,
+    /// Fraction of weights within one int8 delta of zero (narrowness).
+    pub near_zero_frac: f32,
+    /// Mean-squared int8 fake-quantization error of the weights.
+    pub int8_mse: f32,
+    /// Histogram over `bins` equal buckets spanning [min, max].
+    pub histogram: Vec<usize>,
+    pub bin_edges: (f32, f32),
+}
+
+/// Compute distribution stats over every weight matrix in a set
+/// (biases excluded — the paper plots weight distributions).
+pub fn weight_stats(params: &ParamSet, bins: usize) -> WeightStats {
+    let mut values: Vec<f32> = Vec::new();
+    for (name, t) in params.names.iter().zip(&params.tensors) {
+        if t.rank() == 2 && (name.contains(".w") || name.contains("w")) {
+            values.extend_from_slice(t.data());
+        }
+    }
+    if values.is_empty() {
+        for t in &params.tensors {
+            values.extend_from_slice(t.data());
+        }
+    }
+    let n = values.len();
+    let min = values.iter().copied().fold(f32::INFINITY, f32::min);
+    let max = values.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+    let mean = values.iter().sum::<f32>() / n as f32;
+    let var = values.iter().map(|x| (x - mean) * (x - mean)).sum::<f32>() / n as f32;
+    let std = var.sqrt();
+
+    let qp = QParams::from_range(min, max, 8).expect("8-bit params");
+    let mut int8_se = 0.0f64;
+    let mut near_zero = 0usize;
+    let mut histogram = vec![0usize; bins];
+    let width = (max - min).max(1e-12);
+    for &x in &values {
+        let e = qp.roundtrip(x) - x;
+        int8_se += (e as f64) * (e as f64);
+        if x.abs() <= qp.delta {
+            near_zero += 1;
+        }
+        let b = (((x - min) / width) * bins as f32) as usize;
+        histogram[b.min(bins - 1)] += 1;
+    }
+
+    WeightStats {
+        n,
+        min,
+        max,
+        mean,
+        std,
+        spread: max - min,
+        near_zero_frac: near_zero as f32 / n as f32,
+        int8_mse: (int8_se / n as f64) as f32,
+        histogram,
+        bin_edges: (min, max),
+    }
+}
+
+/// Render a terminal histogram (the harness prints these for Fig 3/4).
+pub fn render_histogram(stats: &WeightStats, width: usize) -> String {
+    let peak = stats.histogram.iter().copied().max().unwrap_or(1).max(1);
+    let mut out = String::new();
+    let bins = stats.histogram.len();
+    for (i, &c) in stats.histogram.iter().enumerate() {
+        let lo = stats.bin_edges.0
+            + (stats.bin_edges.1 - stats.bin_edges.0) * i as f32 / bins as f32;
+        let bar = "#".repeat((c * width + peak - 1) / peak);
+        out.push_str(&format!("{lo:>8.3} | {bar}\n"));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg32;
+    use crate::runtime::manifest::TensorSpec;
+    use crate::tensor::Tensor;
+
+    fn set_from(values: Vec<f32>) -> ParamSet {
+        let n = values.len();
+        ParamSet {
+            names: vec!["q.w0".into()],
+            tensors: vec![Tensor::new(vec![1, n], values).unwrap()],
+        }
+    }
+
+    #[test]
+    fn wider_distribution_higher_int8_mse() {
+        let narrow = set_from((0..512).map(|i| ((i as f32) * 0.1).sin() * 0.1).collect());
+        let wide = set_from((0..512).map(|i| ((i as f32) * 0.1).sin() * 5.0).collect());
+        let sn = weight_stats(&narrow, 32);
+        let sw = weight_stats(&wide, 32);
+        assert!(sw.spread > sn.spread);
+        assert!(sw.int8_mse > sn.int8_mse * 10.0, "{} vs {}", sw.int8_mse, sn.int8_mse);
+    }
+
+    #[test]
+    fn histogram_sums_to_n() {
+        let mut rng = Pcg32::new(3, 3);
+        let specs = [TensorSpec { name: "q.w0".into(), shape: vec![32, 32] }];
+        let p = ParamSet::init(&specs, &mut rng);
+        let s = weight_stats(&p, 20);
+        assert_eq!(s.histogram.iter().sum::<usize>(), s.n);
+        assert_eq!(s.n, 1024);
+    }
+
+    #[test]
+    fn render_is_nonempty_and_lines_match_bins() {
+        let p = set_from((0..100).map(|i| i as f32 / 100.0 - 0.5).collect());
+        let s = weight_stats(&p, 10);
+        let r = render_histogram(&s, 40);
+        assert_eq!(r.lines().count(), 10);
+    }
+
+    #[test]
+    fn biases_excluded_from_weight_stats() {
+        let p = ParamSet {
+            names: vec!["q.w0".into(), "q.b0".into()],
+            tensors: vec![
+                Tensor::new(vec![2, 2], vec![0.1, -0.1, 0.2, -0.2]).unwrap(),
+                Tensor::new(vec![2], vec![100.0, -100.0]).unwrap(),
+            ],
+        };
+        let s = weight_stats(&p, 4);
+        assert_eq!(s.n, 4);
+        assert!(s.max < 1.0, "bias outliers must not leak into stats");
+    }
+}

@@ -1,0 +1,12 @@
+//! Experience storage: uniform replay, prioritized replay (sum-tree),
+//! and the on-policy rollout buffer for A2C/PPO.
+
+pub mod prioritized;
+pub mod rollout;
+pub mod sum_tree;
+pub mod uniform;
+
+pub use prioritized::PrioritizedReplay;
+pub use rollout::{RolloutBatch, RolloutBuffer};
+pub use sum_tree::SumTree;
+pub use uniform::{Batch, ReplayBuffer, Transition};

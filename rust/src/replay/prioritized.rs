@@ -1,0 +1,146 @@
+//! Prioritized experience replay (Schaul et al. 2016) — proportional
+//! variant with importance-sampling weights, as enabled by the paper's
+//! DQN hyperparameters (alpha = 0.6, prioritized_replay = True).
+
+use crate::replay::sum_tree::SumTree;
+use crate::replay::uniform::{Batch, ReplayBuffer, Transition};
+use crate::rng::Pcg32;
+
+#[derive(Debug)]
+pub struct PrioritizedReplay {
+    buf: ReplayBuffer,
+    tree: SumTree,
+    alpha: f32,
+    max_priority: f32,
+    eps: f32,
+}
+
+impl PrioritizedReplay {
+    pub fn new(capacity: usize, obs_dim: usize, act_dim: usize, alpha: f32) -> Self {
+        PrioritizedReplay {
+            buf: ReplayBuffer::new(capacity, obs_dim, act_dim),
+            tree: SumTree::new(capacity),
+            alpha,
+            max_priority: 1.0,
+            eps: 1e-6,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// New transitions get max priority so everything is seen once.
+    pub fn push(&mut self, t: Transition) {
+        let slot = self.buf.push(t);
+        self.tree.set(slot, self.max_priority.powf(self.alpha));
+    }
+
+    /// Proportional sample with IS weights normalized by the batch max
+    /// (stable-baselines' convention), annealed by `beta`.
+    pub fn sample(&self, b: usize, beta: f32, rng: &mut Pcg32) -> Batch {
+        assert!(self.len() > 0, "sample from empty PER");
+        let total = self.tree.total();
+        let mut indices = Vec::with_capacity(b);
+        let mut probs = Vec::with_capacity(b);
+        // Stratified: one draw per equal segment reduces variance.
+        let seg = total / b as f32;
+        for k in 0..b {
+            let u = seg * k as f32 + rng.uniform() * seg;
+            let mut i = self.tree.find(u);
+            if i >= self.len() {
+                i = rng.below_usize(self.len());
+            }
+            indices.push(i);
+            probs.push(self.tree.get(i) / total);
+        }
+        let n = self.len() as f32;
+        let mut weights: Vec<f32> =
+            probs.iter().map(|&p| (n * p.max(1e-12)).powf(-beta)).collect();
+        let wmax = weights.iter().copied().fold(0.0f32, f32::max).max(1e-12);
+        for w in weights.iter_mut() {
+            *w /= wmax;
+        }
+        self.buf.gather(&indices, weights)
+    }
+
+    /// Update priorities from the TD errors the train program returned.
+    pub fn update_priorities(&mut self, indices: &[usize], td_abs: &[f32]) {
+        for (&i, &e) in indices.iter().zip(td_abs) {
+            let p = (e.abs() + self.eps).min(100.0);
+            self.max_priority = self.max_priority.max(p);
+            self.tree.set(i, p.powf(self.alpha));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fill(per: &mut PrioritizedReplay, n: usize) {
+        for k in 0..n {
+            let o = [k as f32];
+            let a = [0.0];
+            per.push(Transition { obs: &o, action: &a, reward: k as f32, next_obs: &o, done: false });
+        }
+    }
+
+    #[test]
+    fn high_priority_sampled_more() {
+        let mut per = PrioritizedReplay::new(64, 1, 1, 1.0);
+        fill(&mut per, 32);
+        // give transition 5 a huge TD error, everything else tiny
+        let idx: Vec<usize> = (0..32).collect();
+        let mut td = vec![0.01f32; 32];
+        td[5] = 10.0;
+        per.update_priorities(&idx, &td);
+        let mut rng = Pcg32::new(2, 2);
+        let mut count5 = 0;
+        let draws = 300;
+        for _ in 0..draws {
+            let b = per.sample(8, 0.4, &mut rng);
+            count5 += b.indices.iter().filter(|&&i| i == 5).count();
+        }
+        // transition 5 holds ~97% of the mass
+        assert!(count5 > draws * 4, "transition 5 drawn {count5} times");
+    }
+
+    #[test]
+    fn is_weights_penalize_frequent_samples() {
+        let mut per = PrioritizedReplay::new(64, 1, 1, 1.0);
+        fill(&mut per, 16);
+        let idx: Vec<usize> = (0..16).collect();
+        let mut td = vec![0.1f32; 16];
+        td[3] = 5.0;
+        per.update_priorities(&idx, &td);
+        let mut rng = Pcg32::new(3, 3);
+        let b = per.sample(16, 1.0, &mut rng);
+        // the high-priority sample must carry the smallest weight
+        for (row, &i) in b.indices.iter().enumerate() {
+            if i == 3 {
+                let w = b.weights.data()[row];
+                assert!(
+                    b.weights.data().iter().all(|&x| x >= w - 1e-6),
+                    "weight of hot sample should be minimal"
+                );
+            }
+        }
+        // normalized: max weight == 1
+        let wmax = b.weights.data().iter().copied().fold(0.0f32, f32::max);
+        assert!((wmax - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn beta_zero_gives_unit_weights() {
+        let mut per = PrioritizedReplay::new(32, 1, 1, 0.6);
+        fill(&mut per, 10);
+        let mut rng = Pcg32::new(4, 4);
+        let b = per.sample(8, 0.0, &mut rng);
+        assert!(b.weights.data().iter().all(|&w| (w - 1.0).abs() < 1e-6));
+    }
+}

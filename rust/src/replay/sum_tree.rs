@@ -1,0 +1,106 @@
+//! Sum tree for O(log n) proportional sampling — the backbone of
+//! prioritized experience replay (Schaul et al. 2016, which the paper's
+//! DQN hyperparameters enable via `prioritized_replay: True`).
+
+/// A fixed-capacity binary-indexed sum tree over f32 priorities.
+#[derive(Debug)]
+pub struct SumTree {
+    /// Heap layout: nodes[1] is the root; leaves start at `cap`.
+    nodes: Vec<f32>,
+    cap: usize,
+}
+
+impl SumTree {
+    pub fn new(capacity: usize) -> SumTree {
+        let cap = capacity.next_power_of_two();
+        SumTree { nodes: vec![0.0; 2 * cap], cap }
+    }
+
+    pub fn total(&self) -> f32 {
+        self.nodes[1]
+    }
+
+    /// Set the priority of leaf `i`.
+    pub fn set(&mut self, i: usize, p: f32) {
+        assert!(i < self.cap, "leaf {i} out of capacity {}", self.cap);
+        assert!(p >= 0.0 && p.is_finite(), "priority must be finite >= 0, got {p}");
+        let mut node = self.cap + i;
+        self.nodes[node] = p;
+        node /= 2;
+        while node >= 1 {
+            self.nodes[node] = self.nodes[2 * node] + self.nodes[2 * node + 1];
+            node /= 2;
+        }
+    }
+
+    pub fn get(&self, i: usize) -> f32 {
+        self.nodes[self.cap + i]
+    }
+
+    /// Find the leaf whose prefix-sum interval contains `u` in [0, total).
+    pub fn find(&self, u: f32) -> usize {
+        debug_assert!(self.total() > 0.0);
+        let mut u = u.clamp(0.0, self.total() * (1.0 - 1e-7));
+        let mut node = 1;
+        while node < self.cap {
+            let left = 2 * node;
+            if u < self.nodes[left] {
+                node = left;
+            } else {
+                u -= self.nodes[left];
+                node = left + 1;
+            }
+        }
+        node - self.cap
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg32;
+
+    #[test]
+    fn total_tracks_updates() {
+        let mut t = SumTree::new(5);
+        t.set(0, 1.0);
+        t.set(3, 2.0);
+        assert!((t.total() - 3.0).abs() < 1e-6);
+        t.set(0, 0.5);
+        assert!((t.total() - 2.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn find_respects_proportions() {
+        let mut t = SumTree::new(4);
+        t.set(0, 1.0);
+        t.set(1, 0.0);
+        t.set(2, 3.0);
+        let mut rng = Pcg32::new(1, 1);
+        let mut counts = [0usize; 4];
+        for _ in 0..40_000 {
+            let u = rng.uniform() * t.total();
+            counts[t.find(u)] += 1;
+        }
+        assert_eq!(counts[1], 0);
+        assert_eq!(counts[3], 0);
+        let ratio = counts[2] as f64 / counts[0] as f64;
+        assert!((ratio - 3.0).abs() < 0.25, "ratio {ratio}");
+    }
+
+    #[test]
+    fn find_edges() {
+        let mut t = SumTree::new(8);
+        for i in 0..8 {
+            t.set(i, 1.0);
+        }
+        assert_eq!(t.find(0.0), 0);
+        assert_eq!(t.find(t.total() - 1e-4), 7);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_negative_priority() {
+        SumTree::new(4).set(0, -1.0);
+    }
+}

@@ -1,0 +1,159 @@
+//! PJRT runtime: load AOT HLO-text programs and execute them.
+//!
+//! This wraps the `xla` crate exactly the way /opt/xla-example does:
+//! `PjRtClient::cpu()` -> `HloModuleProto::from_text_file` ->
+//! `client.compile` -> `execute`. Programs are compiled lazily on first
+//! use and cached for the lifetime of the runtime (one compiled
+//! executable per model variant, per DESIGN.md).
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::rc::Rc;
+use std::time::Instant;
+
+use crate::error::{Error, Result};
+use crate::runtime::manifest::{Manifest, ProgramSpec};
+use crate::tensor::Tensor;
+
+/// A loaded+compiled AOT program with its manifest spec.
+pub struct Program {
+    pub spec: ProgramSpec,
+    exe: xla::PjRtLoadedExecutable,
+    /// Client handle for host->device buffer uploads. NOTE: the crate's
+    /// `execute::<Literal>` path leaks its input device buffers (the C
+    /// shim `release()`s them and never frees); we therefore upload
+    /// explicitly and call `execute_b`, whose inputs are caller-managed
+    /// `PjRtBuffer`s with a working `Drop`.
+    client: xla::PjRtClient,
+}
+
+impl Program {
+    /// Execute with shape-checked tensors, returning shape-carrying tensors.
+    ///
+    /// The exporter lowers with `return_tuple=True`, so the raw result is a
+    /// 1-element tuple literal that we decompose into per-output literals.
+    pub fn run(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        if inputs.len() != self.spec.inputs.len() {
+            return Err(Error::Shape(format!(
+                "{}: {} inputs given, {} expected",
+                self.spec.name,
+                inputs.len(),
+                self.spec.inputs.len()
+            )));
+        }
+        // PjRtDevice borrows the client, so it is looked up per call
+        // (a cheap C-side list; the upload dominates).
+        let devices = self.client.devices();
+        let device = devices
+            .first()
+            .ok_or_else(|| Error::Xla("no PJRT devices".into()))?;
+        let mut buffers = Vec::with_capacity(inputs.len());
+        // The host->device transfer is asynchronous: the source literals
+        // must stay alive until execution has consumed them (the C shim's
+        // own execute() awaits readiness for the same reason).
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (t, spec) in inputs.iter().zip(&self.spec.inputs) {
+            if t.shape() != &spec.shape[..] {
+                return Err(Error::Shape(format!(
+                    "{}: input '{}' has shape {:?}, manifest wants {:?}",
+                    self.spec.name,
+                    spec.name,
+                    t.shape(),
+                    spec.shape
+                )));
+            }
+            let lit = tensor_to_literal(t)?;
+            buffers.push(self.client.buffer_from_host_literal(Some(device), &lit)?);
+            literals.push(lit);
+        }
+        let result = self.exe.execute_b::<xla::PjRtBuffer>(&buffers)?;
+        // NB: input buffers must outlive the (async) execution; they are
+        // dropped only after the synchronous readback below.
+        let tuple = result[0][0].to_literal_sync()?;
+        drop(buffers);
+        drop(literals);
+        let parts = tuple.to_tuple()?;
+        if parts.len() != self.spec.outputs.len() {
+            return Err(Error::Shape(format!(
+                "{}: program returned {} outputs, manifest says {}",
+                self.spec.name,
+                parts.len(),
+                self.spec.outputs.len()
+            )));
+        }
+        parts
+            .into_iter()
+            .zip(&self.spec.outputs)
+            .map(|(lit, spec)| literal_to_tensor(&lit, &spec.shape))
+            .collect()
+    }
+}
+
+/// Convert a host tensor to an XLA literal (f32, row-major).
+pub fn tensor_to_literal(t: &Tensor) -> Result<xla::Literal> {
+    let lit = xla::Literal::vec1(t.data());
+    let dims: Vec<i64> = t.shape().iter().map(|&d| d as i64).collect();
+    Ok(lit.reshape(&dims)?)
+}
+
+/// Convert an XLA literal back to a host tensor with the manifest shape.
+pub fn literal_to_tensor(lit: &xla::Literal, shape: &[usize]) -> Result<Tensor> {
+    let data = lit.to_vec::<f32>()?;
+    Tensor::new(shape.to_vec(), data)
+}
+
+/// The PJRT runtime: client + manifest + compiled-program cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    cache: RefCell<BTreeMap<String, Rc<Program>>>,
+    /// Cumulative (compiles, compile seconds) for perf accounting.
+    compile_stats: RefCell<(usize, f64)>,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT runtime over an artifacts directory.
+    pub fn new(artifacts_dir: impl AsRef<std::path::Path>) -> Result<Runtime> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Runtime {
+            client,
+            manifest,
+            cache: RefCell::new(BTreeMap::new()),
+            compile_stats: RefCell::new((0, 0.0)),
+        })
+    }
+
+    /// Load + compile a program by manifest name (cached).
+    pub fn load(&self, name: &str) -> Result<Rc<Program>> {
+        if let Some(p) = self.cache.borrow().get(name) {
+            return Ok(p.clone());
+        }
+        let spec = self.manifest.program(name)?.clone();
+        let path = self.manifest.hlo_path(&spec);
+        let path_str = path
+            .to_str()
+            .ok_or_else(|| Error::Manifest(format!("non-utf8 path {path:?}")))?;
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(path_str)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        {
+            let mut st = self.compile_stats.borrow_mut();
+            st.0 += 1;
+            st.1 += t0.elapsed().as_secs_f64();
+        }
+        let prog = Rc::new(Program { spec, exe, client: self.client.clone() });
+        self.cache.borrow_mut().insert(name.to_string(), prog.clone());
+        Ok(prog)
+    }
+
+    /// (programs compiled, total seconds spent compiling).
+    pub fn compile_stats(&self) -> (usize, f64) {
+        *self.compile_stats.borrow()
+    }
+
+    pub fn platform_name(&self) -> String {
+        self.client.platform_name()
+    }
+}

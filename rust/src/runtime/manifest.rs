@@ -1,0 +1,289 @@
+//! Typed view of `artifacts/manifest.json`.
+//!
+//! The manifest is the contract between the build-time Python exporter
+//! (`python/compile/aot.py`) and this coordinator: for every AOT program
+//! it records the positional input/output tensor specs plus algorithm
+//! metadata (parameter counts, hyper-vector layout, architecture), and it
+//! carries the (algo, env) -> architecture map that mirrors paper Table 1.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::error::{Error, Result};
+use crate::runtime::json::Json;
+
+/// One tensor slot of a program signature.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+impl TensorSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// Architecture metadata as exported by the Python registry.
+#[derive(Debug, Clone)]
+pub struct ArchMeta {
+    pub name: String,
+    pub obs_dim: usize,
+    pub act_dim: usize,
+    pub hidden: Vec<usize>,
+    pub act_batch: usize,
+    pub train_batch: usize,
+    pub layer_norm: bool,
+    pub compute: String,
+}
+
+/// One AOT program entry.
+#[derive(Debug, Clone)]
+pub struct ProgramSpec {
+    pub name: String,
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    pub algo: String,
+    pub kind: String,
+    pub arch: ArchMeta,
+    pub hyper: Vec<String>,
+    pub n_qstate: usize,
+    /// Raw meta numbers like n_params / n_policy_params, keyed as exported.
+    pub counts: BTreeMap<String, usize>,
+}
+
+impl ProgramSpec {
+    /// Position of a named input (first match).
+    pub fn input_index(&self, name: &str) -> Result<usize> {
+        self.inputs
+            .iter()
+            .position(|t| t.name == name)
+            .ok_or_else(|| Error::Manifest(format!("{}: no input '{name}'", self.name)))
+    }
+
+    /// Position of a named output.
+    pub fn output_index(&self, name: &str) -> Result<usize> {
+        self.outputs
+            .iter()
+            .position(|t| t.name == name)
+            .ok_or_else(|| Error::Manifest(format!("{}: no output '{name}'", self.name)))
+    }
+
+    /// Index into the hyper vector for a named control.
+    pub fn hyper_index(&self, name: &str) -> Result<usize> {
+        self.hyper
+            .iter()
+            .position(|h| h == name)
+            .ok_or_else(|| Error::Manifest(format!("{}: no hyper '{name}'", self.name)))
+    }
+
+    pub fn count(&self, key: &str) -> Result<usize> {
+        self.counts
+            .get(key)
+            .copied()
+            .ok_or_else(|| Error::Manifest(format!("{}: no count '{key}'", self.name)))
+    }
+}
+
+/// The whole manifest.
+#[derive(Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub env_arch_map: BTreeMap<String, String>,
+    pub programs: BTreeMap<String, ProgramSpec>,
+    pub mp_policies: BTreeMap<String, Vec<usize>>,
+    pub nav_policies: BTreeMap<String, Vec<usize>>,
+}
+
+fn parse_specs(v: &Json) -> Result<Vec<TensorSpec>> {
+    v.as_arr()?
+        .iter()
+        .map(|t| {
+            let name = t.get("name")?.as_str()?.to_string();
+            let shape = t
+                .get("shape")?
+                .as_arr()?
+                .iter()
+                .map(|d| d.as_usize())
+                .collect::<Result<Vec<_>>>()?;
+            Ok(TensorSpec { name, shape })
+        })
+        .collect()
+}
+
+fn parse_arch(v: &Json) -> Result<ArchMeta> {
+    Ok(ArchMeta {
+        name: v.get("name")?.as_str()?.to_string(),
+        obs_dim: v.get("obs_dim")?.as_usize()?,
+        act_dim: v.get("act_dim")?.as_usize()?,
+        hidden: v
+            .get("hidden")?
+            .as_arr()?
+            .iter()
+            .map(|d| d.as_usize())
+            .collect::<Result<Vec<_>>>()?,
+        act_batch: v.get("act_batch")?.as_usize()?,
+        train_batch: v.get("train_batch")?.as_usize()?,
+        layer_norm: v.get("layer_norm")?.as_bool()?,
+        compute: v.get("compute")?.as_str()?.to_string(),
+    })
+}
+
+fn parse_policy_map(v: &Json) -> Result<BTreeMap<String, Vec<usize>>> {
+    let mut out = BTreeMap::new();
+    for (k, arr) in v.as_obj()? {
+        let dims = arr
+            .as_arr()?
+            .iter()
+            .map(|d| d.as_usize())
+            .collect::<Result<Vec<_>>>()?;
+        out.insert(k.clone(), dims);
+    }
+    Ok(out)
+}
+
+impl Manifest {
+    /// Load and validate `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let src = std::fs::read_to_string(&path)
+            .map_err(|e| Error::io(path.display().to_string(), e))?;
+        let root = Json::parse(&src)?;
+
+        let mut env_arch_map = BTreeMap::new();
+        for (k, v) in root.get("env_arch_map")?.as_obj()? {
+            env_arch_map.insert(k.clone(), v.as_str()?.to_string());
+        }
+
+        let mut programs = BTreeMap::new();
+        for p in root.get("programs")?.as_arr()? {
+            let meta = p.get("meta")?;
+            let mut counts = BTreeMap::new();
+            for (k, v) in meta.as_obj()? {
+                if k.starts_with("n_") {
+                    counts.insert(k.clone(), v.as_usize()?);
+                }
+            }
+            let spec = ProgramSpec {
+                name: p.get("name")?.as_str()?.to_string(),
+                file: p.get("file")?.as_str()?.to_string(),
+                inputs: parse_specs(p.get("inputs")?)?,
+                outputs: parse_specs(p.get("outputs")?)?,
+                algo: meta.get("algo")?.as_str()?.to_string(),
+                kind: meta.get("kind")?.as_str()?.to_string(),
+                arch: parse_arch(meta.get("arch")?)?,
+                hyper: meta
+                    .get("hyper")?
+                    .as_arr()?
+                    .iter()
+                    .map(|h| Ok(h.as_str()?.to_string()))
+                    .collect::<Result<Vec<_>>>()?,
+                n_qstate: meta.get("n_qstate")?.as_usize()?,
+                counts,
+            };
+            programs.insert(spec.name.clone(), spec);
+        }
+
+        let manifest = Manifest {
+            dir,
+            env_arch_map,
+            programs,
+            mp_policies: parse_policy_map(root.get("mp_policies")?)?,
+            nav_policies: parse_policy_map(root.get("nav_policies")?)?,
+        };
+        manifest.validate()?;
+        Ok(manifest)
+    }
+
+    fn validate(&self) -> Result<()> {
+        for arch in self.env_arch_map.values() {
+            for kind in ["act", "train"] {
+                let pname = format!("{arch}_{kind}");
+                if !self.programs.contains_key(&pname) {
+                    return Err(Error::Manifest(format!(
+                        "env_arch_map references missing program '{pname}'"
+                    )));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Program spec by exact name.
+    pub fn program(&self, name: &str) -> Result<&ProgramSpec> {
+        self.programs
+            .get(name)
+            .ok_or_else(|| Error::Manifest(format!("unknown program '{name}'")))
+    }
+
+    /// Resolve the architecture for an (algo, env[, variant]) cell.
+    pub fn arch_for(&self, key: &str) -> Result<&str> {
+        self.env_arch_map
+            .get(key)
+            .map(|s| s.as_str())
+            .ok_or_else(|| Error::Manifest(format!("no architecture for '{key}'")))
+    }
+
+    /// Path to a program's HLO text.
+    pub fn hlo_path(&self, spec: &ProgramSpec) -> PathBuf {
+        self.dir.join(&spec.file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> &'static str {
+        r#"{
+          "version": 1,
+          "env_arch_map": {"dqn/cartpole": "dqn_o4a2h64x64"},
+          "mp_policies": {"mp_a": [128, 128, 128]},
+          "nav_policies": {"nav_p1": [64, 64, 64]},
+          "programs": [
+            {"name": "dqn_o4a2h64x64_act", "file": "dqn_o4a2h64x64_act.hlo.txt",
+             "inputs": [{"name": "q.w0", "shape": [4, 64]}, {"name": "hyper", "shape": [3]}],
+             "outputs": [{"name": "qvalues", "shape": [1, 2]}],
+             "meta": {"algo": "dqn", "kind": "act", "n_params": 1, "n_qstate": 4,
+                      "hyper": ["bits", "step", "delay"],
+                      "arch": {"name": "dqn_o4a2h64x64", "obs_dim": 4, "act_dim": 2,
+                               "hidden": [64, 64], "act_batch": 1, "train_batch": 64,
+                               "layer_norm": false, "compute": "f32"}}},
+            {"name": "dqn_o4a2h64x64_train", "file": "dqn_o4a2h64x64_train.hlo.txt",
+             "inputs": [], "outputs": [],
+             "meta": {"algo": "dqn", "kind": "train", "n_params": 1, "n_qstate": 4,
+                      "hyper": ["lr"],
+                      "arch": {"name": "dqn_o4a2h64x64", "obs_dim": 4, "act_dim": 2,
+                               "hidden": [64, 64], "act_batch": 1, "train_batch": 64,
+                               "layer_norm": false, "compute": "f32"}}}
+          ]
+        }"#
+    }
+
+    #[test]
+    fn parses_sample() {
+        let dir = std::env::temp_dir().join("quarl_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), sample()).unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.arch_for("dqn/cartpole").unwrap(), "dqn_o4a2h64x64");
+        let p = m.program("dqn_o4a2h64x64_act").unwrap();
+        assert_eq!(p.arch.obs_dim, 4);
+        assert_eq!(p.inputs[0].shape, vec![4, 64]);
+        assert_eq!(p.hyper_index("delay").unwrap(), 2);
+        assert_eq!(p.count("n_params").unwrap(), 1);
+        assert_eq!(m.mp_policies["mp_a"], vec![128, 128, 128]);
+    }
+
+    #[test]
+    fn missing_program_is_error() {
+        let dir = std::env::temp_dir().join("quarl_manifest_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let bad = sample().replace("dqn_o4a2h64x64_train", "other_train");
+        std::fs::write(dir.join("manifest.json"), bad).unwrap();
+        assert!(Manifest::load(&dir).is_err());
+    }
+}

@@ -1,0 +1,15 @@
+//! Layer-3 runtime: loading and executing the AOT-compiled XLA programs.
+//!
+//! * [`json`] — hand-rolled JSON reader (no serde offline).
+//! * [`manifest`] — typed view of `artifacts/manifest.json`.
+//! * [`client`] — PJRT client wrapper + compiled-program cache.
+//! * [`params`] — named parameter sets: init, checkpoints, polyak.
+
+pub mod client;
+pub mod json;
+pub mod manifest;
+pub mod params;
+
+pub use client::{Program, Runtime};
+pub use manifest::{ArchMeta, Manifest, ProgramSpec, TensorSpec};
+pub use params::ParamSet;

@@ -1,0 +1,231 @@
+//! Named parameter sets: initialization, persistence, polyak updates.
+//!
+//! Parameters live host-side as shape-carrying tensors in manifest order.
+//! The coordinator threads them through PJRT executions and the PTQ
+//! engine mutates copies of them; this module owns creation (He-uniform
+//! fan-in init, matching the scale jax's default initializers give the
+//! paper's MLP towers) and a small binary checkpoint format.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use crate::error::{Error, Result};
+use crate::rng::Pcg32;
+use crate::runtime::manifest::TensorSpec;
+use crate::tensor::Tensor;
+
+/// An ordered, named set of parameter tensors.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParamSet {
+    pub names: Vec<String>,
+    pub tensors: Vec<Tensor>,
+}
+
+impl ParamSet {
+    pub fn len(&self) -> usize {
+        self.tensors.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tensors.is_empty()
+    }
+
+    /// Total scalar parameter count.
+    pub fn numel(&self) -> usize {
+        self.tensors.iter().map(|t| t.len()).sum()
+    }
+
+    /// Initialize from manifest specs: weights He-uniform over fan-in,
+    /// biases zero. `specs` must be the parameter slice of a program's
+    /// input list (alternating W/b as nets.py lays them out).
+    pub fn init(specs: &[TensorSpec], rng: &mut Pcg32) -> ParamSet {
+        let mut names = Vec::with_capacity(specs.len());
+        let mut tensors = Vec::with_capacity(specs.len());
+        for spec in specs {
+            names.push(spec.name.clone());
+            if spec.shape.len() == 2 {
+                let fan_in = spec.shape[0].max(1);
+                let bound = (6.0 / fan_in as f32).sqrt();
+                let data: Vec<f32> = (0..spec.numel())
+                    .map(|_| rng.uniform_range(-bound, bound))
+                    .collect();
+                tensors.push(Tensor::new(spec.shape.clone(), data).unwrap());
+            } else {
+                tensors.push(Tensor::zeros(spec.shape.clone()));
+            }
+        }
+        ParamSet { names, tensors }
+    }
+
+    /// All-zeros set with the same shapes (optimizer m/v state).
+    pub fn zeros_like(&self) -> ParamSet {
+        ParamSet {
+            names: self.names.clone(),
+            tensors: self.tensors.iter().map(|t| Tensor::zeros(t.shape().to_vec())).collect(),
+        }
+    }
+
+    /// Polyak averaging: target <- tau * online + (1 - tau) * target.
+    /// The DDPG coordinator runs this host-side every step.
+    pub fn polyak_from(&mut self, online: &ParamSet, tau: f32) -> Result<()> {
+        if self.tensors.len() != online.tensors.len() {
+            return Err(Error::Shape(format!(
+                "polyak: {} vs {} tensors",
+                self.tensors.len(),
+                online.tensors.len()
+            )));
+        }
+        for (t, o) in self.tensors.iter_mut().zip(&online.tensors) {
+            if t.shape() != o.shape() {
+                return Err(Error::Shape("polyak: tensor shape mismatch".into()));
+            }
+            for (a, b) in t.data_mut().iter_mut().zip(o.data()) {
+                *a = tau * b + (1.0 - tau) * *a;
+            }
+        }
+        Ok(())
+    }
+
+    /// Find a tensor by name.
+    pub fn get(&self, name: &str) -> Option<&Tensor> {
+        self.names.iter().position(|n| n == name).map(|i| &self.tensors[i])
+    }
+
+    // --- checkpoint format -------------------------------------------------
+    // magic "QPRM" | u32 version | u32 count
+    //   per tensor: u32 name_len | name bytes | u32 rank | u64 dims... | f32 data (LE)
+
+    /// Serialize to the checkpoint format.
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let path = path.as_ref();
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)
+                .map_err(|e| Error::io(parent.display().to_string(), e))?;
+        }
+        let mut buf: Vec<u8> = Vec::new();
+        buf.extend_from_slice(b"QPRM");
+        buf.extend_from_slice(&1u32.to_le_bytes());
+        buf.extend_from_slice(&(self.tensors.len() as u32).to_le_bytes());
+        for (name, t) in self.names.iter().zip(&self.tensors) {
+            buf.extend_from_slice(&(name.len() as u32).to_le_bytes());
+            buf.extend_from_slice(name.as_bytes());
+            buf.extend_from_slice(&(t.rank() as u32).to_le_bytes());
+            for &d in t.shape() {
+                buf.extend_from_slice(&(d as u64).to_le_bytes());
+            }
+            for &x in t.data() {
+                buf.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+        let mut f = std::fs::File::create(path)
+            .map_err(|e| Error::io(path.display().to_string(), e))?;
+        f.write_all(&buf).map_err(|e| Error::io(path.display().to_string(), e))?;
+        Ok(())
+    }
+
+    /// Load from the checkpoint format.
+    pub fn load(path: impl AsRef<Path>) -> Result<ParamSet> {
+        let path = path.as_ref();
+        let mut bytes = Vec::new();
+        std::fs::File::open(path)
+            .and_then(|mut f| f.read_to_end(&mut bytes))
+            .map_err(|e| Error::io(path.display().to_string(), e))?;
+        let mut i = 0usize;
+        let take = |i: &mut usize, n: usize| -> Result<&[u8]> {
+            if *i + n > bytes.len() {
+                return Err(Error::Manifest(format!(
+                    "checkpoint {} truncated at byte {}",
+                    path.display(),
+                    *i
+                )));
+            }
+            let s = &bytes[*i..*i + n];
+            *i += n;
+            Ok(s)
+        };
+        if take(&mut i, 4)? != b"QPRM" {
+            return Err(Error::Manifest(format!("{}: bad magic", path.display())));
+        }
+        let _ver = u32::from_le_bytes(take(&mut i, 4)?.try_into().unwrap());
+        let count = u32::from_le_bytes(take(&mut i, 4)?.try_into().unwrap()) as usize;
+        let mut names = Vec::with_capacity(count);
+        let mut tensors = Vec::with_capacity(count);
+        for _ in 0..count {
+            let name_len = u32::from_le_bytes(take(&mut i, 4)?.try_into().unwrap()) as usize;
+            let name = String::from_utf8(take(&mut i, name_len)?.to_vec())
+                .map_err(|_| Error::Manifest("checkpoint: non-utf8 name".into()))?;
+            let rank = u32::from_le_bytes(take(&mut i, 4)?.try_into().unwrap()) as usize;
+            let mut shape = Vec::with_capacity(rank);
+            for _ in 0..rank {
+                shape.push(u64::from_le_bytes(take(&mut i, 8)?.try_into().unwrap()) as usize);
+            }
+            let numel: usize = shape.iter().product();
+            let raw = take(&mut i, numel * 4)?;
+            let data: Vec<f32> = raw
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                .collect();
+            names.push(name);
+            tensors.push(Tensor::new(shape, data).map_err(|e| Error::Manifest(e.to_string()))?);
+        }
+        Ok(ParamSet { names, tensors })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn specs() -> Vec<TensorSpec> {
+        vec![
+            TensorSpec { name: "q.w0".into(), shape: vec![4, 8] },
+            TensorSpec { name: "q.b0".into(), shape: vec![8] },
+            TensorSpec { name: "q.w1".into(), shape: vec![8, 2] },
+            TensorSpec { name: "q.b1".into(), shape: vec![2] },
+        ]
+    }
+
+    #[test]
+    fn init_shapes_and_scale() {
+        let mut rng = Pcg32::new(1, 1);
+        let p = ParamSet::init(&specs(), &mut rng);
+        assert_eq!(p.len(), 4);
+        assert_eq!(p.numel(), 4 * 8 + 8 + 8 * 2 + 2);
+        let w0 = p.get("q.w0").unwrap();
+        let bound = (6.0f32 / 4.0).sqrt();
+        assert!(w0.data().iter().all(|x| x.abs() <= bound));
+        assert!(w0.std() > 0.1, "weights should not be degenerate");
+        assert!(p.get("q.b0").unwrap().data().iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn save_load_round_trip() {
+        let mut rng = Pcg32::new(2, 1);
+        let p = ParamSet::init(&specs(), &mut rng);
+        let path = std::env::temp_dir().join("quarl_params_test.qprm");
+        p.save(&path).unwrap();
+        let q = ParamSet::load(&path).unwrap();
+        assert_eq!(p, q);
+    }
+
+    #[test]
+    fn load_rejects_garbage() {
+        let path = std::env::temp_dir().join("quarl_params_bad.qprm");
+        std::fs::write(&path, b"NOPE").unwrap();
+        assert!(ParamSet::load(&path).is_err());
+    }
+
+    #[test]
+    fn polyak_moves_toward_online() {
+        let mut rng = Pcg32::new(3, 1);
+        let online = ParamSet::init(&specs(), &mut rng);
+        let mut target = online.zeros_like();
+        target.polyak_from(&online, 0.5).unwrap();
+        let w_t = target.get("q.w0").unwrap().data()[0];
+        let w_o = online.get("q.w0").unwrap().data()[0];
+        assert!((w_t - 0.5 * w_o).abs() < 1e-7);
+        // tau=1 copies exactly
+        target.polyak_from(&online, 1.0).unwrap();
+        assert_eq!(target.get("q.w0").unwrap().data()[0], w_o);
+    }
+}

@@ -1,0 +1,248 @@
+//! Minimal row-major f32 tensor used throughout the coordinator.
+//!
+//! This is deliberately small: the heavy math happens inside the AOT
+//! XLA programs (Layer 2) or the int8 inference engine; the coordinator
+//! only needs shape-carrying buffers for observations, batches, and
+//! parameters, plus a few reductions for quantization statistics.
+
+use crate::error::{Error, Result};
+
+/// A dense row-major f32 tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl Tensor {
+    /// Build from a shape and data; validates element count.
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Result<Self> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            return Err(Error::Shape(format!(
+                "shape {:?} wants {} elements, got {}",
+                shape,
+                n,
+                data.len()
+            )));
+        }
+        Ok(Tensor { shape, data })
+    }
+
+    /// All-zeros tensor.
+    pub fn zeros(shape: Vec<usize>) -> Self {
+        let n = shape.iter().product();
+        Tensor { shape, data: vec![0.0; n] }
+    }
+
+    /// Filled with a constant.
+    pub fn full(shape: Vec<usize>, v: f32) -> Self {
+        let n = shape.iter().product();
+        Tensor { shape, data: vec![v; n] }
+    }
+
+    /// 1-D tensor from a slice.
+    pub fn vec1(xs: &[f32]) -> Self {
+        Tensor { shape: vec![xs.len()], data: xs.to_vec() }
+    }
+
+    /// Scalar (rank-0) tensor.
+    pub fn scalar(v: f32) -> Self {
+        Tensor { shape: vec![], data: vec![v] }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn rank(&self) -> usize {
+        self.shape.len()
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_data(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Reinterpret with a new shape of equal element count.
+    pub fn reshape(mut self, shape: Vec<usize>) -> Result<Self> {
+        let n: usize = shape.iter().product();
+        if n != self.data.len() {
+            return Err(Error::Shape(format!(
+                "cannot reshape {} elements into {:?}",
+                self.data.len(),
+                shape
+            )));
+        }
+        self.shape = shape;
+        Ok(self)
+    }
+
+    /// Element at a 2-D index (row-major).
+    #[inline]
+    pub fn at2(&self, i: usize, j: usize) -> f32 {
+        debug_assert_eq!(self.rank(), 2);
+        self.data[i * self.shape[1] + j]
+    }
+
+    /// Row slice of a rank-2 tensor.
+    pub fn row(&self, i: usize) -> &[f32] {
+        assert_eq!(self.rank(), 2, "row() on rank-{} tensor", self.rank());
+        let w = self.shape[1];
+        &self.data[i * w..(i + 1) * w]
+    }
+
+    /// Minimum element (0.0 for empty per affine-quant convention).
+    pub fn min(&self) -> f32 {
+        self.data.iter().copied().fold(f32::INFINITY, f32::min)
+    }
+
+    /// Maximum element.
+    pub fn max(&self) -> f32 {
+        self.data.iter().copied().fold(f32::NEG_INFINITY, f32::max)
+    }
+
+    /// Mean of all elements.
+    pub fn mean(&self) -> f32 {
+        if self.data.is_empty() {
+            return 0.0;
+        }
+        self.data.iter().sum::<f32>() / self.data.len() as f32
+    }
+
+    /// Population standard deviation.
+    pub fn std(&self) -> f32 {
+        if self.data.is_empty() {
+            return 0.0;
+        }
+        let m = self.mean();
+        let var = self.data.iter().map(|x| (x - m) * (x - m)).sum::<f32>() / self.data.len() as f32;
+        var.sqrt()
+    }
+
+    /// Index of the maximum element (first on ties).
+    pub fn argmax(&self) -> usize {
+        let mut best = 0;
+        for (i, &v) in self.data.iter().enumerate() {
+            if v > self.data[best] {
+                best = i;
+            }
+        }
+        best
+    }
+
+    /// Concatenate rank-1 tensors / rows into a rank-2 batch.
+    pub fn stack_rows(rows: &[&[f32]]) -> Result<Self> {
+        if rows.is_empty() {
+            return Err(Error::Shape("stack_rows of zero rows".into()));
+        }
+        let w = rows[0].len();
+        let mut data = Vec::with_capacity(rows.len() * w);
+        for (i, r) in rows.iter().enumerate() {
+            if r.len() != w {
+                return Err(Error::Shape(format!(
+                    "stack_rows: row {i} has len {} expected {w}",
+                    r.len()
+                )));
+            }
+            data.extend_from_slice(r);
+        }
+        Tensor::new(vec![rows.len(), w], data)
+    }
+}
+
+/// Softmax over a logits slice, written into `out` (numerically stable).
+pub fn softmax_into(logits: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(logits.len(), out.len());
+    let m = logits.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+    let mut z = 0.0;
+    for (o, &l) in out.iter_mut().zip(logits) {
+        let e = (l - m).exp();
+        *o = e;
+        z += e;
+    }
+    let inv = 1.0 / z;
+    for o in out.iter_mut() {
+        *o *= inv;
+    }
+}
+
+/// Softmax returning a fresh Vec.
+pub fn softmax(logits: &[f32]) -> Vec<f32> {
+    let mut out = vec![0.0; logits.len()];
+    softmax_into(logits, &mut out);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn new_validates_count() {
+        assert!(Tensor::new(vec![2, 3], vec![0.0; 6]).is_ok());
+        assert!(Tensor::new(vec![2, 3], vec![0.0; 5]).is_err());
+    }
+
+    #[test]
+    fn reshape_round_trip() {
+        let t = Tensor::vec1(&[1.0, 2.0, 3.0, 4.0]).reshape(vec![2, 2]).unwrap();
+        assert_eq!(t.at2(1, 0), 3.0);
+        assert!(t.clone().reshape(vec![3, 2]).is_err());
+    }
+
+    #[test]
+    fn reductions() {
+        let t = Tensor::vec1(&[1.0, -2.0, 3.0]);
+        assert_eq!(t.min(), -2.0);
+        assert_eq!(t.max(), 3.0);
+        assert!((t.mean() - 2.0 / 3.0).abs() < 1e-6);
+        assert_eq!(t.argmax(), 2);
+    }
+
+    #[test]
+    fn std_of_constant_is_zero() {
+        assert_eq!(Tensor::full(vec![5], 3.0).std(), 0.0);
+    }
+
+    #[test]
+    fn stack_rows_shapes() {
+        let a = [1.0, 2.0];
+        let b = [3.0, 4.0];
+        let t = Tensor::stack_rows(&[&a, &b]).unwrap();
+        assert_eq!(t.shape(), &[2, 2]);
+        assert_eq!(t.row(1), &[3.0, 4.0]);
+        let c = [5.0];
+        assert!(Tensor::stack_rows(&[&a, &c]).is_err());
+    }
+
+    #[test]
+    fn softmax_sums_to_one_and_orders() {
+        let p = softmax(&[1.0, 2.0, 3.0]);
+        let s: f32 = p.iter().sum();
+        assert!((s - 1.0).abs() < 1e-6);
+        assert!(p[2] > p[1] && p[1] > p[0]);
+    }
+
+    #[test]
+    fn softmax_stable_for_large_logits() {
+        let p = softmax(&[1000.0, 1000.0]);
+        assert!((p[0] - 0.5).abs() < 1e-6);
+        assert!(p.iter().all(|x| x.is_finite()));
+    }
+}

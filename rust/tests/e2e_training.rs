@@ -1,0 +1,122 @@
+//! End-to-end integration: abbreviated training runs through the full
+//! Rust -> PJRT -> AOT-program stack for every algorithm, plus PTQ and
+//! QAT evaluation paths. These are smoke-scale (seconds, not minutes);
+//! convergence-scale runs live in the experiment harness.
+
+use quarl::algos::{a2c, ddpg, dqn, ppo, QuantSchedule};
+use quarl::coordinator::{evaluate, EvalMode};
+use quarl::quant::PtqMethod;
+use quarl::runtime::Runtime;
+
+fn artifacts() -> Option<Runtime> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.json").exists().then(|| Runtime::new(dir).unwrap())
+}
+
+#[test]
+fn dqn_short_run_and_all_eval_modes() {
+    let Some(rt) = artifacts() else { return };
+    let mut cfg = dqn::DqnConfig::new("cartpole");
+    cfg.total_steps = 2_000;
+    cfg.warmup = 200;
+    cfg.seed = 1;
+    let (policy, log) = dqn::train(&rt, &cfg).unwrap();
+    assert!(log.episodes > 0);
+    for mode in [
+        EvalMode::AsTrained,
+        EvalMode::Ptq(PtqMethod::Fp16),
+        EvalMode::Ptq(PtqMethod::Int(8)),
+        EvalMode::Ptq(PtqMethod::Int(2)),
+        EvalMode::Ptq(PtqMethod::IntPerAxis(8)),
+    ] {
+        let e = evaluate(&rt, &policy, 3, mode, 2).unwrap();
+        assert!(e.mean_reward.is_finite());
+        assert!(e.mean_reward >= 1.0, "cartpole episodes are >= 1 step");
+    }
+}
+
+#[test]
+fn dqn_qat_short_run_trains_and_captures_ranges() {
+    let Some(rt) = artifacts() else { return };
+    let mut cfg = dqn::DqnConfig::new("cartpole");
+    cfg.total_steps = 2_000;
+    cfg.warmup = 200;
+    cfg.quant = QuantSchedule::qat(8, 1_000);
+    cfg.seed = 2;
+    let (policy, _log) = dqn::train(&rt, &cfg).unwrap();
+    // ranges must have been monitored (non-degenerate rows)
+    let qs = policy.qstate.data();
+    assert!(qs.iter().any(|&v| v != 0.0), "qstate never updated");
+    let e = evaluate(&rt, &policy, 3, EvalMode::AsTrained, 3).unwrap();
+    assert!(e.mean_reward.is_finite());
+}
+
+#[test]
+fn a2c_and_ppo_short_runs() {
+    let Some(rt) = artifacts() else { return };
+    let mut ca = a2c::A2cConfig::new("cartpole");
+    ca.total_steps = 4_000;
+    ca.seed = 3;
+    let (pa, la) = a2c::train(&rt, &ca).unwrap();
+    assert!(la.episodes > 0);
+    assert!(evaluate(&rt, &pa, 3, EvalMode::AsTrained, 1).unwrap().mean_reward.is_finite());
+
+    let mut cp = ppo::PpoConfig::new("cartpole");
+    cp.total_steps = 4_000;
+    cp.seed = 3;
+    let (pp, lp) = ppo::train(&rt, &cp).unwrap();
+    assert!(lp.episodes > 0);
+    let e = evaluate(&rt, &pp, 3, EvalMode::Ptq(PtqMethod::Int(8)), 1).unwrap();
+    assert!(e.mean_reward.is_finite());
+    assert!(e.action_dist_variance >= 0.0);
+}
+
+#[test]
+fn ddpg_short_run() {
+    let Some(rt) = artifacts() else { return };
+    let mut cfg = ddpg::DdpgConfig::new("pendulum");
+    cfg.total_steps = 1_500;
+    cfg.warmup = 300;
+    cfg.seed = 4;
+    let (policy, log) = ddpg::train(&rt, &cfg).unwrap();
+    assert!(log.episodes > 0);
+    let e = evaluate(&rt, &policy, 2, EvalMode::AsTrained, 1).unwrap();
+    assert!(e.mean_reward.is_finite() && e.mean_reward <= 0.0);
+}
+
+#[test]
+fn native_engines_match_xla_act_program() {
+    // The deployment engines and the XLA act program must agree on the
+    // greedy action for a trained DQN policy (fp32 engine near-exactly).
+    let Some(rt) = artifacts() else { return };
+    let mut cfg = dqn::DqnConfig::new("cartpole");
+    cfg.total_steps = 1_500;
+    cfg.warmup = 200;
+    cfg.seed = 5;
+    let (policy, _) = dqn::train(&rt, &cfg).unwrap();
+
+    let act = rt.load(&format!("{}_act", policy.arch)).unwrap();
+    let mut f32e = quarl::inference::EngineF32::from_params(&policy.params).unwrap();
+    let mut rng = quarl::rng::Pcg32::new(6, 6);
+    let mut agree = 0;
+    let trials = 50;
+    for _ in 0..trials {
+        let obs: Vec<f32> = (0..4).map(|_| rng.uniform_range(-0.2, 0.2)).collect();
+        let mut inputs: Vec<quarl::tensor::Tensor> = policy.params.tensors.clone();
+        inputs.push(policy.qstate.clone());
+        inputs.push(quarl::tensor::Tensor::new(vec![1, 4], obs.clone()).unwrap());
+        inputs.push(quarl::tensor::Tensor::vec1(&[0.0, 0.0, 1e9]));
+        let q_xla = act.run(&inputs).unwrap();
+        let mut q_native = vec![0.0f32; 2];
+        f32e.forward(&obs, &mut q_native);
+        let am = |v: &[f32]| {
+            v.iter().enumerate().fold((0, f32::NEG_INFINITY), |acc, (i, &x)| {
+                if x > acc.1 { (i, x) } else { acc }
+            }).0
+        };
+        if am(q_xla[0].row(0)) == am(&q_native) {
+            agree += 1;
+        }
+    }
+    assert!(agree >= trials - 2, "argmax agreement {agree}/{trials}");
+}

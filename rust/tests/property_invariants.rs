@@ -1,0 +1,239 @@
+//! Property-based tests (hand-rolled generators — no proptest offline):
+//! randomized sweeps over quantizer, replay, rollout, and environment
+//! invariants. Each property runs against a few hundred generated cases
+//! with shrink-free reporting (the failing seed is printed).
+
+use quarl::envs::api::{Action, ActionSpace};
+use quarl::envs::registry::{make_env, ENV_IDS};
+use quarl::quant::affine::QParams;
+use quarl::quant::{fake_quant_slice, fp16_roundtrip};
+use quarl::replay::{PrioritizedReplay, ReplayBuffer, SumTree, Transition};
+use quarl::rng::Pcg32;
+
+fn rand_vec(rng: &mut Pcg32, n: usize, scale: f32) -> Vec<f32> {
+    (0..n).map(|_| rng.normal_ms(0.0, scale)).collect()
+}
+
+// ---------------------------------------------------------------- quant
+
+#[test]
+fn prop_quant_near_idempotent() {
+    // Re-quantizing at the same params moves a value by at most one grid
+    // step. (Exact idempotence does not hold for the paper's floor-based
+    // quantizer in float arithmetic: delta*(q-z)/delta can round to just
+    // below an integer, and floor drops it one level.)
+    let mut rng = Pcg32::new(101, 1);
+    for case in 0..200 {
+        let n = 1 + rng.below_usize(64);
+        let bits = 2 + rng.below(10);
+        let scale = 10f32.powf(rng.uniform_range(-2.0, 2.0));
+        let mut xs = rand_vec(&mut rng, n, scale);
+        let qp = fake_quant_slice(&mut xs, bits).unwrap();
+        let once = xs.clone();
+        for x in xs.iter_mut() {
+            *x = qp.roundtrip(*x);
+        }
+        for (i, (a, b)) in once.iter().zip(&xs).enumerate() {
+            assert!(
+                (a - b).abs() <= qp.delta * 1.0001,
+                "case {case} bits {bits} idx {i}: {a} -> {b} (delta {})",
+                qp.delta
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_quant_output_on_grid_and_bounded() {
+    let mut rng = Pcg32::new(102, 1);
+    for case in 0..200 {
+        let n = 1 + rng.below_usize(64);
+        let bits = 1 + rng.below(12);
+        let xs = rand_vec(&mut rng, n, 3.0);
+        let lo = xs.iter().copied().fold(f32::INFINITY, f32::min).min(0.0);
+        let hi = xs.iter().copied().fold(f32::NEG_INFINITY, f32::max).max(0.0);
+        let mut q = xs.clone();
+        let qp = fake_quant_slice(&mut q, bits).unwrap();
+        for (i, &v) in q.iter().enumerate() {
+            assert!(
+                v >= qp.dequantize(0.0) - 1e-5 && v <= qp.dequantize(qp.levels - 1.0) + 1e-5,
+                "case {case}: {v} outside representable span"
+            );
+            // error bounded by one grid step inside the observed range
+            if xs[i] >= lo && xs[i] <= hi {
+                assert!(
+                    (v - xs[i]).abs() <= qp.delta + 1e-5,
+                    "case {case} idx {i}: err {} > delta {}",
+                    (v - xs[i]).abs(),
+                    qp.delta
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_fp16_monotone() {
+    // fp16 rounding preserves order (weak monotonicity).
+    let mut rng = Pcg32::new(103, 1);
+    for _ in 0..200 {
+        let a = rng.normal_ms(0.0, 100.0);
+        let b = rng.normal_ms(0.0, 100.0);
+        let (lo, hi) = if a <= b { (a, b) } else { (b, a) };
+        assert!(fp16_roundtrip(lo) <= fp16_roundtrip(hi), "{lo} {hi}");
+    }
+}
+
+#[test]
+fn prop_qparams_zero_exact_for_any_range() {
+    let mut rng = Pcg32::new(104, 1);
+    for _ in 0..300 {
+        let vmin = -(10f32.powf(rng.uniform_range(-3.0, 3.0)));
+        let vmax = 10f32.powf(rng.uniform_range(-3.0, 3.0));
+        let bits = 1 + rng.below(14);
+        let qp = QParams::from_range(vmin, vmax, bits).unwrap();
+        assert_eq!(qp.roundtrip(0.0), 0.0, "range [{vmin}, {vmax}] bits {bits}");
+    }
+}
+
+// ---------------------------------------------------------------- replay
+
+#[test]
+fn prop_sum_tree_total_equals_sum() {
+    let mut rng = Pcg32::new(105, 1);
+    for _ in 0..50 {
+        let cap = 1 + rng.below_usize(200);
+        let mut tree = SumTree::new(cap);
+        let mut direct = vec![0.0f32; cap];
+        for _ in 0..300 {
+            let i = rng.below_usize(cap);
+            let p = rng.uniform() * 10.0;
+            tree.set(i, p);
+            direct[i] = p;
+        }
+        let want: f32 = direct.iter().sum();
+        assert!((tree.total() - want).abs() <= want.abs() * 1e-4 + 1e-4);
+        // find() always lands on a positive-priority leaf
+        if want > 0.0 {
+            for _ in 0..20 {
+                let u = rng.uniform() * tree.total();
+                let leaf = tree.find(u);
+                assert!(direct[leaf] > 0.0, "find landed on zero-priority leaf {leaf}");
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_replay_gather_consistency() {
+    // Whatever is pushed comes back intact, keyed by the reward tag.
+    let mut rng = Pcg32::new(106, 1);
+    for _ in 0..30 {
+        let cap = 8 + rng.below_usize(64);
+        let obs_dim = 1 + rng.below_usize(6);
+        let mut buf = ReplayBuffer::new(cap, obs_dim, 1);
+        let n = rng.below_usize(2 * cap) + 1;
+        for k in 0..n {
+            let obs: Vec<f32> = (0..obs_dim).map(|d| (k * 10 + d) as f32).collect();
+            let next: Vec<f32> = obs.iter().map(|v| v + 1.0).collect();
+            buf.push(Transition {
+                obs: &obs,
+                action: &[(k % 4) as f32],
+                reward: k as f32,
+                next_obs: &next,
+                done: k % 3 == 0,
+            });
+        }
+        let b = buf.sample(16, &mut rng);
+        for row in 0..16 {
+            let k = b.rewards.data()[row] as usize;
+            assert_eq!(b.obs.at2(row, 0), (k * 10) as f32);
+            assert_eq!(b.next_obs.at2(row, 0), (k * 10) as f32 + 1.0);
+            assert_eq!(b.actions.data()[row], (k % 4) as f32);
+            assert_eq!(b.dones.data()[row], (k % 3 == 0) as u8 as f32);
+        }
+    }
+}
+
+#[test]
+fn prop_per_weights_in_unit_interval() {
+    let mut rng = Pcg32::new(107, 1);
+    for _ in 0..20 {
+        let mut per = PrioritizedReplay::new(64, 2, 1, rng.uniform_range(0.3, 1.0));
+        for k in 0..40 {
+            let o = [k as f32, 0.0];
+            per.push(Transition { obs: &o, action: &[0.0], reward: 0.0, next_obs: &o, done: false });
+        }
+        let idx: Vec<usize> = (0..40).collect();
+        let td: Vec<f32> = (0..40).map(|_| rng.uniform() * 5.0).collect();
+        per.update_priorities(&idx, &td);
+        let beta = rng.uniform();
+        let b = per.sample(16, beta, &mut rng);
+        for &w in b.weights.data() {
+            assert!(w > 0.0 && w <= 1.0 + 1e-6, "weight {w} outside (0, 1]");
+        }
+    }
+}
+
+// ------------------------------------------------------------------ envs
+
+#[test]
+fn prop_every_env_contract_random_seeds() {
+    let mut rng = Pcg32::new(108, 1);
+    for id in ENV_IDS {
+        for _ in 0..2 {
+            let seed = rng.next_u64();
+            let mut env = make_env(id).unwrap();
+            let mut er = Pcg32::new(seed, 5);
+            let mut obs = vec![0.0f32; env.obs_dim()];
+            env.reset(&mut er, &mut obs);
+            let space = env.action_space();
+            let mut steps = 0;
+            loop {
+                let a = match &space {
+                    ActionSpace::Discrete(n) => Action::Discrete(er.below_usize(*n)),
+                    ActionSpace::Continuous(d) => Action::Continuous(
+                        (0..*d).map(|_| er.uniform_range(-1.0, 1.0)).collect(),
+                    ),
+                };
+                let s = env.step(&a, &mut er, &mut obs);
+                steps += 1;
+                assert!(s.reward.is_finite(), "{id} seed {seed}");
+                assert!(obs.iter().all(|x| x.is_finite()), "{id} seed {seed}");
+                if s.done {
+                    break;
+                }
+                assert!(steps <= env.max_steps() + 1, "{id} seed {seed}: no done");
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_env_obs_within_sane_bounds() {
+    // Feature observations stay within a loose envelope — a policy's
+    // quantization ranges cannot explode from env outputs.
+    let mut rng = Pcg32::new(109, 1);
+    for id in ENV_IDS {
+        let mut env = make_env(id).unwrap();
+        let mut er = Pcg32::new(7, 9);
+        let mut obs = vec![0.0f32; env.obs_dim()];
+        env.reset(&mut er, &mut obs);
+        let space = env.action_space();
+        for _ in 0..300 {
+            let a = match &space {
+                ActionSpace::Discrete(n) => Action::Discrete(rng.below_usize(*n)),
+                ActionSpace::Continuous(d) => Action::Continuous(
+                    (0..*d).map(|_| rng.uniform_range(-1.0, 1.0)).collect(),
+                ),
+            };
+            let s = env.step(&a, &mut er, &mut obs);
+            for (i, &v) in obs.iter().enumerate() {
+                assert!(v.abs() < 60.0, "{id} obs[{i}] = {v} out of envelope");
+            }
+            if s.done {
+                env.reset(&mut er, &mut obs);
+            }
+        }
+    }
+}

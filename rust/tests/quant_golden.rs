@@ -1,0 +1,123 @@
+//! Golden parity: the Rust affine/fp16 quantizers must match the Python
+//! oracle (python/compile/kernels/ref.py) bit-for-bit.
+//!
+//! Vectors generated with numpy seed 42 via ref.fake_quant_dynamic_ref /
+//! ref.fp16_quant_ref — see the command in the repo history; regenerate
+//! with `python -m tests.gen_golden` if the quantizer spec ever changes.
+
+use quarl::quant::{fake_quant_slice, fp16_quant_slice};
+
+pub const GOLDEN_X: [f32; 16] = [
+    1.0180190801620483,
+    -1.2679729461669922,
+    1.7757670879364014,
+    2.0989599227905273,
+    -2.8167598247528076,
+    -1.7137051820755005,
+    0.717328667640686,
+    -0.03761240839958191,
+    0.4714380204677582,
+    -0.9501746892929077,
+    1.99497652053833,
+    1.8222463130950928,
+    0.6122521758079529,
+    2.4163100719451904,
+    1.294765830039978,
+    -0.9607971906661987,
+];
+pub const GOLDEN_INT2: [f32; 16] = [
+    0.0,
+    -1.3082674741744995,
+    1.3082674741744995,
+    1.3082674741744995,
+    -2.616534948348999,
+    -2.616534948348999,
+    0.0,
+    -1.3082674741744995,
+    0.0,
+    -1.3082674741744995,
+    1.3082674741744995,
+    1.3082674741744995,
+    0.0,
+    1.3082674741744995,
+    0.0,
+    -1.3082674741744995,
+];
+pub const GOLDEN_INT4: [f32; 16] = [
+    0.9812005758285522,
+    -1.3082674741744995,
+    1.6353343725204468,
+    1.9624011516571045,
+    -2.616534948348999,
+    -1.9624011516571045,
+    0.6541337370872498,
+    -0.3270668685436249,
+    0.3270668685436249,
+    -0.9812005758285522,
+    1.9624011516571045,
+    1.6353343725204468,
+    0.3270668685436249,
+    2.2894680500030518,
+    0.9812005758285522,
+    -0.9812005758285522,
+];
+pub const GOLDEN_INT8: [f32; 16] = [
+    1.0016422271728516,
+    -1.2878258228302002,
+    1.7579843997955322,
+    2.0850512981414795,
+    -2.8005101680755615,
+    -1.7171010971069336,
+    0.7154587507247925,
+    -0.04088335856795311,
+    0.4701586365699768,
+    -0.9607589244842529,
+    1.9828429222106934,
+    1.8193094730377197,
+    0.592808723449707,
+    2.4121181964874268,
+    1.2878258228302002,
+    -0.9812005758285522,
+];
+pub const GOLDEN_FP16: [f32; 16] = [
+    1.017578125,
+    -1.267578125,
+    1.775390625,
+    2.099609375,
+    -2.81640625,
+    -1.7138671875,
+    0.71728515625,
+    -0.03759765625,
+    0.471435546875,
+    -0.9501953125,
+    1.9951171875,
+    1.822265625,
+    0.6123046875,
+    2.416015625,
+    1.294921875,
+    -0.9609375,
+];
+
+#[test]
+fn affine_matches_python_oracle_bit_exact() {
+    for (bits, want) in [(2u32, GOLDEN_INT2), (4, GOLDEN_INT4), (8, GOLDEN_INT8)] {
+        let mut got = GOLDEN_X;
+        fake_quant_slice(&mut got, bits).unwrap();
+        for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+            assert_eq!(
+                g.to_bits(),
+                w.to_bits(),
+                "int{bits} idx {i}: rust {g} vs python {w}"
+            );
+        }
+    }
+}
+
+#[test]
+fn fp16_matches_python_oracle_bit_exact() {
+    let mut got = GOLDEN_X;
+    fp16_quant_slice(&mut got);
+    for (i, (g, w)) in got.iter().zip(&GOLDEN_FP16).enumerate() {
+        assert_eq!(g.to_bits(), w.to_bits(), "fp16 idx {i}: rust {g} vs python {w}");
+    }
+}

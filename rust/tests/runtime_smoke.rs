@@ -1,0 +1,100 @@
+//! Integration: load real AOT artifacts and execute them through PJRT.
+//!
+//! Requires `make artifacts` to have run (skipped otherwise, as in CI
+//! without the python toolchain).
+
+use quarl::rng::Pcg32;
+use quarl::runtime::{ParamSet, Runtime};
+use quarl::tensor::Tensor;
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.json").exists().then_some(dir)
+}
+
+#[test]
+fn act_program_runs_and_is_deterministic() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: no artifacts");
+        return;
+    };
+    let rt = Runtime::new(&dir).unwrap();
+    let arch = rt.manifest.arch_for("dqn/cartpole").unwrap().to_string();
+    let act = rt.load(&format!("{arch}_act")).unwrap();
+
+    let n_params = act.spec.count("n_params").unwrap();
+    let mut rng = Pcg32::new(7, 1);
+    let params = ParamSet::init(&act.spec.inputs[..n_params], &mut rng);
+
+    let n_q = act.spec.n_qstate;
+    let obs_spec = &act.spec.inputs[act.spec.input_index("obs").unwrap()];
+    let mut inputs: Vec<Tensor> = params.tensors.clone();
+    inputs.push(Tensor::zeros(vec![n_q, 2]));
+    inputs.push(Tensor::full(obs_spec.shape.clone(), 0.1));
+    inputs.push(Tensor::vec1(&[0.0, 0.0, 1000.0]));
+
+    let out1 = act.run(&inputs).unwrap();
+    let out2 = act.run(&inputs).unwrap();
+    assert_eq!(out1.len(), 1);
+    assert_eq!(out1[0].shape(), &[1, 2]);
+    assert_eq!(out1[0].data(), out2[0].data(), "program must be pure");
+    assert!(out1[0].data().iter().all(|x| x.is_finite()));
+}
+
+#[test]
+fn train_program_updates_params_and_reduces_td() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: no artifacts");
+        return;
+    };
+    let rt = Runtime::new(&dir).unwrap();
+    let arch = rt.manifest.arch_for("dqn/cartpole").unwrap().to_string();
+    let train = rt.load(&format!("{arch}_train")).unwrap();
+    let spec = &train.spec;
+    let n_params = spec.count("n_params").unwrap();
+    let b = spec.arch.train_batch;
+    let obs_dim = spec.arch.obs_dim;
+
+    let mut rng = Pcg32::new(11, 1);
+    let params = ParamSet::init(&spec.inputs[..n_params], &mut rng);
+    let zeros = params.zeros_like();
+
+    // inputs: params, target, m, v, qstate, obs, act, rew, nobs, done, isw, hyper
+    let mut inputs: Vec<Tensor> = Vec::new();
+    inputs.extend(params.tensors.clone());
+    inputs.extend(params.tensors.clone()); // target = online
+    inputs.extend(zeros.tensors.clone());
+    inputs.extend(zeros.tensors.clone());
+    inputs.push(Tensor::zeros(vec![spec.n_qstate, 2]));
+    let obs: Vec<f32> = (0..b * obs_dim).map(|_| rng.uniform_range(-1.0, 1.0)).collect();
+    inputs.push(Tensor::new(vec![b, obs_dim], obs.clone()).unwrap());
+    inputs.push(Tensor::vec1(&vec![0.0; b]));
+    inputs.push(Tensor::vec1(&vec![1.0; b])); // reward 1 everywhere
+    inputs.push(Tensor::new(vec![b, obs_dim], obs).unwrap());
+    inputs.push(Tensor::vec1(&vec![0.0; b]));
+    inputs.push(Tensor::vec1(&vec![1.0; b])); // uniform importance weights
+    inputs.push(Tensor::vec1(&[1e-3, 0.99, 0.0, 0.0, 1e9, 1.0]));
+
+    let out = train.run(&inputs).unwrap();
+    assert_eq!(out.len(), spec.outputs.len());
+    let loss0 = out[spec.output_index("loss").unwrap()].data()[0];
+    assert!(loss0.is_finite() && loss0 > 0.0, "loss {loss0}");
+
+    // Step 50 times feeding params back; TD loss on the fixed batch must drop.
+    let mut cur = out;
+    for t in 2..50 {
+        for i in 0..n_params {
+            inputs[i] = cur[i].clone(); // online params
+            inputs[2 * n_params + i] = cur[n_params + i].clone(); // m
+            inputs[3 * n_params + i] = cur[2 * n_params + i].clone(); // v
+        }
+        let h = inputs.last_mut().unwrap();
+        h.data_mut()[5] = t as f32;
+        cur = train.run(&inputs).unwrap();
+    }
+    let loss_n = cur[spec.output_index("loss").unwrap()].data()[0];
+    assert!(
+        loss_n < loss0 * 0.5,
+        "training on a fixed batch should reduce loss: {loss0} -> {loss_n}"
+    );
+}
