@@ -4,7 +4,15 @@
 //! a Table-2-style row.
 //!
 //!     make artifacts && cargo run --release --example quickstart
+//!
+//! Pass `--actorq` to train through the ActorQ actor-learner driver
+//! instead (paper §3): four int8 actor threads collect experience on the
+//! pure-Rust deployment engines while the learner trains in fp32 —
+//! `dqn::train_actorq` / `ddpg::train_actorq` are the entry points.
+//!
+//!     cargo run --release --example quickstart -- --actorq
 
+use quarl::actorq::{ActorPrecision, ActorQConfig};
 use quarl::algos::dqn::{self, DqnConfig};
 use quarl::coordinator::{evaluate, EvalMode};
 use quarl::quant::{relative_error_pct, PtqMethod};
@@ -18,15 +26,41 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     cfg.total_steps = 40_000;
     cfg.log_every = 2_000;
     cfg.seed = 3;
-    println!("training dqn/cartpole for {} steps ...", cfg.total_steps);
-    let (policy, log) = dqn::train(&rt, &cfg)?;
-    println!(
-        "trained: episodes={} final_return={:.1} wall={:.1}s (train-exec {:.1}s)",
-        log.episodes, log.final_return, log.wall_secs, log.train_exec_secs
-    );
-    for (s, r) in &log.returns {
-        println!("  step {s:>6}  return {r:.1}");
-    }
+
+    let use_actorq = std::env::args().any(|a| a == "--actorq");
+    let policy = if use_actorq {
+        let acfg = ActorQConfig::new(4).with_precision(ActorPrecision::Int8);
+        println!(
+            "training dqn/cartpole (ActorQ: {} int8 actors) for {} steps ...",
+            acfg.n_actors, cfg.total_steps
+        );
+        let (policy, log) = dqn::train_actorq(&rt, &cfg, &acfg)?;
+        println!(
+            "trained: episodes={} final_return={:.1} wall={:.1}s \
+             ({} trains, {} broadcasts, {:.0} env steps/s)",
+            log.episodes,
+            log.final_return,
+            log.wall_secs,
+            log.train_steps,
+            log.broadcasts,
+            log.steps_per_sec
+        );
+        for (s, r) in &log.returns {
+            println!("  step {s:>6}  return {r:.1}");
+        }
+        policy
+    } else {
+        println!("training dqn/cartpole for {} steps ...", cfg.total_steps);
+        let (policy, log) = dqn::train(&rt, &cfg)?;
+        println!(
+            "trained: episodes={} final_return={:.1} wall={:.1}s (train-exec {:.1}s)",
+            log.episodes, log.final_return, log.wall_secs, log.train_exec_secs
+        );
+        for (s, r) in &log.returns {
+            println!("  step {s:>6}  return {r:.1}");
+        }
+        policy
+    };
 
     let fp32 = evaluate(&rt, &policy, 30, EvalMode::AsTrained, 1)?;
     let fp16 = evaluate(&rt, &policy, 30, EvalMode::Ptq(PtqMethod::Fp16), 1)?;

@@ -1,0 +1,309 @@
+//! The actor thread: a private vec-env, a local quantized policy copy,
+//! and an exploration rule, streaming transition batches to the learner.
+//!
+//! Actors are inference-only (paper §3): they never see fp32 master
+//! weights and never run the training stack — the policy arrives as a
+//! prebuilt deployment engine via [`crate::actorq::ParamBroadcast`], and
+//! refreshes are a lock-free version poll plus one engine clone.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::SyncSender;
+use std::sync::Arc;
+
+use crate::actorq::broadcast::ParamBroadcast;
+use crate::actorq::{ActorPrecision, ExperienceBatch, OwnedTransition};
+use crate::algos::common::EpsSchedule;
+use crate::envs::api::Action;
+use crate::envs::vec_env::VecEnv;
+use crate::error::Result;
+use crate::inference::{EngineF32, EngineInt8};
+use crate::rng::Pcg32;
+use crate::runtime::ParamSet;
+
+/// The actor-side policy: one of the two pure-Rust deployment engines.
+///
+/// Continuous heads are linear; the exploration rule clamps actions to
+/// [-1, 1] exactly like the synchronous DDPG driver does after noise.
+#[derive(Debug, Clone)]
+pub enum ActorEngine {
+    F32(EngineF32),
+    Int8(EngineInt8),
+}
+
+impl ActorEngine {
+    /// Build from fp32 parameters at the requested precision (this is the
+    /// quantize-on-broadcast step; it runs on the learner thread).
+    pub fn from_params(params: &ParamSet, precision: ActorPrecision) -> Result<ActorEngine> {
+        match precision {
+            ActorPrecision::Fp32 => EngineF32::from_params(params).map(ActorEngine::F32),
+            ActorPrecision::Int8 => EngineInt8::from_params(params).map(ActorEngine::Int8),
+        }
+    }
+
+    /// Single-observation forward pass into `out`.
+    #[inline]
+    pub fn forward(&mut self, x: &[f32], out: &mut [f32]) -> Result<()> {
+        match self {
+            ActorEngine::F32(e) => {
+                e.forward(x, out);
+                Ok(())
+            }
+            ActorEngine::Int8(e) => e.forward(x, out),
+        }
+    }
+
+    /// Output head width (actions for DQN, action dims for DDPG).
+    pub fn out_dim(&self) -> usize {
+        match self {
+            ActorEngine::F32(e) => e.layers.last().map(|l| l.out_dim).unwrap_or(0),
+            ActorEngine::Int8(e) => e.layers.last().map(|l| l.out_dim).unwrap_or(0),
+        }
+    }
+
+    /// Actor-side weight bytes (the paper's 4x traffic argument).
+    pub fn memory_bytes(&self) -> usize {
+        match self {
+            ActorEngine::F32(e) => e.memory_bytes(),
+            ActorEngine::Int8(e) => e.memory_bytes(),
+        }
+    }
+}
+
+/// Exploration rule an actor applies on top of the greedy head.
+///
+/// Schedules anneal on the actor's *local* step count against a local
+/// horizon (total budget / actor count), which reproduces the global
+/// schedule of the synchronous drivers without cross-thread coordination.
+#[derive(Debug, Clone, Copy)]
+pub enum Exploration {
+    /// Epsilon-greedy over the argmax head (DQN actors).
+    EpsGreedy { schedule: EpsSchedule, horizon: usize },
+    /// Uniform-random until `warmup` local steps, then additive Gaussian
+    /// noise annealed linearly to 30% (the sync DDPG recipe).
+    Gaussian { std: f32, horizon: usize, warmup: usize },
+}
+
+impl Exploration {
+    /// Pick an action from head outputs. Returns the env action and the
+    /// replay representation (index for discrete, vector for continuous).
+    pub fn select(
+        &self,
+        head: &[f32],
+        local_step: usize,
+        rng: &mut Pcg32,
+    ) -> (Action, Vec<f32>) {
+        match *self {
+            Exploration::EpsGreedy { schedule, horizon } => {
+                let eps = schedule.value(local_step, horizon.max(1));
+                let a = if rng.uniform() < eps {
+                    rng.below_usize(head.len())
+                } else {
+                    argmax(head)
+                };
+                (Action::Discrete(a), vec![a as f32])
+            }
+            Exploration::Gaussian { std, horizon, warmup } => {
+                let v: Vec<f32> = if local_step < warmup {
+                    head.iter().map(|_| rng.uniform_range(-1.0, 1.0)).collect()
+                } else {
+                    let frac = 1.0 - 0.7 * (local_step as f32 / horizon.max(1) as f32).min(1.0);
+                    head.iter()
+                        .map(|&mu| (mu + rng.normal_ms(0.0, std * frac)).clamp(-1.0, 1.0))
+                        .collect()
+                };
+                (Action::Continuous(v.clone()), v)
+            }
+        }
+    }
+}
+
+fn argmax(xs: &[f32]) -> usize {
+    xs.iter()
+        .enumerate()
+        .fold((0usize, f32::NEG_INFINITY), |acc, (i, &x)| if x > acc.1 { (i, x) } else { acc })
+        .0
+}
+
+/// End-of-run accounting returned by each actor thread.
+#[derive(Debug, Clone, Default)]
+pub struct ActorStats {
+    pub id: usize,
+    pub env_steps: usize,
+    pub batches_sent: usize,
+    pub episodes: usize,
+    /// Times the actor pulled a fresh parameter snapshot.
+    pub param_refreshes: usize,
+}
+
+/// Per-actor wiring handed to [`run_actor`] by the pool.
+pub(crate) struct ActorSetup {
+    pub id: usize,
+    pub envs: VecEnv,
+    pub exploration: Exploration,
+    pub flush_every: usize,
+    pub rng: Pcg32,
+}
+
+/// The actor thread body: step envs, flush transition batches, poll for
+/// fresh parameters between batches. Exits when `stop` is raised or the
+/// learner hangs up the channel.
+pub(crate) fn run_actor(
+    mut setup: ActorSetup,
+    broadcast: Arc<ParamBroadcast>,
+    tx: SyncSender<ExperienceBatch>,
+    stop: Arc<AtomicBool>,
+) -> ActorStats {
+    let snap = broadcast.latest();
+    let mut engine = snap.engine.clone();
+    let mut version = snap.version;
+    let out_dim = engine.out_dim();
+    let is_discrete = setup.envs.action_space().is_discrete();
+    debug_assert!(matches!(setup.exploration, Exploration::EpsGreedy { .. }) == is_discrete);
+
+    let obs_dim = setup.envs.obs_dim();
+    let n = setup.envs.n();
+    let mut head = vec![0.0f32; out_dim];
+    let mut obs_snap = vec![0.0f32; n * obs_dim];
+    let mut actions: Vec<Action> = Vec::with_capacity(n);
+    let mut reprs: Vec<Vec<f32>> = Vec::with_capacity(n);
+    let mut pending: Vec<OwnedTransition> = Vec::with_capacity(setup.flush_every);
+    let mut stats = ActorStats { id: setup.id, ..ActorStats::default() };
+
+    while !stop.load(Ordering::Relaxed) {
+        // Refresh the local policy copy when the learner has published.
+        if broadcast.version() != version {
+            let snap = broadcast.latest();
+            engine = snap.engine.clone();
+            version = snap.version;
+            stats.param_refreshes += 1;
+        }
+
+        // One lockstep sweep over the private envs.
+        obs_snap.copy_from_slice(setup.envs.obs());
+        actions.clear();
+        reprs.clear();
+        let mut forward_failed = false;
+        for e in 0..n {
+            let row = &obs_snap[e * obs_dim..(e + 1) * obs_dim];
+            if engine.forward(row, &mut head).is_err() {
+                forward_failed = true;
+                break;
+            }
+            let (action, repr) = setup.exploration.select(&head, stats.env_steps, &mut setup.rng);
+            actions.push(action);
+            reprs.push(repr);
+        }
+        if forward_failed {
+            // A malformed snapshot is a programming error on the learner
+            // side; stop collecting rather than poisoning the replay.
+            break;
+        }
+        let results = setup.envs.step(&actions);
+        for (e, (reward, done)) in results.iter().enumerate() {
+            pending.push(OwnedTransition {
+                obs: obs_snap[e * obs_dim..(e + 1) * obs_dim].to_vec(),
+                action: reprs[e].clone(),
+                reward: *reward,
+                next_obs: setup.envs.obs_row(e).to_vec(),
+                done: *done,
+            });
+        }
+        stats.env_steps += n;
+
+        if pending.len() >= setup.flush_every {
+            let episode_returns: Vec<f32> =
+                setup.envs.take_finished().iter().map(|s| s.ret).collect();
+            stats.episodes += episode_returns.len();
+            let batch = ExperienceBatch {
+                actor_id: setup.id,
+                param_version: version,
+                transitions: std::mem::replace(
+                    &mut pending,
+                    Vec::with_capacity(setup.flush_every),
+                ),
+                episode_returns,
+            };
+            // Blocking send = back-pressure when the learner lags; a send
+            // error means the learner dropped the receiver (shutdown).
+            if tx.send(batch).is_err() {
+                break;
+            }
+            stats.batches_sent += 1;
+        }
+    }
+    stats
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::TensorSpec;
+
+    fn mlp_params(dims: &[usize], seed: u64) -> ParamSet {
+        let mut specs = Vec::new();
+        for i in 0..dims.len() - 1 {
+            specs.push(TensorSpec { name: format!("q.w{i}"), shape: vec![dims[i], dims[i + 1]] });
+            specs.push(TensorSpec { name: format!("q.b{i}"), shape: vec![dims[i + 1]] });
+        }
+        let mut rng = Pcg32::new(seed, 1);
+        ParamSet::init(&specs, &mut rng)
+    }
+
+    #[test]
+    fn engine_wraps_both_precisions() {
+        let p = mlp_params(&[4, 16, 2], 3);
+        let x = [0.1f32, -0.2, 0.05, 0.3];
+        let mut of = vec![0.0; 2];
+        let mut oq = vec![0.0; 2];
+        let mut f = ActorEngine::from_params(&p, ActorPrecision::Fp32).unwrap();
+        let mut q = ActorEngine::from_params(&p, ActorPrecision::Int8).unwrap();
+        f.forward(&x, &mut of).unwrap();
+        q.forward(&x, &mut oq).unwrap();
+        assert_eq!(f.out_dim(), 2);
+        assert_eq!(q.out_dim(), 2);
+        assert!(of.iter().all(|v| v.is_finite()) && oq.iter().all(|v| v.is_finite()));
+        assert!(q.memory_bytes() < f.memory_bytes(), "int8 actor copy must be smaller");
+    }
+
+    #[test]
+    fn eps_greedy_extremes() {
+        let head = [0.1f32, 0.9, 0.3];
+        let mut rng = Pcg32::new(1, 1);
+        // eps pinned at 0 => always argmax
+        let greedy = Exploration::EpsGreedy {
+            schedule: EpsSchedule { start: 0.0, end: 0.0, fraction: 0.1 },
+            horizon: 100,
+        };
+        for _ in 0..20 {
+            let (a, repr) = greedy.select(&head, 0, &mut rng);
+            assert_eq!(a, Action::Discrete(1));
+            assert_eq!(repr, vec![1.0]);
+        }
+        // eps pinned at 1 => covers all actions
+        let random = Exploration::EpsGreedy {
+            schedule: EpsSchedule { start: 1.0, end: 1.0, fraction: 0.1 },
+            horizon: 100,
+        };
+        let mut seen = [false; 3];
+        for _ in 0..200 {
+            if let (Action::Discrete(a), _) = random.select(&head, 0, &mut rng) {
+                seen[a] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn gaussian_clamps_and_warms_up() {
+        let head = [5.0f32, -5.0];
+        let mut rng = Pcg32::new(2, 2);
+        let g = Exploration::Gaussian { std: 0.5, horizon: 1000, warmup: 10 };
+        // past warmup: means clamp into [-1, 1]
+        let (a, repr) = g.select(&head, 500, &mut rng);
+        assert!(repr.iter().all(|v| (-1.0..=1.0).contains(v)), "{repr:?}");
+        assert_eq!(a, Action::Continuous(repr.clone()));
+        // during warmup: uniform random, still in range
+        let (_, warm) = g.select(&head, 0, &mut rng);
+        assert!(warm.iter().all(|v| (-1.0..=1.0).contains(v)));
+    }
+}

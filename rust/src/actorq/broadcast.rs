@@ -1,0 +1,147 @@
+//! Versioned parameter broadcast: learner -> actors, quantize-on-publish.
+//!
+//! The learner owns fp32 master weights; actors only ever see the
+//! deployment representation (int8 codes + per-tensor affine params, or
+//! an fp32 engine for the baseline configuration). [`ParamBroadcast`]
+//! therefore quantizes *once* per publish — building the actor engine on
+//! the learner thread — and actors clone the prebuilt engine, which is
+//! orders of magnitude cheaper than N actors each re-quantizing.
+//!
+//! Synchronization is a hand-rolled `Arc` swap: the current snapshot
+//! lives behind a `Mutex<Arc<Snapshot>>` (locked only for the pointer
+//! swap / clone, never during quantization of reads on the hot path) and
+//! an `AtomicU64` version lets actors poll for staleness without taking
+//! the lock at all. Versions are assigned under the lock, so observed
+//! versions are monotone non-decreasing even under concurrent publishers
+//! (pinned by `rust/tests/actorq_props.rs`).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::actorq::actor::ActorEngine;
+use crate::actorq::ActorPrecision;
+use crate::error::Result;
+use crate::runtime::ParamSet;
+
+/// One published parameter snapshot: a version stamp plus the prebuilt
+/// actor-side engine (already quantized for int8 precision).
+#[derive(Debug)]
+pub struct Snapshot {
+    pub version: u64,
+    pub engine: ActorEngine,
+}
+
+/// Learner-to-actor parameter distribution channel.
+#[derive(Debug)]
+pub struct ParamBroadcast {
+    precision: ActorPrecision,
+    slot: Mutex<Arc<Snapshot>>,
+    version: AtomicU64,
+}
+
+impl ParamBroadcast {
+    /// Create with an initial snapshot at version 0.
+    pub fn new(params: &ParamSet, precision: ActorPrecision) -> Result<ParamBroadcast> {
+        let engine = ActorEngine::from_params(params, precision)?;
+        Ok(ParamBroadcast {
+            precision,
+            slot: Mutex::new(Arc::new(Snapshot { version: 0, engine })),
+            version: AtomicU64::new(0),
+        })
+    }
+
+    pub fn precision(&self) -> ActorPrecision {
+        self.precision
+    }
+
+    /// Publish fresh parameters: quantize (per the configured precision),
+    /// swap the snapshot, bump the version. Returns the new version.
+    pub fn publish(&self, params: &ParamSet) -> Result<u64> {
+        // Quantize before taking the lock, so actors calling latest()
+        // never wait on an engine build — the critical section is just
+        // the version assignment and the Arc swap, which is also what
+        // keeps observed versions monotone under concurrent publishers.
+        let engine = ActorEngine::from_params(params, self.precision)?;
+        let mut slot = self.slot.lock().expect("broadcast lock poisoned");
+        let version = slot.version + 1;
+        *slot = Arc::new(Snapshot { version, engine });
+        self.version.store(version, Ordering::Release);
+        Ok(version)
+    }
+
+    /// Latest published version — lock-free; actors poll this every step.
+    #[inline]
+    pub fn version(&self) -> u64 {
+        self.version.load(Ordering::Acquire)
+    }
+
+    /// Grab the current snapshot (brief lock for the `Arc` clone).
+    pub fn latest(&self) -> Arc<Snapshot> {
+        self.slot.lock().expect("broadcast lock poisoned").clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg32;
+    use crate::runtime::manifest::TensorSpec;
+
+    fn mlp_params(dims: &[usize], seed: u64) -> ParamSet {
+        let mut specs = Vec::new();
+        for i in 0..dims.len() - 1 {
+            specs.push(TensorSpec { name: format!("q.w{i}"), shape: vec![dims[i], dims[i + 1]] });
+            specs.push(TensorSpec { name: format!("q.b{i}"), shape: vec![dims[i + 1]] });
+        }
+        let mut rng = Pcg32::new(seed, 1);
+        ParamSet::init(&specs, &mut rng)
+    }
+
+    #[test]
+    fn publish_bumps_version() {
+        let p = mlp_params(&[4, 8, 2], 1);
+        let bc = ParamBroadcast::new(&p, ActorPrecision::Int8).unwrap();
+        assert_eq!(bc.version(), 0);
+        assert_eq!(bc.latest().version, 0);
+        assert_eq!(bc.publish(&p).unwrap(), 1);
+        assert_eq!(bc.publish(&p).unwrap(), 2);
+        assert_eq!(bc.version(), 2);
+        assert_eq!(bc.latest().version, 2);
+    }
+
+    #[test]
+    fn fp32_snapshot_matches_direct_engine() {
+        let p = mlp_params(&[6, 16, 3], 7);
+        let bc = ParamBroadcast::new(&p, ActorPrecision::Fp32).unwrap();
+        let snap = bc.latest();
+        let mut from_snap = snap.engine.clone();
+        let mut direct = ActorEngine::from_params(&p, ActorPrecision::Fp32).unwrap();
+        let x: Vec<f32> = (0..6).map(|i| (i as f32 * 0.4).sin()).collect();
+        let mut a = vec![0.0; 3];
+        let mut b = vec![0.0; 3];
+        from_snap.forward(&x, &mut a).unwrap();
+        direct.forward(&x, &mut b).unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn int8_snapshot_is_quantized_and_close() {
+        let p = mlp_params(&[6, 32, 4], 9);
+        let bc = ParamBroadcast::new(&p, ActorPrecision::Int8).unwrap();
+        let snap = bc.latest();
+        // the snapshot carries i8 codes, not fp32 weights
+        let ActorEngine::Int8(ref eng) = snap.engine else {
+            panic!("int8 broadcast must carry the int8 engine");
+        };
+        // per-weight round-trip error bounded by one grid step off the rails
+        let w0 = &p.tensors[0];
+        let layer = &eng.layers[0];
+        for (i, (&w, &code)) in w0.data().iter().zip(&layer.wq).enumerate() {
+            assert_eq!(code, layer.w_qp.quantize_i8(w), "idx {i}: shared clamping rule");
+            if code > -128 && code < 127 {
+                let err = (layer.w_qp.dequantize_i8(code) - w).abs();
+                assert!(err <= layer.w_qp.delta + 1e-6, "idx {i}: err {err}");
+            }
+        }
+    }
+}

@@ -1,0 +1,133 @@
+//! Learner-side plumbing shared by the DQN and DDPG ActorQ drivers:
+//! train-step pacing against the asynchronous env-step counter, and the
+//! run telemetry the experiment harness reports.
+
+use crate::actorq::actor::ActorStats;
+
+/// Keeps the train-step : env-step ratio of the asynchronous driver equal
+/// to the synchronous one (1 train per `train_freq` env steps past
+/// warmup), regardless of how experience batches arrive.
+#[derive(Debug, Clone)]
+pub struct Pacer {
+    warmup: usize,
+    train_freq: usize,
+    done: usize,
+}
+
+impl Pacer {
+    pub fn new(warmup: usize, train_freq: usize) -> Pacer {
+        Pacer { warmup, train_freq: train_freq.max(1), done: 0 }
+    }
+
+    /// Train steps owed at `env_steps` collected so far.
+    pub fn owed(&self, env_steps: usize) -> usize {
+        (env_steps.saturating_sub(self.warmup) / self.train_freq).saturating_sub(self.done)
+    }
+
+    /// Record one completed train step.
+    pub fn record(&mut self) {
+        self.done += 1;
+    }
+
+    pub fn trains_done(&self) -> usize {
+        self.done
+    }
+
+    /// The synchronous-driver step this train step corresponds to (feeds
+    /// the QAT step/delay inputs and the PER beta schedule).
+    pub fn equivalent_step(&self) -> usize {
+        self.warmup + self.done * self.train_freq
+    }
+}
+
+/// Per-run telemetry for an ActorQ training run — the asynchronous
+/// counterpart of [`crate::algos::TrainLog`], extended with the
+/// collection-side throughput numbers the paper's speedup plots use.
+#[derive(Debug, Default, Clone)]
+pub struct ActorQLog {
+    /// (env_steps, mean recent return) samples.
+    pub returns: Vec<(usize, f32)>,
+    /// (env_steps, loss) samples.
+    pub losses: Vec<(usize, f32)>,
+    pub episodes: usize,
+    pub final_return: f32,
+    /// Environment steps actually consumed by the learner.
+    pub env_steps: usize,
+    /// Learner train-program calls.
+    pub train_steps: usize,
+    /// Parameter broadcasts published.
+    pub broadcasts: usize,
+    /// End-to-end experience throughput (env steps / wall second).
+    pub steps_per_sec: f64,
+    /// Wall-clock seconds inside the train-program calls only.
+    pub train_exec_secs: f64,
+    /// Total wall-clock seconds.
+    pub wall_secs: f64,
+    /// Per-actor accounting from the pool shutdown.
+    pub actor_stats: Vec<ActorStats>,
+}
+
+impl ActorQLog {
+    /// Fold a drained episode-return window into the log.
+    pub fn finish(&mut self, recent: &[f32], wall_secs: f64) {
+        let tail = &recent[recent.len().saturating_sub(20)..];
+        self.final_return = if tail.is_empty() {
+            0.0
+        } else {
+            tail.iter().sum::<f32>() / tail.len() as f32
+        };
+        self.wall_secs = wall_secs;
+        self.steps_per_sec = if wall_secs > 0.0 { self.env_steps as f64 / wall_secs } else { 0.0 };
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pacer_matches_sync_cadence() {
+        // sync driver: trains at steps 100, 102, 104, ... (warmup 100, freq 2)
+        let mut p = Pacer::new(100, 2);
+        assert_eq!(p.owed(0), 0);
+        assert_eq!(p.owed(100), 0);
+        assert_eq!(p.owed(101), 0);
+        assert_eq!(p.owed(102), 1);
+        assert_eq!(p.owed(110), 5);
+        p.record();
+        p.record();
+        assert_eq!(p.owed(110), 3);
+        assert_eq!(p.trains_done(), 2);
+        assert_eq!(p.equivalent_step(), 104);
+    }
+
+    #[test]
+    fn pacer_total_equals_sync_total() {
+        // over a full budget the async driver owes exactly the sync count
+        let total = 10_000usize;
+        let (warmup, freq) = (1_000usize, 4usize);
+        let mut p = Pacer::new(warmup, freq);
+        let mut trained = 0usize;
+        let mut steps = 0usize;
+        while steps < total {
+            steps = (steps + 37).min(total); // batches arrive unevenly
+            while p.owed(steps) > 0 {
+                p.record();
+                trained += 1;
+            }
+        }
+        assert_eq!(trained, (total - warmup) / freq);
+    }
+
+    #[test]
+    fn log_finish_summarizes_tail() {
+        let mut log = ActorQLog { env_steps: 500, ..ActorQLog::default() };
+        log.finish(&[1.0, 2.0, 3.0], 2.0);
+        assert!((log.final_return - 2.0).abs() < 1e-6);
+        assert!((log.steps_per_sec - 250.0).abs() < 1e-9);
+        let mut empty = ActorQLog::default();
+        empty.finish(&[], 0.0);
+        assert_eq!(empty.final_return, 0.0);
+        assert_eq!(empty.steps_per_sec, 0.0);
+    }
+}

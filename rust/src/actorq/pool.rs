@@ -1,0 +1,225 @@
+//! The actor pool: spawns N actor threads, owns the bounded experience
+//! channel, and joins everything on shutdown.
+//!
+//! Threading contract: the pool (and its receiver) live on the learner
+//! thread; each actor owns its environments, RNG streams, and policy
+//! copy outright, so the only shared state is the broadcast snapshot
+//! (read-mostly `Arc`) and the mpsc channel. Shutdown drops the receiver
+//! first, which unblocks any actor parked on a full channel.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::actorq::actor::{run_actor, ActorSetup, ActorStats, Exploration};
+use crate::actorq::broadcast::ParamBroadcast;
+use crate::actorq::ExperienceBatch;
+use crate::envs::registry::make_env;
+use crate::envs::vec_env::VecEnv;
+use crate::error::{Error, Result};
+use crate::rng::Pcg32;
+
+/// Pool construction parameters (algo-agnostic; the exploration rule is
+/// what differentiates a DQN pool from a DDPG pool).
+#[derive(Debug, Clone)]
+pub struct PoolConfig {
+    pub env_id: String,
+    pub n_actors: usize,
+    pub envs_per_actor: usize,
+    /// Transitions per channel message.
+    pub flush_every: usize,
+    /// Channel capacity in messages (back-pressure window).
+    pub channel_capacity: usize,
+    pub exploration: Exploration,
+    pub seed: u64,
+}
+
+/// A running pool of actor threads.
+pub struct ActorPool {
+    rx: Receiver<ExperienceBatch>,
+    handles: Vec<JoinHandle<ActorStats>>,
+    stop: Arc<AtomicBool>,
+}
+
+impl ActorPool {
+    /// Validate the env id, build each actor's private vec-env on the
+    /// caller thread (so construction errors surface synchronously), and
+    /// spawn the actor threads.
+    pub fn spawn(cfg: &PoolConfig, broadcast: Arc<ParamBroadcast>) -> Result<ActorPool> {
+        if cfg.n_actors == 0 || cfg.envs_per_actor == 0 || cfg.flush_every == 0 {
+            return Err(Error::Config("actor pool needs actors, envs, and a flush size".into()));
+        }
+        make_env(&cfg.env_id)?; // validate once; the factories below cannot fail
+        let (tx, rx) = sync_channel::<ExperienceBatch>(cfg.channel_capacity.max(1));
+        let stop = Arc::new(AtomicBool::new(false));
+        let mut handles = Vec::with_capacity(cfg.n_actors);
+        for id in 0..cfg.n_actors {
+            let env_id = cfg.env_id.clone();
+            let envs = VecEnv::new(cfg.envs_per_actor, cfg.seed ^ (0x9e37 + id as u64), || {
+                make_env(&env_id).expect("env id validated above")
+            });
+            let setup = ActorSetup {
+                id,
+                envs,
+                exploration: cfg.exploration,
+                flush_every: cfg.flush_every,
+                rng: Pcg32::new(cfg.seed, 7000 + id as u64),
+            };
+            let bc = broadcast.clone();
+            let tx = tx.clone();
+            let stop_flag = stop.clone();
+            handles.push(std::thread::spawn(move || run_actor(setup, bc, tx, stop_flag)));
+        }
+        drop(tx); // the pool only receives; actors hold the senders
+        Ok(ActorPool { rx, handles, stop })
+    }
+
+    /// Wait up to `timeout` for the next experience batch. `Ok(None)` on
+    /// timeout; an error means every actor hung up unexpectedly.
+    pub fn recv_timeout(&self, timeout: Duration) -> Result<Option<ExperienceBatch>> {
+        match self.rx.recv_timeout(timeout) {
+            Ok(b) => Ok(Some(b)),
+            Err(RecvTimeoutError::Timeout) => Ok(None),
+            Err(RecvTimeoutError::Disconnected) => {
+                Err(Error::Experiment("actor pool disconnected (actor thread died)".into()))
+            }
+        }
+    }
+
+    /// Drain whatever is already queued without blocking (at most `max`
+    /// batches, so one drain cannot starve the train loop).
+    pub fn try_drain(&self, max: usize) -> Vec<ExperienceBatch> {
+        let mut out = Vec::new();
+        while out.len() < max {
+            match self.rx.try_recv() {
+                Ok(b) => out.push(b),
+                Err(_) => break,
+            }
+        }
+        out
+    }
+
+    /// Stop all actors and collect their stats. Dropping the receiver
+    /// before joining unblocks actors parked on a full channel.
+    pub fn shutdown(self) -> Result<Vec<ActorStats>> {
+        let ActorPool { rx, handles, stop } = self;
+        stop.store(true, Ordering::SeqCst);
+        drop(rx);
+        let mut stats = Vec::with_capacity(handles.len());
+        for h in handles {
+            let s = h
+                .join()
+                .map_err(|_| Error::Experiment("actor thread panicked".into()))?;
+            stats.push(s);
+        }
+        Ok(stats)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::actorq::{ActorPrecision, ParamBroadcast};
+    use crate::algos::common::EpsSchedule;
+    use crate::runtime::manifest::TensorSpec;
+    use crate::runtime::ParamSet;
+
+    fn cartpole_broadcast(precision: ActorPrecision) -> Arc<ParamBroadcast> {
+        let specs = vec![
+            TensorSpec { name: "q.w0".into(), shape: vec![4, 32] },
+            TensorSpec { name: "q.b0".into(), shape: vec![32] },
+            TensorSpec { name: "q.w1".into(), shape: vec![32, 2] },
+            TensorSpec { name: "q.b1".into(), shape: vec![2] },
+        ];
+        let mut rng = Pcg32::new(11, 1);
+        let params = ParamSet::init(&specs, &mut rng);
+        Arc::new(ParamBroadcast::new(&params, precision).unwrap())
+    }
+
+    fn pool_cfg(n_actors: usize) -> PoolConfig {
+        PoolConfig {
+            env_id: "cartpole".into(),
+            n_actors,
+            envs_per_actor: 2,
+            flush_every: 16,
+            channel_capacity: 8,
+            exploration: Exploration::EpsGreedy {
+                schedule: EpsSchedule { start: 1.0, end: 0.1, fraction: 0.5 },
+                horizon: 2_000,
+            },
+            seed: 5,
+        }
+    }
+
+    #[test]
+    fn pool_collects_valid_cartpole_experience() {
+        let bc = cartpole_broadcast(ActorPrecision::Int8);
+        let pool = ActorPool::spawn(&pool_cfg(2), bc).unwrap();
+        let mut got = 0usize;
+        while got < 200 {
+            let b = pool
+                .recv_timeout(Duration::from_secs(10))
+                .unwrap()
+                .expect("actors should produce batches well within 10s");
+            assert!(b.actor_id < 2);
+            assert_eq!(b.param_version, 0);
+            for t in &b.transitions {
+                assert_eq!(t.obs.len(), 4);
+                assert_eq!(t.next_obs.len(), 4);
+                assert_eq!(t.action.len(), 1);
+                let a = t.action[0];
+                assert!(a == 0.0 || a == 1.0, "cartpole action {a}");
+                assert!(t.reward.is_finite());
+                assert!(t.obs.iter().chain(&t.next_obs).all(|v| v.is_finite()));
+            }
+            got += b.transitions.len();
+        }
+        let stats = pool.shutdown().unwrap();
+        assert_eq!(stats.len(), 2);
+        let total: usize = stats.iter().map(|s| s.env_steps).sum();
+        assert!(total >= got, "actors stepped {total}, learner saw {got}");
+    }
+
+    #[test]
+    fn actors_pick_up_published_params() {
+        let bc = cartpole_broadcast(ActorPrecision::Fp32);
+        let pool = ActorPool::spawn(&pool_cfg(2), bc.clone()).unwrap();
+        // republish fresh params; actors must move to the new version
+        let specs = vec![
+            TensorSpec { name: "q.w0".into(), shape: vec![4, 32] },
+            TensorSpec { name: "q.b0".into(), shape: vec![32] },
+            TensorSpec { name: "q.w1".into(), shape: vec![32, 2] },
+            TensorSpec { name: "q.b1".into(), shape: vec![2] },
+        ];
+        let mut rng = Pcg32::new(77, 1);
+        let fresh = ParamSet::init(&specs, &mut rng);
+        let v = bc.publish(&fresh).unwrap();
+        assert_eq!(v, 1);
+        let deadline = std::time::Instant::now() + Duration::from_secs(20);
+        let mut saw_new = false;
+        while std::time::Instant::now() < deadline {
+            match pool.recv_timeout(Duration::from_millis(200)).unwrap() {
+                Some(b) if b.param_version == v => {
+                    saw_new = true;
+                    break;
+                }
+                _ => {}
+            }
+        }
+        assert!(saw_new, "actors never refreshed to version {v}");
+        let stats = pool.shutdown().unwrap();
+        assert!(stats.iter().any(|s| s.param_refreshes > 0));
+    }
+
+    #[test]
+    fn spawn_rejects_bad_config() {
+        let bc = cartpole_broadcast(ActorPrecision::Int8);
+        let mut cfg = pool_cfg(0);
+        assert!(ActorPool::spawn(&cfg, bc.clone()).is_err());
+        cfg.n_actors = 1;
+        cfg.env_id = "no_such_env".into();
+        assert!(ActorPool::spawn(&cfg, bc).is_err());
+    }
+}

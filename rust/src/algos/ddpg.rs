@@ -5,6 +5,12 @@
 //! updates (a host-side lerp on the master copies); the XLA side owns
 //! both actor and critic updates in one program call.
 
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::actorq::{
+    ActorPool, ActorQConfig, ActorQLog, Exploration, Pacer, ParamBroadcast, PoolConfig,
+};
 use crate::algos::common::{load_programs, pad_obs, QuantSchedule, TrainedPolicy};
 use crate::envs::api::Action;
 use crate::envs::registry::make_env;
@@ -234,6 +240,203 @@ pub fn train(rt: &Runtime, cfg: &DdpgConfig) -> Result<(TrainedPolicy, TrainLog)
             qstate: train_in[i_qstate].clone(),
             quant: cfg.quant,
             steps: cfg.total_steps,
+        },
+        log,
+    ))
+}
+
+/// Train a DDPG policy with the ActorQ actor-learner driver (paper §3).
+///
+/// Actor threads run a quantized copy of the *actor network only* on the
+/// native engines — the critic never leaves the learner — with Gaussian
+/// exploration and a [-1, 1] clamp matching [`train`]. The native head
+/// is linear (no tanh squash), so the exploration clamp doubles as the
+/// action bound, the same approximation the deployment engines make.
+pub fn train_actorq(
+    rt: &Runtime,
+    cfg: &DdpgConfig,
+    acfg: &ActorQConfig,
+) -> Result<(TrainedPolicy, ActorQLog)> {
+    let key = cfg.arch_key.clone().unwrap_or_else(|| format!("ddpg/{}", cfg.env_id));
+    let (arch, _act_prog, train_prog) = load_programs(rt, &key)?;
+    let spec = &train_prog.spec;
+    let na = spec.count("n_actor_params")?;
+    let nc = spec.count("n_critic_params")?;
+    let n_q = spec.n_qstate;
+    let batch = spec.arch.train_batch;
+    let act_dim = spec.arch.act_dim;
+
+    let mut root = Pcg32::new(cfg.seed, 59);
+    let mut replay_rng = root.split(1);
+    let mut init_rng = root.split(2);
+
+    let probe = make_env(&cfg.env_id)?;
+    let obs_dim = probe.obs_dim();
+    drop(probe);
+
+    let actor = ParamSet::init(&spec.inputs[..na], &mut init_rng);
+    let critic = ParamSet::init(&spec.inputs[na..na + nc], &mut init_rng);
+
+    // Same slot layout as the synchronous driver: actor, critic, t_actor,
+    // t_critic, m_a, v_a, m_c, v_c, qstate, obs, act, rew, nobs, done, hyper
+    let mut train_in: Vec<Tensor> = Vec::new();
+    train_in.extend(actor.tensors.iter().cloned());
+    train_in.extend(critic.tensors.iter().cloned());
+    train_in.extend(actor.tensors.iter().cloned()); // target actor
+    train_in.extend(critic.tensors.iter().cloned()); // target critic
+    for t in actor.tensors.iter() {
+        train_in.push(Tensor::zeros(t.shape().to_vec()));
+    }
+    for t in actor.tensors.iter() {
+        train_in.push(Tensor::zeros(t.shape().to_vec()));
+    }
+    for t in critic.tensors.iter() {
+        train_in.push(Tensor::zeros(t.shape().to_vec()));
+    }
+    for t in critic.tensors.iter() {
+        train_in.push(Tensor::zeros(t.shape().to_vec()));
+    }
+    let i_qstate = 4 * na + 4 * nc;
+    debug_assert_eq!(train_in.len(), i_qstate);
+    train_in.push(Tensor::zeros(vec![n_q, 2]));
+    train_in.push(Tensor::zeros(vec![batch, obs_dim]));
+    train_in.push(Tensor::zeros(vec![batch, act_dim]));
+    train_in.push(Tensor::zeros(vec![batch]));
+    train_in.push(Tensor::zeros(vec![batch, obs_dim]));
+    train_in.push(Tensor::zeros(vec![batch]));
+    train_in.push(Tensor::vec1(&[cfg.lr_actor, cfg.lr_critic, cfg.gamma, 0.0, 0.0, 0.0, 1.0]));
+    let i_obs = i_qstate + 1;
+    let i_hyper = i_obs + 5;
+
+    let horizon = (cfg.total_steps / acfg.n_actors.max(1)).max(1);
+    let mut actor_pub = actor.clone();
+    let broadcast = Arc::new(ParamBroadcast::new(&actor_pub, acfg.precision)?);
+    let pool = ActorPool::spawn(
+        &PoolConfig {
+            env_id: cfg.env_id.clone(),
+            n_actors: acfg.n_actors,
+            envs_per_actor: acfg.envs_per_actor,
+            flush_every: acfg.flush_every,
+            channel_capacity: acfg.channel_capacity,
+            exploration: Exploration::Gaussian {
+                std: cfg.noise_std,
+                horizon,
+                warmup: (cfg.warmup / acfg.n_actors.max(1)).max(1),
+            },
+            seed: cfg.seed,
+        },
+        broadcast.clone(),
+    )?;
+
+    let mut buf = ReplayBuffer::new(cfg.buffer_size, obs_dim, act_dim);
+    let mut log = ActorQLog::default();
+    let t_start = std::time::Instant::now();
+    let mut recent: Vec<f32> = Vec::new();
+    let mut adam_t = 0.0f32;
+    let mut pacer = Pacer::new(cfg.warmup, cfg.train_freq);
+    let n_all = na + nc;
+
+    let quant_bits = cfg.quant.bits as f32;
+    let quant_delay = cfg.quant.delay as f32;
+
+    while log.env_steps < cfg.total_steps {
+        // --- drain experience (one blocking recv, then whatever else is
+        // already queued, so a deep backlog never stalls the train loop) ---
+        let Some(first) = pool.recv_timeout(Duration::from_millis(100))? else {
+            continue;
+        };
+        let mut batches = vec![first];
+        batches.extend(pool.try_drain(acfg.n_actors));
+        for xp in &batches {
+            for t in &xp.transitions {
+                buf.push(Transition {
+                    obs: &t.obs,
+                    action: &t.action,
+                    reward: t.reward,
+                    next_obs: &t.next_obs,
+                    done: t.done,
+                });
+            }
+            log.env_steps += xp.transitions.len();
+            for &r in &xp.episode_returns {
+                log.episodes += 1;
+                recent.push(r);
+                if cfg.log_every > 0 {
+                    log.returns.push((log.env_steps, r));
+                }
+            }
+        }
+
+        // --- learn at the synchronous cadence ---
+        let budget = log.env_steps.min(cfg.total_steps);
+        while pacer.owed(budget) > 0 && buf.len() >= batch {
+            let step = pacer.equivalent_step();
+            let b = buf.sample(batch, &mut replay_rng);
+            adam_t += 1.0;
+            train_in[i_obs] = b.obs;
+            train_in[i_obs + 1] = b.actions.reshape(vec![batch, act_dim])?;
+            train_in[i_obs + 2] = b.rewards;
+            train_in[i_obs + 3] = b.next_obs;
+            train_in[i_obs + 4] = b.dones;
+            train_in[i_hyper] = Tensor::vec1(&[
+                cfg.lr_actor, cfg.lr_critic, cfg.gamma, quant_bits, step as f32, quant_delay,
+                adam_t,
+            ]);
+            let t0 = std::time::Instant::now();
+            let out = train_prog.run(&train_in)?;
+            log.train_exec_secs += t0.elapsed().as_secs_f64();
+            for i in 0..n_all {
+                train_in[i] = out[i].clone(); // actor+critic
+            }
+            for i in 0..(2 * na + 2 * nc) {
+                train_in[2 * n_all + i] = out[n_all + i].clone(); // opt state
+            }
+            train_in[i_qstate] = out[3 * na + 3 * nc].clone();
+
+            // Polyak target update host-side.
+            let tau = cfg.tau;
+            for i in 0..n_all {
+                let (online, target) = {
+                    let (a, b) = train_in.split_at_mut(n_all + i);
+                    (&a[i], &mut b[0])
+                };
+                for (t, o) in target.data_mut().iter_mut().zip(online.data()) {
+                    *t = tau * o + (1.0 - tau) * *t;
+                }
+            }
+            pacer.record();
+            log.train_steps += 1;
+
+            if log.train_steps % acfg.broadcast_every.max(1) == 0 {
+                for i in 0..na {
+                    actor_pub.tensors[i] = train_in[i].clone();
+                }
+                broadcast.publish(&actor_pub)?;
+                log.broadcasts += 1;
+            }
+            // Same gate as the sync driver (`step % log_every == 0`), so
+            // loss curves from the two paths align at equal step budget.
+            if cfg.log_every > 0 && step % cfg.log_every == 0 {
+                log.losses.push((step, out[3 * na + 3 * nc + 1].data()[0]));
+            }
+        }
+    }
+
+    log.actor_stats = pool.shutdown()?;
+    log.finish(&recent, t_start.elapsed().as_secs_f64());
+
+    for i in 0..na {
+        actor_pub.tensors[i] = train_in[i].clone();
+    }
+    Ok((
+        TrainedPolicy {
+            algo: "ddpg".into(),
+            env_id: cfg.env_id.clone(),
+            arch,
+            params: actor_pub,
+            qstate: train_in[i_qstate].clone(),
+            quant: cfg.quant,
+            steps: log.env_steps,
         },
         log,
     ))

@@ -8,6 +8,12 @@
 //! Hyperparameter defaults follow paper Table 9, with step budgets
 //! scaled to the proxy environments (DESIGN.md §2).
 
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::actorq::{
+    ActorPool, ActorQConfig, ActorQLog, Exploration, Pacer, ParamBroadcast, PoolConfig,
+};
 use crate::algos::common::{load_programs, pad_obs, EpsSchedule, QuantSchedule, TrainedPolicy};
 use crate::envs::api::Action;
 use crate::envs::registry::make_env;
@@ -232,6 +238,188 @@ pub fn train(rt: &Runtime, cfg: &DqnConfig) -> Result<(TrainedPolicy, TrainLog)>
             qstate: train_in[i_qstate].clone(),
             quant: cfg.quant,
             steps: cfg.total_steps,
+        },
+        log,
+    ))
+}
+
+/// Train a DQN policy with the ActorQ actor-learner driver (paper §3).
+///
+/// N actor threads collect experience on quantized policy copies (the
+/// pure-Rust deployment engines — no PJRT on the actor side) while this
+/// thread drains the experience channel into prioritized replay, runs
+/// the train program, and quantizes-on-broadcast fresh parameters every
+/// `acfg.broadcast_every` updates. The train-step : env-step ratio and
+/// all schedules match [`train`] at equal step budget, so the two
+/// drivers converge to the same reward floor (pinned by
+/// `rust/tests/actorq_smoke.rs`).
+pub fn train_actorq(
+    rt: &Runtime,
+    cfg: &DqnConfig,
+    acfg: &ActorQConfig,
+) -> Result<(TrainedPolicy, ActorQLog)> {
+    let key = cfg.arch_key.clone().unwrap_or_else(|| format!("dqn/{}", cfg.env_id));
+    let (arch, _act_prog, train_prog) = load_programs(rt, &key)?;
+    let spec = &train_prog.spec;
+    let n_p = spec.count("n_params")?;
+    let n_q = spec.n_qstate;
+    let batch = spec.arch.train_batch;
+
+    let mut root = Pcg32::new(cfg.seed, 53);
+    let mut replay_rng = root.split(1);
+    let mut init_rng = root.split(2);
+
+    let probe = make_env(&cfg.env_id)?;
+    let obs_dim = probe.obs_dim();
+    drop(probe);
+
+    let mut params = ParamSet::init(&spec.inputs[..n_p], &mut init_rng);
+    let zeros = params.zeros_like();
+
+    // Same train-program slot layout as the synchronous driver:
+    // params, target, m, v, qstate, obs, act, rew, nobs, done, isw, hyper
+    let mut train_in: Vec<Tensor> = Vec::new();
+    train_in.extend(params.tensors.iter().cloned());
+    train_in.extend(params.tensors.iter().cloned()); // target
+    train_in.extend(zeros.tensors.iter().cloned()); // m
+    train_in.extend(zeros.tensors.iter().cloned()); // v
+    train_in.push(Tensor::zeros(vec![n_q, 2]));
+    train_in.push(Tensor::zeros(vec![batch, obs_dim]));
+    train_in.push(Tensor::zeros(vec![batch]));
+    train_in.push(Tensor::zeros(vec![batch]));
+    train_in.push(Tensor::zeros(vec![batch, obs_dim]));
+    train_in.push(Tensor::zeros(vec![batch]));
+    train_in.push(Tensor::zeros(vec![batch]));
+    train_in.push(Tensor::vec1(&[cfg.lr, cfg.gamma, 0.0, 0.0, 0.0, 1.0]));
+    let i_qstate = 4 * n_p;
+    let i_obs = i_qstate + 1;
+    let i_hyper = i_obs + 6;
+
+    // Each actor anneals epsilon over its share of the step budget, which
+    // reproduces the global schedule without cross-thread coordination.
+    let horizon = (cfg.total_steps / acfg.n_actors.max(1)).max(1);
+    let broadcast = Arc::new(ParamBroadcast::new(&params, acfg.precision)?);
+    let pool = ActorPool::spawn(
+        &PoolConfig {
+            env_id: cfg.env_id.clone(),
+            n_actors: acfg.n_actors,
+            envs_per_actor: acfg.envs_per_actor,
+            flush_every: acfg.flush_every,
+            channel_capacity: acfg.channel_capacity,
+            exploration: Exploration::EpsGreedy { schedule: cfg.eps, horizon },
+            seed: cfg.seed,
+        },
+        broadcast.clone(),
+    )?;
+
+    let mut per = PrioritizedReplay::new(cfg.buffer_size, obs_dim, 1, cfg.per_alpha);
+    let mut log = ActorQLog::default();
+    let t_start = std::time::Instant::now();
+    let mut recent: Vec<f32> = Vec::new();
+    let mut adam_t = 0.0f32;
+    let mut pacer = Pacer::new(cfg.warmup, cfg.train_freq);
+    let target_every = (cfg.target_update / cfg.train_freq.max(1)).max(1);
+    let mut next_log = 0usize;
+
+    let quant_bits = cfg.quant.bits as f32;
+    let quant_delay = cfg.quant.delay as f32;
+
+    while log.env_steps < cfg.total_steps {
+        // --- drain experience (one blocking recv, then whatever else is
+        // already queued, so a deep backlog never stalls the train loop) ---
+        let Some(first) = pool.recv_timeout(Duration::from_millis(100))? else {
+            continue;
+        };
+        let mut batches = vec![first];
+        batches.extend(pool.try_drain(acfg.n_actors));
+        for xp in &batches {
+            for t in &xp.transitions {
+                per.push(Transition {
+                    obs: &t.obs,
+                    action: &t.action,
+                    reward: t.reward,
+                    next_obs: &t.next_obs,
+                    done: t.done,
+                });
+            }
+            log.env_steps += xp.transitions.len();
+            for &r in &xp.episode_returns {
+                log.episodes += 1;
+                recent.push(r);
+            }
+        }
+
+        // --- learn at the synchronous cadence ---
+        let budget = log.env_steps.min(cfg.total_steps);
+        while pacer.owed(budget) > 0 && per.len() >= batch {
+            let step = pacer.equivalent_step();
+            let beta =
+                cfg.per_beta + (1.0 - cfg.per_beta) * (step as f32 / cfg.total_steps as f32);
+            let b = per.sample(batch, beta, &mut replay_rng);
+            adam_t += 1.0;
+            train_in[i_obs] = b.obs;
+            train_in[i_obs + 1] = b.actions;
+            train_in[i_obs + 2] = b.rewards;
+            train_in[i_obs + 3] = b.next_obs;
+            train_in[i_obs + 4] = b.dones;
+            train_in[i_obs + 5] = b.weights;
+            train_in[i_hyper] = Tensor::vec1(&[
+                cfg.lr, cfg.gamma, quant_bits, step as f32, quant_delay, adam_t,
+            ]);
+            let t0 = std::time::Instant::now();
+            let out = train_prog.run(&train_in)?;
+            log.train_exec_secs += t0.elapsed().as_secs_f64();
+            for i in 0..n_p {
+                train_in[i] = out[i].clone();
+                train_in[2 * n_p + i] = out[n_p + i].clone();
+                train_in[3 * n_p + i] = out[2 * n_p + i].clone();
+            }
+            train_in[i_qstate] = out[3 * n_p].clone();
+            per.update_priorities(&b.indices, out[3 * n_p + 2].data());
+            pacer.record();
+            log.train_steps += 1;
+
+            if log.train_steps % target_every == 0 {
+                for i in 0..n_p {
+                    train_in[n_p + i] = train_in[i].clone();
+                }
+            }
+            if log.train_steps % acfg.broadcast_every.max(1) == 0 {
+                for i in 0..n_p {
+                    params.tensors[i] = train_in[i].clone();
+                }
+                broadcast.publish(&params)?;
+                log.broadcasts += 1;
+            }
+            // Same gate as the sync driver (`step % log_every == 0`), so
+            // loss curves from the two paths align at equal step budget.
+            if cfg.log_every > 0 && step % cfg.log_every == 0 {
+                log.losses.push((step, out[3 * n_p + 1].data()[0]));
+            }
+        }
+
+        if cfg.log_every > 0 && log.env_steps >= next_log && !recent.is_empty() {
+            let tail = &recent[recent.len().saturating_sub(20)..];
+            log.returns.push((log.env_steps, tail.iter().sum::<f32>() / tail.len() as f32));
+            next_log = log.env_steps + cfg.log_every;
+        }
+    }
+
+    log.actor_stats = pool.shutdown()?;
+    log.finish(&recent, t_start.elapsed().as_secs_f64());
+
+    for i in 0..n_p {
+        params.tensors[i] = train_in[i].clone();
+    }
+    Ok((
+        TrainedPolicy {
+            algo: "dqn".into(),
+            env_id: cfg.env_id.clone(),
+            arch,
+            params,
+            qstate: train_in[i_qstate].clone(),
+            quant: cfg.quant,
+            steps: log.env_steps,
         },
         log,
     ))

@@ -1,0 +1,169 @@
+//! `exp actorq` — the ActorQ systems study (paper §3 / Table 6):
+//! experience-collection throughput vs actor count on the quantized
+//! native engines, and fp32-actor vs int8-actor convergence at equal
+//! step budget through the full PJRT learner.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::actorq::{
+    ActorPool, ActorPrecision, ActorQConfig, Exploration, ParamBroadcast, PoolConfig,
+};
+use crate::algos::common::EpsSchedule;
+use crate::algos::dqn;
+use crate::coordinator::experiment::{ExpCtx, Experiment};
+use crate::coordinator::metrics::{n, render_table, row, s, Row};
+use crate::error::{Error, Result};
+use crate::rng::Pcg32;
+use crate::runtime::manifest::TensorSpec;
+use crate::runtime::ParamSet;
+
+pub struct ActorQExp;
+
+const ACTOR_COUNTS: [usize; 4] = [1, 2, 4, 8];
+
+/// Random cartpole-shaped policy for the collection-throughput cells
+/// (throughput is independent of training; only the net shape matters).
+fn cartpole_params(seed: u64) -> ParamSet {
+    let dims = [4usize, 64, 64, 2];
+    let mut specs = Vec::new();
+    for i in 0..dims.len() - 1 {
+        specs.push(TensorSpec { name: format!("q.w{i}"), shape: vec![dims[i], dims[i + 1]] });
+        specs.push(TensorSpec { name: format!("q.b{i}"), shape: vec![dims[i + 1]] });
+    }
+    let mut rng = Pcg32::new(seed, 1);
+    ParamSet::init(&specs, &mut rng)
+}
+
+/// Drain a pool for `window` and report env steps per wall second.
+pub fn collection_rate(
+    n_actors: usize,
+    precision: ActorPrecision,
+    seed: u64,
+    window: Duration,
+) -> Result<f64> {
+    let params = cartpole_params(seed);
+    let broadcast = Arc::new(ParamBroadcast::new(&params, precision)?);
+    let pool = ActorPool::spawn(
+        &PoolConfig {
+            env_id: "cartpole".into(),
+            n_actors,
+            envs_per_actor: 1,
+            flush_every: 64,
+            channel_capacity: 4 * n_actors,
+            exploration: Exploration::EpsGreedy {
+                schedule: EpsSchedule { start: 0.05, end: 0.05, fraction: 1.0 },
+                horizon: 1,
+            },
+            seed,
+        },
+        broadcast,
+    )?;
+    let t0 = Instant::now();
+    let mut steps = 0usize;
+    while t0.elapsed() < window {
+        if let Some(b) = pool.recv_timeout(Duration::from_millis(50))? {
+            steps += b.transitions.len();
+        }
+    }
+    let secs = t0.elapsed().as_secs_f64();
+    pool.shutdown()?;
+    Ok(steps as f64 / secs)
+}
+
+impl Experiment for ActorQExp {
+    fn name(&self) -> &'static str {
+        "actorq"
+    }
+
+    fn description(&self) -> &'static str {
+        "ActorQ: collection throughput vs actor count and DQN convergence with int8 actors"
+    }
+
+    fn items(&self, _ctx: &ExpCtx) -> Vec<String> {
+        let mut items: Vec<String> =
+            ACTOR_COUNTS.iter().map(|a| format!("collect_a{a}")).collect();
+        items.push("train_fp32".into());
+        items.push("train_int8".into());
+        items
+    }
+
+    fn run_item(&self, ctx: &ExpCtx, item: &str) -> Result<Vec<Row>> {
+        if let Some(a) = item.strip_prefix("collect_a") {
+            let actors: usize = a
+                .parse()
+                .map_err(|_| Error::Experiment(format!("bad actorq item '{item}'")))?;
+            let window = Duration::from_millis(1_500);
+            let int8 = collection_rate(actors, ActorPrecision::Int8, ctx.seed + 1, window)?;
+            let fp32 = collection_rate(actors, ActorPrecision::Fp32, ctx.seed + 1, window)?;
+            return Ok(vec![row(&[
+                ("kind", s("collect")),
+                ("actors", n(actors as f64)),
+                ("int8_steps_per_sec", n(int8)),
+                ("fp32_steps_per_sec", n(fp32)),
+            ])]);
+        }
+        let precision = match item {
+            "train_fp32" => ActorPrecision::Fp32,
+            "train_int8" => ActorPrecision::Int8,
+            other => return Err(Error::Experiment(format!("bad actorq item '{other}'"))),
+        };
+        let mut cfg = dqn::DqnConfig::new("cartpole");
+        cfg.total_steps = ctx.steps("dqn", "cartpole");
+        cfg.seed = ctx.seed;
+        let acfg = ActorQConfig::new(4).with_precision(precision);
+        let (policy, log) = dqn::train_actorq(ctx.rt, &cfg, &acfg)?;
+        let eval = crate::coordinator::evaluate(
+            ctx.rt,
+            &policy,
+            ctx.episodes,
+            crate::coordinator::EvalMode::AsTrained,
+            ctx.seed + 9,
+        )?;
+        Ok(vec![row(&[
+            ("kind", s("train")),
+            ("actor_precision", s(precision.label())),
+            ("actors", n(acfg.n_actors as f64)),
+            ("env_steps", n(log.env_steps as f64)),
+            ("train_steps", n(log.train_steps as f64)),
+            ("broadcasts", n(log.broadcasts as f64)),
+            ("steps_per_sec", n(log.steps_per_sec)),
+            ("wall_secs", n(log.wall_secs)),
+            ("final_return", n(log.final_return as f64)),
+            ("eval_reward", n(eval.mean_reward as f64)),
+        ])])
+    }
+
+    fn render(&self, _ctx: &ExpCtx, rows: &[Row]) -> String {
+        let is_kind = |r: &&Row, k: &str| {
+            matches!(r.get("kind"), Some(v) if v.as_str().ok() == Some(k))
+        };
+        let collect: Vec<Row> =
+            rows.iter().filter(|r| is_kind(r, "collect")).cloned().collect();
+        let train: Vec<Row> = rows.iter().filter(|r| is_kind(r, "train")).cloned().collect();
+        let mut out = String::from(
+            "ActorQ — quantized actor-learner training (paper §3)\n\n\
+             Experience-collection throughput (cartpole, 64x64 policy, native engines):\n",
+        );
+        out.push_str(&render_table(
+            &["actors", "int8_steps_per_sec", "fp32_steps_per_sec"],
+            &collect,
+        ));
+        out.push_str(
+            "\nDQN convergence with 4 asynchronous actors (equal step budget,\n\
+             learner fp32 in both rows — only the actor copy differs):\n",
+        );
+        out.push_str(&render_table(
+            &["actor_precision", "env_steps", "train_steps", "broadcasts",
+              "steps_per_sec", "wall_secs", "final_return", "eval_reward"],
+            &train,
+        ));
+        out.push_str(
+            "\nPaper shape checks: throughput scales near-linearly in actors until\n\
+             the learner thread saturates; int8 actors match fp32-actor reward at\n\
+             equal budget (the §3 convergence claim) while shrinking the broadcast\n\
+             payload ~4x.\n",
+        );
+        out
+    }
+}

@@ -74,6 +74,7 @@ pub fn all_experiments() -> Vec<Box<dyn Experiment>> {
         Box::new(crate::coordinator::exp_mixed::Table4),
         Box::new(crate::coordinator::exp_deploy::Fig6),
         Box::new(crate::coordinator::exp_sweetspot::Fig7),
+        Box::new(crate::coordinator::exp_actorq::ActorQExp),
     ]
 }
 

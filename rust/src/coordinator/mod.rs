@@ -4,6 +4,7 @@
 pub mod cache;
 pub mod evaluator;
 pub mod experiment;
+pub mod exp_actorq;
 pub mod exp_deploy;
 pub mod exp_dists;
 pub mod exp_matrix;

@@ -60,12 +60,13 @@ impl EngineInt8 {
             let w_qp = QParams::from_range(w.min(), w.max(), 8)?;
             // Quantize in place (input-major, matching the training
             // layout); codes offset by the zero point so the inner
-            // product is over (q - z) directly.
+            // product is over (q - z) directly. The centering + i8
+            // saturation rule is QParams::quantize_i8, shared with the
+            // ActorQ broadcast path.
             let mut wq = vec![0i8; in_dim * out_dim];
             for r in 0..in_dim {
                 for c in 0..out_dim {
-                    let code = w_qp.quantize(w.data()[r * out_dim + c]) - w_qp.zero_point;
-                    wq[r * out_dim + c] = code.max(-128.0).min(127.0) as i8;
+                    wq[r * out_dim + c] = w_qp.quantize_i8(w.data()[r * out_dim + c]);
                 }
             }
             layers.push(LayerI8 {

@@ -15,7 +15,20 @@
 //!
 //! Python never runs at training/serving time: `make artifacts` lowers the
 //! compute graphs once, and the `quarl` binary drives them through PJRT.
+//!
+//! ## ActorQ (paper §3): asynchronous quantized collection
+//!
+//! On top of the synchronous trainers, [`actorq`] implements the paper's
+//! actor-learner paradigm: N actor threads each run an **int8** (or fp32
+//! baseline) copy of the policy on the pure-Rust deployment engines,
+//! streaming transition batches to the learner over a bounded channel,
+//! while the learner trains in full precision through PJRT and
+//! quantizes-on-broadcast fresh parameters back to the actors. Entry
+//! points: [`algos::dqn::train_actorq`] and [`algos::ddpg::train_actorq`];
+//! the `actorq` experiment and `bench_actorq` bench reproduce the
+//! speedup-vs-actor-count and fp32-vs-int8-actor comparisons.
 
+pub mod actorq;
 pub mod algos;
 pub mod bench_util;
 pub mod config;

@@ -3,7 +3,7 @@
 //! Subcommands:
 //!   train --algo dqn --env cartpole [--steps N] [--quant B --delay D]
 //!   eval  --algo dqn --env cartpole [--quant int8|fp16|intN]
-//!   exp <matrix|table2|table3|fig1|fig2|fig3|table4|fig6|fig7|all>
+//!   exp <matrix|table2|table3|fig1|fig2|fig3|table4|fig6|fig7|actorq|all>
 //!       [--scale S] [--episodes N] [--seed S] [--jobs J] [--only SUB]
 //!   list  — show available experiments and environments
 

@@ -59,6 +59,25 @@ impl QParams {
     pub fn roundtrip(&self, x: f32) -> f32 {
         self.dequantize(self.quantize(x))
     }
+
+    /// Quantize to a zero-point-centered i8 code — the deployment grid the
+    /// int8 inference engine and the ActorQ broadcast path share.
+    ///
+    /// The [0, levels-1] clip lives in [`QParams::quantize`]; the i8
+    /// saturation (codes past ±127 pin to the rail, which happens for
+    /// strongly asymmetric ranges where the zero point sits far from the
+    /// middle of the grid) lives here, so every i8 consumer clamps the
+    /// same way.
+    #[inline]
+    pub fn quantize_i8(&self, x: f32) -> i8 {
+        (self.quantize(x) - self.zero_point).max(-128.0).min(127.0) as i8
+    }
+
+    /// Dequantize a centered i8 code produced by [`QParams::quantize_i8`].
+    #[inline]
+    pub fn dequantize_i8(&self, code: i8) -> f32 {
+        self.delta * code as f32
+    }
 }
 
 /// Per-tensor fake quantization in place.
@@ -77,7 +96,12 @@ pub fn fake_quant_slice(xs: &mut [f32], bits: u32) -> Result<QParams> {
 
 /// Per-tensor fake quantization with a fixed (externally monitored) range
 /// — the QAT-eval path (paper Algorithm 2 line 4).
-pub fn fake_quant_slice_with_range(xs: &mut [f32], vmin: f32, vmax: f32, bits: u32) -> Result<QParams> {
+pub fn fake_quant_slice_with_range(
+    xs: &mut [f32],
+    vmin: f32,
+    vmax: f32,
+    bits: u32,
+) -> Result<QParams> {
     let qp = QParams::from_range(vmin, vmax, bits)?;
     for x in xs.iter_mut() {
         *x = qp.roundtrip(*x);
@@ -177,7 +201,8 @@ mod tests {
     #[test]
     fn per_axis_beats_per_tensor_on_mixed_scales() {
         // Row 0 tiny values, row 1 huge: per-axis keeps row 0 precise.
-        let mut w1 = Tensor::new(vec![2, 4], vec![0.01, -0.02, 0.015, -0.005, 10.0, -9.0, 8.0, -7.0]).unwrap();
+        let data = vec![0.01, -0.02, 0.015, -0.005, 10.0, -9.0, 8.0, -7.0];
+        let mut w1 = Tensor::new(vec![2, 4], data).unwrap();
         let mut w2 = w1.clone();
         let orig = w1.clone();
         fake_quant_per_axis(&mut w1, 8).unwrap();
@@ -190,6 +215,49 @@ mod tests {
                 .sum::<f32>()
         };
         assert!(row_mse(&w1) < row_mse(&w2) / 10.0, "{} vs {}", row_mse(&w1), row_mse(&w2));
+    }
+
+    #[test]
+    fn i8_codes_pin_saturation_boundary() {
+        // Symmetric 8-bit range: delta = 2/256, zero point = 128, so the
+        // centered grid spans [-128, 127] and the most positive value
+        // saturates at the +127 rail while -1.0 lands exactly on -128.
+        let qp = QParams::from_range(-1.0, 1.0, 8).unwrap();
+        assert_eq!(qp.zero_point, 128.0);
+        assert_eq!(qp.quantize_i8(-1.0), -128);
+        assert_eq!(qp.quantize_i8(1.0), 127);
+        assert_eq!(qp.quantize_i8(0.0), 0);
+        // Far outside the observed range the code pins to the rails
+        // instead of wrapping — the clamp the int8 engine relies on.
+        assert_eq!(qp.quantize_i8(-100.0), -128);
+        assert_eq!(qp.quantize_i8(100.0), 127);
+        // Asymmetric range: zero point 192 leaves only 63 positive codes
+        // before the [0, 255] clip, and pushes the bottom of the grid to
+        // -192, which the i8 clamp saturates at -128.
+        let qp = QParams::from_range(-3.0, 1.0, 8).unwrap();
+        assert_eq!(qp.zero_point, 192.0);
+        assert_eq!(qp.quantize_i8(-3.0), -128, "grid bottom saturates the i8 rail");
+        assert_eq!(qp.quantize_i8(1.0), 63, "grid top is clipped by quantize()");
+        // The saturation crossover sits at code -128: one step above is
+        // representable, one step below pins.
+        let edge = qp.dequantize_i8(-128);
+        assert_eq!(qp.quantize_i8(edge + qp.delta * 1.5), -127);
+        assert_eq!(qp.quantize_i8(edge - qp.delta * 1.5), -128);
+    }
+
+    #[test]
+    fn i8_roundtrip_error_bounded_off_the_rails() {
+        // Inside the non-saturating span the floor-based quantizer's
+        // round-trip error is bounded by one grid step.
+        let qp = QParams::from_range(-2.0, 2.0, 8).unwrap();
+        for i in 0..1000 {
+            let x = -2.0 + 4.0 * (i as f32 / 999.0);
+            let code = qp.quantize_i8(x);
+            if code > -128 && code < 127 {
+                let err = (qp.dequantize_i8(code) - x).abs();
+                assert!(err <= qp.delta + 1e-6, "x={x} err={err} delta={}", qp.delta);
+            }
+        }
     }
 
     #[test]

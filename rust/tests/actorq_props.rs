@@ -1,0 +1,187 @@
+//! Property tests for the ActorQ broadcast path (hand-rolled threads —
+//! no loom offline): quantize-on-broadcast round-trip error stays on the
+//! quantizer grid's bound, and parameter versions observed by readers
+//! are monotone non-decreasing under concurrent publishers.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use quarl::actorq::{ActorEngine, ActorPrecision, ParamBroadcast};
+use quarl::rng::Pcg32;
+use quarl::runtime::manifest::TensorSpec;
+use quarl::runtime::ParamSet;
+
+fn mlp_params(dims: &[usize], seed: u64) -> ParamSet {
+    let mut specs = Vec::new();
+    for i in 0..dims.len() - 1 {
+        specs.push(TensorSpec { name: format!("q.w{i}"), shape: vec![dims[i], dims[i + 1]] });
+        specs.push(TensorSpec { name: format!("q.b{i}"), shape: vec![dims[i + 1]] });
+    }
+    let mut rng = Pcg32::new(seed, 1);
+    ParamSet::init(&specs, &mut rng)
+}
+
+// ------------------------------------------------------- quantize-on-broadcast
+
+#[test]
+fn prop_broadcast_roundtrip_error_bounded() {
+    // ParamSet -> i8 codes -> dequant: per-weight error is bounded by one
+    // grid step (the floor-based TFLite quantizer's bound) for every code
+    // off the saturation rails, and the mean error sits near the half-step
+    // a uniform quantizer promises on average.
+    let mut rng = Pcg32::new(401, 1);
+    for case in 0..30u64 {
+        let hidden = 8 + rng.below_usize(56);
+        let p = mlp_params(&[4, hidden, 2], 500 + case);
+        let bc = ParamBroadcast::new(&p, ActorPrecision::Int8).unwrap();
+        let snap = bc.latest();
+        let ActorEngine::Int8(ref eng) = snap.engine else {
+            panic!("int8 precision must publish the int8 engine");
+        };
+        for (li, layer) in eng.layers.iter().enumerate() {
+            let w = &p.tensors[2 * li];
+            assert_eq!(w.len(), layer.wq.len());
+            let mut err_sum = 0.0f64;
+            let mut n_off_rail = 0usize;
+            for (i, (&orig, &code)) in w.data().iter().zip(&layer.wq).enumerate() {
+                // shared clamping rule: codes are exactly QParams::quantize_i8
+                assert_eq!(code, layer.w_qp.quantize_i8(orig), "case {case} layer {li} idx {i}");
+                if code > -128 && code < 127 {
+                    let err = (layer.w_qp.dequantize_i8(code) - orig).abs();
+                    assert!(
+                        err <= layer.w_qp.delta + 1e-6,
+                        "case {case} layer {li} idx {i}: err {err} > delta {}",
+                        layer.w_qp.delta
+                    );
+                    err_sum += err as f64;
+                    n_off_rail += 1;
+                }
+            }
+            if n_off_rail > 32 {
+                let mean = err_sum / n_off_rail as f64;
+                assert!(
+                    mean <= 0.75 * layer.w_qp.delta as f64,
+                    "case {case} layer {li}: mean err {mean} vs delta {}",
+                    layer.w_qp.delta
+                );
+            }
+        }
+        // biases ride along in fp32, untouched
+        for (li, layer) in eng.layers.iter().enumerate() {
+            assert_eq!(&layer.b[..], p.tensors[2 * li + 1].data());
+        }
+    }
+}
+
+#[test]
+fn prop_fp32_broadcast_is_lossless() {
+    let p = mlp_params(&[6, 24, 3], 77);
+    let bc = ParamBroadcast::new(&p, ActorPrecision::Fp32).unwrap();
+    let snap = bc.latest();
+    let ActorEngine::F32(ref eng) = snap.engine else {
+        panic!("fp32 precision must publish the fp32 engine");
+    };
+    for (li, layer) in eng.layers.iter().enumerate() {
+        assert_eq!(&layer.w[..], p.tensors[2 * li].data());
+        assert_eq!(&layer.b[..], p.tensors[2 * li + 1].data());
+    }
+}
+
+// ----------------------------------------------------------- version monotone
+
+#[test]
+fn prop_versions_monotone_under_concurrent_publishers() {
+    const PUBLISHERS: usize = 4;
+    const PUBLISHES_EACH: usize = 25;
+    const READERS: usize = 3;
+
+    let base = mlp_params(&[4, 16, 2], 9);
+    let bc = Arc::new(ParamBroadcast::new(&base, ActorPrecision::Int8).unwrap());
+    let done = Arc::new(AtomicBool::new(false));
+
+    // Readers poll version() and latest() as fast as they can, recording
+    // every observation; each trace must be non-decreasing and snapshots
+    // must never lag the version counter they were read after.
+    let readers: Vec<_> = (0..READERS)
+        .map(|_| {
+            let bc = bc.clone();
+            let done = done.clone();
+            std::thread::spawn(move || {
+                let mut trace: Vec<u64> = Vec::new();
+                let mut last_snap = 0u64;
+                while !done.load(Ordering::Relaxed) {
+                    let v = bc.version();
+                    let snap = bc.latest();
+                    assert!(
+                        snap.version >= v,
+                        "snapshot {} older than version counter {v}",
+                        snap.version
+                    );
+                    assert!(snap.version >= last_snap, "snapshot version went backwards");
+                    last_snap = snap.version;
+                    trace.push(v);
+                }
+                trace
+            })
+        })
+        .collect();
+
+    let publishers: Vec<_> = (0..PUBLISHERS)
+        .map(|k| {
+            let bc = bc.clone();
+            let params = mlp_params(&[4, 16, 2], 100 + k as u64);
+            std::thread::spawn(move || {
+                for _ in 0..PUBLISHES_EACH {
+                    bc.publish(&params).unwrap();
+                }
+            })
+        })
+        .collect();
+
+    for p in publishers {
+        p.join().unwrap();
+    }
+    done.store(true, Ordering::Relaxed);
+    for r in readers {
+        let trace = r.join().unwrap();
+        for w in trace.windows(2) {
+            assert!(w[0] <= w[1], "observed version regressed: {} -> {}", w[0], w[1]);
+        }
+    }
+    // every publish got a distinct, dense version number
+    assert_eq!(bc.version(), (PUBLISHERS * PUBLISHES_EACH) as u64);
+    assert_eq!(bc.latest().version, bc.version());
+}
+
+#[test]
+fn prop_publish_returns_strictly_increasing_versions_per_thread() {
+    const THREADS: usize = 4;
+    const EACH: usize = 20;
+    let base = mlp_params(&[4, 8, 2], 3);
+    let bc = Arc::new(ParamBroadcast::new(&base, ActorPrecision::Fp32).unwrap());
+    let handles: Vec<_> = (0..THREADS)
+        .map(|k| {
+            let bc = bc.clone();
+            let params = mlp_params(&[4, 8, 2], 200 + k as u64);
+            std::thread::spawn(move || {
+                let mut versions = Vec::with_capacity(EACH);
+                for _ in 0..EACH {
+                    versions.push(bc.publish(&params).unwrap());
+                }
+                versions
+            })
+        })
+        .collect();
+    let mut all: Vec<u64> = Vec::new();
+    for h in handles {
+        let vs = h.join().unwrap();
+        for w in vs.windows(2) {
+            assert!(w[0] < w[1], "per-thread publish versions must strictly increase");
+        }
+        all.extend(vs);
+    }
+    // versions are globally unique and cover 1..=THREADS*EACH
+    all.sort();
+    let want: Vec<u64> = (1..=(THREADS * EACH) as u64).collect();
+    assert_eq!(all, want);
+}

@@ -1,0 +1,93 @@
+//! End-to-end ActorQ smoke: a 2-actor int8 actor-learner DQN run on
+//! cartpole through the full Rust -> PJRT stack must reach the same
+//! mean-reward floor as the synchronous driver at equal step budget.
+//! Skips (like `e2e_training.rs`) when `artifacts/` is absent.
+
+use quarl::actorq::{ActorPrecision, ActorQConfig};
+use quarl::algos::dqn;
+use quarl::coordinator::{evaluate, EvalMode};
+use quarl::runtime::Runtime;
+
+fn artifacts() -> Option<Runtime> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.json").exists().then(|| Runtime::new(dir).unwrap())
+}
+
+#[test]
+fn actorq_int8_matches_sync_reward_floor() {
+    let Some(rt) = artifacts() else { return };
+    let mut cfg = dqn::DqnConfig::new("cartpole");
+    cfg.total_steps = 3_000;
+    cfg.warmup = 300;
+    cfg.seed = 11;
+
+    let (sync_policy, sync_log) = dqn::train(&rt, &cfg).unwrap();
+    let sync_eval = evaluate(&rt, &sync_policy, 5, EvalMode::AsTrained, 3).unwrap();
+
+    let acfg = ActorQConfig::new(2).with_precision(ActorPrecision::Int8);
+    let (aq_policy, aq_log) = dqn::train_actorq(&rt, &cfg, &acfg).unwrap();
+    let aq_eval = evaluate(&rt, &aq_policy, 5, EvalMode::AsTrained, 3).unwrap();
+
+    // Budget accounting: the learner consumes at least the configured
+    // steps (the final in-flight batch may overshoot by one flush).
+    assert!(aq_log.env_steps >= cfg.total_steps, "{} env steps", aq_log.env_steps);
+    // One blocking recv plus a try_drain of up to n_actors batches per
+    // learner iteration bounds the overshoot.
+    assert!(
+        aq_log.env_steps <= cfg.total_steps + acfg.flush_every * (acfg.n_actors + 1),
+        "{} env steps overshoot",
+        aq_log.env_steps
+    );
+    // The async cadence matches the sync driver's train-step count.
+    let sync_trains = (cfg.total_steps - cfg.warmup) / cfg.train_freq;
+    assert!(
+        aq_log.train_steps >= sync_trains * 9 / 10 && aq_log.train_steps <= sync_trains,
+        "train steps {} vs sync {sync_trains}",
+        aq_log.train_steps
+    );
+    assert!(aq_log.broadcasts > 0, "learner never published parameters");
+    assert!(aq_log.episodes > 0 && sync_log.episodes > 0);
+
+    // Convergence floor: both drivers are smoke-scale here, so the bar is
+    // the e2e_training one (valid episodes) plus a same-floor comparison
+    // with slack for run-to-run noise.
+    assert!(sync_eval.mean_reward >= 1.0 && aq_eval.mean_reward >= 1.0);
+    assert!(
+        aq_eval.mean_reward >= 0.5 * sync_eval.mean_reward,
+        "int8-actor reward {} fell below the sync floor {}",
+        aq_eval.mean_reward,
+        sync_eval.mean_reward
+    );
+}
+
+#[test]
+fn actorq_fp32_short_run() {
+    let Some(rt) = artifacts() else { return };
+    let mut cfg = dqn::DqnConfig::new("cartpole");
+    cfg.total_steps = 1_500;
+    cfg.warmup = 200;
+    cfg.seed = 12;
+    let acfg = ActorQConfig::new(2).with_precision(ActorPrecision::Fp32);
+    let (policy, log) = dqn::train_actorq(&rt, &cfg, &acfg).unwrap();
+    assert!(log.env_steps >= cfg.total_steps);
+    assert_eq!(log.actor_stats.len(), 2);
+    let collected: usize = log.actor_stats.iter().map(|s| s.env_steps).sum();
+    assert!(collected >= log.env_steps, "actors must have stepped what the learner consumed");
+    let e = evaluate(&rt, &policy, 3, EvalMode::AsTrained, 2).unwrap();
+    assert!(e.mean_reward.is_finite() && e.mean_reward >= 1.0);
+}
+
+#[test]
+fn actorq_ddpg_short_run() {
+    let Some(rt) = artifacts() else { return };
+    let mut cfg = quarl::algos::ddpg::DdpgConfig::new("pendulum");
+    cfg.total_steps = 1_200;
+    cfg.warmup = 300;
+    cfg.seed = 13;
+    let acfg = ActorQConfig::new(2).with_precision(ActorPrecision::Int8);
+    let (policy, log) = quarl::algos::ddpg::train_actorq(&rt, &cfg, &acfg).unwrap();
+    assert!(log.env_steps >= cfg.total_steps);
+    assert!(log.train_steps > 0 && log.broadcasts > 0);
+    let e = evaluate(&rt, &policy, 2, EvalMode::AsTrained, 2).unwrap();
+    assert!(e.mean_reward.is_finite() && e.mean_reward <= 0.0, "pendulum rewards are <= 0");
+}

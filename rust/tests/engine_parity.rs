@@ -1,0 +1,204 @@
+//! Engine parity harness: the property the ActorQ design rests on — the
+//! int8 deployment engine's forward pass stays within the per-layer
+//! quantization error bound of the fp32 engine, and the *actions* it
+//! picks agree with fp32 on the overwhelming majority of observations.
+//! (Hand-rolled randomized cases; no proptest offline.)
+
+use quarl::inference::{EngineF32, EngineInt8};
+use quarl::quant::QParams;
+use quarl::rng::Pcg32;
+use quarl::runtime::manifest::TensorSpec;
+use quarl::runtime::ParamSet;
+
+fn mlp_params(dims: &[usize], seed: u64) -> ParamSet {
+    let mut specs = Vec::new();
+    for i in 0..dims.len() - 1 {
+        specs.push(TensorSpec { name: format!("q.w{i}"), shape: vec![dims[i], dims[i + 1]] });
+        specs.push(TensorSpec { name: format!("q.b{i}"), shape: vec![dims[i + 1]] });
+    }
+    let mut rng = Pcg32::new(seed, 1);
+    ParamSet::init(&specs, &mut rng)
+}
+
+fn argmax(xs: &[f32]) -> usize {
+    xs.iter()
+        .enumerate()
+        .fold((0usize, f32::NEG_INFINITY), |acc, (i, &x)| if x > acc.1 { (i, x) } else { acc })
+        .0
+}
+
+#[test]
+fn single_layer_error_within_quantization_bound() {
+    // For one linear layer the int8 error decomposes exactly:
+    //   y - y_q = sum_i (a_i w_i - a^_i w^_i)
+    // with a^ = dequantized activation, w^ = dequantized (saturating) i8
+    // weight, so |y - y_q| <= sum_i |a_i||w_i - w^_i| + |w^_i||a_i - a^_i|.
+    // Both factors are computable from public QParams, making this a
+    // rigorous per-layer bound, saturation included.
+    let mut rng = Pcg32::new(301, 1);
+    for case in 0..50 {
+        let din = 2 + rng.below_usize(30);
+        let dout = 1 + rng.below_usize(20);
+        let p = mlp_params(&[din, dout], 1000 + case);
+        let w = &p.tensors[0];
+        let w_qp = QParams::from_range(w.min(), w.max(), 8).unwrap();
+
+        let x: Vec<f32> = (0..din).map(|_| rng.normal_ms(0.0, 1.0)).collect();
+        let amin = x.iter().copied().fold(f32::INFINITY, f32::min);
+        let amax = x.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+        let a_qp = QParams::from_range(amin, amax, 8).unwrap();
+
+        let mut f32e = EngineF32::from_params(&p).unwrap();
+        let mut i8e = EngineInt8::from_params(&p).unwrap();
+        let mut yf = vec![0.0f32; dout];
+        let mut yq = vec![0.0f32; dout];
+        f32e.forward(&x, &mut yf);
+        i8e.forward(&x, &mut yq).unwrap();
+
+        for c in 0..dout {
+            let mut bound = 0.0f64;
+            for (i, &a) in x.iter().enumerate() {
+                let wv = w.data()[i * dout + c];
+                let w_hat = w_qp.dequantize_i8(w_qp.quantize_i8(wv));
+                let a_hat = a_qp.delta * (a_qp.quantize(a) - a_qp.zero_point);
+                bound += (a.abs() * (wv - w_hat).abs()) as f64
+                    + (w_hat.abs() * (a - a_hat).abs()) as f64;
+            }
+            let err = (yf[c] - yq[c]).abs() as f64;
+            assert!(
+                err <= bound + 1e-4,
+                "case {case} out {c}: err {err} > bound {bound}"
+            );
+        }
+    }
+}
+
+#[test]
+fn int8_gemv_matches_dequantized_reference() {
+    // The integer GEMV (i32 accumulation, combined scale on the way out)
+    // must equal the real-arithmetic product of the dequantized operands
+    // up to f32 rounding — i.e. the integer path adds no error beyond
+    // quantization itself.
+    let mut rng = Pcg32::new(302, 1);
+    for case in 0..30 {
+        let din = 2 + rng.below_usize(24);
+        let dout = 1 + rng.below_usize(16);
+        let p = mlp_params(&[din, dout], 2000 + case);
+        let w = &p.tensors[0];
+        let b = &p.tensors[1];
+        let w_qp = QParams::from_range(w.min(), w.max(), 8).unwrap();
+
+        let x: Vec<f32> = (0..din).map(|_| rng.uniform_range(-2.0, 2.0)).collect();
+        let amin = x.iter().copied().fold(f32::INFINITY, f32::min);
+        let amax = x.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+        let a_qp = QParams::from_range(amin, amax, 8).unwrap();
+
+        let mut i8e = EngineInt8::from_params(&p).unwrap();
+        let mut yq = vec![0.0f32; dout];
+        i8e.forward(&x, &mut yq).unwrap();
+
+        for c in 0..dout {
+            let mut acc = 0.0f64;
+            for (i, &a) in x.iter().enumerate() {
+                let qa = (a_qp.quantize(a) - a_qp.zero_point) as f64;
+                let qw = w_qp.quantize_i8(w.data()[i * dout + c]) as f64;
+                acc += qa * qw;
+            }
+            let want = (a_qp.delta as f64) * (w_qp.delta as f64) * acc + b.data()[c] as f64;
+            let got = yq[c] as f64;
+            let tol = 1e-3 * want.abs().max(1.0);
+            assert!(
+                (want - got).abs() <= tol,
+                "case {case} out {c}: engine {got} vs reference {want}"
+            );
+        }
+    }
+}
+
+#[test]
+fn multi_layer_error_envelope() {
+    // Across random 3-layer towers the aggregate int8 error stays inside
+    // a conservative envelope of the output magnitude — the looser,
+    // deployment-level version of the per-layer bound above.
+    let mut rng = Pcg32::new(303, 1);
+    for case in 0..20 {
+        let hidden = 16 + rng.below_usize(64);
+        let dout = 2 + rng.below_usize(8);
+        let p = mlp_params(&[8, hidden, hidden / 2 + 1, dout], 3000 + case);
+        let mut f32e = EngineF32::from_params(&p).unwrap();
+        let mut i8e = EngineInt8::from_params(&p).unwrap();
+        let x: Vec<f32> = (0..8).map(|_| rng.uniform_range(-1.0, 1.0)).collect();
+        let mut yf = vec![0.0f32; dout];
+        let mut yq = vec![0.0f32; dout];
+        f32e.forward(&x, &mut yf);
+        i8e.forward(&x, &mut yq).unwrap();
+        assert!(yq.iter().all(|v| v.is_finite()), "case {case}: non-finite int8 output");
+        let scale = yf.iter().map(|v| v.abs()).fold(0.0f32, f32::max).max(1e-2);
+        let mean_err: f32 =
+            yf.iter().zip(&yq).map(|(a, b)| (a - b).abs()).sum::<f32>() / (dout as f32 * scale);
+        assert!(mean_err < 0.2, "case {case}: mean relative error {mean_err}");
+    }
+}
+
+#[test]
+fn argmax_agreement_exceeds_95pct_on_cartpole_scale() {
+    // The deployment criterion: across random cartpole-shaped policies
+    // and cartpole-scale observations, the int8 actor must pick the same
+    // action as the fp32 actor > 95% of the time — the property that
+    // lets ActorQ swap int8 actors in without changing what is learned.
+    let mut agree = 0usize;
+    let mut trials = 0usize;
+    for seed in [11u64, 23, 47] {
+        let p = mlp_params(&[4, 64, 64, 2], seed);
+        let mut f32e = EngineF32::from_params(&p).unwrap();
+        let mut i8e = EngineInt8::from_params(&p).unwrap();
+        let mut rng = Pcg32::new(seed ^ 0xA5, 9);
+        for _ in 0..300 {
+            // cartpole observation envelope: positions small, velocities larger
+            let x = [
+                rng.uniform_range(-2.4, 2.4),
+                rng.uniform_range(-3.0, 3.0),
+                rng.uniform_range(-0.21, 0.21),
+                rng.uniform_range(-3.0, 3.0),
+            ];
+            let mut yf = vec![0.0f32; 2];
+            let mut yq = vec![0.0f32; 2];
+            f32e.forward(&x, &mut yf);
+            i8e.forward(&x, &mut yq).unwrap();
+            trials += 1;
+            if argmax(&yf) == argmax(&yq) {
+                agree += 1;
+            }
+        }
+    }
+    assert!(
+        agree * 100 >= trials * 95,
+        "argmax agreement {agree}/{trials} below 95%"
+    );
+}
+
+#[test]
+fn parity_holds_for_narrow_and_wide_towers() {
+    // Shape sweep: the parity property is architecture-independent.
+    let mut rng = Pcg32::new(305, 1);
+    for dims in [vec![4, 16, 2], vec![12, 128, 64, 5], vec![6, 32, 32, 32, 3]] {
+        let p = mlp_params(&dims, 4242);
+        let mut f32e = EngineF32::from_params(&p).unwrap();
+        let mut i8e = EngineInt8::from_params(&p).unwrap();
+        let dout = *dims.last().unwrap();
+        let din = dims[0];
+        let mut agree = 0usize;
+        let trials = 100usize;
+        for _ in 0..trials {
+            let x: Vec<f32> = (0..din).map(|_| rng.uniform_range(-1.0, 1.0)).collect();
+            let mut yf = vec![0.0f32; dout];
+            let mut yq = vec![0.0f32; dout];
+            f32e.forward(&x, &mut yf);
+            i8e.forward(&x, &mut yq).unwrap();
+            if argmax(&yf) == argmax(&yq) {
+                agree += 1;
+            }
+        }
+        assert!(agree * 10 >= trials * 9, "dims {dims:?}: agreement {agree}/{trials}");
+    }
+}

@@ -1,0 +1,176 @@
+//! Offline stub of the `xla` PJRT bindings.
+//!
+//! The real crate (xla-rs, wrapping the PJRT C API the way
+//! `/opt/xla-example` does) is not vendorable offline, so this stub
+//! provides the exact API surface `quarl::runtime::client` compiles
+//! against. Host-side types ([`Literal`]) behave for real; everything
+//! that needs an actual PJRT runtime ([`PjRtClient::cpu`],
+//! [`HloModuleProto::from_text_file`]) returns a descriptive error, so:
+//!
+//! * `cargo build` / `cargo test` work everywhere — the PJRT-gated
+//!   integration tests skip themselves when `artifacts/` is absent, and
+//!   everything pure-Rust (envs, replay, quantization, inference
+//!   engines, the ActorQ actor pool) runs for real.
+//! * Swapping in the real bindings is a one-line change to the `xla`
+//!   path dependency in `rust/Cargo.toml`; no source edits.
+
+use std::fmt;
+
+/// Stub error: every runtime entry point produces one of these.
+#[derive(Debug)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable<T>(what: &str) -> Result<T> {
+    Err(Error(format!(
+        "xla stub: {what} needs the real PJRT bindings (point the `xla` \
+         dependency in rust/Cargo.toml at them and rebuild)"
+    )))
+}
+
+/// PJRT client handle (stub: construction always fails).
+#[derive(Debug, Clone)]
+pub struct PjRtClient;
+
+/// One PJRT device (stub: never instantiated).
+#[derive(Debug)]
+pub struct PjRtDevice;
+
+/// A device-resident buffer (stub: never instantiated).
+#[derive(Debug)]
+pub struct PjRtBuffer;
+
+/// A compiled executable (stub: never instantiated).
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable;
+
+/// Parsed HLO module (stub: never instantiated).
+#[derive(Debug)]
+pub struct HloModuleProto;
+
+/// An XLA computation wrapping an HLO module.
+#[derive(Debug)]
+pub struct XlaComputation;
+
+/// Host-side literal: shape-carrying f32 data. Fully functional — the
+/// coordinator builds these before upload, so they must work offline.
+#[derive(Debug, Clone)]
+pub struct Literal {
+    data: Vec<f32>,
+    dims: Vec<i64>,
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        unavailable("PjRtClient::cpu")
+    }
+
+    pub fn devices(&self) -> Vec<PjRtDevice> {
+        Vec::new()
+    }
+
+    pub fn buffer_from_host_literal(
+        &self,
+        _device: Option<&PjRtDevice>,
+        _literal: &Literal,
+    ) -> Result<PjRtBuffer> {
+        unavailable("buffer_from_host_literal")
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable("PjRtClient::compile")
+    }
+
+    pub fn platform_name(&self) -> String {
+        "xla-stub".to_string()
+    }
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute_b<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable("PjRtLoadedExecutable::execute_b")
+    }
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable("PjRtBuffer::to_literal_sync")
+    }
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        unavailable("HloModuleProto::from_text_file")
+    }
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+impl Literal {
+    /// Rank-1 literal from host data.
+    pub fn vec1(data: &[f32]) -> Literal {
+        Literal { data: data.to_vec(), dims: vec![data.len() as i64] }
+    }
+
+    /// Reshape to `dims` (element count must match).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let want: i64 = dims.iter().product();
+        if want as usize != self.data.len() {
+            return Err(Error(format!(
+                "reshape: {} elements into dims {dims:?}",
+                self.data.len()
+            )));
+        }
+        Ok(Literal { data: self.data.clone(), dims: dims.to_vec() })
+    }
+
+    /// Copy out as a host vector.
+    pub fn to_vec<T: From<f32>>(&self) -> Result<Vec<T>> {
+        Ok(self.data.iter().map(|&x| T::from(x)).collect())
+    }
+
+    /// Decompose a tuple literal (stub: tuples only come from device
+    /// readback, which the stub cannot produce).
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        unavailable("Literal::to_tuple")
+    }
+
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_round_trip() {
+        let l = Literal::vec1(&[1.0, 2.0, 3.0, 4.0]);
+        let r = l.reshape(&[2, 2]).unwrap();
+        assert_eq!(r.dims(), &[2, 2]);
+        assert_eq!(r.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(l.reshape(&[3, 3]).is_err());
+    }
+
+    #[test]
+    fn runtime_entry_points_error() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(HloModuleProto::from_text_file("x.hlo").is_err());
+        let e = PjRtClient::cpu().unwrap_err();
+        assert!(e.to_string().contains("xla stub"));
+    }
+}
