@@ -8,15 +8,23 @@
 //! Acceptance shape: throughput from 1 -> 4 actors scales >= 2x on any
 //! machine with >= 4 cores (the pool is embarrassingly parallel; the
 //! only shared state is the mpsc channel and the broadcast Arc).
+//!
+//! Output: the human-readable rows, then exactly one machine-readable
+//! JSON summary line (also written to `BENCH_actorq.json`) so the perf
+//! trajectory can be tracked across PRs.
 
+use std::collections::BTreeMap;
 use std::time::Duration;
 
 use quarl::actorq::ActorPrecision;
 use quarl::coordinator::exp_actorq::collection_rate;
+use quarl::coordinator::metrics::write_json_file;
+use quarl::runtime::json::{to_string, Json};
 
 fn main() {
     println!("== ActorQ collection throughput (cartpole, 64x64 policy) ==");
     let window = Duration::from_millis(1_500);
+    let mut rows: Vec<Json> = Vec::new();
     for precision in [ActorPrecision::Int8, ActorPrecision::Fp32] {
         let mut base = 0.0f64;
         for actors in [1usize, 2, 4, 8] {
@@ -32,8 +40,27 @@ fn main() {
                 rate,
                 scale
             );
+            let mut row = BTreeMap::new();
+            row.insert("precision".to_string(), Json::Str(precision.label().into()));
+            row.insert("actors".to_string(), Json::Num(actors as f64));
+            row.insert("steps_per_sec".to_string(), Json::Num(rate));
+            row.insert("scale_vs_1_actor".to_string(), Json::Num(scale));
+            rows.push(Json::Obj(row));
         }
     }
     println!("\n(int8 rows track fp32 within the engine-speed delta; scaling is the");
     println!(" paper's §3 mechanism — collection parallelizes across all cores.)");
+
+    let mut doc = BTreeMap::new();
+    doc.insert("bench".to_string(), Json::Str("actorq".into()));
+    doc.insert("env".to_string(), Json::Str("cartpole".into()));
+    doc.insert("window_ms".to_string(), Json::Num(window.as_millis() as f64));
+    doc.insert("rows".to_string(), Json::Arr(rows));
+    let doc = Json::Obj(doc);
+    // The single machine-readable summary line:
+    println!("{}", to_string(&doc));
+    match write_json_file("BENCH_actorq.json", &doc) {
+        Ok(()) => eprintln!("wrote BENCH_actorq.json"),
+        Err(e) => eprintln!("warning: BENCH_actorq.json not written: {e}"),
+    }
 }

@@ -19,6 +19,7 @@ use crate::error::Result;
 use crate::inference::{EngineF32, EngineInt8};
 use crate::rng::Pcg32;
 use crate::runtime::ParamSet;
+use crate::sustain::{Component, EnergyMeter};
 
 /// The actor-side policy: one of the two pure-Rust deployment engines.
 ///
@@ -142,6 +143,9 @@ pub(crate) struct ActorSetup {
     pub exploration: Exploration,
     pub flush_every: usize,
     pub rng: Pcg32,
+    /// Optional energy meter; collection sweeps are attributed to
+    /// [`Component::Actors`].
+    pub meter: Option<Arc<EnergyMeter>>,
 }
 
 /// The actor thread body: step envs, flush transition batches, poll for
@@ -168,6 +172,7 @@ pub(crate) fn run_actor(
     let mut reprs: Vec<Vec<f32>> = Vec::with_capacity(n);
     let mut pending: Vec<OwnedTransition> = Vec::with_capacity(setup.flush_every);
     let mut stats = ActorStats { id: setup.id, ..ActorStats::default() };
+    let meter = setup.meter.take();
 
     while !stop.load(Ordering::Relaxed) {
         // Refresh the local policy copy when the learner has published.
@@ -178,7 +183,9 @@ pub(crate) fn run_actor(
             stats.param_refreshes += 1;
         }
 
-        // One lockstep sweep over the private envs.
+        // One lockstep sweep over the private envs, metered as actor
+        // compute (the scope excludes channel back-pressure waits).
+        let busy = meter.as_ref().map(|m| m.scope(Component::Actors));
         obs_snap.copy_from_slice(setup.envs.obs());
         actions.clear();
         reprs.clear();
@@ -209,6 +216,10 @@ pub(crate) fn run_actor(
             });
         }
         stats.env_steps += n;
+        drop(busy);
+        if let Some(m) = &meter {
+            m.add_steps(Component::Actors, n as u64);
+        }
 
         if pending.len() >= setup.flush_every {
             let episode_returns: Vec<f32> =

@@ -3,6 +3,7 @@
 //! run telemetry the experiment harness reports.
 
 use crate::actorq::actor::ActorStats;
+use crate::sustain::MeterSnapshot;
 
 /// Keeps the train-step : env-step ratio of the asynchronous driver equal
 /// to the synchronous one (1 train per `train_freq` env steps past
@@ -65,6 +66,10 @@ pub struct ActorQLog {
     pub wall_secs: f64,
     /// Per-actor accounting from the pool shutdown.
     pub actor_stats: Vec<ActorStats>,
+    /// Energy-meter snapshot: busy thread-seconds and step counts per
+    /// component (actors / learner / broadcast), the input to
+    /// [`crate::sustain::CarbonReport::from_snapshot`].
+    pub energy: MeterSnapshot,
 }
 
 impl ActorQLog {

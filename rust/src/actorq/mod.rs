@@ -32,7 +32,9 @@
 //!   joins them on shutdown.
 //! * [`learner`] — learner-side pacing ([`learner::Pacer`] keeps the
 //!   train-step : env-step ratio equal to the synchronous drivers) and
-//!   the [`learner::ActorQLog`] telemetry.
+//!   the [`learner::ActorQLog`] telemetry, including the per-component
+//!   energy-meter snapshot ([`crate::sustain::EnergyMeter`]) that the
+//!   carbon reports are built from.
 //!
 //! The PJRT runtime is deliberately *not* Send (it holds `Rc` program
 //! caches), so the learner stays on the calling thread and actors run

@@ -20,6 +20,7 @@ use crate::envs::registry::make_env;
 use crate::envs::vec_env::VecEnv;
 use crate::error::{Error, Result};
 use crate::rng::Pcg32;
+use crate::sustain::EnergyMeter;
 
 /// Pool construction parameters (algo-agnostic; the exploration rule is
 /// what differentiates a DQN pool from a DDPG pool).
@@ -34,6 +35,9 @@ pub struct PoolConfig {
     pub channel_capacity: usize,
     pub exploration: Exploration,
     pub seed: u64,
+    /// Optional energy meter shared with the learner; actors attribute
+    /// their collection sweeps to [`crate::sustain::Component::Actors`].
+    pub meter: Option<Arc<EnergyMeter>>,
 }
 
 /// A running pool of actor threads.
@@ -66,6 +70,7 @@ impl ActorPool {
                 exploration: cfg.exploration,
                 flush_every: cfg.flush_every,
                 rng: Pcg32::new(cfg.seed, 7000 + id as u64),
+                meter: cfg.meter.clone(),
             };
             let bc = broadcast.clone();
             let tx = tx.clone();
@@ -150,6 +155,7 @@ mod tests {
                 horizon: 2_000,
             },
             seed: 5,
+            meter: None,
         }
     }
 
@@ -211,6 +217,22 @@ mod tests {
         assert!(saw_new, "actors never refreshed to version {v}");
         let stats = pool.shutdown().unwrap();
         assert!(stats.iter().any(|s| s.param_refreshes > 0));
+    }
+
+    #[test]
+    fn pool_records_energy_when_metered() {
+        use crate::sustain::Component;
+        let bc = cartpole_broadcast(ActorPrecision::Int8);
+        let meter = Arc::new(EnergyMeter::new());
+        let mut cfg = pool_cfg(1);
+        cfg.meter = Some(meter.clone());
+        let pool = ActorPool::spawn(&cfg, bc).unwrap();
+        pool.recv_timeout(Duration::from_secs(10))
+            .unwrap()
+            .expect("actor should produce a batch well within 10s");
+        pool.shutdown().unwrap();
+        assert!(meter.steps(Component::Actors) > 0, "env steps attributed");
+        assert!(meter.busy_secs(Component::Actors) > 0.0, "busy time attributed");
     }
 
     #[test]

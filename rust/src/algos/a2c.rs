@@ -31,7 +31,7 @@ pub struct A2cConfig {
     pub seed: u64,
     pub log_every: usize,
     /// Optional layer-norm variant key suffix (Fig 1 baseline): uses
-    /// "<algo>/<env>/ln" in the arch map.
+    /// `<algo>/<env>/ln` in the arch map.
     pub layer_norm: bool,
 }
 

@@ -18,6 +18,7 @@ use crate::error::Result;
 use crate::replay::{ReplayBuffer, Transition};
 use crate::rng::Pcg32;
 use crate::runtime::{ParamSet, Runtime};
+use crate::sustain::{Component, EnergyMeter};
 use crate::tensor::Tensor;
 
 pub use crate::algos::dqn::TrainLog;
@@ -310,6 +311,7 @@ pub fn train_actorq(
 
     let horizon = (cfg.total_steps / acfg.n_actors.max(1)).max(1);
     let mut actor_pub = actor.clone();
+    let meter = Arc::new(EnergyMeter::new());
     let broadcast = Arc::new(ParamBroadcast::new(&actor_pub, acfg.precision)?);
     let pool = ActorPool::spawn(
         &PoolConfig {
@@ -324,6 +326,7 @@ pub fn train_actorq(
                 warmup: (cfg.warmup / acfg.n_actors.max(1)).max(1),
             },
             seed: cfg.seed,
+            meter: Some(meter.clone()),
         },
         broadcast.clone(),
     )?;
@@ -383,8 +386,12 @@ pub fn train_actorq(
                 adam_t,
             ]);
             let t0 = std::time::Instant::now();
-            let out = train_prog.run(&train_in)?;
+            let out = {
+                let _busy = meter.scope(Component::Learner);
+                train_prog.run(&train_in)?
+            };
             log.train_exec_secs += t0.elapsed().as_secs_f64();
+            meter.add_steps(Component::Learner, 1);
             for i in 0..n_all {
                 train_in[i] = out[i].clone(); // actor+critic
             }
@@ -411,7 +418,11 @@ pub fn train_actorq(
                 for i in 0..na {
                     actor_pub.tensors[i] = train_in[i].clone();
                 }
-                broadcast.publish(&actor_pub)?;
+                {
+                    let _busy = meter.scope(Component::Broadcast);
+                    broadcast.publish(&actor_pub)?;
+                }
+                meter.add_steps(Component::Broadcast, 1);
                 log.broadcasts += 1;
             }
             // Same gate as the sync driver (`step % log_every == 0`), so
@@ -423,6 +434,7 @@ pub fn train_actorq(
     }
 
     log.actor_stats = pool.shutdown()?;
+    log.energy = meter.snapshot();
     log.finish(&recent, t_start.elapsed().as_secs_f64());
 
     for i in 0..na {

@@ -21,6 +21,7 @@ use crate::error::Result;
 use crate::replay::{PrioritizedReplay, Transition};
 use crate::rng::Pcg32;
 use crate::runtime::{ParamSet, Runtime};
+use crate::sustain::{Component, EnergyMeter};
 use crate::tensor::Tensor;
 
 /// DQN configuration (paper Table 9 shape, scaled budgets).
@@ -28,7 +29,7 @@ use crate::tensor::Tensor;
 pub struct DqnConfig {
     pub env_id: String,
     /// env_arch_map key override (e.g. "dqn/pong_lite/mp_a"); default
-    /// is "dqn/<env_id>".
+    /// is `dqn/<env_id>`.
     pub arch_key: Option<String>,
     pub total_steps: usize,
     pub buffer_size: usize,
@@ -298,6 +299,7 @@ pub fn train_actorq(
     // Each actor anneals epsilon over its share of the step budget, which
     // reproduces the global schedule without cross-thread coordination.
     let horizon = (cfg.total_steps / acfg.n_actors.max(1)).max(1);
+    let meter = Arc::new(EnergyMeter::new());
     let broadcast = Arc::new(ParamBroadcast::new(&params, acfg.precision)?);
     let pool = ActorPool::spawn(
         &PoolConfig {
@@ -308,6 +310,7 @@ pub fn train_actorq(
             channel_capacity: acfg.channel_capacity,
             exploration: Exploration::EpsGreedy { schedule: cfg.eps, horizon },
             seed: cfg.seed,
+            meter: Some(meter.clone()),
         },
         broadcast.clone(),
     )?;
@@ -367,8 +370,12 @@ pub fn train_actorq(
                 cfg.lr, cfg.gamma, quant_bits, step as f32, quant_delay, adam_t,
             ]);
             let t0 = std::time::Instant::now();
-            let out = train_prog.run(&train_in)?;
+            let out = {
+                let _busy = meter.scope(Component::Learner);
+                train_prog.run(&train_in)?
+            };
             log.train_exec_secs += t0.elapsed().as_secs_f64();
+            meter.add_steps(Component::Learner, 1);
             for i in 0..n_p {
                 train_in[i] = out[i].clone();
                 train_in[2 * n_p + i] = out[n_p + i].clone();
@@ -388,7 +395,11 @@ pub fn train_actorq(
                 for i in 0..n_p {
                     params.tensors[i] = train_in[i].clone();
                 }
-                broadcast.publish(&params)?;
+                {
+                    let _busy = meter.scope(Component::Broadcast);
+                    broadcast.publish(&params)?;
+                }
+                meter.add_steps(Component::Broadcast, 1);
                 log.broadcasts += 1;
             }
             // Same gate as the sync driver (`step % log_every == 0`), so
@@ -406,6 +417,7 @@ pub fn train_actorq(
     }
 
     log.actor_stats = pool.shutdown()?;
+    log.energy = meter.snapshot();
     log.finish(&recent, t_start.elapsed().as_secs_f64());
 
     for i in 0..n_p {

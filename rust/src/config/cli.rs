@@ -19,6 +19,7 @@ pub struct Args {
 const VALUE_FLAGS: &[&str] = &[
     "artifacts", "runs-dir", "scale", "episodes", "seed", "steps", "bits",
     "only", "shard", "jobs", "env", "algo", "quant", "delay", "out", "lr",
+    "region", "cpu-watts", "accel-watts", "carbon-config",
 ];
 
 impl Args {
@@ -56,6 +57,15 @@ impl Args {
     }
 
     pub fn get_f32(&self, key: &str, default: f32) -> Result<f32> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::Config(format!("--{key} expects a number, got '{v}'"))),
+        }
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64> {
         match self.get(key) {
             None => Ok(default),
             Some(v) => v
@@ -156,5 +166,21 @@ mod tests {
     #[test]
     fn missing_value_errors() {
         assert!(Args::parse(&argv("exp --episodes")).is_err());
+    }
+
+    #[test]
+    fn sustain_flags_take_values() {
+        let a = Args::parse(&argv(
+            "exp carbon --region eu --cpu-watts 42.5 --accel-watts 0 --carbon-config g.json",
+        ))
+        .unwrap();
+        assert_eq!(a.get("region"), Some("eu"));
+        assert_eq!(a.get_f64("cpu-watts", 15.0).unwrap(), 42.5);
+        assert_eq!(a.get_f64("accel-watts", 30.0).unwrap(), 0.0);
+        assert_eq!(a.get("carbon-config"), Some("g.json"));
+        assert!(Args::parse(&argv("exp carbon --cpu-watts abc"))
+            .unwrap()
+            .get_f64("cpu-watts", 1.0)
+            .is_err());
     }
 }

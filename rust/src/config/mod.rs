@@ -1,4 +1,10 @@
-//! Configuration: CLI parsing (and experiment profiles).
+//! Configuration: the hand-rolled CLI parser (no clap in the offline
+//! crate set) behind every `quarl` subcommand.
+//!
+//! [`cli::Args`] handles subcommands, `--flag value` / `--flag=value`
+//! pairs, boolean switches, and typed getters (including the
+//! carbon-accounting flags `--region`, `--cpu-watts`, `--accel-watts`,
+//! `--carbon-config` consumed by [`crate::sustain::SustainConfig`]).
 
 pub mod cli;
 

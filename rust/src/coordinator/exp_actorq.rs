@@ -22,15 +22,35 @@ pub struct ActorQExp;
 
 const ACTOR_COUNTS: [usize; 4] = [1, 2, 4, 8];
 
+/// Alternating W/b tensor specs for a dense MLP with the given layer
+/// widths — the layout both deployment engines expect. Shared by the
+/// offline experiments that build random policies (`actorq` collection
+/// cells, `carbon`).
+pub fn mlp_param_specs(dims: &[usize], prefix: &str) -> Vec<TensorSpec> {
+    let mut specs = Vec::new();
+    for i in 0..dims.len() - 1 {
+        specs.push(TensorSpec {
+            name: format!("{prefix}.w{i}"),
+            shape: vec![dims[i], dims[i + 1]],
+        });
+        specs.push(TensorSpec { name: format!("{prefix}.b{i}"), shape: vec![dims[i + 1]] });
+    }
+    specs
+}
+
+/// Fixed low-epsilon greedy exploration for throughput/energy cells
+/// (no annealing: collection rate must not drift over the window).
+pub fn fixed_eps_exploration() -> Exploration {
+    Exploration::EpsGreedy {
+        schedule: EpsSchedule { start: 0.05, end: 0.05, fraction: 1.0 },
+        horizon: 1,
+    }
+}
+
 /// Random cartpole-shaped policy for the collection-throughput cells
 /// (throughput is independent of training; only the net shape matters).
 fn cartpole_params(seed: u64) -> ParamSet {
-    let dims = [4usize, 64, 64, 2];
-    let mut specs = Vec::new();
-    for i in 0..dims.len() - 1 {
-        specs.push(TensorSpec { name: format!("q.w{i}"), shape: vec![dims[i], dims[i + 1]] });
-        specs.push(TensorSpec { name: format!("q.b{i}"), shape: vec![dims[i + 1]] });
-    }
+    let specs = mlp_param_specs(&[4, 64, 64, 2], "q");
     let mut rng = Pcg32::new(seed, 1);
     ParamSet::init(&specs, &mut rng)
 }
@@ -51,11 +71,9 @@ pub fn collection_rate(
             envs_per_actor: 1,
             flush_every: 64,
             channel_capacity: 4 * n_actors,
-            exploration: Exploration::EpsGreedy {
-                schedule: EpsSchedule { start: 0.05, end: 0.05, fraction: 1.0 },
-                horizon: 1,
-            },
+            exploration: fixed_eps_exploration(),
             seed,
+            meter: None,
         },
         broadcast,
     )?;
@@ -112,9 +130,9 @@ impl Experiment for ActorQExp {
         cfg.total_steps = ctx.steps("dqn", "cartpole");
         cfg.seed = ctx.seed;
         let acfg = ActorQConfig::new(4).with_precision(precision);
-        let (policy, log) = dqn::train_actorq(ctx.rt, &cfg, &acfg)?;
+        let (policy, log) = dqn::train_actorq(ctx.runtime()?, &cfg, &acfg)?;
         let eval = crate::coordinator::evaluate(
-            ctx.rt,
+            ctx.runtime()?,
             &policy,
             ctx.episodes,
             crate::coordinator::EvalMode::AsTrained,
@@ -129,6 +147,8 @@ impl Experiment for ActorQExp {
             ("broadcasts", n(log.broadcasts as f64)),
             ("steps_per_sec", n(log.steps_per_sec)),
             ("wall_secs", n(log.wall_secs)),
+            ("actor_busy_secs", n(log.energy.busy_secs("actors"))),
+            ("learner_busy_secs", n(log.energy.busy_secs("learner"))),
             ("final_return", n(log.final_return as f64)),
             ("eval_reward", n(eval.mean_reward as f64)),
         ])])

@@ -81,7 +81,7 @@ impl Experiment for Fig6 {
             ctx.steps("dqn", "nav_lite")
         };
         let policy = get_or_train(
-            ctx.rt,
+            ctx.runtime()?,
             &ctx.policies_dir(),
             "dqn",
             "nav_lite",
@@ -113,7 +113,7 @@ impl Experiment for Fig6 {
 
         Ok(vec![row(&[
             ("policy", s(item)),
-            ("params", s(format!("{:?}", ctx.rt.manifest.nav_policies.get(item).cloned().unwrap_or_default()))),
+            ("params", s(format!("{:?}", ctx.runtime()?.manifest.nav_policies.get(item).cloned().unwrap_or_default()))),
             ("fp32_ms", n(lat_f32 * 1e3)),
             ("int8_ms", n(lat_i8 * 1e3)),
             ("speedup", n(lat_f32 / lat_i8.max(1e-12))),

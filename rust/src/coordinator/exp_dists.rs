@@ -15,7 +15,7 @@ use crate::quant::{relative_error_pct, weight_stats, PtqMethod};
 fn analyze(ctx: &ExpCtx, algo: &str, env: &str) -> Result<Vec<Row>> {
     let steps = ctx.steps(algo, env);
     let policy = get_or_train(
-        ctx.rt,
+        ctx.runtime()?,
         &ctx.policies_dir(),
         algo,
         env,
@@ -25,9 +25,9 @@ fn analyze(ctx: &ExpCtx, algo: &str, env: &str) -> Result<Vec<Row>> {
         None,
     )?;
     let stats = weight_stats(&policy.params, 48);
-    let fp32 = evaluate(ctx.rt, &policy, ctx.episodes, EvalMode::AsTrained, ctx.seed + 1)?;
+    let fp32 = evaluate(ctx.runtime()?, &policy, ctx.episodes, EvalMode::AsTrained, ctx.seed + 1)?;
     let int8 = evaluate(
-        ctx.rt,
+        ctx.runtime()?,
         &policy,
         ctx.episodes,
         EvalMode::Ptq(PtqMethod::Int(8)),

@@ -27,7 +27,10 @@ impl Experiment for Matrix {
 
     fn render(&self, ctx: &ExpCtx, _rows: &[Row]) -> String {
         let mut out = Vec::new();
-        for (key, arch) in &ctx.rt.manifest.env_arch_map {
+        let Some(rt) = ctx.rt else {
+            return "matrix: PJRT runtime unavailable (run `make artifacts` first)\n".into();
+        };
+        for (key, arch) in &rt.manifest.env_arch_map {
             let mut parts = key.splitn(3, '/');
             let algo = parts.next().unwrap_or("?");
             let env = parts.next().unwrap_or("?");

@@ -38,7 +38,7 @@ impl Experiment for Table4 {
         cfg.arch_key = Some(format!("dqn/pong_lite/{variant}"));
         cfg.seed = ctx.seed;
         cfg.log_every = 0;
-        let (_policy, log) = crate::algos::dqn::train(ctx.rt, &cfg)?;
+        let (_policy, log) = crate::algos::dqn::train(ctx.runtime()?, &cfg)?;
         Ok(vec![row(&[
             ("policy", s(pol)),
             ("precision", s(prec)),

@@ -112,7 +112,7 @@ impl Experiment for Fig1 {
         }
         let probe_every = (total / 24).max(1);
         let mut rows: Vec<Row> = Vec::new();
-        let rt = ctx.rt;
+        let rt = ctx.runtime()?;
         let seed = ctx.seed;
         let quant = cfg.quant;
         let item_name = item.to_string();
@@ -251,7 +251,7 @@ impl Experiment for Fig2 {
         let (reward, label) = match mode {
             "fp" | "ptq8" => {
                 let policy = get_or_train(
-                    ctx.rt,
+                    ctx.runtime()?,
                     &ctx.policies_dir(),
                     algo,
                     env,
@@ -265,7 +265,7 @@ impl Experiment for Fig2 {
                 } else {
                     EvalMode::Ptq(PtqMethod::Int(8))
                 };
-                let e = evaluate(ctx.rt, &policy, ctx.episodes, em, ctx.seed + 1)?;
+                let e = evaluate(ctx.runtime()?, &policy, ctx.episodes, em, ctx.seed + 1)?;
                 (e.mean_reward, mode.to_string())
             }
             q => {
@@ -280,7 +280,7 @@ impl Experiment for Fig2 {
                 for k in 0..n_seeds as u64 {
                     let policy = train_qat(ctx, algo, env, bits, delay, steps, ctx.seed + k)?;
                     let e = evaluate(
-                        ctx.rt,
+                        ctx.runtime()?,
                         &policy,
                         (ctx.episodes / n_seeds).max(5),
                         EvalMode::AsTrained,
@@ -357,5 +357,5 @@ fn get_or_train_qat(
     steps: usize,
     seed: u64,
 ) -> Result<crate::algos::TrainedPolicy> {
-    get_or_train(ctx.rt, &ctx.policies_dir(), algo, env, quant, steps, seed, None)
+    get_or_train(ctx.runtime()?, &ctx.policies_dir(), algo, env, quant, steps, seed, None)
 }

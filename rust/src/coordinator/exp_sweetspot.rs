@@ -32,7 +32,7 @@ impl Experiment for Fig7 {
         let (algo, env) = item.split_once('/').unwrap();
         let steps = ctx.steps(algo, env);
         let policy = get_or_train(
-            ctx.rt,
+            ctx.runtime()?,
             &ctx.policies_dir(),
             algo,
             env,
@@ -43,7 +43,7 @@ impl Experiment for Fig7 {
         )?;
         let eval_eps = 10; // paper: 10 runs per point
         let mut rows = Vec::new();
-        let fp32 = evaluate(ctx.rt, &policy, eval_eps, EvalMode::AsTrained, ctx.seed + 1)?;
+        let fp32 = evaluate(ctx.runtime()?, &policy, eval_eps, EvalMode::AsTrained, ctx.seed + 1)?;
         rows.push(row(&[
             ("env", s(env)),
             ("bits", n(32.0)),
@@ -51,7 +51,7 @@ impl Experiment for Fig7 {
         ]));
         for bits in BITS {
             let e = evaluate(
-                ctx.rt,
+                ctx.runtime()?,
                 &policy,
                 eval_eps,
                 EvalMode::Ptq(PtqMethod::Int(bits)),

@@ -52,7 +52,7 @@ impl Experiment for Table2 {
         let (algo, env) = item.split_once('/').unwrap();
         let steps = ctx.steps(algo, env);
         let policy = get_or_train(
-            ctx.rt,
+            ctx.runtime()?,
             &ctx.policies_dir(),
             algo,
             env,
@@ -61,16 +61,16 @@ impl Experiment for Table2 {
             ctx.seed,
             None,
         )?;
-        let fp32 = evaluate(ctx.rt, &policy, ctx.episodes, EvalMode::AsTrained, ctx.seed + 1)?;
+        let fp32 = evaluate(ctx.runtime()?, &policy, ctx.episodes, EvalMode::AsTrained, ctx.seed + 1)?;
         let fp16 = evaluate(
-            ctx.rt,
+            ctx.runtime()?,
             &policy,
             ctx.episodes,
             EvalMode::Ptq(PtqMethod::Fp16),
             ctx.seed + 1,
         )?;
         let int8 = evaluate(
-            ctx.rt,
+            ctx.runtime()?,
             &policy,
             ctx.episodes,
             EvalMode::Ptq(PtqMethod::Int(8)),

@@ -16,7 +16,10 @@ use crate::runtime::Runtime;
 
 /// Shared context for a harness invocation.
 pub struct ExpCtx<'a> {
-    pub rt: &'a Runtime,
+    /// PJRT runtime, when the artifacts directory is available. Offline
+    /// experiments (carbon, the actorq collection cells) run without it;
+    /// PJRT-backed experiments obtain it via [`ExpCtx::runtime`].
+    pub rt: Option<&'a Runtime>,
     pub runs_dir: PathBuf,
     /// Step-budget multiplier (1.0 = quick profile; 4.0 ~ paper-scale on
     /// the proxy envs).
@@ -33,11 +36,25 @@ pub struct ExpCtx<'a> {
     pub shard: Option<(usize, usize)>,
     /// Parallel child processes (0/1 = in-process).
     pub jobs: usize,
+    /// Carbon-accounting knobs (region, device watts, config overlay).
+    pub sustain: crate::sustain::SustainConfig,
 }
 
 impl<'a> ExpCtx<'a> {
     pub fn policies_dir(&self) -> PathBuf {
         self.runs_dir.join("policies")
+    }
+
+    /// The PJRT runtime, or a clear error for experiments that need it
+    /// when running offline.
+    pub fn runtime(&self) -> Result<&'a Runtime> {
+        self.rt.ok_or_else(|| {
+            Error::Experiment(
+                "this experiment needs the PJRT runtime (run `make artifacts` first); \
+                 offline-capable: `exp carbon` and the `exp actorq --only collect` cells"
+                    .into(),
+            )
+        })
     }
 
     pub fn sink(&self, exp: &str) -> Result<JsonlSink> {
@@ -75,6 +92,7 @@ pub fn all_experiments() -> Vec<Box<dyn Experiment>> {
         Box::new(crate::coordinator::exp_deploy::Fig6),
         Box::new(crate::coordinator::exp_sweetspot::Fig7),
         Box::new(crate::coordinator::exp_actorq::ActorQExp),
+        Box::new(crate::coordinator::exp_carbon::Carbon),
     ]
 }
 
@@ -172,6 +190,14 @@ fn spawn_shards(ctx: &ExpCtx, exp_name: &str) -> Result<()> {
         if !ctx.bits.is_empty() {
             let b: Vec<String> = ctx.bits.iter().map(|x| x.to_string()).collect();
             cmd.arg("--bits").arg(b.join(","));
+        }
+        // Carbon-accounting knobs must survive into shard children so
+        // every cell is billed identically.
+        cmd.arg("--region").arg(ctx.sustain.region());
+        cmd.arg("--cpu-watts").arg(format!("{}", ctx.sustain.power.cpu_watts));
+        cmd.arg("--accel-watts").arg(format!("{}", ctx.sustain.power.accel_watts));
+        if let Some(cc) = &ctx.sustain.carbon_config {
+            cmd.arg("--carbon-config").arg(cc);
         }
         children.push(
             cmd.spawn()

@@ -78,6 +78,22 @@ impl JsonlSink {
     }
 }
 
+/// Write a JSON document to `path` (creating parent directories), one
+/// value per file with a trailing newline — the `BENCH_*.json`
+/// machine-readable report format tracked across PRs.
+pub fn write_json_file(path: impl AsRef<Path>, v: &Json) -> Result<()> {
+    let path = path.as_ref();
+    if let Some(parent) = path.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)
+                .map_err(|e| Error::io(parent.display().to_string(), e))?;
+        }
+    }
+    let mut out = to_string(v);
+    out.push('\n');
+    std::fs::write(path, out).map_err(|e| Error::io(path.display().to_string(), e))
+}
+
 /// Render rows as an aligned text table with the given column order.
 pub fn render_table(columns: &[&str], rows: &[Row]) -> String {
     let fmt_cell = |r: &Row, c: &str| -> String {

@@ -1,10 +1,26 @@
 //! Training/evaluation orchestration and the experiment harness that
 //! regenerates every table and figure of the paper (DESIGN.md §6).
+//!
+//! Layout:
+//!
+//! * [`experiment`] — the harness core: [`Experiment`] trait, work-item
+//!   resumption over JSONL, `--jobs` process sharding, and the registry
+//!   behind `quarl exp <id>` (see `src/main.rs` for the id -> paper
+//!   artifact matrix).
+//! * [`cache`] — trained-policy cache so experiments share checkpoints
+//!   instead of retraining.
+//! * [`evaluator`] — N-episode policy evaluation, optionally under PTQ.
+//! * [`metrics`] — JSONL row sinks, aligned text tables, and the
+//!   `BENCH_*.json` machine-readable report writer.
+//! * `exp_*` — one module per paper table/figure, plus [`exp_actorq`]
+//!   (systems study) and [`exp_carbon`] (emissions accounting; runs
+//!   offline).
 
 pub mod cache;
 pub mod evaluator;
 pub mod experiment;
 pub mod exp_actorq;
+pub mod exp_carbon;
 pub mod exp_deploy;
 pub mod exp_dists;
 pub mod exp_matrix;

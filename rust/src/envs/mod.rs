@@ -1,5 +1,20 @@
 //! Environment substrate: pure-Rust simulators for every task QuaRL
 //! evaluates (paper environments or documented proxies — DESIGN.md §2).
+//!
+//! The classic-control tasks (cartpole, mountain_car, acrobot, pendulum,
+//! mc_continuous) are equation-level ports of the Gym dynamics; the
+//! `*_lite` families are feature-observation proxies for the paper's
+//! Atari / locomotion / Air Learning workloads, sized so the full
+//! experiment matrix runs on CPU in minutes. Every simulator is
+//! deterministic given its [`crate::rng::Pcg32`] stream and
+//! allocation-free on the step path (the [`Env`] contract in [`api`]).
+//!
+//! * [`api`] — the [`Env`] trait, [`Action`]/[`ActionSpace`], step/reset
+//!   contract.
+//! * [`registry`] — id -> simulator factory ([`make_env`], [`ENV_IDS`]),
+//!   cross-checked against the python-side shape table.
+//! * [`vec_env`] — [`VecEnv`]: synchronous lockstep vectorization with
+//!   auto-reset and episode stats (what actor threads own privately).
 
 pub mod acrobot;
 pub mod api;

@@ -27,6 +27,17 @@
 //! points: [`algos::dqn::train_actorq`] and [`algos::ddpg::train_actorq`];
 //! the `actorq` experiment and `bench_actorq` bench reproduce the
 //! speedup-vs-actor-count and fp32-vs-int8-actor comparisons.
+//!
+//! ## Sustainability accounting (paper §1/§6 carbon claim)
+//!
+//! [`sustain`] meters every ActorQ run ([`sustain::EnergyMeter`]) and
+//! converts busy thread-seconds into kWh and kg-CO2eq via a configurable
+//! device power model and regional grid carbon intensities. The `carbon`
+//! experiment reproduces the paper's fp32-vs-int8 emissions comparison
+//! entirely offline on the pure-Rust deployment engines, and every
+//! report is emitted as machine-readable JSON (`BENCH_carbon.json`,
+//! `BENCH_actorq.json`) so the efficiency trajectory is tracked across
+//! PRs.
 
 pub mod actorq;
 pub mod algos;
@@ -40,6 +51,7 @@ pub mod quant;
 pub mod replay;
 pub mod rng;
 pub mod runtime;
+pub mod sustain;
 pub mod tensor;
 
 pub use error::{Error, Result};

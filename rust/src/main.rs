@@ -3,9 +3,32 @@
 //! Subcommands:
 //!   train --algo dqn --env cartpole [--steps N] [--quant B --delay D]
 //!   eval  --algo dqn --env cartpole [--quant int8|fp16|intN]
-//!   exp <matrix|table2|table3|fig1|fig2|fig3|table4|fig6|fig7|actorq|all>
-//!       [--scale S] [--episodes N] [--seed S] [--jobs J] [--only SUB]
+//!   exp <id|all> [--scale S] [--episodes N] [--seed S] [--jobs J]
+//!       [--only SUB] [--region R] [--cpu-watts W] [--accel-watts W]
+//!       [--carbon-config F]
 //!   list  — show available experiments and environments
+//!
+//! The `exp` subcommand matrix (experiment id -> paper artifact):
+//!
+//! | id       | reproduces                                                |
+//! |----------|-----------------------------------------------------------|
+//! | `matrix` | Table 1 — the (algo x env x scheme) evaluation matrix     |
+//! | `table2` | Table 2 + App. Tables 5-8 — PTQ rewards fp32/fp16/int8    |
+//! | `table3` | Table 3 + Fig 4 — weight distributions by algorithm       |
+//! | `fig3`   | Fig 3 — weight spread vs int8 error across envs           |
+//! | `fig1`   | Fig 1 — QAT-as-regularizer action-distribution probes     |
+//! | `fig2`   | Fig 2 — QAT reward vs bitwidth sweep (`--bits 2,4,6,8`)   |
+//! | `table4` | Table 4/10 + Fig 5 — mixed-precision training case study  |
+//! | `fig6`   | Fig 6 — embedded deployment: fp32 vs int8 on-device       |
+//! | `fig7`   | App. E — PTQ sweet-spot (reward vs bitwidth 2..32)        |
+//! | `actorq` | §3/Table 6 — actor-learner throughput + convergence       |
+//! | `carbon` | §1/§6 — fp32-vs-int8 CO2eq accounting (offline, no PJRT)  |
+//!
+//! Every experiment appends JSONL rows under `runs/results/` and renders
+//! a paper-style text table; `carbon` (and `bench_actorq`) additionally
+//! write machine-readable `BENCH_*.json` reports. PJRT-backed
+//! experiments need `artifacts/`; `carbon` and the `actorq` collection
+//! cells run offline on the pure-Rust deployment engines.
 
 use quarl::algos::{a2c, ddpg, dqn, ppo, QuantSchedule};
 use quarl::config::cli::Args;
@@ -43,7 +66,8 @@ fn print_usage() {
         "quarl — QuaRL (Quantized Reinforcement Learning) reproduction\n\n\
          usage:\n  quarl train --algo <dqn|a2c|ppo|ddpg> --env <id> [--steps N] [--quant B --delay D] [--seed S]\n  \
          quarl eval  --algo <a> --env <id> [--quant fp16|int8|intN] [--episodes N]\n  \
-         quarl exp   <id|all> [--scale S] [--episodes N] [--jobs J] [--only SUB] [--bits 2,4,6,8]\n  \
+         quarl exp   <id|all> [--scale S] [--episodes N] [--jobs J] [--only SUB] [--bits 2,4,6,8]\n              \
+         [--region us|eu|...] [--cpu-watts W] [--accel-watts W] [--carbon-config F]\n  \
          quarl list\n"
     );
 }
@@ -161,13 +185,32 @@ fn cmd_eval(args: &Args) -> Result<()> {
 }
 
 fn cmd_exp(args: &Args) -> Result<()> {
-    let rt = runtime(args)?;
+    // The PJRT runtime is optional here: `exp carbon` (and the actorq
+    // collection cells) run offline on the pure-Rust engines, so a
+    // missing artifacts/ dir or stubbed xla crate must not be fatal.
+    let rt = match runtime(args) {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            eprintln!("note: PJRT runtime unavailable ({e}); offline experiments still run");
+            None
+        }
+    };
     let name = args
         .positional
         .get(1)
         .ok_or_else(|| Error::Config("exp needs an experiment id (try 'quarl list')".into()))?;
+    let default_power = quarl::sustain::PowerModel::default();
+    let cpu_watts = args.get_f64("cpu-watts", default_power.cpu_watts)?;
+    let accel_watts = args.get_f64("accel-watts", default_power.accel_watts)?;
+    for (flag, w) in [("cpu-watts", cpu_watts), ("accel-watts", accel_watts)] {
+        if !w.is_finite() || w < 0.0 {
+            return Err(Error::Config(format!(
+                "--{flag} must be a finite non-negative wattage, got {w}"
+            )));
+        }
+    }
     let ctx = ExpCtx {
-        rt: &rt,
+        rt: rt.as_ref(),
         runs_dir: std::path::PathBuf::from(args.get_or("runs-dir", "runs")),
         scale: args.get_f32("scale", 1.0)?,
         episodes: args.get_usize("episodes", 30)?,
@@ -176,6 +219,11 @@ fn cmd_exp(args: &Args) -> Result<()> {
         filter: args.get("only").map(String::from),
         shard: args.shard()?,
         jobs: args.get_usize("jobs", 1)?,
+        sustain: quarl::sustain::SustainConfig {
+            region: args.get_or("region", "us"),
+            power: quarl::sustain::PowerModel { cpu_watts, accel_watts },
+            carbon_config: args.get("carbon-config").map(std::path::PathBuf::from),
+        },
     };
     run_experiment(&ctx, name)
 }

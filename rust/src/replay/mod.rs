@@ -1,5 +1,18 @@
 //! Experience storage: uniform replay, prioritized replay (sum-tree),
 //! and the on-policy rollout buffer for A2C/PPO.
+//!
+//! * [`uniform`] — [`ReplayBuffer`]: flat struct-of-arrays ring buffer
+//!   (DQN/DDPG); batch assembly is row copies, no per-sample allocation.
+//! * [`prioritized`] — [`PrioritizedReplay`]: proportional PER (Schaul
+//!   et al. 2016) over a [`SumTree`], with importance-sampling weights —
+//!   the configuration the paper's DQN hyperparameters enable.
+//! * [`rollout`] — [`RolloutBuffer`]: n_steps x n_envs on-policy storage
+//!   with GAE, for A2C/PPO.
+//!
+//! All buffers take [`Transition`] views borrowing the caller's
+//! observation scratch, so the hot collection loops stay allocation-free;
+//! the ActorQ channel uses owned transitions
+//! ([`crate::actorq::OwnedTransition`]) and re-borrows on push.
 
 pub mod prioritized;
 pub mod rollout;

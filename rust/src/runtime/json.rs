@@ -286,7 +286,12 @@ fn write_json(v: &Json, out: &mut String) {
         Json::Null => out.push_str("null"),
         Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
         Json::Num(n) => {
-            if n.fract() == 0.0 && n.abs() < 1e15 {
+            if !n.is_finite() {
+                // JSON has no inf/NaN; null keeps the document parseable
+                // (ratios can legitimately divide by zero, e.g. a
+                // zero-carbon grid region).
+                out.push_str("null");
+            } else if n.fract() == 0.0 && n.abs() < 1e15 {
                 out.push_str(&format!("{}", *n as i64));
             } else {
                 out.push_str(&format!("{n}"));
@@ -378,6 +383,18 @@ mod tests {
         let v = Json::parse(src).unwrap();
         let s = to_string(&v);
         assert_eq!(Json::parse(&s).unwrap(), v);
+    }
+
+    #[test]
+    fn non_finite_numbers_serialize_as_null() {
+        assert_eq!(to_string(&Json::Num(f64::INFINITY)), "null");
+        assert_eq!(to_string(&Json::Num(f64::NAN)), "null");
+        let obj = Json::parse(&to_string(&Json::Arr(vec![
+            Json::Num(1.5),
+            Json::Num(f64::NEG_INFINITY),
+        ])))
+        .unwrap();
+        assert_eq!(obj, Json::Arr(vec![Json::Num(1.5), Json::Null]));
     }
 
     #[test]

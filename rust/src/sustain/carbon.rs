@@ -1,0 +1,390 @@
+//! Grid carbon intensity and the CO2-equivalent report.
+//!
+//! Emissions are estimated the way the paper (and Gardner et al.,
+//! *Greener Deep Reinforcement Learning*, 2025) estimate them:
+//!
+//! ```text
+//! kg CO2eq = busy_secs x watts / 3.6e6 [kWh] x gCO2/kWh / 1000
+//! ```
+//!
+//! [`CarbonIntensity`] supplies the regional gCO2/kWh factor (built-in
+//! table, overridable from a JSON config via `--carbon-config`);
+//! [`CarbonReport`] combines a metered run with a power model into kWh
+//! and kg-CO2eq per component; [`CarbonComparison`] pairs an fp32
+//! baseline report with a quantized one and exposes the paper's
+//! headline improvement ratio (1.9x-3.76x in the original).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::error::{Error, Result};
+use crate::runtime::json::{to_string, Json};
+use crate::sustain::meter::MeterSnapshot;
+use crate::sustain::power::{PowerModel, J_PER_KWH};
+use crate::sustain::Component;
+
+/// Regional grid carbon-intensity table, gCO2eq per kWh.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CarbonIntensity {
+    regions: BTreeMap<String, f64>,
+}
+
+impl CarbonIntensity {
+    /// Built-in operational grid intensities (gCO2eq/kWh), rounded from
+    /// IEA / Ember 2023 generation mixes. Override or extend with
+    /// [`CarbonIntensity::load`].
+    pub fn builtin() -> CarbonIntensity {
+        let mut regions = BTreeMap::new();
+        for (name, g) in [
+            ("world", 475.0),
+            ("us", 386.0),
+            ("eu", 276.0),
+            ("china", 582.0),
+            ("india", 713.0),
+            ("australia", 503.0),
+            ("brazil", 102.0),
+            ("france", 56.0),
+            ("sweden", 41.0),
+            ("iceland", 28.0),
+        ] {
+            regions.insert(name.to_string(), g);
+        }
+        CarbonIntensity { regions }
+    }
+
+    /// Parse a region table from JSON: either a flat
+    /// `{"region": gco2_per_kwh, ...}` object or `{"regions": {...}}`.
+    pub fn from_json(v: &Json) -> Result<CarbonIntensity> {
+        let table = match v.opt("regions") {
+            Some(inner) => inner,
+            None => v,
+        };
+        let mut regions = BTreeMap::new();
+        for (name, g) in table.as_obj()? {
+            let g = g.as_f64().map_err(|_| {
+                Error::Config(format!("carbon config: region '{name}' must map to a number"))
+            })?;
+            if !(g.is_finite() && g >= 0.0) {
+                return Err(Error::Config(format!(
+                    "carbon config: region '{name}' has invalid intensity {g}"
+                )));
+            }
+            regions.insert(name.clone(), g);
+        }
+        if regions.is_empty() {
+            return Err(Error::Config("carbon config defines no regions".into()));
+        }
+        Ok(CarbonIntensity { regions })
+    }
+
+    /// Built-in table, overlaid with `path` (a JSON region table) when
+    /// given — configured regions shadow built-in ones.
+    pub fn load(path: Option<&Path>) -> Result<CarbonIntensity> {
+        let mut table = CarbonIntensity::builtin();
+        if let Some(path) = path {
+            let src = std::fs::read_to_string(path)
+                .map_err(|e| Error::io(path.display().to_string(), e))?;
+            let overlay = CarbonIntensity::from_json(&Json::parse(&src)?)?;
+            table.regions.extend(overlay.regions);
+        }
+        Ok(table)
+    }
+
+    /// Grid intensity for `region`, gCO2eq/kWh.
+    pub fn g_per_kwh(&self, region: &str) -> Result<f64> {
+        self.regions.get(region).copied().ok_or_else(|| {
+            Error::Config(format!(
+                "unknown carbon region '{region}' (have: {})",
+                self.regions.keys().cloned().collect::<Vec<_>>().join(", ")
+            ))
+        })
+    }
+
+    /// Registered region names, sorted.
+    pub fn regions(&self) -> impl Iterator<Item = &str> {
+        self.regions.keys().map(|s| s.as_str())
+    }
+}
+
+/// One component's line in a [`CarbonReport`]: the measured seconds, the
+/// watts billed to them, and the derived energy/emissions.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EnergyLine {
+    /// Component label ([`Component::label`]).
+    pub component: String,
+    /// Busy thread-seconds metered for this component.
+    pub busy_secs: f64,
+    /// Steps metered for this component.
+    pub steps: f64,
+    /// Average watts billed to the busy seconds.
+    pub watts: f64,
+    /// `watts x busy_secs / 3.6e6`.
+    pub kwh: f64,
+    /// `kwh x gCO2_per_kwh / 1000`.
+    pub kg_co2eq: f64,
+}
+
+impl EnergyLine {
+    /// Derive kWh and kg-CO2eq from (secs, watts, gCO2/kWh).
+    pub fn compute(
+        component: impl Into<String>,
+        busy_secs: f64,
+        steps: f64,
+        watts: f64,
+        g_per_kwh: f64,
+    ) -> EnergyLine {
+        let kwh = watts * busy_secs / J_PER_KWH;
+        EnergyLine {
+            component: component.into(),
+            busy_secs,
+            steps,
+            watts,
+            kwh,
+            kg_co2eq: kwh * g_per_kwh / 1000.0,
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("component".into(), Json::Str(self.component.clone()));
+        m.insert("busy_secs".into(), Json::Num(self.busy_secs));
+        m.insert("steps".into(), Json::Num(self.steps));
+        m.insert("watts".into(), Json::Num(self.watts));
+        m.insert("kwh".into(), Json::Num(self.kwh));
+        m.insert("kg_co2eq".into(), Json::Num(self.kg_co2eq));
+        Json::Obj(m)
+    }
+
+    fn from_json(v: &Json) -> Result<EnergyLine> {
+        Ok(EnergyLine {
+            component: v.get("component")?.as_str()?.to_string(),
+            busy_secs: v.get("busy_secs")?.as_f64()?,
+            steps: v.get("steps")?.as_f64()?,
+            watts: v.get("watts")?.as_f64()?,
+            kwh: v.get("kwh")?.as_f64()?,
+            kg_co2eq: v.get("kg_co2eq")?.as_f64()?,
+        })
+    }
+}
+
+/// Energy and emissions of one run (or one configuration of a run),
+/// broken down per component. Every ratio input — seconds, watts, and
+/// gCO2/kWh — is carried explicitly so reports are auditable.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CarbonReport {
+    /// What was measured ("dqn/cartpole/int8", ...).
+    pub label: String,
+    /// Grid region the emissions factor came from.
+    pub region: String,
+    /// Grid intensity used, gCO2eq/kWh.
+    pub g_co2_per_kwh: f64,
+    /// Per-component breakdown.
+    pub components: Vec<EnergyLine>,
+    /// Sum of component kWh.
+    pub total_kwh: f64,
+    /// Sum of component kg-CO2eq.
+    pub total_kg_co2eq: f64,
+}
+
+impl CarbonReport {
+    /// Assemble a report from explicit per-component lines.
+    pub fn from_lines(
+        label: impl Into<String>,
+        region: impl Into<String>,
+        g_co2_per_kwh: f64,
+        components: Vec<EnergyLine>,
+    ) -> CarbonReport {
+        let total_kwh = components.iter().map(|l| l.kwh).sum();
+        let total_kg_co2eq = components.iter().map(|l| l.kg_co2eq).sum();
+        CarbonReport {
+            label: label.into(),
+            region: region.into(),
+            g_co2_per_kwh,
+            components,
+            total_kwh,
+            total_kg_co2eq,
+        }
+    }
+
+    /// Bill a metered run at device draw: each component's busy
+    /// thread-seconds x [`PowerModel::watts_for`] x grid intensity.
+    /// Components that recorded nothing are omitted.
+    pub fn from_snapshot(
+        label: impl Into<String>,
+        snapshot: &MeterSnapshot,
+        power: &PowerModel,
+        region: &str,
+        intensity: &CarbonIntensity,
+    ) -> Result<CarbonReport> {
+        let g = intensity.g_per_kwh(region)?;
+        let mut lines = Vec::new();
+        for c in Component::ALL {
+            let u = match snapshot.get(c.label()) {
+                Some(u) if u.busy_secs > 0.0 || u.steps > 0 => u,
+                _ => continue,
+            };
+            lines.push(EnergyLine::compute(
+                c.label(),
+                u.busy_secs,
+                u.steps as f64,
+                power.watts_for(c),
+                g,
+            ));
+        }
+        Ok(CarbonReport::from_lines(label, region, g, lines))
+    }
+
+    /// `self`'s emissions divided by `other`'s (how many times dirtier
+    /// this run was). Infinite when `other` emitted nothing.
+    pub fn ratio_vs(&self, other: &CarbonReport) -> f64 {
+        if other.total_kg_co2eq > 0.0 {
+            self.total_kg_co2eq / other.total_kg_co2eq
+        } else {
+            f64::INFINITY
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("label".into(), Json::Str(self.label.clone()));
+        m.insert("region".into(), Json::Str(self.region.clone()));
+        m.insert("g_co2_per_kwh".into(), Json::Num(self.g_co2_per_kwh));
+        m.insert(
+            "components".into(),
+            Json::Arr(self.components.iter().map(|l| l.to_json()).collect()),
+        );
+        m.insert("total_kwh".into(), Json::Num(self.total_kwh));
+        m.insert("total_kg_co2eq".into(), Json::Num(self.total_kg_co2eq));
+        Json::Obj(m)
+    }
+
+    pub fn from_json(v: &Json) -> Result<CarbonReport> {
+        Ok(CarbonReport {
+            label: v.get("label")?.as_str()?.to_string(),
+            region: v.get("region")?.as_str()?.to_string(),
+            g_co2_per_kwh: v.get("g_co2_per_kwh")?.as_f64()?,
+            components: v
+                .get("components")?
+                .as_arr()?
+                .iter()
+                .map(EnergyLine::from_json)
+                .collect::<Result<Vec<_>>>()?,
+            total_kwh: v.get("total_kwh")?.as_f64()?,
+            total_kg_co2eq: v.get("total_kg_co2eq")?.as_f64()?,
+        })
+    }
+
+    /// Serialize to a JSON string (one line).
+    pub fn to_json_string(&self) -> String {
+        to_string(&self.to_json())
+    }
+}
+
+/// An fp32 baseline report paired with its quantized counterpart — the
+/// paper's Table-style emissions comparison for one (algo, env) cell.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CarbonComparison {
+    /// Cell label ("dqn/cartpole", ...).
+    pub label: String,
+    /// Full-precision configuration.
+    pub baseline: CarbonReport,
+    /// Quantized (int8-actor) configuration.
+    pub quantized: CarbonReport,
+}
+
+impl CarbonComparison {
+    /// The paper's headline number: baseline emissions over quantized
+    /// emissions (> 1 means quantization is greener).
+    pub fn improvement(&self) -> f64 {
+        self.baseline.ratio_vs(&self.quantized)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("label".into(), Json::Str(self.label.clone()));
+        m.insert("baseline".into(), self.baseline.to_json());
+        m.insert("quantized".into(), self.quantized.to_json());
+        m.insert("kg_co2eq_ratio".into(), Json::Num(self.improvement()));
+        Json::Obj(m)
+    }
+
+    pub fn from_json(v: &Json) -> Result<CarbonComparison> {
+        Ok(CarbonComparison {
+            label: v.get("label")?.as_str()?.to_string(),
+            baseline: CarbonReport::from_json(v.get("baseline")?)?,
+            quantized: CarbonReport::from_json(v.get("quantized")?)?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builtin_regions_resolve() {
+        let t = CarbonIntensity::builtin();
+        assert_eq!(t.g_per_kwh("us").unwrap(), 386.0);
+        assert!(t.g_per_kwh("atlantis").is_err());
+        assert!(t.regions().count() >= 8);
+    }
+
+    #[test]
+    fn config_overlay_shadows_builtin() {
+        let overlay =
+            CarbonIntensity::from_json(&Json::parse(r#"{"regions":{"us":100.0,"mars":5}}"#).unwrap())
+                .unwrap();
+        assert_eq!(overlay.g_per_kwh("us").unwrap(), 100.0);
+        assert_eq!(overlay.g_per_kwh("mars").unwrap(), 5.0);
+        // flat form parses too
+        let flat = CarbonIntensity::from_json(&Json::parse(r#"{"x":1}"#).unwrap()).unwrap();
+        assert_eq!(flat.g_per_kwh("x").unwrap(), 1.0);
+        // invalid entries rejected
+        assert!(CarbonIntensity::from_json(&Json::parse(r#"{"x":-3}"#).unwrap()).is_err());
+        assert!(CarbonIntensity::from_json(&Json::parse(r#"{"x":"a"}"#).unwrap()).is_err());
+    }
+
+    #[test]
+    fn hand_computed_emissions() {
+        // 100 s at 36 W = 3600 J = 1e-3 kWh; at 400 g/kWh = 0.4 g = 4e-4 kg
+        let line = EnergyLine::compute("actors", 100.0, 1000.0, 36.0, 400.0);
+        assert!((line.kwh - 1e-3).abs() < 1e-15);
+        assert!((line.kg_co2eq - 4e-4).abs() < 1e-15);
+        let base = CarbonReport::from_lines("fp32", "us", 400.0, vec![line.clone()]);
+        let half = EnergyLine::compute("actors", 50.0, 1000.0, 36.0, 400.0);
+        let quant = CarbonReport::from_lines("int8", "us", 400.0, vec![half]);
+        assert!((base.ratio_vs(&quant) - 2.0).abs() < 1e-12);
+        let cmp = CarbonComparison { label: "cell".into(), baseline: base, quantized: quant };
+        assert!((cmp.improvement() - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn report_json_round_trips() {
+        let base = CarbonReport::from_lines(
+            "dqn/cartpole/fp32",
+            "eu",
+            276.0,
+            vec![EnergyLine::compute("actors", 12.5, 30_000.0, 15.0, 276.0)],
+        );
+        let quant = CarbonReport::from_lines(
+            "dqn/cartpole/int8",
+            "eu",
+            276.0,
+            vec![EnergyLine::compute("actors", 4.0, 30_000.0, 15.0, 276.0)],
+        );
+        let cmp = CarbonComparison { label: "dqn/cartpole".into(), baseline: base, quantized: quant };
+        let s = to_string(&cmp.to_json());
+        let back = CarbonComparison::from_json(&Json::parse(&s).unwrap()).unwrap();
+        assert_eq!(back, cmp);
+        // single-report round trip as well
+        let r = cmp.baseline.to_json_string();
+        assert_eq!(CarbonReport::from_json(&Json::parse(&r).unwrap()).unwrap(), cmp.baseline);
+    }
+
+    #[test]
+    fn zero_emission_ratio_is_infinite() {
+        let a = CarbonReport::from_lines("a", "us", 386.0, vec![]);
+        let b = CarbonReport::from_lines("b", "us", 386.0, vec![]);
+        assert!(a.ratio_vs(&b).is_infinite());
+    }
+}

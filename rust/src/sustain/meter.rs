@@ -1,0 +1,324 @@
+//! Energy metering: scoped wall-clock + step attribution per pipeline
+//! component.
+//!
+//! The meter answers "how many busy thread-seconds (and env/train steps)
+//! did each part of the system consume", which is the measured input to
+//! every energy estimate in [`crate::sustain::carbon`]. It is built for
+//! the ActorQ hot paths:
+//!
+//! * counters are per-[`Component`] relaxed atomics, so actor threads
+//!   record without locks;
+//! * a [`ScopedTimer`] is two clock reads and one atomic add — cheap
+//!   enough to wrap one vec-env sweep or one train-program call;
+//! * time comes from a pluggable [`Clock`], so tests drive the meter
+//!   with a [`FakeClock`] and assert attribution exactly
+//!   (`rust/tests/sustain_carbon.rs`).
+//!
+//! "Busy seconds" are *thread*-seconds: two actor threads busy for 1 s
+//! each record 2 s, which is the right basis for energy (each busy core
+//! draws [`crate::sustain::PowerModel::cpu_watts`]).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Pipeline components the meter attributes time and steps to (the
+/// ActorQ split of paper §3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Component {
+    /// Actor threads: deployment-engine forwards + env stepping.
+    Actors,
+    /// Learner thread: train-program execution.
+    Learner,
+    /// Quantize-on-broadcast parameter publication.
+    Broadcast,
+}
+
+impl Component {
+    /// All components, in stable report order.
+    pub const ALL: [Component; 3] =
+        [Component::Actors, Component::Learner, Component::Broadcast];
+
+    /// Stable lowercase label used in reports and JSON.
+    pub fn label(self) -> &'static str {
+        match self {
+            Component::Actors => "actors",
+            Component::Learner => "learner",
+            Component::Broadcast => "broadcast",
+        }
+    }
+
+    fn idx(self) -> usize {
+        self as usize
+    }
+}
+
+/// Time source for the meter. Production uses [`MonotonicClock`]; tests
+/// use [`FakeClock`] for exact, deterministic attribution.
+pub trait Clock: Send + Sync {
+    /// Nanoseconds since an arbitrary fixed origin.
+    fn now_nanos(&self) -> u64;
+}
+
+/// Real monotonic time (nanoseconds since meter construction).
+#[derive(Debug)]
+pub struct MonotonicClock {
+    origin: Instant,
+}
+
+impl MonotonicClock {
+    pub fn new() -> MonotonicClock {
+        MonotonicClock { origin: Instant::now() }
+    }
+}
+
+impl Default for MonotonicClock {
+    fn default() -> Self {
+        MonotonicClock::new()
+    }
+}
+
+impl Clock for MonotonicClock {
+    fn now_nanos(&self) -> u64 {
+        self.origin.elapsed().as_nanos() as u64
+    }
+}
+
+/// Manually-advanced clock for deterministic tests.
+#[derive(Debug, Default)]
+pub struct FakeClock {
+    nanos: AtomicU64,
+}
+
+impl FakeClock {
+    pub fn new() -> FakeClock {
+        FakeClock::default()
+    }
+
+    /// Advance the clock by `nanos` nanoseconds.
+    pub fn advance_nanos(&self, nanos: u64) {
+        self.nanos.fetch_add(nanos, Ordering::SeqCst);
+    }
+
+    /// Advance the clock by (non-negative, finite) `secs` seconds.
+    pub fn advance_secs(&self, secs: f64) {
+        self.advance_nanos((secs * 1e9) as u64);
+    }
+}
+
+impl Clock for FakeClock {
+    fn now_nanos(&self) -> u64 {
+        self.nanos.load(Ordering::SeqCst)
+    }
+}
+
+#[derive(Debug, Default)]
+struct Slot {
+    busy_nanos: AtomicU64,
+    steps: AtomicU64,
+    scopes: AtomicU64,
+}
+
+/// Thread-safe per-component wall-clock and step accounting.
+///
+/// Share it as `Arc<EnergyMeter>`: the learner scopes its train calls,
+/// actor threads scope their collection sweeps, and at the end
+/// [`EnergyMeter::snapshot`] yields the numbers a
+/// [`crate::sustain::CarbonReport`] is built from.
+pub struct EnergyMeter {
+    clock: Arc<dyn Clock>,
+    slots: [Slot; 3],
+}
+
+impl std::fmt::Debug for EnergyMeter {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("EnergyMeter").field("snapshot", &self.snapshot()).finish()
+    }
+}
+
+impl Default for EnergyMeter {
+    fn default() -> Self {
+        EnergyMeter::new()
+    }
+}
+
+impl EnergyMeter {
+    /// A meter over real monotonic time.
+    pub fn new() -> EnergyMeter {
+        EnergyMeter::with_clock(Arc::new(MonotonicClock::new()))
+    }
+
+    /// A meter over an explicit clock (tests pass a [`FakeClock`]).
+    pub fn with_clock(clock: Arc<dyn Clock>) -> EnergyMeter {
+        EnergyMeter {
+            clock,
+            slots: [Slot::default(), Slot::default(), Slot::default()],
+        }
+    }
+
+    /// Start a scoped timer; the elapsed time is attributed to
+    /// `component` when the guard drops.
+    pub fn scope(&self, component: Component) -> ScopedTimer<'_> {
+        self.slots[component.idx()].scopes.fetch_add(1, Ordering::Relaxed);
+        ScopedTimer { meter: self, component, start: self.clock.now_nanos() }
+    }
+
+    /// Attribute `nanos` busy nanoseconds to `component` directly.
+    pub fn record_nanos(&self, component: Component, nanos: u64) {
+        self.slots[component.idx()].busy_nanos.fetch_add(nanos, Ordering::Relaxed);
+    }
+
+    /// Attribute `n` steps (env steps for actors, train steps for the
+    /// learner, publications for broadcast) to `component`.
+    pub fn add_steps(&self, component: Component, n: u64) {
+        self.slots[component.idx()].steps.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Busy thread-seconds recorded against `component` so far.
+    pub fn busy_secs(&self, component: Component) -> f64 {
+        self.slots[component.idx()].busy_nanos.load(Ordering::Relaxed) as f64 / 1e9
+    }
+
+    /// Steps recorded against `component` so far.
+    pub fn steps(&self, component: Component) -> u64 {
+        self.slots[component.idx()].steps.load(Ordering::Relaxed)
+    }
+
+    /// Consistent point-in-time copy of all counters.
+    pub fn snapshot(&self) -> MeterSnapshot {
+        MeterSnapshot {
+            components: Component::ALL
+                .iter()
+                .map(|&c| ComponentUsage {
+                    component: c.label(),
+                    busy_secs: self.busy_secs(c),
+                    steps: self.steps(c),
+                    scopes: self.slots[c.idx()].scopes.load(Ordering::Relaxed),
+                })
+                .collect(),
+        }
+    }
+}
+
+/// RAII guard: attributes the elapsed time to its component on drop.
+pub struct ScopedTimer<'a> {
+    meter: &'a EnergyMeter,
+    component: Component,
+    start: u64,
+}
+
+impl Drop for ScopedTimer<'_> {
+    fn drop(&mut self) {
+        let end = self.meter.clock.now_nanos();
+        self.meter.record_nanos(self.component, end.saturating_sub(self.start));
+    }
+}
+
+/// One component's accumulated usage inside a [`MeterSnapshot`].
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ComponentUsage {
+    /// [`Component::label`] of the component.
+    pub component: &'static str,
+    /// Busy thread-seconds.
+    pub busy_secs: f64,
+    /// Steps attributed (env steps / train steps / publications).
+    pub steps: u64,
+    /// Number of [`EnergyMeter::scope`] activations.
+    pub scopes: u64,
+}
+
+/// Point-in-time copy of an [`EnergyMeter`], carried in run telemetry
+/// ([`crate::actorq::ActorQLog::energy`]) and fed to carbon reports.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct MeterSnapshot {
+    /// One entry per [`Component`], in [`Component::ALL`] order.
+    pub components: Vec<ComponentUsage>,
+}
+
+impl MeterSnapshot {
+    /// Usage entry by component label (`"actors"`, `"learner"`, ...).
+    pub fn get(&self, label: &str) -> Option<&ComponentUsage> {
+        self.components.iter().find(|c| c.component == label)
+    }
+
+    /// Busy thread-seconds for a component label (0 when absent).
+    pub fn busy_secs(&self, label: &str) -> f64 {
+        self.get(label).map(|c| c.busy_secs).unwrap_or(0.0)
+    }
+
+    /// Steps for a component label (0 when absent).
+    pub fn steps(&self, label: &str) -> u64 {
+        self.get(label).map(|c| c.steps).unwrap_or(0)
+    }
+
+    /// Total busy thread-seconds across every component.
+    pub fn total_busy_secs(&self) -> f64 {
+        self.components.iter().map(|c| c.busy_secs).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fake_clock_scopes_are_exact() {
+        let clock = Arc::new(FakeClock::new());
+        let meter = EnergyMeter::with_clock(clock.clone());
+        {
+            let _t = meter.scope(Component::Learner);
+            clock.advance_nanos(2_000_000_000);
+        }
+        {
+            let _t = meter.scope(Component::Actors);
+            clock.advance_nanos(500_000_000);
+        }
+        meter.add_steps(Component::Actors, 128);
+        assert_eq!(meter.busy_secs(Component::Learner), 2.0);
+        assert_eq!(meter.busy_secs(Component::Actors), 0.5);
+        assert_eq!(meter.busy_secs(Component::Broadcast), 0.0);
+        assert_eq!(meter.steps(Component::Actors), 128);
+    }
+
+    #[test]
+    fn nested_and_repeated_scopes_accumulate() {
+        let clock = Arc::new(FakeClock::new());
+        let meter = EnergyMeter::with_clock(clock.clone());
+        for _ in 0..10 {
+            let _t = meter.scope(Component::Broadcast);
+            clock.advance_nanos(100);
+        }
+        assert_eq!(meter.snapshot().get("broadcast").unwrap().scopes, 10);
+        assert!((meter.busy_secs(Component::Broadcast) - 1e-6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn snapshot_is_stable_and_labelled() {
+        let meter = EnergyMeter::new();
+        meter.add_steps(Component::Learner, 3);
+        let s = meter.snapshot();
+        assert_eq!(s.components.len(), 3);
+        assert_eq!(s.components[0].component, "actors");
+        assert_eq!(s.steps("learner"), 3);
+        assert_eq!(s.busy_secs("no_such"), 0.0);
+        assert_eq!(s.total_busy_secs(), s.components.iter().map(|c| c.busy_secs).sum::<f64>());
+    }
+
+    #[test]
+    fn meter_is_shareable_across_threads() {
+        let meter = Arc::new(EnergyMeter::new());
+        let mut handles = Vec::new();
+        for _ in 0..4 {
+            let m = meter.clone();
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..1000 {
+                    m.add_steps(Component::Actors, 1);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(meter.steps(Component::Actors), 4000);
+    }
+}

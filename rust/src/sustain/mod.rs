@@ -1,0 +1,82 @@
+//! Carbon and energy accounting (the paper's sustainability claim,
+//! made measurable).
+//!
+//! QuaRL's headline is not only speed: quantized training "reduces
+//! carbon emission by 1.9x-3.76x" versus full precision. This module
+//! turns the repo's throughput numbers into that comparison, the same
+//! way the paper (and Gardner et al., *Greener Deep Reinforcement
+//! Learning*, 2025) does it:
+//!
+//! ```text
+//! kg CO2eq = measured compute time x device power x grid gCO2/kWh
+//! ```
+//!
+//! * [`meter`] — [`EnergyMeter`]: lock-free scoped timers attributing
+//!   busy thread-seconds and step counts to pipeline [`Component`]s
+//!   (actor threads, learner, quantize-on-broadcast). Deterministic
+//!   under a [`FakeClock`].
+//! * [`power`] — [`PowerModel`]: configurable device watts for CPU and
+//!   accelerator, plus a FLOP-count energy estimator
+//!   ([`mlp_forward_joules`]) for the pure-Rust int8/fp32 deployment
+//!   engines as a machine-noise-free cross-check.
+//! * [`carbon`] — [`CarbonIntensity`]: regional grid profiles (built-in
+//!   table + JSON config overlay); [`CarbonReport`] /
+//!   [`CarbonComparison`]: kWh and kg-CO2eq per run with the
+//!   fp32-vs-int8 improvement ratio, JSON round-trippable so the
+//!   `BENCH_carbon.json` trajectory can be tracked across PRs.
+//!
+//! Wiring: the ActorQ drivers ([`crate::algos::dqn::train_actorq`],
+//! [`crate::algos::ddpg::train_actorq`]) meter every run and expose the
+//! snapshot via [`crate::actorq::ActorQLog::energy`]; `quarl exp carbon`
+//! reproduces the paper's emissions table offline (no PJRT needed) on
+//! the native deployment engines.
+
+pub mod carbon;
+pub mod meter;
+pub mod power;
+
+pub use carbon::{CarbonComparison, CarbonIntensity, CarbonReport, EnergyLine};
+pub use meter::{Clock, Component, EnergyMeter, FakeClock, MeterSnapshot, MonotonicClock};
+pub use power::{forward_joules, mlp_forward_joules, mlp_macs, mlp_weight_bytes, PowerModel};
+
+/// Sustainability knobs threaded from the CLI into the experiment
+/// harness (`--region`, `--cpu-watts`, `--accel-watts`,
+/// `--carbon-config`).
+#[derive(Debug, Clone, Default)]
+pub struct SustainConfig {
+    /// Grid region to bill emissions against (empty = "us").
+    pub region: String,
+    /// Device power draw.
+    pub power: PowerModel,
+    /// Optional JSON region table overlaying the built-in one.
+    pub carbon_config: Option<std::path::PathBuf>,
+}
+
+impl SustainConfig {
+    /// The region, defaulting to "us" when unset.
+    pub fn region(&self) -> &str {
+        if self.region.is_empty() {
+            "us"
+        } else {
+            &self.region
+        }
+    }
+
+    /// Resolve the carbon-intensity table (built-in + config overlay).
+    pub fn intensity(&self) -> crate::error::Result<CarbonIntensity> {
+        CarbonIntensity::load(self.carbon_config.as_deref())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_config_resolves() {
+        let cfg = SustainConfig::default();
+        assert_eq!(cfg.region(), "us");
+        let t = cfg.intensity().unwrap();
+        assert!(t.g_per_kwh(cfg.region()).unwrap() > 0.0);
+    }
+}

@@ -1,0 +1,147 @@
+//! Device power models and the FLOP-count energy estimator.
+//!
+//! Two independent estimates of the same quantity, so every number in a
+//! [`crate::sustain::CarbonReport`] can be cross-checked:
+//!
+//! 1. **Device draw** ([`PowerModel`]): configurable watts per busy core
+//!    (CPU) and per accelerator, multiplied by the metered busy
+//!    thread-seconds. This is how the paper (and Gardner et al. 2025)
+//!    estimate training emissions: measured compute time x device power.
+//! 2. **Arithmetic energy** ([`forward_joules`]): per-operation energy
+//!    costs for the pure-Rust deployment engines, from the per-op /
+//!    per-byte figures of Horowitz's energy tables (ISSCC 2014, 45 nm):
+//!    an int8 MAC costs ~20x less than an fp32 MAC and moves 4x fewer
+//!    weight bytes. This is what makes the fp32-vs-int8 comparison
+//!    deterministic — it depends on operation counts, not on how noisy
+//!    the benchmarking machine is.
+
+use crate::actorq::ActorPrecision;
+use crate::sustain::meter::Component;
+
+/// Joules per kilowatt-hour.
+pub const J_PER_KWH: f64 = 3.6e6;
+
+/// Energy of one fp32 multiply-accumulate, picojoules (3.7 pJ multiply
+/// + 0.9 pJ add; Horowitz, ISSCC 2014, 45 nm).
+pub const PJ_PER_MAC_FP32: f64 = 4.6;
+
+/// Energy of one int8 multiply-accumulate, picojoules (0.2 pJ multiply
+/// + 0.03 pJ add; same source).
+pub const PJ_PER_MAC_INT8: f64 = 0.23;
+
+/// Energy per weight byte fetched (on-chip SRAM-class traffic).
+pub const PJ_PER_WEIGHT_BYTE: f64 = 10.0;
+
+/// Configurable device power draw (the `--cpu-watts` / `--accel-watts`
+/// CLI flags).
+///
+/// `cpu_watts` is *per busy core*: the meter reports busy
+/// thread-seconds, so `energy = cpu_watts x thread_secs` scales with how
+/// many actor threads were actually running. The default (15 W) is a
+/// desktop-class package TDP divided by its core count.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PowerModel {
+    /// Watts drawn per busy CPU core (actors, broadcast, CPU learner).
+    pub cpu_watts: f64,
+    /// Accelerator watts for the PJRT learner; 0 means the learner runs
+    /// on CPU and is billed at `cpu_watts`.
+    pub accel_watts: f64,
+}
+
+impl Default for PowerModel {
+    fn default() -> Self {
+        PowerModel { cpu_watts: 15.0, accel_watts: 0.0 }
+    }
+}
+
+impl PowerModel {
+    /// Watts billed to one busy thread of `component`.
+    pub fn watts_for(&self, component: Component) -> f64 {
+        match component {
+            Component::Actors | Component::Broadcast => self.cpu_watts,
+            Component::Learner => {
+                if self.accel_watts > 0.0 {
+                    self.accel_watts
+                } else {
+                    self.cpu_watts
+                }
+            }
+        }
+    }
+
+    /// Device-draw energy for `busy_secs` thread-seconds of `component`.
+    pub fn energy_kwh(&self, component: Component, busy_secs: f64) -> f64 {
+        self.watts_for(component) * busy_secs / J_PER_KWH
+    }
+}
+
+/// Multiply-accumulates in one forward pass of a dense MLP with the
+/// given layer widths (`[obs, h1, ..., out]`).
+pub fn mlp_macs(dims: &[usize]) -> f64 {
+    dims.windows(2).map(|w| (w[0] * w[1]) as f64).sum()
+}
+
+/// Weight bytes touched by one forward pass at `precision` (i8 codes vs
+/// f32 weights; biases stay f32 in both engines).
+pub fn mlp_weight_bytes(dims: &[usize], precision: ActorPrecision) -> f64 {
+    let w_bytes = match precision {
+        ActorPrecision::Fp32 => 4.0,
+        ActorPrecision::Int8 => 1.0,
+    };
+    dims.windows(2).map(|w| (w[0] * w[1]) as f64 * w_bytes + w[1] as f64 * 4.0).sum()
+}
+
+/// Modeled joules of one deployment-engine forward pass: arithmetic
+/// energy plus weight traffic.
+pub fn forward_joules(precision: ActorPrecision, macs: f64, weight_bytes: f64) -> f64 {
+    let pj_mac = match precision {
+        ActorPrecision::Fp32 => PJ_PER_MAC_FP32,
+        ActorPrecision::Int8 => PJ_PER_MAC_INT8,
+    };
+    (macs * pj_mac + weight_bytes * PJ_PER_WEIGHT_BYTE) * 1e-12
+}
+
+/// Convenience: modeled joules per forward for an MLP shape.
+pub fn mlp_forward_joules(dims: &[usize], precision: ActorPrecision) -> f64 {
+    forward_joules(precision, mlp_macs(dims), mlp_weight_bytes(dims, precision))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mac_and_byte_counts_are_exact() {
+        // cartpole policy: 4 -> 64 -> 64 -> 2
+        let dims = [4usize, 64, 64, 2];
+        assert_eq!(mlp_macs(&dims), (4 * 64 + 64 * 64 + 64 * 2) as f64);
+        let f32_bytes = mlp_weight_bytes(&dims, ActorPrecision::Fp32);
+        let i8_bytes = mlp_weight_bytes(&dims, ActorPrecision::Int8);
+        assert_eq!(f32_bytes, (4480 * 4 + (64 + 64 + 2) * 4) as f64);
+        assert_eq!(i8_bytes, (4480 + (64 + 64 + 2) * 4) as f64);
+        assert!(f32_bytes / i8_bytes > 3.5);
+    }
+
+    #[test]
+    fn int8_forward_is_cheaper_for_any_shape() {
+        for dims in [&[4usize, 64, 64, 2][..], &[12, 256, 256, 25], &[2, 8, 1]] {
+            let f = mlp_forward_joules(dims, ActorPrecision::Fp32);
+            let q = mlp_forward_joules(dims, ActorPrecision::Int8);
+            assert!(f > q, "fp32 {f} must exceed int8 {q} for {dims:?}");
+            assert!(f / q > 2.0, "energy ratio {:.2} suspiciously small", f / q);
+        }
+    }
+
+    #[test]
+    fn device_energy_scales_with_watts_and_time() {
+        let p = PowerModel { cpu_watts: 36.0, accel_watts: 0.0 };
+        // 36 W for 100 s = 3600 J = 0.001 kWh
+        let kwh = p.energy_kwh(Component::Actors, 100.0);
+        assert!((kwh - 0.001).abs() < 1e-12);
+        // learner falls back to cpu_watts when no accelerator is set
+        assert_eq!(p.watts_for(Component::Learner), 36.0);
+        let accel = PowerModel { cpu_watts: 36.0, accel_watts: 120.0 };
+        assert_eq!(accel.watts_for(Component::Learner), 120.0);
+        assert_eq!(accel.watts_for(Component::Broadcast), 36.0);
+    }
+}

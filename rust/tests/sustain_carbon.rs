@@ -1,0 +1,160 @@
+//! Sustainability-subsystem invariants: deterministic energy attribution
+//! under a fake clock, carbon-report arithmetic against hand-computed
+//! values, and JSON round-trips of the machine-readable reports.
+//! Everything here runs offline (no PJRT, no artifacts).
+
+use std::sync::Arc;
+
+use quarl::actorq::ActorPrecision;
+use quarl::runtime::json::Json;
+use quarl::sustain::{
+    mlp_forward_joules, mlp_macs, mlp_weight_bytes, CarbonComparison, CarbonIntensity,
+    CarbonReport, Component, EnergyLine, EnergyMeter, FakeClock, PowerModel,
+};
+
+#[test]
+fn fake_clock_attribution_is_exact_and_deterministic() {
+    let clock = Arc::new(FakeClock::new());
+    let meter = EnergyMeter::with_clock(clock.clone());
+
+    // learner: 3 scopes of 2s; actors: 4 scopes of 250ms; broadcast: 1ms
+    for _ in 0..3 {
+        let _t = meter.scope(Component::Learner);
+        clock.advance_secs(2.0);
+    }
+    for _ in 0..4 {
+        let _t = meter.scope(Component::Actors);
+        clock.advance_nanos(250_000_000);
+        meter.add_steps(Component::Actors, 64);
+    }
+    {
+        let _t = meter.scope(Component::Broadcast);
+        clock.advance_nanos(1_000_000);
+    }
+
+    let snap = meter.snapshot();
+    assert_eq!(snap.busy_secs("learner"), 6.0);
+    assert_eq!(snap.busy_secs("actors"), 1.0);
+    assert_eq!(snap.busy_secs("broadcast"), 1e-3);
+    assert_eq!(snap.steps("actors"), 256);
+    assert_eq!(snap.get("learner").unwrap().scopes, 3);
+    assert!((snap.total_busy_secs() - 7.001).abs() < 1e-12);
+
+    // untouched clock time (idle waits) is not billed
+    clock.advance_secs(100.0);
+    assert_eq!(meter.snapshot(), snap);
+}
+
+#[test]
+fn snapshot_report_matches_hand_computed_emissions() {
+    let clock = Arc::new(FakeClock::new());
+    let meter = EnergyMeter::with_clock(clock.clone());
+    {
+        let _t = meter.scope(Component::Actors);
+        clock.advance_secs(1000.0);
+    }
+    {
+        let _t = meter.scope(Component::Learner);
+        clock.advance_secs(500.0);
+    }
+    let power = PowerModel { cpu_watts: 18.0, accel_watts: 72.0 };
+    let table = CarbonIntensity::builtin();
+    let report =
+        CarbonReport::from_snapshot("run", &meter.snapshot(), &power, "us", &table).unwrap();
+
+    // actors: 1000 s x 18 W = 18 kJ = 5e-3 kWh
+    // learner: 500 s x 72 W = 36 kJ = 1e-2 kWh
+    assert_eq!(report.components.len(), 2, "broadcast recorded nothing, omitted");
+    let actors = &report.components[0];
+    assert_eq!(actors.component, "actors");
+    assert!((actors.kwh - 5e-3).abs() < 1e-15);
+    let learner = &report.components[1];
+    assert!((learner.kwh - 1e-2).abs() < 1e-15);
+    assert!((report.total_kwh - 1.5e-2).abs() < 1e-15);
+    // at 386 gCO2/kWh: 15e-3 kWh -> 5.79 g -> 5.79e-3 kg
+    assert!((report.total_kg_co2eq - 1.5e-2 * 386.0 / 1000.0).abs() < 1e-12);
+    assert_eq!(report.g_co2_per_kwh, 386.0);
+}
+
+#[test]
+fn comparison_ratio_against_hand_computed_values() {
+    // fp32: 200 s at 50 W; int8: 80 s at 50 W; 400 gCO2/kWh.
+    // kg_fp32 = 200*50/3.6e6 * 0.4 = 1.1111..e-3
+    // ratio = 200/80 = 2.5 exactly (same watts, same grid)
+    let g = 400.0;
+    let fp32 = CarbonReport::from_lines(
+        "cell/fp32",
+        "test",
+        g,
+        vec![EnergyLine::compute("actors", 200.0, 10_000.0, 50.0, g)],
+    );
+    let int8 = CarbonReport::from_lines(
+        "cell/int8",
+        "test",
+        g,
+        vec![EnergyLine::compute("actors", 80.0, 10_000.0, 50.0, g)],
+    );
+    assert!((fp32.total_kg_co2eq - 200.0 * 50.0 / 3.6e6 * g / 1000.0).abs() < 1e-15);
+    let cmp = CarbonComparison { label: "cell".into(), baseline: fp32, quantized: int8 };
+    assert!((cmp.improvement() - 2.5).abs() < 1e-12);
+}
+
+#[test]
+fn report_and_comparison_json_round_trip() {
+    let g = CarbonIntensity::builtin().g_per_kwh("eu").unwrap();
+    let mk = |label: &str, secs: f64, watts: f64| {
+        CarbonReport::from_lines(
+            label,
+            "eu",
+            g,
+            vec![
+                EnergyLine::compute("actors", secs, 30_000.0, watts, g),
+                EnergyLine::compute("learner", secs / 3.0, 1_500.0, 15.0, g),
+            ],
+        )
+    };
+    let cmp = CarbonComparison {
+        label: "dqn/cartpole".into(),
+        baseline: mk("dqn/cartpole/fp32", 12.25, 9.5),
+        quantized: mk("dqn/cartpole/int8", 3.5, 2.125),
+    };
+    let text = quarl::runtime::json::to_string(&cmp.to_json());
+    let back = CarbonComparison::from_json(&Json::parse(&text).unwrap()).unwrap();
+    assert_eq!(back, cmp);
+    assert!((back.improvement() - cmp.improvement()).abs() < 1e-12);
+
+    // every ratio input is present in the serialized form
+    let parsed = Json::parse(&text).unwrap();
+    let line = &parsed.get("baseline").unwrap().get("components").unwrap().as_arr().unwrap()[0];
+    for key in ["busy_secs", "watts", "kwh", "kg_co2eq", "steps"] {
+        assert!(line.opt(key).is_some(), "missing {key}");
+    }
+    assert!(parsed.get("baseline").unwrap().opt("g_co2_per_kwh").is_some());
+    assert!(parsed.opt("kg_co2eq_ratio").is_some());
+}
+
+#[test]
+fn flop_model_favours_int8_and_matches_counts() {
+    let dims = [4usize, 64, 64, 2];
+    assert_eq!(mlp_macs(&dims), 4480.0);
+    assert_eq!(mlp_weight_bytes(&dims, ActorPrecision::Fp32), 4.0 * 4480.0 + 130.0 * 4.0);
+    assert_eq!(mlp_weight_bytes(&dims, ActorPrecision::Int8), 4480.0 + 130.0 * 4.0);
+    let f = mlp_forward_joules(&dims, ActorPrecision::Fp32);
+    let q = mlp_forward_joules(&dims, ActorPrecision::Int8);
+    assert!(f > 0.0 && q > 0.0 && f > q);
+    // ratio must clear the acceptance bar (> 1.0) with margin
+    assert!(f / q > 2.0, "modeled fp32:int8 energy ratio {:.2}", f / q);
+}
+
+#[test]
+fn carbon_config_overlay_round_trips_through_disk() {
+    let dir = std::env::temp_dir().join("quarl_sustain_test");
+    let _ = std::fs::create_dir_all(&dir);
+    let path = dir.join("regions.json");
+    std::fs::write(&path, r#"{"regions": {"testgrid": 123.5, "us": 1.0}}"#).unwrap();
+    let table = CarbonIntensity::load(Some(&path)).unwrap();
+    assert_eq!(table.g_per_kwh("testgrid").unwrap(), 123.5);
+    assert_eq!(table.g_per_kwh("us").unwrap(), 1.0, "overlay shadows builtin");
+    assert!(table.g_per_kwh("eu").unwrap() > 0.0, "builtin regions survive");
+    assert!(CarbonIntensity::load(Some(&dir.join("missing.json"))).is_err());
+}
