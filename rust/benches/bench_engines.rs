@@ -1,0 +1,134 @@
+//! Bench: batched inference kernels — rows/sec of `forward_batch` vs the
+//! per-row scalar `forward` across batch size x layer width, fp32 and
+//! int8 engines (the GEMM-ification of the actor hot path).
+//!
+//!     cargo bench --bench bench_engines
+//!
+//! Acceptance shape: at batch 64 on the 128x512x512x25 MLP the int8
+//! batched kernel clears >= 2x the scalar per-row rows/sec — the weight
+//! panel is streamed once per batch instead of once per row, which is
+//! the paper's memory-bandwidth argument applied along the batch axis.
+//!
+//! Output: the human-readable rows, then exactly one machine-readable
+//! JSON summary line (also written to `BENCH_engines.json`) so the
+//! kernel's trajectory is tracked across PRs alongside
+//! `BENCH_actorq.json`.
+
+use std::collections::BTreeMap;
+
+use quarl::bench_util::{bench, black_box};
+use quarl::coordinator::metrics::write_json_file;
+use quarl::inference::{EngineF32, EngineInt8};
+use quarl::rng::Pcg32;
+use quarl::runtime::json::{to_string, Json};
+use quarl::runtime::manifest::TensorSpec;
+use quarl::runtime::ParamSet;
+
+const IN_DIM: usize = 128;
+const OUT_DIM: usize = 25;
+const WIDTHS: [usize; 3] = [64, 256, 512];
+const BATCHES: [usize; 3] = [1, 8, 64];
+
+fn mlp_params(dims: &[usize], seed: u64) -> ParamSet {
+    let mut specs = Vec::new();
+    for i in 0..dims.len() - 1 {
+        specs.push(TensorSpec { name: format!("q.w{i}"), shape: vec![dims[i], dims[i + 1]] });
+        specs.push(TensorSpec { name: format!("q.b{i}"), shape: vec![dims[i + 1]] });
+    }
+    let mut rng = Pcg32::new(seed, 1);
+    ParamSet::init(&specs, &mut rng)
+}
+
+/// JSON row for one engine x width x batch cell from the two measured
+/// per-sweep medians (ns).
+fn cell_row(engine: &str, width: usize, batch: usize, scalar_ns: f64, batched_ns: f64) -> Json {
+    let rows_scalar = batch as f64 / (scalar_ns * 1e-9);
+    let rows_batched = batch as f64 / (batched_ns * 1e-9);
+    println!(
+        "    -> {rows_scalar:>12.0} rows/s scalar, {rows_batched:>12.0} rows/s batched ({:.2}x)",
+        scalar_ns / batched_ns
+    );
+    let mut row = BTreeMap::new();
+    row.insert("engine".to_string(), Json::Str(engine.into()));
+    row.insert("width".to_string(), Json::Num(width as f64));
+    row.insert("batch".to_string(), Json::Num(batch as f64));
+    row.insert("rows_per_sec_scalar".to_string(), Json::Num(rows_scalar));
+    row.insert("rows_per_sec_batched".to_string(), Json::Num(rows_batched));
+    row.insert("speedup".to_string(), Json::Num(scalar_ns / batched_ns));
+    Json::Obj(row)
+}
+
+fn main() {
+    println!("== batched inference kernels: forward_batch vs per-row forward ==");
+    let mut rows: Vec<Json> = Vec::new();
+    let mut headline = 0.0f64;
+    for width in WIDTHS {
+        let dims = [IN_DIM, width, width, OUT_DIM];
+        let params = mlp_params(&dims, 7);
+        let mut f32e = EngineF32::from_params(&params).unwrap();
+        let mut i8e = EngineInt8::from_params(&params).unwrap();
+        let mut rng = Pcg32::new(42, 42);
+        for batch in BATCHES {
+            let xs: Vec<f32> =
+                (0..batch * IN_DIM).map(|_| rng.uniform_range(-1.0, 1.0)).collect();
+            let mut out = vec![0.0f32; batch * OUT_DIM];
+            // Keep wall time bounded: wide nets get fewer iterations
+            // (one "iter" is a whole batch sweep either way).
+            let (iters, batches) = if width >= 512 { (3, 7) } else { (20, 7) };
+
+            let tag = format!("int8 {IN_DIM}x{width}x{width}x{OUT_DIM} b={batch}");
+            let s_ns = bench(&format!("{tag} scalar"), iters, batches, || {
+                for r in 0..batch {
+                    i8e.forward(
+                        black_box(&xs[r * IN_DIM..(r + 1) * IN_DIM]),
+                        &mut out[r * OUT_DIM..(r + 1) * OUT_DIM],
+                    )
+                    .unwrap();
+                }
+            })
+            .median_ns;
+            let b_ns = bench(&format!("{tag} batched"), iters, batches, || {
+                i8e.forward_batch(black_box(&xs), batch, &mut out).unwrap();
+            })
+            .median_ns;
+            if width == 512 && batch == 64 {
+                headline = s_ns / b_ns;
+            }
+            rows.push(cell_row("int8", width, batch, s_ns, b_ns));
+
+            let tag = format!("fp32 {IN_DIM}x{width}x{width}x{OUT_DIM} b={batch}");
+            let s_ns = bench(&format!("{tag} scalar"), iters, batches, || {
+                for r in 0..batch {
+                    f32e.forward(
+                        black_box(&xs[r * IN_DIM..(r + 1) * IN_DIM]),
+                        &mut out[r * OUT_DIM..(r + 1) * OUT_DIM],
+                    );
+                }
+            })
+            .median_ns;
+            let b_ns = bench(&format!("{tag} batched"), iters, batches, || {
+                f32e.forward_batch(black_box(&xs), batch, &mut out).unwrap();
+            })
+            .median_ns;
+            rows.push(cell_row("fp32", width, batch, s_ns, b_ns));
+        }
+    }
+
+    println!(
+        "\n(headline: int8 batch-64 on the 128x512x512x25 MLP runs {headline:.2}x the\n\
+         per-row scalar path — acceptance wants >= 2x.)"
+    );
+
+    let mut doc = BTreeMap::new();
+    doc.insert("bench".to_string(), Json::Str("engines".into()));
+    doc.insert("mlp".to_string(), Json::Str(format!("{IN_DIM}xWxWx{OUT_DIM}")));
+    doc.insert("headline_int8_b64_w512_speedup".to_string(), Json::Num(headline));
+    doc.insert("rows".to_string(), Json::Arr(rows));
+    let doc = Json::Obj(doc);
+    // The single machine-readable summary line:
+    println!("{}", to_string(&doc));
+    match write_json_file("BENCH_engines.json", &doc) {
+        Ok(()) => eprintln!("wrote BENCH_engines.json"),
+        Err(e) => eprintln!("warning: BENCH_engines.json not written: {e}"),
+    }
+}

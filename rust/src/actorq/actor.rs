@@ -18,6 +18,7 @@ use crate::envs::vec_env::VecEnv;
 use crate::error::Result;
 use crate::inference::{EngineF32, EngineInt8};
 use crate::rng::Pcg32;
+use crate::tensor::argmax;
 use crate::runtime::ParamSet;
 use crate::sustain::{Component, EnergyMeter};
 
@@ -50,6 +51,19 @@ impl ActorEngine {
                 Ok(())
             }
             ActorEngine::Int8(e) => e.forward(x, out),
+        }
+    }
+
+    /// Batch-major forward pass: `xs` is `batch` observation rows,
+    /// `out` receives `batch` head rows. Bit-identical per row to
+    /// [`ActorEngine::forward`], but streams each weight panel once per
+    /// sweep instead of once per env — the kernel behind the actor's
+    /// one-batched-forward-per-sweep hot path.
+    #[inline]
+    pub fn forward_batch(&mut self, xs: &[f32], batch: usize, out: &mut [f32]) -> Result<()> {
+        match self {
+            ActorEngine::F32(e) => e.forward_batch(xs, batch, out),
+            ActorEngine::Int8(e) => e.forward_batch(xs, batch, out),
         }
     }
 
@@ -118,13 +132,6 @@ impl Exploration {
     }
 }
 
-fn argmax(xs: &[f32]) -> usize {
-    xs.iter()
-        .enumerate()
-        .fold((0usize, f32::NEG_INFINITY), |acc, (i, &x)| if x > acc.1 { (i, x) } else { acc })
-        .0
-}
-
 /// End-of-run accounting returned by each actor thread.
 #[derive(Debug, Clone, Default)]
 pub struct ActorStats {
@@ -166,7 +173,8 @@ pub(crate) fn run_actor(
 
     let obs_dim = setup.envs.obs_dim();
     let n = setup.envs.n();
-    let mut head = vec![0.0f32; out_dim];
+    // All env heads for one sweep, filled by a single batched forward.
+    let mut heads = vec![0.0f32; n * out_dim];
     let mut obs_snap = vec![0.0f32; n * obs_dim];
     let mut actions: Vec<Action> = Vec::with_capacity(n);
     let mut reprs: Vec<Vec<f32>> = Vec::with_capacity(n);
@@ -185,25 +193,29 @@ pub(crate) fn run_actor(
 
         // One lockstep sweep over the private envs, metered as actor
         // compute (the scope excludes channel back-pressure waits).
+        // The whole sweep is ONE batched forward: the engine streams each
+        // weight panel once for all n envs instead of once per env (the
+        // scalar GEMV stays for the n == 1 pools, where the batch
+        // bookkeeping buys nothing).
         let busy = meter.as_ref().map(|m| m.scope(Component::Actors));
         obs_snap.copy_from_slice(setup.envs.obs());
         actions.clear();
         reprs.clear();
-        let mut forward_failed = false;
-        for e in 0..n {
-            let row = &obs_snap[e * obs_dim..(e + 1) * obs_dim];
-            if engine.forward(row, &mut head).is_err() {
-                forward_failed = true;
-                break;
-            }
-            let (action, repr) = setup.exploration.select(&head, stats.env_steps, &mut setup.rng);
-            actions.push(action);
-            reprs.push(repr);
-        }
-        if forward_failed {
+        let forward_ok = if n == 1 {
+            engine.forward(&obs_snap, &mut heads).is_ok()
+        } else {
+            engine.forward_batch(&obs_snap, n, &mut heads).is_ok()
+        };
+        if !forward_ok {
             // A malformed snapshot is a programming error on the learner
             // side; stop collecting rather than poisoning the replay.
             break;
+        }
+        for e in 0..n {
+            let head = &heads[e * out_dim..(e + 1) * out_dim];
+            let (action, repr) = setup.exploration.select(head, stats.env_steps, &mut setup.rng);
+            actions.push(action);
+            reprs.push(repr);
         }
         let results = setup.envs.step(&actions);
         for (e, (reward, done)) in results.iter().enumerate() {
@@ -274,6 +286,29 @@ mod tests {
         assert_eq!(q.out_dim(), 2);
         assert!(of.iter().all(|v| v.is_finite()) && oq.iter().all(|v| v.is_finite()));
         assert!(q.memory_bytes() < f.memory_bytes(), "int8 actor copy must be smaller");
+    }
+
+    #[test]
+    fn engine_batched_sweep_matches_per_env_forwards() {
+        // The actor's one-batched-forward-per-sweep must pick exactly the
+        // actions the old per-env loop picked: bit-identical head rows.
+        let p = mlp_params(&[4, 32, 16, 3], 21);
+        let mut rng = Pcg32::new(9, 9);
+        let n = 6;
+        let xs: Vec<f32> = (0..n * 4).map(|_| rng.uniform_range(-1.0, 1.0)).collect();
+        for precision in [ActorPrecision::Fp32, ActorPrecision::Int8] {
+            let mut eng = ActorEngine::from_params(&p, precision).unwrap();
+            let mut want = vec![0.0f32; n * 3];
+            for e in 0..n {
+                let (row, out) = (&xs[e * 4..(e + 1) * 4], &mut want[e * 3..(e + 1) * 3]);
+                eng.forward(row, out).unwrap();
+            }
+            let mut got = vec![0.0f32; n * 3];
+            eng.forward_batch(&xs, n, &mut got).unwrap();
+            for (k, (a, b)) in want.iter().zip(&got).enumerate() {
+                assert!(a == b, "{precision:?} element {k}: {a} vs {b}");
+            }
+        }
     }
 
     #[test]

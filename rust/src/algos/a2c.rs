@@ -133,6 +133,10 @@ pub(crate) fn train_onpolicy(
 
     let mut actions = vec![0usize; n_envs];
     let mut logps = vec![0.0f32; n_envs];
+    // Reusable probability buffer: the whole-batch act program already
+    // amortizes the forward over n_envs; the per-row softmax must not
+    // re-allocate in the selection loop either.
+    let mut probs = vec![0.0f32; n_actions];
 
     while step < total_steps {
         rollout.clear();
@@ -150,10 +154,10 @@ pub(crate) fn train_onpolicy(
             let values = &out[1];
             for e in 0..n_envs {
                 let row = logits.row(e);
-                let p = crate::tensor::softmax(row);
-                let a = sample_rng.categorical(&p);
+                crate::tensor::softmax_into(row, &mut probs);
+                let a = sample_rng.categorical(&probs);
                 actions[e] = a;
-                logps[e] = p[a].max(1e-12).ln();
+                logps[e] = probs[a].max(1e-12).ln();
             }
             let acts: Vec<Action> = actions.iter().map(|&a| Action::Discrete(a)).collect();
             let results = venv.step(&acts);
@@ -237,7 +241,6 @@ pub(crate) fn train_onpolicy(
     for i in 0..n_all {
         params.tensors[i] = train_in[i].clone();
     }
-    let _ = n_actions;
     Ok((
         TrainedPolicy {
             algo: algo.into(),

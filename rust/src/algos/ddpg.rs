@@ -253,6 +253,8 @@ pub fn train(rt: &Runtime, cfg: &DdpgConfig) -> Result<(TrainedPolicy, TrainLog)
 /// exploration and a [-1, 1] clamp matching [`train`]. The native head
 /// is linear (no tanh squash), so the exploration clamp doubles as the
 /// action bound, the same approximation the deployment engines make.
+/// Each actor's vec-env sweep is a single batched `forward_batch` on its
+/// engine copy (weight panels stream once per sweep, not once per env).
 pub fn train_actorq(
     rt: &Runtime,
     cfg: &DdpgConfig,

@@ -150,9 +150,9 @@ pub fn train(rt: &Runtime, cfg: &DqnConfig) -> Result<(TrainedPolicy, TrainLog)>
             act_in.push(pad_obs(&obs, act_batch));
             act_in.push(Tensor::vec1(&[quant_bits, step as f32, quant_delay]));
             let out = act_prog.run(&act_in)?;
-            out[0].row(0).iter().enumerate().fold((0usize, f32::NEG_INFINITY), |acc, (i, &q)| {
-                if q > acc.1 { (i, q) } else { acc }
-            }).0
+            // Shared NaN-safe argmax: same selection rule as the ActorQ
+            // actors, the evaluator, and the deployment experiments.
+            crate::tensor::argmax(out[0].row(0))
         };
 
         // --- env step ---
@@ -247,7 +247,9 @@ pub fn train(rt: &Runtime, cfg: &DqnConfig) -> Result<(TrainedPolicy, TrainLog)>
 /// Train a DQN policy with the ActorQ actor-learner driver (paper §3).
 ///
 /// N actor threads collect experience on quantized policy copies (the
-/// pure-Rust deployment engines — no PJRT on the actor side) while this
+/// pure-Rust deployment engines — no PJRT on the actor side; each
+/// vec-env sweep is one batched `forward_batch`, so weight panels
+/// stream once per sweep rather than once per env) while this
 /// thread drains the experience channel into prioritized replay, runs
 /// the train program, and quantizes-on-broadcast fresh parameters every
 /// `acfg.broadcast_every` updates. The train-step : env-step ratio and

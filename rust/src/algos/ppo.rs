@@ -1,5 +1,6 @@
 //! PPO trainer (Schulman et al. 2017): clipped-surrogate on-policy
-//! optimization sharing the A2C rollout machinery.
+//! optimization sharing the A2C rollout machinery (one whole-batch act
+//! call per vec-env sweep, allocation-free per-row selection).
 
 use crate::algos::a2c::{train_onpolicy, TrainLog};
 use crate::algos::common::{QuantSchedule, TrainedPolicy};

@@ -87,10 +87,9 @@ pub fn evaluate(
             let action = match &space {
                 ActionSpace::Discrete(_) => {
                     let row = out[0].row(0);
-                    // Deterministic action selection (paper Fig-1 protocol).
-                    let a = row.iter().enumerate().fold((0usize, f32::NEG_INFINITY), |acc, (i, &q)| {
-                        if q > acc.1 { (i, q) } else { acc }
-                    }).0;
+                    // Deterministic action selection (paper Fig-1
+                    // protocol) via the shared NaN-safe argmax.
+                    let a = crate::tensor::argmax(row);
                     if policy.algo != "dqn" {
                         // Variance of the softmax action distribution.
                         let p = softmax(row);

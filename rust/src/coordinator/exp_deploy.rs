@@ -9,7 +9,7 @@ use crate::algos::QuantSchedule;
 use crate::coordinator::cache::get_or_train;
 use crate::coordinator::experiment::{ExpCtx, Experiment};
 use crate::coordinator::metrics::{n, render_table, row, s, Row};
-use crate::envs::api::{Action, Env};
+use crate::envs::api::{Action, ActionSpace, Env};
 use crate::envs::nav_lite::NavLite;
 use crate::error::Result;
 use crate::inference::{EngineF32, EngineInt8, MemModel};
@@ -40,11 +40,7 @@ fn success_rate(
             forward(&obs, &mut logits);
             infer_secs += t0.elapsed().as_secs_f64();
             infers += 1;
-            let a = logits
-                .iter()
-                .enumerate()
-                .fold((0, f32::NEG_INFINITY), |acc, (i, &q)| if q > acc.1 { (i, q) } else { acc })
-                .0;
+            let a = crate::tensor::argmax(&logits);
             let st = env.step(&Action::Discrete(a), &mut rng, &mut obs);
             if st.done {
                 if st.reward > 500.0 {
@@ -55,6 +51,82 @@ fn success_rate(
         }
     }
     (successes as f32 / episodes as f32, infer_secs / infers.max(1) as f64)
+}
+
+/// Vec-env-sweep batch size for the batched-latency columns: the scale
+/// a deployed vec-env or ActorQ sweep actually runs at. Shared with
+/// `exp table2`'s engine-latency columns so the two experiments measure
+/// the same protocol.
+pub(crate) const LAT_BATCH: usize = 64;
+
+/// Collect `count` observation rows by rolling `env` under random
+/// actions — realistic activation statistics for the latency
+/// measurement (post-relu sparsity and dynamic ranges match deployment,
+/// which a synthetic uniform batch would not). The measurement-input
+/// half of the shared latency protocol; `exp table2` uses it too.
+pub(crate) fn collect_obs(env: &mut dyn Env, count: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Pcg32::new(seed, 11);
+    let space = env.action_space();
+    let mut obs = vec![0.0f32; env.obs_dim()];
+    let mut rows = Vec::with_capacity(count * obs.len());
+    env.reset(&mut rng, &mut obs);
+    for _ in 0..count {
+        rows.extend_from_slice(&obs);
+        let a = match &space {
+            ActionSpace::Discrete(k) => Action::Discrete(rng.below_usize(*k)),
+            ActionSpace::Continuous(d) => Action::Continuous(
+                (0..*d).map(|_| rng.uniform_range(-1.0, 1.0)).collect(),
+            ),
+        };
+        if env.step(&a, &mut rng, &mut obs).done {
+            env.reset(&mut rng, &mut obs);
+        }
+    }
+    rows
+}
+
+/// Per-row latency (seconds) of the scalar per-row path over the same
+/// observation batch, rep-amortized identically to
+/// [`batched_row_latency`] (one timer around 30 x `batch` forwards) so
+/// the scalar/batched ratio is apples-to-apples — a per-call timer
+/// would inflate the scalar side by its own overhead on small nets.
+fn scalar_row_latency(
+    forward: &mut dyn FnMut(&[f32], &mut [f32]),
+    xs: &[f32],
+    batch: usize,
+    in_dim: usize,
+    out_dim: usize,
+) -> f64 {
+    let mut out = vec![0.0f32; out_dim];
+    forward(&xs[..in_dim], &mut out); // warmup
+    let reps = 30;
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        for r in 0..batch {
+            forward(&xs[r * in_dim..(r + 1) * in_dim], &mut out);
+        }
+    }
+    t0.elapsed().as_secs_f64() / (reps * batch) as f64
+}
+
+/// Per-row latency (seconds) of a batched forward over `batch` rows —
+/// the ONE measurement protocol (warmup call + 30 timed reps) behind
+/// every engine-latency column (`exp fig6` and `exp table2`), so the
+/// numbers tracked across PRs stay comparable.
+pub(crate) fn batched_row_latency(
+    forward_batch: &mut dyn FnMut(&[f32], usize, &mut [f32]),
+    xs: &[f32],
+    batch: usize,
+    out_dim: usize,
+) -> f64 {
+    let mut out = vec![0.0f32; batch * out_dim];
+    forward_batch(xs, batch, &mut out); // warmup (sizes the scratch arena)
+    let reps = 30;
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        forward_batch(xs, batch, &mut out);
+    }
+    t0.elapsed().as_secs_f64() / (reps * batch) as f64
 }
 
 impl Experiment for Fig6 {
@@ -101,6 +173,33 @@ impl Experiment for Fig6 {
             ctx.seed + 5,
         );
 
+        // Batched sweep latency (the vec-env deployment configuration):
+        // per-row cost through forward_batch at LAT_BATCH rows, with a
+        // rep-amortized scalar baseline over the SAME observations so
+        // the gain column compares identical protocols.
+        let xs = collect_obs(&mut NavLite::new(0.6), LAT_BATCH, ctx.seed + 6);
+        let in_dim = f32_engine.layers.first().map(|l| l.in_dim).unwrap_or(0);
+        let out_dim = f32_engine.layers.last().map(|l| l.out_dim).unwrap_or(0);
+        let blat_f32 = batched_row_latency(
+            &mut |x, b, o| f32_engine.forward_batch(x, b, o).expect("f32 batch"),
+            &xs,
+            LAT_BATCH,
+            out_dim,
+        );
+        let blat_i8 = batched_row_latency(
+            &mut |x, b, o| int8_engine.forward_batch(x, b, o).expect("int8 batch"),
+            &xs,
+            LAT_BATCH,
+            out_dim,
+        );
+        let slat_i8 = scalar_row_latency(
+            &mut |x, o| int8_engine.forward(x, o).expect("int8 forward"),
+            &xs,
+            LAT_BATCH,
+            in_dim,
+            out_dim,
+        );
+
         // Memory-pressure models (DESIGN.md §2 substitution): charge the
         // flash-page cost for the resident-set overflow. `constrained()`
         // reproduces the paper's fits-vs-spills crossover at our model
@@ -117,6 +216,10 @@ impl Experiment for Fig6 {
             ("fp32_ms", n(lat_f32 * 1e3)),
             ("int8_ms", n(lat_i8 * 1e3)),
             ("speedup", n(lat_f32 / lat_i8.max(1e-12))),
+            ("fp32_batch_us", n(blat_f32 * 1e6)),
+            ("int8_batch_us", n(blat_i8 * 1e6)),
+            ("batch_speedup", n(blat_f32 / blat_i8.max(1e-12))),
+            ("int8_batch_gain", n(slat_i8 / blat_i8.max(1e-12))),
             ("fp32_dev_ms", n(lat_f32_dev * 1e3)),
             ("int8_dev_ms", n(lat_i8_dev * 1e3)),
             ("dev_speedup", n(lat_f32_dev / lat_i8_dev.max(1e-12))),
@@ -142,6 +245,15 @@ impl Experiment for Fig6 {
         );
         out.push_str(&render_table(
             &["policy", "fp32_dev_ms", "int8_dev_ms", "dev_speedup"],
+            rows,
+        ));
+        out.push_str(
+            "\nBatched vec-env sweep (per-row us through forward_batch at batch 64;\n\
+             int8_batch_gain = per-row scalar int8 / batched int8, both\n\
+             rep-amortized over the same observation batch):\n",
+        );
+        out.push_str(&render_table(
+            &["policy", "fp32_batch_us", "int8_batch_us", "batch_speedup", "int8_batch_gain"],
             rows,
         ));
         out.push_str(

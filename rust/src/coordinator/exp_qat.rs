@@ -57,11 +57,7 @@ fn probe_variance(
             var_sum += (p.iter().map(|x| (x - mu) * (x - mu)).sum::<f32>() / n_actions as f32)
                 as f64;
             var_n += 1;
-            let a = rowv
-                .iter()
-                .enumerate()
-                .fold((0, f32::NEG_INFINITY), |acc, (i, &q)| if q > acc.1 { (i, q) } else { acc })
-                .0;
+            let a = crate::tensor::argmax(rowv);
             let st = env.step(&Action::Discrete(a), &mut rng, &mut obs);
             ret_sum += st.reward;
             if st.done {

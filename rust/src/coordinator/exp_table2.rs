@@ -3,11 +3,15 @@
 //! (algorithm x environment) matrix, with relative errors and per-
 //! algorithm means.
 
+use crate::algos::TrainedPolicy;
 use crate::coordinator::cache::get_or_train;
 use crate::coordinator::evaluator::{evaluate, EvalMode};
+use crate::coordinator::exp_deploy::{batched_row_latency, collect_obs, LAT_BATCH};
 use crate::coordinator::experiment::{mean, ExpCtx, Experiment};
 use crate::coordinator::metrics::{n, render_table, row, s, Row};
+use crate::envs::registry::make_env;
 use crate::error::Result;
+use crate::inference::{EngineF32, EngineInt8};
 use crate::quant::{relative_error_pct, PtqMethod};
 
 /// Paper Table-2 cells: (algo, envs).
@@ -28,6 +32,37 @@ pub fn matrix() -> Vec<(&'static str, Vec<&'static str>)> {
         ("dqn", atari8),
         ("ddpg", vec!["walker_lite", "cheetah_lite", "biped_lite", "mc_continuous"]),
     ]
+}
+
+/// Per-row native-engine inference latency (fp32_us, int8_us) through
+/// the batched API — exp_deploy's shared measurement protocol
+/// ([`batched_row_latency`] at [`LAT_BATCH`] rows) — for cells whose
+/// `TrainedPolicy` parameters are a pure MLP head streamable by the
+/// deployment engines (the dqn q-net and the ddpg actor; a2c/ppo
+/// checkpoints interleave the value head, which the engines do not
+/// model — those cells report NaN -> JSON null).
+fn engine_row_latency_us(policy: &TrainedPolicy, seed: u64) -> Result<(f64, f64)> {
+    let mut env = make_env(&policy.env_id)?;
+    let xs = collect_obs(env.as_mut(), LAT_BATCH, seed);
+
+    let mut f32e = EngineF32::from_params(&policy.params)?;
+    let mut i8e = EngineInt8::from_params(&policy.params)?;
+    let out_dim = f32e.layers.last().map(|l| l.out_dim).unwrap_or(0);
+    let f32_us = 1e6
+        * batched_row_latency(
+            &mut |x, b, o| f32e.forward_batch(x, b, o).expect("f32 batch"),
+            &xs,
+            LAT_BATCH,
+            out_dim,
+        );
+    let i8_us = 1e6
+        * batched_row_latency(
+            &mut |x, b, o| i8e.forward_batch(x, b, o).expect("int8 batch"),
+            &xs,
+            LAT_BATCH,
+            out_dim,
+        );
+    Ok((f32_us, i8_us))
 }
 
 pub struct Table2;
@@ -76,6 +111,13 @@ impl Experiment for Table2 {
             EvalMode::Ptq(PtqMethod::Int(8)),
             ctx.seed + 1,
         )?;
+        // Native-engine latency through the batched API for the pure-MLP
+        // heads; NaN (JSON null) where the engines don't apply.
+        let (f32_us, i8_us) = if algo == "dqn" || algo == "ddpg" {
+            engine_row_latency_us(&policy, ctx.seed + 9)?
+        } else {
+            (f64::NAN, f64::NAN)
+        };
         Ok(vec![row(&[
             ("algo", s(algo)),
             ("env", s(env)),
@@ -84,6 +126,9 @@ impl Experiment for Table2 {
             ("e_fp16", n(relative_error_pct(fp32.mean_reward, fp16.mean_reward) as f64)),
             ("int8", n(int8.mean_reward as f64)),
             ("e_int8", n(relative_error_pct(fp32.mean_reward, int8.mean_reward) as f64)),
+            ("fp32_us_row", n(f32_us)),
+            ("int8_us_row", n(i8_us)),
+            ("infer_speedup", n(f32_us / i8_us.max(1e-12))),
             ("steps", n(steps as f64)),
         ])])
     }
@@ -117,6 +162,27 @@ impl Experiment for Table2 {
             out.push_str(&format!(
                 "Mean E_fp16 = {mean_f16:.2}%   Mean E_int8 = {mean_i8:.2}%\n\n"
             ));
+        }
+        let lat: Vec<Row> = rows
+            .iter()
+            .filter(|r| {
+                matches!(
+                    r.get("algo").and_then(|v| v.as_str().ok()),
+                    Some("dqn") | Some("ddpg")
+                )
+            })
+            .cloned()
+            .collect();
+        if !lat.is_empty() {
+            out.push_str(
+                "Native-engine per-row inference latency (batched API, batch 64;\n\
+                 dqn/ddpg heads only — a2c/ppo checkpoints carry the value head):\n",
+            );
+            out.push_str(&render_table(
+                &["algo", "env", "fp32_us_row", "int8_us_row", "infer_speedup"],
+                &lat,
+            ));
+            out.push('\n');
         }
         out.push_str(
             "Paper shape checks: |mean errors| small (2-5% band), fp16 ~ lossless,\n\

@@ -2,9 +2,23 @@
 //! Fig-6 case study (TFLite fp32 on the RasPi-3b, here a cache-blocked
 //! native implementation so the int8 comparison is against a fair,
 //! optimized baseline rather than a strawman).
+//!
+//! Like the int8 engine, two entry points share one numeric contract:
+//! [`EngineF32::forward`] is the single-observation GEMV, and
+//! [`EngineF32::forward_batch`] is the batch-major GEMM that streams
+//! each weight panel once per sweep instead of once per observation.
+//! The batched kernel accumulates every output in the exact order the
+//! scalar path does (bias first, then input rows in ascending order), so
+//! the two paths are bit-identical per row — float summation order is
+//! part of the contract, not an implementation detail.
 
 use crate::error::{Error, Result};
 use crate::runtime::ParamSet;
+
+/// Output-column tile width shared with the int8 kernel: a 128-column
+/// f32 accumulator row is 512 B, keeping the weight panel plus a
+/// moderate batch's accumulator tiles L1-resident.
+const COL_BLOCK: usize = 128;
 
 /// A dense layer: y = relu?(W^T x + b) with W stored (in_dim, out_dim)
 /// row-major exactly as the training stack lays it out.
@@ -18,9 +32,17 @@ pub struct LayerF32 {
 }
 
 /// fp32 inference engine over a stack of dense layers.
+///
+/// The two scratch buffers double as the batch arena: sized for one
+/// observation at build time, grown once to the high-water
+/// `batch x max_dim` footprint on the first batched call, then reused —
+/// steady-state calls never allocate.
 #[derive(Debug, Clone)]
 pub struct EngineF32 {
     pub layers: Vec<LayerF32>,
+    /// Widest layer interface; scratch capacity is counted in multiples
+    /// of this.
+    max_dim: usize,
     scratch: Vec<f32>,
     scratch2: Vec<f32>,
 }
@@ -55,9 +77,20 @@ impl EngineF32 {
         }
         Ok(EngineF32 {
             layers,
+            max_dim,
             scratch: vec![0.0; max_dim],
             scratch2: vec![0.0; max_dim],
         })
+    }
+
+    /// Grow the scratch arena to hold `batch` rows; a no-op once the
+    /// high-water batch has been seen.
+    fn ensure_batch(&mut self, batch: usize) {
+        let need = batch * self.max_dim;
+        if self.scratch.len() < need {
+            self.scratch.resize(need, 0.0);
+            self.scratch2.resize(need, 0.0);
+        }
     }
 
     /// Total weight bytes (the Fig-6 memory column).
@@ -104,6 +137,109 @@ impl EngineF32 {
                 cur_len = layer.out_dim;
             }
         }
+    }
+
+    /// Batch-major forward pass: `xs` holds `batch` rows of `in_dim`
+    /// features (row-major), `out` receives `batch` rows of the output
+    /// head. Bit-identical per row to [`EngineF32::forward`] (assuming
+    /// finite weights): each accumulator starts from the bias and adds
+    /// input-row contributions in ascending input order, exactly the
+    /// scalar summation sequence, so rounding is identical.
+    ///
+    /// The kernel is cache-blocked over output columns with 4-wide input
+    /// panels, reusing each weight panel across the whole batch — the
+    /// same weight-traffic amortization as the int8 GEMM, on the fp32
+    /// baseline so batch-size comparisons between the engines are fair.
+    pub fn forward_batch(&mut self, xs: &[f32], batch: usize, out: &mut [f32]) -> Result<()> {
+        let n_layers = self.layers.len();
+        let in_dim = self.layers.first().map(|l| l.in_dim).unwrap_or(0);
+        let out_dim = self.layers.last().map(|l| l.out_dim).unwrap_or(0);
+        if batch == 0 || xs.len() != batch * in_dim {
+            return Err(Error::Shape(format!(
+                "forward_batch: {} inputs for batch {batch} x in_dim {in_dim}",
+                xs.len()
+            )));
+        }
+        if out.len() < batch * out_dim {
+            return Err(Error::Shape(format!(
+                "forward_batch: out holds {} < batch {batch} x out_dim {out_dim}",
+                out.len()
+            )));
+        }
+        self.ensure_batch(batch);
+        self.scratch[..xs.len()].copy_from_slice(xs);
+
+        for li in 0..n_layers {
+            let layer = &self.layers[li];
+            let n = layer.in_dim;
+            let m = layer.out_dim;
+            let last = li + 1 == n_layers;
+            let src = &self.scratch;
+            let dst: &mut [f32] =
+                if last { &mut out[..batch * m] } else { &mut self.scratch2[..batch * m] };
+
+            // Bias init, then blocked panels in ascending input order —
+            // per (row, column) the adds happen in the scalar sequence.
+            for r in 0..batch {
+                dst[r * m..(r + 1) * m].copy_from_slice(&layer.b);
+            }
+            let mut c0 = 0;
+            while c0 < m {
+                let cb = COL_BLOCK.min(m - c0);
+                let mut i = 0;
+                while i + 4 <= n {
+                    let w0 = &layer.w[i * m + c0..i * m + c0 + cb];
+                    let w1 = &layer.w[(i + 1) * m + c0..(i + 1) * m + c0 + cb];
+                    let w2 = &layer.w[(i + 2) * m + c0..(i + 2) * m + c0 + cb];
+                    let w3 = &layer.w[(i + 3) * m + c0..(i + 3) * m + c0 + cb];
+                    for r in 0..batch {
+                        let x = &src[r * n + i..r * n + i + 4];
+                        let (x0, x1, x2, x3) = (x[0], x[1], x[2], x[3]);
+                        if x0 == 0.0 && x1 == 0.0 && x2 == 0.0 && x3 == 0.0 {
+                            continue; // post-relu sparsity, whole panel dead
+                        }
+                        let acc = &mut dst[r * m + c0..r * m + c0 + cb];
+                        for j in 0..cb {
+                            // Sequential adds (NOT one fused sum): this
+                            // is the scalar path's rounding order.
+                            let mut s = acc[j];
+                            s += x0 * w0[j];
+                            s += x1 * w1[j];
+                            s += x2 * w2[j];
+                            s += x3 * w3[j];
+                            acc[j] = s;
+                        }
+                    }
+                    i += 4;
+                }
+                while i < n {
+                    let w0 = &layer.w[i * m + c0..i * m + c0 + cb];
+                    for r in 0..batch {
+                        let x0 = src[r * n + i];
+                        if x0 == 0.0 {
+                            continue;
+                        }
+                        let acc = &mut dst[r * m + c0..r * m + c0 + cb];
+                        for j in 0..cb {
+                            acc[j] += x0 * w0[j];
+                        }
+                    }
+                    i += 1;
+                }
+                c0 += cb;
+            }
+            if layer.relu {
+                for v in dst.iter_mut() {
+                    if *v < 0.0 {
+                        *v = 0.0;
+                    }
+                }
+            }
+            if !last {
+                std::mem::swap(&mut self.scratch, &mut self.scratch2);
+            }
+        }
+        Ok(())
     }
 }
 

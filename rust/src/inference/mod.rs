@@ -3,6 +3,13 @@
 //! * [`engine_f32`] — optimized native fp32 MLP baseline.
 //! * [`engine_int8`] — int8 weights+activations with i32 accumulation.
 //! * [`memsim`] — RasPi-class memory-pressure model (swap cliff).
+//!
+//! Both engines expose a single-observation `forward` GEMV and a
+//! batch-major `forward_batch` GEMM that amortizes weight traffic over a
+//! vec-env sweep; the batched path is bit-identical per row to the
+//! scalar one (pinned by `rust/tests/engine_parity.rs`), so consumers
+//! pick purely on batch size. `cargo bench --bench bench_engines` tracks
+//! the batch-scaling trajectory in `BENCH_engines.json`.
 
 pub mod engine_f32;
 pub mod engine_int8;

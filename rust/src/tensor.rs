@@ -135,15 +135,9 @@ impl Tensor {
         var.sqrt()
     }
 
-    /// Index of the maximum element (first on ties).
+    /// Index of the maximum element — [`argmax`] over the raw data.
     pub fn argmax(&self) -> usize {
-        let mut best = 0;
-        for (i, &v) in self.data.iter().enumerate() {
-            if v > self.data[best] {
-                best = i;
-            }
-        }
-        best
+        argmax(&self.data)
     }
 
     /// Concatenate rank-1 tensors / rows into a rank-2 batch.
@@ -164,6 +158,26 @@ impl Tensor {
         }
         Tensor::new(vec![rows.len(), w], data)
     }
+}
+
+/// Index of the maximum element of a slice — the one NaN-safe argmax
+/// every action-selection path shares (ActorQ actors, the sync drivers,
+/// the evaluator, the deployment experiments, and the parity tests).
+///
+/// Semantics (deliberate; deployment paths rely on them):
+/// * ties: the first (lowest-index) maximum wins;
+/// * NaN entries never win — the fold's `>` comparison is false for NaN,
+///   so a partially poisoned head still yields a real action;
+/// * an all-NaN (or empty) slice returns 0: callers treat action 0 as
+///   the safe deterministic default rather than propagating the poison.
+pub fn argmax(xs: &[f32]) -> usize {
+    xs.iter()
+        .enumerate()
+        .fold(
+            (0usize, f32::NEG_INFINITY),
+            |best, (i, &x)| if x > best.1 { (i, x) } else { best },
+        )
+        .0
 }
 
 /// Softmax over a logits slice, written into `out` (numerically stable).
@@ -229,6 +243,17 @@ mod tests {
         assert_eq!(t.row(1), &[3.0, 4.0]);
         let c = [5.0];
         assert!(Tensor::stack_rows(&[&a, &c]).is_err());
+    }
+
+    #[test]
+    fn argmax_is_nan_safe_and_first_tie_wins() {
+        assert_eq!(argmax(&[0.1, 0.9, 0.3]), 1);
+        assert_eq!(argmax(&[2.0, 2.0, 1.0]), 0, "first maximum wins ties");
+        assert_eq!(argmax(&[f32::NAN, 1.0, 0.5]), 1, "NaN never wins");
+        assert_eq!(argmax(&[1.0, f32::NAN, 0.5]), 0);
+        assert_eq!(argmax(&[f32::NAN, f32::NAN]), 0, "all-NaN returns 0 by contract");
+        assert_eq!(argmax(&[]), 0, "empty returns 0 by contract");
+        assert_eq!(argmax(&[f32::NEG_INFINITY, f32::NEG_INFINITY]), 0);
     }
 
     #[test]

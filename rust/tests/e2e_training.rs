@@ -109,12 +109,7 @@ fn native_engines_match_xla_act_program() {
         let q_xla = act.run(&inputs).unwrap();
         let mut q_native = vec![0.0f32; 2];
         f32e.forward(&obs, &mut q_native);
-        let am = |v: &[f32]| {
-            v.iter().enumerate().fold((0, f32::NEG_INFINITY), |acc, (i, &x)| {
-                if x > acc.1 { (i, x) } else { acc }
-            }).0
-        };
-        if am(q_xla[0].row(0)) == am(&q_native) {
+        if quarl::tensor::argmax(q_xla[0].row(0)) == quarl::tensor::argmax(&q_native) {
             agree += 1;
         }
     }

@@ -1,14 +1,17 @@
-//! Engine parity harness: the property the ActorQ design rests on — the
-//! int8 deployment engine's forward pass stays within the per-layer
-//! quantization error bound of the fp32 engine, and the *actions* it
-//! picks agree with fp32 on the overwhelming majority of observations.
-//! (Hand-rolled randomized cases; no proptest offline.)
+//! Engine parity harness: the properties the ActorQ design rests on —
+//! the int8 deployment engine's forward pass stays within the per-layer
+//! quantization error bound of the fp32 engine, the *actions* it picks
+//! agree with fp32 on the overwhelming majority of observations, and the
+//! batched GEMM path is bit-identical per row to the scalar GEMV path
+//! for both engines. (Hand-rolled randomized cases; no proptest
+//! offline.)
 
 use quarl::inference::{EngineF32, EngineInt8};
 use quarl::quant::QParams;
 use quarl::rng::Pcg32;
 use quarl::runtime::manifest::TensorSpec;
 use quarl::runtime::ParamSet;
+use quarl::tensor::argmax;
 
 fn mlp_params(dims: &[usize], seed: u64) -> ParamSet {
     let mut specs = Vec::new();
@@ -18,13 +21,6 @@ fn mlp_params(dims: &[usize], seed: u64) -> ParamSet {
     }
     let mut rng = Pcg32::new(seed, 1);
     ParamSet::init(&specs, &mut rng)
-}
-
-fn argmax(xs: &[f32]) -> usize {
-    xs.iter()
-        .enumerate()
-        .fold((0usize, f32::NEG_INFINITY), |acc, (i, &x)| if x > acc.1 { (i, x) } else { acc })
-        .0
 }
 
 #[test]
@@ -175,6 +171,116 @@ fn argmax_agreement_exceeds_95pct_on_cartpole_scale() {
         agree * 100 >= trials * 95,
         "argmax agreement {agree}/{trials} below 95%"
     );
+}
+
+#[test]
+fn batched_path_bit_exact_with_scalar_path() {
+    // The property the consumer refactor rests on: forward_batch must be
+    // bit-identical per row to forward for BOTH engines, across random
+    // shapes and batch sizes — int8 because the integer sums are exact
+    // and the float epilogue is the same expression, fp32 because the
+    // batched kernel reproduces the scalar accumulation order. Inputs
+    // are pushed through a relu tower, so dead-unit rows (exact zeros,
+    // degenerate ranges) occur naturally along the way.
+    let mut rng = Pcg32::new(601, 1);
+    let shapes: [&[usize]; 4] = [
+        &[4, 16, 2],
+        &[12, 64, 64, 5],
+        &[7, 33, 19, 3],
+        &[128, 512, 512, 25],
+    ];
+    for (case, dims) in shapes.iter().enumerate() {
+        let p = mlp_params(dims, 6000 + case as u64);
+        let mut f32e = EngineF32::from_params(&p).unwrap();
+        let mut i8e = EngineInt8::from_params(&p).unwrap();
+        let din = dims[0];
+        let dout = *dims.last().unwrap();
+        // The big tower only runs the acceptance batch; the small ones
+        // sweep odd/small batches too (scratch-arena regrowth included).
+        let batch_sizes: &[usize] = if din >= 128 { &[1, 64] } else { &[1, 2, 7, 64] };
+        for &batch in batch_sizes {
+            let xs: Vec<f32> =
+                (0..batch * din).map(|_| rng.uniform_range(-2.0, 2.0)).collect();
+
+            let mut want = vec![0.0f32; batch * dout];
+            for r in 0..batch {
+                let (row_in, row_out) =
+                    (&xs[r * din..(r + 1) * din], &mut want[r * dout..(r + 1) * dout]);
+                f32e.forward(row_in, row_out);
+            }
+            let mut got = vec![0.0f32; batch * dout];
+            f32e.forward_batch(&xs, batch, &mut got).unwrap();
+            for (k, (a, b)) in want.iter().zip(&got).enumerate() {
+                assert!(
+                    a == b,
+                    "fp32 case {case} batch {batch} element {k}: scalar {a} ({:#x}) vs batched {b} ({:#x})",
+                    a.to_bits(),
+                    b.to_bits()
+                );
+            }
+
+            for r in 0..batch {
+                let (row_in, row_out) =
+                    (&xs[r * din..(r + 1) * din], &mut want[r * dout..(r + 1) * dout]);
+                i8e.forward(row_in, row_out).unwrap();
+            }
+            i8e.forward_batch(&xs, batch, &mut got).unwrap();
+            for (k, (a, b)) in want.iter().zip(&got).enumerate() {
+                assert!(
+                    a == b,
+                    "int8 case {case} batch {batch} element {k}: scalar {a} ({:#x}) vs batched {b} ({:#x})",
+                    a.to_bits(),
+                    b.to_bits()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn degenerate_activation_range_skips_gemv_instead_of_failing() {
+    // Pin the degenerate-range contract: an all-zero activation row
+    // (every unit dead after relu, or an all-zero observation) has
+    // amin == amax == 0 — no dynamic range to quantize against. The
+    // engine must treat it as all-zero-point codes (zero contribution,
+    // output exactly the bias) and must never turn it into an Err that
+    // could kill an actor thread mid-collection. (The old path got the
+    // bias-only result implicitly via from_range's delta=1.0 fallback
+    // behind a fallible `?`; this pins the behavior explicitly so a
+    // from_range contract change can't regress it.)
+    let mut p = mlp_params(&[4, 8, 3], 77);
+    // Zero first-layer weights AND bias: layer 0's post-relu output is
+    // exactly zero for every input, so layer 1 always sees the
+    // degenerate row.
+    p.tensors[0].data_mut().fill(0.0);
+    p.tensors[1].data_mut().fill(0.0);
+    let b1 = p.tensors[3].data().to_vec();
+
+    let mut q = EngineInt8::from_params(&p).unwrap();
+    let x = [0.3f32, -0.7, 0.1, 0.9];
+    let mut y = vec![0.0f32; 3];
+    q.forward(&x, &mut y).expect("degenerate range must not fail");
+    assert_eq!(y.as_slice(), b1.as_slice(), "zero contribution => exactly the bias");
+
+    // Batched path: one normal-looking input row plus an all-zero input
+    // row (degenerate from layer 0 already); both must agree with the
+    // scalar result bit-for-bit.
+    let xs = [0.3f32, -0.7, 0.1, 0.9, 0.0, 0.0, 0.0, 0.0];
+    let mut yb = vec![0.0f32; 6];
+    q.forward_batch(&xs, 2, &mut yb).expect("degenerate batch must not fail");
+    assert_eq!(&yb[..3], y.as_slice());
+    assert_eq!(&yb[3..], b1.as_slice());
+
+    // An all-zero observation into an otherwise normal net must also
+    // survive both paths (this is the realistic env-reset case).
+    let p2 = mlp_params(&[4, 8, 3], 78);
+    let mut q2 = EngineInt8::from_params(&p2).unwrap();
+    let zero = [0.0f32; 4];
+    let mut y2 = vec![0.0f32; 3];
+    q2.forward(&zero, &mut y2).expect("all-zero obs must not fail");
+    let mut y2b = vec![0.0f32; 3];
+    q2.forward_batch(&zero, 1, &mut y2b).unwrap();
+    assert_eq!(y2, y2b);
 }
 
 #[test]
