@@ -12,7 +12,7 @@
 //!
 //!     cargo run --release --example quickstart -- --actorq
 
-use quarl::actorq::{ActorPrecision, ActorQConfig};
+use quarl::actorq::{ActorQConfig, Precision};
 use quarl::algos::dqn::{self, DqnConfig};
 use quarl::coordinator::{evaluate, EvalMode};
 use quarl::quant::{relative_error_pct, PtqMethod};
@@ -29,7 +29,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
 
     let use_actorq = std::env::args().any(|a| a == "--actorq");
     let policy = if use_actorq {
-        let acfg = ActorQConfig::new(4).with_precision(ActorPrecision::Int8);
+        let acfg = ActorQConfig::new(4).with_precision(Precision::Int(8));
         println!(
             "training dqn/cartpole (ActorQ: {} int8 actors) for {} steps ...",
             acfg.n_actors, cfg.total_steps

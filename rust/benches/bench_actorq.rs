@@ -16,7 +16,7 @@
 use std::collections::BTreeMap;
 use std::time::Duration;
 
-use quarl::actorq::ActorPrecision;
+use quarl::actorq::Precision;
 use quarl::coordinator::exp_actorq::collection_rate;
 use quarl::coordinator::metrics::write_json_file;
 use quarl::runtime::json::{to_string, Json};
@@ -25,7 +25,7 @@ fn main() {
     println!("== ActorQ collection throughput (cartpole, 64x64 policy) ==");
     let window = Duration::from_millis(1_500);
     let mut rows: Vec<Json> = Vec::new();
-    for precision in [ActorPrecision::Int8, ActorPrecision::Fp32] {
+    for precision in [Precision::Int(8), Precision::Fp32] {
         let mut base = 0.0f64;
         for actors in [1usize, 2, 4, 8] {
             let rate = collection_rate(actors, precision, 7, window).expect("pool run");

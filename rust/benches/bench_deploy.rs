@@ -1,10 +1,11 @@
-//! Bench: Fig-6 deployment latency — fp32 vs int8 native inference for
-//! the three NavLite policy sizes (plus the RasPi-class swap model).
+//! Bench: Fig-6 deployment latency — fp32 vs int8 vs packed int4 native
+//! inference for the three NavLite policy sizes (plus the RasPi-class
+//! swap model).
 //!
 //!     cargo bench --bench bench_deploy
 
 use quarl::bench_util::{bench, black_box};
-use quarl::inference::{EngineF32, EngineInt8, MemModel};
+use quarl::inference::{EngineF32, EngineInt4, EngineInt8, MemModel};
 use quarl::rng::Pcg32;
 use quarl::runtime::manifest::TensorSpec;
 use quarl::runtime::ParamSet;
@@ -31,6 +32,7 @@ fn main() {
         let params = mlp_params(&dims, 7);
         let mut f32e = EngineF32::from_params(&params).unwrap();
         let mut i8e = EngineInt8::from_params(&params).unwrap();
+        let mut i4e = EngineInt4::from_params(&params).unwrap();
         let x: Vec<f32> = (0..dims[0]).map(|i| (i as f32 * 0.37).sin()).collect();
         let mut out = vec![0.0f32; *dims.last().unwrap()];
         let (iters, batches) = if dims[1] >= 4096 { (20, 10) } else { (200, 10) };
@@ -40,16 +42,22 @@ fn main() {
         let q = bench(&format!("{name} int8"), iters, batches, || {
             i8e.forward(black_box(&x), &mut out).unwrap();
         });
+        let q4 = bench(&format!("{name} int4"), iters, batches, || {
+            i4e.forward(black_box(&x), &mut out).unwrap();
+        });
         let f32_mem = f32e.memory_bytes();
         let i8_mem = i8e.memory_bytes();
+        let i4_mem = i4e.memory_bytes();
         println!(
-            "  speedup {:.2}x | mem {:.2} MiB -> {:.2} MiB ({:.2}x) | raspi swap penalty fp32 {:.1} ms, int8 {:.1} ms",
+            "  speedup int8 {:.2}x, int4 {:.2}x | mem {:.2} MiB -> {:.2} / {:.2} MiB | raspi swap penalty fp32 {:.1} ms, int8 {:.1} ms, int4 {:.1} ms",
             f.median_ns / q.median_ns,
+            f.median_ns / q4.median_ns,
             f32_mem as f64 / (1 << 20) as f64,
             i8_mem as f64 / (1 << 20) as f64,
-            f32_mem as f64 / i8_mem as f64,
+            i4_mem as f64 / (1 << 20) as f64,
             mem.swap_penalty_secs(f32_mem) * 1e3,
             mem.swap_penalty_secs(i8_mem) * 1e3,
+            mem.swap_penalty_secs(i4_mem) * 1e3,
         );
     }
 }

@@ -1,24 +1,38 @@
 //! Bench: batched inference kernels — rows/sec of `forward_batch` vs the
-//! per-row scalar `forward` across batch size x layer width, fp32 and
-//! int8 engines (the GEMM-ification of the actor hot path).
+//! per-row scalar `forward` across batch size x layer width x engine
+//! bitwidth (fp32 baseline plus every `--bits` width on the generic
+//! quantized engine, packed two-codes-per-byte below int5).
 //!
 //!     cargo bench --bench bench_engines
+//!     cargo bench --bench bench_engines -- --bits 2,4,8
+//!     cargo bench --bench bench_engines -- --quick --bits 4,8   # CI smoke
+//!
+//! `--bits` takes the validated 2..=16 CLI list; widths without a native
+//! engine (> 8) are skipped with a note. The fp32 baseline always runs.
+//! `--quick` trims the sweep to the narrowest MLP for the CI
+//! sanity-check job.
 //!
 //! Acceptance shape: at batch 64 on the 128x512x512x25 MLP the int8
 //! batched kernel clears >= 2x the scalar per-row rows/sec — the weight
 //! panel is streamed once per batch instead of once per row, which is
 //! the paper's memory-bandwidth argument applied along the batch axis.
+//! int4 rows track int8 (same integer GEMM; the nibble unpack is
+//! amortized per panel) while halving the streamed weight bytes.
 //!
 //! Output: the human-readable rows, then exactly one machine-readable
 //! JSON summary line (also written to `BENCH_engines.json`) so the
 //! kernel's trajectory is tracked across PRs alongside
-//! `BENCH_actorq.json`.
+//! `BENCH_actorq.json`. Each row carries `engine` ("fp32"/"int8"/
+//! "int4"/...), `bits` (32 for fp32), `width`, `batch`, scalar/batched
+//! rows-per-sec, and their ratio.
 
 use std::collections::BTreeMap;
 
 use quarl::bench_util::{bench, black_box};
+use quarl::config::cli::Args;
 use quarl::coordinator::metrics::write_json_file;
-use quarl::inference::{EngineF32, EngineInt8};
+use quarl::inference::Engine;
+use quarl::quant::Precision;
 use quarl::rng::Pcg32;
 use quarl::runtime::json::{to_string, Json};
 use quarl::runtime::manifest::TensorSpec;
@@ -41,7 +55,13 @@ fn mlp_params(dims: &[usize], seed: u64) -> ParamSet {
 
 /// JSON row for one engine x width x batch cell from the two measured
 /// per-sweep medians (ns).
-fn cell_row(engine: &str, width: usize, batch: usize, scalar_ns: f64, batched_ns: f64) -> Json {
+fn cell_row(
+    precision: Precision,
+    width: usize,
+    batch: usize,
+    scalar_ns: f64,
+    batched_ns: f64,
+) -> Json {
     let rows_scalar = batch as f64 / (scalar_ns * 1e-9);
     let rows_batched = batch as f64 / (batched_ns * 1e-9);
     println!(
@@ -49,7 +69,8 @@ fn cell_row(engine: &str, width: usize, batch: usize, scalar_ns: f64, batched_ns
         scalar_ns / batched_ns
     );
     let mut row = BTreeMap::new();
-    row.insert("engine".to_string(), Json::Str(engine.into()));
+    row.insert("engine".to_string(), Json::Str(precision.label()));
+    row.insert("bits".to_string(), Json::Num(precision.bits() as f64));
     row.insert("width".to_string(), Json::Num(width as f64));
     row.insert("batch".to_string(), Json::Num(batch as f64));
     row.insert("rows_per_sec_scalar".to_string(), Json::Num(rows_scalar));
@@ -58,70 +79,122 @@ fn cell_row(engine: &str, width: usize, batch: usize, scalar_ns: f64, batched_ns
     Json::Obj(row)
 }
 
+/// Measure one (engine, batch) cell: rep-amortized scalar per-row loop
+/// vs one batched sweep. Returns (scalar_ns, batched_ns) medians.
+fn measure(
+    eng: &mut dyn Engine,
+    tag: &str,
+    xs: &[f32],
+    batch: usize,
+    out: &mut [f32],
+    iters: usize,
+    batches: usize,
+) -> (f64, f64) {
+    let s_ns = bench(&format!("{tag} scalar"), iters, batches, || {
+        for r in 0..batch {
+            eng.forward(
+                black_box(&xs[r * IN_DIM..(r + 1) * IN_DIM]),
+                &mut out[r * OUT_DIM..(r + 1) * OUT_DIM],
+            )
+            .unwrap();
+        }
+    })
+    .median_ns;
+    let b_ns = bench(&format!("{tag} batched"), iters, batches, || {
+        eng.forward_batch(black_box(xs), batch, out).unwrap();
+    })
+    .median_ns;
+    (s_ns, b_ns)
+}
+
 fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&argv).expect("bench args");
+    let bits = args.bits(&[4, 8]).expect("--bits");
+    let quick = args.has("quick");
+    let widths: &[usize] = if quick { &WIDTHS[..1] } else { &WIDTHS };
+
+    // fp32 always; then one quantized engine per requested width that
+    // has a native engine (2..=8; the CLI validates 2..=16).
+    let mut precisions = vec![Precision::Fp32];
+    for &b in &bits {
+        let p = Precision::Int(b);
+        if p.engine_supported() {
+            precisions.push(p);
+        } else {
+            eprintln!("note: skipping --bits {b} (native engines implement 2..=8)");
+        }
+    }
+
     println!("== batched inference kernels: forward_batch vs per-row forward ==");
     let mut rows: Vec<Json> = Vec::new();
-    let mut headline = 0.0f64;
-    for width in WIDTHS {
+    let mut headline = f64::NAN;
+    for &width in widths {
         let dims = [IN_DIM, width, width, OUT_DIM];
         let params = mlp_params(&dims, 7);
-        let mut f32e = EngineF32::from_params(&params).unwrap();
-        let mut i8e = EngineInt8::from_params(&params).unwrap();
+        // Build each engine once per width (quantization is offline
+        // work, not part of the measured cells); the batch loop then
+        // reuses them so the engine-owned scratch arenas grow once to
+        // the high-water batch, as they would in a deployed sweep.
+        let mut engines: Vec<(Precision, Box<dyn Engine>)> = precisions
+            .iter()
+            .map(|&p| (p, quarl::inference::engine_for(&params, p).unwrap()))
+            .collect();
         let mut rng = Pcg32::new(42, 42);
         for batch in BATCHES {
             let xs: Vec<f32> =
                 (0..batch * IN_DIM).map(|_| rng.uniform_range(-1.0, 1.0)).collect();
             let mut out = vec![0.0f32; batch * OUT_DIM];
-            // Keep wall time bounded: wide nets get fewer iterations
-            // (one "iter" is a whole batch sweep either way).
-            let (iters, batches) = if width >= 512 { (3, 7) } else { (20, 7) };
+            // Keep wall time bounded: wide nets (and the CI quick mode)
+            // get fewer iterations (one "iter" is a whole batch sweep
+            // either way).
+            let (iters, batches) = if quick {
+                (3, 3)
+            } else if width >= 512 {
+                (3, 7)
+            } else {
+                (20, 7)
+            };
 
-            let tag = format!("int8 {IN_DIM}x{width}x{width}x{OUT_DIM} b={batch}");
-            let s_ns = bench(&format!("{tag} scalar"), iters, batches, || {
-                for r in 0..batch {
-                    i8e.forward(
-                        black_box(&xs[r * IN_DIM..(r + 1) * IN_DIM]),
-                        &mut out[r * OUT_DIM..(r + 1) * OUT_DIM],
-                    )
-                    .unwrap();
+            for (precision, engine) in engines.iter_mut() {
+                let precision = *precision;
+                let tag = format!(
+                    "{} {IN_DIM}x{width}x{width}x{OUT_DIM} b={batch}",
+                    precision.label()
+                );
+                let (s_ns, b_ns) = measure(
+                    engine.as_mut(),
+                    &tag,
+                    &xs,
+                    batch,
+                    &mut out,
+                    iters,
+                    batches,
+                );
+                if precision == Precision::Int(8) && width == 512 && batch == 64 {
+                    headline = s_ns / b_ns;
                 }
-            })
-            .median_ns;
-            let b_ns = bench(&format!("{tag} batched"), iters, batches, || {
-                i8e.forward_batch(black_box(&xs), batch, &mut out).unwrap();
-            })
-            .median_ns;
-            if width == 512 && batch == 64 {
-                headline = s_ns / b_ns;
+                rows.push(cell_row(precision, width, batch, s_ns, b_ns));
             }
-            rows.push(cell_row("int8", width, batch, s_ns, b_ns));
-
-            let tag = format!("fp32 {IN_DIM}x{width}x{width}x{OUT_DIM} b={batch}");
-            let s_ns = bench(&format!("{tag} scalar"), iters, batches, || {
-                for r in 0..batch {
-                    f32e.forward(
-                        black_box(&xs[r * IN_DIM..(r + 1) * IN_DIM]),
-                        &mut out[r * OUT_DIM..(r + 1) * OUT_DIM],
-                    );
-                }
-            })
-            .median_ns;
-            let b_ns = bench(&format!("{tag} batched"), iters, batches, || {
-                f32e.forward_batch(black_box(&xs), batch, &mut out).unwrap();
-            })
-            .median_ns;
-            rows.push(cell_row("fp32", width, batch, s_ns, b_ns));
         }
     }
 
-    println!(
-        "\n(headline: int8 batch-64 on the 128x512x512x25 MLP runs {headline:.2}x the\n\
-         per-row scalar path — acceptance wants >= 2x.)"
-    );
+    if headline.is_finite() {
+        println!(
+            "\n(headline: int8 batch-64 on the 128x512x512x25 MLP runs {headline:.2}x the\n\
+             per-row scalar path — acceptance wants >= 2x.)"
+        );
+    } else {
+        println!("\n(headline cell not in this sweep — run without --quick and with 8 in --bits)");
+    }
 
     let mut doc = BTreeMap::new();
     doc.insert("bench".to_string(), Json::Str("engines".into()));
     doc.insert("mlp".to_string(), Json::Str(format!("{IN_DIM}xWxWx{OUT_DIM}")));
+    doc.insert(
+        "bits".to_string(),
+        Json::Arr(precisions.iter().map(|p| Json::Num(p.bits() as f64)).collect()),
+    );
     doc.insert("headline_int8_b64_w512_speedup".to_string(), Json::Num(headline));
     doc.insert("rows".to_string(), Json::Arr(rows));
     let doc = Json::Obj(doc);

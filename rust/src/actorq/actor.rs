@@ -11,34 +11,47 @@ use std::sync::mpsc::SyncSender;
 use std::sync::Arc;
 
 use crate::actorq::broadcast::ParamBroadcast;
-use crate::actorq::{ActorPrecision, ExperienceBatch, OwnedTransition};
+use crate::actorq::{ExperienceBatch, OwnedTransition, Precision};
 use crate::algos::common::EpsSchedule;
 use crate::envs::api::Action;
 use crate::envs::vec_env::VecEnv;
 use crate::error::Result;
-use crate::inference::{EngineF32, EngineInt8};
+use crate::inference::{EngineF32, EngineQuant};
 use crate::rng::Pcg32;
 use crate::tensor::argmax;
 use crate::runtime::ParamSet;
 use crate::sustain::{Component, EnergyMeter};
 
-/// The actor-side policy: one of the two pure-Rust deployment engines.
+/// The actor-side policy: the fp32 baseline engine or the
+/// bitwidth-generic quantized engine (int8, packed int4, any
+/// engine-supported width) — one enum per [`Precision`] family, not one
+/// variant per bitwidth.
 ///
 /// Continuous heads are linear; the exploration rule clamps actions to
 /// [-1, 1] exactly like the synchronous DDPG driver does after noise.
 #[derive(Debug, Clone)]
 pub enum ActorEngine {
     F32(EngineF32),
-    Int8(EngineInt8),
+    Quant(EngineQuant),
 }
 
 impl ActorEngine {
     /// Build from fp32 parameters at the requested precision (this is the
     /// quantize-on-broadcast step; it runs on the learner thread).
-    pub fn from_params(params: &ParamSet, precision: ActorPrecision) -> Result<ActorEngine> {
+    pub fn from_params(params: &ParamSet, precision: Precision) -> Result<ActorEngine> {
         match precision {
-            ActorPrecision::Fp32 => EngineF32::from_params(params).map(ActorEngine::F32),
-            ActorPrecision::Int8 => EngineInt8::from_params(params).map(ActorEngine::Int8),
+            Precision::Fp32 => EngineF32::from_params(params).map(ActorEngine::F32),
+            Precision::Int(bits) => {
+                EngineQuant::from_params(params, bits).map(ActorEngine::Quant)
+            }
+        }
+    }
+
+    /// The precision this policy copy deploys.
+    pub fn precision(&self) -> Precision {
+        match self {
+            ActorEngine::F32(_) => Precision::Fp32,
+            ActorEngine::Quant(e) => e.precision(),
         }
     }
 
@@ -50,7 +63,7 @@ impl ActorEngine {
                 e.forward(x, out);
                 Ok(())
             }
-            ActorEngine::Int8(e) => e.forward(x, out),
+            ActorEngine::Quant(e) => e.forward(x, out),
         }
     }
 
@@ -63,23 +76,24 @@ impl ActorEngine {
     pub fn forward_batch(&mut self, xs: &[f32], batch: usize, out: &mut [f32]) -> Result<()> {
         match self {
             ActorEngine::F32(e) => e.forward_batch(xs, batch, out),
-            ActorEngine::Int8(e) => e.forward_batch(xs, batch, out),
+            ActorEngine::Quant(e) => e.forward_batch(xs, batch, out),
         }
     }
 
     /// Output head width (actions for DQN, action dims for DDPG).
     pub fn out_dim(&self) -> usize {
         match self {
-            ActorEngine::F32(e) => e.layers.last().map(|l| l.out_dim).unwrap_or(0),
-            ActorEngine::Int8(e) => e.layers.last().map(|l| l.out_dim).unwrap_or(0),
+            ActorEngine::F32(e) => e.out_dim(),
+            ActorEngine::Quant(e) => e.out_dim(),
         }
     }
 
-    /// Actor-side weight bytes (the paper's 4x traffic argument).
+    /// Actor-side weight bytes (the paper's traffic argument: 4x smaller
+    /// at int8, 8x at packed int4).
     pub fn memory_bytes(&self) -> usize {
         match self {
             ActorEngine::F32(e) => e.memory_bytes(),
-            ActorEngine::Int8(e) => e.memory_bytes(),
+            ActorEngine::Quant(e) => e.memory_bytes(),
         }
     }
 }
@@ -273,19 +287,29 @@ mod tests {
     }
 
     #[test]
-    fn engine_wraps_both_precisions() {
+    fn engine_wraps_every_precision_family() {
         let p = mlp_params(&[4, 16, 2], 3);
         let x = [0.1f32, -0.2, 0.05, 0.3];
         let mut of = vec![0.0; 2];
         let mut oq = vec![0.0; 2];
-        let mut f = ActorEngine::from_params(&p, ActorPrecision::Fp32).unwrap();
-        let mut q = ActorEngine::from_params(&p, ActorPrecision::Int8).unwrap();
+        let mut o4 = vec![0.0; 2];
+        let mut f = ActorEngine::from_params(&p, Precision::Fp32).unwrap();
+        let mut q = ActorEngine::from_params(&p, Precision::Int(8)).unwrap();
+        let mut q4 = ActorEngine::from_params(&p, Precision::Int(4)).unwrap();
         f.forward(&x, &mut of).unwrap();
         q.forward(&x, &mut oq).unwrap();
+        q4.forward(&x, &mut o4).unwrap();
         assert_eq!(f.out_dim(), 2);
         assert_eq!(q.out_dim(), 2);
+        assert_eq!(q4.out_dim(), 2);
+        assert_eq!(q4.precision(), Precision::INT4);
         assert!(of.iter().all(|v| v.is_finite()) && oq.iter().all(|v| v.is_finite()));
+        assert!(o4.iter().all(|v| v.is_finite()));
         assert!(q.memory_bytes() < f.memory_bytes(), "int8 actor copy must be smaller");
+        assert!(q4.memory_bytes() < q.memory_bytes(), "packed int4 must be smaller still");
+        // unsupported engine bitwidths fail the quantize-on-broadcast
+        // step loudly instead of silently falling back
+        assert!(ActorEngine::from_params(&p, Precision::Int(16)).is_err());
     }
 
     #[test]
@@ -296,7 +320,7 @@ mod tests {
         let mut rng = Pcg32::new(9, 9);
         let n = 6;
         let xs: Vec<f32> = (0..n * 4).map(|_| rng.uniform_range(-1.0, 1.0)).collect();
-        for precision in [ActorPrecision::Fp32, ActorPrecision::Int8] {
+        for precision in [Precision::Fp32, Precision::Int(8), Precision::Int(4)] {
             let mut eng = ActorEngine::from_params(&p, precision).unwrap();
             let mut want = vec![0.0f32; n * 3];
             for e in 0..n {

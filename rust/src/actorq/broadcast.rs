@@ -1,8 +1,9 @@
 //! Versioned parameter broadcast: learner -> actors, quantize-on-publish.
 //!
 //! The learner owns fp32 master weights; actors only ever see the
-//! deployment representation (int8 codes + per-tensor affine params, or
-//! an fp32 engine for the baseline configuration). [`ParamBroadcast`]
+//! deployment representation (centered integer codes — i8 or packed
+//! nibbles — plus per-tensor affine params, or an fp32 engine for the
+//! baseline configuration). [`ParamBroadcast`]
 //! therefore quantizes *once* per publish — building the actor engine on
 //! the learner thread — and actors clone the prebuilt engine, which is
 //! orders of magnitude cheaper than N actors each re-quantizing.
@@ -19,12 +20,12 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
 use crate::actorq::actor::ActorEngine;
-use crate::actorq::ActorPrecision;
+use crate::actorq::Precision;
 use crate::error::Result;
 use crate::runtime::ParamSet;
 
 /// One published parameter snapshot: a version stamp plus the prebuilt
-/// actor-side engine (already quantized for int8 precision).
+/// actor-side engine (already quantized at the configured precision).
 #[derive(Debug)]
 pub struct Snapshot {
     pub version: u64,
@@ -34,14 +35,14 @@ pub struct Snapshot {
 /// Learner-to-actor parameter distribution channel.
 #[derive(Debug)]
 pub struct ParamBroadcast {
-    precision: ActorPrecision,
+    precision: Precision,
     slot: Mutex<Arc<Snapshot>>,
     version: AtomicU64,
 }
 
 impl ParamBroadcast {
     /// Create with an initial snapshot at version 0.
-    pub fn new(params: &ParamSet, precision: ActorPrecision) -> Result<ParamBroadcast> {
+    pub fn new(params: &ParamSet, precision: Precision) -> Result<ParamBroadcast> {
         let engine = ActorEngine::from_params(params, precision)?;
         Ok(ParamBroadcast {
             precision,
@@ -50,7 +51,7 @@ impl ParamBroadcast {
         })
     }
 
-    pub fn precision(&self) -> ActorPrecision {
+    pub fn precision(&self) -> Precision {
         self.precision
     }
 
@@ -100,7 +101,7 @@ mod tests {
     #[test]
     fn publish_bumps_version() {
         let p = mlp_params(&[4, 8, 2], 1);
-        let bc = ParamBroadcast::new(&p, ActorPrecision::Int8).unwrap();
+        let bc = ParamBroadcast::new(&p, Precision::Int(8)).unwrap();
         assert_eq!(bc.version(), 0);
         assert_eq!(bc.latest().version, 0);
         assert_eq!(bc.publish(&p).unwrap(), 1);
@@ -112,10 +113,10 @@ mod tests {
     #[test]
     fn fp32_snapshot_matches_direct_engine() {
         let p = mlp_params(&[6, 16, 3], 7);
-        let bc = ParamBroadcast::new(&p, ActorPrecision::Fp32).unwrap();
+        let bc = ParamBroadcast::new(&p, Precision::Fp32).unwrap();
         let snap = bc.latest();
         let mut from_snap = snap.engine.clone();
-        let mut direct = ActorEngine::from_params(&p, ActorPrecision::Fp32).unwrap();
+        let mut direct = ActorEngine::from_params(&p, Precision::Fp32).unwrap();
         let x: Vec<f32> = (0..6).map(|i| (i as f32 * 0.4).sin()).collect();
         let mut a = vec![0.0; 3];
         let mut b = vec![0.0; 3];
@@ -127,21 +128,42 @@ mod tests {
     #[test]
     fn int8_snapshot_is_quantized_and_close() {
         let p = mlp_params(&[6, 32, 4], 9);
-        let bc = ParamBroadcast::new(&p, ActorPrecision::Int8).unwrap();
+        let bc = ParamBroadcast::new(&p, Precision::Int(8)).unwrap();
         let snap = bc.latest();
-        // the snapshot carries i8 codes, not fp32 weights
-        let ActorEngine::Int8(ref eng) = snap.engine else {
-            panic!("int8 broadcast must carry the int8 engine");
+        // the snapshot carries integer codes, not fp32 weights
+        let ActorEngine::Quant(ref eng) = snap.engine else {
+            panic!("int8 broadcast must carry the quantized engine");
         };
+        assert_eq!(eng.bits, 8);
         // per-weight round-trip error bounded by one grid step off the rails
         let w0 = &p.tensors[0];
         let layer = &eng.layers[0];
-        for (i, (&w, &code)) in w0.data().iter().zip(&layer.wq).enumerate() {
+        for (i, (&w, code)) in w0.data().iter().zip(layer.codes.to_vec()).enumerate() {
             assert_eq!(code, layer.w_qp.quantize_i8(w), "idx {i}: shared clamping rule");
             if code > -128 && code < 127 {
                 let err = (layer.w_qp.dequantize_i8(code) - w).abs();
                 assert!(err <= layer.w_qp.delta + 1e-6, "idx {i}: err {err}");
             }
+        }
+    }
+
+    #[test]
+    fn int4_snapshot_carries_packed_codes() {
+        // The sub-byte broadcast path: same quantize-on-publish step,
+        // codes stored packed (two per byte) and matching the shared
+        // 4-bit clamping rule.
+        let p = mlp_params(&[6, 32, 4], 9);
+        let bc = ParamBroadcast::new(&p, Precision::Int(4)).unwrap();
+        let snap = bc.latest();
+        let ActorEngine::Quant(ref eng) = snap.engine else {
+            panic!("int4 broadcast must carry the quantized engine");
+        };
+        assert_eq!(eng.bits, 4);
+        let w0 = &p.tensors[0];
+        let layer = &eng.layers[0];
+        assert_eq!(layer.codes.bytes(), w0.len().div_ceil(2), "two codes per byte");
+        for (i, (&w, code)) in w0.data().iter().zip(layer.codes.to_vec()).enumerate() {
+            assert_eq!(code, layer.w_qp.quantize_code(w, 4), "idx {i}: shared clamping rule");
         }
     }
 }

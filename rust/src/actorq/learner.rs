@@ -1,9 +1,20 @@
 //! Learner-side plumbing shared by the DQN and DDPG ActorQ drivers:
-//! train-step pacing against the asynchronous env-step counter, and the
-//! run telemetry the experiment harness reports.
+//! the [`LearnerHarness`] that owns pool setup, the experience-drain +
+//! pacer loop, and the log assembly (so a driver contributes only its
+//! train-program closure and the [`crate::quant::Precision`] choice is
+//! threaded once), plus the [`Pacer`] and the [`ActorQLog`] telemetry
+//! the experiment harness reports.
 
-use crate::actorq::actor::ActorStats;
-use crate::sustain::MeterSnapshot;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::actorq::actor::{ActorStats, Exploration};
+use crate::actorq::broadcast::ParamBroadcast;
+use crate::actorq::pool::{ActorPool, PoolConfig};
+use crate::actorq::{ActorQConfig, OwnedTransition};
+use crate::error::Result;
+use crate::runtime::ParamSet;
+use crate::sustain::{EnergyMeter, MeterSnapshot};
 
 /// Keeps the train-step : env-step ratio of the asynchronous driver equal
 /// to the synchronous one (1 train per `train_freq` env steps past
@@ -86,6 +97,182 @@ impl ActorQLog {
     }
 }
 
+/// How the shared loop folds completed episode returns into
+/// [`ActorQLog::returns`] — the two conventions the synchronous drivers
+/// established (DQN logs a smoothed tail at a step cadence, DDPG logs
+/// every episode as it finishes).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReturnLog {
+    /// `(env_steps, mean of the last <= 20 returns)` every `log_every`
+    /// env steps (the DQN convention).
+    TailMean,
+    /// `(env_steps, return)` per completed episode (the DDPG convention).
+    PerEpisode,
+}
+
+/// Construction parameters for [`LearnerHarness::spawn`] — the fields
+/// the two drivers used to copy into their own pool/pacer setup.
+pub struct HarnessConfig<'a> {
+    pub env_id: &'a str,
+    pub seed: u64,
+    /// Env-step budget; the run loop exits once the learner has
+    /// consumed this many transitions.
+    pub total_steps: usize,
+    /// Pacer warmup (sync-driver env steps before the first train).
+    pub warmup: usize,
+    /// Pacer train frequency (sync-driver env steps per train step).
+    pub train_freq: usize,
+    /// Telemetry cadence; 0 = silent.
+    pub log_every: usize,
+    pub exploration: Exploration,
+    pub returns: ReturnLog,
+    pub acfg: &'a ActorQConfig,
+}
+
+/// The learner-side half of an ActorQ run: actor pool, quantize-on-
+/// broadcast channel, energy meter, pacer, and the drain/train loop —
+/// everything that was duplicated between `dqn::train_actorq` and
+/// `ddpg::train_actorq` before the precision stack became
+/// bitwidth-generic.
+///
+/// A driver builds one with [`LearnerHarness::spawn`] (which quantizes
+/// the initial snapshot at `acfg.precision` — the single place the
+/// precision choice enters the async stack), clones the
+/// [`LearnerHarness::broadcast`]/[`LearnerHarness::meter`] handles for
+/// its train closure, and hands the closure to [`LearnerHarness::run`].
+pub struct LearnerHarness {
+    /// Versioned quantize-on-broadcast channel (publish from the train
+    /// closure; the harness counts publishes it asked for).
+    pub broadcast: Arc<ParamBroadcast>,
+    /// Per-component energy meter wired into the actor pool.
+    pub meter: Arc<EnergyMeter>,
+    pool: ActorPool,
+    pacer: Pacer,
+    drain_max: usize,
+    broadcast_every: usize,
+    total_steps: usize,
+    log_every: usize,
+    returns: ReturnLog,
+}
+
+impl LearnerHarness {
+    /// Quantize `params` at `cfg.acfg.precision`, spawn the actor pool,
+    /// and wire the meter — the shared front half of both drivers.
+    pub fn spawn(params: &ParamSet, cfg: &HarnessConfig) -> Result<LearnerHarness> {
+        let meter = Arc::new(EnergyMeter::new());
+        let broadcast = Arc::new(ParamBroadcast::new(params, cfg.acfg.precision)?);
+        let pool = ActorPool::spawn(
+            &PoolConfig {
+                env_id: cfg.env_id.to_string(),
+                n_actors: cfg.acfg.n_actors,
+                envs_per_actor: cfg.acfg.envs_per_actor,
+                flush_every: cfg.acfg.flush_every,
+                channel_capacity: cfg.acfg.channel_capacity,
+                exploration: cfg.exploration,
+                seed: cfg.seed,
+                meter: Some(meter.clone()),
+            },
+            broadcast.clone(),
+        )?;
+        Ok(LearnerHarness {
+            broadcast,
+            meter,
+            pool,
+            pacer: Pacer::new(cfg.warmup, cfg.train_freq),
+            drain_max: cfg.acfg.n_actors,
+            broadcast_every: cfg.acfg.broadcast_every.max(1),
+            total_steps: cfg.total_steps,
+            log_every: cfg.log_every,
+            returns: cfg.returns,
+        })
+    }
+
+    /// The drain + pace + train loop, then pool shutdown and log
+    /// assembly. Consumes the harness and returns the completed
+    /// [`ActorQLog`].
+    ///
+    /// * `push` receives every transition in arrival order (replay
+    ///   insertion).
+    /// * `train(step, publish)` runs one train-program call at
+    ///   synchronous-equivalent `step`; when `publish` is true the
+    ///   broadcast cadence hit and the closure must publish fresh
+    ///   parameters before returning. Returning `Ok(None)` means the
+    ///   replay is not warm yet — the harness stops paying train debt
+    ///   until more experience arrives. Returning `Ok(Some(loss))`
+    ///   records the step (and the loss, at the sync driver's
+    ///   `step % log_every` gate, so loss curves from the two paths
+    ///   align at equal step budget).
+    ///
+    /// The drain shape is the one both drivers used: one blocking recv
+    /// (100 ms timeout), then whatever else is already queued up to
+    /// `n_actors` batches, so a deep backlog never stalls the train
+    /// loop.
+    pub fn run<P, T>(mut self, mut push: P, mut train: T) -> Result<ActorQLog>
+    where
+        P: FnMut(&OwnedTransition),
+        T: FnMut(usize, bool) -> Result<Option<f32>>,
+    {
+        let mut log = ActorQLog::default();
+        let mut recent: Vec<f32> = Vec::new();
+        let t_start = Instant::now();
+        let mut next_log = 0usize;
+
+        while log.env_steps < self.total_steps {
+            let Some(first) = self.pool.recv_timeout(Duration::from_millis(100))? else {
+                continue;
+            };
+            let mut batches = vec![first];
+            batches.extend(self.pool.try_drain(self.drain_max));
+            for xp in &batches {
+                for t in &xp.transitions {
+                    push(t);
+                }
+                log.env_steps += xp.transitions.len();
+                for &r in &xp.episode_returns {
+                    log.episodes += 1;
+                    recent.push(r);
+                    if self.returns == ReturnLog::PerEpisode && self.log_every > 0 {
+                        log.returns.push((log.env_steps, r));
+                    }
+                }
+            }
+
+            // Learn at the synchronous cadence.
+            let budget = log.env_steps.min(self.total_steps);
+            while self.pacer.owed(budget) > 0 {
+                let step = self.pacer.equivalent_step();
+                let publish = (log.train_steps + 1) % self.broadcast_every == 0;
+                let Some(loss) = train(step, publish)? else {
+                    break; // replay not warm yet
+                };
+                self.pacer.record();
+                log.train_steps += 1;
+                if publish {
+                    log.broadcasts += 1;
+                }
+                if self.log_every > 0 && step % self.log_every == 0 {
+                    log.losses.push((step, loss));
+                }
+            }
+
+            if self.returns == ReturnLog::TailMean
+                && self.log_every > 0
+                && log.env_steps >= next_log
+                && !recent.is_empty()
+            {
+                let tail = &recent[recent.len().saturating_sub(20)..];
+                log.returns.push((log.env_steps, tail.iter().sum::<f32>() / tail.len() as f32));
+                next_log = log.env_steps + self.log_every;
+            }
+        }
+
+        log.actor_stats = self.pool.shutdown()?;
+        log.energy = self.meter.snapshot();
+        log.finish(&recent, t_start.elapsed().as_secs_f64());
+        Ok(log)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -122,6 +309,104 @@ mod tests {
             }
         }
         assert_eq!(trained, (total - warmup) / freq);
+    }
+
+    #[test]
+    fn harness_runs_offline_at_sync_cadence() {
+        // The shared loop needs no PJRT: int4 actors collect cartpole
+        // experience while a stub train closure checks the pacing,
+        // publish cadence, and log assembly the drivers rely on.
+        use crate::algos::common::EpsSchedule;
+        use crate::rng::Pcg32;
+        use crate::runtime::manifest::TensorSpec;
+
+        let specs = vec![
+            TensorSpec { name: "q.w0".into(), shape: vec![4, 16] },
+            TensorSpec { name: "q.b0".into(), shape: vec![16] },
+            TensorSpec { name: "q.w1".into(), shape: vec![16, 2] },
+            TensorSpec { name: "q.b1".into(), shape: vec![2] },
+        ];
+        let mut rng = Pcg32::new(21, 1);
+        let params = ParamSet::init(&specs, &mut rng);
+        let acfg = ActorQConfig::new(2).with_precision(crate::quant::Precision::Int(4));
+        let hcfg = HarnessConfig {
+            env_id: "cartpole",
+            seed: 7,
+            total_steps: 600,
+            warmup: 100,
+            train_freq: 2,
+            log_every: 100,
+            exploration: Exploration::EpsGreedy {
+                schedule: EpsSchedule { start: 1.0, end: 0.1, fraction: 0.5 },
+                horizon: 300,
+            },
+            returns: ReturnLog::TailMean,
+            acfg: &acfg,
+        };
+        let harness = LearnerHarness::spawn(&params, &hcfg).unwrap();
+        let broadcast = harness.broadcast.clone();
+        let mut pushed = 0usize;
+        let mut published = 0usize;
+        let log = harness
+            .run(
+                |_t| pushed += 1,
+                |step, publish| {
+                    assert!(step >= 100, "no train step before warmup");
+                    if publish {
+                        broadcast.publish(&params)?;
+                        published += 1;
+                    }
+                    Ok(Some(0.5))
+                },
+            )
+            .unwrap();
+        assert!(log.env_steps >= 600, "{} env steps", log.env_steps);
+        assert_eq!(pushed, log.env_steps, "every transition reaches the push hook");
+        // Budget is capped at total_steps, so the async cadence owes
+        // exactly the synchronous driver's train count.
+        assert_eq!(log.train_steps, (600 - 100) / 2);
+        assert_eq!(log.broadcasts, published);
+        assert_eq!(log.broadcasts, log.train_steps / 10, "broadcast_every = 10");
+        assert!(!log.losses.is_empty());
+        assert_eq!(log.actor_stats.len(), 2);
+        assert!(log.energy.busy_secs("actors") > 0.0, "meter wired into the pool");
+    }
+
+    #[test]
+    fn harness_stops_paying_debt_when_replay_cold() {
+        // Ok(None) from the train closure must not record a train step.
+        use crate::algos::common::EpsSchedule;
+        use crate::rng::Pcg32;
+        use crate::runtime::manifest::TensorSpec;
+
+        let specs = vec![
+            TensorSpec { name: "q.w0".into(), shape: vec![4, 8] },
+            TensorSpec { name: "q.b0".into(), shape: vec![8] },
+            TensorSpec { name: "q.w1".into(), shape: vec![8, 2] },
+            TensorSpec { name: "q.b1".into(), shape: vec![2] },
+        ];
+        let mut rng = Pcg32::new(5, 1);
+        let params = ParamSet::init(&specs, &mut rng);
+        let acfg = ActorQConfig::new(1);
+        let hcfg = HarnessConfig {
+            env_id: "cartpole",
+            seed: 3,
+            total_steps: 200,
+            warmup: 0,
+            train_freq: 1,
+            log_every: 0,
+            exploration: Exploration::EpsGreedy {
+                schedule: EpsSchedule { start: 1.0, end: 1.0, fraction: 1.0 },
+                horizon: 200,
+            },
+            returns: ReturnLog::PerEpisode,
+            acfg: &acfg,
+        };
+        let harness = LearnerHarness::spawn(&params, &hcfg).unwrap();
+        let log = harness.run(|_t| {}, |_step, _publish| Ok(None)).unwrap();
+        assert_eq!(log.train_steps, 0);
+        assert_eq!(log.broadcasts, 0);
+        assert!(log.env_steps >= 200);
     }
 
     #[test]

@@ -9,10 +9,10 @@
 //! This module maps the paper's Figure-1 system diagram onto threads:
 //!
 //! ```text
-//!            quantize-on-broadcast (int8 codes, never fp32)
+//!            quantize-on-broadcast (integer codes, never fp32)
 //!   +-----------+  Arc<Snapshot> swap   +--------------------------+
 //!   |  learner  | --------------------> | actor 0 | actor 1 | ...  |
-//!   | (PJRT,    |                       |  EngineInt8 / EngineF32  |
+//!   | (PJRT,    |                       |  EngineQuant / EngineF32 |
 //!   |  fp32)    | <-------------------- |  + own envs + own rng    |
 //!   +-----------+  bounded mpsc channel +--------------------------+
 //!        |            of Transition batches
@@ -21,8 +21,9 @@
 //!
 //! * [`broadcast`] — versioned parameter distribution. The learner calls
 //!   [`ParamBroadcast::publish`]; weights are quantized *once* at publish
-//!   time (per [`ActorPrecision`]) and actors clone the prebuilt
-//!   deployment engine, so fp32 master weights never cross the boundary.
+//!   time (per [`Precision`] — int8, packed int4, any engine-supported
+//!   bitwidth) and actors clone the prebuilt deployment engine, so fp32
+//!   master weights never cross the boundary.
 //! * [`actor`] — the actor thread body: a [`crate::envs::vec_env::VecEnv`]
 //!   of private environments, a local [`actor::ActorEngine`] policy copy,
 //!   and an [`actor::Exploration`] rule (epsilon-greedy for DQN heads,
@@ -51,27 +52,14 @@ pub mod pool;
 
 pub use actor::{ActorEngine, ActorStats, Exploration};
 pub use broadcast::{ParamBroadcast, Snapshot};
-pub use learner::{ActorQLog, Pacer};
+pub use learner::{ActorQLog, LearnerHarness, Pacer, ReturnLog};
 pub use pool::{ActorPool, PoolConfig};
 
-/// Numeric format of the actor-side policy copy (paper Table 6 compares
-/// fp32 against int8 actors at identical learner precision).
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum ActorPrecision {
-    /// Full-precision actors (the paper's baseline configuration).
-    Fp32,
-    /// 8-bit actors on the pure-Rust int8 engine (the paper's headline).
-    Int8,
-}
-
-impl ActorPrecision {
-    pub fn label(&self) -> &'static str {
-        match self {
-            ActorPrecision::Fp32 => "fp32",
-            ActorPrecision::Int8 => "int8",
-        }
-    }
-}
+/// Numeric format of the actor-side policy copy — the shared
+/// [`crate::quant::Precision`] selector (paper Table 6 compares fp32
+/// against int8 actors at identical learner precision; the sub-8-bit
+/// sweep runs the same broadcast path at `Precision::Int(b)`).
+pub use crate::quant::Precision;
 
 /// One owned transition as it crosses the actor -> learner channel.
 ///
@@ -108,8 +96,9 @@ pub struct ActorQConfig {
     pub n_actors: usize,
     /// Environments each actor steps round-robin (1 = paper setup).
     pub envs_per_actor: usize,
-    /// Actor-side policy precision.
-    pub precision: ActorPrecision,
+    /// Actor-side policy precision (fp32 or any engine-supported
+    /// integer bitwidth).
+    pub precision: Precision,
     /// Transitions an actor accumulates before sending one batch.
     pub flush_every: usize,
     /// Bounded channel capacity in batches (back-pressure window).
@@ -123,14 +112,14 @@ impl ActorQConfig {
         ActorQConfig {
             n_actors: n_actors.max(1),
             envs_per_actor: 1,
-            precision: ActorPrecision::Int8,
+            precision: Precision::INT8,
             flush_every: 32,
             channel_capacity: 16,
             broadcast_every: 10,
         }
     }
 
-    pub fn with_precision(mut self, precision: ActorPrecision) -> ActorQConfig {
+    pub fn with_precision(mut self, precision: Precision) -> ActorQConfig {
         self.precision = precision;
         self
     }
@@ -145,13 +134,19 @@ mod tests {
         let c = ActorQConfig::new(0);
         assert_eq!(c.n_actors, 1, "actor count floored at 1");
         assert!(c.flush_every > 0 && c.channel_capacity > 0 && c.broadcast_every > 0);
-        assert_eq!(c.precision, ActorPrecision::Int8);
-        assert_eq!(c.with_precision(ActorPrecision::Fp32).precision, ActorPrecision::Fp32);
+        assert_eq!(c.precision, Precision::Int(8));
+        assert_eq!(c.with_precision(Precision::Fp32).precision, Precision::Fp32);
+        assert_eq!(
+            ActorQConfig::new(2).with_precision(Precision::Int(4)).precision,
+            Precision::INT4,
+            "sub-byte actor precisions thread through the same config"
+        );
     }
 
     #[test]
     fn precision_labels() {
-        assert_eq!(ActorPrecision::Fp32.label(), "fp32");
-        assert_eq!(ActorPrecision::Int8.label(), "int8");
+        assert_eq!(Precision::Fp32.label(), "fp32");
+        assert_eq!(Precision::Int(8).label(), "int8");
+        assert_eq!(Precision::Int(4).label(), "int4");
     }
 }

@@ -126,12 +126,12 @@ impl ActorPool {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::actorq::{ActorPrecision, ParamBroadcast};
+    use crate::actorq::{ParamBroadcast, Precision};
     use crate::algos::common::EpsSchedule;
     use crate::runtime::manifest::TensorSpec;
     use crate::runtime::ParamSet;
 
-    fn cartpole_broadcast(precision: ActorPrecision) -> Arc<ParamBroadcast> {
+    fn cartpole_broadcast(precision: Precision) -> Arc<ParamBroadcast> {
         let specs = vec![
             TensorSpec { name: "q.w0".into(), shape: vec![4, 32] },
             TensorSpec { name: "q.b0".into(), shape: vec![32] },
@@ -161,7 +161,7 @@ mod tests {
 
     #[test]
     fn pool_collects_valid_cartpole_experience() {
-        let bc = cartpole_broadcast(ActorPrecision::Int8);
+        let bc = cartpole_broadcast(Precision::Int(8));
         let pool = ActorPool::spawn(&pool_cfg(2), bc).unwrap();
         let mut got = 0usize;
         while got < 200 {
@@ -190,7 +190,7 @@ mod tests {
 
     #[test]
     fn actors_pick_up_published_params() {
-        let bc = cartpole_broadcast(ActorPrecision::Fp32);
+        let bc = cartpole_broadcast(Precision::Fp32);
         let pool = ActorPool::spawn(&pool_cfg(2), bc.clone()).unwrap();
         // republish fresh params; actors must move to the new version
         let specs = vec![
@@ -222,7 +222,7 @@ mod tests {
     #[test]
     fn pool_records_energy_when_metered() {
         use crate::sustain::Component;
-        let bc = cartpole_broadcast(ActorPrecision::Int8);
+        let bc = cartpole_broadcast(Precision::Int(8));
         let meter = Arc::new(EnergyMeter::new());
         let mut cfg = pool_cfg(1);
         cfg.meter = Some(meter.clone());
@@ -237,7 +237,7 @@ mod tests {
 
     #[test]
     fn spawn_rejects_bad_config() {
-        let bc = cartpole_broadcast(ActorPrecision::Int8);
+        let bc = cartpole_broadcast(Precision::Int(8));
         let mut cfg = pool_cfg(0);
         assert!(ActorPool::spawn(&cfg, bc.clone()).is_err());
         cfg.n_actors = 1;

@@ -5,12 +5,10 @@
 //! updates (a host-side lerp on the master copies); the XLA side owns
 //! both actor and critic updates in one program call.
 
-use std::sync::Arc;
-use std::time::Duration;
+use std::cell::RefCell;
 
-use crate::actorq::{
-    ActorPool, ActorQConfig, ActorQLog, Exploration, Pacer, ParamBroadcast, PoolConfig,
-};
+use crate::actorq::learner::HarnessConfig;
+use crate::actorq::{ActorQConfig, ActorQLog, Exploration, LearnerHarness, ReturnLog};
 use crate::algos::common::{load_programs, pad_obs, QuantSchedule, TrainedPolicy};
 use crate::envs::api::Action;
 use crate::envs::registry::make_env;
@@ -18,7 +16,7 @@ use crate::error::Result;
 use crate::replay::{ReplayBuffer, Transition};
 use crate::rng::Pcg32;
 use crate::runtime::{ParamSet, Runtime};
-use crate::sustain::{Component, EnergyMeter};
+use crate::sustain::Component;
 use crate::tensor::Tensor;
 
 pub use crate::algos::dqn::TrainLog;
@@ -249,12 +247,16 @@ pub fn train(rt: &Runtime, cfg: &DdpgConfig) -> Result<(TrainedPolicy, TrainLog)
 /// Train a DDPG policy with the ActorQ actor-learner driver (paper §3).
 ///
 /// Actor threads run a quantized copy of the *actor network only* on the
-/// native engines — the critic never leaves the learner — with Gaussian
-/// exploration and a [-1, 1] clamp matching [`train`]. The native head
-/// is linear (no tanh squash), so the exploration clamp doubles as the
-/// action bound, the same approximation the deployment engines make.
-/// Each actor's vec-env sweep is a single batched `forward_batch` on its
+/// native engines (at any engine-supported [`crate::quant::Precision`])
+/// — the critic never leaves the learner — with Gaussian exploration
+/// and a [-1, 1] clamp matching [`train`]. The native head is linear
+/// (no tanh squash), so the exploration clamp doubles as the action
+/// bound, the same approximation the deployment engines make. Each
+/// actor's vec-env sweep is a single batched `forward_batch` on its
 /// engine copy (weight panels stream once per sweep, not once per env).
+/// Pool setup, the drain + pacer loop, and the log assembly live in the
+/// shared [`LearnerHarness`]; this driver contributes the DDPG
+/// train-program closure.
 pub fn train_actorq(
     rt: &Runtime,
     cfg: &DdpgConfig,
@@ -311,71 +313,56 @@ pub fn train_actorq(
     let i_obs = i_qstate + 1;
     let i_hyper = i_obs + 5;
 
+    // The harness owns pool setup, the drain + pacer loop, and the log
+    // assembly; acfg.precision enters the stack exactly once, here.
     let horizon = (cfg.total_steps / acfg.n_actors.max(1)).max(1);
     let mut actor_pub = actor.clone();
-    let meter = Arc::new(EnergyMeter::new());
-    let broadcast = Arc::new(ParamBroadcast::new(&actor_pub, acfg.precision)?);
-    let pool = ActorPool::spawn(
-        &PoolConfig {
-            env_id: cfg.env_id.clone(),
-            n_actors: acfg.n_actors,
-            envs_per_actor: acfg.envs_per_actor,
-            flush_every: acfg.flush_every,
-            channel_capacity: acfg.channel_capacity,
+    let harness = LearnerHarness::spawn(
+        &actor_pub,
+        &HarnessConfig {
+            env_id: &cfg.env_id,
+            seed: cfg.seed,
+            total_steps: cfg.total_steps,
+            warmup: cfg.warmup,
+            train_freq: cfg.train_freq,
+            log_every: cfg.log_every,
             exploration: Exploration::Gaussian {
                 std: cfg.noise_std,
                 horizon,
                 warmup: (cfg.warmup / acfg.n_actors.max(1)).max(1),
             },
-            seed: cfg.seed,
-            meter: Some(meter.clone()),
+            returns: ReturnLog::PerEpisode,
+            acfg,
         },
-        broadcast.clone(),
     )?;
+    let meter = harness.meter.clone();
+    let broadcast = harness.broadcast.clone();
 
-    let mut buf = ReplayBuffer::new(cfg.buffer_size, obs_dim, act_dim);
-    let mut log = ActorQLog::default();
-    let t_start = std::time::Instant::now();
-    let mut recent: Vec<f32> = Vec::new();
+    // Both the push hook and the train closure touch the replay buffer;
+    // the harness never runs them concurrently, so a RefCell suffices.
+    let buf = RefCell::new(ReplayBuffer::new(cfg.buffer_size, obs_dim, act_dim));
     let mut adam_t = 0.0f32;
-    let mut pacer = Pacer::new(cfg.warmup, cfg.train_freq);
+    let mut exec_secs = 0.0f64;
     let n_all = na + nc;
 
     let quant_bits = cfg.quant.bits as f32;
     let quant_delay = cfg.quant.delay as f32;
 
-    while log.env_steps < cfg.total_steps {
-        // --- drain experience (one blocking recv, then whatever else is
-        // already queued, so a deep backlog never stalls the train loop) ---
-        let Some(first) = pool.recv_timeout(Duration::from_millis(100))? else {
-            continue;
-        };
-        let mut batches = vec![first];
-        batches.extend(pool.try_drain(acfg.n_actors));
-        for xp in &batches {
-            for t in &xp.transitions {
-                buf.push(Transition {
-                    obs: &t.obs,
-                    action: &t.action,
-                    reward: t.reward,
-                    next_obs: &t.next_obs,
-                    done: t.done,
-                });
+    let mut log = harness.run(
+        |t| {
+            buf.borrow_mut().push(Transition {
+                obs: &t.obs,
+                action: &t.action,
+                reward: t.reward,
+                next_obs: &t.next_obs,
+                done: t.done,
+            });
+        },
+        |step, publish| {
+            let buf = buf.borrow();
+            if buf.len() < batch {
+                return Ok(None);
             }
-            log.env_steps += xp.transitions.len();
-            for &r in &xp.episode_returns {
-                log.episodes += 1;
-                recent.push(r);
-                if cfg.log_every > 0 {
-                    log.returns.push((log.env_steps, r));
-                }
-            }
-        }
-
-        // --- learn at the synchronous cadence ---
-        let budget = log.env_steps.min(cfg.total_steps);
-        while pacer.owed(budget) > 0 && buf.len() >= batch {
-            let step = pacer.equivalent_step();
             let b = buf.sample(batch, &mut replay_rng);
             adam_t += 1.0;
             train_in[i_obs] = b.obs;
@@ -392,7 +379,7 @@ pub fn train_actorq(
                 let _busy = meter.scope(Component::Learner);
                 train_prog.run(&train_in)?
             };
-            log.train_exec_secs += t0.elapsed().as_secs_f64();
+            exec_secs += t0.elapsed().as_secs_f64();
             meter.add_steps(Component::Learner, 1);
             for i in 0..n_all {
                 train_in[i] = out[i].clone(); // actor+critic
@@ -413,10 +400,8 @@ pub fn train_actorq(
                     *t = tau * o + (1.0 - tau) * *t;
                 }
             }
-            pacer.record();
-            log.train_steps += 1;
 
-            if log.train_steps % acfg.broadcast_every.max(1) == 0 {
+            if publish {
                 for i in 0..na {
                     actor_pub.tensors[i] = train_in[i].clone();
                 }
@@ -425,19 +410,11 @@ pub fn train_actorq(
                     broadcast.publish(&actor_pub)?;
                 }
                 meter.add_steps(Component::Broadcast, 1);
-                log.broadcasts += 1;
             }
-            // Same gate as the sync driver (`step % log_every == 0`), so
-            // loss curves from the two paths align at equal step budget.
-            if cfg.log_every > 0 && step % cfg.log_every == 0 {
-                log.losses.push((step, out[3 * na + 3 * nc + 1].data()[0]));
-            }
-        }
-    }
-
-    log.actor_stats = pool.shutdown()?;
-    log.energy = meter.snapshot();
-    log.finish(&recent, t_start.elapsed().as_secs_f64());
+            Ok(Some(out[3 * na + 3 * nc + 1].data()[0]))
+        },
+    )?;
+    log.train_exec_secs = exec_secs;
 
     for i in 0..na {
         actor_pub.tensors[i] = train_in[i].clone();

@@ -8,12 +8,10 @@
 //! Hyperparameter defaults follow paper Table 9, with step budgets
 //! scaled to the proxy environments (DESIGN.md §2).
 
-use std::sync::Arc;
-use std::time::Duration;
+use std::cell::RefCell;
 
-use crate::actorq::{
-    ActorPool, ActorQConfig, ActorQLog, Exploration, Pacer, ParamBroadcast, PoolConfig,
-};
+use crate::actorq::learner::HarnessConfig;
+use crate::actorq::{ActorQConfig, ActorQLog, Exploration, LearnerHarness, ReturnLog};
 use crate::algos::common::{load_programs, pad_obs, EpsSchedule, QuantSchedule, TrainedPolicy};
 use crate::envs::api::Action;
 use crate::envs::registry::make_env;
@@ -21,7 +19,7 @@ use crate::error::Result;
 use crate::replay::{PrioritizedReplay, Transition};
 use crate::rng::Pcg32;
 use crate::runtime::{ParamSet, Runtime};
-use crate::sustain::{Component, EnergyMeter};
+use crate::sustain::Component;
 use crate::tensor::Tensor;
 
 /// DQN configuration (paper Table 9 shape, scaled budgets).
@@ -247,14 +245,18 @@ pub fn train(rt: &Runtime, cfg: &DqnConfig) -> Result<(TrainedPolicy, TrainLog)>
 /// Train a DQN policy with the ActorQ actor-learner driver (paper §3).
 ///
 /// N actor threads collect experience on quantized policy copies (the
-/// pure-Rust deployment engines — no PJRT on the actor side; each
-/// vec-env sweep is one batched `forward_batch`, so weight panels
-/// stream once per sweep rather than once per env) while this
-/// thread drains the experience channel into prioritized replay, runs
-/// the train program, and quantizes-on-broadcast fresh parameters every
-/// `acfg.broadcast_every` updates. The train-step : env-step ratio and
-/// all schedules match [`train`] at equal step budget, so the two
-/// drivers converge to the same reward floor (pinned by
+/// pure-Rust deployment engines at any engine-supported
+/// [`crate::quant::Precision`] — int8, packed int4, fp32 baseline; no
+/// PJRT on the actor side; each vec-env sweep is one batched
+/// `forward_batch`, so weight panels stream once per sweep rather than
+/// once per env) while this thread drains the experience channel into
+/// prioritized replay, runs the train program, and
+/// quantizes-on-broadcast fresh parameters every `acfg.broadcast_every`
+/// updates. Pool setup, the drain + pacer loop, and the log assembly
+/// live in the shared [`LearnerHarness`]; this driver contributes the
+/// DQN train-program closure. The train-step : env-step ratio and all
+/// schedules match [`train`] at equal step budget, so the two drivers
+/// converge to the same reward floor (pinned by
 /// `rust/tests/actorq_smoke.rs`).
 pub fn train_actorq(
     rt: &Runtime,
@@ -300,64 +302,52 @@ pub fn train_actorq(
 
     // Each actor anneals epsilon over its share of the step budget, which
     // reproduces the global schedule without cross-thread coordination.
+    // The harness owns pool setup, the drain + pacer loop, and the log
+    // assembly; acfg.precision enters the stack exactly once, here.
     let horizon = (cfg.total_steps / acfg.n_actors.max(1)).max(1);
-    let meter = Arc::new(EnergyMeter::new());
-    let broadcast = Arc::new(ParamBroadcast::new(&params, acfg.precision)?);
-    let pool = ActorPool::spawn(
-        &PoolConfig {
-            env_id: cfg.env_id.clone(),
-            n_actors: acfg.n_actors,
-            envs_per_actor: acfg.envs_per_actor,
-            flush_every: acfg.flush_every,
-            channel_capacity: acfg.channel_capacity,
-            exploration: Exploration::EpsGreedy { schedule: cfg.eps, horizon },
+    let harness = LearnerHarness::spawn(
+        &params,
+        &HarnessConfig {
+            env_id: &cfg.env_id,
             seed: cfg.seed,
-            meter: Some(meter.clone()),
+            total_steps: cfg.total_steps,
+            warmup: cfg.warmup,
+            train_freq: cfg.train_freq,
+            log_every: cfg.log_every,
+            exploration: Exploration::EpsGreedy { schedule: cfg.eps, horizon },
+            returns: ReturnLog::TailMean,
+            acfg,
         },
-        broadcast.clone(),
     )?;
+    let meter = harness.meter.clone();
+    let broadcast = harness.broadcast.clone();
 
-    let mut per = PrioritizedReplay::new(cfg.buffer_size, obs_dim, 1, cfg.per_alpha);
-    let mut log = ActorQLog::default();
-    let t_start = std::time::Instant::now();
-    let mut recent: Vec<f32> = Vec::new();
+    // Both the push hook and the train closure touch the replay buffer;
+    // the harness never runs them concurrently, so a RefCell suffices.
+    let per = RefCell::new(PrioritizedReplay::new(cfg.buffer_size, obs_dim, 1, cfg.per_alpha));
     let mut adam_t = 0.0f32;
-    let mut pacer = Pacer::new(cfg.warmup, cfg.train_freq);
+    let mut trains = 0usize;
+    let mut exec_secs = 0.0f64;
     let target_every = (cfg.target_update / cfg.train_freq.max(1)).max(1);
-    let mut next_log = 0usize;
 
     let quant_bits = cfg.quant.bits as f32;
     let quant_delay = cfg.quant.delay as f32;
 
-    while log.env_steps < cfg.total_steps {
-        // --- drain experience (one blocking recv, then whatever else is
-        // already queued, so a deep backlog never stalls the train loop) ---
-        let Some(first) = pool.recv_timeout(Duration::from_millis(100))? else {
-            continue;
-        };
-        let mut batches = vec![first];
-        batches.extend(pool.try_drain(acfg.n_actors));
-        for xp in &batches {
-            for t in &xp.transitions {
-                per.push(Transition {
-                    obs: &t.obs,
-                    action: &t.action,
-                    reward: t.reward,
-                    next_obs: &t.next_obs,
-                    done: t.done,
-                });
+    let mut log = harness.run(
+        |t| {
+            per.borrow_mut().push(Transition {
+                obs: &t.obs,
+                action: &t.action,
+                reward: t.reward,
+                next_obs: &t.next_obs,
+                done: t.done,
+            });
+        },
+        |step, publish| {
+            let mut per = per.borrow_mut();
+            if per.len() < batch {
+                return Ok(None);
             }
-            log.env_steps += xp.transitions.len();
-            for &r in &xp.episode_returns {
-                log.episodes += 1;
-                recent.push(r);
-            }
-        }
-
-        // --- learn at the synchronous cadence ---
-        let budget = log.env_steps.min(cfg.total_steps);
-        while pacer.owed(budget) > 0 && per.len() >= batch {
-            let step = pacer.equivalent_step();
             let beta =
                 cfg.per_beta + (1.0 - cfg.per_beta) * (step as f32 / cfg.total_steps as f32);
             let b = per.sample(batch, beta, &mut replay_rng);
@@ -376,7 +366,7 @@ pub fn train_actorq(
                 let _busy = meter.scope(Component::Learner);
                 train_prog.run(&train_in)?
             };
-            log.train_exec_secs += t0.elapsed().as_secs_f64();
+            exec_secs += t0.elapsed().as_secs_f64();
             meter.add_steps(Component::Learner, 1);
             for i in 0..n_p {
                 train_in[i] = out[i].clone();
@@ -385,15 +375,14 @@ pub fn train_actorq(
             }
             train_in[i_qstate] = out[3 * n_p].clone();
             per.update_priorities(&b.indices, out[3 * n_p + 2].data());
-            pacer.record();
-            log.train_steps += 1;
+            trains += 1;
 
-            if log.train_steps % target_every == 0 {
+            if trains % target_every == 0 {
                 for i in 0..n_p {
                     train_in[n_p + i] = train_in[i].clone();
                 }
             }
-            if log.train_steps % acfg.broadcast_every.max(1) == 0 {
+            if publish {
                 for i in 0..n_p {
                     params.tensors[i] = train_in[i].clone();
                 }
@@ -402,25 +391,11 @@ pub fn train_actorq(
                     broadcast.publish(&params)?;
                 }
                 meter.add_steps(Component::Broadcast, 1);
-                log.broadcasts += 1;
             }
-            // Same gate as the sync driver (`step % log_every == 0`), so
-            // loss curves from the two paths align at equal step budget.
-            if cfg.log_every > 0 && step % cfg.log_every == 0 {
-                log.losses.push((step, out[3 * n_p + 1].data()[0]));
-            }
-        }
-
-        if cfg.log_every > 0 && log.env_steps >= next_log && !recent.is_empty() {
-            let tail = &recent[recent.len().saturating_sub(20)..];
-            log.returns.push((log.env_steps, tail.iter().sum::<f32>() / tail.len() as f32));
-            next_log = log.env_steps + cfg.log_every;
-        }
-    }
-
-    log.actor_stats = pool.shutdown()?;
-    log.energy = meter.snapshot();
-    log.finish(&recent, t_start.elapsed().as_secs_f64());
+            Ok(Some(out[3 * n_p + 1].data()[0]))
+        },
+    )?;
+    log.train_exec_secs = exec_secs;
 
     for i in 0..n_p {
         params.tensors[i] = train_in[i].clone();

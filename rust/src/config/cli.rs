@@ -114,19 +114,37 @@ impl Args {
         }
     }
 
-    /// Parse comma-separated bit list.
+    /// Parse a comma-separated bitwidth list: deduped, sorted ascending,
+    /// every value validated into 2..=16 (the quantizer's meaningful
+    /// sweep range; the native engines implement 2..=8 and consumers
+    /// state how they treat the rest). Malformed or out-of-range lists
+    /// are a hard [`Error::Config`] instead of flowing silently into
+    /// experiments.
     pub fn bits(&self, default: &[u32]) -> Result<Vec<u32>> {
-        match self.get("bits") {
-            None => Ok(default.to_vec()),
+        let mut vals: Vec<u32> = match self.get("bits") {
+            None => default.to_vec(),
             Some(v) => v
                 .split(',')
                 .map(|x| {
-                    x.trim()
-                        .parse()
-                        .map_err(|_| Error::Config(format!("bad bits list '{v}'")))
+                    x.trim().parse().map_err(|_| {
+                        Error::Config(format!(
+                            "--bits expects comma-separated integers, got '{v}'"
+                        ))
+                    })
                 })
-                .collect(),
+                .collect::<Result<Vec<u32>>>()?,
+        };
+        for &b in &vals {
+            if !(2..=16).contains(&b) {
+                return Err(Error::Config(format!(
+                    "--bits values must be in 2..=16, got {b} (fp32 baselines are always \
+                     reported; they are not part of the sweep list)"
+                )));
+            }
         }
+        vals.sort_unstable();
+        vals.dedup();
+        Ok(vals)
     }
 }
 
@@ -161,6 +179,26 @@ mod tests {
         assert_eq!(a.bits(&[6]).unwrap(), vec![2, 4, 8]);
         let d = Args::parse(&argv("exp x")).unwrap();
         assert_eq!(d.bits(&[6]).unwrap(), vec![6]);
+    }
+
+    #[test]
+    fn bits_list_deduped_sorted_validated() {
+        // dedupe + ascending sort
+        let a = Args::parse(&argv("exp x --bits 8,2,8,4,2")).unwrap();
+        assert_eq!(a.bits(&[6]).unwrap(), vec![2, 4, 8]);
+        // whitespace tolerated around entries
+        let sp = Args::parse(&["exp".into(), "x".into(), "--bits".into(), " 4, 8 ".into()])
+            .unwrap();
+        assert_eq!(sp.bits(&[6]).unwrap(), vec![4, 8]);
+        // out-of-range and malformed lists are Error::Config, not silent
+        for bad in ["1", "0", "17", "32", "2,40", "abc", "4,,8", ""] {
+            let a = Args::parse(&["exp".into(), "x".into(), "--bits".into(), bad.into()])
+                .unwrap();
+            let err = a.bits(&[6]);
+            assert!(err.is_err(), "--bits {bad} must be rejected");
+            let msg = format!("{}", err.unwrap_err());
+            assert!(msg.contains("--bits"), "message names the flag: {msg}");
+        }
     }
 
     #[test]

@@ -6,9 +6,7 @@
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use crate::actorq::{
-    ActorPool, ActorPrecision, ActorQConfig, Exploration, ParamBroadcast, PoolConfig,
-};
+use crate::actorq::{ActorPool, ActorQConfig, Exploration, ParamBroadcast, PoolConfig, Precision};
 use crate::algos::common::EpsSchedule;
 use crate::algos::dqn;
 use crate::coordinator::experiment::{ExpCtx, Experiment};
@@ -58,7 +56,7 @@ fn cartpole_params(seed: u64) -> ParamSet {
 /// Drain a pool for `window` and report env steps per wall second.
 pub fn collection_rate(
     n_actors: usize,
-    precision: ActorPrecision,
+    precision: Precision,
     seed: u64,
     window: Duration,
 ) -> Result<f64> {
@@ -112,8 +110,8 @@ impl Experiment for ActorQExp {
                 .parse()
                 .map_err(|_| Error::Experiment(format!("bad actorq item '{item}'")))?;
             let window = Duration::from_millis(1_500);
-            let int8 = collection_rate(actors, ActorPrecision::Int8, ctx.seed + 1, window)?;
-            let fp32 = collection_rate(actors, ActorPrecision::Fp32, ctx.seed + 1, window)?;
+            let int8 = collection_rate(actors, Precision::Int(8), ctx.seed + 1, window)?;
+            let fp32 = collection_rate(actors, Precision::Fp32, ctx.seed + 1, window)?;
             return Ok(vec![row(&[
                 ("kind", s("collect")),
                 ("actors", n(actors as f64)),
@@ -122,8 +120,8 @@ impl Experiment for ActorQExp {
             ])]);
         }
         let precision = match item {
-            "train_fp32" => ActorPrecision::Fp32,
-            "train_int8" => ActorPrecision::Int8,
+            "train_fp32" => Precision::Fp32,
+            "train_int8" => Precision::Int(8),
             other => return Err(Error::Experiment(format!("bad actorq item '{other}'"))),
         };
         let mut cfg = dqn::DqnConfig::new("cartpole");

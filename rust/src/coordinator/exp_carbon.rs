@@ -20,12 +20,15 @@
 //!
 //! Besides the usual JSONL rows + text table, `render` writes the full
 //! [`CarbonComparison`] set to `BENCH_carbon.json` so the carbon
-//! trajectory is tracked across PRs.
+//! trajectory is tracked across PRs. `--bits` adds one metered
+//! collection run per engine-supported sub-8-bit width (packed int4 and
+//! friends), each billed against the same fp32 baseline and emitted as
+//! its own row + comparison.
 
 use std::sync::Arc;
 use std::time::Duration;
 
-use crate::actorq::{ActorPool, ActorPrecision, Exploration, ParamBroadcast, PoolConfig};
+use crate::actorq::{ActorPool, Exploration, ParamBroadcast, PoolConfig, Precision};
 use crate::coordinator::experiment::{ExpCtx, Experiment};
 use crate::coordinator::metrics::{n, render_table, row, s, write_json_file, Row};
 use crate::envs::registry::make_env;
@@ -55,7 +58,7 @@ const BASE_STEPS: f64 = 30_000.0;
 
 /// One metered collection run at a fixed precision.
 struct EnergySample {
-    precision: ActorPrecision,
+    precision: Precision,
     /// Busy actor thread-seconds (metered, excludes channel waits).
     busy_secs: f64,
     /// Env steps the actors performed (metered).
@@ -73,7 +76,7 @@ struct EnergySample {
 fn run_cell(
     ctx: &ExpCtx,
     env_id: &str,
-    precision: ActorPrecision,
+    precision: Precision,
     steps_budget: usize,
     seed: u64,
 ) -> Result<EnergySample> {
@@ -167,8 +170,8 @@ impl Experiment for Carbon {
         let region = ctx.sustain.region().to_string();
         let g = ctx.sustain.intensity()?.g_per_kwh(&region)?;
 
-        let fp32 = run_cell(ctx, env, ActorPrecision::Fp32, steps_budget, ctx.seed + 3)?;
-        let int8 = run_cell(ctx, env, ActorPrecision::Int8, steps_budget, ctx.seed + 3)?;
+        let fp32 = run_cell(ctx, env, Precision::Fp32, steps_budget, ctx.seed + 3)?;
+        let int8 = run_cell(ctx, env, Precision::Int(8), steps_budget, ctx.seed + 3)?;
 
         let cell = format!("{algo}/{env}");
         let cmp = CarbonComparison {
@@ -181,7 +184,7 @@ impl Experiment for Carbon {
         } else {
             f64::INFINITY
         };
-        Ok(vec![row(&[
+        let mut rows = vec![row(&[
             ("env", s(env)),
             ("algo", s(algo)),
             ("region", s(region.as_str())),
@@ -198,7 +201,38 @@ impl Experiment for Carbon {
             ("kg_ratio", n(cmp.improvement())),
             ("device_kg_ratio", n(device_ratio)),
             ("comparison", cmp.to_json()),
-        ])])
+        ])];
+
+        // Per-bitwidth sweep (opt-in via an explicit `--bits`): one
+        // metered collection run per engine-supported sub-8-bit width,
+        // billed against the same fp32 baseline. int8 is the headline
+        // row above; unsupported widths are skipped (the CLI validates
+        // 2..=16, the engines run 2..=8).
+        for &b in
+            ctx.sweep_bits().iter().filter(|&&b| b != 8 && Precision::Int(b).engine_supported())
+        {
+            let smp = run_cell(ctx, env, Precision::Int(b), steps_budget, ctx.seed + 3)?;
+            let cmpb = CarbonComparison {
+                label: format!("{cell}/int{b}"),
+                baseline: report(&cell, &fp32, &region, g),
+                quantized: report(&cell, &smp, &region, g),
+            };
+            rows.push(row(&[
+                ("env", s(env)),
+                ("algo", s(algo)),
+                ("kind", s("bits")),
+                ("bits", n(b as f64)),
+                ("region", s(region.as_str())),
+                ("steps", n(steps_budget as f64)),
+                ("busy_secs", n(smp.busy_secs)),
+                ("watts", n(smp.watts_effective)),
+                ("j_per_step", n(smp.joules_per_step)),
+                ("kg", n(cmpb.quantized.total_kg_co2eq)),
+                ("kg_ratio_vs_fp32", n(cmpb.improvement())),
+                ("comparison", cmpb.to_json()),
+            ]));
+        }
+        Ok(rows)
     }
 
     fn render(&self, _ctx: &ExpCtx, rows: &[Row]) -> String {
@@ -217,11 +251,25 @@ impl Experiment for Carbon {
             "Carbon accounting — fp32 vs int8 actors (billed per row; region(s): {})\n\n",
             if billed.is_empty() { "-".to_string() } else { billed.clone() },
         );
+        let headline: Vec<Row> =
+            rows.iter().filter(|r| r.get("bits").is_none()).cloned().collect();
+        let sweep: Vec<Row> = rows.iter().filter(|r| r.get("bits").is_some()).cloned().collect();
         out.push_str(&render_table(
             &["env", "algo", "region", "g_co2_per_kwh", "steps", "fp32_secs", "int8_secs",
               "fp32_kg", "int8_kg", "kg_ratio", "device_kg_ratio"],
-            rows,
+            &headline,
         ));
+        if !sweep.is_empty() {
+            out.push_str(
+                "\nPer-bitwidth actor sweep (--bits; packed sub-byte engines, billed\n\
+                 against the same fp32 baseline):\n",
+            );
+            out.push_str(&render_table(
+                &["env", "algo", "bits", "steps", "busy_secs", "watts", "j_per_step", "kg",
+                  "kg_ratio_vs_fp32"],
+                &sweep,
+            ));
+        }
         out.push_str(
             "\nkg columns bill the FLOP/byte energy model (deterministic; Horowitz\n\
              per-op costs) as effective watts over the metered busy seconds;\n\
@@ -233,8 +281,14 @@ impl Experiment for Carbon {
         );
 
         // Machine-readable trajectory: full comparisons, tracked per PR.
+        // The headline mean/max aggregate ONLY the fp32-vs-int8 cells —
+        // per-bitwidth sweep comparisons land in their own array, so an
+        // opt-in sweep cannot silently shift the cross-PR trajectory
+        // (lower widths bill less energy and would inflate the mean).
         let comparisons: Vec<Json> =
-            rows.iter().filter_map(|r| r.get("comparison").cloned()).collect();
+            headline.iter().filter_map(|r| r.get("comparison").cloned()).collect();
+        let sweep_comparisons: Vec<Json> =
+            sweep.iter().filter_map(|r| r.get("comparison").cloned()).collect();
         let ratios: Vec<f64> = comparisons
             .iter()
             .filter_map(|c| c.opt("kg_co2eq_ratio").and_then(|v| v.as_f64().ok()))
@@ -249,6 +303,7 @@ impl Experiment for Carbon {
         doc.insert("bench".to_string(), Json::Str("carbon".into()));
         doc.insert("regions_billed".to_string(), Json::Str(billed));
         doc.insert("cells".to_string(), Json::Arr(comparisons));
+        doc.insert("bitwidth_cells".to_string(), Json::Arr(sweep_comparisons));
         doc.insert("mean_kg_co2eq_ratio".to_string(), Json::Num(mean));
         doc.insert("max_kg_co2eq_ratio".to_string(), Json::Num(max));
         match write_json_file("BENCH_carbon.json", &Json::Obj(doc)) {
@@ -284,8 +339,8 @@ mod tests {
         for (_, env) in CELLS {
             let e = make_env(env).unwrap();
             let dims = [e.obs_dim(), HIDDEN, HIDDEN, e.action_space().dim()];
-            let f = mlp_forward_joules(&dims, ActorPrecision::Fp32);
-            let q = mlp_forward_joules(&dims, ActorPrecision::Int8);
+            let f = mlp_forward_joules(&dims, Precision::Fp32);
+            let q = mlp_forward_joules(&dims, Precision::Int(8));
             assert!(f / q > 1.0, "{env}: fp32 {f} vs int8 {q}");
         }
     }

@@ -1,7 +1,8 @@
 //! `exp fig6` — the embedded-deployment case study (paper §5, Fig 6):
 //! NavLite policies I/II/III evaluated fp32 vs int8 on the native
 //! inference engines, reporting latency, success rate, memory, and the
-//! RasPi-class swap-cliff model.
+//! RasPi-class swap-cliff model; `--bits` adds per-bitwidth rows on the
+//! real packed engines (int2..=int8) under the same protocol.
 
 use std::time::Instant;
 
@@ -12,7 +13,8 @@ use crate::coordinator::metrics::{n, render_table, row, s, Row};
 use crate::envs::api::{Action, ActionSpace, Env};
 use crate::envs::nav_lite::NavLite;
 use crate::error::Result;
-use crate::inference::{EngineF32, EngineInt8, MemModel};
+use crate::inference::{EngineF32, EngineInt8, EngineQuant, MemModel};
+use crate::quant::Precision;
 use crate::rng::Pcg32;
 
 pub struct Fig6;
@@ -135,7 +137,7 @@ impl Experiment for Fig6 {
     }
 
     fn description(&self) -> &'static str {
-        "Fig 6: deployment — fp32 vs int8 latency, success rate, memory (NavLite policies I/II/III)"
+        "Fig 6: deployment — fp32 vs int8 (+ --bits sweep) latency, success rate, memory (NavLite policies I/II/III)"
     }
 
     fn items(&self, _ctx: &ExpCtx) -> Vec<String> {
@@ -210,7 +212,42 @@ impl Experiment for Fig6 {
         let lat_f32_dev = lat_f32 + mem.swap_penalty_secs(f32_bytes);
         let lat_i8_dev = lat_i8 + mem.swap_penalty_secs(i8_bytes);
 
-        Ok(vec![row(&[
+        // Per-bitwidth sweep (opt-in via an explicit `--bits`): real
+        // packed engines at every engine-supported width, measured under
+        // the same protocol as the fp32/int8 headline columns (success
+        // episodes, batched latency at LAT_BATCH, swap-cliff memory
+        // model). bits = 8 is skipped — it is the headline int8 cell,
+        // already measured above.
+        let mut rows = Vec::new();
+        for &b in
+            ctx.sweep_bits().iter().filter(|&&b| b != 8 && Precision::Int(b).engine_supported())
+        {
+            let mut qe = EngineQuant::from_params(&policy.params, b)?;
+            let (sr, lat) = success_rate(
+                &mut |x, o| qe.forward(x, o).expect("quant forward"),
+                ctx.episodes,
+                ctx.seed + 5,
+            );
+            let blat = batched_row_latency(
+                &mut |x, bt, o| qe.forward_batch(x, bt, o).expect("quant batch"),
+                &xs,
+                LAT_BATCH,
+                out_dim,
+            );
+            let bytes = qe.memory_bytes();
+            rows.push(row(&[
+                ("policy", s(item)),
+                ("kind", s("bits")),
+                ("bits", n(b as f64)),
+                ("success", n(sr as f64 * 100.0)),
+                ("batch_us", n(blat * 1e6)),
+                ("batch_speedup_vs_fp32", n(blat_f32 / blat.max(1e-12))),
+                ("dev_ms", n((lat + mem.swap_penalty_secs(bytes)) * 1e3)),
+                ("mem_mb", n(bytes as f64 / (1 << 20) as f64)),
+            ]));
+        }
+
+        rows.insert(0, row(&[
             ("policy", s(item)),
             ("params", s(format!("{:?}", ctx.runtime()?.manifest.nav_policies.get(item).cloned().unwrap_or_default()))),
             ("fp32_ms", n(lat_f32 * 1e3)),
@@ -227,17 +264,21 @@ impl Experiment for Fig6 {
             ("int8_success", n(sr_i8 as f64 * 100.0)),
             ("fp32_mem_mb", n(f32_bytes as f64 / (1 << 20) as f64)),
             ("int8_mem_mb", n(i8_bytes as f64 / (1 << 20) as f64)),
-        ])])
+        ]));
+        Ok(rows)
     }
 
     fn render(&self, _ctx: &ExpCtx, rows: &[Row]) -> String {
+        let headline: Vec<Row> =
+            rows.iter().filter(|r| r.get("bits").is_none()).cloned().collect();
+        let sweep: Vec<Row> = rows.iter().filter(|r| r.get("bits").is_some()).cloned().collect();
         let mut out = String::from(
             "Figure 6 — deployment case study (NavLite DQN policies on the native engines)\n\n",
         );
         out.push_str(&render_table(
             &["policy", "params", "fp32_ms", "int8_ms", "speedup",
               "fp32_success", "int8_success", "fp32_mem_mb", "int8_mem_mb"],
-            rows,
+            &headline,
         ));
         out.push_str(
             "\nWith the constrained-device memory model (8 MiB free for weights —\n\
@@ -245,7 +286,7 @@ impl Experiment for Fig6 {
         );
         out.push_str(&render_table(
             &["policy", "fp32_dev_ms", "int8_dev_ms", "dev_speedup"],
-            rows,
+            &headline,
         ));
         out.push_str(
             "\nBatched vec-env sweep (per-row us through forward_batch at batch 64;\n\
@@ -254,8 +295,19 @@ impl Experiment for Fig6 {
         );
         out.push_str(&render_table(
             &["policy", "fp32_batch_us", "int8_batch_us", "batch_speedup", "int8_batch_gain"],
-            rows,
+            &headline,
         ));
+        if !sweep.is_empty() {
+            out.push_str(
+                "\nBitwidth sweep (--bits; real packed engines, same measurement\n\
+                 protocol — sub-byte rows run two codes per weight byte):\n",
+            );
+            out.push_str(&render_table(
+                &["policy", "bits", "success", "batch_us", "batch_speedup_vs_fp32",
+                  "dev_ms", "mem_mb"],
+                &sweep,
+            ));
+        }
         out.push_str(
             "\nPaper shape checks: int8 memory ~ 1/4 of fp32; small policy gets a\n\
              modest speedup (paper 1.18x), large policies cross the RAM budget at\n\

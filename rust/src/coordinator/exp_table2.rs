@@ -1,7 +1,8 @@
 //! `exp table2` — paper Table 2 (+ appendix Tables 5-8): post-training
 //! quantization rewards for fp32/fp16/int8 across the full
 //! (algorithm x environment) matrix, with relative errors and per-
-//! algorithm means.
+//! algorithm means; `--bits` adds per-bitwidth rows (PTQ reward + real
+//! packed-engine latency for the dqn/ddpg heads).
 
 use crate::algos::TrainedPolicy;
 use crate::coordinator::cache::get_or_train;
@@ -11,8 +12,8 @@ use crate::coordinator::experiment::{mean, ExpCtx, Experiment};
 use crate::coordinator::metrics::{n, render_table, row, s, Row};
 use crate::envs::registry::make_env;
 use crate::error::Result;
-use crate::inference::{EngineF32, EngineInt8};
-use crate::quant::{relative_error_pct, PtqMethod};
+use crate::inference::{EngineF32, EngineInt8, EngineQuant};
+use crate::quant::{relative_error_pct, Precision, PtqMethod};
 
 /// Paper Table-2 cells: (algo, envs).
 pub fn matrix() -> Vec<(&'static str, Vec<&'static str>)> {
@@ -34,20 +35,26 @@ pub fn matrix() -> Vec<(&'static str, Vec<&'static str>)> {
     ]
 }
 
-/// Per-row native-engine inference latency (fp32_us, int8_us) through
-/// the batched API — exp_deploy's shared measurement protocol
-/// ([`batched_row_latency`] at [`LAT_BATCH`] rows) — for cells whose
-/// `TrainedPolicy` parameters are a pure MLP head streamable by the
-/// deployment engines (the dqn q-net and the ddpg actor; a2c/ppo
-/// checkpoints interleave the value head, which the engines do not
-/// model — those cells report NaN -> JSON null).
-fn engine_row_latency_us(policy: &TrainedPolicy, seed: u64) -> Result<(f64, f64)> {
+/// Per-row native-engine inference latency through the batched API —
+/// exp_deploy's shared measurement protocol ([`batched_row_latency`] at
+/// [`LAT_BATCH`] rows) — for cells whose `TrainedPolicy` parameters are
+/// a pure MLP head streamable by the deployment engines (the dqn q-net
+/// and the ddpg actor; a2c/ppo checkpoints interleave the value head,
+/// which the engines do not model — those cells report NaN -> JSON
+/// null). Returns `(fp32_us, int8_us, per-bits us)` over the same
+/// observation batch; `bits` entries without an engine (outside 2..=8)
+/// come back NaN.
+fn engine_row_latency_us(
+    policy: &TrainedPolicy,
+    seed: u64,
+    bits: &[u32],
+) -> Result<(f64, f64, Vec<f64>)> {
     let mut env = make_env(&policy.env_id)?;
     let xs = collect_obs(env.as_mut(), LAT_BATCH, seed);
 
     let mut f32e = EngineF32::from_params(&policy.params)?;
     let mut i8e = EngineInt8::from_params(&policy.params)?;
-    let out_dim = f32e.layers.last().map(|l| l.out_dim).unwrap_or(0);
+    let out_dim = f32e.out_dim();
     let f32_us = 1e6
         * batched_row_latency(
             &mut |x, b, o| f32e.forward_batch(x, b, o).expect("f32 batch"),
@@ -62,7 +69,23 @@ fn engine_row_latency_us(policy: &TrainedPolicy, seed: u64) -> Result<(f64, f64)
             LAT_BATCH,
             out_dim,
         );
-    Ok((f32_us, i8_us))
+    let mut per_bits = Vec::with_capacity(bits.len());
+    for &b in bits {
+        if !Precision::Int(b).engine_supported() {
+            per_bits.push(f64::NAN);
+            continue;
+        }
+        let mut qe = EngineQuant::from_params(&policy.params, b)?;
+        per_bits.push(
+            1e6 * batched_row_latency(
+                &mut |x, bt, o| qe.forward_batch(x, bt, o).expect("quant batch"),
+                &xs,
+                LAT_BATCH,
+                out_dim,
+            ),
+        );
+    }
+    Ok((f32_us, i8_us, per_bits))
 }
 
 pub struct Table2;
@@ -112,13 +135,17 @@ impl Experiment for Table2 {
             ctx.seed + 1,
         )?;
         // Native-engine latency through the batched API for the pure-MLP
-        // heads; NaN (JSON null) where the engines don't apply.
-        let (f32_us, i8_us) = if algo == "dqn" || algo == "ddpg" {
-            engine_row_latency_us(&policy, ctx.seed + 9)?
+        // heads; NaN (JSON null) where the engines don't apply. The
+        // per-bitwidth sweep is opt-in via an explicit `--bits`; bits=8
+        // is skipped like fig6/carbon do — it is the headline int8
+        // column, already evaluated and measured above.
+        let sweep: Vec<u32> = ctx.sweep_bits().iter().copied().filter(|&b| b != 8).collect();
+        let (f32_us, i8_us, bits_us) = if algo == "dqn" || algo == "ddpg" {
+            engine_row_latency_us(&policy, ctx.seed + 9, &sweep)?
         } else {
-            (f64::NAN, f64::NAN)
+            (f64::NAN, f64::NAN, vec![f64::NAN; sweep.len()])
         };
-        Ok(vec![row(&[
+        let mut rows = vec![row(&[
             ("algo", s(algo)),
             ("env", s(env)),
             ("fp32", n(fp32.mean_reward as f64)),
@@ -130,7 +157,37 @@ impl Experiment for Table2 {
             ("int8_us_row", n(i8_us)),
             ("infer_speedup", n(f32_us / i8_us.max(1e-12))),
             ("steps", n(steps as f64)),
-        ])])
+        ])];
+
+        // Per-bitwidth sweep (opt-in): PTQ reward at every requested
+        // width plus the real-engine per-row latency where a native
+        // engine exists (2..=8 bits; the CLI validates 2..=16).
+        for (&b, &us) in sweep.iter().zip(&bits_us) {
+            let r = evaluate(
+                ctx.runtime()?,
+                &policy,
+                ctx.episodes,
+                EvalMode::Ptq(PtqMethod::Int(b)),
+                ctx.seed + 1,
+            )?;
+            rows.push(row(&[
+                ("algo", s(algo)),
+                ("env", s(env)),
+                ("kind", s("bits")),
+                ("bits", n(b as f64)),
+                ("reward", n(r.mean_reward as f64)),
+                ("err_pct", n(relative_error_pct(fp32.mean_reward, r.mean_reward) as f64)),
+                ("us_row", n(us)),
+                // f64::max ignores NaN, so guard explicitly: a width
+                // with no native engine must report null, not a bogus
+                // ~1e12x speedup against the 1e-12 clamp.
+                (
+                    "infer_speedup_vs_fp32",
+                    n(if us.is_finite() { f32_us / us.max(1e-12) } else { f64::NAN }),
+                ),
+            ]));
+        }
+        Ok(rows)
     }
 
     fn render(&self, ctx: &ExpCtx, rows: &[Row]) -> String {
@@ -139,8 +196,11 @@ impl Experiment for Table2 {
             "Table 2 — post-training quantization rewards ({} eval episodes/cell)\n\n",
             ctx.episodes
         ));
+        let headline: Vec<Row> =
+            rows.iter().filter(|r| r.get("bits").is_none()).cloned().collect();
+        let sweep: Vec<Row> = rows.iter().filter(|r| r.get("bits").is_some()).cloned().collect();
         for (algo, _) in matrix() {
-            let sub: Vec<Row> = rows
+            let sub: Vec<Row> = headline
                 .iter()
                 .filter(|r| r.get("algo").and_then(|v| v.as_str().ok()) == Some(algo))
                 .cloned()
@@ -163,7 +223,7 @@ impl Experiment for Table2 {
                 "Mean E_fp16 = {mean_f16:.2}%   Mean E_int8 = {mean_i8:.2}%\n\n"
             ));
         }
-        let lat: Vec<Row> = rows
+        let lat: Vec<Row> = headline
             .iter()
             .filter(|r| {
                 matches!(
@@ -181,6 +241,19 @@ impl Experiment for Table2 {
             out.push_str(&render_table(
                 &["algo", "env", "fp32_us_row", "int8_us_row", "infer_speedup"],
                 &lat,
+            ));
+            out.push('\n');
+        }
+        if !sweep.is_empty() {
+            out.push_str(
+                "Bitwidth sweep (--bits): PTQ reward per width, plus real-engine\n\
+                 per-row latency where a native engine exists (2..=8 bits; sub-byte\n\
+                 rows run the packed int4 kernel):\n",
+            );
+            out.push_str(&render_table(
+                &["algo", "env", "bits", "reward", "err_pct", "us_row",
+                  "infer_speedup_vs_fp32"],
+                &sweep,
             ));
             out.push('\n');
         }

@@ -28,8 +28,13 @@ pub struct ExpCtx<'a> {
     pub episodes: usize,
     /// Base seed.
     pub seed: u64,
-    /// QAT sweep bitwidths (fig2).
+    /// QAT sweep bitwidths (fig2 always sweeps these; defaulted).
     pub bits: Vec<u32>,
+    /// Whether `--bits` was passed explicitly. The per-bitwidth engine
+    /// sweeps in fig6/table2/carbon are opt-in (they multiply run cost),
+    /// so they key off [`ExpCtx::sweep_bits`] rather than the defaulted
+    /// list fig2 uses.
+    pub bits_explicit: bool,
     /// Run only items whose id contains this substring.
     pub filter: Option<String>,
     /// Shard (k, n): run items where index % n == k, skip rendering.
@@ -63,6 +68,13 @@ impl<'a> ExpCtx<'a> {
 
     pub fn steps(&self, algo: &str, env_id: &str) -> usize {
         (crate::coordinator::cache::default_steps(algo, env_id) as f32 * self.scale) as usize
+    }
+
+    /// Bitwidths for the opt-in per-precision sweep rows (fig6 / table2 /
+    /// carbon): empty unless the user passed `--bits` — a default run
+    /// must not silently multiply its measurement cost.
+    pub fn sweep_bits(&self) -> &[u32] {
+        if self.bits_explicit { &self.bits } else { &[] }
     }
 }
 
@@ -187,7 +199,10 @@ fn spawn_shards(ctx: &ExpCtx, exp_name: &str) -> Result<()> {
         if let Some(f) = &ctx.filter {
             cmd.arg("--only").arg(f);
         }
-        if !ctx.bits.is_empty() {
+        // Forward --bits only when the parent got it explicitly: shard
+        // children fall back to the same defaults otherwise, and an
+        // implicit flag would wrongly switch their opt-in sweeps on.
+        if ctx.bits_explicit && !ctx.bits.is_empty() {
             let b: Vec<String> = ctx.bits.iter().map(|x| x.to_string()).collect();
             cmd.arg("--bits").arg(b.join(","));
         }

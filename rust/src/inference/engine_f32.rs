@@ -101,6 +101,16 @@ impl EngineF32 {
             .sum()
     }
 
+    /// First-layer input width.
+    pub fn in_dim(&self) -> usize {
+        self.layers.first().map(|l| l.in_dim).unwrap_or(0)
+    }
+
+    /// Output head width.
+    pub fn out_dim(&self) -> usize {
+        self.layers.last().map(|l| l.out_dim).unwrap_or(0)
+    }
+
     /// Single-observation forward pass into `out`.
     pub fn forward(&mut self, x: &[f32], out: &mut [f32]) {
         debug_assert_eq!(x.len(), self.layers[0].in_dim);
@@ -240,6 +250,33 @@ impl EngineF32 {
             }
         }
         Ok(())
+    }
+}
+
+impl crate::inference::Engine for EngineF32 {
+    fn precision(&self) -> crate::quant::Precision {
+        crate::quant::Precision::Fp32
+    }
+
+    fn forward(&mut self, x: &[f32], out: &mut [f32]) -> Result<()> {
+        EngineF32::forward(self, x, out);
+        Ok(())
+    }
+
+    fn forward_batch(&mut self, xs: &[f32], batch: usize, out: &mut [f32]) -> Result<()> {
+        EngineF32::forward_batch(self, xs, batch, out)
+    }
+
+    fn memory_bytes(&self) -> usize {
+        EngineF32::memory_bytes(self)
+    }
+
+    fn in_dim(&self) -> usize {
+        EngineF32::in_dim(self)
+    }
+
+    fn out_dim(&self) -> usize {
+        EngineF32::out_dim(self)
     }
 }
 

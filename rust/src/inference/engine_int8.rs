@@ -1,397 +1,116 @@
-//! int8 MLP inference engine — the quantized deployment path of the
-//! paper's Fig-6 case study (TFLite int8 on the RasPi-3b).
+//! The named deployment-width engines: [`EngineInt8`] (the paper's
+//! Fig-6 headline) and [`EngineInt4`] (the packed sub-byte study) as
+//! thin instantiations of the bitwidth-generic
+//! [`crate::inference::EngineQuant`].
 //!
-//! Weights are quantized offline to i8 codes with per-tensor affine
-//! parameters; activations are quantized on the fly per layer (the paper
-//! quantizes both weights and activations for deployment, noting the
-//! extra accuracy cost). All arithmetic accumulates in i32 on the integer
-//! grid — what an int8 NPU/NEON kernel performs — and applies the
-//! combined scale on the way out.
-//!
-//! Two entry points share the same integer semantics:
-//!
-//! * [`EngineInt8::forward`] — single-observation GEMV (the `n == 1`
-//!   actor path). Activation codes are centered (`qa - za`) so exact
-//!   post-relu zeros can be skipped.
-//! * [`EngineInt8::forward_batch`] — batch-major integer GEMM. The whole
-//!   activation batch is quantized once per layer, and the activation
-//!   zero-point correction is hoisted out of the inner product via the
-//!   identity `Σ(qa−za)·qw = Σ qa·qw − za·Σ qw`, with the per-column
-//!   weight-code sums (`Σ qw`) precomputed at build time. The kernel is
-//!   cache-blocked over output columns and unrolled 4-wide over input
-//!   rows, so each weight panel is streamed from memory once per batch
-//!   instead of once per observation — the memory-bandwidth argument
-//!   behind the paper's RasPi speedups, applied along the batch axis.
-//!
-//! Both paths produce bit-identical outputs per row: the integer sums are
-//! exact (no rounding), and the float epilogue applies the same
-//! `scale * acc + bias` expression.
-//!
-//! The speedup mechanism mirrors the paper's: 4x smaller weight traffic
-//! (the RasPi's bottleneck once a policy spills out of cache/RAM), and
-//! for vec-env sweeps the batched kernel amortizes that traffic over all
-//! rows of the sweep.
+//! Neither type adds behavior — they pin a bitwidth at the type level so
+//! long-lived consumers (the Fig-6 experiment, the parity suites, the
+//! ActorQ docs) keep naming the precision they mean, and so the int8
+//! engine's PR-3 contract stays pinned by its own tests even as the
+//! generic kernel grows new widths: at bits = 8 the generic engine
+//! stores one i8 code per byte and runs the identical GEMV/GEMM loops,
+//! so `EngineInt8` outputs are bit-for-bit what they were when the type
+//! was a standalone implementation (`rust/tests/engine_parity.rs` pins
+//! this).
 
-use crate::error::{Error, Result};
-use crate::quant::affine::QParams;
+use crate::error::Result;
+use crate::inference::engine_quant::{EngineQuant, LayerQ};
+use crate::quant::Precision;
 use crate::runtime::ParamSet;
 
-/// Output-column tile width for the cache-blocked kernels: a 128-column
-/// i32 accumulator row is 512 B, so a 4-row weight panel (4 x 128 i8)
-/// plus the accumulator tiles of a moderate batch stay L1-resident.
-const COL_BLOCK: usize = 128;
+macro_rules! thin_engine {
+    ($(#[$doc:meta])* $name:ident, $bits:literal) => {
+        $(#[$doc])*
+        #[derive(Debug, Clone)]
+        pub struct $name {
+            inner: EngineQuant,
+        }
 
-/// One quantized dense layer.
-#[derive(Debug, Clone)]
-pub struct LayerI8 {
-    /// i8 codes (offset by the weight zero point), stored input-major
-    /// (in_dim, out_dim): the GEMV/GEMM walk inputs outer / outputs inner
-    /// with unit stride.
-    pub wq: Vec<i8>,
-    /// Per-layer weight quantization params.
-    pub w_qp: QParams,
-    /// Per-output-column sums of the weight codes, `col_sums[c] =
-    /// Σ_i wq[i, c]`, precomputed at build time so the batched kernel's
-    /// activation-zero-point correction (`za · Σ qw`) costs one multiply
-    /// per output instead of living inside the inner product.
-    pub col_sums: Vec<i32>,
-    pub b: Vec<f32>,
-    pub in_dim: usize,
-    pub out_dim: usize,
-    pub relu: bool,
+        impl $name {
+            /// Quantize a trained fp32 parameter set at this type's
+            /// bitwidth.
+            pub fn from_params(params: &ParamSet) -> Result<$name> {
+                EngineQuant::from_params(params, $bits).map(|inner| $name { inner })
+            }
+
+            /// The quantized layers (codec-stored centered codes).
+            pub fn layers(&self) -> &[LayerQ] {
+                &self.inner.layers
+            }
+
+            /// Single-observation forward pass into `out`.
+            #[inline]
+            pub fn forward(&mut self, x: &[f32], out: &mut [f32]) -> Result<()> {
+                self.inner.forward(x, out)
+            }
+
+            /// Batch-major forward pass; bit-identical per row to
+            /// [`Self::forward`].
+            #[inline]
+            pub fn forward_batch(
+                &mut self,
+                xs: &[f32],
+                batch: usize,
+                out: &mut [f32],
+            ) -> Result<()> {
+                self.inner.forward_batch(xs, batch, out)
+            }
+
+            /// Total weight bytes (codes + f32 biases).
+            pub fn memory_bytes(&self) -> usize {
+                self.inner.memory_bytes()
+            }
+
+            /// The underlying bitwidth-generic engine.
+            pub fn as_quant(&self) -> &EngineQuant {
+                &self.inner
+            }
+        }
+
+        impl crate::inference::Engine for $name {
+            fn precision(&self) -> Precision {
+                Precision::Int($bits)
+            }
+
+            fn forward(&mut self, x: &[f32], out: &mut [f32]) -> Result<()> {
+                self.inner.forward(x, out)
+            }
+
+            fn forward_batch(&mut self, xs: &[f32], batch: usize, out: &mut [f32]) -> Result<()> {
+                self.inner.forward_batch(xs, batch, out)
+            }
+
+            fn memory_bytes(&self) -> usize {
+                self.inner.memory_bytes()
+            }
+
+            fn in_dim(&self) -> usize {
+                self.inner.in_dim()
+            }
+
+            fn out_dim(&self) -> usize {
+                self.inner.out_dim()
+            }
+        }
+    };
 }
 
-/// int8 engine over a stack of quantized layers.
-///
-/// Scratch buffers (activations, activation codes, i32 accumulators,
-/// per-row quantization metadata) are owned by the engine and reused
-/// across calls: [`EngineInt8::from_params`] sizes them for the
-/// single-observation path, and the first batched call grows them to the
-/// high-water `batch x max_dim` footprint, after which no call allocates.
-#[derive(Debug, Clone)]
-pub struct EngineInt8 {
-    pub layers: Vec<LayerI8>,
-    /// Widest layer interface; scratch rows are strided by layer width,
-    /// capacity is counted in multiples of this.
-    max_dim: usize,
-    /// Batch-major activations (row r of layer input at `r * in_dim`).
-    act_scratch: Vec<f32>,
-    /// Raw (uncentered) activation codes for the batched kernel.
-    qa_scratch: Vec<i32>,
-    /// i32 GEMM/GEMV accumulators.
-    acc_scratch: Vec<i32>,
-    /// Per-row combined dequantization scale (`a_delta * w_delta`).
-    row_scale: Vec<f32>,
-    /// Per-row activation zero point.
-    row_zp: Vec<i32>,
-}
+thin_engine!(
+    /// int8 weights+activations with i32 accumulation — the quantized
+    /// deployment path of the paper's Fig-6 case study (TFLite int8 on
+    /// the RasPi-3b): 4x smaller weight traffic than fp32.
+    EngineInt8,
+    8
+);
 
-/// Dynamic activation-quantization params for one row, from its observed
-/// range.
-///
-/// Returns `None` for a degenerate range — a constant all-zero row (the
-/// common case: every unit of a layer dead after relu) has `amin == amax
-/// == 0`, no dynamic range to quantize against, and every code sits at
-/// the zero point. Callers treat `None` as "all-zero-point codes": the
-/// row contributes nothing, the GEMV/GEMM is skipped outright, and the
-/// output is exactly the bias.
-///
-/// The old scalar path leaned on [`QParams::from_range`]'s internal
-/// `delta = 1.0` fallback and a fallible `?` to get the same result
-/// implicitly; this helper makes the degenerate case explicit and
-/// provably infallible — a dead layer is a property of the weights, not
-/// a caller bug, so no code path may turn it into an actor-killing
-/// `Err`, even if `from_range`'s contract changes.
-#[inline]
-fn act_qparams(amin: f32, amax: f32) -> Option<QParams> {
-    if amin == amax && amin == 0.0 {
-        return None;
-    }
-    // 8 is always a valid bitwidth, but route any future from_range
-    // failure into the same benign skip rather than an actor-killing Err.
-    QParams::from_range(amin, amax, 8).ok()
-}
-
-/// Min/max over one activation row (NaN entries are ignored by the
-/// `f32::min`/`f32::max` folds, matching the quantizer elsewhere).
-#[inline]
-fn row_range(a: &[f32]) -> (f32, f32) {
-    let amin = a.iter().copied().fold(f32::INFINITY, f32::min);
-    let amax = a.iter().copied().fold(f32::NEG_INFINITY, f32::max);
-    (amin, amax)
-}
-
-impl EngineInt8 {
-    /// Quantize a trained fp32 parameter set to an int8 engine.
-    pub fn from_params(params: &ParamSet) -> Result<EngineInt8> {
-        if params.tensors.len() % 2 != 0 {
-            return Err(Error::Quant("param set must alternate W/b".into()));
-        }
-        let n_layers = params.tensors.len() / 2;
-        let mut layers = Vec::with_capacity(n_layers);
-        let mut max_dim = 0;
-        for i in 0..n_layers {
-            let w = &params.tensors[2 * i];
-            let b = &params.tensors[2 * i + 1];
-            if w.rank() != 2 {
-                return Err(Error::Quant(format!("layer {i}: weight rank {}", w.rank())));
-            }
-            let (in_dim, out_dim) = (w.shape()[0], w.shape()[1]);
-            max_dim = max_dim.max(in_dim).max(out_dim);
-            let w_qp = QParams::from_range(w.min(), w.max(), 8)?;
-            // Quantize in place (input-major, matching the training
-            // layout); codes offset by the zero point so the inner
-            // product is over (q - z) directly. The centering + i8
-            // saturation rule is QParams::quantize_i8, shared with the
-            // ActorQ broadcast path.
-            let mut wq = vec![0i8; in_dim * out_dim];
-            for r in 0..in_dim {
-                for c in 0..out_dim {
-                    wq[r * out_dim + c] = w_qp.quantize_i8(w.data()[r * out_dim + c]);
-                }
-            }
-            let mut col_sums = vec![0i32; out_dim];
-            for r in 0..in_dim {
-                for c in 0..out_dim {
-                    col_sums[c] += wq[r * out_dim + c] as i32;
-                }
-            }
-            layers.push(LayerI8 {
-                wq,
-                w_qp,
-                col_sums,
-                b: b.data().to_vec(),
-                in_dim,
-                out_dim,
-                relu: i + 1 < n_layers,
-            });
-        }
-        Ok(EngineInt8 {
-            layers,
-            max_dim,
-            act_scratch: vec![0.0; max_dim],
-            qa_scratch: vec![0i32; max_dim],
-            acc_scratch: vec![0i32; max_dim],
-            row_scale: vec![0.0; 1],
-            row_zp: vec![0i32; 1],
-        })
-    }
-
-    /// Total weight bytes (i8 codes + f32 biases): the Fig-6 memory
-    /// column. Engine-side metadata (the precomputed column sums) is not
-    /// counted — it models the weight traffic a deployed policy streams,
-    /// not the resident working set.
-    pub fn memory_bytes(&self) -> usize {
-        self.layers
-            .iter()
-            .map(|l| l.wq.len() + l.b.len() * std::mem::size_of::<f32>())
-            .sum()
-    }
-
-    /// Grow the scratch arena to hold `batch` rows; a no-op once the
-    /// high-water batch has been seen (steady-state calls never allocate).
-    fn ensure_batch(&mut self, batch: usize) {
-        let need = batch * self.max_dim;
-        if self.act_scratch.len() < need {
-            self.act_scratch.resize(need, 0.0);
-            self.qa_scratch.resize(need, 0);
-            self.acc_scratch.resize(need, 0);
-        }
-        if self.row_scale.len() < batch {
-            self.row_scale.resize(batch, 0.0);
-            self.row_zp.resize(batch, 0);
-        }
-    }
-
-    /// Single-observation forward pass into `out`.
-    ///
-    /// Per layer: quantize activations to 8 bits (dynamic range), integer
-    /// GEMV with i32 accumulation (centered codes, so exact post-relu
-    /// zeros are skipped), dequantize with the combined scale. A
-    /// degenerate activation range (all-zero row) skips the GEMV and
-    /// yields the bias exactly — never an error.
-    pub fn forward(&mut self, x: &[f32], out: &mut [f32]) -> Result<()> {
-        debug_assert_eq!(x.len(), self.layers[0].in_dim);
-        self.act_scratch[..x.len()].copy_from_slice(x);
-        for (li, layer) in self.layers.iter().enumerate() {
-            let n = layer.in_dim;
-            let last = li + 1 == self.layers.len();
-            let m = layer.out_dim;
-            let acc = &mut self.acc_scratch[..m];
-            acc.fill(0);
-            // Dynamic activation quantization (per-tensor, per row).
-            let a = &self.act_scratch[..n];
-            let (amin, amax) = row_range(a);
-            let scale = match act_qparams(amin, amax) {
-                Some(a_qp) => {
-                    // Centered activation codes (qa - za) fit i16; inputs
-                    // whose code is exactly the zero point contribute
-                    // nothing and are skipped (post-relu zeros are a
-                    // large fraction).
-                    let za = a_qp.zero_point;
-                    for (i, &v) in a.iter().enumerate() {
-                        let qa = (a_qp.quantize(v) - za) as i32;
-                        if qa == 0 {
-                            continue;
-                        }
-                        let row = &layer.wq[i * m..(i + 1) * m];
-                        for (d, &qw) in acc.iter_mut().zip(row) {
-                            *d += qa * qw as i32;
-                        }
-                    }
-                    a_qp.delta * layer.w_qp.delta
-                }
-                // Degenerate range: all codes at the zero point, zero
-                // contribution — the output is exactly the bias.
-                None => 0.0,
-            };
-            for c in 0..m {
-                let mut y = scale * acc[c] as f32 + layer.b[c];
-                if layer.relu && y < 0.0 {
-                    y = 0.0;
-                }
-                if last {
-                    out[c] = y;
-                } else {
-                    self.act_scratch[c] = y;
-                }
-            }
-        }
-        Ok(())
-    }
-
-    /// Batch-major forward pass: `xs` holds `batch` rows of
-    /// `in_dim` features (row-major), `out` receives `batch` rows of the
-    /// output head. Bit-identical per row to [`EngineInt8::forward`].
-    ///
-    /// Per layer the whole batch is quantized once (each row keeps its
-    /// own dynamic range, matching the scalar path exactly), then a
-    /// cache-blocked integer GEMM runs over raw codes with the zero-point
-    /// correction hoisted to the epilogue:
-    ///
-    /// ```text
-    /// acc[r, c]   = Σ_i qa[r, i] · qw[i, c]          (i32, exact)
-    /// y[r, c]     = scale_r · (acc[r, c] − za_r · col_sums[c]) + b[c]
-    /// ```
-    ///
-    /// The weight panel loaded for a column block and 4-row input panel
-    /// is consumed by every batch row before moving on, so weight bytes
-    /// stream from memory once per sweep instead of once per observation.
-    pub fn forward_batch(&mut self, xs: &[f32], batch: usize, out: &mut [f32]) -> Result<()> {
-        let n_layers = self.layers.len();
-        let in_dim = self.layers.first().map(|l| l.in_dim).unwrap_or(0);
-        let out_dim = self.layers.last().map(|l| l.out_dim).unwrap_or(0);
-        if batch == 0 || xs.len() != batch * in_dim {
-            return Err(Error::Shape(format!(
-                "forward_batch: {} inputs for batch {batch} x in_dim {in_dim}",
-                xs.len()
-            )));
-        }
-        if out.len() < batch * out_dim {
-            return Err(Error::Shape(format!(
-                "forward_batch: out holds {} < batch {batch} x out_dim {out_dim}",
-                out.len()
-            )));
-        }
-        self.ensure_batch(batch);
-        self.act_scratch[..xs.len()].copy_from_slice(xs);
-
-        for li in 0..n_layers {
-            let layer = &self.layers[li];
-            let n = layer.in_dim;
-            let m = layer.out_dim;
-            let last = li + 1 == n_layers;
-
-            // --- 1. quantize the whole activation batch (once per layer;
-            //        per-row dynamic ranges, same rule as the scalar path) ---
-            for r in 0..batch {
-                let a = &self.act_scratch[r * n..(r + 1) * n];
-                let (amin, amax) = row_range(a);
-                match act_qparams(amin, amax) {
-                    Some(a_qp) => {
-                        self.row_zp[r] = a_qp.zero_point as i32;
-                        self.row_scale[r] = a_qp.delta * layer.w_qp.delta;
-                        for (i, &v) in a.iter().enumerate() {
-                            self.qa_scratch[r * n + i] = a_qp.quantize(v) as i32;
-                        }
-                    }
-                    None => {
-                        // Degenerate row: all-zero-point codes, zero
-                        // contribution, output is exactly the bias.
-                        self.row_zp[r] = 0;
-                        self.row_scale[r] = 0.0;
-                        self.qa_scratch[r * n..(r + 1) * n].fill(0);
-                    }
-                }
-            }
-
-            // --- 2. cache-blocked integer GEMM, raw codes, 4-wide input
-            //        panels; the zero-point term is NOT in this loop ---
-            self.acc_scratch[..batch * m].fill(0);
-            let mut c0 = 0;
-            while c0 < m {
-                let cb = COL_BLOCK.min(m - c0);
-                let mut i = 0;
-                while i + 4 <= n {
-                    let w0 = &layer.wq[i * m + c0..i * m + c0 + cb];
-                    let w1 = &layer.wq[(i + 1) * m + c0..(i + 1) * m + c0 + cb];
-                    let w2 = &layer.wq[(i + 2) * m + c0..(i + 2) * m + c0 + cb];
-                    let w3 = &layer.wq[(i + 3) * m + c0..(i + 3) * m + c0 + cb];
-                    for r in 0..batch {
-                        let q = &self.qa_scratch[r * n + i..r * n + i + 4];
-                        let (q0, q1, q2, q3) = (q[0], q[1], q[2], q[3]);
-                        let acc = &mut self.acc_scratch[r * m + c0..r * m + c0 + cb];
-                        for j in 0..cb {
-                            acc[j] += q0 * w0[j] as i32
-                                + q1 * w1[j] as i32
-                                + q2 * w2[j] as i32
-                                + q3 * w3[j] as i32;
-                        }
-                    }
-                    i += 4;
-                }
-                while i < n {
-                    let w0 = &layer.wq[i * m + c0..i * m + c0 + cb];
-                    for r in 0..batch {
-                        let q0 = self.qa_scratch[r * n + i];
-                        if q0 == 0 {
-                            continue;
-                        }
-                        let acc = &mut self.acc_scratch[r * m + c0..r * m + c0 + cb];
-                        for j in 0..cb {
-                            acc[j] += q0 * w0[j] as i32;
-                        }
-                    }
-                    i += 1;
-                }
-                c0 += cb;
-            }
-
-            // --- 3. epilogue: hoisted zero-point correction, combined
-            //        scale, bias, relu. The corrected i32 equals the
-            //        scalar path's centered accumulation exactly, so the
-            //        float expression below is the same one `forward`
-            //        evaluates — bit-identical outputs. ---
-            for r in 0..batch {
-                let scale = self.row_scale[r];
-                let za = self.row_zp[r];
-                for c in 0..m {
-                    let corrected = self.acc_scratch[r * m + c] - za * layer.col_sums[c];
-                    let mut y = scale * corrected as f32 + layer.b[c];
-                    if layer.relu && y < 0.0 {
-                        y = 0.0;
-                    }
-                    if last {
-                        out[r * m + c] = y;
-                    } else {
-                        self.act_scratch[r * m + c] = y;
-                    }
-                }
-            }
-        }
-        Ok(())
-    }
-}
+thin_engine!(
+    /// Packed int4 weights (two codes per byte, 8-bit dynamic
+    /// activations): 8x smaller weight traffic than fp32, the sub-byte
+    /// point of the paper's bitwidth sweep run on real packed kernels
+    /// instead of fake-quant simulation.
+    EngineInt4,
+    4
+);
 
 #[cfg(test)]
 mod tests {
@@ -455,19 +174,34 @@ mod tests {
         let ratio = f.memory_bytes() as f64 / q.memory_bytes() as f64;
         // biases stay f32, so slightly under 4x
         assert!(ratio > 3.5 && ratio <= 4.0, "ratio {ratio}");
+        // and the packed int4 instantiation halves it again
+        let q4 = EngineInt4::from_params(&p).unwrap();
+        let ratio4 = f.memory_bytes() as f64 / q4.memory_bytes() as f64;
+        assert!(ratio4 > 7.0 && ratio4 <= 8.0, "int4 ratio {ratio4}");
     }
 
     #[test]
-    fn col_sums_match_weight_codes() {
-        let p = mlp_params(&[9, 17, 4], 11);
-        let eng = EngineInt8::from_params(&p).unwrap();
-        for layer in &eng.layers {
-            for c in 0..layer.out_dim {
-                let want: i32 =
-                    (0..layer.in_dim).map(|i| layer.wq[i * layer.out_dim + c] as i32).sum();
-                assert_eq!(layer.col_sums[c], want);
-            }
-        }
+    fn thin_wrapper_is_bit_identical_to_generic_engine() {
+        // The instantiation claim: EngineInt8 is EngineQuant at bits 8,
+        // output for output (and likewise EngineInt4 at bits 4).
+        let p = mlp_params(&[12, 64, 32, 25], 13);
+        let mut rng = crate::rng::Pcg32::new(8, 8);
+        let batch = 5;
+        let xs: Vec<f32> = (0..batch * 12).map(|_| rng.uniform_range(-1.0, 1.0)).collect();
+        let mut a = vec![0.0f32; batch * 25];
+        let mut b = vec![0.0f32; batch * 25];
+
+        let mut i8e = EngineInt8::from_params(&p).unwrap();
+        let mut q8 = EngineQuant::from_params(&p, 8).unwrap();
+        i8e.forward_batch(&xs, batch, &mut a).unwrap();
+        q8.forward_batch(&xs, batch, &mut b).unwrap();
+        assert_eq!(a, b);
+
+        let mut i4e = EngineInt4::from_params(&p).unwrap();
+        let mut q4 = EngineQuant::from_params(&p, 4).unwrap();
+        i4e.forward_batch(&xs, batch, &mut a).unwrap();
+        q4.forward_batch(&xs, batch, &mut b).unwrap();
+        assert_eq!(a, b);
     }
 
     #[test]
@@ -490,18 +224,5 @@ mod tests {
         for (k, (a, b)) in want.iter().zip(&got).enumerate() {
             assert!(a == b, "element {k}: scalar {a} vs batched {b}");
         }
-    }
-
-    #[test]
-    fn forward_batch_validates_shapes() {
-        let p = mlp_params(&[4, 8, 2], 1);
-        let mut eng = EngineInt8::from_params(&p).unwrap();
-        let xs = vec![0.0f32; 8];
-        let mut out = vec![0.0f32; 4];
-        assert!(eng.forward_batch(&xs, 0, &mut out).is_err(), "batch 0");
-        assert!(eng.forward_batch(&xs, 3, &mut out).is_err(), "len mismatch");
-        let mut short = vec![0.0f32; 1];
-        assert!(eng.forward_batch(&xs, 2, &mut short).is_err(), "short out");
-        assert!(eng.forward_batch(&xs, 2, &mut out).is_ok());
     }
 }

@@ -1,0 +1,608 @@
+//! Bitwidth-generic quantized MLP inference engine — one kernel for
+//! every integer deployment precision (int2..=int8), including packed
+//! sub-byte weights.
+//!
+//! This is the PR-3 int8 engine generalized over [`Precision::Int`]:
+//! weights are quantized offline to centered `bits`-bit codes with
+//! per-tensor affine parameters and stored through the
+//! [`crate::quant::codec::CodeBuf`] codec — one i8 code per byte for
+//! bits 5..=8, two 4-bit two's-complement codes per byte for bits 2..=4
+//! (the packing that halves weight traffic again below int8).
+//! Activations are quantized on the fly per layer at 8 bits, exactly as
+//! the int8 engine always did: sub-byte deployment is a *weight-storage*
+//! statement, and keeping the activation rule fixed means every
+//! bitwidth shares one integer GEMM and one parity argument.
+//!
+//! Two entry points share the same integer semantics:
+//!
+//! * [`EngineQuant::forward`] — single-observation GEMV (the `n == 1`
+//!   actor path). Activation codes are centered (`qa - za`) so exact
+//!   post-relu zeros can be skipped; packed weight rows are unpacked
+//!   into a reusable row buffer.
+//! * [`EngineQuant::forward_batch`] — batch-major integer GEMM, cache-
+//!   blocked over 128-column tiles with 4-wide input panels and the
+//!   activation zero-point correction hoisted via the per-column
+//!   weight-code sums (`Σ(qa−za)·qw = Σ qa·qw − za·Σ qw`). For packed
+//!   layers each 4-row panel is unpacked once into an L1-resident panel
+//!   buffer *inside* the tile loop and then consumed by every batch row
+//!   — the unpack cost is amortized over the whole batch, the same way
+//!   the weight bytes themselves are. For i8-stored layers the kernel
+//!   borrows the code rows directly, so the bits = 8 instantiation runs
+//!   the PR-3 int8 kernel unchanged.
+//!
+//! Both paths produce bit-identical outputs per row (integer sums are
+//! exact, the float epilogue is one shared expression), and both are
+//! bit-identical to a scalar fake-quant reference built from the public
+//! [`QParams`] API — pinned by `rust/tests/engine_parity.rs`.
+
+use crate::error::{Error, Result};
+use crate::quant::codec::CodeBuf;
+use crate::quant::{Precision, QParams};
+use crate::runtime::ParamSet;
+
+/// Output-column tile width for the cache-blocked kernels: a 128-column
+/// i32 accumulator row is 512 B, so a 4-row weight panel (4 x 128 codes,
+/// packed or not) plus the accumulator tiles of a moderate batch stay
+/// L1-resident.
+pub(crate) const COL_BLOCK: usize = 128;
+
+/// One quantized dense layer.
+#[derive(Debug, Clone)]
+pub struct LayerQ {
+    /// Centered `bits`-bit codes (offset by the weight zero point),
+    /// stored input-major (in_dim, out_dim) through the codec: the
+    /// GEMV/GEMM walk inputs outer / outputs inner with unit stride.
+    pub codes: CodeBuf,
+    /// Per-layer weight quantization params.
+    pub w_qp: QParams,
+    /// Per-output-column sums of the weight codes, `col_sums[c] =
+    /// Σ_i codes[i, c]`, precomputed at build time so the batched
+    /// kernel's activation-zero-point correction (`za · Σ qw`) costs one
+    /// multiply per output instead of living inside the inner product.
+    pub col_sums: Vec<i32>,
+    pub b: Vec<f32>,
+    pub in_dim: usize,
+    pub out_dim: usize,
+    pub relu: bool,
+}
+
+/// Quantized engine over a stack of `bits`-bit layers.
+///
+/// Scratch buffers (activations, activation codes, i32 accumulators,
+/// per-row quantization metadata, the sub-byte unpack panel) are owned
+/// by the engine and reused across calls: [`EngineQuant::from_params`]
+/// sizes them for the single-observation path, and the first batched
+/// call grows them to the high-water `batch x max_dim` footprint, after
+/// which no call allocates.
+#[derive(Debug, Clone)]
+pub struct EngineQuant {
+    pub layers: Vec<LayerQ>,
+    /// Weight storage bitwidth (2..=8).
+    pub bits: u32,
+    /// Widest layer interface; scratch rows are strided by layer width,
+    /// capacity is counted in multiples of this.
+    max_dim: usize,
+    /// Batch-major activations (row r of layer input at `r * in_dim`).
+    act_scratch: Vec<f32>,
+    /// Raw (uncentered) activation codes for the batched kernel.
+    qa_scratch: Vec<i32>,
+    /// i32 GEMM/GEMV accumulators.
+    acc_scratch: Vec<i32>,
+    /// Per-row combined dequantization scale (`a_delta * w_delta`).
+    row_scale: Vec<f32>,
+    /// Per-row activation zero point.
+    row_zp: Vec<i32>,
+    /// Unpack buffer for packed weight rows: one `max_dim` row for the
+    /// GEMV plus a 4 x COL_BLOCK panel for the GEMM (sized for the
+    /// larger of the two; stays empty for i8-stored layers).
+    panel: Vec<i8>,
+}
+
+/// Dynamic activation-quantization params for one row, from its observed
+/// range.
+///
+/// Returns `None` for a degenerate range — a constant all-zero row (the
+/// common case: every unit of a layer dead after relu) has `amin == amax
+/// == 0`, no dynamic range to quantize against, and every code sits at
+/// the zero point. Callers treat `None` as "all-zero-point codes": the
+/// row contributes nothing, the GEMV/GEMM is skipped outright, and the
+/// output is exactly the bias.
+///
+/// A dead layer is a property of the weights, not a caller bug, so no
+/// code path may turn it into an actor-killing `Err`, even if
+/// `from_range`'s contract changes (pinned by a regression test).
+#[inline]
+fn act_qparams(amin: f32, amax: f32) -> Option<QParams> {
+    if amin == amax && amin == 0.0 {
+        return None;
+    }
+    // 8 is always a valid bitwidth, but route any future from_range
+    // failure into the same benign skip rather than an actor-killing Err.
+    QParams::from_range(amin, amax, 8).ok()
+}
+
+/// Min/max over one activation row (NaN entries are ignored by the
+/// `f32::min`/`f32::max` folds, matching the quantizer elsewhere).
+#[inline]
+fn row_range(a: &[f32]) -> (f32, f32) {
+    let amin = a.iter().copied().fold(f32::INFINITY, f32::min);
+    let amax = a.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+    (amin, amax)
+}
+
+impl EngineQuant {
+    /// Quantize a trained fp32 parameter set to a `bits`-bit engine
+    /// (bits in 2..=8; sub-byte widths are stored packed).
+    pub fn from_params(params: &ParamSet, bits: u32) -> Result<EngineQuant> {
+        Precision::Int(bits).validate_for_engine()?;
+        if params.tensors.len() % 2 != 0 {
+            return Err(Error::Quant("param set must alternate W/b".into()));
+        }
+        let n_layers = params.tensors.len() / 2;
+        let mut layers = Vec::with_capacity(n_layers);
+        let mut max_dim = 0;
+        for i in 0..n_layers {
+            let w = &params.tensors[2 * i];
+            let b = &params.tensors[2 * i + 1];
+            if w.rank() != 2 {
+                return Err(Error::Quant(format!("layer {i}: weight rank {}", w.rank())));
+            }
+            let (in_dim, out_dim) = (w.shape()[0], w.shape()[1]);
+            max_dim = max_dim.max(in_dim).max(out_dim);
+            let w_qp = QParams::from_range(w.min(), w.max(), bits)?;
+            // Quantize in place (input-major, matching the training
+            // layout); codes offset by the zero point so the inner
+            // product is over (q - z) directly. The centering + signed
+            // saturation rule is QParams::quantize_code, shared with the
+            // ActorQ broadcast path at every bitwidth.
+            let mut codes = vec![0i8; in_dim * out_dim];
+            for r in 0..in_dim {
+                for c in 0..out_dim {
+                    codes[r * out_dim + c] = w_qp.quantize_code(w.data()[r * out_dim + c], bits);
+                }
+            }
+            let mut col_sums = vec![0i32; out_dim];
+            for r in 0..in_dim {
+                for c in 0..out_dim {
+                    col_sums[c] += codes[r * out_dim + c] as i32;
+                }
+            }
+            layers.push(LayerQ {
+                codes: CodeBuf::from_codes(&codes, bits),
+                w_qp,
+                col_sums,
+                b: b.data().to_vec(),
+                in_dim,
+                out_dim,
+                relu: i + 1 < n_layers,
+            });
+        }
+        let packed = layers.iter().any(|l| l.codes.as_i8_slice(0, 0).is_none());
+        Ok(EngineQuant {
+            layers,
+            bits,
+            max_dim,
+            act_scratch: vec![0.0; max_dim],
+            qa_scratch: vec![0i32; max_dim],
+            acc_scratch: vec![0i32; max_dim],
+            row_scale: vec![0.0; 1],
+            row_zp: vec![0i32; 1],
+            panel: if packed { vec![0i8; max_dim.max(4 * COL_BLOCK)] } else { Vec::new() },
+        })
+    }
+
+    /// Deployment precision of this engine.
+    pub fn precision(&self) -> Precision {
+        Precision::Int(self.bits)
+    }
+
+    /// First-layer input width.
+    pub fn in_dim(&self) -> usize {
+        self.layers.first().map(|l| l.in_dim).unwrap_or(0)
+    }
+
+    /// Output head width.
+    pub fn out_dim(&self) -> usize {
+        self.layers.last().map(|l| l.out_dim).unwrap_or(0)
+    }
+
+    /// Total weight bytes (packed codes + f32 biases): the Fig-6 memory
+    /// column. Engine-side metadata (the precomputed column sums) is not
+    /// counted — it models the weight traffic a deployed policy streams,
+    /// not the resident working set.
+    pub fn memory_bytes(&self) -> usize {
+        self.layers
+            .iter()
+            .map(|l| l.codes.bytes() + l.b.len() * std::mem::size_of::<f32>())
+            .sum()
+    }
+
+    /// Grow the scratch arena to hold `batch` rows; a no-op once the
+    /// high-water batch has been seen (steady-state calls never allocate).
+    fn ensure_batch(&mut self, batch: usize) {
+        let need = batch * self.max_dim;
+        if self.act_scratch.len() < need {
+            self.act_scratch.resize(need, 0.0);
+            self.qa_scratch.resize(need, 0);
+            self.acc_scratch.resize(need, 0);
+        }
+        if self.row_scale.len() < batch {
+            self.row_scale.resize(batch, 0.0);
+            self.row_zp.resize(batch, 0);
+        }
+    }
+
+    /// Single-observation forward pass into `out`.
+    ///
+    /// Per layer: quantize activations to 8 bits (dynamic range), integer
+    /// GEMV with i32 accumulation (centered codes, so exact post-relu
+    /// zeros are skipped; packed weight rows are unpacked into the row
+    /// buffer), dequantize with the combined scale. A degenerate
+    /// activation range (all-zero row) skips the GEMV and yields the
+    /// bias exactly — never an error.
+    pub fn forward(&mut self, x: &[f32], out: &mut [f32]) -> Result<()> {
+        debug_assert_eq!(x.len(), self.layers[0].in_dim);
+        self.act_scratch[..x.len()].copy_from_slice(x);
+        for (li, layer) in self.layers.iter().enumerate() {
+            let n = layer.in_dim;
+            let last = li + 1 == self.layers.len();
+            let m = layer.out_dim;
+            let acc = &mut self.acc_scratch[..m];
+            acc.fill(0);
+            // Dynamic activation quantization (per-tensor, per row).
+            let a = &self.act_scratch[..n];
+            let (amin, amax) = row_range(a);
+            let scale = match act_qparams(amin, amax) {
+                Some(a_qp) => {
+                    // Centered activation codes (qa - za) fit i16; inputs
+                    // whose code is exactly the zero point contribute
+                    // nothing and are skipped (post-relu zeros are a
+                    // large fraction).
+                    let za = a_qp.zero_point;
+                    for (i, &v) in a.iter().enumerate() {
+                        let qa = (a_qp.quantize(v) - za) as i32;
+                        if qa == 0 {
+                            continue;
+                        }
+                        let row: &[i8] = match layer.codes.as_i8_slice(i * m, m) {
+                            Some(s) => s,
+                            None => {
+                                layer.codes.slice_into(i * m, &mut self.panel[..m]);
+                                &self.panel[..m]
+                            }
+                        };
+                        for (d, &qw) in acc.iter_mut().zip(row) {
+                            *d += qa * qw as i32;
+                        }
+                    }
+                    a_qp.delta * layer.w_qp.delta
+                }
+                // Degenerate range: all codes at the zero point, zero
+                // contribution — the output is exactly the bias.
+                None => 0.0,
+            };
+            for c in 0..m {
+                let mut y = scale * acc[c] as f32 + layer.b[c];
+                if layer.relu && y < 0.0 {
+                    y = 0.0;
+                }
+                if last {
+                    out[c] = y;
+                } else {
+                    self.act_scratch[c] = y;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Batch-major forward pass: `xs` holds `batch` rows of
+    /// `in_dim` features (row-major), `out` receives `batch` rows of the
+    /// output head. Bit-identical per row to [`EngineQuant::forward`].
+    ///
+    /// Per layer the whole batch is quantized once (each row keeps its
+    /// own dynamic range, matching the scalar path exactly), then a
+    /// cache-blocked integer GEMM runs over raw codes with the zero-point
+    /// correction hoisted to the epilogue:
+    ///
+    /// ```text
+    /// acc[r, c]   = Σ_i qa[r, i] · qw[i, c]          (i32, exact)
+    /// y[r, c]     = scale_r · (acc[r, c] − za_r · col_sums[c]) + b[c]
+    /// ```
+    ///
+    /// The weight panel loaded for a column block and 4-wide input panel
+    /// — unpacked from nibbles once per panel when the layer is stored
+    /// sub-byte — is consumed by every batch row before moving on, so
+    /// weight bytes stream from memory once per sweep instead of once
+    /// per observation, and the nibble unpack is amortized the same way.
+    pub fn forward_batch(&mut self, xs: &[f32], batch: usize, out: &mut [f32]) -> Result<()> {
+        let n_layers = self.layers.len();
+        let in_dim = self.in_dim();
+        let out_dim = self.out_dim();
+        if batch == 0 || xs.len() != batch * in_dim {
+            return Err(Error::Shape(format!(
+                "forward_batch: {} inputs for batch {batch} x in_dim {in_dim}",
+                xs.len()
+            )));
+        }
+        if out.len() < batch * out_dim {
+            return Err(Error::Shape(format!(
+                "forward_batch: out holds {} < batch {batch} x out_dim {out_dim}",
+                out.len()
+            )));
+        }
+        self.ensure_batch(batch);
+        self.act_scratch[..xs.len()].copy_from_slice(xs);
+
+        for li in 0..n_layers {
+            let layer = &self.layers[li];
+            let n = layer.in_dim;
+            let m = layer.out_dim;
+            let last = li + 1 == n_layers;
+
+            // --- 1. quantize the whole activation batch (once per layer;
+            //        per-row dynamic ranges, same rule as the scalar path) ---
+            for r in 0..batch {
+                let a = &self.act_scratch[r * n..(r + 1) * n];
+                let (amin, amax) = row_range(a);
+                match act_qparams(amin, amax) {
+                    Some(a_qp) => {
+                        self.row_zp[r] = a_qp.zero_point as i32;
+                        self.row_scale[r] = a_qp.delta * layer.w_qp.delta;
+                        for (i, &v) in a.iter().enumerate() {
+                            self.qa_scratch[r * n + i] = a_qp.quantize(v) as i32;
+                        }
+                    }
+                    None => {
+                        // Degenerate row: all-zero-point codes, zero
+                        // contribution, output is exactly the bias.
+                        self.row_zp[r] = 0;
+                        self.row_scale[r] = 0.0;
+                        self.qa_scratch[r * n..(r + 1) * n].fill(0);
+                    }
+                }
+            }
+
+            // --- 2. cache-blocked integer GEMM, raw codes, 4-wide input
+            //        panels; the zero-point term is NOT in this loop.
+            //        Packed layers unpack each panel into the L1-resident
+            //        buffer once, then every batch row consumes it. ---
+            self.acc_scratch[..batch * m].fill(0);
+            let mut c0 = 0;
+            while c0 < m {
+                let cb = COL_BLOCK.min(m - c0);
+                let mut i = 0;
+                while i + 4 <= n {
+                    let (w0, w1, w2, w3): (&[i8], &[i8], &[i8], &[i8]) =
+                        match layer.codes.as_i8_slice(i * m + c0, cb) {
+                            Some(s0) => (
+                                s0,
+                                layer.codes.as_i8_slice((i + 1) * m + c0, cb).unwrap(),
+                                layer.codes.as_i8_slice((i + 2) * m + c0, cb).unwrap(),
+                                layer.codes.as_i8_slice((i + 3) * m + c0, cb).unwrap(),
+                            ),
+                            None => {
+                                for k in 0..4 {
+                                    layer.codes.slice_into(
+                                        (i + k) * m + c0,
+                                        &mut self.panel[k * cb..(k + 1) * cb],
+                                    );
+                                }
+                                (
+                                    &self.panel[..cb],
+                                    &self.panel[cb..2 * cb],
+                                    &self.panel[2 * cb..3 * cb],
+                                    &self.panel[3 * cb..4 * cb],
+                                )
+                            }
+                        };
+                    for r in 0..batch {
+                        let q = &self.qa_scratch[r * n + i..r * n + i + 4];
+                        let (q0, q1, q2, q3) = (q[0], q[1], q[2], q[3]);
+                        let acc = &mut self.acc_scratch[r * m + c0..r * m + c0 + cb];
+                        for j in 0..cb {
+                            acc[j] += q0 * w0[j] as i32
+                                + q1 * w1[j] as i32
+                                + q2 * w2[j] as i32
+                                + q3 * w3[j] as i32;
+                        }
+                    }
+                    i += 4;
+                }
+                while i < n {
+                    let w0: &[i8] = match layer.codes.as_i8_slice(i * m + c0, cb) {
+                        Some(s) => s,
+                        None => {
+                            layer.codes.slice_into(i * m + c0, &mut self.panel[..cb]);
+                            &self.panel[..cb]
+                        }
+                    };
+                    for r in 0..batch {
+                        let q0 = self.qa_scratch[r * n + i];
+                        if q0 == 0 {
+                            continue;
+                        }
+                        let acc = &mut self.acc_scratch[r * m + c0..r * m + c0 + cb];
+                        for j in 0..cb {
+                            acc[j] += q0 * w0[j] as i32;
+                        }
+                    }
+                    i += 1;
+                }
+                c0 += cb;
+            }
+
+            // --- 3. epilogue: hoisted zero-point correction, combined
+            //        scale, bias, relu. The corrected i32 equals the
+            //        scalar path's centered accumulation exactly, so the
+            //        float expression below is the same one `forward`
+            //        evaluates — bit-identical outputs. ---
+            for r in 0..batch {
+                let scale = self.row_scale[r];
+                let za = self.row_zp[r];
+                for c in 0..m {
+                    let corrected = self.acc_scratch[r * m + c] - za * layer.col_sums[c];
+                    let mut y = scale * corrected as f32 + layer.b[c];
+                    if layer.relu && y < 0.0 {
+                        y = 0.0;
+                    }
+                    if last {
+                        out[r * m + c] = y;
+                    } else {
+                        self.act_scratch[r * m + c] = y;
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+impl crate::inference::Engine for EngineQuant {
+    fn precision(&self) -> Precision {
+        EngineQuant::precision(self)
+    }
+
+    fn forward(&mut self, x: &[f32], out: &mut [f32]) -> Result<()> {
+        EngineQuant::forward(self, x, out)
+    }
+
+    fn forward_batch(&mut self, xs: &[f32], batch: usize, out: &mut [f32]) -> Result<()> {
+        EngineQuant::forward_batch(self, xs, batch, out)
+    }
+
+    fn memory_bytes(&self) -> usize {
+        EngineQuant::memory_bytes(self)
+    }
+
+    fn in_dim(&self) -> usize {
+        EngineQuant::in_dim(self)
+    }
+
+    fn out_dim(&self) -> usize {
+        EngineQuant::out_dim(self)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::inference::engine_f32::test_fixtures::{mlp_params, reference_forward};
+    use crate::rng::Pcg32;
+
+    #[test]
+    fn rejects_unsupported_bitwidths() {
+        let p = mlp_params(&[4, 8, 2], 1);
+        assert!(EngineQuant::from_params(&p, 1).is_err());
+        assert!(EngineQuant::from_params(&p, 9).is_err());
+        for bits in 2..=8 {
+            assert!(EngineQuant::from_params(&p, bits).is_ok(), "bits {bits}");
+        }
+    }
+
+    #[test]
+    fn int4_memory_is_eighth_of_f32_weights() {
+        let p = mlp_params(&[128, 512, 512, 25], 5);
+        let q4 = EngineQuant::from_params(&p, 4).unwrap();
+        let q8 = EngineQuant::from_params(&p, 8).unwrap();
+        let f32_bytes: usize = p
+            .tensors
+            .iter()
+            .map(|t| t.len() * std::mem::size_of::<f32>())
+            .sum();
+        let r4 = f32_bytes as f64 / q4.memory_bytes() as f64;
+        let r8 = f32_bytes as f64 / q8.memory_bytes() as f64;
+        // biases stay f32, so slightly under the 8x / 4x ideals
+        assert!(r4 > 7.0 && r4 <= 8.0, "int4 ratio {r4}");
+        assert!(r8 > 3.5 && r8 <= 4.0, "int8 ratio {r8}");
+        assert!(q4.memory_bytes() < q8.memory_bytes());
+    }
+
+    #[test]
+    fn packed_codes_match_the_shared_quantization_rule() {
+        let p = mlp_params(&[9, 17, 4], 11);
+        for bits in [2u32, 3, 4, 6, 8] {
+            let eng = EngineQuant::from_params(&p, bits).unwrap();
+            for (li, layer) in eng.layers.iter().enumerate() {
+                let w = &p.tensors[2 * li];
+                let codes = layer.codes.to_vec();
+                assert_eq!(codes.len(), w.len());
+                for (i, (&orig, &code)) in w.data().iter().zip(&codes).enumerate() {
+                    assert_eq!(
+                        code,
+                        layer.w_qp.quantize_code(orig, bits),
+                        "bits {bits} layer {li} idx {i}"
+                    );
+                }
+                for c in 0..layer.out_dim {
+                    let want: i32 =
+                        (0..layer.in_dim).map(|i| codes[i * layer.out_dim + c] as i32).sum();
+                    assert_eq!(layer.col_sums[c], want, "bits {bits} layer {li} col {c}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn batched_matches_scalar_for_packed_and_odd_shapes() {
+        // Odd out_dims make packed rows start mid-byte; the exhaustive
+        // property lives in tests/engine_parity.rs, this in-crate smoke
+        // keeps the invariant visible next to the kernel.
+        let mut rng = Pcg32::new(8, 8);
+        for (dims, bits) in [
+            (&[12usize, 64, 32, 25][..], 4u32),
+            (&[7, 33, 19, 3][..], 4),
+            (&[5, 13, 2][..], 2),
+            (&[12, 64, 32, 25][..], 6),
+        ] {
+            let p = mlp_params(dims, 13);
+            let mut eng = EngineQuant::from_params(&p, bits).unwrap();
+            let din = dims[0];
+            let dout = *dims.last().unwrap();
+            let batch = 5;
+            let xs: Vec<f32> =
+                (0..batch * din).map(|_| rng.uniform_range(-1.0, 1.0)).collect();
+            let mut want = vec![0.0f32; batch * dout];
+            for r in 0..batch {
+                let (row_in, row_out) =
+                    (&xs[r * din..(r + 1) * din], &mut want[r * dout..(r + 1) * dout]);
+                eng.forward(row_in, row_out).unwrap();
+            }
+            let mut got = vec![0.0f32; batch * dout];
+            eng.forward_batch(&xs, batch, &mut got).unwrap();
+            for (k, (a, b)) in want.iter().zip(&got).enumerate() {
+                assert!(a == b, "dims {dims:?} bits {bits} element {k}: scalar {a} vs batched {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn int4_tracks_the_f32_reference_loosely() {
+        // 4-bit weights are coarse; the envelope is wider than int8's
+        // but the outputs must stay finite and in the right ballpark.
+        let p = mlp_params(&[12, 64, 32, 25], 7);
+        let mut eng = EngineQuant::from_params(&p, 4).unwrap();
+        let x: Vec<f32> = (0..12).map(|i| (i as f32 * 0.7).cos()).collect();
+        let mut out = vec![0.0; 25];
+        eng.forward(&x, &mut out).unwrap();
+        let r = reference_forward(&p, &x);
+        let scale = r.iter().map(|v| v.abs()).fold(0.0f32, f32::max).max(1e-3);
+        let mean_err: f32 =
+            out.iter().zip(&r).map(|(a, b)| (a - b).abs()).sum::<f32>() / (out.len() as f32 * scale);
+        assert!(mean_err < 0.6, "mean relative error {mean_err}");
+        assert!(out.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn forward_batch_validates_shapes() {
+        let p = mlp_params(&[4, 8, 2], 1);
+        let mut eng = EngineQuant::from_params(&p, 4).unwrap();
+        let xs = vec![0.0f32; 8];
+        let mut out = vec![0.0f32; 4];
+        assert!(eng.forward_batch(&xs, 0, &mut out).is_err(), "batch 0");
+        assert!(eng.forward_batch(&xs, 3, &mut out).is_err(), "len mismatch");
+        let mut short = vec![0.0f32; 1];
+        assert!(eng.forward_batch(&xs, 2, &mut short).is_err(), "short out");
+        assert!(eng.forward_batch(&xs, 2, &mut out).is_ok());
+    }
+}

@@ -1,20 +1,73 @@
-//! Deployment inference engines (paper §5 / Fig-6 case study).
+//! Deployment inference engines (paper §5 / Fig-6 case study), behind
+//! one bitwidth-generic [`Engine`] abstraction.
 //!
 //! * [`engine_f32`] — optimized native fp32 MLP baseline.
-//! * [`engine_int8`] — int8 weights+activations with i32 accumulation.
+//! * [`engine_quant`] — the bitwidth-generic quantized engine
+//!   ([`EngineQuant`], int2..=int8): integer weights through the
+//!   `quant::codec` storage (packed two-per-byte below int5) with i32
+//!   accumulation and 8-bit dynamic activation quantization.
+//! * [`engine_int8`] — [`EngineInt8`]/[`EngineInt4`], thin
+//!   instantiations of [`EngineQuant`] at the paper's two headline
+//!   deployment widths (int8 keeps pinning bit-exactness against its
+//!   PR-3 behavior).
 //! * [`memsim`] — RasPi-class memory-pressure model (swap cliff).
 //!
-//! Both engines expose a single-observation `forward` GEMV and a
+//! Every engine exposes a single-observation `forward` GEMV and a
 //! batch-major `forward_batch` GEMM that amortizes weight traffic over a
 //! vec-env sweep; the batched path is bit-identical per row to the
 //! scalar one (pinned by `rust/tests/engine_parity.rs`), so consumers
-//! pick purely on batch size. `cargo bench --bench bench_engines` tracks
-//! the batch-scaling trajectory in `BENCH_engines.json`.
+//! pick purely on batch size, and pick a bitwidth purely through
+//! [`crate::quant::Precision`]. `cargo bench --bench bench_engines`
+//! sweeps batch x width x bitwidth and tracks the trajectory in
+//! `BENCH_engines.json`.
 
 pub mod engine_f32;
 pub mod engine_int8;
+pub mod engine_quant;
 pub mod memsim;
 
 pub use engine_f32::EngineF32;
-pub use engine_int8::EngineInt8;
+pub use engine_int8::{EngineInt4, EngineInt8};
+pub use engine_quant::{EngineQuant, LayerQ};
 pub use memsim::MemModel;
+
+use crate::error::Result;
+use crate::quant::Precision;
+
+/// The contract every deployment engine implements — what the ActorQ
+/// actors, the Fig-6/Table-2 experiments, and `bench_engines` program
+/// against, so a new precision is a new instantiation rather than a new
+/// consumer-facing API.
+///
+/// The two forward entry points are bit-identical per row to each other
+/// for every implementor (float summation order is part of the
+/// contract, not an implementation detail).
+pub trait Engine {
+    /// Numeric format this engine deploys.
+    fn precision(&self) -> Precision;
+    /// Single-observation GEMV into `out`.
+    fn forward(&mut self, x: &[f32], out: &mut [f32]) -> Result<()>;
+    /// Batch-major GEMM over `batch` rows; bit-identical per row to
+    /// [`Engine::forward`].
+    fn forward_batch(&mut self, xs: &[f32], batch: usize, out: &mut [f32]) -> Result<()>;
+    /// Weight bytes a deployed policy streams (the Fig-6 memory column).
+    fn memory_bytes(&self) -> usize;
+    /// First-layer input width.
+    fn in_dim(&self) -> usize;
+    /// Output head width.
+    fn out_dim(&self) -> usize;
+}
+
+/// Build the engine for `precision` as a trait object — the sweep-style
+/// consumers (`bench_engines`, the per-bitwidth experiment rows) use
+/// this; hot paths hold the concrete types.
+pub fn engine_for(
+    params: &crate::runtime::ParamSet,
+    precision: Precision,
+) -> Result<Box<dyn Engine>> {
+    precision.validate_for_engine()?;
+    Ok(match precision {
+        Precision::Fp32 => Box::new(EngineF32::from_params(params)?),
+        Precision::Int(bits) => Box::new(EngineQuant::from_params(params, bits)?),
+    })
+}

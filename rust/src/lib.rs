@@ -10,22 +10,41 @@
 //!   (`python/compile/`), AOT-lowered to HLO text in `artifacts/`.
 //! * Layer 3 — this crate: environments, replay buffers, trainer loops,
 //!   the PTQ/QAT quantization engine, the experiment harness that
-//!   regenerates every table and figure of the paper, and a pure-Rust
-//!   int8 deployment inference engine.
+//!   regenerates every table and figure of the paper, and pure-Rust
+//!   deployment inference engines (fp32 and bitwidth-generic integer,
+//!   int2..=int8 with packed sub-byte weights).
 //!
 //! Python never runs at training/serving time: `make artifacts` lowers the
 //! compute graphs once, and the `quarl` binary drives them through PJRT.
 //!
+//! ## The precision stack: one `Precision` from quant/ to ActorQ
+//!
+//! Deployment precision is selected once, through
+//! [`quant::Precision`], and flows through every layer: the `quant`
+//! codecs store centered integer codes (one i8 code per byte, or two
+//! packed 4-bit codes per byte below int5), the [`inference::Engine`]
+//! trait is instantiated by the fp32 baseline and the bitwidth-generic
+//! [`inference::EngineQuant`] (int2..=int8, with
+//! [`inference::EngineInt8`]/[`inference::EngineInt4`] as named thin
+//! instantiations), the ActorQ broadcast quantizes-on-publish at any
+//! engine-supported width, and the experiment harness sweeps real
+//! engine bitwidths via `--bits`. Adding a future precision (int2
+//! four-per-byte, fp16 actors, per-layer mixes) extends the enum and
+//! codec — not a new engine fork.
+//!
 //! ## ActorQ (paper §3): asynchronous quantized collection
 //!
 //! On top of the synchronous trainers, [`actorq`] implements the paper's
-//! actor-learner paradigm: N actor threads each run an **int8** (or fp32
-//! baseline) copy of the policy on the pure-Rust deployment engines,
-//! streaming transition batches to the learner over a bounded channel,
-//! while the learner trains in full precision through PJRT and
-//! quantizes-on-broadcast fresh parameters back to the actors. Entry
-//! points: [`algos::dqn::train_actorq`] and [`algos::ddpg::train_actorq`];
-//! the `actorq` experiment and `bench_actorq` bench reproduce the
+//! actor-learner paradigm: N actor threads each run a **quantized**
+//! (int8 headline, packed int4, or fp32 baseline) copy of the policy on
+//! the pure-Rust deployment engines, streaming transition batches to
+//! the learner over a bounded channel, while the learner trains in full
+//! precision through PJRT and quantizes-on-broadcast fresh parameters
+//! back to the actors. The shared [`actorq::LearnerHarness`] owns pool
+//! setup, the drain/pacing loop, and log assembly; the drivers
+//! contribute their train-program closures. Entry points:
+//! [`algos::dqn::train_actorq`] and [`algos::ddpg::train_actorq`]; the
+//! `actorq` experiment and `bench_actorq` bench reproduce the
 //! speedup-vs-actor-count and fp32-vs-int8-actor comparisons.
 //!
 //! ## Sustainability accounting (paper §1/§6 carbon claim)

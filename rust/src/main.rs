@@ -24,11 +24,20 @@
 //! | `actorq` | §3/Table 6 — actor-learner throughput + convergence       |
 //! | `carbon` | §1/§6 — fp32-vs-int8 CO2eq accounting (offline, no PJRT)  |
 //!
+//! `--bits` (validated comma list, 2..=16, deduped + sorted) selects the
+//! bitwidth sweep: `fig2` trains QAT at each width (defaulting to
+//! 2,4,6,8), while `table2`, `fig6`, and `carbon` add per-bitwidth rows
+//! on the real quantized engines only when the flag is passed
+//! explicitly — the sweeps multiply measurement cost, so a default run
+//! never pays for them (packed sub-byte kernels at 2..=4 bits; widths
+//! above 8 have no native engine and report PTQ-only/skip).
+//!
 //! Every experiment appends JSONL rows under `runs/results/` and renders
-//! a paper-style text table; `carbon` (and `bench_actorq`) additionally
-//! write machine-readable `BENCH_*.json` reports. PJRT-backed
-//! experiments need `artifacts/`; `carbon` and the `actorq` collection
-//! cells run offline on the pure-Rust deployment engines.
+//! a paper-style text table; `carbon` (and `bench_actorq`,
+//! `bench_engines`) additionally write machine-readable `BENCH_*.json`
+//! reports. PJRT-backed experiments need `artifacts/`; `carbon` and the
+//! `actorq` collection cells run offline on the pure-Rust deployment
+//! engines.
 
 use quarl::algos::{a2c, ddpg, dqn, ppo, QuantSchedule};
 use quarl::config::cli::Args;
@@ -216,6 +225,7 @@ fn cmd_exp(args: &Args) -> Result<()> {
         episodes: args.get_usize("episodes", 30)?,
         seed: args.get_u64("seed", 0)?,
         bits: args.bits(&[2, 4, 6, 8])?,
+        bits_explicit: args.get("bits").is_some(),
         filter: args.get("only").map(String::from),
         shard: args.shard()?,
         jobs: args.get_usize("jobs", 1)?,

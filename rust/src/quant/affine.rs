@@ -60,20 +60,34 @@ impl QParams {
         self.dequantize(self.quantize(x))
     }
 
-    /// Quantize to a zero-point-centered i8 code — the deployment grid the
-    /// int8 inference engine and the ActorQ broadcast path share.
+    /// Quantize to a zero-point-centered code on a `bits`-wide signed
+    /// grid — the deployment rule every quantized engine bitwidth and
+    /// the ActorQ broadcast path share.
     ///
-    /// The [0, levels-1] clip lives in [`QParams::quantize`]; the i8
-    /// saturation (codes past ±127 pin to the rail, which happens for
-    /// strongly asymmetric ranges where the zero point sits far from the
-    /// middle of the grid) lives here, so every i8 consumer clamps the
-    /// same way.
+    /// The [0, levels-1] clip lives in [`QParams::quantize`]; the signed
+    /// saturation (codes past ±2^(bits-1) pin to the rail, which happens
+    /// for strongly asymmetric ranges where the zero point sits far from
+    /// the middle of the grid) lives here, so every integer consumer —
+    /// i8 storage or packed nibbles — clamps the same way. `bits` must
+    /// be in 2..=8 so the code fits an i8.
     #[inline]
-    pub fn quantize_i8(&self, x: f32) -> i8 {
-        (self.quantize(x) - self.zero_point).max(-128.0).min(127.0) as i8
+    pub fn quantize_code(&self, x: f32, bits: u32) -> i8 {
+        debug_assert!((2..=8).contains(&bits), "centered codes need bits in 2..=8");
+        let hi = ((1i32 << (bits - 1)) - 1) as f32;
+        let lo = -hi - 1.0;
+        (self.quantize(x) - self.zero_point).max(lo).min(hi) as i8
     }
 
-    /// Dequantize a centered i8 code produced by [`QParams::quantize_i8`].
+    /// Quantize to a zero-point-centered i8 code — the 8-bit special
+    /// case of [`QParams::quantize_code`], kept because it is the grid
+    /// the int8 engine and its golden tests pin.
+    #[inline]
+    pub fn quantize_i8(&self, x: f32) -> i8 {
+        self.quantize_code(x, 8)
+    }
+
+    /// Dequantize a centered code produced by [`QParams::quantize_code`]
+    /// (any bitwidth — the grid step alone sets the scale).
     #[inline]
     pub fn dequantize_i8(&self, code: i8) -> f32 {
         self.delta * code as f32
@@ -258,6 +272,32 @@ mod tests {
                 assert!(err <= qp.delta + 1e-6, "x={x} err={err} delta={}", qp.delta);
             }
         }
+    }
+
+    #[test]
+    fn centered_codes_generalize_across_bitwidths() {
+        // Symmetric 4-bit range: delta = 2/16, zero point = 8 — the
+        // centered grid spans [-8, 7] and saturates at the rails exactly
+        // like the i8 rule does at ±128/±127.
+        let qp = QParams::from_range(-1.0, 1.0, 4).unwrap();
+        assert_eq!(qp.zero_point, 8.0);
+        assert_eq!(qp.quantize_code(-1.0, 4), -8);
+        assert_eq!(qp.quantize_code(1.0, 4), 7);
+        assert_eq!(qp.quantize_code(0.0, 4), 0);
+        assert_eq!(qp.quantize_code(-100.0, 4), -8);
+        assert_eq!(qp.quantize_code(100.0, 4), 7);
+        // The 8-bit case is quantize_i8, code for code.
+        let qp8 = QParams::from_range(-3.0, 1.0, 8).unwrap();
+        for i in 0..100 {
+            let x = -4.0 + 6.0 * (i as f32 / 99.0);
+            assert_eq!(qp8.quantize_code(x, 8), qp8.quantize_i8(x));
+        }
+        // Asymmetric 4-bit range: the grid bottom saturates the signed
+        // rail, mirroring the i8 test above.
+        let qp = QParams::from_range(-3.0, 1.0, 4).unwrap();
+        assert_eq!(qp.zero_point, 12.0);
+        assert_eq!(qp.quantize_code(-3.0, 4), -8);
+        assert_eq!(qp.quantize_code(1.0, 4), 3);
     }
 
     #[test]

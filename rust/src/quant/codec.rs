@@ -1,0 +1,224 @@
+//! Code storage for the quantized deployment engines: one codec per
+//! storage class, behind a single enum so the engines are generic over
+//! bitwidth.
+//!
+//! * bits 5..=8 — one centered i8 code per byte (the PR-3 layout).
+//! * bits 2..=4 — two centered codes per byte, 4-bit two's complement:
+//!   element `2k` in the low nibble, `2k+1` in the high nibble. This is
+//!   the packing that halves weight traffic again below int8 — the
+//!   memory-bandwidth lever behind the sub-8-bit deployment study.
+//!
+//! The codes themselves come from [`crate::quant::QParams::quantize_code`]
+//! (centered on the zero point, saturating at the signed rails), so
+//! every consumer — scalar GEMV, packed GEMM, broadcast — shares one
+//! quantization rule. Pack/unpack is lossless for every representable
+//! code (pinned by the exhaustive tests below and the property suite in
+//! `rust/tests/engine_parity.rs`).
+
+/// Sign-extend the low nibble of a packed byte to an i8 code.
+#[inline]
+pub fn nib4_lo(byte: u8) -> i8 {
+    ((byte as i8) << 4) >> 4
+}
+
+/// Sign-extend the high nibble of a packed byte to an i8 code.
+#[inline]
+pub fn nib4_hi(byte: u8) -> i8 {
+    (byte as i8) >> 4
+}
+
+/// Pack centered codes (each in [-8, 7]) two per byte; an odd tail
+/// leaves the final high nibble zero.
+pub fn pack_nib4(codes: &[i8]) -> Vec<u8> {
+    debug_assert!(codes.iter().all(|&c| (-8..=7).contains(&c)), "nib4 code out of range");
+    let mut out = vec![0u8; codes.len().div_ceil(2)];
+    for (i, &c) in codes.iter().enumerate() {
+        let nib = (c as u8) & 0x0F;
+        if i % 2 == 0 {
+            out[i / 2] |= nib;
+        } else {
+            out[i / 2] |= nib << 4;
+        }
+    }
+    out
+}
+
+/// Unpack `out.len()` consecutive codes starting at element offset
+/// `start` (which may be odd — sub-byte rows need not be byte-aligned).
+#[inline]
+pub fn unpack_nib4_into(packed: &[u8], start: usize, out: &mut [i8]) {
+    for (j, o) in out.iter_mut().enumerate() {
+        let idx = start + j;
+        let byte = packed[idx / 2];
+        *o = if idx % 2 == 0 { nib4_lo(byte) } else { nib4_hi(byte) };
+    }
+}
+
+/// Storage for one tensor's centered integer codes.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum CodeBuf {
+    /// One code per byte (bits 5..=8).
+    I8(Vec<i8>),
+    /// Two 4-bit two's-complement codes per byte (bits 2..=4); the
+    /// second field is the logical element count.
+    Nib4(Vec<u8>, usize),
+}
+
+impl CodeBuf {
+    /// Pack `codes` for a `bits`-wide grid (codes must already be
+    /// centered and clipped to the signed range for `bits`).
+    pub fn from_codes(codes: &[i8], bits: u32) -> CodeBuf {
+        if bits <= 4 {
+            CodeBuf::Nib4(pack_nib4(codes), codes.len())
+        } else {
+            CodeBuf::I8(codes.to_vec())
+        }
+    }
+
+    /// Logical element count.
+    pub fn len(&self) -> usize {
+        match self {
+            CodeBuf::I8(v) => v.len(),
+            CodeBuf::Nib4(_, n) => *n,
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Storage bytes (the weight-traffic column of the Fig-6 study).
+    pub fn bytes(&self) -> usize {
+        match self {
+            CodeBuf::I8(v) => v.len(),
+            CodeBuf::Nib4(v, _) => v.len(),
+        }
+    }
+
+    /// One code, sign-extended.
+    #[inline]
+    pub fn get(&self, i: usize) -> i8 {
+        match self {
+            CodeBuf::I8(v) => v[i],
+            CodeBuf::Nib4(v, _) => {
+                let byte = v[i / 2];
+                if i % 2 == 0 {
+                    nib4_lo(byte)
+                } else {
+                    nib4_hi(byte)
+                }
+            }
+        }
+    }
+
+    /// All codes, unpacked (test/inspection convenience; the kernels use
+    /// [`CodeBuf::slice_into`] / direct slices instead).
+    pub fn to_vec(&self) -> Vec<i8> {
+        match self {
+            CodeBuf::I8(v) => v.clone(),
+            CodeBuf::Nib4(v, n) => {
+                let mut out = vec![0i8; *n];
+                unpack_nib4_into(v, 0, &mut out);
+                out
+            }
+        }
+    }
+
+    /// Unpack the element range `[start, start + out.len())` into `out`
+    /// (the per-panel unpack step of the packed GEMM).
+    #[inline]
+    pub fn slice_into(&self, start: usize, out: &mut [i8]) {
+        match self {
+            CodeBuf::I8(v) => out.copy_from_slice(&v[start..start + out.len()]),
+            CodeBuf::Nib4(v, _) => unpack_nib4_into(v, start, out),
+        }
+    }
+
+    /// Borrow the range directly when stored one-code-per-byte (lets the
+    /// GEMM skip the unpack copy on the i8 path).
+    #[inline]
+    pub fn as_i8_slice(&self, start: usize, len: usize) -> Option<&[i8]> {
+        match self {
+            CodeBuf::I8(v) => Some(&v[start..start + len]),
+            CodeBuf::Nib4(..) => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nib4_roundtrip_all_256_byte_patterns() {
+        // Every byte decodes to two codes in [-8, 7] and re-encodes to
+        // exactly itself: the codec is a bijection on the packed domain.
+        for byte in 0u8..=255 {
+            let (lo, hi) = (nib4_lo(byte), nib4_hi(byte));
+            assert!((-8..=7).contains(&lo) && (-8..=7).contains(&hi), "byte {byte:#04x}");
+            let repacked = pack_nib4(&[lo, hi]);
+            assert_eq!(repacked, vec![byte], "byte {byte:#04x} -> ({lo}, {hi})");
+        }
+    }
+
+    #[test]
+    fn nib4_roundtrip_all_code_values() {
+        // And the other direction: every representable code survives a
+        // pack/unpack round trip in both nibble positions.
+        for a in -8i8..=7 {
+            for b in -8i8..=7 {
+                let packed = pack_nib4(&[a, b]);
+                let mut out = [0i8; 2];
+                unpack_nib4_into(&packed, 0, &mut out);
+                assert_eq!(out, [a, b]);
+            }
+        }
+    }
+
+    #[test]
+    fn odd_lengths_and_offsets_roundtrip() {
+        // Odd-length rows (the final high nibble is padding) and odd
+        // start offsets (rows of an odd-width matrix begin mid-byte).
+        let codes: Vec<i8> = (0..31).map(|i| ((i * 5) % 16) as i8 - 8).collect();
+        let packed = pack_nib4(&codes);
+        assert_eq!(packed.len(), 16, "31 codes -> 16 bytes");
+        for start in 0..codes.len() {
+            for len in 0..=(codes.len() - start).min(9) {
+                let mut out = vec![0i8; len];
+                unpack_nib4_into(&packed, start, &mut out);
+                assert_eq!(out, &codes[start..start + len], "start {start} len {len}");
+            }
+        }
+    }
+
+    #[test]
+    fn codebuf_dispatch_matches_layout() {
+        let codes: Vec<i8> = vec![-8, -1, 0, 3, 7];
+        let nib = CodeBuf::from_codes(&codes, 4);
+        let i8s = CodeBuf::from_codes(&codes, 8);
+        assert_eq!(nib.len(), 5);
+        assert_eq!(nib.bytes(), 3, "5 codes pack into 3 bytes");
+        assert_eq!(i8s.bytes(), 5);
+        assert_eq!(nib.to_vec(), codes);
+        assert_eq!(i8s.to_vec(), codes);
+        for i in 0..codes.len() {
+            assert_eq!(nib.get(i), codes[i]);
+            assert_eq!(i8s.get(i), codes[i]);
+        }
+        let mut out = [0i8; 3];
+        nib.slice_into(1, &mut out);
+        assert_eq!(out, [-1, 0, 3]);
+        assert!(nib.as_i8_slice(0, 2).is_none());
+        assert_eq!(i8s.as_i8_slice(1, 3), Some(&codes[1..4]));
+    }
+
+    #[test]
+    fn bits_2_and_3_ride_the_nibble_codec() {
+        // int2/int3 codes fit the nibble range; they pack two-per-byte
+        // today (a four-per-byte int2 codec is a ROADMAP follow-on).
+        let codes: Vec<i8> = vec![-2, -1, 0, 1, -2, 1, 0];
+        let buf = CodeBuf::from_codes(&codes, 2);
+        assert!(matches!(buf, CodeBuf::Nib4(..)));
+        assert_eq!(buf.to_vec(), codes);
+    }
+}

@@ -2,17 +2,25 @@
 //!
 //! * [`affine`] — uniform affine quantizer, bit-exact with the Python
 //!   oracle (paper §3.1).
+//! * [`precision`] — the [`Precision`] selector the whole deployment
+//!   stack (engines, ActorQ broadcast, `--bits` sweeps) shares.
+//! * [`codec`] — centered-code storage: one i8 code per byte, or two
+//!   packed 4-bit codes per byte for the sub-byte engines.
 //! * [`fp16`] — software IEEE-754 half rounding (PTQ-fp16).
 //! * [`ptq`] — post-training quantization over parameter sets
 //!   (paper Algorithm 1).
 //! * [`stats`] — weight-distribution analysis (Figures 3/4, Table 3).
 
 pub mod affine;
+pub mod codec;
 pub mod fp16;
+pub mod precision;
 pub mod ptq;
 pub mod stats;
 
 pub use affine::{fake_quant_per_axis, fake_quant_slice, fake_quant_slice_with_range, QParams};
+pub use codec::CodeBuf;
 pub use fp16::{fp16_quant_slice, fp16_roundtrip};
+pub use precision::Precision;
 pub use ptq::{quantize_params, relative_error_pct, PtqMethod};
 pub use stats::{render_histogram, weight_stats, WeightStats};

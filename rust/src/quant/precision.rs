@@ -1,0 +1,130 @@
+//! The one numeric-format selector the whole deployment stack shares.
+//!
+//! The paper sweeps policy precision from 32 bits down to 2 (Fig. 6,
+//! Table 2); [`Precision`] is how a caller names a point on that axis —
+//! from the `quant/` codecs, through the [`crate::inference::Engine`]
+//! instantiations, the ActorQ quantize-on-broadcast path, up to the
+//! `--bits` sweeps in the experiment harness. Adding a future precision
+//! (int2 four-per-byte packing, fp16 actors, per-layer mixes) means
+//! extending this enum and the codec behind it — not forking a new
+//! engine type per format.
+
+use crate::error::{Error, Result};
+
+/// Numeric format of a deployed policy copy.
+///
+/// `Int(b)` is the uniform-affine integer grid of `quant::affine` at `b`
+/// bits (weights stored as centered codes; activations dynamically
+/// quantized at 8 bits by the engines). `Fp32` is the full-precision
+/// baseline.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Precision {
+    /// Full-precision fp32 (the paper's baseline configuration).
+    Fp32,
+    /// `b`-bit uniform affine integer grid, `b` in 2..=8 for the native
+    /// engines (sub-byte widths are stored packed, two codes per byte).
+    Int(u32),
+}
+
+impl Precision {
+    /// The paper's headline deployment precision.
+    pub const INT8: Precision = Precision::Int(8);
+    /// The packed sub-byte precision introduced with the nibble codec.
+    pub const INT4: Precision = Precision::Int(4);
+
+    /// Map a CLI-style bitwidth to a precision (32 -> fp32).
+    pub fn from_bits(bits: u32) -> Precision {
+        if bits >= 32 {
+            Precision::Fp32
+        } else {
+            Precision::Int(bits)
+        }
+    }
+
+    /// Storage/compute bitwidth (32 for fp32).
+    pub fn bits(&self) -> u32 {
+        match self {
+            Precision::Fp32 => 32,
+            Precision::Int(b) => *b,
+        }
+    }
+
+    /// Human/bench label: "fp32", "int8", "int4", ...
+    pub fn label(&self) -> String {
+        match self {
+            Precision::Fp32 => "fp32".into(),
+            Precision::Int(b) => format!("int{b}"),
+        }
+    }
+
+    pub fn is_quantized(&self) -> bool {
+        matches!(self, Precision::Int(_))
+    }
+
+    /// Whether the native deployment engines implement this precision
+    /// (fp32, or an integer grid the i8/nibble codecs can store).
+    pub fn engine_supported(&self) -> bool {
+        matches!(self, Precision::Fp32 | Precision::Int(2..=8))
+    }
+
+    /// Error unless [`Precision::engine_supported`].
+    pub fn validate_for_engine(&self) -> Result<()> {
+        if self.engine_supported() {
+            Ok(())
+        } else {
+            Err(Error::Quant(format!(
+                "precision {} has no native engine (supported: fp32, int2..=int8)",
+                self.label()
+            )))
+        }
+    }
+
+    /// Bytes of weight storage per parameter in the deployment
+    /// representation: 4 for fp32, 1 per i8 code, 0.5 for packed
+    /// sub-byte codes (two per byte). Biases stay fp32 in every engine
+    /// and are accounted separately.
+    pub fn weight_bytes_per_param(&self) -> f64 {
+        match self {
+            Precision::Fp32 => 4.0,
+            Precision::Int(b) if *b <= 4 => 0.5,
+            Precision::Int(_) => 1.0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn labels_and_bits() {
+        assert_eq!(Precision::Fp32.label(), "fp32");
+        assert_eq!(Precision::Int(8).label(), "int8");
+        assert_eq!(Precision::Int(4).label(), "int4");
+        assert_eq!(Precision::Fp32.bits(), 32);
+        assert_eq!(Precision::INT4.bits(), 4);
+        assert_eq!(Precision::from_bits(32), Precision::Fp32);
+        assert_eq!(Precision::from_bits(8), Precision::INT8);
+    }
+
+    #[test]
+    fn engine_support_window() {
+        assert!(Precision::Fp32.engine_supported());
+        for b in 2..=8 {
+            assert!(Precision::Int(b).engine_supported(), "int{b}");
+        }
+        assert!(!Precision::Int(1).engine_supported());
+        assert!(!Precision::Int(16).engine_supported());
+        assert!(Precision::Int(16).validate_for_engine().is_err());
+        assert!(Precision::INT4.validate_for_engine().is_ok());
+    }
+
+    #[test]
+    fn packed_widths_halve_weight_bytes() {
+        assert_eq!(Precision::Fp32.weight_bytes_per_param(), 4.0);
+        assert_eq!(Precision::Int(8).weight_bytes_per_param(), 1.0);
+        assert_eq!(Precision::Int(5).weight_bytes_per_param(), 1.0);
+        assert_eq!(Precision::Int(4).weight_bytes_per_param(), 0.5);
+        assert_eq!(Precision::Int(2).weight_bytes_per_param(), 0.5);
+    }
+}

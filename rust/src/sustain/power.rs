@@ -11,11 +11,15 @@
 //!    costs for the pure-Rust deployment engines, from the per-op /
 //!    per-byte figures of Horowitz's energy tables (ISSCC 2014, 45 nm):
 //!    an int8 MAC costs ~20x less than an fp32 MAC and moves 4x fewer
-//!    weight bytes. This is what makes the fp32-vs-int8 comparison
-//!    deterministic — it depends on operation counts, not on how noisy
-//!    the benchmarking machine is.
+//!    weight bytes — and packed sub-byte weights (int4 and below) halve
+//!    the weight traffic again. Integer MACs are billed at the 8-bit
+//!    MAC cost regardless of storage width: the engines unpack sub-byte
+//!    codes into an 8-bit datapath, so packing is a *traffic* saving,
+//!    not an arithmetic one. This is what makes the precision
+//!    comparison deterministic — it depends on operation counts, not on
+//!    how noisy the benchmarking machine is.
 
-use crate::actorq::ActorPrecision;
+use crate::quant::Precision;
 use crate::sustain::meter::Component;
 
 /// Joules per kilowatt-hour.
@@ -81,28 +85,28 @@ pub fn mlp_macs(dims: &[usize]) -> f64 {
     dims.windows(2).map(|w| (w[0] * w[1]) as f64).sum()
 }
 
-/// Weight bytes touched by one forward pass at `precision` (i8 codes vs
-/// f32 weights; biases stay f32 in both engines).
-pub fn mlp_weight_bytes(dims: &[usize], precision: ActorPrecision) -> f64 {
-    let w_bytes = match precision {
-        ActorPrecision::Fp32 => 4.0,
-        ActorPrecision::Int8 => 1.0,
-    };
+/// Weight bytes touched by one forward pass at `precision` — f32
+/// weights, i8 codes, or packed sub-byte codes (two per byte at int4
+/// and below); biases stay f32 in every engine.
+pub fn mlp_weight_bytes(dims: &[usize], precision: Precision) -> f64 {
+    let w_bytes = precision.weight_bytes_per_param();
     dims.windows(2).map(|w| (w[0] * w[1]) as f64 * w_bytes + w[1] as f64 * 4.0).sum()
 }
 
 /// Modeled joules of one deployment-engine forward pass: arithmetic
-/// energy plus weight traffic.
-pub fn forward_joules(precision: ActorPrecision, macs: f64, weight_bytes: f64) -> f64 {
+/// energy plus weight traffic. Integer MACs bill at the int8 cost for
+/// every stored width (the unpacked datapath is 8-bit); sub-byte widths
+/// differ through `weight_bytes` alone.
+pub fn forward_joules(precision: Precision, macs: f64, weight_bytes: f64) -> f64 {
     let pj_mac = match precision {
-        ActorPrecision::Fp32 => PJ_PER_MAC_FP32,
-        ActorPrecision::Int8 => PJ_PER_MAC_INT8,
+        Precision::Fp32 => PJ_PER_MAC_FP32,
+        Precision::Int(_) => PJ_PER_MAC_INT8,
     };
     (macs * pj_mac + weight_bytes * PJ_PER_WEIGHT_BYTE) * 1e-12
 }
 
 /// Convenience: modeled joules per forward for an MLP shape.
-pub fn mlp_forward_joules(dims: &[usize], precision: ActorPrecision) -> f64 {
+pub fn mlp_forward_joules(dims: &[usize], precision: Precision) -> f64 {
     forward_joules(precision, mlp_macs(dims), mlp_weight_bytes(dims, precision))
 }
 
@@ -115,20 +119,25 @@ mod tests {
         // cartpole policy: 4 -> 64 -> 64 -> 2
         let dims = [4usize, 64, 64, 2];
         assert_eq!(mlp_macs(&dims), (4 * 64 + 64 * 64 + 64 * 2) as f64);
-        let f32_bytes = mlp_weight_bytes(&dims, ActorPrecision::Fp32);
-        let i8_bytes = mlp_weight_bytes(&dims, ActorPrecision::Int8);
+        let f32_bytes = mlp_weight_bytes(&dims, Precision::Fp32);
+        let i8_bytes = mlp_weight_bytes(&dims, Precision::Int(8));
+        let i4_bytes = mlp_weight_bytes(&dims, Precision::Int(4));
         assert_eq!(f32_bytes, (4480 * 4 + (64 + 64 + 2) * 4) as f64);
         assert_eq!(i8_bytes, (4480 + (64 + 64 + 2) * 4) as f64);
+        assert_eq!(i4_bytes, (4480 / 2 + (64 + 64 + 2) * 4) as f64);
         assert!(f32_bytes / i8_bytes > 3.5);
+        assert!(i8_bytes / i4_bytes > 1.5, "packing must show up in traffic");
     }
 
     #[test]
-    fn int8_forward_is_cheaper_for_any_shape() {
+    fn quantized_forward_is_cheaper_for_any_shape() {
         for dims in [&[4usize, 64, 64, 2][..], &[12, 256, 256, 25], &[2, 8, 1]] {
-            let f = mlp_forward_joules(dims, ActorPrecision::Fp32);
-            let q = mlp_forward_joules(dims, ActorPrecision::Int8);
+            let f = mlp_forward_joules(dims, Precision::Fp32);
+            let q = mlp_forward_joules(dims, Precision::Int(8));
+            let q4 = mlp_forward_joules(dims, Precision::Int(4));
             assert!(f > q, "fp32 {f} must exceed int8 {q} for {dims:?}");
             assert!(f / q > 2.0, "energy ratio {:.2} suspiciously small", f / q);
+            assert!(q > q4, "int4 packing must bill less traffic than int8 for {dims:?}");
         }
     }
 

@@ -6,7 +6,7 @@
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 
-use quarl::actorq::{ActorEngine, ActorPrecision, ParamBroadcast};
+use quarl::actorq::{ActorEngine, ParamBroadcast, Precision};
 use quarl::rng::Pcg32;
 use quarl::runtime::manifest::TensorSpec;
 use quarl::runtime::ParamSet;
@@ -33,17 +33,19 @@ fn prop_broadcast_roundtrip_error_bounded() {
     for case in 0..30u64 {
         let hidden = 8 + rng.below_usize(56);
         let p = mlp_params(&[4, hidden, 2], 500 + case);
-        let bc = ParamBroadcast::new(&p, ActorPrecision::Int8).unwrap();
+        let bc = ParamBroadcast::new(&p, Precision::Int(8)).unwrap();
         let snap = bc.latest();
-        let ActorEngine::Int8(ref eng) = snap.engine else {
-            panic!("int8 precision must publish the int8 engine");
+        let ActorEngine::Quant(ref eng) = snap.engine else {
+            panic!("int8 precision must publish the quantized engine");
         };
+        assert_eq!(eng.bits, 8);
         for (li, layer) in eng.layers.iter().enumerate() {
             let w = &p.tensors[2 * li];
-            assert_eq!(w.len(), layer.wq.len());
+            let codes = layer.codes.to_vec();
+            assert_eq!(w.len(), codes.len());
             let mut err_sum = 0.0f64;
             let mut n_off_rail = 0usize;
-            for (i, (&orig, &code)) in w.data().iter().zip(&layer.wq).enumerate() {
+            for (i, (&orig, &code)) in w.data().iter().zip(&codes).enumerate() {
                 // shared clamping rule: codes are exactly QParams::quantize_i8
                 assert_eq!(code, layer.w_qp.quantize_i8(orig), "case {case} layer {li} idx {i}");
                 if code > -128 && code < 127 {
@@ -76,7 +78,7 @@ fn prop_broadcast_roundtrip_error_bounded() {
 #[test]
 fn prop_fp32_broadcast_is_lossless() {
     let p = mlp_params(&[6, 24, 3], 77);
-    let bc = ParamBroadcast::new(&p, ActorPrecision::Fp32).unwrap();
+    let bc = ParamBroadcast::new(&p, Precision::Fp32).unwrap();
     let snap = bc.latest();
     let ActorEngine::F32(ref eng) = snap.engine else {
         panic!("fp32 precision must publish the fp32 engine");
@@ -96,7 +98,7 @@ fn prop_versions_monotone_under_concurrent_publishers() {
     const READERS: usize = 3;
 
     let base = mlp_params(&[4, 16, 2], 9);
-    let bc = Arc::new(ParamBroadcast::new(&base, ActorPrecision::Int8).unwrap());
+    let bc = Arc::new(ParamBroadcast::new(&base, Precision::Int(8)).unwrap());
     let done = Arc::new(AtomicBool::new(false));
 
     // Readers poll version() and latest() as fast as they can, recording
@@ -158,7 +160,7 @@ fn prop_publish_returns_strictly_increasing_versions_per_thread() {
     const THREADS: usize = 4;
     const EACH: usize = 20;
     let base = mlp_params(&[4, 8, 2], 3);
-    let bc = Arc::new(ParamBroadcast::new(&base, ActorPrecision::Fp32).unwrap());
+    let bc = Arc::new(ParamBroadcast::new(&base, Precision::Fp32).unwrap());
     let handles: Vec<_> = (0..THREADS)
         .map(|k| {
             let bc = bc.clone();

@@ -3,7 +3,7 @@
 //! mean-reward floor as the synchronous driver at equal step budget.
 //! Skips (like `e2e_training.rs`) when `artifacts/` is absent.
 
-use quarl::actorq::{ActorPrecision, ActorQConfig};
+use quarl::actorq::{ActorQConfig, Precision};
 use quarl::algos::dqn;
 use quarl::coordinator::{evaluate, EvalMode};
 use quarl::runtime::Runtime;
@@ -24,7 +24,7 @@ fn actorq_int8_matches_sync_reward_floor() {
     let (sync_policy, sync_log) = dqn::train(&rt, &cfg).unwrap();
     let sync_eval = evaluate(&rt, &sync_policy, 5, EvalMode::AsTrained, 3).unwrap();
 
-    let acfg = ActorQConfig::new(2).with_precision(ActorPrecision::Int8);
+    let acfg = ActorQConfig::new(2).with_precision(Precision::Int(8));
     let (aq_policy, aq_log) = dqn::train_actorq(&rt, &cfg, &acfg).unwrap();
     let aq_eval = evaluate(&rt, &aq_policy, 5, EvalMode::AsTrained, 3).unwrap();
 
@@ -67,7 +67,7 @@ fn actorq_fp32_short_run() {
     cfg.total_steps = 1_500;
     cfg.warmup = 200;
     cfg.seed = 12;
-    let acfg = ActorQConfig::new(2).with_precision(ActorPrecision::Fp32);
+    let acfg = ActorQConfig::new(2).with_precision(Precision::Fp32);
     let (policy, log) = dqn::train_actorq(&rt, &cfg, &acfg).unwrap();
     assert!(log.env_steps >= cfg.total_steps);
     assert_eq!(log.actor_stats.len(), 2);
@@ -84,7 +84,7 @@ fn actorq_ddpg_short_run() {
     cfg.total_steps = 1_200;
     cfg.warmup = 300;
     cfg.seed = 13;
-    let acfg = ActorQConfig::new(2).with_precision(ActorPrecision::Int8);
+    let acfg = ActorQConfig::new(2).with_precision(Precision::Int(8));
     let (policy, log) = quarl::algos::ddpg::train_actorq(&rt, &cfg, &acfg).unwrap();
     assert!(log.env_steps >= cfg.total_steps);
     assert!(log.train_steps > 0 && log.broadcasts > 0);

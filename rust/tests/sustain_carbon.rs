@@ -5,7 +5,7 @@
 
 use std::sync::Arc;
 
-use quarl::actorq::ActorPrecision;
+use quarl::actorq::Precision;
 use quarl::runtime::json::Json;
 use quarl::sustain::{
     mlp_forward_joules, mlp_macs, mlp_weight_bytes, CarbonComparison, CarbonIntensity,
@@ -137,10 +137,10 @@ fn report_and_comparison_json_round_trip() {
 fn flop_model_favours_int8_and_matches_counts() {
     let dims = [4usize, 64, 64, 2];
     assert_eq!(mlp_macs(&dims), 4480.0);
-    assert_eq!(mlp_weight_bytes(&dims, ActorPrecision::Fp32), 4.0 * 4480.0 + 130.0 * 4.0);
-    assert_eq!(mlp_weight_bytes(&dims, ActorPrecision::Int8), 4480.0 + 130.0 * 4.0);
-    let f = mlp_forward_joules(&dims, ActorPrecision::Fp32);
-    let q = mlp_forward_joules(&dims, ActorPrecision::Int8);
+    assert_eq!(mlp_weight_bytes(&dims, Precision::Fp32), 4.0 * 4480.0 + 130.0 * 4.0);
+    assert_eq!(mlp_weight_bytes(&dims, Precision::Int(8)), 4480.0 + 130.0 * 4.0);
+    let f = mlp_forward_joules(&dims, Precision::Fp32);
+    let q = mlp_forward_joules(&dims, Precision::Int(8));
     assert!(f > 0.0 && q > 0.0 && f > q);
     // ratio must clear the acceptance bar (> 1.0) with margin
     assert!(f / q > 2.0, "modeled fp32:int8 energy ratio {:.2}", f / q);

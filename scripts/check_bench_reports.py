@@ -1,0 +1,65 @@
+#!/usr/bin/env python3
+"""Sanity-check emitted BENCH_*.json reports: each file must parse as
+JSON and carry the expected top-level keys, and sweep-style reports must
+contain at least one row. Used by CI after running the offline bench /
+experiment paths; also handy locally:
+
+    python3 scripts/check_bench_reports.py rust/BENCH_engines.json ...
+
+Exit code 0 = all files OK; 1 = any file missing, unparseable, or
+missing keys.
+"""
+
+import json
+import sys
+
+# file-name prefix -> (required top-level keys, key holding the row list or None)
+EXPECTATIONS = {
+    "BENCH_engines": (["bench", "mlp", "bits", "headline_int8_b64_w512_speedup", "rows"], "rows"),
+    "BENCH_actorq": (["bench", "env", "window_ms", "rows"], "rows"),
+    "BENCH_carbon": (["bench", "regions_billed", "cells", "mean_kg_co2eq_ratio"], "cells"),
+}
+
+
+def check(path: str) -> list:
+    errors = []
+    name = path.rsplit("/", 1)[-1].rsplit(".", 1)[0]
+    expected = EXPECTATIONS.get(name)
+    if expected is None:
+        return [f"{path}: no expectations registered for '{name}'"]
+    keys, rows_key = expected
+    try:
+        with open(path, "r", encoding="utf-8") as f:
+            doc = json.load(f)
+    except FileNotFoundError:
+        return [f"{path}: missing"]
+    except json.JSONDecodeError as e:
+        return [f"{path}: invalid JSON ({e})"]
+    if not isinstance(doc, dict):
+        return [f"{path}: top level is {type(doc).__name__}, expected object"]
+    for k in keys:
+        if k not in doc:
+            errors.append(f"{path}: missing top-level key '{k}'")
+    if rows_key and isinstance(doc.get(rows_key), list) and not doc[rows_key]:
+        errors.append(f"{path}: '{rows_key}' is empty")
+    return errors
+
+
+def main(argv: list) -> int:
+    if not argv:
+        print("usage: check_bench_reports.py BENCH_*.json...", file=sys.stderr)
+        return 1
+    all_errors = []
+    for path in argv:
+        errs = check(path)
+        if errs:
+            all_errors.extend(errs)
+        else:
+            print(f"ok: {path}")
+    for e in all_errors:
+        print(f"error: {e}", file=sys.stderr)
+    return 1 if all_errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
