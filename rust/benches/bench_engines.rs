@@ -1,37 +1,51 @@
 //! Bench: batched inference kernels — rows/sec of `forward_batch` vs the
 //! per-row scalar `forward` across batch size x layer width x engine
-//! bitwidth (fp32 baseline plus every `--bits` width on the generic
-//! quantized engine, packed two-codes-per-byte below int5).
+//! bitwidth x kernel variant (fp32 baseline plus every `--bits` width on
+//! the generic quantized engine; packed nibbles below int5, packed
+//! crumbs at int2).
 //!
 //!     cargo bench --bench bench_engines
 //!     cargo bench --bench bench_engines -- --bits 2,4,8
-//!     cargo bench --bench bench_engines -- --quick --bits 4,8   # CI smoke
+//!     cargo bench --bench bench_engines -- --threads 4
+//!     cargo bench --bench bench_engines -- --quick --bits 2,4,8   # CI smoke
 //!
 //! `--bits` takes the validated 2..=16 CLI list; widths without a native
 //! engine (> 8) are skipped with a note. The fp32 baseline always runs.
 //! `--quick` trims the sweep to the narrowest MLP for the CI
-//! sanity-check job.
+//! sanity-check job. `--threads T` (> 1) additionally measures the
+//! prepacked kernel with T intra-op workers.
+//!
+//! Every quantized width is measured on BOTH kernel variants, tagged in
+//! the `kernel` row field, so `BENCH_engines.json` records the
+//! before/after of the panel-major rework:
+//!
+//! * `"panel"`    — construction-time panel-major prepack + SWAR bulk
+//!   unpack + 4x4 microkernel (the default engine);
+//! * `"rowmajor"` — the PR-4 input-major kernel (strided gather +
+//!   per-code unpack inside the tile loop), kept as the reference;
+//! * `"base"`     — the fp32 baseline engine (one layout).
 //!
 //! Acceptance shape: at batch 64 on the 128x512x512x25 MLP the int8
-//! batched kernel clears >= 2x the scalar per-row rows/sec — the weight
-//! panel is streamed once per batch instead of once per row, which is
-//! the paper's memory-bandwidth argument applied along the batch axis.
-//! int4 rows track int8 (same integer GEMM; the nibble unpack is
-//! amortized per panel) while halving the streamed weight bytes.
+//! batched kernel clears >= 2x the scalar per-row rows/sec (the weight
+//! panel is streamed once per batch instead of once per row — the
+//! paper's memory-bandwidth argument along the batch axis), and the
+//! int4 panel kernel beats the int4 rowmajor kernel on the wide layers
+//! (`int4_panel_vs_rowmajor_b64_w512` > 1: the SWAR unpack + sequential
+//! panels recover the throughput the scalar nibble unpack left behind).
 //!
 //! Output: the human-readable rows, then exactly one machine-readable
 //! JSON summary line (also written to `BENCH_engines.json`) so the
 //! kernel's trajectory is tracked across PRs alongside
 //! `BENCH_actorq.json`. Each row carries `engine` ("fp32"/"int8"/
-//! "int4"/...), `bits` (32 for fp32), `width`, `batch`, scalar/batched
-//! rows-per-sec, and their ratio.
+//! "int4"/...), `bits` (32 for fp32), `kernel`, `threads`, `width`,
+//! `batch`, scalar/batched rows-per-sec, and their ratio.
 
 use std::collections::BTreeMap;
 
 use quarl::bench_util::{bench, black_box};
 use quarl::config::cli::Args;
 use quarl::coordinator::metrics::write_json_file;
-use quarl::inference::Engine;
+use quarl::inference::{engine_for_cfg, Engine, EngineConfig, KernelKind};
 use quarl::quant::Precision;
 use quarl::rng::Pcg32;
 use quarl::runtime::json::{to_string, Json};
@@ -53,15 +67,63 @@ fn mlp_params(dims: &[usize], seed: u64) -> ParamSet {
     ParamSet::init(&specs, &mut rng)
 }
 
-/// JSON row for one engine x width x batch cell from the two measured
-/// per-sweep medians (ns).
-fn cell_row(
+/// One measured engine variant of the sweep.
+struct Variant {
     precision: Precision,
-    width: usize,
-    batch: usize,
-    scalar_ns: f64,
-    batched_ns: f64,
-) -> Json {
+    /// Row tag: "base" for fp32, else the kernel label.
+    kernel: &'static str,
+    threads: usize,
+    engine: Box<dyn Engine>,
+}
+
+/// Build the variant list for one width: fp32 baseline, then per
+/// quantized precision the prepacked kernel (threads 1), the PR-4
+/// row-major reference, and — when `threads > 1` — the prepacked kernel
+/// again with `threads` workers.
+fn build_variants(params: &ParamSet, precisions: &[Precision], threads: usize) -> Vec<Variant> {
+    let mut out = Vec::new();
+    for &p in precisions {
+        if p == Precision::Fp32 {
+            out.push(Variant {
+                precision: p,
+                kernel: "base",
+                threads: 1,
+                engine: engine_for_cfg(params, p, EngineConfig::default()).unwrap(),
+            });
+            continue;
+        }
+        out.push(Variant {
+            precision: p,
+            kernel: KernelKind::Prepacked.label(),
+            threads: 1,
+            engine: engine_for_cfg(params, p, EngineConfig::default()).unwrap(),
+        });
+        out.push(Variant {
+            precision: p,
+            kernel: KernelKind::RowMajor.label(),
+            threads: 1,
+            engine: engine_for_cfg(
+                params,
+                p,
+                EngineConfig { kernel: KernelKind::RowMajor, ..EngineConfig::default() },
+            )
+            .unwrap(),
+        });
+        if threads > 1 {
+            out.push(Variant {
+                precision: p,
+                kernel: KernelKind::Prepacked.label(),
+                threads,
+                engine: engine_for_cfg(params, p, EngineConfig::with_threads(threads)).unwrap(),
+            });
+        }
+    }
+    out
+}
+
+/// JSON row for one engine x kernel x width x batch cell from the two
+/// measured per-sweep medians (ns).
+fn cell_row(v: &Variant, width: usize, batch: usize, scalar_ns: f64, batched_ns: f64) -> Json {
     let rows_scalar = batch as f64 / (scalar_ns * 1e-9);
     let rows_batched = batch as f64 / (batched_ns * 1e-9);
     println!(
@@ -69,8 +131,10 @@ fn cell_row(
         scalar_ns / batched_ns
     );
     let mut row = BTreeMap::new();
-    row.insert("engine".to_string(), Json::Str(precision.label()));
-    row.insert("bits".to_string(), Json::Num(precision.bits() as f64));
+    row.insert("engine".to_string(), Json::Str(v.precision.label()));
+    row.insert("bits".to_string(), Json::Num(v.precision.bits() as f64));
+    row.insert("kernel".to_string(), Json::Str(v.kernel.to_string()));
+    row.insert("threads".to_string(), Json::Num(v.threads as f64));
     row.insert("width".to_string(), Json::Num(width as f64));
     row.insert("batch".to_string(), Json::Num(batch as f64));
     row.insert("rows_per_sec_scalar".to_string(), Json::Num(rows_scalar));
@@ -110,7 +174,8 @@ fn measure(
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let args = Args::parse(&argv).expect("bench args");
-    let bits = args.bits(&[4, 8]).expect("--bits");
+    let bits = args.bits(&[2, 4, 8]).expect("--bits");
+    let threads = args.get_usize("threads", 1).expect("--threads").max(1);
     let quick = args.has("quick");
     let widths: &[usize] = if quick { &WIDTHS[..1] } else { &WIDTHS };
 
@@ -129,17 +194,17 @@ fn main() {
     println!("== batched inference kernels: forward_batch vs per-row forward ==");
     let mut rows: Vec<Json> = Vec::new();
     let mut headline = f64::NAN;
+    // (rowmajor batched ns, panel batched ns) for the int4 wide cell
+    let mut int4_wide: (f64, f64) = (f64::NAN, f64::NAN);
     for &width in widths {
         let dims = [IN_DIM, width, width, OUT_DIM];
         let params = mlp_params(&dims, 7);
-        // Build each engine once per width (quantization is offline
-        // work, not part of the measured cells); the batch loop then
-        // reuses them so the engine-owned scratch arenas grow once to
-        // the high-water batch, as they would in a deployed sweep.
-        let mut engines: Vec<(Precision, Box<dyn Engine>)> = precisions
-            .iter()
-            .map(|&p| (p, quarl::inference::engine_for(&params, p).unwrap()))
-            .collect();
+        // Build each engine once per width (quantization + the panel
+        // repack are offline work, not part of the measured cells); the
+        // batch loop then reuses them so the engine-owned scratch arenas
+        // grow once to the high-water batch, as they would in a
+        // deployed sweep.
+        let mut variants = build_variants(&params, &precisions, threads);
         let mut rng = Pcg32::new(42, 42);
         for batch in BATCHES {
             let xs: Vec<f32> =
@@ -156,25 +221,27 @@ fn main() {
                 (20, 7)
             };
 
-            for (precision, engine) in engines.iter_mut() {
-                let precision = *precision;
+            for v in variants.iter_mut() {
                 let tag = format!(
-                    "{} {IN_DIM}x{width}x{width}x{OUT_DIM} b={batch}",
-                    precision.label()
+                    "{} {} t={} {IN_DIM}x{width}x{width}x{OUT_DIM} b={batch}",
+                    v.precision.label(),
+                    v.kernel,
+                    v.threads
                 );
-                let (s_ns, b_ns) = measure(
-                    engine.as_mut(),
-                    &tag,
-                    &xs,
-                    batch,
-                    &mut out,
-                    iters,
-                    batches,
-                );
-                if precision == Precision::Int(8) && width == 512 && batch == 64 {
+                let (s_ns, b_ns) =
+                    measure(v.engine.as_mut(), &tag, &xs, batch, &mut out, iters, batches);
+                let headline_cell = width == 512 && batch == 64 && v.threads == 1;
+                if headline_cell && v.precision == Precision::Int(8) && v.kernel == "panel" {
                     headline = s_ns / b_ns;
                 }
-                rows.push(cell_row(precision, width, batch, s_ns, b_ns));
+                if headline_cell && v.precision == Precision::Int(4) {
+                    match v.kernel {
+                        "rowmajor" => int4_wide.0 = b_ns,
+                        "panel" => int4_wide.1 = b_ns,
+                        _ => {}
+                    }
+                }
+                rows.push(cell_row(v, width, batch, s_ns, b_ns));
             }
         }
     }
@@ -187,6 +254,13 @@ fn main() {
     } else {
         println!("\n(headline cell not in this sweep — run without --quick and with 8 in --bits)");
     }
+    let int4_panel_gain = int4_wide.0 / int4_wide.1;
+    if int4_panel_gain.is_finite() {
+        println!(
+            "(int4 wide-layer before/after: the prepacked panel kernel runs \
+             {int4_panel_gain:.2}x the PR-4 rowmajor kernel at batch 64, width 512.)"
+        );
+    }
 
     let mut doc = BTreeMap::new();
     doc.insert("bench".to_string(), Json::Str("engines".into()));
@@ -195,7 +269,12 @@ fn main() {
         "bits".to_string(),
         Json::Arr(precisions.iter().map(|p| Json::Num(p.bits() as f64)).collect()),
     );
+    doc.insert("threads".to_string(), Json::Num(threads as f64));
     doc.insert("headline_int8_b64_w512_speedup".to_string(), Json::Num(headline));
+    doc.insert(
+        "int4_panel_vs_rowmajor_b64_w512".to_string(),
+        Json::Num(int4_panel_gain),
+    );
     doc.insert("rows".to_string(), Json::Arr(rows));
     let doc = Json::Obj(doc);
     // The single machine-readable summary line:

@@ -16,7 +16,7 @@ use crate::algos::common::EpsSchedule;
 use crate::envs::api::Action;
 use crate::envs::vec_env::VecEnv;
 use crate::error::Result;
-use crate::inference::{EngineF32, EngineQuant};
+use crate::inference::{EngineConfig, EngineF32, EngineQuant};
 use crate::rng::Pcg32;
 use crate::tensor::argmax;
 use crate::runtime::ParamSet;
@@ -37,12 +37,26 @@ pub enum ActorEngine {
 
 impl ActorEngine {
     /// Build from fp32 parameters at the requested precision (this is the
-    /// quantize-on-broadcast step; it runs on the learner thread).
+    /// quantize-on-broadcast step; it runs on the learner thread) with
+    /// the default engine config: panel-major prepacked kernel, one
+    /// thread per engine — the paper's one-thread-per-actor model.
     pub fn from_params(params: &ParamSet, precision: Precision) -> Result<ActorEngine> {
+        ActorEngine::from_params_cfg(params, precision, EngineConfig::default())
+    }
+
+    /// [`ActorEngine::from_params`] with an explicit kernel/threading
+    /// config ([`crate::actorq::ActorQConfig::engine_threads`] flows in
+    /// here from the learner side; fp32 engines have one layout and
+    /// ignore it).
+    pub fn from_params_cfg(
+        params: &ParamSet,
+        precision: Precision,
+        cfg: EngineConfig,
+    ) -> Result<ActorEngine> {
         match precision {
             Precision::Fp32 => EngineF32::from_params(params).map(ActorEngine::F32),
             Precision::Int(bits) => {
-                EngineQuant::from_params(params, bits).map(ActorEngine::Quant)
+                EngineQuant::from_params_cfg(params, bits, cfg).map(ActorEngine::Quant)
             }
         }
     }

@@ -22,6 +22,7 @@ use std::sync::{Arc, Mutex};
 use crate::actorq::actor::ActorEngine;
 use crate::actorq::Precision;
 use crate::error::Result;
+use crate::inference::EngineConfig;
 use crate::runtime::ParamSet;
 
 /// One published parameter snapshot: a version stamp plus the prebuilt
@@ -36,16 +37,30 @@ pub struct Snapshot {
 #[derive(Debug)]
 pub struct ParamBroadcast {
     precision: Precision,
+    engine_cfg: EngineConfig,
     slot: Mutex<Arc<Snapshot>>,
     version: AtomicU64,
 }
 
 impl ParamBroadcast {
-    /// Create with an initial snapshot at version 0.
+    /// Create with an initial snapshot at version 0 and the default
+    /// engine config (prepacked kernel, one thread per engine copy).
     pub fn new(params: &ParamSet, precision: Precision) -> Result<ParamBroadcast> {
-        let engine = ActorEngine::from_params(params, precision)?;
+        ParamBroadcast::with_config(params, precision, EngineConfig::default())
+    }
+
+    /// [`ParamBroadcast::new`] with an explicit engine kernel/threading
+    /// config; every snapshot this channel ever publishes is built with
+    /// it ([`crate::actorq::ActorQConfig::engine_threads`] enters here).
+    pub fn with_config(
+        params: &ParamSet,
+        precision: Precision,
+        engine_cfg: EngineConfig,
+    ) -> Result<ParamBroadcast> {
+        let engine = ActorEngine::from_params_cfg(params, precision, engine_cfg)?;
         Ok(ParamBroadcast {
             precision,
+            engine_cfg,
             slot: Mutex::new(Arc::new(Snapshot { version: 0, engine })),
             version: AtomicU64::new(0),
         })
@@ -62,7 +77,7 @@ impl ParamBroadcast {
         // never wait on an engine build — the critical section is just
         // the version assignment and the Arc swap, which is also what
         // keeps observed versions monotone under concurrent publishers.
-        let engine = ActorEngine::from_params(params, self.precision)?;
+        let engine = ActorEngine::from_params_cfg(params, self.precision, self.engine_cfg)?;
         let mut slot = self.slot.lock().expect("broadcast lock poisoned");
         let version = slot.version + 1;
         *slot = Arc::new(Snapshot { version, engine });

@@ -156,11 +156,17 @@ pub struct LearnerHarness {
 }
 
 impl LearnerHarness {
-    /// Quantize `params` at `cfg.acfg.precision`, spawn the actor pool,
-    /// and wire the meter — the shared front half of both drivers.
+    /// Quantize `params` at `cfg.acfg.precision` (the learner-side
+    /// engine build, carrying `acfg.engine_threads` into every
+    /// published engine copy), spawn the actor pool, and wire the
+    /// meter — the shared front half of both drivers.
     pub fn spawn(params: &ParamSet, cfg: &HarnessConfig) -> Result<LearnerHarness> {
         let meter = Arc::new(EnergyMeter::new());
-        let broadcast = Arc::new(ParamBroadcast::new(params, cfg.acfg.precision)?);
+        let broadcast = Arc::new(ParamBroadcast::with_config(
+            params,
+            cfg.acfg.precision,
+            crate::inference::EngineConfig::with_threads(cfg.acfg.engine_threads),
+        )?);
         let pool = ActorPool::spawn(
             &PoolConfig {
                 env_id: cfg.env_id.to_string(),

@@ -105,6 +105,15 @@ pub struct ActorQConfig {
     pub channel_capacity: usize,
     /// Learner train steps between parameter broadcasts.
     pub broadcast_every: usize,
+    /// Intra-op worker threads inside each engine's `forward_batch`
+    /// (wired into the quantize-on-broadcast engine build on the
+    /// learner side, so every published engine copy carries it).
+    /// Default 1 — the paper's one-thread-per-actor model, where the
+    /// parallelism axis is the actor count. Raise it only for few-actor
+    /// / wide-policy deployments where a single sweep's GEMM dominates;
+    /// with many actors, `n_actors x engine_threads` oversubscribes the
+    /// machine. Outputs are bit-identical at every setting.
+    pub engine_threads: usize,
 }
 
 impl ActorQConfig {
@@ -116,11 +125,17 @@ impl ActorQConfig {
             flush_every: 32,
             channel_capacity: 16,
             broadcast_every: 10,
+            engine_threads: 1,
         }
     }
 
     pub fn with_precision(mut self, precision: Precision) -> ActorQConfig {
         self.precision = precision;
+        self
+    }
+
+    pub fn with_engine_threads(mut self, threads: usize) -> ActorQConfig {
+        self.engine_threads = threads.max(1);
         self
     }
 }
@@ -135,6 +150,9 @@ mod tests {
         assert_eq!(c.n_actors, 1, "actor count floored at 1");
         assert!(c.flush_every > 0 && c.channel_capacity > 0 && c.broadcast_every > 0);
         assert_eq!(c.precision, Precision::Int(8));
+        assert_eq!(c.engine_threads, 1, "one-thread-per-actor model by default");
+        assert_eq!(c.with_engine_threads(0).engine_threads, 1, "floored at 1");
+        assert_eq!(c.with_engine_threads(2).engine_threads, 2);
         assert_eq!(c.with_precision(Precision::Fp32).precision, Precision::Fp32);
         assert_eq!(
             ActorQConfig::new(2).with_precision(Precision::Int(4)).precision,

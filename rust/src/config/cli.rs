@@ -19,7 +19,7 @@ pub struct Args {
 const VALUE_FLAGS: &[&str] = &[
     "artifacts", "runs-dir", "scale", "episodes", "seed", "steps", "bits",
     "only", "shard", "jobs", "env", "algo", "quant", "delay", "out", "lr",
-    "region", "cpu-watts", "accel-watts", "carbon-config",
+    "region", "cpu-watts", "accel-watts", "carbon-config", "threads",
 ];
 
 impl Args {
@@ -204,6 +204,18 @@ mod tests {
     #[test]
     fn missing_value_errors() {
         assert!(Args::parse(&argv("exp --episodes")).is_err());
+    }
+
+    #[test]
+    fn threads_flag_takes_a_value() {
+        let a = Args::parse(&argv("exp table2 --threads 4")).unwrap();
+        assert_eq!(a.get_usize("threads", 1).unwrap(), 4);
+        assert_eq!(
+            Args::parse(&argv("exp table2")).unwrap().get_usize("threads", 1).unwrap(),
+            1,
+            "defaults to the single-thread engines"
+        );
+        assert!(Args::parse(&argv("bench --threads")).is_err(), "value required");
     }
 
     #[test]

@@ -12,7 +12,7 @@ use crate::coordinator::experiment::{mean, ExpCtx, Experiment};
 use crate::coordinator::metrics::{n, render_table, row, s, Row};
 use crate::envs::registry::make_env;
 use crate::error::Result;
-use crate::inference::{EngineF32, EngineInt8, EngineQuant};
+use crate::inference::{EngineConfig, EngineF32, EngineInt8, EngineQuant};
 use crate::quant::{relative_error_pct, Precision, PtqMethod};
 
 /// Paper Table-2 cells: (algo, envs).
@@ -43,17 +43,21 @@ pub fn matrix() -> Vec<(&'static str, Vec<&'static str>)> {
 /// which the engines do not model — those cells report NaN -> JSON
 /// null). Returns `(fp32_us, int8_us, per-bits us)` over the same
 /// observation batch; `bits` entries without an engine (outside 2..=8)
-/// come back NaN.
+/// come back NaN. The quantized engines run `threads` intra-op workers
+/// (`--threads`, default 1; the fp32 baseline is single-layout and
+/// unaffected) — outputs are bit-identical, only the latency moves.
 fn engine_row_latency_us(
     policy: &TrainedPolicy,
     seed: u64,
     bits: &[u32],
+    threads: usize,
 ) -> Result<(f64, f64, Vec<f64>)> {
     let mut env = make_env(&policy.env_id)?;
     let xs = collect_obs(env.as_mut(), LAT_BATCH, seed);
+    let cfg = EngineConfig::with_threads(threads);
 
     let mut f32e = EngineF32::from_params(&policy.params)?;
-    let mut i8e = EngineInt8::from_params(&policy.params)?;
+    let mut i8e = EngineInt8::from_params_cfg(&policy.params, cfg)?;
     let out_dim = f32e.out_dim();
     let f32_us = 1e6
         * batched_row_latency(
@@ -75,7 +79,7 @@ fn engine_row_latency_us(
             per_bits.push(f64::NAN);
             continue;
         }
-        let mut qe = EngineQuant::from_params(&policy.params, b)?;
+        let mut qe = EngineQuant::from_params_cfg(&policy.params, b, cfg)?;
         per_bits.push(
             1e6 * batched_row_latency(
                 &mut |x, bt, o| qe.forward_batch(x, bt, o).expect("quant batch"),
@@ -141,7 +145,7 @@ impl Experiment for Table2 {
         // column, already evaluated and measured above.
         let sweep: Vec<u32> = ctx.sweep_bits().iter().copied().filter(|&b| b != 8).collect();
         let (f32_us, i8_us, bits_us) = if algo == "dqn" || algo == "ddpg" {
-            engine_row_latency_us(&policy, ctx.seed + 9, &sweep)?
+            engine_row_latency_us(&policy, ctx.seed + 9, &sweep, ctx.threads)?
         } else {
             (f64::NAN, f64::NAN, vec![f64::NAN; sweep.len()])
         };
@@ -155,7 +159,16 @@ impl Experiment for Table2 {
             ("e_int8", n(relative_error_pct(fp32.mean_reward, int8.mean_reward) as f64)),
             ("fp32_us_row", n(f32_us)),
             ("int8_us_row", n(i8_us)),
-            ("infer_speedup", n(f32_us / i8_us.max(1e-12))),
+            // The tracked quantization-speedup ratio is only meaningful
+            // when both engines run one thread: the fp32 baseline has
+            // no intra-op path, so at --threads > 1 the ratio would
+            // conflate quantization with threading — report null there
+            // (the threaded latency itself stays in int8_us_row).
+            (
+                "infer_speedup",
+                n(if ctx.threads <= 1 { f32_us / i8_us.max(1e-12) } else { f64::NAN }),
+            ),
+            ("threads", n(ctx.threads as f64)),
             ("steps", n(steps as f64)),
         ])];
 
@@ -180,10 +193,16 @@ impl Experiment for Table2 {
                 ("us_row", n(us)),
                 // f64::max ignores NaN, so guard explicitly: a width
                 // with no native engine must report null, not a bogus
-                // ~1e12x speedup against the 1e-12 clamp.
+                // ~1e12x speedup against the 1e-12 clamp. Null too at
+                // --threads > 1 (same apples-to-oranges guard as the
+                // headline infer_speedup column).
                 (
                     "infer_speedup_vs_fp32",
-                    n(if us.is_finite() { f32_us / us.max(1e-12) } else { f64::NAN }),
+                    n(if us.is_finite() && ctx.threads <= 1 {
+                        f32_us / us.max(1e-12)
+                    } else {
+                        f64::NAN
+                    }),
                 ),
             ]));
         }

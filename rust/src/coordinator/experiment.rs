@@ -41,6 +41,11 @@ pub struct ExpCtx<'a> {
     pub shard: Option<(usize, usize)>,
     /// Parallel child processes (0/1 = in-process).
     pub jobs: usize,
+    /// Intra-op engine threads for batched-inference measurement cells
+    /// (`--threads`; default 1 = the single-thread engines every other
+    /// consumer runs). Outputs are bit-identical at any setting — this
+    /// only moves latency columns.
+    pub threads: usize,
     /// Carbon-accounting knobs (region, device watts, config overlay).
     pub sustain: crate::sustain::SustainConfig,
 }
@@ -206,6 +211,9 @@ fn spawn_shards(ctx: &ExpCtx, exp_name: &str) -> Result<()> {
             let b: Vec<String> = ctx.bits.iter().map(|x| x.to_string()).collect();
             cmd.arg("--bits").arg(b.join(","));
         }
+        // Engine threading must survive into shard children so latency
+        // cells are measured identically.
+        cmd.arg("--threads").arg(format!("{}", ctx.threads));
         // Carbon-accounting knobs must survive into shard children so
         // every cell is billed identically.
         cmd.arg("--region").arg(ctx.sustain.region());

@@ -14,7 +14,7 @@
 //! this).
 
 use crate::error::Result;
-use crate::inference::engine_quant::{EngineQuant, LayerQ};
+use crate::inference::engine_quant::{EngineConfig, EngineQuant, LayerQ};
 use crate::quant::Precision;
 use crate::runtime::ParamSet;
 
@@ -31,6 +31,12 @@ macro_rules! thin_engine {
             /// bitwidth.
             pub fn from_params(params: &ParamSet) -> Result<$name> {
                 EngineQuant::from_params(params, $bits).map(|inner| $name { inner })
+            }
+
+            /// [`Self::from_params`] with an explicit kernel/threading
+            /// config.
+            pub fn from_params_cfg(params: &ParamSet, cfg: EngineConfig) -> Result<$name> {
+                EngineQuant::from_params_cfg(params, $bits, cfg).map(|inner| $name { inner })
             }
 
             /// The quantized layers (codec-stored centered codes).
@@ -90,6 +96,10 @@ macro_rules! thin_engine {
 
             fn out_dim(&self) -> usize {
                 self.inner.out_dim()
+            }
+
+            fn set_threads(&mut self, threads: usize) {
+                self.inner.set_threads(threads)
             }
         }
     };

@@ -4,55 +4,143 @@
 //!
 //! This is the PR-3 int8 engine generalized over [`Precision::Int`]:
 //! weights are quantized offline to centered `bits`-bit codes with
-//! per-tensor affine parameters and stored through the
-//! [`crate::quant::codec::CodeBuf`] codec — one i8 code per byte for
-//! bits 5..=8, two 4-bit two's-complement codes per byte for bits 2..=4
-//! (the packing that halves weight traffic again below int8).
-//! Activations are quantized on the fly per layer at 8 bits, exactly as
-//! the int8 engine always did: sub-byte deployment is a *weight-storage*
-//! statement, and keeping the activation rule fixed means every
-//! bitwidth shares one integer GEMM and one parity argument.
+//! per-tensor affine parameters. Activations are quantized on the fly
+//! per layer at 8 bits, exactly as the int8 engine always did: sub-byte
+//! deployment is a *weight-storage* statement, and keeping the
+//! activation rule fixed means every bitwidth shares one integer GEMM
+//! and one parity argument.
 //!
-//! Two entry points share the same integer semantics:
+//! Two weight layouts implement that contract, selected by
+//! [`EngineConfig::kernel`]:
 //!
-//! * [`EngineQuant::forward`] — single-observation GEMV (the `n == 1`
-//!   actor path). Activation codes are centered (`qa - za`) so exact
-//!   post-relu zeros can be skipped; packed weight rows are unpacked
-//!   into a reusable row buffer.
-//! * [`EngineQuant::forward_batch`] — batch-major integer GEMM, cache-
-//!   blocked over 128-column tiles with 4-wide input panels and the
-//!   activation zero-point correction hoisted via the per-column
-//!   weight-code sums (`Σ(qa−za)·qw = Σ qa·qw − za·Σ qw`). For packed
-//!   layers each 4-row panel is unpacked once into an L1-resident panel
-//!   buffer *inside* the tile loop and then consumed by every batch row
-//!   — the unpack cost is amortized over the whole batch, the same way
-//!   the weight bytes themselves are. For i8-stored layers the kernel
-//!   borrows the code rows directly, so the bits = 8 instantiation runs
-//!   the PR-3 int8 kernel unchanged.
+//! * [`KernelKind::Prepacked`] (default) — codes are repacked **once at
+//!   construction time** into panel-major order
+//!   ([`crate::inference::panel::PanelStore`]): 4-row ×
+//!   [`COL_BLOCK`]-column panels stored contiguously in exactly the
+//!   order the tile loops visit them. The GEMM/GEMV inner loops stream
+//!   sequential memory; packed sub-byte panels expand through the SWAR
+//!   bulk unpackers (16 nibble / 32 crumb codes per `u64` load) into a
+//!   single L1-resident scratch block, instead of being picked apart
+//!   code by code inside the tile loop. The batched path runs a
+//!   register-blocked 4×4 microkernel (4 batch rows × 4 input rows per
+//!   step, products paired i16-dot style before joining the i32
+//!   accumulator), and optionally splits output-column blocks across
+//!   [`EngineConfig::threads`] scoped threads.
+//! * [`KernelKind::RowMajor`] — the input-major codec layout and loop
+//!   structure of PR 4, kept as the in-tree reference: parity tests pin
+//!   the prepacked kernel against it, and `bench_engines` tags rows
+//!   with the kernel variant so `BENCH_engines.json` records the
+//!   before/after.
 //!
-//! Both paths produce bit-identical outputs per row (integer sums are
-//! exact, the float epilogue is one shared expression), and both are
-//! bit-identical to a scalar fake-quant reference built from the public
-//! [`QParams`] API — pinned by `rust/tests/engine_parity.rs`.
+//! Both layouts, both entry points ([`EngineQuant::forward`] GEMV and
+//! [`EngineQuant::forward_batch`] GEMM), and every thread count produce
+//! bit-identical outputs per row: integer accumulation is exact (any
+//! summation order yields the same i32), threads partition disjoint
+//! output columns, and the float epilogue is one shared expression —
+//! pinned by `rust/tests/engine_parity.rs` down to the scalar
+//! fake-quant reference built from public [`QParams`] math.
 
 use crate::error::{Error, Result};
+use crate::inference::panel::{PanelStore, COL_BLOCK, PANEL_ROWS};
 use crate::quant::codec::CodeBuf;
 use crate::quant::{Precision, QParams};
 use crate::runtime::ParamSet;
 
-/// Output-column tile width for the cache-blocked kernels: a 128-column
-/// i32 accumulator row is 512 B, so a 4-row weight panel (4 x 128 codes,
-/// packed or not) plus the accumulator tiles of a moderate batch stay
-/// L1-resident.
-pub(crate) const COL_BLOCK: usize = 128;
+/// Which weight layout (and loop structure) an [`EngineQuant`] runs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KernelKind {
+    /// Construction-time panel-major prepack + SWAR bulk unpack + 4×4
+    /// register-blocked microkernel (the default).
+    Prepacked,
+    /// Input-major codec storage with per-panel strided gather/unpack
+    /// inside the tile loop — the PR-4 kernel, kept as the measured and
+    /// tested reference.
+    RowMajor,
+}
+
+impl KernelKind {
+    /// Bench/report label ("panel" / "rowmajor").
+    pub fn label(&self) -> &'static str {
+        match self {
+            KernelKind::Prepacked => "panel",
+            KernelKind::RowMajor => "rowmajor",
+        }
+    }
+}
+
+/// Construction options for [`EngineQuant::from_params_cfg`] (and
+/// [`crate::inference::engine_for_cfg`]).
+#[derive(Debug, Clone, Copy)]
+pub struct EngineConfig {
+    /// Intra-op worker threads for `forward_batch`: output-column
+    /// blocks are split across `threads` scoped threads (prepacked
+    /// kernel only). 1 (the default) keeps every call on the caller's
+    /// thread — ActorQ's one-thread-per-actor model is unchanged unless
+    /// a consumer opts in. Outputs are bit-identical at every thread
+    /// count (threads own disjoint output columns).
+    pub threads: usize,
+    /// Weight layout / kernel variant.
+    pub kernel: KernelKind,
+}
+
+impl Default for EngineConfig {
+    fn default() -> EngineConfig {
+        EngineConfig { threads: 1, kernel: KernelKind::Prepacked }
+    }
+}
+
+impl EngineConfig {
+    /// Default config with `threads` workers.
+    pub fn with_threads(threads: usize) -> EngineConfig {
+        EngineConfig { threads: threads.max(1), ..EngineConfig::default() }
+    }
+}
+
+/// One layer's centered integer codes, in whichever layout the engine
+/// was built with.
+#[derive(Debug, Clone)]
+pub enum WeightStore {
+    /// Input-major `(in_dim, out_dim)` codec storage (PR-4 reference).
+    RowMajor(CodeBuf),
+    /// Construction-time panel-major prepack (default).
+    Panels(PanelStore),
+}
+
+impl WeightStore {
+    /// All codes in input-major order (test/inspection convenience).
+    pub fn to_vec(&self) -> Vec<i8> {
+        match self {
+            WeightStore::RowMajor(cb) => cb.to_vec(),
+            WeightStore::Panels(ps) => ps.to_vec(),
+        }
+    }
+
+    /// Real storage bytes (pad included for panel-major sub-byte
+    /// layouts) — the weight-traffic figure memory reports bill.
+    pub fn bytes(&self) -> usize {
+        match self {
+            WeightStore::RowMajor(cb) => cb.bytes(),
+            WeightStore::Panels(ps) => ps.bytes(),
+        }
+    }
+
+    /// Whether codes are stored sub-byte (panels/rows must be unpacked
+    /// through scratch).
+    pub fn is_packed(&self) -> bool {
+        match self {
+            WeightStore::RowMajor(cb) => cb.as_i8_slice(0, 0).is_none(),
+            WeightStore::Panels(ps) => ps.is_packed(),
+        }
+    }
+}
 
 /// One quantized dense layer.
 #[derive(Debug, Clone)]
 pub struct LayerQ {
-    /// Centered `bits`-bit codes (offset by the weight zero point),
-    /// stored input-major (in_dim, out_dim) through the codec: the
-    /// GEMV/GEMM walk inputs outer / outputs inner with unit stride.
-    pub codes: CodeBuf,
+    /// Centered `bits`-bit codes (offset by the weight zero point) in
+    /// the engine's weight layout; logically input-major
+    /// `(in_dim, out_dim)` either way.
+    pub codes: WeightStore,
     /// Per-layer weight quantization params.
     pub w_qp: QParams,
     /// Per-output-column sums of the weight codes, `col_sums[c] =
@@ -66,25 +154,40 @@ pub struct LayerQ {
     pub relu: bool,
 }
 
+/// Per-worker scratch for the thread-parallel batched path: each worker
+/// accumulates and dequantizes its column range privately, then the
+/// caller scatters the finished f32 tiles into the layer output.
+#[derive(Debug, Clone, Default)]
+struct Lane {
+    acc: Vec<i32>,
+    outb: Vec<f32>,
+    panel: Vec<i8>,
+}
+
 /// Quantized engine over a stack of `bits`-bit layers.
 ///
 /// Scratch buffers (activations, activation codes, i32 accumulators,
-/// per-row quantization metadata, the sub-byte unpack panel) are owned
-/// by the engine and reused across calls: [`EngineQuant::from_params`]
-/// sizes them for the single-observation path, and the first batched
-/// call grows them to the high-water `batch x max_dim` footprint, after
-/// which no call allocates.
+/// per-row quantization metadata, the sub-byte unpack panel, and the
+/// per-thread lanes when `threads > 1`) are owned by the engine and
+/// reused across calls: [`EngineQuant::from_params`] sizes them for the
+/// single-observation path, and the first batched call grows them to
+/// the high-water `batch x max_dim` footprint, after which no call
+/// allocates (the thread-parallel path allocates only its tiny
+/// per-layer range table).
 #[derive(Debug, Clone)]
 pub struct EngineQuant {
     pub layers: Vec<LayerQ>,
     /// Weight storage bitwidth (2..=8).
     pub bits: u32,
+    /// Intra-op worker threads for `forward_batch` (prepacked kernel).
+    threads: usize,
     /// Widest layer interface; scratch rows are strided by layer width,
     /// capacity is counted in multiples of this.
     max_dim: usize,
     /// Batch-major activations (row r of layer input at `r * in_dim`).
     act_scratch: Vec<f32>,
-    /// Raw (uncentered) activation codes for the batched kernel.
+    /// Raw (uncentered) activation codes for the batched kernel;
+    /// centered codes for the GEMV.
     qa_scratch: Vec<i32>,
     /// i32 GEMM/GEMV accumulators.
     acc_scratch: Vec<i32>,
@@ -92,10 +195,12 @@ pub struct EngineQuant {
     row_scale: Vec<f32>,
     /// Per-row activation zero point.
     row_zp: Vec<i32>,
-    /// Unpack buffer for packed weight rows: one `max_dim` row for the
-    /// GEMV plus a 4 x COL_BLOCK panel for the GEMM (sized for the
-    /// larger of the two; stays empty for i8-stored layers).
+    /// Unpack buffer for packed weight codes: one `max_dim` row for the
+    /// row-major GEMV plus a 4 x COL_BLOCK panel for the panel kernels
+    /// (sized for the larger; stays empty for i8-stored layers).
     panel: Vec<i8>,
+    /// Per-thread scratch, sized on first threaded batched call.
+    lanes: Vec<Lane>,
 }
 
 /// Dynamic activation-quantization params for one row, from its observed
@@ -130,10 +235,317 @@ fn row_range(a: &[f32]) -> (f32, f32) {
     (amin, amax)
 }
 
+/// The activation-code operand of one batched GEMM: raw 8-bit codes for
+/// `batch` rows of `n` inputs, batch-major.
+#[derive(Clone, Copy)]
+struct QaView<'a> {
+    qa: &'a [i32],
+    batch: usize,
+    n: usize,
+}
+
+/// Index mapping for a `[batch x columns]` tile buffer: row stride and
+/// the output column mapped to buffer offset 0. The sequential path
+/// views the full-width scratch (`stride = m, col0 = 0`); each worker
+/// lane views only its column range (`stride = range width, col0 =
+/// range start`).
+#[derive(Clone, Copy)]
+struct TileView {
+    stride: usize,
+    col0: usize,
+}
+
+impl TileView {
+    #[inline]
+    fn at(&self, r: usize, c: usize) -> usize {
+        r * self.stride + (c - self.col0)
+    }
+}
+
+#[inline]
+fn quad(qa: &[i32], r: usize, n: usize, i: usize) -> (i32, i32, i32, i32) {
+    let q = &qa[r * n + i..r * n + i + 4];
+    (q[0], q[1], q[2], q[3])
+}
+
+/// Raw-code integer GEMM over panel-major storage for output columns
+/// `[cols.0, cols.1)` (`cols.0` COL_BLOCK-aligned; `cols.1` aligned or
+/// the layer edge): `acc[r, c] += Σ_i qa[r, i] · qw[i, c]`, i32-exact.
+///
+/// Panels stream with a running byte cursor in storage order — one
+/// sequential read per panel, one SWAR bulk unpack into `scratch` when
+/// the layer is stored sub-byte (i8 panels are borrowed in place). The
+/// microkernel is register-blocked 4×4: four batch rows consume four
+/// weight rows per pass, so each weight value is loaded once per four
+/// rows of output, and the four products pair up `(p0+p1)+(p2+p3)` —
+/// the association an i16-dot SIMD instruction would produce; all
+/// arithmetic is exact in i32, so blocking is a speed choice, not a
+/// numerics one.
+fn gemm_panels(
+    ps: &PanelStore,
+    a: QaView,
+    cols: (usize, usize),
+    acc: &mut [i32],
+    view: TileView,
+    scratch: &mut [i8],
+) {
+    let (c_lo, c_hi) = cols;
+    let n = a.n;
+    let mut c0 = c_lo;
+    let mut block = c_lo / COL_BLOCK;
+    while c0 < c_hi {
+        let cb = COL_BLOCK.min(c_hi - c0);
+        let mut off = ps.block_start(block);
+        let mut i = 0;
+        while i + PANEL_ROWS <= n {
+            let (w, next) = ps.panel(off, PANEL_ROWS * cb, scratch);
+            off = next;
+            let (w0, rest) = w.split_at(cb);
+            let (w1, rest) = rest.split_at(cb);
+            let (w2, w3) = rest.split_at(cb);
+            let mut r = 0;
+            while r + 4 <= a.batch {
+                let (q00, q01, q02, q03) = quad(a.qa, r, n, i);
+                let (q10, q11, q12, q13) = quad(a.qa, r + 1, n, i);
+                let (q20, q21, q22, q23) = quad(a.qa, r + 2, n, i);
+                let (q30, q31, q32, q33) = quad(a.qa, r + 3, n, i);
+                let base = view.at(r, c0);
+                let (r0, rest) = acc[base..].split_at_mut(view.stride);
+                let (r1, rest) = rest.split_at_mut(view.stride);
+                let (r2, r3) = rest.split_at_mut(view.stride);
+                for j in 0..cb {
+                    let (wa, wb, wc, wd) =
+                        (w0[j] as i32, w1[j] as i32, w2[j] as i32, w3[j] as i32);
+                    r0[j] += (q00 * wa + q01 * wb) + (q02 * wc + q03 * wd);
+                    r1[j] += (q10 * wa + q11 * wb) + (q12 * wc + q13 * wd);
+                    r2[j] += (q20 * wa + q21 * wb) + (q22 * wc + q23 * wd);
+                    r3[j] += (q30 * wa + q31 * wb) + (q32 * wc + q33 * wd);
+                }
+                r += 4;
+            }
+            while r < a.batch {
+                let (q0, q1, q2, q3) = quad(a.qa, r, n, i);
+                if (q0 | q1 | q2 | q3) != 0 {
+                    let base = view.at(r, c0);
+                    let row = &mut acc[base..base + cb];
+                    for j in 0..cb {
+                        row[j] += (q0 * w0[j] as i32 + q1 * w1[j] as i32)
+                            + (q2 * w2[j] as i32 + q3 * w3[j] as i32);
+                    }
+                }
+                r += 1;
+            }
+            i += PANEL_ROWS;
+        }
+        if i < n {
+            let rows = n - i;
+            let (w, _) = ps.panel(off, rows * cb, scratch);
+            for k in 0..rows {
+                let wk = &w[k * cb..(k + 1) * cb];
+                for r in 0..a.batch {
+                    let q0 = a.qa[r * n + i + k];
+                    if q0 == 0 {
+                        continue;
+                    }
+                    let base = view.at(r, c0);
+                    let row = &mut acc[base..base + cb];
+                    for (d, &wv) in row.iter_mut().zip(wk) {
+                        *d += q0 * wv as i32;
+                    }
+                }
+            }
+        }
+        c0 += cb;
+        block += 1;
+    }
+}
+
+/// The PR-4 reference GEMM: input-major codec storage, 4-wide input
+/// panels gathered (and, sub-byte, unpacked code by code) inside the
+/// tile loop. Always full-width and sequential; same i32 sums as
+/// [`gemm_panels`].
+fn gemm_rowmajor(codes: &CodeBuf, a: QaView, m: usize, acc: &mut [i32], panel: &mut [i8]) {
+    let n = a.n;
+    let mut c0 = 0;
+    while c0 < m {
+        let cb = COL_BLOCK.min(m - c0);
+        let mut i = 0;
+        while i + 4 <= n {
+            let (w0, w1, w2, w3): (&[i8], &[i8], &[i8], &[i8]) =
+                match codes.as_i8_slice(i * m + c0, cb) {
+                    Some(s0) => (
+                        s0,
+                        codes.as_i8_slice((i + 1) * m + c0, cb).unwrap(),
+                        codes.as_i8_slice((i + 2) * m + c0, cb).unwrap(),
+                        codes.as_i8_slice((i + 3) * m + c0, cb).unwrap(),
+                    ),
+                    None => {
+                        for k in 0..4 {
+                            codes.slice_into(
+                                (i + k) * m + c0,
+                                &mut panel[k * cb..(k + 1) * cb],
+                            );
+                        }
+                        (
+                            &panel[..cb],
+                            &panel[cb..2 * cb],
+                            &panel[2 * cb..3 * cb],
+                            &panel[3 * cb..4 * cb],
+                        )
+                    }
+                };
+            for r in 0..a.batch {
+                let (q0, q1, q2, q3) = quad(a.qa, r, n, i);
+                let row = &mut acc[r * m + c0..r * m + c0 + cb];
+                for j in 0..cb {
+                    row[j] += q0 * w0[j] as i32
+                        + q1 * w1[j] as i32
+                        + q2 * w2[j] as i32
+                        + q3 * w3[j] as i32;
+                }
+            }
+            i += 4;
+        }
+        while i < n {
+            let w0: &[i8] = match codes.as_i8_slice(i * m + c0, cb) {
+                Some(s) => s,
+                None => {
+                    codes.slice_into(i * m + c0, &mut panel[..cb]);
+                    &panel[..cb]
+                }
+            };
+            for r in 0..a.batch {
+                let q0 = a.qa[r * n + i];
+                if q0 == 0 {
+                    continue;
+                }
+                let row = &mut acc[r * m + c0..r * m + c0 + cb];
+                for (d, &wv) in row.iter_mut().zip(w0) {
+                    *d += q0 * wv as i32;
+                }
+            }
+            i += 1;
+        }
+        c0 += cb;
+    }
+}
+
+/// Centered-code integer GEMV over panel-major storage (the `n == 1`
+/// actor path): column blocks outer, panels inner, post-relu zero rows
+/// skipped — all-zero panels skip their unpack entirely via the byte
+/// cursor.
+fn gemv_panels(ps: &PanelStore, qa: &[i32], m: usize, acc: &mut [i32], scratch: &mut [i8]) {
+    let n = qa.len();
+    let mut c0 = 0;
+    let mut block = 0;
+    while c0 < m {
+        let cb = COL_BLOCK.min(m - c0);
+        let mut off = ps.block_start(block);
+        let mut i = 0;
+        while i < n {
+            let rows = PANEL_ROWS.min(n - i);
+            if qa[i..i + rows].iter().all(|&q| q == 0) {
+                off = ps.skip(off, rows * cb);
+                i += rows;
+                continue;
+            }
+            let (w, next) = ps.panel(off, rows * cb, scratch);
+            off = next;
+            for k in 0..rows {
+                let q = qa[i + k];
+                if q == 0 {
+                    continue;
+                }
+                let wk = &w[k * cb..(k + 1) * cb];
+                for (d, &wv) in acc[c0..c0 + cb].iter_mut().zip(wk) {
+                    *d += q * wv as i32;
+                }
+            }
+            i += rows;
+        }
+        c0 += cb;
+        block += 1;
+    }
+}
+
+/// The PR-4 reference GEMV: input rows outer, sub-byte rows unpacked
+/// into the row buffer. Same i32 sums as [`gemv_panels`].
+fn gemv_rowmajor(codes: &CodeBuf, qa: &[i32], m: usize, acc: &mut [i32], panel: &mut [i8]) {
+    for (i, &q) in qa.iter().enumerate() {
+        if q == 0 {
+            continue;
+        }
+        let row: &[i8] = match codes.as_i8_slice(i * m, m) {
+            Some(s) => s,
+            None => {
+                codes.slice_into(i * m, &mut panel[..m]);
+                &panel[..m]
+            }
+        };
+        for (d, &qw) in acc.iter_mut().zip(row) {
+            *d += q * qw as i32;
+        }
+    }
+}
+
+/// The shared float epilogue of the batched kernels: hoisted zero-point
+/// correction, combined scale, bias, relu. The corrected i32 equals the
+/// scalar path's centered accumulation exactly, so this is the same
+/// expression `forward` evaluates — bit-identical outputs per row, per
+/// kernel variant, per thread count (each output element is touched by
+/// exactly one worker).
+struct EpiloguePass<'a> {
+    col_sums: &'a [i32],
+    bias: &'a [f32],
+    relu: bool,
+    row_scale: &'a [f32],
+    row_zp: &'a [i32],
+    batch: usize,
+}
+
+impl EpiloguePass<'_> {
+    fn run(&self, cols: (usize, usize), acc: &[i32], av: TileView, dst: &mut [f32], dv: TileView) {
+        let (c_lo, c_hi) = cols;
+        for r in 0..self.batch {
+            let scale = self.row_scale[r];
+            let za = self.row_zp[r];
+            for c in c_lo..c_hi {
+                let corrected = acc[av.at(r, c)] - za * self.col_sums[c];
+                let mut y = scale * corrected as f32 + self.bias[c];
+                if self.relu && y < 0.0 {
+                    y = 0.0;
+                }
+                dst[dv.at(r, c)] = y;
+            }
+        }
+    }
+}
+
+/// Split `n_blocks` COL_BLOCK-wide column blocks into `t` contiguous
+/// non-empty runs (`t <= n_blocks`) and return their column ranges;
+/// the final range ends at the layer edge `m`.
+fn block_ranges(n_blocks: usize, t: usize, m: usize) -> Vec<(usize, usize)> {
+    (0..t)
+        .map(|k| {
+            let b_lo = k * n_blocks / t;
+            let b_hi = (k + 1) * n_blocks / t;
+            (b_lo * COL_BLOCK, (b_hi * COL_BLOCK).min(m))
+        })
+        .collect()
+}
+
 impl EngineQuant {
     /// Quantize a trained fp32 parameter set to a `bits`-bit engine
-    /// (bits in 2..=8; sub-byte widths are stored packed).
+    /// (bits in 2..=8; sub-byte widths are stored packed) with the
+    /// default config: panel-major prepacked kernel, one thread.
     pub fn from_params(params: &ParamSet, bits: u32) -> Result<EngineQuant> {
+        EngineQuant::from_params_cfg(params, bits, EngineConfig::default())
+    }
+
+    /// Quantize with an explicit kernel/threading config. The weight
+    /// repack (for [`KernelKind::Prepacked`]) happens here, once — the
+    /// forward paths never touch input-major storage again.
+    pub fn from_params_cfg(params: &ParamSet, bits: u32, cfg: EngineConfig) -> Result<EngineQuant> {
         Precision::Int(bits).validate_for_engine()?;
         if params.tensors.len() % 2 != 0 {
             return Err(Error::Quant("param set must alternate W/b".into()));
@@ -167,8 +579,14 @@ impl EngineQuant {
                     col_sums[c] += codes[r * out_dim + c] as i32;
                 }
             }
+            let store = match cfg.kernel {
+                KernelKind::Prepacked => {
+                    WeightStore::Panels(PanelStore::pack(&codes, in_dim, out_dim, bits))
+                }
+                KernelKind::RowMajor => WeightStore::RowMajor(CodeBuf::from_codes(&codes, bits)),
+            };
             layers.push(LayerQ {
-                codes: CodeBuf::from_codes(&codes, bits),
+                codes: store,
                 w_qp,
                 col_sums,
                 b: b.data().to_vec(),
@@ -177,23 +595,37 @@ impl EngineQuant {
                 relu: i + 1 < n_layers,
             });
         }
-        let packed = layers.iter().any(|l| l.codes.as_i8_slice(0, 0).is_none());
+        let packed = layers.iter().any(|l| l.codes.is_packed());
         Ok(EngineQuant {
             layers,
             bits,
+            threads: cfg.threads.max(1),
             max_dim,
             act_scratch: vec![0.0; max_dim],
             qa_scratch: vec![0i32; max_dim],
             acc_scratch: vec![0i32; max_dim],
             row_scale: vec![0.0; 1],
             row_zp: vec![0i32; 1],
-            panel: if packed { vec![0i8; max_dim.max(4 * COL_BLOCK)] } else { Vec::new() },
+            panel: if packed { vec![0i8; max_dim.max(PANEL_ROWS * COL_BLOCK)] } else { Vec::new() },
+            lanes: Vec::new(),
         })
     }
 
     /// Deployment precision of this engine.
     pub fn precision(&self) -> Precision {
         Precision::Int(self.bits)
+    }
+
+    /// Intra-op worker threads used by `forward_batch`.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Change the intra-op thread count (floored at 1); per-thread
+    /// scratch grows on the next batched call. Outputs are bit-identical
+    /// at every setting.
+    pub fn set_threads(&mut self, threads: usize) {
+        self.threads = threads.max(1);
     }
 
     /// First-layer input width.
@@ -207,9 +639,14 @@ impl EngineQuant {
     }
 
     /// Total weight bytes (packed codes + f32 biases): the Fig-6 memory
-    /// column. Engine-side metadata (the precomputed column sums) is not
-    /// counted — it models the weight traffic a deployed policy streams,
-    /// not the resident working set.
+    /// column. This is the *real* deployed storage — for the prepacked
+    /// kernel that means panel-major bytes including the (at most one
+    /// per column block) alignment pad of sub-byte tail panels — so the
+    /// memsim swap model and the sustain/ weight-traffic billing see
+    /// what a deployed policy actually streams, not the logical code
+    /// count. Engine-side metadata (the precomputed column sums) is not
+    /// counted: it models streamed weight traffic, not resident working
+    /// set.
     pub fn memory_bytes(&self) -> usize {
         self.layers
             .iter()
@@ -218,7 +655,8 @@ impl EngineQuant {
     }
 
     /// Grow the scratch arena to hold `batch` rows; a no-op once the
-    /// high-water batch has been seen (steady-state calls never allocate).
+    /// high-water batch (and thread count) has been seen — steady-state
+    /// calls never allocate.
     fn ensure_batch(&mut self, batch: usize) {
         let need = batch * self.max_dim;
         if self.act_scratch.len() < need {
@@ -230,27 +668,52 @@ impl EngineQuant {
             self.row_scale.resize(batch, 0.0);
             self.row_zp.resize(batch, 0);
         }
+        if self.threads > 1 {
+            if self.lanes.len() < self.threads {
+                self.lanes.resize_with(self.threads, Lane::default);
+            }
+            // A lane only ever holds its own column range: at most
+            // ceil(blocks / threads) COL_BLOCK-wide blocks of the widest
+            // layer (block_ranges splits contiguously), so per-lane
+            // tiles are ~1/threads of the full batch x max_dim footprint
+            // rather than thread-count multiples of it.
+            let max_blocks = self.max_dim.div_ceil(COL_BLOCK);
+            let lane_cols = (max_blocks.div_ceil(self.threads) * COL_BLOCK).min(self.max_dim);
+            let lane_need = batch * lane_cols;
+            for lane in &mut self.lanes {
+                if lane.acc.len() < lane_need {
+                    lane.acc.resize(lane_need, 0);
+                    lane.outb.resize(lane_need, 0.0);
+                }
+                if lane.panel.len() < PANEL_ROWS * COL_BLOCK {
+                    lane.panel.resize(PANEL_ROWS * COL_BLOCK, 0);
+                }
+            }
+        }
     }
 
     /// Single-observation forward pass into `out`.
     ///
     /// Per layer: quantize activations to 8 bits (dynamic range), integer
     /// GEMV with i32 accumulation (centered codes, so exact post-relu
-    /// zeros are skipped; packed weight rows are unpacked into the row
-    /// buffer), dequantize with the combined scale. A degenerate
-    /// activation range (all-zero row) skips the GEMV and yields the
-    /// bias exactly — never an error.
+    /// zeros are skipped; packed weights stream panel-by-panel through
+    /// the SWAR unpacker, or row-by-row on the reference kernel),
+    /// dequantize with the combined scale. A degenerate activation range
+    /// (all-zero row) skips the GEMV and yields the bias exactly — never
+    /// an error.
     pub fn forward(&mut self, x: &[f32], out: &mut [f32]) -> Result<()> {
         debug_assert_eq!(x.len(), self.layers[0].in_dim);
-        self.act_scratch[..x.len()].copy_from_slice(x);
-        for (li, layer) in self.layers.iter().enumerate() {
+        let EngineQuant { layers, act_scratch, qa_scratch, acc_scratch, panel, .. } = &mut *self;
+        act_scratch[..x.len()].copy_from_slice(x);
+        let n_layers = layers.len();
+        for (li, layer) in layers.iter().enumerate() {
             let n = layer.in_dim;
-            let last = li + 1 == self.layers.len();
             let m = layer.out_dim;
-            let acc = &mut self.acc_scratch[..m];
+            let last = li + 1 == n_layers;
+            let acc = &mut acc_scratch[..m];
             acc.fill(0);
             // Dynamic activation quantization (per-tensor, per row).
-            let a = &self.act_scratch[..n];
+            let a = &act_scratch[..n];
             let (amin, amax) = row_range(a);
             let scale = match act_qparams(amin, amax) {
                 Some(a_qp) => {
@@ -260,19 +723,14 @@ impl EngineQuant {
                     // large fraction).
                     let za = a_qp.zero_point;
                     for (i, &v) in a.iter().enumerate() {
-                        let qa = (a_qp.quantize(v) - za) as i32;
-                        if qa == 0 {
-                            continue;
+                        qa_scratch[i] = (a_qp.quantize(v) - za) as i32;
+                    }
+                    match &layer.codes {
+                        WeightStore::Panels(ps) => {
+                            gemv_panels(ps, &qa_scratch[..n], m, acc, panel)
                         }
-                        let row: &[i8] = match layer.codes.as_i8_slice(i * m, m) {
-                            Some(s) => s,
-                            None => {
-                                layer.codes.slice_into(i * m, &mut self.panel[..m]);
-                                &self.panel[..m]
-                            }
-                        };
-                        for (d, &qw) in acc.iter_mut().zip(row) {
-                            *d += qa * qw as i32;
+                        WeightStore::RowMajor(cb) => {
+                            gemv_rowmajor(cb, &qa_scratch[..n], m, acc, panel)
                         }
                     }
                     a_qp.delta * layer.w_qp.delta
@@ -289,7 +747,7 @@ impl EngineQuant {
                 if last {
                     out[c] = y;
                 } else {
-                    self.act_scratch[c] = y;
+                    act_scratch[c] = y;
                 }
             }
         }
@@ -301,20 +759,24 @@ impl EngineQuant {
     /// output head. Bit-identical per row to [`EngineQuant::forward`].
     ///
     /// Per layer the whole batch is quantized once (each row keeps its
-    /// own dynamic range, matching the scalar path exactly), then a
-    /// cache-blocked integer GEMM runs over raw codes with the zero-point
-    /// correction hoisted to the epilogue:
+    /// own dynamic range, matching the scalar path exactly), then the
+    /// integer GEMM runs over raw codes with the zero-point correction
+    /// hoisted to the epilogue:
     ///
     /// ```text
     /// acc[r, c]   = Σ_i qa[r, i] · qw[i, c]          (i32, exact)
     /// y[r, c]     = scale_r · (acc[r, c] − za_r · col_sums[c]) + b[c]
     /// ```
     ///
-    /// The weight panel loaded for a column block and 4-wide input panel
-    /// — unpacked from nibbles once per panel when the layer is stored
-    /// sub-byte — is consumed by every batch row before moving on, so
-    /// weight bytes stream from memory once per sweep instead of once
-    /// per observation, and the nibble unpack is amortized the same way.
+    /// On the prepacked kernel each 4-row weight panel is one sequential
+    /// read (one SWAR bulk unpack when stored sub-byte) consumed by
+    /// every batch row through the 4×4 microkernel, so weight bytes
+    /// stream from memory once per sweep and the unpack is amortized the
+    /// same way; with `threads > 1` the output-column blocks split
+    /// across scoped worker threads, each finishing its columns through
+    /// the shared epilogue into a private tile that is then scattered
+    /// into the layer output — disjoint columns, identical per-element
+    /// arithmetic, bit-identical results at any thread count.
     pub fn forward_batch(&mut self, xs: &[f32], batch: usize, out: &mut [f32]) -> Result<()> {
         let n_layers = self.layers.len();
         let in_dim = self.in_dim();
@@ -335,121 +797,110 @@ impl EngineQuant {
         self.act_scratch[..xs.len()].copy_from_slice(xs);
 
         for li in 0..n_layers {
-            let layer = &self.layers[li];
+            let last = li + 1 == n_layers;
+            let EngineQuant {
+                layers,
+                act_scratch,
+                qa_scratch,
+                acc_scratch,
+                row_scale,
+                row_zp,
+                panel,
+                lanes,
+                threads,
+                ..
+            } = &mut *self;
+            let layer = &layers[li];
             let n = layer.in_dim;
             let m = layer.out_dim;
-            let last = li + 1 == n_layers;
 
             // --- 1. quantize the whole activation batch (once per layer;
             //        per-row dynamic ranges, same rule as the scalar path) ---
             for r in 0..batch {
-                let a = &self.act_scratch[r * n..(r + 1) * n];
+                let a = &act_scratch[r * n..(r + 1) * n];
                 let (amin, amax) = row_range(a);
                 match act_qparams(amin, amax) {
                     Some(a_qp) => {
-                        self.row_zp[r] = a_qp.zero_point as i32;
-                        self.row_scale[r] = a_qp.delta * layer.w_qp.delta;
+                        row_zp[r] = a_qp.zero_point as i32;
+                        row_scale[r] = a_qp.delta * layer.w_qp.delta;
                         for (i, &v) in a.iter().enumerate() {
-                            self.qa_scratch[r * n + i] = a_qp.quantize(v) as i32;
+                            qa_scratch[r * n + i] = a_qp.quantize(v) as i32;
                         }
                     }
                     None => {
                         // Degenerate row: all-zero-point codes, zero
                         // contribution, output is exactly the bias.
-                        self.row_zp[r] = 0;
-                        self.row_scale[r] = 0.0;
-                        self.qa_scratch[r * n..(r + 1) * n].fill(0);
+                        row_zp[r] = 0;
+                        row_scale[r] = 0.0;
+                        qa_scratch[r * n..(r + 1) * n].fill(0);
                     }
                 }
             }
 
-            // --- 2. cache-blocked integer GEMM, raw codes, 4-wide input
-            //        panels; the zero-point term is NOT in this loop.
-            //        Packed layers unpack each panel into the L1-resident
-            //        buffer once, then every batch row consumes it. ---
-            self.acc_scratch[..batch * m].fill(0);
-            let mut c0 = 0;
-            while c0 < m {
-                let cb = COL_BLOCK.min(m - c0);
-                let mut i = 0;
-                while i + 4 <= n {
-                    let (w0, w1, w2, w3): (&[i8], &[i8], &[i8], &[i8]) =
-                        match layer.codes.as_i8_slice(i * m + c0, cb) {
-                            Some(s0) => (
-                                s0,
-                                layer.codes.as_i8_slice((i + 1) * m + c0, cb).unwrap(),
-                                layer.codes.as_i8_slice((i + 2) * m + c0, cb).unwrap(),
-                                layer.codes.as_i8_slice((i + 3) * m + c0, cb).unwrap(),
-                            ),
-                            None => {
-                                for k in 0..4 {
-                                    layer.codes.slice_into(
-                                        (i + k) * m + c0,
-                                        &mut self.panel[k * cb..(k + 1) * cb],
-                                    );
-                                }
-                                (
-                                    &self.panel[..cb],
-                                    &self.panel[cb..2 * cb],
-                                    &self.panel[2 * cb..3 * cb],
-                                    &self.panel[3 * cb..4 * cb],
-                                )
-                            }
-                        };
-                    for r in 0..batch {
-                        let q = &self.qa_scratch[r * n + i..r * n + i + 4];
-                        let (q0, q1, q2, q3) = (q[0], q[1], q[2], q[3]);
-                        let acc = &mut self.acc_scratch[r * m + c0..r * m + c0 + cb];
-                        for j in 0..cb {
-                            acc[j] += q0 * w0[j] as i32
-                                + q1 * w1[j] as i32
-                                + q2 * w2[j] as i32
-                                + q3 * w3[j] as i32;
-                        }
-                    }
-                    i += 4;
+            // --- 2 + 3. integer GEMM (raw codes, zero-point term NOT in
+            //        the inner loop) + shared epilogue, on whichever
+            //        kernel this engine was built with. ---
+            let a = QaView { qa: &qa_scratch[..batch * n], batch, n };
+            let epi = EpiloguePass {
+                col_sums: &layer.col_sums,
+                bias: &layer.b,
+                relu: layer.relu,
+                row_scale: &row_scale[..batch],
+                row_zp: &row_zp[..batch],
+                batch,
+            };
+            let dst: &mut [f32] =
+                if last { &mut out[..batch * m] } else { &mut act_scratch[..batch * m] };
+            let full = TileView { stride: m, col0: 0 };
+            match &layer.codes {
+                WeightStore::RowMajor(cb) => {
+                    acc_scratch[..batch * m].fill(0);
+                    gemm_rowmajor(cb, a, m, &mut acc_scratch[..batch * m], panel);
+                    epi.run((0, m), &acc_scratch[..batch * m], full, dst, full);
                 }
-                while i < n {
-                    let w0: &[i8] = match layer.codes.as_i8_slice(i * m + c0, cb) {
-                        Some(s) => s,
-                        None => {
-                            layer.codes.slice_into(i * m + c0, &mut self.panel[..cb]);
-                            &self.panel[..cb]
-                        }
-                    };
-                    for r in 0..batch {
-                        let q0 = self.qa_scratch[r * n + i];
-                        if q0 == 0 {
-                            continue;
-                        }
-                        let acc = &mut self.acc_scratch[r * m + c0..r * m + c0 + cb];
-                        for j in 0..cb {
-                            acc[j] += q0 * w0[j] as i32;
-                        }
-                    }
-                    i += 1;
-                }
-                c0 += cb;
-            }
-
-            // --- 3. epilogue: hoisted zero-point correction, combined
-            //        scale, bias, relu. The corrected i32 equals the
-            //        scalar path's centered accumulation exactly, so the
-            //        float expression below is the same one `forward`
-            //        evaluates — bit-identical outputs. ---
-            for r in 0..batch {
-                let scale = self.row_scale[r];
-                let za = self.row_zp[r];
-                for c in 0..m {
-                    let corrected = self.acc_scratch[r * m + c] - za * layer.col_sums[c];
-                    let mut y = scale * corrected as f32 + layer.b[c];
-                    if layer.relu && y < 0.0 {
-                        y = 0.0;
-                    }
-                    if last {
-                        out[r * m + c] = y;
+                WeightStore::Panels(ps) => {
+                    // At most one worker per column block; threads is
+                    // floored at 1 everywhere it is set.
+                    let n_blocks = m.div_ceil(COL_BLOCK);
+                    let t = (*threads).min(n_blocks);
+                    if t <= 1 {
+                        acc_scratch[..batch * m].fill(0);
+                        gemm_panels(ps, a, (0, m), &mut acc_scratch[..batch * m], full, panel);
+                        epi.run((0, m), &acc_scratch[..batch * m], full, dst, full);
                     } else {
-                        self.act_scratch[r * m + c] = y;
+                        let ranges = block_ranges(n_blocks, t, m);
+                        let epi = &epi;
+                        std::thread::scope(|s| {
+                            for (lane, &(c_lo, c_hi)) in lanes.iter_mut().zip(&ranges) {
+                                s.spawn(move || {
+                                    let w = c_hi - c_lo;
+                                    let view = TileView { stride: w, col0: c_lo };
+                                    lane.acc[..batch * w].fill(0);
+                                    gemm_panels(
+                                        ps,
+                                        a,
+                                        (c_lo, c_hi),
+                                        &mut lane.acc[..batch * w],
+                                        view,
+                                        &mut lane.panel,
+                                    );
+                                    epi.run(
+                                        (c_lo, c_hi),
+                                        &lane.acc[..batch * w],
+                                        view,
+                                        &mut lane.outb[..batch * w],
+                                        view,
+                                    );
+                                });
+                            }
+                        });
+                        for (lane, &(c_lo, c_hi)) in lanes.iter().zip(&ranges) {
+                            let w = c_hi - c_lo;
+                            for r in 0..batch {
+                                dst[r * m + c_lo..r * m + c_hi]
+                                    .copy_from_slice(&lane.outb[r * w..(r + 1) * w]);
+                            }
+                        }
                     }
                 }
             }
@@ -482,6 +933,10 @@ impl crate::inference::Engine for EngineQuant {
     fn out_dim(&self) -> usize {
         EngineQuant::out_dim(self)
     }
+
+    fn set_threads(&mut self, threads: usize) {
+        EngineQuant::set_threads(self, threads)
+    }
 }
 
 #[cfg(test)]
@@ -501,6 +956,23 @@ mod tests {
     }
 
     #[test]
+    fn config_defaults_keep_the_single_thread_prepacked_contract() {
+        let cfg = EngineConfig::default();
+        assert_eq!(cfg.threads, 1);
+        assert_eq!(cfg.kernel, KernelKind::Prepacked);
+        assert_eq!(KernelKind::Prepacked.label(), "panel");
+        assert_eq!(KernelKind::RowMajor.label(), "rowmajor");
+        let p = mlp_params(&[4, 8, 2], 1);
+        let eng = EngineQuant::from_params(&p, 4).unwrap();
+        assert_eq!(eng.threads(), 1);
+        assert!(matches!(eng.layers[0].codes, WeightStore::Panels(_)));
+        let mut eng = EngineQuant::from_params_cfg(&p, 4, EngineConfig::with_threads(0)).unwrap();
+        assert_eq!(eng.threads(), 1, "thread count floors at 1");
+        eng.set_threads(3);
+        assert_eq!(eng.threads(), 3);
+    }
+
+    #[test]
     fn int4_memory_is_eighth_of_f32_weights() {
         let p = mlp_params(&[128, 512, 512, 25], 5);
         let q4 = EngineQuant::from_params(&p, 4).unwrap();
@@ -516,6 +988,22 @@ mod tests {
         assert!(r4 > 7.0 && r4 <= 8.0, "int4 ratio {r4}");
         assert!(r8 > 3.5 && r8 <= 4.0, "int8 ratio {r8}");
         assert!(q4.memory_bytes() < q8.memory_bytes());
+    }
+
+    #[test]
+    fn int2_memory_is_quarter_of_int8() {
+        // The four-per-byte crumb codec must show up in the deployed
+        // footprint: ~16x under fp32 (biases stay f32), half of int4.
+        let p = mlp_params(&[128, 512, 512, 25], 5);
+        let q2 = EngineQuant::from_params(&p, 2).unwrap();
+        let q4 = EngineQuant::from_params(&p, 4).unwrap();
+        let q8 = EngineQuant::from_params(&p, 8).unwrap();
+        let f32_bytes: usize =
+            p.tensors.iter().map(|t| t.len() * std::mem::size_of::<f32>()).sum();
+        let r2 = f32_bytes as f64 / q2.memory_bytes() as f64;
+        assert!(r2 > 14.0 && r2 <= 16.0, "int2 ratio {r2}");
+        assert!(q2.memory_bytes() < q4.memory_bytes());
+        assert!(2 * q2.memory_bytes() < q8.memory_bytes());
     }
 
     #[test]
@@ -540,6 +1028,76 @@ mod tests {
                     assert_eq!(layer.col_sums[c], want, "bits {bits} layer {li} col {c}");
                 }
             }
+        }
+    }
+
+    #[test]
+    fn rowmajor_kernel_bit_exact_with_prepacked_kernel() {
+        // The before/after claim `bench_engines` rests on: the PR-4
+        // row-major kernel and the panel-major prepacked kernel are the
+        // same function, output for output, on both entry points —
+        // including odd shapes whose packed rows straddle bytes and a
+        // multi-block width. (The deeper pin against the fake-quant
+        // reference lives in tests/engine_parity.rs.)
+        let mut rng = Pcg32::new(17, 17);
+        for (dims, bits) in [
+            (&[12usize, 64, 32, 25][..], 4u32),
+            (&[7, 33, 19, 3][..], 4),
+            (&[5, 13, 2][..], 2),
+            (&[9, 140, 6][..], 2),
+            (&[12, 64, 32, 25][..], 6),
+            (&[12, 64, 32, 25][..], 8),
+        ] {
+            let p = mlp_params(dims, 23);
+            let mut pe = EngineQuant::from_params(&p, bits).unwrap();
+            let mut re = EngineQuant::from_params_cfg(
+                &p,
+                bits,
+                EngineConfig { kernel: KernelKind::RowMajor, ..EngineConfig::default() },
+            )
+            .unwrap();
+            assert!(matches!(re.layers[0].codes, WeightStore::RowMajor(_)));
+            let din = dims[0];
+            let dout = *dims.last().unwrap();
+            let batch = 6;
+            let xs: Vec<f32> =
+                (0..batch * din).map(|_| rng.uniform_range(-1.5, 1.5)).collect();
+            let mut a = vec![0.0f32; batch * dout];
+            let mut b = vec![0.0f32; batch * dout];
+            pe.forward_batch(&xs, batch, &mut a).unwrap();
+            re.forward_batch(&xs, batch, &mut b).unwrap();
+            assert_eq!(a, b, "batched, dims {dims:?} bits {bits}");
+            for r in 0..batch {
+                pe.forward(&xs[r * din..(r + 1) * din], &mut a[..dout]).unwrap();
+                re.forward(&xs[r * din..(r + 1) * din], &mut b[..dout]).unwrap();
+                assert_eq!(a[..dout], b[..dout], "scalar row {r}, dims {dims:?} bits {bits}");
+            }
+        }
+    }
+
+    #[test]
+    fn thread_counts_produce_bit_identical_batches() {
+        // In-crate smoke for the intra-op parallel path (the exhaustive
+        // property lives in tests/engine_parity.rs): threads own
+        // disjoint output columns and run the same per-element
+        // arithmetic, so any thread count must reproduce the
+        // single-thread output exactly — including widths that don't
+        // fill a whole number of column blocks per worker.
+        let mut rng = Pcg32::new(31, 31);
+        let p = mlp_params(&[12, 300, 140, 9], 29);
+        let batch = 7;
+        let xs: Vec<f32> = (0..batch * 12).map(|_| rng.uniform_range(-2.0, 2.0)).collect();
+        let mut want = vec![0.0f32; batch * 9];
+        EngineQuant::from_params(&p, 4)
+            .unwrap()
+            .forward_batch(&xs, batch, &mut want)
+            .unwrap();
+        for threads in [2usize, 3, 4] {
+            let mut eng =
+                EngineQuant::from_params_cfg(&p, 4, EngineConfig::with_threads(threads)).unwrap();
+            let mut got = vec![0.0f32; batch * 9];
+            eng.forward_batch(&xs, batch, &mut got).unwrap();
+            assert_eq!(want, got, "threads {threads}");
         }
     }
 

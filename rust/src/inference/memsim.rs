@@ -7,6 +7,14 @@
 //! budgeted "device RAM" where every byte of weights touched beyond the
 //! budget pays a per-page swap latency (flash-read cost), calibrated to
 //! RasPi-3b class hardware.
+//!
+//! Callers feed `Engine::memory_bytes()` into this model, which reports
+//! the engine's *real* deployed storage: panel-major prepacked codes
+//! (alignment pad included) at whatever packing density the bitwidth
+//! buys — one byte per code down to four int2 codes per byte — plus the
+//! f32 biases. The swap cliff therefore moves with the actual packed
+//! footprint, not with a logical parameter count (pinned by a test
+//! below).
 
 /// RasPi-3b-like memory model.
 #[derive(Debug, Clone, Copy)]
@@ -80,6 +88,36 @@ mod tests {
         // measured (Policy III fp32 at 208 ms was partially cached; our
         // model is the worst-case bound).
         assert!(penalty > 1.0);
+    }
+
+    #[test]
+    fn swap_model_bills_the_real_prepacked_engine_footprint() {
+        // The bytes this model charges are the engine's actual
+        // panel-major storage: denser packing (int4 nibbles, int2
+        // crumbs) must move a policy across the fits-vs-spills line,
+        // and the billed figure must match Engine::memory_bytes
+        // exactly (pad and biases included), not a logical code count.
+        use crate::inference::engine_f32::test_fixtures::mlp_params;
+        use crate::inference::{EngineF32, EngineQuant};
+
+        let p = mlp_params(&[128, 512, 512, 25], 3);
+        let f = EngineF32::from_params(&p).unwrap();
+        let q8 = EngineQuant::from_params(&p, 8).unwrap();
+        let q4 = EngineQuant::from_params(&p, 4).unwrap();
+        let q2 = EngineQuant::from_params(&p, 2).unwrap();
+        assert!(q8.memory_bytes() > q4.memory_bytes());
+        assert!(q4.memory_bytes() > q2.memory_bytes());
+
+        // A budget between the int4 and int8 footprints: the packed
+        // engines fit, the byte-per-code engine spills.
+        let budget = (q4.memory_bytes() + q8.memory_bytes()) / 2;
+        let m = MemModel { ram_budget: budget, page: 4096, swap_page_secs: 200e-6 };
+        assert!(m.swap_penalty_secs(f.memory_bytes()) > 0.0);
+        assert!(m.swap_penalty_secs(q8.memory_bytes()) > 0.0);
+        assert_eq!(m.swap_penalty_secs(q4.memory_bytes()), 0.0);
+        assert_eq!(m.swap_penalty_secs(q2.memory_bytes()), 0.0);
+        // and the peak-memory report moves with the same real bytes
+        assert!(m.peak_memory_bytes(q2.memory_bytes()) < m.peak_memory_bytes(q4.memory_bytes()));
     }
 
     #[test]

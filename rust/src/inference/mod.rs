@@ -3,33 +3,42 @@
 //!
 //! * [`engine_f32`] — optimized native fp32 MLP baseline.
 //! * [`engine_quant`] — the bitwidth-generic quantized engine
-//!   ([`EngineQuant`], int2..=int8): integer weights through the
-//!   `quant::codec` storage (packed two-per-byte below int5) with i32
-//!   accumulation and 8-bit dynamic activation quantization.
+//!   ([`EngineQuant`], int2..=int8): integer weights stored
+//!   panel-major at construction time ([`panel`]) with SWAR bulk
+//!   unpacking for sub-byte codes (two-per-byte nibbles at 3..=4 bits,
+//!   four-per-byte crumbs at 2), i32 accumulation, 8-bit dynamic
+//!   activation quantization, and opt-in intra-op threading
+//!   ([`EngineConfig`]); the PR-4 row-major layout survives as the
+//!   in-tree reference kernel ([`engine_quant::KernelKind::RowMajor`]).
 //! * [`engine_int8`] — [`EngineInt8`]/[`EngineInt4`], thin
 //!   instantiations of [`EngineQuant`] at the paper's two headline
 //!   deployment widths (int8 keeps pinning bit-exactness against its
 //!   PR-3 behavior).
+//! * [`panel`] — the construction-time panel-major prepacked weight
+//!   layout the default kernels stream.
 //! * [`memsim`] — RasPi-class memory-pressure model (swap cliff).
 //!
 //! Every engine exposes a single-observation `forward` GEMV and a
 //! batch-major `forward_batch` GEMM that amortizes weight traffic over a
 //! vec-env sweep; the batched path is bit-identical per row to the
-//! scalar one (pinned by `rust/tests/engine_parity.rs`), so consumers
-//! pick purely on batch size, and pick a bitwidth purely through
+//! scalar one — across kernel variants and thread counts — (pinned by
+//! `rust/tests/engine_parity.rs`), so consumers pick purely on batch
+//! size, and pick a bitwidth purely through
 //! [`crate::quant::Precision`]. `cargo bench --bench bench_engines`
-//! sweeps batch x width x bitwidth and tracks the trajectory in
-//! `BENCH_engines.json`.
+//! sweeps batch x width x bitwidth x kernel variant and tracks the
+//! trajectory in `BENCH_engines.json`.
 
 pub mod engine_f32;
 pub mod engine_int8;
 pub mod engine_quant;
 pub mod memsim;
+pub mod panel;
 
 pub use engine_f32::EngineF32;
 pub use engine_int8::{EngineInt4, EngineInt8};
-pub use engine_quant::{EngineQuant, LayerQ};
+pub use engine_quant::{EngineConfig, EngineQuant, KernelKind, LayerQ, WeightStore};
 pub use memsim::MemModel;
+pub use panel::PanelStore;
 
 use crate::error::Result;
 use crate::quant::Precision;
@@ -50,12 +59,19 @@ pub trait Engine {
     /// Batch-major GEMM over `batch` rows; bit-identical per row to
     /// [`Engine::forward`].
     fn forward_batch(&mut self, xs: &[f32], batch: usize, out: &mut [f32]) -> Result<()>;
-    /// Weight bytes a deployed policy streams (the Fig-6 memory column).
+    /// Weight bytes a deployed policy streams (the Fig-6 memory column),
+    /// as actually stored — prepacked panel layouts report their real
+    /// (padded) footprint.
     fn memory_bytes(&self) -> usize;
     /// First-layer input width.
     fn in_dim(&self) -> usize;
     /// Output head width.
     fn out_dim(&self) -> usize;
+    /// Request `threads` intra-op workers for `forward_batch`. Outputs
+    /// must be bit-identical at every setting; engines without an
+    /// intra-op parallel path (the fp32 baseline) ignore the request —
+    /// the default implementation is a no-op.
+    fn set_threads(&mut self, _threads: usize) {}
 }
 
 /// Build the engine for `precision` as a trait object — the sweep-style
@@ -65,9 +81,20 @@ pub fn engine_for(
     params: &crate::runtime::ParamSet,
     precision: Precision,
 ) -> Result<Box<dyn Engine>> {
+    engine_for_cfg(params, precision, EngineConfig::default())
+}
+
+/// [`engine_for`] with an explicit kernel/threading config. The config
+/// applies to the quantized engines; the fp32 baseline has a single
+/// layout and runs on the caller's thread regardless.
+pub fn engine_for_cfg(
+    params: &crate::runtime::ParamSet,
+    precision: Precision,
+    cfg: EngineConfig,
+) -> Result<Box<dyn Engine>> {
     precision.validate_for_engine()?;
     Ok(match precision {
         Precision::Fp32 => Box::new(EngineF32::from_params(params)?),
-        Precision::Int(bits) => Box::new(EngineQuant::from_params(params, bits)?),
+        Precision::Int(bits) => Box::new(EngineQuant::from_params_cfg(params, bits, cfg)?),
     })
 }

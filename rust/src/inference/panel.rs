@@ -1,0 +1,302 @@
+//! Construction-time panel-major prepacked weight storage for the
+//! quantized GEMM/GEMV kernels.
+//!
+//! The training stack lays weights out input-major `(in_dim, out_dim)`;
+//! the cache-blocked kernels consume them as 4-row × `COL_BLOCK`-column
+//! *panels* (4 consecutive input rows of one output-column block). With
+//! input-major storage every panel read is strided — and for sub-byte
+//! codes it can start mid-byte, forcing a scalar per-code unpack inside
+//! the tile loop. [`PanelStore`] fixes both at engine-construction time:
+//! the codes of each panel are stored **contiguously**, panels ordered
+//! exactly as the kernels visit them (column blocks outer, 4-row groups
+//! inner, one short tail panel for `in_dim % 4` leftover rows), and every
+//! panel is padded to a byte boundary. The inner loops then stream
+//! sequential memory, and packed panels expand through the branch-free
+//! SWAR bulk unpackers (16 nibble / 32 crumb codes per `u64` load —
+//! [`crate::quant::codec::unpack_block_nib4`] /
+//! [`crate::quant::codec::unpack_block_crumb2`]) into one L1-resident
+//! scratch block instead of being picked apart code by code.
+//!
+//! The layout is a pure permutation (plus inert pad crumbs/nibbles) of
+//! the same centered codes, so kernels over a `PanelStore` are
+//! bit-identical to the row-major reference — pinned by
+//! [`PanelStore::to_vec`] round-trip tests here and the kernel parity
+//! suite in `rust/tests/engine_parity.rs`.
+
+use crate::quant::codec::{
+    pack_crumb2, pack_nib4, unpack_block_crumb2, unpack_block_nib4,
+};
+
+/// Output-column tile width shared by every cache-blocked kernel: a
+/// 128-column i32 accumulator row is 512 B, so a 4-row weight panel plus
+/// the accumulator tiles of a moderate batch stay L1-resident.
+pub const COL_BLOCK: usize = 128;
+
+/// Rows per full panel (the input-dimension unroll of the microkernel).
+pub const PANEL_ROWS: usize = 4;
+
+/// Packed panel bytes, one storage class per bitwidth family (the same
+/// split as [`crate::quant::codec::CodeBuf`], but panel-major).
+#[derive(Debug, Clone, PartialEq, Eq)]
+enum PanelData {
+    /// One code per byte (bits 5..=8) — panels borrow straight from
+    /// storage, no unpack at all.
+    I8(Vec<i8>),
+    /// Two 4-bit codes per byte (bits 3..=4).
+    Nib4(Vec<u8>),
+    /// Four 2-bit codes per byte (bits 2).
+    Crumb2(Vec<u8>),
+}
+
+/// One layer's centered codes in panel-major order.
+///
+/// Kernels walk a column block's panels with a running byte cursor:
+/// start at [`PanelStore::block_start`], then each [`PanelStore::panel`]
+/// call returns the next panel's codes and advances the cursor — the
+/// storage order *is* the visit order, so no per-panel offset table is
+/// needed beyond the per-block starts (which give the thread-parallel
+/// path an entry point per column range).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PanelStore {
+    data: PanelData,
+    in_dim: usize,
+    out_dim: usize,
+    /// Byte offset of each column block's first panel.
+    block_off: Vec<usize>,
+}
+
+impl PanelStore {
+    /// Repack input-major `(in_dim, out_dim)` codes into panel-major
+    /// order for a `bits`-wide grid (the storage class matches
+    /// `CodeBuf::from_codes`: crumbs at 2 bits, nibbles at 3..=4, one
+    /// byte per code at 5..=8).
+    pub fn pack(codes: &[i8], in_dim: usize, out_dim: usize, bits: u32) -> PanelStore {
+        debug_assert_eq!(codes.len(), in_dim * out_dim);
+        let mut data = match bits {
+            2 => PanelData::Crumb2(Vec::new()),
+            3..=4 => PanelData::Nib4(Vec::new()),
+            _ => PanelData::I8(Vec::new()),
+        };
+        let mut block_off = Vec::with_capacity(out_dim.div_ceil(COL_BLOCK).max(1));
+        let mut panel = Vec::with_capacity(PANEL_ROWS * COL_BLOCK);
+        let mut c0 = 0;
+        while c0 < out_dim {
+            let cb = COL_BLOCK.min(out_dim - c0);
+            block_off.push(data.bytes());
+            let mut i = 0;
+            while i < in_dim {
+                let rows = PANEL_ROWS.min(in_dim - i);
+                panel.clear();
+                for k in 0..rows {
+                    let row = &codes[(i + k) * out_dim + c0..(i + k) * out_dim + c0 + cb];
+                    panel.extend_from_slice(row);
+                }
+                data.append_panel(&panel);
+                i += rows;
+            }
+            c0 += cb;
+        }
+        if block_off.is_empty() {
+            block_off.push(0);
+        }
+        PanelStore { data, in_dim, out_dim, block_off }
+    }
+
+    /// Byte cursor where column block `block` (of width `COL_BLOCK`,
+    /// the last one possibly narrower) begins.
+    #[inline]
+    pub fn block_start(&self, block: usize) -> usize {
+        self.block_off[block]
+    }
+
+    /// Read one panel of `n_codes` codes at byte cursor `off`: borrowed
+    /// straight from storage for i8 codes, SWAR-bulk-unpacked into
+    /// `scratch` for packed codes. Returns the codes and the advanced
+    /// cursor. `n_codes` must match what [`PanelStore::pack`] stored at
+    /// this cursor (`rows * cb` for the current block).
+    #[inline]
+    pub fn panel<'a>(&'a self, off: usize, n_codes: usize, scratch: &'a mut [i8]) -> (&'a [i8], usize) {
+        match &self.data {
+            PanelData::I8(v) => (&v[off..off + n_codes], off + n_codes),
+            PanelData::Nib4(v) => {
+                let nb = n_codes.div_ceil(2);
+                unpack_block_nib4(&v[off..off + nb], n_codes, scratch);
+                (&scratch[..n_codes], off + nb)
+            }
+            PanelData::Crumb2(v) => {
+                let nb = n_codes.div_ceil(4);
+                unpack_block_crumb2(&v[off..off + nb], n_codes, scratch);
+                (&scratch[..n_codes], off + nb)
+            }
+        }
+    }
+
+    /// Advance the byte cursor past one panel of `n_codes` codes
+    /// without reading it (the GEMV skips whole panels whose activation
+    /// codes are all zero).
+    #[inline]
+    pub fn skip(&self, off: usize, n_codes: usize) -> usize {
+        match &self.data {
+            PanelData::I8(_) => off + n_codes,
+            PanelData::Nib4(_) => off + n_codes.div_ceil(2),
+            PanelData::Crumb2(_) => off + n_codes.div_ceil(4),
+        }
+    }
+
+    /// Real storage bytes, pad included — what a deployed policy
+    /// actually streams per forward sweep (the memory/traffic figure
+    /// `Engine::memory_bytes` and the memsim/sustain billing report).
+    pub fn bytes(&self) -> usize {
+        self.data.bytes()
+    }
+
+    /// Logical element count (`in_dim * out_dim`).
+    pub fn len(&self) -> usize {
+        self.in_dim * self.out_dim
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Whether panels must be unpacked through scratch (sub-byte
+    /// storage) or can be borrowed directly (i8 storage).
+    pub fn is_packed(&self) -> bool {
+        !matches!(self.data, PanelData::I8(_))
+    }
+
+    /// Reconstruct the input-major code vector (test/inspection
+    /// convenience; kernels walk panels directly). Exact inverse of
+    /// [`PanelStore::pack`] — pad nibbles/crumbs drop out.
+    pub fn to_vec(&self) -> Vec<i8> {
+        let (n, m) = (self.in_dim, self.out_dim);
+        let mut out = vec![0i8; n * m];
+        let mut scratch = vec![0i8; PANEL_ROWS * COL_BLOCK];
+        let mut c0 = 0;
+        let mut block = 0;
+        while c0 < m {
+            let cb = COL_BLOCK.min(m - c0);
+            let mut off = self.block_start(block);
+            let mut i = 0;
+            while i < n {
+                let rows = PANEL_ROWS.min(n - i);
+                let (codes, next) = self.panel(off, rows * cb, &mut scratch);
+                for k in 0..rows {
+                    out[(i + k) * m + c0..(i + k) * m + c0 + cb]
+                        .copy_from_slice(&codes[k * cb..(k + 1) * cb]);
+                }
+                off = next;
+                i += rows;
+            }
+            c0 += cb;
+            block += 1;
+        }
+        out
+    }
+}
+
+impl PanelData {
+    fn bytes(&self) -> usize {
+        match self {
+            PanelData::I8(v) => v.len(),
+            PanelData::Nib4(v) | PanelData::Crumb2(v) => v.len(),
+        }
+    }
+
+    /// Append one panel's codes, padding packed storage to the next
+    /// byte boundary so every panel starts byte-aligned (the SWAR bulk
+    /// unpackers need aligned starts; full 4-row panels pad nothing —
+    /// `4 * cb` codes always fill whole bytes — only a short tail panel
+    /// of odd width can leave pad positions, and they decode to inert
+    /// zeros that no kernel reads).
+    fn append_panel(&mut self, codes: &[i8]) {
+        match self {
+            PanelData::I8(v) => v.extend_from_slice(codes),
+            PanelData::Nib4(v) => v.extend_from_slice(&pack_nib4(codes)),
+            PanelData::Crumb2(v) => v.extend_from_slice(&pack_crumb2(codes)),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg32;
+
+    fn random_codes(n: usize, bits: u32, seed: u64) -> Vec<i8> {
+        let hi = ((1i32 << (bits - 1)) - 1) as i8;
+        let lo = -hi - 1;
+        let span = (hi as i32 - lo as i32 + 1) as usize;
+        let mut rng = Pcg32::new(seed, 1);
+        (0..n).map(|_| (lo as i32 + rng.below_usize(span) as i32) as i8).collect()
+    }
+
+    #[test]
+    fn roundtrip_is_exact_for_every_storage_class_and_odd_shapes() {
+        // The layout claim: panel-major is a pure permutation of the
+        // input-major codes. Shapes cover multi-block widths, odd
+        // widths (packed rows would start mid-byte row-major), tail
+        // rows (in_dim % 4 != 0), and single-row/column degenerates.
+        let shapes: [(usize, usize); 7] =
+            [(4, 128), (7, 33), (12, 64), (5, 130), (1, 3), (3, 1), (9, 257)];
+        for &(n, m) in &shapes {
+            for bits in [2u32, 3, 4, 6, 8] {
+                let codes = random_codes(n * m, bits, 1000 + n as u64 * 31 + m as u64);
+                let ps = PanelStore::pack(&codes, n, m, bits);
+                assert_eq!(ps.len(), n * m);
+                assert_eq!(ps.to_vec(), codes, "shape {n}x{m} bits {bits}");
+                assert_eq!(ps.is_packed(), bits <= 4, "shape {n}x{m} bits {bits}");
+            }
+        }
+    }
+
+    #[test]
+    fn storage_bytes_match_the_packing_density() {
+        // 6x32 at 4 bits: every panel has an even code count, so the
+        // panel layout costs exactly the row-major div_ceil bytes.
+        let codes = random_codes(6 * 32, 4, 7);
+        let ps = PanelStore::pack(&codes, 6, 32, 4);
+        assert_eq!(ps.bytes(), 96, "192 nibble codes -> 96 bytes");
+        // 9x17 at 2 bits: two full panels of 68 codes (17 B each) plus
+        // a 17-code tail panel (5 B, 3 pad crumbs) per the one block.
+        let codes = random_codes(9 * 17, 2, 8);
+        let ps = PanelStore::pack(&codes, 9, 17, 2);
+        assert_eq!(ps.bytes(), 17 + 17 + 5);
+        assert_eq!(ps.to_vec(), codes);
+        // i8 storage is always exactly one byte per code.
+        let codes = random_codes(7 * 19, 8, 9);
+        assert_eq!(PanelStore::pack(&codes, 7, 19, 8).bytes(), 7 * 19);
+    }
+
+    #[test]
+    fn block_cursors_walk_panels_in_storage_order() {
+        // Streaming claim: within a block, consecutive panel() calls
+        // advance the cursor monotonically and land exactly on the next
+        // block's recorded start.
+        let (n, m, bits) = (10usize, 300usize, 4u32);
+        let codes = random_codes(n * m, bits, 11);
+        let ps = PanelStore::pack(&codes, n, m, bits);
+        let mut scratch = vec![0i8; PANEL_ROWS * COL_BLOCK];
+        let mut block = 0;
+        let mut c0 = 0;
+        while c0 < m {
+            let cb = COL_BLOCK.min(m - c0);
+            let mut off = ps.block_start(block);
+            let mut i = 0;
+            while i < n {
+                let rows = PANEL_ROWS.min(n - i);
+                let (_, next) = ps.panel(off, rows * cb, &mut scratch);
+                assert!(next > off, "cursor advances");
+                off = next;
+                i += rows;
+            }
+            c0 += cb;
+            block += 1;
+            if c0 < m {
+                assert_eq!(off, ps.block_start(block), "block {block} start");
+            } else {
+                assert_eq!(off, ps.bytes(), "final cursor is end of storage");
+            }
+        }
+    }
+}

@@ -21,16 +21,19 @@
 //!
 //! Deployment precision is selected once, through
 //! [`quant::Precision`], and flows through every layer: the `quant`
-//! codecs store centered integer codes (one i8 code per byte, or two
-//! packed 4-bit codes per byte below int5), the [`inference::Engine`]
-//! trait is instantiated by the fp32 baseline and the bitwidth-generic
-//! [`inference::EngineQuant`] (int2..=int8, with
+//! codecs store centered integer codes (one i8 code per byte, two
+//! packed 4-bit codes per byte at 3..=4 bits, four packed 2-bit codes
+//! per byte at int2) with SWAR bulk unpackers for the packed classes,
+//! the [`inference::Engine`] trait is instantiated by the fp32 baseline
+//! and the bitwidth-generic [`inference::EngineQuant`] (int2..=int8,
+//! weights prepacked panel-major at construction time, with
 //! [`inference::EngineInt8`]/[`inference::EngineInt4`] as named thin
-//! instantiations), the ActorQ broadcast quantizes-on-publish at any
-//! engine-supported width, and the experiment harness sweeps real
-//! engine bitwidths via `--bits`. Adding a future precision (int2
-//! four-per-byte, fp16 actors, per-layer mixes) extends the enum and
-//! codec — not a new engine fork.
+//! instantiations and opt-in intra-op threading via
+//! [`inference::EngineConfig`]), the ActorQ broadcast
+//! quantizes-on-publish at any engine-supported width, and the
+//! experiment harness sweeps real engine bitwidths via `--bits`.
+//! Adding a future precision (fp16 actors, per-layer mixes) extends
+//! the enum and codec — not a new engine fork.
 //!
 //! ## ActorQ (paper §3): asynchronous quantized collection
 //!

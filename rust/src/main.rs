@@ -4,8 +4,8 @@
 //!   train --algo dqn --env cartpole [--steps N] [--quant B --delay D]
 //!   eval  --algo dqn --env cartpole [--quant int8|fp16|intN]
 //!   exp <id|all> [--scale S] [--episodes N] [--seed S] [--jobs J]
-//!       [--only SUB] [--region R] [--cpu-watts W] [--accel-watts W]
-//!       [--carbon-config F]
+//!       [--only SUB] [--threads T] [--region R] [--cpu-watts W]
+//!       [--accel-watts W] [--carbon-config F]
 //!   list  — show available experiments and environments
 //!
 //! The `exp` subcommand matrix (experiment id -> paper artifact):
@@ -30,7 +30,9 @@
 //! on the real quantized engines only when the flag is passed
 //! explicitly — the sweeps multiply measurement cost, so a default run
 //! never pays for them (packed sub-byte kernels at 2..=4 bits; widths
-//! above 8 have no native engine and report PTQ-only/skip).
+//! above 8 have no native engine and report PTQ-only/skip). `--threads`
+//! sets the intra-op worker count of the quantized engines' batched
+//! latency cells (default 1; outputs are bit-identical either way).
 //!
 //! Every experiment appends JSONL rows under `runs/results/` and renders
 //! a paper-style text table; `carbon` (and `bench_actorq`,
@@ -76,7 +78,7 @@ fn print_usage() {
          usage:\n  quarl train --algo <dqn|a2c|ppo|ddpg> --env <id> [--steps N] [--quant B --delay D] [--seed S]\n  \
          quarl eval  --algo <a> --env <id> [--quant fp16|int8|intN] [--episodes N]\n  \
          quarl exp   <id|all> [--scale S] [--episodes N] [--jobs J] [--only SUB] [--bits 2,4,6,8]\n              \
-         [--region us|eu|...] [--cpu-watts W] [--accel-watts W] [--carbon-config F]\n  \
+         [--threads T] [--region us|eu|...] [--cpu-watts W] [--accel-watts W] [--carbon-config F]\n  \
          quarl list\n"
     );
 }
@@ -229,6 +231,7 @@ fn cmd_exp(args: &Args) -> Result<()> {
         filter: args.get("only").map(String::from),
         shard: args.shard()?,
         jobs: args.get_usize("jobs", 1)?,
+        threads: args.get_usize("threads", 1)?.max(1),
         sustain: quarl::sustain::SustainConfig {
             region: args.get_or("region", "us"),
             power: quarl::sustain::PowerModel { cpu_watts, accel_watts },

@@ -3,10 +3,13 @@
 //! bitwidth.
 //!
 //! * bits 5..=8 — one centered i8 code per byte (the PR-3 layout).
-//! * bits 2..=4 — two centered codes per byte, 4-bit two's complement:
+//! * bits 3..=4 — two centered codes per byte, 4-bit two's complement:
 //!   element `2k` in the low nibble, `2k+1` in the high nibble. This is
 //!   the packing that halves weight traffic again below int8 — the
 //!   memory-bandwidth lever behind the sub-8-bit deployment study.
+//! * bits 2 — four centered codes per byte, 2-bit two's complement:
+//!   element `4k + j` in bits `2j..2j+2` of byte `k`, quartering weight
+//!   traffic relative to int8.
 //!
 //! The codes themselves come from [`crate::quant::QParams::quantize_code`]
 //! (centered on the zero point, saturating at the signed rails), so
@@ -14,6 +17,18 @@
 //! quantization rule. Pack/unpack is lossless for every representable
 //! code (pinned by the exhaustive tests below and the property suite in
 //! `rust/tests/engine_parity.rs`).
+//!
+//! Two unpack speeds, one result:
+//!
+//! * the scalar accessors ([`nib4_lo`]/[`nib4_hi`]/[`crumb2`] and the
+//!   `*_into` element-offset unpackers) handle arbitrary, possibly
+//!   mid-byte element ranges — the reference path;
+//! * the SWAR bulk unpackers ([`unpack16_nib4`], [`unpack32_crumb2`]
+//!   and the byte-aligned [`unpack_block_nib4`]/[`unpack_block_crumb2`])
+//!   expand 16 (nibbles) or 32 (crumbs) codes per `u64` load with
+//!   shift/mask lane arithmetic and no per-code branches — the hot path
+//!   behind the panel-major prepacked GEMM. Scalar == SWAR for every
+//!   byte pattern (exhaustively tested below).
 
 /// Sign-extend the low nibble of a packed byte to an i8 code.
 #[inline]
@@ -25,6 +40,121 @@ pub fn nib4_lo(byte: u8) -> i8 {
 #[inline]
 pub fn nib4_hi(byte: u8) -> i8 {
     (byte as i8) >> 4
+}
+
+/// Sign-extend 2-bit code `j` (0..=3, low bits first) of a packed byte.
+#[inline]
+pub fn crumb2(byte: u8, j: usize) -> i8 {
+    (((byte >> (2 * j)) as i8) << 6) >> 6
+}
+
+/// Per-byte lane masks for the SWAR unpackers: low nibble / crumb of
+/// every byte, and the sign bit of each 4-bit / 2-bit lane.
+const LANES_NIB: u64 = 0x0F0F_0F0F_0F0F_0F0F;
+const SIGNS_NIB: u64 = 0x0808_0808_0808_0808;
+const LANES_CRUMB: u64 = 0x0303_0303_0303_0303;
+const SIGNS_CRUMB: u64 = 0x0202_0202_0202_0202;
+
+/// Sign-extend a 4-bit value sitting in the low nibble of every byte
+/// lane: where lane bit 3 is set, fill bits 4..=7 of that lane. The mask
+/// `m` has at most bit 3 per byte, so every shift stays inside its lane —
+/// no cross-byte carries, no branches.
+#[inline]
+fn sext4_lanes(v: u64) -> u64 {
+    let m = v & SIGNS_NIB;
+    v | (m << 1) | (m << 2) | (m << 3) | (m << 4)
+}
+
+/// Sign-extend a 2-bit value in the low crumb of every byte lane (fill
+/// bits 2..=7 where lane bit 1 is set; shifts stay inside the lane).
+#[inline]
+fn sext2_lanes(v: u64) -> u64 {
+    let m = v & SIGNS_CRUMB;
+    v | (m << 1) | (m << 2) | (m << 3) | (m << 4) | (m << 5) | (m << 6)
+}
+
+/// Expand 16 packed 4-bit codes from one little-endian `u64` load: split
+/// the word into low-nibble and high-nibble byte streams, sign-extend
+/// all 8 lanes of each stream at once, and interleave back to element
+/// order. Bit-identical to 16 [`nib4_lo`]/[`nib4_hi`] calls.
+#[inline]
+pub fn unpack16_nib4(word: u64, out: &mut [i8; 16]) {
+    let lo = sext4_lanes(word & LANES_NIB).to_le_bytes();
+    let hi = sext4_lanes((word >> 4) & LANES_NIB).to_le_bytes();
+    for k in 0..8 {
+        out[2 * k] = lo[k] as i8;
+        out[2 * k + 1] = hi[k] as i8;
+    }
+}
+
+/// Expand 32 packed 2-bit codes from one little-endian `u64` load (four
+/// crumb streams, sign-extended lane-parallel, interleaved back).
+/// Bit-identical to 32 [`crumb2`] calls.
+#[inline]
+pub fn unpack32_crumb2(word: u64, out: &mut [i8; 32]) {
+    let s0 = sext2_lanes(word & LANES_CRUMB).to_le_bytes();
+    let s1 = sext2_lanes((word >> 2) & LANES_CRUMB).to_le_bytes();
+    let s2 = sext2_lanes((word >> 4) & LANES_CRUMB).to_le_bytes();
+    let s3 = sext2_lanes((word >> 6) & LANES_CRUMB).to_le_bytes();
+    for k in 0..8 {
+        out[4 * k] = s0[k] as i8;
+        out[4 * k + 1] = s1[k] as i8;
+        out[4 * k + 2] = s2[k] as i8;
+        out[4 * k + 3] = s3[k] as i8;
+    }
+}
+
+/// Bulk-unpack the first `n` nibble codes of a byte-aligned packed
+/// stream into `out[..n]`: full `u64` loads through [`unpack16_nib4`],
+/// then one masked partial load for the tail. `packed` must hold at
+/// least `n.div_ceil(2)` bytes; the element range always starts at a
+/// byte boundary (the panel-major layout pads panels so this holds — a
+/// mid-byte start needs the scalar [`unpack_nib4_into`]).
+pub fn unpack_block_nib4(packed: &[u8], n: usize, out: &mut [i8]) {
+    debug_assert!(packed.len() >= n.div_ceil(2) && out.len() >= n);
+    let mut buf = [0i8; 16];
+    let mut done = 0usize;
+    let mut byte = 0usize;
+    while n - done >= 16 {
+        let word = u64::from_le_bytes(packed[byte..byte + 8].try_into().expect("8-byte chunk"));
+        unpack16_nib4(word, &mut buf);
+        out[done..done + 16].copy_from_slice(&buf);
+        done += 16;
+        byte += 8;
+    }
+    if done < n {
+        let rest = n - done;
+        let nb = rest.div_ceil(2);
+        let mut tail = [0u8; 8];
+        tail[..nb].copy_from_slice(&packed[byte..byte + nb]);
+        unpack16_nib4(u64::from_le_bytes(tail), &mut buf);
+        out[done..n].copy_from_slice(&buf[..rest]);
+    }
+}
+
+/// Bulk-unpack the first `n` crumb codes of a byte-aligned packed stream
+/// into `out[..n]` (32 codes per `u64` load; `packed` must hold at least
+/// `n.div_ceil(4)` bytes).
+pub fn unpack_block_crumb2(packed: &[u8], n: usize, out: &mut [i8]) {
+    debug_assert!(packed.len() >= n.div_ceil(4) && out.len() >= n);
+    let mut buf = [0i8; 32];
+    let mut done = 0usize;
+    let mut byte = 0usize;
+    while n - done >= 32 {
+        let word = u64::from_le_bytes(packed[byte..byte + 8].try_into().expect("8-byte chunk"));
+        unpack32_crumb2(word, &mut buf);
+        out[done..done + 32].copy_from_slice(&buf);
+        done += 32;
+        byte += 8;
+    }
+    if done < n {
+        let rest = n - done;
+        let nb = rest.div_ceil(4);
+        let mut tail = [0u8; 8];
+        tail[..nb].copy_from_slice(&packed[byte..byte + nb]);
+        unpack32_crumb2(u64::from_le_bytes(tail), &mut buf);
+        out[done..n].copy_from_slice(&buf[..rest]);
+    }
 }
 
 /// Pack centered codes (each in [-8, 7]) two per byte; an odd tail
@@ -54,21 +184,47 @@ pub fn unpack_nib4_into(packed: &[u8], start: usize, out: &mut [i8]) {
     }
 }
 
+/// Pack centered codes (each in [-2, 1]) four per byte; a partial tail
+/// byte keeps its upper crumbs zero.
+pub fn pack_crumb2(codes: &[i8]) -> Vec<u8> {
+    debug_assert!(codes.iter().all(|&c| (-2..=1).contains(&c)), "crumb2 code out of range");
+    let mut out = vec![0u8; codes.len().div_ceil(4)];
+    for (i, &c) in codes.iter().enumerate() {
+        out[i / 4] |= ((c as u8) & 0x03) << (2 * (i % 4));
+    }
+    out
+}
+
+/// Unpack `out.len()` consecutive 2-bit codes starting at element offset
+/// `start` (any crumb position — rows need not be byte-aligned).
+#[inline]
+pub fn unpack_crumb2_into(packed: &[u8], start: usize, out: &mut [i8]) {
+    for (j, o) in out.iter_mut().enumerate() {
+        let idx = start + j;
+        *o = crumb2(packed[idx / 4], idx % 4);
+    }
+}
+
 /// Storage for one tensor's centered integer codes.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum CodeBuf {
     /// One code per byte (bits 5..=8).
     I8(Vec<i8>),
-    /// Two 4-bit two's-complement codes per byte (bits 2..=4); the
+    /// Two 4-bit two's-complement codes per byte (bits 3..=4); the
     /// second field is the logical element count.
     Nib4(Vec<u8>, usize),
+    /// Four 2-bit two's-complement codes per byte (bits 2); the second
+    /// field is the logical element count.
+    Crumb2(Vec<u8>, usize),
 }
 
 impl CodeBuf {
     /// Pack `codes` for a `bits`-wide grid (codes must already be
     /// centered and clipped to the signed range for `bits`).
     pub fn from_codes(codes: &[i8], bits: u32) -> CodeBuf {
-        if bits <= 4 {
+        if bits <= 2 {
+            CodeBuf::Crumb2(pack_crumb2(codes), codes.len())
+        } else if bits <= 4 {
             CodeBuf::Nib4(pack_nib4(codes), codes.len())
         } else {
             CodeBuf::I8(codes.to_vec())
@@ -79,7 +235,7 @@ impl CodeBuf {
     pub fn len(&self) -> usize {
         match self {
             CodeBuf::I8(v) => v.len(),
-            CodeBuf::Nib4(_, n) => *n,
+            CodeBuf::Nib4(_, n) | CodeBuf::Crumb2(_, n) => *n,
         }
     }
 
@@ -91,7 +247,7 @@ impl CodeBuf {
     pub fn bytes(&self) -> usize {
         match self {
             CodeBuf::I8(v) => v.len(),
-            CodeBuf::Nib4(v, _) => v.len(),
+            CodeBuf::Nib4(v, _) | CodeBuf::Crumb2(v, _) => v.len(),
         }
     }
 
@@ -108,6 +264,7 @@ impl CodeBuf {
                     nib4_hi(byte)
                 }
             }
+            CodeBuf::Crumb2(v, _) => crumb2(v[i / 4], i % 4),
         }
     }
 
@@ -118,19 +275,25 @@ impl CodeBuf {
             CodeBuf::I8(v) => v.clone(),
             CodeBuf::Nib4(v, n) => {
                 let mut out = vec![0i8; *n];
-                unpack_nib4_into(v, 0, &mut out);
+                unpack_block_nib4(v, *n, &mut out);
+                out
+            }
+            CodeBuf::Crumb2(v, n) => {
+                let mut out = vec![0i8; *n];
+                unpack_block_crumb2(v, *n, &mut out);
                 out
             }
         }
     }
 
     /// Unpack the element range `[start, start + out.len())` into `out`
-    /// (the per-panel unpack step of the packed GEMM).
+    /// (the per-panel unpack step of the row-major packed GEMM).
     #[inline]
     pub fn slice_into(&self, start: usize, out: &mut [i8]) {
         match self {
             CodeBuf::I8(v) => out.copy_from_slice(&v[start..start + out.len()]),
             CodeBuf::Nib4(v, _) => unpack_nib4_into(v, start, out),
+            CodeBuf::Crumb2(v, _) => unpack_crumb2_into(v, start, out),
         }
     }
 
@@ -140,7 +303,7 @@ impl CodeBuf {
     pub fn as_i8_slice(&self, start: usize, len: usize) -> Option<&[i8]> {
         match self {
             CodeBuf::I8(v) => Some(&v[start..start + len]),
-            CodeBuf::Nib4(..) => None,
+            CodeBuf::Nib4(..) | CodeBuf::Crumb2(..) => None,
         }
     }
 }
@@ -213,12 +376,109 @@ mod tests {
     }
 
     #[test]
-    fn bits_2_and_3_ride_the_nibble_codec() {
-        // int2/int3 codes fit the nibble range; they pack two-per-byte
-        // today (a four-per-byte int2 codec is a ROADMAP follow-on).
+    fn bits_2_packs_four_per_byte_and_3_rides_the_nibble_codec() {
+        // int2 now has its own four-per-byte codec (quartering weight
+        // traffic); int3 codes still pack two-per-byte as nibbles.
         let codes: Vec<i8> = vec![-2, -1, 0, 1, -2, 1, 0];
         let buf = CodeBuf::from_codes(&codes, 2);
-        assert!(matches!(buf, CodeBuf::Nib4(..)));
+        assert!(matches!(buf, CodeBuf::Crumb2(..)));
+        assert_eq!(buf.bytes(), 2, "7 codes pack into 2 bytes");
         assert_eq!(buf.to_vec(), codes);
+        for (i, &c) in codes.iter().enumerate() {
+            assert_eq!(buf.get(i), c, "idx {i}");
+        }
+        assert!(buf.as_i8_slice(0, 2).is_none());
+        let b3 = CodeBuf::from_codes(&codes, 3);
+        assert!(matches!(b3, CodeBuf::Nib4(..)));
+        assert_eq!(b3.to_vec(), codes);
+    }
+
+    #[test]
+    fn crumb2_roundtrip_all_256_byte_patterns() {
+        // Every byte decodes to four codes in [-2, 1] and re-encodes to
+        // exactly itself: the int2 codec is a bijection on bytes.
+        for byte in 0u8..=255 {
+            let codes: Vec<i8> = (0..4).map(|j| crumb2(byte, j)).collect();
+            assert!(codes.iter().all(|c| (-2..=1).contains(c)), "byte {byte:#04x}");
+            assert_eq!(pack_crumb2(&codes), vec![byte], "byte {byte:#04x} -> {codes:?}");
+        }
+    }
+
+    #[test]
+    fn crumb2_odd_lengths_and_offsets_roundtrip() {
+        // Lengths that leave 1..=3 padding crumbs and starts at every
+        // crumb position (rows of an odd-width matrix begin mid-byte).
+        let codes: Vec<i8> = (0..37).map(|i| ((i * 3) % 4) as i8 - 2).collect();
+        let packed = pack_crumb2(&codes);
+        assert_eq!(packed.len(), 10, "37 codes -> 10 bytes");
+        for start in 0..codes.len() {
+            for len in 0..=(codes.len() - start).min(11) {
+                let mut out = vec![0i8; len];
+                unpack_crumb2_into(&packed, start, &mut out);
+                assert_eq!(out, &codes[start..start + len], "start {start} len {len}");
+            }
+        }
+    }
+
+    #[test]
+    fn swar_nib4_matches_scalar_for_all_256_byte_patterns() {
+        // Each byte value in every lane of the u64, against the scalar
+        // sign-extension: SWAR lane arithmetic must never leak across
+        // byte boundaries.
+        let mut out = [0i8; 16];
+        for byte in 0u8..=255 {
+            for lane in 0..8 {
+                let mut bytes = [0x5Au8; 8];
+                bytes[lane] = byte;
+                unpack16_nib4(u64::from_le_bytes(bytes), &mut out);
+                for k in 0..16 {
+                    let want = if k % 2 == 0 { nib4_lo(bytes[k / 2]) } else { nib4_hi(bytes[k / 2]) };
+                    assert_eq!(out[k], want, "byte {byte:#04x} lane {lane} elem {k}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn swar_crumb2_matches_scalar_for_all_256_byte_patterns() {
+        let mut out = [0i8; 32];
+        for byte in 0u8..=255 {
+            for lane in 0..8 {
+                let mut bytes = [0x6Cu8; 8];
+                bytes[lane] = byte;
+                unpack32_crumb2(u64::from_le_bytes(bytes), &mut out);
+                for k in 0..32 {
+                    assert_eq!(
+                        out[k],
+                        crumb2(bytes[k / 4], k % 4),
+                        "byte {byte:#04x} lane {lane} elem {k}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn swar_block_unpack_matches_scalar_at_every_offset_and_length() {
+        // The bulk unpackers over a varied stream: every byte-aligned
+        // start offset x every length (covering full-word bodies and
+        // 1..=15 / 1..=31 element tails) equals the scalar path.
+        let packed: Vec<u8> = (0..64u32).map(|i| (i.wrapping_mul(73) ^ 0xA7) as u8).collect();
+        for start_byte in 0..32 {
+            let window = &packed[start_byte..];
+            for n in 0..=48usize {
+                let mut swar = vec![0i8; n];
+                unpack_block_nib4(window, n, &mut swar);
+                let mut scalar = vec![0i8; n];
+                unpack_nib4_into(window, 0, &mut scalar);
+                assert_eq!(swar, scalar, "nib4 start {start_byte} n {n}");
+
+                let mut swar = vec![0i8; n];
+                unpack_block_crumb2(window, n, &mut swar);
+                let mut scalar = vec![0i8; n];
+                unpack_crumb2_into(window, 0, &mut scalar);
+                assert_eq!(swar, scalar, "crumb2 start {start_byte} n {n}");
+            }
+        }
     }
 }

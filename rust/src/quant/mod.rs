@@ -4,8 +4,10 @@
 //!   oracle (paper §3.1).
 //! * [`precision`] — the [`Precision`] selector the whole deployment
 //!   stack (engines, ActorQ broadcast, `--bits` sweeps) shares.
-//! * [`codec`] — centered-code storage: one i8 code per byte, or two
-//!   packed 4-bit codes per byte for the sub-byte engines.
+//! * [`codec`] — centered-code storage: one i8 code per byte, two
+//!   packed 4-bit codes per byte at 3..=4 bits, four packed 2-bit
+//!   codes per byte at int2 — plus SWAR bulk unpackers (16/32 codes
+//!   per `u64` load) for the panel-major kernels.
 //! * [`fp16`] — software IEEE-754 half rounding (PTQ-fp16).
 //! * [`ptq`] — post-training quantization over parameter sets
 //!   (paper Algorithm 1).

@@ -5,9 +5,9 @@
 //! from the `quant/` codecs, through the [`crate::inference::Engine`]
 //! instantiations, the ActorQ quantize-on-broadcast path, up to the
 //! `--bits` sweeps in the experiment harness. Adding a future precision
-//! (int2 four-per-byte packing, fp16 actors, per-layer mixes) means
-//! extending this enum and the codec behind it — not forking a new
-//! engine type per format.
+//! (fp16 actors, per-layer mixes) means extending this enum and the
+//! codec behind it — not forking a new engine type per format (int2
+//! four-per-byte packing landed exactly that way).
 
 use crate::error::{Error, Result};
 
@@ -22,7 +22,8 @@ pub enum Precision {
     /// Full-precision fp32 (the paper's baseline configuration).
     Fp32,
     /// `b`-bit uniform affine integer grid, `b` in 2..=8 for the native
-    /// engines (sub-byte widths are stored packed, two codes per byte).
+    /// engines (sub-byte widths are stored packed: two codes per byte
+    /// at 3..=4 bits, four per byte at 2).
     Int(u32),
 }
 
@@ -81,11 +82,13 @@ impl Precision {
 
     /// Bytes of weight storage per parameter in the deployment
     /// representation: 4 for fp32, 1 per i8 code, 0.5 for packed
-    /// sub-byte codes (two per byte). Biases stay fp32 in every engine
+    /// nibble codes (two per byte, bits 3..=4), 0.25 for packed crumb
+    /// codes (four per byte, bits 2). Biases stay fp32 in every engine
     /// and are accounted separately.
     pub fn weight_bytes_per_param(&self) -> f64 {
         match self {
             Precision::Fp32 => 4.0,
+            Precision::Int(b) if *b <= 2 => 0.25,
             Precision::Int(b) if *b <= 4 => 0.5,
             Precision::Int(_) => 1.0,
         }
@@ -120,11 +123,13 @@ mod tests {
     }
 
     #[test]
-    fn packed_widths_halve_weight_bytes() {
+    fn packed_widths_shrink_weight_bytes() {
         assert_eq!(Precision::Fp32.weight_bytes_per_param(), 4.0);
         assert_eq!(Precision::Int(8).weight_bytes_per_param(), 1.0);
         assert_eq!(Precision::Int(5).weight_bytes_per_param(), 1.0);
         assert_eq!(Precision::Int(4).weight_bytes_per_param(), 0.5);
-        assert_eq!(Precision::Int(2).weight_bytes_per_param(), 0.5);
+        assert_eq!(Precision::Int(3).weight_bytes_per_param(), 0.5);
+        // the four-per-byte crumb codec quarters the traffic
+        assert_eq!(Precision::Int(2).weight_bytes_per_param(), 0.25);
     }
 }

@@ -11,13 +11,14 @@
 //!    costs for the pure-Rust deployment engines, from the per-op /
 //!    per-byte figures of Horowitz's energy tables (ISSCC 2014, 45 nm):
 //!    an int8 MAC costs ~20x less than an fp32 MAC and moves 4x fewer
-//!    weight bytes — and packed sub-byte weights (int4 and below) halve
-//!    the weight traffic again. Integer MACs are billed at the 8-bit
-//!    MAC cost regardless of storage width: the engines unpack sub-byte
-//!    codes into an 8-bit datapath, so packing is a *traffic* saving,
-//!    not an arithmetic one. This is what makes the precision
-//!    comparison deterministic — it depends on operation counts, not on
-//!    how noisy the benchmarking machine is.
+//!    weight bytes — and packed sub-byte weights shrink the weight
+//!    traffic again: nibble-packed int3/int4 halve it, crumb-packed
+//!    int2 quarters it. Integer MACs are billed at the 8-bit MAC cost
+//!    regardless of storage width: the engines unpack sub-byte codes
+//!    into an 8-bit datapath, so packing is a *traffic* saving, not an
+//!    arithmetic one. This is what makes the precision comparison
+//!    deterministic — it depends on operation counts, not on how noisy
+//!    the benchmarking machine is.
 
 use crate::quant::Precision;
 use crate::sustain::meter::Component;
@@ -86,8 +87,8 @@ pub fn mlp_macs(dims: &[usize]) -> f64 {
 }
 
 /// Weight bytes touched by one forward pass at `precision` — f32
-/// weights, i8 codes, or packed sub-byte codes (two per byte at int4
-/// and below); biases stay f32 in every engine.
+/// weights, i8 codes, or packed sub-byte codes (two per byte at
+/// int3/int4, four per byte at int2); biases stay f32 in every engine.
 pub fn mlp_weight_bytes(dims: &[usize], precision: Precision) -> f64 {
     let w_bytes = precision.weight_bytes_per_param();
     dims.windows(2).map(|w| (w[0] * w[1]) as f64 * w_bytes + w[1] as f64 * 4.0).sum()
@@ -122,11 +123,14 @@ mod tests {
         let f32_bytes = mlp_weight_bytes(&dims, Precision::Fp32);
         let i8_bytes = mlp_weight_bytes(&dims, Precision::Int(8));
         let i4_bytes = mlp_weight_bytes(&dims, Precision::Int(4));
+        let i2_bytes = mlp_weight_bytes(&dims, Precision::Int(2));
         assert_eq!(f32_bytes, (4480 * 4 + (64 + 64 + 2) * 4) as f64);
         assert_eq!(i8_bytes, (4480 + (64 + 64 + 2) * 4) as f64);
         assert_eq!(i4_bytes, (4480 / 2 + (64 + 64 + 2) * 4) as f64);
+        assert_eq!(i2_bytes, (4480 / 4 + (64 + 64 + 2) * 4) as f64);
         assert!(f32_bytes / i8_bytes > 3.5);
         assert!(i8_bytes / i4_bytes > 1.5, "packing must show up in traffic");
+        assert!(i4_bytes / i2_bytes > 1.3, "the crumb codec halves it again");
     }
 
     #[test]

@@ -6,7 +6,7 @@
 //! for both engines. (Hand-rolled randomized cases; no proptest
 //! offline.)
 
-use quarl::inference::{EngineF32, EngineInt4, EngineInt8, EngineQuant};
+use quarl::inference::{EngineConfig, EngineF32, EngineInt4, EngineInt8, EngineQuant, KernelKind};
 use quarl::quant::QParams;
 use quarl::rng::Pcg32;
 use quarl::runtime::manifest::TensorSpec;
@@ -389,7 +389,8 @@ fn int4_packed_gemm_bit_exact_with_scalar_fake_quant_reference() {
 #[test]
 fn every_engine_bitwidth_matches_the_fake_quant_reference() {
     // The same bit-exactness property at every engine-supported width:
-    // 2..=4 run packed, 5..=8 run byte-stored, one kernel for all.
+    // 2 runs crumb-packed, 3..=4 nibble-packed, 5..=8 byte-stored — one
+    // kernel for all.
     let mut rng = Pcg32::new(702, 1);
     for bits in 2u32..=8 {
         let p = mlp_params(&[9, 40, 17, 4], 7100 + bits as u64);
@@ -401,6 +402,122 @@ fn every_engine_bitwidth_matches_the_fake_quant_reference() {
         eng.forward_batch(&xs, batch, &mut got).unwrap();
         for (k, (a, b)) in want.iter().zip(&got).enumerate() {
             assert!(a == b, "bits {bits} element {k}: reference {a} vs engine {b}");
+        }
+    }
+}
+
+#[test]
+fn swar_prepacked_gemm_pins_rowmajor_and_fake_quant_at_every_width() {
+    // The ISSUE-5 acceptance property: for widths 2..=8, across random
+    // and odd shapes (packed rows straddling bytes, multi-block output
+    // widths, tail input rows), the SWAR-prepacked panel GEMM, the
+    // scalar GEMV, the PR-4 row-major kernel, and the scalar fake-quant
+    // reference built from public QParams math are all bit-identical —
+    // the panel repack and bulk unpack are pure layout moves.
+    let mut rng = Pcg32::new(801, 1);
+    let shapes: [&[usize]; 4] = [
+        &[4, 16, 2],
+        &[7, 33, 19, 3],
+        &[9, 140, 6],
+        &[5, 21, 2],
+    ];
+    for bits in 2u32..=8 {
+        for (case, dims) in shapes.iter().enumerate() {
+            let p = mlp_params(dims, 8000 + bits as u64 * 10 + case as u64);
+            let mut panel_eng = EngineQuant::from_params(&p, bits).unwrap();
+            let mut rm_eng = EngineQuant::from_params_cfg(
+                &p,
+                bits,
+                EngineConfig { kernel: KernelKind::RowMajor, ..EngineConfig::default() },
+            )
+            .unwrap();
+            let din = dims[0];
+            let dout = *dims.last().unwrap();
+            for &batch in &[1usize, 3, 7] {
+                let xs: Vec<f32> =
+                    (0..batch * din).map(|_| rng.uniform_range(-2.0, 2.0)).collect();
+                let want = fake_quant_reference(&p, &xs, batch, bits);
+                let mut got = vec![0.0f32; batch * dout];
+                panel_eng.forward_batch(&xs, batch, &mut got).unwrap();
+                assert_eq!(want, got, "panel batched, bits {bits} case {case} batch {batch}");
+                rm_eng.forward_batch(&xs, batch, &mut got).unwrap();
+                assert_eq!(want, got, "rowmajor batched, bits {bits} case {case} batch {batch}");
+                let mut scalar = vec![0.0f32; dout];
+                for r in 0..batch {
+                    panel_eng.forward(&xs[r * din..(r + 1) * din], &mut scalar).unwrap();
+                    assert_eq!(
+                        &want[r * dout..(r + 1) * dout],
+                        scalar.as_slice(),
+                        "panel GEMV, bits {bits} case {case} row {r}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn swar_prepacked_kernels_survive_degenerate_rows() {
+    // Degenerate activation rows (layer dead after relu / all-zero
+    // observation) through the prepacked kernel, packed (int2/int4) and
+    // byte-stored: output exactly the bias, bit-equal to the reference,
+    // never an Err — same contract the row-major kernel pins above.
+    for bits in [2u32, 4, 8] {
+        let mut p = mlp_params(&[4, 8, 3], 90 + bits as u64);
+        p.tensors[0].data_mut().fill(0.0);
+        p.tensors[1].data_mut().fill(0.0);
+        let b1 = p.tensors[3].data().to_vec();
+        let mut eng = EngineQuant::from_params(&p, bits).unwrap();
+        let xs = [0.3f32, -0.7, 0.1, 0.9, 0.0, 0.0, 0.0, 0.0];
+        let want = fake_quant_reference(&p, &xs, 2, bits);
+        let mut got = vec![0.0f32; 6];
+        eng.forward_batch(&xs, 2, &mut got).expect("degenerate batch must not fail");
+        assert_eq!(want, got, "bits {bits}");
+        assert_eq!(&got[..3], b1.as_slice(), "zero contribution => exactly the bias");
+        let mut y = vec![0.0f32; 3];
+        eng.forward(&xs[4..8], &mut y).expect("all-zero obs must not fail");
+        assert_eq!(y.as_slice(), b1.as_slice(), "bits {bits} scalar path");
+    }
+}
+
+#[test]
+fn thread_counts_are_bit_invariant_for_forward_batch() {
+    // The intra-op parallel path owns disjoint output-column blocks and
+    // runs the same per-element arithmetic, so threads in {1, 2, 4}
+    // must produce bit-identical forward_batch output — packed and
+    // byte-stored widths, odd multi-block shapes, batches that don't
+    // divide the 4-row microkernel.
+    let mut rng = Pcg32::new(802, 1);
+    for bits in [2u32, 4, 8] {
+        for (case, dims) in [&[12usize, 300, 140, 9][..], &[6, 129, 5]].iter().enumerate() {
+            let p = mlp_params(dims, 8800 + bits as u64 * 10 + case as u64);
+            let din = dims[0];
+            let dout = *dims.last().unwrap();
+            for &batch in &[1usize, 5, 8] {
+                let xs: Vec<f32> =
+                    (0..batch * din).map(|_| rng.uniform_range(-2.0, 2.0)).collect();
+                let mut want = vec![0.0f32; batch * dout];
+                EngineQuant::from_params_cfg(&p, bits, EngineConfig::with_threads(1))
+                    .unwrap()
+                    .forward_batch(&xs, batch, &mut want)
+                    .unwrap();
+                for threads in [2usize, 4] {
+                    let mut eng =
+                        EngineQuant::from_params_cfg(&p, bits, EngineConfig::with_threads(threads))
+                            .unwrap();
+                    let mut got = vec![0.0f32; batch * dout];
+                    eng.forward_batch(&xs, batch, &mut got).unwrap();
+                    assert_eq!(
+                        want, got,
+                        "bits {bits} case {case} batch {batch} threads {threads}"
+                    );
+                    // and flipping the count on a live engine (the
+                    // Engine::set_threads route) keeps the invariant
+                    eng.set_threads(1);
+                    eng.forward_batch(&xs, batch, &mut got).unwrap();
+                    assert_eq!(want, got, "set_threads(1) after {threads}");
+                }
+            }
         }
     }
 }

@@ -1,8 +1,11 @@
 #!/usr/bin/env python3
 """Sanity-check emitted BENCH_*.json reports: each file must parse as
 JSON and carry the expected top-level keys, and sweep-style reports must
-contain at least one row. Used by CI after running the offline bench /
-experiment paths; also handy locally:
+contain at least one row. BENCH_engines.json additionally gets a
+per-row schema check (kernel-variant + threads tagging, and the
+before/after kernel rows the panel-major rework is tracked by). Used by
+CI after running the offline bench / experiment paths; also handy
+locally:
 
     python3 scripts/check_bench_reports.py rust/BENCH_engines.json ...
 
@@ -15,10 +18,79 @@ import sys
 
 # file-name prefix -> (required top-level keys, key holding the row list or None)
 EXPECTATIONS = {
-    "BENCH_engines": (["bench", "mlp", "bits", "headline_int8_b64_w512_speedup", "rows"], "rows"),
+    "BENCH_engines": (
+        [
+            "bench",
+            "mlp",
+            "bits",
+            "threads",
+            "headline_int8_b64_w512_speedup",
+            "int4_panel_vs_rowmajor_b64_w512",
+            "rows",
+        ],
+        "rows",
+    ),
     "BENCH_actorq": (["bench", "env", "window_ms", "rows"], "rows"),
     "BENCH_carbon": (["bench", "regions_billed", "cells", "mean_kg_co2eq_ratio"], "cells"),
 }
+
+ENGINE_ROW_KEYS = [
+    "engine",
+    "bits",
+    "kernel",
+    "threads",
+    "width",
+    "batch",
+    "rows_per_sec_scalar",
+    "rows_per_sec_batched",
+    "speedup",
+]
+KERNELS = {"base", "panel", "rowmajor"}
+
+
+def check_engine_rows(path: str, doc: dict) -> list:
+    """BENCH_engines.json row schema: every row tagged with a known
+    kernel variant and a positive integer thread count; fp32 rows are
+    the single-layout baseline; every quantized width present must be
+    measured on BOTH kernels (the before/after the panel rework is
+    tracked by); and when the sweep includes int2, int2 rows must
+    actually be there (the four-per-byte codec has landed and must not
+    silently fall out of the tracked sweep)."""
+    errors = []
+    rows = doc.get("rows")
+    if not isinstance(rows, list):
+        return [f"{path}: 'rows' is not a list"]
+    quant_kernels = {}  # bits -> set of kernel tags seen
+    for i, row in enumerate(rows):
+        if not isinstance(row, dict):
+            errors.append(f"{path}: rows[{i}] is not an object")
+            continue
+        for k in ENGINE_ROW_KEYS:
+            if k not in row:
+                errors.append(f"{path}: rows[{i}] missing key '{k}'")
+        kernel = row.get("kernel")
+        if kernel not in KERNELS:
+            errors.append(f"{path}: rows[{i}] kernel '{kernel}' not in {sorted(KERNELS)}")
+        threads = row.get("threads")
+        if not (isinstance(threads, (int, float)) and threads >= 1 and threads == int(threads)):
+            errors.append(f"{path}: rows[{i}] threads '{threads}' is not a positive integer")
+        bits = row.get("bits")
+        if row.get("engine") == "fp32":
+            if kernel != "base":
+                errors.append(f"{path}: rows[{i}] fp32 row must carry kernel 'base'")
+        elif kernel in ("panel", "rowmajor"):
+            quant_kernels.setdefault(bits, set()).add(kernel)
+    for bits, kernels in sorted(quant_kernels.items(), key=lambda kv: str(kv[0])):
+        missing = {"panel", "rowmajor"} - kernels
+        if missing:
+            errors.append(
+                f"{path}: int{bits} rows lack kernel variant(s) {sorted(missing)} — "
+                "the before/after comparison is incomplete"
+            )
+    swept_bits = doc.get("bits")
+    if isinstance(swept_bits, list) and 2 in swept_bits and 2 not in quant_kernels:
+        errors.append(f"{path}: sweep lists bits 2 but no int2 rows were emitted")
+    return errors
 
 
 def check(path: str) -> list:
@@ -42,6 +114,8 @@ def check(path: str) -> list:
             errors.append(f"{path}: missing top-level key '{k}'")
     if rows_key and isinstance(doc.get(rows_key), list) and not doc[rows_key]:
         errors.append(f"{path}: '{rows_key}' is empty")
+    if name == "BENCH_engines" and not errors:
+        errors.extend(check_engine_rows(path, doc))
     return errors
 
 
