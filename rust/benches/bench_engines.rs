@@ -11,9 +11,17 @@
 //!
 //! `--bits` takes the validated 2..=16 CLI list; widths without a native
 //! engine (> 8) are skipped with a note. The fp32 baseline always runs.
-//! `--quick` trims the sweep to the narrowest MLP for the CI
-//! sanity-check job. `--threads T` (> 1) additionally measures the
-//! prepacked kernel with T intra-op workers.
+//! `--quick` trims the sweep to the two narrowest MLPs for the CI
+//! sanity-check job (width 256 stays in so the intra-op pool actually
+//! engages — at width 64 every layer fits one column block and the
+//! threaded variant would silently measure the single-thread path).
+//! `--threads T` (> 1) measures the prepacked kernel of every quantized
+//! width with T intra-op workers; int8 is measured threaded (2 workers
+//! minimum) in every run, and the summary records
+//! `int8_threads2_vs_1_b64` — threaded-vs-single batched throughput at
+//! the widest width of the sweep — as the persistent worker pool's
+//! before/after figure (per-call `thread::scope` spawns used to eat the
+//! win at these layer sizes).
 //!
 //! Every quantized width is measured on BOTH kernel variants, tagged in
 //! the `kernel` row field, so `BENCH_engines.json` records the
@@ -73,13 +81,15 @@ struct Variant {
     /// Row tag: "base" for fp32, else the kernel label.
     kernel: &'static str,
     threads: usize,
-    engine: Box<dyn Engine>,
+    engine: Box<dyn Engine + Send>,
 }
 
 /// Build the variant list for one width: fp32 baseline, then per
 /// quantized precision the prepacked kernel (threads 1), the PR-4
-/// row-major reference, and — when `threads > 1` — the prepacked kernel
-/// again with `threads` workers.
+/// row-major reference, and a threaded prepacked variant — every
+/// quantized precision when the user asked for `--threads > 1`, and
+/// int8 in *every* run (at 2 workers minimum) so the persistent-pool
+/// spawn-overhead before/after row is recorded even in CI quick mode.
 fn build_variants(params: &ParamSet, precisions: &[Precision], threads: usize) -> Vec<Variant> {
     let mut out = Vec::new();
     for &p in precisions {
@@ -109,12 +119,19 @@ fn build_variants(params: &ParamSet, precisions: &[Precision], threads: usize) -
             )
             .unwrap(),
         });
-        if threads > 1 {
+        let t = if threads > 1 {
+            threads
+        } else if p == Precision::Int(8) {
+            2
+        } else {
+            1
+        };
+        if t > 1 {
             out.push(Variant {
                 precision: p,
                 kernel: KernelKind::Prepacked.label(),
-                threads,
-                engine: engine_for_cfg(params, p, EngineConfig::with_threads(threads)).unwrap(),
+                threads: t,
+                engine: engine_for_cfg(params, p, EngineConfig::with_threads(t)).unwrap(),
             });
         }
     }
@@ -177,7 +194,10 @@ fn main() {
     let bits = args.bits(&[2, 4, 8]).expect("--bits");
     let threads = args.get_usize("threads", 1).expect("--threads").max(1);
     let quick = args.has("quick");
-    let widths: &[usize] = if quick { &WIDTHS[..1] } else { &WIDTHS };
+    let widths: &[usize] = if quick { &WIDTHS[..2] } else { &WIDTHS };
+    // Widest width of this sweep: the threaded-vs-single summary cell
+    // lives there (threading needs >= 2 column blocks to engage).
+    let wide = *widths.last().unwrap();
 
     // fp32 always; then one quantized engine per requested width that
     // has a native engine (2..=8; the CLI validates 2..=16).
@@ -196,6 +216,9 @@ fn main() {
     let mut headline = f64::NAN;
     // (rowmajor batched ns, panel batched ns) for the int4 wide cell
     let mut int4_wide: (f64, f64) = (f64::NAN, f64::NAN);
+    // (threads=1 batched ns, threaded batched ns) for the int8 panel
+    // kernel at (widest width, batch 64) — the worker-pool before/after.
+    let mut int8_threaded: (f64, f64) = (f64::NAN, f64::NAN);
     for &width in widths {
         let dims = [IN_DIM, width, width, OUT_DIM];
         let params = mlp_params(&dims, 7);
@@ -241,6 +264,17 @@ fn main() {
                         _ => {}
                     }
                 }
+                if width == wide
+                    && batch == 64
+                    && v.precision == Precision::Int(8)
+                    && v.kernel == "panel"
+                {
+                    if v.threads == 1 {
+                        int8_threaded.0 = b_ns;
+                    } else {
+                        int8_threaded.1 = b_ns;
+                    }
+                }
                 rows.push(cell_row(v, width, batch, s_ns, b_ns));
             }
         }
@@ -261,6 +295,14 @@ fn main() {
              {int4_panel_gain:.2}x the PR-4 rowmajor kernel at batch 64, width 512.)"
         );
     }
+    let int8_threads_gain = int8_threaded.0 / int8_threaded.1;
+    if int8_threads_gain.is_finite() {
+        println!(
+            "(int8 worker-pool before/after: the threaded panel kernel runs \
+             {int8_threads_gain:.2}x the single-thread kernel at batch 64, width {wide} — \
+             persistent pool, no per-call spawns.)"
+        );
+    }
 
     let mut doc = BTreeMap::new();
     doc.insert("bench".to_string(), Json::Str("engines".into()));
@@ -275,6 +317,8 @@ fn main() {
         "int4_panel_vs_rowmajor_b64_w512".to_string(),
         Json::Num(int4_panel_gain),
     );
+    doc.insert("int8_threads2_vs_1_b64".to_string(), Json::Num(int8_threads_gain));
+    doc.insert("int8_threads2_vs_1_width".to_string(), Json::Num(wide as f64));
     doc.insert("rows".to_string(), Json::Arr(rows));
     let doc = Json::Obj(doc);
     // The single machine-readable summary line:

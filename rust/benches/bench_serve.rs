@@ -1,0 +1,194 @@
+//! Bench: the dynamic-batching policy server — served per-query latency
+//! (p50/p99 from the log-linear histogram) and the batch sizes the
+//! deadline window coalesces, swept over precision x client count.
+//!
+//!     cargo bench --bench bench_serve
+//!     cargo bench --bench bench_serve -- --bits 2,4,8
+//!     cargo bench --bench bench_serve -- --threads 4 --window-us 500
+//!     cargo bench --bench bench_serve -- --quick            # CI smoke
+//!
+//! Each cell moves a fresh engine onto a [`PolicyServer`] and drives it
+//! closed-loop from N client threads until the query budget is spent.
+//! Closed-loop clients make `mean_batch` track concurrency: one client
+//! can never coalesce (that row is the latency floor — scalar GEMV plus
+//! channel hops), while at 16 clients the window folds concurrent
+//! queries into one `forward_batch` call and qps rides the engines'
+//! batched roofline. Latency is enqueue-to-reply, so queueing delay is
+//! included — this is what a caller of `query()` actually waits, not
+//! the bare GEMM.
+//!
+//! `--bits` adds quantized widths beyond the fp32 + int8 defaults
+//! (validated 2..=16; widths without a native engine are skipped with a
+//! note). `--window-us` / `--max-batch` are the two batching knobs;
+//! `--threads` sets the engine's intra-op workers (shared persistent
+//! pool). `--quick` trims clients and the query budget for CI.
+//!
+//! Output: one human line per cell, then exactly one machine-readable
+//! JSON summary line, also written to `BENCH_serve.json` — the same
+//! schema `exp serve` emits (checked by
+//! `scripts/check_bench_reports.py` in CI), so either entry point feeds
+//! the serving trajectory.
+
+use std::collections::BTreeMap;
+use std::time::Duration;
+
+use quarl::config::cli::Args;
+use quarl::coordinator::metrics::write_json_file;
+use quarl::inference::{engine_for_cfg, EngineConfig};
+use quarl::quant::Precision;
+use quarl::rng::{mix_seed, Pcg32};
+use quarl::runtime::json::{to_string, Json};
+use quarl::runtime::manifest::TensorSpec;
+use quarl::runtime::ParamSet;
+use quarl::serve::{PolicyServer, ServeConfig, ServeReport};
+
+/// Policy shape: wide enough that batching amortizes real weight traffic
+/// (and the threaded engines have > 1 column block per mid layer).
+const DIMS: [usize; 4] = [64, 256, 256, 8];
+
+const CLIENTS: [usize; 3] = [1, 4, 16];
+
+fn mlp_params(dims: &[usize], seed: u64) -> ParamSet {
+    let mut specs = Vec::new();
+    for i in 0..dims.len() - 1 {
+        specs.push(TensorSpec { name: format!("q.w{i}"), shape: vec![dims[i], dims[i + 1]] });
+        specs.push(TensorSpec { name: format!("q.b{i}"), shape: vec![dims[i + 1]] });
+    }
+    let mut rng = Pcg32::new(seed, 1);
+    ParamSet::init(&specs, &mut rng)
+}
+
+/// Drive one (precision, clients) cell: `queries` closed-loop requests
+/// split across `clients` threads against a fresh server.
+fn serve_cell(
+    precision: Precision,
+    clients: usize,
+    queries: usize,
+    threads: usize,
+    cfg: ServeConfig,
+) -> ServeReport {
+    let params = mlp_params(&DIMS, 31);
+    let engine =
+        engine_for_cfg(&params, precision, EngineConfig::with_threads(threads)).unwrap();
+    let (server, client) = PolicyServer::spawn(engine, cfg);
+    let per_client = queries / clients;
+    let joins: Vec<_> = (0..clients)
+        .map(|c| {
+            let cl = client.clone();
+            // remainder lands on client 0 so the total is exact
+            let mine = per_client + if c == 0 { queries % clients } else { 0 };
+            let seed = mix_seed(97, c as u64);
+            std::thread::spawn(move || {
+                let mut rng = Pcg32::new(seed, 17);
+                let mut obs = vec![0.0f32; DIMS[0]];
+                for _ in 0..mine {
+                    for v in obs.iter_mut() {
+                        *v = rng.uniform_range(-1.0, 1.0);
+                    }
+                    cl.query(&obs).expect("serve query");
+                }
+            })
+        })
+        .collect();
+    drop(client);
+    for j in joins {
+        j.join().expect("client thread");
+    }
+    server.shutdown()
+}
+
+/// JSON row for one cell — the `exp serve` row schema.
+fn cell_row(
+    precision: Precision,
+    clients: usize,
+    report: &ServeReport,
+    cfg: &ServeConfig,
+    window_us: u64,
+) -> Json {
+    let hist: Vec<Json> =
+        report.batches.counts().iter().map(|&c| Json::Num(c as f64)).collect();
+    let mut row = BTreeMap::new();
+    row.insert("engine".to_string(), Json::Str(precision.label()));
+    row.insert("bits".to_string(), Json::Num(precision.bits() as f64));
+    row.insert("clients".to_string(), Json::Num(clients as f64));
+    row.insert("queries".to_string(), Json::Num(report.queries as f64));
+    row.insert("rejected".to_string(), Json::Num(report.rejected as f64));
+    row.insert("qps".to_string(), Json::Num(report.qps()));
+    row.insert("p50_us".to_string(), Json::Num(report.latency.p50_us()));
+    row.insert("p99_us".to_string(), Json::Num(report.latency.p99_us()));
+    row.insert("mean_us".to_string(), Json::Num(report.latency.mean_us()));
+    row.insert("mean_batch".to_string(), Json::Num(report.batches.mean()));
+    row.insert("max_batch_seen".to_string(), Json::Num(report.batches.max_seen() as f64));
+    row.insert("batch_hist".to_string(), Json::Arr(hist));
+    row.insert("window_us".to_string(), Json::Num(window_us as f64));
+    row.insert("max_batch".to_string(), Json::Num(cfg.max_batch as f64));
+    row.insert("wall_secs".to_string(), Json::Num(report.wall_secs));
+    Json::Obj(row)
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&argv).expect("bench args");
+    let bits = args.bits(&[]).expect("--bits");
+    let threads = args.get_usize("threads", 1).expect("--threads").max(1);
+    let window_us = args.get_u64("window-us", 250).expect("--window-us");
+    let max_batch = args.get_usize("max-batch", 32).expect("--max-batch").max(1);
+    let quick = args.has("quick");
+    let clients: &[usize] = if quick { &CLIENTS[..2] } else { &CLIENTS };
+    let queries = if quick { 400 } else { 4_000 };
+
+    let cfg = ServeConfig {
+        max_batch,
+        window: Duration::from_micros(window_us),
+        queue_capacity: 1024,
+    };
+
+    // fp32 baseline + int8 headline always; --bits adds the rest of the
+    // native widths (2..=8) opt-in.
+    let mut precisions = vec![Precision::Fp32, Precision::Int(8)];
+    for &b in bits.iter().filter(|&&b| b != 8) {
+        let p = Precision::Int(b);
+        if p.engine_supported() {
+            precisions.push(p);
+        } else {
+            eprintln!("note: skipping --bits {b} (native engines implement 2..=8)");
+        }
+    }
+
+    let mlp = DIMS.iter().map(|d| d.to_string()).collect::<Vec<_>>().join("x");
+    println!(
+        "== policy serving: dynamic batching (mlp {mlp}, window {window_us} us, \
+         max_batch {max_batch}, engine threads {threads}) =="
+    );
+    let mut rows: Vec<Json> = Vec::new();
+    for &p in &precisions {
+        for &c in clients {
+            let report = serve_cell(p, c, queries, threads, cfg);
+            println!(
+                "  {:>5} c={c:<2} {:>8.0} qps  p50 {:>7.1} us  p99 {:>7.1} us  \
+                 mean_batch {:>5.2}  max_seen {}",
+                p.label(),
+                report.qps(),
+                report.latency.p50_us(),
+                report.latency.p99_us(),
+                report.batches.mean(),
+                report.batches.max_seen()
+            );
+            rows.push(cell_row(p, c, &report, &cfg, window_us));
+        }
+    }
+
+    let mut doc = BTreeMap::new();
+    doc.insert("bench".to_string(), Json::Str("serve".into()));
+    doc.insert("mlp".to_string(), Json::Str(mlp));
+    doc.insert("window_us".to_string(), Json::Num(window_us as f64));
+    doc.insert("max_batch".to_string(), Json::Num(max_batch as f64));
+    doc.insert("rows".to_string(), Json::Arr(rows));
+    let doc = Json::Obj(doc);
+    // The single machine-readable summary line:
+    println!("{}", to_string(&doc));
+    match write_json_file("BENCH_serve.json", &doc) {
+        Ok(()) => eprintln!("wrote BENCH_serve.json"),
+        Err(e) => eprintln!("warning: BENCH_serve.json not written: {e}"),
+    }
+}

@@ -52,6 +52,10 @@ impl ParamBroadcast {
     /// [`ParamBroadcast::new`] with an explicit engine kernel/threading
     /// config; every snapshot this channel ever publishes is built with
     /// it ([`crate::actorq::ActorQConfig::engine_threads`] enters here).
+    /// A threads > 1 config does **not** give each actor copy its own
+    /// thread herd: every engine clone submits to the shared persistent
+    /// pool ([`crate::inference::workers::global`]), so N actors at T
+    /// threads park on at most T−1 shared workers, not N·T spawns.
     pub fn with_config(
         params: &ParamSet,
         precision: Precision,

@@ -63,8 +63,17 @@ pub struct ActorQLog {
     pub losses: Vec<(usize, f32)>,
     pub episodes: usize,
     pub final_return: f32,
-    /// Environment steps actually consumed by the learner.
+    /// Environment steps counted toward the run, capped at the
+    /// configured budget so [`ActorQLog::steps_per_sec`] is comparable
+    /// to the synchronous driver at equal step budget (raw consumption
+    /// is `env_steps + env_steps_overshoot`).
     pub env_steps: usize,
+    /// Transitions drained past `total_steps` in the final loop
+    /// iteration. They still reached the replay (arrival order is
+    /// preserved) but are excluded from `env_steps` and the throughput
+    /// figure — counting them inflated `steps_per_sec` by up to a full
+    /// drain of `flush_every * n_actors` transitions.
+    pub env_steps_overshoot: usize,
     /// Learner train-program calls.
     pub train_steps: usize,
     /// Parameter broadcasts published.
@@ -228,7 +237,7 @@ impl LearnerHarness {
                 continue;
             };
             let mut batches = vec![first];
-            batches.extend(self.pool.try_drain(self.drain_max));
+            batches.extend(self.pool.try_drain(self.drain_max)?);
             for xp in &batches {
                 for t in &xp.transitions {
                     push(t);
@@ -274,6 +283,12 @@ impl LearnerHarness {
 
         log.actor_stats = self.pool.shutdown()?;
         log.energy = self.meter.snapshot();
+        // The last drain overshoots the budget by up to a full batch
+        // sweep; report throughput against the budget, not the raw
+        // consumption, so async and sync runs divide by the same
+        // numerator at equal `total_steps`.
+        log.env_steps_overshoot = log.env_steps.saturating_sub(self.total_steps);
+        log.env_steps -= log.env_steps_overshoot;
         log.finish(&recent, t_start.elapsed().as_secs_f64());
         Ok(log)
     }
@@ -366,8 +381,12 @@ mod tests {
                 },
             )
             .unwrap();
-        assert!(log.env_steps >= 600, "{} env steps", log.env_steps);
-        assert_eq!(pushed, log.env_steps, "every transition reaches the push hook");
+        assert_eq!(log.env_steps, 600, "reported steps are capped at the budget");
+        assert_eq!(
+            pushed,
+            log.env_steps + log.env_steps_overshoot,
+            "every transition reaches the push hook, overshoot included"
+        );
         // Budget is capped at total_steps, so the async cadence owes
         // exactly the synchronous driver's train count.
         assert_eq!(log.train_steps, (600 - 100) / 2);
@@ -412,7 +431,49 @@ mod tests {
         let log = harness.run(|_t| {}, |_step, _publish| Ok(None)).unwrap();
         assert_eq!(log.train_steps, 0);
         assert_eq!(log.broadcasts, 0);
-        assert!(log.env_steps >= 200);
+        assert_eq!(log.env_steps, 200);
+    }
+
+    #[test]
+    fn overshoot_is_split_out_of_the_throughput_figure() {
+        // A coarse flush size forces the final drain well past the
+        // budget: the raw consumption must land in the overshoot field,
+        // not in env_steps (which steps_per_sec divides by).
+        use crate::algos::common::EpsSchedule;
+        use crate::rng::Pcg32;
+        use crate::runtime::manifest::TensorSpec;
+
+        let specs = vec![
+            TensorSpec { name: "q.w0".into(), shape: vec![4, 8] },
+            TensorSpec { name: "q.b0".into(), shape: vec![8] },
+            TensorSpec { name: "q.w1".into(), shape: vec![8, 2] },
+            TensorSpec { name: "q.b1".into(), shape: vec![2] },
+        ];
+        let mut rng = Pcg32::new(9, 1);
+        let params = ParamSet::init(&specs, &mut rng);
+        let mut acfg = ActorQConfig::new(1);
+        acfg.flush_every = 64;
+        let hcfg = HarnessConfig {
+            env_id: "cartpole",
+            seed: 13,
+            total_steps: 100,
+            warmup: 0,
+            train_freq: 1,
+            log_every: 0,
+            exploration: Exploration::EpsGreedy {
+                schedule: EpsSchedule { start: 1.0, end: 1.0, fraction: 1.0 },
+                horizon: 100,
+            },
+            returns: ReturnLog::PerEpisode,
+            acfg: &acfg,
+        };
+        let harness = LearnerHarness::spawn(&params, &hcfg).unwrap();
+        let mut pushed = 0usize;
+        let log = harness.run(|_t| pushed += 1, |_step, _publish| Ok(Some(0.0))).unwrap();
+        assert_eq!(log.env_steps, 100);
+        assert_eq!(pushed, log.env_steps + log.env_steps_overshoot);
+        assert_eq!(pushed % 64, 0, "full 64-transition flushes only");
+        assert!(log.env_steps_overshoot >= 28, "overshoot {}", log.env_steps_overshoot);
     }
 
     #[test]

@@ -29,8 +29,12 @@
 //!   and an [`actor::Exploration`] rule (epsilon-greedy for DQN heads,
 //!   additive Gaussian for DDPG heads).
 //! * [`pool`] — spawns N actors, owns the bounded experience channel
-//!   (back-pressure: actors block when the learner falls behind), and
-//!   joins them on shutdown.
+//!   (back-pressure: actors block when the learner falls behind),
+//!   watches actor liveness (a single dead actor surfaces within one
+//!   recv poll, not at shutdown), and joins them on shutdown. Threaded
+//!   actor engines all submit to the shared persistent worker pool
+//!   ([`crate::inference::workers::global`]) — no per-actor thread
+//!   herds.
 //! * [`learner`] — learner-side pacing ([`learner::Pacer`] keeps the
 //!   train-step : env-step ratio equal to the synchronous drivers) and
 //!   the [`learner::ActorQLog`] telemetry, including the per-component

@@ -8,10 +8,10 @@
 //! first, which unblocks any actor parked on a full channel.
 
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError};
+use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, TryRecvError};
 use std::sync::Arc;
 use std::thread::JoinHandle;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use crate::actorq::actor::{run_actor, ActorSetup, ActorStats, Exploration};
 use crate::actorq::broadcast::ParamBroadcast;
@@ -19,7 +19,7 @@ use crate::actorq::ExperienceBatch;
 use crate::envs::registry::make_env;
 use crate::envs::vec_env::VecEnv;
 use crate::error::{Error, Result};
-use crate::rng::Pcg32;
+use crate::rng::{mix_seed, Pcg32};
 use crate::sustain::EnergyMeter;
 
 /// Pool construction parameters (algo-agnostic; the exploration rule is
@@ -61,7 +61,10 @@ impl ActorPool {
         let mut handles = Vec::with_capacity(cfg.n_actors);
         for id in 0..cfg.n_actors {
             let env_id = cfg.env_id.clone();
-            let envs = VecEnv::new(cfg.envs_per_actor, cfg.seed ^ (0x9e37 + id as u64), || {
+            // Splitmix-style derivation: a plain `seed ^ (const + id)`
+            // collides for nearby (seed, id) pairs and hands adjacent
+            // actors correlated env streams (pinned in rng.rs tests).
+            let envs = VecEnv::new(cfg.envs_per_actor, mix_seed(cfg.seed, id as u64), || {
                 make_env(&env_id).expect("env id validated above")
             });
             let setup = ActorSetup {
@@ -81,29 +84,76 @@ impl ActorPool {
         Ok(ActorPool { rx, handles, stop })
     }
 
+    /// Error if any actor thread has already exited: a live pool never
+    /// retires actors on its own, so a finished handle mid-run means the
+    /// actor panicked (or bailed on an engine error) and the pool is
+    /// silently running at n−1 throughput.
+    fn check_live(&self) -> Result<()> {
+        for (id, h) in self.handles.iter().enumerate() {
+            if h.is_finished() {
+                return Err(Error::Experiment(format!(
+                    "actor {id} exited mid-run (panicked or hit an engine error)"
+                )));
+            }
+        }
+        Ok(())
+    }
+
     /// Wait up to `timeout` for the next experience batch. `Ok(None)` on
-    /// timeout; an error means every actor hung up unexpectedly.
+    /// timeout; an error means an actor died.
+    ///
+    /// The wait is sliced into short polls so a **single** dead actor
+    /// surfaces within ~one slice — an mpsc receiver only reports
+    /// `Disconnected` once *every* sender hangs up, which used to let a
+    /// panicked actor silently degrade the pool until shutdown. Queued
+    /// batches still win over the liveness check: the error fires only
+    /// once the channel is empty.
     pub fn recv_timeout(&self, timeout: Duration) -> Result<Option<ExperienceBatch>> {
-        match self.rx.recv_timeout(timeout) {
-            Ok(b) => Ok(Some(b)),
-            Err(RecvTimeoutError::Timeout) => Ok(None),
-            Err(RecvTimeoutError::Disconnected) => {
-                Err(Error::Experiment("actor pool disconnected (actor thread died)".into()))
+        const POLL: Duration = Duration::from_millis(20);
+        let deadline = Instant::now() + timeout;
+        loop {
+            let left = deadline.saturating_duration_since(Instant::now());
+            match self.rx.recv_timeout(left.min(POLL)) {
+                Ok(b) => return Ok(Some(b)),
+                Err(RecvTimeoutError::Timeout) => {
+                    self.check_live()?;
+                    if left <= POLL {
+                        return Ok(None);
+                    }
+                }
+                Err(RecvTimeoutError::Disconnected) => {
+                    return Err(Error::Experiment(
+                        "actor pool disconnected (every actor hung up)".into(),
+                    ));
+                }
             }
         }
     }
 
     /// Drain whatever is already queued without blocking (at most `max`
     /// batches, so one drain cannot starve the train loop).
-    pub fn try_drain(&self, max: usize) -> Vec<ExperienceBatch> {
+    ///
+    /// A disconnected channel is an error, not an empty drain — the
+    /// learner must not spin on a dead pool. Batches that were queued
+    /// ahead of the hangup are still delivered: the error is deferred to
+    /// the next call rather than dropping data on the floor.
+    pub fn try_drain(&self, max: usize) -> Result<Vec<ExperienceBatch>> {
         let mut out = Vec::new();
         while out.len() < max {
             match self.rx.try_recv() {
                 Ok(b) => out.push(b),
-                Err(_) => break,
+                Err(TryRecvError::Empty) => break,
+                Err(TryRecvError::Disconnected) => {
+                    if out.is_empty() {
+                        return Err(Error::Experiment(
+                            "actor pool disconnected (every actor hung up)".into(),
+                        ));
+                    }
+                    break;
+                }
             }
         }
-        out
+        Ok(out)
     }
 
     /// Stop all actors and collect their stats. Dropping the receiver
@@ -233,6 +283,52 @@ mod tests {
         pool.shutdown().unwrap();
         assert!(meter.steps(Component::Actors) > 0, "env steps attributed");
         assert!(meter.busy_secs(Component::Actors) > 0.0, "busy time attributed");
+    }
+
+    #[test]
+    fn dead_actor_is_surfaced_promptly() {
+        // One healthy (parked) actor, one that panics immediately. The
+        // old recv_timeout only watched the channel, which reports
+        // nothing until EVERY sender hangs up — a single corpse silently
+        // ran the pool at n−1 until shutdown. The poll loop must surface
+        // it within a few slices, not after the full timeout.
+        let (tx, rx) = sync_channel::<ExperienceBatch>(4);
+        let stop = Arc::new(AtomicBool::new(false));
+        let healthy = std::thread::spawn(|| -> ActorStats {
+            std::thread::sleep(Duration::from_secs(5));
+            ActorStats::default()
+        });
+        let dead = std::thread::spawn(|| -> ActorStats { panic!("injected actor crash") });
+        std::thread::sleep(Duration::from_millis(50)); // let the panic land
+        let pool = ActorPool { rx, handles: vec![healthy, dead], stop };
+        let t0 = Instant::now();
+        let err = pool.recv_timeout(Duration::from_secs(10)).unwrap_err();
+        assert!(
+            t0.elapsed() < Duration::from_secs(2),
+            "death took {:?} to surface",
+            t0.elapsed()
+        );
+        assert!(err.to_string().contains("actor 1"), "{err}");
+        drop(tx);
+    }
+
+    #[test]
+    fn try_drain_surfaces_disconnect_after_queued_batches() {
+        let (tx, rx) = sync_channel::<ExperienceBatch>(4);
+        let stop = Arc::new(AtomicBool::new(false));
+        let pool = ActorPool { rx, handles: Vec::new(), stop };
+        tx.send(ExperienceBatch {
+            actor_id: 0,
+            param_version: 0,
+            transitions: Vec::new(),
+            episode_returns: Vec::new(),
+        })
+        .unwrap();
+        drop(tx); // every sender gone, one batch still queued
+        let drained = pool.try_drain(8).unwrap();
+        assert_eq!(drained.len(), 1, "queued data must survive the hangup");
+        let err = pool.try_drain(8).unwrap_err();
+        assert!(err.to_string().contains("disconnected"), "{err}");
     }
 
     #[test]

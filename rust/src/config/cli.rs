@@ -20,6 +20,7 @@ const VALUE_FLAGS: &[&str] = &[
     "artifacts", "runs-dir", "scale", "episodes", "seed", "steps", "bits",
     "only", "shard", "jobs", "env", "algo", "quant", "delay", "out", "lr",
     "region", "cpu-watts", "accel-watts", "carbon-config", "threads",
+    "window-us", "max-batch",
 ];
 
 impl Args {
@@ -216,6 +217,16 @@ mod tests {
             "defaults to the single-thread engines"
         );
         assert!(Args::parse(&argv("bench --threads")).is_err(), "value required");
+    }
+
+    #[test]
+    fn serve_flags_take_values() {
+        let a = Args::parse(&argv("exp serve --window-us 500 --max-batch 16")).unwrap();
+        assert_eq!(a.get_u64("window-us", 250).unwrap(), 500);
+        assert_eq!(a.get_usize("max-batch", 32).unwrap(), 16);
+        let d = Args::parse(&argv("exp serve")).unwrap();
+        assert_eq!(d.get_u64("window-us", 250).unwrap(), 250, "defaults apply");
+        assert!(Args::parse(&argv("exp serve --max-batch")).is_err(), "value required");
     }
 
     #[test]

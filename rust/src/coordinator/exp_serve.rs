@@ -1,0 +1,266 @@
+//! `exp serve` — dynamic-batching policy serving under concurrent load
+//! (the heavy-traffic half of ROADMAP direction 2).
+//!
+//! Runs fully **offline** — no PJRT artifacts needed: each cell moves a
+//! randomly-initialized mid-size policy engine onto a
+//! [`PolicyServer`] and drives it closed-loop from N client threads,
+//! recording what the paper's offline GEMM benchmarks cannot show —
+//! the *served* per-query p50/p99 latency and the batch sizes the
+//! deadline window actually coalesces. Cells sweep precision (fp32
+//! baseline, int8 headline, `--bits` widths opt-in) x client count
+//! (1 = latency floor, no coalescing possible; 8 = the batching win).
+//!
+//! Besides the usual JSONL rows + text table, `render` writes the rows
+//! to `BENCH_serve.json` (schema-checked in CI) so the serving
+//! trajectory is tracked across PRs. `--window-us` / `--max-batch`
+//! expose the two batching knobs; `--threads` sets the engine's
+//! intra-op workers (shared persistent pool).
+
+use std::time::Duration;
+
+use crate::coordinator::experiment::{ExpCtx, Experiment};
+use crate::coordinator::metrics::{n, render_table, row, s, write_json_file, Row};
+use crate::error::{Error, Result};
+use crate::inference::{engine_for_cfg, EngineConfig};
+use crate::quant::Precision;
+use crate::rng::{mix_seed, Pcg32};
+use crate::runtime::json::Json;
+use crate::runtime::ParamSet;
+use crate::serve::{PolicyServer, ServeConfig};
+
+pub struct Serve;
+
+/// Synthetic policy shape: wide enough that batching amortizes real
+/// weight traffic (and the threaded engines have >1 column block), small
+/// enough for CI quick mode.
+const DIMS: [usize; 4] = [64, 256, 256, 8];
+
+/// Client-thread counts per precision cell.
+const CLIENTS: &[usize] = &[1, 8];
+
+/// Total queries per cell at `--scale 1`.
+const BASE_QUERIES: f64 = 4_000.0;
+
+fn precisions(ctx: &ExpCtx) -> Vec<Precision> {
+    let mut ps = vec![Precision::Fp32, Precision::Int(8)];
+    for &b in ctx.sweep_bits().iter().filter(|&&b| b != 8 && Precision::Int(b).engine_supported())
+    {
+        ps.push(Precision::Int(b));
+    }
+    ps
+}
+
+fn parse_item(item: &str) -> Result<(Precision, usize)> {
+    let (label, c) = item
+        .rsplit_once("_c")
+        .ok_or_else(|| Error::Experiment(format!("bad serve item '{item}'")))?;
+    let clients: usize =
+        c.parse().map_err(|_| Error::Experiment(format!("bad client count in '{item}'")))?;
+    let precision = if label == "fp32" {
+        Precision::Fp32
+    } else if let Some(b) = label.strip_prefix("int").and_then(|b| b.parse().ok()) {
+        Precision::Int(b)
+    } else {
+        return Err(Error::Experiment(format!("bad precision in '{item}'")));
+    };
+    Ok((precision, clients))
+}
+
+/// Serve `queries` closed-loop requests from `clients` threads against a
+/// fresh engine at `precision`, and fold the shutdown report into a row.
+fn serve_cell(
+    ctx: &ExpCtx,
+    precision: Precision,
+    clients: usize,
+    queries: usize,
+) -> Result<Row> {
+    let specs = crate::coordinator::exp_actorq::mlp_param_specs(&DIMS, "pi");
+    let mut rng = Pcg32::new(ctx.seed, 31);
+    let params = ParamSet::init(&specs, &mut rng);
+    let engine =
+        engine_for_cfg(&params, precision, EngineConfig::with_threads(ctx.threads))?;
+
+    let cfg = ServeConfig {
+        max_batch: ctx.max_batch,
+        window: Duration::from_micros(ctx.window_us),
+        queue_capacity: 1024,
+    };
+    let (server, client) = PolicyServer::spawn(engine, cfg);
+    let per_client = queries / clients;
+    let joins: Vec<_> = (0..clients)
+        .map(|c| {
+            let cl = client.clone();
+            // remainder lands on client 0 so the total is exact
+            let mine = per_client + if c == 0 { queries % clients } else { 0 };
+            let seed = mix_seed(ctx.seed, c as u64);
+            std::thread::spawn(move || -> std::result::Result<(), String> {
+                let mut rng = Pcg32::new(seed, 17);
+                let mut obs = vec![0.0f32; DIMS[0]];
+                for _ in 0..mine {
+                    for v in obs.iter_mut() {
+                        *v = rng.uniform_range(-1.0, 1.0);
+                    }
+                    cl.query(&obs).map_err(|e| e.to_string())?;
+                }
+                Ok(())
+            })
+        })
+        .collect();
+    drop(client);
+    for j in joins {
+        j.join()
+            .map_err(|_| Error::Experiment("serve client thread panicked".into()))?
+            .map_err(Error::Experiment)?;
+    }
+    let report = server.shutdown();
+
+    let hist: Vec<Json> =
+        report.batches.counts().iter().map(|&c| Json::Num(c as f64)).collect();
+    Ok(row(&[
+        ("engine", s(precision.label())),
+        ("bits", n(precision.bits() as f64)),
+        ("clients", n(clients as f64)),
+        ("queries", n(report.queries as f64)),
+        ("rejected", n(report.rejected as f64)),
+        ("qps", n(report.qps())),
+        ("p50_us", n(report.latency.p50_us())),
+        ("p99_us", n(report.latency.p99_us())),
+        ("mean_us", n(report.latency.mean_us())),
+        ("mean_batch", n(report.batches.mean())),
+        ("max_batch_seen", n(report.batches.max_seen() as f64)),
+        ("batch_hist", Json::Arr(hist)),
+        ("window_us", n(ctx.window_us as f64)),
+        ("max_batch", n(ctx.max_batch as f64)),
+        ("wall_secs", n(report.wall_secs)),
+    ]))
+}
+
+impl Experiment for Serve {
+    fn name(&self) -> &'static str {
+        "serve"
+    }
+
+    fn description(&self) -> &'static str {
+        "dynamic-batching policy server: p50/p99 latency + batch-size histograms (offline)"
+    }
+
+    fn items(&self, ctx: &ExpCtx) -> Vec<String> {
+        let mut out = Vec::new();
+        for p in precisions(ctx) {
+            for &c in CLIENTS {
+                out.push(format!("{}_c{c}", p.label()));
+            }
+        }
+        out
+    }
+
+    fn run_item(&self, ctx: &ExpCtx, item: &str) -> Result<Vec<Row>> {
+        let (precision, clients) = parse_item(item)?;
+        let queries = ((BASE_QUERIES * ctx.scale as f64) as usize).max(500);
+        Ok(vec![serve_cell(ctx, precision, clients, queries)?])
+    }
+
+    fn render(&self, ctx: &ExpCtx, rows: &[Row]) -> String {
+        let mlp = DIMS.iter().map(|d| d.to_string()).collect::<Vec<_>>().join("x");
+        let mut out = format!(
+            "Policy serving — dynamic batching over the persistent worker pool\n\
+             (mlp {mlp}, window {} us, max_batch {}, engine threads {})\n\n",
+            ctx.window_us, ctx.max_batch, ctx.threads
+        );
+        out.push_str(&render_table(
+            &["engine", "bits", "clients", "queries", "rejected", "qps", "p50_us", "p99_us",
+              "mean_batch", "max_batch_seen"],
+            rows,
+        ));
+        out.push_str(
+            "\nClients are closed-loop, so mean_batch tracks concurrency: at 1\n\
+             client no coalescing is possible (the latency floor); at 8 the\n\
+             deadline window folds concurrent queries into one forward_batch\n\
+             call and qps rides the engine's batched roofline. Latency is\n\
+             enqueue-to-reply (queueing included), from the log-linear\n\
+             histogram (buckets within 25%).\n",
+        );
+
+        let mut doc = std::collections::BTreeMap::new();
+        doc.insert("bench".to_string(), Json::Str("serve".into()));
+        doc.insert("mlp".to_string(), Json::Str(mlp));
+        doc.insert("window_us".to_string(), Json::Num(ctx.window_us as f64));
+        doc.insert("max_batch".to_string(), Json::Num(ctx.max_batch as f64));
+        doc.insert(
+            "rows".to_string(),
+            Json::Arr(rows.iter().map(|r| Json::Obj(r.clone())).collect()),
+        );
+        match write_json_file("BENCH_serve.json", &Json::Obj(doc)) {
+            Ok(()) => out.push_str("\nwrote BENCH_serve.json\n"),
+            Err(e) => out.push_str(&format!("\nwarning: BENCH_serve.json not written: {e}\n")),
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctx() -> ExpCtx<'static> {
+        ExpCtx {
+            rt: None,
+            runs_dir: std::env::temp_dir().join("quarl_serve_test"),
+            scale: 1.0,
+            episodes: 1,
+            seed: 3,
+            bits: vec![],
+            bits_explicit: false,
+            filter: None,
+            shard: None,
+            jobs: 0,
+            threads: 1,
+            window_us: 200,
+            max_batch: 8,
+            sustain: crate::sustain::SustainConfig::default(),
+        }
+    }
+
+    #[test]
+    fn items_sweep_precisions_and_clients() {
+        let c = ctx();
+        let items = Serve.items(&c);
+        assert_eq!(items, vec!["fp32_c1", "fp32_c8", "int8_c1", "int8_c8"]);
+        for it in &items {
+            parse_item(it).unwrap();
+        }
+        let mut c4 = ctx();
+        c4.bits = vec![4, 8];
+        c4.bits_explicit = true;
+        let items = Serve.items(&c4);
+        assert!(items.contains(&"int4_c8".to_string()), "{items:?}");
+        assert_eq!(items.iter().filter(|i| i.contains("int8")).count(), 2, "no int8 dupes");
+    }
+
+    #[test]
+    fn parse_item_round_trips_and_rejects_garbage() {
+        assert_eq!(parse_item("fp32_c1").unwrap(), (Precision::Fp32, 1));
+        assert_eq!(parse_item("int4_c8").unwrap(), (Precision::Int(4), 8));
+        assert!(parse_item("fp32").is_err());
+        assert!(parse_item("float_c2").is_err());
+        assert!(parse_item("int8_cx").is_err());
+    }
+
+    #[test]
+    fn serve_cell_reports_every_query() {
+        let c = ctx();
+        let r = serve_cell(&c, Precision::Int(8), 4, 64).unwrap();
+        assert_eq!(r["queries"], Json::Num(64.0));
+        assert_eq!(r["rejected"], Json::Num(0.0));
+        let p50 = r["p50_us"].as_f64().unwrap();
+        let p99 = r["p99_us"].as_f64().unwrap();
+        assert!(p50 > 0.0 && p50 <= p99, "p50 {p50} p99 {p99}");
+        let hist_total: f64 = match &r["batch_hist"] {
+            Json::Arr(xs) => {
+                xs.iter().enumerate().map(|(i, v)| (i + 1) as f64 * v.as_f64().unwrap()).sum()
+            }
+            other => panic!("batch_hist not an array: {other:?}"),
+        };
+        assert_eq!(hist_total, 64.0, "histogram accounts for every query");
+    }
+}

@@ -46,6 +46,11 @@ pub struct ExpCtx<'a> {
     /// consumer runs). Outputs are bit-identical at any setting — this
     /// only moves latency columns.
     pub threads: usize,
+    /// Serving batching window in microseconds (`--window-us`; the
+    /// deadline `exp serve` holds an open batch for).
+    pub window_us: u64,
+    /// Largest coalesced serving batch (`--max-batch`).
+    pub max_batch: usize,
     /// Carbon-accounting knobs (region, device watts, config overlay).
     pub sustain: crate::sustain::SustainConfig,
 }
@@ -110,6 +115,7 @@ pub fn all_experiments() -> Vec<Box<dyn Experiment>> {
         Box::new(crate::coordinator::exp_sweetspot::Fig7),
         Box::new(crate::coordinator::exp_actorq::ActorQExp),
         Box::new(crate::coordinator::exp_carbon::Carbon),
+        Box::new(crate::coordinator::exp_serve::Serve),
     ]
 }
 
@@ -214,6 +220,10 @@ fn spawn_shards(ctx: &ExpCtx, exp_name: &str) -> Result<()> {
         // Engine threading must survive into shard children so latency
         // cells are measured identically.
         cmd.arg("--threads").arg(format!("{}", ctx.threads));
+        // Serving knobs likewise: a shard's serve cells must batch under
+        // the same window/cap as the parent's.
+        cmd.arg("--window-us").arg(format!("{}", ctx.window_us));
+        cmd.arg("--max-batch").arg(format!("{}", ctx.max_batch));
         // Carbon-accounting knobs must survive into shard children so
         // every cell is billed identically.
         cmd.arg("--region").arg(ctx.sustain.region());

@@ -13,8 +13,9 @@
 //! * [`metrics`] — JSONL row sinks, aligned text tables, and the
 //!   `BENCH_*.json` machine-readable report writer.
 //! * `exp_*` — one module per paper table/figure, plus [`exp_actorq`]
-//!   (systems study) and [`exp_carbon`] (emissions accounting; runs
-//!   offline).
+//!   (systems study), [`exp_carbon`] (emissions accounting; runs
+//!   offline), and [`exp_serve`] (dynamic-batching policy serving;
+//!   runs offline).
 
 pub mod cache;
 pub mod evaluator;
@@ -26,6 +27,7 @@ pub mod exp_dists;
 pub mod exp_matrix;
 pub mod exp_mixed;
 pub mod exp_qat;
+pub mod exp_serve;
 pub mod exp_sweetspot;
 pub mod exp_table2;
 pub mod metrics;

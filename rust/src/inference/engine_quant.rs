@@ -25,7 +25,9 @@
 //!   register-blocked 4×4 microkernel (4 batch rows × 4 input rows per
 //!   step, products paired i16-dot style before joining the i32
 //!   accumulator), and optionally splits output-column blocks across
-//!   [`EngineConfig::threads`] scoped threads.
+//!   [`EngineConfig::threads`] workers of the persistent intra-op pool
+//!   ([`crate::inference::workers`] — parked threads, no per-layer
+//!   spawn).
 //! * [`KernelKind::RowMajor`] — the input-major codec layout and loop
 //!   structure of PR 4, kept as the in-tree reference: parity tests pin
 //!   the prepacked kernel against it, and `bench_engines` tags rows
@@ -73,11 +75,12 @@ impl KernelKind {
 #[derive(Debug, Clone, Copy)]
 pub struct EngineConfig {
     /// Intra-op worker threads for `forward_batch`: output-column
-    /// blocks are split across `threads` scoped threads (prepacked
-    /// kernel only). 1 (the default) keeps every call on the caller's
-    /// thread — ActorQ's one-thread-per-actor model is unchanged unless
-    /// a consumer opts in. Outputs are bit-identical at every thread
-    /// count (threads own disjoint output columns).
+    /// blocks are split into `threads` column-range jobs on the shared
+    /// persistent worker pool ([`crate::inference::workers::global`];
+    /// prepacked kernel only). 1 (the default) keeps every call on the
+    /// caller's thread — ActorQ's one-thread-per-actor model is
+    /// unchanged unless a consumer opts in. Outputs are bit-identical
+    /// at every thread count (threads own disjoint output columns).
     pub threads: usize,
     /// Weight layout / kernel variant.
     pub kernel: KernelKind,
@@ -173,7 +176,8 @@ struct Lane {
 /// single-observation path, and the first batched call grows them to
 /// the high-water `batch x max_dim` footprint, after which no call
 /// allocates (the thread-parallel path allocates only its tiny
-/// per-layer range table).
+/// per-layer range table and job boxes — never a thread: workers live
+/// in the persistent shared pool).
 #[derive(Debug, Clone)]
 pub struct EngineQuant {
     pub layers: Vec<LayerQ>,
@@ -772,11 +776,13 @@ impl EngineQuant {
     /// read (one SWAR bulk unpack when stored sub-byte) consumed by
     /// every batch row through the 4×4 microkernel, so weight bytes
     /// stream from memory once per sweep and the unpack is amortized the
-    /// same way; with `threads > 1` the output-column blocks split
-    /// across scoped worker threads, each finishing its columns through
-    /// the shared epilogue into a private tile that is then scattered
-    /// into the layer output — disjoint columns, identical per-element
-    /// arithmetic, bit-identical results at any thread count.
+    /// same way; with `threads > 1` the output-column blocks become
+    /// per-layer jobs on the persistent shared worker pool
+    /// ([`crate::inference::workers`]), each worker finishing its
+    /// columns through the shared epilogue into a private tile that is
+    /// then scattered into the layer output — disjoint columns,
+    /// identical per-element arithmetic, bit-identical results at any
+    /// thread count, and no thread spawn anywhere on the hot path.
     pub fn forward_batch(&mut self, xs: &[f32], batch: usize, out: &mut [f32]) -> Result<()> {
         let n_layers = self.layers.len();
         let in_dim = self.in_dim();
@@ -870,30 +876,37 @@ impl EngineQuant {
                     } else {
                         let ranges = block_ranges(n_blocks, t, m);
                         let epi = &epi;
-                        std::thread::scope(|s| {
-                            for (lane, &(c_lo, c_hi)) in lanes.iter_mut().zip(&ranges) {
-                                s.spawn(move || {
-                                    let w = c_hi - c_lo;
-                                    let view = TileView { stride: w, col0: c_lo };
-                                    lane.acc[..batch * w].fill(0);
-                                    gemm_panels(
-                                        ps,
-                                        a,
-                                        (c_lo, c_hi),
-                                        &mut lane.acc[..batch * w],
-                                        view,
-                                        &mut lane.panel,
-                                    );
-                                    epi.run(
-                                        (c_lo, c_hi),
-                                        &lane.acc[..batch * w],
-                                        view,
-                                        &mut lane.outb[..batch * w],
-                                        view,
-                                    );
-                                });
-                            }
-                        });
+                        // One boxed column-range job per lane, submitted
+                        // to the persistent worker pool (the caller runs
+                        // the first range itself) instead of spawning
+                        // scoped threads per layer. Disjoint columns +
+                        // the shared epilogue keep every element's
+                        // arithmetic identical to the sequential path.
+                        let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> =
+                            Vec::with_capacity(t);
+                        for (lane, &(c_lo, c_hi)) in lanes.iter_mut().zip(&ranges) {
+                            jobs.push(Box::new(move || {
+                                let w = c_hi - c_lo;
+                                let view = TileView { stride: w, col0: c_lo };
+                                lane.acc[..batch * w].fill(0);
+                                gemm_panels(
+                                    ps,
+                                    a,
+                                    (c_lo, c_hi),
+                                    &mut lane.acc[..batch * w],
+                                    view,
+                                    &mut lane.panel,
+                                );
+                                epi.run(
+                                    (c_lo, c_hi),
+                                    &lane.acc[..batch * w],
+                                    view,
+                                    &mut lane.outb[..batch * w],
+                                    view,
+                                );
+                            }));
+                        }
+                        crate::inference::workers::global().run_scoped(jobs);
                         for (lane, &(c_lo, c_hi)) in lanes.iter().zip(&ranges) {
                             let w = c_hi - c_lo;
                             for r in 0..batch {

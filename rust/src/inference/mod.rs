@@ -16,6 +16,9 @@
 //!   PR-3 behavior).
 //! * [`panel`] — the construction-time panel-major prepacked weight
 //!   layout the default kernels stream.
+//! * [`workers`] — the persistent intra-op worker pool the threaded
+//!   batched path submits per-layer column-range jobs to (parked
+//!   threads shared process-wide; no spawn per layer or per engine).
 //! * [`memsim`] — RasPi-class memory-pressure model (swap cliff).
 //!
 //! Every engine exposes a single-observation `forward` GEMV and a
@@ -33,12 +36,14 @@ pub mod engine_int8;
 pub mod engine_quant;
 pub mod memsim;
 pub mod panel;
+pub mod workers;
 
 pub use engine_f32::EngineF32;
 pub use engine_int8::{EngineInt4, EngineInt8};
 pub use engine_quant::{EngineConfig, EngineQuant, KernelKind, LayerQ, WeightStore};
 pub use memsim::MemModel;
 pub use panel::PanelStore;
+pub use workers::WorkerPool;
 
 use crate::error::Result;
 use crate::quant::Precision;
@@ -74,13 +79,41 @@ pub trait Engine {
     fn set_threads(&mut self, _threads: usize) {}
 }
 
+/// Boxed engines are engines: lets the trait objects [`engine_for`]
+/// returns flow into generic consumers like
+/// [`crate::serve::PolicyServer::spawn`] without re-monomorphizing.
+impl<E: Engine + ?Sized> Engine for Box<E> {
+    fn precision(&self) -> Precision {
+        (**self).precision()
+    }
+    fn forward(&mut self, x: &[f32], out: &mut [f32]) -> Result<()> {
+        (**self).forward(x, out)
+    }
+    fn forward_batch(&mut self, xs: &[f32], batch: usize, out: &mut [f32]) -> Result<()> {
+        (**self).forward_batch(xs, batch, out)
+    }
+    fn memory_bytes(&self) -> usize {
+        (**self).memory_bytes()
+    }
+    fn in_dim(&self) -> usize {
+        (**self).in_dim()
+    }
+    fn out_dim(&self) -> usize {
+        (**self).out_dim()
+    }
+    fn set_threads(&mut self, threads: usize) {
+        (**self).set_threads(threads)
+    }
+}
+
 /// Build the engine for `precision` as a trait object — the sweep-style
 /// consumers (`bench_engines`, the per-bitwidth experiment rows) use
-/// this; hot paths hold the concrete types.
+/// this; hot paths hold the concrete types. The object is `Send` (every
+/// engine owns plain buffers) so it can move onto a serving thread.
 pub fn engine_for(
     params: &crate::runtime::ParamSet,
     precision: Precision,
-) -> Result<Box<dyn Engine>> {
+) -> Result<Box<dyn Engine + Send>> {
     engine_for_cfg(params, precision, EngineConfig::default())
 }
 
@@ -91,7 +124,7 @@ pub fn engine_for_cfg(
     params: &crate::runtime::ParamSet,
     precision: Precision,
     cfg: EngineConfig,
-) -> Result<Box<dyn Engine>> {
+) -> Result<Box<dyn Engine + Send>> {
     precision.validate_for_engine()?;
     Ok(match precision {
         Precision::Fp32 => Box::new(EngineF32::from_params(params)?),

@@ -1,0 +1,297 @@
+//! Persistent intra-op worker pool for the quantized engines' batched
+//! path (and anything else that wants to split borrowed work across
+//! threads without paying a spawn per call).
+//!
+//! The previous threaded `forward_batch` spawned fresh
+//! `std::thread::scope` workers **per layer**, so on narrow layers the
+//! spawn/join overhead ate the parallel win (ROADMAP direction 2). This
+//! module replaces it: a process-wide pool of long-lived workers, each
+//! parked on its own channel, that execute borrowed column-range jobs
+//! submitted by the engines. Workers are spawned once (growing lazily to
+//! the largest thread count any engine asks for) and reused for every
+//! layer of every call — the steady-state cost of a parallel layer is
+//! one channel send per worker plus one condvar wait, not a thread
+//! spawn.
+//!
+//! The pool is deliberately *numerics-free*: it runs opaque closures.
+//! Bit-exactness of the threaded engines is a property of the jobs they
+//! submit (disjoint output columns, shared f32 epilogue), pinned by
+//! `rust/tests/engine_parity.rs`; the pool only guarantees that every
+//! job ran to completion before [`WorkerPool::run_scoped`] returns.
+//!
+//! ## Safety model
+//!
+//! Jobs borrow the caller's stack (activation views, per-lane scratch).
+//! [`WorkerPool::run_scoped`] erases those lifetimes to hand the
+//! closures to persistent threads, which is sound because it **blocks
+//! until every submitted job has finished before returning** — on the
+//! normal path and on the panic path alike (a drop guard waits out the
+//! workers even while the caller unwinds), so no worker can touch a
+//! borrow that has gone out of scope. A panicking job is caught on the
+//! worker (the worker survives for the next job) and re-raised on the
+//! caller after the barrier, mirroring `std::thread::scope` semantics.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Condvar, Mutex, OnceLock};
+use std::sync::Arc;
+
+/// A lifetime-erased job plus the completion rendezvous it reports to.
+struct Job {
+    task: Box<dyn FnOnce() + Send + 'static>,
+    sync: Arc<JobSync>,
+}
+
+/// Completion rendezvous for one `run_scoped` call: the caller waits on
+/// the condvar until every worker-side job has decremented `remaining`.
+struct JobSync {
+    remaining: Mutex<usize>,
+    all_done: Condvar,
+    panicked: AtomicBool,
+}
+
+impl JobSync {
+    fn new(jobs: usize) -> JobSync {
+        JobSync {
+            remaining: Mutex::new(jobs),
+            all_done: Condvar::new(),
+            panicked: AtomicBool::new(false),
+        }
+    }
+
+    /// Worker side: mark one job done (runs on the panic path too — a
+    /// lost decrement would deadlock the caller).
+    fn finish_one(&self) {
+        let mut left = self.remaining.lock().expect("pool sync poisoned");
+        *left -= 1;
+        if *left == 0 {
+            self.all_done.notify_all();
+        }
+    }
+
+    /// Caller side: block until every submitted job has finished.
+    fn wait(&self) {
+        let mut left = self.remaining.lock().expect("pool sync poisoned");
+        while *left > 0 {
+            left = self.all_done.wait(left).expect("pool sync poisoned");
+        }
+    }
+}
+
+/// Blocks on the job barrier even when the caller's own share of the
+/// work panics: the borrowed data must stay alive until the workers are
+/// done, unwinding or not.
+struct WaitGuard<'a>(&'a JobSync);
+
+impl Drop for WaitGuard<'_> {
+    fn drop(&mut self) {
+        self.0.wait();
+    }
+}
+
+/// A growable set of persistent, parked worker threads. Most consumers
+/// use the process-wide [`global`] pool (one set of workers shared by
+/// every engine — actor copies of a broadcast engine included — instead
+/// of per-engine thread herds); private pools exist for tests.
+pub struct WorkerPool {
+    /// One sender per live worker; workers park on the receiving end.
+    workers: Mutex<Vec<Sender<Job>>>,
+    /// Monotonic worker count, readable without the lock.
+    spawned: AtomicUsize,
+    /// Rotation cursor so concurrent submitters spread over the pool
+    /// instead of all serializing on worker 0.
+    rr: AtomicUsize,
+}
+
+impl Default for WorkerPool {
+    fn default() -> WorkerPool {
+        WorkerPool::new()
+    }
+}
+
+impl WorkerPool {
+    /// An empty pool; workers are spawned lazily by the first submission
+    /// that needs them.
+    pub fn new() -> WorkerPool {
+        WorkerPool {
+            workers: Mutex::new(Vec::new()),
+            spawned: AtomicUsize::new(0),
+            rr: AtomicUsize::new(0),
+        }
+    }
+
+    /// Workers spawned so far (they are never torn down: the pool's
+    /// whole point is that the population is stable across calls).
+    pub fn spawned(&self) -> usize {
+        self.spawned.load(Ordering::Acquire)
+    }
+
+    /// Clone senders for `k` distinct workers, growing the pool if it
+    /// has fewer than `k`.
+    fn senders(&self, k: usize) -> Vec<Sender<Job>> {
+        let mut workers = self.workers.lock().expect("pool worker list poisoned");
+        while workers.len() < k {
+            let idx = workers.len();
+            let (tx, rx) = channel::<Job>();
+            std::thread::Builder::new()
+                .name(format!("quarl-pool-{idx}"))
+                .spawn(move || {
+                    while let Ok(Job { task, sync }) = rx.recv() {
+                        if catch_unwind(AssertUnwindSafe(task)).is_err() {
+                            sync.panicked.store(true, Ordering::Release);
+                        }
+                        sync.finish_one();
+                    }
+                })
+                .expect("spawn pool worker");
+            workers.push(tx);
+            self.spawned.fetch_add(1, Ordering::Release);
+        }
+        let n = workers.len();
+        let start = self.rr.fetch_add(k, Ordering::Relaxed);
+        (0..k).map(|i| workers[(start + i) % n].clone()).collect()
+    }
+
+    /// Run every job to completion, in parallel: jobs `1..` go to pool
+    /// workers, the caller runs job `0` itself (so `jobs.len()` equals
+    /// the number of threads doing work, matching what a scoped spawn of
+    /// `jobs.len()` threads would use while the caller blocked).
+    ///
+    /// Returns only after **every** job has finished. If any job
+    /// panicked, the panic is re-raised here (after the barrier), like
+    /// `std::thread::scope`. An empty vector is a no-op.
+    pub fn run_scoped<'scope>(&self, jobs: Vec<Box<dyn FnOnce() + Send + 'scope>>) {
+        let mut jobs = jobs.into_iter();
+        let Some(first) = jobs.next() else {
+            return;
+        };
+        let rest = jobs.len();
+        if rest == 0 {
+            first();
+            return;
+        }
+        let sync = Arc::new(JobSync::new(rest));
+        for (tx, job) in self.senders(rest).iter().zip(jobs) {
+            // SAFETY: the worker runs `task` exactly once, and this call
+            // does not return (or resume unwinding) until `sync` reports
+            // every job finished — the WaitGuard below blocks even if
+            // `first()` panics — so everything `job` borrows outlives
+            // its execution. Erasing the lifetime is what lets parked
+            // persistent threads run borrowed work at all.
+            let task: Box<dyn FnOnce() + Send + 'static> = unsafe {
+                std::mem::transmute::<
+                    Box<dyn FnOnce() + Send + 'scope>,
+                    Box<dyn FnOnce() + Send + 'static>,
+                >(job)
+            };
+            tx.send(Job { task, sync: Arc::clone(&sync) })
+                .expect("pool worker hung up");
+        }
+        {
+            let _barrier = WaitGuard(&sync);
+            first();
+        }
+        if sync.panicked.load(Ordering::Acquire) {
+            panic!("worker pool job panicked");
+        }
+    }
+}
+
+static GLOBAL: OnceLock<WorkerPool> = OnceLock::new();
+
+/// The process-wide pool every threaded engine submits to. Lazily
+/// initialized; grows to the largest concurrent thread count requested
+/// and stays there. Broadcast-built actor engines, the serving
+/// front-end, and bench sweeps all share these workers.
+pub fn global() -> &'static WorkerPool {
+    GLOBAL.get_or_init(WorkerPool::new)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fill_jobs(data: &mut [u64], chunk: usize) -> Vec<Box<dyn FnOnce() + Send + '_>> {
+        data.chunks_mut(chunk)
+            .enumerate()
+            .map(|(k, c)| {
+                Box::new(move || {
+                    for (i, v) in c.iter_mut().enumerate() {
+                        *v = (k * 1_000 + i) as u64;
+                    }
+                }) as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect()
+    }
+
+    #[test]
+    fn borrowed_disjoint_jobs_complete_before_return() {
+        let pool = WorkerPool::new();
+        let mut data = vec![u64::MAX; 4 * 64];
+        pool.run_scoped(fill_jobs(&mut data, 64));
+        for (k, c) in data.chunks(64).enumerate() {
+            for (i, &v) in c.iter().enumerate() {
+                assert_eq!(v, (k * 1_000 + i) as u64, "chunk {k} elem {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn workers_are_spawned_once_and_reused() {
+        let pool = WorkerPool::new();
+        let mut data = vec![0u64; 4 * 16];
+        pool.run_scoped(fill_jobs(&mut data, 16));
+        // 4 jobs = caller + 3 workers
+        assert_eq!(pool.spawned(), 3);
+        for _ in 0..100 {
+            pool.run_scoped(fill_jobs(&mut data, 16));
+        }
+        assert_eq!(pool.spawned(), 3, "per-call spawns are the bug this pool removes");
+        // a wider submission grows the pool, once
+        pool.run_scoped(fill_jobs(&mut data, 8));
+        assert_eq!(pool.spawned(), 7);
+    }
+
+    #[test]
+    fn empty_and_single_job_shapes_run_on_the_caller() {
+        let pool = WorkerPool::new();
+        pool.run_scoped(Vec::new());
+        let mut hit = false;
+        pool.run_scoped(vec![Box::new(|| hit = true) as Box<dyn FnOnce() + Send + '_>]);
+        assert!(hit);
+        assert_eq!(pool.spawned(), 0, "caller-only shapes need no workers");
+    }
+
+    #[test]
+    fn worker_job_panic_propagates_and_pool_survives() {
+        let pool = WorkerPool::new();
+        let err = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            pool.run_scoped(vec![
+                Box::new(|| {}) as Box<dyn FnOnce() + Send + '_>,
+                Box::new(|| panic!("injected job failure")),
+            ]);
+        }));
+        assert!(err.is_err(), "worker panic must re-raise on the caller");
+        // the worker caught the unwind and is parked again
+        let mut data = vec![0u64; 32];
+        pool.run_scoped(fill_jobs(&mut data, 16));
+        assert_eq!(data[16], 1_000);
+    }
+
+    #[test]
+    fn caller_job_panic_still_waits_for_workers() {
+        // If the caller's own share panics, the guard must hold the
+        // frame alive until workers finish with the borrowed buffer.
+        let pool = WorkerPool::new();
+        let mut data = vec![0u64; 128];
+        let err = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            let mut jobs = fill_jobs(&mut data, 64);
+            jobs[0] = Box::new(|| panic!("caller share fails"));
+            pool.run_scoped(jobs);
+        }));
+        assert!(err.is_err());
+        // chunk 1 belonged to a worker and must have completed
+        assert_eq!(data[64], 1_000);
+    }
+}

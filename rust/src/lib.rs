@@ -50,6 +50,19 @@
 //! `actorq` experiment and `bench_actorq` bench reproduce the
 //! speedup-vs-actor-count and fp32-vs-int8-actor comparisons.
 //!
+//! ## Serving: dynamic batching over the persistent worker pool
+//!
+//! Two pieces turn the engines into a deployment-shaped stack. The
+//! threaded batched path no longer spawns per layer: engines submit
+//! column-range jobs to a persistent process-wide worker pool
+//! ([`inference::WorkerPool`] — parked threads, bit-identical outputs at
+//! every thread count, shared by every engine including broadcast-built
+//! actor copies). On top of it, [`serve::PolicyServer`] coalesces
+//! concurrent policy queries into single `forward_batch` calls under a
+//! deadline-based batching window with admission control, recording
+//! p50/p99 latency and batch-size histograms; the `serve` experiment
+//! and `bench_serve` write them to `BENCH_serve.json`.
+//!
 //! ## Sustainability accounting (paper §1/§6 carbon claim)
 //!
 //! [`sustain`] meters every ActorQ run ([`sustain::EnergyMeter`]) and
@@ -73,6 +86,7 @@ pub mod quant;
 pub mod replay;
 pub mod rng;
 pub mod runtime;
+pub mod serve;
 pub mod sustain;
 pub mod tensor;
 

@@ -6,6 +6,28 @@
 //! and trainer owns its own stream, split from the experiment seed, so
 //! runs are bit-reproducible regardless of thread scheduling.
 
+/// SplitMix64 finalizer (Steele et al. 2014): a full-avalanche bijection
+/// on `u64` — flipping any input bit flips each output bit with
+/// probability ~1/2. Use it whenever a "nearby" integer (thread id,
+/// shard index, seed+1 sweep) must become a statistically unrelated
+/// seed; a plain XOR or add visibly correlates adjacent streams.
+#[inline]
+pub fn splitmix64(mut z: u64) -> u64 {
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Derive a decorrelated child seed from `(seed, stream)`. The golden
+/// ratio spreads the stream index across the word before the avalanche,
+/// so `(seed, id)` and `(seed + 1, id - 1)`-style near-collisions — which
+/// the old `seed ^ (const + id)` derivation mapped to the *same* value —
+/// land in unrelated places.
+#[inline]
+pub fn mix_seed(seed: u64, stream: u64) -> u64 {
+    splitmix64(seed.wrapping_add(0x9E37_79B9_7F4A_7C15u64.wrapping_mul(stream.wrapping_add(1))))
+}
+
 /// PCG-XSH-RR 64/32: 64-bit state, 32-bit output.
 #[derive(Debug, Clone)]
 pub struct Pcg32 {
@@ -224,6 +246,52 @@ mod tests {
         let mut sorted = v.clone();
         sorted.sort();
         assert_eq!(sorted, (0..50).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn mix_seed_grid_is_distinct_and_avalanched() {
+        // Adjacent (seed, id) pairs — exactly what an actor pool derives
+        // env seeds from — must land far apart.
+        let mut seen = std::collections::HashSet::new();
+        for seed in 0..5u64 {
+            for id in 0..5u64 {
+                assert!(seen.insert(mix_seed(seed, id)), "collision at ({seed}, {id})");
+            }
+        }
+        // Avalanche: neighboring ids differ in roughly half the 64 bits.
+        for seed in 0..8u64 {
+            for id in 0..8u64 {
+                let d = (mix_seed(seed, id) ^ mix_seed(seed, id + 1)).count_ones();
+                assert!((10..=54).contains(&d), "weak diffusion: {d} bits at ({seed}, {id})");
+            }
+        }
+    }
+
+    #[test]
+    fn mix_seed_decorrelates_pcg_streams() {
+        // Streams seeded from adjacent grid points behave independently.
+        for seed in 0..3u64 {
+            for id in 0..3u64 {
+                let mut a = Pcg32::new(mix_seed(seed, id), 0);
+                let mut b = Pcg32::new(mix_seed(seed, id + 1), 0);
+                let mut c = Pcg32::new(mix_seed(seed + 1, id), 0);
+                let ab = (0..64).filter(|_| a.next_u32() == b.next_u32()).count();
+                let ac = (0..64).filter(|_| a.next_u32() == c.next_u32()).count();
+                assert!(ab < 4 && ac < 4, "correlated streams at ({seed}, {id}): {ab}/{ac}");
+            }
+        }
+    }
+
+    #[test]
+    fn mix_seed_fixes_the_xor_derivation_collision() {
+        // Regression: the old `seed ^ (0x9e37 + id)` scheme mapped
+        // (s, 0) and (s ^ 0xf, 1) to the SAME env seed, because
+        // 0x9e37 ^ 0x9e38 == 0xf — two different runs shared identical
+        // env streams. The mixed derivation must keep them apart.
+        let s = 12345u64;
+        let old = |seed: u64, id: u64| seed ^ (0x9e37 + id);
+        assert_eq!(old(s, 0), old(s ^ 0xf, 1), "premise: old scheme collides");
+        assert_ne!(mix_seed(s, 0), mix_seed(s ^ 0xf, 1));
     }
 
     #[test]

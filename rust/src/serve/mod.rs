@@ -1,0 +1,30 @@
+//! Dynamic-batching policy serving (the heavy-traffic half of ROADMAP
+//! direction 2).
+//!
+//! QuaRL's deployment case study (§5) measures a policy answering one
+//! query at a time, but the regime where quantized inference pays the
+//! most is a shared policy server fielding many concurrent queries —
+//! per-query efficiency has to be *measured* under batching, not
+//! inferred from offline GEMM throughput. This module provides that
+//! measurement surface:
+//!
+//! * [`server`] — [`PolicyServer`]: a front-end thread that coalesces
+//!   concurrent [`ServeClient::query`] calls into one
+//!   [`crate::inference::Engine::forward_batch`] call under a
+//!   deadline-based batching window, with bounded-queue admission
+//!   control. Served logits are bit-identical to a direct
+//!   single-observation forward (the engines' batch/scalar parity
+//!   contract does the heavy lifting).
+//! * [`stats`] — O(1)-memory log-linear latency histogram
+//!   ([`LatencyHist`], p50/p99 within 25%), batch-size distribution
+//!   ([`BatchHist`]), and the [`ServeReport`] a shutdown returns.
+//!
+//! `cargo bench --bench bench_serve` and `quarl exp serve` drive this
+//! stack across precisions and client counts and write the histogram
+//! rows to `BENCH_serve.json` (schema-checked in CI).
+
+pub mod server;
+pub mod stats;
+
+pub use server::{PolicyServer, QueryError, ServeClient, ServeConfig};
+pub use stats::{BatchHist, LatencyHist, ServeReport};

@@ -1,0 +1,279 @@
+//! Serving telemetry: a log-linear latency histogram (p50/p99 without
+//! storing per-query samples) and the coalesced batch-size
+//! distribution, plus the [`ServeReport`] the server hands back at
+//! shutdown.
+
+use std::time::Duration;
+
+/// Log-linear (HDR-style) latency histogram in nanoseconds: buckets are
+/// power-of-two octaves subdivided into 4 sub-buckets (2 significant
+/// bits), so any recorded value lands in a bucket whose lower bound is
+/// within 25% of it. O(1) memory for any query count — a serving
+/// front-end cannot keep every sample — at a resolution that is plenty
+/// for p50/p99 reporting.
+#[derive(Debug, Clone)]
+pub struct LatencyHist {
+    /// Bucket index: values 0..4 map to themselves; above that,
+    /// `4 * (octave - 1) + 2-bit mantissa` (octave = floor(log2 v)).
+    buckets: Vec<u64>,
+    count: u64,
+    sum_ns: u128,
+    min_ns: u64,
+    max_ns: u64,
+}
+
+/// 63 octaves x 4 sub-buckets + the 4 identity slots (indices overlap
+/// below octave 2, so 252 covers the full u64 range).
+const N_BUCKETS: usize = 252;
+
+fn bucket_index(ns: u64) -> usize {
+    let v = ns.max(1);
+    let octave = 63 - v.leading_zeros() as u64; // floor(log2 v)
+    if octave < 2 {
+        v as usize
+    } else {
+        (4 * (octave - 1) + ((v >> (octave - 2)) & 3)) as usize
+    }
+}
+
+/// Lower bound (ns) of bucket `idx` — the value `percentile_ns` reports.
+fn bucket_floor(idx: usize) -> u64 {
+    if idx < 4 {
+        idx as u64
+    } else {
+        let octave = (idx as u64) / 4 + 1;
+        let sub = (idx as u64) % 4;
+        (4 + sub) << (octave - 2)
+    }
+}
+
+impl Default for LatencyHist {
+    fn default() -> LatencyHist {
+        LatencyHist::new()
+    }
+}
+
+impl LatencyHist {
+    pub fn new() -> LatencyHist {
+        LatencyHist {
+            buckets: vec![0; N_BUCKETS],
+            count: 0,
+            sum_ns: 0,
+            min_ns: u64::MAX,
+            max_ns: 0,
+        }
+    }
+
+    pub fn record(&mut self, d: Duration) {
+        self.record_ns(d.as_nanos().min(u64::MAX as u128) as u64);
+    }
+
+    pub fn record_ns(&mut self, ns: u64) {
+        self.buckets[bucket_index(ns)] += 1;
+        self.count += 1;
+        self.sum_ns += ns as u128;
+        self.min_ns = self.min_ns.min(ns);
+        self.max_ns = self.max_ns.max(ns);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Latency at quantile `q` in [0, 1]: the lower bound of the bucket
+    /// where the cumulative count crosses `ceil(q * count)` (within 25%
+    /// of the true sample quantile by construction). The top quantile
+    /// (`q >= 1`) is the exact recorded maximum, not a bucket floor.
+    /// 0 when empty.
+    pub fn percentile_ns(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        if q >= 1.0 {
+            return self.max_ns;
+        }
+        let target = ((q.clamp(0.0, 1.0) * self.count as f64).ceil() as u64).max(1);
+        let mut seen = 0u64;
+        for (idx, &c) in self.buckets.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                return bucket_floor(idx).max(self.min_ns).min(self.max_ns);
+            }
+        }
+        self.max_ns
+    }
+
+    pub fn p50_us(&self) -> f64 {
+        self.percentile_ns(0.50) as f64 / 1_000.0
+    }
+
+    pub fn p99_us(&self) -> f64 {
+        self.percentile_ns(0.99) as f64 / 1_000.0
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum_ns as f64 / self.count as f64 / 1_000.0
+        }
+    }
+
+    pub fn max_us(&self) -> f64 {
+        self.max_ns as f64 / 1_000.0
+    }
+
+    /// Non-empty `(bucket_floor_ns, count)` pairs, for report exports.
+    pub fn nonzero_buckets(&self) -> Vec<(u64, u64)> {
+        self.buckets
+            .iter()
+            .enumerate()
+            .filter(|(_, &c)| c > 0)
+            .map(|(i, &c)| (bucket_floor(i), c))
+            .collect()
+    }
+}
+
+/// How many queries each `forward_batch` call coalesced: counts indexed
+/// by batch size (index `b - 1` holds the number of batches of size
+/// `b`).
+#[derive(Debug, Clone, Default)]
+pub struct BatchHist {
+    counts: Vec<u64>,
+}
+
+impl BatchHist {
+    pub fn new(max_batch: usize) -> BatchHist {
+        BatchHist { counts: vec![0; max_batch.max(1)] }
+    }
+
+    pub fn record(&mut self, batch: usize) {
+        if batch == 0 {
+            return;
+        }
+        if batch > self.counts.len() {
+            self.counts.resize(batch, 0);
+        }
+        self.counts[batch - 1] += 1;
+    }
+
+    /// Batches recorded.
+    pub fn batches(&self) -> u64 {
+        self.counts.iter().sum()
+    }
+
+    /// Queries across all batches.
+    pub fn queries(&self) -> u64 {
+        self.counts.iter().enumerate().map(|(i, &c)| (i as u64 + 1) * c).sum()
+    }
+
+    pub fn mean(&self) -> f64 {
+        let b = self.batches();
+        if b == 0 {
+            0.0
+        } else {
+            self.queries() as f64 / b as f64
+        }
+    }
+
+    pub fn max_seen(&self) -> usize {
+        self.counts.iter().rposition(|&c| c > 0).map(|i| i + 1).unwrap_or(0)
+    }
+
+    /// Per-size counts (index `b - 1` = batches of size `b`).
+    pub fn counts(&self) -> &[u64] {
+        &self.counts
+    }
+}
+
+/// Everything a server run measured, returned by
+/// [`crate::serve::PolicyServer::shutdown`].
+#[derive(Debug, Clone)]
+pub struct ServeReport {
+    /// Queries answered (admission-rejected queries excluded).
+    pub queries: u64,
+    /// Queries bounced by admission control (the bounded request queue
+    /// was full at submission time).
+    pub rejected: u64,
+    /// Enqueue-to-reply latency of answered queries.
+    pub latency: LatencyHist,
+    /// Coalesced batch-size distribution.
+    pub batches: BatchHist,
+    /// Wall seconds from the first request to server exit.
+    pub wall_secs: f64,
+}
+
+impl ServeReport {
+    /// Answered-query throughput over the measured wall window.
+    pub fn qps(&self) -> f64 {
+        if self.wall_secs > 0.0 {
+            self.queries as f64 / self.wall_secs
+        } else {
+            0.0
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_floor_is_within_25_percent_below_value() {
+        for ns in [1u64, 3, 4, 7, 9, 100, 999, 1_000, 123_456, 10_000_000, u64::MAX / 2] {
+            let f = bucket_floor(bucket_index(ns));
+            assert!(f <= ns, "floor {f} > value {ns}");
+            assert!(ns - f <= ns / 4, "floor {f} more than 25% below {ns}");
+        }
+        // indices are monotone in the value
+        let mut last = 0;
+        for ns in 1..10_000u64 {
+            let idx = bucket_index(ns);
+            assert!(idx >= last, "index regressed at {ns}");
+            last = idx;
+        }
+    }
+
+    #[test]
+    fn percentiles_are_ordered_and_bracketed() {
+        let mut h = LatencyHist::new();
+        for us in 1..=1_000u64 {
+            h.record_ns(us * 1_000);
+        }
+        assert_eq!(h.count(), 1_000);
+        let (p50, p90, p99) =
+            (h.percentile_ns(0.50), h.percentile_ns(0.90), h.percentile_ns(0.99));
+        assert!(p50 <= p90 && p90 <= p99, "{p50} {p90} {p99}");
+        // within the histogram's 25% bucket resolution of the truth
+        assert!((375_000..=500_000).contains(&p50), "p50 {p50}");
+        assert!(p99 <= h.percentile_ns(1.0));
+        assert_eq!(h.percentile_ns(1.0), 1_000_000);
+        assert!(h.mean_us() > 400.0 && h.mean_us() < 600.0);
+    }
+
+    #[test]
+    fn empty_hist_is_all_zeros() {
+        let h = LatencyHist::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.percentile_ns(0.5), 0);
+        assert_eq!(h.p99_us(), 0.0);
+        assert_eq!(h.mean_us(), 0.0);
+        assert!(h.nonzero_buckets().is_empty());
+    }
+
+    #[test]
+    fn batch_hist_counts_mean_and_max() {
+        let mut b = BatchHist::new(4);
+        for size in [1, 1, 4, 2] {
+            b.record(size);
+        }
+        assert_eq!(b.batches(), 4);
+        assert_eq!(b.queries(), 8);
+        assert!((b.mean() - 2.0).abs() < 1e-12);
+        assert_eq!(b.max_seen(), 4);
+        assert_eq!(b.counts(), &[2, 1, 0, 1]);
+        b.record(6); // beyond the configured max: grows, never drops
+        assert_eq!(b.max_seen(), 6);
+        assert_eq!(b.queries(), 14);
+    }
+}

@@ -482,13 +482,14 @@ fn swar_prepacked_kernels_survive_degenerate_rows() {
 
 #[test]
 fn thread_counts_are_bit_invariant_for_forward_batch() {
-    // The intra-op parallel path owns disjoint output-column blocks and
-    // runs the same per-element arithmetic, so threads in {1, 2, 4}
-    // must produce bit-identical forward_batch output — packed and
-    // byte-stored widths, odd multi-block shapes, batches that don't
-    // divide the 4-row microkernel.
+    // The intra-op parallel path submits disjoint output-column blocks
+    // to the shared persistent worker pool and runs the same per-element
+    // arithmetic, so threads in {1, 2, 4} must produce bit-identical
+    // forward_batch output at EVERY native width 2..=8 — packed and
+    // byte-stored, odd multi-block shapes, batches that don't divide the
+    // 4-row microkernel.
     let mut rng = Pcg32::new(802, 1);
-    for bits in [2u32, 4, 8] {
+    for bits in 2u32..=8 {
         for (case, dims) in [&[12usize, 300, 140, 9][..], &[6, 129, 5]].iter().enumerate() {
             let p = mlp_params(dims, 8800 + bits as u64 * 10 + case as u64);
             let din = dims[0];
@@ -511,11 +512,16 @@ fn thread_counts_are_bit_invariant_for_forward_batch() {
                         want, got,
                         "bits {bits} case {case} batch {batch} threads {threads}"
                     );
-                    // and flipping the count on a live engine (the
-                    // Engine::set_threads route) keeps the invariant
+                    // Live resizes mid-run (the Engine::set_threads
+                    // route) must keep the invariant in both directions:
+                    // down to the sequential path, then back up to a
+                    // count the engine has not used before.
                     eng.set_threads(1);
                     eng.forward_batch(&xs, batch, &mut got).unwrap();
                     assert_eq!(want, got, "set_threads(1) after {threads}");
+                    eng.set_threads(threads + 1);
+                    eng.forward_batch(&xs, batch, &mut got).unwrap();
+                    assert_eq!(want, got, "set_threads({}) resize", threads + 1);
                 }
             }
         }

@@ -3,9 +3,10 @@
 JSON and carry the expected top-level keys, and sweep-style reports must
 contain at least one row. BENCH_engines.json additionally gets a
 per-row schema check (kernel-variant + threads tagging, and the
-before/after kernel rows the panel-major rework is tracked by). Used by
-CI after running the offline bench / experiment paths; also handy
-locally:
+before/after kernel rows the panel-major rework is tracked by);
+BENCH_serve.json gets one too (latency percentiles ordered, batch
+histograms present, client counts sane). Used by CI after running the
+offline bench / experiment paths; also handy locally:
 
     python3 scripts/check_bench_reports.py rust/BENCH_engines.json ...
 
@@ -26,12 +27,14 @@ EXPECTATIONS = {
             "threads",
             "headline_int8_b64_w512_speedup",
             "int4_panel_vs_rowmajor_b64_w512",
+            "int8_threads2_vs_1_b64",
             "rows",
         ],
         "rows",
     ),
     "BENCH_actorq": (["bench", "env", "window_ms", "rows"], "rows"),
     "BENCH_carbon": (["bench", "regions_billed", "cells", "mean_kg_co2eq_ratio"], "cells"),
+    "BENCH_serve": (["bench", "mlp", "window_us", "max_batch", "rows"], "rows"),
 }
 
 ENGINE_ROW_KEYS = [
@@ -93,6 +96,53 @@ def check_engine_rows(path: str, doc: dict) -> list:
     return errors
 
 
+SERVE_ROW_KEYS = [
+    "engine",
+    "bits",
+    "clients",
+    "queries",
+    "rejected",
+    "qps",
+    "p50_us",
+    "p99_us",
+    "mean_batch",
+    "max_batch_seen",
+    "batch_hist",
+]
+
+
+def check_serve_rows(path: str, doc: dict) -> list:
+    """BENCH_serve.json row schema: every (precision x clients) cell
+    carries the served-latency percentiles (ordered: p50 <= p99), a
+    batch-size histogram, and a positive integer client count — the
+    fields the serving trajectory is tracked by across PRs."""
+    errors = []
+    rows = doc.get("rows")
+    if not isinstance(rows, list):
+        return [f"{path}: 'rows' is not a list"]
+    for i, row in enumerate(rows):
+        if not isinstance(row, dict):
+            errors.append(f"{path}: rows[{i}] is not an object")
+            continue
+        for k in SERVE_ROW_KEYS:
+            if k not in row:
+                errors.append(f"{path}: rows[{i}] missing key '{k}'")
+        clients = row.get("clients")
+        if not (isinstance(clients, (int, float)) and clients >= 1 and clients == int(clients)):
+            errors.append(f"{path}: rows[{i}] clients '{clients}' is not a positive integer")
+        if not isinstance(row.get("batch_hist"), list):
+            errors.append(f"{path}: rows[{i}] batch_hist is not a list")
+        p50, p99, queries = row.get("p50_us"), row.get("p99_us"), row.get("queries")
+        if isinstance(queries, (int, float)) and queries > 0:
+            if not (isinstance(p50, (int, float)) and isinstance(p99, (int, float))):
+                errors.append(f"{path}: rows[{i}] latency percentiles are not numbers")
+            elif not (0 < p50 <= p99):
+                errors.append(
+                    f"{path}: rows[{i}] percentiles out of order (p50 {p50}, p99 {p99})"
+                )
+    return errors
+
+
 def check(path: str) -> list:
     errors = []
     name = path.rsplit("/", 1)[-1].rsplit(".", 1)[0]
@@ -116,6 +166,8 @@ def check(path: str) -> list:
         errors.append(f"{path}: '{rows_key}' is empty")
     if name == "BENCH_engines" and not errors:
         errors.extend(check_engine_rows(path, doc))
+    if name == "BENCH_serve" and not errors:
+        errors.extend(check_serve_rows(path, doc))
     return errors
 
 
