@@ -30,12 +30,28 @@
 //! borrow that has gone out of scope. A panicking job is caught on the
 //! worker (the worker survives for the next job) and re-raised on the
 //! caller after the barrier, mirroring `std::thread::scope` semantics.
+//!
+//! ## Reentrancy
+//!
+//! A job may itself call [`WorkerPool::run_scoped`]. Submitting from a
+//! worker thread back into the pool would queue nested jobs behind
+//! workers that are blocked waiting on them (a deadlock on the shared
+//! [`global`] pool), so `run_scoped` detects that it is running on a
+//! pool worker and runs the nested jobs inline on that worker instead —
+//! correct, just without extra parallelism for the nested level.
 
+use std::cell::Cell;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Sender};
 use std::sync::{Condvar, Mutex, OnceLock};
 use std::sync::Arc;
+
+thread_local! {
+    /// True on threads spawned by a [`WorkerPool`]; `run_scoped` uses it
+    /// to run nested submissions inline instead of deadlocking the pool.
+    static IS_POOL_WORKER: Cell<bool> = const { Cell::new(false) };
+}
 
 /// A lifetime-erased job plus the completion rendezvous it reports to.
 struct Job {
@@ -137,6 +153,7 @@ impl WorkerPool {
             std::thread::Builder::new()
                 .name(format!("quarl-pool-{idx}"))
                 .spawn(move || {
+                    IS_POOL_WORKER.with(|w| w.set(true));
                     while let Ok(Job { task, sync }) = rx.recv() {
                         if catch_unwind(AssertUnwindSafe(task)).is_err() {
                             sync.panicked.store(true, Ordering::Release);
@@ -160,8 +177,18 @@ impl WorkerPool {
     ///
     /// Returns only after **every** job has finished. If any job
     /// panicked, the panic is re-raised here (after the barrier), like
-    /// `std::thread::scope`. An empty vector is a no-op.
+    /// `std::thread::scope`. An empty vector is a no-op. Called from a
+    /// pool worker (a job nesting back into its own pool), every job
+    /// runs inline on that worker — see the module docs on reentrancy.
     pub fn run_scoped<'scope>(&self, jobs: Vec<Box<dyn FnOnce() + Send + 'scope>>) {
+        if IS_POOL_WORKER.with(|w| w.get()) {
+            // Nested submission: dispatching would queue these jobs
+            // behind workers blocked waiting for them. Run inline.
+            for job in jobs {
+                job();
+            }
+            return;
+        }
         let mut jobs = jobs.into_iter();
         let Some(first) = jobs.next() else {
             return;
@@ -171,27 +198,41 @@ impl WorkerPool {
             first();
             return;
         }
+        let senders = self.senders(rest);
         let sync = Arc::new(JobSync::new(rest));
-        for (tx, job) in self.senders(rest).iter().zip(jobs) {
+        // The barrier guard exists before anything is dispatched: from
+        // here on, unwinding (from a failed send or a panicking
+        // `first()`) still waits out every job already handed to a
+        // worker before the caller's stack frame dies.
+        let barrier = WaitGuard(&sync);
+        let mut sent = 0usize;
+        for (tx, job) in senders.iter().zip(jobs) {
             // SAFETY: the worker runs `task` exactly once, and this call
             // does not return (or resume unwinding) until `sync` reports
-            // every job finished — the WaitGuard below blocks even if
-            // `first()` panics — so everything `job` borrows outlives
-            // its execution. Erasing the lifetime is what lets parked
-            // persistent threads run borrowed work at all.
+            // every dispatched job finished — `barrier` was created
+            // before the first send and blocks in its destructor — so
+            // everything `job` borrows outlives its execution. Erasing
+            // the lifetime is what lets parked persistent threads run
+            // borrowed work at all.
             let task: Box<dyn FnOnce() + Send + 'static> = unsafe {
                 std::mem::transmute::<
                     Box<dyn FnOnce() + Send + 'scope>,
                     Box<dyn FnOnce() + Send + 'static>,
                 >(job)
             };
-            tx.send(Job { task, sync: Arc::clone(&sync) })
-                .expect("pool worker hung up");
+            if tx.send(Job { task, sync: Arc::clone(&sync) }).is_err() {
+                // Worker vanished: jobs from this one onward were never
+                // dispatched, so settle their barrier slots before the
+                // guard waits for the ones that genuinely are in flight.
+                for _ in sent..rest {
+                    sync.finish_one();
+                }
+                panic!("pool worker hung up");
+            }
+            sent += 1;
         }
-        {
-            let _barrier = WaitGuard(&sync);
-            first();
-        }
+        first();
+        drop(barrier);
         if sync.panicked.load(Ordering::Acquire) {
             panic!("worker pool job panicked");
         }
@@ -277,6 +318,29 @@ mod tests {
         let mut data = vec![0u64; 32];
         pool.run_scoped(fill_jobs(&mut data, 16));
         assert_eq!(data[16], 1_000);
+    }
+
+    #[test]
+    fn nested_submission_from_a_worker_runs_inline_without_deadlock() {
+        // A job that submits back into its own pool must not queue
+        // behind workers blocked waiting for it (the classic pool
+        // deadlock); the worker runs the nested jobs inline instead.
+        let pool = Arc::new(WorkerPool::new());
+        let mut outer = vec![0u64; 2 * 64];
+        let mut inner = vec![0u64; 2 * 64];
+        let (left, right) = inner.split_at_mut(64);
+        let p = Arc::clone(&pool);
+        let mut jobs = fill_jobs(&mut outer, 64);
+        jobs.push(Box::new(move || {
+            p.run_scoped(vec![
+                Box::new(move || left.fill(7)) as Box<dyn FnOnce() + Send + '_>,
+                Box::new(move || right.fill(9)),
+            ]);
+        }));
+        pool.run_scoped(jobs);
+        assert_eq!(outer[64], 1_000);
+        assert!(inner[..64].iter().all(|&v| v == 7));
+        assert!(inner[64..].iter().all(|&v| v == 9));
     }
 
     #[test]
