@@ -24,6 +24,7 @@ use crate::actorq::Precision;
 use crate::error::Result;
 use crate::inference::EngineConfig;
 use crate::runtime::ParamSet;
+use crate::snapshot::{Artifact, SnapshotError, SnapshotHub};
 
 /// One published parameter snapshot: a version stamp plus the prebuilt
 /// actor-side engine (already quantized at the configured precision).
@@ -40,6 +41,20 @@ pub struct ParamBroadcast {
     engine_cfg: EngineConfig,
     slot: Mutex<Arc<Snapshot>>,
     version: AtomicU64,
+    /// Optional second transport ([`ParamBroadcast::attach_hub`]): each
+    /// publish also encodes the snapshot into a wire artifact for
+    /// out-of-process actors.
+    hub: Mutex<Option<Arc<SnapshotHub>>>,
+}
+
+/// Encode a published snapshot as a wire artifact (the deployment
+/// representation actors already hold, so the remote rebuild is
+/// bit-identical by construction).
+fn artifact_for(snap: &Snapshot) -> Artifact {
+    match &snap.engine {
+        ActorEngine::F32(e) => Artifact::from_engine_f32(e, snap.version),
+        ActorEngine::Quant(e) => Artifact::from_engine_quant(e, snap.version),
+    }
 }
 
 impl ParamBroadcast {
@@ -67,7 +82,34 @@ impl ParamBroadcast {
             engine_cfg,
             slot: Mutex::new(Arc::new(Snapshot { version: 0, engine })),
             version: AtomicU64::new(0),
+            hub: Mutex::new(None),
         })
+    }
+
+    /// Attach a [`SnapshotHub`]: from now on every publish also encodes
+    /// the snapshot into a versioned wire artifact (served by a
+    /// [`crate::snapshot::SnapshotServer`], polled by
+    /// [`crate::snapshot::SnapshotClient`]s). The *current* snapshot is
+    /// pushed immediately when its version is positive — version 0 is
+    /// the pre-first-publish construction state, which remote actors
+    /// signal by polling `/version` = 0 — and the hub's own version
+    /// monotonicity check makes the double-transport publish safe under
+    /// concurrent publishers. Returns the version pushed, if any.
+    pub fn attach_hub(&self, hub: Arc<SnapshotHub>) -> Result<Option<u64>> {
+        let snap = self.latest();
+        let pushed = if snap.version > 0 {
+            match hub.publish(&artifact_for(&snap)) {
+                Ok(v) => Some(v),
+                // Someone already published this or a newer version to
+                // the hub; fine, the hub is at least as fresh as us.
+                Err(SnapshotError::Stale { .. }) => None,
+                Err(e) => return Err(e.into()),
+            }
+        } else {
+            None
+        };
+        *self.hub.lock().expect("hub slot poisoned") = Some(hub);
+        Ok(pushed)
     }
 
     pub fn precision(&self) -> Precision {
@@ -82,11 +124,26 @@ impl ParamBroadcast {
         // the version assignment and the Arc swap, which is also what
         // keeps observed versions monotone under concurrent publishers.
         let engine = ActorEngine::from_params_cfg(params, self.precision, self.engine_cfg)?;
-        let mut slot = self.slot.lock().expect("broadcast lock poisoned");
-        let version = slot.version + 1;
-        *slot = Arc::new(Snapshot { version, engine });
-        self.version.store(version, Ordering::Release);
-        Ok(version)
+        let snap = {
+            let mut slot = self.slot.lock().expect("broadcast lock poisoned");
+            let version = slot.version + 1;
+            *slot = Arc::new(Snapshot { version, engine });
+            self.version.store(version, Ordering::Release);
+            slot.clone()
+        };
+        // Second transport, outside the in-process critical section so
+        // actors cloning engines never wait on artifact encoding. A
+        // concurrent publisher may have pushed a newer version between
+        // our swap and here — the hub's Stale rejection is the correct
+        // outcome (never roll the served version back), not an error.
+        let hub = self.hub.lock().expect("hub slot poisoned").clone();
+        if let Some(hub) = hub {
+            match hub.publish(&artifact_for(&snap)) {
+                Ok(_) | Err(SnapshotError::Stale { .. }) => {}
+                Err(e) => return Err(e.into()),
+            }
+        }
+        Ok(snap.version)
     }
 
     /// Latest published version — lock-free; actors poll this every step.
@@ -104,6 +161,7 @@ impl ParamBroadcast {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::inference::Engine as _;
     use crate::rng::Pcg32;
     use crate::runtime::manifest::TensorSpec;
 
@@ -164,6 +222,61 @@ mod tests {
                 assert!(err <= layer.w_qp.delta + 1e-6, "idx {i}: err {err}");
             }
         }
+    }
+
+    #[test]
+    fn attached_hub_tracks_publishes_and_tolerates_races() {
+        let p = mlp_params(&[5, 12, 3], 3);
+        let bc = ParamBroadcast::new(&p, Precision::Int(4)).unwrap();
+        let hub = Arc::new(SnapshotHub::new());
+        // Version 0 (construction state) is not pushed.
+        assert_eq!(bc.attach_hub(Arc::clone(&hub)).unwrap(), None);
+        assert_eq!(hub.version(), 0);
+        // Every publish now lands in the hub, version for version.
+        assert_eq!(bc.publish(&p).unwrap(), 1);
+        assert_eq!(hub.version(), 1);
+        assert_eq!(bc.publish(&p).unwrap(), 2);
+        assert_eq!(hub.version(), 2);
+        let (v, blob) = hub.latest().unwrap();
+        assert_eq!(v, 2);
+        let art = Artifact::from_bytes(&blob).unwrap();
+        assert_eq!(art.version, 2);
+        // The hub artifact hydrates an engine bit-identical to the
+        // in-process snapshot engine (same codes, same QParams).
+        let snap = bc.latest();
+        let mut local = snap.engine.clone();
+        let mut remote = art.build_engine(EngineConfig::default()).unwrap();
+        let x: Vec<f32> = (0..5).map(|i| (i as f32 * 0.6).cos()).collect();
+        let mut a = vec![0.0f32; 3];
+        let mut b = vec![0.0f32; 3];
+        local.forward(&x, &mut a).unwrap();
+        remote.forward(&x, &mut b).unwrap();
+        assert_eq!(a, b);
+        // A hub that's already ahead (concurrent-publisher shape) must
+        // not fail the learner's publish.
+        let ahead = {
+            let mut a2 = art.clone();
+            a2.version = 50;
+            a2
+        };
+        hub.publish(&ahead).unwrap();
+        assert_eq!(bc.publish(&p).unwrap(), 3, "stale hub push must be tolerated");
+        assert_eq!(hub.version(), 50, "served version never rolls back");
+    }
+
+    #[test]
+    fn attach_hub_pushes_the_current_snapshot_when_published() {
+        let p = mlp_params(&[4, 8, 2], 13);
+        let bc = ParamBroadcast::new(&p, Precision::Fp32).unwrap();
+        bc.publish(&p).unwrap();
+        bc.publish(&p).unwrap();
+        let hub = Arc::new(SnapshotHub::new());
+        // Late attach: remote actors immediately see the live version.
+        assert_eq!(bc.attach_hub(Arc::clone(&hub)).unwrap(), Some(2));
+        assert_eq!(hub.version(), 2);
+        // Re-attaching the same hub at the same version is a benign
+        // no-op (Stale swallowed), not an error.
+        assert_eq!(bc.attach_hub(Arc::clone(&hub)).unwrap(), None);
     }
 
     #[test]

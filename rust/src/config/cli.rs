@@ -20,7 +20,7 @@ const VALUE_FLAGS: &[&str] = &[
     "artifacts", "runs-dir", "scale", "episodes", "seed", "steps", "bits",
     "only", "shard", "jobs", "env", "algo", "quant", "delay", "out", "lr",
     "region", "cpu-watts", "accel-watts", "carbon-config", "threads",
-    "window-us", "max-batch",
+    "window-us", "max-batch", "snapshot-dir",
 ];
 
 impl Args {
@@ -227,6 +227,14 @@ mod tests {
         let d = Args::parse(&argv("exp serve")).unwrap();
         assert_eq!(d.get_u64("window-us", 250).unwrap(), 250, "defaults apply");
         assert!(Args::parse(&argv("exp serve --max-batch")).is_err(), "value required");
+    }
+
+    #[test]
+    fn snapshot_dir_flag_takes_a_value() {
+        let a = Args::parse(&argv("exp dist --snapshot-dir /tmp/snaps")).unwrap();
+        assert_eq!(a.get("snapshot-dir"), Some("/tmp/snaps"));
+        assert_eq!(Args::parse(&argv("exp dist")).unwrap().get("snapshot-dir"), None);
+        assert!(Args::parse(&argv("exp dist --snapshot-dir")).is_err(), "value required");
     }
 
     #[test]

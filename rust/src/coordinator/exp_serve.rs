@@ -217,6 +217,7 @@ mod tests {
             threads: 1,
             window_us: 200,
             max_batch: 8,
+            snapshot_dir: None,
             sustain: crate::sustain::SustainConfig::default(),
         }
     }

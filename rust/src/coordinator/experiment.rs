@@ -51,6 +51,9 @@ pub struct ExpCtx<'a> {
     pub window_us: u64,
     /// Largest coalesced serving batch (`--max-batch`).
     pub max_batch: usize,
+    /// Where `exp dist` writes fetched snapshot artifacts
+    /// (`--snapshot-dir`; default `<runs_dir>/snapshots`).
+    pub snapshot_dir: Option<PathBuf>,
     /// Carbon-accounting knobs (region, device watts, config overlay).
     pub sustain: crate::sustain::SustainConfig,
 }
@@ -116,6 +119,7 @@ pub fn all_experiments() -> Vec<Box<dyn Experiment>> {
         Box::new(crate::coordinator::exp_actorq::ActorQExp),
         Box::new(crate::coordinator::exp_carbon::Carbon),
         Box::new(crate::coordinator::exp_serve::Serve),
+        Box::new(crate::coordinator::exp_snapshot::Dist),
     ]
 }
 
@@ -224,6 +228,11 @@ fn spawn_shards(ctx: &ExpCtx, exp_name: &str) -> Result<()> {
         // the same window/cap as the parent's.
         cmd.arg("--window-us").arg(format!("{}", ctx.window_us));
         cmd.arg("--max-batch").arg(format!("{}", ctx.max_batch));
+        // Snapshot artifacts from a shard's dist cells must land where
+        // the parent's would.
+        if let Some(sd) = &ctx.snapshot_dir {
+            cmd.arg("--snapshot-dir").arg(sd);
+        }
         // Carbon-accounting knobs must survive into shard children so
         // every cell is billed identically.
         cmd.arg("--region").arg(ctx.sustain.region());

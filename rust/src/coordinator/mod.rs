@@ -14,8 +14,9 @@
 //!   `BENCH_*.json` machine-readable report writer.
 //! * `exp_*` — one module per paper table/figure, plus [`exp_actorq`]
 //!   (systems study), [`exp_carbon`] (emissions accounting; runs
-//!   offline), and [`exp_serve`] (dynamic-batching policy serving;
-//!   runs offline).
+//!   offline), [`exp_serve`] (dynamic-batching policy serving; runs
+//!   offline), and [`exp_snapshot`] (over-the-wire param distribution
+//!   on loopback; runs offline).
 
 pub mod cache;
 pub mod evaluator;
@@ -28,6 +29,7 @@ pub mod exp_matrix;
 pub mod exp_mixed;
 pub mod exp_qat;
 pub mod exp_serve;
+pub mod exp_snapshot;
 pub mod exp_sweetspot;
 pub mod exp_table2;
 pub mod metrics;

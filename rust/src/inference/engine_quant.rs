@@ -137,6 +137,22 @@ impl WeightStore {
     }
 }
 
+/// One layer's worth of already-quantized inputs for
+/// [`EngineQuant::from_quantized`] — exactly what a snapshot artifact
+/// stores per layer: the packed codes (input-major), the affine params
+/// they were produced with, and the fp32 bias.
+#[derive(Debug, Clone)]
+pub struct QuantLayerInit {
+    /// Centered codes, input-major `(in_dim, out_dim)`.
+    pub codes: CodeBuf,
+    /// The quantization params the codes were produced with.
+    pub w_qp: QParams,
+    /// fp32 bias, length `out_dim`.
+    pub b: Vec<f32>,
+    pub in_dim: usize,
+    pub out_dim: usize,
+}
+
 /// One quantized dense layer.
 #[derive(Debug, Clone)]
 pub struct LayerQ {
@@ -594,6 +610,87 @@ impl EngineQuant {
                 w_qp,
                 col_sums,
                 b: b.data().to_vec(),
+                in_dim,
+                out_dim,
+                relu: i + 1 < n_layers,
+            });
+        }
+        let packed = layers.iter().any(|l| l.codes.is_packed());
+        Ok(EngineQuant {
+            layers,
+            bits,
+            threads: cfg.threads.max(1),
+            max_dim,
+            act_scratch: vec![0.0; max_dim],
+            qa_scratch: vec![0i32; max_dim],
+            acc_scratch: vec![0i32; max_dim],
+            row_scale: vec![0.0; 1],
+            row_zp: vec![0i32; 1],
+            panel: if packed { vec![0i8; max_dim.max(PANEL_ROWS * COL_BLOCK)] } else { Vec::new() },
+            lanes: Vec::new(),
+        })
+    }
+
+    /// Rebuild an engine from **already-quantized** layers — the
+    /// snapshot-hydration path ([`crate::snapshot`]): a remote client
+    /// has the packed codes, per-layer [`QParams`], and biases exactly
+    /// as the publisher's engine stored them, and must not re-quantize
+    /// (it has no fp32 weights to quantize from). Column sums are
+    /// recomputed from the codes and the panel repack reruns per
+    /// `cfg.kernel`, so a hydrated engine's `forward`/`forward_batch`
+    /// are bit-identical to the source engine's (pinned by
+    /// `rust/tests/snapshot_roundtrip.rs` and the parity harness).
+    /// Layer geometry is validated up front ([`Error::Config`]); the
+    /// relu rule is positional (every layer but the last), matching
+    /// [`EngineQuant::from_params_cfg`].
+    pub fn from_quantized(
+        inits: Vec<QuantLayerInit>,
+        bits: u32,
+        cfg: EngineConfig,
+    ) -> Result<EngineQuant> {
+        Precision::Int(bits).validate_for_engine()?;
+        if inits.is_empty() {
+            return Err(Error::Config("quantized engine needs at least one layer".into()));
+        }
+        let n_layers = inits.len();
+        let mut layers = Vec::with_capacity(n_layers);
+        let mut max_dim = 0;
+        for (i, init) in inits.into_iter().enumerate() {
+            let QuantLayerInit { codes, w_qp, b, in_dim, out_dim } = init;
+            if in_dim == 0 || out_dim == 0 || codes.len() != in_dim * out_dim {
+                return Err(Error::Config(format!(
+                    "layer {i}: {} codes for a {in_dim}x{out_dim} weight",
+                    codes.len()
+                )));
+            }
+            if b.len() != out_dim {
+                return Err(Error::Config(format!(
+                    "layer {i}: {} bias values for out_dim {out_dim}",
+                    b.len()
+                )));
+            }
+            if !(w_qp.delta.is_finite() && w_qp.delta > 0.0 && w_qp.zero_point.is_finite()) {
+                return Err(Error::Config(format!("layer {i}: invalid QParams {w_qp:?}")));
+            }
+            max_dim = max_dim.max(in_dim).max(out_dim);
+            let flat = codes.to_vec();
+            let mut col_sums = vec![0i32; out_dim];
+            for r in 0..in_dim {
+                for c in 0..out_dim {
+                    col_sums[c] += flat[r * out_dim + c] as i32;
+                }
+            }
+            let store = match cfg.kernel {
+                KernelKind::Prepacked => {
+                    WeightStore::Panels(PanelStore::pack(&flat, in_dim, out_dim, bits))
+                }
+                KernelKind::RowMajor => WeightStore::RowMajor(codes),
+            };
+            layers.push(LayerQ {
+                codes: store,
+                w_qp,
+                col_sums,
+                b,
                 in_dim,
                 out_dim,
                 relu: i + 1 < n_layers,

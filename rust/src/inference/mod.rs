@@ -40,7 +40,7 @@ pub mod workers;
 
 pub use engine_f32::EngineF32;
 pub use engine_int8::{EngineInt4, EngineInt8};
-pub use engine_quant::{EngineConfig, EngineQuant, KernelKind, LayerQ, WeightStore};
+pub use engine_quant::{EngineConfig, EngineQuant, KernelKind, LayerQ, QuantLayerInit, WeightStore};
 pub use memsim::MemModel;
 pub use panel::PanelStore;
 pub use workers::WorkerPool;
@@ -119,7 +119,11 @@ pub fn engine_for(
 
 /// [`engine_for`] with an explicit kernel/threading config. The config
 /// applies to the quantized engines; the fp32 baseline has a single
-/// layout and runs on the caller's thread regardless.
+/// layout and runs on the caller's thread regardless. This is also the
+/// path snapshot clients rebuild fp32 engines through
+/// ([`crate::snapshot::Artifact::build_engine`]); quantized snapshots
+/// hydrate via [`EngineQuant::from_quantized`] instead, because they
+/// carry codes + [`crate::quant::QParams`], not fp32 weights.
 pub fn engine_for_cfg(
     params: &crate::runtime::ParamSet,
     precision: Precision,

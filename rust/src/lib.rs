@@ -63,6 +63,21 @@
 //! p50/p99 latency and batch-size histograms; the `serve` experiment
 //! and `bench_serve` write them to `BENCH_serve.json`.
 //!
+//! ## Distribution: snapshot artifacts over the wire
+//!
+//! [`snapshot`] extends the in-process quantize-on-publish broadcast to
+//! other processes and machines: each publish encodes the freshly built
+//! deployment engine into a versioned, per-section-checksummed binary
+//! artifact ([`snapshot::Artifact`]), a blocking loopback-friendly HTTP
+//! server ([`snapshot::SnapshotServer`]) serves manifest + ranged
+//! payload reads, and [`snapshot::SnapshotClient`] fetches (resuming
+//! partial downloads), verifies every checksum, and rebuilds an engine
+//! **bit-identical** to the publisher's — quantized snapshots ship the
+//! packed codes, so an int4 policy crosses the wire at ~1/8 the fp32
+//! size (the paper's §3 cheap-distribution win). The `dist` experiment
+//! measures publish latency, fetch bytes, and end-to-end staleness into
+//! `BENCH_snapshot.json`.
+//!
 //! ## Sustainability accounting (paper §1/§6 carbon claim)
 //!
 //! [`sustain`] meters every ActorQ run ([`sustain::EnergyMeter`]) and
@@ -87,6 +102,7 @@ pub mod replay;
 pub mod rng;
 pub mod runtime;
 pub mod serve;
+pub mod snapshot;
 pub mod sustain;
 pub mod tensor;
 

@@ -25,6 +25,8 @@
 //! | `carbon` | §1/§6 — fp32-vs-int8 CO2eq accounting (offline, no PJRT)  |
 //! | `serve`  | dynamic-batching policy server: p50/p99 latency + batch   |
 //! |          | histograms per precision x client count (offline)         |
+//! | `dist`   | §3 cheap distribution — snapshot artifacts over loopback  |
+//! |          | HTTP: publish latency, fetch bytes, staleness (offline)   |
 //!
 //! `--bits` (validated comma list, 2..=16, deduped + sorted) selects the
 //! bitwidth sweep: `fig2` trains QAT at each width (defaulting to
@@ -37,7 +39,9 @@
 //! latency cells (default 1; outputs are bit-identical either way —
 //! workers come from the shared persistent pool, never per-call
 //! spawns). `serve` also honors `--bits`, and takes `--window-us` /
-//! `--max-batch` for its batching window and coalescing cap.
+//! `--max-batch` for its batching window and coalescing cap. `dist`
+//! honors `--bits` too and takes `--snapshot-dir` for where fetched
+//! snapshot artifacts land (default `<runs-dir>/snapshots`).
 //!
 //! Every experiment appends JSONL rows under `runs/results/` and renders
 //! a paper-style text table; `carbon` (and `bench_actorq`,
@@ -83,8 +87,8 @@ fn print_usage() {
          usage:\n  quarl train --algo <dqn|a2c|ppo|ddpg> --env <id> [--steps N] [--quant B --delay D] [--seed S]\n  \
          quarl eval  --algo <a> --env <id> [--quant fp16|int8|intN] [--episodes N]\n  \
          quarl exp   <id|all> [--scale S] [--episodes N] [--jobs J] [--only SUB] [--bits 2,4,6,8]\n              \
-         [--threads T] [--window-us U] [--max-batch B] [--region us|eu|...] [--cpu-watts W]\n              \
-         [--accel-watts W] [--carbon-config F]\n  \
+         [--threads T] [--window-us U] [--max-batch B] [--snapshot-dir D] [--region us|eu|...]\n              \
+         [--cpu-watts W] [--accel-watts W] [--carbon-config F]\n  \
          quarl list\n"
     );
 }
@@ -240,6 +244,7 @@ fn cmd_exp(args: &Args) -> Result<()> {
         threads: args.get_usize("threads", 1)?.max(1),
         window_us: args.get_u64("window-us", 250)?,
         max_batch: args.get_usize("max-batch", 32)?.max(1),
+        snapshot_dir: args.get("snapshot-dir").map(std::path::PathBuf::from),
         sustain: quarl::sustain::SustainConfig {
             region: args.get_or("region", "us"),
             power: quarl::sustain::PowerModel { cpu_watts, accel_watts },

@@ -30,6 +30,21 @@
 //!   behind the panel-major prepacked GEMM. Scalar == SWAR for every
 //!   byte pattern (exhaustively tested below).
 
+use crate::error::{Error, Result};
+
+/// Packed storage bytes for `len` codes at `bits` (the [`CodeBuf`]
+/// layout rule in one place: four per byte at 2 bits, two per byte at
+/// 3..=4, one per byte at 5..=8).
+pub fn packed_len(len: usize, bits: u32) -> usize {
+    if bits <= 2 {
+        len.div_ceil(4)
+    } else if bits <= 4 {
+        len.div_ceil(2)
+    } else {
+        len
+    }
+}
+
 /// Sign-extend the low nibble of a packed byte to an i8 code.
 #[inline]
 pub fn nib4_lo(byte: u8) -> i8 {
@@ -231,6 +246,92 @@ impl CodeBuf {
         }
     }
 
+    /// Deserialize packed bytes for a `bits`-wide grid of `len` logical
+    /// codes, **validated**: the byte count must match
+    /// [`packed_len`]`(len, bits)`, every code must sit on the centered
+    /// signed rail for `bits`, and padding nibbles/crumbs of a partial
+    /// tail byte must be zero (the canonical encoding
+    /// [`pack_nib4`]/[`pack_crumb2`] emit). Violations are
+    /// [`Error::Config`] — before this constructor existed, a
+    /// short or corrupt buffer handed to a consumer would only surface
+    /// as an index panic deep inside `PanelStore` packing, which is the
+    /// latent bug class the snapshot client must never hit.
+    pub fn from_packed(bytes: Vec<u8>, len: usize, bits: u32) -> Result<CodeBuf> {
+        if !(2..=8).contains(&bits) {
+            return Err(Error::Config(format!("codebuf bits {bits} outside the engine range 2..=8")));
+        }
+        let need = packed_len(len, bits);
+        if bytes.len() != need {
+            return Err(Error::Config(format!(
+                "codebuf length mismatch: {} bytes for {len} codes at {bits} bits (need {need})"
+            )));
+        }
+        // i32 rail math: -(1i8 << 7) would overflow at bits 8.
+        let lo = -(1i32 << (bits - 1));
+        let hi = (1i32 << (bits - 1)) - 1;
+        let buf = if bits <= 2 {
+            // every 2-bit pattern is a valid code; only pads can be bad
+            CodeBuf::Crumb2(bytes, len)
+        } else if bits <= 4 {
+            if bits < 4 {
+                for (k, &byte) in bytes.iter().enumerate() {
+                    for (j, c) in [nib4_lo(byte) as i32, nib4_hi(byte) as i32].into_iter().enumerate()
+                    {
+                        let idx = 2 * k + j;
+                        if idx < len && !(lo..=hi).contains(&c) {
+                            return Err(Error::Config(format!(
+                                "codebuf code {c} at index {idx} outside the {bits}-bit rail [{lo}, {hi}]"
+                            )));
+                        }
+                    }
+                }
+            }
+            CodeBuf::Nib4(bytes, len)
+        } else {
+            let codes: Vec<i8> = bytes.into_iter().map(|b| b as i8).collect();
+            if bits < 8 {
+                for (idx, &c) in codes.iter().enumerate() {
+                    let c = c as i32;
+                    if !(lo..=hi).contains(&c) {
+                        return Err(Error::Config(format!(
+                            "codebuf code {c} at index {idx} outside the {bits}-bit rail [{lo}, {hi}]"
+                        )));
+                    }
+                }
+            }
+            CodeBuf::I8(codes)
+        };
+        // Padding positions of a partial tail byte must be zero: the
+        // packers emit exactly that, so anything else is corruption that
+        // would otherwise round-trip silently.
+        match &buf {
+            CodeBuf::Nib4(v, n) if n % 2 != 0 => {
+                if nib4_hi(v[n / 2]) != 0 {
+                    return Err(Error::Config("codebuf tail padding nibble is non-zero".into()));
+                }
+            }
+            CodeBuf::Crumb2(v, n) if n % 4 != 0 => {
+                for j in (n % 4)..4 {
+                    if crumb2(v[n / 4], j) != 0 {
+                        return Err(Error::Config("codebuf tail padding crumb is non-zero".into()));
+                    }
+                }
+            }
+            _ => {}
+        }
+        Ok(buf)
+    }
+
+    /// The raw packed bytes, as [`CodeBuf::from_packed`] accepts them
+    /// (i8 codes reinterpreted as bytes on the one-per-byte layout) —
+    /// the snapshot artifact's wire form for a weight section.
+    pub fn to_packed_bytes(&self) -> Vec<u8> {
+        match self {
+            CodeBuf::I8(v) => v.iter().map(|&c| c as u8).collect(),
+            CodeBuf::Nib4(v, _) | CodeBuf::Crumb2(v, _) => v.clone(),
+        }
+    }
+
     /// Logical element count.
     pub fn len(&self) -> usize {
         match self {
@@ -418,6 +519,76 @@ mod tests {
                 assert_eq!(out, &codes[start..start + len], "start {start} len {len}");
             }
         }
+    }
+
+    #[test]
+    fn from_packed_roundtrips_every_width() {
+        // to_packed_bytes -> from_packed is the identity at every
+        // engine width, including odd lengths with padded tail bytes.
+        for bits in 2u32..=8 {
+            let lo = -(1i32 << (bits - 1));
+            let levels = 1i32 << bits;
+            let codes: Vec<i8> = (0..37).map(|i| (lo + (i * 5) % levels) as i8).collect();
+            let buf = CodeBuf::from_codes(&codes, bits);
+            let bytes = buf.to_packed_bytes();
+            assert_eq!(bytes.len(), packed_len(codes.len(), bits), "bits {bits}");
+            let back = CodeBuf::from_packed(bytes, codes.len(), bits).unwrap();
+            assert_eq!(back, buf, "bits {bits}");
+            assert_eq!(back.to_vec(), codes, "bits {bits}");
+        }
+    }
+
+    #[test]
+    fn from_packed_rejects_length_bits_mismatches_as_config_errors() {
+        // The latent bug class: a short (or long) buffer must be a typed
+        // Error::Config at deserialization time, not an index panic deep
+        // inside PanelStore packing later.
+        let codes: Vec<i8> = vec![-2, -1, 0, 1, -2, 1, 0];
+        for bits in [2u32, 4, 8] {
+            let good = CodeBuf::from_codes(&codes, bits).to_packed_bytes();
+            let mut short = good.clone();
+            short.pop();
+            let err = CodeBuf::from_packed(short, codes.len(), bits).unwrap_err();
+            assert!(matches!(err, Error::Config(_)), "bits {bits} short: {err}");
+            let mut long = good.clone();
+            long.push(0);
+            let err = CodeBuf::from_packed(long, codes.len(), bits).unwrap_err();
+            assert!(matches!(err, Error::Config(_)), "bits {bits} long: {err}");
+            // declared length inconsistent with the byte count
+            let err = CodeBuf::from_packed(good, codes.len() + 9, bits).unwrap_err();
+            assert!(matches!(err, Error::Config(_)), "bits {bits} bad len: {err}");
+        }
+        // bits outside the engine range
+        let err = CodeBuf::from_packed(vec![0, 0], 2, 9).unwrap_err();
+        assert!(matches!(err, Error::Config(_)), "{err}");
+        let err = CodeBuf::from_packed(vec![0], 4, 1).unwrap_err();
+        assert!(matches!(err, Error::Config(_)), "{err}");
+    }
+
+    #[test]
+    fn from_packed_rejects_off_rail_codes_and_dirty_padding() {
+        // bits 3 stored as nibbles: 7 encodes fine as a nibble but sits
+        // outside the 3-bit rail [-4, 3].
+        let bad3 = pack_nib4(&[7, 0]);
+        let err = CodeBuf::from_packed(bad3, 2, 3).unwrap_err();
+        assert!(matches!(err, Error::Config(_)), "{err}");
+        // bits 5 stored as bytes: 100 is a valid i8 but off the rail.
+        let err = CodeBuf::from_packed(vec![100], 1, 5).unwrap_err();
+        assert!(matches!(err, Error::Config(_)), "{err}");
+        // odd-length nibble stream with a non-zero padding nibble: the
+        // packers always emit zero there, so this is corruption.
+        let mut dirty = pack_nib4(&[1, 2, 3]);
+        dirty[1] |= 0xF0;
+        let err = CodeBuf::from_packed(dirty, 3, 4).unwrap_err();
+        assert!(matches!(err, Error::Config(_)), "{err}");
+        // same for a partial crumb byte
+        let mut dirty2 = pack_crumb2(&[1, -1, 0, 1, 1]);
+        dirty2[1] |= 0b1100;
+        let err = CodeBuf::from_packed(dirty2, 5, 2).unwrap_err();
+        assert!(matches!(err, Error::Config(_)), "{err}");
+        // while canonical encodings pass
+        assert!(CodeBuf::from_packed(pack_nib4(&[1, 2, 3]), 3, 4).is_ok());
+        assert!(CodeBuf::from_packed(pack_crumb2(&[1, -1, 0, 1, 1]), 5, 2).is_ok());
     }
 
     #[test]

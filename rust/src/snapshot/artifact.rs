@@ -1,0 +1,556 @@
+//! The snapshot artifact: one streamable binary blob per published
+//! parameter version, with `write`/`read`/`verify` APIs.
+//!
+//! Encoding starts from a **built engine**, not a `ParamSet`: the
+//! artifact ships exactly the representation actors run (packed codes +
+//! `QParams` for quantized engines, raw f32 weights for the baseline),
+//! which is what makes the rebuilt engine bit-identical by construction
+//! — there is no second quantization whose rounding could drift.
+//! Decoding ([`Artifact::from_bytes`]) verifies everything before any
+//! engine is built: magic, format, header/manifest version agreement,
+//! the manifest CRC, every payload section's CRC, and the full section
+//! geometry (contiguous tiling, per-layer length/bits arithmetic via
+//! the validated [`CodeBuf::from_packed`]).
+
+use std::collections::BTreeMap;
+use std::io::Write as _;
+use std::path::Path;
+
+use crate::inference::engine_quant::QuantLayerInit;
+use crate::inference::{engine_for_cfg, Engine, EngineConfig, EngineF32, EngineQuant};
+use crate::quant::codec::{packed_len, CodeBuf};
+use crate::quant::{Precision, QParams};
+use crate::runtime::json::{self, Json};
+use crate::runtime::ParamSet;
+use crate::snapshot::checksum::crc32;
+use crate::snapshot::SnapshotError;
+use crate::tensor::Tensor;
+
+/// File/wire magic: "QSNP".
+pub const MAGIC: [u8; 4] = *b"QSNP";
+
+/// Format version this build writes and reads.
+pub const FORMAT: u32 = 1;
+
+/// Fixed header size: magic, format, param version, manifest length,
+/// manifest CRC.
+pub const HEADER_LEN: usize = 24;
+
+/// One checksummed payload section (byte range in payload coordinates).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SectionMeta {
+    pub off: usize,
+    pub len: usize,
+    pub crc: u32,
+}
+
+/// Per-layer manifest entry: geometry plus the weight/bias sections
+/// (and the affine params for quantized precisions).
+#[derive(Debug, Clone)]
+pub struct LayerMeta {
+    pub in_dim: usize,
+    pub out_dim: usize,
+    pub w: SectionMeta,
+    pub b: SectionMeta,
+    /// Present exactly when the artifact's precision is quantized.
+    pub qp: Option<QParams>,
+}
+
+/// A decoded (or freshly encoded) snapshot artifact. Holds the parsed
+/// manifest plus the verified payload bytes; [`Artifact::build_engine`]
+/// turns it into a deployment engine.
+#[derive(Debug, Clone)]
+pub struct Artifact {
+    pub version: u64,
+    pub precision: Precision,
+    pub layers: Vec<LayerMeta>,
+    pub payload: Vec<u8>,
+}
+
+/// Append a section to `payload`, returning its metadata.
+fn push_section(payload: &mut Vec<u8>, bytes: &[u8]) -> SectionMeta {
+    let off = payload.len();
+    payload.extend_from_slice(bytes);
+    SectionMeta { off, len: bytes.len(), crc: crc32(bytes) }
+}
+
+fn f32s_to_le(xs: &[f32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(xs.len() * 4);
+    for &x in xs {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+    out
+}
+
+fn le_to_f32s(bytes: &[u8]) -> Vec<f32> {
+    bytes.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().expect("4-byte chunk"))).collect()
+}
+
+impl Artifact {
+    /// Encode the fp32 baseline engine at `version`: per layer, the raw
+    /// f32 weights (little-endian) then the bias.
+    pub fn from_engine_f32(engine: &EngineF32, version: u64) -> Artifact {
+        let mut payload = Vec::new();
+        let layers = engine
+            .layers
+            .iter()
+            .map(|l| {
+                let w = push_section(&mut payload, &f32s_to_le(&l.w));
+                let b = push_section(&mut payload, &f32s_to_le(&l.b));
+                LayerMeta { in_dim: l.in_dim, out_dim: l.out_dim, w, b, qp: None }
+            })
+            .collect();
+        Artifact { version, precision: Precision::Fp32, layers, payload }
+    }
+
+    /// Encode a quantized engine at `version`: per layer, the packed
+    /// input-major codes (the §3 compression win — int4 ships 1/8 the
+    /// fp32 bytes) then the f32 bias, with the layer's [`QParams`] in
+    /// the manifest. Works for either kernel layout: panel-major
+    /// engines unpack to input-major codes first (lossless), so the
+    /// wire format is layout-independent.
+    pub fn from_engine_quant(engine: &EngineQuant, version: u64) -> Artifact {
+        let mut payload = Vec::new();
+        let layers = engine
+            .layers
+            .iter()
+            .map(|l| {
+                let codes = CodeBuf::from_codes(&l.codes.to_vec(), engine.bits);
+                let w = push_section(&mut payload, &codes.to_packed_bytes());
+                let b = push_section(&mut payload, &f32s_to_le(&l.b));
+                LayerMeta { in_dim: l.in_dim, out_dim: l.out_dim, w, b, qp: Some(l.w_qp) }
+            })
+            .collect();
+        Artifact { version, precision: Precision::Int(engine.bits), layers, payload }
+    }
+
+    /// Total blob size once serialized (header + manifest + payload).
+    pub fn total_bytes(&self) -> usize {
+        HEADER_LEN + self.manifest_json().len() + self.payload.len()
+    }
+
+    /// Payload size alone — the "fetch bytes" column `exp dist` tracks.
+    pub fn payload_bytes(&self) -> usize {
+        self.payload.len()
+    }
+
+    /// The manifest as serialized JSON bytes.
+    fn manifest_json(&self) -> Vec<u8> {
+        let mut m = BTreeMap::new();
+        m.insert("format".into(), Json::Num(FORMAT as f64));
+        m.insert("version".into(), Json::Num(self.version as f64));
+        m.insert("precision".into(), Json::Str(self.precision.label()));
+        m.insert("bits".into(), Json::Num(self.precision.bits() as f64));
+        m.insert("payload_len".into(), Json::Num(self.payload.len() as f64));
+        let layers: Vec<Json> = self
+            .layers
+            .iter()
+            .map(|l| {
+                let sec = |s: &SectionMeta| {
+                    let mut o = BTreeMap::new();
+                    o.insert("off".into(), Json::Num(s.off as f64));
+                    o.insert("len".into(), Json::Num(s.len as f64));
+                    o.insert("crc".into(), Json::Num(s.crc as f64));
+                    Json::Obj(o)
+                };
+                let mut o = BTreeMap::new();
+                o.insert("in".into(), Json::Num(l.in_dim as f64));
+                o.insert("out".into(), Json::Num(l.out_dim as f64));
+                o.insert("w".into(), sec(&l.w));
+                o.insert("b".into(), sec(&l.b));
+                if let Some(qp) = &l.qp {
+                    // f32 -> f64 widening is exact and the shortest-repr
+                    // f64 printer round-trips, so QParams survive the
+                    // JSON hop bit for bit.
+                    let mut q = BTreeMap::new();
+                    q.insert("delta".into(), Json::Num(qp.delta as f64));
+                    q.insert("zp".into(), Json::Num(qp.zero_point as f64));
+                    q.insert("levels".into(), Json::Num(qp.levels as f64));
+                    o.insert("qp".into(), Json::Obj(q));
+                }
+                Json::Obj(o)
+            })
+            .collect();
+        m.insert("layers".into(), Json::Arr(layers));
+        json::to_string(&Json::Obj(m)).into_bytes()
+    }
+
+    /// Serialize to the single streamable blob.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let manifest = self.manifest_json();
+        let mut out = Vec::with_capacity(HEADER_LEN + manifest.len() + self.payload.len());
+        out.extend_from_slice(&MAGIC);
+        out.extend_from_slice(&FORMAT.to_le_bytes());
+        out.extend_from_slice(&self.version.to_le_bytes());
+        out.extend_from_slice(&(manifest.len() as u32).to_le_bytes());
+        out.extend_from_slice(&crc32(&manifest).to_le_bytes());
+        out.extend_from_slice(&manifest);
+        out.extend_from_slice(&self.payload);
+        out
+    }
+
+    /// Check only the fixed header and return the param version —
+    /// enough for a server to index a blob, no payload scan.
+    pub fn peek_version(bytes: &[u8]) -> Result<u64, SnapshotError> {
+        if bytes.len() >= 4 && bytes[..4] != MAGIC {
+            return Err(SnapshotError::BadMagic);
+        }
+        if bytes.len() < HEADER_LEN {
+            return Err(SnapshotError::Truncated { need: HEADER_LEN, got: bytes.len() });
+        }
+        let format = u32::from_le_bytes(bytes[4..8].try_into().expect("4 bytes"));
+        if format != FORMAT {
+            return Err(SnapshotError::UnsupportedFormat(format));
+        }
+        Ok(u64::from_le_bytes(bytes[8..16].try_into().expect("8 bytes")))
+    }
+
+    /// Manifest region length (header included), from a blob's header —
+    /// what `/manifest` serves without decoding the payload.
+    pub fn manifest_region_len(bytes: &[u8]) -> Result<usize, SnapshotError> {
+        Self::peek_version(bytes)?;
+        let mlen = u32::from_le_bytes(bytes[16..20].try_into().expect("4 bytes")) as usize;
+        Ok(HEADER_LEN + mlen)
+    }
+
+    /// Decode and **fully verify** a blob. Every check lands before any
+    /// engine construction: magic/format, manifest CRC, header-vs-
+    /// manifest version agreement, payload length, contiguous section
+    /// tiling, per-section CRCs, per-layer length/bits arithmetic, and
+    /// QParams sanity. Any single corrupted or truncated byte anywhere
+    /// in the blob trips exactly one of these (pinned exhaustively by
+    /// `rust/tests/snapshot_roundtrip.rs`).
+    pub fn from_bytes(bytes: &[u8]) -> Result<Artifact, SnapshotError> {
+        let header_version = Self::peek_version(bytes)?;
+        let mlen = u32::from_le_bytes(bytes[16..20].try_into().expect("4 bytes")) as usize;
+        let mcrc = u32::from_le_bytes(bytes[20..24].try_into().expect("4 bytes"));
+        let need = HEADER_LEN
+            .checked_add(mlen)
+            .ok_or_else(|| SnapshotError::Manifest("manifest length overflows".into()))?;
+        if bytes.len() < need {
+            return Err(SnapshotError::Truncated { need, got: bytes.len() });
+        }
+        let manifest = &bytes[HEADER_LEN..need];
+        let got_crc = crc32(manifest);
+        if got_crc != mcrc {
+            return Err(SnapshotError::ChecksumMismatch {
+                section: "manifest".into(),
+                want: mcrc,
+                got: got_crc,
+            });
+        }
+        // From here the manifest bytes are authenticated; JSON/semantic
+        // failures mean the *writer* was broken, not the wire.
+        let text = std::str::from_utf8(manifest)
+            .map_err(|_| SnapshotError::Manifest("manifest is not utf-8".into()))?;
+        let m = Json::parse(text).map_err(|e| SnapshotError::Manifest(e.to_string()))?;
+        let man = |e: crate::Error| SnapshotError::Manifest(e.to_string());
+
+        let format = m.get("format").and_then(Json::as_usize).map_err(man)?;
+        if format != FORMAT as usize {
+            return Err(SnapshotError::UnsupportedFormat(format as u32));
+        }
+        let manifest_version = m.get("version").and_then(Json::as_f64).map_err(man)? as u64;
+        if manifest_version != header_version {
+            return Err(SnapshotError::VersionMismatch {
+                header: header_version,
+                manifest: manifest_version,
+            });
+        }
+        let bits = m.get("bits").and_then(Json::as_usize).map_err(man)? as u32;
+        let precision = if bits == 32 { Precision::Fp32 } else { Precision::Int(bits) };
+        if !precision.engine_supported() {
+            return Err(SnapshotError::Manifest(format!("unsupported precision bits {bits}")));
+        }
+        let label = m.get("precision").and_then(Json::as_str).map_err(man)?;
+        if label != precision.label() {
+            return Err(SnapshotError::Manifest(format!(
+                "precision label '{label}' does not match bits {bits}"
+            )));
+        }
+        let payload_len = m.get("payload_len").and_then(Json::as_usize).map_err(man)?;
+        let got_payload = bytes.len() - need;
+        if got_payload < payload_len {
+            return Err(SnapshotError::Truncated {
+                need: need + payload_len,
+                got: bytes.len(),
+            });
+        }
+        if got_payload > payload_len {
+            return Err(SnapshotError::Manifest(format!(
+                "{} trailing bytes after the declared payload",
+                got_payload - payload_len
+            )));
+        }
+        let payload = &bytes[need..];
+
+        let layer_vals = m.get("layers").and_then(Json::as_arr).map_err(man)?;
+        if layer_vals.is_empty() {
+            return Err(SnapshotError::Manifest("no layers".into()));
+        }
+        let mut layers = Vec::with_capacity(layer_vals.len());
+        // Sections must tile the payload contiguously in declaration
+        // order (w0 b0 w1 b1 ...): streamable, no gaps, no overlap games.
+        let mut cursor = 0usize;
+        for (i, lv) in layer_vals.iter().enumerate() {
+            let in_dim = lv.get("in").and_then(Json::as_usize).map_err(man)?;
+            let out_dim = lv.get("out").and_then(Json::as_usize).map_err(man)?;
+            if in_dim == 0 || out_dim == 0 {
+                return Err(SnapshotError::Manifest(format!("layer {i}: zero dimension")));
+            }
+            let section = |key: &str, cursor: &mut usize| -> Result<SectionMeta, SnapshotError> {
+                let sv = lv.get(key).map_err(man)?;
+                let off = sv.get("off").and_then(Json::as_usize).map_err(man)?;
+                let len = sv.get("len").and_then(Json::as_usize).map_err(man)?;
+                let crc = sv.get("crc").and_then(Json::as_f64).map_err(man)? as u32;
+                if off != *cursor {
+                    return Err(SnapshotError::Manifest(format!(
+                        "layer {i}.{key}: offset {off} breaks contiguous tiling (expected {cursor})"
+                    )));
+                }
+                let end = off
+                    .checked_add(len)
+                    .filter(|&e| e <= payload_len)
+                    .ok_or_else(|| SnapshotError::Manifest(format!(
+                        "layer {i}.{key}: section [{off}, +{len}) exceeds payload {payload_len}"
+                    )))?;
+                let got = crc32(&payload[off..end]);
+                if got != crc {
+                    return Err(SnapshotError::ChecksumMismatch {
+                        section: format!("layer {i}.{key}"),
+                        want: crc,
+                        got,
+                    });
+                }
+                *cursor = end;
+                Ok(SectionMeta { off, len, crc })
+            };
+            let w = section("w", &mut cursor)?;
+            let b = section("b", &mut cursor)?;
+            let expect_w = match precision {
+                Precision::Fp32 => in_dim * out_dim * 4,
+                Precision::Int(b) => packed_len(in_dim * out_dim, b),
+            };
+            if w.len != expect_w {
+                return Err(SnapshotError::Manifest(format!(
+                    "layer {i}: weight section {} bytes, geometry needs {expect_w}",
+                    w.len
+                )));
+            }
+            if b.len != out_dim * 4 {
+                return Err(SnapshotError::Manifest(format!(
+                    "layer {i}: bias section {} bytes for out_dim {out_dim}",
+                    b.len
+                )));
+            }
+            let qp = match (precision, lv.opt("qp")) {
+                (Precision::Fp32, None) => None,
+                (Precision::Fp32, Some(_)) => {
+                    return Err(SnapshotError::Manifest(format!("layer {i}: fp32 carries qp")))
+                }
+                (Precision::Int(_), Some(qv)) => {
+                    let delta = qv.get("delta").and_then(Json::as_f64).map_err(man)? as f32;
+                    let zero_point = qv.get("zp").and_then(Json::as_f64).map_err(man)? as f32;
+                    let levels = qv.get("levels").and_then(Json::as_f64).map_err(man)? as f32;
+                    if !(delta.is_finite() && delta > 0.0 && zero_point.is_finite()
+                        && levels.is_finite())
+                    {
+                        return Err(SnapshotError::Manifest(format!(
+                            "layer {i}: non-finite or non-positive QParams"
+                        )));
+                    }
+                    Some(QParams { delta, zero_point, levels })
+                }
+                (Precision::Int(_), None) => {
+                    return Err(SnapshotError::Manifest(format!("layer {i}: missing qp")))
+                }
+            };
+            layers.push(LayerMeta { in_dim, out_dim, w, b, qp });
+        }
+        if cursor != payload_len {
+            return Err(SnapshotError::Manifest(format!(
+                "sections tile {cursor} bytes of a {payload_len}-byte payload"
+            )));
+        }
+        Ok(Artifact { version: header_version, precision, layers, payload: payload.to_vec() })
+    }
+
+    /// Write the blob to `path` atomically (temp file + rename, so a
+    /// concurrent reader never sees a torn artifact).
+    pub fn write_file(&self, path: &Path) -> Result<(), SnapshotError> {
+        let bytes = self.to_bytes();
+        let tmp = tmp_sibling(path);
+        let io = |e: std::io::Error| SnapshotError::Io(format!("{}: {e}", path.display()));
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir).map_err(io)?;
+            }
+        }
+        let mut f = std::fs::File::create(&tmp).map_err(io)?;
+        f.write_all(&bytes).map_err(io)?;
+        f.sync_all().map_err(io)?;
+        drop(f);
+        std::fs::rename(&tmp, path).map_err(io)?;
+        Ok(())
+    }
+
+    /// Read and fully verify a blob from disk.
+    pub fn read_file(path: &Path) -> Result<Artifact, SnapshotError> {
+        let bytes = std::fs::read(path)
+            .map_err(|e| SnapshotError::Io(format!("{}: {e}", path.display())))?;
+        Artifact::from_bytes(&bytes)
+    }
+
+    /// Build a deployment engine from the (already verified) artifact.
+    /// fp32 reconstructs a `ParamSet` and goes through the standard
+    /// [`engine_for_cfg`] path (`EngineF32::from_params` copies weights
+    /// verbatim, so this is exact); quantized precisions hydrate
+    /// [`EngineQuant::from_quantized`] from the stored codes + QParams
+    /// — never re-quantizing — so both are bit-identical to the
+    /// publisher's engine.
+    pub fn build_engine(&self, cfg: EngineConfig) -> crate::Result<Box<dyn Engine + Send>> {
+        match self.precision {
+            Precision::Fp32 => {
+                let mut names = Vec::new();
+                let mut tensors = Vec::new();
+                for (i, l) in self.layers.iter().enumerate() {
+                    let w = le_to_f32s(&self.payload[l.w.off..l.w.off + l.w.len]);
+                    let b = le_to_f32s(&self.payload[l.b.off..l.b.off + l.b.len]);
+                    names.push(format!("w{i}"));
+                    tensors.push(Tensor::new(vec![l.in_dim, l.out_dim], w)?);
+                    names.push(format!("b{i}"));
+                    tensors.push(Tensor::new(vec![l.out_dim], b)?);
+                }
+                engine_for_cfg(&ParamSet { names, tensors }, Precision::Fp32, cfg)
+            }
+            Precision::Int(bits) => {
+                let inits = self
+                    .layers
+                    .iter()
+                    .map(|l| {
+                        let packed = self.payload[l.w.off..l.w.off + l.w.len].to_vec();
+                        let codes = CodeBuf::from_packed(packed, l.in_dim * l.out_dim, bits)?;
+                        Ok(QuantLayerInit {
+                            codes,
+                            w_qp: l.qp.expect("verified quantized layer carries qp"),
+                            b: le_to_f32s(&self.payload[l.b.off..l.b.off + l.b.len]),
+                            in_dim: l.in_dim,
+                            out_dim: l.out_dim,
+                        })
+                    })
+                    .collect::<crate::Result<Vec<_>>>()?;
+                Ok(Box::new(EngineQuant::from_quantized(inits, bits, cfg)?))
+            }
+        }
+    }
+}
+
+/// `<path>.tmp` sibling for atomic writes (distinct from the client's
+/// `.part` resume files, which are intentionally non-atomic).
+fn tmp_sibling(path: &Path) -> std::path::PathBuf {
+    let mut os = path.as_os_str().to_os_string();
+    os.push(".tmp");
+    std::path::PathBuf::from(os)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::inference::KernelKind;
+    use crate::rng::Pcg32;
+    use crate::runtime::manifest::TensorSpec;
+
+    fn mlp_params(dims: &[usize], seed: u64) -> ParamSet {
+        let mut specs = Vec::new();
+        for i in 0..dims.len() - 1 {
+            specs.push(TensorSpec { name: format!("q.w{i}"), shape: vec![dims[i], dims[i + 1]] });
+            specs.push(TensorSpec { name: format!("q.b{i}"), shape: vec![dims[i + 1]] });
+        }
+        let mut rng = Pcg32::new(seed, 1);
+        ParamSet::init(&specs, &mut rng)
+    }
+
+    #[test]
+    fn fp32_blob_roundtrips_bit_exactly() {
+        let p = mlp_params(&[5, 13, 3], 11);
+        let mut src = EngineF32::from_params(&p).unwrap();
+        let art = Artifact::from_engine_f32(&src, 7);
+        let bytes = art.to_bytes();
+        assert_eq!(Artifact::peek_version(&bytes).unwrap(), 7);
+        let back = Artifact::from_bytes(&bytes).unwrap();
+        assert_eq!(back.version, 7);
+        assert_eq!(back.precision, Precision::Fp32);
+        let mut rebuilt = back.build_engine(EngineConfig::default()).unwrap();
+        let x: Vec<f32> = (0..5).map(|i| (i as f32 * 0.7).sin()).collect();
+        let mut a = vec![0.0f32; 3];
+        let mut b = vec![0.0f32; 3];
+        src.forward(&x, &mut a);
+        rebuilt.forward(&x, &mut b).unwrap();
+        assert_eq!(a, b, "fp32 rebuild must be bit-identical");
+    }
+
+    #[test]
+    fn quant_blob_roundtrips_bit_exactly_for_both_kernels() {
+        for bits in [2u32, 4, 8] {
+            let p = mlp_params(&[7, 19, 4], 20 + bits as u64);
+            let mut src = EngineQuant::from_params(&p, bits).unwrap();
+            let art = Artifact::from_engine_quant(&src, 3);
+            let bytes = art.to_bytes();
+            let back = Artifact::from_bytes(&bytes).unwrap();
+            assert_eq!(back.precision, Precision::Int(bits));
+            let x: Vec<f32> = (0..7).map(|i| (i as f32 * 0.3).cos()).collect();
+            let mut want = vec![0.0f32; 4];
+            src.forward(&x, &mut want).unwrap();
+            for kernel in [KernelKind::Prepacked, KernelKind::RowMajor] {
+                let cfg = EngineConfig { kernel, ..EngineConfig::default() };
+                let mut rebuilt = back.build_engine(cfg).unwrap();
+                let mut got = vec![0.0f32; 4];
+                rebuilt.forward(&x, &mut got).unwrap();
+                assert_eq!(want, got, "bits {bits} kernel {}", kernel.label());
+            }
+        }
+    }
+
+    #[test]
+    fn file_roundtrip_is_atomic_and_verified() {
+        let p = mlp_params(&[4, 9, 2], 5);
+        let eng = EngineQuant::from_params(&p, 4).unwrap();
+        let art = Artifact::from_engine_quant(&eng, 12);
+        let dir = std::env::temp_dir().join("quarl_snapshot_artifact_test");
+        let path = dir.join("pi.qsnp");
+        art.write_file(&path).unwrap();
+        let back = Artifact::read_file(&path).unwrap();
+        assert_eq!(back.version, 12);
+        assert_eq!(back.to_bytes(), art.to_bytes(), "re-encode is stable");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn version_skew_between_header_and_manifest_is_typed() {
+        let p = mlp_params(&[4, 9, 2], 6);
+        let eng = EngineQuant::from_params(&p, 8).unwrap();
+        let mut bytes = Artifact::from_engine_quant(&eng, 9).to_bytes();
+        // bump the plaintext header version without touching the
+        // CRC-protected manifest: a spliced/corrupted header
+        bytes[8] = bytes[8].wrapping_add(1);
+        match Artifact::from_bytes(&bytes) {
+            Err(SnapshotError::VersionMismatch { header, manifest }) => {
+                assert_eq!(manifest, 9);
+                assert_ne!(header, 9);
+            }
+            other => panic!("expected VersionMismatch, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn trailing_garbage_is_rejected() {
+        let p = mlp_params(&[4, 9, 2], 6);
+        let eng = EngineF32::from_params(&p).unwrap();
+        let mut bytes = Artifact::from_engine_f32(&eng, 1).to_bytes();
+        bytes.push(0xAB);
+        assert!(
+            matches!(Artifact::from_bytes(&bytes), Err(SnapshotError::Manifest(_))),
+            "trailing bytes must not be silently ignored"
+        );
+    }
+}

@@ -1,0 +1,79 @@
+//! CRC-32 (IEEE 802.3, the zlib/PNG polynomial) for snapshot section
+//! checksums — hand-rolled because the offline crate set carries no
+//! compression/checksum dependency.
+//!
+//! A CRC detects every single-bit and single-byte error and every burst
+//! up to 32 bits, which is exactly the fault class the round-trip
+//! harness injects: the acceptance criterion is that *any* one
+//! corrupted byte in manifest or payload is caught client-side. The
+//! table is built in a `const fn` so the 1 KiB lookup lives in rodata.
+
+/// Reflected CRC-32 polynomial (0x04C11DB7 bit-reversed).
+const POLY: u32 = 0xEDB8_8320;
+
+const fn build_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { (c >> 1) ^ POLY } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+}
+
+static TABLE: [u32; 256] = build_table();
+
+/// CRC-32 of `data` (init all-ones, final complement — the standard
+/// parameterization, so `crc32(b"123456789") == 0xCBF43926`).
+pub fn crc32(data: &[u8]) -> u32 {
+    let mut c = 0xFFFF_FFFFu32;
+    for &b in data {
+        c = TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    !c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matches_the_standard_check_value() {
+        // The universal CRC-32 test vector.
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn detects_every_single_byte_corruption() {
+        // The property the fault-injection harness leans on, checked
+        // directly at the checksum layer: flipping any single byte of a
+        // sample buffer changes the CRC.
+        let base: Vec<u8> = (0..257u32).map(|i| (i.wrapping_mul(31) ^ 0x5C) as u8).collect();
+        let want = crc32(&base);
+        let mut buf = base.clone();
+        for i in 0..buf.len() {
+            buf[i] ^= 0xFF;
+            assert_ne!(crc32(&buf), want, "byte {i} flip undetected");
+            buf[i] ^= 0x01 ^ 0xFF; // also a single-bit error
+            assert_ne!(crc32(&buf), want, "byte {i} bit flip undetected");
+            buf[i] = base[i];
+        }
+        assert_eq!(crc32(&buf), want, "restored buffer must match again");
+    }
+
+    #[test]
+    fn distinguishes_truncations() {
+        let base: Vec<u8> = (0..64u8).collect();
+        let want = crc32(&base);
+        for k in 0..base.len() {
+            assert_ne!(crc32(&base[..k]), want, "truncation to {k} undetected");
+        }
+    }
+}

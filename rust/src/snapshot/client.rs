@@ -1,0 +1,391 @@
+//! The fetch side of the distribution service: a blocking HTTP client
+//! that downloads snapshot blobs, validates **everything** before an
+//! engine is built, resumes interrupted downloads, and hydrates a
+//! deployment [`Engine`] through the same construction paths the
+//! in-process broadcast uses.
+//!
+//! Trust model: the client treats the wire as hostile-to-flaky. Every
+//! fetched blob goes through [`Artifact::from_bytes`] (full CRC +
+//! geometry verification); a resumed download is stitched only if the
+//! server still holds the same version (`X-If-Version`, enforced
+//! server-side as a `409`), and a stitch that fails validation deletes
+//! its partial file rather than leaving a poisoned resume point.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::path::Path;
+use std::time::{Duration, Instant};
+
+use crate::inference::{Engine, EngineConfig};
+use crate::snapshot::artifact::{Artifact, HEADER_LEN};
+use crate::snapshot::SnapshotError;
+
+/// What a [`SnapshotClient::fetch_to_file`] actually moved — the
+/// `exp dist` fetch-bytes accounting and the resume test read this.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FetchStats {
+    /// Version of the artifact now on disk.
+    pub version: u64,
+    /// Full size of the artifact blob.
+    pub total_bytes: usize,
+    /// Bytes that actually crossed the wire this call.
+    pub fetched_bytes: usize,
+    /// Whether a partial file was resumed (vs fetched from scratch).
+    pub resumed: bool,
+}
+
+/// One parsed HTTP response.
+struct Response {
+    status: u16,
+    version: u64,
+    body: Vec<u8>,
+}
+
+/// Blocking snapshot fetcher. Holds only the server address; every
+/// request is its own short-lived connection (matching the server's
+/// `Connection: close` framing).
+#[derive(Debug, Clone)]
+pub struct SnapshotClient {
+    addr: String,
+}
+
+impl SnapshotClient {
+    /// Client for the snapshot server at `addr`
+    /// (e.g. `server.addr()` or `"127.0.0.1:4788"`).
+    pub fn new(addr: impl std::fmt::Display) -> SnapshotClient {
+        SnapshotClient { addr: addr.to_string() }
+    }
+
+    /// Issue one GET and read the full response.
+    fn get(&self, path: &str, extra_headers: &str) -> Result<Response, SnapshotError> {
+        let io = |what: &str, e: std::io::Error| {
+            SnapshotError::Io(format!("{what} {}: {e}", self.addr))
+        };
+        let mut stream = TcpStream::connect(&self.addr).map_err(|e| io("connect", e))?;
+        stream.set_read_timeout(Some(Duration::from_secs(10))).map_err(|e| io("timeout", e))?;
+        write!(stream, "GET {path} HTTP/1.1\r\nHost: {}\r\n{extra_headers}\r\n", self.addr)
+            .map_err(|e| io("send", e))?;
+        let mut raw = Vec::new();
+        stream.read_to_end(&mut raw).map_err(|e| io("read", e))?;
+        parse_response(&raw)
+    }
+
+    /// The server's current param version (0 before any publish).
+    pub fn version(&self) -> Result<u64, SnapshotError> {
+        let r = self.get("/version", "")?;
+        if r.status != 200 {
+            return Err(SnapshotError::Http(format!("/version returned {}", r.status)));
+        }
+        Ok(r.version)
+    }
+
+    /// Poll until the served version reaches `min` (the actor-side
+    /// "wait for the next publish" primitive), at a 2 ms cadence.
+    pub fn wait_for_version(&self, min: u64, timeout: Duration) -> Result<u64, SnapshotError> {
+        let start = Instant::now();
+        loop {
+            let v = self.version()?;
+            if v >= min {
+                return Ok(v);
+            }
+            if start.elapsed() >= timeout {
+                return Err(SnapshotError::Timeout {
+                    waited_ms: start.elapsed().as_millis() as u64,
+                });
+            }
+            std::thread::sleep(Duration::from_millis(2));
+        }
+    }
+
+    /// Fetch a byte range of the blob starting at `offset` (to the
+    /// end). With `expect_version`, a server whose version moved
+    /// answers `409`, surfaced as [`SnapshotError::Stale`] — the resume
+    /// path's guard against stitching bytes of two different versions.
+    /// Returns the served version and the bytes.
+    pub fn fetch_range(
+        &self,
+        offset: usize,
+        expect_version: Option<u64>,
+    ) -> Result<(u64, Vec<u8>), SnapshotError> {
+        let mut headers = String::new();
+        if offset > 0 {
+            headers.push_str(&format!("Range: bytes={offset}-\r\n"));
+        }
+        if let Some(v) = expect_version {
+            headers.push_str(&format!("X-If-Version: {v}\r\n"));
+        }
+        let r = self.get("/snapshot", &headers)?;
+        match r.status {
+            200 | 206 => Ok((r.version, r.body)),
+            409 => Err(SnapshotError::Stale {
+                requested: expect_version.unwrap_or(0),
+                current: r.version,
+            }),
+            404 => Err(SnapshotError::Http("no snapshot published yet".into())),
+            s => Err(SnapshotError::Http(format!("/snapshot returned {s}"))),
+        }
+    }
+
+    /// Fetch and fully verify the current snapshot.
+    pub fn fetch(&self) -> Result<Artifact, SnapshotError> {
+        let (_, bytes) = self.fetch_range(0, None)?;
+        Artifact::from_bytes(&bytes)
+    }
+
+    /// Fetch, verify, and hydrate a deployment engine — the remote
+    /// actor's one-call path onto the standard construction routes
+    /// ([`crate::inference::engine_for_cfg`] /
+    /// [`crate::inference::EngineQuant::from_quantized`]).
+    pub fn fetch_engine(
+        &self,
+        cfg: EngineConfig,
+    ) -> crate::Result<(u64, Box<dyn Engine + Send>)> {
+        let art = self.fetch()?;
+        let engine = art.build_engine(cfg)?;
+        Ok((art.version, engine))
+    }
+
+    /// Download the current snapshot to `path`, resuming from
+    /// `<path>.part` if an interrupted attempt left one behind.
+    ///
+    /// The partial file names the version it belongs to (its header is
+    /// the first thing written), so the resume request pins
+    /// `X-If-Version` to it; if the server has moved on the stale
+    /// partial is discarded and the new version is fetched whole. The
+    /// assembled blob is fully verified *before* being renamed into
+    /// place — `path` either holds a valid artifact or does not exist.
+    pub fn fetch_to_file(&self, path: &Path) -> Result<FetchStats, SnapshotError> {
+        let part_path = {
+            let mut os = path.as_os_str().to_os_string();
+            os.push(".part");
+            std::path::PathBuf::from(os)
+        };
+        let io = |e: std::io::Error| SnapshotError::Io(format!("{}: {e}", part_path.display()));
+
+        // A usable resume point is a partial with a readable header.
+        let part = std::fs::read(&part_path).ok().filter(|b| b.len() >= HEADER_LEN);
+        let resume_from = part.as_ref().and_then(|b| {
+            Artifact::peek_version(b).ok().map(|v| (v, b.len()))
+        });
+
+        let (resumed, version, bytes, fetched) = match (part, resume_from) {
+            (Some(mut prefix), Some((part_version, off))) => {
+                match self.fetch_range(off, Some(part_version)) {
+                    Ok((v, rest)) => {
+                        let fetched = rest.len();
+                        prefix.extend_from_slice(&rest);
+                        (true, v, prefix, fetched)
+                    }
+                    // Server moved on: the partial is garbage, start over.
+                    Err(SnapshotError::Stale { .. }) => {
+                        let (v, all) = self.fetch_range(0, None)?;
+                        let fetched = all.len();
+                        (false, v, all, fetched)
+                    }
+                    Err(e) => return Err(e),
+                }
+            }
+            _ => {
+                let (v, all) = self.fetch_range(0, None)?;
+                let fetched = all.len();
+                (false, v, all, fetched)
+            }
+        };
+        // Full verification before the blob may land at `path`; a bad
+        // stitch also burns its resume point so the next attempt is
+        // clean.
+        if let Err(e) = Artifact::from_bytes(&bytes) {
+            let _ = std::fs::remove_file(&part_path);
+            return Err(e);
+        }
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir).map_err(io)?;
+            }
+        }
+        let total = bytes.len();
+        std::fs::write(&part_path, &bytes).map_err(io)?;
+        std::fs::rename(&part_path, path).map_err(io)?;
+        Ok(FetchStats { version, total_bytes: total, fetched_bytes: fetched, resumed })
+    }
+}
+
+fn parse_response(raw: &[u8]) -> Result<Response, SnapshotError> {
+    let split = raw
+        .windows(4)
+        .position(|w| w == b"\r\n\r\n")
+        .ok_or_else(|| SnapshotError::Http("response without header terminator".into()))?;
+    let head = std::str::from_utf8(&raw[..split])
+        .map_err(|_| SnapshotError::Http("non-utf8 response head".into()))?;
+    let body = raw[split + 4..].to_vec();
+    let mut lines = head.split("\r\n");
+    let status_line = lines.next().unwrap_or("");
+    let status = status_line
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse::<u16>().ok())
+        .ok_or_else(|| SnapshotError::Http(format!("bad status line '{status_line}'")))?;
+    let mut version = 0u64;
+    let mut content_length = None;
+    for line in lines {
+        let Some((name, value)) = line.split_once(':') else { continue };
+        let value = value.trim();
+        if name.eq_ignore_ascii_case("x-snapshot-version") {
+            version = value.parse().unwrap_or(0);
+        } else if name.eq_ignore_ascii_case("content-length") {
+            content_length = value.parse::<usize>().ok();
+        }
+    }
+    // Connection: close framing means EOF ends the body; the length
+    // header still catches a connection cut mid-transfer.
+    if let Some(cl) = content_length {
+        if cl != body.len() {
+            return Err(SnapshotError::Http(format!(
+                "content-length {cl} but {} body bytes (connection cut?)",
+                body.len()
+            )));
+        }
+    }
+    Ok(Response { status, version, body })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::inference::EngineQuant;
+    use crate::rng::Pcg32;
+    use crate::runtime::manifest::TensorSpec;
+    use crate::runtime::ParamSet;
+    use crate::snapshot::server::{SnapshotHub, SnapshotServer};
+    use std::sync::Arc;
+
+    fn mlp_params(dims: &[usize], seed: u64) -> ParamSet {
+        let mut specs = Vec::new();
+        for i in 0..dims.len() - 1 {
+            specs.push(TensorSpec { name: format!("q.w{i}"), shape: vec![dims[i], dims[i + 1]] });
+            specs.push(TensorSpec { name: format!("q.b{i}"), shape: vec![dims[i + 1]] });
+        }
+        ParamSet::init(&specs, &mut Pcg32::new(seed, 1))
+    }
+
+    fn serve_quant(version: u64) -> (SnapshotServer, Arc<SnapshotHub>, EngineQuant) {
+        let p = mlp_params(&[6, 24, 3], 41);
+        let eng = EngineQuant::from_params(&p, 4).unwrap();
+        let hub = Arc::new(SnapshotHub::new());
+        hub.publish(&Artifact::from_engine_quant(&eng, version)).unwrap();
+        let server = SnapshotServer::bind("127.0.0.1:0", Arc::clone(&hub)).unwrap();
+        (server, hub, eng)
+    }
+
+    #[test]
+    fn fetches_and_hydrates_a_bit_identical_engine() {
+        let (server, _hub, mut src) = serve_quant(5);
+        let client = SnapshotClient::new(server.addr());
+        assert_eq!(client.version().unwrap(), 5);
+        let art = client.fetch().unwrap();
+        assert_eq!(art.version, 5);
+        let (v, mut eng) = client.fetch_engine(EngineConfig::default()).unwrap();
+        assert_eq!(v, 5);
+        let x: Vec<f32> = (0..6).map(|i| (i as f32 * 0.9).sin()).collect();
+        let mut a = vec![0.0f32; 3];
+        let mut b = vec![0.0f32; 3];
+        src.forward(&x, &mut a).unwrap();
+        eng.forward(&x, &mut b).unwrap();
+        assert_eq!(a, b, "hydrated engine must match the publisher's bit for bit");
+    }
+
+    #[test]
+    fn fetch_before_any_publish_is_a_typed_http_error() {
+        let hub = Arc::new(SnapshotHub::new());
+        let server = SnapshotServer::bind("127.0.0.1:0", Arc::clone(&hub)).unwrap();
+        let client = SnapshotClient::new(server.addr());
+        assert_eq!(client.version().unwrap(), 0);
+        assert!(matches!(client.fetch(), Err(SnapshotError::Http(_))));
+    }
+
+    #[test]
+    fn stale_version_pin_is_surfaced() {
+        let (server, _hub, _) = serve_quant(9);
+        let client = SnapshotClient::new(server.addr());
+        match client.fetch_range(0, Some(8)) {
+            Err(SnapshotError::Stale { requested: 8, current: 9 }) => {}
+            other => panic!("expected Stale, got {other:?}"),
+        }
+        // The matching pin passes.
+        assert!(client.fetch_range(0, Some(9)).is_ok());
+    }
+
+    #[test]
+    fn wait_for_version_times_out_and_succeeds() {
+        let (server, hub, eng) = serve_quant(2);
+        let client = SnapshotClient::new(server.addr());
+        match client.wait_for_version(3, Duration::from_millis(30)) {
+            Err(SnapshotError::Timeout { waited_ms }) => assert!(waited_ms >= 30),
+            other => panic!("expected Timeout, got {other:?}"),
+        }
+        hub.publish(&Artifact::from_engine_quant(&eng, 3)).unwrap();
+        assert_eq!(client.wait_for_version(3, Duration::from_secs(5)).unwrap(), 3);
+    }
+
+    #[test]
+    fn fetch_to_file_fresh_and_resumed() {
+        let (server, hub, _) = serve_quant(4);
+        let client = SnapshotClient::new(server.addr());
+        let dir = std::env::temp_dir().join("quarl_snapshot_client_test");
+        std::fs::remove_dir_all(&dir).ok();
+        let path = dir.join("policy.qsnp");
+
+        // Fresh fetch: everything crosses the wire.
+        let stats = client.fetch_to_file(&path).unwrap();
+        let blob = std::fs::read(&path).unwrap();
+        assert_eq!(
+            stats,
+            FetchStats {
+                version: 4,
+                total_bytes: blob.len(),
+                fetched_bytes: blob.len(),
+                resumed: false
+            }
+        );
+        Artifact::from_bytes(&blob).unwrap();
+
+        // Simulate an interrupted download: a valid prefix in `.part`.
+        std::fs::remove_file(&path).unwrap();
+        let keep = blob.len() / 2;
+        let part = dir.join("policy.qsnp.part");
+        std::fs::write(&part, &blob[..keep]).unwrap();
+        let stats = client.fetch_to_file(&path).unwrap();
+        assert_eq!(
+            stats,
+            FetchStats {
+                version: 4,
+                total_bytes: blob.len(),
+                fetched_bytes: blob.len() - keep,
+                resumed: true
+            }
+        );
+        assert_eq!(std::fs::read(&path).unwrap(), blob, "stitched file is byte-exact");
+        assert!(!part.exists(), "partial is consumed by the rename");
+
+        // A partial of a version the server no longer has: refetched
+        // whole, still correct.
+        let (_, _, eng2) = serve_quant(0); // just to build a different engine
+        let old = Artifact::from_engine_quant(&eng2, 1).to_bytes();
+        std::fs::remove_file(&path).unwrap();
+        std::fs::write(&part, &old[..old.len() / 2]).unwrap();
+        hub.publish_bytes({
+            let art = Artifact::from_bytes(&blob).unwrap();
+            let mut a2 = art.clone();
+            a2.version = 6;
+            a2.to_bytes()
+        })
+        .unwrap();
+        let stats = client.fetch_to_file(&path).unwrap();
+        assert!(!stats.resumed, "stale partial must trigger a full refetch");
+        assert_eq!(stats.version, 6);
+        assert_eq!(stats.fetched_bytes, stats.total_bytes);
+        assert_eq!(Artifact::read_file(&path).unwrap().version, 6);
+
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,116 @@
+//! Param-distribution service: versioned snapshot artifacts served over
+//! the wire (ROADMAP direction 1 — multi-process ActorQ).
+//!
+//! The in-process [`crate::actorq::ParamBroadcast`] distributes policies
+//! by swapping an `Arc`; a production fleet needs actors (and serving
+//! replicas) in other processes and on other machines. This module is
+//! the second transport: the learner's quantize-on-publish step also
+//! encodes the freshly built deployment engine into a single streamable
+//! binary **artifact** ([`artifact`]), a tiny blocking HTTP server
+//! ([`server`]) hands it out with ranged reads, and a client
+//! ([`client`]) fetches, validates every checksum, resumes partial
+//! downloads, and rebuilds an [`crate::inference::Engine`] that is
+//! **bit-identical** to the publisher's (pinned by
+//! `rust/tests/snapshot_roundtrip.rs`).
+//!
+//! Layout of one artifact (all integers little-endian):
+//!
+//! ```text
+//! offset  size  field
+//!      0     4  magic "QSNP"
+//!      4     4  u32 format version (1)
+//!      8     8  u64 param version (must equal the manifest's)
+//!     16     4  u32 manifest length M
+//!     20     4  u32 CRC-32 of the manifest bytes
+//!     24     M  manifest (JSON: precision, per-layer shapes, section
+//!               offsets/lengths/CRCs, per-layer QParams)
+//!  24+M     P  payload: per layer, packed weight codes (or f32 LE
+//!               weights at fp32) then f32 LE biases, tiled contiguously
+//! ```
+//!
+//! Every region is covered by a check — magic/format/version by the
+//! header, the manifest by its CRC, each payload section by its own
+//! CRC, section geometry by the manifest cross-checks — so any single
+//! corrupted or truncated byte surfaces as a typed [`SnapshotError`]
+//! on the client *before* an engine is built. Quantized payloads ship
+//! the packed [`crate::quant::codec::CodeBuf`] bytes (the §3 cheap-
+//! distribution win: an int4 snapshot is ~1/8 the fp32 wire size), and
+//! the engine rebuild re-uses the exact stored codes + `QParams`, so
+//! round-tripped logits match the source engine bit for bit.
+//!
+//! The same content-addressable blob is the planned foundation for the
+//! direction-5 result cache (key = CRC of the manifest + payload).
+
+pub mod artifact;
+pub mod checksum;
+pub mod client;
+pub mod server;
+
+pub use artifact::{Artifact, LayerMeta, SectionMeta, HEADER_LEN, MAGIC};
+pub use checksum::crc32;
+pub use client::{FetchStats, SnapshotClient};
+pub use server::{SnapshotHub, SnapshotServer};
+
+use std::fmt;
+
+/// Typed failure modes of the snapshot transport. Tests assert on the
+/// variants directly; crossing into a [`crate::Result`] context maps
+/// them through `From<SnapshotError> for crate::Error`.
+#[derive(Debug)]
+pub enum SnapshotError {
+    /// The blob does not start with the `QSNP` magic.
+    BadMagic,
+    /// The format version is one this build cannot read.
+    UnsupportedFormat(u32),
+    /// The blob ends before a declared region does.
+    Truncated { need: usize, got: usize },
+    /// A CRC-protected region does not match its stored checksum.
+    ChecksumMismatch { section: String, want: u32, got: u32 },
+    /// The plaintext header version and the CRC-protected manifest
+    /// version disagree (a flipped header byte, or a spliced blob).
+    VersionMismatch { header: u64, manifest: u64 },
+    /// The requested version is no longer (or not yet) the one served.
+    Stale { requested: u64, current: u64 },
+    /// The manifest is well-formed JSON but semantically invalid
+    /// (bad geometry, unsupported precision, non-finite QParams, ...).
+    Manifest(String),
+    /// Transport-level HTTP failure (unexpected status, bad framing).
+    Http(String),
+    /// Socket / filesystem failure, with context.
+    Io(String),
+    /// A wait/poll loop ran out its deadline.
+    Timeout { waited_ms: u64 },
+}
+
+impl fmt::Display for SnapshotError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SnapshotError::BadMagic => write!(f, "bad magic (not a QSNP snapshot)"),
+            SnapshotError::UnsupportedFormat(v) => write!(f, "unsupported format version {v}"),
+            SnapshotError::Truncated { need, got } => {
+                write!(f, "truncated: need {need} bytes, got {got}")
+            }
+            SnapshotError::ChecksumMismatch { section, want, got } => {
+                write!(f, "checksum mismatch in {section}: stored {want:#010x}, computed {got:#010x}")
+            }
+            SnapshotError::VersionMismatch { header, manifest } => {
+                write!(f, "version mismatch: header says {header}, manifest says {manifest}")
+            }
+            SnapshotError::Stale { requested, current } => {
+                write!(f, "stale version: requested {requested}, server has {current}")
+            }
+            SnapshotError::Manifest(m) => write!(f, "manifest: {m}"),
+            SnapshotError::Http(m) => write!(f, "http: {m}"),
+            SnapshotError::Io(m) => write!(f, "io: {m}"),
+            SnapshotError::Timeout { waited_ms } => write!(f, "timed out after {waited_ms} ms"),
+        }
+    }
+}
+
+impl std::error::Error for SnapshotError {}
+
+impl From<SnapshotError> for crate::Error {
+    fn from(e: SnapshotError) -> crate::Error {
+        crate::Error::Manifest(format!("snapshot: {e}"))
+    }
+}

@@ -1,0 +1,434 @@
+//! The publish side of the distribution service: a process-wide
+//! [`SnapshotHub`] holding the latest encoded artifact, and a blocking
+//! HTTP-over-TCP [`SnapshotServer`] that hands it out.
+//!
+//! The hub is transport-independent — the learner publishes into it on
+//! every [`crate::actorq::ParamBroadcast::publish`], whether or not a
+//! server is listening — and enforces version monotonicity: a publish
+//! that does not advance the version is rejected as
+//! [`SnapshotError::Stale`], so two racing publishers cannot make the
+//! served version go backwards.
+//!
+//! The server speaks just enough HTTP/1.1 for the in-tree client and
+//! for `curl` against loopback: `GET /version`, `/manifest`,
+//! `/payload`, `/snapshot`, with byte `Range` support on the blob
+//! endpoints (the client's resume path) and an `X-If-Version` request
+//! header that turns a version race into a clean `409` instead of a
+//! torn read. Every response carries `X-Snapshot-Version` and an exact
+//! `Content-Length`; connections are `Connection: close` (one request
+//! per connection — param distribution is a low-rate control-plane
+//! path, and the simplest framing is the one that cannot desync).
+//!
+//! The accept loop runs nonblocking with a 2 ms poll so
+//! [`SnapshotServer::shutdown`] (and `Drop`) can stop it promptly;
+//! handler threads are joined on shutdown, so no test leaks a socket.
+
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use crate::snapshot::artifact::Artifact;
+use crate::snapshot::SnapshotError;
+
+/// Latest-artifact slot shared between the learner (publisher) and any
+/// number of server/actor threads. Holds the *encoded* blob: encoding
+/// happens once per publish, not per fetch.
+#[derive(Debug, Default)]
+pub struct SnapshotHub {
+    /// `(version, encoded blob)`; `None` until the first publish.
+    slot: Mutex<Option<(u64, Arc<Vec<u8>>)>>,
+    /// Mirror of the slot's version for lock-free polling.
+    version: AtomicU64,
+}
+
+impl SnapshotHub {
+    pub fn new() -> SnapshotHub {
+        SnapshotHub::default()
+    }
+
+    /// Encode and publish `artifact`. Fails [`SnapshotError::Stale`] if
+    /// its version does not advance past the currently served one.
+    pub fn publish(&self, artifact: &Artifact) -> Result<u64, SnapshotError> {
+        self.publish_bytes(artifact.to_bytes())
+    }
+
+    /// Publish an already-encoded blob. Only the header is inspected
+    /// (magic/format/version) — deliberately not a full verification,
+    /// so the fault-injection tests can serve corrupted payloads and
+    /// pin that the *client* catches them.
+    pub fn publish_bytes(&self, bytes: Vec<u8>) -> Result<u64, SnapshotError> {
+        let version = Artifact::peek_version(&bytes)?;
+        let mut slot = self.slot.lock().expect("hub lock");
+        if let Some((current, _)) = *slot {
+            if version <= current {
+                return Err(SnapshotError::Stale { requested: version, current });
+            }
+        }
+        *slot = Some((version, Arc::new(bytes)));
+        self.version.store(version, Ordering::Release);
+        Ok(version)
+    }
+
+    /// Currently served param version (0 before the first publish).
+    pub fn version(&self) -> u64 {
+        self.version.load(Ordering::Acquire)
+    }
+
+    /// The current `(version, blob)`, if anything has been published.
+    pub fn latest(&self) -> Option<(u64, Arc<Vec<u8>>)> {
+        self.slot.lock().expect("hub lock").clone()
+    }
+}
+
+/// Blocking loopback-friendly HTTP server over a [`SnapshotHub`].
+#[derive(Debug)]
+pub struct SnapshotServer {
+    addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept_thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl SnapshotServer {
+    /// Bind `addr` (e.g. `"127.0.0.1:0"` for an ephemeral loopback
+    /// port) and start serving `hub`.
+    pub fn bind(addr: &str, hub: Arc<SnapshotHub>) -> Result<SnapshotServer, SnapshotError> {
+        let listener = TcpListener::bind(addr)
+            .map_err(|e| SnapshotError::Io(format!("bind {addr}: {e}")))?;
+        listener
+            .set_nonblocking(true)
+            .map_err(|e| SnapshotError::Io(format!("set_nonblocking: {e}")))?;
+        let local = listener
+            .local_addr()
+            .map_err(|e| SnapshotError::Io(format!("local_addr: {e}")))?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = Arc::clone(&stop);
+        let accept_thread = std::thread::Builder::new()
+            .name("snapshot-server".into())
+            .spawn(move || accept_loop(listener, hub, stop2))
+            .map_err(|e| SnapshotError::Io(format!("spawn: {e}")))?;
+        Ok(SnapshotServer { addr: local, stop, accept_thread: Some(accept_thread) })
+    }
+
+    /// The bound address (query it after binding port 0).
+    pub fn addr(&self) -> std::net::SocketAddr {
+        self.addr
+    }
+
+    /// Stop accepting, join the accept loop (which joins its handlers).
+    pub fn shutdown(&mut self) {
+        self.stop.store(true, Ordering::Release);
+        if let Some(h) = self.accept_thread.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for SnapshotServer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn accept_loop(listener: TcpListener, hub: Arc<SnapshotHub>, stop: Arc<AtomicBool>) {
+    let mut handlers: Vec<std::thread::JoinHandle<()>> = Vec::new();
+    while !stop.load(Ordering::Acquire) {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                let hub = Arc::clone(&hub);
+                if let Ok(h) = std::thread::Builder::new()
+                    .name("snapshot-conn".into())
+                    .spawn(move || handle_connection(stream, &hub))
+                {
+                    handlers.push(h);
+                }
+                // Finished handlers are reaped opportunistically so a
+                // long-lived server does not accumulate join handles.
+                handlers.retain(|h| !h.is_finished());
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(2));
+            }
+            Err(_) => break,
+        }
+    }
+    for h in handlers {
+        let _ = h.join();
+    }
+}
+
+/// Parsed request line + the two headers this protocol reacts to.
+struct Request {
+    path: String,
+    range: Option<(usize, Option<usize>)>,
+    if_version: Option<u64>,
+}
+
+fn read_request(stream: &mut TcpStream) -> Option<Request> {
+    stream.set_read_timeout(Some(Duration::from_secs(5))).ok()?;
+    // Read until the blank line ending the header block; GETs carry no
+    // body, so nothing further is consumed.
+    let mut buf = Vec::new();
+    let mut chunk = [0u8; 512];
+    while !buf.windows(4).any(|w| w == b"\r\n\r\n") {
+        if buf.len() > 16 * 1024 {
+            return None; // header flood; not a client we serve
+        }
+        let n = stream.read(&mut chunk).ok()?;
+        if n == 0 {
+            return None;
+        }
+        buf.extend_from_slice(&chunk[..n]);
+    }
+    let text = String::from_utf8_lossy(&buf);
+    let mut lines = text.split("\r\n");
+    let request_line = lines.next()?;
+    let mut parts = request_line.split_whitespace();
+    let method = parts.next()?;
+    let path = parts.next()?.to_string();
+    if method != "GET" {
+        return Some(Request { path: format!("!{method}"), range: None, if_version: None });
+    }
+    let mut range = None;
+    let mut if_version = None;
+    for line in lines {
+        let Some((name, value)) = line.split_once(':') else { continue };
+        let value = value.trim();
+        if name.eq_ignore_ascii_case("range") {
+            // "bytes=start-" or "bytes=start-end" (inclusive end).
+            if let Some(spec) = value.strip_prefix("bytes=") {
+                if let Some((s, e)) = spec.split_once('-') {
+                    if let Ok(start) = s.trim().parse::<usize>() {
+                        let end = e.trim().parse::<usize>().ok();
+                        range = Some((start, end));
+                    }
+                }
+            }
+        } else if name.eq_ignore_ascii_case("x-if-version") {
+            if_version = value.parse::<u64>().ok();
+        }
+    }
+    Some(Request { path, range, if_version })
+}
+
+fn write_response(
+    stream: &mut TcpStream,
+    status: &str,
+    version: u64,
+    extra_headers: &[String],
+    body: &[u8],
+) {
+    let mut head = format!(
+        "HTTP/1.1 {status}\r\nX-Snapshot-Version: {version}\r\nContent-Length: {}\r\nConnection: close\r\n",
+        body.len()
+    );
+    for h in extra_headers {
+        head.push_str(h);
+        head.push_str("\r\n");
+    }
+    head.push_str("\r\n");
+    let _ = stream.write_all(head.as_bytes());
+    let _ = stream.write_all(body);
+    let _ = stream.flush();
+}
+
+fn handle_connection(mut stream: TcpStream, hub: &SnapshotHub) {
+    let Some(req) = read_request(&mut stream) else { return };
+    let latest = hub.latest();
+    let version = latest.as_ref().map(|(v, _)| *v).unwrap_or(0);
+
+    if req.path.starts_with('!') {
+        write_response(&mut stream, "405 Method Not Allowed", version, &[], b"");
+        return;
+    }
+    if req.path == "/version" {
+        write_response(&mut stream, "200 OK", version, &[], version.to_string().as_bytes());
+        return;
+    }
+    let Some((version, blob)) = latest else {
+        write_response(&mut stream, "404 Not Found", 0, &[], b"no snapshot published");
+        return;
+    };
+    if let Some(want) = req.if_version {
+        if want != version {
+            // The version moved (or has not arrived yet): refuse rather
+            // than serve bytes the client would mis-stitch onto a
+            // different version's partial download.
+            write_response(&mut stream, "409 Conflict", version, &[], b"version changed");
+            return;
+        }
+    }
+    // Region the path addresses, in blob coordinates.
+    let region = match req.path.as_str() {
+        "/snapshot" => Some((0usize, blob.len())),
+        "/manifest" => Artifact::manifest_region_len(&blob).ok().map(|n| (0, n.min(blob.len()))),
+        "/payload" => {
+            Artifact::manifest_region_len(&blob).ok().map(|n| (n.min(blob.len()), blob.len()))
+        }
+        _ => None,
+    };
+    let Some((reg_lo, reg_hi)) = region else {
+        write_response(&mut stream, "404 Not Found", version, &[], b"unknown path");
+        return;
+    };
+    let reg_len = reg_hi - reg_lo;
+    match req.range {
+        None => write_response(&mut stream, "200 OK", version, &[], &blob[reg_lo..reg_hi]),
+        Some((start, end)) => {
+            if start > reg_len {
+                let hdr = format!("Content-Range: bytes */{reg_len}");
+                write_response(&mut stream, "416 Range Not Satisfiable", version, &[hdr], b"");
+                return;
+            }
+            // Inclusive HTTP end; clamp to the region. start == reg_len
+            // yields an empty 206 (a completed resume's no-op probe).
+            let stop = end.map(|e| (e + 1).min(reg_len)).unwrap_or(reg_len).max(start);
+            let hdr = format!("Content-Range: bytes {start}-{}/{reg_len}", stop.max(1) - 1);
+            write_response(
+                &mut stream,
+                "206 Partial Content",
+                version,
+                &[hdr],
+                &blob[reg_lo + start..reg_lo + stop],
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Minimal artifact bytes for hub tests: real encoding, tiny net.
+    fn tiny_blob(version: u64) -> Vec<u8> {
+        use crate::inference::EngineF32;
+        use crate::rng::Pcg32;
+        use crate::runtime::manifest::TensorSpec;
+        use crate::runtime::ParamSet;
+        let specs = vec![
+            TensorSpec { name: "q.w0".into(), shape: vec![3, 2] },
+            TensorSpec { name: "q.b0".into(), shape: vec![2] },
+        ];
+        let p = ParamSet::init(&specs, &mut Pcg32::new(9, 1));
+        let eng = EngineF32::from_params(&p).unwrap();
+        Artifact::from_engine_f32(&eng, version).to_bytes()
+    }
+
+    #[test]
+    fn hub_enforces_version_monotonicity() {
+        let hub = SnapshotHub::new();
+        assert_eq!(hub.version(), 0);
+        assert!(hub.latest().is_none());
+        assert_eq!(hub.publish_bytes(tiny_blob(3)).unwrap(), 3);
+        assert_eq!(hub.version(), 3);
+        // Same version again: stale. Lower version: stale.
+        for v in [3u64, 1] {
+            match hub.publish_bytes(tiny_blob(v)) {
+                Err(SnapshotError::Stale { requested, current }) => {
+                    assert_eq!((requested, current), (v, 3));
+                }
+                other => panic!("expected Stale, got {other:?}"),
+            }
+        }
+        assert_eq!(hub.publish_bytes(tiny_blob(4)).unwrap(), 4);
+        let (v, blob) = hub.latest().unwrap();
+        assert_eq!(v, 4);
+        assert_eq!(Artifact::peek_version(&blob).unwrap(), 4);
+    }
+
+    #[test]
+    fn hub_rejects_garbage_blobs() {
+        let hub = SnapshotHub::new();
+        assert!(matches!(hub.publish_bytes(b"nope".to_vec()), Err(SnapshotError::BadMagic)));
+        assert!(matches!(
+            hub.publish_bytes(b"QSN".to_vec()),
+            Err(SnapshotError::Truncated { .. })
+        ));
+        assert_eq!(hub.version(), 0, "rejected publishes must not bump the version");
+    }
+
+    /// One raw loopback request against a live server (the full client
+    /// behavior is covered in `client.rs` and the integration test).
+    fn raw_get(addr: std::net::SocketAddr, path: &str, headers: &str) -> (String, Vec<u8>) {
+        let mut s = TcpStream::connect(addr).unwrap();
+        write!(s, "GET {path} HTTP/1.1\r\nHost: x\r\n{headers}\r\n").unwrap();
+        let mut buf = Vec::new();
+        s.read_to_end(&mut buf).unwrap();
+        let split = buf.windows(4).position(|w| w == b"\r\n\r\n").unwrap();
+        let head = String::from_utf8_lossy(&buf[..split]).to_string();
+        (head, buf[split + 4..].to_vec())
+    }
+
+    #[test]
+    fn serves_version_manifest_and_ranged_payload_on_loopback() {
+        let hub = Arc::new(SnapshotHub::new());
+        let mut server = SnapshotServer::bind("127.0.0.1:0", Arc::clone(&hub)).unwrap();
+        let addr = server.addr();
+
+        // Empty hub: /version answers 0, blob endpoints 404.
+        let (head, body) = raw_get(addr, "/version", "");
+        assert!(head.starts_with("HTTP/1.1 200"), "{head}");
+        assert_eq!(body, b"0");
+        let (head, _) = raw_get(addr, "/snapshot", "");
+        assert!(head.starts_with("HTTP/1.1 404"), "{head}");
+
+        let blob = tiny_blob(7);
+        hub.publish_bytes(blob.clone()).unwrap();
+        let mlen = Artifact::manifest_region_len(&blob).unwrap();
+
+        let (head, body) = raw_get(addr, "/version", "");
+        assert!(head.contains("X-Snapshot-Version: 7"), "{head}");
+        assert_eq!(body, b"7");
+
+        let (head, body) = raw_get(addr, "/manifest", "");
+        assert!(head.starts_with("HTTP/1.1 200"), "{head}");
+        assert_eq!(body, blob[..mlen], "manifest region is header + manifest JSON");
+
+        let (head, body) = raw_get(addr, "/snapshot", "");
+        assert!(head.starts_with("HTTP/1.1 200"), "{head}");
+        assert_eq!(body, blob);
+
+        // Ranged payload read: bytes 2.. of the payload region.
+        let (head, body) = raw_get(addr, "/payload", "Range: bytes=2-\r\n");
+        assert!(head.starts_with("HTTP/1.1 206"), "{head}");
+        assert!(head.contains("Content-Range: bytes 2-"), "{head}");
+        assert_eq!(body, blob[mlen + 2..]);
+
+        // Bounded range, inclusive end.
+        let (head, body) = raw_get(addr, "/snapshot", "Range: bytes=1-3\r\n");
+        assert!(head.starts_with("HTTP/1.1 206"), "{head}");
+        assert_eq!(body, blob[1..4]);
+
+        // A completed download probing for more: empty 206.
+        let probe = format!("Range: bytes={}-\r\n", blob.len());
+        let (head, body) = raw_get(addr, "/snapshot", &probe);
+        assert!(head.starts_with("HTTP/1.1 206"), "{head}");
+        assert!(body.is_empty());
+
+        // Past the end: 416.
+        let over = format!("Range: bytes={}-\r\n", blob.len() + 1);
+        let (head, _) = raw_get(addr, "/snapshot", &over);
+        assert!(head.starts_with("HTTP/1.1 416"), "{head}");
+
+        // Version guard: matching passes, mismatched 409s.
+        let (head, _) = raw_get(addr, "/snapshot", "X-If-Version: 7\r\n");
+        assert!(head.starts_with("HTTP/1.1 200"), "{head}");
+        let (head, _) = raw_get(addr, "/snapshot", "X-If-Version: 6\r\n");
+        assert!(head.starts_with("HTTP/1.1 409"), "{head}");
+        assert!(head.contains("X-Snapshot-Version: 7"), "{head}");
+
+        // Unknown path and non-GET are refused, not crashed on.
+        let (head, _) = raw_get(addr, "/nope", "");
+        assert!(head.starts_with("HTTP/1.1 404"), "{head}");
+        let mut s = TcpStream::connect(addr).unwrap();
+        write!(s, "POST /snapshot HTTP/1.1\r\nHost: x\r\n\r\n").unwrap();
+        let mut buf = Vec::new();
+        s.read_to_end(&mut buf).unwrap();
+        assert!(buf.starts_with(b"HTTP/1.1 405"));
+
+        server.shutdown();
+        // Idempotent; Drop after shutdown is a no-op.
+        server.shutdown();
+    }
+}

@@ -6,11 +6,14 @@
 //! for both engines. (Hand-rolled randomized cases; no proptest
 //! offline.)
 
-use quarl::inference::{EngineConfig, EngineF32, EngineInt4, EngineInt8, EngineQuant, KernelKind};
+use quarl::inference::{
+    Engine, EngineConfig, EngineF32, EngineInt4, EngineInt8, EngineQuant, KernelKind,
+};
 use quarl::quant::QParams;
 use quarl::rng::Pcg32;
 use quarl::runtime::manifest::TensorSpec;
 use quarl::runtime::ParamSet;
+use quarl::snapshot::Artifact;
 use quarl::tensor::argmax;
 
 fn mlp_params(dims: &[usize], seed: u64) -> ParamSet {
@@ -594,6 +597,61 @@ fn int4_argmax_agreement_stays_usable() {
         agree * 100 >= trials * 75,
         "int4 argmax agreement {agree}/{trials} below 75%"
     );
+}
+
+#[test]
+fn snapshot_rebuilt_engines_keep_bit_parity_at_every_width() {
+    // The distribution guarantee feeding the same parity matrix: an
+    // engine serialized into a snapshot artifact (the deployment
+    // representation — packed codes + QParams, or raw fp32) and rebuilt
+    // from the blob must be bit-identical to the source on both forward
+    // paths, and the quantized widths must still match the fake-quant
+    // reference — i.e. shipping the policy over the wire adds exactly
+    // zero numeric drift.
+    let mut rng = Pcg32::new(901, 1);
+    let dims: &[usize] = &[7, 33, 19, 3];
+    let p = mlp_params(dims, 9100);
+    let (din, dout) = (dims[0], *dims.last().unwrap());
+    let batch = 6;
+    let xs: Vec<f32> = (0..batch * din).map(|_| rng.uniform_range(-2.0, 2.0)).collect();
+
+    // fp32: blob round trip reproduces the scalar-path bits.
+    let mut f32e = EngineF32::from_params(&p).unwrap();
+    let blob = Artifact::from_engine_f32(&f32e, 1).to_bytes();
+    let mut rebuilt = Artifact::from_bytes(&blob)
+        .unwrap()
+        .build_engine(EngineConfig::default())
+        .unwrap();
+    let mut want = vec![0.0f32; batch * dout];
+    f32e.forward_batch(&xs, batch, &mut want).unwrap();
+    let mut got = vec![0.0f32; batch * dout];
+    rebuilt.forward_batch(&xs, batch, &mut got).unwrap();
+    assert_eq!(want, got, "fp32 snapshot round trip");
+
+    // Every packed width: source engine, rebuilt engine, and the
+    // fake-quant reference all agree bit for bit.
+    for bits in 2u32..=8 {
+        let mut src = EngineQuant::from_params(&p, bits).unwrap();
+        let blob = Artifact::from_engine_quant(&src, bits as u64).to_bytes();
+        let mut rebuilt = Artifact::from_bytes(&blob)
+            .unwrap()
+            .build_engine(EngineConfig::default())
+            .unwrap();
+        let reference = fake_quant_reference(&p, &xs, batch, bits);
+        src.forward_batch(&xs, batch, &mut want).unwrap();
+        rebuilt.forward_batch(&xs, batch, &mut got).unwrap();
+        assert_eq!(want, got, "bits {bits}: source vs snapshot-rebuilt");
+        assert_eq!(reference, got, "bits {bits}: fake-quant reference vs rebuilt");
+        // scalar path too
+        let mut y_src = vec![0.0f32; dout];
+        let mut y_reb = vec![0.0f32; dout];
+        for r in 0..batch {
+            let x = &xs[r * din..(r + 1) * din];
+            src.forward(x, &mut y_src).unwrap();
+            rebuilt.forward(x, &mut y_reb).unwrap();
+            assert_eq!(y_src, y_reb, "bits {bits} scalar row {r}");
+        }
+    }
 }
 
 #[test]

@@ -35,6 +35,7 @@ EXPECTATIONS = {
     "BENCH_actorq": (["bench", "env", "window_ms", "rows"], "rows"),
     "BENCH_carbon": (["bench", "regions_billed", "cells", "mean_kg_co2eq_ratio"], "cells"),
     "BENCH_serve": (["bench", "mlp", "window_us", "max_batch", "rows"], "rows"),
+    "BENCH_snapshot": (["bench", "mlp", "rows"], "rows"),
 }
 
 ENGINE_ROW_KEYS = [
@@ -143,6 +144,68 @@ def check_serve_rows(path: str, doc: dict) -> list:
     return errors
 
 
+SNAPSHOT_ROW_KEYS = [
+    "engine",
+    "bits",
+    "publishes",
+    "publish_ms_mean",
+    "bytes_per_fetch",
+    "fetch_ms_p50",
+    "fetch_ms_p99",
+    "staleness_mean",
+    "staleness_max",
+    "versions",
+    "logit_mismatches",
+    "final_version",
+]
+
+
+def check_snapshot_rows(path: str, doc: dict) -> list:
+    """BENCH_snapshot.json row schema: every precision cell carries the
+    wire-distribution trajectory — strictly increasing snapshot versions
+    (one per publish), a positive artifact byte size, ordered fetch
+    percentiles (0 < p50 <= p99), and zero logit mismatches between the
+    hydrated and in-process engines (the bit-identical guarantee)."""
+    errors = []
+    rows = doc.get("rows")
+    if not isinstance(rows, list):
+        return [f"{path}: 'rows' is not a list"]
+    for i, row in enumerate(rows):
+        if not isinstance(row, dict):
+            errors.append(f"{path}: rows[{i}] is not an object")
+            continue
+        for k in SNAPSHOT_ROW_KEYS:
+            if k not in row:
+                errors.append(f"{path}: rows[{i}] missing key '{k}'")
+        versions = row.get("versions")
+        if not isinstance(versions, list) or not versions:
+            errors.append(f"{path}: rows[{i}] versions is not a non-empty list")
+        elif any(not isinstance(v, (int, float)) for v in versions):
+            errors.append(f"{path}: rows[{i}] versions contains non-numbers")
+        elif any(b <= a for a, b in zip(versions, versions[1:])):
+            errors.append(
+                f"{path}: rows[{i}] versions not strictly increasing: {versions}"
+            )
+        bytes_per_fetch = row.get("bytes_per_fetch")
+        if not (isinstance(bytes_per_fetch, (int, float)) and bytes_per_fetch > 0):
+            errors.append(
+                f"{path}: rows[{i}] bytes_per_fetch '{bytes_per_fetch}' is not positive"
+            )
+        p50, p99 = row.get("fetch_ms_p50"), row.get("fetch_ms_p99")
+        if not (isinstance(p50, (int, float)) and isinstance(p99, (int, float))):
+            errors.append(f"{path}: rows[{i}] fetch percentiles are not numbers")
+        elif not (0 < p50 <= p99):
+            errors.append(
+                f"{path}: rows[{i}] fetch percentiles out of order (p50 {p50}, p99 {p99})"
+            )
+        if row.get("logit_mismatches") != 0:
+            errors.append(
+                f"{path}: rows[{i}] logit_mismatches "
+                f"{row.get('logit_mismatches')!r} — hydrated engine diverged"
+            )
+    return errors
+
+
 def check(path: str) -> list:
     errors = []
     name = path.rsplit("/", 1)[-1].rsplit(".", 1)[0]
@@ -168,12 +231,79 @@ def check(path: str) -> list:
         errors.extend(check_engine_rows(path, doc))
     if name == "BENCH_serve" and not errors:
         errors.extend(check_serve_rows(path, doc))
+    if name == "BENCH_snapshot" and not errors:
+        errors.extend(check_snapshot_rows(path, doc))
     return errors
 
 
+def self_test() -> int:
+    """Exercise the snapshot checker against synthetic good/bad docs so
+    CI catches a broken checker, not just broken reports."""
+    import copy
+    import os
+    import tempfile
+
+    good = {
+        "bench": "snapshot",
+        "mlp": "64x256x256x8",
+        "rows": [
+            {
+                "engine": "int4",
+                "bits": 4,
+                "publishes": 3,
+                "publish_ms_mean": 1.5,
+                "bytes_per_fetch": 44000,
+                "fetch_ms_p50": 0.4,
+                "fetch_ms_p99": 0.9,
+                "staleness_mean": 0.0,
+                "staleness_max": 0,
+                "versions": [1, 2, 3],
+                "logit_mismatches": 0,
+                "final_version": 3,
+            }
+        ],
+    }
+    breakages = [
+        ("versions go backwards", lambda d: d["rows"][0].update(versions=[1, 3, 2])),
+        ("versions repeat", lambda d: d["rows"][0].update(versions=[1, 2, 2])),
+        ("zero fetch bytes", lambda d: d["rows"][0].update(bytes_per_fetch=0)),
+        ("p50 above p99", lambda d: d["rows"][0].update(fetch_ms_p50=2.0)),
+        ("nonzero mismatches", lambda d: d["rows"][0].update(logit_mismatches=1)),
+        ("missing key", lambda d: d["rows"][0].pop("staleness_max")),
+        ("empty rows", lambda d: d.update(rows=[])),
+    ]
+    failures = []
+    with tempfile.TemporaryDirectory() as tmp:
+        path = os.path.join(tmp, "BENCH_snapshot.json")
+
+        def write_and_check(doc):
+            with open(path, "w", encoding="utf-8") as f:
+                json.dump(doc, f)
+            return check(path)
+
+        errs = write_and_check(good)
+        if errs:
+            failures.append(f"pristine doc rejected: {errs}")
+        for label, mutate in breakages:
+            doc = copy.deepcopy(good)
+            mutate(doc)
+            if not write_and_check(doc):
+                failures.append(f"breakage not caught: {label}")
+    for f in failures:
+        print(f"self-test failure: {f}", file=sys.stderr)
+    if not failures:
+        print(f"ok: self-test ({len(breakages)} breakages caught)")
+    return 1 if failures else 0
+
+
 def main(argv: list) -> int:
+    if argv == ["--self-test"]:
+        return self_test()
     if not argv:
-        print("usage: check_bench_reports.py BENCH_*.json...", file=sys.stderr)
+        print(
+            "usage: check_bench_reports.py BENCH_*.json... | --self-test",
+            file=sys.stderr,
+        )
         return 1
     all_errors = []
     for path in argv:
