@@ -16,6 +16,7 @@ use crate::algos::common::EpsSchedule;
 use crate::envs::api::Action;
 use crate::envs::vec_env::VecEnv;
 use crate::error::Result;
+use crate::faults::FaultPlan;
 use crate::inference::{EngineConfig, EngineF32, EngineQuant};
 use crate::rng::Pcg32;
 use crate::tensor::argmax;
@@ -181,6 +182,10 @@ pub(crate) struct ActorSetup {
     /// Optional energy meter; collection sweeps are attributed to
     /// [`Component::Actors`].
     pub meter: Option<Arc<EnergyMeter>>,
+    /// Optional deterministic fault script; a scripted kill makes the
+    /// thread exit mid-run exactly like a crash, so the pool supervisor
+    /// sees a finished handle and exercises the real respawn path.
+    pub faults: Option<Arc<FaultPlan>>,
 }
 
 /// The actor thread body: step envs, flush transition batches, poll for
@@ -211,6 +216,14 @@ pub(crate) fn run_actor(
     let meter = setup.meter.take();
 
     while !stop.load(Ordering::Relaxed) {
+        // Injected crash: drop everything on the floor (pending
+        // transitions included) and exit, exactly like a panic would.
+        if let Some(plan) = &setup.faults {
+            if plan.actor_should_die(setup.id, stats.env_steps) {
+                break;
+            }
+        }
+
         // Refresh the local policy copy when the learner has published.
         if broadcast.version() != version {
             let snap = broadcast.latest();

@@ -22,6 +22,7 @@ use std::sync::{Arc, Mutex};
 use crate::actorq::actor::ActorEngine;
 use crate::actorq::Precision;
 use crate::error::Result;
+use crate::faults::{FaultPlan, PublishAction};
 use crate::inference::EngineConfig;
 use crate::runtime::ParamSet;
 use crate::snapshot::{Artifact, SnapshotError, SnapshotHub};
@@ -45,6 +46,13 @@ pub struct ParamBroadcast {
     /// publish also encodes the snapshot into a wire artifact for
     /// out-of-process actors.
     hub: Mutex<Option<Arc<SnapshotHub>>>,
+    /// Hub pushes that failed with a non-`Stale` error and were degraded
+    /// to the in-process transport (surfaced in
+    /// [`crate::actorq::ActorQLog::hub_publish_failures`]).
+    hub_failures: AtomicU64,
+    /// Optional deterministic fault script for the hub path
+    /// (chaos tests, `exp faults`).
+    faults: Mutex<Option<Arc<FaultPlan>>>,
 }
 
 /// Encode a published snapshot as a wire artifact (the deployment
@@ -76,14 +84,41 @@ impl ParamBroadcast {
         precision: Precision,
         engine_cfg: EngineConfig,
     ) -> Result<ParamBroadcast> {
+        ParamBroadcast::with_config_resumed(params, precision, engine_cfg, 0)
+    }
+
+    /// [`ParamBroadcast::with_config`] with a non-zero starting version:
+    /// the checkpoint-resume path rebuilds the channel exactly where a
+    /// crashed learner left it, so the `(train_steps + 1) % broadcast_every`
+    /// publish cadence and the wire version sequence continue unbroken.
+    pub fn with_config_resumed(
+        params: &ParamSet,
+        precision: Precision,
+        engine_cfg: EngineConfig,
+        initial_version: u64,
+    ) -> Result<ParamBroadcast> {
         let engine = ActorEngine::from_params_cfg(params, precision, engine_cfg)?;
         Ok(ParamBroadcast {
             precision,
             engine_cfg,
-            slot: Mutex::new(Arc::new(Snapshot { version: 0, engine })),
-            version: AtomicU64::new(0),
+            slot: Mutex::new(Arc::new(Snapshot { version: initial_version, engine })),
+            version: AtomicU64::new(initial_version),
             hub: Mutex::new(None),
+            hub_failures: AtomicU64::new(0),
+            faults: Mutex::new(None),
         })
+    }
+
+    /// Install a deterministic fault script for the hub path. Publish
+    /// faults (drop/delay/corrupt/fail) only fire while a hub is
+    /// attached — the in-process transport is never faulted.
+    pub fn set_faults(&self, plan: Arc<FaultPlan>) {
+        *self.faults.lock().expect("faults slot poisoned") = Some(plan);
+    }
+
+    /// Hub pushes degraded to the in-process transport so far.
+    pub fn hub_publish_failures(&self) -> u64 {
+        self.hub_failures.load(Ordering::Relaxed)
     }
 
     /// Attach a [`SnapshotHub`]: from now on every publish also encodes
@@ -95,6 +130,11 @@ impl ParamBroadcast {
     /// signal by polling `/version` = 0 — and the hub's own version
     /// monotonicity check makes the double-transport publish safe under
     /// concurrent publishers. Returns the version pushed, if any.
+    ///
+    /// A failed initial push **degrades, not aborts**: the hub is still
+    /// attached (the next publish retries the wire), the failure is
+    /// counted in [`ParamBroadcast::hub_publish_failures`], and the
+    /// in-process transport keeps the actors fed either way.
     pub fn attach_hub(&self, hub: Arc<SnapshotHub>) -> Result<Option<u64>> {
         let snap = self.latest();
         let pushed = if snap.version > 0 {
@@ -103,7 +143,15 @@ impl ParamBroadcast {
                 // Someone already published this or a newer version to
                 // the hub; fine, the hub is at least as fresh as us.
                 Err(SnapshotError::Stale { .. }) => None,
-                Err(e) => return Err(e.into()),
+                Err(e) => {
+                    self.hub_failures.fetch_add(1, Ordering::Relaxed);
+                    eprintln!(
+                        "[actorq] initial hub push of v{} failed ({e}); \
+                         continuing on the in-process transport",
+                        snap.version
+                    );
+                    None
+                }
             }
         } else {
             None
@@ -136,11 +184,50 @@ impl ParamBroadcast {
         // concurrent publisher may have pushed a newer version between
         // our swap and here — the hub's Stale rejection is the correct
         // outcome (never roll the served version back), not an error.
+        // Any *other* wire failure degrades to the in-process transport:
+        // the publish already succeeded for local actors, and the next
+        // publish gives the wire a fresh chance to catch up.
         let hub = self.hub.lock().expect("hub slot poisoned").clone();
         if let Some(hub) = hub {
-            match hub.publish(&artifact_for(&snap)) {
+            let plan = self.faults.lock().expect("faults slot poisoned").clone();
+            let action = plan.as_ref().map_or(PublishAction::Deliver, |p| p.on_publish());
+            let result = match action {
+                // Lost on the wire: the hub never sees this version, and
+                // clients catch up when the next publish lands.
+                PublishAction::Drop => Ok(snap.version),
+                PublishAction::Delay(d) => {
+                    std::thread::sleep(d);
+                    hub.publish(&artifact_for(&snap))
+                }
+                PublishAction::Corrupt => {
+                    let mut bytes = artifact_for(&snap).to_bytes();
+                    let lo = Artifact::manifest_region_len(&bytes)
+                        .expect("freshly encoded artifact has a valid header");
+                    let off = plan
+                        .as_ref()
+                        .expect("corrupt action only comes from a plan")
+                        .corrupt_offset(snap.version, lo, bytes.len());
+                    bytes[off] ^= 0xFF;
+                    // The hub stores header-peeked bytes verbatim, so the
+                    // damage is only caught by a *client's* full-checksum
+                    // verification — exactly the fatal-fast path under test.
+                    hub.publish_bytes(bytes)
+                }
+                PublishAction::Fail => {
+                    Err(SnapshotError::Io("injected hub transport failure".into()))
+                }
+                PublishAction::Deliver => hub.publish(&artifact_for(&snap)),
+            };
+            match result {
                 Ok(_) | Err(SnapshotError::Stale { .. }) => {}
-                Err(e) => return Err(e.into()),
+                Err(e) => {
+                    self.hub_failures.fetch_add(1, Ordering::Relaxed);
+                    eprintln!(
+                        "[actorq] hub publish of v{} failed ({e}); \
+                         continuing on the in-process transport",
+                        snap.version
+                    );
+                }
             }
         }
         Ok(snap.version)
@@ -277,6 +364,77 @@ mod tests {
         // Re-attaching the same hub at the same version is a benign
         // no-op (Stale swallowed), not an error.
         assert_eq!(bc.attach_hub(Arc::clone(&hub)).unwrap(), None);
+    }
+
+    #[test]
+    fn resumed_broadcast_continues_the_version_sequence() {
+        let p = mlp_params(&[4, 8, 2], 5);
+        let bc = ParamBroadcast::with_config_resumed(
+            &p,
+            Precision::Int(8),
+            EngineConfig::default(),
+            17,
+        )
+        .unwrap();
+        assert_eq!(bc.version(), 17);
+        assert_eq!(bc.latest().version, 17);
+        assert_eq!(bc.publish(&p).unwrap(), 18, "resume must not restart at 1");
+        // A late hub attach pushes the resumed version, so remote actors
+        // rejoin at the right place too.
+        let hub = Arc::new(SnapshotHub::new());
+        assert_eq!(bc.attach_hub(Arc::clone(&hub)).unwrap(), Some(18));
+        assert_eq!(hub.version(), 18);
+    }
+
+    #[test]
+    fn injected_hub_failure_degrades_instead_of_failing_the_publish() {
+        use crate::faults::FaultPlan;
+        let p = mlp_params(&[4, 8, 2], 7);
+        let bc = ParamBroadcast::new(&p, Precision::Int(4)).unwrap();
+        let hub = Arc::new(SnapshotHub::new());
+        bc.attach_hub(Arc::clone(&hub)).unwrap();
+        // Publish 1 fails on the wire, publish 2 is dropped silently,
+        // publish 3 goes through. The learner-side publish must succeed
+        // every time; only the hub's view lags.
+        bc.set_faults(Arc::new(FaultPlan::new(11).fail_publish(1).drop_publish(2)));
+        assert_eq!(bc.publish(&p).unwrap(), 1);
+        assert_eq!(bc.hub_publish_failures(), 1, "wire failure counted");
+        assert_eq!(hub.version(), 0, "failed push never reached the hub");
+        assert_eq!(bc.publish(&p).unwrap(), 2);
+        assert_eq!(bc.hub_publish_failures(), 1, "a drop is a loss, not a failure");
+        assert_eq!(hub.version(), 0);
+        assert_eq!(bc.publish(&p).unwrap(), 3);
+        assert_eq!(hub.version(), 3, "healthy publish heals the hub");
+        // In-process actors never noticed any of it.
+        assert_eq!(bc.latest().version, 3);
+    }
+
+    #[test]
+    fn corrupted_publish_is_stored_but_fails_client_verification() {
+        use crate::faults::FaultPlan;
+        let p = mlp_params(&[4, 8, 2], 9);
+        let bc = ParamBroadcast::new(&p, Precision::Int(8)).unwrap();
+        let hub = Arc::new(SnapshotHub::new());
+        bc.attach_hub(Arc::clone(&hub)).unwrap();
+        bc.set_faults(Arc::new(FaultPlan::new(13).corrupt_publish(1)));
+        assert_eq!(bc.publish(&p).unwrap(), 1);
+        let (v, blob) = hub.latest().expect("hub stores the header-valid corrupted blob");
+        assert_eq!(v, 1);
+        let err = Artifact::from_bytes(&blob).unwrap_err();
+        assert!(
+            matches!(
+                err,
+                SnapshotError::ChecksumMismatch { .. }
+                    | SnapshotError::Manifest(_)
+                    | SnapshotError::Truncated { .. }
+            ),
+            "full verification must reject the flipped byte, got {err}"
+        );
+        // The next clean publish replaces the damaged version.
+        assert_eq!(bc.publish(&p).unwrap(), 2);
+        let (v2, blob2) = hub.latest().unwrap();
+        assert_eq!(v2, 2);
+        assert!(Artifact::from_bytes(&blob2).is_ok(), "healed by the next publish");
     }
 
     #[test]

@@ -1,0 +1,485 @@
+//! Learner checkpoints: the crash-recovery half of ROADMAP's
+//! crash-safe ActorQ. A checkpoint captures everything the
+//! [`crate::actorq::LearnerHarness`] needs to resume a killed run and
+//! converge to the **bit-identical** final engine: the fp32 master
+//! [`ParamSet`], the pacer's train-step count, the env-step /
+//! broadcast / version high-water marks, the replay push count, and
+//! the learner RNG state.
+//!
+//! The wire format deliberately mirrors the QSNP snapshot artifact
+//! ([`crate::snapshot::artifact`]) — same header shape, same CRC-32
+//! discipline, same atomic temp-file + rename writes — under a
+//! distinct magic so a checkpoint can never be mistaken for a
+//! published snapshot (or vice versa):
+//!
+//! ```text
+//! offset  size  field
+//!      0     4  magic "QCKP"
+//!      4     4  u32 format version (1)
+//!      8     8  u64 train_steps (must equal the manifest's)
+//!     16     4  u32 manifest length M
+//!     20     4  u32 CRC-32 of the manifest bytes
+//!     24     M  manifest (JSON: counters, RNG state, tensor names /
+//!               shapes / section offsets+lengths+CRCs, payload_len)
+//!  24+M     P  payload: each tensor's f32 data little-endian, tiled
+//!               contiguously in manifest order
+//! ```
+//!
+//! [`Checkpoint::from_bytes`] verifies every region before any state
+//! is constructed — magic, format, header-vs-manifest `train_steps`
+//! agreement, the manifest CRC, exact payload length, contiguous
+//! section tiling, per-section CRCs, and shape/length arithmetic — so
+//! any single corrupted or truncated byte surfaces as a typed
+//! [`SnapshotError`] (pinned exhaustively by
+//! `rust/tests/faults_chaos.rs`).
+//!
+//! One subtlety: the RNG state is a pair of arbitrary `u64`s, and the
+//! manifest JSON numbers are `f64` (53-bit mantissa). The state is
+//! therefore encoded as *decimal strings* in the manifest and parsed
+//! back with `u64::from_str` — a lossless hop where `Json::Num` would
+//! silently round.
+
+use std::collections::BTreeMap;
+use std::io::Write as _;
+use std::path::Path;
+use std::str::FromStr;
+
+use crate::rng::Pcg32;
+use crate::runtime::json::{self, Json};
+use crate::runtime::ParamSet;
+use crate::snapshot::checksum::crc32;
+use crate::snapshot::SnapshotError;
+use crate::tensor::Tensor;
+
+/// File magic: "QCKP" (checkpoint, not snapshot).
+pub const MAGIC: [u8; 4] = *b"QCKP";
+
+/// Format version this build writes and reads.
+pub const FORMAT: u32 = 1;
+
+/// Fixed header size: magic, format, train_steps, manifest length,
+/// manifest CRC — the same 24-byte shape as the QSNP header.
+pub const HEADER_LEN: usize = 24;
+
+/// When the harness writes checkpoints.
+#[derive(Debug, Clone)]
+pub struct CheckpointPolicy {
+    /// Destination file; written atomically (temp sibling + rename),
+    /// each write replacing the previous checkpoint.
+    pub path: std::path::PathBuf,
+    /// Write after every this-many train steps (>= 1).
+    pub every_trains: usize,
+}
+
+/// The resumable position a checkpoint encodes — what
+/// [`crate::actorq::HarnessConfig::resume`] feeds back into
+/// [`crate::actorq::LearnerHarness::spawn`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ResumePoint {
+    /// Train-program calls completed (pacer fast-forward).
+    pub train_steps: usize,
+    /// Env steps consumed toward the budget at checkpoint time.
+    pub env_steps: usize,
+    /// Broadcasts published so far.
+    pub broadcasts: usize,
+    /// Last published param version (the broadcast resumes from here
+    /// so actors never see the version counter run backwards).
+    pub version: u64,
+    /// Transitions pushed into the replay before the checkpoint.
+    pub replay_pushed: usize,
+}
+
+/// A full learner checkpoint: the resume point plus the fp32 master
+/// parameters and the learner RNG state.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Checkpoint {
+    pub train_steps: u64,
+    pub env_steps: usize,
+    pub broadcasts: usize,
+    pub version: u64,
+    pub replay_pushed: usize,
+    /// Learner RNG `(state, inc)` via [`Pcg32::state_parts`].
+    pub rng: (u64, u64),
+    pub params: ParamSet,
+}
+
+/// One checksummed payload section (byte range in payload coordinates).
+#[derive(Debug, Clone, Copy)]
+struct Section {
+    off: usize,
+    len: usize,
+    crc: u32,
+}
+
+fn f32s_to_le(xs: &[f32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(xs.len() * 4);
+    for &x in xs {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+    out
+}
+
+fn le_to_f32s(bytes: &[u8]) -> Vec<f32> {
+    bytes.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().expect("4-byte chunk"))).collect()
+}
+
+impl Checkpoint {
+    /// The resume position this checkpoint encodes.
+    pub fn resume_point(&self) -> ResumePoint {
+        ResumePoint {
+            train_steps: self.train_steps as usize,
+            env_steps: self.env_steps,
+            broadcasts: self.broadcasts,
+            version: self.version,
+            replay_pushed: self.replay_pushed,
+        }
+    }
+
+    /// Rebuild the learner RNG at its checkpointed position.
+    pub fn rng(&self) -> Pcg32 {
+        Pcg32::from_state(self.rng.0, self.rng.1)
+    }
+
+    fn manifest_json(&self, sections: &[Section], payload_len: usize) -> Vec<u8> {
+        let mut m = BTreeMap::new();
+        m.insert("format".into(), Json::Num(FORMAT as f64));
+        m.insert("train_steps".into(), Json::Num(self.train_steps as f64));
+        m.insert("env_steps".into(), Json::Num(self.env_steps as f64));
+        m.insert("broadcasts".into(), Json::Num(self.broadcasts as f64));
+        m.insert("version".into(), Json::Num(self.version as f64));
+        m.insert("replay_pushed".into(), Json::Num(self.replay_pushed as f64));
+        // u64 -> f64 is lossy past 2^53; ship the RNG words as decimal
+        // strings so the round trip is exact for any state.
+        m.insert("rng_state".into(), Json::Str(self.rng.0.to_string()));
+        m.insert("rng_inc".into(), Json::Str(self.rng.1.to_string()));
+        m.insert("payload_len".into(), Json::Num(payload_len as f64));
+        let tensors: Vec<Json> = self
+            .params
+            .names
+            .iter()
+            .zip(self.params.tensors.iter().zip(sections))
+            .map(|(name, (t, s))| {
+                let mut o = BTreeMap::new();
+                o.insert("name".into(), Json::Str(name.clone()));
+                o.insert(
+                    "shape".into(),
+                    Json::Arr(t.shape().iter().map(|&d| Json::Num(d as f64)).collect()),
+                );
+                o.insert("off".into(), Json::Num(s.off as f64));
+                o.insert("len".into(), Json::Num(s.len as f64));
+                o.insert("crc".into(), Json::Num(s.crc as f64));
+                Json::Obj(o)
+            })
+            .collect();
+        m.insert("tensors".into(), Json::Arr(tensors));
+        json::to_string(&Json::Obj(m)).into_bytes()
+    }
+
+    /// Serialize to the single verifiable blob.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut payload = Vec::new();
+        let mut sections = Vec::with_capacity(self.params.tensors.len());
+        for t in &self.params.tensors {
+            let bytes = f32s_to_le(t.data());
+            let off = payload.len();
+            sections.push(Section { off, len: bytes.len(), crc: crc32(&bytes) });
+            payload.extend_from_slice(&bytes);
+        }
+        let manifest = self.manifest_json(&sections, payload.len());
+        let mut out = Vec::with_capacity(HEADER_LEN + manifest.len() + payload.len());
+        out.extend_from_slice(&MAGIC);
+        out.extend_from_slice(&FORMAT.to_le_bytes());
+        out.extend_from_slice(&self.train_steps.to_le_bytes());
+        out.extend_from_slice(&(manifest.len() as u32).to_le_bytes());
+        out.extend_from_slice(&crc32(&manifest).to_le_bytes());
+        out.extend_from_slice(&manifest);
+        out.extend_from_slice(&payload);
+        out
+    }
+
+    /// Check only the fixed header and return the train-step count.
+    pub fn peek_train_steps(bytes: &[u8]) -> Result<u64, SnapshotError> {
+        if bytes.len() >= 4 && bytes[..4] != MAGIC {
+            return Err(SnapshotError::BadMagic);
+        }
+        if bytes.len() < HEADER_LEN {
+            return Err(SnapshotError::Truncated { need: HEADER_LEN, got: bytes.len() });
+        }
+        let format = u32::from_le_bytes(bytes[4..8].try_into().expect("4 bytes"));
+        if format != FORMAT {
+            return Err(SnapshotError::UnsupportedFormat(format));
+        }
+        Ok(u64::from_le_bytes(bytes[8..16].try_into().expect("8 bytes")))
+    }
+
+    /// Decode and **fully verify** a checkpoint blob. Every check lands
+    /// before any state is constructed: magic/format, manifest CRC,
+    /// header-vs-manifest train_steps agreement, exact payload length,
+    /// contiguous section tiling, per-section CRCs, and shape/length
+    /// arithmetic. A resume never starts from damaged state.
+    pub fn from_bytes(bytes: &[u8]) -> Result<Checkpoint, SnapshotError> {
+        let header_trains = Self::peek_train_steps(bytes)?;
+        let mlen = u32::from_le_bytes(bytes[16..20].try_into().expect("4 bytes")) as usize;
+        let mcrc = u32::from_le_bytes(bytes[20..24].try_into().expect("4 bytes"));
+        let need = HEADER_LEN
+            .checked_add(mlen)
+            .ok_or_else(|| SnapshotError::Manifest("manifest length overflows".into()))?;
+        if bytes.len() < need {
+            return Err(SnapshotError::Truncated { need, got: bytes.len() });
+        }
+        let manifest = &bytes[HEADER_LEN..need];
+        let got_crc = crc32(manifest);
+        if got_crc != mcrc {
+            return Err(SnapshotError::ChecksumMismatch {
+                section: "manifest".into(),
+                want: mcrc,
+                got: got_crc,
+            });
+        }
+        let text = std::str::from_utf8(manifest)
+            .map_err(|_| SnapshotError::Manifest("manifest is not utf-8".into()))?;
+        let m = Json::parse(text).map_err(|e| SnapshotError::Manifest(e.to_string()))?;
+        let man = |e: crate::Error| SnapshotError::Manifest(e.to_string());
+
+        let format = m.get("format").and_then(Json::as_usize).map_err(man)?;
+        if format != FORMAT as usize {
+            return Err(SnapshotError::UnsupportedFormat(format as u32));
+        }
+        let train_steps = m.get("train_steps").and_then(Json::as_f64).map_err(man)? as u64;
+        if train_steps != header_trains {
+            return Err(SnapshotError::VersionMismatch {
+                header: header_trains,
+                manifest: train_steps,
+            });
+        }
+        let env_steps = m.get("env_steps").and_then(Json::as_usize).map_err(man)?;
+        let broadcasts = m.get("broadcasts").and_then(Json::as_usize).map_err(man)?;
+        let version = m.get("version").and_then(Json::as_f64).map_err(man)? as u64;
+        let replay_pushed = m.get("replay_pushed").and_then(Json::as_usize).map_err(man)?;
+        let parse_u64 = |key: &str| -> Result<u64, SnapshotError> {
+            let s = m.get(key).and_then(Json::as_str).map_err(man)?;
+            u64::from_str(s)
+                .map_err(|_| SnapshotError::Manifest(format!("{key}: '{s}' is not a u64")))
+        };
+        let rng = (parse_u64("rng_state")?, parse_u64("rng_inc")?);
+        let payload_len = m.get("payload_len").and_then(Json::as_usize).map_err(man)?;
+        let got_payload = bytes.len() - need;
+        if got_payload < payload_len {
+            return Err(SnapshotError::Truncated { need: need + payload_len, got: bytes.len() });
+        }
+        if got_payload > payload_len {
+            return Err(SnapshotError::Manifest(format!(
+                "{} trailing bytes after the declared payload",
+                got_payload - payload_len
+            )));
+        }
+        let payload = &bytes[need..];
+
+        let tensor_vals = m.get("tensors").and_then(Json::as_arr).map_err(man)?;
+        if tensor_vals.is_empty() {
+            return Err(SnapshotError::Manifest("no tensors".into()));
+        }
+        let mut names = Vec::with_capacity(tensor_vals.len());
+        let mut tensors = Vec::with_capacity(tensor_vals.len());
+        // Sections must tile the payload contiguously in declaration
+        // order — streamable, no gaps, no overlaps.
+        let mut cursor = 0usize;
+        for (i, tv) in tensor_vals.iter().enumerate() {
+            let name = tv.get("name").and_then(Json::as_str).map_err(man)?;
+            let shape_vals = tv.get("shape").and_then(Json::as_arr).map_err(man)?;
+            let mut shape = Vec::with_capacity(shape_vals.len());
+            let mut numel = 1usize;
+            for sv in shape_vals {
+                let d = sv.as_usize().map_err(man)?;
+                if d == 0 {
+                    return Err(SnapshotError::Manifest(format!("tensor {i}: zero dimension")));
+                }
+                numel = numel
+                    .checked_mul(d)
+                    .ok_or_else(|| SnapshotError::Manifest(format!("tensor {i}: shape overflows")))?;
+                shape.push(d);
+            }
+            let off = tv.get("off").and_then(Json::as_usize).map_err(man)?;
+            let len = tv.get("len").and_then(Json::as_usize).map_err(man)?;
+            let crc = tv.get("crc").and_then(Json::as_f64).map_err(man)? as u32;
+            if off != cursor {
+                return Err(SnapshotError::Manifest(format!(
+                    "tensor {i}: offset {off} breaks contiguous tiling (expected {cursor})"
+                )));
+            }
+            if len != numel * 4 {
+                return Err(SnapshotError::Manifest(format!(
+                    "tensor {i}: section {len} bytes, shape needs {}",
+                    numel * 4
+                )));
+            }
+            let end = off.checked_add(len).filter(|&e| e <= payload_len).ok_or_else(|| {
+                SnapshotError::Manifest(format!(
+                    "tensor {i}: section [{off}, +{len}) exceeds payload {payload_len}"
+                ))
+            })?;
+            let got = crc32(&payload[off..end]);
+            if got != crc {
+                return Err(SnapshotError::ChecksumMismatch {
+                    section: format!("tensor {i} ({name})"),
+                    want: crc,
+                    got,
+                });
+            }
+            cursor = end;
+            let data = le_to_f32s(&payload[off..end]);
+            let t = Tensor::new(shape, data).map_err(|e| SnapshotError::Manifest(e.to_string()))?;
+            names.push(name.to_string());
+            tensors.push(t);
+        }
+        if cursor != payload_len {
+            return Err(SnapshotError::Manifest(format!(
+                "sections tile {cursor} bytes of a {payload_len}-byte payload"
+            )));
+        }
+        Ok(Checkpoint {
+            train_steps,
+            env_steps,
+            broadcasts,
+            version,
+            replay_pushed,
+            rng,
+            params: ParamSet { names, tensors },
+        })
+    }
+
+    /// Write the blob to `path` atomically (temp sibling + rename): a
+    /// crash mid-write leaves the previous checkpoint intact, never a
+    /// torn file.
+    pub fn write_file(&self, path: &Path) -> Result<(), SnapshotError> {
+        let bytes = self.to_bytes();
+        let mut os = path.as_os_str().to_os_string();
+        os.push(".tmp");
+        let tmp = std::path::PathBuf::from(os);
+        let io = |e: std::io::Error| SnapshotError::Io(format!("{}: {e}", path.display()));
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir).map_err(io)?;
+            }
+        }
+        let mut f = std::fs::File::create(&tmp).map_err(io)?;
+        f.write_all(&bytes).map_err(io)?;
+        f.sync_all().map_err(io)?;
+        drop(f);
+        std::fs::rename(&tmp, path).map_err(io)?;
+        Ok(())
+    }
+
+    /// Read and fully verify a checkpoint from disk.
+    pub fn read_file(path: &Path) -> Result<Checkpoint, SnapshotError> {
+        let bytes = std::fs::read(path)
+            .map_err(|e| SnapshotError::Io(format!("{}: {e}", path.display())))?;
+        Checkpoint::from_bytes(&bytes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::TensorSpec;
+
+    fn sample(seed: u64) -> Checkpoint {
+        let specs = vec![
+            TensorSpec { name: "q.w0".into(), shape: vec![4, 16] },
+            TensorSpec { name: "q.b0".into(), shape: vec![16] },
+            TensorSpec { name: "q.w1".into(), shape: vec![16, 2] },
+            TensorSpec { name: "q.b1".into(), shape: vec![2] },
+        ];
+        let mut rng = Pcg32::new(seed, 1);
+        let params = ParamSet::init(&specs, &mut rng);
+        // Advance the RNG so the checkpointed state is mid-stream, not
+        // a fresh seed.
+        for _ in 0..53 {
+            rng.next_u32();
+        }
+        Checkpoint {
+            train_steps: 417,
+            env_steps: 850,
+            broadcasts: 41,
+            version: 41,
+            replay_pushed: 912,
+            rng: rng.state_parts(),
+            params,
+        }
+    }
+
+    #[test]
+    fn blob_roundtrips_bit_exactly() {
+        let ckpt = sample(11);
+        let bytes = ckpt.to_bytes();
+        assert_eq!(Checkpoint::peek_train_steps(&bytes).unwrap(), 417);
+        let back = Checkpoint::from_bytes(&bytes).unwrap();
+        assert_eq!(back.train_steps, 417);
+        assert_eq!(back.env_steps, 850);
+        assert_eq!(back.broadcasts, 41);
+        assert_eq!(back.version, 41);
+        assert_eq!(back.replay_pushed, 912);
+        assert_eq!(back.rng, ckpt.rng);
+        assert_eq!(back.params.names, ckpt.params.names);
+        for (a, b) in back.params.tensors.iter().zip(&ckpt.params.tensors) {
+            assert_eq!(a.shape(), b.shape());
+            assert_eq!(a.data(), b.data(), "tensor data is bit-identical");
+        }
+        assert_eq!(back.to_bytes(), bytes, "re-encode is stable");
+        // The restored RNG continues the exact sequence.
+        let mut a = ckpt.rng();
+        let mut b = back.rng();
+        for _ in 0..64 {
+            assert_eq!(a.next_u32(), b.next_u32());
+        }
+    }
+
+    #[test]
+    fn rng_state_above_2_pow_53_survives_the_json_hop() {
+        // A state that f64 cannot represent exactly: the decimal-string
+        // encoding must still round-trip it bit for bit.
+        let mut ckpt = sample(3);
+        ckpt.rng = (u64::MAX - 12345, (u64::MAX << 1) | 1);
+        let back = Checkpoint::from_bytes(&ckpt.to_bytes()).unwrap();
+        assert_eq!(back.rng, ckpt.rng);
+    }
+
+    #[test]
+    fn header_manifest_train_step_skew_is_typed() {
+        let mut bytes = sample(5).to_bytes();
+        bytes[8] = bytes[8].wrapping_add(1);
+        match Checkpoint::from_bytes(&bytes) {
+            Err(SnapshotError::VersionMismatch { header, manifest }) => {
+                assert_eq!(manifest, 417);
+                assert_ne!(header, 417);
+            }
+            other => panic!("expected VersionMismatch, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn snapshot_magic_is_rejected() {
+        // A QSNP artifact must never decode as a checkpoint.
+        let mut bytes = sample(7).to_bytes();
+        bytes[..4].copy_from_slice(b"QSNP");
+        assert!(matches!(Checkpoint::from_bytes(&bytes), Err(SnapshotError::BadMagic)));
+    }
+
+    #[test]
+    fn file_roundtrip_is_atomic_and_replaces_prior() {
+        let dir = std::env::temp_dir().join("quarl_actorq_checkpoint_test");
+        let path = dir.join("learner.qckp");
+        let first = sample(9);
+        first.write_file(&path).unwrap();
+        let mut second = sample(9);
+        second.train_steps = 1000;
+        second.write_file(&path).unwrap();
+        let back = Checkpoint::read_file(&path).unwrap();
+        assert_eq!(back.train_steps, 1000, "second write replaced the first");
+        assert!(
+            !path.with_extension("qckp.tmp").exists(),
+            "temp sibling is renamed away"
+        );
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -10,9 +10,11 @@ use std::time::{Duration, Instant};
 
 use crate::actorq::actor::{ActorStats, Exploration};
 use crate::actorq::broadcast::ParamBroadcast;
+use crate::actorq::checkpoint::{Checkpoint, CheckpointPolicy, ResumePoint};
 use crate::actorq::pool::{ActorPool, PoolConfig};
 use crate::actorq::{ActorQConfig, OwnedTransition};
 use crate::error::Result;
+use crate::faults::FaultPlan;
 use crate::runtime::ParamSet;
 use crate::sustain::{EnergyMeter, MeterSnapshot};
 
@@ -39,6 +41,12 @@ impl Pacer {
     /// Record one completed train step.
     pub fn record(&mut self) {
         self.done += 1;
+    }
+
+    /// Jump to a checkpointed position: `done` train steps already paid
+    /// by the crashed run, so the resumed loop owes only the remainder.
+    pub fn fast_forward(&mut self, done: usize) {
+        self.done = done;
     }
 
     pub fn trains_done(&self) -> usize {
@@ -84,6 +92,14 @@ pub struct ActorQLog {
     pub train_exec_secs: f64,
     /// Total wall-clock seconds.
     pub wall_secs: f64,
+    /// Actor respawns the pool supervisor performed mid-run.
+    pub actor_restarts: usize,
+    /// Summed detection-to-replacement latency across those respawns
+    /// (backoff included), in milliseconds.
+    pub restart_recovery_ms: f64,
+    /// Hub publishes that failed on the wire and degraded to the
+    /// in-process transport.
+    pub hub_publish_failures: u64,
     /// Per-actor accounting from the pool shutdown.
     pub actor_stats: Vec<ActorStats>,
     /// Energy-meter snapshot: busy thread-seconds and step counts per
@@ -136,6 +152,15 @@ pub struct HarnessConfig<'a> {
     pub exploration: Exploration,
     pub returns: ReturnLog,
     pub acfg: &'a ActorQConfig,
+    /// Optional deterministic fault script, threaded into the pool
+    /// (actor kills) and the broadcast hub path (publish faults).
+    pub faults: Option<Arc<FaultPlan>>,
+    /// Optional periodic checkpointing; see [`LearnerHarness::run_ckpt`].
+    pub ckpt: Option<CheckpointPolicy>,
+    /// Optional resume position from a verified [`Checkpoint`]: the
+    /// pacer, broadcast version, and log counters all restart from
+    /// here instead of zero.
+    pub resume: Option<ResumePoint>,
 }
 
 /// The learner-side half of an ActorQ run: actor pool, quantize-on-
@@ -162,6 +187,17 @@ pub struct LearnerHarness {
     total_steps: usize,
     log_every: usize,
     returns: ReturnLog,
+    ckpt: Option<CheckpointPolicy>,
+    resume: Option<ResumePoint>,
+}
+
+/// What the driver must hand the harness to write one checkpoint: the
+/// fp32 master parameters and the learner RNG position (via
+/// [`crate::rng::Pcg32::state_parts`]). The harness supplies the
+/// counters itself.
+pub struct CheckpointState {
+    pub params: ParamSet,
+    pub rng: (u64, u64),
 }
 
 impl LearnerHarness {
@@ -171,11 +207,19 @@ impl LearnerHarness {
     /// meter — the shared front half of both drivers.
     pub fn spawn(params: &ParamSet, cfg: &HarnessConfig) -> Result<LearnerHarness> {
         let meter = Arc::new(EnergyMeter::new());
-        let broadcast = Arc::new(ParamBroadcast::with_config(
+        // On resume the broadcast continues the crashed run's version
+        // sequence, so actors (and any attached hub) never see the
+        // counter run backwards.
+        let initial_version = cfg.resume.map_or(0, |r| r.version);
+        let broadcast = Arc::new(ParamBroadcast::with_config_resumed(
             params,
             cfg.acfg.precision,
             crate::inference::EngineConfig::with_threads(cfg.acfg.engine_threads),
+            initial_version,
         )?);
+        if let Some(plan) = &cfg.faults {
+            broadcast.set_faults(plan.clone());
+        }
         let pool = ActorPool::spawn(
             &PoolConfig {
                 env_id: cfg.env_id.to_string(),
@@ -186,19 +230,28 @@ impl LearnerHarness {
                 exploration: cfg.exploration,
                 seed: cfg.seed,
                 meter: Some(meter.clone()),
+                max_restarts: cfg.acfg.max_actor_restarts,
+                restart_backoff: cfg.acfg.restart_backoff,
+                faults: cfg.faults.clone(),
             },
             broadcast.clone(),
         )?;
+        let mut pacer = Pacer::new(cfg.warmup, cfg.train_freq);
+        if let Some(r) = cfg.resume {
+            pacer.fast_forward(r.train_steps);
+        }
         Ok(LearnerHarness {
             broadcast,
             meter,
             pool,
-            pacer: Pacer::new(cfg.warmup, cfg.train_freq),
+            pacer,
             drain_max: cfg.acfg.n_actors,
             broadcast_every: cfg.acfg.broadcast_every.max(1),
             total_steps: cfg.total_steps,
             log_every: cfg.log_every,
             returns: cfg.returns,
+            ckpt: cfg.ckpt.clone(),
+            resume: cfg.resume,
         })
     }
 
@@ -222,12 +275,44 @@ impl LearnerHarness {
     /// (100 ms timeout), then whatever else is already queued up to
     /// `n_actors` batches, so a deep backlog never stalls the train
     /// loop.
-    pub fn run<P, T>(mut self, mut push: P, mut train: T) -> Result<ActorQLog>
+    pub fn run<P, T>(self, push: P, train: T) -> Result<ActorQLog>
+    where
+        P: FnMut(&OwnedTransition),
+        T: FnMut(usize, bool) -> Result<Option<f32>>,
+    {
+        self.run_ckpt(push, train, None)
+    }
+
+    /// [`LearnerHarness::run`] with checkpointing: when the harness was
+    /// configured with a [`CheckpointPolicy`] and `state` is provided,
+    /// a [`Checkpoint`] is written (atomically, replacing the previous
+    /// one) every `every_trains` completed train steps. The `state`
+    /// closure supplies what only the driver holds — the fp32 master
+    /// [`ParamSet`] and the learner RNG words — and the harness adds
+    /// its own counters, so a killed run resumed from the latest file
+    /// replays the remaining train steps and converges to the
+    /// bit-identical final engine (pinned by
+    /// `rust/tests/faults_chaos.rs`).
+    pub fn run_ckpt<P, T>(
+        mut self,
+        mut push: P,
+        mut train: T,
+        mut state: Option<&mut dyn FnMut() -> CheckpointState>,
+    ) -> Result<ActorQLog>
     where
         P: FnMut(&OwnedTransition),
         T: FnMut(usize, bool) -> Result<Option<f32>>,
     {
         let mut log = ActorQLog::default();
+        let mut replay_pushed = 0usize;
+        // Resume: counters restart where the checkpoint left them; the
+        // pacer was already fast-forwarded in spawn.
+        if let Some(r) = self.resume {
+            log.env_steps = r.env_steps;
+            log.train_steps = r.train_steps;
+            log.broadcasts = r.broadcasts;
+            replay_pushed = r.replay_pushed;
+        }
         let mut recent: Vec<f32> = Vec::new();
         let t_start = Instant::now();
         let mut next_log = 0usize;
@@ -241,6 +326,7 @@ impl LearnerHarness {
             for xp in &batches {
                 for t in &xp.transitions {
                     push(t);
+                    replay_pushed += 1;
                 }
                 log.env_steps += xp.transitions.len();
                 for &r in &xp.episode_returns {
@@ -268,6 +354,21 @@ impl LearnerHarness {
                 if self.log_every > 0 && step % self.log_every == 0 {
                     log.losses.push((step, loss));
                 }
+                if let (Some(policy), Some(state_fn)) = (&self.ckpt, state.as_mut()) {
+                    if log.train_steps % policy.every_trains.max(1) == 0 {
+                        let s = state_fn();
+                        Checkpoint {
+                            train_steps: log.train_steps as u64,
+                            env_steps: log.env_steps.min(self.total_steps),
+                            broadcasts: log.broadcasts,
+                            version: self.broadcast.version(),
+                            replay_pushed,
+                            rng: s.rng,
+                            params: s.params,
+                        }
+                        .write_file(&policy.path)?;
+                    }
+                }
             }
 
             if self.returns == ReturnLog::TailMean
@@ -281,6 +382,14 @@ impl LearnerHarness {
             }
         }
 
+        log.actor_restarts = self.pool.restarts();
+        log.restart_recovery_ms = self
+            .pool
+            .restart_events()
+            .iter()
+            .map(|e| e.recovery.as_secs_f64() * 1e3)
+            .sum();
+        log.hub_publish_failures = self.broadcast.hub_publish_failures();
         log.actor_stats = self.pool.shutdown()?;
         log.energy = self.meter.snapshot();
         // The last drain overshoots the budget by up to a full batch
@@ -312,6 +421,13 @@ mod tests {
         assert_eq!(p.owed(110), 3);
         assert_eq!(p.trains_done(), 2);
         assert_eq!(p.equivalent_step(), 104);
+        // Fast-forward (checkpoint resume) lands on the same position a
+        // step-by-step replay would.
+        let mut q = Pacer::new(100, 2);
+        q.fast_forward(2);
+        assert_eq!(q.trains_done(), 2);
+        assert_eq!(q.owed(110), 3);
+        assert_eq!(q.equivalent_step(), 104);
     }
 
     #[test]
@@ -363,6 +479,9 @@ mod tests {
             },
             returns: ReturnLog::TailMean,
             acfg: &acfg,
+            faults: None,
+            ckpt: None,
+            resume: None,
         };
         let harness = LearnerHarness::spawn(&params, &hcfg).unwrap();
         let broadcast = harness.broadcast.clone();
@@ -426,6 +545,9 @@ mod tests {
             },
             returns: ReturnLog::PerEpisode,
             acfg: &acfg,
+            faults: None,
+            ckpt: None,
+            resume: None,
         };
         let harness = LearnerHarness::spawn(&params, &hcfg).unwrap();
         let log = harness.run(|_t| {}, |_step, _publish| Ok(None)).unwrap();
@@ -466,6 +588,9 @@ mod tests {
             },
             returns: ReturnLog::PerEpisode,
             acfg: &acfg,
+            faults: None,
+            ckpt: None,
+            resume: None,
         };
         let harness = LearnerHarness::spawn(&params, &hcfg).unwrap();
         let mut pushed = 0usize;

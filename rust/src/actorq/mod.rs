@@ -34,7 +34,16 @@
 //!   recv poll, not at shutdown), and joins them on shutdown. Threaded
 //!   actor engines all submit to the shared persistent worker pool
 //!   ([`crate::inference::workers::global`]) — no per-actor thread
-//!   herds.
+//!   herds. With a restart budget
+//!   ([`ActorQConfig::max_actor_restarts`]) the pool *supervises*:
+//!   a dead actor is respawned on a fresh deterministic RNG stream
+//!   after capped exponential backoff, and only exhausting the budget
+//!   aborts the run.
+//! * [`checkpoint`] — crash recovery: the learner periodically writes
+//!   a `QCKP` blob (fp32 master params + pacer/RNG/replay state,
+//!   CRC-verified end to end, atomic rename writes) that
+//!   [`LearnerHarness::spawn`] can resume from to reach the
+//!   bit-identical final engine a fault-free run produces.
 //! * [`learner`] — learner-side pacing ([`learner::Pacer`] keeps the
 //!   train-step : env-step ratio equal to the synchronous drivers) and
 //!   the [`learner::ActorQLog`] telemetry, including the per-component
@@ -51,13 +60,17 @@
 
 pub mod actor;
 pub mod broadcast;
+pub mod checkpoint;
 pub mod learner;
 pub mod pool;
 
 pub use actor::{ActorEngine, ActorStats, Exploration};
 pub use broadcast::{ParamBroadcast, Snapshot};
-pub use learner::{ActorQLog, LearnerHarness, Pacer, ReturnLog};
-pub use pool::{ActorPool, PoolConfig};
+pub use checkpoint::{Checkpoint, CheckpointPolicy, ResumePoint};
+pub use learner::{ActorQLog, CheckpointState, HarnessConfig, LearnerHarness, Pacer, ReturnLog};
+pub use pool::{ActorPool, PoolConfig, RestartEvent};
+
+use std::time::Duration;
 
 /// Numeric format of the actor-side policy copy — the shared
 /// [`crate::quant::Precision`] selector (paper Table 6 compares fp32
@@ -118,6 +131,14 @@ pub struct ActorQConfig {
     /// with many actors, `n_actors x engine_threads` oversubscribes the
     /// machine. Outputs are bit-identical at every setting.
     pub engine_threads: usize,
+    /// Pool-wide actor restart budget. A dead actor (panic or engine
+    /// error) is respawned on a fresh deterministic RNG stream while
+    /// the budget lasts; 0 restores the old die-fast behavior where
+    /// the first death aborts the run.
+    pub max_actor_restarts: usize,
+    /// Base backoff before a respawn; doubles per restart of the same
+    /// slot, capped at [`pool`]'s `BACKOFF_CAP` (5 s).
+    pub restart_backoff: Duration,
 }
 
 impl ActorQConfig {
@@ -130,6 +151,8 @@ impl ActorQConfig {
             channel_capacity: 16,
             broadcast_every: 10,
             engine_threads: 1,
+            max_actor_restarts: 3,
+            restart_backoff: Duration::from_millis(50),
         }
     }
 
@@ -153,6 +176,8 @@ mod tests {
         let c = ActorQConfig::new(0);
         assert_eq!(c.n_actors, 1, "actor count floored at 1");
         assert!(c.flush_every > 0 && c.channel_capacity > 0 && c.broadcast_every > 0);
+        assert_eq!(c.max_actor_restarts, 3, "supervision on by default");
+        assert_eq!(c.restart_backoff, Duration::from_millis(50));
         assert_eq!(c.precision, Precision::Int(8));
         assert_eq!(c.engine_threads, 1, "one-thread-per-actor model by default");
         assert_eq!(c.with_engine_threads(0).engine_threads, 1, "floored at 1");

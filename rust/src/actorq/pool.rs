@@ -1,14 +1,22 @@
 //! The actor pool: spawns N actor threads, owns the bounded experience
-//! channel, and joins everything on shutdown.
+//! channel, supervises liveness, and joins everything on shutdown.
 //!
 //! Threading contract: the pool (and its receiver) live on the learner
 //! thread; each actor owns its environments, RNG streams, and policy
 //! copy outright, so the only shared state is the broadcast snapshot
 //! (read-mostly `Arc`) and the mpsc channel. Shutdown drops the receiver
 //! first, which unblocks any actor parked on a full channel.
+//!
+//! Supervision contract: a dead actor no longer aborts the run. The pool
+//! joins the corpse (keeping its stats), waits out a capped exponential
+//! backoff, and respawns a replacement on a **fresh** [`mix_seed`]
+//! stream — generation `g` of slot `i` draws env stream
+//! `mix_seed(seed, g·n + i)`, which never collides with a live actor's
+//! stream. Only exhausting `max_restarts` aborts; a budget of zero
+//! restores the old die-fast behavior.
 
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, TryRecvError};
+use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender, TryRecvError};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -19,8 +27,13 @@ use crate::actorq::ExperienceBatch;
 use crate::envs::registry::make_env;
 use crate::envs::vec_env::VecEnv;
 use crate::error::{Error, Result};
+use crate::faults::FaultPlan;
 use crate::rng::{mix_seed, Pcg32};
 use crate::sustain::EnergyMeter;
+
+/// Never wait longer than this before respawning, however many times a
+/// slot has died — recovery latency must stay bounded.
+const BACKOFF_CAP: Duration = Duration::from_secs(5);
 
 /// Pool construction parameters (algo-agnostic; the exploration rule is
 /// what differentiates a DQN pool from a DDPG pool).
@@ -38,13 +51,64 @@ pub struct PoolConfig {
     /// Optional energy meter shared with the learner; actors attribute
     /// their collection sweeps to [`crate::sustain::Component::Actors`].
     pub meter: Option<Arc<EnergyMeter>>,
+    /// Total respawns the supervisor may perform across the pool before
+    /// a dead actor aborts the run. Zero = old die-fast behavior.
+    pub max_restarts: usize,
+    /// Base respawn backoff; doubles with each death of the same slot,
+    /// capped at 5 s.
+    pub restart_backoff: Duration,
+    /// Optional deterministic fault script (chaos tests, `exp faults`).
+    pub faults: Option<Arc<FaultPlan>>,
 }
 
-/// A running pool of actor threads.
+/// One respawn performed by the supervisor, for recovery accounting.
+#[derive(Debug, Clone)]
+pub struct RestartEvent {
+    /// Slot id of the replaced actor.
+    pub actor: usize,
+    /// How many times this slot has been respawned (1-based).
+    pub generation: usize,
+    /// Backoff the supervisor waited before this respawn.
+    pub backoff: Duration,
+    /// Detection-to-replacement latency (includes the backoff).
+    pub recovery: Duration,
+}
+
+/// Per-actor supervision slot.
+struct Slot {
+    handle: Option<JoinHandle<ActorStats>>,
+    /// Respawns consumed by this slot (generation of the live actor).
+    restarts: usize,
+    /// Earliest instant a scheduled respawn may run (`None` = live).
+    respawn_at: Option<Instant>,
+    /// When the death was detected (recovery-latency anchor).
+    died_at: Option<Instant>,
+}
+
+/// Everything needed to build a replacement actor. Holding a spare
+/// sender here is deliberate: the channel must survive a window where
+/// every original actor is dead but a respawn is pending. It never
+/// wedges shutdown — `SyncSender::send` errors as soon as the receiver
+/// drops, regardless of other senders.
+struct Respawner {
+    cfg: PoolConfig,
+    broadcast: Arc<ParamBroadcast>,
+    tx: SyncSender<ExperienceBatch>,
+}
+
+/// A running, supervised pool of actor threads.
 pub struct ActorPool {
     rx: Receiver<ExperienceBatch>,
-    handles: Vec<JoinHandle<ActorStats>>,
+    slots: Vec<Slot>,
     stop: Arc<AtomicBool>,
+    /// `None` for hand-assembled test pools: those keep the historical
+    /// die-fast semantics (any finished handle is an error).
+    respawner: Option<Respawner>,
+    /// Stats joined from actors that died mid-run (kept so shutdown
+    /// reports every generation, not just the survivors).
+    dead_stats: Vec<ActorStats>,
+    restarts_total: usize,
+    restart_events: Vec<RestartEvent>,
 }
 
 impl ActorPool {
@@ -58,65 +122,117 @@ impl ActorPool {
         make_env(&cfg.env_id)?; // validate once; the factories below cannot fail
         let (tx, rx) = sync_channel::<ExperienceBatch>(cfg.channel_capacity.max(1));
         let stop = Arc::new(AtomicBool::new(false));
-        let mut handles = Vec::with_capacity(cfg.n_actors);
+        let mut slots = Vec::with_capacity(cfg.n_actors);
         for id in 0..cfg.n_actors {
-            let env_id = cfg.env_id.clone();
-            // Splitmix-style derivation: a plain `seed ^ (const + id)`
-            // collides for nearby (seed, id) pairs and hands adjacent
-            // actors correlated env streams (pinned in rng.rs tests).
-            let envs = VecEnv::new(cfg.envs_per_actor, mix_seed(cfg.seed, id as u64), || {
-                make_env(&env_id).expect("env id validated above")
-            });
-            let setup = ActorSetup {
-                id,
-                envs,
-                exploration: cfg.exploration,
-                flush_every: cfg.flush_every,
-                rng: Pcg32::new(cfg.seed, 7000 + id as u64),
-                meter: cfg.meter.clone(),
-            };
-            let bc = broadcast.clone();
-            let tx = tx.clone();
-            let stop_flag = stop.clone();
-            handles.push(std::thread::spawn(move || run_actor(setup, bc, tx, stop_flag)));
+            let handle = spawn_actor(cfg, &broadcast, &tx, &stop, id, 0);
+            slots.push(Slot { handle: Some(handle), restarts: 0, respawn_at: None, died_at: None });
         }
-        drop(tx); // the pool only receives; actors hold the senders
-        Ok(ActorPool { rx, handles, stop })
+        let respawner = Respawner { cfg: cfg.clone(), broadcast, tx };
+        Ok(ActorPool {
+            rx,
+            slots,
+            stop,
+            respawner: Some(respawner),
+            dead_stats: Vec::new(),
+            restarts_total: 0,
+            restart_events: Vec::new(),
+        })
     }
 
-    /// Error if any actor thread has already exited: a live pool never
-    /// retires actors on its own, so a finished handle mid-run means the
-    /// actor panicked (or bailed on an engine error) and the pool is
-    /// silently running at n−1 throughput.
-    fn check_live(&self) -> Result<()> {
-        for (id, h) in self.handles.iter().enumerate() {
-            if h.is_finished() {
-                return Err(Error::Experiment(format!(
-                    "actor {id} exited mid-run (panicked or hit an engine error)"
-                )));
+    /// Supervision sweep: join any finished actor, schedule (or perform)
+    /// its respawn, and error only once the restart budget is spent. A
+    /// live pool never retires actors on its own, so a finished handle
+    /// mid-run means the actor panicked, bailed on an engine error, or
+    /// was killed by an injected fault.
+    fn supervise(&mut self) -> Result<()> {
+        for id in 0..self.slots.len() {
+            let finished = self.slots[id].handle.as_ref().is_some_and(|h| h.is_finished());
+            if finished {
+                let handle = self.slots[id].handle.take().expect("checked above");
+                if let Ok(stats) = handle.join() {
+                    self.dead_stats.push(stats); // a panic leaves no stats behind
+                }
+                let budget = self.respawner.as_ref().map_or(0, |r| r.cfg.max_restarts);
+                if self.restarts_total >= budget {
+                    return Err(Error::Experiment(format!(
+                        "actor {id} exited mid-run (panicked or hit an engine error); \
+                         restart budget ({budget}) exhausted"
+                    )));
+                }
+                self.restarts_total += 1;
+                self.slots[id].restarts += 1;
+                let generation = self.slots[id].restarts;
+                let base = self.respawner.as_ref().map_or(Duration::ZERO, |r| r.cfg.restart_backoff);
+                let backoff = base
+                    .saturating_mul(1u32 << (generation - 1).min(16) as u32)
+                    .min(BACKOFF_CAP);
+                let now = Instant::now();
+                self.slots[id].died_at = Some(now);
+                self.slots[id].respawn_at = Some(now + backoff);
+                eprintln!(
+                    "[actorq] actor {id} died mid-run; respawning generation {generation} \
+                     after {backoff:?} ({} of {budget} restarts used)",
+                    self.restarts_total
+                );
+            }
+            let due = self.slots[id].respawn_at.is_some_and(|at| Instant::now() >= at);
+            if due {
+                self.respawn(id);
             }
         }
         Ok(())
     }
 
+    /// Spawn the replacement for a slot whose backoff has elapsed.
+    fn respawn(&mut self, id: usize) {
+        let r = self.respawner.as_ref().expect("respawn scheduled without a respawner");
+        let generation = self.slots[id].restarts;
+        let handle = spawn_actor(&r.cfg, &r.broadcast, &r.tx, &self.stop, id, generation);
+        let died_at = self.slots[id].died_at.take().unwrap_or_else(Instant::now);
+        let backoff = r
+            .cfg
+            .restart_backoff
+            .saturating_mul(1u32 << (generation - 1).min(16) as u32)
+            .min(BACKOFF_CAP);
+        self.restart_events.push(RestartEvent {
+            actor: id,
+            generation,
+            backoff,
+            recovery: died_at.elapsed(),
+        });
+        self.slots[id].handle = Some(handle);
+        self.slots[id].respawn_at = None;
+    }
+
+    /// Total respawns performed so far.
+    pub fn restarts(&self) -> usize {
+        self.restarts_total
+    }
+
+    /// Every respawn with its backoff and detection→replacement latency.
+    pub fn restart_events(&self) -> &[RestartEvent] {
+        &self.restart_events
+    }
+
     /// Wait up to `timeout` for the next experience batch. `Ok(None)` on
-    /// timeout; an error means an actor died.
+    /// timeout; an error means an actor died with no restart budget left.
     ///
     /// The wait is sliced into short polls so a **single** dead actor
     /// surfaces within ~one slice — an mpsc receiver only reports
     /// `Disconnected` once *every* sender hangs up, which used to let a
     /// panicked actor silently degrade the pool until shutdown. Queued
-    /// batches still win over the liveness check: the error fires only
-    /// once the channel is empty.
-    pub fn recv_timeout(&self, timeout: Duration) -> Result<Option<ExperienceBatch>> {
+    /// batches still win over the liveness check: a batch in hand returns
+    /// immediately and supervision resumes on the next call.
+    pub fn recv_timeout(&mut self, timeout: Duration) -> Result<Option<ExperienceBatch>> {
         const POLL: Duration = Duration::from_millis(20);
+        self.supervise()?; // prompt detection even when batches keep flowing
         let deadline = Instant::now() + timeout;
         loop {
             let left = deadline.saturating_duration_since(Instant::now());
             match self.rx.recv_timeout(left.min(POLL)) {
                 Ok(b) => return Ok(Some(b)),
                 Err(RecvTimeoutError::Timeout) => {
-                    self.check_live()?;
+                    self.supervise()?;
                     if left <= POLL {
                         return Ok(None);
                     }
@@ -156,21 +272,60 @@ impl ActorPool {
         Ok(out)
     }
 
-    /// Stop all actors and collect their stats. Dropping the receiver
-    /// before joining unblocks actors parked on a full channel.
+    /// Stop all actors and collect their stats — including those of
+    /// actors that died and were replaced mid-run. Dropping the receiver
+    /// (and the respawner's spare sender) before joining unblocks actors
+    /// parked on a full channel.
     pub fn shutdown(self) -> Result<Vec<ActorStats>> {
-        let ActorPool { rx, handles, stop } = self;
+        let ActorPool { rx, slots, stop, respawner, mut dead_stats, .. } = self;
         stop.store(true, Ordering::SeqCst);
         drop(rx);
-        let mut stats = Vec::with_capacity(handles.len());
-        for h in handles {
-            let s = h
-                .join()
-                .map_err(|_| Error::Experiment("actor thread panicked".into()))?;
-            stats.push(s);
+        drop(respawner);
+        for slot in slots {
+            if let Some(h) = slot.handle {
+                let s = h
+                    .join()
+                    .map_err(|_| Error::Experiment("actor thread panicked".into()))?;
+                dead_stats.push(s);
+            }
         }
-        Ok(stats)
+        Ok(dead_stats)
     }
+}
+
+/// Build and launch one actor. Generation 0 is the original spawn;
+/// generation `g ≥ 1` is the g-th replacement on that slot, seeded from
+/// stream `g·n_actors + id` so every generation of every slot draws a
+/// decorrelated env seed and exploration stream.
+fn spawn_actor(
+    cfg: &PoolConfig,
+    broadcast: &Arc<ParamBroadcast>,
+    tx: &SyncSender<ExperienceBatch>,
+    stop: &Arc<AtomicBool>,
+    id: usize,
+    generation: usize,
+) -> JoinHandle<ActorStats> {
+    let stream = (generation * cfg.n_actors + id) as u64;
+    let env_id = cfg.env_id.clone();
+    // Splitmix-style derivation: a plain `seed ^ (const + id)` collides
+    // for nearby (seed, id) pairs and hands adjacent actors correlated
+    // env streams (pinned in rng.rs tests).
+    let envs = VecEnv::new(cfg.envs_per_actor, mix_seed(cfg.seed, stream), || {
+        make_env(&env_id).expect("env id validated at pool construction")
+    });
+    let setup = ActorSetup {
+        id,
+        envs,
+        exploration: cfg.exploration,
+        flush_every: cfg.flush_every,
+        rng: Pcg32::new(cfg.seed, 7000 + stream),
+        meter: cfg.meter.clone(),
+        faults: cfg.faults.clone(),
+    };
+    let bc = broadcast.clone();
+    let tx = tx.clone();
+    let stop_flag = stop.clone();
+    std::thread::spawn(move || run_actor(setup, bc, tx, stop_flag))
 }
 
 #[cfg(test)]
@@ -206,13 +361,38 @@ mod tests {
             },
             seed: 5,
             meter: None,
+            max_restarts: 0,
+            restart_backoff: Duration::from_millis(10),
+            faults: None,
+        }
+    }
+
+    /// Hand-assembled pool with no respawner: historical die-fast
+    /// semantics for the liveness/disconnect regression tests.
+    fn bare_pool(
+        rx: Receiver<ExperienceBatch>,
+        handles: Vec<JoinHandle<ActorStats>>,
+        stop: Arc<AtomicBool>,
+    ) -> ActorPool {
+        let slots = handles
+            .into_iter()
+            .map(|h| Slot { handle: Some(h), restarts: 0, respawn_at: None, died_at: None })
+            .collect();
+        ActorPool {
+            rx,
+            slots,
+            stop,
+            respawner: None,
+            dead_stats: Vec::new(),
+            restarts_total: 0,
+            restart_events: Vec::new(),
         }
     }
 
     #[test]
     fn pool_collects_valid_cartpole_experience() {
         let bc = cartpole_broadcast(Precision::Int(8));
-        let pool = ActorPool::spawn(&pool_cfg(2), bc).unwrap();
+        let mut pool = ActorPool::spawn(&pool_cfg(2), bc).unwrap();
         let mut got = 0usize;
         while got < 200 {
             let b = pool
@@ -241,7 +421,7 @@ mod tests {
     #[test]
     fn actors_pick_up_published_params() {
         let bc = cartpole_broadcast(Precision::Fp32);
-        let pool = ActorPool::spawn(&pool_cfg(2), bc.clone()).unwrap();
+        let mut pool = ActorPool::spawn(&pool_cfg(2), bc.clone()).unwrap();
         // republish fresh params; actors must move to the new version
         let specs = vec![
             TensorSpec { name: "q.w0".into(), shape: vec![4, 32] },
@@ -276,7 +456,7 @@ mod tests {
         let meter = Arc::new(EnergyMeter::new());
         let mut cfg = pool_cfg(1);
         cfg.meter = Some(meter.clone());
-        let pool = ActorPool::spawn(&cfg, bc).unwrap();
+        let mut pool = ActorPool::spawn(&cfg, bc).unwrap();
         pool.recv_timeout(Duration::from_secs(10))
             .unwrap()
             .expect("actor should produce a batch well within 10s");
@@ -290,8 +470,9 @@ mod tests {
         // One healthy (parked) actor, one that panics immediately. The
         // old recv_timeout only watched the channel, which reports
         // nothing until EVERY sender hangs up — a single corpse silently
-        // ran the pool at n−1 until shutdown. The poll loop must surface
-        // it within a few slices, not after the full timeout.
+        // ran the pool at n−1 until shutdown. With no restart budget the
+        // poll loop must surface it within a few slices, not after the
+        // full timeout.
         let (tx, rx) = sync_channel::<ExperienceBatch>(4);
         let stop = Arc::new(AtomicBool::new(false));
         let healthy = std::thread::spawn(|| -> ActorStats {
@@ -300,7 +481,7 @@ mod tests {
         });
         let dead = std::thread::spawn(|| -> ActorStats { panic!("injected actor crash") });
         std::thread::sleep(Duration::from_millis(50)); // let the panic land
-        let pool = ActorPool { rx, handles: vec![healthy, dead], stop };
+        let mut pool = bare_pool(rx, vec![healthy, dead], stop);
         let t0 = Instant::now();
         let err = pool.recv_timeout(Duration::from_secs(10)).unwrap_err();
         assert!(
@@ -313,10 +494,70 @@ mod tests {
     }
 
     #[test]
+    fn supervisor_respawns_a_killed_actor_within_budget() {
+        // Fault-kill actor 0 early; with a restart budget the pool must
+        // keep delivering batches, record exactly one respawn, and report
+        // three actor generations at shutdown (killed + replacement +
+        // untouched peer).
+        let plan = Arc::new(FaultPlan::new(3).kill_actor(0, 8));
+        let mut cfg = pool_cfg(2);
+        cfg.max_restarts = 2;
+        cfg.faults = Some(plan.clone());
+        let bc = cartpole_broadcast(Precision::Int(8));
+        let mut pool = ActorPool::spawn(&cfg, bc).unwrap();
+        let deadline = Instant::now() + Duration::from_secs(20);
+        while pool.restarts() == 0 && Instant::now() < deadline {
+            pool.recv_timeout(Duration::from_millis(100)).unwrap();
+        }
+        assert_eq!(pool.restarts(), 1, "kill never detected/respawned");
+        let ev = pool.restart_events()[0].clone();
+        assert_eq!((ev.actor, ev.generation), (0, 1));
+        assert!(ev.recovery >= ev.backoff, "recovery includes the backoff wait");
+        // the replacement must actually produce experience
+        let mut post = 0usize;
+        let deadline = Instant::now() + Duration::from_secs(20);
+        while post < 50 && Instant::now() < deadline {
+            if let Some(b) = pool.recv_timeout(Duration::from_millis(200)).unwrap() {
+                if b.actor_id == 0 {
+                    post += b.transitions.len();
+                }
+            }
+        }
+        assert!(post >= 50, "respawned actor 0 sent only {post} transitions");
+        let stats = pool.shutdown().unwrap();
+        assert_eq!(stats.len(), 3, "killed + replacement + peer");
+    }
+
+    #[test]
+    fn exhausted_restart_budget_aborts_the_run() {
+        // Two scripted kills against a budget of one: the first death is
+        // absorbed, the second must abort with a budget-exhausted error.
+        let plan = Arc::new(FaultPlan::new(4).kill_actor(0, 8).kill_actor(1, 8));
+        let mut cfg = pool_cfg(2);
+        cfg.max_restarts = 1;
+        cfg.faults = Some(plan);
+        let bc = cartpole_broadcast(Precision::Int(8));
+        let mut pool = ActorPool::spawn(&cfg, bc).unwrap();
+        let deadline = Instant::now() + Duration::from_secs(20);
+        let mut err = None;
+        while Instant::now() < deadline {
+            match pool.recv_timeout(Duration::from_millis(100)) {
+                Ok(_) => {}
+                Err(e) => {
+                    err = Some(e);
+                    break;
+                }
+            }
+        }
+        let err = err.expect("second death must exhaust the budget");
+        assert!(err.to_string().contains("restart budget (1) exhausted"), "{err}");
+    }
+
+    #[test]
     fn try_drain_surfaces_disconnect_after_queued_batches() {
         let (tx, rx) = sync_channel::<ExperienceBatch>(4);
         let stop = Arc::new(AtomicBool::new(false));
-        let pool = ActorPool { rx, handles: Vec::new(), stop };
+        let pool = bare_pool(rx, Vec::new(), stop);
         tx.send(ExperienceBatch {
             actor_id: 0,
             param_version: 0,

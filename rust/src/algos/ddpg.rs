@@ -333,6 +333,9 @@ pub fn train_actorq(
             },
             returns: ReturnLog::PerEpisode,
             acfg,
+            faults: None,
+            ckpt: None,
+            resume: None,
         },
     )?;
     let meter = harness.meter.clone();

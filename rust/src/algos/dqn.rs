@@ -317,6 +317,9 @@ pub fn train_actorq(
             exploration: Exploration::EpsGreedy { schedule: cfg.eps, horizon },
             returns: ReturnLog::TailMean,
             acfg,
+            faults: None,
+            ckpt: None,
+            resume: None,
         },
     )?;
     let meter = harness.meter.clone();

@@ -62,7 +62,7 @@ pub fn collection_rate(
 ) -> Result<f64> {
     let params = cartpole_params(seed);
     let broadcast = Arc::new(ParamBroadcast::new(&params, precision)?);
-    let pool = ActorPool::spawn(
+    let mut pool = ActorPool::spawn(
         &PoolConfig {
             env_id: "cartpole".into(),
             n_actors,
@@ -72,6 +72,9 @@ pub fn collection_rate(
             exploration: fixed_eps_exploration(),
             seed,
             meter: None,
+            max_restarts: 0,
+            restart_backoff: Duration::from_millis(50),
+            faults: None,
         },
         broadcast,
     )?;

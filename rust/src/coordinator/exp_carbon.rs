@@ -98,7 +98,7 @@ fn run_cell(
 
     let meter = Arc::new(EnergyMeter::new());
     let broadcast = Arc::new(ParamBroadcast::new(&params, precision)?);
-    let pool = ActorPool::spawn(
+    let mut pool = ActorPool::spawn(
         &PoolConfig {
             env_id: env_id.into(),
             n_actors: N_ACTORS,
@@ -108,6 +108,9 @@ fn run_cell(
             exploration,
             seed,
             meter: Some(meter.clone()),
+            max_restarts: 0,
+            restart_backoff: Duration::from_millis(50),
+            faults: None,
         },
         broadcast,
     )?;

@@ -1,0 +1,419 @@
+//! `exp faults` — chaos engineering for the crash-safe ActorQ stack.
+//!
+//! Runs fully **offline** (stub train closure, real actor pool on
+//! cartpole). Each precision cell runs the same seeded configuration
+//! four ways:
+//!
+//! 1. **clean** — no faults; the reference run.
+//! 2. **faulted** — a scripted [`FaultPlan`] kills an actor mid-run
+//!    (supervisor respawn), drops one hub publish, fails another on the
+//!    wire (broadcast degrade path), and fails the client's first two
+//!    connects (retry path). The run must complete without aborting and
+//!    its final engine must be **bit-identical** to the clean run's.
+//! 3. **crashed** — checkpointing on, the train closure aborts partway
+//!    (a simulated learner SIGKILL at a train-step boundary).
+//! 4. **resumed** — restarted from the checkpoint the crashed run left
+//!    behind; must also converge to the clean run's engine bit for bit.
+//!
+//! Determinism argument: the pacer owes exactly
+//! `(total - warmup) / train_freq` train steps at equal env-step
+//! budget, regardless of how batches arrive, and the stub train
+//! program's parameter evolution is a pure function of (train count,
+//! learner RNG stream). Faults perturb *scheduling*, never the train
+//! count, so recovery is exact — which is precisely the property the
+//! supervision/checkpoint/retry layers must preserve and this
+//! experiment (plus `rust/tests/faults_chaos.rs`) pins.
+//!
+//! `render` writes `BENCH_faults.json`; `scripts/check_bench_reports.py`
+//! asserts `logit_mismatches == 0`, `resume_mismatches == 0`, at least
+//! one absorbed restart, and retry accounting per row.
+
+use std::cell::RefCell;
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::actorq::checkpoint::{Checkpoint, CheckpointPolicy};
+use crate::actorq::{
+    ActorEngine, ActorQConfig, ActorQLog, CheckpointState, HarnessConfig, LearnerHarness,
+    ParamBroadcast, ReturnLog,
+};
+use crate::coordinator::exp_actorq::{fixed_eps_exploration, mlp_param_specs};
+use crate::coordinator::experiment::{ExpCtx, Experiment};
+use crate::coordinator::metrics::{n, render_table, row, s, write_json_file, Row};
+use crate::error::{Error, Result};
+use crate::faults::{FaultKind, FaultPlan};
+use crate::inference::{Engine as _, EngineConfig};
+use crate::quant::Precision;
+use crate::rng::Pcg32;
+use crate::runtime::json::Json;
+use crate::runtime::ParamSet;
+use crate::snapshot::{ClientConfig, SnapshotClient, SnapshotHub, SnapshotServer};
+
+pub struct Faults;
+
+/// Cartpole policy shape (obs 4 -> 2 actions).
+const DIMS: [usize; 3] = [4, 24, 2];
+
+/// Env-step budget per run at `--scale 1`.
+const BASE_STEPS: f64 = 600.0;
+
+const WARMUP: usize = 100;
+const TRAIN_FREQ: usize = 2;
+
+/// Checkpoint cadence (train steps) for the crash/resume legs.
+const CKPT_EVERY: usize = 10;
+
+/// Probe vectors per engine comparison.
+const PROBES: usize = 6;
+
+fn precisions(ctx: &ExpCtx) -> Vec<Precision> {
+    let mut ps = vec![Precision::Fp32, Precision::Int(8)];
+    for &b in ctx.sweep_bits().iter().filter(|&&b| b != 8 && Precision::Int(b).engine_supported())
+    {
+        ps.push(Precision::Int(b));
+    }
+    ps
+}
+
+fn parse_item(item: &str) -> Result<Precision> {
+    if item == "fp32" {
+        return Ok(Precision::Fp32);
+    }
+    item.strip_prefix("int")
+        .and_then(|b| b.parse().ok())
+        .map(Precision::Int)
+        .filter(|p| p.engine_supported())
+        .ok_or_else(|| Error::Experiment(format!("bad faults item '{item}'")))
+}
+
+/// Bit-exact probe signature of an actor-side engine: logits at `PROBES`
+/// seeded inputs as raw f32 bit patterns. Two engines are "the same"
+/// iff the signatures are equal.
+fn probe(engine: &ActorEngine, seed: u64) -> Result<Vec<u32>> {
+    let mut eng = engine.clone();
+    let mut rng = Pcg32::new(seed, 99);
+    let mut x = vec![0.0f32; DIMS[0]];
+    let mut y = vec![0.0f32; DIMS[2]];
+    let mut out = Vec::with_capacity(PROBES * DIMS[2]);
+    for _ in 0..PROBES {
+        for v in x.iter_mut() {
+            *v = rng.uniform_range(-1.0, 1.0);
+        }
+        eng.forward(&x, &mut y)?;
+        out.extend(y.iter().map(|v| v.to_bits()));
+    }
+    Ok(out)
+}
+
+/// One offline harness run with the stub train program. Faults,
+/// checkpointing, resume, a hub attachment, and a scripted mid-run
+/// learner crash are all optional so the four legs share this body.
+#[allow(clippy::too_many_arguments)]
+fn stub_run(
+    seed: u64,
+    precision: Precision,
+    total_steps: usize,
+    faults: Option<Arc<FaultPlan>>,
+    ckpt: Option<CheckpointPolicy>,
+    resume_from: Option<&Checkpoint>,
+    crash_after: Option<usize>,
+    hub: Option<Arc<SnapshotHub>>,
+) -> Result<(ActorQLog, Arc<ParamBroadcast>)> {
+    let (params, rng) = match resume_from {
+        Some(c) => (c.params.clone(), c.rng()),
+        None => {
+            let specs = mlp_param_specs(&DIMS, "q");
+            let mut init_rng = Pcg32::new(seed, 47);
+            (ParamSet::init(&specs, &mut init_rng), Pcg32::new(seed, 4242))
+        }
+    };
+    let acfg = ActorQConfig::new(2).with_precision(precision);
+    let hcfg = HarnessConfig {
+        env_id: "cartpole",
+        seed,
+        total_steps,
+        warmup: WARMUP,
+        train_freq: TRAIN_FREQ,
+        log_every: 0,
+        exploration: fixed_eps_exploration(),
+        returns: ReturnLog::TailMean,
+        acfg: &acfg,
+        faults,
+        ckpt: ckpt.clone(),
+        resume: resume_from.map(|c| c.resume_point()),
+    };
+    let harness = LearnerHarness::spawn(&params, &hcfg)?;
+    if let Some(hub) = hub {
+        harness.broadcast.attach_hub(hub)?;
+    }
+    let broadcast = harness.broadcast.clone();
+    let pstate = RefCell::new(params);
+    let rstate = RefCell::new(rng);
+    let mut calls = 0usize;
+    let train = |_step: usize, publish: bool| -> Result<Option<f32>> {
+        if crash_after.is_some_and(|limit| calls >= limit) {
+            return Err(Error::Experiment("injected learner crash".into()));
+        }
+        calls += 1;
+        let mut p = pstate.borrow_mut();
+        let mut r = rstate.borrow_mut();
+        // Deterministic "training": one RNG-driven drift per train step,
+        // a pure function of (train count, learner RNG stream).
+        for t in p.tensors.iter_mut() {
+            for v in t.data_mut() {
+                *v += 0.003 * r.normal();
+            }
+        }
+        if publish {
+            broadcast.publish(&p)?;
+        }
+        Ok(Some(0.0))
+    };
+    let mut state_fn = || CheckpointState {
+        params: pstate.borrow().clone(),
+        rng: rstate.borrow().state_parts(),
+    };
+    let state: Option<&mut dyn FnMut() -> CheckpointState> =
+        if ckpt.is_some() { Some(&mut state_fn) } else { None };
+    let log = harness.run_ckpt(|_t| {}, train, state)?;
+    Ok((log, broadcast))
+}
+
+/// One chaos cell: clean vs faulted vs crash+resume at `precision`.
+fn faults_cell(ctx: &ExpCtx, precision: Precision, total_steps: usize) -> Result<Row> {
+    let seed = ctx.seed + 31;
+    let trains_total = (total_steps - WARMUP) / TRAIN_FREQ;
+
+    // Leg 1: the clean reference run.
+    let (log_a, bc_a) = stub_run(seed, precision, total_steps, None, None, None, None, None)?;
+    let sig_a = probe(&bc_a.latest().engine, seed)?;
+
+    // Leg 2: the faulted run — actor kill, dropped + failed hub
+    // publishes, failed client connects — against the same seed.
+    let plan = Arc::new(
+        FaultPlan::new(seed)
+            .kill_actor(0, 40)
+            .drop_publish(2)
+            .fail_publish(4)
+            .fail_connect(1)
+            .fail_connect(2),
+    );
+    let hub = Arc::new(SnapshotHub::new());
+    let server = SnapshotServer::bind("127.0.0.1:0", Arc::clone(&hub)).map_err(Error::from)?;
+    let (log_b, bc_b) = stub_run(
+        seed,
+        precision,
+        total_steps,
+        Some(plan.clone()),
+        None,
+        None,
+        None,
+        Some(hub),
+    )?;
+    let sig_b = probe(&bc_b.latest().engine, seed)?;
+    let mut logit_mismatches = usize::from(sig_b != sig_a);
+
+    // The wire leg: a retrying client whose first two connects are
+    // scripted to fail must still fetch the (healed) final version and
+    // hydrate the bit-identical engine.
+    let client = SnapshotClient::with_config(
+        server.addr(),
+        ClientConfig {
+            retries: 3,
+            backoff: Duration::from_millis(2),
+            jitter_seed: seed,
+            faults: Some(plan.clone()),
+            ..ClientConfig::default()
+        },
+    );
+    let art = client.fetch().map_err(Error::from)?;
+    if art.version != bc_b.version() {
+        return Err(Error::Experiment(format!(
+            "hub serves v{} but the broadcast is at v{} — a dropped publish never healed",
+            art.version,
+            bc_b.version()
+        )));
+    }
+    let mut remote = art.build_engine(EngineConfig::default())?;
+    {
+        let mut rng = Pcg32::new(seed, 99);
+        let mut x = vec![0.0f32; DIMS[0]];
+        let mut y = vec![0.0f32; DIMS[2]];
+        let mut sig_wire = Vec::with_capacity(PROBES * DIMS[2]);
+        for _ in 0..PROBES {
+            for v in x.iter_mut() {
+                *v = rng.uniform_range(-1.0, 1.0);
+            }
+            remote.forward(&x, &mut y)?;
+            sig_wire.extend(y.iter().map(|v| v.to_bits()));
+        }
+        logit_mismatches += usize::from(sig_wire != sig_b);
+    }
+
+    // Legs 3 + 4: kill the learner mid-run with checkpointing on, then
+    // resume from the file it left behind.
+    let ckpt_path = ctx.runs_dir.join(format!("faults_{}.qckp", precision.label()));
+    let policy = CheckpointPolicy { path: ckpt_path.clone(), every_trains: CKPT_EVERY };
+    let crash_at = (trains_total * 3 / 5).max(CKPT_EVERY + 1);
+    match stub_run(
+        seed,
+        precision,
+        total_steps,
+        None,
+        Some(policy),
+        None,
+        Some(crash_at),
+        None,
+    ) {
+        Err(e) if e.to_string().contains("injected learner crash") => {}
+        Err(e) => return Err(e),
+        Ok(_) => {
+            return Err(Error::Experiment(
+                "crash leg completed without crashing — scripted abort never fired".into(),
+            ))
+        }
+    }
+    let ckpt = Checkpoint::read_file(&ckpt_path).map_err(Error::from)?;
+    let (log_d, bc_d) =
+        stub_run(seed, precision, total_steps, None, None, Some(&ckpt), None, None)?;
+    let resume_mismatches = usize::from(probe(&bc_d.latest().engine, seed)? != sig_a);
+
+    // Experience the faulted run's actors collected but the learner
+    // never consumed (the killed actor's unflushed tail + queued batches
+    // dropped at shutdown).
+    let collected: usize = log_b.actor_stats.iter().map(|s| s.env_steps).sum();
+    let steps_lost =
+        collected.saturating_sub(log_b.env_steps + log_b.env_steps_overshoot);
+
+    Ok(row(&[
+        ("engine", s(precision.label())),
+        ("bits", n(precision.bits() as f64)),
+        ("env_steps", n(log_b.env_steps as f64)),
+        ("train_steps", n(log_b.train_steps as f64)),
+        ("broadcasts", n(log_b.broadcasts as f64)),
+        ("restarts", n(log_b.actor_restarts as f64)),
+        ("recovery_ms", n(log_b.restart_recovery_ms)),
+        ("kills", n(plan.count(FaultKind::ActorKill) as f64)),
+        ("publishes_dropped", n(plan.count(FaultKind::PublishDrop) as f64)),
+        ("hub_publish_failures", n(log_b.hub_publish_failures as f64)),
+        ("connect_failures", n(plan.count(FaultKind::ConnectFail) as f64)),
+        ("client_retries", n(client.retries() as f64)),
+        ("steps_lost", n(steps_lost as f64)),
+        ("ckpt_trains", n(ckpt.train_steps as f64)),
+        ("resume_trains", n((log_d.train_steps - ckpt.train_steps as usize) as f64)),
+        ("clean_trains", n(log_a.train_steps as f64)),
+        ("logit_mismatches", n(logit_mismatches as f64)),
+        ("resume_mismatches", n(resume_mismatches as f64)),
+        ("final_version", n(bc_b.version() as f64)),
+    ]))
+}
+
+impl Experiment for Faults {
+    fn name(&self) -> &'static str {
+        "faults"
+    }
+
+    fn description(&self) -> &'static str {
+        "chaos: actor kill + publish/connect faults + learner crash-resume, bit-exact recovery (offline)"
+    }
+
+    fn items(&self, ctx: &ExpCtx) -> Vec<String> {
+        precisions(ctx).into_iter().map(|p| p.label()).collect()
+    }
+
+    fn run_item(&self, ctx: &ExpCtx, item: &str) -> Result<Vec<Row>> {
+        let precision = parse_item(item)?;
+        let total_steps = ((BASE_STEPS * ctx.scale as f64) as usize).clamp(240, 2_400);
+        Ok(vec![faults_cell(ctx, precision, total_steps)?])
+    }
+
+    fn render(&self, _ctx: &ExpCtx, rows: &[Row]) -> String {
+        let mut out = String::from(
+            "Fault injection — supervised pool, degrade-not-abort transports,\n\
+             checkpoint/resume (offline stub learner on cartpole)\n\n",
+        );
+        out.push_str(&render_table(
+            &["engine", "bits", "restarts", "recovery_ms", "publishes_dropped",
+              "hub_publish_failures", "connect_failures", "client_retries", "steps_lost",
+              "logit_mismatches", "resume_mismatches"],
+            rows,
+        ));
+        out.push_str(
+            "\nEvery row absorbed an actor kill (supervisor respawn), one dropped\n\
+             and one failed hub publish (degrade to in-process transport), and\n\
+             two failed client connects (retry budget), then matched the\n\
+             fault-free run's final engine bit for bit (logit_mismatches = 0).\n\
+             resume_mismatches = 0 says a learner killed mid-run and resumed\n\
+             from its QCKP checkpoint converged to the same engine too.\n",
+        );
+
+        let mut doc = std::collections::BTreeMap::new();
+        doc.insert("bench".to_string(), Json::Str("faults".into()));
+        doc.insert(
+            "rows".to_string(),
+            Json::Arr(rows.iter().map(|r| Json::Obj(r.clone())).collect()),
+        );
+        match write_json_file("BENCH_faults.json", &Json::Obj(doc)) {
+            Ok(()) => out.push_str("\nwrote BENCH_faults.json\n"),
+            Err(e) => out.push_str(&format!("\nwarning: BENCH_faults.json not written: {e}\n")),
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctx() -> ExpCtx<'static> {
+        ExpCtx {
+            rt: None,
+            runs_dir: std::env::temp_dir().join("quarl_faults_test"),
+            scale: 1.0,
+            episodes: 1,
+            seed: 3,
+            bits: vec![],
+            bits_explicit: false,
+            filter: None,
+            shard: None,
+            jobs: 0,
+            threads: 1,
+            window_us: 200,
+            max_batch: 8,
+            snapshot_dir: None,
+            sustain: crate::sustain::SustainConfig::default(),
+        }
+    }
+
+    #[test]
+    fn items_sweep_precisions() {
+        let c = ctx();
+        assert_eq!(Faults.items(&c), vec!["fp32", "int8"]);
+        let mut c4 = ctx();
+        c4.bits = vec![4, 8];
+        c4.bits_explicit = true;
+        assert_eq!(Faults.items(&c4), vec!["fp32", "int8", "int4"]);
+        assert!(parse_item("float").is_err());
+    }
+
+    #[test]
+    fn faults_cell_recovers_bit_exactly_at_int8() {
+        let c = ctx();
+        let r = faults_cell(&c, Precision::Int(8), 300).unwrap();
+        assert_eq!(r["logit_mismatches"], Json::Num(0.0), "faulted run must match clean run");
+        assert_eq!(r["resume_mismatches"], Json::Num(0.0), "resumed run must match clean run");
+        assert!(r["restarts"].as_f64().unwrap() >= 1.0, "the kill must be absorbed");
+        assert_eq!(r["kills"], Json::Num(1.0));
+        assert_eq!(r["publishes_dropped"], Json::Num(1.0));
+        assert_eq!(r["hub_publish_failures"], Json::Num(1.0));
+        assert_eq!(r["connect_failures"], Json::Num(2.0));
+        assert!(r["client_retries"].as_f64().unwrap() >= 2.0);
+        // The crashed run checkpointed strictly before the clean total,
+        // and the resumed run paid exactly the remaining trains.
+        let total = r["clean_trains"].as_f64().unwrap();
+        let at = r["ckpt_trains"].as_f64().unwrap();
+        assert!(at > 0.0 && at < total);
+        assert_eq!(r["resume_trains"].as_f64().unwrap(), total - at);
+        std::fs::remove_dir_all(c.runs_dir).ok();
+    }
+}

@@ -120,6 +120,7 @@ pub fn all_experiments() -> Vec<Box<dyn Experiment>> {
         Box::new(crate::coordinator::exp_carbon::Carbon),
         Box::new(crate::coordinator::exp_serve::Serve),
         Box::new(crate::coordinator::exp_snapshot::Dist),
+        Box::new(crate::coordinator::exp_faults::Faults),
     ]
 }
 

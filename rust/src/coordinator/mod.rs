@@ -15,8 +15,10 @@
 //! * `exp_*` — one module per paper table/figure, plus [`exp_actorq`]
 //!   (systems study), [`exp_carbon`] (emissions accounting; runs
 //!   offline), [`exp_serve`] (dynamic-batching policy serving; runs
-//!   offline), and [`exp_snapshot`] (over-the-wire param distribution
-//!   on loopback; runs offline).
+//!   offline), [`exp_snapshot`] (over-the-wire param distribution
+//!   on loopback; runs offline), and [`exp_faults`] (chaos run:
+//!   scripted actor kills, publish/connect faults, and learner
+//!   crash-resume, checked for bit-exact recovery; runs offline).
 
 pub mod cache;
 pub mod evaluator;
@@ -25,6 +27,7 @@ pub mod exp_actorq;
 pub mod exp_carbon;
 pub mod exp_deploy;
 pub mod exp_dists;
+pub mod exp_faults;
 pub mod exp_matrix;
 pub mod exp_mixed;
 pub mod exp_qat;

@@ -1,0 +1,306 @@
+//! Deterministic fault injection for the crash-safety test harness.
+//!
+//! A [`FaultPlan`] is a *script* of faults — kill actor N once it has
+//! stepped S times, drop/delay/corrupt/fail the K-th hub publish, fail
+//! the M-th client connect — consulted by hooks threaded through the
+//! actor pool ([`crate::actorq::ActorPool`]), the broadcast
+//! ([`crate::actorq::ParamBroadcast`]), and the snapshot client
+//! ([`crate::snapshot::SnapshotClient`]). Every fault fires exactly once
+//! at a position determined by the plan, never by wall-clock timing, so
+//! a chaos run is exactly reproducible: same seed + same plan → same
+//! fault sequence → (with a correct recovery layer) the same final
+//! engine as the fault-free run.
+//!
+//! The plan also keeps an event log ([`FaultPlan::events`]) so the
+//! `exp faults` experiment can report which faults actually fired,
+//! and the seeded stream picks corruption offsets deterministically.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+use crate::rng::mix_seed;
+
+/// What happened, for the experiment's accounting.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// An actor thread was told to exit mid-run (simulated crash).
+    ActorKill,
+    /// A hub publish was silently discarded (version lost on the wire).
+    PublishDrop,
+    /// A hub publish was delayed before delivery.
+    PublishDelay,
+    /// A hub publish delivered a payload with a flipped byte.
+    PublishCorrupt,
+    /// A hub publish failed with a simulated transport error.
+    PublishFail,
+    /// A client connect attempt failed with a simulated I/O error.
+    ConnectFail,
+}
+
+/// One fired fault, recorded when the hook consumes it.
+#[derive(Debug, Clone)]
+pub struct FaultEvent {
+    pub kind: FaultKind,
+    /// Human-readable position: actor id + step, publish index, …
+    pub detail: String,
+}
+
+/// What the broadcast should do with the current hub publish.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PublishAction {
+    /// No fault scheduled: deliver normally.
+    Deliver,
+    /// Pretend success but never hand the bytes to the hub.
+    Drop,
+    /// Sleep, then deliver (models a slow wire, not a lost one).
+    Delay(Duration),
+    /// Deliver bytes with one payload byte flipped (the hub stores them
+    /// header-checked only; the *client's* full verification must catch
+    /// the damage as a typed error).
+    Corrupt,
+    /// Simulate the hub transport erroring out; the broadcast must
+    /// degrade to the in-process path instead of failing the publish.
+    Fail,
+}
+
+struct KillSpec {
+    actor: usize,
+    at_step: usize,
+    fired: AtomicBool,
+}
+
+struct PublishSpec {
+    /// 1-based index into the sequence of hub publishes.
+    nth: u64,
+    action: PublishAction,
+    fired: AtomicBool,
+}
+
+struct ConnectSpec {
+    /// 1-based index into the sequence of client connect attempts.
+    nth: u64,
+    fired: AtomicBool,
+}
+
+/// A deterministic, consumed-once fault script. Build with the chained
+/// constructors, share via `Arc`, and hand clones to the pool config,
+/// the broadcast, and the client config.
+pub struct FaultPlan {
+    seed: u64,
+    kills: Vec<KillSpec>,
+    publishes: Vec<PublishSpec>,
+    connects: Vec<ConnectSpec>,
+    publish_count: AtomicU64,
+    connect_count: AtomicU64,
+    events: Mutex<Vec<FaultEvent>>,
+}
+
+impl std::fmt::Debug for FaultPlan {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("FaultPlan")
+            .field("seed", &self.seed)
+            .field("kills", &self.kills.len())
+            .field("publishes", &self.publishes.len())
+            .field("connects", &self.connects.len())
+            .finish()
+    }
+}
+
+impl FaultPlan {
+    /// An empty plan; the seed feeds the corruption-offset stream.
+    pub fn new(seed: u64) -> FaultPlan {
+        FaultPlan {
+            seed,
+            kills: Vec::new(),
+            publishes: Vec::new(),
+            connects: Vec::new(),
+            publish_count: AtomicU64::new(0),
+            connect_count: AtomicU64::new(0),
+            events: Mutex::new(Vec::new()),
+        }
+    }
+
+    /// Kill actor `actor` once its private step counter reaches
+    /// `at_step` (fires at the first sweep where `env_steps >= at_step`).
+    pub fn kill_actor(mut self, actor: usize, at_step: usize) -> FaultPlan {
+        self.kills.push(KillSpec { actor, at_step, fired: AtomicBool::new(false) });
+        self
+    }
+
+    /// Silently discard the `nth` hub publish (1-based).
+    pub fn drop_publish(mut self, nth: u64) -> FaultPlan {
+        self.publishes.push(PublishSpec { nth, action: PublishAction::Drop, fired: AtomicBool::new(false) });
+        self
+    }
+
+    /// Delay the `nth` hub publish by `ms` milliseconds (1-based).
+    pub fn delay_publish(mut self, nth: u64, ms: u64) -> FaultPlan {
+        self.publishes.push(PublishSpec {
+            nth,
+            action: PublishAction::Delay(Duration::from_millis(ms)),
+            fired: AtomicBool::new(false),
+        });
+        self
+    }
+
+    /// Flip one payload byte of the `nth` hub publish (1-based).
+    pub fn corrupt_publish(mut self, nth: u64) -> FaultPlan {
+        self.publishes.push(PublishSpec { nth, action: PublishAction::Corrupt, fired: AtomicBool::new(false) });
+        self
+    }
+
+    /// Fail the `nth` hub publish with a simulated transport error.
+    pub fn fail_publish(mut self, nth: u64) -> FaultPlan {
+        self.publishes.push(PublishSpec { nth, action: PublishAction::Fail, fired: AtomicBool::new(false) });
+        self
+    }
+
+    /// Fail the `nth` client connect attempt (1-based) with an I/O error.
+    pub fn fail_connect(mut self, nth: u64) -> FaultPlan {
+        self.connects.push(ConnectSpec { nth, fired: AtomicBool::new(false) });
+        self
+    }
+
+    fn record(&self, kind: FaultKind, detail: String) {
+        self.events.lock().expect("fault event log poisoned").push(FaultEvent { kind, detail });
+    }
+
+    /// Hook for the actor loop: should this actor die now? Consumed once
+    /// per kill spec, so a respawned replacement on the same slot id is
+    /// not re-killed.
+    pub fn actor_should_die(&self, actor: usize, env_steps: usize) -> bool {
+        for k in &self.kills {
+            if k.actor == actor
+                && env_steps >= k.at_step
+                && k.fired
+                    .compare_exchange(false, true, Ordering::SeqCst, Ordering::SeqCst)
+                    .is_ok()
+            {
+                self.record(FaultKind::ActorKill, format!("actor {actor} at step {env_steps}"));
+                return true;
+            }
+        }
+        false
+    }
+
+    /// Hook for the broadcast's hub path: advance the publish counter and
+    /// return the scripted action for this publish. Call only when a hub
+    /// is attached — the counter indexes *hub* publishes.
+    pub fn on_publish(&self) -> PublishAction {
+        let k = self.publish_count.fetch_add(1, Ordering::SeqCst) + 1;
+        for p in &self.publishes {
+            if p.nth == k
+                && p.fired
+                    .compare_exchange(false, true, Ordering::SeqCst, Ordering::SeqCst)
+                    .is_ok()
+            {
+                let kind = match p.action {
+                    PublishAction::Drop => FaultKind::PublishDrop,
+                    PublishAction::Delay(_) => FaultKind::PublishDelay,
+                    PublishAction::Corrupt => FaultKind::PublishCorrupt,
+                    PublishAction::Fail => FaultKind::PublishFail,
+                    PublishAction::Deliver => continue,
+                };
+                self.record(kind, format!("publish {k}"));
+                return p.action;
+            }
+        }
+        PublishAction::Deliver
+    }
+
+    /// Hook for the client: advance the connect counter and return true
+    /// if this attempt should fail.
+    pub fn on_connect(&self) -> bool {
+        let k = self.connect_count.fetch_add(1, Ordering::SeqCst) + 1;
+        for c in &self.connects {
+            if c.nth == k
+                && c.fired
+                    .compare_exchange(false, true, Ordering::SeqCst, Ordering::SeqCst)
+                    .is_ok()
+            {
+                self.record(FaultKind::ConnectFail, format!("connect {k}"));
+                return true;
+            }
+        }
+        false
+    }
+
+    /// Deterministic corruption offset for the `k`-th publish: a byte
+    /// index in `[lo, len)` derived from the plan seed. `lo` excludes the
+    /// header+manifest region so the damage lands in the payload, where
+    /// only full per-section CRC verification (not the hub's header peek)
+    /// can catch it.
+    pub fn corrupt_offset(&self, k: u64, lo: usize, len: usize) -> usize {
+        debug_assert!(lo < len, "corruption window is empty");
+        lo + (mix_seed(self.seed, k) as usize) % (len - lo)
+    }
+
+    /// Everything that actually fired, in firing order.
+    pub fn events(&self) -> Vec<FaultEvent> {
+        self.events.lock().expect("fault event log poisoned").clone()
+    }
+
+    /// How many events of `kind` fired.
+    pub fn count(&self, kind: FaultKind) -> usize {
+        self.events().iter().filter(|e| e.kind == kind).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kill_fires_once_at_threshold() {
+        let plan = FaultPlan::new(1).kill_actor(2, 10);
+        assert!(!plan.actor_should_die(2, 9), "below threshold");
+        assert!(!plan.actor_should_die(0, 50), "wrong actor");
+        assert!(plan.actor_should_die(2, 10), "at threshold");
+        assert!(!plan.actor_should_die(2, 11), "consumed once — respawn survives");
+        assert_eq!(plan.count(FaultKind::ActorKill), 1);
+    }
+
+    #[test]
+    fn publish_faults_key_on_the_counter() {
+        let plan = FaultPlan::new(2).drop_publish(2).corrupt_publish(3).fail_publish(4);
+        assert_eq!(plan.on_publish(), PublishAction::Deliver); // 1
+        assert_eq!(plan.on_publish(), PublishAction::Drop); // 2
+        assert_eq!(plan.on_publish(), PublishAction::Corrupt); // 3
+        assert_eq!(plan.on_publish(), PublishAction::Fail); // 4
+        assert_eq!(plan.on_publish(), PublishAction::Deliver); // 5
+        assert_eq!(plan.events().len(), 3);
+    }
+
+    #[test]
+    fn delay_carries_its_duration() {
+        let plan = FaultPlan::new(3).delay_publish(1, 7);
+        match plan.on_publish() {
+            PublishAction::Delay(d) => assert_eq!(d, Duration::from_millis(7)),
+            other => panic!("expected delay, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn connect_failures_hit_the_scripted_attempts() {
+        let plan = FaultPlan::new(4).fail_connect(1).fail_connect(2);
+        assert!(plan.on_connect()); // 1
+        assert!(plan.on_connect()); // 2
+        assert!(!plan.on_connect()); // 3
+        assert_eq!(plan.count(FaultKind::ConnectFail), 2);
+    }
+
+    #[test]
+    fn corrupt_offset_is_deterministic_and_in_window() {
+        let a = FaultPlan::new(9);
+        let b = FaultPlan::new(9);
+        for k in 0..32 {
+            let off = a.corrupt_offset(k, 24, 1000);
+            assert_eq!(off, b.corrupt_offset(k, 24, 1000), "same seed, same offset");
+            assert!((24..1000).contains(&off), "offset {off} outside payload window");
+        }
+        let c = FaultPlan::new(10);
+        let distinct = (0..32).filter(|&k| a.corrupt_offset(k, 24, 1000) != c.corrupt_offset(k, 24, 1000)).count();
+        assert!(distinct > 16, "different seeds should pick different bytes");
+    }
+}

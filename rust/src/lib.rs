@@ -88,6 +88,24 @@
 //! report is emitted as machine-readable JSON (`BENCH_carbon.json`,
 //! `BENCH_actorq.json`) so the efficiency trajectory is tracked across
 //! PRs.
+//!
+//! ## Crash safety: supervision, checkpoints, and retrying transports
+//!
+//! Long ActorQ runs survive faults instead of aborting (a crashed run
+//! restarted from scratch doubles the carbon the sustain/ subsystem
+//! exists to minimize). [`actorq::ActorPool`] supervises its actors and
+//! respawns a dead one on a fresh [`rng::mix_seed`] stream under a
+//! capped-exponential-backoff restart budget; [`actorq::LearnerHarness`]
+//! periodically writes an atomic `QCKP` checkpoint
+//! ([`actorq::Checkpoint`] — QSNP-style manifest + per-section CRCs plus
+//! learner step/RNG state) and resumes from it bit-identically;
+//! [`snapshot::SnapshotClient`] retries transient I/O under
+//! [`snapshot::ClientConfig`] timeouts/backoff while corruption stays
+//! fatal-fast. The deterministic [`faults`] layer (seeded
+//! [`faults::FaultPlan`]) injects actor kills, hub publish
+//! drop/delay/corrupt, and connect failures so the chaos suite and the
+//! `faults` experiment can *prove* recovery reaches the same final
+//! engine as the fault-free run (`BENCH_faults.json`).
 
 pub mod actorq;
 pub mod algos;
@@ -96,6 +114,7 @@ pub mod config;
 pub mod coordinator;
 pub mod envs;
 pub mod error;
+pub mod faults;
 pub mod inference;
 pub mod quant;
 pub mod replay;

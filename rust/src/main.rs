@@ -27,6 +27,8 @@
 //! |          | histograms per precision x client count (offline)         |
 //! | `dist`   | §3 cheap distribution — snapshot artifacts over loopback  |
 //! |          | HTTP: publish latency, fetch bytes, staleness (offline)   |
+//! | `faults` | chaos: actor kill + publish/connect faults + learner      |
+//! |          | crash-resume, checked bit-exact per precision (offline)   |
 //!
 //! `--bits` (validated comma list, 2..=16, deduped + sorted) selects the
 //! bitwidth sweep: `fig2` trains QAT at each width (defaulting to
@@ -41,7 +43,8 @@
 //! spawns). `serve` also honors `--bits`, and takes `--window-us` /
 //! `--max-batch` for its batching window and coalescing cap. `dist`
 //! honors `--bits` too and takes `--snapshot-dir` for where fetched
-//! snapshot artifacts land (default `<runs-dir>/snapshots`).
+//! snapshot artifacts land (default `<runs-dir>/snapshots`). `faults`
+//! honors `--bits` the same way and writes `BENCH_faults.json`.
 //!
 //! Every experiment appends JSONL rows under `runs/results/` and renders
 //! a paper-style text table; `carbon` (and `bench_actorq`,

@@ -12,13 +12,61 @@
 //! its partial file rather than leaving a poisoned resume point.
 
 use std::io::{Read, Write};
-use std::net::TcpStream;
+use std::net::{TcpStream, ToSocketAddrs};
 use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
+use crate::faults::FaultPlan;
 use crate::inference::{Engine, EngineConfig};
+use crate::rng::mix_seed;
 use crate::snapshot::artifact::{Artifact, HEADER_LEN};
 use crate::snapshot::SnapshotError;
+
+/// Transport knobs for [`SnapshotClient`]. The defaults reproduce the
+/// historical behavior where one existed (10 s read timeout) and close
+/// two hangs where none did: `connect` now times out instead of waiting
+/// on the OS default (minutes against an unroutable address), and
+/// writes time out instead of blocking forever on a wedged peer.
+#[derive(Debug, Clone)]
+pub struct ClientConfig {
+    /// Per-address TCP connect timeout (was: unbounded OS default).
+    pub connect_timeout: Duration,
+    /// Socket read timeout (the historical hardcoded 10 s).
+    pub read_timeout: Duration,
+    /// Socket write timeout (was: unset, i.e. unbounded).
+    pub write_timeout: Duration,
+    /// Extra attempts after a transient (`Io`/`Http`) failure; typed
+    /// corruption errors are never retried.
+    pub retries: u32,
+    /// Base backoff before retry k (doubles each retry, capped).
+    pub backoff: Duration,
+    /// Backoff ceiling.
+    pub backoff_cap: Duration,
+    /// Seed for the deterministic jitter stream (each wait adds
+    /// `mix_seed(jitter_seed, attempt#) % (backoff/2)` milliseconds, so
+    /// a retrying fleet decorrelates without losing reproducibility).
+    pub jitter_seed: u64,
+    /// Optional deterministic fault script (chaos tests, `exp faults`):
+    /// scripted connect attempts fail with an injected `Io` error.
+    pub faults: Option<Arc<FaultPlan>>,
+}
+
+impl Default for ClientConfig {
+    fn default() -> ClientConfig {
+        ClientConfig {
+            connect_timeout: Duration::from_secs(10),
+            read_timeout: Duration::from_secs(10),
+            write_timeout: Duration::from_secs(10),
+            retries: 3,
+            backoff: Duration::from_millis(10),
+            backoff_cap: Duration::from_millis(500),
+            jitter_seed: 0,
+            faults: None,
+        }
+    }
+}
 
 /// What a [`SnapshotClient::fetch_to_file`] actually moved — the
 /// `exp dist` fetch-bytes accounting and the resume test read this.
@@ -41,33 +89,134 @@ struct Response {
     body: Vec<u8>,
 }
 
-/// Blocking snapshot fetcher. Holds only the server address; every
-/// request is its own short-lived connection (matching the server's
-/// `Connection: close` framing).
-#[derive(Debug, Clone)]
+/// Blocking snapshot fetcher. Holds the server address plus transport
+/// config; every request is its own short-lived connection (matching
+/// the server's `Connection: close` framing). Transient `Io`/`Http`
+/// failures are retried under [`ClientConfig`]'s budget with capped
+/// exponential backoff and deterministic jitter; typed corruption
+/// errors (`BadMagic`, `ChecksumMismatch`, …) stay fatal-fast.
+#[derive(Debug)]
 pub struct SnapshotClient {
     addr: String,
+    cfg: ClientConfig,
+    /// Transient failures retried so far (fault-recovery accounting).
+    retries_done: AtomicU64,
+    /// Position in the jitter stream (monotone across retries).
+    jitter_seq: AtomicU64,
+}
+
+impl Clone for SnapshotClient {
+    fn clone(&self) -> SnapshotClient {
+        SnapshotClient {
+            addr: self.addr.clone(),
+            cfg: self.cfg.clone(),
+            retries_done: AtomicU64::new(self.retries_done.load(Ordering::Relaxed)),
+            jitter_seq: AtomicU64::new(self.jitter_seq.load(Ordering::Relaxed)),
+        }
+    }
 }
 
 impl SnapshotClient {
-    /// Client for the snapshot server at `addr`
-    /// (e.g. `server.addr()` or `"127.0.0.1:4788"`).
+    /// Client for the snapshot server at `addr` with default transport
+    /// config (e.g. `server.addr()` or `"127.0.0.1:4788"`).
     pub fn new(addr: impl std::fmt::Display) -> SnapshotClient {
-        SnapshotClient { addr: addr.to_string() }
+        SnapshotClient::with_config(addr, ClientConfig::default())
     }
 
-    /// Issue one GET and read the full response.
-    fn get(&self, path: &str, extra_headers: &str) -> Result<Response, SnapshotError> {
+    /// [`SnapshotClient::new`] with explicit timeouts/retry budget.
+    pub fn with_config(addr: impl std::fmt::Display, cfg: ClientConfig) -> SnapshotClient {
+        SnapshotClient {
+            addr: addr.to_string(),
+            cfg,
+            retries_done: AtomicU64::new(0),
+            jitter_seq: AtomicU64::new(0),
+        }
+    }
+
+    /// Transient failures this client has retried (across all requests).
+    pub fn retries(&self) -> u64 {
+        self.retries_done.load(Ordering::Relaxed)
+    }
+
+    /// Open one connection under the configured connect timeout,
+    /// resolving the address and trying each candidate in turn — a
+    /// plain `TcpStream::connect` waits on the OS default (minutes for
+    /// an unroutable address), which is exactly the hang this bounds.
+    fn connect(&self) -> Result<TcpStream, SnapshotError> {
+        if let Some(plan) = &self.cfg.faults {
+            if plan.on_connect() {
+                return Err(SnapshotError::Io(format!(
+                    "connect {}: injected connect failure",
+                    self.addr
+                )));
+            }
+        }
+        let addrs = self
+            .addr
+            .to_socket_addrs()
+            .map_err(|e| SnapshotError::Io(format!("resolve {}: {e}", self.addr)))?;
+        let mut last: Option<std::io::Error> = None;
+        for a in addrs {
+            match TcpStream::connect_timeout(&a, self.cfg.connect_timeout) {
+                Ok(s) => return Ok(s),
+                Err(e) => last = Some(e),
+            }
+        }
+        Err(match last {
+            Some(e) => SnapshotError::Io(format!("connect {}: {e}", self.addr)),
+            None => SnapshotError::Io(format!("resolve {}: no addresses", self.addr)),
+        })
+    }
+
+    /// Issue one GET and read the full response (single attempt).
+    fn get_once(&self, path: &str, extra_headers: &str) -> Result<Response, SnapshotError> {
         let io = |what: &str, e: std::io::Error| {
             SnapshotError::Io(format!("{what} {}: {e}", self.addr))
         };
-        let mut stream = TcpStream::connect(&self.addr).map_err(|e| io("connect", e))?;
-        stream.set_read_timeout(Some(Duration::from_secs(10))).map_err(|e| io("timeout", e))?;
+        let mut stream = self.connect()?;
+        stream
+            .set_read_timeout(Some(self.cfg.read_timeout))
+            .map_err(|e| io("timeout", e))?;
+        stream
+            .set_write_timeout(Some(self.cfg.write_timeout))
+            .map_err(|e| io("timeout", e))?;
         write!(stream, "GET {path} HTTP/1.1\r\nHost: {}\r\n{extra_headers}\r\n", self.addr)
             .map_err(|e| io("send", e))?;
         let mut raw = Vec::new();
         stream.read_to_end(&mut raw).map_err(|e| io("read", e))?;
         parse_response(&raw)
+    }
+
+    /// Deterministic capped-exponential backoff before retry `attempt`
+    /// (1-based): `min(backoff · 2^(attempt−1), cap)` plus a seeded
+    /// jitter in `[0, base/2)` milliseconds.
+    fn backoff_delay(&self, attempt: u32) -> Duration {
+        let base = self
+            .cfg
+            .backoff
+            .saturating_mul(1u32 << (attempt - 1).min(16))
+            .min(self.cfg.backoff_cap);
+        let k = self.jitter_seq.fetch_add(1, Ordering::Relaxed);
+        let span = (base.as_millis() as u64 / 2).max(1);
+        base + Duration::from_millis(mix_seed(self.cfg.jitter_seed, k) % span)
+    }
+
+    /// Issue one GET with the retry budget applied to transient
+    /// failures. Corruption-class errors pass straight through, and so
+    /// do status-level errors (they are raised by the callers *after* a
+    /// successful exchange, so they never enter this loop).
+    fn get(&self, path: &str, extra_headers: &str) -> Result<Response, SnapshotError> {
+        let mut attempt = 0u32;
+        loop {
+            match self.get_once(path, extra_headers) {
+                Err(e) if e.is_transient() && attempt < self.cfg.retries => {
+                    attempt += 1;
+                    self.retries_done.fetch_add(1, Ordering::Relaxed);
+                    std::thread::sleep(self.backoff_delay(attempt));
+                }
+                other => return other,
+            }
+        }
     }
 
     /// The server's current param version (0 before any publish).
@@ -81,17 +230,29 @@ impl SnapshotClient {
 
     /// Poll until the served version reaches `min` (the actor-side
     /// "wait for the next publish" primitive), at a 2 ms cadence.
+    ///
+    /// A transient `version()` failure inside the window is treated as
+    /// "not yet" — the server may be restarting, the wire flaky — and
+    /// only surfaces if the deadline expires with the error still
+    /// standing. Non-transient errors abort immediately.
     pub fn wait_for_version(&self, min: u64, timeout: Duration) -> Result<u64, SnapshotError> {
         let start = Instant::now();
         loop {
-            let v = self.version()?;
-            if v >= min {
-                return Ok(v);
-            }
-            if start.elapsed() >= timeout {
-                return Err(SnapshotError::Timeout {
-                    waited_ms: start.elapsed().as_millis() as u64,
-                });
+            match self.version() {
+                Ok(v) if v >= min => return Ok(v),
+                Ok(_) => {
+                    if start.elapsed() >= timeout {
+                        return Err(SnapshotError::Timeout {
+                            waited_ms: start.elapsed().as_millis() as u64,
+                        });
+                    }
+                }
+                Err(e) if e.is_transient() => {
+                    if start.elapsed() >= timeout {
+                        return Err(e);
+                    }
+                }
+                Err(e) => return Err(e),
             }
             std::thread::sleep(Duration::from_millis(2));
         }
@@ -325,6 +486,82 @@ mod tests {
         }
         hub.publish(&Artifact::from_engine_quant(&eng, 3)).unwrap();
         assert_eq!(client.wait_for_version(3, Duration::from_secs(5)).unwrap(), 3);
+    }
+
+    #[test]
+    fn injected_connect_failures_are_retried_within_budget() {
+        use crate::faults::FaultPlan;
+        let (server, _hub, mut src) = serve_quant(7);
+        // The two scripted connect failures are absorbed by the retry
+        // budget; the third attempt lands and the fetch is bit-exact.
+        let plan = Arc::new(FaultPlan::new(21).fail_connect(1).fail_connect(2));
+        let client = SnapshotClient::with_config(
+            server.addr(),
+            ClientConfig {
+                retries: 3,
+                backoff: Duration::from_millis(1),
+                faults: Some(plan),
+                ..ClientConfig::default()
+            },
+        );
+        let art = client.fetch().unwrap();
+        assert_eq!(art.version, 7);
+        assert_eq!(client.retries(), 2, "both injected failures retried");
+        let mut eng = art.build_engine(EngineConfig::default()).unwrap();
+        let x: Vec<f32> = (0..6).map(|i| (i as f32 * 0.9).sin()).collect();
+        let mut a = vec![0.0f32; 3];
+        let mut b = vec![0.0f32; 3];
+        src.forward(&x, &mut a).unwrap();
+        eng.forward(&x, &mut b).unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn zero_retry_budget_surfaces_transient_errors_unretried() {
+        use crate::faults::FaultPlan;
+        let (server, _hub, _) = serve_quant(1);
+        let plan = Arc::new(FaultPlan::new(22).fail_connect(1));
+        let client = SnapshotClient::with_config(
+            server.addr(),
+            ClientConfig { retries: 0, faults: Some(plan), ..ClientConfig::default() },
+        );
+        match client.version() {
+            Err(SnapshotError::Io(m)) => assert!(m.contains("injected"), "{m}"),
+            other => panic!("expected Io, got {other:?}"),
+        }
+        assert_eq!(client.retries(), 0);
+        // The fault is consumed; the next call goes through.
+        assert_eq!(client.version().unwrap(), 1);
+    }
+
+    #[test]
+    fn wait_for_version_outlives_transient_errors_until_its_deadline() {
+        // A connection-refused port: every version() probe fails with a
+        // transient Io error. The old behavior aborted on the FIRST one;
+        // now the poll loop must keep trying until the deadline and only
+        // then surface the transport error.
+        let addr = {
+            let l = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+            l.local_addr().unwrap() // listener dropped: refused from now on
+        };
+        let client = SnapshotClient::with_config(
+            addr,
+            ClientConfig {
+                retries: 0, // isolate the poll loop from the per-request retry layer
+                ..ClientConfig::default()
+            },
+        );
+        let t0 = Instant::now();
+        let timeout = Duration::from_millis(120);
+        match client.wait_for_version(1, timeout) {
+            Err(SnapshotError::Io(_)) => {}
+            other => panic!("expected the transient error after the deadline, got {other:?}"),
+        }
+        assert!(
+            t0.elapsed() >= timeout,
+            "gave up after {:?}, before the {timeout:?} deadline",
+            t0.elapsed()
+        );
     }
 
     #[test]

@@ -48,7 +48,7 @@ pub mod server;
 
 pub use artifact::{Artifact, LayerMeta, SectionMeta, HEADER_LEN, MAGIC};
 pub use checksum::crc32;
-pub use client::{FetchStats, SnapshotClient};
+pub use client::{ClientConfig, FetchStats, SnapshotClient};
 pub use server::{SnapshotHub, SnapshotServer};
 
 use std::fmt;
@@ -104,6 +104,18 @@ impl fmt::Display for SnapshotError {
             SnapshotError::Io(m) => write!(f, "io: {m}"),
             SnapshotError::Timeout { waited_ms } => write!(f, "timed out after {waited_ms} ms"),
         }
+    }
+}
+
+impl SnapshotError {
+    /// Whether retrying the same request might succeed. Only
+    /// transport-level failures (`Io`, `Http`) qualify: a flaky socket
+    /// or a cut connection deserves another attempt, while every
+    /// corruption/verification error (`BadMagic`, `ChecksumMismatch`,
+    /// `Truncated`, …) is a property of the bytes themselves and must
+    /// stay fatal-fast — retrying would only re-download the damage.
+    pub fn is_transient(&self) -> bool {
+        matches!(self, SnapshotError::Io(_) | SnapshotError::Http(_))
     }
 }
 

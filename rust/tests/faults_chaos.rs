@@ -1,0 +1,264 @@
+//! Chaos property suite for the crash-safe ActorQ stack: a seeded run
+//! with scripted faults (actor kill mid-run, dropped + failed hub
+//! publishes, flaky client connects) must reach the same step budget
+//! and the **bit-identical** final engine as the fault-free run at the
+//! same seed — at fp32 and every packed width 2..=8. Same bar for a
+//! learner killed mid-run and resumed from its QCKP checkpoint. And a
+//! checkpoint blob must reject *every* single-byte corruption and
+//! *every* truncation as a typed error before any state is restored.
+//!
+//! The learner is the stub train program also used by `exp faults`:
+//! parameter evolution is a pure function of (train count, learner RNG
+//! stream), and the pacer owes exactly `(total - warmup) / train_freq`
+//! trains at equal env-step budget — so any divergence is a real
+//! recovery bug, not scheduling noise.
+
+use std::cell::RefCell;
+use std::sync::Arc;
+use std::time::Duration;
+
+use quarl::actorq::{
+    ActorQConfig, Checkpoint, CheckpointPolicy, CheckpointState, HarnessConfig, LearnerHarness,
+    ParamBroadcast, Precision, ReturnLog,
+};
+use quarl::algos::common::EpsSchedule;
+use quarl::faults::FaultPlan;
+use quarl::inference::Engine;
+use quarl::rng::Pcg32;
+use quarl::runtime::manifest::TensorSpec;
+use quarl::runtime::ParamSet;
+use quarl::snapshot::{ClientConfig, SnapshotClient, SnapshotError, SnapshotHub, SnapshotServer};
+
+const DIMS: [usize; 3] = [4, 16, 2];
+const TOTAL_STEPS: usize = 260;
+const WARMUP: usize = 100;
+const TRAIN_FREQ: usize = 2;
+const SEED: u64 = 77;
+
+fn init_params(seed: u64) -> ParamSet {
+    let mut specs = Vec::new();
+    for i in 0..DIMS.len() - 1 {
+        specs.push(TensorSpec { name: format!("q.w{i}"), shape: vec![DIMS[i], DIMS[i + 1]] });
+        specs.push(TensorSpec { name: format!("q.b{i}"), shape: vec![DIMS[i + 1]] });
+    }
+    let mut rng = Pcg32::new(seed, 47);
+    ParamSet::init(&specs, &mut rng)
+}
+
+fn exploration() -> quarl::actorq::Exploration {
+    quarl::actorq::Exploration::EpsGreedy {
+        schedule: EpsSchedule { start: 0.05, end: 0.05, fraction: 1.0 },
+        horizon: 1,
+    }
+}
+
+fn all_precisions() -> Vec<Precision> {
+    let mut ps = vec![Precision::Fp32];
+    ps.extend((2..=8).map(Precision::Int));
+    ps
+}
+
+/// Run the stub learner to completion and return the probe signature of
+/// the final published engine (raw logit bits at seeded inputs).
+fn run_and_probe(
+    precision: Precision,
+    faults: Option<Arc<FaultPlan>>,
+    ckpt: Option<CheckpointPolicy>,
+    resume_from: Option<&Checkpoint>,
+    crash_after: Option<usize>,
+    hub: Option<Arc<SnapshotHub>>,
+) -> Result<(Vec<u32>, usize, usize), quarl::Error> {
+    let (params, rng) = match resume_from {
+        Some(c) => (c.params.clone(), c.rng()),
+        None => (init_params(SEED), Pcg32::new(SEED, 4242)),
+    };
+    let mut acfg = ActorQConfig::new(2).with_precision(precision);
+    acfg.restart_backoff = Duration::from_millis(2);
+    let hcfg = HarnessConfig {
+        env_id: "cartpole",
+        seed: SEED,
+        total_steps: TOTAL_STEPS,
+        warmup: WARMUP,
+        train_freq: TRAIN_FREQ,
+        log_every: 0,
+        exploration: exploration(),
+        returns: ReturnLog::TailMean,
+        acfg: &acfg,
+        faults,
+        ckpt: ckpt.clone(),
+        resume: resume_from.map(|c| c.resume_point()),
+    };
+    let harness = LearnerHarness::spawn(&params, &hcfg)?;
+    if let Some(hub) = hub {
+        harness.broadcast.attach_hub(hub)?;
+    }
+    let broadcast = harness.broadcast.clone();
+    let pstate = RefCell::new(params);
+    let rstate = RefCell::new(rng);
+    let mut calls = 0usize;
+    let train = |_step: usize, publish: bool| -> Result<Option<f32>, quarl::Error> {
+        if crash_after.is_some_and(|limit| calls >= limit) {
+            return Err(quarl::Error::Experiment("injected learner crash".into()));
+        }
+        calls += 1;
+        let mut p = pstate.borrow_mut();
+        let mut r = rstate.borrow_mut();
+        for t in p.tensors.iter_mut() {
+            for v in t.data_mut() {
+                *v += 0.003 * r.normal();
+            }
+        }
+        if publish {
+            broadcast.publish(&p)?;
+        }
+        Ok(Some(0.0))
+    };
+    let mut state_fn = || CheckpointState {
+        params: pstate.borrow().clone(),
+        rng: rstate.borrow().state_parts(),
+    };
+    let state: Option<&mut dyn FnMut() -> CheckpointState> =
+        if ckpt.is_some() { Some(&mut state_fn) } else { None };
+    let log = harness.run_ckpt(|_t| {}, train, state)?;
+    let sig = probe(&broadcast);
+    Ok((sig, log.train_steps, log.actor_restarts))
+}
+
+fn probe(broadcast: &ParamBroadcast) -> Vec<u32> {
+    let mut eng = broadcast.latest().engine.clone();
+    let mut rng = Pcg32::new(SEED, 99);
+    let mut x = vec![0.0f32; DIMS[0]];
+    let mut y = vec![0.0f32; DIMS[2]];
+    let mut sig = Vec::new();
+    for _ in 0..8 {
+        for v in x.iter_mut() {
+            *v = rng.uniform_range(-1.0, 1.0);
+        }
+        eng.forward(&x, &mut y).unwrap();
+        sig.extend(y.iter().map(|v| v.to_bits()));
+    }
+    sig
+}
+
+#[test]
+fn faulted_run_matches_clean_run_bit_for_bit_at_every_width() {
+    for precision in all_precisions() {
+        let (clean_sig, clean_trains, clean_restarts) =
+            run_and_probe(precision, None, None, None, None, None).unwrap();
+        assert_eq!(clean_restarts, 0);
+        assert_eq!(clean_trains, (TOTAL_STEPS - WARMUP) / TRAIN_FREQ);
+
+        // Kill actor 0 mid-run, drop one hub publish, fail another on
+        // the wire, and fail the client's first two connects.
+        let plan = Arc::new(
+            FaultPlan::new(SEED)
+                .kill_actor(0, 40)
+                .drop_publish(2)
+                .fail_publish(3)
+                .fail_connect(1)
+                .fail_connect(2),
+        );
+        let hub = Arc::new(SnapshotHub::new());
+        let server = SnapshotServer::bind("127.0.0.1:0", Arc::clone(&hub)).unwrap();
+        let (faulted_sig, faulted_trains, restarts) = run_and_probe(
+            precision,
+            Some(plan.clone()),
+            None,
+            None,
+            None,
+            Some(hub),
+        )
+        .unwrap();
+        let label = precision.label();
+        assert_eq!(restarts, 1, "{label}: the kill must be absorbed by a respawn");
+        assert_eq!(faulted_trains, clean_trains, "{label}: equal step budget");
+        assert_eq!(faulted_sig, clean_sig, "{label}: recovery must be bit-exact");
+
+        // The flaky-transport leg: two scripted connect failures are
+        // retried away and the fetched engine matches the broadcast.
+        let client = SnapshotClient::with_config(
+            server.addr(),
+            ClientConfig {
+                backoff: Duration::from_millis(1),
+                jitter_seed: SEED,
+                faults: Some(plan.clone()),
+                ..ClientConfig::default()
+            },
+        );
+        let art = client.fetch().unwrap();
+        assert!(client.retries() >= 2, "{label}: both connect faults retried");
+        let mut remote = art.build_engine(Default::default()).unwrap();
+        let mut rng = Pcg32::new(SEED, 99);
+        let mut x = vec![0.0f32; DIMS[0]];
+        let mut y = vec![0.0f32; DIMS[2]];
+        let mut wire_sig = Vec::new();
+        for _ in 0..8 {
+            for v in x.iter_mut() {
+                *v = rng.uniform_range(-1.0, 1.0);
+            }
+            remote.forward(&x, &mut y).unwrap();
+            wire_sig.extend(y.iter().map(|v| v.to_bits()));
+        }
+        assert_eq!(wire_sig, clean_sig, "{label}: wire copy must match too");
+    }
+}
+
+#[test]
+fn killed_learner_resumes_from_checkpoint_to_the_same_engine() {
+    let dir = std::env::temp_dir().join("quarl_faults_chaos_resume");
+    let _ = std::fs::remove_dir_all(&dir);
+    for precision in all_precisions() {
+        let label = precision.label();
+        let (clean_sig, clean_trains, _) =
+            run_and_probe(precision, None, None, None, None, None).unwrap();
+
+        let path = dir.join(format!("{label}.qckp"));
+        let policy = CheckpointPolicy { path: path.clone(), every_trains: 10 };
+        let crash_at = clean_trains * 3 / 5;
+        let err = run_and_probe(precision, None, Some(policy), None, Some(crash_at), None)
+            .expect_err("the scripted crash must abort the run");
+        assert!(err.to_string().contains("injected learner crash"), "{label}: {err}");
+
+        let ckpt = Checkpoint::read_file(&path).unwrap();
+        assert_eq!(ckpt.train_steps as usize, crash_at - crash_at % 10, "{label}");
+        let (resumed_sig, resumed_trains, _) =
+            run_and_probe(precision, None, None, Some(&ckpt), None, None).unwrap();
+        assert_eq!(resumed_trains, clean_trains, "{label}: resumed run pays the remainder");
+        assert_eq!(resumed_sig, clean_sig, "{label}: resume must be bit-exact");
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn every_corrupted_or_truncated_checkpoint_byte_is_a_typed_error() {
+    let params = init_params(9);
+    let mut rng = Pcg32::new(9, 4242);
+    for _ in 0..13 {
+        rng.next_u32();
+    }
+    let ckpt = Checkpoint {
+        train_steps: 42,
+        env_steps: 184,
+        broadcasts: 4,
+        version: 4,
+        replay_pushed: 203,
+        rng: rng.state_parts(),
+        params,
+    };
+    let blob = ckpt.to_bytes();
+    assert_eq!(Checkpoint::from_bytes(&blob).unwrap(), ckpt, "pristine blob must verify");
+
+    for i in 0..blob.len() {
+        let mut bad = blob.clone();
+        bad[i] ^= 0xFF;
+        let err = Checkpoint::from_bytes(&bad)
+            .expect_err(&format!("flipped byte {i} must be detected"));
+        // Every rejection is a typed SnapshotError, surfaced before any
+        // state is restored.
+        let _: &SnapshotError = &err;
+    }
+    for len in 0..blob.len() {
+        Checkpoint::from_bytes(&blob[..len])
+            .expect_err(&format!("truncation to {len} bytes must be detected"));
+    }
+}

@@ -36,6 +36,7 @@ EXPECTATIONS = {
     "BENCH_carbon": (["bench", "regions_billed", "cells", "mean_kg_co2eq_ratio"], "cells"),
     "BENCH_serve": (["bench", "mlp", "window_us", "max_batch", "rows"], "rows"),
     "BENCH_snapshot": (["bench", "mlp", "rows"], "rows"),
+    "BENCH_faults": (["bench", "rows"], "rows"),
 }
 
 ENGINE_ROW_KEYS = [
@@ -206,6 +207,81 @@ def check_snapshot_rows(path: str, doc: dict) -> list:
     return errors
 
 
+FAULTS_ROW_KEYS = [
+    "engine",
+    "bits",
+    "env_steps",
+    "train_steps",
+    "broadcasts",
+    "restarts",
+    "recovery_ms",
+    "kills",
+    "publishes_dropped",
+    "hub_publish_failures",
+    "connect_failures",
+    "client_retries",
+    "steps_lost",
+    "ckpt_trains",
+    "resume_trains",
+    "clean_trains",
+    "logit_mismatches",
+    "resume_mismatches",
+    "final_version",
+]
+
+
+def check_faults_rows(path: str, doc: dict) -> list:
+    """BENCH_faults.json row schema: every precision cell must have
+    absorbed at least one actor kill (restarts >= 1, with a non-negative
+    recovery latency), retried at least as often as connects were
+    scripted to fail, lost a non-negative number of steps, and recovered
+    bit-exactly — zero logit mismatches vs the fault-free run and zero
+    mismatches after checkpoint resume. A nonzero mismatch count means a
+    fault leaked into the learner's numerics, which is the one thing the
+    crash-safety layer exists to prevent."""
+    errors = []
+    rows = doc.get("rows")
+    if not isinstance(rows, list):
+        return [f"{path}: 'rows' is not a list"]
+    for i, row in enumerate(rows):
+        if not isinstance(row, dict):
+            errors.append(f"{path}: rows[{i}] is not an object")
+            continue
+        for k in FAULTS_ROW_KEYS:
+            if k not in row:
+                errors.append(f"{path}: rows[{i}] missing key '{k}'")
+        for k in ("logit_mismatches", "resume_mismatches"):
+            if row.get(k) != 0:
+                errors.append(
+                    f"{path}: rows[{i}] {k} {row.get(k)!r} — recovery was not bit-exact"
+                )
+        restarts = row.get("restarts")
+        if not (isinstance(restarts, (int, float)) and restarts >= 1):
+            errors.append(
+                f"{path}: rows[{i}] restarts '{restarts}' — the scripted kill "
+                "was not absorbed by a respawn"
+            )
+        for k in ("recovery_ms", "steps_lost"):
+            v = row.get(k)
+            if not (isinstance(v, (int, float)) and v >= 0):
+                errors.append(f"{path}: rows[{i}] {k} '{v}' is not a non-negative number")
+        retries, failed = row.get("client_retries"), row.get("connect_failures")
+        if isinstance(retries, (int, float)) and isinstance(failed, (int, float)):
+            if retries < failed:
+                errors.append(
+                    f"{path}: rows[{i}] client_retries {retries} < connect_failures "
+                    f"{failed} — a scripted connect fault was never retried"
+                )
+        at, total = row.get("ckpt_trains"), row.get("clean_trains")
+        if isinstance(at, (int, float)) and isinstance(total, (int, float)):
+            if not 0 < at < total:
+                errors.append(
+                    f"{path}: rows[{i}] ckpt_trains {at} not inside (0, {total}) — "
+                    "the crash leg never checkpointed mid-run"
+                )
+    return errors
+
+
 def check(path: str) -> list:
     errors = []
     name = path.rsplit("/", 1)[-1].rsplit(".", 1)[0]
@@ -233,6 +309,8 @@ def check(path: str) -> list:
         errors.extend(check_serve_rows(path, doc))
     if name == "BENCH_snapshot" and not errors:
         errors.extend(check_snapshot_rows(path, doc))
+    if name == "BENCH_faults" and not errors:
+        errors.extend(check_faults_rows(path, doc))
     return errors
 
 
@@ -272,27 +350,68 @@ def self_test() -> int:
         ("missing key", lambda d: d["rows"][0].pop("staleness_max")),
         ("empty rows", lambda d: d.update(rows=[])),
     ]
+    good_faults = {
+        "bench": "faults",
+        "rows": [
+            {
+                "engine": "int8",
+                "bits": 8,
+                "env_steps": 300,
+                "train_steps": 100,
+                "broadcasts": 10,
+                "restarts": 1,
+                "recovery_ms": 4.2,
+                "kills": 1,
+                "publishes_dropped": 1,
+                "hub_publish_failures": 1,
+                "connect_failures": 2,
+                "client_retries": 2,
+                "steps_lost": 14,
+                "ckpt_trains": 60,
+                "resume_trains": 40,
+                "clean_trains": 100,
+                "logit_mismatches": 0,
+                "resume_mismatches": 0,
+                "final_version": 10,
+            }
+        ],
+    }
+    faults_breakages = [
+        ("faulted run diverged", lambda d: d["rows"][0].update(logit_mismatches=1)),
+        ("resumed run diverged", lambda d: d["rows"][0].update(resume_mismatches=2)),
+        ("kill not absorbed", lambda d: d["rows"][0].update(restarts=0)),
+        ("negative recovery", lambda d: d["rows"][0].update(recovery_ms=-1.0)),
+        ("retries below connect faults", lambda d: d["rows"][0].update(client_retries=1)),
+        ("checkpoint at run end", lambda d: d["rows"][0].update(ckpt_trains=100)),
+        ("missing key", lambda d: d["rows"][0].pop("steps_lost")),
+        ("empty rows", lambda d: d.update(rows=[])),
+    ]
     failures = []
     with tempfile.TemporaryDirectory() as tmp:
-        path = os.path.join(tmp, "BENCH_snapshot.json")
 
-        def write_and_check(doc):
+        def write_and_check(name, doc):
+            path = os.path.join(tmp, name)
             with open(path, "w", encoding="utf-8") as f:
                 json.dump(doc, f)
             return check(path)
 
-        errs = write_and_check(good)
-        if errs:
-            failures.append(f"pristine doc rejected: {errs}")
-        for label, mutate in breakages:
-            doc = copy.deepcopy(good)
-            mutate(doc)
-            if not write_and_check(doc):
-                failures.append(f"breakage not caught: {label}")
+        for name, pristine, planted in [
+            ("BENCH_snapshot.json", good, breakages),
+            ("BENCH_faults.json", good_faults, faults_breakages),
+        ]:
+            errs = write_and_check(name, pristine)
+            if errs:
+                failures.append(f"pristine {name} rejected: {errs}")
+            for label, mutate in planted:
+                doc = copy.deepcopy(pristine)
+                mutate(doc)
+                if not write_and_check(name, doc):
+                    failures.append(f"breakage not caught in {name}: {label}")
     for f in failures:
         print(f"self-test failure: {f}", file=sys.stderr)
     if not failures:
-        print(f"ok: self-test ({len(breakages)} breakages caught)")
+        n = len(breakages) + len(faults_breakages)
+        print(f"ok: self-test ({n} breakages caught)")
     return 1 if failures else 0
 
 
