@@ -1,16 +1,17 @@
 //! Bench: batched inference kernels — rows/sec of `forward_batch` vs the
 //! per-row scalar `forward` across batch size x layer width x engine
-//! bitwidth x kernel variant (fp32 baseline plus every `--bits` width on
-//! the generic quantized engine; packed nibbles below int5, packed
-//! crumbs at int2).
+//! precision x kernel variant (fp32 baseline plus every `--bits` entry
+//! on the generic quantized engine; packed nibbles below int5, packed
+//! crumbs at int2, XNOR-popcount bitplanes at int1/ternary).
 //!
 //!     cargo bench --bench bench_engines
-//!     cargo bench --bench bench_engines -- --bits 2,4,8
+//!     cargo bench --bench bench_engines -- --bits 1,2,4,8,t
 //!     cargo bench --bench bench_engines -- --threads 4
-//!     cargo bench --bench bench_engines -- --quick --bits 2,4,8   # CI smoke
+//!     cargo bench --bench bench_engines -- --quick --bits 1,2,4,8  # CI smoke
 //!
-//! `--bits` takes the validated 2..=16 CLI list; widths without a native
-//! engine (> 8) are skipped with a note. The fp32 baseline always runs.
+//! `--bits` takes the validated CLI precision list (integer widths
+//! 1..=8 plus "t"/"ternary" — exactly the engine-supported set; the CLI
+//! rejects anything else up front). The fp32 baseline always runs.
 //! `--quick` trims the sweep to the two narrowest MLPs for the CI
 //! sanity-check job (width 256 stays in so the intra-op pool actually
 //! engages — at width 64 every layer fits one column block and the
@@ -28,9 +29,11 @@
 //! before/after of the panel-major rework:
 //!
 //! * `"panel"`    — construction-time panel-major prepack + SWAR bulk
-//!   unpack + 4x4 microkernel (the default engine);
+//!   unpack + 4x4 microkernel (the default affine engine);
 //! * `"rowmajor"` — the PR-4 input-major kernel (strided gather +
 //!   per-code unpack inside the tile loop), kept as the reference;
+//! * `"bitplane"` — the XNOR-popcount SWAR kernel (int1/ternary only;
+//!   these precisions have a single layout, so no rowmajor variant);
 //! * `"base"`     — the fp32 baseline engine (one layout).
 //!
 //! Acceptance shape: at batch 64 on the 128x512x512x25 MLP the int8
@@ -100,6 +103,26 @@ fn build_variants(params: &ParamSet, precisions: &[Precision], threads: usize) -
                 threads: 1,
                 engine: engine_for_cfg(params, p, EngineConfig::default()).unwrap(),
             });
+            continue;
+        }
+        if p.is_bitplane() {
+            // One layout only: the XNOR-popcount words. No rowmajor
+            // reference exists for these precisions.
+            out.push(Variant {
+                precision: p,
+                kernel: "bitplane",
+                threads: 1,
+                engine: engine_for_cfg(params, p, EngineConfig::default()).unwrap(),
+            });
+            if threads > 1 {
+                out.push(Variant {
+                    precision: p,
+                    kernel: "bitplane",
+                    threads,
+                    engine: engine_for_cfg(params, p, EngineConfig::with_threads(threads))
+                        .unwrap(),
+                });
+            }
             continue;
         }
         out.push(Variant {
@@ -191,7 +214,9 @@ fn measure(
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let args = Args::parse(&argv).expect("bench args");
-    let bits = args.bits(&[2, 4, 8]).expect("--bits");
+    let swept = args
+        .precisions(&[Precision::Int(1), Precision::Int(2), Precision::Int(4), Precision::Int(8)])
+        .expect("--bits");
     let threads = args.get_usize("threads", 1).expect("--threads").max(1);
     let quick = args.has("quick");
     let widths: &[usize] = if quick { &WIDTHS[..2] } else { &WIDTHS };
@@ -199,17 +224,10 @@ fn main() {
     // lives there (threading needs >= 2 column blocks to engage).
     let wide = *widths.last().unwrap();
 
-    // fp32 always; then one quantized engine per requested width that
-    // has a native engine (2..=8; the CLI validates 2..=16).
+    // fp32 always; the CLI has already validated every sweep entry
+    // against engine support (integer widths 1..=8 plus ternary).
     let mut precisions = vec![Precision::Fp32];
-    for &b in &bits {
-        let p = Precision::Int(b);
-        if p.engine_supported() {
-            precisions.push(p);
-        } else {
-            eprintln!("note: skipping --bits {b} (native engines implement 2..=8)");
-        }
-    }
+    precisions.extend(swept);
 
     println!("== batched inference kernels: forward_batch vs per-row forward ==");
     let mut rows: Vec<Json> = Vec::new();
@@ -219,6 +237,9 @@ fn main() {
     // (threads=1 batched ns, threaded batched ns) for the int8 panel
     // kernel at (widest width, batch 64) — the worker-pool before/after.
     let mut int8_threaded: (f64, f64) = (f64::NAN, f64::NAN);
+    // (int8 panel batched ns, int1 bitplane batched ns) at (width 512,
+    // batch 64) — the XNOR-popcount before/after headline.
+    let mut int1_vs_int8: (f64, f64) = (f64::NAN, f64::NAN);
     for &width in widths {
         let dims = [IN_DIM, width, width, OUT_DIM];
         let params = mlp_params(&dims, 7);
@@ -256,6 +277,10 @@ fn main() {
                 let headline_cell = width == 512 && batch == 64 && v.threads == 1;
                 if headline_cell && v.precision == Precision::Int(8) && v.kernel == "panel" {
                     headline = s_ns / b_ns;
+                    int1_vs_int8.0 = b_ns;
+                }
+                if headline_cell && v.precision == Precision::Int(1) && v.kernel == "bitplane" {
+                    int1_vs_int8.1 = b_ns;
                 }
                 if headline_cell && v.precision == Precision::Int(4) {
                     match v.kernel {
@@ -303,6 +328,13 @@ fn main() {
              persistent pool, no per-call spawns.)"
         );
     }
+    let int1_gain = int1_vs_int8.0 / int1_vs_int8.1;
+    if int1_gain.is_finite() {
+        println!(
+            "(int1 XNOR-popcount before/after: the bitplane kernel runs {int1_gain:.2}x \
+             the int8 panel kernel at batch 64, width 512 — 64 weights per xor+popcount.)"
+        );
+    }
 
     let mut doc = BTreeMap::new();
     doc.insert("bench".to_string(), Json::Str("engines".into()));
@@ -311,12 +343,17 @@ fn main() {
         "bits".to_string(),
         Json::Arr(precisions.iter().map(|p| Json::Num(p.bits() as f64)).collect()),
     );
+    doc.insert(
+        "precisions".to_string(),
+        Json::Arr(precisions.iter().map(|p| Json::Str(p.label())).collect()),
+    );
     doc.insert("threads".to_string(), Json::Num(threads as f64));
     doc.insert("headline_int8_b64_w512_speedup".to_string(), Json::Num(headline));
     doc.insert(
         "int4_panel_vs_rowmajor_b64_w512".to_string(),
         Json::Num(int4_panel_gain),
     );
+    doc.insert("int1_vs_int8_b64_w512".to_string(), Json::Num(int1_gain));
     doc.insert("int8_threads2_vs_1_b64".to_string(), Json::Num(int8_threads_gain));
     doc.insert("int8_threads2_vs_1_width".to_string(), Json::Num(wide as f64));
     doc.insert("rows".to_string(), Json::Arr(rows));

@@ -129,7 +129,7 @@ fn cell_row(
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let args = Args::parse(&argv).expect("bench args");
-    let bits = args.bits(&[]).expect("--bits");
+    let swept = args.precisions(&[]).expect("--bits");
     let threads = args.get_usize("threads", 1).expect("--threads").max(1);
     let window_us = args.get_u64("window-us", 250).expect("--window-us");
     let max_batch = args.get_usize("max-batch", 32).expect("--max-batch").max(1);
@@ -144,16 +144,10 @@ fn main() {
     };
 
     // fp32 baseline + int8 headline always; --bits adds the rest of the
-    // native widths (2..=8) opt-in.
+    // native precisions (integer widths 1..=8 plus ternary, already
+    // CLI-validated against engine support) opt-in.
     let mut precisions = vec![Precision::Fp32, Precision::Int(8)];
-    for &b in bits.iter().filter(|&&b| b != 8) {
-        let p = Precision::Int(b);
-        if p.engine_supported() {
-            precisions.push(p);
-        } else {
-            eprintln!("note: skipping --bits {b} (native engines implement 2..=8)");
-        }
-    }
+    precisions.extend(swept.iter().copied().filter(|&p| p != Precision::Int(8)));
 
     let mlp = DIMS.iter().map(|d| d.to_string()).collect::<Vec<_>>().join("x");
     println!(

@@ -56,8 +56,8 @@ impl ActorEngine {
     ) -> Result<ActorEngine> {
         match precision {
             Precision::Fp32 => EngineF32::from_params(params).map(ActorEngine::F32),
-            Precision::Int(bits) => {
-                EngineQuant::from_params_cfg(params, bits, cfg).map(ActorEngine::Quant)
+            Precision::Int(_) | Precision::Ternary => {
+                EngineQuant::from_params_prec(params, precision, cfg).map(ActorEngine::Quant)
             }
         }
     }

@@ -298,7 +298,7 @@ mod tests {
         let ActorEngine::Quant(ref eng) = snap.engine else {
             panic!("int8 broadcast must carry the quantized engine");
         };
-        assert_eq!(eng.bits, 8);
+        assert_eq!(eng.precision(), Precision::Int(8));
         // per-weight round-trip error bounded by one grid step off the rails
         let w0 = &p.tensors[0];
         let layer = &eng.layers[0];
@@ -448,12 +448,47 @@ mod tests {
         let ActorEngine::Quant(ref eng) = snap.engine else {
             panic!("int4 broadcast must carry the quantized engine");
         };
-        assert_eq!(eng.bits, 4);
+        assert_eq!(eng.precision(), Precision::Int(4));
         let w0 = &p.tensors[0];
         let layer = &eng.layers[0];
         assert_eq!(layer.codes.bytes(), w0.len().div_ceil(2), "two codes per byte");
         for (i, (&w, code)) in w0.data().iter().zip(layer.codes.to_vec()).enumerate() {
             assert_eq!(code, layer.w_qp.quantize_code(w, 4), "idx {i}: shared clamping rule");
+        }
+    }
+
+    #[test]
+    fn bitplane_snapshot_carries_sign_planes() {
+        // The sub-int2 broadcast path: quantize-on-publish produces
+        // bitplane engines whose codes sit on the right grid and whose
+        // footprint undercuts every affine width.
+        let p = mlp_params(&[6, 32, 4], 9);
+        let int4_bytes = {
+            let bc = ParamBroadcast::new(&p, Precision::Int(4)).unwrap();
+            bc.latest().engine.memory_bytes()
+        };
+        for prec in [Precision::Int(1), Precision::Ternary] {
+            let bc = ParamBroadcast::new(&p, prec).unwrap();
+            let snap = bc.latest();
+            let ActorEngine::Quant(ref eng) = snap.engine else {
+                panic!("bitplane broadcast must carry the quantized engine");
+            };
+            assert_eq!(eng.precision(), prec);
+            for (li, layer) in eng.layers.iter().enumerate() {
+                for (i, code) in layer.codes.to_vec().into_iter().enumerate() {
+                    let ok = if prec == Precision::Ternary {
+                        (-1..=1).contains(&code)
+                    } else {
+                        code == 1 || code == -1
+                    };
+                    assert!(ok, "{} layer {li} idx {i}: code {code}", prec.label());
+                }
+            }
+            assert!(
+                snap.engine.memory_bytes() < int4_bytes,
+                "{} must undercut int4",
+                prec.label()
+            );
         }
     }
 }

@@ -6,6 +6,7 @@
 use std::collections::BTreeMap;
 
 use crate::error::{Error, Result};
+use crate::quant::Precision;
 
 /// Parsed command line.
 #[derive(Debug, Default)]
@@ -115,35 +116,42 @@ impl Args {
         }
     }
 
-    /// Parse a comma-separated bitwidth list: deduped, sorted ascending,
-    /// every value validated into 2..=16 (the quantizer's meaningful
-    /// sweep range; the native engines implement 2..=8 and consumers
-    /// state how they treat the rest). Malformed or out-of-range lists
-    /// are a hard [`Error::Config`] instead of flowing silently into
-    /// experiments.
-    pub fn bits(&self, default: &[u32]) -> Result<Vec<u32>> {
-        let mut vals: Vec<u32> = match self.get("bits") {
+    /// Parse the comma-separated `--bits` precision list: each entry is
+    /// a precision token — a numeric width ("1".."8"), "intN", or
+    /// "t"/"ternary" — deduped and sorted ascending by storage width
+    /// (ternary sorts after int2, its two-plane storage width).
+    /// Validation consults [`Precision::engine_supported`], so the
+    /// accepted set is exactly what the native engines implement; every
+    /// other token — 0, 9..=16, "fp32" (the baseline is always
+    /// reported, it is not a sweep entry), garbage — is a hard
+    /// [`Error::Config`] up front instead of failing deep inside an
+    /// experiment cell.
+    pub fn precisions(&self, default: &[Precision]) -> Result<Vec<Precision>> {
+        let mut vals: Vec<Precision> = match self.get("bits") {
             None => default.to_vec(),
             Some(v) => v
                 .split(',')
                 .map(|x| {
-                    x.trim().parse().map_err(|_| {
+                    Precision::from_token(x.trim()).map_err(|_| {
                         Error::Config(format!(
-                            "--bits expects comma-separated integers, got '{v}'"
+                            "--bits expects comma-separated precision tokens \
+                             (1..=8, intN, or 't'/'ternary'), got '{v}'"
                         ))
                     })
                 })
-                .collect::<Result<Vec<u32>>>()?,
+                .collect::<Result<Vec<Precision>>>()?,
         };
-        for &b in &vals {
-            if !(2..=16).contains(&b) {
+        for &p in &vals {
+            if !p.is_quantized() || !p.engine_supported() {
                 return Err(Error::Config(format!(
-                    "--bits values must be in 2..=16, got {b} (fp32 baselines are always \
-                     reported; they are not part of the sweep list)"
+                    "--bits entries must be engine-supported quantized precisions \
+                     (1..=8 or 't'/'ternary'), got '{}' (fp32 baselines are always \
+                     reported; they are not part of the sweep list)",
+                    p.label()
                 )));
             }
         }
-        vals.sort_unstable();
+        vals.sort_unstable_by_key(|p| (p.bits(), matches!(p, Precision::Ternary)));
         vals.dedup();
         Ok(vals)
     }
@@ -177,25 +185,37 @@ mod tests {
     #[test]
     fn bits_list() {
         let a = Args::parse(&argv("exp x --bits 2,4,8")).unwrap();
-        assert_eq!(a.bits(&[6]).unwrap(), vec![2, 4, 8]);
+        let int = |b| Precision::Int(b);
+        assert_eq!(a.precisions(&[int(6)]).unwrap(), vec![int(2), int(4), int(8)]);
         let d = Args::parse(&argv("exp x")).unwrap();
-        assert_eq!(d.bits(&[6]).unwrap(), vec![6]);
+        assert_eq!(d.precisions(&[int(6)]).unwrap(), vec![int(6)]);
     }
 
     #[test]
     fn bits_list_deduped_sorted_validated() {
+        let int = |b| Precision::Int(b);
         // dedupe + ascending sort
         let a = Args::parse(&argv("exp x --bits 8,2,8,4,2")).unwrap();
-        assert_eq!(a.bits(&[6]).unwrap(), vec![2, 4, 8]);
+        assert_eq!(a.precisions(&[int(6)]).unwrap(), vec![int(2), int(4), int(8)]);
         // whitespace tolerated around entries
         let sp = Args::parse(&["exp".into(), "x".into(), "--bits".into(), " 4, 8 ".into()])
             .unwrap();
-        assert_eq!(sp.bits(&[6]).unwrap(), vec![4, 8]);
-        // out-of-range and malformed lists are Error::Config, not silent
-        for bad in ["1", "0", "17", "32", "2,40", "abc", "4,,8", ""] {
+        assert_eq!(sp.precisions(&[int(6)]).unwrap(), vec![int(4), int(8)]);
+        // bitplane tokens: width 1 and ternary are engine-supported now;
+        // ternary sorts after int2 (its two-plane storage width) and
+        // accepts the "t", "ternary", and "intN" spellings.
+        let bp = Args::parse(&argv("exp x --bits t,1,int4,2,ternary")).unwrap();
+        assert_eq!(
+            bp.precisions(&[]).unwrap(),
+            vec![int(1), int(2), Precision::Ternary, int(4)]
+        );
+        // the validator consults engine_supported(): widths the engines
+        // don't implement and the fp32 baseline are Error::Config up
+        // front, as are malformed lists — never a silent pass-through.
+        for bad in ["0", "9", "17", "32", "fp32", "2,40", "abc", "4,,8", ""] {
             let a = Args::parse(&["exp".into(), "x".into(), "--bits".into(), bad.into()])
                 .unwrap();
-            let err = a.bits(&[6]);
+            let err = a.precisions(&[int(6)]);
             assert!(err.is_err(), "--bits {bad} must be rejected");
             let msg = format!("{}", err.unwrap_err());
             assert!(msg.contains("--bits"), "message names the flag: {msg}");

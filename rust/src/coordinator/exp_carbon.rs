@@ -206,17 +206,15 @@ impl Experiment for Carbon {
             ("comparison", cmp.to_json()),
         ])];
 
-        // Per-bitwidth sweep (opt-in via an explicit `--bits`): one
-        // metered collection run per engine-supported sub-8-bit width,
-        // billed against the same fp32 baseline. int8 is the headline
-        // row above; unsupported widths are skipped (the CLI validates
-        // 2..=16, the engines run 2..=8).
-        for &b in
-            ctx.sweep_bits().iter().filter(|&&b| b != 8 && Precision::Int(b).engine_supported())
-        {
-            let smp = run_cell(ctx, env, Precision::Int(b), steps_budget, ctx.seed + 3)?;
+        // Per-precision sweep (opt-in via an explicit `--bits`): one
+        // metered collection run per engine-supported precision, billed
+        // against the same fp32 baseline. int8 is the headline row
+        // above; the CLI validates the list against engine support up
+        // front, so every entry (1..=8 and ternary) runs here.
+        for &p in ctx.sweep_precisions().iter().filter(|&&p| p != Precision::Int(8)) {
+            let smp = run_cell(ctx, env, p, steps_budget, ctx.seed + 3)?;
             let cmpb = CarbonComparison {
-                label: format!("{cell}/int{b}"),
+                label: format!("{cell}/{}", p.label()),
                 baseline: report(&cell, &fp32, &region, g),
                 quantized: report(&cell, &smp, &region, g),
             };
@@ -224,7 +222,8 @@ impl Experiment for Carbon {
                 ("env", s(env)),
                 ("algo", s(algo)),
                 ("kind", s("bits")),
-                ("bits", n(b as f64)),
+                ("precision", s(p.label())),
+                ("bits", n(p.bits() as f64)),
                 ("region", s(region.as_str())),
                 ("steps", n(steps_budget as f64)),
                 ("busy_secs", n(smp.busy_secs)),
@@ -264,12 +263,12 @@ impl Experiment for Carbon {
         ));
         if !sweep.is_empty() {
             out.push_str(
-                "\nPer-bitwidth actor sweep (--bits; packed sub-byte engines, billed\n\
-                 against the same fp32 baseline):\n",
+                "\nPer-precision actor sweep (--bits; packed sub-byte and bitplane\n\
+                 engines, billed against the same fp32 baseline):\n",
             );
             out.push_str(&render_table(
-                &["env", "algo", "bits", "steps", "busy_secs", "watts", "j_per_step", "kg",
-                  "kg_ratio_vs_fp32"],
+                &["env", "algo", "precision", "steps", "busy_secs", "watts", "j_per_step",
+                  "kg", "kg_ratio_vs_fp32"],
                 &sweep,
             ));
         }

@@ -13,7 +13,7 @@ use crate::coordinator::metrics::{n, render_table, row, s, Row};
 use crate::envs::api::{Action, ActionSpace, Env};
 use crate::envs::nav_lite::NavLite;
 use crate::error::Result;
-use crate::inference::{EngineF32, EngineInt8, EngineQuant, MemModel};
+use crate::inference::{EngineConfig, EngineF32, EngineInt8, EngineQuant, MemModel};
 use crate::quant::Precision;
 use crate::rng::Pcg32;
 
@@ -212,17 +212,18 @@ impl Experiment for Fig6 {
         let lat_f32_dev = lat_f32 + mem.swap_penalty_secs(f32_bytes);
         let lat_i8_dev = lat_i8 + mem.swap_penalty_secs(i8_bytes);
 
-        // Per-bitwidth sweep (opt-in via an explicit `--bits`): real
-        // packed engines at every engine-supported width, measured under
-        // the same protocol as the fp32/int8 headline columns (success
-        // episodes, batched latency at LAT_BATCH, swap-cliff memory
-        // model). bits = 8 is skipped — it is the headline int8 cell,
-        // already measured above.
+        // Per-precision sweep (opt-in via an explicit `--bits`): real
+        // packed/bitplane engines at every engine-supported precision,
+        // measured under the same protocol as the fp32/int8 headline
+        // columns (success episodes, batched latency at LAT_BATCH,
+        // swap-cliff memory model). int8 is skipped — it is the
+        // headline cell, already measured above. The bitplane rows
+        // (int1/ternary) run the XNOR-popcount kernels and bill their
+        // word-aligned plane bytes against the same memory model.
         let mut rows = Vec::new();
-        for &b in
-            ctx.sweep_bits().iter().filter(|&&b| b != 8 && Precision::Int(b).engine_supported())
-        {
-            let mut qe = EngineQuant::from_params(&policy.params, b)?;
+        for &p in ctx.sweep_precisions().iter().filter(|&&p| p != Precision::Int(8)) {
+            let mut qe =
+                EngineQuant::from_params_prec(&policy.params, p, EngineConfig::default())?;
             let (sr, lat) = success_rate(
                 &mut |x, o| qe.forward(x, o).expect("quant forward"),
                 ctx.episodes,
@@ -238,7 +239,8 @@ impl Experiment for Fig6 {
             rows.push(row(&[
                 ("policy", s(item)),
                 ("kind", s("bits")),
-                ("bits", n(b as f64)),
+                ("precision", s(p.label())),
+                ("bits", n(p.bits() as f64)),
                 ("success", n(sr as f64 * 100.0)),
                 ("batch_us", n(blat * 1e6)),
                 ("batch_speedup_vs_fp32", n(blat_f32 / blat.max(1e-12))),
@@ -299,12 +301,13 @@ impl Experiment for Fig6 {
         ));
         if !sweep.is_empty() {
             out.push_str(
-                "\nBitwidth sweep (--bits; real packed engines, same measurement\n\
-                 protocol — sub-byte rows run two codes per weight byte):\n",
+                "\nPrecision sweep (--bits; real packed/bitplane engines, same\n\
+                 measurement protocol — sub-byte rows run packed affine codes,\n\
+                 int1/ternary rows run the XNOR-popcount bitplane kernels):\n",
             );
             out.push_str(&render_table(
-                &["policy", "bits", "success", "batch_us", "batch_speedup_vs_fp32",
-                  "dev_ms", "mem_mb"],
+                &["policy", "precision", "success", "batch_us",
+                  "batch_speedup_vs_fp32", "dev_ms", "mem_mb"],
                 &sweep,
             ));
         }

@@ -68,20 +68,15 @@ const PROBES: usize = 6;
 
 fn precisions(ctx: &ExpCtx) -> Vec<Precision> {
     let mut ps = vec![Precision::Fp32, Precision::Int(8)];
-    for &b in ctx.sweep_bits().iter().filter(|&&b| b != 8 && Precision::Int(b).engine_supported())
-    {
-        ps.push(Precision::Int(b));
+    for &p in ctx.sweep_precisions().iter().filter(|&&p| p != Precision::Int(8)) {
+        ps.push(p);
     }
     ps
 }
 
 fn parse_item(item: &str) -> Result<Precision> {
-    if item == "fp32" {
-        return Ok(Precision::Fp32);
-    }
-    item.strip_prefix("int")
-        .and_then(|b| b.parse().ok())
-        .map(Precision::Int)
+    Precision::from_label(item)
+        .ok()
         .filter(|p| p.engine_supported())
         .ok_or_else(|| Error::Experiment(format!("bad faults item '{item}'")))
 }
@@ -372,7 +367,7 @@ mod tests {
             scale: 1.0,
             episodes: 1,
             seed: 3,
-            bits: vec![],
+            precisions: vec![],
             bits_explicit: false,
             filter: None,
             shard: None,
@@ -390,9 +385,9 @@ mod tests {
         let c = ctx();
         assert_eq!(Faults.items(&c), vec!["fp32", "int8"]);
         let mut c4 = ctx();
-        c4.bits = vec![4, 8];
+        c4.precisions = vec![Precision::Int(4), Precision::Int(8), Precision::Ternary];
         c4.bits_explicit = true;
-        assert_eq!(Faults.items(&c4), vec!["fp32", "int8", "int4"]);
+        assert_eq!(Faults.items(&c4), vec!["fp32", "int8", "int4", "ternary"]);
         assert!(parse_item("float").is_err());
     }
 

@@ -1,0 +1,203 @@
+//! `exp noise` — does extreme weight quantization act as useful
+//! exploration noise? (the QeRL hypothesis, applied to ActorQ.)
+//!
+//! The QeRL line of work observes that the *noise* quantization injects
+//! into a policy's action distribution can help exploration rather than
+//! hurt it, so aggressively quantized actors may converge as fast as —
+//! or faster than — full-precision ones at equal step budget. This
+//! experiment reruns the `exp actorq` convergence harness (same DQN
+//! learner, same 4-actor pool, same step budget; only the actor-side
+//! engine precision differs) across the whole precision ladder down to
+//! the bitplane formats: fp32, int8, and by default ternary and int1 on
+//! the XNOR-popcount engines. An explicit `--bits` list replaces the
+//! quantized rungs (fp32 always runs as the baseline).
+//!
+//! Each cell writes one row (env steps, train steps, broadcasts,
+//! throughput, final training return, eval reward); `render` emits the
+//! machine-readable `BENCH_noise.json` next to the other BENCH reports,
+//! with eval reward normalized against the fp32 row so the
+//! noise-helps/noise-hurts comparison is one column.
+
+use std::collections::BTreeMap;
+
+use crate::actorq::{ActorQConfig, Precision};
+use crate::algos::dqn;
+use crate::coordinator::experiment::{ExpCtx, Experiment};
+use crate::coordinator::metrics::{n, render_table, row, s, write_json_file, Row};
+use crate::error::{Error, Result};
+use crate::runtime::json::Json;
+
+pub struct Noise;
+
+/// The precision ladder of one run: fp32 baseline first, then int8 (the
+/// ActorQ headline), then the extreme rungs. An explicit `--bits` list
+/// replaces the quantized rungs wholesale (it is already CLI-validated
+/// against engine support), so `--bits 1,t` runs exactly the bitplane
+/// comparison and `--bits 2,4,8` the affine one.
+fn ladder(ctx: &ExpCtx) -> Vec<Precision> {
+    let mut ps = vec![Precision::Fp32];
+    if ctx.bits_explicit {
+        ps.extend(ctx.precisions.iter().copied());
+    } else {
+        ps.extend([Precision::Int(8), Precision::Ternary, Precision::Int(1)]);
+    }
+    ps
+}
+
+fn parse_item(item: &str) -> Result<Precision> {
+    item.strip_prefix("train_")
+        .and_then(|l| Precision::from_label(l).ok())
+        .filter(|p| p.engine_supported())
+        .ok_or_else(|| Error::Experiment(format!("bad noise item '{item}'")))
+}
+
+impl Experiment for Noise {
+    fn name(&self) -> &'static str {
+        "noise"
+    }
+
+    fn description(&self) -> &'static str {
+        "quantization-as-exploration-noise: actor-precision ladder convergence (QeRL check)"
+    }
+
+    fn items(&self, ctx: &ExpCtx) -> Vec<String> {
+        ladder(ctx).iter().map(|p| format!("train_{}", p.label())).collect()
+    }
+
+    fn run_item(&self, ctx: &ExpCtx, item: &str) -> Result<Vec<Row>> {
+        let precision = parse_item(item)?;
+        let mut cfg = dqn::DqnConfig::new("cartpole");
+        cfg.total_steps = ctx.steps("dqn", "cartpole");
+        cfg.seed = ctx.seed;
+        let acfg = ActorQConfig::new(4).with_precision(precision);
+        let (policy, log) = dqn::train_actorq(ctx.runtime()?, &cfg, &acfg)?;
+        let eval = crate::coordinator::evaluate(
+            ctx.runtime()?,
+            &policy,
+            ctx.episodes,
+            crate::coordinator::EvalMode::AsTrained,
+            ctx.seed + 9,
+        )?;
+        Ok(vec![row(&[
+            ("kind", s("noise")),
+            ("actor_precision", s(precision.label())),
+            ("bits", n(precision.bits() as f64)),
+            ("actors", n(acfg.n_actors as f64)),
+            ("env_steps", n(log.env_steps as f64)),
+            ("train_steps", n(log.train_steps as f64)),
+            ("broadcasts", n(log.broadcasts as f64)),
+            ("steps_per_sec", n(log.steps_per_sec)),
+            ("wall_secs", n(log.wall_secs)),
+            ("final_return", n(log.final_return as f64)),
+            ("eval_reward", n(eval.mean_reward as f64)),
+        ])])
+    }
+
+    fn render(&self, _ctx: &ExpCtx, rows: &[Row]) -> String {
+        let ladder: Vec<Row> = rows
+            .iter()
+            .filter(|r| matches!(r.get("kind"), Some(v) if v.as_str().ok() == Some("noise")))
+            .cloned()
+            .collect();
+        let fp32_reward = ladder
+            .iter()
+            .find(|r| {
+                r.get("actor_precision").and_then(|v| v.as_str().ok()) == Some("fp32")
+            })
+            .and_then(|r| r.get("eval_reward").and_then(|v| v.as_f64().ok()));
+
+        let mut out = String::from(
+            "Quantization noise as exploration — actor-precision ladder\n\
+             (same DQN learner, 4 actors, equal step budget; only the actor\n\
+             engine differs — int1/ternary run the XNOR-popcount bitplanes):\n",
+        );
+        out.push_str(&render_table(
+            &["actor_precision", "env_steps", "train_steps", "steps_per_sec",
+              "final_return", "eval_reward"],
+            &ladder,
+        ));
+        out.push_str(
+            "\nReading: eval_reward near (or above) the fp32 row at a lower\n\
+             precision supports the QeRL noise-helps hypothesis for that rung;\n\
+             a cliff marks where quantization noise turns destructive.\n",
+        );
+
+        // Machine-readable report: the ladder rows plus the fp32-relative
+        // reward so the comparison survives without cross-referencing.
+        let json_rows: Vec<Json> = ladder
+            .iter()
+            .map(|r| {
+                let mut m: BTreeMap<String, Json> = r.clone();
+                if let (Some(base), Some(rew)) =
+                    (fp32_reward, r.get("eval_reward").and_then(|v| v.as_f64().ok()))
+                {
+                    if base.abs() > 1e-12 {
+                        m.insert("reward_vs_fp32".to_string(), Json::Num(rew / base));
+                    }
+                }
+                Json::Obj(m)
+            })
+            .collect();
+        let mut doc = BTreeMap::new();
+        doc.insert("bench".to_string(), Json::Str("noise".into()));
+        doc.insert("env".to_string(), Json::Str("cartpole".into()));
+        doc.insert("rows".to_string(), Json::Arr(json_rows));
+        match write_json_file("BENCH_noise.json", &Json::Obj(doc)) {
+            Ok(()) => out.push_str("\nwrote BENCH_noise.json\n"),
+            Err(e) => out.push_str(&format!("\nwarning: BENCH_noise.json not written: {e}\n")),
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctx() -> ExpCtx<'static> {
+        ExpCtx {
+            rt: None,
+            runs_dir: std::env::temp_dir().join("quarl_noise_test"),
+            scale: 1.0,
+            episodes: 1,
+            seed: 3,
+            precisions: vec![],
+            bits_explicit: false,
+            filter: None,
+            shard: None,
+            jobs: 0,
+            threads: 1,
+            window_us: 200,
+            max_batch: 8,
+            snapshot_dir: None,
+            sustain: crate::sustain::SustainConfig::default(),
+        }
+    }
+
+    #[test]
+    fn default_ladder_covers_the_bitplane_rungs() {
+        let items = Noise.items(&ctx());
+        assert_eq!(items, vec!["train_fp32", "train_int8", "train_ternary", "train_int1"]);
+        for it in &items {
+            parse_item(it).unwrap();
+        }
+    }
+
+    #[test]
+    fn explicit_bits_replace_the_quantized_rungs() {
+        let mut c = ctx();
+        c.precisions = vec![Precision::Int(2), Precision::Int(4)];
+        c.bits_explicit = true;
+        assert_eq!(Noise.items(&c), vec!["train_fp32", "train_int2", "train_int4"]);
+    }
+
+    #[test]
+    fn parse_item_rejects_garbage() {
+        assert_eq!(parse_item("train_int1").unwrap(), Precision::Int(1));
+        assert_eq!(parse_item("train_ternary").unwrap(), Precision::Ternary);
+        assert_eq!(parse_item("train_fp32").unwrap(), Precision::Fp32);
+        assert!(parse_item("train_int9").is_err(), "no engine, no cell");
+        assert!(parse_item("int8").is_err(), "missing the train_ prefix");
+        assert!(parse_item("train_float").is_err());
+    }
+}

@@ -215,6 +215,21 @@ fn fig2_cells() -> Vec<(&'static str, &'static str)> {
 
 pub struct Fig2;
 
+/// The QAT-able widths of the `--bits` sweep: the fake-quant training
+/// grid is the affine 2..=8 family, so the bitplane precisions (int1 /
+/// ternary) have no QAT cell — they appear in the deployment sweeps
+/// and in `exp noise` instead.
+fn qat_widths(ctx: &ExpCtx) -> Vec<u32> {
+    use crate::quant::Precision;
+    ctx.precisions
+        .iter()
+        .filter_map(|p| match p {
+            Precision::Int(b) if *b >= 2 => Some(*b),
+            _ => None,
+        })
+        .collect()
+}
+
 impl Experiment for Fig2 {
     fn name(&self) -> &'static str {
         "fig2"
@@ -229,7 +244,7 @@ impl Experiment for Fig2 {
         for (algo, env) in fig2_cells() {
             items.push(format!("{algo}/{env}/fp"));
             items.push(format!("{algo}/{env}/ptq8"));
-            for b in &ctx.bits {
+            for b in qat_widths(ctx) {
                 items.push(format!("{algo}/{env}/qat{b}"));
             }
         }
@@ -298,7 +313,7 @@ impl Experiment for Fig2 {
     fn render(&self, ctx: &ExpCtx, rows: &[Row]) -> String {
         let mut out = String::from("Figure 2 — QAT reward vs bitwidth (FP = fp32, 8* = 8-bit PTQ)\n\n");
         let mut modes: Vec<String> = vec!["fp".into(), "ptq8".into()];
-        for b in &ctx.bits {
+        for b in qat_widths(ctx) {
             modes.push(format!("qat{b}"));
         }
         for (algo, env) in fig2_cells() {

@@ -43,9 +43,8 @@ const BASE_QUERIES: f64 = 4_000.0;
 
 fn precisions(ctx: &ExpCtx) -> Vec<Precision> {
     let mut ps = vec![Precision::Fp32, Precision::Int(8)];
-    for &b in ctx.sweep_bits().iter().filter(|&&b| b != 8 && Precision::Int(b).engine_supported())
-    {
-        ps.push(Precision::Int(b));
+    for &p in ctx.sweep_precisions().iter().filter(|&&p| p != Precision::Int(8)) {
+        ps.push(p);
     }
     ps
 }
@@ -56,13 +55,10 @@ fn parse_item(item: &str) -> Result<(Precision, usize)> {
         .ok_or_else(|| Error::Experiment(format!("bad serve item '{item}'")))?;
     let clients: usize =
         c.parse().map_err(|_| Error::Experiment(format!("bad client count in '{item}'")))?;
-    let precision = if label == "fp32" {
-        Precision::Fp32
-    } else if let Some(b) = label.strip_prefix("int").and_then(|b| b.parse().ok()) {
-        Precision::Int(b)
-    } else {
-        return Err(Error::Experiment(format!("bad precision in '{item}'")));
-    };
+    let precision = Precision::from_label(label)
+        .ok()
+        .filter(|p| p.engine_supported())
+        .ok_or_else(|| Error::Experiment(format!("bad precision in '{item}'")))?;
     Ok((precision, clients))
 }
 
@@ -209,7 +205,7 @@ mod tests {
             scale: 1.0,
             episodes: 1,
             seed: 3,
-            bits: vec![],
+            precisions: vec![],
             bits_explicit: false,
             filter: None,
             shard: None,
@@ -231,10 +227,11 @@ mod tests {
             parse_item(it).unwrap();
         }
         let mut c4 = ctx();
-        c4.bits = vec![4, 8];
+        c4.precisions = vec![Precision::Int(4), Precision::Int(8), Precision::Ternary];
         c4.bits_explicit = true;
         let items = Serve.items(&c4);
         assert!(items.contains(&"int4_c8".to_string()), "{items:?}");
+        assert!(items.contains(&"ternary_c1".to_string()), "{items:?}");
         assert_eq!(items.iter().filter(|i| i.contains("int8")).count(), 2, "no int8 dupes");
     }
 
@@ -242,8 +239,11 @@ mod tests {
     fn parse_item_round_trips_and_rejects_garbage() {
         assert_eq!(parse_item("fp32_c1").unwrap(), (Precision::Fp32, 1));
         assert_eq!(parse_item("int4_c8").unwrap(), (Precision::Int(4), 8));
+        assert_eq!(parse_item("int1_c2").unwrap(), (Precision::Int(1), 2));
+        assert_eq!(parse_item("ternary_c4").unwrap(), (Precision::Ternary, 4));
         assert!(parse_item("fp32").is_err());
         assert!(parse_item("float_c2").is_err());
+        assert!(parse_item("int9_c2").is_err(), "no engine, no cell");
         assert!(parse_item("int8_cx").is_err());
     }
 

@@ -48,20 +48,15 @@ const PROBES: usize = 4;
 
 fn precisions(ctx: &ExpCtx) -> Vec<Precision> {
     let mut ps = vec![Precision::Fp32, Precision::Int(8)];
-    for &b in ctx.sweep_bits().iter().filter(|&&b| b != 8 && Precision::Int(b).engine_supported())
-    {
-        ps.push(Precision::Int(b));
+    for &p in ctx.sweep_precisions().iter().filter(|&&p| p != Precision::Int(8)) {
+        ps.push(p);
     }
     ps
 }
 
 fn parse_item(item: &str) -> Result<Precision> {
-    if item == "fp32" {
-        return Ok(Precision::Fp32);
-    }
-    item.strip_prefix("int")
-        .and_then(|b| b.parse().ok())
-        .map(Precision::Int)
+    Precision::from_label(item)
+        .ok()
         .filter(|p| p.engine_supported())
         .ok_or_else(|| Error::Experiment(format!("bad dist item '{item}'")))
 }
@@ -253,7 +248,7 @@ mod tests {
             scale: 1.0,
             episodes: 1,
             seed: 3,
-            bits: vec![],
+            precisions: vec![],
             bits_explicit: false,
             filter: None,
             shard: None,
@@ -271,10 +266,10 @@ mod tests {
         let c = ctx();
         assert_eq!(Dist.items(&c), vec!["fp32", "int8"]);
         let mut c4 = ctx();
-        c4.bits = vec![4, 8];
+        c4.precisions = vec![Precision::Int(4), Precision::Int(8), Precision::Int(1)];
         c4.bits_explicit = true;
         let items = Dist.items(&c4);
-        assert_eq!(items, vec!["fp32", "int8", "int4"]);
+        assert_eq!(items, vec!["fp32", "int8", "int4", "int1"]);
         for it in &items {
             parse_item(it).unwrap();
         }
@@ -284,6 +279,8 @@ mod tests {
     fn parse_item_rejects_garbage() {
         assert_eq!(parse_item("fp32").unwrap(), Precision::Fp32);
         assert_eq!(parse_item("int2").unwrap(), Precision::Int(2));
+        assert_eq!(parse_item("int1").unwrap(), Precision::Int(1));
+        assert_eq!(parse_item("ternary").unwrap(), Precision::Ternary);
         assert!(parse_item("float").is_err());
         assert!(parse_item("int9").is_err(), "engine-unsupported widths are refused");
         assert!(parse_item("int").is_err());

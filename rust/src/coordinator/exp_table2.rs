@@ -142,8 +142,18 @@ impl Experiment for Table2 {
         // heads; NaN (JSON null) where the engines don't apply. The
         // per-bitwidth sweep is opt-in via an explicit `--bits`; bits=8
         // is skipped like fig6/carbon do — it is the headline int8
-        // column, already evaluated and measured above.
-        let sweep: Vec<u32> = ctx.sweep_bits().iter().copied().filter(|&b| b != 8).collect();
+        // column, already evaluated and measured above. This table is
+        // the *PTQ* sweep, so only the affine fake-quant widths (2..=8)
+        // appear; the bitplane precisions (int1/ternary) have no affine
+        // PTQ grid — their engine rows live in fig6 and `exp noise`.
+        let sweep: Vec<u32> = ctx
+            .sweep_precisions()
+            .iter()
+            .filter_map(|p| match p {
+                Precision::Int(b) if *b >= 2 && *b != 8 => Some(*b),
+                _ => None,
+            })
+            .collect();
         let (f32_us, i8_us, bits_us) = if algo == "dqn" || algo == "ddpg" {
             engine_row_latency_us(&policy, ctx.seed + 9, &sweep, ctx.threads)?
         } else {

@@ -12,6 +12,7 @@ use std::process::Command;
 
 use crate::coordinator::metrics::{JsonlSink, Row};
 use crate::error::{Error, Result};
+use crate::quant::Precision;
 use crate::runtime::Runtime;
 
 /// Shared context for a harness invocation.
@@ -28,12 +29,15 @@ pub struct ExpCtx<'a> {
     pub episodes: usize,
     /// Base seed.
     pub seed: u64,
-    /// QAT sweep bitwidths (fig2 always sweeps these; defaulted).
-    pub bits: Vec<u32>,
-    /// Whether `--bits` was passed explicitly. The per-bitwidth engine
+    /// Sweep precisions from `--bits` (fig2 always sweeps the QAT-able
+    /// integer widths of these; defaulted). Entries are CLI-validated
+    /// engine-supported quantized precisions — integer widths 1..=8 or
+    /// ternary.
+    pub precisions: Vec<Precision>,
+    /// Whether `--bits` was passed explicitly. The per-precision engine
     /// sweeps in fig6/table2/carbon are opt-in (they multiply run cost),
-    /// so they key off [`ExpCtx::sweep_bits`] rather than the defaulted
-    /// list fig2 uses.
+    /// so they key off [`ExpCtx::sweep_precisions`] rather than the
+    /// defaulted list fig2 uses.
     pub bits_explicit: bool,
     /// Run only items whose id contains this substring.
     pub filter: Option<String>,
@@ -83,11 +87,11 @@ impl<'a> ExpCtx<'a> {
         (crate::coordinator::cache::default_steps(algo, env_id) as f32 * self.scale) as usize
     }
 
-    /// Bitwidths for the opt-in per-precision sweep rows (fig6 / table2 /
-    /// carbon): empty unless the user passed `--bits` — a default run
+    /// Precisions for the opt-in per-precision sweep rows (fig6 / table2
+    /// / carbon): empty unless the user passed `--bits` — a default run
     /// must not silently multiply its measurement cost.
-    pub fn sweep_bits(&self) -> &[u32] {
-        if self.bits_explicit { &self.bits } else { &[] }
+    pub fn sweep_precisions(&self) -> &[Precision] {
+        if self.bits_explicit { &self.precisions } else { &[] }
     }
 }
 
@@ -117,6 +121,7 @@ pub fn all_experiments() -> Vec<Box<dyn Experiment>> {
         Box::new(crate::coordinator::exp_deploy::Fig6),
         Box::new(crate::coordinator::exp_sweetspot::Fig7),
         Box::new(crate::coordinator::exp_actorq::ActorQExp),
+        Box::new(crate::coordinator::exp_noise::Noise),
         Box::new(crate::coordinator::exp_carbon::Carbon),
         Box::new(crate::coordinator::exp_serve::Serve),
         Box::new(crate::coordinator::exp_snapshot::Dist),
@@ -218,8 +223,9 @@ fn spawn_shards(ctx: &ExpCtx, exp_name: &str) -> Result<()> {
         // Forward --bits only when the parent got it explicitly: shard
         // children fall back to the same defaults otherwise, and an
         // implicit flag would wrongly switch their opt-in sweeps on.
-        if ctx.bits_explicit && !ctx.bits.is_empty() {
-            let b: Vec<String> = ctx.bits.iter().map(|x| x.to_string()).collect();
+        // Labels round-trip through Precision::from_token ("int4", "t").
+        if ctx.bits_explicit && !ctx.precisions.is_empty() {
+            let b: Vec<String> = ctx.precisions.iter().map(|p| p.label()).collect();
             cmd.arg("--bits").arg(b.join(","));
         }
         // Engine threading must survive into shard children so latency

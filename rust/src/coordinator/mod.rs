@@ -30,6 +30,7 @@ pub mod exp_dists;
 pub mod exp_faults;
 pub mod exp_matrix;
 pub mod exp_mixed;
+pub mod exp_noise;
 pub mod exp_qat;
 pub mod exp_serve;
 pub mod exp_snapshot;

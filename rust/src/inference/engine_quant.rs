@@ -1,14 +1,28 @@
-//! Bitwidth-generic quantized MLP inference engine — one kernel for
-//! every integer deployment precision (int2..=int8), including packed
-//! sub-byte weights.
+//! Bitwidth-generic quantized MLP inference engine — one kernel family
+//! for every integer deployment precision (int1..=int8 and ternary),
+//! including packed sub-byte and bitplane weights.
 //!
-//! This is the PR-3 int8 engine generalized over [`Precision::Int`]:
+//! This is the PR-3 int8 engine generalized over [`Precision`]:
 //! weights are quantized offline to centered `bits`-bit codes with
 //! per-tensor affine parameters. Activations are quantized on the fly
 //! per layer at 8 bits, exactly as the int8 engine always did: sub-byte
 //! deployment is a *weight-storage* statement, and keeping the
 //! activation rule fixed means every bitwidth shares one integer GEMM
 //! and one parity argument.
+//!
+//! The sub-int2 precisions (`Int(1)` binary, `Ternary`) swap both the
+//! storage and the activation rule for an XNOR-popcount scheme:
+//! weights live as column-major sign/mask bitplanes
+//! ([`crate::inference::panel::BitplaneStore`]), activations are
+//! binarized per row around their mean (`mu = mean a`,
+//! `alpha = mean |a - mu|`, sign bit per element), and the integer
+//! inner product collapses to `n_eff - 2 * popcount(xnor)` — 64 weight
+//! positions per `u64` `xor` + `count_ones`. The epilogue recovers
+//! `y = (alpha_w * alpha_a) * acc + (alpha_w * mu) * col_sums + b` with
+//! the same per-column code sums the affine path precomputes; see
+//! [`bitplane_out`] for the one shared float expression. These layers
+//! always run the bitplane kernels — [`KernelKind`] selects among the
+//! *affine* layouts only.
 //!
 //! Two weight layouts implement that contract, selected by
 //! [`EngineConfig::kernel`]:
@@ -43,9 +57,9 @@
 //! fake-quant reference built from public [`QParams`] math.
 
 use crate::error::{Error, Result};
-use crate::inference::panel::{PanelStore, COL_BLOCK, PANEL_ROWS};
+use crate::inference::panel::{plane_words, BitplaneStore, PanelStore, COL_BLOCK, PANEL_ROWS};
 use crate::quant::codec::CodeBuf;
-use crate::quant::{Precision, QParams};
+use crate::quant::{binarize, ternarize, Precision, QParams};
 use crate::runtime::ParamSet;
 
 /// Which weight layout (and loop structure) an [`EngineQuant`] runs.
@@ -107,6 +121,10 @@ pub enum WeightStore {
     RowMajor(CodeBuf),
     /// Construction-time panel-major prepack (default).
     Panels(PanelStore),
+    /// Column-major sign/mask bitplanes for the XNOR-popcount kernels
+    /// (int1/ternary — always used at those precisions, independent of
+    /// [`KernelKind`]).
+    Bitplanes(BitplaneStore),
 }
 
 impl WeightStore {
@@ -115,24 +133,29 @@ impl WeightStore {
         match self {
             WeightStore::RowMajor(cb) => cb.to_vec(),
             WeightStore::Panels(ps) => ps.to_vec(),
+            WeightStore::Bitplanes(bs) => bs.to_vec(),
         }
     }
 
     /// Real storage bytes (pad included for panel-major sub-byte
-    /// layouts) — the weight-traffic figure memory reports bill.
+    /// layouts and for the 64-bit-word-aligned bitplanes) — the
+    /// weight-traffic figure memory reports bill.
     pub fn bytes(&self) -> usize {
         match self {
             WeightStore::RowMajor(cb) => cb.bytes(),
             WeightStore::Panels(ps) => ps.bytes(),
+            WeightStore::Bitplanes(bs) => bs.bytes(),
         }
     }
 
     /// Whether codes are stored sub-byte (panels/rows must be unpacked
-    /// through scratch).
+    /// through i8 scratch). Bitplanes answer `false`: their kernels
+    /// consume the words directly and never unpack to i8.
     pub fn is_packed(&self) -> bool {
         match self {
             WeightStore::RowMajor(cb) => cb.as_i8_slice(0, 0).is_none(),
             WeightStore::Panels(ps) => ps.is_packed(),
+            WeightStore::Bitplanes(_) => false,
         }
     }
 }
@@ -197,8 +220,8 @@ struct Lane {
 #[derive(Debug, Clone)]
 pub struct EngineQuant {
     pub layers: Vec<LayerQ>,
-    /// Weight storage bitwidth (2..=8).
-    pub bits: u32,
+    /// Deployment precision (int1..=int8 or ternary).
+    precision: Precision,
     /// Intra-op worker threads for `forward_batch` (prepacked kernel).
     threads: usize,
     /// Widest layer interface; scratch rows are strided by layer width,
@@ -211,10 +234,17 @@ pub struct EngineQuant {
     qa_scratch: Vec<i32>,
     /// i32 GEMM/GEMV accumulators.
     acc_scratch: Vec<i32>,
-    /// Per-row combined dequantization scale (`a_delta * w_delta`).
+    /// Per-row combined dequantization scale (`a_delta * w_delta`;
+    /// `w_delta * alpha_a` on the bitplane path).
     row_scale: Vec<f32>,
     /// Per-row activation zero point.
     row_zp: Vec<i32>,
+    /// Second per-row bitplane scale (`w_delta * mu_a`), paired with
+    /// `row_scale`; empty-by-construction is fine (sized with it).
+    row_scale2: Vec<f32>,
+    /// Batch-major activation sign words for the bitplane kernels, row
+    /// `r` at `r * plane_words(in_dim)` (empty for affine engines).
+    sign_scratch: Vec<u64>,
     /// Unpack buffer for packed weight codes: one `max_dim` row for the
     /// row-major GEMV plus a 4 x COL_BLOCK panel for the panel kernels
     /// (sized for the larger; stays empty for i8-stored layers).
@@ -253,6 +283,61 @@ fn row_range(a: &[f32]) -> (f32, f32) {
     let amin = a.iter().copied().fold(f32::INFINITY, f32::min);
     let amax = a.iter().copied().fold(f32::NEG_INFINITY, f32::max);
     (amin, amax)
+}
+
+/// Per-row activation binarization parameters for the bitplane kernels:
+/// `mu = mean(a)` and `alpha = mean |a - mu|`, both accumulated in f64
+/// and cast to f32 once. The row is modeled as `a_i ≈ mu + alpha * s_i`
+/// with `s_i = sign(a_i - mu)` (ties, `a_i == mu`, count as `+1`) —
+/// mean-centering matters because post-relu activations are one-sided,
+/// and a sign split around zero would degenerate to all-ones.
+///
+/// Public (with [`pack_act_signs`] / [`bitplane_out`]) because the
+/// parity tests rebuild the scalar reference from exactly these floats.
+pub fn act_bitplane_params(a: &[f32]) -> (f32, f32) {
+    if a.is_empty() {
+        return (0.0, 0.0);
+    }
+    let inv = 1.0 / a.len() as f64;
+    let mu = (a.iter().map(|&v| v as f64).sum::<f64>() * inv) as f32;
+    let alpha = (a.iter().map(|&v| (v - mu).abs() as f64).sum::<f64>() * inv) as f32;
+    (mu, alpha)
+}
+
+/// Pack one activation row's sign bits around its mean: bit `i` set iff
+/// `a_i < mu` (negative sign), LSB-first, 64 per `u64` word. Pad bits
+/// past `a.len()` stay zero — "positive" — matching the weight planes'
+/// zero pads, so the binary kernel's unmasked popcount identity holds
+/// without a tail mask (pads agree on both operands and cancel).
+pub fn pack_act_signs(a: &[f32], mu: f32, words: &mut [u64]) {
+    debug_assert_eq!(words.len(), plane_words(a.len()));
+    words.fill(0);
+    for (i, &v) in a.iter().enumerate() {
+        if v < mu {
+            words[i / 64] |= 1u64 << (i % 64);
+        }
+    }
+}
+
+/// The one float expression every bitplane entry point (and the test
+/// references) evaluates per output element:
+///
+/// ```text
+/// y = s1 * acc + s2 * col_sum + b      (then relu)
+/// s1 = w_delta * alpha_a,  s2 = w_delta * mu_a
+/// ```
+///
+/// where `acc = Σ_i s_a[i] * t_w[i, c]` is the popcount dot over the
+/// sign/ternary codes and `col_sum = Σ_i t_w[i, c]` is the precomputed
+/// column code sum. Derivation: `Σ_i (mu + alpha * s_a[i]) * (delta *
+/// t_w[i, c]) = delta * alpha * acc + delta * mu * col_sum`.
+#[inline]
+pub fn bitplane_out(s1: f32, s2: f32, acc: i32, col_sum: i32, bias: f32, relu: bool) -> f32 {
+    let mut y = s1 * acc as f32 + s2 * col_sum as f32 + bias;
+    if relu && y < 0.0 {
+        y = 0.0;
+    }
+    y
 }
 
 /// The activation-code operand of one batched GEMM: raw 8-bit codes for
@@ -508,6 +593,85 @@ fn gemv_rowmajor(codes: &CodeBuf, qa: &[i32], m: usize, acc: &mut [i32], panel: 
     }
 }
 
+/// XNOR-popcount GEMV (the `batch == 1` actor path): the activation
+/// sign words sweep every output column's weight plane(s). Binary
+/// columns use the unmasked identity `acc[c] = in_dim − 2 ·
+/// popcount(sa ^ sign_c)` — pad bits are zero in both operands, so they
+/// never mismatch and contribute nothing; ternary columns mask the
+/// mismatches to the nonzero support: `acc[c] = nnz(c) − 2 ·
+/// popcount((sa ^ sign_c) & mask_c)`. Each `u64` word covers 64 weight
+/// positions per `xor` + `count_ones`.
+fn gemv_bitplanes(bs: &BitplaneStore, sa: &[u64], m: usize, acc: &mut [i32]) {
+    let nw = sa.len();
+    debug_assert_eq!(nw * if bs.is_ternary() { 2 } else { 1 }, bs.words_per_col());
+    if bs.is_ternary() {
+        for c in 0..m {
+            let (mask, sign) = bs.col(c).split_at(nw);
+            let mut pop = 0u32;
+            for w in 0..nw {
+                pop += ((sa[w] ^ sign[w]) & mask[w]).count_ones();
+            }
+            acc[c] = bs.nnz(c) - 2 * pop as i32;
+        }
+    } else {
+        for c in 0..m {
+            let sign = bs.col(c);
+            let mut pop = 0u32;
+            for w in 0..nw {
+                pop += (sa[w] ^ sign[w]).count_ones();
+            }
+            acc[c] = bs.nnz(c) - 2 * pop as i32;
+        }
+    }
+}
+
+/// Batched XNOR-popcount GEMM over output columns `[cols.0, cols.1)`:
+/// column outer, batch row inner, so each column's plane words stay
+/// register/L1-resident while the whole batch consumes them. Popcounts
+/// are exact integers — any evaluation order gives the same i32 — so
+/// the per-element values are identical to [`gemv_bitplanes`] and
+/// independent of how columns are split across threads. Accumulators
+/// are *assigned* (each output element has exactly one (c, r) visit),
+/// so callers need not zero-fill.
+fn gemm_bitplanes(
+    bs: &BitplaneStore,
+    sa: &[u64],
+    nw: usize,
+    batch: usize,
+    cols: (usize, usize),
+    acc: &mut [i32],
+    view: TileView,
+) {
+    let (c_lo, c_hi) = cols;
+    if bs.is_ternary() {
+        for c in c_lo..c_hi {
+            let (mask, sign) = bs.col(c).split_at(nw);
+            let base = bs.nnz(c);
+            for r in 0..batch {
+                let row = &sa[r * nw..(r + 1) * nw];
+                let mut pop = 0u32;
+                for w in 0..nw {
+                    pop += ((row[w] ^ sign[w]) & mask[w]).count_ones();
+                }
+                acc[view.at(r, c)] = base - 2 * pop as i32;
+            }
+        }
+    } else {
+        for c in c_lo..c_hi {
+            let sign = bs.col(c);
+            let base = bs.nnz(c);
+            for r in 0..batch {
+                let row = &sa[r * nw..(r + 1) * nw];
+                let mut pop = 0u32;
+                for w in 0..nw {
+                    pop += (row[w] ^ sign[w]).count_ones();
+                }
+                acc[view.at(r, c)] = base - 2 * pop as i32;
+            }
+        }
+    }
+}
+
 /// The shared float epilogue of the batched kernels: hoisted zero-point
 /// correction, combined scale, bias, relu. The corrected i32 equals the
 /// scalar path's centered accumulation exactly, so this is the same
@@ -541,6 +705,39 @@ impl EpiloguePass<'_> {
     }
 }
 
+/// Bitplane analogue of [`EpiloguePass`]: evaluates [`bitplane_out`]
+/// with the two per-row scales the binarize step computed. The same
+/// disjoint-columns argument applies — every output element is produced
+/// by exactly one worker running this one expression — so outputs are
+/// bit-identical at every thread count.
+struct BitEpilogue<'a> {
+    col_sums: &'a [i32],
+    bias: &'a [f32],
+    relu: bool,
+    row_s1: &'a [f32],
+    row_s2: &'a [f32],
+    batch: usize,
+}
+
+impl BitEpilogue<'_> {
+    fn run(&self, cols: (usize, usize), acc: &[i32], av: TileView, dst: &mut [f32], dv: TileView) {
+        let (c_lo, c_hi) = cols;
+        for r in 0..self.batch {
+            let (s1, s2) = (self.row_s1[r], self.row_s2[r]);
+            for c in c_lo..c_hi {
+                dst[dv.at(r, c)] = bitplane_out(
+                    s1,
+                    s2,
+                    acc[av.at(r, c)],
+                    self.col_sums[c],
+                    self.bias[c],
+                    self.relu,
+                );
+            }
+        }
+    }
+}
+
 /// Split `n_blocks` COL_BLOCK-wide column blocks into `t` contiguous
 /// non-empty runs (`t <= n_blocks`) and return their column ranges;
 /// the final range ends at the layer edge `m`.
@@ -556,17 +753,37 @@ fn block_ranges(n_blocks: usize, t: usize, m: usize) -> Vec<(usize, usize)> {
 
 impl EngineQuant {
     /// Quantize a trained fp32 parameter set to a `bits`-bit engine
-    /// (bits in 2..=8; sub-byte widths are stored packed) with the
-    /// default config: panel-major prepacked kernel, one thread.
+    /// (bits in 1..=8; sub-byte widths are stored packed, bits == 1 as
+    /// sign bitplanes) with the default config: panel-major prepacked
+    /// kernel, one thread. Bits-keyed convenience over
+    /// [`EngineQuant::from_params_prec`] (ternary has no bitwidth and
+    /// needs the precision-keyed constructor).
     pub fn from_params(params: &ParamSet, bits: u32) -> Result<EngineQuant> {
-        EngineQuant::from_params_cfg(params, bits, EngineConfig::default())
+        EngineQuant::from_params_prec(params, Precision::Int(bits), EngineConfig::default())
     }
 
-    /// Quantize with an explicit kernel/threading config. The weight
-    /// repack (for [`KernelKind::Prepacked`]) happens here, once — the
-    /// forward paths never touch input-major storage again.
+    /// Bits-keyed [`EngineQuant::from_params_prec`] with an explicit
+    /// kernel/threading config.
     pub fn from_params_cfg(params: &ParamSet, bits: u32, cfg: EngineConfig) -> Result<EngineQuant> {
-        Precision::Int(bits).validate_for_engine()?;
+        EngineQuant::from_params_prec(params, Precision::Int(bits), cfg)
+    }
+
+    /// Quantize a trained fp32 parameter set at any engine-supported
+    /// quantized precision. The weight repack (panels for
+    /// [`KernelKind::Prepacked`], sign/mask bitplanes for int1/ternary)
+    /// happens here, once — the forward paths never touch input-major
+    /// storage again.
+    pub fn from_params_prec(
+        params: &ParamSet,
+        precision: Precision,
+        cfg: EngineConfig,
+    ) -> Result<EngineQuant> {
+        precision.validate_for_engine()?;
+        if !precision.is_quantized() {
+            return Err(Error::Quant(
+                "EngineQuant needs a quantized precision (fp32 runs on EngineF32)".into(),
+            ));
+        }
         if params.tensors.len() % 2 != 0 {
             return Err(Error::Quant("param set must alternate W/b".into()));
         }
@@ -581,29 +798,64 @@ impl EngineQuant {
             }
             let (in_dim, out_dim) = (w.shape()[0], w.shape()[1]);
             max_dim = max_dim.max(in_dim).max(out_dim);
-            let w_qp = QParams::from_range(w.min(), w.max(), bits)?;
-            // Quantize in place (input-major, matching the training
-            // layout); codes offset by the zero point so the inner
-            // product is over (q - z) directly. The centering + signed
-            // saturation rule is QParams::quantize_code, shared with the
-            // ActorQ broadcast path at every bitwidth.
-            let mut codes = vec![0i8; in_dim * out_dim];
-            for r in 0..in_dim {
-                for c in 0..out_dim {
-                    codes[r * out_dim + c] = w_qp.quantize_code(w.data()[r * out_dim + c], bits);
+            let (w_qp, codes) = if precision.is_bitplane() {
+                // Sign / ternary weight quantization: per-layer scale is
+                // the mean |w| (over the nonzero support for ternary),
+                // stored in QParams::delta with a zero zero-point so
+                // dequantize_i8 keeps meaning `delta * code`.
+                let (codes, alpha, levels) = match precision {
+                    Precision::Ternary => {
+                        let (c, a) = ternarize(w.data());
+                        (c, a, 3.0)
+                    }
+                    _ => {
+                        let (c, a) = binarize(w.data());
+                        (c, a, 2.0)
+                    }
+                };
+                (QParams { delta: alpha, zero_point: 0.0, levels }, codes)
+            } else {
+                let bits = precision.bits();
+                let w_qp = QParams::from_range(w.min(), w.max(), bits)?;
+                // Quantize in place (input-major, matching the training
+                // layout); codes offset by the zero point so the inner
+                // product is over (q - z) directly. The centering + signed
+                // saturation rule is QParams::quantize_code, shared with the
+                // ActorQ broadcast path at every bitwidth.
+                let mut codes = vec![0i8; in_dim * out_dim];
+                for r in 0..in_dim {
+                    for c in 0..out_dim {
+                        codes[r * out_dim + c] =
+                            w_qp.quantize_code(w.data()[r * out_dim + c], bits);
+                    }
                 }
-            }
+                (w_qp, codes)
+            };
             let mut col_sums = vec![0i32; out_dim];
             for r in 0..in_dim {
                 for c in 0..out_dim {
                     col_sums[c] += codes[r * out_dim + c] as i32;
                 }
             }
-            let store = match cfg.kernel {
-                KernelKind::Prepacked => {
-                    WeightStore::Panels(PanelStore::pack(&codes, in_dim, out_dim, bits))
+            let store = if precision.is_bitplane() {
+                WeightStore::Bitplanes(BitplaneStore::pack(
+                    &codes,
+                    in_dim,
+                    out_dim,
+                    precision == Precision::Ternary,
+                ))
+            } else {
+                match cfg.kernel {
+                    KernelKind::Prepacked => WeightStore::Panels(PanelStore::pack(
+                        &codes,
+                        in_dim,
+                        out_dim,
+                        precision.bits(),
+                    )),
+                    KernelKind::RowMajor => {
+                        WeightStore::RowMajor(CodeBuf::from_codes(&codes, precision.bits()))
+                    }
                 }
-                KernelKind::RowMajor => WeightStore::RowMajor(CodeBuf::from_codes(&codes, bits)),
             };
             layers.push(LayerQ {
                 codes: store,
@@ -615,10 +867,20 @@ impl EngineQuant {
                 relu: i + 1 < n_layers,
             });
         }
-        let packed = layers.iter().any(|l| l.codes.is_packed());
-        Ok(EngineQuant {
+        Ok(EngineQuant::assemble(layers, precision, cfg, max_dim))
+    }
+
+    /// Shared scratch-arena construction for both build paths.
+    fn assemble(
+        layers: Vec<LayerQ>,
+        precision: Precision,
+        cfg: EngineConfig,
+        max_dim: usize,
+    ) -> EngineQuant {
+        let needs_panel = layers.iter().any(|l| l.codes.is_packed());
+        EngineQuant {
             layers,
-            bits,
+            precision,
             threads: cfg.threads.max(1),
             max_dim,
             act_scratch: vec![0.0; max_dim],
@@ -626,9 +888,19 @@ impl EngineQuant {
             acc_scratch: vec![0i32; max_dim],
             row_scale: vec![0.0; 1],
             row_zp: vec![0i32; 1],
-            panel: if packed { vec![0i8; max_dim.max(PANEL_ROWS * COL_BLOCK)] } else { Vec::new() },
+            row_scale2: vec![0.0; 1],
+            sign_scratch: if precision.is_bitplane() {
+                vec![0u64; plane_words(max_dim)]
+            } else {
+                Vec::new()
+            },
+            panel: if needs_panel {
+                vec![0i8; max_dim.max(PANEL_ROWS * COL_BLOCK)]
+            } else {
+                Vec::new()
+            },
             lanes: Vec::new(),
-        })
+        }
     }
 
     /// Rebuild an engine from **already-quantized** layers — the
@@ -648,10 +920,31 @@ impl EngineQuant {
         bits: u32,
         cfg: EngineConfig,
     ) -> Result<EngineQuant> {
-        Precision::Int(bits).validate_for_engine()?;
+        EngineQuant::from_quantized_prec(inits, Precision::Int(bits), cfg)
+    }
+
+    /// Precision-keyed [`EngineQuant::from_quantized`] — the only entry
+    /// for ternary artifacts, and what the bits-keyed wrapper delegates
+    /// to. For bitplane precisions the codes must already sit on the
+    /// precision's grid ({−1,+1} for int1, {−1,0,+1} for ternary) and
+    /// `w_qp.delta` (the layer scale `alpha`) may be exactly 0 — an
+    /// all-zero source layer quantizes to `alpha = 0` legitimately —
+    /// where the affine grids require a strictly positive step.
+    pub fn from_quantized_prec(
+        inits: Vec<QuantLayerInit>,
+        precision: Precision,
+        cfg: EngineConfig,
+    ) -> Result<EngineQuant> {
+        precision.validate_for_engine()?;
+        if !precision.is_quantized() {
+            return Err(Error::Quant(
+                "EngineQuant needs a quantized precision (fp32 runs on EngineF32)".into(),
+            ));
+        }
         if inits.is_empty() {
             return Err(Error::Config("quantized engine needs at least one layer".into()));
         }
+        let bitplane = precision.is_bitplane();
         let n_layers = inits.len();
         let mut layers = Vec::with_capacity(n_layers);
         let mut max_dim = 0;
@@ -669,22 +962,47 @@ impl EngineQuant {
                     b.len()
                 )));
             }
-            if !(w_qp.delta.is_finite() && w_qp.delta > 0.0 && w_qp.zero_point.is_finite()) {
+            let delta_ok = if bitplane { w_qp.delta >= 0.0 } else { w_qp.delta > 0.0 };
+            if !(w_qp.delta.is_finite() && delta_ok && w_qp.zero_point.is_finite()) {
                 return Err(Error::Config(format!("layer {i}: invalid QParams {w_qp:?}")));
             }
             max_dim = max_dim.max(in_dim).max(out_dim);
             let flat = codes.to_vec();
+            if bitplane {
+                let ternary = precision == Precision::Ternary;
+                let bad = flat
+                    .iter()
+                    .any(|&c| if ternary { !(-1..=1).contains(&c) } else { c != 1 && c != -1 });
+                if bad {
+                    return Err(Error::Config(format!(
+                        "layer {i}: codes outside the {} grid",
+                        precision.label()
+                    )));
+                }
+            }
             let mut col_sums = vec![0i32; out_dim];
             for r in 0..in_dim {
                 for c in 0..out_dim {
                     col_sums[c] += flat[r * out_dim + c] as i32;
                 }
             }
-            let store = match cfg.kernel {
-                KernelKind::Prepacked => {
-                    WeightStore::Panels(PanelStore::pack(&flat, in_dim, out_dim, bits))
+            let store = if bitplane {
+                WeightStore::Bitplanes(BitplaneStore::pack(
+                    &flat,
+                    in_dim,
+                    out_dim,
+                    precision == Precision::Ternary,
+                ))
+            } else {
+                match cfg.kernel {
+                    KernelKind::Prepacked => WeightStore::Panels(PanelStore::pack(
+                        &flat,
+                        in_dim,
+                        out_dim,
+                        precision.bits(),
+                    )),
+                    KernelKind::RowMajor => WeightStore::RowMajor(codes),
                 }
-                KernelKind::RowMajor => WeightStore::RowMajor(codes),
             };
             layers.push(LayerQ {
                 codes: store,
@@ -696,25 +1014,12 @@ impl EngineQuant {
                 relu: i + 1 < n_layers,
             });
         }
-        let packed = layers.iter().any(|l| l.codes.is_packed());
-        Ok(EngineQuant {
-            layers,
-            bits,
-            threads: cfg.threads.max(1),
-            max_dim,
-            act_scratch: vec![0.0; max_dim],
-            qa_scratch: vec![0i32; max_dim],
-            acc_scratch: vec![0i32; max_dim],
-            row_scale: vec![0.0; 1],
-            row_zp: vec![0i32; 1],
-            panel: if packed { vec![0i8; max_dim.max(PANEL_ROWS * COL_BLOCK)] } else { Vec::new() },
-            lanes: Vec::new(),
-        })
+        Ok(EngineQuant::assemble(layers, precision, cfg, max_dim))
     }
 
     /// Deployment precision of this engine.
     pub fn precision(&self) -> Precision {
-        Precision::Int(self.bits)
+        self.precision
     }
 
     /// Intra-op worker threads used by `forward_batch`.
@@ -768,6 +1073,15 @@ impl EngineQuant {
         if self.row_scale.len() < batch {
             self.row_scale.resize(batch, 0.0);
             self.row_zp.resize(batch, 0);
+            self.row_scale2.resize(batch, 0.0);
+        }
+        if self.precision.is_bitplane() {
+            // Sign-word rows are strided per layer by plane_words(in_dim)
+            // <= plane_words(max_dim), so this bounds every layer.
+            let sign_need = batch * plane_words(self.max_dim);
+            if self.sign_scratch.len() < sign_need {
+                self.sign_scratch.resize(sign_need, 0);
+            }
         }
         if self.threads > 1 {
             if self.lanes.len() < self.threads {
@@ -804,7 +1118,8 @@ impl EngineQuant {
     /// an error.
     pub fn forward(&mut self, x: &[f32], out: &mut [f32]) -> Result<()> {
         debug_assert_eq!(x.len(), self.layers[0].in_dim);
-        let EngineQuant { layers, act_scratch, qa_scratch, acc_scratch, panel, .. } = &mut *self;
+        let EngineQuant { layers, act_scratch, qa_scratch, acc_scratch, panel, sign_scratch, .. } =
+            &mut *self;
         act_scratch[..x.len()].copy_from_slice(x);
         let n_layers = layers.len();
         for (li, layer) in layers.iter().enumerate() {
@@ -813,6 +1128,33 @@ impl EngineQuant {
             let last = li + 1 == n_layers;
             let acc = &mut acc_scratch[..m];
             acc.fill(0);
+            if let WeightStore::Bitplanes(bs) = &layer.codes {
+                // Bitplane layer: binarize the row around its mean, run
+                // the XNOR-popcount GEMV, recover through bitplane_out.
+                let nw = plane_words(n);
+                let a = &act_scratch[..n];
+                let (amin, amax) = row_range(a);
+                let (s1, s2) = if amin == amax && amin == 0.0 {
+                    // Degenerate all-zero row: both scales vanish, the
+                    // epilogue over the zeroed acc is exactly the bias —
+                    // same benign-skip contract as the affine path.
+                    (0.0, 0.0)
+                } else {
+                    let (mu, alpha) = act_bitplane_params(a);
+                    pack_act_signs(a, mu, &mut sign_scratch[..nw]);
+                    gemv_bitplanes(bs, &sign_scratch[..nw], m, acc);
+                    (layer.w_qp.delta * alpha, layer.w_qp.delta * mu)
+                };
+                for c in 0..m {
+                    let y = bitplane_out(s1, s2, acc[c], layer.col_sums[c], layer.b[c], layer.relu);
+                    if last {
+                        out[c] = y;
+                    } else {
+                        act_scratch[c] = y;
+                    }
+                }
+                continue;
+            }
             // Dynamic activation quantization (per-tensor, per row).
             let a = &act_scratch[..n];
             let (amin, amax) = row_range(a);
@@ -833,6 +1175,8 @@ impl EngineQuant {
                         WeightStore::RowMajor(cb) => {
                             gemv_rowmajor(cb, &qa_scratch[..n], m, acc, panel)
                         }
+                        // handled (with continue) above
+                        WeightStore::Bitplanes(_) => unreachable!(),
                     }
                     a_qp.delta * layer.w_qp.delta
                 }
@@ -908,6 +1252,8 @@ impl EngineQuant {
                 acc_scratch,
                 row_scale,
                 row_zp,
+                row_scale2,
+                sign_scratch,
                 panel,
                 lanes,
                 threads,
@@ -916,6 +1262,88 @@ impl EngineQuant {
             let layer = &layers[li];
             let n = layer.in_dim;
             let m = layer.out_dim;
+
+            if let WeightStore::Bitplanes(bs) = &layer.codes {
+                // --- bitplane layer: binarize the whole batch (per-row
+                //     (mu, alpha), sign words packed per row), then the
+                //     XNOR-popcount GEMM + bitplane epilogue — threaded
+                //     over column blocks exactly like the affine panel
+                //     kernel, with the identical disjoint-columns
+                //     bit-exactness argument. ---
+                let nw = plane_words(n);
+                for r in 0..batch {
+                    let a = &act_scratch[r * n..(r + 1) * n];
+                    let words = &mut sign_scratch[r * nw..(r + 1) * nw];
+                    let (amin, amax) = row_range(a);
+                    if amin == amax && amin == 0.0 {
+                        // Degenerate all-zero row: zero scales make the
+                        // epilogue exactly the bias whatever the kernel
+                        // accumulates; all-positive signs keep the words
+                        // well-formed.
+                        row_scale[r] = 0.0;
+                        row_scale2[r] = 0.0;
+                        words.fill(0);
+                    } else {
+                        let (mu, alpha) = act_bitplane_params(a);
+                        pack_act_signs(a, mu, words);
+                        row_scale[r] = layer.w_qp.delta * alpha;
+                        row_scale2[r] = layer.w_qp.delta * mu;
+                    }
+                }
+                let sa = &sign_scratch[..batch * nw];
+                let epi = BitEpilogue {
+                    col_sums: &layer.col_sums,
+                    bias: &layer.b,
+                    relu: layer.relu,
+                    row_s1: &row_scale[..batch],
+                    row_s2: &row_scale2[..batch],
+                    batch,
+                };
+                let dst: &mut [f32] =
+                    if last { &mut out[..batch * m] } else { &mut act_scratch[..batch * m] };
+                let full = TileView { stride: m, col0: 0 };
+                let n_blocks = m.div_ceil(COL_BLOCK);
+                let t = (*threads).min(n_blocks);
+                if t <= 1 {
+                    gemm_bitplanes(bs, sa, nw, batch, (0, m), &mut acc_scratch[..batch * m], full);
+                    epi.run((0, m), &acc_scratch[..batch * m], full, dst, full);
+                } else {
+                    let ranges = block_ranges(n_blocks, t, m);
+                    let epi = &epi;
+                    let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(t);
+                    for (lane, &(c_lo, c_hi)) in lanes.iter_mut().zip(&ranges) {
+                        jobs.push(Box::new(move || {
+                            let w = c_hi - c_lo;
+                            let view = TileView { stride: w, col0: c_lo };
+                            gemm_bitplanes(
+                                bs,
+                                sa,
+                                nw,
+                                batch,
+                                (c_lo, c_hi),
+                                &mut lane.acc[..batch * w],
+                                view,
+                            );
+                            epi.run(
+                                (c_lo, c_hi),
+                                &lane.acc[..batch * w],
+                                view,
+                                &mut lane.outb[..batch * w],
+                                view,
+                            );
+                        }));
+                    }
+                    crate::inference::workers::global().run_scoped(jobs);
+                    for (lane, &(c_lo, c_hi)) in lanes.iter().zip(&ranges) {
+                        let w = c_hi - c_lo;
+                        for r in 0..batch {
+                            dst[r * m + c_lo..r * m + c_hi]
+                                .copy_from_slice(&lane.outb[r * w..(r + 1) * w]);
+                        }
+                    }
+                }
+                continue;
+            }
 
             // --- 1. quantize the whole activation batch (once per layer;
             //        per-row dynamic ranges, same rule as the scalar path) ---
@@ -956,6 +1384,8 @@ impl EngineQuant {
                 if last { &mut out[..batch * m] } else { &mut act_scratch[..batch * m] };
             let full = TileView { stride: m, col0: 0 };
             match &layer.codes {
+                // handled (with continue) above
+                WeightStore::Bitplanes(_) => unreachable!(),
                 WeightStore::RowMajor(cb) => {
                     acc_scratch[..batch * m].fill(0);
                     gemm_rowmajor(cb, a, m, &mut acc_scratch[..batch * m], panel);
@@ -1058,11 +1488,18 @@ mod tests {
     #[test]
     fn rejects_unsupported_bitwidths() {
         let p = mlp_params(&[4, 8, 2], 1);
-        assert!(EngineQuant::from_params(&p, 1).is_err());
+        assert!(EngineQuant::from_params(&p, 0).is_err());
         assert!(EngineQuant::from_params(&p, 9).is_err());
-        for bits in 2..=8 {
+        for bits in 1..=8 {
             assert!(EngineQuant::from_params(&p, bits).is_ok(), "bits {bits}");
         }
+        assert!(
+            EngineQuant::from_params_prec(&p, Precision::Ternary, EngineConfig::default()).is_ok()
+        );
+        assert!(
+            EngineQuant::from_params_prec(&p, Precision::Fp32, EngineConfig::default()).is_err(),
+            "fp32 runs on EngineF32, not here"
+        );
     }
 
     #[test]
@@ -1114,6 +1551,85 @@ mod tests {
         assert!(r2 > 14.0 && r2 <= 16.0, "int2 ratio {r2}");
         assert!(q2.memory_bytes() < q4.memory_bytes());
         assert!(2 * q2.memory_bytes() < q8.memory_bytes());
+    }
+
+    #[test]
+    fn bitplane_memory_ratios() {
+        // int1 is the storage floor: 64-bit-aligned sign planes put the
+        // weight bytes at in_dim/8 (rounded up per column), ~32x under
+        // fp32 minus the f32 biases; ternary doubles that (sign + mask).
+        let p = mlp_params(&[128, 512, 512, 25], 5);
+        let q8 = EngineQuant::from_params(&p, 8).unwrap();
+        let q1 = EngineQuant::from_params(&p, 1).unwrap();
+        let qt = EngineQuant::from_params_prec(&p, Precision::Ternary, EngineConfig::default())
+            .unwrap();
+        let f32_bytes: usize =
+            p.tensors.iter().map(|t| t.len() * std::mem::size_of::<f32>()).sum();
+        let r1 = f32_bytes as f64 / q1.memory_bytes() as f64;
+        let rt = f32_bytes as f64 / qt.memory_bytes() as f64;
+        assert!(r1 > 27.0 && r1 <= 32.0, "int1 ratio {r1}");
+        assert!(rt > 14.0 && rt <= 16.0, "ternary ratio {rt}");
+        assert!(q1.memory_bytes() < qt.memory_bytes());
+        assert!(8 * q1.memory_bytes() > q8.memory_bytes(), "biases stay f32");
+        assert!(4 * q1.memory_bytes() < q8.memory_bytes());
+    }
+
+    #[test]
+    fn bitplane_batched_matches_scalar_at_every_thread_count() {
+        // Same invariant the affine kernels pin: forward_batch is
+        // bit-identical per row to forward, and thread counts can't
+        // change a single bit (disjoint columns, one shared epilogue
+        // expression). 300-wide hidden layers give 3 column blocks.
+        let mut rng = Pcg32::new(41, 41);
+        for prec in [Precision::INT1, Precision::Ternary] {
+            let p = mlp_params(&[12, 300, 140, 9], 29);
+            let mut eng =
+                EngineQuant::from_params_prec(&p, prec, EngineConfig::default()).unwrap();
+            assert!(matches!(eng.layers[0].codes, WeightStore::Bitplanes(_)));
+            let batch = 7;
+            let xs: Vec<f32> =
+                (0..batch * 12).map(|_| rng.uniform_range(-2.0, 2.0)).collect();
+            let mut want = vec![0.0f32; batch * 9];
+            for r in 0..batch {
+                let (row_in, row_out) =
+                    (&xs[r * 12..(r + 1) * 12], &mut want[r * 9..(r + 1) * 9]);
+                eng.forward(row_in, row_out).unwrap();
+            }
+            assert!(want.iter().all(|v| v.is_finite()));
+            let mut got = vec![0.0f32; batch * 9];
+            eng.forward_batch(&xs, batch, &mut got).unwrap();
+            assert_eq!(want, got, "{} scalar vs batched", prec.label());
+            for threads in [2usize, 3, 4] {
+                let mut te =
+                    EngineQuant::from_params_prec(&p, prec, EngineConfig::with_threads(threads))
+                        .unwrap();
+                let mut out = vec![0.0f32; batch * 9];
+                te.forward_batch(&xs, batch, &mut out).unwrap();
+                assert_eq!(want, out, "{} threads {threads}", prec.label());
+            }
+        }
+    }
+
+    #[test]
+    fn bitplane_all_zero_row_yields_bias_exactly() {
+        // The degenerate-range contract is precision-independent: a dead
+        // (all-zero) activation row must come out as exactly the bias,
+        // never an error — on both entry points.
+        for prec in [Precision::INT1, Precision::Ternary] {
+            let p = mlp_params(&[6, 4], 3);
+            let bias = p.tensors[1].data().to_vec();
+            let mut eng =
+                EngineQuant::from_params_prec(&p, prec, EngineConfig::default()).unwrap();
+            let mut out = vec![0.0f32; 4];
+            eng.forward(&[0.0; 6], &mut out).unwrap();
+            assert_eq!(out, bias, "{} scalar", prec.label());
+            let mut xs = vec![0.0f32; 12];
+            xs[6..].copy_from_slice(&[0.3, -0.4, 0.9, 0.1, -0.2, 0.5]);
+            let mut bout = vec![0.0f32; 8];
+            eng.forward_batch(&xs, 2, &mut bout).unwrap();
+            assert_eq!(&bout[..4], &bias[..], "{} batched row 0", prec.label());
+            assert!(bout[4..].iter().all(|v| v.is_finite()));
+        }
     }
 
     #[test]

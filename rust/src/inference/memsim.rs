@@ -121,6 +121,52 @@ mod tests {
     }
 
     #[test]
+    fn swap_model_bills_the_real_bitplane_footprint() {
+        // Mirror of the prepacked-footprint pin for the bitplane
+        // precisions: the billed bytes are the engine's actual
+        // 64-bit-word-aligned plane storage plus f32 biases — per
+        // column, ceil(in_dim / 64) words per plane — agreeing with
+        // Precision::weight_bytes_per_param up to that padding, and
+        // moving the fits-vs-spills line below every affine width.
+        use crate::inference::engine_f32::test_fixtures::mlp_params;
+        use crate::inference::{EngineConfig, EngineQuant};
+        use crate::quant::Precision;
+
+        // 130-wide layers: 130 bits pad to 3 words (192 bits), so the
+        // padded footprint is visibly above the logical bit count.
+        let dims = [130usize, 130, 130, 10];
+        let p = mlp_params(&dims, 3);
+        let q2 = EngineQuant::from_params(&p, 2).unwrap();
+        for prec in [Precision::INT1, Precision::Ternary] {
+            let eng = EngineQuant::from_params_prec(&p, prec, EngineConfig::default()).unwrap();
+            // exact agreement with the per-column word-aligned layout
+            let planes = if prec == Precision::Ternary { 2 } else { 1 };
+            let want: usize = (0..dims.len() - 1)
+                .map(|i| {
+                    let (n, m) = (dims[i], dims[i + 1]);
+                    m * n.div_ceil(64) * 8 * planes + m * 4
+                })
+                .sum();
+            assert_eq!(eng.memory_bytes(), want, "{}", prec.label());
+            // within padding slack of the logical per-param figure
+            let logical: f64 = (0..dims.len() - 1)
+                .map(|i| {
+                    (dims[i] * dims[i + 1]) as f64 * prec.weight_bytes_per_param()
+                        + (dims[i + 1] * 4) as f64
+                })
+                .sum();
+            let billed = eng.memory_bytes() as f64;
+            assert!(billed >= logical, "{}: padding only adds bytes", prec.label());
+            assert!(billed < logical * 1.5, "{}: pad bounded by one word per column", prec.label());
+            assert!(eng.memory_bytes() < q2.memory_bytes() || prec == Precision::Ternary);
+            // the swap cliff follows the padded bytes exactly
+            let m = MemModel { ram_budget: want, page: 4096, swap_page_secs: 200e-6 };
+            assert_eq!(m.swap_penalty_secs(eng.memory_bytes()), 0.0);
+            assert!(m.swap_penalty_secs(eng.memory_bytes() + 1) > 0.0);
+        }
+    }
+
+    #[test]
     fn int8_shrinks_below_budget_where_f32_spills() {
         // Policy III: (4096x512 + 512x1024) weights. At f32 ~ 10.5 MB —
         // both fit; the paper's policy III includes the 4096-wide input

@@ -3,13 +3,17 @@
 //!
 //! * [`engine_f32`] — optimized native fp32 MLP baseline.
 //! * [`engine_quant`] — the bitwidth-generic quantized engine
-//!   ([`EngineQuant`], int2..=int8): integer weights stored
+//!   ([`EngineQuant`], int1..=int8 + ternary): integer weights stored
 //!   panel-major at construction time ([`panel`]) with SWAR bulk
 //!   unpacking for sub-byte codes (two-per-byte nibbles at 3..=4 bits,
 //!   four-per-byte crumbs at 2), i32 accumulation, 8-bit dynamic
 //!   activation quantization, and opt-in intra-op threading
 //!   ([`EngineConfig`]); the PR-4 row-major layout survives as the
 //!   in-tree reference kernel ([`engine_quant::KernelKind::RowMajor`]).
+//!   The bitplane precisions (int1 binary, ternary) store weights as
+//!   64-aligned sign/mask planes ([`panel::BitplaneStore`]) and run
+//!   XNOR-popcount kernels — `n_eff − 2·popcount(xnor)` per 64 weights —
+//!   with mean-centered sign-binarized activations.
 //! * [`engine_int8`] — [`EngineInt8`]/[`EngineInt4`], thin
 //!   instantiations of [`EngineQuant`] at the paper's two headline
 //!   deployment widths (int8 keeps pinning bit-exactness against its
@@ -42,7 +46,7 @@ pub use engine_f32::EngineF32;
 pub use engine_int8::{EngineInt4, EngineInt8};
 pub use engine_quant::{EngineConfig, EngineQuant, KernelKind, LayerQ, QuantLayerInit, WeightStore};
 pub use memsim::MemModel;
-pub use panel::PanelStore;
+pub use panel::{BitplaneStore, PanelStore};
 pub use workers::WorkerPool;
 
 use crate::error::Result;
@@ -132,6 +136,8 @@ pub fn engine_for_cfg(
     precision.validate_for_engine()?;
     Ok(match precision {
         Precision::Fp32 => Box::new(EngineF32::from_params(params)?),
-        Precision::Int(bits) => Box::new(EngineQuant::from_params_cfg(params, bits, cfg)?),
+        Precision::Int(_) | Precision::Ternary => {
+            Box::new(EngineQuant::from_params_prec(params, precision, cfg)?)
+        }
     })
 }

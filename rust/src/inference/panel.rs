@@ -195,6 +195,147 @@ impl PanelStore {
     }
 }
 
+/// Construction-time bitplane prepack for the XNOR-popcount kernels
+/// (int1/ternary weights).
+///
+/// Where [`PanelStore`] permutes multi-bit codes into 4-row panels,
+/// bitplane weights want the opposite shape: one output column's bits
+/// packed **along the input dimension** into `u64` words, so the kernel
+/// XORs 64 weight positions against 64 activation sign bits per load
+/// and recovers the dot product as `n_eff - 2 * popcount`. Storage is
+/// column-major in kernel visit order: all words of column 0, then
+/// column 1, ... — a fixed [`BitplaneStore::words_per_col`] stride, so
+/// the threaded column-block split needs no offset table at all.
+/// Binary columns are one sign plane (`ceil(in_dim/64)` words, bit set
+/// = weight `-1`); ternary columns store their nonzero-mask words
+/// followed by their sign words. Pad bits past `in_dim` are zero in
+/// every plane — an XOR can flip them, which is why the kernels always
+/// AND with the mask (ternary) or correct via a fixed `n_eff = in_dim`
+/// (binary: pad bits are zero in *both* operands, so XOR leaves them
+/// zero and the popcount identity holds unmasked).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BitplaneStore {
+    words: Vec<u64>,
+    in_dim: usize,
+    out_dim: usize,
+    ternary: bool,
+    /// Nonzero weights per column: `popcount(mask)` for ternary columns,
+    /// `in_dim` for binary — the `n_eff` of the popcount identity.
+    col_nnz: Vec<i32>,
+}
+
+/// Words in one sign/mask plane over `in_dim` inputs.
+#[inline]
+pub fn plane_words(in_dim: usize) -> usize {
+    in_dim.div_ceil(64)
+}
+
+impl BitplaneStore {
+    /// Repack input-major `(in_dim, out_dim)` codes (`{-1,+1}` binary or
+    /// `{-1,0,+1}` ternary) into column-major bitplane words.
+    pub fn pack(codes: &[i8], in_dim: usize, out_dim: usize, ternary: bool) -> BitplaneStore {
+        debug_assert_eq!(codes.len(), in_dim * out_dim);
+        let nw = plane_words(in_dim);
+        let stride = nw * if ternary { 2 } else { 1 };
+        let mut words = vec![0u64; stride * out_dim];
+        let mut col_nnz = vec![0i32; out_dim];
+        for c in 0..out_dim {
+            let col = &mut words[c * stride..(c + 1) * stride];
+            let mut nnz = 0i32;
+            for i in 0..in_dim {
+                let code = codes[i * out_dim + c];
+                let bit = 1u64 << (i % 64);
+                if ternary {
+                    if code != 0 {
+                        col[i / 64] |= bit; // mask plane
+                        nnz += 1;
+                        if code < 0 {
+                            col[nw + i / 64] |= bit; // sign plane
+                        }
+                    }
+                } else {
+                    debug_assert!(code == -1 || code == 1, "binary code outside {{-1,+1}}");
+                    nnz += 1;
+                    if code < 0 {
+                        col[i / 64] |= bit;
+                    }
+                }
+            }
+            col_nnz[c] = nnz;
+        }
+        BitplaneStore { words, in_dim, out_dim, ternary, col_nnz }
+    }
+
+    /// `u64` words per column (both planes for ternary).
+    #[inline]
+    pub fn words_per_col(&self) -> usize {
+        plane_words(self.in_dim) * if self.ternary { 2 } else { 1 }
+    }
+
+    /// Column `c`'s words: the sign plane for binary; for ternary the
+    /// mask plane followed by the sign plane (split at
+    /// [`plane_words`]`(in_dim)`).
+    #[inline]
+    pub fn col(&self, c: usize) -> &[u64] {
+        let stride = self.words_per_col();
+        &self.words[c * stride..(c + 1) * stride]
+    }
+
+    /// Nonzero weight count of column `c` (`n_eff` in the popcount
+    /// identity; `in_dim` for every binary column).
+    #[inline]
+    pub fn nnz(&self, c: usize) -> i32 {
+        self.col_nnz[c]
+    }
+
+    pub fn is_ternary(&self) -> bool {
+        self.ternary
+    }
+
+    /// Real storage bytes, pad bits included — the figure
+    /// `Engine::memory_bytes` and the memsim/sustain billing report.
+    /// (`col_nnz` is derived bookkeeping, not weight traffic.)
+    pub fn bytes(&self) -> usize {
+        self.words.len() * 8
+    }
+
+    /// Logical element count (`in_dim * out_dim`).
+    pub fn len(&self) -> usize {
+        self.in_dim * self.out_dim
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Reconstruct the input-major code vector (test/inspection
+    /// convenience) — exact inverse of [`BitplaneStore::pack`].
+    pub fn to_vec(&self) -> Vec<i8> {
+        let nw = plane_words(self.in_dim);
+        let mut out = vec![0i8; self.in_dim * self.out_dim];
+        for c in 0..self.out_dim {
+            let col = self.col(c);
+            for i in 0..self.in_dim {
+                let bit = (col[i / 64] >> (i % 64)) & 1;
+                out[i * self.out_dim + c] = if self.ternary {
+                    if bit == 0 {
+                        0
+                    } else if (col[nw + i / 64] >> (i % 64)) & 1 == 1 {
+                        -1
+                    } else {
+                        1
+                    }
+                } else if bit == 1 {
+                    -1
+                } else {
+                    1
+                };
+            }
+        }
+        out
+    }
+}
+
 impl PanelData {
     fn bytes(&self) -> usize {
         match self {
@@ -266,6 +407,56 @@ mod tests {
         // i8 storage is always exactly one byte per code.
         let codes = random_codes(7 * 19, 8, 9);
         assert_eq!(PanelStore::pack(&codes, 7, 19, 8).bytes(), 7 * 19);
+    }
+
+    #[test]
+    fn bitplane_roundtrip_is_exact_for_odd_shapes() {
+        // Same permutation claim as PanelStore, for the bitplane layout:
+        // shapes crossing the 64-bit word boundary (in_dim 63/64/65),
+        // multi-block widths, and degenerates.
+        let shapes: [(usize, usize); 7] =
+            [(4, 128), (63, 33), (64, 5), (65, 130), (1, 3), (3, 1), (200, 257)];
+        let mut rng = Pcg32::new(99, 1);
+        for &(n, m) in &shapes {
+            let bin: Vec<i8> =
+                (0..n * m).map(|_| if rng.below_usize(2) == 0 { 1 } else { -1 }).collect();
+            let bs = BitplaneStore::pack(&bin, n, m, false);
+            assert_eq!(bs.to_vec(), bin, "binary {n}x{m}");
+            assert_eq!(bs.words_per_col(), n.div_ceil(64));
+            assert_eq!(bs.bytes(), n.div_ceil(64) * 8 * m);
+            assert!((0..m).all(|c| bs.nnz(c) == n as i32), "binary n_eff is in_dim");
+
+            let tern: Vec<i8> = (0..n * m).map(|_| rng.below_usize(3) as i8 - 1).collect();
+            let ts = BitplaneStore::pack(&tern, n, m, true);
+            assert_eq!(ts.to_vec(), tern, "ternary {n}x{m}");
+            assert_eq!(ts.words_per_col(), 2 * n.div_ceil(64));
+            assert_eq!(ts.bytes(), 2 * n.div_ceil(64) * 8 * m);
+            for c in 0..m {
+                let nnz = (0..n).filter(|&i| tern[i * m + c] != 0).count() as i32;
+                assert_eq!(ts.nnz(c), nnz, "ternary {n}x{m} col {c}");
+            }
+        }
+    }
+
+    #[test]
+    fn bitplane_pad_bits_are_zero() {
+        // The kernels rely on pad bits (past in_dim) being zero in every
+        // plane: XOR against a zero activation pad leaves them zero, so
+        // the unmasked binary popcount identity stays exact.
+        let n = 70; // 2 words, 58 pad bits in the second
+        let codes: Vec<i8> = (0..n).map(|i| if i % 2 == 0 { -1 } else { 1 }).collect();
+        let bs = BitplaneStore::pack(&codes, n, 1, false);
+        let col = bs.col(0);
+        assert_eq!(col.len(), 2);
+        assert_eq!(col[1] >> (n - 64), 0, "pad bits clear");
+        let tern: Vec<i8> = (0..n).map(|i| (i % 3) as i8 - 1).collect();
+        let ts = BitplaneStore::pack(&tern, n, 1, true);
+        let tcol = ts.col(0);
+        assert_eq!(tcol[1] >> (n - 64), 0, "mask pad clear");
+        assert_eq!(tcol[3] >> (n - 64), 0, "sign pad clear");
+        // ternary invariant: sign bits only inside the mask
+        assert_eq!(tcol[2] & !tcol[0], 0);
+        assert_eq!(tcol[3] & !tcol[1], 0);
     }
 
     #[test]

@@ -22,6 +22,8 @@
 //! | `fig6`   | Fig 6 — embedded deployment: fp32 vs int8 on-device       |
 //! | `fig7`   | App. E — PTQ sweet-spot (reward vs bitwidth 2..32)        |
 //! | `actorq` | §3/Table 6 — actor-learner throughput + convergence       |
+//! | `noise`  | QeRL check — actor-precision ladder convergence down to   |
+//! |          | the int1/ternary bitplane engines (`BENCH_noise.json`)    |
 //! | `carbon` | §1/§6 — fp32-vs-int8 CO2eq accounting (offline, no PJRT)  |
 //! | `serve`  | dynamic-batching policy server: p50/p99 latency + batch   |
 //! |          | histograms per precision x client count (offline)         |
@@ -30,13 +32,17 @@
 //! | `faults` | chaos: actor kill + publish/connect faults + learner      |
 //! |          | crash-resume, checked bit-exact per precision (offline)   |
 //!
-//! `--bits` (validated comma list, 2..=16, deduped + sorted) selects the
-//! bitwidth sweep: `fig2` trains QAT at each width (defaulting to
-//! 2,4,6,8), while `table2`, `fig6`, and `carbon` add per-bitwidth rows
-//! on the real quantized engines only when the flag is passed
-//! explicitly — the sweeps multiply measurement cost, so a default run
-//! never pays for them (packed sub-byte kernels at 2..=4 bits; widths
-//! above 8 have no native engine and report PTQ-only/skip). `--threads`
+//! `--bits` (validated comma list of precision tokens, deduped +
+//! sorted) selects the precision sweep: integer widths 1..=8 plus
+//! `t`/`ternary`, exactly the set the native engines implement —
+//! anything else is rejected up front. `fig2` trains QAT at each
+//! affine width >= 2 of the list (defaulting to 2,4,6,8; the bitplane
+//! precisions have no QAT path and are skipped there), while `table2`,
+//! `fig6`, `carbon`, and `noise` add per-precision rows on the real
+//! quantized engines only when the flag is passed explicitly — the
+//! sweeps multiply measurement cost, so a default run never pays for
+//! them (packed sub-byte kernels at 2..=4 bits, XNOR-popcount bitplane
+//! kernels at int1/ternary). `--threads`
 //! sets the intra-op worker count of the quantized engines' batched
 //! latency cells (default 1; outputs are bit-identical either way —
 //! workers come from the shared persistent pool, never per-call
@@ -59,7 +65,7 @@ use quarl::coordinator::experiment::{all_experiments, run_experiment, ExpCtx};
 use quarl::coordinator::{evaluate, EvalMode};
 use quarl::envs::registry::ENV_IDS;
 use quarl::error::{Error, Result};
-use quarl::quant::PtqMethod;
+use quarl::quant::{Precision, PtqMethod};
 use quarl::runtime::Runtime;
 
 fn main() {
@@ -89,7 +95,7 @@ fn print_usage() {
         "quarl — QuaRL (Quantized Reinforcement Learning) reproduction\n\n\
          usage:\n  quarl train --algo <dqn|a2c|ppo|ddpg> --env <id> [--steps N] [--quant B --delay D] [--seed S]\n  \
          quarl eval  --algo <a> --env <id> [--quant fp16|int8|intN] [--episodes N]\n  \
-         quarl exp   <id|all> [--scale S] [--episodes N] [--jobs J] [--only SUB] [--bits 2,4,6,8]\n              \
+         quarl exp   <id|all> [--scale S] [--episodes N] [--jobs J] [--only SUB] [--bits 1,2,4,8,t]\n              \
          [--threads T] [--window-us U] [--max-batch B] [--snapshot-dir D] [--region us|eu|...]\n              \
          [--cpu-watts W] [--accel-watts W] [--carbon-config F]\n  \
          quarl list\n"
@@ -239,7 +245,12 @@ fn cmd_exp(args: &Args) -> Result<()> {
         scale: args.get_f32("scale", 1.0)?,
         episodes: args.get_usize("episodes", 30)?,
         seed: args.get_u64("seed", 0)?,
-        bits: args.bits(&[2, 4, 6, 8])?,
+        precisions: args.precisions(&[
+            Precision::Int(2),
+            Precision::Int(4),
+            Precision::Int(6),
+            Precision::Int(8),
+        ])?,
         bits_explicit: args.get("bits").is_some(),
         filter: args.get("only").map(String::from),
         shard: args.shard()?,

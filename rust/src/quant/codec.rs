@@ -10,6 +10,13 @@
 //! * bits 2 — four centered codes per byte, 2-bit two's complement:
 //!   element `4k + j` in bits `2j..2j+2` of byte `k`, quartering weight
 //!   traffic relative to int8.
+//! * bits 1 (binary) — a sign bitplane: element `8k + j` is bit `j` of
+//!   byte `k`, set iff the code is `-1` (clear = `+1`), 0.125 B/param.
+//!   The XNOR-popcount GEMM consumes 64 of these per `u64` load.
+//! * ternary — two bitplanes, mask-then-sign: the nonzero-mask plane
+//!   (bit set iff the code is nonzero) followed by the sign plane (bit
+//!   set iff the code is `-1`), each `ceil(n/8)` bytes. Canonical
+//!   encodings keep every sign bit clear where the mask bit is clear.
 //!
 //! The codes themselves come from [`crate::quant::QParams::quantize_code`]
 //! (centered on the zero point, saturating at the signed rails), so
@@ -31,17 +38,35 @@
 //!   byte pattern (exhaustively tested below).
 
 use crate::error::{Error, Result};
+use crate::quant::Precision;
 
 /// Packed storage bytes for `len` codes at `bits` (the [`CodeBuf`]
-/// layout rule in one place: four per byte at 2 bits, two per byte at
-/// 3..=4, one per byte at 5..=8).
+/// layout rule in one place: eight per byte at 1 bit, four per byte at
+/// 2, two per byte at 3..=4, one per byte at 5..=8).
 pub fn packed_len(len: usize, bits: u32) -> usize {
-    if bits <= 2 {
+    if bits == 1 {
+        len.div_ceil(8)
+    } else if bits <= 2 {
         len.div_ceil(4)
     } else if bits <= 4 {
         len.div_ceil(2)
     } else {
         len
+    }
+}
+
+/// Bytes of one bitplane over `len` elements (eight bits per byte).
+pub fn plane_len(len: usize) -> usize {
+    len.div_ceil(8)
+}
+
+/// Packed storage bytes for `len` codes of a quantized precision —
+/// ternary has no single numeric width ([`packed_len`] can't name it):
+/// its wire form is two full bitplanes, mask then sign.
+pub fn packed_len_for(len: usize, precision: Precision) -> usize {
+    match precision {
+        Precision::Ternary => 2 * plane_len(len),
+        p => packed_len(len, p.bits()),
     }
 }
 
@@ -220,6 +245,118 @@ pub fn unpack_crumb2_into(packed: &[u8], start: usize, out: &mut [i8]) {
     }
 }
 
+/// One bitplane code: bit `i % 8` of byte `i / 8`, LSB-first.
+#[inline]
+pub fn plane_bit(plane: &[u8], i: usize) -> bool {
+    (plane[i / 8] >> (i % 8)) & 1 == 1
+}
+
+/// Decode one binary code from a sign plane: bit set = `-1`, clear =
+/// `+1` (the XNOR convention — both operand planes mark *negative*).
+#[inline]
+pub fn bit1_get(plane: &[u8], i: usize) -> i8 {
+    if plane_bit(plane, i) {
+        -1
+    } else {
+        1
+    }
+}
+
+/// Decode one ternary code from (mask, sign) planes: `0` where the mask
+/// bit is clear, else `-1`/`+1` by the sign bit.
+#[inline]
+pub fn tern_get(mask: &[u8], sign: &[u8], i: usize) -> i8 {
+    if !plane_bit(mask, i) {
+        0
+    } else if plane_bit(sign, i) {
+        -1
+    } else {
+        1
+    }
+}
+
+/// Pack binary codes (each `-1` or `+1`) into a sign plane; pad bits of
+/// a partial tail byte stay zero (reading as `+1` but never visited).
+pub fn pack_bit1(codes: &[i8]) -> Vec<u8> {
+    debug_assert!(codes.iter().all(|&c| c == -1 || c == 1), "bit1 code outside {{-1,+1}}");
+    let mut plane = vec![0u8; plane_len(codes.len())];
+    for (i, &c) in codes.iter().enumerate() {
+        if c < 0 {
+            plane[i / 8] |= 1 << (i % 8);
+        }
+    }
+    plane
+}
+
+/// Pack ternary codes (each in `{-1, 0, +1}`) into the canonical
+/// mask-then-sign wire form: sign bits are set only where the mask bit
+/// is, and pad bits of partial tail bytes stay zero in both planes.
+pub fn pack_tern(codes: &[i8]) -> Vec<u8> {
+    debug_assert!(codes.iter().all(|&c| (-1..=1).contains(&c)), "tern code outside {{-1,0,+1}}");
+    let pl = plane_len(codes.len());
+    let mut planes = vec![0u8; 2 * pl];
+    for (i, &c) in codes.iter().enumerate() {
+        if c != 0 {
+            planes[i / 8] |= 1 << (i % 8);
+            if c < 0 {
+                planes[pl + i / 8] |= 1 << (i % 8);
+            }
+        }
+    }
+    planes
+}
+
+/// Reject set bits past logical position `len` in a bitplane (the
+/// packers always leave pad bits zero, so anything else is corruption —
+/// and the XNOR kernel relies on zero pads contributing nothing).
+fn check_plane_padding(plane: &[u8], len: usize, which: &str) -> Result<()> {
+    for i in len..plane.len() * 8 {
+        if plane_bit(plane, i) {
+            return Err(Error::Config(format!("codebuf {which}-plane tail padding bit is non-zero")));
+        }
+    }
+    Ok(())
+}
+
+/// XNOR-Net weight binarization: codes `sign(w)` (with `sign(0) = +1`)
+/// and the per-tensor scale `alpha = mean |w|` that minimizes
+/// `||w - alpha * sign(w)||^2`. An all-zero tensor yields `alpha = 0`
+/// (every dequantized weight is exactly 0 regardless of sign codes).
+pub fn binarize(w: &[f32]) -> (Vec<i8>, f32) {
+    let codes: Vec<i8> = w.iter().map(|&x| if x < 0.0 { -1 } else { 1 }).collect();
+    let alpha = if w.is_empty() {
+        0.0
+    } else {
+        w.iter().map(|x| x.abs() as f64).sum::<f64>() / w.len() as f64
+    };
+    (codes, alpha as f32)
+}
+
+/// TWN weight ternarization: threshold `0.7 * mean |w|`, codes
+/// `sign(w)` where `|w| > thr` else 0, scale `alpha = mean |w|` over
+/// the nonzero support (0 when nothing survives the threshold).
+pub fn ternarize(w: &[f32]) -> (Vec<i8>, f32) {
+    let mean_abs = if w.is_empty() {
+        0.0
+    } else {
+        w.iter().map(|x| x.abs() as f64).sum::<f64>() / w.len() as f64
+    };
+    let thr = 0.7 * mean_abs;
+    let mut codes = Vec::with_capacity(w.len());
+    let (mut sum, mut nnz) = (0f64, 0usize);
+    for &x in w {
+        if (x.abs() as f64) > thr {
+            codes.push(if x < 0.0 { -1 } else { 1 });
+            sum += x.abs() as f64;
+            nnz += 1;
+        } else {
+            codes.push(0);
+        }
+    }
+    let alpha = if nnz == 0 { 0.0 } else { sum / nnz as f64 };
+    (codes, alpha as f32)
+}
+
 /// Storage for one tensor's centered integer codes.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum CodeBuf {
@@ -231,18 +368,37 @@ pub enum CodeBuf {
     /// Four 2-bit two's-complement codes per byte (bits 2); the second
     /// field is the logical element count.
     Crumb2(Vec<u8>, usize),
+    /// Binary sign bitplane (bits 1): bit set = code `-1`; the second
+    /// field is the logical element count.
+    Bit1(Vec<u8>, usize),
+    /// Ternary mask+sign bitplanes concatenated mask-first (each
+    /// [`plane_len`] bytes); the second field is the logical count.
+    Tern(Vec<u8>, usize),
 }
 
 impl CodeBuf {
     /// Pack `codes` for a `bits`-wide grid (codes must already be
-    /// centered and clipped to the signed range for `bits`).
+    /// centered and clipped to the signed range for `bits`; at bits 1
+    /// that means `{-1,+1}` sign codes).
     pub fn from_codes(codes: &[i8], bits: u32) -> CodeBuf {
-        if bits <= 2 {
+        if bits == 1 {
+            CodeBuf::Bit1(pack_bit1(codes), codes.len())
+        } else if bits <= 2 {
             CodeBuf::Crumb2(pack_crumb2(codes), codes.len())
         } else if bits <= 4 {
             CodeBuf::Nib4(pack_nib4(codes), codes.len())
         } else {
             CodeBuf::I8(codes.to_vec())
+        }
+    }
+
+    /// Pack `codes` for a quantized precision — the precision-keyed
+    /// twin of [`CodeBuf::from_codes`], needed because ternary has no
+    /// numeric width of its own.
+    pub fn from_codes_for(codes: &[i8], precision: Precision) -> CodeBuf {
+        match precision {
+            Precision::Ternary => CodeBuf::Tern(pack_tern(codes), codes.len()),
+            p => CodeBuf::from_codes(codes, p.bits()),
         }
     }
 
@@ -257,14 +413,18 @@ impl CodeBuf {
     /// as an index panic deep inside `PanelStore` packing, which is the
     /// latent bug class the snapshot client must never hit.
     pub fn from_packed(bytes: Vec<u8>, len: usize, bits: u32) -> Result<CodeBuf> {
-        if !(2..=8).contains(&bits) {
-            return Err(Error::Config(format!("codebuf bits {bits} outside the engine range 2..=8")));
+        if !(1..=8).contains(&bits) {
+            return Err(Error::Config(format!("codebuf bits {bits} outside the engine range 1..=8")));
         }
         let need = packed_len(len, bits);
         if bytes.len() != need {
             return Err(Error::Config(format!(
                 "codebuf length mismatch: {} bytes for {len} codes at {bits} bits (need {need})"
             )));
+        }
+        if bits == 1 {
+            check_plane_padding(&bytes, len, "sign")?;
+            return Ok(CodeBuf::Bit1(bytes, len));
         }
         // i32 rail math: -(1i8 << 7) would overflow at bits 8.
         let lo = -(1i32 << (bits - 1));
@@ -322,13 +482,46 @@ impl CodeBuf {
         Ok(buf)
     }
 
+    /// Deserialize for a quantized precision — the validated
+    /// precision-keyed twin of [`CodeBuf::from_packed`]. Ternary wire
+    /// bytes are the mask plane followed by the sign plane; besides the
+    /// length and padding rules this enforces the canonical-encoding
+    /// invariant that no sign bit is set where the mask bit is clear
+    /// (such a weight would silently decode as 0, so the corruption
+    /// must be typed instead of round-tripping).
+    pub fn from_packed_for(bytes: Vec<u8>, len: usize, precision: Precision) -> Result<CodeBuf> {
+        let Precision::Ternary = precision else {
+            return CodeBuf::from_packed(bytes, len, precision.bits());
+        };
+        let pl = plane_len(len);
+        if bytes.len() != 2 * pl {
+            return Err(Error::Config(format!(
+                "codebuf length mismatch: {} bytes for {len} ternary codes (need {})",
+                bytes.len(),
+                2 * pl
+            )));
+        }
+        check_plane_padding(&bytes[..pl], len, "mask")?;
+        check_plane_padding(&bytes[pl..], len, "sign")?;
+        for k in 0..pl {
+            if bytes[pl + k] & !bytes[k] != 0 {
+                return Err(Error::Config(format!(
+                    "ternary codebuf sign bit set outside the nonzero mask in plane byte {k}"
+                )));
+            }
+        }
+        Ok(CodeBuf::Tern(bytes, len))
+    }
+
     /// The raw packed bytes, as [`CodeBuf::from_packed`] accepts them
     /// (i8 codes reinterpreted as bytes on the one-per-byte layout) —
     /// the snapshot artifact's wire form for a weight section.
     pub fn to_packed_bytes(&self) -> Vec<u8> {
         match self {
             CodeBuf::I8(v) => v.iter().map(|&c| c as u8).collect(),
-            CodeBuf::Nib4(v, _) | CodeBuf::Crumb2(v, _) => v.clone(),
+            CodeBuf::Nib4(v, _) | CodeBuf::Crumb2(v, _) | CodeBuf::Bit1(v, _) | CodeBuf::Tern(v, _) => {
+                v.clone()
+            }
         }
     }
 
@@ -336,7 +529,10 @@ impl CodeBuf {
     pub fn len(&self) -> usize {
         match self {
             CodeBuf::I8(v) => v.len(),
-            CodeBuf::Nib4(_, n) | CodeBuf::Crumb2(_, n) => *n,
+            CodeBuf::Nib4(_, n)
+            | CodeBuf::Crumb2(_, n)
+            | CodeBuf::Bit1(_, n)
+            | CodeBuf::Tern(_, n) => *n,
         }
     }
 
@@ -348,7 +544,9 @@ impl CodeBuf {
     pub fn bytes(&self) -> usize {
         match self {
             CodeBuf::I8(v) => v.len(),
-            CodeBuf::Nib4(v, _) | CodeBuf::Crumb2(v, _) => v.len(),
+            CodeBuf::Nib4(v, _) | CodeBuf::Crumb2(v, _) | CodeBuf::Bit1(v, _) | CodeBuf::Tern(v, _) => {
+                v.len()
+            }
         }
     }
 
@@ -366,6 +564,25 @@ impl CodeBuf {
                 }
             }
             CodeBuf::Crumb2(v, _) => crumb2(v[i / 4], i % 4),
+            CodeBuf::Bit1(v, _) => bit1_get(v, i),
+            CodeBuf::Tern(v, n) => tern_get(&v[..plane_len(*n)], &v[plane_len(*n)..], i),
+        }
+    }
+
+    /// Borrow the sign plane of a binary buffer (the bitplane prepack's
+    /// input; `None` for every other layout).
+    pub fn bit1_plane(&self) -> Option<&[u8]> {
+        match self {
+            CodeBuf::Bit1(v, _) => Some(v),
+            _ => None,
+        }
+    }
+
+    /// Borrow the (mask, sign) planes of a ternary buffer.
+    pub fn tern_planes(&self) -> Option<(&[u8], &[u8])> {
+        match self {
+            CodeBuf::Tern(v, n) => Some(v.split_at(plane_len(*n))),
+            _ => None,
         }
     }
 
@@ -384,6 +601,7 @@ impl CodeBuf {
                 unpack_block_crumb2(v, *n, &mut out);
                 out
             }
+            CodeBuf::Bit1(..) | CodeBuf::Tern(..) => (0..self.len()).map(|i| self.get(i)).collect(),
         }
     }
 
@@ -395,6 +613,11 @@ impl CodeBuf {
             CodeBuf::I8(v) => out.copy_from_slice(&v[start..start + out.len()]),
             CodeBuf::Nib4(v, _) => unpack_nib4_into(v, start, out),
             CodeBuf::Crumb2(v, _) => unpack_crumb2_into(v, start, out),
+            CodeBuf::Bit1(..) | CodeBuf::Tern(..) => {
+                for (j, o) in out.iter_mut().enumerate() {
+                    *o = self.get(start + j);
+                }
+            }
         }
     }
 
@@ -404,7 +627,7 @@ impl CodeBuf {
     pub fn as_i8_slice(&self, start: usize, len: usize) -> Option<&[i8]> {
         match self {
             CodeBuf::I8(v) => Some(&v[start..start + len]),
-            CodeBuf::Nib4(..) | CodeBuf::Crumb2(..) => None,
+            _ => None,
         }
     }
 }
@@ -626,6 +849,131 @@ mod tests {
                     );
                 }
             }
+        }
+    }
+
+    #[test]
+    fn bit1_roundtrip_all_256_byte_patterns() {
+        // Every plane byte decodes to eight codes in {-1,+1} and
+        // re-encodes to exactly itself: the sign-bitplane codec is a
+        // bijection on bytes.
+        for byte in 0u8..=255 {
+            let plane = [byte];
+            let codes: Vec<i8> = (0..8).map(|i| bit1_get(&plane, i)).collect();
+            assert!(codes.iter().all(|&c| c == -1 || c == 1), "byte {byte:#04x}");
+            assert_eq!(pack_bit1(&codes), vec![byte], "byte {byte:#04x} -> {codes:?}");
+        }
+    }
+
+    #[test]
+    fn tern_roundtrip_all_256_mask_patterns() {
+        // For every mask byte, with the sign plane all-negative (sign =
+        // mask) and all-positive (sign = 0): eight codes in {-1,0,+1},
+        // and the canonical pack reproduces both planes bit-for-bit.
+        for mask in 0u8..=255 {
+            for sign in [0u8, mask] {
+                let codes: Vec<i8> = (0..8).map(|i| tern_get(&[mask], &[sign], i)).collect();
+                assert!(codes.iter().all(|c| (-1..=1).contains(c)), "mask {mask:#04x}");
+                assert_eq!(pack_tern(&codes), vec![mask, sign], "mask {mask:#04x} sign {sign:#04x}");
+            }
+        }
+    }
+
+    #[test]
+    fn bitplane_codebuf_roundtrips_odd_lengths() {
+        // 13 codes leave 3 pad bits per plane; get/to_vec/slice_into and
+        // the packed-bytes round trip must all agree.
+        let b1: Vec<i8> = (0..13).map(|i| if i % 3 == 0 { -1 } else { 1 }).collect();
+        let buf = CodeBuf::from_codes(&b1, 1);
+        assert!(matches!(buf, CodeBuf::Bit1(..)));
+        assert_eq!(buf.len(), 13);
+        assert_eq!(buf.bytes(), 2, "13 sign bits pack into 2 bytes");
+        assert_eq!(buf.to_vec(), b1);
+        let mut out = [0i8; 5];
+        buf.slice_into(4, &mut out);
+        assert_eq!(&out[..], &b1[4..9]);
+        assert!(buf.as_i8_slice(0, 4).is_none());
+        let back = CodeBuf::from_packed(buf.to_packed_bytes(), 13, 1).unwrap();
+        assert_eq!(back, buf);
+
+        let t: Vec<i8> = (0..13).map(|i| (i % 3) as i8 - 1).collect();
+        let tbuf = CodeBuf::from_codes_for(&t, Precision::Ternary);
+        assert!(matches!(tbuf, CodeBuf::Tern(..)));
+        assert_eq!(tbuf.bytes(), 4, "two 2-byte planes");
+        assert_eq!(tbuf.to_vec(), t);
+        for (i, &c) in t.iter().enumerate() {
+            assert_eq!(tbuf.get(i), c, "idx {i}");
+        }
+        let (mask, sign) = tbuf.tern_planes().unwrap();
+        assert_eq!((mask.len(), sign.len()), (2, 2));
+        let tback =
+            CodeBuf::from_packed_for(tbuf.to_packed_bytes(), 13, Precision::Ternary).unwrap();
+        assert_eq!(tback, tbuf);
+        // from_codes_for routes non-ternary precisions to the width codecs
+        assert!(matches!(CodeBuf::from_codes_for(&b1, Precision::Int(1)), CodeBuf::Bit1(..)));
+    }
+
+    #[test]
+    fn bitplane_from_packed_rejects_corruption_as_config_errors() {
+        let b1: Vec<i8> = (0..11).map(|i| if i % 2 == 0 { 1 } else { -1 }).collect();
+        let good = CodeBuf::from_codes(&b1, 1).to_packed_bytes();
+        let err = CodeBuf::from_packed(good[..1].to_vec(), 11, 1).unwrap_err();
+        assert!(matches!(err, Error::Config(_)), "short: {err}");
+        let mut long = good.clone();
+        long.push(0);
+        let err = CodeBuf::from_packed(long, 11, 1).unwrap_err();
+        assert!(matches!(err, Error::Config(_)), "long: {err}");
+        let mut dirty = good.clone();
+        dirty[1] |= 0x80; // pad bit 15 of an 11-code plane
+        let err = CodeBuf::from_packed(dirty, 11, 1).unwrap_err();
+        assert!(matches!(err, Error::Config(_)), "dirty pad: {err}");
+        assert!(CodeBuf::from_packed(good, 11, 1).is_ok());
+        let err = CodeBuf::from_packed(vec![0], 8, 0).unwrap_err();
+        assert!(matches!(err, Error::Config(_)), "bits 0: {err}");
+
+        let t: Vec<i8> = vec![1, 0, -1, 0, 1, -1, 0, 0, 1, -1, 0];
+        let tgood = CodeBuf::from_codes_for(&t, Precision::Ternary).to_packed_bytes();
+        assert_eq!(tgood.len(), 4);
+        let err = CodeBuf::from_packed_for(tgood[..3].to_vec(), 11, Precision::Ternary).unwrap_err();
+        assert!(matches!(err, Error::Config(_)), "tern short: {err}");
+        // sign bit set where the mask bit is clear (index 1 is a zero)
+        let mut noncanon = tgood.clone();
+        noncanon[2] |= 0b10;
+        let err = CodeBuf::from_packed_for(noncanon, 11, Precision::Ternary).unwrap_err();
+        assert!(matches!(err, Error::Config(_)), "tern non-canonical: {err}");
+        // dirty pad in the mask plane
+        let mut tdirty = tgood.clone();
+        tdirty[1] |= 0x80;
+        let err = CodeBuf::from_packed_for(tdirty, 11, Precision::Ternary).unwrap_err();
+        assert!(matches!(err, Error::Config(_)), "tern dirty pad: {err}");
+        assert!(CodeBuf::from_packed_for(tgood, 11, Precision::Ternary).is_ok());
+    }
+
+    #[test]
+    fn binarize_and_ternarize_semantics() {
+        let (codes, alpha) = binarize(&[0.5, -1.5, 0.0, -2.0]);
+        assert_eq!(codes, vec![1, -1, 1, -1], "sign(0) = +1");
+        assert!((alpha - 1.0).abs() < 1e-6, "alpha = mean |w| = {alpha}");
+        let (zc, za) = binarize(&[0.0; 7]);
+        assert_eq!(zc, vec![1; 7]);
+        assert_eq!(za, 0.0, "all-zero tensor dequantizes to exact zeros");
+
+        // mean |w| = 1.0, thr = 0.7: only the +/-2.0 and -1.0 survive
+        let (t, ta) = ternarize(&[2.0, -0.5, 0.0, -1.0, 0.5, -2.0]);
+        assert_eq!(t, vec![1, 0, 0, -1, 0, -1]);
+        assert!((ta - (5.0 / 3.0)).abs() < 1e-6, "alpha over nonzero support = {ta}");
+        let (tz, tza) = ternarize(&[0.0; 5]);
+        assert_eq!(tz, vec![0; 5]);
+        assert_eq!(tza, 0.0);
+    }
+
+    #[test]
+    fn packed_len_for_matches_wire_sizes() {
+        for n in [0usize, 1, 7, 8, 9, 64, 65, 127] {
+            assert_eq!(packed_len_for(n, Precision::Int(1)), n.div_ceil(8), "n {n}");
+            assert_eq!(packed_len_for(n, Precision::Ternary), 2 * n.div_ceil(8), "n {n}");
+            assert_eq!(packed_len_for(n, Precision::Int(2)), n.div_ceil(4), "n {n}");
+            assert_eq!(packed_len_for(n, Precision::Int(8)), n, "n {n}");
         }
     }
 

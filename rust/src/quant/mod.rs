@@ -6,8 +6,10 @@
 //!   stack (engines, ActorQ broadcast, `--bits` sweeps) shares.
 //! * [`codec`] — centered-code storage: one i8 code per byte, two
 //!   packed 4-bit codes per byte at 3..=4 bits, four packed 2-bit
-//!   codes per byte at int2 — plus SWAR bulk unpackers (16/32 codes
-//!   per `u64` load) for the panel-major kernels.
+//!   codes per byte at int2, and sign/mask bitplanes at int1/ternary —
+//!   plus SWAR bulk unpackers (16/32 codes per `u64` load) for the
+//!   panel-major kernels and the XNOR-popcount weight quantizers
+//!   ([`codec::binarize`] / [`codec::ternarize`]).
 //! * [`fp16`] — software IEEE-754 half rounding (PTQ-fp16).
 //! * [`ptq`] — post-training quantization over parameter sets
 //!   (paper Algorithm 1).
@@ -21,7 +23,7 @@ pub mod ptq;
 pub mod stats;
 
 pub use affine::{fake_quant_per_axis, fake_quant_slice, fake_quant_slice_with_range, QParams};
-pub use codec::CodeBuf;
+pub use codec::{binarize, ternarize, CodeBuf};
 pub use fp16::{fp16_quant_slice, fp16_roundtrip};
 pub use precision::Precision;
 pub use ptq::{quantize_params, relative_error_pct, PtqMethod};

@@ -7,24 +7,34 @@
 //! `--bits` sweeps in the experiment harness. Adding a future precision
 //! (fp16 actors, per-layer mixes) means extending this enum and the
 //! codec behind it — not forking a new engine type per format (int2
-//! four-per-byte packing landed exactly that way).
+//! four-per-byte packing landed exactly that way, and the sub-int2
+//! bitplane formats `Int(1)` / `Ternary` followed the same route).
 
 use crate::error::{Error, Result};
 
 /// Numeric format of a deployed policy copy.
 ///
-/// `Int(b)` is the uniform-affine integer grid of `quant::affine` at `b`
-/// bits (weights stored as centered codes; activations dynamically
-/// quantized at 8 bits by the engines). `Fp32` is the full-precision
-/// baseline.
+/// `Int(b)` for `b >= 2` is the uniform-affine integer grid of
+/// `quant::affine` at `b` bits (weights stored as centered codes;
+/// activations dynamically quantized at 8 bits by the engines).
+/// `Int(1)` is the XNOR-Net binary grid: weights are `{-1,+1}` sign
+/// bitplanes with a per-layer scale, activations are mean-centered sign
+/// bitplanes with per-row `(mu, alpha)`. `Ternary` is the TWN grid
+/// `{-1,0,+1}`: a sign plane plus a nonzero-mask plane. `Fp32` is the
+/// full-precision baseline.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Precision {
     /// Full-precision fp32 (the paper's baseline configuration).
     Fp32,
-    /// `b`-bit uniform affine integer grid, `b` in 2..=8 for the native
-    /// engines (sub-byte widths are stored packed: two codes per byte
-    /// at 3..=4 bits, four per byte at 2).
+    /// `b`-bit integer grid, `b` in 1..=8 for the native engines.
+    /// Widths 2..=8 are uniform-affine packed codes (two per byte at
+    /// 3..=4 bits, four per byte at 2); width 1 is the binary sign
+    /// bitplane (one bit per weight, 64 weights per `u64` word).
     Int(u32),
+    /// Ternary `{-1,0,+1}` weights: a sign bitplane plus a nonzero-mask
+    /// bitplane (two bits per weight), scale = mean |w| over the
+    /// nonzero support (TWN-style, threshold 0.7 * mean |w|).
+    Ternary,
 }
 
 impl Precision {
@@ -32,8 +42,11 @@ impl Precision {
     pub const INT8: Precision = Precision::Int(8);
     /// The packed sub-byte precision introduced with the nibble codec.
     pub const INT4: Precision = Precision::Int(4);
+    /// The XNOR-popcount binary precision (0.125 B/param).
+    pub const INT1: Precision = Precision::Int(1);
 
-    /// Map a CLI-style bitwidth to a precision (32 -> fp32).
+    /// Map a CLI-style bitwidth to a precision (32 -> fp32). Ternary
+    /// has no numeric width; see [`Precision::from_token`].
     pub fn from_bits(bits: u32) -> Precision {
         if bits >= 32 {
             Precision::Fp32
@@ -42,30 +55,71 @@ impl Precision {
         }
     }
 
-    /// Storage/compute bitwidth (32 for fp32).
+    /// Parse a CLI/manifest token: a numeric bitwidth ("1".."32"),
+    /// "fp32", "int<N>", or "t"/"ternary".
+    pub fn from_token(tok: &str) -> Result<Precision> {
+        let t = tok.trim();
+        match t {
+            "t" | "ternary" => return Ok(Precision::Ternary),
+            "fp32" => return Ok(Precision::Fp32),
+            _ => {}
+        }
+        let digits = t.strip_prefix("int").unwrap_or(t);
+        match digits.parse::<u32>() {
+            Ok(b) if b >= 1 => Ok(Precision::from_bits(b)),
+            _ => Err(Error::Config(format!(
+                "bad precision token '{tok}' (expected a bitwidth, 'intN', 'fp32', or 't'/'ternary')"
+            ))),
+        }
+    }
+
+    /// Storage/compute bitwidth (32 for fp32, 2 for ternary — the
+    /// sign+mask planes spend two bits per weight).
     pub fn bits(&self) -> u32 {
         match self {
             Precision::Fp32 => 32,
             Precision::Int(b) => *b,
+            Precision::Ternary => 2,
         }
     }
 
-    /// Human/bench label: "fp32", "int8", "int4", ...
+    /// Human/bench label: "fp32", "int8", ..., "int1", "ternary".
     pub fn label(&self) -> String {
         match self {
             Precision::Fp32 => "fp32".into(),
             Precision::Int(b) => format!("int{b}"),
+            Precision::Ternary => "ternary".into(),
+        }
+    }
+
+    /// Inverse of [`Precision::label`] (used by snapshot manifests).
+    pub fn from_label(label: &str) -> Result<Precision> {
+        match label {
+            "fp32" => Ok(Precision::Fp32),
+            "ternary" => Ok(Precision::Ternary),
+            _ => match label.strip_prefix("int").map(str::parse::<u32>) {
+                Some(Ok(b)) if (1..32).contains(&b) => Ok(Precision::Int(b)),
+                _ => Err(Error::Quant(format!("unknown precision label '{label}'"))),
+            },
         }
     }
 
     pub fn is_quantized(&self) -> bool {
-        matches!(self, Precision::Int(_))
+        matches!(self, Precision::Int(_) | Precision::Ternary)
+    }
+
+    /// Whether the weights of this precision are stored as sign/mask
+    /// bitplanes fed to the XNOR-popcount kernels (vs packed affine
+    /// codes on the SWAR unpack kernels).
+    pub fn is_bitplane(&self) -> bool {
+        matches!(self, Precision::Int(1) | Precision::Ternary)
     }
 
     /// Whether the native deployment engines implement this precision
-    /// (fp32, or an integer grid the i8/nibble codecs can store).
+    /// (fp32, an integer grid the i8/nibble/crumb codecs can store, or
+    /// a bitplane format of the XNOR kernels).
     pub fn engine_supported(&self) -> bool {
-        matches!(self, Precision::Fp32 | Precision::Int(2..=8))
+        matches!(self, Precision::Fp32 | Precision::Int(1..=8) | Precision::Ternary)
     }
 
     /// Error unless [`Precision::engine_supported`].
@@ -74,7 +128,7 @@ impl Precision {
             Ok(())
         } else {
             Err(Error::Quant(format!(
-                "precision {} has no native engine (supported: fp32, int2..=int8)",
+                "precision {} has no native engine (supported: fp32, int1..=int8, ternary)",
                 self.label()
             )))
         }
@@ -83,14 +137,17 @@ impl Precision {
     /// Bytes of weight storage per parameter in the deployment
     /// representation: 4 for fp32, 1 per i8 code, 0.5 for packed
     /// nibble codes (two per byte, bits 3..=4), 0.25 for packed crumb
-    /// codes (four per byte, bits 2). Biases stay fp32 in every engine
-    /// and are accounted separately.
+    /// codes (bits 2) and for ternary (sign + mask planes), 0.125 for
+    /// the binary sign bitplane. Biases stay fp32 in every engine and
+    /// are accounted separately.
     pub fn weight_bytes_per_param(&self) -> f64 {
         match self {
             Precision::Fp32 => 4.0,
+            Precision::Int(1) => 0.125,
             Precision::Int(b) if *b <= 2 => 0.25,
             Precision::Int(b) if *b <= 4 => 0.5,
             Precision::Int(_) => 1.0,
+            Precision::Ternary => 0.25,
         }
     }
 }
@@ -104,22 +161,63 @@ mod tests {
         assert_eq!(Precision::Fp32.label(), "fp32");
         assert_eq!(Precision::Int(8).label(), "int8");
         assert_eq!(Precision::Int(4).label(), "int4");
+        assert_eq!(Precision::Int(1).label(), "int1");
+        assert_eq!(Precision::Ternary.label(), "ternary");
         assert_eq!(Precision::Fp32.bits(), 32);
         assert_eq!(Precision::INT4.bits(), 4);
+        assert_eq!(Precision::INT1.bits(), 1);
+        assert_eq!(Precision::Ternary.bits(), 2);
         assert_eq!(Precision::from_bits(32), Precision::Fp32);
         assert_eq!(Precision::from_bits(8), Precision::INT8);
+        assert_eq!(Precision::from_bits(1), Precision::INT1);
+    }
+
+    #[test]
+    fn label_round_trips() {
+        for p in [
+            Precision::Fp32,
+            Precision::Int(1),
+            Precision::Int(2),
+            Precision::Int(8),
+            Precision::Ternary,
+        ] {
+            assert_eq!(Precision::from_label(&p.label()).unwrap(), p);
+        }
+        assert!(Precision::from_label("int0").is_err());
+        assert!(Precision::from_label("fp16").is_err());
+        assert!(Precision::from_label("").is_err());
+    }
+
+    #[test]
+    fn token_parse() {
+        assert_eq!(Precision::from_token("8").unwrap(), Precision::INT8);
+        assert_eq!(Precision::from_token("1").unwrap(), Precision::INT1);
+        assert_eq!(Precision::from_token("32").unwrap(), Precision::Fp32);
+        assert_eq!(Precision::from_token("t").unwrap(), Precision::Ternary);
+        assert_eq!(Precision::from_token("ternary").unwrap(), Precision::Ternary);
+        assert_eq!(Precision::from_token("int4").unwrap(), Precision::INT4);
+        assert_eq!(Precision::from_token("fp32").unwrap(), Precision::Fp32);
+        assert!(Precision::from_token("0").is_err());
+        assert!(Precision::from_token("x").is_err());
     }
 
     #[test]
     fn engine_support_window() {
         assert!(Precision::Fp32.engine_supported());
-        for b in 2..=8 {
+        for b in 1..=8 {
             assert!(Precision::Int(b).engine_supported(), "int{b}");
         }
-        assert!(!Precision::Int(1).engine_supported());
+        assert!(Precision::Ternary.engine_supported());
+        assert!(!Precision::Int(0).engine_supported());
         assert!(!Precision::Int(16).engine_supported());
         assert!(Precision::Int(16).validate_for_engine().is_err());
         assert!(Precision::INT4.validate_for_engine().is_ok());
+        assert!(Precision::INT1.validate_for_engine().is_ok());
+        // bitplane formats are exactly int1 + ternary
+        assert!(Precision::INT1.is_bitplane());
+        assert!(Precision::Ternary.is_bitplane());
+        assert!(!Precision::Int(2).is_bitplane());
+        assert!(!Precision::Fp32.is_bitplane());
     }
 
     #[test]
@@ -131,5 +229,9 @@ mod tests {
         assert_eq!(Precision::Int(3).weight_bytes_per_param(), 0.5);
         // the four-per-byte crumb codec quarters the traffic
         assert_eq!(Precision::Int(2).weight_bytes_per_param(), 0.25);
+        // two planes at one bit each: same 0.25 for ternary
+        assert_eq!(Precision::Ternary.weight_bytes_per_param(), 0.25);
+        // the sign bitplane is the floor: one bit per weight
+        assert_eq!(Precision::Int(1).weight_bytes_per_param(), 0.125);
     }
 }

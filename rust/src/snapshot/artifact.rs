@@ -18,7 +18,7 @@ use std::path::Path;
 
 use crate::inference::engine_quant::QuantLayerInit;
 use crate::inference::{engine_for_cfg, Engine, EngineConfig, EngineF32, EngineQuant};
-use crate::quant::codec::{packed_len, CodeBuf};
+use crate::quant::codec::{packed_len_for, CodeBuf};
 use crate::quant::{Precision, QParams};
 use crate::runtime::json::{self, Json};
 use crate::runtime::ParamSet;
@@ -105,23 +105,26 @@ impl Artifact {
 
     /// Encode a quantized engine at `version`: per layer, the packed
     /// input-major codes (the §3 compression win — int4 ships 1/8 the
-    /// fp32 bytes) then the f32 bias, with the layer's [`QParams`] in
-    /// the manifest. Works for either kernel layout: panel-major
-    /// engines unpack to input-major codes first (lossless), so the
-    /// wire format is layout-independent.
+    /// fp32 bytes, int1 ships 1/32) then the f32 bias, with the layer's
+    /// [`QParams`] in the manifest. Works for every weight layout:
+    /// panel-major and bitplane engines unpack to input-major codes
+    /// first (lossless), so the wire format is layout-independent —
+    /// int1 ships one sign plane, ternary a mask plane then a sign
+    /// plane, both LSB-first with zero pad bits.
     pub fn from_engine_quant(engine: &EngineQuant, version: u64) -> Artifact {
+        let precision = engine.precision();
         let mut payload = Vec::new();
         let layers = engine
             .layers
             .iter()
             .map(|l| {
-                let codes = CodeBuf::from_codes(&l.codes.to_vec(), engine.bits);
+                let codes = CodeBuf::from_codes_for(&l.codes.to_vec(), precision);
                 let w = push_section(&mut payload, &codes.to_packed_bytes());
                 let b = push_section(&mut payload, &f32s_to_le(&l.b));
                 LayerMeta { in_dim: l.in_dim, out_dim: l.out_dim, w, b, qp: Some(l.w_qp) }
             })
             .collect();
-        Artifact { version, precision: Precision::Int(engine.bits), layers, payload }
+        Artifact { version, precision, layers, payload }
     }
 
     /// Total blob size once serialized (header + manifest + payload).
@@ -257,13 +260,16 @@ impl Artifact {
                 manifest: manifest_version,
             });
         }
+        // The label is the authoritative precision key (ternary shares
+        // bits == 2 with int2); the numeric bits field cross-checks it.
         let bits = m.get("bits").and_then(Json::as_usize).map_err(man)? as u32;
-        let precision = if bits == 32 { Precision::Fp32 } else { Precision::Int(bits) };
-        if !precision.engine_supported() {
-            return Err(SnapshotError::Manifest(format!("unsupported precision bits {bits}")));
-        }
         let label = m.get("precision").and_then(Json::as_str).map_err(man)?;
-        if label != precision.label() {
+        let precision = Precision::from_label(label)
+            .map_err(|_| SnapshotError::Manifest(format!("unknown precision label '{label}'")))?;
+        if !precision.engine_supported() {
+            return Err(SnapshotError::Manifest(format!("unsupported precision '{label}'")));
+        }
+        if bits != precision.bits() {
             return Err(SnapshotError::Manifest(format!(
                 "precision label '{label}' does not match bits {bits}"
             )));
@@ -329,7 +335,7 @@ impl Artifact {
             let b = section("b", &mut cursor)?;
             let expect_w = match precision {
                 Precision::Fp32 => in_dim * out_dim * 4,
-                Precision::Int(b) => packed_len(in_dim * out_dim, b),
+                p => packed_len_for(in_dim * out_dim, p),
             };
             if w.len != expect_w {
                 return Err(SnapshotError::Manifest(format!(
@@ -348,11 +354,15 @@ impl Artifact {
                 (Precision::Fp32, Some(_)) => {
                     return Err(SnapshotError::Manifest(format!("layer {i}: fp32 carries qp")))
                 }
-                (Precision::Int(_), Some(qv)) => {
+                (_, Some(qv)) => {
                     let delta = qv.get("delta").and_then(Json::as_f64).map_err(man)? as f32;
                     let zero_point = qv.get("zp").and_then(Json::as_f64).map_err(man)? as f32;
                     let levels = qv.get("levels").and_then(Json::as_f64).map_err(man)? as f32;
-                    if !(delta.is_finite() && delta > 0.0 && zero_point.is_finite()
+                    // Bitplane scales are mean |w| and may legitimately
+                    // be 0 (an all-zero layer); affine steps must be > 0.
+                    let delta_ok =
+                        if precision.is_bitplane() { delta >= 0.0 } else { delta > 0.0 };
+                    if !(delta.is_finite() && delta_ok && zero_point.is_finite()
                         && levels.is_finite())
                     {
                         return Err(SnapshotError::Manifest(format!(
@@ -361,7 +371,7 @@ impl Artifact {
                     }
                     Some(QParams { delta, zero_point, levels })
                 }
-                (Precision::Int(_), None) => {
+                (_, None) => {
                     return Err(SnapshotError::Manifest(format!("layer {i}: missing qp")))
                 }
             };
@@ -423,13 +433,14 @@ impl Artifact {
                 }
                 engine_for_cfg(&ParamSet { names, tensors }, Precision::Fp32, cfg)
             }
-            Precision::Int(bits) => {
+            precision => {
                 let inits = self
                     .layers
                     .iter()
                     .map(|l| {
                         let packed = self.payload[l.w.off..l.w.off + l.w.len].to_vec();
-                        let codes = CodeBuf::from_packed(packed, l.in_dim * l.out_dim, bits)?;
+                        let codes =
+                            CodeBuf::from_packed_for(packed, l.in_dim * l.out_dim, precision)?;
                         Ok(QuantLayerInit {
                             codes,
                             w_qp: l.qp.expect("verified quantized layer carries qp"),
@@ -439,7 +450,7 @@ impl Artifact {
                         })
                     })
                     .collect::<crate::Result<Vec<_>>>()?;
-                Ok(Box::new(EngineQuant::from_quantized(inits, bits, cfg)?))
+                Ok(Box::new(EngineQuant::from_quantized_prec(inits, precision, cfg)?))
             }
         }
     }
@@ -508,6 +519,28 @@ mod tests {
                 rebuilt.forward(&x, &mut got).unwrap();
                 assert_eq!(want, got, "bits {bits} kernel {}", kernel.label());
             }
+        }
+    }
+
+    #[test]
+    fn bitplane_blob_roundtrips_bit_exactly() {
+        // int1/ternary artifacts ship sign/mask planes; the hydrated
+        // engine must reproduce the publisher bit for bit, and the
+        // manifest must disambiguate ternary from int2 (both bits == 2).
+        for prec in [Precision::INT1, Precision::Ternary] {
+            let p = mlp_params(&[7, 19, 4], 33);
+            let mut src =
+                EngineQuant::from_params_prec(&p, prec, EngineConfig::default()).unwrap();
+            let art = Artifact::from_engine_quant(&src, 6);
+            let back = Artifact::from_bytes(&art.to_bytes()).unwrap();
+            assert_eq!(back.precision, prec, "{}", prec.label());
+            let x: Vec<f32> = (0..7).map(|i| (i as f32 * 0.3).cos()).collect();
+            let mut want = vec![0.0f32; 4];
+            src.forward(&x, &mut want).unwrap();
+            let mut rebuilt = back.build_engine(EngineConfig::default()).unwrap();
+            let mut got = vec![0.0f32; 4];
+            rebuilt.forward(&x, &mut got).unwrap();
+            assert_eq!(want, got, "{} rebuild must be bit-identical", prec.label());
         }
     }
 

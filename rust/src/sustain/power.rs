@@ -87,8 +87,11 @@ pub fn mlp_macs(dims: &[usize]) -> f64 {
 }
 
 /// Weight bytes touched by one forward pass at `precision` — f32
-/// weights, i8 codes, or packed sub-byte codes (two per byte at
-/// int3/int4, four per byte at int2); biases stay f32 in every engine.
+/// weights, i8 codes, packed sub-byte codes (two per byte at int3/int4,
+/// four per byte at int2), or sign bitplanes (eight weights per byte at
+/// int1, four at ternary with its nonzero-mask plane); biases stay f32
+/// in every engine. This is the logical figure; the engines' word
+/// alignment pads it slightly upward (memsim bills the padded bytes).
 pub fn mlp_weight_bytes(dims: &[usize], precision: Precision) -> f64 {
     let w_bytes = precision.weight_bytes_per_param();
     dims.windows(2).map(|w| (w[0] * w[1]) as f64 * w_bytes + w[1] as f64 * 4.0).sum()
@@ -96,12 +99,16 @@ pub fn mlp_weight_bytes(dims: &[usize], precision: Precision) -> f64 {
 
 /// Modeled joules of one deployment-engine forward pass: arithmetic
 /// energy plus weight traffic. Integer MACs bill at the int8 cost for
-/// every stored width (the unpacked datapath is 8-bit); sub-byte widths
-/// differ through `weight_bytes` alone.
+/// every affine stored width (the unpacked datapath is 8-bit); sub-byte
+/// widths differ through `weight_bytes` alone. The bitplane precisions
+/// (int1 / ternary) are also billed at the int8 MAC cost — the
+/// XNOR-popcount SWAR kernel is in truth cheaper per logical MAC, so
+/// this keeps the estimate conservative and lets the 8-32x traffic
+/// shrink carry the comparison.
 pub fn forward_joules(precision: Precision, macs: f64, weight_bytes: f64) -> f64 {
     let pj_mac = match precision {
         Precision::Fp32 => PJ_PER_MAC_FP32,
-        Precision::Int(_) => PJ_PER_MAC_INT8,
+        Precision::Int(_) | Precision::Ternary => PJ_PER_MAC_INT8,
     };
     (macs * pj_mac + weight_bytes * PJ_PER_WEIGHT_BYTE) * 1e-12
 }
@@ -131,6 +138,30 @@ mod tests {
         assert!(f32_bytes / i8_bytes > 3.5);
         assert!(i8_bytes / i4_bytes > 1.5, "packing must show up in traffic");
         assert!(i4_bytes / i2_bytes > 1.3, "the crumb codec halves it again");
+        // bitplanes: one bit per weight at int1, mask + sign at ternary
+        let i1_bytes = mlp_weight_bytes(&dims, Precision::INT1);
+        let t_bytes = mlp_weight_bytes(&dims, Precision::Ternary);
+        assert_eq!(i1_bytes, (4480.0 / 8.0) + ((64 + 64 + 2) * 4) as f64);
+        assert_eq!(t_bytes, (4480.0 / 4.0) + ((64 + 64 + 2) * 4) as f64);
+        assert_eq!(t_bytes, i2_bytes, "ternary's two planes cost int2 traffic");
+        assert!(f32_bytes / i1_bytes > 20.0, "int1 weight traffic ~32x below fp32");
+    }
+
+    #[test]
+    fn bitplane_forward_bills_int_macs_and_bit_traffic() {
+        for dims in [&[4usize, 64, 64, 2][..], &[12, 256, 256, 25]] {
+            let q8 = mlp_forward_joules(dims, Precision::Int(8));
+            let q1 = mlp_forward_joules(dims, Precision::INT1);
+            let qt = mlp_forward_joules(dims, Precision::Ternary);
+            assert!(q8 > qt && qt > q1, "traffic must order int8 > ternary > int1 for {dims:?}");
+            // MAC term is identical (both integer datapaths), so the gap
+            // is exactly the weight-traffic difference.
+            let traffic_gap = (mlp_weight_bytes(dims, Precision::Int(8))
+                - mlp_weight_bytes(dims, Precision::INT1))
+                * PJ_PER_WEIGHT_BYTE
+                * 1e-12;
+            assert!((q8 - q1 - traffic_gap).abs() < 1e-18);
+        }
     }
 
     #[test]

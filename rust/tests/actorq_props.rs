@@ -38,7 +38,7 @@ fn prop_broadcast_roundtrip_error_bounded() {
         let ActorEngine::Quant(ref eng) = snap.engine else {
             panic!("int8 precision must publish the quantized engine");
         };
-        assert_eq!(eng.bits, 8);
+        assert_eq!(eng.precision(), Precision::Int(8));
         for (li, layer) in eng.layers.iter().enumerate() {
             let w = &p.tensors[2 * li];
             let codes = layer.codes.to_vec();

@@ -1,15 +1,18 @@
 //! Engine parity harness: the properties the ActorQ design rests on —
 //! the int8 deployment engine's forward pass stays within the per-layer
 //! quantization error bound of the fp32 engine, the *actions* it picks
-//! agree with fp32 on the overwhelming majority of observations, and the
+//! agree with fp32 on the overwhelming majority of observations, the
 //! batched GEMM path is bit-identical per row to the scalar GEMV path
-//! for both engines. (Hand-rolled randomized cases; no proptest
-//! offline.)
+//! for both engines, and the packed kernels — affine panels and the
+//! int1/ternary XNOR-popcount bitplanes alike — reproduce their scalar
+//! fake-quant / sign-arithmetic references bit for bit at every thread
+//! count. (Hand-rolled randomized cases; no proptest offline.)
 
+use quarl::inference::engine_quant::{act_bitplane_params, bitplane_out};
 use quarl::inference::{
     Engine, EngineConfig, EngineF32, EngineInt4, EngineInt8, EngineQuant, KernelKind,
 };
-use quarl::quant::QParams;
+use quarl::quant::{binarize, ternarize, Precision, QParams};
 use quarl::rng::Pcg32;
 use quarl::runtime::manifest::TensorSpec;
 use quarl::runtime::ParamSet;
@@ -650,6 +653,202 @@ fn snapshot_rebuilt_engines_keep_bit_parity_at_every_width() {
             src.forward(x, &mut y_src).unwrap();
             rebuilt.forward(x, &mut y_reb).unwrap();
             assert_eq!(y_src, y_reb, "bits {bits} scalar row {r}");
+        }
+    }
+}
+
+/// Scalar sign-arithmetic reference for the bitplane engines, built
+/// from the public API only: weights through `binarize`/`ternarize`
+/// (the exact codec the engine packs from), activations binarized
+/// around their mean via `act_bitplane_params` (bit set iff `a_i < mu`,
+/// i.e. code -1, matching `pack_act_signs`), plain i32 code products in
+/// place of the XNOR-popcount identity, and the engine's own
+/// `bitplane_out` epilogue. The integer sums are exact and the float
+/// expression is shared, so the packed kernels must reproduce this bit
+/// for bit — the XNOR trick (`acc = n_eff - 2*popcount`) is pure
+/// arithmetic rewriting, not an approximation.
+fn bitplane_reference(p: &ParamSet, xs: &[f32], batch: usize, precision: Precision) -> Vec<f32> {
+    let n_layers = p.tensors.len() / 2;
+    let in_dim = p.tensors[0].shape()[0];
+    let mut act: Vec<f32> = xs[..batch * in_dim].to_vec();
+    let mut n = in_dim;
+    for li in 0..n_layers {
+        let w = &p.tensors[2 * li];
+        let b = &p.tensors[2 * li + 1];
+        let m = w.shape()[1];
+        let relu = li + 1 < n_layers;
+        let (codes, alpha_w) = match precision {
+            Precision::Ternary => ternarize(w.data()),
+            _ => binarize(w.data()),
+        };
+        let mut col_sums = vec![0i32; m];
+        for r in 0..n {
+            for c in 0..m {
+                col_sums[c] += codes[r * m + c] as i32;
+            }
+        }
+        let mut next = vec![0.0f32; batch * m];
+        for r in 0..batch {
+            let a = &act[r * n..(r + 1) * n];
+            let amin = a.iter().copied().fold(f32::INFINITY, f32::min);
+            let amax = a.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+            let degenerate = amin == amax && amin == 0.0;
+            let (s1, s2, qa): (f32, f32, Vec<i32>) = if degenerate {
+                (0.0, 0.0, vec![0; n])
+            } else {
+                let (mu, alpha) = act_bitplane_params(a);
+                (
+                    alpha_w * alpha,
+                    alpha_w * mu,
+                    a.iter().map(|&v| if v < mu { -1 } else { 1 }).collect(),
+                )
+            };
+            for c in 0..m {
+                let mut acc = 0i32;
+                if !degenerate {
+                    for (i, &q) in qa.iter().enumerate() {
+                        acc += q * codes[i * m + c] as i32;
+                    }
+                }
+                next[r * m + c] = bitplane_out(s1, s2, acc, col_sums[c], b.data()[c], relu);
+            }
+        }
+        act = next;
+        n = m;
+    }
+    act
+}
+
+#[test]
+fn xnor_bitplane_gemm_bit_exact_with_scalar_sign_reference() {
+    // The PR-9 acceptance property: the int1 and ternary bitplane
+    // engines (column-major sign/mask planes, 64 weights per
+    // xor+count_ones) are bit-identical to the scalar sign-arithmetic
+    // reference across random shapes, odd widths (input rows straddling
+    // the 64-bit plane words, tail chunks), multi-block output widths,
+    // and batch sizes that force scratch-arena regrowth — on both the
+    // batched GEMM and the scalar GEMV paths.
+    let mut rng = Pcg32::new(1001, 1);
+    let shapes: [&[usize]; 5] = [
+        &[4, 16, 2],
+        &[7, 33, 19, 3],
+        &[12, 130, 70, 5],
+        &[9, 200, 6],
+        &[128, 512, 512, 25],
+    ];
+    for precision in [Precision::Int(1), Precision::Ternary] {
+        for (case, dims) in shapes.iter().enumerate() {
+            let p = mlp_params(dims, 9500 + case as u64);
+            let mut eng =
+                EngineQuant::from_params_prec(&p, precision, EngineConfig::default()).unwrap();
+            let din = dims[0];
+            let dout = *dims.last().unwrap();
+            let batch_sizes: &[usize] = if din >= 128 { &[1, 64] } else { &[1, 3, 7, 64] };
+            for &batch in batch_sizes {
+                let xs: Vec<f32> =
+                    (0..batch * din).map(|_| rng.uniform_range(-2.0, 2.0)).collect();
+                let want = bitplane_reference(&p, &xs, batch, precision);
+                let mut got = vec![0.0f32; batch * dout];
+                eng.forward_batch(&xs, batch, &mut got).unwrap();
+                for (k, (a, b)) in want.iter().zip(&got).enumerate() {
+                    assert!(
+                        a == b,
+                        "{} case {case} batch {batch} element {k}: reference {a} ({:#x}) vs bitplane {b} ({:#x})",
+                        precision.label(),
+                        a.to_bits(),
+                        b.to_bits()
+                    );
+                }
+                let mut scalar = vec![0.0f32; dout];
+                for r in 0..batch {
+                    eng.forward(&xs[r * din..(r + 1) * din], &mut scalar).unwrap();
+                    assert_eq!(
+                        &want[r * dout..(r + 1) * dout],
+                        scalar.as_slice(),
+                        "{} case {case} GEMV row {r}",
+                        precision.label()
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn bitplane_kernels_survive_degenerate_rows() {
+    // Same benign-skip contract the affine kernels pin: an all-zero
+    // activation row (dead layer after relu, env-reset observation) has
+    // no sign information to binarize — both scales vanish and the
+    // output is exactly the bias, never an Err. Checked against the
+    // reference too, so the degenerate branch stays on the shared path.
+    for precision in [Precision::Int(1), Precision::Ternary] {
+        let mut p = mlp_params(&[4, 8, 3], 96);
+        p.tensors[0].data_mut().fill(0.0);
+        p.tensors[1].data_mut().fill(0.0);
+        let b1 = p.tensors[3].data().to_vec();
+        let mut eng =
+            EngineQuant::from_params_prec(&p, precision, EngineConfig::default()).unwrap();
+        let xs = [0.3f32, -0.7, 0.1, 0.9, 0.0, 0.0, 0.0, 0.0];
+        let want = bitplane_reference(&p, &xs, 2, precision);
+        let mut got = vec![0.0f32; 6];
+        eng.forward_batch(&xs, 2, &mut got).expect("degenerate batch must not fail");
+        assert_eq!(want, got, "{}", precision.label());
+        assert_eq!(&got[..3], b1.as_slice(), "zero contribution => exactly the bias");
+        let mut y = vec![0.0f32; 3];
+        eng.forward(&xs[4..8], &mut y).expect("all-zero obs must not fail");
+        assert_eq!(y.as_slice(), b1.as_slice(), "{} scalar path", precision.label());
+    }
+}
+
+#[test]
+fn bitplane_thread_counts_are_bit_invariant() {
+    // The bitplane GEMM threads over disjoint output-column blocks on
+    // the shared persistent pool, same as the affine kernels — so
+    // threads in {1, 2, 4} (and live set_threads resizes) must produce
+    // bit-identical forward_batch output for int1 AND ternary, on
+    // shapes wide enough to actually split into multiple blocks.
+    let mut rng = Pcg32::new(1002, 1);
+    for precision in [Precision::Int(1), Precision::Ternary] {
+        for (case, dims) in [&[12usize, 300, 140, 9][..], &[6, 129, 5]].iter().enumerate() {
+            let p = mlp_params(dims, 9600 + case as u64);
+            let din = dims[0];
+            let dout = *dims.last().unwrap();
+            for &batch in &[1usize, 5, 8] {
+                let xs: Vec<f32> =
+                    (0..batch * din).map(|_| rng.uniform_range(-2.0, 2.0)).collect();
+                let mut want = vec![0.0f32; batch * dout];
+                EngineQuant::from_params_prec(&p, precision, EngineConfig::with_threads(1))
+                    .unwrap()
+                    .forward_batch(&xs, batch, &mut want)
+                    .unwrap();
+                assert_eq!(
+                    want,
+                    bitplane_reference(&p, &xs, batch, precision),
+                    "{} case {case} batch {batch}: single-thread vs reference",
+                    precision.label()
+                );
+                for threads in [2usize, 4] {
+                    let mut eng = EngineQuant::from_params_prec(
+                        &p,
+                        precision,
+                        EngineConfig::with_threads(threads),
+                    )
+                    .unwrap();
+                    let mut got = vec![0.0f32; batch * dout];
+                    eng.forward_batch(&xs, batch, &mut got).unwrap();
+                    assert_eq!(
+                        want, got,
+                        "{} case {case} batch {batch} threads {threads}",
+                        precision.label()
+                    );
+                    eng.set_threads(1);
+                    eng.forward_batch(&xs, batch, &mut got).unwrap();
+                    assert_eq!(want, got, "set_threads(1) after {threads}");
+                    eng.set_threads(threads + 1);
+                    eng.forward_batch(&xs, batch, &mut got).unwrap();
+                    assert_eq!(want, got, "set_threads({}) resize", threads + 1);
+                }
+            }
         }
     }
 }

@@ -7,6 +7,7 @@
 //! real-network timing.
 
 use quarl::inference::{Engine, EngineConfig, EngineF32, EngineQuant};
+use quarl::quant::Precision;
 use quarl::rng::Pcg32;
 use quarl::runtime::manifest::TensorSpec;
 use quarl::runtime::ParamSet;
@@ -26,14 +27,21 @@ fn mlp_params(dims: &[usize], seed: u64) -> ParamSet {
 }
 
 /// Source engine + its artifact at `version`, for every supported
-/// precision label ("fp32", 2..=8).
-fn artifact_for_bits(p: &ParamSet, bits: Option<u32>, version: u64) -> Artifact {
-    match bits {
-        None => Artifact::from_engine_f32(&EngineF32::from_params(p).unwrap(), version),
-        Some(b) => {
-            Artifact::from_engine_quant(&EngineQuant::from_params(p, b).unwrap(), version)
+/// precision label ("fp32", "int1".."int8", "ternary").
+fn artifact_for(p: &ParamSet, precision: Precision, version: u64) -> Artifact {
+    match precision {
+        Precision::Fp32 => {
+            Artifact::from_engine_f32(&EngineF32::from_params(p).unwrap(), version)
         }
+        _ => Artifact::from_engine_quant(
+            &EngineQuant::from_params_prec(p, precision, EngineConfig::default()).unwrap(),
+            version,
+        ),
     }
+}
+
+fn artifact_for_bits(p: &ParamSet, bits: Option<u32>, version: u64) -> Artifact {
+    artifact_for(p, bits.map_or(Precision::Fp32, Precision::Int), version)
 }
 
 /// Drive `n` random observations through both engines and demand
@@ -72,36 +80,99 @@ fn assert_bit_identical<A: Engine + ?Sized, B: Engine + ?Sized>(
 
 #[test]
 fn every_precision_round_trips_over_the_wire_bit_identically() {
-    // fp32 and every packed width 2..=8 through the full pipeline:
-    // write -> publish -> serve -> fetch -> rebuild. One server, eight
-    // successive versions.
+    // fp32, every packed width 1..=8, and ternary through the full
+    // pipeline: write -> publish -> serve -> fetch -> rebuild. One
+    // server, ten successive versions.
     let dims = [6usize, 24, 10, 3];
     let p = mlp_params(&dims, 11);
     let hub = Arc::new(SnapshotHub::new());
     let server = SnapshotServer::bind("127.0.0.1:0", Arc::clone(&hub)).unwrap();
     let client = SnapshotClient::new(server.addr());
 
-    let widths: Vec<Option<u32>> =
-        std::iter::once(None).chain((2..=8).map(Some)).collect();
-    for (i, bits) in widths.into_iter().enumerate() {
+    // fp32, the affine widths, and both bitplane formats — int1 and
+    // ternary exercise the sign/mask plane payload sections, and
+    // ternary additionally pins the label-authoritative manifest decode
+    // (it shares bits=2 with the affine crumb codec).
+    let precisions: Vec<Precision> = std::iter::once(Precision::Fp32)
+        .chain((1..=8).map(Precision::Int))
+        .chain(std::iter::once(Precision::Ternary))
+        .collect();
+    for (i, precision) in precisions.into_iter().enumerate() {
         let version = (i + 1) as u64;
-        let art = artifact_for_bits(&p, bits, version);
+        let art = artifact_for(&p, precision, version);
         hub.publish(&art).unwrap();
         assert_eq!(client.version().unwrap(), version);
 
         let (got_version, mut remote) =
             client.fetch_engine(EngineConfig::default()).unwrap();
         assert_eq!(got_version, version);
-        match bits {
-            None => {
+        match precision {
+            Precision::Fp32 => {
                 let mut src = EngineF32::from_params(&p).unwrap();
                 assert_bit_identical(&mut src, &mut remote, dims[0], dims[3], 500 + version);
             }
-            Some(b) => {
-                let mut src = EngineQuant::from_params(&p, b).unwrap();
+            _ => {
+                let mut src =
+                    EngineQuant::from_params_prec(&p, precision, EngineConfig::default())
+                        .unwrap();
                 assert_bit_identical(&mut src, &mut remote, dims[0], dims[3], 500 + version);
             }
         }
+    }
+}
+
+#[test]
+fn bitplane_blobs_survive_byte_flips_and_truncation_as_typed_errors() {
+    // The PR-9 wire contract for the sign/mask plane payloads: a
+    // bits=1 (and ternary) artifact must reject EVERY single-byte flip
+    // (all bits and just the low bit — the low-bit case is what a
+    // silent sign-plane corruption looks like) and EVERY truncated
+    // prefix with a typed SnapshotError, never a panic and never a
+    // silently-built engine. Ternary's dual planes carry the extra
+    // sign-outside-mask / nonzero-pad structure; any flip that slips
+    // past the section CRC would have to also survive those validators.
+    for precision in [Precision::Int(1), Precision::Ternary] {
+        // Odd in_dim straddles a plane-word boundary; 3 output cols
+        // keep per-column strides unaligned.
+        let p = mlp_params(&[5, 67, 3], 26);
+        let blob = artifact_for(&p, precision, 4).to_bytes();
+        assert!(
+            Artifact::from_bytes(&blob).is_ok(),
+            "pristine {} blob must parse",
+            precision.label()
+        );
+
+        for mask in [0xFFu8, 0x01] {
+            for off in 0..blob.len() {
+                let mut bad = blob.clone();
+                bad[off] ^= mask;
+                assert!(
+                    Artifact::from_bytes(&bad).is_err(),
+                    "{}: flip mask {mask:#04x} at offset {off} went undetected",
+                    precision.label()
+                );
+            }
+        }
+        for len in 0..blob.len() {
+            assert!(
+                Artifact::from_bytes(&blob[..len]).is_err(),
+                "{}: truncation to {len}/{} bytes went undetected",
+                precision.label(),
+                blob.len()
+            );
+        }
+
+        // Round trip over the real wire too: publish, fetch, rebuild,
+        // and demand bit-identity with the in-process source engine.
+        let hub = Arc::new(SnapshotHub::new());
+        hub.publish(&Artifact::from_bytes(&blob).unwrap()).unwrap();
+        let server = SnapshotServer::bind("127.0.0.1:0", Arc::clone(&hub)).unwrap();
+        let client = SnapshotClient::new(server.addr());
+        let (version, mut remote) = client.fetch_engine(EngineConfig::default()).unwrap();
+        assert_eq!(version, 4);
+        let mut src =
+            EngineQuant::from_params_prec(&p, precision, EngineConfig::default()).unwrap();
+        assert_bit_identical(&mut src, &mut remote, 5, 3, 600);
     }
 }
 

@@ -2,11 +2,14 @@
 """Sanity-check emitted BENCH_*.json reports: each file must parse as
 JSON and carry the expected top-level keys, and sweep-style reports must
 contain at least one row. BENCH_engines.json additionally gets a
-per-row schema check (kernel-variant + threads tagging, and the
-before/after kernel rows the panel-major rework is tracked by);
+per-row schema check (kernel-variant + threads tagging, the before/after
+kernel rows the panel-major rework is tracked by, and the int1/ternary
+bitplane-kernel rows with the `int1_vs_int8_b64_w512` headline);
 BENCH_serve.json gets one too (latency percentiles ordered, batch
-histograms present, client counts sane). Used by CI after running the
-offline bench / experiment paths; also handy locally:
+histograms present, client counts sane), and BENCH_noise.json gets the
+QeRL-ladder check (fp32 baseline rung present, unique rungs,
+fp32-normalized rewards). Used by CI after running the offline bench /
+experiment paths; also handy locally:
 
     python3 scripts/check_bench_reports.py rust/BENCH_engines.json ...
 
@@ -24,14 +27,17 @@ EXPECTATIONS = {
             "bench",
             "mlp",
             "bits",
+            "precisions",
             "threads",
             "headline_int8_b64_w512_speedup",
             "int4_panel_vs_rowmajor_b64_w512",
             "int8_threads2_vs_1_b64",
+            "int1_vs_int8_b64_w512",
             "rows",
         ],
         "rows",
     ),
+    "BENCH_noise": (["bench", "env", "rows"], "rows"),
     "BENCH_actorq": (["bench", "env", "window_ms", "rows"], "rows"),
     "BENCH_carbon": (["bench", "regions_billed", "cells", "mean_kg_co2eq_ratio"], "cells"),
     "BENCH_serve": (["bench", "mlp", "window_us", "max_batch", "rows"], "rows"),
@@ -50,22 +56,29 @@ ENGINE_ROW_KEYS = [
     "rows_per_sec_batched",
     "speedup",
 ]
-KERNELS = {"base", "panel", "rowmajor"}
+KERNELS = {"base", "panel", "rowmajor", "bitplane"}
+# Precisions stored as sign bitplanes and run on the XNOR-popcount
+# kernel; they have exactly one layout, so no panel/rowmajor pairing.
+BITPLANE_ENGINES = {"int1", "ternary"}
 
 
 def check_engine_rows(path: str, doc: dict) -> list:
     """BENCH_engines.json row schema: every row tagged with a known
     kernel variant and a positive integer thread count; fp32 rows are
-    the single-layout baseline; every quantized width present must be
-    measured on BOTH kernels (the before/after the panel rework is
-    tracked by); and when the sweep includes int2, int2 rows must
-    actually be there (the four-per-byte codec has landed and must not
-    silently fall out of the tracked sweep)."""
+    the single-layout baseline; int1/ternary rows must run the
+    XNOR-popcount 'bitplane' kernel (and nothing else may claim it);
+    every affine quantized width present must be measured on BOTH the
+    panel and rowmajor kernels (the before/after the panel rework is
+    tracked by); and every precision the sweep lists must actually have
+    rows — a swept format must not silently fall out of the tracked
+    comparison (keyed by engine label, not bit width, because ternary
+    and int2 share bits=2)."""
     errors = []
     rows = doc.get("rows")
     if not isinstance(rows, list):
         return [f"{path}: 'rows' is not a list"]
-    quant_kernels = {}  # bits -> set of kernel tags seen
+    quant_kernels = {}  # affine engine label -> set of kernel tags seen
+    seen_engines = set()
     for i, row in enumerate(rows):
         if not isinstance(row, dict):
             errors.append(f"{path}: rows[{i}] is not an object")
@@ -79,22 +92,94 @@ def check_engine_rows(path: str, doc: dict) -> list:
         threads = row.get("threads")
         if not (isinstance(threads, (int, float)) and threads >= 1 and threads == int(threads)):
             errors.append(f"{path}: rows[{i}] threads '{threads}' is not a positive integer")
-        bits = row.get("bits")
-        if row.get("engine") == "fp32":
+        engine = row.get("engine")
+        seen_engines.add(engine)
+        if engine == "fp32":
             if kernel != "base":
                 errors.append(f"{path}: rows[{i}] fp32 row must carry kernel 'base'")
+        elif engine in BITPLANE_ENGINES:
+            if kernel != "bitplane":
+                errors.append(
+                    f"{path}: rows[{i}] {engine} row carries kernel '{kernel}' — "
+                    "bitplane precisions run only the XNOR-popcount kernel"
+                )
+        elif kernel == "bitplane":
+            errors.append(
+                f"{path}: rows[{i}] affine engine '{engine}' claims the bitplane kernel"
+            )
         elif kernel in ("panel", "rowmajor"):
-            quant_kernels.setdefault(bits, set()).add(kernel)
-    for bits, kernels in sorted(quant_kernels.items(), key=lambda kv: str(kv[0])):
+            quant_kernels.setdefault(engine, set()).add(kernel)
+    for engine, kernels in sorted(quant_kernels.items(), key=lambda kv: str(kv[0])):
         missing = {"panel", "rowmajor"} - kernels
         if missing:
             errors.append(
-                f"{path}: int{bits} rows lack kernel variant(s) {sorted(missing)} — "
+                f"{path}: {engine} rows lack kernel variant(s) {sorted(missing)} — "
                 "the before/after comparison is incomplete"
             )
-    swept_bits = doc.get("bits")
-    if isinstance(swept_bits, list) and 2 in swept_bits and 2 not in quant_kernels:
-        errors.append(f"{path}: sweep lists bits 2 but no int2 rows were emitted")
+    swept = doc.get("precisions")
+    if isinstance(swept, list):
+        for label in swept:
+            if label not in seen_engines:
+                errors.append(
+                    f"{path}: sweep lists precision '{label}' but no rows were emitted"
+                )
+    return errors
+
+
+NOISE_ROW_KEYS = [
+    "actor_precision",
+    "bits",
+    "actors",
+    "env_steps",
+    "train_steps",
+    "broadcasts",
+    "steps_per_sec",
+    "final_return",
+    "eval_reward",
+]
+
+
+def check_noise_rows(path: str, doc: dict) -> list:
+    """BENCH_noise.json row schema: one row per actor-precision rung of
+    the QeRL convergence ladder. The fp32 baseline row must be present
+    (the noise-helps/noise-hurts comparison is meaningless without it),
+    rungs must be unique, step counts positive, and the fp32-relative
+    reward — when the renderer could compute it — must be a number,
+    with the fp32 row's own ratio equal to 1."""
+    errors = []
+    rows = doc.get("rows")
+    if not isinstance(rows, list):
+        return [f"{path}: 'rows' is not a list"]
+    rungs = []
+    for i, row in enumerate(rows):
+        if not isinstance(row, dict):
+            errors.append(f"{path}: rows[{i}] is not an object")
+            continue
+        for k in NOISE_ROW_KEYS:
+            if k not in row:
+                errors.append(f"{path}: rows[{i}] missing key '{k}'")
+        rung = row.get("actor_precision")
+        if not isinstance(rung, str) or not rung:
+            errors.append(f"{path}: rows[{i}] actor_precision '{rung}' is not a label")
+        else:
+            rungs.append(rung)
+        for k in ("env_steps", "train_steps"):
+            v = row.get(k)
+            if not (isinstance(v, (int, float)) and v > 0):
+                errors.append(f"{path}: rows[{i}] {k} '{v}' is not positive")
+        ratio = row.get("reward_vs_fp32")
+        if ratio is not None and not isinstance(ratio, (int, float)):
+            errors.append(f"{path}: rows[{i}] reward_vs_fp32 '{ratio}' is not a number")
+        if rung == "fp32" and isinstance(ratio, (int, float)) and abs(ratio - 1.0) > 1e-9:
+            errors.append(
+                f"{path}: rows[{i}] fp32 reward_vs_fp32 is {ratio}, expected 1.0 — "
+                "the baseline is not normalized against itself"
+            )
+    if "fp32" not in rungs:
+        errors.append(f"{path}: no fp32 baseline row — the ladder has no reference rung")
+    dupes = sorted({r for r in rungs if rungs.count(r) > 1})
+    if dupes:
+        errors.append(f"{path}: duplicate ladder rung(s) {dupes}")
     return errors
 
 
@@ -305,6 +390,8 @@ def check(path: str) -> list:
         errors.append(f"{path}: '{rows_key}' is empty")
     if name == "BENCH_engines" and not errors:
         errors.extend(check_engine_rows(path, doc))
+    if name == "BENCH_noise" and not errors:
+        errors.extend(check_noise_rows(path, doc))
     if name == "BENCH_serve" and not errors:
         errors.extend(check_serve_rows(path, doc))
     if name == "BENCH_snapshot" and not errors:
@@ -315,8 +402,8 @@ def check(path: str) -> list:
 
 
 def self_test() -> int:
-    """Exercise the snapshot checker against synthetic good/bad docs so
-    CI catches a broken checker, not just broken reports."""
+    """Exercise the row checkers against synthetic good/bad docs so CI
+    catches a broken checker, not just broken reports."""
     import copy
     import os
     import tempfile
@@ -386,6 +473,100 @@ def self_test() -> int:
         ("missing key", lambda d: d["rows"][0].pop("steps_lost")),
         ("empty rows", lambda d: d.update(rows=[])),
     ]
+    def engine_row(engine, bits, kernel):
+        return {
+            "engine": engine,
+            "bits": bits,
+            "kernel": kernel,
+            "threads": 1,
+            "width": 512,
+            "batch": 64,
+            "rows_per_sec_scalar": 1e6,
+            "rows_per_sec_batched": 4e6,
+            "speedup": 4.0,
+        }
+
+    good_engines = {
+        "bench": "engines",
+        "mlp": "128xWxWx25",
+        "bits": [32, 8, 1, 2],
+        "precisions": ["fp32", "int8", "int1", "ternary"],
+        "threads": 1,
+        "headline_int8_b64_w512_speedup": 2.5,
+        "int4_panel_vs_rowmajor_b64_w512": None,
+        "int8_threads2_vs_1_b64": 1.3,
+        "int1_vs_int8_b64_w512": 3.0,
+        "rows": [
+            engine_row("fp32", 32, "base"),
+            engine_row("int8", 8, "panel"),
+            engine_row("int8", 8, "rowmajor"),
+            engine_row("int1", 1, "bitplane"),
+            engine_row("ternary", 2, "bitplane"),
+        ],
+    }
+    engines_breakages = [
+        ("missing int1 headline key", lambda d: d.pop("int1_vs_int8_b64_w512")),
+        ("missing precisions key", lambda d: d.pop("precisions")),
+        (
+            "int1 rows fell out of the sweep",
+            lambda d: d.update(rows=[r for r in d["rows"] if r["engine"] != "int1"]),
+        ),
+        (
+            "int1 row mistagged as panel",
+            lambda d: d["rows"][3].update(kernel="panel"),
+        ),
+        (
+            "affine row claims the bitplane kernel",
+            lambda d: d["rows"][1].update(kernel="bitplane"),
+        ),
+        (
+            "int8 rowmajor reference dropped",
+            lambda d: d.update(rows=[r for r in d["rows"] if r["kernel"] != "rowmajor"]),
+        ),
+        ("unknown kernel tag", lambda d: d["rows"][0].update(kernel="simd")),
+        ("missing row key", lambda d: d["rows"][4].pop("rows_per_sec_batched")),
+    ]
+    def noise_row(rung, bits, reward, ratio):
+        row = {
+            "actor_precision": rung,
+            "bits": bits,
+            "actors": 4,
+            "env_steps": 3000,
+            "train_steps": 1000,
+            "broadcasts": 20,
+            "steps_per_sec": 500.0,
+            "final_return": reward,
+            "eval_reward": reward,
+        }
+        if ratio is not None:
+            row["reward_vs_fp32"] = ratio
+        return row
+
+    good_noise = {
+        "bench": "noise",
+        "env": "cartpole",
+        "rows": [
+            noise_row("fp32", 32, 180.0, 1.0),
+            noise_row("int8", 8, 178.0, 178.0 / 180.0),
+            noise_row("ternary", 2, 171.0, 171.0 / 180.0),
+            noise_row("int1", 1, 150.0, 150.0 / 180.0),
+        ],
+    }
+    noise_breakages = [
+        (
+            "fp32 baseline rung missing",
+            lambda d: d.update(rows=[r for r in d["rows"] if r["actor_precision"] != "fp32"]),
+        ),
+        (
+            "duplicate ladder rung",
+            lambda d: d["rows"].append(copy.deepcopy(d["rows"][3])),
+        ),
+        ("zero env steps", lambda d: d["rows"][2].update(env_steps=0)),
+        ("non-numeric ratio", lambda d: d["rows"][1].update(reward_vs_fp32="0.98")),
+        ("fp32 not self-normalized", lambda d: d["rows"][0].update(reward_vs_fp32=0.5)),
+        ("missing row key", lambda d: d["rows"][1].pop("eval_reward")),
+        ("empty rows", lambda d: d.update(rows=[])),
+    ]
     failures = []
     with tempfile.TemporaryDirectory() as tmp:
 
@@ -398,6 +579,8 @@ def self_test() -> int:
         for name, pristine, planted in [
             ("BENCH_snapshot.json", good, breakages),
             ("BENCH_faults.json", good_faults, faults_breakages),
+            ("BENCH_engines.json", good_engines, engines_breakages),
+            ("BENCH_noise.json", good_noise, noise_breakages),
         ]:
             errs = write_and_check(name, pristine)
             if errs:
@@ -410,7 +593,12 @@ def self_test() -> int:
     for f in failures:
         print(f"self-test failure: {f}", file=sys.stderr)
     if not failures:
-        n = len(breakages) + len(faults_breakages)
+        n = (
+            len(breakages)
+            + len(faults_breakages)
+            + len(engines_breakages)
+            + len(noise_breakages)
+        )
         print(f"ok: self-test ({n} breakages caught)")
     return 1 if failures else 0
 
