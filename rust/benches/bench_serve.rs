@@ -141,6 +141,7 @@ fn main() {
         max_batch,
         window: Duration::from_micros(window_us),
         queue_capacity: 1024,
+        ..ServeConfig::default()
     };
 
     // fp32 baseline + int8 headline always; --bits adds the rest of the

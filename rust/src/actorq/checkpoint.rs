@@ -3,8 +3,10 @@
 //! [`crate::actorq::LearnerHarness`] needs to resume a killed run and
 //! converge to the **bit-identical** final engine: the fp32 master
 //! [`ParamSet`], the pacer's train-step count, the env-step /
-//! broadcast / version high-water marks, the replay push count, and
-//! the learner RNG state.
+//! broadcast / version high-water marks, the replay push count, the
+//! learner RNG state, and (optionally) the full replay buffer — rows,
+//! `SumTree` priorities, ring cursor, and sampler RNG — so a resumed
+//! learner samples bit-exactly without refilling from live actors.
 //!
 //! The wire format deliberately mirrors the QSNP snapshot artifact
 //! ([`crate::snapshot::artifact`]) — same header shape, same CRC-32
@@ -20,30 +22,40 @@
 //!     16     4  u32 manifest length M
 //!     20     4  u32 CRC-32 of the manifest bytes
 //!     24     M  manifest (JSON: counters, RNG state, tensor names /
-//!               shapes / section offsets+lengths+CRCs, payload_len)
+//!               shapes / section offsets+lengths+CRCs, payload_len,
+//!               optional "replay" object with its own sections)
 //!  24+M     P  payload: each tensor's f32 data little-endian, tiled
-//!               contiguously in manifest order
+//!               contiguously in manifest order, then — when a replay
+//!               section is present — the replay arrays (`replay.obs`,
+//!               `replay.actions`, `replay.rewards`, `replay.next_obs`,
+//!               `replay.dones`, and `replay.priorities` for PER), each
+//!               its own CRC-32-checked section continuing the tiling
 //! ```
 //!
 //! [`Checkpoint::from_bytes`] verifies every region before any state
 //! is constructed — magic, format, header-vs-manifest `train_steps`
 //! agreement, the manifest CRC, exact payload length, contiguous
-//! section tiling, per-section CRCs, and shape/length arithmetic — so
-//! any single corrupted or truncated byte surfaces as a typed
-//! [`SnapshotError`] (pinned exhaustively by
+//! section tiling (tensors then replay arrays), per-section CRCs, and
+//! shape/length arithmetic — so any single corrupted or truncated
+//! byte, in the replay section as much as anywhere else, surfaces as
+//! a typed [`SnapshotError`] (pinned exhaustively by
 //! `rust/tests/faults_chaos.rs`).
 //!
-//! One subtlety: the RNG state is a pair of arbitrary `u64`s, and the
-//! manifest JSON numbers are `f64` (53-bit mantissa). The state is
-//! therefore encoded as *decimal strings* in the manifest and parsed
-//! back with `u64::from_str` — a lossless hop where `Json::Num` would
-//! silently round.
+//! One subtlety: the RNG states are pairs of arbitrary `u64`s, and
+//! the manifest JSON numbers are `f64` (53-bit mantissa). The states
+//! are therefore encoded as *decimal strings* in the manifest and
+//! parsed back with `u64::from_str` — a lossless hop where
+//! `Json::Num` would silently round. The replay scalars `alpha` and
+//! `max_priority` get the same treatment via their `f32::to_bits`
+//! patterns (`alpha_bits` / `max_priority_bits`), dodging any decimal
+//! formatting of the float values themselves.
 
 use std::collections::BTreeMap;
 use std::io::Write as _;
 use std::path::Path;
 use std::str::FromStr;
 
+use crate::replay::{PrioritizedState, ReplayBufferState};
 use crate::rng::Pcg32;
 use crate::runtime::json::{self, Json};
 use crate::runtime::ParamSet;
@@ -89,8 +101,72 @@ pub struct ResumePoint {
     pub replay_pushed: usize,
 }
 
+/// Which replay variant a [`ReplaySection`] snapshots.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ReplayCkpt {
+    /// Plain ring buffer ([`crate::replay::ReplayBuffer`]).
+    Uniform(ReplayBufferState),
+    /// Proportional PER ([`crate::replay::PrioritizedReplay`]): ring
+    /// plus `SumTree` leaf priorities and the priority ceiling.
+    Prioritized(PrioritizedState),
+}
+
+/// The durable-replay half of a checkpoint: the buffer snapshot plus
+/// the replay-sampler RNG, so a resumed learner draws the exact batch
+/// sequence the dead one would have. Optional — harnesses that refill
+/// replay from live actors (or keep none) simply omit it.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ReplaySection {
+    pub replay: ReplayCkpt,
+    /// Replay-sampler RNG `(state, inc)` via [`Pcg32::state_parts`].
+    pub sampler_rng: (u64, u64),
+}
+
+impl ReplaySection {
+    /// Rebuild the replay sampler at its checkpointed position.
+    pub fn sampler(&self) -> Pcg32 {
+        Pcg32::from_state(self.sampler_rng.0, self.sampler_rng.1)
+    }
+
+    /// Number of live transitions in the snapshot.
+    pub fn len(&self) -> usize {
+        match &self.replay {
+            ReplayCkpt::Uniform(b) => b.len,
+            ReplayCkpt::Prioritized(p) => p.buf.len,
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    fn buf(&self) -> &ReplayBufferState {
+        match &self.replay {
+            ReplayCkpt::Uniform(b) => b,
+            ReplayCkpt::Prioritized(p) => &p.buf,
+        }
+    }
+
+    /// Payload chunks in wire order (name, little-endian f32 bytes).
+    fn payload_chunks(&self) -> Vec<(&'static str, Vec<u8>)> {
+        let b = self.buf();
+        let mut chunks = vec![
+            ("replay.obs", f32s_to_le(&b.obs)),
+            ("replay.actions", f32s_to_le(&b.actions)),
+            ("replay.rewards", f32s_to_le(&b.rewards)),
+            ("replay.next_obs", f32s_to_le(&b.next_obs)),
+            ("replay.dones", f32s_to_le(&b.dones)),
+        ];
+        if let ReplayCkpt::Prioritized(p) = &self.replay {
+            chunks.push(("replay.priorities", f32s_to_le(&p.priorities)));
+        }
+        chunks
+    }
+}
+
 /// A full learner checkpoint: the resume point plus the fp32 master
-/// parameters and the learner RNG state.
+/// parameters, the learner RNG state, and (optionally) the durable
+/// replay snapshot.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Checkpoint {
     pub train_steps: u64,
@@ -101,6 +177,9 @@ pub struct Checkpoint {
     /// Learner RNG `(state, inc)` via [`Pcg32::state_parts`].
     pub rng: (u64, u64),
     pub params: ParamSet,
+    /// Durable replay: `Some` when the harness checkpoints its buffer
+    /// so resume does not refill from live actors.
+    pub replay: Option<ReplaySection>,
 }
 
 /// One checksummed payload section (byte range in payload coordinates).
@@ -140,7 +219,48 @@ impl Checkpoint {
         Pcg32::from_state(self.rng.0, self.rng.1)
     }
 
-    fn manifest_json(&self, sections: &[Section], payload_len: usize) -> Vec<u8> {
+    fn replay_manifest(r: &ReplaySection, secs: &[(&'static str, Section)]) -> Json {
+        let b = r.buf();
+        let mut o = BTreeMap::new();
+        let kind = match &r.replay {
+            ReplayCkpt::Uniform(_) => "uniform",
+            ReplayCkpt::Prioritized(_) => "prioritized",
+        };
+        o.insert("kind".into(), Json::Str(kind.into()));
+        o.insert("capacity".into(), Json::Num(b.capacity as f64));
+        o.insert("obs_dim".into(), Json::Num(b.obs_dim as f64));
+        o.insert("act_dim".into(), Json::Num(b.act_dim as f64));
+        o.insert("len".into(), Json::Num(b.len as f64));
+        o.insert("head".into(), Json::Num(b.head as f64));
+        if let ReplayCkpt::Prioritized(p) = &r.replay {
+            // f32 scalars ride as their bit patterns (u32 is exact in
+            // f64) — no decimal formatting of the float values.
+            o.insert("alpha_bits".into(), Json::Num(p.alpha.to_bits() as f64));
+            o.insert("max_priority_bits".into(), Json::Num(p.max_priority.to_bits() as f64));
+        }
+        o.insert("sampler_state".into(), Json::Str(r.sampler_rng.0.to_string()));
+        o.insert("sampler_inc".into(), Json::Str(r.sampler_rng.1.to_string()));
+        let secs: Vec<Json> = secs
+            .iter()
+            .map(|(name, s)| {
+                let mut so = BTreeMap::new();
+                so.insert("name".into(), Json::Str((*name).into()));
+                so.insert("off".into(), Json::Num(s.off as f64));
+                so.insert("len".into(), Json::Num(s.len as f64));
+                so.insert("crc".into(), Json::Num(s.crc as f64));
+                Json::Obj(so)
+            })
+            .collect();
+        o.insert("sections".into(), Json::Arr(secs));
+        Json::Obj(o)
+    }
+
+    fn manifest_json(
+        &self,
+        sections: &[Section],
+        replay_secs: &[(&'static str, Section)],
+        payload_len: usize,
+    ) -> Vec<u8> {
         let mut m = BTreeMap::new();
         m.insert("format".into(), Json::Num(FORMAT as f64));
         m.insert("train_steps".into(), Json::Num(self.train_steps as f64));
@@ -172,6 +292,9 @@ impl Checkpoint {
             })
             .collect();
         m.insert("tensors".into(), Json::Arr(tensors));
+        if let Some(r) = &self.replay {
+            m.insert("replay".into(), Self::replay_manifest(r, replay_secs));
+        }
         json::to_string(&Json::Obj(m)).into_bytes()
     }
 
@@ -185,7 +308,16 @@ impl Checkpoint {
             sections.push(Section { off, len: bytes.len(), crc: crc32(&bytes) });
             payload.extend_from_slice(&bytes);
         }
-        let manifest = self.manifest_json(&sections, payload.len());
+        // Replay arrays continue the contiguous tiling after the tensors.
+        let mut replay_secs = Vec::new();
+        if let Some(r) = &self.replay {
+            for (name, bytes) in r.payload_chunks() {
+                let off = payload.len();
+                replay_secs.push((name, Section { off, len: bytes.len(), crc: crc32(&bytes) }));
+                payload.extend_from_slice(&bytes);
+            }
+        }
+        let manifest = self.manifest_json(&sections, &replay_secs, payload.len());
         let mut out = Vec::with_capacity(HEADER_LEN + manifest.len() + payload.len());
         out.extend_from_slice(&MAGIC);
         out.extend_from_slice(&FORMAT.to_le_bytes());
@@ -332,6 +464,12 @@ impl Checkpoint {
             names.push(name.to_string());
             tensors.push(t);
         }
+        // Optional durable-replay section: its arrays continue the
+        // contiguous tiling right after the tensors.
+        let replay = match m.opt("replay") {
+            None => None,
+            Some(rv) => Some(Self::decode_replay(rv, payload, payload_len, &mut cursor)?),
+        };
         if cursor != payload_len {
             return Err(SnapshotError::Manifest(format!(
                 "sections tile {cursor} bytes of a {payload_len}-byte payload"
@@ -345,7 +483,137 @@ impl Checkpoint {
             replay_pushed,
             rng,
             params: ParamSet { names, tensors },
+            replay,
         })
+    }
+
+    /// Decode and verify the manifest's "replay" object plus its payload
+    /// sections, advancing the tiling cursor. Same discipline as the
+    /// tensor sections: declared order, contiguous offsets, exact
+    /// lengths, per-section CRCs, then structural validation — every
+    /// failure is a typed [`SnapshotError`].
+    fn decode_replay(
+        rv: &Json,
+        payload: &[u8],
+        payload_len: usize,
+        cursor: &mut usize,
+    ) -> Result<ReplaySection, SnapshotError> {
+        let man = |e: crate::Error| SnapshotError::Manifest(e.to_string());
+        let kind = rv.get("kind").and_then(Json::as_str).map_err(man)?;
+        let prioritized = match kind {
+            "uniform" => false,
+            "prioritized" => true,
+            other => {
+                return Err(SnapshotError::Manifest(format!("replay kind '{other}' unknown")))
+            }
+        };
+        let capacity = rv.get("capacity").and_then(Json::as_usize).map_err(man)?;
+        let obs_dim = rv.get("obs_dim").and_then(Json::as_usize).map_err(man)?;
+        let act_dim = rv.get("act_dim").and_then(Json::as_usize).map_err(man)?;
+        let len = rv.get("len").and_then(Json::as_usize).map_err(man)?;
+        let head = rv.get("head").and_then(Json::as_usize).map_err(man)?;
+        let parse_u64 = |key: &str| -> Result<u64, SnapshotError> {
+            let s = rv.get(key).and_then(Json::as_str).map_err(man)?;
+            u64::from_str(s)
+                .map_err(|_| SnapshotError::Manifest(format!("{key}: '{s}' is not a u64")))
+        };
+        let sampler_rng = (parse_u64("sampler_state")?, parse_u64("sampler_inc")?);
+        let f32_bits = |key: &str| -> Result<f32, SnapshotError> {
+            let v = rv.get(key).and_then(Json::as_f64).map_err(man)?;
+            if v < 0.0 || v > u32::MAX as f64 || v.fract() != 0.0 {
+                return Err(SnapshotError::Manifest(format!("{key}: {v} is not a u32 bit pattern")));
+            }
+            Ok(f32::from_bits(v as u32))
+        };
+
+        let mut expect: Vec<(&str, Option<usize>)> = vec![
+            ("replay.obs", len.checked_mul(obs_dim)),
+            ("replay.actions", len.checked_mul(act_dim)),
+            ("replay.rewards", Some(len)),
+            ("replay.next_obs", len.checked_mul(obs_dim)),
+            ("replay.dones", Some(len)),
+        ];
+        if prioritized {
+            expect.push(("replay.priorities", Some(len)));
+        }
+        let secs = rv.get("sections").and_then(Json::as_arr).map_err(man)?;
+        if secs.len() != expect.len() {
+            return Err(SnapshotError::Manifest(format!(
+                "replay declares {} sections, kind '{kind}' needs {}",
+                secs.len(),
+                expect.len()
+            )));
+        }
+        let mut arrays: Vec<Vec<f32>> = Vec::with_capacity(expect.len());
+        for (sv, (want_name, want_elems)) in secs.iter().zip(&expect) {
+            let name = sv.get("name").and_then(Json::as_str).map_err(man)?;
+            if name != *want_name {
+                return Err(SnapshotError::Manifest(format!(
+                    "replay section '{name}' out of order (expected '{want_name}')"
+                )));
+            }
+            let want_elems = want_elems.ok_or_else(|| {
+                SnapshotError::Manifest(format!("replay section '{name}': size overflows"))
+            })?;
+            let off = sv.get("off").and_then(Json::as_usize).map_err(man)?;
+            let sec_len = sv.get("len").and_then(Json::as_usize).map_err(man)?;
+            let crc = sv.get("crc").and_then(Json::as_f64).map_err(man)? as u32;
+            if off != *cursor {
+                return Err(SnapshotError::Manifest(format!(
+                    "replay section '{name}': offset {off} breaks contiguous tiling (expected {cursor})"
+                )));
+            }
+            let want_len = want_elems.checked_mul(4).ok_or_else(|| {
+                SnapshotError::Manifest(format!("replay section '{name}': size overflows"))
+            })?;
+            if sec_len != want_len {
+                return Err(SnapshotError::Manifest(format!(
+                    "replay section '{name}': {sec_len} bytes, shape needs {want_len}"
+                )));
+            }
+            let end = off.checked_add(sec_len).filter(|&e| e <= payload_len).ok_or_else(|| {
+                SnapshotError::Manifest(format!(
+                    "replay section '{name}': [{off}, +{sec_len}) exceeds payload {payload_len}"
+                ))
+            })?;
+            let got = crc32(&payload[off..end]);
+            if got != crc {
+                return Err(SnapshotError::ChecksumMismatch {
+                    section: format!("replay ({name})"),
+                    want: crc,
+                    got,
+                });
+            }
+            *cursor = end;
+            arrays.push(le_to_f32s(&payload[off..end]));
+        }
+        let mut it = arrays.into_iter();
+        let buf = ReplayBufferState {
+            capacity,
+            obs_dim,
+            act_dim,
+            len,
+            head,
+            obs: it.next().expect("obs chunk"),
+            actions: it.next().expect("actions chunk"),
+            rewards: it.next().expect("rewards chunk"),
+            next_obs: it.next().expect("next_obs chunk"),
+            dones: it.next().expect("dones chunk"),
+        };
+        let replay = if prioritized {
+            let p = PrioritizedState {
+                buf,
+                priorities: it.next().expect("priorities chunk"),
+                max_priority: f32_bits("max_priority_bits")?,
+                alpha: f32_bits("alpha_bits")?,
+            };
+            p.validate().map_err(SnapshotError::Manifest)?;
+            ReplayCkpt::Prioritized(p)
+        } else {
+            buf.validate().map_err(SnapshotError::Manifest)?;
+            ReplayCkpt::Uniform(buf)
+        };
+        Ok(ReplaySection { replay, sampler_rng })
     }
 
     /// Write the blob to `path` atomically (temp sibling + rename): a
@@ -405,7 +673,47 @@ mod tests {
             replay_pushed: 912,
             rng: rng.state_parts(),
             params,
+            replay: None,
         }
+    }
+
+    fn sample_with_replay(seed: u64, prioritized: bool) -> Checkpoint {
+        use crate::replay::{PrioritizedReplay, ReplayBuffer, Transition};
+        let mut ckpt = sample(seed);
+        let mut fill = |push: &mut dyn FnMut(Transition)| {
+            for k in 0..23usize {
+                let o = [k as f32, 0.5, -0.25, 2.0];
+                let o2 = [k as f32 + 1.0, 0.5, -0.25, 2.0];
+                let a = [(k % 2) as f32];
+                push(Transition {
+                    obs: &o,
+                    action: &a,
+                    reward: 0.1 * k as f32,
+                    next_obs: &o2,
+                    done: k % 7 == 0,
+                });
+            }
+        };
+        let mut sampler = Pcg32::new(seed, 555);
+        for _ in 0..17 {
+            sampler.next_u32();
+        }
+        let replay = if prioritized {
+            let mut per = PrioritizedReplay::new(16, 4, 1, 0.6);
+            fill(&mut |t| per.push(t));
+            let idx: Vec<usize> = (0..16).collect();
+            let td: Vec<f32> = (0..16).map(|k| 0.02 * (k as f32 + 1.0)).collect();
+            per.update_priorities(&idx, &td);
+            ReplayCkpt::Prioritized(per.state())
+        } else {
+            let mut buf = ReplayBuffer::new(16, 4, 1);
+            fill(&mut |t| {
+                buf.push(t);
+            });
+            ReplayCkpt::Uniform(buf.state())
+        };
+        ckpt.replay = Some(ReplaySection { replay, sampler_rng: sampler.state_parts() });
+        ckpt
     }
 
     #[test]
@@ -432,6 +740,63 @@ mod tests {
         for _ in 0..64 {
             assert_eq!(a.next_u32(), b.next_u32());
         }
+    }
+
+    #[test]
+    fn replay_section_roundtrips_bit_exactly() {
+        for prioritized in [false, true] {
+            let ckpt = sample_with_replay(13, prioritized);
+            let bytes = ckpt.to_bytes();
+            let back = Checkpoint::from_bytes(&bytes).unwrap();
+            assert_eq!(back, ckpt, "prioritized={prioritized}");
+            assert_eq!(back.to_bytes(), bytes, "re-encode is stable");
+            // The restored sampler continues the exact draw sequence.
+            let r = back.replay.as_ref().unwrap();
+            let mut a = ckpt.replay.as_ref().unwrap().sampler();
+            let mut b = r.sampler();
+            for _ in 0..32 {
+                assert_eq!(a.next_u32(), b.next_u32());
+            }
+            assert_eq!(r.len(), 16, "ring wrapped to capacity");
+        }
+    }
+
+    #[test]
+    fn replay_absent_stays_none() {
+        let back = Checkpoint::from_bytes(&sample(21).to_bytes()).unwrap();
+        assert!(back.replay.is_none());
+    }
+
+    #[test]
+    fn replay_structural_lies_are_typed_manifest_errors() {
+        // A manifest that passes its CRC but misdeclares the replay
+        // geometry must still be rejected — the decoder re-derives every
+        // length from the declared dims and validates the result.
+        let ckpt = sample_with_replay(29, true);
+        let bytes = ckpt.to_bytes();
+        let patch = |needle: &str, replacement: &str| -> Vec<u8> {
+            let mlen =
+                u32::from_le_bytes(bytes[16..20].try_into().unwrap()) as usize;
+            let text =
+                std::str::from_utf8(&bytes[HEADER_LEN..HEADER_LEN + mlen]).unwrap();
+            assert!(text.contains(needle), "fixture drifted: {needle}");
+            let patched = text.replacen(needle, replacement, 1);
+            let mut out = bytes[..16].to_vec();
+            out.extend_from_slice(&(patched.len() as u32).to_le_bytes());
+            out.extend_from_slice(&crc32(patched.as_bytes()).to_le_bytes());
+            out.extend_from_slice(patched.as_bytes());
+            out.extend_from_slice(&bytes[HEADER_LEN + mlen..]);
+            out
+        };
+        // Wrong kind string.
+        let b = patch("\"kind\":\"prioritized\"", "\"kind\":\"weighted\"");
+        assert!(matches!(Checkpoint::from_bytes(&b), Err(SnapshotError::Manifest(_))));
+        // Head pushed out of range (capacity is 16).
+        let b = patch("\"head\":7", "\"head\":99");
+        assert!(matches!(Checkpoint::from_bytes(&b), Err(SnapshotError::Manifest(_))));
+        // Bit-pattern field that is not a u32.
+        let b = patch("\"alpha_bits\":", "\"alpha_bits\":4294967296,\"alpha_old\":");
+        assert!(matches!(Checkpoint::from_bytes(&b), Err(SnapshotError::Manifest(_))));
     }
 
     #[test]

@@ -97,6 +97,13 @@ pub struct ActorQLog {
     /// Summed detection-to-replacement latency across those respawns
     /// (backoff included), in milliseconds.
     pub restart_recovery_ms: f64,
+    /// Learner restarts the watchdog performed (crash, panic, or
+    /// missed-heartbeat hang; see [`crate::actorq::watchdog`]). Zero
+    /// for unsupervised runs.
+    pub learner_restarts: usize,
+    /// Summed detection-to-respawn latency across those learner
+    /// restarts (backoff included), in milliseconds.
+    pub learner_recovery_ms: f64,
     /// Hub publishes that failed on the wire and degraded to the
     /// in-process transport.
     pub hub_publish_failures: u64,
@@ -192,12 +199,16 @@ pub struct LearnerHarness {
 }
 
 /// What the driver must hand the harness to write one checkpoint: the
-/// fp32 master parameters and the learner RNG position (via
-/// [`crate::rng::Pcg32::state_parts`]). The harness supplies the
-/// counters itself.
+/// fp32 master parameters, the learner RNG position (via
+/// [`crate::rng::Pcg32::state_parts`]), and — when the driver keeps a
+/// replay buffer — its durable snapshot, so resume re-seeds replay
+/// from the checkpoint instead of refilling from live actors. The
+/// harness supplies the counters itself.
 pub struct CheckpointState {
     pub params: ParamSet,
     pub rng: (u64, u64),
+    /// Durable replay snapshot (`None` skips the QCKP replay section).
+    pub replay: Option<crate::actorq::checkpoint::ReplaySection>,
 }
 
 impl LearnerHarness {
@@ -365,6 +376,7 @@ impl LearnerHarness {
                             replay_pushed,
                             rng: s.rng,
                             params: s.params,
+                            replay: s.replay,
                         }
                         .write_file(&policy.path)?;
                     }

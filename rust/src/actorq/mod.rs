@@ -40,10 +40,17 @@
 //!   after capped exponential backoff, and only exhausting the budget
 //!   aborts the run.
 //! * [`checkpoint`] — crash recovery: the learner periodically writes
-//!   a `QCKP` blob (fp32 master params + pacer/RNG/replay state,
-//!   CRC-verified end to end, atomic rename writes) that
-//!   [`LearnerHarness::spawn`] can resume from to reach the
-//!   bit-identical final engine a fault-free run produces.
+//!   a `QCKP` blob (fp32 master params + pacer/RNG/replay state —
+//!   including, optionally, the full replay buffer with its `SumTree`
+//!   priorities and sampler RNG — CRC-verified end to end, atomic
+//!   rename writes) that [`LearnerHarness::spawn`] can resume from to
+//!   reach the bit-identical final engine a fault-free run produces,
+//!   without refilling replay from live actors.
+//! * [`watchdog`] — the learner-side supervisor: runs the learner
+//!   under a heartbeat deadline, catches crash/panic/hang, and
+//!   restarts from the latest checkpoint under the same capped-backoff
+//!   restart-budget discipline as the actor pool
+//!   ([`ActorQLog::learner_restarts`] records the toll).
 //! * [`learner`] — learner-side pacing ([`learner::Pacer`] keeps the
 //!   train-step : env-step ratio equal to the synchronous drivers) and
 //!   the [`learner::ActorQLog`] telemetry, including the per-component
@@ -63,12 +70,14 @@ pub mod broadcast;
 pub mod checkpoint;
 pub mod learner;
 pub mod pool;
+pub mod watchdog;
 
 pub use actor::{ActorEngine, ActorStats, Exploration};
 pub use broadcast::{ParamBroadcast, Snapshot};
-pub use checkpoint::{Checkpoint, CheckpointPolicy, ResumePoint};
+pub use checkpoint::{Checkpoint, CheckpointPolicy, ReplayCkpt, ReplaySection, ResumePoint};
 pub use learner::{ActorQLog, CheckpointState, HarnessConfig, LearnerHarness, Pacer, ReturnLog};
 pub use pool::{ActorPool, PoolConfig, RestartEvent};
+pub use watchdog::{Heartbeat, LearnerRestart, RestartCause, Supervised, WatchdogConfig};
 
 use std::time::Duration;
 

@@ -1,0 +1,417 @@
+//! Learner watchdog: the supervisor for the *other* half of ActorQ.
+//! PR 8's [`crate::actorq::ActorPool`] made actor crashes survivable;
+//! this module closes the loop for the learner itself. The watchdog
+//! runs a learner attempt under a heartbeat deadline, detects three
+//! failure shapes — a returned error, a panic, and a *hang* (heartbeat
+//! goes stale) — and restarts the attempt from the latest on-disk
+//! [`Checkpoint`] under the same capped-backoff restart budget the
+//! actor supervisor uses.
+//!
+//! Division of labor per attempt:
+//!
+//! * the **attempt closure runs on the caller's thread** (so it may
+//!   freely capture non-`Send` state such as `RefCell` replay buffers
+//!   — exactly what the exp harnesses do), wrapped in `catch_unwind`
+//!   so a panic is a restartable event, not a process abort;
+//! * a small **monitor thread** watches the heartbeat. Only `Arc`'d
+//!   atomics cross the thread boundary. When the beat goes stale past
+//!   the deadline the monitor raises the attempt's cancel flag and
+//!   exits.
+//!
+//! Hang recovery is therefore *cooperative*: a train closure that
+//! checks [`Heartbeat::cancelled`] at its blocking points unwinds with
+//! an error and is restarted from checkpoint. A thread wedged in code
+//! that never polls the flag needs process-level supervision — the
+//! multi-process watchdog is recorded in ROADMAP as remaining work.
+//!
+//! Determinism: restarts resume from the latest checkpoint (params,
+//! pacer position, RNG streams, and — with a replay section — the full
+//! replay buffer), so a supervised run converges to the bit-identical
+//! final engine of an unsupervised one; `rust/tests/faults_chaos.rs`
+//! pins this end to end.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::actorq::checkpoint::Checkpoint;
+use crate::error::{Error, Result};
+use crate::snapshot::SnapshotError;
+
+/// Backoff ceiling, shared with the actor supervisor's discipline.
+const BACKOFF_CAP: Duration = Duration::from_secs(5);
+
+/// Watchdog parameters.
+#[derive(Debug, Clone)]
+pub struct WatchdogConfig {
+    /// Where the supervised learner writes its checkpoints; restarts
+    /// resume from this file (a missing file restarts from scratch —
+    /// the crash predated the first checkpoint).
+    pub ckpt_path: PathBuf,
+    /// Heartbeat staleness deadline: an attempt whose last beat is
+    /// older than this is declared hung and cancelled.
+    pub deadline: Duration,
+    /// Restart budget: one more failure than this errors out.
+    pub max_restarts: usize,
+    /// Base backoff before the first restart; doubles per restart,
+    /// capped at 5s.
+    pub restart_backoff: Duration,
+}
+
+/// The attempt-side heartbeat handle. The attempt calls
+/// [`Heartbeat::beat`] at every liveness point (each train step, each
+/// replay push) and polls [`Heartbeat::cancelled`] at blocking points
+/// so a hang verdict can unwind it.
+pub struct Heartbeat {
+    /// Milliseconds since the watchdog's origin instant, last beat.
+    last_beat: Arc<AtomicU64>,
+    cancel: Arc<AtomicBool>,
+    origin: Instant,
+}
+
+impl Heartbeat {
+    fn new(origin: Instant) -> Heartbeat {
+        Heartbeat {
+            last_beat: Arc::new(AtomicU64::new(0)),
+            cancel: Arc::new(AtomicBool::new(false)),
+            origin,
+        }
+    }
+
+    fn now_ms(&self) -> u64 {
+        self.origin.elapsed().as_millis() as u64
+    }
+
+    /// Record liveness. Cheap (one atomic store) — call it freely from
+    /// the hot loop.
+    pub fn beat(&self) {
+        self.last_beat.store(self.now_ms(), Ordering::Relaxed);
+    }
+
+    /// True once the monitor has declared this attempt hung; the
+    /// attempt should unwind with an error as soon as it observes it.
+    pub fn cancelled(&self) -> bool {
+        self.cancel.load(Ordering::Relaxed)
+    }
+}
+
+/// Why the watchdog restarted an attempt.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum RestartCause {
+    /// The attempt returned `Err` on its own.
+    Error(String),
+    /// The attempt panicked (caught, not propagated).
+    Panic(String),
+    /// The heartbeat went stale past the deadline and the monitor
+    /// cancelled the attempt.
+    Hang,
+}
+
+/// One learner restart, mirroring the actor pool's
+/// [`crate::actorq::RestartEvent`] accounting.
+#[derive(Debug, Clone)]
+pub struct LearnerRestart {
+    /// How many attempts preceded this one (1-based generation).
+    pub generation: usize,
+    pub cause: RestartCause,
+    /// Backoff the watchdog waited before this restart.
+    pub backoff: Duration,
+    /// Detection-to-respawn latency (includes the backoff).
+    pub recovery: Duration,
+}
+
+/// A successful supervised run: the final attempt's value plus the
+/// restart history.
+#[derive(Debug)]
+pub struct Supervised<T> {
+    pub value: T,
+    pub restarts: Vec<LearnerRestart>,
+}
+
+impl<T> Supervised<T> {
+    pub fn restart_count(&self) -> usize {
+        self.restarts.len()
+    }
+
+    /// Summed detection-to-respawn latency in milliseconds — the shape
+    /// [`crate::actorq::ActorQLog::learner_recovery_ms`] records.
+    pub fn recovery_ms(&self) -> f64 {
+        self.restarts.iter().map(|r| r.recovery.as_secs_f64() * 1e3).sum()
+    }
+}
+
+fn backoff_for(cfg: &WatchdogConfig, generation: usize) -> Duration {
+    cfg.restart_backoff
+        .saturating_mul(1u32 << (generation - 1).min(16) as u32)
+        .min(BACKOFF_CAP)
+}
+
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".into()
+    }
+}
+
+/// Run `attempt` under the watchdog until it succeeds or the restart
+/// budget is spent. Attempt 0 starts fresh (`None`); every restart
+/// reads the latest checkpoint from `cfg.ckpt_path` and hands it to
+/// the closure (a missing file resumes from scratch; a *corrupt* file
+/// propagates its typed [`SnapshotError`] — restarting from damaged
+/// state would break the bit-exactness contract).
+pub fn supervise<T>(
+    cfg: &WatchdogConfig,
+    mut attempt: impl FnMut(Option<Checkpoint>, &Heartbeat) -> Result<T>,
+) -> Result<Supervised<T>> {
+    let mut restarts: Vec<LearnerRestart> = Vec::new();
+    loop {
+        let generation = restarts.len();
+        let resume = if generation == 0 {
+            None
+        } else {
+            match Checkpoint::read_file(&cfg.ckpt_path) {
+                Ok(c) => Some(c),
+                Err(SnapshotError::Io(_)) => None, // no checkpoint yet
+                Err(e) => return Err(e.into()),
+            }
+        };
+
+        // Per-attempt clock base, shared by the heartbeat and the
+        // monitor so staleness arithmetic never mixes epochs.
+        let origin = Instant::now();
+        let hb = Heartbeat::new(origin);
+        hb.beat(); // the attempt is live the moment it starts
+        let hung = Arc::new(AtomicBool::new(false));
+        let stop = Arc::new(AtomicBool::new(false));
+        let monitor = {
+            let last_beat = Arc::clone(&hb.last_beat);
+            let cancel = Arc::clone(&hb.cancel);
+            let hung = Arc::clone(&hung);
+            let stop = Arc::clone(&stop);
+            let deadline_ms = cfg.deadline.as_millis().max(1) as u64;
+            // Poll in quarter-deadline slices so detection latency stays
+            // within ~1.25x the deadline without busy-waiting.
+            let slice = (cfg.deadline / 4).clamp(Duration::from_millis(2), Duration::from_millis(50));
+            std::thread::Builder::new()
+                .name("quarl-watchdog".into())
+                .spawn(move || {
+                    loop {
+                        std::thread::sleep(slice);
+                        if stop.load(Ordering::Relaxed) {
+                            return;
+                        }
+                        let now = origin.elapsed().as_millis() as u64;
+                        let last = last_beat.load(Ordering::Relaxed);
+                        if now.saturating_sub(last) > deadline_ms {
+                            hung.store(true, Ordering::SeqCst);
+                            cancel.store(true, Ordering::SeqCst);
+                            return;
+                        }
+                    }
+                })
+                .expect("spawn watchdog monitor")
+        };
+
+        let outcome = catch_unwind(AssertUnwindSafe(|| attempt(resume, &hb)));
+        stop.store(true, Ordering::Relaxed);
+        monitor.join().expect("watchdog monitor never panics");
+
+        let cause = match outcome {
+            Ok(Ok(value)) => return Ok(Supervised { value, restarts }),
+            Ok(Err(e)) if hung.load(Ordering::SeqCst) => {
+                let _ = e; // the error is the cancellation unwinding
+                RestartCause::Hang
+            }
+            Ok(Err(e)) => RestartCause::Error(e.to_string()),
+            Err(payload) => RestartCause::Panic(panic_message(payload.as_ref())),
+        };
+
+        if restarts.len() >= cfg.max_restarts {
+            return Err(Error::Experiment(format!(
+                "learner failed ({cause:?}); restart budget ({}) exhausted",
+                cfg.max_restarts
+            )));
+        }
+        let detected = Instant::now();
+        let generation = generation + 1;
+        let backoff = backoff_for(cfg, generation);
+        eprintln!(
+            "[watchdog] learner attempt {} failed ({cause:?}); restarting from {} after {backoff:?}",
+            generation - 1,
+            cfg.ckpt_path.display(),
+        );
+        std::thread::sleep(backoff);
+        restarts.push(LearnerRestart { generation, cause, backoff, recovery: detected.elapsed() });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg32;
+    use crate::runtime::manifest::TensorSpec;
+    use crate::runtime::ParamSet;
+
+    fn test_cfg(dir: &str, deadline_ms: u64) -> WatchdogConfig {
+        let path = std::env::temp_dir().join(dir).join("learner.qckp");
+        std::fs::remove_file(&path).ok();
+        WatchdogConfig {
+            ckpt_path: path,
+            deadline: Duration::from_millis(deadline_ms),
+            max_restarts: 3,
+            restart_backoff: Duration::from_millis(5),
+        }
+    }
+
+    fn ckpt_at(trains: u64) -> Checkpoint {
+        let specs = vec![TensorSpec { name: "w".into(), shape: vec![2, 2] }];
+        let mut rng = Pcg32::new(7, 7);
+        Checkpoint {
+            train_steps: trains,
+            env_steps: trains as usize * 2,
+            broadcasts: 1,
+            version: 1,
+            replay_pushed: 0,
+            rng: rng.state_parts(),
+            params: ParamSet::init(&specs, &mut rng),
+            replay: None,
+        }
+    }
+
+    #[test]
+    fn clean_attempt_passes_through() {
+        let cfg = test_cfg("quarl_watchdog_clean", 200);
+        let sup = supervise(&cfg, |resume, hb| {
+            assert!(resume.is_none());
+            hb.beat();
+            Ok(41)
+        })
+        .unwrap();
+        assert_eq!(sup.value, 41);
+        assert_eq!(sup.restart_count(), 0);
+        assert_eq!(sup.recovery_ms(), 0.0);
+    }
+
+    #[test]
+    fn crash_restarts_from_latest_checkpoint() {
+        let cfg = test_cfg("quarl_watchdog_crash", 500);
+        let mut calls = 0usize;
+        let ckpt_path = cfg.ckpt_path.clone();
+        let sup = supervise(&cfg, move |resume, hb| {
+            hb.beat();
+            calls += 1;
+            if calls == 1 {
+                assert!(resume.is_none());
+                ckpt_at(30).write_file(&ckpt_path).unwrap();
+                return Err(Error::Experiment("injected learner crash".into()));
+            }
+            let resume = resume.expect("restart reads the checkpoint");
+            assert_eq!(resume.train_steps, 30);
+            Ok(calls)
+        })
+        .unwrap();
+        assert_eq!(sup.value, 2);
+        assert_eq!(sup.restart_count(), 1);
+        assert!(matches!(sup.restarts[0].cause, RestartCause::Error(_)));
+        assert!(sup.recovery_ms() >= 5.0, "recovery includes the backoff");
+    }
+
+    #[test]
+    fn crash_before_first_checkpoint_restarts_from_scratch() {
+        let cfg = test_cfg("quarl_watchdog_scratch", 500);
+        let mut calls = 0usize;
+        let sup = supervise(&cfg, move |resume, hb| {
+            hb.beat();
+            calls += 1;
+            assert!(resume.is_none(), "no checkpoint file: fresh start both times");
+            if calls == 1 {
+                return Err(Error::Experiment("early crash".into()));
+            }
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(sup.restart_count(), 1);
+    }
+
+    #[test]
+    fn panic_is_caught_and_restarted() {
+        let cfg = test_cfg("quarl_watchdog_panic", 500);
+        let mut calls = 0usize;
+        let sup = supervise(&cfg, move |_resume, hb| {
+            hb.beat();
+            calls += 1;
+            if calls == 1 {
+                panic!("injected learner panic");
+            }
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(sup.restart_count(), 1);
+        match &sup.restarts[0].cause {
+            RestartCause::Panic(msg) => assert!(msg.contains("injected")),
+            other => panic!("expected Panic, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn stale_heartbeat_is_a_hang_and_cancel_unwinds_it() {
+        let cfg = test_cfg("quarl_watchdog_hang", 40);
+        let mut calls = 0usize;
+        let sup = supervise(&cfg, move |_resume, hb| {
+            hb.beat();
+            calls += 1;
+            if calls == 1 {
+                // Cooperative hang: stop beating, poll for cancellation.
+                let parked = Instant::now();
+                while !hb.cancelled() {
+                    assert!(parked.elapsed() < Duration::from_secs(5), "monitor never fired");
+                    std::thread::sleep(Duration::from_millis(2));
+                }
+                return Err(Error::Experiment("cancelled by watchdog".into()));
+            }
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(sup.restart_count(), 1);
+        assert_eq!(sup.restarts[0].cause, RestartCause::Hang);
+    }
+
+    #[test]
+    fn restart_budget_exhaustion_is_an_error() {
+        let cfg = test_cfg("quarl_watchdog_budget", 500);
+        let err = supervise(&cfg, |_resume, hb| -> Result<()> {
+            hb.beat();
+            Err(Error::Experiment("always failing".into()))
+        })
+        .unwrap_err();
+        assert!(err.to_string().contains("restart budget (3) exhausted"), "{err}");
+    }
+
+    #[test]
+    fn corrupt_checkpoint_propagates_typed_error() {
+        let cfg = test_cfg("quarl_watchdog_corrupt", 500);
+        std::fs::create_dir_all(cfg.ckpt_path.parent().unwrap()).unwrap();
+        let mut bytes = ckpt_at(10).to_bytes();
+        let n = bytes.len();
+        bytes[n - 1] ^= 0xFF;
+        std::fs::write(&cfg.ckpt_path, &bytes).unwrap();
+        let mut calls = 0usize;
+        let err = supervise(&cfg, move |_resume, hb| -> Result<()> {
+            hb.beat();
+            calls += 1;
+            assert_eq!(calls, 1, "no restart from a damaged checkpoint");
+            Err(Error::Experiment("crash into corrupt state".into()))
+        })
+        .unwrap_err();
+        assert!(
+            err.to_string().contains("checksum") || err.to_string().contains("mismatch"),
+            "typed snapshot error surfaces: {err}"
+        );
+        std::fs::remove_file(&cfg.ckpt_path).ok();
+    }
+}

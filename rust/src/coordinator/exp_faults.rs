@@ -2,40 +2,64 @@
 //!
 //! Runs fully **offline** (stub train closure, real actor pool on
 //! cartpole). Each precision cell runs the same seeded configuration
-//! four ways:
+//! several ways:
 //!
 //! 1. **clean** — no faults; the reference run.
 //! 2. **faulted** — a scripted [`FaultPlan`] kills an actor mid-run
 //!    (supervisor respawn), drops one hub publish, fails another on the
-//!    wire (broadcast degrade path), and fails the client's first two
-//!    connects (retry path). The run must complete without aborting and
-//!    its final engine must be **bit-identical** to the clean run's.
+//!    wire (broadcast degrade path), severs a whole window of hub
+//!    publishes (`partition(5, 7)` — a network partition that heals),
+//!    and fails the client's first two connects (retry path). The run
+//!    must complete without aborting and its final engine must be
+//!    **bit-identical** to the clean run's.
 //! 3. **crashed** — checkpointing on, the train closure aborts partway
 //!    (a simulated learner SIGKILL at a train-step boundary).
 //! 4. **resumed** — restarted from the checkpoint the crashed run left
 //!    behind; must also converge to the clean run's engine bit for bit.
+//! 5. **replay-clean** — the reference run again, with training drift
+//!    *coupled to a prioritized replay buffer* (each train step pushes a
+//!    synthetic transition and samples with IS weights folded into the
+//!    drift), so the final params depend on replay contents, `SumTree`
+//!    priorities, and the sampler RNG.
+//! 6. **watchdog** — the replay-coupled run again under
+//!    [`crate::actorq::watchdog::supervise`], with a scripted learner
+//!    *hang* mid-run. The watchdog's heartbeat deadline detects the
+//!    stall, cancels the attempt, and restarts from the latest QCKP
+//!    checkpoint — whose durable replay section must restore buffer +
+//!    priorities + sampler exactly, or the final engine diverges from
+//!    leg 5's (`wd_mismatches`).
+//! 7. **serve chaos** — the faulted run's published artifact behind a
+//!    [`PolicyServer`] with a scripted `slow_batch` stall (straggler
+//!    detection) and a graceful drain against a deliberately retained
+//!    client (`drain_rejected`); served logits are compared bit-for-bit
+//!    against direct forwards (`serve_mismatches`).
 //!
 //! Determinism argument: the pacer owes exactly
 //! `(total - warmup) / train_freq` train steps at equal env-step
 //! budget, regardless of how batches arrive, and the stub train
 //! program's parameter evolution is a pure function of (train count,
-//! learner RNG stream). Faults perturb *scheduling*, never the train
-//! count, so recovery is exact — which is precisely the property the
-//! supervision/checkpoint/retry layers must preserve and this
-//! experiment (plus `rust/tests/faults_chaos.rs`) pins.
+//! learner RNG stream) — plus, in the replay-coupled legs, of replay
+//! state that the QCKP replay section restores exactly. Faults perturb
+//! *scheduling*, never the train count, so recovery is exact — which is
+//! precisely the property the supervision/checkpoint/retry layers must
+//! preserve and this experiment (plus `rust/tests/faults_chaos.rs`)
+//! pins.
 //!
 //! `render` writes `BENCH_faults.json`; `scripts/check_bench_reports.py`
-//! asserts `logit_mismatches == 0`, `resume_mismatches == 0`, at least
-//! one absorbed restart, and retry accounting per row.
+//! asserts `logit_mismatches == 0`, `resume_mismatches == 0`,
+//! `wd_mismatches == 0`, `serve_mismatches == 0`, at least one absorbed
+//! actor restart *and* learner restart, an observed partition window, a
+//! detected straggler, and drain accounting per row.
 
 use std::cell::RefCell;
 use std::sync::Arc;
 use std::time::Duration;
 
 use crate::actorq::checkpoint::{Checkpoint, CheckpointPolicy};
+use crate::actorq::watchdog::supervise;
 use crate::actorq::{
-    ActorEngine, ActorQConfig, ActorQLog, CheckpointState, HarnessConfig, LearnerHarness,
-    ParamBroadcast, ReturnLog,
+    ActorEngine, ActorQConfig, ActorQLog, CheckpointState, HarnessConfig, Heartbeat,
+    LearnerHarness, ParamBroadcast, ReplayCkpt, ReplaySection, ReturnLog, WatchdogConfig,
 };
 use crate::coordinator::exp_actorq::{fixed_eps_exploration, mlp_param_specs};
 use crate::coordinator::experiment::{ExpCtx, Experiment};
@@ -44,9 +68,11 @@ use crate::error::{Error, Result};
 use crate::faults::{FaultKind, FaultPlan};
 use crate::inference::{Engine as _, EngineConfig};
 use crate::quant::Precision;
+use crate::replay::{PrioritizedReplay, Transition};
 use crate::rng::Pcg32;
 use crate::runtime::json::Json;
 use crate::runtime::ParamSet;
+use crate::serve::{PolicyServer, QueryError, ServeConfig};
 use crate::snapshot::{ClientConfig, SnapshotClient, SnapshotHub, SnapshotServer};
 
 pub struct Faults;
@@ -62,6 +88,10 @@ const TRAIN_FREQ: usize = 2;
 
 /// Checkpoint cadence (train steps) for the crash/resume legs.
 const CKPT_EVERY: usize = 10;
+
+/// Replay capacity for the replay-coupled legs — small so the ring
+/// wraps many times and the snapshot covers a wrapped buffer.
+const REPLAY_CAP: usize = 64;
 
 /// Probe vectors per engine comparison.
 const PROBES: usize = 6;
@@ -101,110 +131,231 @@ fn probe(engine: &ActorEngine, seed: u64) -> Result<Vec<u32>> {
 }
 
 /// One offline harness run with the stub train program. Faults,
-/// checkpointing, resume, a hub attachment, and a scripted mid-run
-/// learner crash are all optional so the four legs share this body.
-#[allow(clippy::too_many_arguments)]
-fn stub_run(
+/// checkpointing, resume, a hub attachment, a scripted mid-run learner
+/// crash, a watchdog heartbeat, and replay-coupled drift are all
+/// optional so every leg shares this body.
+struct StubRun<'a> {
     seed: u64,
     precision: Precision,
     total_steps: usize,
     faults: Option<Arc<FaultPlan>>,
     ckpt: Option<CheckpointPolicy>,
-    resume_from: Option<&Checkpoint>,
+    resume_from: Option<&'a Checkpoint>,
     crash_after: Option<usize>,
     hub: Option<Arc<SnapshotHub>>,
-) -> Result<(ActorQLog, Arc<ParamBroadcast>)> {
-    let (params, rng) = match resume_from {
-        Some(c) => (c.params.clone(), c.rng()),
-        None => {
-            let specs = mlp_param_specs(&DIMS, "q");
-            let mut init_rng = Pcg32::new(seed, 47);
-            (ParamSet::init(&specs, &mut init_rng), Pcg32::new(seed, 4242))
-        }
-    };
-    let acfg = ActorQConfig::new(2).with_precision(precision);
-    let hcfg = HarnessConfig {
-        env_id: "cartpole",
-        seed,
-        total_steps,
-        warmup: WARMUP,
-        train_freq: TRAIN_FREQ,
-        log_every: 0,
-        exploration: fixed_eps_exploration(),
-        returns: ReturnLog::TailMean,
-        acfg: &acfg,
-        faults,
-        ckpt: ckpt.clone(),
-        resume: resume_from.map(|c| c.resume_point()),
-    };
-    let harness = LearnerHarness::spawn(&params, &hcfg)?;
-    if let Some(hub) = hub {
-        harness.broadcast.attach_hub(hub)?;
-    }
-    let broadcast = harness.broadcast.clone();
-    let pstate = RefCell::new(params);
-    let rstate = RefCell::new(rng);
-    let mut calls = 0usize;
-    let train = |_step: usize, publish: bool| -> Result<Option<f32>> {
-        if crash_after.is_some_and(|limit| calls >= limit) {
-            return Err(Error::Experiment("injected learner crash".into()));
-        }
-        calls += 1;
-        let mut p = pstate.borrow_mut();
-        let mut r = rstate.borrow_mut();
-        // Deterministic "training": one RNG-driven drift per train step,
-        // a pure function of (train count, learner RNG stream).
-        for t in p.tensors.iter_mut() {
-            for v in t.data_mut() {
-                *v += 0.003 * r.normal();
-            }
-        }
-        if publish {
-            broadcast.publish(&p)?;
-        }
-        Ok(Some(0.0))
-    };
-    let mut state_fn = || CheckpointState {
-        params: pstate.borrow().clone(),
-        rng: rstate.borrow().state_parts(),
-    };
-    let state: Option<&mut dyn FnMut() -> CheckpointState> =
-        if ckpt.is_some() { Some(&mut state_fn) } else { None };
-    let log = harness.run_ckpt(|_t| {}, train, state)?;
-    Ok((log, broadcast))
+    /// Supervision hook: beat once per train call, honor scripted hangs
+    /// (`FaultPlan::hang_learner`) by parking until cancelled.
+    watchdog: Option<&'a Heartbeat>,
+    /// Couple the drift to a [`PrioritizedReplay`]: each train step
+    /// pushes a synthetic transition (a pure function of the *global*
+    /// train index) and, once the buffer has depth, folds a prioritized
+    /// sample's IS weights into the drift. Checkpoints then carry the
+    /// full replay section and resume restores it.
+    replay: bool,
 }
 
-/// One chaos cell: clean vs faulted vs crash+resume at `precision`.
+impl<'a> StubRun<'a> {
+    fn new(seed: u64, precision: Precision, total_steps: usize) -> StubRun<'a> {
+        StubRun {
+            seed,
+            precision,
+            total_steps,
+            faults: None,
+            ckpt: None,
+            resume_from: None,
+            crash_after: None,
+            hub: None,
+            watchdog: None,
+            replay: false,
+        }
+    }
+
+    fn run(self) -> Result<(ActorQLog, Arc<ParamBroadcast>)> {
+        let StubRun {
+            seed,
+            precision,
+            total_steps,
+            faults,
+            ckpt,
+            resume_from,
+            crash_after,
+            hub,
+            watchdog,
+            replay: use_replay,
+        } = self;
+        let (params, rng) = match resume_from {
+            Some(c) => (c.params.clone(), c.rng()),
+            None => {
+                let specs = mlp_param_specs(&DIMS, "q");
+                let mut init_rng = Pcg32::new(seed, 47);
+                (ParamSet::init(&specs, &mut init_rng), Pcg32::new(seed, 4242))
+            }
+        };
+        // Replay-coupled legs: restore buffer + sampler from the
+        // checkpoint's replay section, or start fresh.
+        let (per_init, sampler_init) = match resume_from.and_then(|c| c.replay.as_ref()) {
+            Some(rs) if use_replay => match &rs.replay {
+                ReplayCkpt::Prioritized(st) => (PrioritizedReplay::from_state(st), rs.sampler()),
+                ReplayCkpt::Uniform(_) => {
+                    return Err(Error::Experiment(
+                        "replay-coupled leg checkpoints PER, found a uniform section".into(),
+                    ))
+                }
+            },
+            _ => (
+                PrioritizedReplay::new(REPLAY_CAP, DIMS[0], 1, 0.6),
+                Pcg32::new(seed, 555),
+            ),
+        };
+        // Train indices are global: a resumed attempt continues the
+        // checkpointed count so replay pushes stay a pure function of
+        // the train index across restarts.
+        let base = resume_from.map(|c| c.train_steps as usize).unwrap_or(0);
+        let acfg = ActorQConfig::new(2).with_precision(precision);
+        let hcfg = HarnessConfig {
+            env_id: "cartpole",
+            seed,
+            total_steps,
+            warmup: WARMUP,
+            train_freq: TRAIN_FREQ,
+            log_every: 0,
+            exploration: fixed_eps_exploration(),
+            returns: ReturnLog::TailMean,
+            acfg: &acfg,
+            faults: faults.clone(),
+            ckpt: ckpt.clone(),
+            resume: resume_from.map(|c| c.resume_point()),
+        };
+        let harness = LearnerHarness::spawn(&params, &hcfg)?;
+        if let Some(hub) = hub {
+            harness.broadcast.attach_hub(hub)?;
+        }
+        let broadcast = harness.broadcast.clone();
+        let pstate = RefCell::new(params);
+        let rstate = RefCell::new(rng);
+        let per = RefCell::new(per_init);
+        let sampler = RefCell::new(sampler_init);
+        let mut calls = 0usize;
+        let train = |_step: usize, publish: bool| -> Result<Option<f32>> {
+            if let Some(hb) = watchdog {
+                hb.beat();
+            }
+            let t = base + calls + 1; // 1-based global train index about to run
+            if let Some(plan) = faults.as_deref() {
+                if plan.learner_should_hang(t) {
+                    // Scripted hang: stop beating and park. Only the
+                    // watchdog's cancel releases us (cooperative kill —
+                    // threads cannot be killed from outside).
+                    loop {
+                        match watchdog {
+                            Some(hb) if hb.cancelled() => {
+                                return Err(Error::Experiment(
+                                    "hung learner cancelled by watchdog".into(),
+                                ))
+                            }
+                            Some(_) => std::thread::park_timeout(Duration::from_millis(1)),
+                            None => {
+                                return Err(Error::Experiment(
+                                    "scripted learner hang with no watchdog attached".into(),
+                                ))
+                            }
+                        }
+                    }
+                }
+            }
+            if crash_after.is_some_and(|limit| calls >= limit) {
+                return Err(Error::Experiment("injected learner crash".into()));
+            }
+            calls += 1;
+            let mut p = pstate.borrow_mut();
+            let mut r = rstate.borrow_mut();
+            // Deterministic "training": one RNG-driven drift per train
+            // step. The replay-coupled legs scale the drift by a
+            // prioritized sample's IS weights, making the final params
+            // depend on replay contents, priorities, and sampler RNG.
+            let gain = if use_replay {
+                let mut per = per.borrow_mut();
+                let mut smp = sampler.borrow_mut();
+                let mut t_rng =
+                    Pcg32::new(seed ^ (t as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15), 777);
+                let obs: Vec<f32> =
+                    (0..DIMS[0]).map(|_| t_rng.uniform_range(-1.0, 1.0)).collect();
+                let act = [t_rng.below_usize(DIMS[2]) as f32];
+                let reward = t_rng.uniform();
+                per.push(Transition {
+                    obs: &obs,
+                    action: &act,
+                    reward,
+                    next_obs: &obs,
+                    done: false,
+                });
+                if per.len() >= 8 {
+                    let b = per.sample(4, 0.4, &mut smp);
+                    let errs: Vec<f32> =
+                        b.indices.iter().map(|&i| 0.05 + 0.01 * i as f32).collect();
+                    per.update_priorities(&b.indices, &errs);
+                    1.0 + 0.01 * b.weights.data().iter().sum::<f32>()
+                } else {
+                    1.0
+                }
+            } else {
+                1.0
+            };
+            for tns in p.tensors.iter_mut() {
+                for v in tns.data_mut() {
+                    *v += 0.003 * r.normal() * gain;
+                }
+            }
+            if publish {
+                broadcast.publish(&p)?;
+            }
+            Ok(Some(0.0))
+        };
+        let mut state_fn = || CheckpointState {
+            params: pstate.borrow().clone(),
+            rng: rstate.borrow().state_parts(),
+            replay: use_replay.then(|| ReplaySection {
+                replay: ReplayCkpt::Prioritized(per.borrow().state()),
+                sampler_rng: sampler.borrow().state_parts(),
+            }),
+        };
+        let state: Option<&mut dyn FnMut() -> CheckpointState> =
+            if ckpt.is_some() { Some(&mut state_fn) } else { None };
+        let log = harness.run_ckpt(|_t| {}, train, state)?;
+        Ok((log, broadcast))
+    }
+}
+
+/// One chaos cell: clean vs faulted vs crash+resume vs hung-and-
+/// watchdog-restarted vs serve-path chaos at `precision`.
 fn faults_cell(ctx: &ExpCtx, precision: Precision, total_steps: usize) -> Result<Row> {
     let seed = ctx.seed + 31;
     let trains_total = (total_steps - WARMUP) / TRAIN_FREQ;
 
     // Leg 1: the clean reference run.
-    let (log_a, bc_a) = stub_run(seed, precision, total_steps, None, None, None, None, None)?;
+    let (log_a, bc_a) = StubRun::new(seed, precision, total_steps).run()?;
     let sig_a = probe(&bc_a.latest().engine, seed)?;
 
     // Leg 2: the faulted run — actor kill, dropped + failed hub
-    // publishes, failed client connects — against the same seed.
+    // publishes, a severed publish window (partition that heals), and
+    // failed client connects — against the same seed.
     let plan = Arc::new(
         FaultPlan::new(seed)
             .kill_actor(0, 40)
             .drop_publish(2)
             .fail_publish(4)
+            .partition(5, 7)
             .fail_connect(1)
             .fail_connect(2),
     );
     let hub = Arc::new(SnapshotHub::new());
     let server = SnapshotServer::bind("127.0.0.1:0", Arc::clone(&hub)).map_err(Error::from)?;
-    let (log_b, bc_b) = stub_run(
-        seed,
-        precision,
-        total_steps,
-        Some(plan.clone()),
-        None,
-        None,
-        None,
-        Some(hub),
-    )?;
+    let (log_b, bc_b) = StubRun {
+        faults: Some(plan.clone()),
+        hub: Some(hub),
+        ..StubRun::new(seed, precision, total_steps)
+    }
+    .run()?;
     let sig_b = probe(&bc_b.latest().engine, seed)?;
     let mut logit_mismatches = usize::from(sig_b != sig_a);
 
@@ -250,16 +401,13 @@ fn faults_cell(ctx: &ExpCtx, precision: Precision, total_steps: usize) -> Result
     let ckpt_path = ctx.runs_dir.join(format!("faults_{}.qckp", precision.label()));
     let policy = CheckpointPolicy { path: ckpt_path.clone(), every_trains: CKPT_EVERY };
     let crash_at = (trains_total * 3 / 5).max(CKPT_EVERY + 1);
-    match stub_run(
-        seed,
-        precision,
-        total_steps,
-        None,
-        Some(policy),
-        None,
-        Some(crash_at),
-        None,
-    ) {
+    match (StubRun {
+        ckpt: Some(policy),
+        crash_after: Some(crash_at),
+        ..StubRun::new(seed, precision, total_steps)
+    })
+    .run()
+    {
         Err(e) if e.to_string().contains("injected learner crash") => {}
         Err(e) => return Err(e),
         Ok(_) => {
@@ -269,9 +417,114 @@ fn faults_cell(ctx: &ExpCtx, precision: Precision, total_steps: usize) -> Result
         }
     }
     let ckpt = Checkpoint::read_file(&ckpt_path).map_err(Error::from)?;
-    let (log_d, bc_d) =
-        stub_run(seed, precision, total_steps, None, None, Some(&ckpt), None, None)?;
+    let (log_d, bc_d) = StubRun {
+        resume_from: Some(&ckpt),
+        ..StubRun::new(seed, precision, total_steps)
+    }
+    .run()?;
     let resume_mismatches = usize::from(probe(&bc_d.latest().engine, seed)? != sig_a);
+
+    // Leg 5: the replay-coupled reference — final params now depend on
+    // replay contents, SumTree priorities, and the sampler RNG.
+    let (_log_w0, bc_w0) = StubRun {
+        replay: true,
+        ..StubRun::new(seed, precision, total_steps)
+    }
+    .run()?;
+    let sig_w = probe(&bc_w0.latest().engine, seed)?;
+
+    // Leg 6: same run under the watchdog with a scripted learner hang.
+    // The heartbeat deadline detects the stall, the attempt is
+    // cancelled, and the restart resumes from the latest checkpoint —
+    // including its durable replay section. Any loss of replay state
+    // shows up as wd_mismatches.
+    let wd_path = ctx.runs_dir.join(format!("faults_wd_{}.qckp", precision.label()));
+    std::fs::remove_file(&wd_path).ok(); // a stale file must not mask attempt 0
+    let hang_at = (trains_total * 2 / 5).max(CKPT_EVERY + 1);
+    let wd_plan = Arc::new(FaultPlan::new(seed ^ 0x51D0).hang_learner(hang_at));
+    let wcfg = WatchdogConfig {
+        ckpt_path: wd_path.clone(),
+        deadline: Duration::from_millis(500),
+        max_restarts: 2,
+        restart_backoff: Duration::from_millis(10),
+    };
+    let wd_policy = CheckpointPolicy { path: wd_path.clone(), every_trains: CKPT_EVERY };
+    let supervised = supervise(&wcfg, |resume, hb| {
+        StubRun {
+            faults: Some(Arc::clone(&wd_plan)),
+            ckpt: Some(wd_policy.clone()),
+            resume_from: resume.as_ref(),
+            watchdog: Some(hb),
+            replay: true,
+            ..StubRun::new(seed, precision, total_steps)
+        }
+        .run()
+    })?;
+    let learner_restarts = supervised.restart_count();
+    let learner_recovery_ms = supervised.recovery_ms();
+    let (mut log_w, bc_w1) = supervised.value;
+    log_w.learner_restarts = learner_restarts;
+    log_w.learner_recovery_ms = learner_recovery_ms;
+    let wd_mismatches = usize::from(probe(&bc_w1.latest().engine, seed)? != sig_w);
+
+    // Leg 7: serve-path chaos on the faulted run's published artifact —
+    // a scripted straggler batch, bit-exact served logits, and a
+    // graceful drain against a deliberately retained client.
+    let serve_plan = Arc::new(FaultPlan::new(seed ^ 0xC4A0).slow_batch(2, 25));
+    let scfg = ServeConfig {
+        max_batch: 8,
+        window: Duration::from_micros(200),
+        queue_capacity: 64,
+        drain: Duration::from_millis(250),
+        slow_batch: Duration::from_millis(5),
+    };
+    let serve_engine = art.build_engine(EngineConfig::default())?;
+    let mut direct = art.build_engine(EngineConfig::default())?;
+    let (pserver, sclient) =
+        PolicyServer::spawn_faulted(serve_engine, scfg, Some(Arc::clone(&serve_plan)));
+    let mut serve_mismatches = 0usize;
+    let query_threads: Vec<_> = (0..2)
+        .map(|c| {
+            let cl = sclient.clone();
+            let thread_seed = seed + 1000 + c as u64;
+            std::thread::spawn(move || -> std::result::Result<Vec<(Vec<f32>, Vec<f32>)>, String> {
+                let mut rng = Pcg32::new(thread_seed, 9);
+                let mut outs = Vec::with_capacity(40);
+                for _ in 0..40 {
+                    let obs: Vec<f32> =
+                        (0..DIMS[0]).map(|_| rng.uniform_range(-1.0, 1.0)).collect();
+                    let y = cl.query(&obs).map_err(|e| e.to_string())?;
+                    outs.push((obs, y));
+                }
+                Ok(outs)
+            })
+        })
+        .collect();
+    for h in query_threads {
+        let outs = h
+            .join()
+            .map_err(|_| Error::Experiment("serve client thread panicked".into()))?
+            .map_err(Error::Experiment)?;
+        for (obs, served) in outs {
+            let mut want = vec![0.0f32; DIMS[2]];
+            direct.forward(&obs, &mut want)?;
+            let same = served.len() == want.len()
+                && served.iter().zip(&want).all(|(a, b)| a.to_bits() == b.to_bits());
+            serve_mismatches += usize::from(!same);
+        }
+    }
+    pserver.begin_drain();
+    // The retained client must be bounced, not wedge the shutdown.
+    match sclient.query(&[0.0; DIMS[0]]) {
+        Err(QueryError::Draining) => {}
+        other => {
+            return Err(Error::Experiment(format!(
+                "draining server answered a late query with {other:?}"
+            )))
+        }
+    }
+    let sreport = pserver.shutdown(); // sclient still alive across the join
+    drop(sclient);
 
     // Experience the faulted run's actors collected but the learner
     // never consumed (the killed actor's unflushed tail + queued batches
@@ -299,6 +552,14 @@ fn faults_cell(ctx: &ExpCtx, precision: Precision, total_steps: usize) -> Result
         ("clean_trains", n(log_a.train_steps as f64)),
         ("logit_mismatches", n(logit_mismatches as f64)),
         ("resume_mismatches", n(resume_mismatches as f64)),
+        ("learner_restarts", n(log_w.learner_restarts as f64)),
+        ("learner_recovery_ms", n(log_w.learner_recovery_ms)),
+        ("wd_mismatches", n(wd_mismatches as f64)),
+        ("partition_windows", n(plan.partition_windows() as f64)),
+        ("serve_queries", n(sreport.queries as f64)),
+        ("serve_mismatches", n(serve_mismatches as f64)),
+        ("slow_batches", n(sreport.slow_batches as f64)),
+        ("drain_rejected", n(sreport.drain_rejected as f64)),
         ("final_version", n(bc_b.version() as f64)),
     ]))
 }
@@ -309,7 +570,7 @@ impl Experiment for Faults {
     }
 
     fn description(&self) -> &'static str {
-        "chaos: actor kill + publish/connect faults + learner crash-resume, bit-exact recovery (offline)"
+        "chaos: actor kill + partition + learner crash/hang recovery + serve drain/stragglers, bit-exact (offline)"
     }
 
     fn items(&self, ctx: &ExpCtx) -> Vec<String> {
@@ -324,22 +585,29 @@ impl Experiment for Faults {
 
     fn render(&self, _ctx: &ExpCtx, rows: &[Row]) -> String {
         let mut out = String::from(
-            "Fault injection — supervised pool, degrade-not-abort transports,\n\
-             checkpoint/resume (offline stub learner on cartpole)\n\n",
+            "Fault injection — supervised pool + learner watchdog, degrade-not-abort\n\
+             transports, durable replay checkpoint/resume, serve drain + stragglers\n\
+             (offline stub learner on cartpole)\n\n",
         );
         out.push_str(&render_table(
-            &["engine", "bits", "restarts", "recovery_ms", "publishes_dropped",
-              "hub_publish_failures", "connect_failures", "client_retries", "steps_lost",
-              "logit_mismatches", "resume_mismatches"],
+            &["engine", "bits", "restarts", "learner_restarts", "partition_windows",
+              "slow_batches", "drain_rejected", "client_retries", "steps_lost",
+              "logit_mismatches", "resume_mismatches", "wd_mismatches", "serve_mismatches"],
             rows,
         ));
         out.push_str(
             "\nEvery row absorbed an actor kill (supervisor respawn), one dropped\n\
-             and one failed hub publish (degrade to in-process transport), and\n\
-             two failed client connects (retry budget), then matched the\n\
-             fault-free run's final engine bit for bit (logit_mismatches = 0).\n\
-             resume_mismatches = 0 says a learner killed mid-run and resumed\n\
-             from its QCKP checkpoint converged to the same engine too.\n",
+             and one failed hub publish plus a severed partition window (degrade\n\
+             to in-process transport, heal on the next publish), and two failed\n\
+             client connects (retry budget), then matched the fault-free run's\n\
+             final engine bit for bit (logit_mismatches = 0). resume_mismatches\n\
+             = 0 says a learner killed mid-run and resumed from its QCKP\n\
+             checkpoint converged to the same engine too; wd_mismatches = 0 says\n\
+             the watchdog's restart of a *hung* learner — replay buffer,\n\
+             priorities, and sampler RNG restored from the checkpoint's replay\n\
+             section — did as well. serve_mismatches = 0 pins served logits to\n\
+             direct forwards while a scripted straggler (slow_batches) and a\n\
+             graceful drain against a live client (drain_rejected) play out.\n",
         );
 
         let mut doc = std::collections::BTreeMap::new();
@@ -409,6 +677,28 @@ mod tests {
         let at = r["ckpt_trains"].as_f64().unwrap();
         assert!(at > 0.0 && at < total);
         assert_eq!(r["resume_trains"].as_f64().unwrap(), total - at);
+        // Watchdog leg: the hang was detected, the restart resumed from
+        // a checkpoint whose replay section restored sampling exactly.
+        assert!(
+            r["learner_restarts"].as_f64().unwrap() >= 1.0,
+            "the hang must be absorbed by the watchdog"
+        );
+        assert!(r["learner_recovery_ms"].as_f64().unwrap() > 0.0);
+        assert_eq!(
+            r["wd_mismatches"],
+            Json::Num(0.0),
+            "watchdog-resumed replay-coupled run must match its clean reference"
+        );
+        // Partition window [5, 7) was entered and healed.
+        assert_eq!(r["partition_windows"], Json::Num(1.0));
+        // Serve chaos: 80 served queries, all bit-exact, one scripted
+        // straggler, and the retained client bounced during drain.
+        assert_eq!(r["serve_queries"], Json::Num(80.0));
+        assert_eq!(r["serve_mismatches"], Json::Num(0.0));
+        // The scripted stall is always flagged; a loaded CI scheduler may
+        // push an unrelated batch past the 5 ms deadline too, so >= not ==.
+        assert!(r["slow_batches"].as_f64().unwrap() >= 1.0);
+        assert!(r["drain_rejected"].as_f64().unwrap() >= 1.0);
         std::fs::remove_dir_all(c.runs_dir).ok();
     }
 }

@@ -80,6 +80,7 @@ fn serve_cell(
         max_batch: ctx.max_batch,
         window: Duration::from_micros(ctx.window_us),
         queue_capacity: 1024,
+        ..ServeConfig::default()
     };
     let (server, client) = PolicyServer::spawn(engine, cfg);
     let per_client = queries / clients;

@@ -2,12 +2,16 @@
 //!
 //! A [`FaultPlan`] is a *script* of faults — kill actor N once it has
 //! stepped S times, drop/delay/corrupt/fail the K-th hub publish, fail
-//! the M-th client connect — consulted by hooks threaded through the
-//! actor pool ([`crate::actorq::ActorPool`]), the broadcast
-//! ([`crate::actorq::ParamBroadcast`]), and the snapshot client
-//! ([`crate::snapshot::SnapshotClient`]). Every fault fires exactly once
-//! at a position determined by the plan, never by wall-clock timing, so
-//! a chaos run is exactly reproducible: same seed + same plan → same
+//! the M-th client connect, sever the hub for a window of publishes
+//! (a network partition), stall the N-th serve batch (a straggler),
+//! hang the learner at a train step — consulted by hooks threaded
+//! through the actor pool ([`crate::actorq::ActorPool`]), the
+//! broadcast ([`crate::actorq::ParamBroadcast`]), the snapshot client
+//! ([`crate::snapshot::SnapshotClient`]), the serving front-end
+//! ([`crate::serve::PolicyServer`]), and the learner watchdog
+//! ([`crate::actorq::watchdog`]). Every fault fires exactly once at a
+//! position determined by the plan, never by wall-clock timing, so a
+//! chaos run is exactly reproducible: same seed + same plan → same
 //! fault sequence → (with a correct recovery layer) the same final
 //! engine as the fault-free run.
 //!
@@ -36,6 +40,13 @@ pub enum FaultKind {
     PublishFail,
     /// A client connect attempt failed with a simulated I/O error.
     ConnectFail,
+    /// A hub operation (publish or connect) was severed by a scripted
+    /// partition window.
+    Partition,
+    /// A serve batch was stalled past its deadline (straggler).
+    SlowBatch,
+    /// The learner was told to hang (stop heartbeating) at a train step.
+    LearnerHang,
 }
 
 /// One fired fault, recorded when the hook consumes it.
@@ -83,6 +94,30 @@ struct ConnectSpec {
     fired: AtomicBool,
 }
 
+/// A network-partition window in hub-publish coordinates: publishes
+/// `[from, to)` (1-based) are severed, and connect attempts made while
+/// the window is open fail. Position-keyed, not wall-clock-keyed, so
+/// the window is reproducible.
+struct PartitionSpec {
+    from: u64,
+    to: u64,
+    /// Set once any operation is severed (the window was observed).
+    entered: AtomicBool,
+}
+
+struct SlowBatchSpec {
+    /// 1-based index into the sequence of serve batches.
+    nth: u64,
+    delay: Duration,
+    fired: AtomicBool,
+}
+
+struct HangSpec {
+    /// Fires at the first train call where `train_calls >= at_train`.
+    at_train: usize,
+    fired: AtomicBool,
+}
+
 /// A deterministic, consumed-once fault script. Build with the chained
 /// constructors, share via `Arc`, and hand clones to the pool config,
 /// the broadcast, and the client config.
@@ -91,8 +126,12 @@ pub struct FaultPlan {
     kills: Vec<KillSpec>,
     publishes: Vec<PublishSpec>,
     connects: Vec<ConnectSpec>,
+    partitions: Vec<PartitionSpec>,
+    slow_batches: Vec<SlowBatchSpec>,
+    hangs: Vec<HangSpec>,
     publish_count: AtomicU64,
     connect_count: AtomicU64,
+    batch_count: AtomicU64,
     events: Mutex<Vec<FaultEvent>>,
 }
 
@@ -103,6 +142,9 @@ impl std::fmt::Debug for FaultPlan {
             .field("kills", &self.kills.len())
             .field("publishes", &self.publishes.len())
             .field("connects", &self.connects.len())
+            .field("partitions", &self.partitions.len())
+            .field("slow_batches", &self.slow_batches.len())
+            .field("hangs", &self.hangs.len())
             .finish()
     }
 }
@@ -115,8 +157,12 @@ impl FaultPlan {
             kills: Vec::new(),
             publishes: Vec::new(),
             connects: Vec::new(),
+            partitions: Vec::new(),
+            slow_batches: Vec::new(),
+            hangs: Vec::new(),
             publish_count: AtomicU64::new(0),
             connect_count: AtomicU64::new(0),
+            batch_count: AtomicU64::new(0),
             events: Mutex::new(Vec::new()),
         }
     }
@@ -159,6 +205,35 @@ impl FaultPlan {
     /// Fail the `nth` client connect attempt (1-based) with an I/O error.
     pub fn fail_connect(mut self, nth: u64) -> FaultPlan {
         self.connects.push(ConnectSpec { nth, fired: AtomicBool::new(false) });
+        self
+    }
+
+    /// Sever the hub for publishes `[from, to)` (1-based): those
+    /// publishes are discarded on the wire and connect attempts made
+    /// while the window is open fail. The window heals at publish `to`
+    /// — later publishes deliver and recovery proceeds normally.
+    pub fn partition(mut self, from: u64, to: u64) -> FaultPlan {
+        assert!(from >= 1 && to > from, "partition window must be a non-empty 1-based range");
+        self.partitions.push(PartitionSpec { from, to, entered: AtomicBool::new(false) });
+        self
+    }
+
+    /// Stall the `nth` serve batch (1-based) by `ms` milliseconds before
+    /// dispatch — a scripted straggler for the slow-batch detector.
+    pub fn slow_batch(mut self, nth: u64, ms: u64) -> FaultPlan {
+        self.slow_batches.push(SlowBatchSpec {
+            nth,
+            delay: Duration::from_millis(ms),
+            fired: AtomicBool::new(false),
+        });
+        self
+    }
+
+    /// Hang the learner at the first train call where the completed
+    /// call count reaches `at_train`: the train closure stops
+    /// heartbeating and parks until the watchdog cancels it.
+    pub fn hang_learner(mut self, at_train: usize) -> FaultPlan {
+        self.hangs.push(HangSpec { at_train, fired: AtomicBool::new(false) });
         self
     }
 
@@ -206,6 +281,20 @@ impl FaultPlan {
                 return p.action;
             }
         }
+        // No scripted per-publish fault: is the hub partitioned away at
+        // this publish index? Severed publishes behave like drops (the
+        // broadcast degrades to the in-process path), and unlike the
+        // consumed-once specs a window swallows *every* publish inside it.
+        for w in &self.partitions {
+            if (w.from..w.to).contains(&k) {
+                w.entered.store(true, Ordering::SeqCst);
+                self.record(
+                    FaultKind::Partition,
+                    format!("publish {k} severed (window [{}, {}))", w.from, w.to),
+                );
+                return PublishAction::Drop;
+            }
+        }
         PublishAction::Deliver
     }
 
@@ -223,7 +312,63 @@ impl FaultPlan {
                 return true;
             }
         }
+        // Connects fail while a partition window is open, i.e. while the
+        // *next* publish index sits inside the window.
+        let next_publish = self.publish_count.load(Ordering::SeqCst) + 1;
+        for w in &self.partitions {
+            if (w.from..w.to).contains(&next_publish) {
+                w.entered.store(true, Ordering::SeqCst);
+                self.record(
+                    FaultKind::Partition,
+                    format!("connect {k} severed (window [{}, {}))", w.from, w.to),
+                );
+                return true;
+            }
+        }
         false
+    }
+
+    /// Hook for the serving loop: advance the batch counter and return
+    /// the scripted stall for this batch, if any (consumed once).
+    pub fn on_batch(&self) -> Option<Duration> {
+        let k = self.batch_count.fetch_add(1, Ordering::SeqCst) + 1;
+        for s in &self.slow_batches {
+            if s.nth == k
+                && s.fired
+                    .compare_exchange(false, true, Ordering::SeqCst, Ordering::SeqCst)
+                    .is_ok()
+            {
+                self.record(
+                    FaultKind::SlowBatch,
+                    format!("batch {k} stalled {} ms", s.delay.as_millis()),
+                );
+                return Some(s.delay);
+            }
+        }
+        None
+    }
+
+    /// Hook for the supervised learner's train closure: should the
+    /// learner hang now? Consumed once per spec, so the restarted
+    /// attempt runs the same schedule clean.
+    pub fn learner_should_hang(&self, train_calls: usize) -> bool {
+        for h in &self.hangs {
+            if train_calls >= h.at_train
+                && h.fired
+                    .compare_exchange(false, true, Ordering::SeqCst, Ordering::SeqCst)
+                    .is_ok()
+            {
+                self.record(FaultKind::LearnerHang, format!("train {train_calls}"));
+                return true;
+            }
+        }
+        false
+    }
+
+    /// How many scripted partition windows were actually observed
+    /// (severed at least one operation).
+    pub fn partition_windows(&self) -> usize {
+        self.partitions.iter().filter(|w| w.entered.load(Ordering::SeqCst)).count()
     }
 
     /// Deterministic corruption offset for the `k`-th publish: a byte
@@ -288,6 +433,63 @@ mod tests {
         assert!(plan.on_connect()); // 2
         assert!(!plan.on_connect()); // 3
         assert_eq!(plan.count(FaultKind::ConnectFail), 2);
+    }
+
+    #[test]
+    fn partition_severs_its_window_and_heals() {
+        let plan = FaultPlan::new(5).partition(2, 4);
+        assert_eq!(plan.on_publish(), PublishAction::Deliver); // 1: before
+        assert!(!plan.on_connect(), "connect before the window succeeds");
+        assert_eq!(plan.on_publish(), PublishAction::Drop); // 2: severed
+        assert!(plan.on_connect(), "connect inside the window fails");
+        assert_eq!(plan.on_publish(), PublishAction::Drop); // 3: severed
+        assert_eq!(plan.on_publish(), PublishAction::Deliver); // 4: healed
+        assert!(!plan.on_connect(), "connect after the window succeeds");
+        assert_eq!(plan.partition_windows(), 1);
+        assert_eq!(plan.count(FaultKind::Partition), 3, "2 publishes + 1 connect severed");
+    }
+
+    #[test]
+    fn unobserved_partition_counts_zero_windows() {
+        let plan = FaultPlan::new(5).partition(50, 60);
+        plan.on_publish();
+        assert_eq!(plan.partition_windows(), 0);
+    }
+
+    #[test]
+    fn scripted_publish_fault_takes_precedence_over_partition() {
+        let plan = FaultPlan::new(6).fail_publish(2).partition(2, 3);
+        plan.on_publish(); // 1
+        assert_eq!(plan.on_publish(), PublishAction::Fail, "spec wins over window");
+        assert_eq!(plan.count(FaultKind::Partition), 0);
+    }
+
+    #[test]
+    fn slow_batch_fires_once_at_its_index() {
+        let plan = FaultPlan::new(7).slow_batch(2, 25);
+        assert_eq!(plan.on_batch(), None); // 1
+        assert_eq!(plan.on_batch(), Some(Duration::from_millis(25))); // 2
+        assert_eq!(plan.on_batch(), None); // 3
+        assert_eq!(plan.count(FaultKind::SlowBatch), 1);
+    }
+
+    #[test]
+    fn learner_hang_is_consumed_once() {
+        let plan = FaultPlan::new(8).hang_learner(40);
+        assert!(!plan.learner_should_hang(39), "below threshold");
+        assert!(plan.learner_should_hang(40), "at threshold");
+        assert!(!plan.learner_should_hang(41), "consumed — the restarted attempt runs clean");
+        assert_eq!(plan.count(FaultKind::LearnerHang), 1);
+    }
+
+    #[test]
+    fn events_report_all_new_kinds() {
+        let plan = FaultPlan::new(9).partition(1, 2).slow_batch(1, 1).hang_learner(1);
+        plan.on_publish();
+        plan.on_batch();
+        plan.learner_should_hang(1);
+        let kinds: Vec<FaultKind> = plan.events().iter().map(|e| e.kind).collect();
+        assert_eq!(kinds, vec![FaultKind::Partition, FaultKind::SlowBatch, FaultKind::LearnerHang]);
     }
 
     #[test]

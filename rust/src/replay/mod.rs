@@ -13,13 +13,19 @@
 //! observation scratch, so the hot collection loops stay allocation-free;
 //! the ActorQ channel uses owned transitions
 //! ([`crate::actorq::OwnedTransition`]) and re-borrows on push.
+//!
+//! Both off-policy buffers snapshot to plain-old-data state structs
+//! ([`ReplayBufferState`], [`PrioritizedState`]) and restore bit-exactly
+//! — the QCKP checkpoint format persists these as its CRC-guarded replay
+//! section (see [`crate::actorq::checkpoint`]), so a resumed learner
+//! samples the same rows with the same weights as the run it replaces.
 
 pub mod prioritized;
 pub mod rollout;
 pub mod sum_tree;
 pub mod uniform;
 
-pub use prioritized::PrioritizedReplay;
+pub use prioritized::{PrioritizedReplay, PrioritizedState};
 pub use rollout::{RolloutBatch, RolloutBuffer};
 pub use sum_tree::SumTree;
-pub use uniform::{Batch, ReplayBuffer, Transition};
+pub use uniform::{Batch, ReplayBuffer, ReplayBufferState, Transition};

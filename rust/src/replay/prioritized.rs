@@ -3,7 +3,7 @@
 //! DQN hyperparameters (alpha = 0.6, prioritized_replay = True).
 
 use crate::replay::sum_tree::SumTree;
-use crate::replay::uniform::{Batch, ReplayBuffer, Transition};
+use crate::replay::uniform::{Batch, ReplayBuffer, ReplayBufferState, Transition};
 use crate::rng::Pcg32;
 
 #[derive(Debug)]
@@ -76,6 +76,66 @@ impl PrioritizedReplay {
             self.tree.set(i, p.powf(self.alpha));
         }
     }
+
+    /// Snapshot for checkpointing: the underlying ring plus the `SumTree`
+    /// leaf values for the live rows. Leaves are captured post-`alpha`
+    /// (exactly as stored), so restore is a bit-exact `set` replay with no
+    /// `powf` round trip.
+    pub fn state(&self) -> PrioritizedState {
+        let buf = self.buf.state();
+        let priorities = (0..buf.len).map(|i| self.tree.get(i)).collect();
+        PrioritizedState { buf, priorities, max_priority: self.max_priority, alpha: self.alpha }
+    }
+
+    /// Rebuild from a snapshot; sampling, pushes, and priority updates all
+    /// continue bit-for-bit from where the snapshotted instance left off.
+    pub fn from_state(s: &PrioritizedState) -> PrioritizedReplay {
+        s.validate().expect("invalid PrioritizedState");
+        let buf = ReplayBuffer::from_state(&s.buf);
+        let mut tree = SumTree::new(s.buf.capacity);
+        for (i, &p) in s.priorities.iter().enumerate() {
+            tree.set(i, p);
+        }
+        PrioritizedReplay { buf, tree, alpha: s.alpha, max_priority: s.max_priority, eps: 1e-6 }
+    }
+}
+
+/// Serializable snapshot of a [`PrioritizedReplay`]: the ring snapshot, the
+/// per-row `SumTree` leaf priorities, and the sampler's priority ceiling.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PrioritizedState {
+    pub buf: ReplayBufferState,
+    /// `SumTree` leaf values for rows `[0, len)`, post-`alpha`.
+    pub priorities: Vec<f32>,
+    pub max_priority: f32,
+    pub alpha: f32,
+}
+
+impl PrioritizedState {
+    /// Structural consistency check, shared by
+    /// [`PrioritizedReplay::from_state`] and the QCKP decoder.
+    pub fn validate(&self) -> Result<(), String> {
+        self.buf.validate()?;
+        if self.priorities.len() != self.buf.len {
+            return Err(format!(
+                "replay priorities hold {} values, expected {}",
+                self.priorities.len(),
+                self.buf.len
+            ));
+        }
+        for (i, &p) in self.priorities.iter().enumerate() {
+            if !p.is_finite() || p < 0.0 {
+                return Err(format!("replay priority {i} is {p}, expected finite >= 0"));
+            }
+        }
+        if !self.max_priority.is_finite() || self.max_priority <= 0.0 {
+            return Err(format!("replay max_priority {} not finite positive", self.max_priority));
+        }
+        if !self.alpha.is_finite() || self.alpha < 0.0 {
+            return Err(format!("replay alpha {} not finite non-negative", self.alpha));
+        }
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -133,6 +193,52 @@ mod tests {
         // normalized: max weight == 1
         let wmax = b.weights.data().iter().copied().fold(0.0f32, f32::max);
         assert!((wmax - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn state_roundtrip_sampling_bit_exact() {
+        let mut per = PrioritizedReplay::new(16, 1, 1, 0.6);
+        fill(&mut per, 24); // wrap the ring
+        let idx: Vec<usize> = (0..16).collect();
+        let td: Vec<f32> = (0..16).map(|k| 0.05 * (k as f32 + 1.0)).collect();
+        per.update_priorities(&idx, &td);
+        let s = per.state();
+        let mut restored = PrioritizedReplay::from_state(&s);
+        assert_eq!(restored.state(), s);
+        // Interleave sampling and priority updates on both instances with
+        // identical RNG streams: everything must agree bit for bit.
+        let (mut ra, mut rb) = (Pcg32::new(11, 5), Pcg32::new(11, 5));
+        for round in 0..4 {
+            let ba = per.sample(8, 0.4, &mut ra);
+            let bb = restored.sample(8, 0.4, &mut rb);
+            assert_eq!(ba.indices, bb.indices, "round {round}");
+            let wa: Vec<u32> = ba.weights.data().iter().map(|w| w.to_bits()).collect();
+            let wb: Vec<u32> = bb.weights.data().iter().map(|w| w.to_bits()).collect();
+            assert_eq!(wa, wb, "round {round}");
+            assert_eq!(ba.obs.data(), bb.obs.data(), "round {round}");
+            let errs: Vec<f32> =
+                ba.indices.iter().map(|&i| 0.2 + (i as f32) * 0.03).collect();
+            per.update_priorities(&ba.indices, &errs);
+            restored.update_priorities(&bb.indices, &errs);
+        }
+        assert_eq!(per.state(), restored.state());
+    }
+
+    #[test]
+    fn state_validate_rejects_bad_priorities() {
+        let mut per = PrioritizedReplay::new(8, 1, 1, 0.6);
+        fill(&mut per, 4);
+        let good = per.state();
+        assert!(good.validate().is_ok());
+        let mut bad = good.clone();
+        bad.priorities.push(1.0); // one more priority than live rows
+        assert!(bad.validate().is_err());
+        let mut bad = good.clone();
+        bad.priorities[0] = f32::NAN;
+        assert!(bad.validate().is_err());
+        let mut bad = good;
+        bad.max_priority = -1.0;
+        assert!(bad.validate().is_err());
     }
 
     #[test]

@@ -133,6 +133,97 @@ impl ReplayBuffer {
         let indices: Vec<usize> = (0..b).map(|_| rng.below_usize(self.len)).collect();
         self.gather(&indices, vec![1.0; b])
     }
+
+    /// Snapshot the live rows for checkpointing. Only rows `[0, len)` are
+    /// captured — when the ring has not wrapped the tail is all zeros, and
+    /// once it has wrapped every slot is live — so the snapshot is exactly
+    /// the reachable state and nothing else.
+    pub fn state(&self) -> ReplayBufferState {
+        ReplayBufferState {
+            capacity: self.capacity,
+            obs_dim: self.obs_dim,
+            act_dim: self.act_dim,
+            len: self.len,
+            head: self.head,
+            obs: self.obs[..self.len * self.obs_dim].to_vec(),
+            actions: self.actions[..self.len * self.act_dim].to_vec(),
+            rewards: self.rewards[..self.len].to_vec(),
+            next_obs: self.next_obs[..self.len * self.obs_dim].to_vec(),
+            dones: self.dones[..self.len].to_vec(),
+        }
+    }
+
+    /// Rebuild a buffer from a snapshot. Subsequent pushes land at the
+    /// restored ring cursor and samples gather the restored rows, so a
+    /// resumed run behaves bit-for-bit like the run that was snapshotted.
+    pub fn from_state(s: &ReplayBufferState) -> ReplayBuffer {
+        s.validate().expect("invalid ReplayBufferState");
+        let mut buf = ReplayBuffer::new(s.capacity, s.obs_dim, s.act_dim);
+        buf.obs[..s.len * s.obs_dim].copy_from_slice(&s.obs);
+        buf.actions[..s.len * s.act_dim].copy_from_slice(&s.actions);
+        buf.rewards[..s.len].copy_from_slice(&s.rewards);
+        buf.next_obs[..s.len * s.obs_dim].copy_from_slice(&s.next_obs);
+        buf.dones[..s.len].copy_from_slice(&s.dones);
+        buf.len = s.len;
+        buf.head = s.head;
+        buf
+    }
+}
+
+/// Serializable snapshot of a [`ReplayBuffer`]: the live rows plus the
+/// ring cursor (`head`) and high-water mark (`len`). Produced by
+/// [`ReplayBuffer::state`], persisted inside the QCKP replay section, and
+/// consumed by [`ReplayBuffer::from_state`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct ReplayBufferState {
+    pub capacity: usize,
+    pub obs_dim: usize,
+    pub act_dim: usize,
+    /// Number of live rows; the row arrays below hold exactly this many rows.
+    pub len: usize,
+    /// Ring cursor: the slot the next push overwrites.
+    pub head: usize,
+    pub obs: Vec<f32>,      // len * obs_dim
+    pub actions: Vec<f32>,  // len * act_dim
+    pub rewards: Vec<f32>,  // len
+    pub next_obs: Vec<f32>, // len * obs_dim
+    pub dones: Vec<f32>,    // len
+}
+
+impl ReplayBufferState {
+    /// Structural consistency check, shared by [`ReplayBuffer::from_state`]
+    /// and the QCKP decoder (which maps failures to a typed error).
+    pub fn validate(&self) -> Result<(), String> {
+        if self.capacity == 0 || self.obs_dim == 0 || self.act_dim == 0 {
+            return Err("replay dims must be positive".into());
+        }
+        if self.len > self.capacity {
+            return Err(format!("replay len {} exceeds capacity {}", self.len, self.capacity));
+        }
+        if self.head >= self.capacity {
+            return Err(format!("replay head {} out of range (capacity {})", self.head, self.capacity));
+        }
+        // Push-only ring: until the ring wraps, head trails len exactly.
+        if self.len < self.capacity && self.head != self.len {
+            return Err(format!(
+                "replay head {} inconsistent with len {} before wrap",
+                self.head, self.len
+            ));
+        }
+        let want = [
+            ("obs", self.len * self.obs_dim, self.obs.len()),
+            ("actions", self.len * self.act_dim, self.actions.len()),
+            ("rewards", self.len, self.rewards.len()),
+            ("next_obs", self.len * self.obs_dim, self.next_obs.len()),
+            ("dones", self.len, self.dones.len()),
+        ];
+        for (name, want, got) in want {
+            if want != got {
+                return Err(format!("replay {name} holds {got} values, expected {want}"));
+            }
+        }
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -172,6 +263,47 @@ mod tests {
         for i in 0..16 {
             assert_eq!(b.next_obs.at2(i, 0), b.obs.at2(i, 0) + 1.0);
         }
+    }
+
+    #[test]
+    fn state_roundtrip_unwrapped_and_wrapped() {
+        for n in [5usize, 20] {
+            let mut buf = ReplayBuffer::new(8, 2, 1);
+            push_n(&mut buf, n);
+            let s = buf.state();
+            assert_eq!(s.len, n.min(8));
+            assert_eq!(s.head, if n < 8 { n } else { n % 8 });
+            let restored = ReplayBuffer::from_state(&s);
+            assert_eq!(restored.state(), s);
+            // Continuing the streams must agree bit for bit: same push slot,
+            // same sampled rows under the same RNG.
+            let mut a = buf;
+            let mut b = restored;
+            push_n(&mut a, 3);
+            push_n(&mut b, 3);
+            assert_eq!(a.state(), b.state());
+            let (mut ra, mut rb) = (Pcg32::new(9, 9), Pcg32::new(9, 9));
+            let (ba, bb) = (a.sample(6, &mut ra), b.sample(6, &mut rb));
+            assert_eq!(ba.indices, bb.indices);
+            assert_eq!(ba.obs.data(), bb.obs.data());
+        }
+    }
+
+    #[test]
+    fn state_validate_rejects_inconsistency() {
+        let mut buf = ReplayBuffer::new(8, 2, 1);
+        push_n(&mut buf, 4);
+        let good = buf.state();
+        assert!(good.validate().is_ok());
+        let mut bad = good.clone();
+        bad.head = 7; // head must equal len before the ring wraps
+        assert!(bad.validate().is_err());
+        let mut bad = good.clone();
+        bad.rewards.pop();
+        assert!(bad.validate().is_err());
+        let mut bad = good;
+        bad.len = 9; // exceeds capacity
+        assert!(bad.validate().is_err());
     }
 
     #[test]

@@ -14,10 +14,18 @@
 //!   deadline-based batching window, with bounded-queue admission
 //!   control. Served logits are bit-identical to a direct
 //!   single-observation forward (the engines' batch/scalar parity
-//!   contract does the heavy lifting).
+//!   contract does the heavy lifting). The server has an explicit
+//!   lifecycle: Ready -> Draining ([`PolicyServer::begin_drain`] /
+//!   [`PolicyServer::shutdown`]) flushes queued work under a deadline
+//!   and bounces late queries with [`QueryError::Draining`] instead of
+//!   wedging on live clients; per-batch straggler detection
+//!   ([`ServeConfig::slow_batch`]) and scripted
+//!   [`crate::faults::FaultPlan`] stalls make the slow-tail behavior
+//!   measurable and testable.
 //! * [`stats`] — O(1)-memory log-linear latency histogram
 //!   ([`LatencyHist`], p50/p99 within 25%), batch-size distribution
-//!   ([`BatchHist`]), and the [`ServeReport`] a shutdown returns.
+//!   ([`BatchHist`]), and the [`ServeReport`] a shutdown returns
+//!   (including `slow_batches` and `drain_rejected` tallies).
 //!
 //! `cargo bench --bench bench_serve` and `quarl exp serve` drive this
 //! stack across precisions and client counts and write the histogram

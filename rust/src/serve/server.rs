@@ -20,13 +20,35 @@
 //! scalar path (pinned by `rust/tests/engine_parity.rs`), coalescing is
 //! invisible to clients: a served query returns exactly the bytes a
 //! direct [`Engine::forward`] call would have produced.
+//!
+//! # Lifecycle: Ready → Draining → exited
+//!
+//! The server starts **Ready** and serves until either every client
+//! handle is dropped (the original teardown path) or someone calls
+//! [`PolicyServer::begin_drain`] / [`PolicyServer::shutdown`]. A
+//! **Draining** server flushes what is already queued — full batches,
+//! no window waits — under a [`ServeConfig::drain`] deadline, then
+//! rejects whatever remains (and any late submission) with
+//! [`QueryError::Draining`]. Shutdown therefore completes even while
+//! clients are still alive; the old "drop every client first or join
+//! blocks forever" footgun is gone.
+//!
+//! The loop also watches for **stragglers**: a dispatched batch whose
+//! wall time exceeds [`ServeConfig::slow_batch`] is tallied in
+//! [`ServeReport::slow_batches`] (detection is off at the default
+//! `Duration::ZERO`). A [`crate::faults::FaultPlan`] handed to
+//! [`PolicyServer::spawn_faulted`] can stall scripted batches
+//! (`slow_batch(nth, ms)`) to exercise the detector deterministically.
 
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender, TrySendError};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{
+    sync_channel, Receiver, RecvTimeoutError, SyncSender, TryRecvError, TrySendError,
+};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
+use crate::faults::FaultPlan;
 use crate::inference::Engine;
 use crate::serve::stats::{BatchHist, LatencyHist, ServeReport};
 
@@ -41,6 +63,14 @@ pub struct ServeConfig {
     /// Bounded request-queue depth for admission control; submissions
     /// beyond it are rejected at the client.
     pub queue_capacity: usize,
+    /// Drain budget: once draining begins, how long the loop may keep
+    /// flushing queued requests before rejecting the remainder with
+    /// [`QueryError::Draining`].
+    pub drain: Duration,
+    /// Straggler deadline: a dispatched batch slower than this counts
+    /// toward [`ServeReport::slow_batches`]. `Duration::ZERO` (the
+    /// default) disables detection.
+    pub slow_batch: Duration,
 }
 
 impl Default for ServeConfig {
@@ -49,6 +79,8 @@ impl Default for ServeConfig {
             max_batch: 32,
             window: Duration::from_micros(250),
             queue_capacity: 1024,
+            drain: Duration::from_millis(500),
+            slow_batch: Duration::ZERO,
         }
     }
 }
@@ -60,6 +92,9 @@ pub enum QueryError {
     Overloaded,
     /// The server thread is gone (shut down or crashed).
     Closed,
+    /// The server is draining: it is flushing already-queued work and
+    /// accepts no new queries.
+    Draining,
     /// The engine rejected the batch; every query in it gets the message.
     Engine(String),
     /// Observation width does not match the engine's input layer.
@@ -71,6 +106,7 @@ impl std::fmt::Display for QueryError {
         match self {
             QueryError::Overloaded => write!(f, "server overloaded (request queue full)"),
             QueryError::Closed => write!(f, "server closed"),
+            QueryError::Draining => write!(f, "server draining (shutdown in progress)"),
             QueryError::Engine(m) => write!(f, "engine error: {m}"),
             QueryError::Shape { got, want } => {
                 write!(f, "observation width {got}, engine expects {want}")
@@ -80,6 +116,14 @@ impl std::fmt::Display for QueryError {
 }
 
 impl std::error::Error for QueryError {}
+
+/// State shared between clients, the server handle, and the serve
+/// loop: the lifecycle flag plus the client-side reject counters.
+struct ServeShared {
+    draining: AtomicBool,
+    rejected: AtomicU64,
+    drain_rejected: AtomicU64,
+}
 
 /// One in-flight query: the observation, when it entered the queue (the
 /// latency clock starts here, so queueing delay is part of what the
@@ -91,13 +135,14 @@ struct Request {
 }
 
 /// Client handle: submit observations, get logits. Cheap to clone; one
-/// per querying thread. **Drop every client before calling
-/// [`PolicyServer::shutdown`]** — the server thread exits when the last
-/// client hangs up.
+/// per querying thread. Clients may outlive the server: once a drain
+/// begins (or the server exits) their queries fail fast with
+/// [`QueryError::Draining`] / [`QueryError::Closed`] instead of
+/// wedging shutdown.
 #[derive(Clone)]
 pub struct ServeClient {
     tx: SyncSender<Request>,
-    rejected: Arc<AtomicU64>,
+    shared: Arc<ServeShared>,
     in_dim: usize,
     out_dim: usize,
 }
@@ -105,17 +150,22 @@ pub struct ServeClient {
 impl ServeClient {
     /// Blocking round-trip: enqueue `obs`, wait for its logits. Fails
     /// fast with [`QueryError::Overloaded`] when admission control
-    /// bounces the submission (never blocks on a full queue).
+    /// bounces the submission (never blocks on a full queue) and with
+    /// [`QueryError::Draining`] once shutdown has begun.
     pub fn query(&self, obs: &[f32]) -> Result<Vec<f32>, QueryError> {
         if obs.len() != self.in_dim {
             return Err(QueryError::Shape { got: obs.len(), want: self.in_dim });
+        }
+        if self.shared.draining.load(Ordering::SeqCst) {
+            self.shared.drain_rejected.fetch_add(1, Ordering::Relaxed);
+            return Err(QueryError::Draining);
         }
         let (reply_tx, reply_rx) = sync_channel(1);
         let req = Request { obs: obs.to_vec(), enqueued: Instant::now(), reply: reply_tx };
         match self.tx.try_send(req) {
             Ok(()) => {}
             Err(TrySendError::Full(_)) => {
-                self.rejected.fetch_add(1, Ordering::Relaxed);
+                self.shared.rejected.fetch_add(1, Ordering::Relaxed);
                 return Err(QueryError::Overloaded);
             }
             Err(TrySendError::Disconnected(_)) => return Err(QueryError::Closed),
@@ -130,11 +180,12 @@ impl ServeClient {
 }
 
 /// The serving back-end: owns the engine thread. Built by
-/// [`PolicyServer::spawn`]; torn down by [`PolicyServer::shutdown`],
-/// which returns the run's [`ServeReport`].
+/// [`PolicyServer::spawn`] (or [`PolicyServer::spawn_faulted`] with a
+/// chaos script); torn down by [`PolicyServer::shutdown`], which drains
+/// and returns the run's [`ServeReport`].
 pub struct PolicyServer {
     handle: JoinHandle<ServeReport>,
-    rejected: Arc<AtomicU64>,
+    shared: Arc<ServeShared>,
 }
 
 impl PolicyServer {
@@ -142,54 +193,104 @@ impl PolicyServer {
     /// server plus the first [`ServeClient`] (clone it per querying
     /// thread).
     pub fn spawn<E: Engine + Send + 'static>(
-        mut engine: E,
+        engine: E,
         cfg: ServeConfig,
     ) -> (PolicyServer, ServeClient) {
-        let max_batch = cfg.max_batch.max(1);
+        PolicyServer::spawn_faulted(engine, cfg, None)
+    }
+
+    /// [`PolicyServer::spawn`] with an optional fault script: scripted
+    /// `slow_batch(nth, ms)` entries stall the matching dispatch inside
+    /// the serve thread (the injected stall counts toward the straggler
+    /// deadline like any real slowdown).
+    pub fn spawn_faulted<E: Engine + Send + 'static>(
+        mut engine: E,
+        cfg: ServeConfig,
+        faults: Option<Arc<FaultPlan>>,
+    ) -> (PolicyServer, ServeClient) {
         let (tx, rx) = sync_channel::<Request>(cfg.queue_capacity.max(1));
-        let rejected = Arc::new(AtomicU64::new(0));
+        let shared = Arc::new(ServeShared {
+            draining: AtomicBool::new(false),
+            rejected: AtomicU64::new(0),
+            drain_rejected: AtomicU64::new(0),
+        });
         let client = ServeClient {
             tx,
-            rejected: Arc::clone(&rejected),
+            shared: Arc::clone(&shared),
             in_dim: engine.in_dim(),
             out_dim: engine.out_dim(),
         };
+        let loop_shared = Arc::clone(&shared);
         let handle = std::thread::Builder::new()
             .name("quarl-serve".into())
-            .spawn(move || serve_loop(&mut engine, &rx, max_batch, cfg.window))
+            .spawn(move || serve_loop(&mut engine, &rx, cfg, &loop_shared, faults.as_deref()))
             .expect("spawn serve thread");
-        (PolicyServer { handle, rejected }, client)
+        (PolicyServer { handle, shared }, client)
     }
 
     /// Queries bounced by admission control so far (live counter; the
     /// final figure is also in the shutdown report).
     pub fn rejected(&self) -> u64 {
-        self.rejected.load(Ordering::Relaxed)
+        self.shared.rejected.load(Ordering::Relaxed)
     }
 
-    /// Wait for the server thread to drain and exit, then return its
-    /// measurements. The thread exits when every [`ServeClient`] clone
-    /// has been dropped — drop them first or this blocks forever.
+    /// Flip the server to Draining without waiting for it to exit: new
+    /// queries fail fast with [`QueryError::Draining`]; the serve loop
+    /// flushes what is already queued under the [`ServeConfig::drain`]
+    /// deadline. Idempotent.
+    pub fn begin_drain(&self) {
+        self.shared.draining.store(true, Ordering::SeqCst);
+    }
+
+    /// Drain and stop the server, then return its measurements.
+    /// Completes even while [`ServeClient`] clones are still alive:
+    /// already-queued requests are flushed (up to the drain deadline),
+    /// everything later is rejected with [`QueryError::Draining`].
     pub fn shutdown(self) -> ServeReport {
+        self.begin_drain();
         let mut report = self.handle.join().expect("serve thread panicked");
-        report.rejected = self.rejected.load(Ordering::Relaxed);
+        report.rejected = self.shared.rejected.load(Ordering::Relaxed);
+        // Client-side drain bounces join the loop-side flush rejects.
+        report.drain_rejected += self.shared.drain_rejected.load(Ordering::Relaxed);
         report
     }
 }
 
-/// Collect one batch: block for the first request, then take everything
-/// that arrives within `window` of dequeuing it (never past
-/// `max_batch`). Returns `false` when all clients have hung up.
+/// What one `collect_batch` call produced.
+enum Collect {
+    /// A non-empty batch is ready to dispatch.
+    Ready,
+    /// The drain flag flipped while waiting for a first request.
+    Drain,
+    /// Every client hung up; the queue can never refill.
+    Disconnected,
+}
+
+/// Granularity at which the idle wait re-checks the drain flag. Coarse
+/// enough to stay off the profile, fine enough that `shutdown` on an
+/// idle server returns promptly.
+const DRAIN_POLL: Duration = Duration::from_millis(5);
+
+/// Collect one batch: wait for the first request (re-checking the drain
+/// flag every [`DRAIN_POLL`]), then take everything that arrives within
+/// `window` of dequeuing it (never past `max_batch`).
 fn collect_batch(
     rx: &Receiver<Request>,
     max_batch: usize,
     window: Duration,
     batch: &mut Vec<Request>,
-) -> bool {
+    draining: &AtomicBool,
+) -> Collect {
     batch.clear();
-    let first = match rx.recv() {
-        Ok(r) => r,
-        Err(_) => return false,
+    let first = loop {
+        if draining.load(Ordering::SeqCst) {
+            return Collect::Drain;
+        }
+        match rx.recv_timeout(DRAIN_POLL) {
+            Ok(r) => break r,
+            Err(RecvTimeoutError::Timeout) => continue,
+            Err(RecvTimeoutError::Disconnected) => return Collect::Disconnected,
+        }
     };
     let deadline = Instant::now() + window;
     batch.push(first);
@@ -206,56 +307,172 @@ fn collect_batch(
             Err(RecvTimeoutError::Disconnected) => break,
         }
     }
-    true
+    Collect::Ready
+}
+
+/// Reusable per-batch row scratch (input tile + output tile).
+struct Scratch {
+    xs: Vec<f32>,
+    out: Vec<f32>,
+}
+
+/// Counters and histograms the loop accumulates into the final report.
+struct LoopStats {
+    latency: LatencyHist,
+    batches: BatchHist,
+    queries: u64,
+    slow_batches: u64,
+    drain_rejected: u64,
+    started: Option<Instant>,
+}
+
+/// Dispatch one collected batch through the engine and reply to every
+/// request in it. Times the dispatch (including any fault-injected
+/// stall) against the straggler deadline.
+fn dispatch<E: Engine>(
+    engine: &mut E,
+    batch: &mut Vec<Request>,
+    scratch: &mut Scratch,
+    out_dim: usize,
+    stats: &mut LoopStats,
+    slow_deadline: Duration,
+    faults: Option<&FaultPlan>,
+) {
+    stats.started.get_or_insert_with(Instant::now);
+    let b = batch.len();
+    let t0 = Instant::now();
+    if let Some(plan) = faults {
+        if let Some(stall) = plan.on_batch() {
+            std::thread::sleep(stall);
+        }
+    }
+    scratch.xs.clear();
+    for req in batch.iter() {
+        scratch.xs.extend_from_slice(&req.obs);
+    }
+    scratch.out.clear();
+    scratch.out.resize(b * out_dim, 0.0);
+    match engine.forward_batch(&scratch.xs, b, &mut scratch.out) {
+        Ok(()) => {
+            for (i, req) in batch.drain(..).enumerate() {
+                let row = scratch.out[i * out_dim..(i + 1) * out_dim].to_vec();
+                stats.latency.record(req.enqueued.elapsed());
+                stats.queries += 1;
+                // A client that gave up is its own problem.
+                let _ = req.reply.send(Ok(row));
+            }
+            stats.batches.record(b);
+        }
+        Err(e) => {
+            let msg = e.to_string();
+            for req in batch.drain(..) {
+                let _ = req.reply.send(Err(QueryError::Engine(msg.clone())));
+            }
+        }
+    }
+    if slow_deadline > Duration::ZERO && t0.elapsed() > slow_deadline {
+        stats.slow_batches += 1;
+    }
+}
+
+/// Drain phase: flush already-queued requests in full batches with no
+/// window waits until the queue empties or the drain deadline passes,
+/// then reject whatever remains with [`QueryError::Draining`].
+#[allow(clippy::too_many_arguments)]
+fn drain_queue<E: Engine>(
+    engine: &mut E,
+    rx: &Receiver<Request>,
+    batch: &mut Vec<Request>,
+    scratch: &mut Scratch,
+    out_dim: usize,
+    stats: &mut LoopStats,
+    cfg: &ServeConfig,
+    faults: Option<&FaultPlan>,
+) {
+    let max_batch = cfg.max_batch.max(1);
+    let deadline = Instant::now() + cfg.drain;
+    batch.clear();
+    while Instant::now() < deadline {
+        match rx.try_recv() {
+            Ok(r) => {
+                batch.push(r);
+                if batch.len() >= max_batch {
+                    dispatch(engine, batch, scratch, out_dim, stats, cfg.slow_batch, faults);
+                }
+            }
+            Err(TryRecvError::Empty) => {
+                if batch.is_empty() {
+                    return; // queue flushed clean
+                }
+                dispatch(engine, batch, scratch, out_dim, stats, cfg.slow_batch, faults);
+            }
+            Err(TryRecvError::Disconnected) => {
+                if !batch.is_empty() {
+                    dispatch(engine, batch, scratch, out_dim, stats, cfg.slow_batch, faults);
+                }
+                return;
+            }
+        }
+    }
+    // Past the deadline: bounce the partial batch and the still-queued
+    // remainder instead of wedging on a slow engine.
+    for req in batch.drain(..) {
+        let _ = req.reply.send(Err(QueryError::Draining));
+        stats.drain_rejected += 1;
+    }
+    while let Ok(req) = rx.try_recv() {
+        let _ = req.reply.send(Err(QueryError::Draining));
+        stats.drain_rejected += 1;
+    }
 }
 
 fn serve_loop<E: Engine>(
     engine: &mut E,
     rx: &Receiver<Request>,
-    max_batch: usize,
-    window: Duration,
+    cfg: ServeConfig,
+    shared: &ServeShared,
+    faults: Option<&FaultPlan>,
 ) -> ServeReport {
+    let max_batch = cfg.max_batch.max(1);
     let in_dim = engine.in_dim();
     let out_dim = engine.out_dim();
-    let mut latency = LatencyHist::new();
-    let mut batches = BatchHist::new(max_batch);
-    let mut queries = 0u64;
-    let mut started: Option<Instant> = None;
+    let mut stats = LoopStats {
+        latency: LatencyHist::new(),
+        batches: BatchHist::new(max_batch),
+        queries: 0,
+        slow_batches: 0,
+        drain_rejected: 0,
+        started: None,
+    };
     let mut batch: Vec<Request> = Vec::with_capacity(max_batch);
-    let mut xs: Vec<f32> = Vec::with_capacity(max_batch * in_dim);
-    let mut out: Vec<f32> = Vec::with_capacity(max_batch * out_dim);
+    let mut scratch = Scratch {
+        xs: Vec::with_capacity(max_batch * in_dim),
+        out: Vec::with_capacity(max_batch * out_dim),
+    };
 
-    while collect_batch(rx, max_batch, window, &mut batch) {
-        started.get_or_insert_with(Instant::now);
-        let b = batch.len();
-        xs.clear();
-        for req in &batch {
-            xs.extend_from_slice(&req.obs);
-        }
-        out.clear();
-        out.resize(b * out_dim, 0.0);
-        match engine.forward_batch(&xs, b, &mut out) {
-            Ok(()) => {
-                for (i, req) in batch.drain(..).enumerate() {
-                    let row = out[i * out_dim..(i + 1) * out_dim].to_vec();
-                    latency.record(req.enqueued.elapsed());
-                    queries += 1;
-                    // A client that gave up is its own problem.
-                    let _ = req.reply.send(Ok(row));
-                }
-                batches.record(b);
+    loop {
+        match collect_batch(rx, max_batch, cfg.window, &mut batch, &shared.draining) {
+            Collect::Disconnected => break,
+            Collect::Ready => {
+                dispatch(engine, &mut batch, &mut scratch, out_dim, &mut stats, cfg.slow_batch, faults);
             }
-            Err(e) => {
-                let msg = e.to_string();
-                for req in batch.drain(..) {
-                    let _ = req.reply.send(Err(QueryError::Engine(msg.clone())));
-                }
+            Collect::Drain => {
+                drain_queue(engine, rx, &mut batch, &mut scratch, out_dim, &mut stats, &cfg, faults);
+                break;
             }
         }
     }
 
-    let wall_secs = started.map(|t| t.elapsed().as_secs_f64()).unwrap_or(0.0);
-    ServeReport { queries, rejected: 0, latency, batches, wall_secs }
+    let wall_secs = stats.started.map(|t| t.elapsed().as_secs_f64()).unwrap_or(0.0);
+    ServeReport {
+        queries: stats.queries,
+        rejected: 0,
+        latency: stats.latency,
+        batches: stats.batches,
+        wall_secs,
+        slow_batches: stats.slow_batches,
+        drain_rejected: stats.drain_rejected,
+    }
 }
 
 #[cfg(test)]
@@ -308,6 +525,7 @@ mod tests {
             max_batch: 4,
             window: Duration::from_secs(5),
             queue_capacity: 16,
+            ..ServeConfig::default()
         };
         let (server, client) = PolicyServer::spawn(engine, cfg);
         let joins: Vec<_> = (0..4)
@@ -369,6 +587,7 @@ mod tests {
             max_batch: 1,
             window: Duration::ZERO,
             queue_capacity: 1,
+            ..ServeConfig::default()
         };
         let (entered_tx, entered_rx) = std::sync::mpsc::channel();
         let (release_tx, release_rx) = std::sync::mpsc::channel();
@@ -428,5 +647,137 @@ mod tests {
         let report = server.shutdown();
         assert_eq!(report.queries, 0);
         assert_eq!(report.wall_secs, 0.0, "no query ever started the wall clock");
+    }
+
+    /// Regression for the shutdown wedge: `shutdown` used to block until
+    /// every client clone was dropped. It must now return with clients
+    /// deliberately retained, and late queries must bounce with
+    /// `Draining` rather than hang.
+    #[test]
+    fn shutdown_returns_with_a_retained_client_and_bounces_late_queries() {
+        let dims = [8, 16, 4];
+        let params = mlp_params(&dims, 9);
+        let engine = EngineF32::from_params(&params).unwrap();
+        let cfg = ServeConfig { drain: Duration::from_millis(200), ..ServeConfig::default() };
+        let (server, client) = PolicyServer::spawn(engine, cfg);
+        assert!(client.query(&obs_for(0, dims[0])).is_ok());
+        server.begin_drain();
+        // The drain flag bounces new submissions client-side.
+        assert_eq!(client.query(&obs_for(1, dims[0])).unwrap_err(), QueryError::Draining);
+        // `client` is alive across the join — the old code would never return.
+        let report = server.shutdown();
+        assert_eq!(report.queries, 1);
+        assert_eq!(report.drain_rejected, 1, "the late query counts as drain-rejected");
+        // After exit the channel is gone entirely.
+        assert_eq!(client.query(&obs_for(2, dims[0])).unwrap_err(), QueryError::Draining);
+    }
+
+    /// Draining flushes what is already queued (no window waits) before
+    /// the deadline, and a `Duration::ZERO` drain budget rejects queued
+    /// work with `Draining` instead of wedging on a slow engine.
+    #[test]
+    fn drain_flushes_queued_requests_then_deadline_rejects_the_rest() {
+        // Flush case: gated engine holds the first batch; two raw
+        // requests queue behind it; drain must serve them.
+        let cfg = ServeConfig {
+            max_batch: 1,
+            window: Duration::ZERO,
+            queue_capacity: 4,
+            drain: Duration::from_secs(5),
+            ..ServeConfig::default()
+        };
+        let (entered_tx, entered_rx) = std::sync::mpsc::channel();
+        let (release_tx, release_rx) = std::sync::mpsc::channel();
+        let engine = GatedEngine { dims: (4, 2), entered: entered_tx, release: release_rx };
+        let (server, client) = PolicyServer::spawn(engine, cfg);
+        let obs = vec![0.0f32; 4];
+        let c0 = client.clone();
+        let o0 = obs.clone();
+        let first = std::thread::spawn(move || c0.query(&o0));
+        entered_rx.recv().expect("engine never entered forward_batch");
+        let fillers: Vec<_> = (0..2)
+            .map(|_| {
+                let (ftx, frx) = sync_channel(1);
+                let req = Request { obs: obs.clone(), enqueued: Instant::now(), reply: ftx };
+                client.tx.try_send(req).expect("queue slot");
+                frx
+            })
+            .collect();
+        server.begin_drain();
+        // Release every batch: the in-flight one plus one per queued filler.
+        for _ in 0..3 {
+            release_tx.send(()).unwrap();
+        }
+        assert!(first.join().unwrap().is_ok());
+        for frx in &fillers {
+            assert!(frx.recv().unwrap().is_ok(), "queued request must be flushed, not rejected");
+        }
+        let report = server.shutdown();
+        assert_eq!(report.queries, 3);
+        assert_eq!(report.drain_rejected, 0);
+
+        // Deadline case: same setup, zero drain budget — queued requests
+        // are bounced the moment the loop reaches the drain phase.
+        let cfg = ServeConfig {
+            max_batch: 1,
+            window: Duration::ZERO,
+            queue_capacity: 4,
+            drain: Duration::ZERO,
+            ..ServeConfig::default()
+        };
+        let (entered_tx, entered_rx) = std::sync::mpsc::channel();
+        let (release_tx, release_rx) = std::sync::mpsc::channel();
+        let engine = GatedEngine { dims: (4, 2), entered: entered_tx, release: release_rx };
+        let (server, client) = PolicyServer::spawn(engine, cfg);
+        let c0 = client.clone();
+        let o0 = obs.clone();
+        let first = std::thread::spawn(move || c0.query(&o0));
+        entered_rx.recv().expect("engine never entered forward_batch");
+        let fillers: Vec<_> = (0..2)
+            .map(|_| {
+                let (ftx, frx) = sync_channel(1);
+                let req = Request { obs: obs.clone(), enqueued: Instant::now(), reply: ftx };
+                client.tx.try_send(req).expect("queue slot");
+                frx
+            })
+            .collect();
+        server.begin_drain();
+        release_tx.send(()).unwrap(); // only the in-flight batch completes
+        assert!(first.join().unwrap().is_ok());
+        for frx in &fillers {
+            assert_eq!(
+                frx.recv().unwrap().unwrap_err(),
+                QueryError::Draining,
+                "zero drain budget must reject queued work"
+            );
+        }
+        let report = server.shutdown();
+        assert_eq!(report.queries, 1);
+        assert_eq!(report.drain_rejected, 2);
+        drop(release_tx);
+    }
+
+    /// A scripted `slow_batch` stall pushes the dispatch past the
+    /// straggler deadline and is tallied — deterministically, because
+    /// the stall is injected, not load-dependent.
+    #[test]
+    fn scripted_slow_batch_trips_the_straggler_counter() {
+        let dims = [8, 16, 4];
+        let params = mlp_params(&dims, 21);
+        let engine = EngineF32::from_params(&params).unwrap();
+        let cfg = ServeConfig {
+            slow_batch: Duration::from_millis(5),
+            ..ServeConfig::default()
+        };
+        let plan = Arc::new(FaultPlan::new(7).slow_batch(2, 30));
+        let (server, client) = PolicyServer::spawn_faulted(engine, cfg, Some(Arc::clone(&plan)));
+        for i in 0..3 {
+            assert!(client.query(&obs_for(i, dims[0])).is_ok());
+        }
+        drop(client);
+        let report = server.shutdown();
+        assert_eq!(report.queries, 3);
+        assert_eq!(report.slow_batches, 1, "exactly the stalled batch is a straggler");
+        assert_eq!(plan.count(crate::faults::FaultKind::SlowBatch), 1);
     }
 }

@@ -201,6 +201,13 @@ pub struct ServeReport {
     pub batches: BatchHist,
     /// Wall seconds from the first request to server exit.
     pub wall_secs: f64,
+    /// Dispatched batches that ran past the configured slow-batch
+    /// deadline (stragglers; 0 when detection is disabled).
+    pub slow_batches: u64,
+    /// Queries rejected because the server was draining: late
+    /// submissions bounced client-side plus queued requests flushed out
+    /// past the drain deadline.
+    pub drain_rejected: u64,
 }
 
 impl ServeReport {

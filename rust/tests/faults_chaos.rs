@@ -1,29 +1,37 @@
 //! Chaos property suite for the crash-safe ActorQ stack: a seeded run
 //! with scripted faults (actor kill mid-run, dropped + failed hub
-//! publishes, flaky client connects) must reach the same step budget
-//! and the **bit-identical** final engine as the fault-free run at the
-//! same seed — at fp32 and every packed width 2..=8. Same bar for a
-//! learner killed mid-run and resumed from its QCKP checkpoint. And a
-//! checkpoint blob must reject *every* single-byte corruption and
-//! *every* truncation as a typed error before any state is restored.
+//! publishes, severed partition windows, flaky client connects) must
+//! reach the same step budget and the **bit-identical** final engine as
+//! the fault-free run at the same seed — at fp32 and every supported
+//! width (int1, ternary, int2..=int8). Same bar for a learner killed
+//! mid-run and resumed from its QCKP checkpoint, for a learner *hung*
+//! mid-run and restarted by the watchdog, and for resumed *prioritized
+//! sampling* when the checkpoint carries a durable replay section. And
+//! a checkpoint blob — with or without replay — must reject *every*
+//! single-byte corruption and *every* truncation as a typed error
+//! before any state is restored.
 //!
 //! The learner is the stub train program also used by `exp faults`:
 //! parameter evolution is a pure function of (train count, learner RNG
-//! stream), and the pacer owes exactly `(total - warmup) / train_freq`
-//! trains at equal env-step budget — so any divergence is a real
-//! recovery bug, not scheduling noise.
+//! stream) — plus, in the replay-coupled runs, of replay state the QCKP
+//! replay section restores exactly — and the pacer owes exactly
+//! `(total - warmup) / train_freq` trains at equal env-step budget — so
+//! any divergence is a real recovery bug, not scheduling noise.
 
 use std::cell::RefCell;
 use std::sync::Arc;
 use std::time::Duration;
 
+use quarl::actorq::watchdog::supervise;
 use quarl::actorq::{
-    ActorQConfig, Checkpoint, CheckpointPolicy, CheckpointState, HarnessConfig, LearnerHarness,
-    ParamBroadcast, Precision, ReturnLog,
+    ActorQConfig, Checkpoint, CheckpointPolicy, CheckpointState, HarnessConfig, Heartbeat,
+    LearnerHarness, ParamBroadcast, Precision, ReplayCkpt, ReplaySection, RestartCause,
+    ReturnLog, WatchdogConfig,
 };
 use quarl::algos::common::EpsSchedule;
-use quarl::faults::FaultPlan;
+use quarl::faults::{FaultKind, FaultPlan};
 use quarl::inference::Engine;
+use quarl::replay::{PrioritizedReplay, ReplayBuffer, Transition};
 use quarl::rng::Pcg32;
 use quarl::runtime::manifest::TensorSpec;
 use quarl::runtime::ParamSet;
@@ -34,6 +42,9 @@ const TOTAL_STEPS: usize = 260;
 const WARMUP: usize = 100;
 const TRAIN_FREQ: usize = 2;
 const SEED: u64 = 77;
+/// Replay capacity for the replay-coupled runs — small enough that the
+/// ring wraps, so checkpoints cover a wrapped buffer.
+const REPLAY_CAP: usize = 64;
 
 fn init_params(seed: u64) -> ParamSet {
     let mut specs = Vec::new();
@@ -53,25 +64,61 @@ fn exploration() -> quarl::actorq::Exploration {
 }
 
 fn all_precisions() -> Vec<Precision> {
-    let mut ps = vec![Precision::Fp32];
+    let mut ps = vec![Precision::Fp32, Precision::Int(1), Precision::Ternary];
     ps.extend((2..=8).map(Precision::Int));
     ps
 }
 
-/// Run the stub learner to completion and return the probe signature of
-/// the final published engine (raw logit bits at seeded inputs).
-fn run_and_probe(
+/// One stub-learner run; every optional lever the suite pulls.
+struct RunSpec<'a> {
     precision: Precision,
     faults: Option<Arc<FaultPlan>>,
     ckpt: Option<CheckpointPolicy>,
-    resume_from: Option<&Checkpoint>,
+    resume_from: Option<&'a Checkpoint>,
     crash_after: Option<usize>,
     hub: Option<Arc<SnapshotHub>>,
-) -> Result<(Vec<u32>, usize, usize), quarl::Error> {
+    /// Watchdog heartbeat: beat once per train call and honor scripted
+    /// `hang_learner` faults by parking until cancelled.
+    watchdog: Option<&'a Heartbeat>,
+    /// Couple the drift to a prioritized replay buffer (pushes and
+    /// samples are pure functions of the *global* train index), and
+    /// include the full replay section in checkpoints.
+    replay: bool,
+}
+
+impl<'a> RunSpec<'a> {
+    fn new(precision: Precision) -> RunSpec<'a> {
+        RunSpec {
+            precision,
+            faults: None,
+            ckpt: None,
+            resume_from: None,
+            crash_after: None,
+            hub: None,
+            watchdog: None,
+            replay: false,
+        }
+    }
+}
+
+/// Run the stub learner to completion and return the probe signature of
+/// the final published engine (raw logit bits at seeded inputs), the
+/// train count, and the actor-restart count.
+fn run_spec(spec: RunSpec) -> Result<(Vec<u32>, usize, usize), quarl::Error> {
+    let RunSpec { precision, faults, ckpt, resume_from, crash_after, hub, watchdog, replay } =
+        spec;
     let (params, rng) = match resume_from {
         Some(c) => (c.params.clone(), c.rng()),
         None => (init_params(SEED), Pcg32::new(SEED, 4242)),
     };
+    let (per_init, sampler_init) = match resume_from.and_then(|c| c.replay.as_ref()) {
+        Some(rs) if replay => match &rs.replay {
+            ReplayCkpt::Prioritized(st) => (PrioritizedReplay::from_state(st), rs.sampler()),
+            ReplayCkpt::Uniform(_) => panic!("replay-coupled run checkpoints PER"),
+        },
+        _ => (PrioritizedReplay::new(REPLAY_CAP, DIMS[0], 1, 0.6), Pcg32::new(SEED, 555)),
+    };
+    let base = resume_from.map(|c| c.train_steps as usize).unwrap_or(0);
     let mut acfg = ActorQConfig::new(2).with_precision(precision);
     acfg.restart_backoff = Duration::from_millis(2);
     let hcfg = HarnessConfig {
@@ -84,7 +131,7 @@ fn run_and_probe(
         exploration: exploration(),
         returns: ReturnLog::TailMean,
         acfg: &acfg,
-        faults,
+        faults: faults.clone(),
         ckpt: ckpt.clone(),
         resume: resume_from.map(|c| c.resume_point()),
     };
@@ -95,17 +142,64 @@ fn run_and_probe(
     let broadcast = harness.broadcast.clone();
     let pstate = RefCell::new(params);
     let rstate = RefCell::new(rng);
+    let per = RefCell::new(per_init);
+    let sampler = RefCell::new(sampler_init);
     let mut calls = 0usize;
     let train = |_step: usize, publish: bool| -> Result<Option<f32>, quarl::Error> {
+        if let Some(hb) = watchdog {
+            hb.beat();
+        }
+        let t = base + calls + 1; // 1-based global train index about to run
+        if let Some(plan) = faults.as_deref() {
+            if plan.learner_should_hang(t) {
+                // Scripted hang: stop beating and park until the
+                // watchdog cancels the attempt.
+                loop {
+                    match watchdog {
+                        Some(hb) if hb.cancelled() => {
+                            return Err(quarl::Error::Experiment(
+                                "hung learner cancelled by watchdog".into(),
+                            ))
+                        }
+                        Some(_) => std::thread::park_timeout(Duration::from_millis(1)),
+                        None => {
+                            return Err(quarl::Error::Experiment(
+                                "scripted learner hang with no watchdog attached".into(),
+                            ))
+                        }
+                    }
+                }
+            }
+        }
         if crash_after.is_some_and(|limit| calls >= limit) {
             return Err(quarl::Error::Experiment("injected learner crash".into()));
         }
         calls += 1;
         let mut p = pstate.borrow_mut();
         let mut r = rstate.borrow_mut();
-        for t in p.tensors.iter_mut() {
-            for v in t.data_mut() {
-                *v += 0.003 * r.normal();
+        let gain = if replay {
+            let mut per = per.borrow_mut();
+            let mut smp = sampler.borrow_mut();
+            let mut t_rng =
+                Pcg32::new(SEED ^ (t as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15), 777);
+            let obs: Vec<f32> = (0..DIMS[0]).map(|_| t_rng.uniform_range(-1.0, 1.0)).collect();
+            let act = [t_rng.below_usize(DIMS[2]) as f32];
+            let reward = t_rng.uniform();
+            per.push(Transition { obs: &obs, action: &act, reward, next_obs: &obs, done: false });
+            if per.len() >= 8 {
+                let b = per.sample(4, 0.4, &mut smp);
+                let errs: Vec<f32> = b.indices.iter().map(|&i| 0.05 + 0.01 * i as f32).collect();
+                per.update_priorities(&b.indices, &errs);
+                1.0 + 0.01 * b.weights.data().iter().sum::<f32>()
+            } else {
+                1.0
+            }
+        } else {
+            1.0
+        };
+        for tns in p.tensors.iter_mut() {
+            for v in tns.data_mut() {
+                *v += 0.003 * r.normal() * gain;
             }
         }
         if publish {
@@ -116,6 +210,10 @@ fn run_and_probe(
     let mut state_fn = || CheckpointState {
         params: pstate.borrow().clone(),
         rng: rstate.borrow().state_parts(),
+        replay: replay.then(|| ReplaySection {
+            replay: ReplayCkpt::Prioritized(per.borrow().state()),
+            sampler_rng: sampler.borrow().state_parts(),
+        }),
     };
     let state: Option<&mut dyn FnMut() -> CheckpointState> =
         if ckpt.is_some() { Some(&mut state_fn) } else { None };
@@ -144,7 +242,7 @@ fn probe(broadcast: &ParamBroadcast) -> Vec<u32> {
 fn faulted_run_matches_clean_run_bit_for_bit_at_every_width() {
     for precision in all_precisions() {
         let (clean_sig, clean_trains, clean_restarts) =
-            run_and_probe(precision, None, None, None, None, None).unwrap();
+            run_spec(RunSpec::new(precision)).unwrap();
         assert_eq!(clean_restarts, 0);
         assert_eq!(clean_trains, (TOTAL_STEPS - WARMUP) / TRAIN_FREQ);
 
@@ -160,14 +258,11 @@ fn faulted_run_matches_clean_run_bit_for_bit_at_every_width() {
         );
         let hub = Arc::new(SnapshotHub::new());
         let server = SnapshotServer::bind("127.0.0.1:0", Arc::clone(&hub)).unwrap();
-        let (faulted_sig, faulted_trains, restarts) = run_and_probe(
-            precision,
-            Some(plan.clone()),
-            None,
-            None,
-            None,
-            Some(hub),
-        )
+        let (faulted_sig, faulted_trains, restarts) = run_spec(RunSpec {
+            faults: Some(plan.clone()),
+            hub: Some(hub),
+            ..RunSpec::new(precision)
+        })
         .unwrap();
         let label = precision.label();
         assert_eq!(restarts, 1, "{label}: the kill must be absorbed by a respawn");
@@ -209,22 +304,185 @@ fn killed_learner_resumes_from_checkpoint_to_the_same_engine() {
     let _ = std::fs::remove_dir_all(&dir);
     for precision in all_precisions() {
         let label = precision.label();
-        let (clean_sig, clean_trains, _) =
-            run_and_probe(precision, None, None, None, None, None).unwrap();
+        let (clean_sig, clean_trains, _) = run_spec(RunSpec::new(precision)).unwrap();
 
         let path = dir.join(format!("{label}.qckp"));
         let policy = CheckpointPolicy { path: path.clone(), every_trains: 10 };
         let crash_at = clean_trains * 3 / 5;
-        let err = run_and_probe(precision, None, Some(policy), None, Some(crash_at), None)
-            .expect_err("the scripted crash must abort the run");
+        let err = run_spec(RunSpec {
+            ckpt: Some(policy),
+            crash_after: Some(crash_at),
+            ..RunSpec::new(precision)
+        })
+        .expect_err("the scripted crash must abort the run");
         assert!(err.to_string().contains("injected learner crash"), "{label}: {err}");
 
         let ckpt = Checkpoint::read_file(&path).unwrap();
         assert_eq!(ckpt.train_steps as usize, crash_at - crash_at % 10, "{label}");
-        let (resumed_sig, resumed_trains, _) =
-            run_and_probe(precision, None, None, Some(&ckpt), None, None).unwrap();
+        assert!(ckpt.replay.is_none(), "{label}: non-replay runs keep lean checkpoints");
+        let (resumed_sig, resumed_trains, _) = run_spec(RunSpec {
+            resume_from: Some(&ckpt),
+            ..RunSpec::new(precision)
+        })
+        .unwrap();
         assert_eq!(resumed_trains, clean_trains, "{label}: resumed run pays the remainder");
         assert_eq!(resumed_sig, clean_sig, "{label}: resume must be bit-exact");
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// A checkpoint carrying the durable replay section restores the buffer,
+/// `SumTree` priorities, and sampler RNG so exactly that the *resumed
+/// run's prioritized sampling* — which the drift is coupled to — leads
+/// to the bit-identical final engine, at fp32 and the paper's sub-byte
+/// widths.
+#[test]
+fn resumed_prioritized_sampling_is_bit_exact_at_every_width() {
+    let dir = std::env::temp_dir().join("quarl_faults_chaos_replay_resume");
+    let _ = std::fs::remove_dir_all(&dir);
+    for precision in [
+        Precision::Fp32,
+        Precision::Int(1),
+        Precision::Ternary,
+        Precision::Int(2),
+        Precision::Int(4),
+        Precision::Int(8),
+    ] {
+        let label = precision.label();
+        let (clean_sig, clean_trains, _) =
+            run_spec(RunSpec { replay: true, ..RunSpec::new(precision) }).unwrap();
+
+        let path = dir.join(format!("{label}.qckp"));
+        let policy = CheckpointPolicy { path: path.clone(), every_trains: 10 };
+        let crash_at = clean_trains * 3 / 5;
+        run_spec(RunSpec {
+            replay: true,
+            ckpt: Some(policy),
+            crash_after: Some(crash_at),
+            ..RunSpec::new(precision)
+        })
+        .expect_err("the scripted crash must abort the run");
+
+        let ckpt = Checkpoint::read_file(&path).unwrap();
+        let rs = ckpt.replay.as_ref().expect("checkpoint must carry the replay section");
+        assert!(!rs.is_empty(), "{label}: replay rows survived the round trip");
+        assert_eq!(rs.len(), REPLAY_CAP.min(ckpt.train_steps as usize), "{label}");
+        let (resumed_sig, resumed_trains, _) = run_spec(RunSpec {
+            replay: true,
+            resume_from: Some(&ckpt),
+            ..RunSpec::new(precision)
+        })
+        .unwrap();
+        assert_eq!(resumed_trains, clean_trains, "{label}: resumed run pays the remainder");
+        assert_eq!(
+            resumed_sig, clean_sig,
+            "{label}: resumed prioritized sampling must be bit-exact"
+        );
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// A hub partition window severs every publish inside it; the window
+/// heals on the next publish and the run still converges bit-identically
+/// (actors ride the in-process broadcast throughout).
+#[test]
+fn partition_window_heals_and_converges_bit_identically() {
+    let (clean_sig, clean_trains, _) = run_spec(RunSpec::new(Precision::Int(8))).unwrap();
+
+    let plan = Arc::new(FaultPlan::new(SEED).partition(2, 4));
+    let hub = Arc::new(SnapshotHub::new());
+    let server = SnapshotServer::bind("127.0.0.1:0", Arc::clone(&hub)).unwrap();
+    let (sig, trains, restarts) = run_spec(RunSpec {
+        faults: Some(plan.clone()),
+        hub: Some(hub),
+        ..RunSpec::new(Precision::Int(8))
+    })
+    .unwrap();
+    assert_eq!(restarts, 0);
+    assert_eq!(trains, clean_trains, "partition must not change the train budget");
+    assert_eq!(sig, clean_sig, "partitioned run must converge bit-identically");
+    assert_eq!(plan.partition_windows(), 1, "the window was entered");
+    assert_eq!(plan.count(FaultKind::Partition), 2, "publishes 2 and 3 were severed");
+
+    // The hub healed: the post-window publishes landed, and the served
+    // artifact hydrates the bit-identical engine.
+    let client = SnapshotClient::with_config(
+        server.addr(),
+        ClientConfig { jitter_seed: SEED, ..ClientConfig::default() },
+    );
+    let art = client.fetch().unwrap();
+    let mut remote = art.build_engine(Default::default()).unwrap();
+    let mut rng = Pcg32::new(SEED, 99);
+    let mut x = vec![0.0f32; DIMS[0]];
+    let mut y = vec![0.0f32; DIMS[2]];
+    let mut wire_sig = Vec::new();
+    for _ in 0..8 {
+        for v in x.iter_mut() {
+            *v = rng.uniform_range(-1.0, 1.0);
+        }
+        remote.forward(&x, &mut y).unwrap();
+        wire_sig.extend(y.iter().map(|v| v.to_bits()));
+    }
+    assert_eq!(wire_sig, clean_sig, "healed hub must serve the converged engine");
+}
+
+/// The end-to-end crash-safety loop at every supported width: an actor
+/// dies, a partition window severs hub publishes, and the learner hangs
+/// mid-run; the watchdog detects the stale heartbeat, cancels the
+/// attempt, and restarts from the latest checkpoint *including its
+/// replay section* — and the final engine is bit-identical to the
+/// fault-free replay-coupled run's.
+#[test]
+fn watchdog_restart_after_kill_partition_and_hang_is_bit_exact_at_every_width() {
+    let dir = std::env::temp_dir().join("quarl_faults_chaos_watchdog");
+    let _ = std::fs::remove_dir_all(&dir);
+    for precision in all_precisions() {
+        let label = precision.label();
+        let (clean_sig, clean_trains, _) =
+            run_spec(RunSpec { replay: true, ..RunSpec::new(precision) }).unwrap();
+
+        let hang_at = (clean_trains * 2 / 5).max(11);
+        let plan = Arc::new(
+            FaultPlan::new(SEED).kill_actor(0, 40).partition(2, 4).hang_learner(hang_at),
+        );
+        let hub = Arc::new(SnapshotHub::new());
+        let path = dir.join(format!("{label}.qckp"));
+        let _ = std::fs::remove_file(&path);
+        let wcfg = WatchdogConfig {
+            ckpt_path: path.clone(),
+            deadline: Duration::from_millis(200),
+            max_restarts: 2,
+            restart_backoff: Duration::from_millis(2),
+        };
+        let policy = CheckpointPolicy { path: path.clone(), every_trains: 10 };
+        let supervised = supervise(&wcfg, |resume, hb| {
+            run_spec(RunSpec {
+                faults: Some(Arc::clone(&plan)),
+                ckpt: Some(policy.clone()),
+                resume_from: resume.as_ref(),
+                hub: Some(Arc::clone(&hub)),
+                watchdog: Some(hb),
+                replay: true,
+                ..RunSpec::new(precision)
+            })
+        })
+        .unwrap();
+        assert!(
+            supervised.restart_count() >= 1,
+            "{label}: the hang must be detected and restarted"
+        );
+        assert!(
+            supervised.restarts.iter().any(|r| r.cause == RestartCause::Hang),
+            "{label}: at least one restart must be heartbeat-driven, got {:?}",
+            supervised.restarts.iter().map(|r| &r.cause).collect::<Vec<_>>()
+        );
+        assert!(supervised.recovery_ms() > 0.0, "{label}");
+        let (sig, trains, _) = supervised.value;
+        assert_eq!(trains, clean_trains, "{label}: the restart pays the remaining trains");
+        assert_eq!(sig, clean_sig, "{label}: watchdog recovery must be bit-exact");
+        assert_eq!(plan.count(FaultKind::ActorKill), 1, "{label}: the kill fired");
+        assert_eq!(plan.partition_windows(), 1, "{label}: the partition was observed");
+        assert_eq!(plan.count(FaultKind::LearnerHang), 1, "{label}: the hang fired once");
     }
     let _ = std::fs::remove_dir_all(&dir);
 }
@@ -244,6 +502,7 @@ fn every_corrupted_or_truncated_checkpoint_byte_is_a_typed_error() {
         replay_pushed: 203,
         rng: rng.state_parts(),
         params,
+        replay: None,
     };
     let blob = ckpt.to_bytes();
     assert_eq!(Checkpoint::from_bytes(&blob).unwrap(), ckpt, "pristine blob must verify");
@@ -260,5 +519,71 @@ fn every_corrupted_or_truncated_checkpoint_byte_is_a_typed_error() {
     for len in 0..blob.len() {
         Checkpoint::from_bytes(&blob[..len])
             .expect_err(&format!("truncation to {len} bytes must be detected"));
+    }
+}
+
+/// Same exhaustive corruption sweep over blobs that carry a replay
+/// section — wrapped prioritized and wrapped uniform — so every byte of
+/// the new section (manifest fields, sampler RNG, payload tiles, CRCs)
+/// is provably covered by a typed check.
+#[test]
+fn every_corrupted_or_truncated_replay_checkpoint_byte_is_a_typed_error() {
+    let mut smp = Pcg32::new(5, 555);
+    for _ in 0..17 {
+        smp.next_u32();
+    }
+
+    // Wrapped PER: 23 pushes into a 16-slot ring, shaped priorities.
+    let mut per = PrioritizedReplay::new(16, DIMS[0], 1, 0.6);
+    for k in 0..23 {
+        let o = [k as f32, -(k as f32), 0.5, 1.0];
+        let a = [(k % 2) as f32];
+        per.push(Transition { obs: &o, action: &a, reward: 0.1 * k as f32, next_obs: &o, done: k % 5 == 0 });
+    }
+    let idx: Vec<usize> = (0..16).collect();
+    let td: Vec<f32> = (0..16).map(|k| 0.02 * (k as f32 + 1.0)).collect();
+    per.update_priorities(&idx, &td);
+
+    // Wrapped uniform ring: 19 pushes into 16 slots.
+    let mut buf = ReplayBuffer::new(16, DIMS[0], 1);
+    for k in 0..19 {
+        let o = [k as f32, 0.25, -0.5, 2.0];
+        let a = [1.0];
+        buf.push(Transition { obs: &o, action: &a, reward: k as f32, next_obs: &o, done: false });
+    }
+
+    let sections = [
+        ReplaySection {
+            replay: ReplayCkpt::Prioritized(per.state()),
+            sampler_rng: smp.state_parts(),
+        },
+        ReplaySection { replay: ReplayCkpt::Uniform(buf.state()), sampler_rng: smp.state_parts() },
+    ];
+    for section in sections {
+        let ckpt = Checkpoint {
+            train_steps: 23,
+            env_steps: 146,
+            broadcasts: 2,
+            version: 2,
+            replay_pushed: 23,
+            rng: Pcg32::new(9, 4242).state_parts(),
+            params: init_params(9),
+            replay: Some(section),
+        };
+        let blob = ckpt.to_bytes();
+        let back = Checkpoint::from_bytes(&blob).unwrap();
+        assert_eq!(back, ckpt, "pristine replay blob must verify");
+
+        for i in 0..blob.len() {
+            let mut bad = blob.clone();
+            bad[i] ^= 0xFF;
+            let err = Checkpoint::from_bytes(&bad)
+                .expect_err(&format!("flipped byte {i} must be detected"));
+            let _: &SnapshotError = &err;
+        }
+        for len in 0..blob.len() {
+            Checkpoint::from_bytes(&blob[..len])
+                .expect_err(&format!("truncation to {len} bytes must be detected"));
+        }
     }
 }

@@ -6,9 +6,13 @@ per-row schema check (kernel-variant + threads tagging, the before/after
 kernel rows the panel-major rework is tracked by, and the int1/ternary
 bitplane-kernel rows with the `int1_vs_int8_b64_w512` headline);
 BENCH_serve.json gets one too (latency percentiles ordered, batch
-histograms present, client counts sane), and BENCH_noise.json gets the
+histograms present, client counts sane), BENCH_noise.json gets the
 QeRL-ladder check (fp32 baseline rung present, unique rungs,
-fp32-normalized rewards). Used by CI after running the offline bench /
+fp32-normalized rewards), and BENCH_faults.json gets the chaos check
+(actor kill absorbed, learner watchdog tripped with positive recovery
+latency, partition window opened, straggler flagged, drain bounced the
+retained client, and every mismatch column — faulted / resumed /
+watchdog / served — exactly zero). Used by CI after running the offline bench /
 experiment paths; also handy locally:
 
     python3 scripts/check_bench_reports.py rust/BENCH_engines.json ...
@@ -311,6 +315,14 @@ FAULTS_ROW_KEYS = [
     "clean_trains",
     "logit_mismatches",
     "resume_mismatches",
+    "learner_restarts",
+    "learner_recovery_ms",
+    "wd_mismatches",
+    "partition_windows",
+    "serve_queries",
+    "serve_mismatches",
+    "slow_batches",
+    "drain_rejected",
     "final_version",
 ]
 
@@ -318,12 +330,20 @@ FAULTS_ROW_KEYS = [
 def check_faults_rows(path: str, doc: dict) -> list:
     """BENCH_faults.json row schema: every precision cell must have
     absorbed at least one actor kill (restarts >= 1, with a non-negative
-    recovery latency), retried at least as often as connects were
-    scripted to fail, lost a non-negative number of steps, and recovered
-    bit-exactly — zero logit mismatches vs the fault-free run and zero
-    mismatches after checkpoint resume. A nonzero mismatch count means a
-    fault leaked into the learner's numerics, which is the one thing the
-    crash-safety layer exists to prevent."""
+    recovery latency), restarted the learner through the watchdog at
+    least once (learner_restarts >= 1, positive recovery latency — the
+    scripted hang must actually trip the heartbeat deadline), healed at
+    least one hub partition window, retried at least as often as
+    connects were scripted to fail, lost a non-negative number of steps,
+    and recovered bit-exactly — zero mismatches vs the fault-free run
+    for the faulted leg, the checkpoint-resume leg, the watchdog leg,
+    and the served logits. The serve leg must also have flagged the
+    scripted straggler batch (slow_batches >= 1) and bounced the
+    deliberately-retained drain client (drain_rejected >= 1, with
+    serve_queries > 0 so the bounce happened on a live server, not an
+    idle one). A nonzero mismatch count means a fault leaked into the
+    numerics, which is the one thing the crash-safety layer exists to
+    prevent."""
     errors = []
     rows = doc.get("rows")
     if not isinstance(rows, list):
@@ -335,7 +355,12 @@ def check_faults_rows(path: str, doc: dict) -> list:
         for k in FAULTS_ROW_KEYS:
             if k not in row:
                 errors.append(f"{path}: rows[{i}] missing key '{k}'")
-        for k in ("logit_mismatches", "resume_mismatches"):
+        for k in (
+            "logit_mismatches",
+            "resume_mismatches",
+            "wd_mismatches",
+            "serve_mismatches",
+        ):
             if row.get(k) != 0:
                 errors.append(
                     f"{path}: rows[{i}] {k} {row.get(k)!r} — recovery was not bit-exact"
@@ -345,6 +370,41 @@ def check_faults_rows(path: str, doc: dict) -> list:
             errors.append(
                 f"{path}: rows[{i}] restarts '{restarts}' — the scripted kill "
                 "was not absorbed by a respawn"
+            )
+        lr = row.get("learner_restarts")
+        if not (isinstance(lr, (int, float)) and lr >= 1):
+            errors.append(
+                f"{path}: rows[{i}] learner_restarts '{lr}' — the scripted hang "
+                "never tripped the watchdog"
+            )
+        lrec = row.get("learner_recovery_ms")
+        if not (isinstance(lrec, (int, float)) and lrec > 0):
+            errors.append(
+                f"{path}: rows[{i}] learner_recovery_ms '{lrec}' — a restarted "
+                "learner must report a positive recovery latency"
+            )
+        pw = row.get("partition_windows")
+        if not (isinstance(pw, (int, float)) and pw >= 1):
+            errors.append(
+                f"{path}: rows[{i}] partition_windows '{pw}' — the scripted hub "
+                "partition never opened"
+            )
+        sb = row.get("slow_batches")
+        if not (isinstance(sb, (int, float)) and sb >= 1):
+            errors.append(
+                f"{path}: rows[{i}] slow_batches '{sb}' — the scripted straggler "
+                "batch was not detected"
+            )
+        dr, sq = row.get("drain_rejected"), row.get("serve_queries")
+        if not (isinstance(dr, (int, float)) and dr >= 1):
+            errors.append(
+                f"{path}: rows[{i}] drain_rejected '{dr}' — the retained client "
+                "was never bounced during drain"
+            )
+        elif not (isinstance(sq, (int, float)) and sq > 0):
+            errors.append(
+                f"{path}: rows[{i}] serve_queries '{sq}' — drain bounced queries "
+                "but the server never served any (drain accounting inconsistent)"
             )
         for k in ("recovery_ms", "steps_lost"):
             v = row.get(k)
@@ -459,6 +519,14 @@ def self_test() -> int:
                 "clean_trains": 100,
                 "logit_mismatches": 0,
                 "resume_mismatches": 0,
+                "learner_restarts": 1,
+                "learner_recovery_ms": 12.5,
+                "wd_mismatches": 0,
+                "partition_windows": 1,
+                "serve_queries": 80,
+                "serve_mismatches": 0,
+                "slow_batches": 1,
+                "drain_rejected": 1,
                 "final_version": 10,
             }
         ],
@@ -471,6 +539,21 @@ def self_test() -> int:
         ("retries below connect faults", lambda d: d["rows"][0].update(client_retries=1)),
         ("checkpoint at run end", lambda d: d["rows"][0].update(ckpt_trains=100)),
         ("missing key", lambda d: d["rows"][0].pop("steps_lost")),
+        ("hang never tripped the watchdog", lambda d: d["rows"][0].update(learner_restarts=0)),
+        (
+            "watchdog restart without recovery latency",
+            lambda d: d["rows"][0].update(learner_recovery_ms=0),
+        ),
+        ("watchdog resume diverged", lambda d: d["rows"][0].update(wd_mismatches=1)),
+        ("partition window never opened", lambda d: d["rows"][0].update(partition_windows=0)),
+        ("served logits diverged", lambda d: d["rows"][0].update(serve_mismatches=3)),
+        ("straggler batch undetected", lambda d: d["rows"][0].update(slow_batches=0)),
+        ("drain bounced nobody", lambda d: d["rows"][0].update(drain_rejected=0)),
+        (
+            "drain bounce on a server that served nothing",
+            lambda d: d["rows"][0].update(serve_queries=0),
+        ),
+        ("missing drain column", lambda d: d["rows"][0].pop("drain_rejected")),
         ("empty rows", lambda d: d.update(rows=[])),
     ]
     def engine_row(engine, bits, kernel):
